@@ -1,0 +1,39 @@
+//! Baseline comparison across the full zoo: TF-style greedy vs TASO-style
+//! backtracking search over the same rule library and cost model — the
+//! deterministic half of Fig. 6 in seconds rather than hours. No AOT
+//! artifacts required.
+//!
+//! ```bash
+//! cargo run --release --example compare_baselines
+//! ```
+
+use rlflow::cost::{CostModel, DeviceProfile};
+use rlflow::search::{greedy_optimise, taso_optimise, TasoConfig};
+use rlflow::xfer::library::standard_library;
+
+fn main() -> anyhow::Result<()> {
+    let rules = standard_library();
+    let cost = CostModel::new(DeviceProfile::rtx2070());
+    println!(
+        "{:<15} {:>12} {:>10} {:>10} {:>9} {:>9}",
+        "Graph", "Base (ms)", "Greedy %", "TASO %", "Greedy s", "TASO s"
+    );
+    for (info, g) in rlflow::zoo::all() {
+        let (_, glog) = greedy_optimise(&g, &rules, &cost, 50);
+        let (_, tlog) = taso_optimise(&g, &rules, &cost, &TasoConfig::default());
+        println!(
+            "{:<15} {:>12.3} {:>9.1}% {:>9.1}% {:>9.2} {:>9.2}",
+            info.name,
+            glog.initial_ms,
+            glog.improvement_pct(),
+            tlog.improvement_pct(),
+            glog.elapsed_s,
+            tlog.elapsed_s
+        );
+    }
+    println!("\nExpected shape (paper Fig. 6): TASO >= greedy everywhere; the gap");
+    println!("is largest on multi-branch CNNs (Inception/SqueezeNet) where");
+    println!("backtracking pays off, and smallest on the transformers where the");
+    println!("profitable sequence (add/norm fusion, QKV merge) is short.");
+    Ok(())
+}

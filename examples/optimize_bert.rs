@@ -1,0 +1,136 @@
+//! **End-to-end driver** (DESIGN.md deliverable): the complete RLFlow
+//! pipeline on BERT-Base, proving all three layers compose —
+//!
+//!   L3 Rust env/substitution engine  ->  random rollouts
+//!   L1/L2 GNN auto-encoder artifact  ->  latent states
+//!   L1/L2 MDN-RNN artifact           ->  world model (loss curve logged)
+//!   L1/L2 controller artifact        ->  PPO **inside the dream**
+//!   L3 real environment              ->  final evaluation vs TF/TASO
+//!
+//! Also measures the paper's §4.4 claim that stepping the imagined
+//! environment is orders of magnitude faster than stepping the real one
+//! (they report 10 ms vs 850 ms = 85x on ResNet-50).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example optimize_bert [-- --smoke]
+//! ```
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use std::time::Instant;
+
+use rlflow::config::RunConfig;
+use rlflow::coordinator::Pipeline;
+use rlflow::cost::CostModel;
+use rlflow::env::Env;
+use rlflow::experiments::{eval_agent, train_model_based};
+use rlflow::runtime::Engine;
+use rlflow::search::{greedy_optimise, taso_optimise, TasoConfig};
+use rlflow::util::Rng;
+use rlflow::wm::DreamEnv;
+use rlflow::xfer::library::standard_library;
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut cfg = if smoke { RunConfig::smoke() } else { RunConfig::default() };
+    cfg.graph = "bert".into();
+
+    let engine = Engine::load_default()?;
+    let pipe = Pipeline::new(&engine)?;
+    let graph = rlflow::zoo::bert_base();
+    let rules = standard_library();
+    let cost = CostModel::new(cfg.device);
+
+    println!("== RLFlow end-to-end on BERT-Base ==");
+    println!(
+        "graph: {} ops, baseline runtime {:.3} ms, {} applicable substitutions",
+        graph.n_ops(),
+        cost.graph_runtime_ms(&graph),
+        rules.count_matches(&graph)
+    );
+
+    // ---- deterministic baselines --------------------------------------
+    let (_, tf_log) = greedy_optimise(&graph, &rules, &cost, 50);
+    let (_, taso_log) = taso_optimise(&graph, &rules, &cost, &TasoConfig::default());
+    println!(
+        "baselines: TF-greedy {:.1}% | TASO {:.1}% runtime improvement",
+        tf_log.improvement_pct(),
+        taso_log.improvement_pct()
+    );
+
+    // ---- full model-based pipeline -------------------------------------
+    let t0 = Instant::now();
+    let agent = train_model_based(&pipe, &cfg, &graph, cfg.seed)?;
+    println!("\npipeline stages:");
+    for (stage, secs) in &agent.stage_seconds {
+        println!("  {:<12} {:>7.1}s", stage, secs);
+    }
+    println!("total training wall-clock: {:.1}s", t0.elapsed().as_secs_f64());
+
+    println!("\nworld-model loss (Fig. 8 analogue):");
+    let curve = &agent.wm_curve;
+    for i in (0..curve.len()).step_by((curve.len() / 8).max(1)) {
+        println!("  step {:>4}: total {:>8.4}  nll {:>8.4}  mask {:>6.4}", i, curve[i].total, curve[i].nll, curve[i].mask_bce);
+    }
+    println!("\ndream reward curve (Fig. 9 analogue):");
+    let dc = &agent.dream_curve;
+    for i in (0..dc.len()).step_by((dc.len() / 8).max(1)) {
+        println!("  epoch {:>3}: predicted reward {:>8.3}", i, dc[i]);
+    }
+
+    // ---- evaluation in the real environment ---------------------------
+    let (scores, history, real_step_s) =
+        eval_agent(&pipe, &cfg, &agent, &graph, cfg.eval_episodes, cfg.seed)?;
+    let (mean, std) = rlflow::util::stats::mean_std(&scores);
+    println!("\nreal-environment evaluation ({} runs):", scores.len());
+    println!("  RLFlow  : {:.2}% ± {:.2} runtime improvement", mean, std);
+    println!("  TF      : {:.2}%", tf_log.improvement_pct());
+    println!("  TASO    : {:.2}%", taso_log.improvement_pct());
+    let mut counts = std::collections::HashMap::new();
+    for (x, _) in &history {
+        *counts.entry(*x).or_insert(0usize) += 1;
+    }
+    let mut named: Vec<(&str, usize)> = counts
+        .iter()
+        .filter_map(|(&x, &c)| rules.get(x).map(|r| (r.name(), c)))
+        .collect();
+    named.sort_by(|a, b| b.1.cmp(&a.1));
+    println!("  transformations applied (Fig. 10 analogue): {:?}", named);
+
+    // ---- dream vs real step time (the 85x claim) -----------------------
+    let mut rng = Rng::new(cfg.seed);
+    let mut dream = DreamEnv::new(&engine, cfg.temperature, cfg.wm.reward_scale)?;
+    let z0: Vec<Vec<f32>> = agent.episodes.iter().map(|e| e.z[0].clone()).collect();
+    let xm0: Vec<Vec<f32>> = agent.episodes.iter().map(|e| e.xmasks[0].clone()).collect();
+    dream.reset(&z0, &xm0)?;
+    let steps = 50;
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        let actions: Vec<(usize, usize)> = (0..dream.b).map(|_| (0, 0)).collect();
+        let _ = dream.step(&agent.wm, &actions, &mut rng)?;
+        dream.done.fill(false); // keep stepping for timing purposes
+    }
+    // Dream steps are batched (B_DREAM imagined environments per exec).
+    let dream_step_s = t0.elapsed().as_secs_f64() / (steps * dream.b) as f64;
+
+    // Real step cost: measured during eval (includes encode+policy+env).
+    println!("\nstep-time comparison (paper §4.4: 10 ms dream vs 850 ms real = 85x):");
+    println!("  real env step : {:>8.2} ms", real_step_s * 1e3);
+    println!("  dream step    : {:>8.3} ms (amortised over batch of {})", dream_step_s * 1e3, dream.b);
+    println!("  speedup       : {:>8.1}x", real_step_s / dream_step_s);
+
+    // Sample efficiency accounting (§4.4).
+    let real_interactions: usize = agent.episodes.iter().map(|e| e.len()).sum();
+    let dream_interactions = cfg.dream_epochs * cfg.dream_horizon * dream.b;
+    println!("\nsample efficiency: {} real interactions collected once;", real_interactions);
+    println!("controller consumed {} *imagined* interactions instead.", dream_interactions);
+
+    let mut env = Env::new(graph.clone(), &rules, &cost, cfg.env.clone());
+    let res = pipe.eval_real(&agent.gnn, &agent.ctrl, Some(&agent.wm), &mut env, true, &mut rng)?;
+    if let Some(bg) = res.best_graph {
+        let out = std::env::temp_dir().join("bert_rlflow.json");
+        rlflow::graph::onnx::save(&bg, "bert-rlflow", &out)?;
+        println!("\nbest graph exported to {}", out.display());
+    }
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Quickstart: load a zoo graph, optimise it with the TASO-style search,
+//! inspect what happened. No AOT artifacts required.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use rlflow::cost::{CostModel, DeviceProfile};
+use rlflow::search::{taso_optimise, TasoConfig};
+use rlflow::xfer::library::standard_library;
+use rlflow::zoo;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A real evaluation graph: BERT-Base, built from primitive ops.
+    let graph = zoo::bert_base();
+    println!("BERT-Base: {} ops / {} nodes", graph.n_ops(), graph.n_live());
+
+    // 2. The substitution library + analytic cost model (simulated RTX 2070).
+    let rules = standard_library();
+    let cost = CostModel::new(DeviceProfile::rtx2070());
+    println!("rule library: {} substitutions, {} applicable sites", rules.len(), rules.count_matches(&graph));
+    println!("estimated runtime: {:.3} ms", cost.graph_runtime_ms(&graph));
+
+    // 3. Optimise with cost-based backtracking search.
+    let (optimised, log) = taso_optimise(&graph, &rules, &cost, &TasoConfig::default());
+    println!(
+        "optimised: {:.3} ms -> {:.3} ms ({:.1}% faster), {} graphs explored in {:.2}s",
+        log.initial_ms,
+        log.final_ms,
+        log.improvement_pct(),
+        log.graphs_explored,
+        log.elapsed_s
+    );
+    for (rule, ms) in log.steps.iter().take(8) {
+        println!("  {:<22} -> {:.3} ms", rule, ms);
+    }
+
+    // 4. The rewritten graph is still semantically valid.
+    optimised.validate()?;
+    println!("optimised graph validates ({} ops)", optimised.n_ops());
+
+    // 5. Export in the ONNX-style JSON interchange format.
+    let out = std::env::temp_dir().join("bert_optimised.json");
+    rlflow::graph::onnx::save(&optimised, "bert-optimised", &out)?;
+    println!("exported to {}", out.display());
+    Ok(())
+}

@@ -1,0 +1,227 @@
+"""AOT exporter: lower every L2 function to HLO *text* + write the manifest.
+
+This is the only place Python touches the build. ``make artifacts`` runs it
+once; afterwards the Rust coordinator is self-contained.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``). The text
+parser reassigns ids, so text round-trips cleanly (see
+/opt/xla-example/README.md). All computations are lowered with
+``return_tuple=True``; the Rust side unwraps the result tuple.
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import hp, model
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _scalar():
+    return spec((), F32)
+
+
+def _exports():
+    """(name, fn, arg_specs, arg_names, output_names) for every artifact."""
+    Pg = model.GNN_LAYOUT.size
+    Pw = model.WM_LAYOUT.size
+    Pc = model.CTRL_LAYOUT.size
+    N, F, Z, R = hp.MAX_NODES, hp.NODE_FEATS, hp.LATENT, hp.RNN_HIDDEN
+    X1, L, K = hp.N_XFERS1, hp.MAX_LOCS, hp.MDN_K
+
+    def graph_batch(b):
+        return [
+            (spec((b, N, F)), "feats"),
+            (spec((b, N, N)), "adj"),
+            (spec((b, N)), "mask"),
+        ]
+
+    def adam_state(p):
+        return [
+            (spec((p,)), "theta"),
+            (spec((p,)), "m"),
+            (spec((p,)), "v"),
+            (_scalar(), "t"),
+        ]
+
+    exports = []
+
+    def add(name, fn, args, outs):
+        specs = [a for a, _ in args]
+        names = [n for _, n in args]
+        exports.append((name, fn, specs, names, outs))
+
+    # ---- GNN auto-encoder ------------------------------------------------
+    add("gnn_init", model.gnn_init, [(spec((), I32), "seed")], ["theta"])
+    add(
+        "gnn_ae_train",
+        model.gnn_ae_train,
+        adam_state(Pg) + graph_batch(hp.B_ENC) + [(_scalar(), "lr")],
+        ["theta", "m", "v", "t", "loss"],
+    )
+    for b, suffix in [(hp.B_ONE, "_1"), (hp.B_ENC, "_b")]:
+        add(
+            f"gnn_encode{suffix}",
+            model.gnn_encode,
+            [(spec((Pg,)), "theta")] + graph_batch(b),
+            ["z"],
+        )
+
+    # ---- MDN-RNN world model ----------------------------------------------
+    add("wm_init", model.wm_init, [(spec((), I32), "seed")], ["theta"])
+    B, T = hp.B_WM, hp.SEQ_LEN
+    add(
+        "wm_train",
+        model.wm_train,
+        adam_state(Pw)
+        + [
+            (spec((B, T, Z)), "z"),
+            (spec((B, T, 2), I32), "a"),
+            (spec((B, T, Z)), "z_next"),
+            (spec((B, T)), "r"),
+            (spec((B, T, X1)), "xmask"),
+            (spec((B, T)), "done"),
+            (spec((B, T)), "valid"),
+            (_scalar(), "lr"),
+        ],
+        ["theta", "m", "v", "t", "total", "nll", "r_mse", "m_bce", "d_bce"],
+    )
+    wm_outs = [
+        "log_pi",
+        "mu",
+        "log_sig",
+        "reward",
+        "xmask_logits",
+        "done_logit",
+        "h_next",
+        "c_next",
+    ]
+    for b, suffix in [(hp.B_ONE, "_1"), (hp.B_DREAM, "_b")]:
+        add(
+            f"wm_step{suffix}",
+            model.wm_step,
+            [
+                (spec((Pw,)), "theta"),
+                (spec((b, Z)), "z"),
+                (spec((b, 2), I32), "a"),
+                (spec((b, R)), "h"),
+                (spec((b, R)), "c"),
+            ],
+            wm_outs,
+        )
+
+    # ---- Controller --------------------------------------------------------
+    add("ctrl_init", model.ctrl_init, [(spec((), I32), "seed")], ["theta"])
+    for b, suffix in [(hp.B_ONE, "_1"), (hp.B_DREAM, "_b")]:
+        add(
+            f"ctrl_policy{suffix}",
+            model.ctrl_policy,
+            [
+                (spec((Pc,)), "theta"),
+                (spec((b, Z)), "z"),
+                (spec((b, R)), "h"),
+            ],
+            ["xfer_logits", "loc_logits", "value"],
+        )
+    Bp = hp.B_PPO
+    add(
+        "ctrl_train",
+        model.ctrl_train,
+        adam_state(Pc)
+        + [
+            (spec((Bp, Z)), "z"),
+            (spec((Bp, R)), "h"),
+            (spec((Bp, 2), I32), "act"),
+            (spec((Bp,)), "old_logp"),
+            (spec((Bp,)), "adv"),
+            (spec((Bp,)), "ret"),
+            (spec((Bp, X1)), "xmask"),
+            (spec((Bp, L)), "lmask"),
+            (_scalar(), "lr"),
+            (_scalar(), "clip"),
+            (_scalar(), "ent_coef"),
+        ],
+        ["theta", "m", "v", "t", "pi_loss", "v_loss", "entropy", "approx_kl"],
+    )
+    return exports
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    manifest = {
+        "hp": hp.as_dict(),
+        "param_sizes": {
+            "gnn": model.GNN_LAYOUT.size,
+            "wm": model.WM_LAYOUT.size,
+            "ctrl": model.CTRL_LAYOUT.size,
+        },
+        "param_layouts": {
+            "gnn": model.GNN_LAYOUT.describe(),
+            "wm": model.WM_LAYOUT.describe(),
+            "ctrl": model.CTRL_LAYOUT.describe(),
+        },
+        "artifacts": {},
+    }
+
+    for name, fn, specs, arg_names, outs in _exports():
+        entry = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                {
+                    "name": n,
+                    "shape": list(s.shape),
+                    "dtype": str(s.dtype),
+                }
+                for s, n in zip(specs, arg_names)
+            ],
+            "outputs": outs,
+        }
+        manifest["artifacts"][name] = entry
+        if only is not None and name not in only:
+            continue
+        print(f"lowering {name} ...", flush=True)
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, entry["file"])
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  wrote {len(text)} chars -> {path}", flush=True)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest -> {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

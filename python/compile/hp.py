@@ -1,0 +1,56 @@
+"""Shared hyperparameters for the RLFlow neural stack.
+
+These constants define the *compiled* shapes of every AOT artifact. The Rust
+coordinator reads them back from ``artifacts/manifest.json`` — never hardcode
+them on the Rust side.
+
+Scaling note (see DESIGN.md §Hardware-Adaptation): the MDN-RNN matches the
+paper (256 hidden units, 8 Gaussians); graph-side dimensions are sized so a
+CPU-only PJRT client trains the full pipeline in minutes.
+"""
+
+# ---- Graph encoding (L3 -> L2 contract) -----------------------------------
+MAX_NODES = 320  # N: graphs are padded/validated to this many nodes (op nodes only)
+NODE_FEATS = 32  # F: per-node feature width (op one-hot + scalar stats)
+GNN_HIDDEN = 64  # H: hidden width of message-passing layers
+GNN_LAYERS = 2
+LATENT = 48      # Z: pooled graph latent fed to the world model / controller
+
+# ---- Action space (mirrors paper §3.1.3) ----------------------------------
+N_XFERS = 48          # X: substitution-rule slots
+N_XFERS1 = N_XFERS + 1  # +1 NO-OP action (terminates the episode)
+MAX_LOCS = 200        # L: per-xfer location limit (paper: "hardcoded ... 200")
+ACT_EMB = 32          # embedding width for (xfer, location) fed to the RNN
+
+# ---- World model (paper §3.3.2: 8 Gaussians, 256 hidden units) -------------
+RNN_HIDDEN = 256  # R
+MDN_K = 8         # K mixtures per latent dimension
+LOGSIG_MIN = -5.0
+LOGSIG_MAX = 2.0
+
+# ---- Batch shapes baked into artifacts -------------------------------------
+B_ENC = 8     # GNN auto-encoder train / bulk-encode batch
+B_ONE = 1     # single-sample acting batch (real environment stepping)
+SEQ_LEN = 16  # T: world-model training sequence length
+B_WM = 16     # world-model training batch
+B_DREAM = 16  # parallel imagined rollouts in the dream environment
+B_PPO = 256   # flattened PPO minibatch
+
+# ---- Controller -------------------------------------------------------------
+CTRL_HIDDEN = 256
+
+# ---- Kernel tiling (L1) ------------------------------------------------------
+GNN_ROW_BLOCK = 32  # node-row tile for the fused message-passing kernel
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def as_dict() -> dict:
+    """Everything above, for the manifest."""
+    return {
+        k: v
+        for k, v in globals().items()
+        if k.isupper() and isinstance(v, (int, float))
+    }

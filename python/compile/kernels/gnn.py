@@ -1,0 +1,94 @@
+"""Pallas fused message-passing layer (L1 hot-spot #1).
+
+One kernel computes ``relu((adj @ h) @ w_nbr + h @ w_self + b)`` for a tile
+of node rows at a time, so the aggregate->project->activate chain never
+round-trips through HBM between steps.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation / §Perf): the grid walks node-row
+tiles of ``GNN_ROW_BLOCK`` rows; each grid step holds one ``[BN, N]``
+adjacency stripe, the full ``[N, F_in]`` feature panel and both weight
+panels in VMEM — at the compiled shapes (N=160, F<=64) that is ~90 KiB,
+far under the ~16 MiB VMEM budget, and both matmuls feed the MXU with
+contracted dims >= 32. On this image the kernel runs through
+``interpret=True`` (CPU PJRT cannot execute Mosaic custom-calls), which
+lowers the same body to plain HLO.
+
+The public entry point ``gnn_layer`` is a ``jax.custom_vjp``: forward is the
+Pallas kernel, backward is derived from the jnp oracle in ``ref.py`` (same
+math, so gradients are exact for the kernel semantics).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+try:  # package-relative when imported as compile.kernels.gnn
+    from .. import hp
+except ImportError:  # pragma: no cover - direct import fallback
+    import hp  # type: ignore
+
+
+def _kernel(adj_ref, h_full_ref, h_tile_ref, w_nbr_ref, w_self_ref, b_ref, o_ref):
+    """Body for one node-row tile.
+
+    adj_ref:    [BN, N] stripe of the normalised adjacency.
+    h_full_ref: [N, F_in] full feature panel (neighbour side).
+    h_tile_ref: [BN, F_in] the same row tile as the output (self side).
+    """
+    agg = jnp.dot(adj_ref[...], h_full_ref[...])  # [BN, F_in] on the MXU
+    proj = jnp.dot(agg, w_nbr_ref[...]) + jnp.dot(h_tile_ref[...], w_self_ref[...])
+    o_ref[...] = jnp.maximum(proj + b_ref[...], 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def _gnn_layer_fwd_impl(adj, h, w_nbr, w_self, b, block=hp.GNN_ROW_BLOCK):
+    n, f_in = h.shape
+    f_out = w_nbr.shape[1]
+    if n % block != 0:
+        # Shapes are compile-time constants; pad defensively for odd test sizes.
+        pad = (-n) % block
+        adj = jnp.pad(adj, ((0, pad), (0, 0)))
+        h_tile_src = jnp.pad(h, ((0, pad), (0, 0)))
+        n_pad = n + pad
+    else:
+        h_tile_src = h
+        n_pad = n
+    grid = (n_pad // block,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, adj.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec(h.shape, lambda i: (0, 0)),
+            pl.BlockSpec((block, f_in), lambda i: (i, 0)),
+            pl.BlockSpec(w_nbr.shape, lambda i: (0, 0)),
+            pl.BlockSpec(w_self.shape, lambda i: (0, 0)),
+            pl.BlockSpec(b.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block, f_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, f_out), h.dtype),
+        interpret=True,
+    )(adj, h, h_tile_src, w_nbr, w_self, b)
+    return out[:n]
+
+
+@jax.custom_vjp
+def gnn_layer(adj, h, w_nbr, w_self, b):
+    """Fused GNN layer; see ``ref.gnn_layer_ref`` for exact semantics."""
+    return _gnn_layer_fwd_impl(adj, h, w_nbr, w_self, b)
+
+
+def _fwd(adj, h, w_nbr, w_self, b):
+    return gnn_layer(adj, h, w_nbr, w_self, b), (adj, h, w_nbr, w_self, b)
+
+
+def _bwd(res, g):
+    _, vjp = jax.vjp(ref.gnn_layer_ref, *res)
+    return vjp(g)
+
+
+gnn_layer.defvjp(_fwd, _bwd)

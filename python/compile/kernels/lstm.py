@@ -1,0 +1,68 @@
+"""Pallas fused LSTM cell (L1 hot-spot #2).
+
+The MDN-RNN world model steps this cell once per (state, action) pair — both
+when training the model (inside a scan over the sequence axis) and on every
+step of the imagined environment, so it is the single most-executed kernel
+in the system.
+
+Fusion rationale: a naive cell issues two GEMMs plus ~8 elementwise ops,
+each a separate HBM round-trip for [B, 4R] intermediates. This kernel keeps
+the gate block in VMEM: one grid step computes ``x @ w_x + h @ w_h + b`` and
+applies all four gate nonlinearities before anything is written back. At
+compiled shapes (B=16, R=256, I=Z+2*ACT_EMB=112) the VMEM working set is
+w_x (112x1024) + w_h (256x1024) + activations ~= 1.7 MiB — comfortably
+resident, with both GEMMs MXU-shaped (contracted dims 112/256, output lanes
+1024). ``interpret=True`` on this image (see gnn.py).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref, h_out_ref, c_out_ref):
+    r = h_ref.shape[-1]
+    gates = (
+        jnp.dot(x_ref[...], wx_ref[...])
+        + jnp.dot(h_ref[...], wh_ref[...])
+        + b_ref[...]
+    )
+    i = jax.nn.sigmoid(gates[:, 0 * r : 1 * r])
+    f = jax.nn.sigmoid(gates[:, 1 * r : 2 * r])
+    g = jnp.tanh(gates[:, 2 * r : 3 * r])
+    o = jax.nn.sigmoid(gates[:, 3 * r : 4 * r])
+    c_new = f * c_ref[...] + i * g
+    h_out_ref[...] = o * jnp.tanh(c_new)
+    c_out_ref[...] = c_new
+
+
+def _lstm_fwd_impl(x, h, c, w_x, w_h, b):
+    bsz, r = h.shape
+    return pl.pallas_call(
+        _kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((bsz, r), h.dtype),
+            jax.ShapeDtypeStruct((bsz, r), c.dtype),
+        ),
+        interpret=True,
+    )(x, h, c, w_x, w_h, b)
+
+
+@jax.custom_vjp
+def lstm_cell(x, h, c, w_x, w_h, b):
+    """Fused LSTM cell; semantics exactly ``ref.lstm_cell_ref``."""
+    return _lstm_fwd_impl(x, h, c, w_x, w_h, b)
+
+
+def _fwd(x, h, c, w_x, w_h, b):
+    return lstm_cell(x, h, c, w_x, w_h, b), (x, h, c, w_x, w_h, b)
+
+
+def _bwd(res, g):
+    _, vjp = jax.vjp(ref.lstm_cell_ref, *res)
+    return vjp(g)
+
+
+lstm_cell.defvjp(_fwd, _bwd)

@@ -1,0 +1,404 @@
+"""L2: RLFlow's neural stack in JAX, calling the L1 Pallas kernels.
+
+Three networks, mirroring the paper:
+
+  * **GNN graph auto-encoder** (§3.3 "we use a graph neural network to
+    generate a latent representation of the input computation graphs").
+    Encoder: two fused message-passing layers -> masked mean pool -> latent z.
+    Decoder (training only): per-node feature reconstruction + adjacency
+    logits, so z is forced to carry graph structure. Plays the role of the
+    V(AE) stage of Ha & Schmidhuber's pipeline.
+
+  * **MDN-RNN world model** (§3.3.2): fused LSTM cell + per-dimension
+    Gaussian-mixture head models P(z_{t+1} | a_t, z_t, h_t), with auxiliary
+    heads for the reward, the next xfer validity mask, and episode
+    termination — the three failure sources §4.7 calls out.
+
+  * **Actor-critic controller** (§3.4): a trunk MLP over [z, h] with a
+    transformation head, a location head *conditioned on the chosen
+    transformation* (§3.1.3's two-step action factorisation), and a value
+    head; trained with PPO (clipped surrogate).
+
+Every parameter vector is a **flat f32 vector**; ``Layout`` records the
+(name, shape) slices. The Rust side treats parameters as opaque buffers and
+only ever threads them between artifacts, so flatness keeps the FFI surface
+to a single literal per state tensor. Adam runs in-graph on the flat vector.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import hp
+from .kernels.gnn import gnn_layer
+from .kernels.lstm import lstm_cell
+from .kernels.mdn import mdn_nll
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Flat-parameter plumbing
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Layout:
+    """Ordered (name, shape) slices of a flat parameter vector."""
+
+    entries: Tuple[Tuple[str, Tuple[int, ...]], ...]
+
+    @property
+    def size(self) -> int:
+        total = 0
+        for _, shape in self.entries:
+            n = 1
+            for d in shape:
+                n *= d
+            total += n
+        return total
+
+    def unflatten(self, theta: Array) -> Dict[str, Array]:
+        out, off = {}, 0
+        for name, shape in self.entries:
+            n = 1
+            for d in shape:
+                n *= d
+            out[name] = theta[off : off + n].reshape(shape)
+            off += n
+        return out
+
+    def describe(self) -> List[dict]:
+        return [{"name": n, "shape": list(s)} for n, s in self.entries]
+
+
+def _init_flat(layout: Layout, seed: Array) -> Array:
+    """He-style init per slice, deterministic in the scalar ``seed``."""
+    key = jax.random.PRNGKey(seed.astype(jnp.int32))
+    chunks = []
+    for i, (name, shape) in enumerate(layout.entries):
+        k = jax.random.fold_in(key, i)
+        n = 1
+        for d in shape:
+            n *= d
+        if name.endswith("_b"):  # biases start at zero
+            chunks.append(jnp.zeros((n,), jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else n
+            scale = jnp.sqrt(2.0 / max(fan_in, 1)).astype(jnp.float32)
+            chunks.append(scale * jax.random.normal(k, (n,), jnp.float32))
+    return jnp.concatenate(chunks)
+
+
+def adam_update(theta, m, v, t, grad, lr):
+    """One Adam step on flat vectors. ``t`` is the f32 step counter."""
+    t1 = t + 1.0
+    m1 = hp.ADAM_B1 * m + (1.0 - hp.ADAM_B1) * grad
+    v1 = hp.ADAM_B2 * v + (1.0 - hp.ADAM_B2) * grad * grad
+    mhat = m1 / (1.0 - hp.ADAM_B1**t1)
+    vhat = v1 / (1.0 - hp.ADAM_B2**t1)
+    theta1 = theta - lr * mhat / (jnp.sqrt(vhat) + hp.ADAM_EPS)
+    return theta1, m1, v1, t1
+
+
+# ---------------------------------------------------------------------------
+# GNN graph auto-encoder
+# ---------------------------------------------------------------------------
+
+GNN_LAYOUT = Layout(
+    entries=(
+        ("enc0_wn", (hp.NODE_FEATS, hp.GNN_HIDDEN)),
+        ("enc0_ws", (hp.NODE_FEATS, hp.GNN_HIDDEN)),
+        ("enc0_b", (hp.GNN_HIDDEN,)),
+        ("enc1_wn", (hp.GNN_HIDDEN, hp.GNN_HIDDEN)),
+        ("enc1_ws", (hp.GNN_HIDDEN, hp.GNN_HIDDEN)),
+        ("enc1_b", (hp.GNN_HIDDEN,)),
+        ("pool_w", (hp.GNN_HIDDEN, hp.LATENT)),
+        ("pool_b", (hp.LATENT,)),
+        ("dec_feat_w", (hp.GNN_HIDDEN, hp.NODE_FEATS)),
+        ("dec_feat_b", (hp.NODE_FEATS,)),
+        ("dec_adj_w", (hp.GNN_HIDDEN, hp.GNN_HIDDEN)),
+    )
+)
+
+
+def _norm_adjacency(adj: Array, mask: Array) -> Array:
+    """Symmetrise + self-loop + row-normalise, restricted to live nodes."""
+    m2 = mask[:, None] * mask[None, :]
+    a = (adj + adj.T) * m2 + jnp.eye(adj.shape[0]) * mask[:, None]
+    deg = jnp.sum(a, axis=-1, keepdims=True)
+    return a / jnp.maximum(deg, 1e-6)
+
+
+def gnn_node_embed(p: Dict[str, Array], feats: Array, adj: Array, mask: Array) -> Array:
+    """Per-node embeddings for one graph. feats [N,F], adj [N,N], mask [N]."""
+    a = _norm_adjacency(adj, mask)
+    h = gnn_layer(a, feats, p["enc0_wn"], p["enc0_ws"], p["enc0_b"])
+    h = gnn_layer(a, h, p["enc1_wn"], p["enc1_ws"], p["enc1_b"])
+    return h * mask[:, None]
+
+
+def gnn_encode_one(p: Dict[str, Array], feats: Array, adj: Array, mask: Array) -> Array:
+    h = gnn_node_embed(p, feats, adj, mask)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    pooled = jnp.sum(h, axis=0) / denom
+    return jnp.tanh(pooled @ p["pool_w"] + p["pool_b"])
+
+
+def gnn_encode(theta: Array, feats: Array, adj: Array, mask: Array):
+    """Batched encode: feats [B,N,F], adj [B,N,N], mask [B,N] -> z [B,Z]."""
+    p = GNN_LAYOUT.unflatten(theta)
+    return (jax.vmap(lambda f, a, m: gnn_encode_one(p, f, a, m))(feats, adj, mask),)
+
+
+def gnn_ae_loss(theta: Array, feats: Array, adj: Array, mask: Array) -> Array:
+    """Reconstruction loss forcing the embedding to carry graph structure."""
+    p = GNN_LAYOUT.unflatten(theta)
+
+    def one(f, a, m):
+        h = gnn_node_embed(p, f, a, m)
+        feat_hat = h @ p["dec_feat_w"] + p["dec_feat_b"]
+        feat_mse = jnp.sum(((feat_hat - f) ** 2) * m[:, None]) / jnp.maximum(
+            jnp.sum(m) * hp.NODE_FEATS, 1.0
+        )
+        logits = (h @ p["dec_adj_w"]) @ h.T
+        m2 = m[:, None] * m[None, :]
+        bce = jnp.sum(m2 * _bce(logits, a)) / jnp.maximum(jnp.sum(m2), 1.0)
+        return feat_mse + bce
+
+    return jnp.mean(jax.vmap(one)(feats, adj, mask))
+
+
+def gnn_init(seed: Array) -> Tuple[Array]:
+    return (_init_flat(GNN_LAYOUT, seed),)
+
+
+def gnn_ae_train(theta, m, v, t, feats, adj, mask, lr):
+    loss, grad = jax.value_and_grad(gnn_ae_loss)(theta, feats, adj, mask)
+    theta1, m1, v1, t1 = adam_update(theta, m, v, t, grad, lr)
+    return theta1, m1, v1, t1, loss
+
+
+# ---------------------------------------------------------------------------
+# MDN-RNN world model
+# ---------------------------------------------------------------------------
+
+_RNN_IN = hp.LATENT + 2 * hp.ACT_EMB
+
+WM_LAYOUT = Layout(
+    entries=(
+        ("emb_xfer", (hp.N_XFERS1, hp.ACT_EMB)),
+        ("emb_loc", (hp.MAX_LOCS, hp.ACT_EMB)),
+        ("lstm_wx", (_RNN_IN, 4 * hp.RNN_HIDDEN)),
+        ("lstm_wh", (hp.RNN_HIDDEN, 4 * hp.RNN_HIDDEN)),
+        ("lstm_b", (4 * hp.RNN_HIDDEN,)),
+        ("mdn_w", (hp.RNN_HIDDEN, hp.LATENT * hp.MDN_K * 3)),
+        ("mdn_b", (hp.LATENT * hp.MDN_K * 3,)),
+        ("rew_w", (hp.RNN_HIDDEN, 1)),
+        ("rew_b", (1,)),
+        ("mask_w", (hp.RNN_HIDDEN, hp.N_XFERS1)),
+        ("mask_b", (hp.N_XFERS1,)),
+        ("done_w", (hp.RNN_HIDDEN, 1)),
+        ("done_b", (1,)),
+    )
+)
+
+
+def _bce(logits, target):
+    """Numerically stable elementwise binary cross-entropy from logits."""
+    return (
+        jnp.maximum(logits, 0.0)
+        - logits * target
+        + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def _wm_cell(p, z, a, h, c):
+    """One world-model step. z [B,Z], a [B,2] int32, h/c [B,R]."""
+    ex = p["emb_xfer"][a[:, 0]]
+    el = p["emb_loc"][a[:, 1]]
+    x = jnp.concatenate([z, ex, el], axis=-1)
+    h1, c1 = lstm_cell(x, h, c, p["lstm_wx"], p["lstm_wh"], p["lstm_b"])
+    mdn_raw = h1 @ p["mdn_w"] + p["mdn_b"]
+    b = z.shape[0]
+    mdn3 = mdn_raw.reshape(b, hp.LATENT, hp.MDN_K, 3)
+    log_pi = mdn3[..., 0]
+    mu = mdn3[..., 1]
+    log_sig = jnp.clip(mdn3[..., 2], hp.LOGSIG_MIN, hp.LOGSIG_MAX)
+    rew = (h1 @ p["rew_w"] + p["rew_b"])[:, 0]
+    mask_logits = h1 @ p["mask_w"] + p["mask_b"]
+    done_logit = (h1 @ p["done_w"] + p["done_b"])[:, 0]
+    return (log_pi, mu, log_sig, rew, mask_logits, done_logit, h1, c1)
+
+
+def wm_step(theta, z, a, h, c):
+    """Inference artifact: single step; GMM sampling happens Rust-side."""
+    p = WM_LAYOUT.unflatten(theta)
+    return _wm_cell(p, z, a, h, c)
+
+
+def wm_loss(theta, z, a, z_next, r, xmask, done, valid):
+    """Teacher-forced sequence loss.
+
+    z [B,T,Z]; a [B,T,2] i32; z_next [B,T,Z]; r [B,T]; xmask [B,T,X+1];
+    done [B,T]; valid [B,T] (1 while the step is real, 0 on padding).
+    """
+    p = WM_LAYOUT.unflatten(theta)
+    bsz = z.shape[0]
+    h0 = jnp.zeros((bsz, hp.RNN_HIDDEN), jnp.float32)
+    c0 = jnp.zeros((bsz, hp.RNN_HIDDEN), jnp.float32)
+
+    def step(carry, inp):
+        h, c = carry
+        zt, at, znt, rt, xmt, dt, vt = inp
+        log_pi, mu, log_sig, rew, mask_logits, done_logit, h1, c1 = _wm_cell(
+            p, zt, at, h, c
+        )
+        nll = mdn_nll(log_pi, mu, log_sig, znt)  # [B]
+        r_se = (rew - rt) ** 2
+        m_bce = jnp.mean(_bce(mask_logits, xmt), axis=-1)
+        d_bce = _bce(done_logit, dt)
+        losses = jnp.stack(
+            [
+                jnp.sum(nll * vt),
+                jnp.sum(r_se * vt),
+                jnp.sum(m_bce * vt),
+                jnp.sum(d_bce * vt),
+                jnp.sum(vt),
+            ]
+        )
+        return (h1, c1), losses
+
+    seq = (
+        z.transpose(1, 0, 2),
+        a.transpose(1, 0, 2),
+        z_next.transpose(1, 0, 2),
+        r.T,
+        xmask.transpose(1, 0, 2),
+        done.T,
+        valid.T,
+    )
+    (_, _), per_t = jax.lax.scan(step, (h0, c0), seq)
+    tot = jnp.sum(per_t, axis=0)
+    denom = jnp.maximum(tot[4], 1.0)
+    nll, r_mse, m_bce, d_bce = (
+        tot[0] / denom,
+        tot[1] / denom,
+        tot[2] / denom,
+        tot[3] / denom,
+    )
+    total = nll + r_mse + m_bce + d_bce
+    return total, (nll, r_mse, m_bce, d_bce)
+
+
+def wm_init(seed: Array) -> Tuple[Array]:
+    return (_init_flat(WM_LAYOUT, seed),)
+
+
+def wm_train(theta, m, v, t, z, a, z_next, r, xmask, done, valid, lr):
+    (total, aux), grad = jax.value_and_grad(wm_loss, has_aux=True)(
+        theta, z, a, z_next, r, xmask, done, valid
+    )
+    theta1, m1, v1, t1 = adam_update(theta, m, v, t, grad, lr)
+    nll, r_mse, m_bce, d_bce = aux
+    return theta1, m1, v1, t1, total, nll, r_mse, m_bce, d_bce
+
+
+# ---------------------------------------------------------------------------
+# Actor-critic controller (PPO)
+# ---------------------------------------------------------------------------
+
+CTRL_LAYOUT = Layout(
+    entries=(
+        ("trunk_w", (hp.LATENT + hp.RNN_HIDDEN, hp.CTRL_HIDDEN)),
+        ("trunk_b", (hp.CTRL_HIDDEN,)),
+        ("xfer_w", (hp.CTRL_HIDDEN, hp.N_XFERS1)),
+        ("xfer_b", (hp.N_XFERS1,)),
+        ("loc_w", (hp.CTRL_HIDDEN, hp.N_XFERS1 * hp.MAX_LOCS)),
+        ("loc_b", (hp.N_XFERS1 * hp.MAX_LOCS,)),
+        ("val_w", (hp.CTRL_HIDDEN, 1)),
+        ("val_b", (1,)),
+    )
+)
+
+
+def _ctrl_forward(p, z, h):
+    trunk = jnp.tanh(jnp.concatenate([z, h], axis=-1) @ p["trunk_w"] + p["trunk_b"])
+    xlog = trunk @ p["xfer_w"] + p["xfer_b"]
+    llog = (trunk @ p["loc_w"] + p["loc_b"]).reshape(
+        trunk.shape[0], hp.N_XFERS1, hp.MAX_LOCS
+    )
+    value = (trunk @ p["val_w"] + p["val_b"])[:, 0]
+    return xlog, llog, value
+
+
+def ctrl_policy(theta, z, h):
+    """Inference artifact: raw logits; masking + sampling are Rust-side."""
+    p = CTRL_LAYOUT.unflatten(theta)
+    return _ctrl_forward(p, z, h)
+
+
+def _masked_log_softmax(logits, mask):
+    neg = jnp.asarray(-1e9, logits.dtype)
+    masked = jnp.where(mask > 0.5, logits, neg)
+    return jax.nn.log_softmax(masked, axis=-1)
+
+
+def ppo_loss(theta, z, h, act, old_logp, adv, ret, xmask, lmask, clip, ent_coef):
+    """Clipped-surrogate PPO over the factorised (xfer, location) action.
+
+    z [B,Z]; h [B,R]; act [B,2] i32; old_logp/adv/ret [B];
+    xmask [B,X+1]; lmask [B,L] (locations valid for the *chosen* xfer).
+    """
+    p = CTRL_LAYOUT.unflatten(theta)
+    # Hot-path optimisation (EXPERIMENTS.md §Perf/L2): materialising the
+    # full [B, X+1, L] location-logit tensor costs ~50x more FLOPs than the
+    # training loss needs — only the *chosen* transformation's location row
+    # enters the likelihood. Gather the chosen slice of loc_w first.
+    trunk = jnp.tanh(jnp.concatenate([z, h], axis=-1) @ p["trunk_w"] + p["trunk_b"])
+    xlog = trunk @ p["xfer_w"] + p["xfer_b"]
+    value = (trunk @ p["val_w"] + p["val_b"])[:, 0]
+    loc_w3 = p["loc_w"].reshape(hp.CTRL_HIDDEN, hp.N_XFERS1, hp.MAX_LOCS)
+    w_act = loc_w3[:, act[:, 0], :]  # [H, B, L]
+    b_act = p["loc_b"].reshape(hp.N_XFERS1, hp.MAX_LOCS)[act[:, 0]]  # [B, L]
+    chosen_llog = jnp.einsum("bh,hbl->bl", trunk, w_act) + b_act
+    bidx = jnp.arange(z.shape[0])
+    x_lsm = _masked_log_softmax(xlog, xmask)
+    l_lsm = _masked_log_softmax(chosen_llog, lmask)
+    # NO-OP has no location; its location logprob contributes 0.
+    is_noop = (act[:, 0] == hp.N_XFERS).astype(jnp.float32)
+    logp = x_lsm[bidx, act[:, 0]] + (1.0 - is_noop) * l_lsm[bidx, act[:, 1]]
+
+    ratio = jnp.exp(logp - old_logp)
+    adv_n = (adv - jnp.mean(adv)) / (jnp.std(adv) + 1e-8)
+    surr = jnp.minimum(ratio * adv_n, jnp.clip(ratio, 1.0 - clip, 1.0 + clip) * adv_n)
+    pi_loss = -jnp.mean(surr)
+    v_loss = jnp.mean((value - ret) ** 2)
+
+    x_probs = jnp.exp(x_lsm)
+    x_ent = -jnp.sum(jnp.where(xmask > 0.5, x_probs * x_lsm, 0.0), axis=-1)
+    l_probs = jnp.exp(l_lsm)
+    l_ent = -jnp.sum(jnp.where(lmask > 0.5, l_probs * l_lsm, 0.0), axis=-1)
+    entropy = jnp.mean(x_ent + (1.0 - is_noop) * l_ent)
+
+    approx_kl = jnp.mean(old_logp - logp)
+    total = pi_loss + 0.5 * v_loss - ent_coef * entropy
+    return total, (pi_loss, v_loss, entropy, approx_kl)
+
+
+def ctrl_init(seed: Array) -> Tuple[Array]:
+    return (_init_flat(CTRL_LAYOUT, seed),)
+
+
+def ctrl_train(
+    theta, m, v, t, z, h, act, old_logp, adv, ret, xmask, lmask, lr, clip, ent_coef
+):
+    (_, aux), grad = jax.value_and_grad(ppo_loss, has_aux=True)(
+        theta, z, h, act, old_logp, adv, ret, xmask, lmask, clip, ent_coef
+    )
+    theta1, m1, v1, t1 = adam_update(theta, m, v, t, grad, lr)
+    pi_loss, v_loss, entropy, approx_kl = aux
+    return theta1, m1, v1, t1, pi_loss, v_loss, entropy, approx_kl

@@ -1,0 +1,88 @@
+"""AOT contract tests: manifest consistency and HLO text validity."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, hp, model
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def manifest():
+    path = os.path.join(ART_DIR, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built — run `make artifacts`")
+    with open(path) as f:
+        return json.load(f)
+
+
+class TestExportTable:
+    def test_every_export_named_uniquely(self):
+        names = [e[0] for e in aot._exports()]
+        assert len(names) == len(set(names))
+
+    def test_arg_names_match_specs(self):
+        for name, fn, specs, arg_names, outs in aot._exports():
+            assert len(specs) == len(arg_names), name
+            assert len(outs) > 0, name
+
+    def test_param_args_match_layout_sizes(self):
+        sizes = {
+            "gnn": model.GNN_LAYOUT.size,
+            "wm": model.WM_LAYOUT.size,
+            "ctrl": model.CTRL_LAYOUT.size,
+        }
+        for name, fn, specs, arg_names, outs in aot._exports():
+            if name.endswith("_init"):
+                continue
+            fam = name.split("_")[0]
+            theta_specs = [s for s, n in zip(specs, arg_names) if n == "theta"]
+            assert theta_specs, name
+            assert theta_specs[0].shape == (sizes[fam],), name
+
+
+class TestManifest:
+    def test_hp_round_trip(self):
+        m = manifest()
+        assert m["hp"]["MAX_NODES"] == hp.MAX_NODES
+        assert m["hp"]["N_XFERS"] == hp.N_XFERS
+        assert m["hp"]["MAX_LOCS"] == hp.MAX_LOCS
+        assert m["hp"]["RNN_HIDDEN"] == hp.RNN_HIDDEN
+        assert m["hp"]["MDN_K"] == hp.MDN_K
+
+    def test_all_artifacts_exist_on_disk(self):
+        m = manifest()
+        for name, entry in m["artifacts"].items():
+            path = os.path.join(ART_DIR, entry["file"])
+            assert os.path.exists(path), name
+            with open(path) as f:
+                head = f.read(200)
+            assert "HloModule" in head, name
+
+    def test_param_sizes_consistent(self):
+        m = manifest()
+        assert m["param_sizes"]["gnn"] == model.GNN_LAYOUT.size
+        assert m["param_sizes"]["wm"] == model.WM_LAYOUT.size
+        assert m["param_sizes"]["ctrl"] == model.CTRL_LAYOUT.size
+
+    def test_layout_descriptions_cover_size(self):
+        m = manifest()
+        for fam, size in m["param_sizes"].items():
+            tot = 0
+            for e in m["param_layouts"][fam]:
+                n = 1
+                for d in e["shape"]:
+                    n *= d
+                tot += n
+            assert tot == size, fam
+
+    def test_expected_artifact_set(self):
+        m = manifest()
+        expected = {
+            "gnn_init", "gnn_ae_train", "gnn_encode_1", "gnn_encode_b",
+            "wm_init", "wm_train", "wm_step_1", "wm_step_b",
+            "ctrl_init", "ctrl_policy_1", "ctrl_policy_b", "ctrl_train",
+        }
+        assert expected == set(m["artifacts"].keys())

@@ -1,0 +1,227 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+This is the core correctness signal of the compile path — if these pass, the
+HLO that reaches the Rust runtime computes the same numbers the oracles do.
+Hypothesis sweeps shapes and seeds; fixed tests pin the compiled shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import hp
+from compile.kernels import gnn, lstm, mdn, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# GNN fused message-passing layer
+# ---------------------------------------------------------------------------
+
+
+class TestGnnKernel:
+    def test_compiled_shape(self):
+        n, fi, fo = hp.MAX_NODES, hp.NODE_FEATS, hp.GNN_HIDDEN
+        adj = jax.nn.softmax(rand(0, (n, n)), axis=-1)
+        h = rand(1, (n, fi))
+        wn, ws, b = rand(2, (fi, fo), 0.1), rand(3, (fi, fo), 0.1), rand(4, (fo,), 0.1)
+        got = gnn.gnn_layer(adj, h, wn, ws, b)
+        want = ref.gnn_layer_ref(adj, h, wn, ws, b)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+        assert got.shape == (n, fo)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n=st.integers(4, 96),
+        fi=st.integers(2, 48),
+        fo=st.integers(2, 48),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_hypothesis(self, n, fi, fo, seed):
+        k = jax.random.PRNGKey(seed)
+        ks = jax.random.split(k, 5)
+        adj = jax.random.uniform(ks[0], (n, n))
+        h = jax.random.normal(ks[1], (n, fi))
+        wn = 0.2 * jax.random.normal(ks[2], (fi, fo))
+        ws = 0.2 * jax.random.normal(ks[3], (fi, fo))
+        b = 0.2 * jax.random.normal(ks[4], (fo,))
+        got = gnn.gnn_layer(adj, h, wn, ws, b)
+        want = ref.gnn_layer_ref(adj, h, wn, ws, b)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_gradients_match_ref(self):
+        n, fi, fo = 32, 8, 16
+        adj, h = rand(0, (n, n)), rand(1, (n, fi))
+        wn, ws, b = rand(2, (fi, fo), 0.1), rand(3, (fi, fo), 0.1), rand(4, (fo,), 0.1)
+
+        def loss_k(wn, ws, b):
+            return jnp.sum(gnn.gnn_layer(adj, h, wn, ws, b) ** 2)
+
+        def loss_r(wn, ws, b):
+            return jnp.sum(ref.gnn_layer_ref(adj, h, wn, ws, b) ** 2)
+
+        gk = jax.grad(loss_k, argnums=(0, 1, 2))(wn, ws, b)
+        gr = jax.grad(loss_r, argnums=(0, 1, 2))(wn, ws, b)
+        for a, bb in zip(gk, gr):
+            np.testing.assert_allclose(a, bb, rtol=1e-4, atol=1e-4)
+
+    def test_relu_region(self):
+        """Outputs are exactly non-negative (relu semantics preserved)."""
+        n, fi, fo = 40, 8, 8
+        out = gnn.gnn_layer(
+            rand(0, (n, n)), rand(1, (n, fi)), rand(2, (fi, fo)), rand(3, (fi, fo)), rand(4, (fo,))
+        )
+        assert float(jnp.min(out)) >= 0.0
+
+    def test_non_multiple_of_block(self):
+        """Row counts that don't divide GNN_ROW_BLOCK pad correctly."""
+        n, fi, fo = hp.GNN_ROW_BLOCK + 7, 8, 8
+        adj, h = rand(0, (n, n)), rand(1, (n, fi))
+        wn, ws, b = rand(2, (fi, fo), 0.1), rand(3, (fi, fo), 0.1), rand(4, (fo,), 0.1)
+        got = gnn.gnn_layer(adj, h, wn, ws, b)
+        want = ref.gnn_layer_ref(adj, h, wn, ws, b)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Fused LSTM cell
+# ---------------------------------------------------------------------------
+
+
+class TestLstmKernel:
+    def test_compiled_shape(self):
+        b, i, r = hp.B_WM, hp.LATENT + 2 * hp.ACT_EMB, hp.RNN_HIDDEN
+        x, h, c = rand(0, (b, i)), rand(1, (b, r)), rand(2, (b, r))
+        wx, wh, bias = rand(3, (i, 4 * r), 0.05), rand(4, (r, 4 * r), 0.05), rand(5, (4 * r,), 0.05)
+        h1, c1 = lstm.lstm_cell(x, h, c, wx, wh, bias)
+        h2, c2 = ref.lstm_cell_ref(x, h, c, wx, wh, bias)
+        np.testing.assert_allclose(h1, h2, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(c1, c2, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b=st.integers(1, 8),
+        i=st.integers(1, 32),
+        r=st.integers(1, 64),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_hypothesis(self, b, i, r, seed):
+        k = jax.random.PRNGKey(seed)
+        ks = jax.random.split(k, 6)
+        x = jax.random.normal(ks[0], (b, i))
+        h = jax.random.normal(ks[1], (b, r))
+        c = jax.random.normal(ks[2], (b, r))
+        wx = 0.1 * jax.random.normal(ks[3], (i, 4 * r))
+        wh = 0.1 * jax.random.normal(ks[4], (r, 4 * r))
+        bias = 0.1 * jax.random.normal(ks[5], (4 * r,))
+        h1, c1 = lstm.lstm_cell(x, h, c, wx, wh, bias)
+        h2, c2 = ref.lstm_cell_ref(x, h, c, wx, wh, bias)
+        np.testing.assert_allclose(h1, h2, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(c1, c2, rtol=1e-4, atol=1e-4)
+
+    def test_state_bounded(self):
+        """h is an o*tanh(c) product => |h| < 1 elementwise."""
+        b, i, r = 4, 8, 16
+        h1, _ = lstm.lstm_cell(
+            rand(0, (b, i), 3.0), rand(1, (b, r), 3.0), rand(2, (b, r), 3.0),
+            rand(3, (i, 4 * r)), rand(4, (r, 4 * r)), rand(5, (4 * r,)),
+        )
+        assert float(jnp.max(jnp.abs(h1))) < 1.0
+
+    def test_gradients_match_ref(self):
+        b, i, r = 4, 8, 16
+        x, h, c = rand(0, (b, i)), rand(1, (b, r)), rand(2, (b, r))
+        wx, wh, bias = rand(3, (i, 4 * r), 0.1), rand(4, (r, 4 * r), 0.1), rand(5, (4 * r,), 0.1)
+
+        def lk(wx, wh):
+            h1, c1 = lstm.lstm_cell(x, h, c, wx, wh, bias)
+            return jnp.sum(h1) + jnp.sum(c1**2)
+
+        def lr_(wx, wh):
+            h1, c1 = ref.lstm_cell_ref(x, h, c, wx, wh, bias)
+            return jnp.sum(h1) + jnp.sum(c1**2)
+
+        gk = jax.grad(lk, argnums=(0, 1))(wx, wh)
+        gr = jax.grad(lr_, argnums=(0, 1))(wx, wh)
+        for a, bb in zip(gk, gr):
+            np.testing.assert_allclose(a, bb, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# MDN NLL
+# ---------------------------------------------------------------------------
+
+
+class TestMdnKernel:
+    def test_compiled_shape(self):
+        b, z, k = hp.B_WM, hp.LATENT, hp.MDN_K
+        lp, mu = rand(0, (b, z, k)), rand(1, (b, z, k))
+        ls, tg = rand(2, (b, z, k), 0.3), rand(3, (b, z))
+        got = mdn.mdn_nll(lp, mu, ls, tg)
+        want = ref.mdn_nll_ref(lp, mu, ls, tg)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+        assert got.shape == (b,)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b=st.integers(1, 8),
+        z=st.integers(1, 32),
+        k=st.integers(1, 8),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_hypothesis(self, b, z, k, seed):
+        kk = jax.random.PRNGKey(seed)
+        ks = jax.random.split(kk, 4)
+        lp = jax.random.normal(ks[0], (b, z, k))
+        mu = jax.random.normal(ks[1], (b, z, k))
+        ls = 0.5 * jax.random.normal(ks[2], (b, z, k))
+        tg = jax.random.normal(ks[3], (b, z))
+        got = mdn.mdn_nll(lp, mu, ls, tg)
+        want = ref.mdn_nll_ref(lp, mu, ls, tg)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_single_component_is_gaussian_nll(self):
+        """K=1 must reduce to the plain Gaussian negative log-likelihood."""
+        b, z = 3, 5
+        mu = rand(0, (b, z, 1))
+        ls = rand(1, (b, z, 1), 0.2)
+        tg = rand(2, (b, z))
+        lp = jnp.zeros((b, z, 1))
+        got = mdn.mdn_nll(lp, mu, ls, tg)
+        sig = jnp.exp(ls[..., 0])
+        manual = 0.5 * ((tg - mu[..., 0]) / sig) ** 2 + ls[..., 0] + 0.5 * jnp.log(
+            2 * jnp.pi
+        )
+        np.testing.assert_allclose(got, jnp.mean(manual, axis=-1), rtol=1e-5, atol=1e-5)
+
+    def test_nll_decreases_when_target_on_mean(self):
+        """Target sitting on a component mean scores better than far away."""
+        b, z, k = 2, 4, 3
+        mu = rand(0, (b, z, k))
+        ls = jnp.zeros((b, z, k))
+        lp = jnp.zeros((b, z, k))
+        on_mean = mdn.mdn_nll(lp, mu, ls, mu[..., 0])
+        far = mdn.mdn_nll(lp, mu, ls, mu[..., 0] + 10.0)
+        assert bool(jnp.all(on_mean < far))
+
+    def test_extreme_logits_stable(self):
+        """Max-subtraction log-sum-exp keeps huge logits finite."""
+        b, z, k = 2, 4, 3
+        lp = jnp.full((b, z, k), 80.0)
+        got = mdn.mdn_nll(lp, rand(0, (b, z, k)), rand(1, (b, z, k), 0.1), rand(2, (b, z)))
+        assert bool(jnp.all(jnp.isfinite(got)))
+
+    def test_gradients_match_ref(self):
+        b, z, k = 4, 8, 4
+        lp, mu = rand(0, (b, z, k)), rand(1, (b, z, k))
+        ls, tg = rand(2, (b, z, k), 0.3), rand(3, (b, z))
+        gk = jax.grad(lambda m: jnp.sum(mdn.mdn_nll(lp, m, ls, tg)))(mu)
+        gr = jax.grad(lambda m: jnp.sum(ref.mdn_nll_ref(lp, m, ls, tg)))(mu)
+        np.testing.assert_allclose(gk, gr, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,220 @@
+"""L2 contracts: shapes, losses decrease, PPO/Adam sanity, layout round-trip."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import hp, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def key(i):
+    return jax.random.PRNGKey(i)
+
+
+def random_graph_batch(b, seed=0):
+    ks = jax.random.split(key(seed), 3)
+    feats = jax.random.normal(ks[0], (b, hp.MAX_NODES, hp.NODE_FEATS))
+    adj = (jax.random.uniform(ks[1], (b, hp.MAX_NODES, hp.MAX_NODES)) < 0.03).astype(
+        jnp.float32
+    )
+    n_live = 40
+    mask = jnp.zeros((b, hp.MAX_NODES)).at[:, :n_live].set(1.0)
+    feats = feats * mask[..., None]
+    adj = adj * mask[:, :, None] * mask[:, None, :]
+    return feats, adj, mask
+
+
+class TestLayout:
+    def test_sizes_positive(self):
+        assert model.GNN_LAYOUT.size > 0
+        assert model.WM_LAYOUT.size > 0
+        assert model.CTRL_LAYOUT.size > 0
+
+    def test_unflatten_round_trip(self):
+        theta = jnp.arange(model.GNN_LAYOUT.size, dtype=jnp.float32)
+        parts = model.GNN_LAYOUT.unflatten(theta)
+        flat_again = jnp.concatenate([parts[n].reshape(-1) for n, _ in model.GNN_LAYOUT.entries])
+        np.testing.assert_array_equal(theta, flat_again)
+
+    def test_init_deterministic(self):
+        a = model.gnn_init(jnp.int32(7))[0]
+        b = model.gnn_init(jnp.int32(7))[0]
+        c = model.gnn_init(jnp.int32(8))[0]
+        np.testing.assert_array_equal(a, b)
+        assert not np.allclose(a, c)
+
+    def test_biases_zero_at_init(self):
+        theta = model.wm_init(jnp.int32(0))[0]
+        parts = model.WM_LAYOUT.unflatten(theta)
+        np.testing.assert_array_equal(parts["lstm_b"], jnp.zeros_like(parts["lstm_b"]))
+
+
+class TestGnn:
+    def test_encode_shape_and_range(self):
+        theta = model.gnn_init(jnp.int32(0))[0]
+        feats, adj, mask = random_graph_batch(4)
+        (z,) = model.gnn_encode(theta, feats, adj, mask)
+        assert z.shape == (4, hp.LATENT)
+        assert float(jnp.max(jnp.abs(z))) <= 1.0  # tanh output
+
+    def test_encode_ignores_padded_nodes(self):
+        """Changing features of masked-out nodes must not change z."""
+        theta = model.gnn_init(jnp.int32(0))[0]
+        feats, adj, mask = random_graph_batch(2)
+        (z1,) = model.gnn_encode(theta, feats, adj, mask)
+        feats2 = feats.at[:, 100:, :].set(99.0)  # nodes >= 40 are masked
+        (z2,) = model.gnn_encode(theta, feats2, adj, mask)
+        np.testing.assert_allclose(z1, z2, rtol=1e-5, atol=1e-5)
+
+    def test_ae_train_reduces_loss(self):
+        theta = model.gnn_init(jnp.int32(0))[0]
+        m = jnp.zeros_like(theta)
+        v = jnp.zeros_like(theta)
+        t = jnp.float32(0)
+        feats, adj, mask = random_graph_batch(hp.B_ENC)
+        lr = jnp.float32(1e-3)
+        first = None
+        step = jax.jit(model.gnn_ae_train)
+        for i in range(12):
+            theta, m, v, t, loss = step(theta, m, v, t, feats, adj, mask, lr)
+            if first is None:
+                first = float(loss)
+        assert float(loss) < first
+
+
+class TestWorldModel:
+    def _batch(self, b=hp.B_WM, t=hp.SEQ_LEN, seed=0):
+        ks = jax.random.split(key(seed), 7)
+        z = jax.random.normal(ks[0], (b, t, hp.LATENT))
+        a = jax.random.randint(ks[1], (b, t, 2), 0, 10).astype(jnp.int32)
+        z_next = z + 0.1 * jax.random.normal(ks[2], (b, t, hp.LATENT))
+        r = 0.1 * jax.random.normal(ks[3], (b, t))
+        xmask = (jax.random.uniform(ks[4], (b, t, hp.N_XFERS1)) < 0.5).astype(jnp.float32)
+        done = jnp.zeros((b, t))
+        valid = jnp.ones((b, t))
+        return z, a, z_next, r, xmask, done, valid
+
+    def test_step_shapes(self):
+        theta = model.wm_init(jnp.int32(0))[0]
+        b = 3
+        z = jax.random.normal(key(0), (b, hp.LATENT))
+        a = jnp.zeros((b, 2), jnp.int32)
+        h = jnp.zeros((b, hp.RNN_HIDDEN))
+        c = jnp.zeros((b, hp.RNN_HIDDEN))
+        out = model.wm_step(theta, z, a, h, c)
+        log_pi, mu, log_sig, rew, mask_logits, done_logit, h1, c1 = out
+        assert log_pi.shape == (b, hp.LATENT, hp.MDN_K)
+        assert mu.shape == (b, hp.LATENT, hp.MDN_K)
+        assert rew.shape == (b,)
+        assert mask_logits.shape == (b, hp.N_XFERS1)
+        assert h1.shape == (b, hp.RNN_HIDDEN)
+        assert bool(jnp.all(log_sig >= hp.LOGSIG_MIN - 1e-6))
+        assert bool(jnp.all(log_sig <= hp.LOGSIG_MAX + 1e-6))
+
+    def test_train_reduces_loss(self):
+        theta = model.wm_init(jnp.int32(1))[0]
+        m, v, t = jnp.zeros_like(theta), jnp.zeros_like(theta), jnp.float32(0)
+        batch = self._batch()
+        lr = jnp.float32(3e-4)
+        step = jax.jit(model.wm_train)
+        losses = []
+        for i in range(8):
+            theta, m, v, t, total, nll, r_mse, m_bce, d_bce = step(
+                theta, m, v, t, *batch, lr
+            )
+            losses.append(float(total))
+        assert losses[-1] < losses[0]
+
+    def test_valid_mask_zeroes_padding(self):
+        """Loss with all-invalid steps equals loss with denom clamp only."""
+        theta = model.wm_init(jnp.int32(2))[0]
+        z, a, z_next, r, xmask, done, valid = self._batch(seed=3)
+        total, _ = model.wm_loss(theta, z, a, z_next, r, xmask, done, jnp.zeros_like(valid))
+        assert float(total) == 0.0
+
+    def test_hidden_state_evolves(self):
+        theta = model.wm_init(jnp.int32(0))[0]
+        z = jax.random.normal(key(1), (2, hp.LATENT))
+        a = jnp.zeros((2, 2), jnp.int32)
+        h = jnp.zeros((2, hp.RNN_HIDDEN))
+        c = jnp.zeros((2, hp.RNN_HIDDEN))
+        *_, h1, c1 = model.wm_step(theta, z, a, h, c)
+        assert float(jnp.max(jnp.abs(h1))) > 0.0
+
+
+class TestController:
+    def test_policy_shapes(self):
+        theta = model.ctrl_init(jnp.int32(0))[0]
+        b = 5
+        z = jax.random.normal(key(0), (b, hp.LATENT))
+        h = jax.random.normal(key(1), (b, hp.RNN_HIDDEN))
+        xlog, llog, value = model.ctrl_policy(theta, z, h)
+        assert xlog.shape == (b, hp.N_XFERS1)
+        assert llog.shape == (b, hp.N_XFERS1, hp.MAX_LOCS)
+        assert value.shape == (b,)
+
+    def _ppo_batch(self, b=hp.B_PPO, seed=0):
+        ks = jax.random.split(key(seed), 8)
+        z = jax.random.normal(ks[0], (b, hp.LATENT))
+        h = jax.random.normal(ks[1], (b, hp.RNN_HIDDEN))
+        act = jnp.stack(
+            [
+                jax.random.randint(ks[2], (b,), 0, hp.N_XFERS1),
+                jax.random.randint(ks[3], (b,), 0, hp.MAX_LOCS),
+            ],
+            axis=-1,
+        ).astype(jnp.int32)
+        old_logp = -2.0 + 0.1 * jax.random.normal(ks[4], (b,))
+        adv = jax.random.normal(ks[5], (b,))
+        ret = jax.random.normal(ks[6], (b,))
+        xmask = jnp.ones((b, hp.N_XFERS1))
+        lmask = jnp.ones((b, hp.MAX_LOCS))
+        return z, h, act, old_logp, adv, ret, xmask, lmask
+
+    def test_train_step_runs_and_is_finite(self):
+        theta = model.ctrl_init(jnp.int32(0))[0]
+        m, v, t = jnp.zeros_like(theta), jnp.zeros_like(theta), jnp.float32(0)
+        batch = self._ppo_batch()
+        out = jax.jit(model.ctrl_train)(
+            theta, m, v, t, *batch, jnp.float32(3e-4), jnp.float32(0.2), jnp.float32(0.01)
+        )
+        theta1 = out[0]
+        assert bool(jnp.all(jnp.isfinite(theta1)))
+        assert not np.allclose(np.asarray(theta1), np.asarray(theta))
+        for s in out[4:]:
+            assert bool(jnp.isfinite(s))
+
+    def test_masked_actions_get_zero_probability(self):
+        theta = model.ctrl_init(jnp.int32(0))[0]
+        b = 4
+        z = jax.random.normal(key(0), (b, hp.LATENT))
+        h = jax.random.normal(key(1), (b, hp.RNN_HIDDEN))
+        xlog, _, _ = model.ctrl_policy(theta, z, h)
+        mask = jnp.zeros((b, hp.N_XFERS1)).at[:, :3].set(1.0)
+        lsm = model._masked_log_softmax(xlog, mask)
+        probs = jnp.exp(lsm)
+        assert float(jnp.max(probs[:, 3:])) < 1e-20
+        np.testing.assert_allclose(jnp.sum(probs, axis=-1), 1.0, rtol=1e-4)
+
+
+class TestAdam:
+    def test_matches_reference_formula(self):
+        theta = jnp.array([1.0, -2.0, 3.0])
+        g = jnp.array([0.5, 0.5, -0.5])
+        m = jnp.zeros(3)
+        v = jnp.zeros(3)
+        theta1, m1, v1, t1 = model.adam_update(theta, m, v, jnp.float32(0), g, 0.1)
+        # step 1: mhat = g, vhat = g^2 -> update ~= lr * sign(g)
+        np.testing.assert_allclose(
+            theta1, theta - 0.1 * g / (jnp.abs(g) + 1e-8 / 1.0), rtol=1e-4
+        )
+        assert float(t1) == 1.0
+
+    def test_zero_grad_keeps_params(self):
+        theta = jnp.array([1.0, 2.0])
+        z = jnp.zeros(2)
+        theta1, _, _, _ = model.adam_update(theta, z, z, jnp.float32(0), z, 0.1)
+        np.testing.assert_allclose(theta1, theta)

@@ -1,0 +1,38 @@
+//! Bench: Fig. 7 — end-to-end optimisation time per graph for the two
+//! deterministic search baselines (greedy / TASO). The RLFlow rollout side
+//! of Fig. 7 needs trained artifacts and lives in
+//! `rlflow experiment fig7`; this bench isolates the search costs, which
+//! dominate TASO's bar in the paper.
+
+use std::time::Instant;
+
+use rlflow::cost::{CostModel, DeviceProfile};
+use rlflow::search::{greedy_optimise, taso_optimise, TasoConfig};
+use rlflow::xfer::library::standard_library;
+
+fn main() {
+    let rules = standard_library();
+    let cost = CostModel::new(DeviceProfile::rtx2070());
+    println!(
+        "{:<15} {:>12} {:>12} {:>10} {:>10}",
+        "Graph", "greedy (s)", "taso (s)", "greedy %", "taso %"
+    );
+    for (info, g) in rlflow::zoo::all() {
+        let t0 = Instant::now();
+        let (_, glog) = greedy_optimise(&g, &rules, &cost, 50);
+        let greedy_s = t0.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        let (_, tlog) = taso_optimise(&g, &rules, &cost, &TasoConfig::default());
+        let taso_s = t0.elapsed().as_secs_f64();
+
+        println!(
+            "{:<15} {:>12.3} {:>12.3} {:>9.1}% {:>9.1}%",
+            info.name,
+            greedy_s,
+            taso_s,
+            glog.improvement_pct(),
+            tlog.improvement_pct()
+        );
+    }
+}

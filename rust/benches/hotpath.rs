@@ -1,0 +1,177 @@
+//! Bench: L3 hot-path micro-benchmarks + artifact execution latencies.
+//!
+//! Covers every operation on the per-step critical path of training and
+//! evaluation; §Perf in EXPERIMENTS.md tracks these numbers before/after
+//! optimisation. Artifact timings are skipped when artifacts are missing.
+
+use std::time::Instant;
+
+use rlflow::cost::{CostModel, DeviceProfile};
+use rlflow::env::{Env, EnvConfig, StateEncoder};
+use rlflow::runtime::{lit_f32, lit_i32, Engine, Manifest, ParamStore};
+use rlflow::util::Rng;
+use rlflow::xfer::library::standard_library;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("  {:<28} {:>10.3} ms/iter  ({} iters)", name, per * 1e3, iters);
+    per
+}
+
+fn main() -> anyhow::Result<()> {
+    let rules = standard_library();
+    let cost = CostModel::new(DeviceProfile::rtx2070());
+    let bert = rlflow::zoo::bert_base();
+    let encoder = StateEncoder::new(320, 32);
+
+    println!("== L3 environment hot path (BERT) ==");
+    let fuse = rules.index_of("fuse_add_ln").unwrap();
+    bench("env.new (match + cost)", 10, || {
+        let _ = Env::new(bert.clone(), &rules, &cost, EnvConfig::default());
+    });
+    bench("env.step (fuse_add_ln)", 10, || {
+        let mut env = Env::new(bert.clone(), &rules, &cost, EnvConfig::default());
+        let _ = env.step((fuse, 0));
+    });
+    bench("encoder.encode", 20, || {
+        let _ = encoder.encode(&bert);
+    });
+    bench("rule.find fuse_add_ln", 100, || {
+        let _ = rules.get(fuse).unwrap().find(&bert);
+    });
+    bench("count_matches (all rules)", 10, || {
+        let _ = rules.count_matches(&bert);
+    });
+    bench("graph.clone", 100, || {
+        let _ = bert.clone();
+    });
+    bench("graph_cost (full)", 100, || {
+        let _ = cost.graph_cost(&bert);
+    });
+    bench("graph_cost_fast (hot path)", 200, || {
+        let _ = cost.graph_cost_fast(&bert);
+    });
+
+    if !Manifest::default_dir().join("manifest.json").exists() {
+        println!("\nartifacts not built — skipping artifact latency benches");
+        return Ok(());
+    }
+
+    println!("\n== artifact execution latencies (PJRT CPU) ==");
+    let engine = Engine::load_default()?;
+    let m = &engine.manifest;
+    let (n, f) = (m.hp_usize("MAX_NODES")?, m.hp_usize("NODE_FEATS")?);
+    let zdim = m.hp_usize("LATENT")?;
+    let r = m.hp_usize("RNN_HIDDEN")?;
+    let gnn = ParamStore::init(&engine, "gnn", 0)?;
+    let wm = ParamStore::init(&engine, "wm", 1)?;
+    let ctrl = ParamStore::init(&engine, "ctrl", 2)?;
+    engine.warmup(&["gnn_encode_1", "wm_step_1", "wm_step_b", "ctrl_policy_1", "ctrl_policy_b"])?;
+
+    let e = encoder.encode(&bert);
+    let feats = lit_f32(&e.feats, &[1, n, f])?;
+    let adj = lit_f32(&e.adj, &[1, n, n])?;
+    let mask = lit_f32(&e.mask, &[1, n])?;
+    bench("gnn_encode_1 (BERT state)", 20, || {
+        let _ = engine
+            .exec("gnn_encode_1", &[gnn.theta_lit().unwrap(), feats.clone(), adj.clone(), mask.clone()])
+            .unwrap();
+    });
+
+    let z1 = lit_f32(&vec![0.1; zdim], &[1, zdim])?;
+    let a1 = lit_i32(&[0, 0], &[1, 2])?;
+    let h1 = lit_f32(&vec![0.0; r], &[1, r])?;
+    let c1 = lit_f32(&vec![0.0; r], &[1, r])?;
+    let wm_step_ms = bench("wm_step_1 (dream step b=1)", 50, || {
+        let _ = engine
+            .exec("wm_step_1", &[wm.theta_lit().unwrap(), z1.clone(), a1.clone(), h1.clone(), c1.clone()])
+            .unwrap();
+    });
+
+    let b = m.hp_usize("B_DREAM")?;
+    let zb = lit_f32(&vec![0.1; b * zdim], &[b, zdim])?;
+    let ab = lit_i32(&vec![0; b * 2], &[b, 2])?;
+    let hb = lit_f32(&vec![0.0; b * r], &[b, r])?;
+    let cb = lit_f32(&vec![0.0; b * r], &[b, r])?;
+    bench("wm_step_b (dream batch)", 50, || {
+        let _ = engine
+            .exec("wm_step_b", &[wm.theta_lit().unwrap(), zb.clone(), ab.clone(), hb.clone(), cb.clone()])
+            .unwrap();
+    });
+
+    bench("ctrl_policy_1 (theta upload)", 20, || {
+        let _ = engine
+            .exec("ctrl_policy_1", &[ctrl.theta_lit().unwrap(), z1.clone(), h1.clone()])
+            .unwrap();
+    });
+    let theta_ctrl = engine.device_theta(&ctrl).unwrap();
+    let ctrl_cached_ms = bench("ctrl_policy_1 (theta cached)", 50, || {
+        let _ = engine
+            .exec_with_theta("ctrl_policy_1", &theta_ctrl, &[z1.clone(), h1.clone()])
+            .unwrap();
+    });
+
+    println!("\n== dream vs real acting step (the §4.4 85x comparison) ==");
+    // Real acting step = encode + policy + env.step + wm hidden advance;
+    // dream acting step = (policy_b + wm_step_b) / B_DREAM.
+    let mut env = Env::new(bert.clone(), &rules, &cost, EnvConfig::default());
+    let mut rng = Rng::new(0);
+    let theta_gnn = engine.device_theta(&gnn).unwrap();
+    let theta_wm = engine.device_theta(&wm).unwrap();
+    let t0 = Instant::now();
+    let mut steps = 0usize;
+    while steps < 10 {
+        let e = encoder.encode(&env.graph);
+        let _z = engine
+            .exec_with_theta(
+                "gnn_encode_1",
+                &theta_gnn,
+                &[
+                    lit_f32(&e.feats, &[1, n, f]).unwrap(),
+                    lit_f32(&e.adj, &[1, n, n]).unwrap(),
+                    lit_f32(&e.mask, &[1, n]).unwrap(),
+                ],
+            )
+            .unwrap();
+        let _pol = engine
+            .exec_with_theta("ctrl_policy_1", &theta_ctrl, &[z1.clone(), h1.clone()])
+            .unwrap();
+        let obs = env.observe();
+        let valid: Vec<usize> = (0..rules.len()).filter(|&i| obs.xfer_mask[i]).collect();
+        if valid.is_empty() {
+            env.reset();
+            continue;
+        }
+        let x = valid[rng.below(valid.len())];
+        let l = rng.below(obs.location_counts[x].max(1));
+        let res = env.step((x, l));
+        let _wm = engine
+            .exec_with_theta("wm_step_1", &theta_wm, &[z1.clone(), a1.clone(), h1.clone(), c1.clone()])
+            .unwrap();
+        steps += 1;
+        if res.done {
+            env.reset();
+        }
+    }
+    let real_ms = t0.elapsed().as_secs_f64() / steps as f64 * 1e3;
+    let t0 = Instant::now();
+    for _ in 0..20 {
+        let _pol = engine
+            .exec_with_theta("ctrl_policy_b", &theta_ctrl, &[zb.clone(), hb.clone()])
+            .unwrap();
+        let _wm = engine
+            .exec_with_theta("wm_step_b", &theta_wm, &[zb.clone(), ab.clone(), hb.clone(), cb.clone()])
+            .unwrap();
+    }
+    let dream_ms = t0.elapsed().as_secs_f64() / (20 * b) as f64 * 1e3;
+    println!("  real acting step (BERT)      {:>10.3} ms", real_ms);
+    println!("  dream acting step (/B={b})   {:>10.3} ms", dream_ms);
+    println!("  ratio                        {:>10.1}x", real_ms / dream_ms);
+    let _ = (wm_step_ms, ctrl_cached_ms);
+    Ok(())
+}

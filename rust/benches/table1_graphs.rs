@@ -1,0 +1,57 @@
+//! Bench: Table 1 pipeline costs — zoo construction, canonical hashing,
+//! substitution matching and state encoding per evaluation graph. These are
+//! the L3 operations on the environment's hot path; Fig. 7's optimisation
+//! times decompose into them.
+//!
+//! Plain harness (`harness = false`): prints mean wall-clock per op.
+
+use std::time::Instant;
+
+use rlflow::cost::{CostModel, DeviceProfile};
+use rlflow::env::StateEncoder;
+use rlflow::graph::canonical_hash;
+use rlflow::xfer::library::standard_library;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    // Warmup.
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("  {:<28} {:>10.3} ms/iter  ({} iters)", name, per * 1e3, iters);
+}
+
+fn main() {
+    let rules = standard_library();
+    let cost = CostModel::new(DeviceProfile::rtx2070());
+    let encoder = StateEncoder::new(320, 32);
+
+    println!("table1_graphs bench: per-graph pipeline costs");
+    for (info, g) in rlflow::zoo::all() {
+        println!("{} ({} ops):", info.name, g.n_ops());
+        bench("construct", 10, || {
+            let _ = rlflow::zoo::by_name(info.name).unwrap();
+        });
+        bench("canonical_hash", 50, || {
+            let _ = canonical_hash(&g);
+        });
+        bench("match_all_rules", 20, || {
+            let _ = rules.count_matches(&g);
+        });
+        bench("graph_cost", 50, || {
+            let cm = CostModel::new(DeviceProfile::rtx2070());
+            let _ = cm.graph_cost(&g);
+        });
+        bench("graph_cost_cached", 200, || {
+            let _ = cost.graph_cost(&g);
+        });
+        bench("graph_cost_fast", 200, || {
+            let _ = cost.graph_cost_fast(&g);
+        });
+        bench("encode_state", 20, || {
+            let _ = encoder.encode(&g);
+        });
+    }
+}

@@ -1,0 +1,179 @@
+//! Rollout storage: compact graph states, episodes, and GAE.
+//!
+//! States are stored sparsely (live-row features + op-edge list) because a
+//! dense `[320, 320]` adjacency per step would be ~400 KiB; the dense
+//! tensors are materialised only when batching into the GNN artifacts.
+
+use crate::env::EncodedGraph;
+use crate::util::Rng;
+
+/// Sparse snapshot of one encoded environment state.
+#[derive(Debug, Clone)]
+pub struct CompactState {
+    pub n_live: usize,
+    /// `n_live * F` features (live rows only).
+    pub feats: Vec<f32>,
+    /// Directed op-row edges (src < dst by topological encoding).
+    pub edges: Vec<(u16, u16)>,
+}
+
+impl CompactState {
+    pub fn from_encoded(e: &EncodedGraph) -> Self {
+        let n_live = e.mask.iter().filter(|&&m| m > 0.0).count();
+        let feats = e.feats[..n_live * e.f].to_vec();
+        let mut edges = Vec::new();
+        for src in 0..n_live {
+            for dst in 0..n_live {
+                if e.adj[src * e.n + dst] > 0.0 {
+                    edges.push((src as u16, dst as u16));
+                }
+            }
+        }
+        Self { n_live, feats, edges }
+    }
+
+    /// Write dense (feats, adj, mask) rows into per-sample slices of a batch.
+    pub fn write_dense(&self, n: usize, f: usize, feats: &mut [f32], adj: &mut [f32], mask: &mut [f32]) {
+        debug_assert_eq!(feats.len(), n * f);
+        debug_assert_eq!(adj.len(), n * n);
+        debug_assert_eq!(mask.len(), n);
+        feats.fill(0.0);
+        adj.fill(0.0);
+        mask.fill(0.0);
+        let live = self.n_live.min(n);
+        feats[..live * f].copy_from_slice(&self.feats[..live * f]);
+        mask[..live].fill(1.0);
+        for &(s, d) in &self.edges {
+            let (s, d) = (s as usize, d as usize);
+            if s < n && d < n {
+                adj[s * n + d] = 1.0;
+            }
+        }
+    }
+}
+
+/// One environment episode: `states.len() == actions.len() + 1`.
+#[derive(Debug, Clone, Default)]
+pub struct Episode {
+    pub states: Vec<CompactState>,
+    /// Per-state xfer validity mask (f32, length X+1), aligned with states.
+    pub xmasks: Vec<Vec<f32>>,
+    pub actions: Vec<(u16, u16)>,
+    pub rewards: Vec<f32>,
+    /// 1.0 on the step that terminated the episode.
+    pub dones: Vec<f32>,
+    /// Latents per state, filled in by the encoder pass (empty until then).
+    pub z: Vec<Vec<f32>>,
+}
+
+impl Episode {
+    pub fn len(&self) -> usize {
+        self.actions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.actions.is_empty()
+    }
+
+    pub fn total_reward(&self) -> f32 {
+        self.rewards.iter().sum()
+    }
+}
+
+/// Generalised Advantage Estimation over one episode's rewards/values.
+/// `values` has length T+1 (bootstrap value of the final state).
+pub fn gae(rewards: &[f32], values: &[f32], dones: &[f32], gamma: f32, lam: f32) -> (Vec<f32>, Vec<f32>) {
+    let t_len = rewards.len();
+    assert_eq!(values.len(), t_len + 1);
+    assert_eq!(dones.len(), t_len);
+    let mut adv = vec![0.0f32; t_len];
+    let mut last = 0.0f32;
+    for t in (0..t_len).rev() {
+        let nonterminal = 1.0 - dones[t];
+        let delta = rewards[t] + gamma * values[t + 1] * nonterminal - values[t];
+        last = delta + gamma * lam * nonterminal * last;
+        adv[t] = last;
+    }
+    let returns: Vec<f32> = adv.iter().zip(values).map(|(a, v)| a + v).collect();
+    (adv, returns)
+}
+
+/// Sample `count` sequence windows of length `seq` (start indices) from
+/// episodes with at least 1 step; pads shorter episodes via the valid mask.
+pub fn sample_windows<'a>(
+    episodes: &'a [Episode],
+    count: usize,
+    rng: &mut Rng,
+) -> Vec<(&'a Episode, usize)> {
+    let usable: Vec<&Episode> = episodes.iter().filter(|e| !e.is_empty()).collect();
+    assert!(!usable.is_empty(), "no usable episodes");
+    (0..count)
+        .map(|_| {
+            let ep = usable[rng.below(usable.len())];
+            let start = if ep.len() <= 1 { 0 } else { rng.below(ep.len()) };
+            (ep, start)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::StateEncoder;
+    use crate::graph::{GraphBuilder, PadMode};
+
+    #[test]
+    fn compact_round_trip() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 3, 8, 8]);
+        let c = b.conv(x, 4, 3, 1, PadMode::Same).unwrap();
+        let _ = b.relu(c).unwrap();
+        let g = b.finish();
+        let enc = StateEncoder::new(320, 32);
+        let e = enc.encode(&g);
+        let compact = CompactState::from_encoded(&e);
+        assert_eq!(compact.n_live, 2);
+        assert_eq!(compact.edges, vec![(0, 1)]);
+
+        let mut feats = vec![0.0; 320 * 32];
+        let mut adj = vec![0.0; 320 * 320];
+        let mut mask = vec![0.0; 320];
+        compact.write_dense(320, 32, &mut feats, &mut adj, &mut mask);
+        assert_eq!(feats, e.feats);
+        assert_eq!(adj, e.adj);
+        assert_eq!(mask, e.mask);
+    }
+
+    #[test]
+    fn gae_terminal_cuts_bootstrap() {
+        // Single step, done: advantage = r - v0.
+        let (adv, ret) = gae(&[1.0], &[0.5, 9.0], &[1.0], 0.99, 0.95);
+        assert!((adv[0] - 0.5).abs() < 1e-6);
+        assert!((ret[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gae_propagates_back() {
+        let rewards = [0.0, 0.0, 1.0];
+        let values = [0.0, 0.0, 0.0, 0.0];
+        let dones = [0.0, 0.0, 1.0];
+        let (adv, _) = gae(&rewards, &values, &dones, 0.9, 1.0);
+        assert!(adv[0] > 0.0 && adv[0] < adv[1] && adv[1] < adv[2]);
+        assert!((adv[2] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn windows_sample_within_bounds() {
+        let mut ep = Episode::default();
+        for _ in 0..5 {
+            ep.actions.push((0, 0));
+            ep.rewards.push(0.0);
+            ep.dones.push(0.0);
+        }
+        let eps = vec![ep];
+        let mut rng = Rng::new(0);
+        for (e, start) in sample_windows(&eps, 20, &mut rng) {
+            assert!(start < e.len());
+        }
+    }
+}

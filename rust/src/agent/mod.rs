@@ -1,0 +1,12 @@
+//! Agents: rollout storage, the random data-collection agent, masked
+//! policy acting over the controller artifacts, and the PPO update driver.
+
+pub mod buffer;
+pub mod policy;
+pub mod ppo;
+pub mod random;
+
+pub use buffer::{gae, CompactState, Episode};
+pub use policy::{act_batch, masked_log_softmax, ActOut, PolicyDims};
+pub use ppo::{ppo_update, PpoBuffer, PpoCfg, PpoStats};
+pub use random::{collect_one, collect_random_episodes};

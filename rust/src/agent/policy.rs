@@ -1,0 +1,159 @@
+//! Controller acting: masked two-step (xfer, location) sampling on top of
+//! the `ctrl_policy_*` artifacts (§3.1.3: "using the same trunk network, we
+//! first predict the transformation, apply the location mask for the
+//! selected transformation, then predict the location").
+
+use xla::Literal;
+
+use crate::runtime::{lit_f32, to_vec_f32, Engine, ParamStore};
+use crate::util::Rng;
+
+/// Numerically stable masked log-softmax (masked entries -> -inf).
+pub fn masked_log_softmax(logits: &[f32], mask: &[bool]) -> Vec<f32> {
+    debug_assert_eq!(logits.len(), mask.len());
+    let mx = logits
+        .iter()
+        .zip(mask)
+        .filter(|(_, &m)| m)
+        .map(|(&l, _)| l)
+        .fold(f32::NEG_INFINITY, f32::max);
+    if !mx.is_finite() {
+        return vec![f32::NEG_INFINITY; logits.len()];
+    }
+    let lse = logits
+        .iter()
+        .zip(mask)
+        .filter(|(_, &m)| m)
+        .map(|(&l, _)| (l - mx).exp())
+        .sum::<f32>()
+        .ln()
+        + mx;
+    logits
+        .iter()
+        .zip(mask)
+        .map(|(&l, &m)| if m { l - lse } else { f32::NEG_INFINITY })
+        .collect()
+}
+
+fn argmax_masked(logits: &[f32], mask: &[bool]) -> usize {
+    let mut best = 0;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, (&l, &m)) in logits.iter().zip(mask).enumerate() {
+        if m && l > best_v {
+            best_v = l;
+            best = i;
+        }
+    }
+    best
+}
+
+#[derive(Debug, Clone)]
+pub struct ActOut {
+    pub action: (usize, usize),
+    pub logp: f32,
+    pub value: f32,
+}
+
+/// Dimension bundle read once from the manifest.
+#[derive(Debug, Clone, Copy)]
+pub struct PolicyDims {
+    pub zdim: usize,
+    pub rdim: usize,
+    pub x1: usize,
+    pub max_locs: usize,
+}
+
+impl PolicyDims {
+    pub fn from_manifest(m: &crate::runtime::Manifest) -> anyhow::Result<Self> {
+        Ok(Self {
+            zdim: m.hp_usize("LATENT")?,
+            rdim: m.hp_usize("RNN_HIDDEN")?,
+            x1: m.hp_usize("N_XFERS1")?,
+            max_locs: m.hp_usize("MAX_LOCS")?,
+        })
+    }
+
+    pub fn noop(&self) -> usize {
+        self.x1 - 1
+    }
+}
+
+/// Run the batched policy artifact and sample per-row actions.
+///
+/// `xmask`: `b * x1` validity (>=0.5 is valid). `loc_mask(row, xfer)` gives
+/// the location mask for that row's chosen xfer.
+#[allow(clippy::too_many_arguments)]
+pub fn act_batch(
+    engine: &Engine,
+    artifact: &str,
+    dims: &PolicyDims,
+    ctrl: &ParamStore,
+    z: &[f32],
+    h: &[f32],
+    xmask: &[f32],
+    loc_mask: impl Fn(usize, usize) -> Vec<bool>,
+    rng: &mut Rng,
+    greedy: bool,
+) -> anyhow::Result<Vec<ActOut>> {
+    let b = z.len() / dims.zdim;
+    anyhow::ensure!(h.len() == b * dims.rdim && xmask.len() == b * dims.x1, "act_batch: bad arg sizes");
+    let theta = engine.device_theta(ctrl)?;
+    let rest: Vec<Literal> = vec![
+        lit_f32(z, &[b, dims.zdim])?,
+        lit_f32(h, &[b, dims.rdim])?,
+    ];
+    let out = engine.exec_with_theta(artifact, &theta, &rest)?;
+    let xlogits = to_vec_f32(&out[0])?;
+    let llogits = to_vec_f32(&out[1])?;
+    let values = to_vec_f32(&out[2])?;
+
+    let mut results = Vec::with_capacity(b);
+    for row in 0..b {
+        let xl = &xlogits[row * dims.x1..(row + 1) * dims.x1];
+        let xm: Vec<bool> = xmask[row * dims.x1..(row + 1) * dims.x1]
+            .iter()
+            .map(|&m| m >= 0.5)
+            .collect();
+        let x_lsm = masked_log_softmax(xl, &xm);
+        let x = if greedy { argmax_masked(xl, &xm) } else { rng.sample_logits_masked(xl, &xm) };
+        let mut logp = x_lsm[x];
+
+        let action = if x == dims.noop() {
+            (x, 0)
+        } else {
+            let lm = loc_mask(row, x);
+            let base = (row * dims.x1 + x) * dims.max_locs;
+            let ll = &llogits[base..base + dims.max_locs];
+            let l_lsm = masked_log_softmax(ll, &lm);
+            let l = if greedy { argmax_masked(ll, &lm) } else { rng.sample_logits_masked(ll, &lm) };
+            logp += l_lsm[l];
+            (x, l)
+        };
+        results.push(ActOut { action, logp, value: values[row] });
+    }
+    Ok(results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masked_log_softmax_normalises() {
+        let lsm = masked_log_softmax(&[1.0, 2.0, 3.0], &[true, false, true]);
+        assert_eq!(lsm[1], f32::NEG_INFINITY);
+        let p: f32 = lsm.iter().filter(|v| v.is_finite()).map(|v| v.exp()).sum();
+        assert!((p - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn all_masked_is_neg_inf() {
+        let lsm = masked_log_softmax(&[1.0, 2.0], &[false, false]);
+        assert!(lsm.iter().all(|v| *v == f32::NEG_INFINITY));
+    }
+
+    #[test]
+    fn argmax_respects_mask() {
+        assert_eq!(argmax_masked(&[5.0, 9.0, 1.0], &[true, false, true]), 0);
+    }
+}

@@ -1,0 +1,212 @@
+//! PPO update driver: assembles fixed-size batches and runs the
+//! `ctrl_train` artifact (clipped surrogate, entropy bonus — the loss lives
+//! in L2, this module owns batching and statistics).
+
+use xla::Literal;
+
+use crate::runtime::{lit_f32, lit_i32, lit_scalar_f32, scalar_f32, Engine, ParamStore};
+use crate::util::Rng;
+
+use super::policy::PolicyDims;
+
+#[derive(Debug, Clone, Copy)]
+pub struct PpoCfg {
+    pub gamma: f32,
+    pub lam: f32,
+    pub clip: f32,
+    pub lr: f32,
+    pub ent_coef: f32,
+    /// Gradient steps per collected batch.
+    pub epochs: usize,
+}
+
+impl Default for PpoCfg {
+    fn default() -> Self {
+        Self { gamma: 0.99, lam: 0.95, clip: 0.2, lr: 3e-4, ent_coef: 0.01, epochs: 3 }
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PpoStats {
+    pub pi_loss: f32,
+    pub v_loss: f32,
+    pub entropy: f32,
+    pub approx_kl: f32,
+}
+
+/// Accumulates transitions; `build` resamples to the artifact's fixed B.
+#[derive(Debug, Default, Clone)]
+pub struct PpoBuffer {
+    pub z: Vec<Vec<f32>>,
+    pub h: Vec<Vec<f32>>,
+    pub act: Vec<(usize, usize)>,
+    pub logp: Vec<f32>,
+    pub adv: Vec<f32>,
+    pub ret: Vec<f32>,
+    pub xmask: Vec<Vec<f32>>,
+    pub lmask: Vec<Vec<f32>>,
+}
+
+impl PpoBuffer {
+    pub fn len(&self) -> usize {
+        self.act.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.act.is_empty()
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn push(
+        &mut self,
+        z: Vec<f32>,
+        h: Vec<f32>,
+        act: (usize, usize),
+        logp: f32,
+        adv: f32,
+        ret: f32,
+        xmask: Vec<f32>,
+        lmask: Vec<f32>,
+    ) {
+        self.z.push(z);
+        self.h.push(h);
+        self.act.push(act);
+        self.logp.push(logp);
+        self.adv.push(adv);
+        self.ret.push(ret);
+        self.xmask.push(xmask);
+        self.lmask.push(lmask);
+    }
+
+    pub fn clear(&mut self) {
+        *self = Self::default();
+    }
+
+    /// Materialise the fixed-size artifact batch (sampling with replacement
+    /// when fewer than `b_ppo` transitions are available).
+    pub fn build_args(
+        &self,
+        dims: &PolicyDims,
+        b_ppo: usize,
+        rng: &mut Rng,
+    ) -> anyhow::Result<Vec<Literal>> {
+        anyhow::ensure!(!self.is_empty(), "empty PPO buffer");
+        let idx: Vec<usize> = if self.len() >= b_ppo {
+            let mut all: Vec<usize> = (0..self.len()).collect();
+            rng.shuffle(&mut all);
+            all.truncate(b_ppo);
+            all
+        } else {
+            (0..b_ppo).map(|_| rng.below(self.len())).collect()
+        };
+        let mut z = Vec::with_capacity(b_ppo * dims.zdim);
+        let mut h = Vec::with_capacity(b_ppo * dims.rdim);
+        let mut act = Vec::with_capacity(b_ppo * 2);
+        let mut logp = Vec::with_capacity(b_ppo);
+        let mut adv = Vec::with_capacity(b_ppo);
+        let mut ret = Vec::with_capacity(b_ppo);
+        let mut xm = Vec::with_capacity(b_ppo * dims.x1);
+        let mut lm = Vec::with_capacity(b_ppo * dims.max_locs);
+        for &i in &idx {
+            z.extend_from_slice(&self.z[i]);
+            h.extend_from_slice(&self.h[i]);
+            act.push(self.act[i].0 as i32);
+            act.push(self.act[i].1 as i32);
+            logp.push(self.logp[i]);
+            adv.push(self.adv[i]);
+            ret.push(self.ret[i]);
+            xm.extend_from_slice(&self.xmask[i]);
+            lm.extend_from_slice(&self.lmask[i]);
+        }
+        Ok(vec![
+            lit_f32(&z, &[b_ppo, dims.zdim])?,
+            lit_f32(&h, &[b_ppo, dims.rdim])?,
+            lit_i32(&act, &[b_ppo, 2])?,
+            lit_f32(&logp, &[b_ppo])?,
+            lit_f32(&adv, &[b_ppo])?,
+            lit_f32(&ret, &[b_ppo])?,
+            lit_f32(&xm, &[b_ppo, dims.x1])?,
+            lit_f32(&lm, &[b_ppo, dims.max_locs])?,
+        ])
+    }
+}
+
+/// One PPO update: `cfg.epochs` gradient steps on resampled batches.
+pub fn ppo_update(
+    engine: &Engine,
+    ctrl: &mut ParamStore,
+    buffer: &PpoBuffer,
+    dims: &PolicyDims,
+    cfg: &PpoCfg,
+    rng: &mut Rng,
+) -> anyhow::Result<PpoStats> {
+    let b_ppo = engine.manifest.hp_usize("B_PPO")?;
+    let mut stats = PpoStats::default();
+    for _ in 0..cfg.epochs {
+        let mut args = ctrl.train_args()?;
+        args.extend(buffer.build_args(dims, b_ppo, rng)?);
+        args.push(lit_scalar_f32(cfg.lr));
+        args.push(lit_scalar_f32(cfg.clip));
+        args.push(lit_scalar_f32(cfg.ent_coef));
+        let out = engine.exec("ctrl_train", &args)?;
+        ctrl.absorb(&out)?;
+        stats = PpoStats {
+            pi_loss: scalar_f32(&out[4])?,
+            v_loss: scalar_f32(&out[5])?,
+            entropy: scalar_f32(&out[6])?,
+            approx_kl: scalar_f32(&out[7])?,
+        };
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> PolicyDims {
+        PolicyDims { zdim: 4, rdim: 8, x1: 5, max_locs: 10 }
+    }
+
+    fn push_n(buf: &mut PpoBuffer, n: usize) {
+        for i in 0..n {
+            buf.push(
+                vec![i as f32; 4],
+                vec![0.0; 8],
+                (i % 5, i % 10),
+                -1.0,
+                0.5,
+                1.0,
+                vec![1.0; 5],
+                vec![1.0; 10],
+            );
+        }
+    }
+
+    #[test]
+    fn build_args_pads_small_buffers() {
+        let mut buf = PpoBuffer::default();
+        push_n(&mut buf, 3);
+        let mut rng = Rng::new(0);
+        let args = buf.build_args(&dims(), 16, &mut rng).unwrap();
+        assert_eq!(args.len(), 8);
+        assert_eq!(args[0].element_count(), 16 * 4);
+        assert_eq!(args[2].element_count(), 16 * 2);
+    }
+
+    #[test]
+    fn build_args_subsamples_large_buffers() {
+        let mut buf = PpoBuffer::default();
+        push_n(&mut buf, 100);
+        let mut rng = Rng::new(1);
+        let args = buf.build_args(&dims(), 16, &mut rng).unwrap();
+        assert_eq!(args[4].element_count(), 16);
+    }
+
+    #[test]
+    fn empty_buffer_errors() {
+        let buf = PpoBuffer::default();
+        let mut rng = Rng::new(2);
+        assert!(buf.build_args(&dims(), 16, &mut rng).is_err());
+    }
+}

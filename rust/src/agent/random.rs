@@ -1,0 +1,119 @@
+//! Random agent (§3.3.2): uniform over valid actions, used to collect the
+//! world model's training distribution. Paper: "To train the world model,
+//! we use a random agent. The probability of the agent choosing any action
+//! from the set of valid actions is equal."
+
+use crate::agent::buffer::{CompactState, Episode};
+use crate::env::{Env, StateEncoder};
+use crate::util::Rng;
+
+/// Collect `n_episodes` random-policy episodes from `env`.
+///
+/// `noop_prob` injects occasional early termination so the world model sees
+/// `done` transitions at varied depths (without it, every episode runs to
+/// the step cap and the done head never trains).
+/// `n_slots`: the artifact action-space width (N_XFERS + 1). Stored masks
+/// and actions live in *slot space* (NO-OP = last slot) so they feed the
+/// world-model embeddings directly.
+pub fn collect_random_episodes(
+    env: &mut Env,
+    encoder: &StateEncoder,
+    n_slots: usize,
+    n_episodes: usize,
+    noop_prob: f32,
+    rng: &mut Rng,
+) -> Vec<Episode> {
+    (0..n_episodes)
+        .map(|_| collect_one(env, encoder, n_slots, noop_prob, rng))
+        .collect()
+}
+
+pub fn collect_one(
+    env: &mut Env,
+    encoder: &StateEncoder,
+    n_slots: usize,
+    noop_prob: f32,
+    rng: &mut Rng,
+) -> Episode {
+    assert!(n_slots > env.rules.len(), "slot space smaller than rule set");
+    env.reset();
+    let mut ep = Episode::default();
+    loop {
+        let obs = env.observe();
+        ep.states
+            .push(CompactState::from_encoded(&encoder.encode(&env.graph)));
+        ep.xmasks.push(env.padded_xfer_mask(n_slots));
+
+        let valid: Vec<usize> = (0..env.rules.len())
+            .filter(|&i| obs.xfer_mask[i])
+            .collect();
+        let (env_action, slot_action) = if valid.is_empty() || rng.f32() < noop_prob {
+            ((env.noop_action(), 0), (n_slots - 1, 0))
+        } else {
+            let x = valid[rng.below(valid.len())];
+            let l = rng.below(obs.location_counts[x].max(1));
+            ((x, l), (x, l))
+        };
+        let res = env.step(env_action);
+        ep.actions.push((slot_action.0 as u16, slot_action.1 as u16));
+        ep.rewards.push(res.reward);
+        ep.dones.push(if res.done { 1.0 } else { 0.0 });
+        if res.done {
+            // Final state snapshot (z_next target for the last step).
+            ep.states
+                .push(CompactState::from_encoded(&encoder.encode(&env.graph)));
+            ep.xmasks.push(env.padded_xfer_mask(n_slots));
+            return ep;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::{CostModel, DeviceProfile};
+    use crate::env::EnvConfig;
+    use crate::graph::{GraphBuilder, PadMode};
+    use crate::xfer::library::standard_library;
+
+    #[test]
+    fn episodes_have_consistent_lengths() {
+        let rules = standard_library();
+        let cost = CostModel::new(DeviceProfile::rtx2070());
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 3, 8, 8]);
+        let c = b.conv_bn_relu(x, 4, 3, 1, PadMode::Same).unwrap();
+        let _ = b.maxpool(c, 2, 2).unwrap();
+        let mut env = Env::new(
+            b.finish(),
+            &rules,
+            &cost,
+            EnvConfig { max_steps: 6, ..Default::default() },
+        );
+        let encoder = StateEncoder::new(320, 32);
+        let mut rng = Rng::new(3);
+        let eps = collect_random_episodes(&mut env, &encoder, 49, 4, 0.1, &mut rng);
+        assert_eq!(eps.len(), 4);
+        for ep in &eps {
+            assert!(!ep.is_empty());
+            assert_eq!(ep.states.len(), ep.len() + 1);
+            assert_eq!(ep.xmasks.len(), ep.len() + 1);
+            assert_eq!(*ep.dones.last().unwrap(), 1.0);
+            assert!(ep.len() <= 6);
+        }
+    }
+
+    #[test]
+    fn noop_prob_one_terminates_immediately() {
+        let rules = standard_library();
+        let cost = CostModel::new(DeviceProfile::rtx2070());
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 3, 8, 8]);
+        let _ = b.conv(x, 4, 3, 1, PadMode::Same).unwrap();
+        let mut env = Env::new(b.finish(), &rules, &cost, EnvConfig::default());
+        let encoder = StateEncoder::new(320, 32);
+        let mut rng = Rng::new(4);
+        let ep = collect_one(&mut env, &encoder, 49, 1.0, &mut rng);
+        assert_eq!(ep.len(), 1);
+    }
+}

@@ -1,0 +1,192 @@
+//! Layered run configuration: defaults -> optional JSON file -> CLI
+//! overrides. Every hyperparameter an experiment touches lives here so
+//! EXPERIMENTS.md can reference a single config per result.
+
+use std::path::Path;
+
+use crate::agent::PpoCfg;
+use crate::cost::DeviceProfile;
+use crate::env::{EnvConfig, RewardKind};
+use crate::util::json::{parse, Json};
+use crate::wm::WmTrainCfg;
+
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub seed: u64,
+    pub graph: String,
+    pub device: DeviceProfile,
+    /// Multiplicative measurement-noise std (0 disables).
+    pub cost_noise: f64,
+    pub env: EnvConfig,
+    /// Random-rollout collection.
+    pub collect_episodes: usize,
+    pub collect_noop_prob: f32,
+    pub collect_workers: usize,
+    /// GNN auto-encoder.
+    pub ae_steps: usize,
+    pub ae_lr: f32,
+    /// World model.
+    pub wm: WmTrainCfg,
+    /// Dream controller training.
+    pub dream_epochs: usize,
+    pub dream_horizon: usize,
+    pub temperature: f32,
+    pub ppo: PpoCfg,
+    /// Model-free baseline.
+    pub free_iterations: usize,
+    pub free_episodes_per_iter: usize,
+    /// Evaluation.
+    pub eval_episodes: usize,
+    pub eval_greedy: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            seed: 42,
+            graph: "bert".into(),
+            device: DeviceProfile::rtx2070(),
+            cost_noise: 0.0,
+            env: EnvConfig::default(),
+            collect_episodes: 48,
+            collect_noop_prob: 0.05,
+            collect_workers: 4,
+            ae_steps: 120,
+            ae_lr: 1e-3,
+            wm: WmTrainCfg::default(),
+            dream_epochs: 60,
+            dream_horizon: 24,
+            temperature: 1.0,
+            ppo: PpoCfg::default(),
+            free_iterations: 40,
+            free_episodes_per_iter: 4,
+            eval_episodes: 5,
+            eval_greedy: false,
+        }
+    }
+}
+
+impl RunConfig {
+    /// A drastically reduced profile for smoke tests and CI.
+    pub fn smoke() -> Self {
+        Self {
+            collect_episodes: 6,
+            collect_workers: 2,
+            ae_steps: 4,
+            wm: WmTrainCfg { total_steps: 4, ..Default::default() },
+            dream_epochs: 2,
+            dream_horizon: 6,
+            free_iterations: 2,
+            free_episodes_per_iter: 1,
+            eval_episodes: 1,
+            env: EnvConfig { max_steps: 8, ..Default::default() },
+            ..Default::default()
+        }
+    }
+
+    pub fn load_json<P: AsRef<Path>>(path: P) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let j = parse(&text)?;
+        let mut cfg = Self::default();
+        cfg.apply_json(&j)?;
+        Ok(cfg)
+    }
+
+    /// Apply JSON overrides onto the current config (unknown keys error —
+    /// silent typos in experiment configs are worse than failures).
+    pub fn apply_json(&mut self, j: &Json) -> anyhow::Result<()> {
+        for (key, value) in j.as_obj()? {
+            match key.as_str() {
+                "seed" => self.seed = value.as_usize()? as u64,
+                "graph" => self.graph = value.as_str()?.to_string(),
+                "device" => {
+                    self.device = match value.as_str()? {
+                        "rtx2070" => DeviceProfile::rtx2070(),
+                        "cpu_xeon" => DeviceProfile::cpu_xeon(),
+                        "tpu_v4ish" => DeviceProfile::tpu_v4ish(),
+                        d => anyhow::bail!("unknown device '{}'", d),
+                    }
+                }
+                "cost_noise" => self.cost_noise = value.as_f64()?,
+                "max_steps" => self.env.max_steps = value.as_usize()?,
+                "reward" => self.env.reward = RewardKind::preset(value.as_str()?)?,
+                "invalid_penalty" => self.env.invalid_penalty = value.as_f64()? as f32,
+                "collect_episodes" => self.collect_episodes = value.as_usize()?,
+                "collect_noop_prob" => self.collect_noop_prob = value.as_f64()? as f32,
+                "collect_workers" => self.collect_workers = value.as_usize()?,
+                "ae_steps" => self.ae_steps = value.as_usize()?,
+                "ae_lr" => self.ae_lr = value.as_f64()? as f32,
+                "wm_steps" => self.wm.total_steps = value.as_usize()?,
+                "wm_lr" => self.wm.lr_start = value.as_f64()? as f32,
+                "wm_reward_scale" => self.wm.reward_scale = value.as_f64()? as f32,
+                "dream_epochs" => self.dream_epochs = value.as_usize()?,
+                "dream_horizon" => self.dream_horizon = value.as_usize()?,
+                "temperature" => self.temperature = value.as_f64()? as f32,
+                "ppo_lr" => self.ppo.lr = value.as_f64()? as f32,
+                "ppo_clip" => self.ppo.clip = value.as_f64()? as f32,
+                "ppo_epochs" => self.ppo.epochs = value.as_usize()?,
+                "ppo_ent_coef" => self.ppo.ent_coef = value.as_f64()? as f32,
+                "ppo_gamma" => self.ppo.gamma = value.as_f64()? as f32,
+                "free_iterations" => self.free_iterations = value.as_usize()?,
+                "free_episodes_per_iter" => self.free_episodes_per_iter = value.as_usize()?,
+                "eval_episodes" => self.eval_episodes = value.as_usize()?,
+                "eval_greedy" => self.eval_greedy = value.as_bool()?,
+                other => anyhow::bail!("unknown config key '{}'", other),
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse a `key=value` CLI override.
+    pub fn apply_override(&mut self, kv: &str) -> anyhow::Result<()> {
+        let (k, v) = kv
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("override must be key=value, got '{}'", kv))?;
+        // Route through the JSON path for a single source of truth.
+        let jv = if let Ok(n) = v.parse::<f64>() {
+            Json::Num(n)
+        } else if v == "true" || v == "false" {
+            Json::Bool(v == "true")
+        } else {
+            Json::Str(v.to_string())
+        };
+        let mut obj = Json::obj();
+        obj.set(k, jv);
+        self.apply_json(&obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_overrides_apply() {
+        let mut cfg = RunConfig::default();
+        let j = parse(r#"{"graph": "vit", "temperature": 1.5, "wm_steps": 77, "reward": "r5"}"#).unwrap();
+        cfg.apply_json(&j).unwrap();
+        assert_eq!(cfg.graph, "vit");
+        assert_eq!(cfg.temperature, 1.5);
+        assert_eq!(cfg.wm.total_steps, 77);
+        assert_eq!(cfg.env.reward, RewardKind::Incremental);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut cfg = RunConfig::default();
+        let j = parse(r#"{"grpah": "vit"}"#).unwrap();
+        assert!(cfg.apply_json(&j).is_err());
+    }
+
+    #[test]
+    fn cli_override_round_trip() {
+        let mut cfg = RunConfig::default();
+        cfg.apply_override("dream_epochs=99").unwrap();
+        assert_eq!(cfg.dream_epochs, 99);
+        cfg.apply_override("graph=resnet18").unwrap();
+        assert_eq!(cfg.graph, "resnet18");
+        cfg.apply_override("eval_greedy=true").unwrap();
+        assert!(cfg.eval_greedy);
+        assert!(cfg.apply_override("nonsense").is_err());
+    }
+}

@@ -1,0 +1,113 @@
+//! The coordinator: end-to-end training/evaluation pipelines (Fig. 2's
+//! data flow) built on the runtime engine and the environment.
+//!
+//! Model-based pipeline (the paper's RLFlow agent):
+//!   1. random rollouts in the real env          -> `collect`
+//!   2. GNN auto-encoder training                -> `train_gnn_ae`
+//!   3. encode all states to latents             -> `encode_episodes`
+//!   4. MDN-RNN world-model training (Fig. 8)    -> `train_wm`
+//!   5. controller PPO *inside the dream* (Fig 9)-> `train_controller_dream`
+//!   6. evaluation in the real env               -> `eval_real`
+//!
+//! Model-free baseline (§4.4): PPO directly in the real environment via
+//! `train_model_free` — same controller artifacts, h ≡ 0.
+
+pub mod pipeline;
+
+pub use pipeline::{EvalResult, Pipeline};
+
+use crate::util::Rng;
+
+/// Deterministic fan-out of worker seeds from a root seed.
+pub fn worker_seeds(root: u64, n: usize) -> Vec<u64> {
+    let mut rng = Rng::new(root);
+    (0..n).map(|i| rng.fork(i as u64).next_u64()).collect()
+}
+
+/// Collect random episodes from several identical environments in
+/// parallel (std::thread; each worker owns its own rule set + cost model —
+/// the PJRT engine is never touched here, so collection scales across
+/// cores while encoding stays on the engine thread).
+pub fn collect_random_parallel(
+    graph: &crate::graph::Graph,
+    env_cfg: &crate::env::EnvConfig,
+    device: crate::cost::DeviceProfile,
+    encoder_dims: (usize, usize),
+    n_slots: usize,
+    n_episodes: usize,
+    noop_prob: f32,
+    n_workers: usize,
+    seed: u64,
+) -> Vec<crate::agent::Episode> {
+    let n_workers = n_workers.max(1);
+    let seeds = worker_seeds(seed, n_workers);
+    let per_worker = n_episodes.div_ceil(n_workers);
+    let mut all = Vec::with_capacity(n_episodes);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for w in 0..n_workers {
+            let g = graph.clone();
+            let cfg = env_cfg.clone();
+            let wseed = seeds[w];
+            handles.push(scope.spawn(move || {
+                let rules = crate::xfer::library::standard_library();
+                let cost = crate::cost::CostModel::new(device);
+                let mut env = crate::env::Env::new(g, &rules, &cost, cfg);
+                let encoder = crate::env::StateEncoder::new(encoder_dims.0, encoder_dims.1);
+                let mut rng = Rng::new(wseed);
+                crate::agent::collect_random_episodes(
+                    &mut env,
+                    &encoder,
+                    n_slots,
+                    per_worker,
+                    noop_prob,
+                    &mut rng,
+                )
+            }));
+        }
+        for h in handles {
+            all.extend(h.join().expect("collection worker panicked"));
+        }
+    });
+    all.truncate(n_episodes);
+    all
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::DeviceProfile;
+    use crate::env::EnvConfig;
+    use crate::graph::{GraphBuilder, PadMode};
+
+    #[test]
+    fn parallel_collection_yields_requested_count() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 3, 8, 8]);
+        let c = b.conv_bn_relu(x, 4, 3, 1, PadMode::Same).unwrap();
+        let _ = b.maxpool(c, 2, 2).unwrap();
+        let g = b.finish();
+        let eps = collect_random_parallel(
+            &g,
+            &EnvConfig { max_steps: 4, ..Default::default() },
+            DeviceProfile::rtx2070(),
+            (320, 32),
+            49,
+            6,
+            0.1,
+            3,
+            42,
+        );
+        assert_eq!(eps.len(), 6);
+        assert!(eps.iter().all(|e| !e.is_empty()));
+    }
+
+    #[test]
+    fn worker_seeds_distinct() {
+        let seeds = worker_seeds(7, 8);
+        let mut s = seeds.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), seeds.len());
+    }
+}

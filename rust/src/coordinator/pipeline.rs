@@ -1,0 +1,493 @@
+//! Pipeline stages. One `Pipeline` owns the engine handle and the state
+//! encoder; every stage is a pure function over parameter stores +
+//! episodes, so the CLI, the examples and the experiment drivers compose
+//! them freely.
+
+use std::time::Instant;
+
+use xla::Literal;
+
+use crate::agent::{
+    act_batch, gae, Episode, PolicyDims, PpoBuffer, PpoCfg, PpoStats,
+};
+use crate::env::{Env, StateEncoder};
+use crate::graph::Graph;
+use crate::runtime::{lit_f32, lit_scalar_f32, scalar_f32, to_vec_f32, Engine, ParamStore};
+use crate::util::Rng;
+use crate::wm::{DreamEnv, WmLosses, WmTrainCfg, WmTrainer};
+
+pub struct Pipeline<'e> {
+    pub engine: &'e Engine,
+    pub dims: PolicyDims,
+    pub encoder: StateEncoder,
+    n: usize,
+    f: usize,
+    b_enc: usize,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct EvalResult {
+    /// Best runtime improvement over the episode, percent (Fig. 6's metric).
+    pub best_improvement_pct: f64,
+    pub final_improvement_pct: f64,
+    pub steps: usize,
+    /// (xfer slot, location) actions taken — Fig. 10's heatmap data.
+    pub history: Vec<(usize, usize)>,
+    /// Mean wall-clock seconds per environment step (Fig. 7 numerator).
+    pub mean_step_s: f64,
+    pub best_graph: Option<Graph>,
+}
+
+impl<'e> Pipeline<'e> {
+    pub fn new(engine: &'e Engine) -> anyhow::Result<Self> {
+        let n = engine.manifest.hp_usize("MAX_NODES")?;
+        let f = engine.manifest.hp_usize("NODE_FEATS")?;
+        Ok(Self {
+            engine,
+            dims: PolicyDims::from_manifest(&engine.manifest)?,
+            encoder: StateEncoder::new(n, f),
+            n,
+            f,
+            b_enc: engine.manifest.hp_usize("B_ENC")?,
+        })
+    }
+
+    /// Map an artifact-slot action to the environment action space
+    /// (NO-OP: last slot -> env.noop_action()).
+    pub fn to_env_action(&self, a: (usize, usize), env: &Env) -> (usize, usize) {
+        if a.0 == self.dims.noop() {
+            (env.noop_action(), 0)
+        } else {
+            a
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Stage 2: GNN auto-encoder
+    // ------------------------------------------------------------------
+
+    fn batch_states(&self, states: &[&crate::agent::CompactState]) -> anyhow::Result<[Literal; 3]> {
+        let b = states.len();
+        let (n, f) = (self.n, self.f);
+        let mut feats = vec![0.0f32; b * n * f];
+        let mut adj = vec![0.0f32; b * n * n];
+        let mut mask = vec![0.0f32; b * n];
+        for (i, s) in states.iter().enumerate() {
+            s.write_dense(
+                n,
+                f,
+                &mut feats[i * n * f..(i + 1) * n * f],
+                &mut adj[i * n * n..(i + 1) * n * n],
+                &mut mask[i * n..(i + 1) * n],
+            );
+        }
+        Ok([
+            lit_f32(&feats, &[b, n, f])?,
+            lit_f32(&adj, &[b, n, n])?,
+            lit_f32(&mask, &[b, n])?,
+        ])
+    }
+
+    /// Train the graph auto-encoder on random state minibatches.
+    pub fn train_gnn_ae(
+        &self,
+        gnn: &mut ParamStore,
+        episodes: &[Episode],
+        steps: usize,
+        lr: f32,
+        rng: &mut Rng,
+    ) -> anyhow::Result<Vec<f32>> {
+        let pool: Vec<&crate::agent::CompactState> =
+            episodes.iter().flat_map(|e| e.states.iter()).collect();
+        anyhow::ensure!(!pool.is_empty(), "no states to train on");
+        let mut losses = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            let batch: Vec<&crate::agent::CompactState> =
+                (0..self.b_enc).map(|_| pool[rng.below(pool.len())]).collect();
+            let [feats, adj, mask] = self.batch_states(&batch)?;
+            let mut args = gnn.train_args()?;
+            args.extend([feats, adj, mask, lit_scalar_f32(lr)]);
+            let out = self.engine.exec("gnn_ae_train", &args)?;
+            gnn.absorb(&out)?;
+            losses.push(scalar_f32(&out[4])?);
+        }
+        Ok(losses)
+    }
+
+    // ------------------------------------------------------------------
+    // Stage 3: latent encoding
+    // ------------------------------------------------------------------
+
+    /// Fill `ep.z` for every state of every episode (batched).
+    pub fn encode_episodes(
+        &self,
+        gnn: &ParamStore,
+        episodes: &mut [Episode],
+    ) -> anyhow::Result<()> {
+        // Flatten (episode, state) indices.
+        let mut slots: Vec<(usize, usize)> = Vec::new();
+        for (ei, ep) in episodes.iter().enumerate() {
+            for si in 0..ep.states.len() {
+                slots.push((ei, si));
+            }
+        }
+        for ep in episodes.iter_mut() {
+            ep.z = vec![Vec::new(); ep.states.len()];
+        }
+        for chunk in slots.chunks(self.b_enc) {
+            let mut states: Vec<&crate::agent::CompactState> = chunk
+                .iter()
+                .map(|&(ei, si)| &episodes[ei].states[si])
+                .collect();
+            // Pad the final partial batch by repeating the first state.
+            while states.len() < self.b_enc {
+                states.push(states[0]);
+            }
+            let [feats, adj, mask] = self.batch_states(&states)?;
+            let theta = self.engine.device_theta(gnn)?;
+            let out = self
+                .engine
+                .exec_with_theta("gnn_encode_b", &theta, &[feats, adj, mask])?;
+            let zs = to_vec_f32(&out[0])?;
+            let zd = self.dims.zdim;
+            for (i, &(ei, si)) in chunk.iter().enumerate() {
+                episodes[ei].z[si] = zs[i * zd..(i + 1) * zd].to_vec();
+            }
+        }
+        Ok(())
+    }
+
+    /// Encode one live environment state (the acting path).
+    pub fn encode_state(&self, gnn: &ParamStore, g: &Graph) -> anyhow::Result<Vec<f32>> {
+        let e = self.encoder.encode(g);
+        let theta = self.engine.device_theta(gnn)?;
+        let out = self.engine.exec_with_theta(
+            "gnn_encode_1",
+            &theta,
+            &[
+                lit_f32(&e.feats, &[1, self.n, self.f])?,
+                lit_f32(&e.adj, &[1, self.n, self.n])?,
+                lit_f32(&e.mask, &[1, self.n])?,
+            ],
+        )?;
+        to_vec_f32(&out[0])
+    }
+
+    // ------------------------------------------------------------------
+    // Stage 4: world-model training
+    // ------------------------------------------------------------------
+
+    pub fn train_wm(
+        &self,
+        wm: &mut ParamStore,
+        episodes: &[Episode],
+        cfg: &WmTrainCfg,
+        rng: &mut Rng,
+    ) -> anyhow::Result<Vec<WmLosses>> {
+        let trainer = WmTrainer::new(self.engine)?;
+        let mut curve = Vec::with_capacity(cfg.total_steps);
+        for step in 0..cfg.total_steps {
+            let lr = cfg.lr_at(step);
+            curve.push(trainer.train_step(wm, episodes, lr, cfg.reward_scale, rng)?);
+        }
+        Ok(curve)
+    }
+
+    // ------------------------------------------------------------------
+    // Stage 5: controller training inside the dream
+    // ------------------------------------------------------------------
+
+    /// PPO entirely inside the imagined environment. Returns the mean
+    /// *predicted* episode reward per epoch (Fig. 9's curve).
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_controller_dream(
+        &self,
+        ctrl: &mut ParamStore,
+        wm: &ParamStore,
+        episodes: &[Episode],
+        epochs: usize,
+        horizon: usize,
+        temperature: f32,
+        reward_scale: f32,
+        ppo: &PpoCfg,
+        rng: &mut Rng,
+    ) -> anyhow::Result<Vec<f32>> {
+        // Seed pool: initial latents + masks of real episodes.
+        let z0: Vec<Vec<f32>> = episodes
+            .iter()
+            .filter(|e| !e.z.is_empty())
+            .map(|e| e.z[0].clone())
+            .collect();
+        let xm0: Vec<Vec<f32>> = episodes
+            .iter()
+            .filter(|e| !e.z.is_empty())
+            .map(|e| e.xmasks[0].clone())
+            .collect();
+        anyhow::ensure!(!z0.is_empty(), "no encoded episodes to seed the dream");
+
+        let mut dream = DreamEnv::new(self.engine, temperature, reward_scale)?;
+        let all_locs = vec![1.0f32; self.dims.max_locs];
+        let mut curve = Vec::with_capacity(epochs);
+
+        for _ in 0..epochs {
+            dream.reset(&z0, &xm0)?;
+            let b = dream.b;
+            // Per-row trajectories.
+            let mut traj: Vec<PpoRowTraj> = (0..b).map(|_| PpoRowTraj::default()).collect();
+            for _ in 0..horizon {
+                if dream.all_done() {
+                    break;
+                }
+                let alive: Vec<usize> = (0..b).filter(|&r| !dream.done[r]).collect();
+                let acts = act_batch(
+                    self.engine,
+                    "ctrl_policy_b",
+                    &self.dims,
+                    ctrl,
+                    &dream.z,
+                    &dream.h,
+                    &dream.xmask,
+                    |_, _| all_locs.iter().map(|&v| v >= 0.5).collect(),
+                    rng,
+                    false,
+                )?;
+                let pre_z: Vec<Vec<f32>> = (0..b).map(|r| dream.row_z(r)).collect();
+                let pre_h: Vec<Vec<f32>> = (0..b).map(|r| dream.row_h(r)).collect();
+                let pre_xm: Vec<Vec<f32>> = (0..b).map(|r| dream.row_xmask(r)).collect();
+                let actions: Vec<(usize, usize)> = acts.iter().map(|a| a.action).collect();
+                let (rewards, dones) = dream.step(wm, &actions, rng)?;
+                for &r in &alive {
+                    traj[r].push(
+                        pre_z[r].clone(),
+                        pre_h[r].clone(),
+                        pre_xm[r].clone(),
+                        acts[r].action,
+                        acts[r].logp,
+                        acts[r].value,
+                        rewards[r],
+                        dones[r],
+                    );
+                }
+            }
+            // Assemble PPO buffer with per-row GAE.
+            let mut buffer = PpoBuffer::default();
+            let mut epoch_reward = 0.0f32;
+            let mut rows = 0;
+            for t in traj.into_iter().filter(|t| !t.rewards.is_empty()) {
+                epoch_reward += t.rewards.iter().sum::<f32>();
+                rows += 1;
+                let mut values = t.values.clone();
+                values.push(0.0); // bootstrap: terminal or horizon-capped
+                let mut dones = t.dones.clone();
+                *dones.last_mut().unwrap() = 1.0;
+                let (adv, ret) = gae(&t.rewards, &values, &dones, ppo.gamma, ppo.lam);
+                for i in 0..t.rewards.len() {
+                    buffer.push(
+                        t.z[i].clone(),
+                        t.h[i].clone(),
+                        t.actions[i],
+                        t.logps[i],
+                        adv[i],
+                        ret[i],
+                        t.xmasks[i].clone(),
+                        all_locs.clone(),
+                    );
+                }
+            }
+            if !buffer.is_empty() {
+                let _ = crate::agent::ppo_update(self.engine, ctrl, &buffer, &self.dims, ppo, rng)?;
+            }
+            curve.push(if rows > 0 { epoch_reward / rows as f32 } else { 0.0 });
+        }
+        Ok(curve)
+    }
+
+    // ------------------------------------------------------------------
+    // Stage 6: evaluation in the real environment
+    // ------------------------------------------------------------------
+
+    /// Run the trained controller against the real environment. When `wm`
+    /// is provided the recurrent context h advances through `wm_step_1`
+    /// (the paper's a_t = pi([z_t, h_t]) controller); with `None` the
+    /// model-free configuration (h = 0) is used.
+    #[allow(clippy::too_many_arguments)]
+    pub fn eval_real(
+        &self,
+        gnn: &ParamStore,
+        ctrl: &ParamStore,
+        wm: Option<&ParamStore>,
+        env: &mut Env,
+        greedy: bool,
+        rng: &mut Rng,
+    ) -> anyhow::Result<EvalResult> {
+        env.reset();
+        let mut h = vec![0.0f32; self.dims.rdim];
+        let mut c = vec![0.0f32; self.dims.rdim];
+        let mut best = env.improvement_pct();
+        let mut best_graph = env.graph.clone();
+        let mut step_times = Vec::new();
+        loop {
+            let t0 = Instant::now();
+            let z = self.encode_state(gnn, &env.graph)?;
+            let xmask = env.padded_xfer_mask(self.dims.x1);
+            let acts = act_batch(
+                self.engine,
+                "ctrl_policy_1",
+                &self.dims,
+                ctrl,
+                &z,
+                &h,
+                &xmask,
+                |_, x| env.location_mask(x),
+                rng,
+                greedy,
+            )?;
+            let action = acts[0].action;
+            let res = env.step(self.to_env_action(action, env));
+            if let Some(wm_store) = wm {
+                let theta = self.engine.device_theta(wm_store)?;
+                let out = self.engine.exec_with_theta(
+                    "wm_step_1",
+                    &theta,
+                    &[
+                        lit_f32(&z, &[1, self.dims.zdim])?,
+                        crate::runtime::lit_i32(&[action.0 as i32, action.1 as i32], &[1, 2])?,
+                        lit_f32(&h, &[1, self.dims.rdim])?,
+                        lit_f32(&c, &[1, self.dims.rdim])?,
+                    ],
+                )?;
+                h = to_vec_f32(&out[6])?;
+                c = to_vec_f32(&out[7])?;
+            }
+            step_times.push(t0.elapsed().as_secs_f64());
+            if env.improvement_pct() > best {
+                best = env.improvement_pct();
+                best_graph = env.graph.clone();
+            }
+            if res.done {
+                break;
+            }
+        }
+        Ok(EvalResult {
+            best_improvement_pct: best,
+            final_improvement_pct: env.improvement_pct(),
+            steps: env.steps_taken(),
+            history: env.history.clone(),
+            mean_step_s: step_times.iter().sum::<f64>() / step_times.len().max(1) as f64,
+            best_graph: Some(best_graph),
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // Model-free baseline: PPO directly in the real environment
+    // ------------------------------------------------------------------
+
+    /// One model-free PPO iteration: collect `n_episodes` on-policy
+    /// episodes (h = 0) and update. Returns (mean episode reward, stats).
+    pub fn model_free_iteration(
+        &self,
+        gnn: &ParamStore,
+        ctrl: &mut ParamStore,
+        env: &mut Env,
+        n_episodes: usize,
+        ppo: &PpoCfg,
+        rng: &mut Rng,
+    ) -> anyhow::Result<(f32, PpoStats)> {
+        let h0 = vec![0.0f32; self.dims.rdim];
+        let mut buffer = PpoBuffer::default();
+        let mut total_reward = 0.0f32;
+        for _ in 0..n_episodes {
+            env.reset();
+            let mut traj = PpoRowTraj::default();
+            loop {
+                let z = self.encode_state(gnn, &env.graph)?;
+                let xmask = env.padded_xfer_mask(self.dims.x1);
+                let acts = act_batch(
+                    self.engine,
+                    "ctrl_policy_1",
+                    &self.dims,
+                    ctrl,
+                    &z,
+                    &h0,
+                    &xmask,
+                    |_, x| env.location_mask(x),
+                    rng,
+                    false,
+                )?;
+                let a = &acts[0];
+                let lmask: Vec<f32> = if a.action.0 == self.dims.noop() {
+                    vec![1.0; self.dims.max_locs]
+                } else {
+                    env.location_mask(a.action.0)
+                        .iter()
+                        .map(|&m| if m { 1.0 } else { 0.0 })
+                        .collect()
+                };
+                let res = env.step(self.to_env_action(a.action, env));
+                traj.push(z, h0.clone(), xmask, a.action, a.logp, a.value, res.reward, res.done);
+                traj.lmasks.push(lmask);
+                if res.done {
+                    break;
+                }
+            }
+            total_reward += traj.rewards.iter().sum::<f32>();
+            let mut values = traj.values.clone();
+            values.push(0.0);
+            let mut dones = traj.dones.clone();
+            *dones.last_mut().unwrap() = 1.0;
+            let (adv, ret) = gae(&traj.rewards, &values, &dones, ppo.gamma, ppo.lam);
+            for i in 0..traj.rewards.len() {
+                buffer.push(
+                    traj.z[i].clone(),
+                    traj.h[i].clone(),
+                    traj.actions[i],
+                    traj.logps[i],
+                    adv[i],
+                    ret[i],
+                    traj.xmasks[i].clone(),
+                    traj.lmasks[i].clone(),
+                );
+            }
+        }
+        let stats = crate::agent::ppo_update(self.engine, ctrl, &buffer, &self.dims, ppo, rng)?;
+        Ok((total_reward / n_episodes.max(1) as f32, stats))
+    }
+}
+
+/// Scratch per-trajectory storage for PPO collection.
+#[derive(Debug, Default, Clone)]
+struct PpoRowTraj {
+    z: Vec<Vec<f32>>,
+    h: Vec<Vec<f32>>,
+    xmasks: Vec<Vec<f32>>,
+    lmasks: Vec<Vec<f32>>,
+    actions: Vec<(usize, usize)>,
+    logps: Vec<f32>,
+    values: Vec<f32>,
+    rewards: Vec<f32>,
+    dones: Vec<f32>,
+}
+
+impl PpoRowTraj {
+    #[allow(clippy::too_many_arguments)]
+    fn push(
+        &mut self,
+        z: Vec<f32>,
+        h: Vec<f32>,
+        xmask: Vec<f32>,
+        action: (usize, usize),
+        logp: f32,
+        value: f32,
+        reward: f32,
+        done: bool,
+    ) {
+        self.z.push(z);
+        self.h.push(h);
+        self.xmasks.push(xmask);
+        self.actions.push(action);
+        self.logps.push(logp);
+        self.values.push(value);
+        self.rewards.push(reward);
+        self.dones.push(if done { 1.0 } else { 0.0 });
+    }
+}

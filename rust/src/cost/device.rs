@@ -1,0 +1,85 @@
+//! Device profiles: the hardware parameters of the roofline model.
+//!
+//! `rtx2070` approximates the paper's testbed (§4.1: NVIDIA GeForce RTX
+//! 2070); `cpu_xeon` exists for ablations; `tpu_v4ish` backs the DESIGN.md
+//! §Perf discussion of real-TPU kernel estimates.
+
+use super::op_cost::OpCost;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    /// Peak f32 throughput in FLOP/s.
+    pub peak_flops: f64,
+    /// Memory bandwidth in bytes/s.
+    pub mem_bw: f64,
+    /// Fixed overhead per kernel launch, in seconds.
+    pub launch_overhead_s: f64,
+}
+
+impl DeviceProfile {
+    pub fn rtx2070() -> Self {
+        Self {
+            name: "rtx2070",
+            peak_flops: 7.5e12, // 7.5 TFLOP/s fp32
+            mem_bw: 448e9,      // 448 GB/s GDDR6
+            launch_overhead_s: 12e-6,
+        }
+    }
+
+    pub fn cpu_xeon() -> Self {
+        Self {
+            name: "cpu_xeon",
+            peak_flops: 0.5e12,
+            mem_bw: 80e9,
+            launch_overhead_s: 0.5e-6,
+        }
+    }
+
+    pub fn tpu_v4ish() -> Self {
+        Self {
+            name: "tpu_v4ish",
+            peak_flops: 137e12, // bf16 MXU roofline, reported as flops-equivalent
+            mem_bw: 1200e9,
+            launch_overhead_s: 2e-6,
+        }
+    }
+
+    /// Roofline time for one operator, in milliseconds.
+    pub fn op_time_ms(&self, c: &OpCost) -> f64 {
+        let compute_s = c.flops / (self.peak_flops * c.efficiency);
+        let memory_s = c.bytes / self.mem_bw;
+        let overhead_s = c.launches as f64 * self.launch_overhead_s;
+        (overhead_s + compute_s.max(memory_s)) * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_bound_op_uses_flops() {
+        let d = DeviceProfile::rtx2070();
+        let c = OpCost { flops: 7.5e9, bytes: 1e3, launches: 0, efficiency: 1.0 };
+        // 7.5e9 flops at 7.5e12 flop/s = 1 ms.
+        let t = d.op_time_ms(&c);
+        assert!((t - 1.0).abs() < 0.01, "{t}");
+    }
+
+    #[test]
+    fn memory_bound_op_uses_bandwidth() {
+        let d = DeviceProfile::rtx2070();
+        let c = OpCost { flops: 1e3, bytes: 448e6, launches: 0, efficiency: 1.0 };
+        let t = d.op_time_ms(&c);
+        assert!((t - 1.0).abs() < 0.01, "{t}");
+    }
+
+    #[test]
+    fn launches_add_fixed_cost() {
+        let d = DeviceProfile::rtx2070();
+        let one = OpCost { flops: 0.0, bytes: 0.0, launches: 1, efficiency: 1.0 };
+        let ten = OpCost { flops: 0.0, bytes: 0.0, launches: 10, efficiency: 1.0 };
+        assert!((d.op_time_ms(&ten) - 10.0 * d.op_time_ms(&one)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,346 @@
+//! Analytic cost model — the stand-in for TASO's cuDNN-based runtime
+//! measurement (DESIGN.md §Hardware-Adaptation).
+//!
+//! Per operator we compute (FLOPs, bytes moved, kernel launches) and map
+//! them to time with a roofline under a [`DeviceProfile`]:
+//!
+//! `t_op = launch_overhead + max(flops / (peak * eff_op), bytes / bandwidth)`
+//!
+//! Exactly the quantities the paper's reward functions consume (Eq. 2/3 use
+//! runtime and memory-access deltas; §4.3 additionally logs FLOPS and kernel
+//! launches). Fusion rules win for the same reason they win on a GPU: fewer
+//! launches and less intermediate HBM traffic. An optional seeded noise
+//! model reproduces the measurement variance the paper discusses in §3.1.4.
+
+pub mod device;
+pub mod op_cost;
+
+pub use device::DeviceProfile;
+pub use op_cost::{op_cost, OpCost};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use crate::graph::{Graph, OpKind};
+use crate::util::Rng;
+
+/// Cost summary for a whole graph.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct GraphCost {
+    pub runtime_ms: f64,
+    pub flops: f64,
+    /// Bytes moved through memory (activations + weights read, outputs written).
+    pub mem_bytes: f64,
+    pub launches: u64,
+    /// Peak resident memory during execution (weights + live activations).
+    pub peak_bytes: f64,
+}
+
+pub struct CostModel {
+    pub device: DeviceProfile,
+    /// Std-dev of multiplicative measurement noise (0 = deterministic).
+    pub noise_std: f64,
+    noise_rng: RefCell<Rng>,
+    /// Per-op memoisation keyed by (attr hash, input shapes hash).
+    cache: RefCell<HashMap<u64, OpCost>>,
+}
+
+impl CostModel {
+    pub fn new(device: DeviceProfile) -> Self {
+        Self { device, noise_std: 0.0, noise_rng: RefCell::new(Rng::new(0)), cache: RefCell::new(HashMap::new()) }
+    }
+
+    /// Enable multiplicative measurement noise (paper §3.1.4: "non-negligible
+    /// variance of the runtime on real hardware").
+    pub fn with_noise(mut self, std: f64, seed: u64) -> Self {
+        self.noise_std = std;
+        self.noise_rng = RefCell::new(Rng::new(seed));
+        self
+    }
+
+    fn cached_op_cost(&self, g: &Graph, id: crate::graph::NodeId) -> OpCost {
+        let node = g.node(id);
+        let mut key = node.op.attr_hash();
+        for p in &node.inputs {
+            if let Ok(d) = g.out_desc(*p) {
+                for &dim in &d.shape {
+                    key = key
+                        .rotate_left(13)
+                        .wrapping_mul(0x100000001B3)
+                        .wrapping_add(dim as u64);
+                }
+            }
+        }
+        if let Some(c) = self.cache.borrow().get(&key) {
+            return *c;
+        }
+        let descs: Vec<&crate::graph::TensorDesc> = node
+            .inputs
+            .iter()
+            .filter_map(|p| g.out_desc(*p).ok())
+            .collect();
+        let c = op_cost(&node.op, &descs, &node.outs);
+        self.cache.borrow_mut().insert(key, c);
+        c
+    }
+
+    /// Node-wise constness: a node is constant when every transitive source
+    /// feeding it is a `Weight`. Constant subtrees (folded BN scales,
+    /// concatenated kernels, composed 1x1 weights...) are precomputed at
+    /// model-load time — TASO does the same — so they cost zero runtime.
+    pub fn const_set(&self, g: &Graph) -> Vec<bool> {
+        let mut is_const = vec![false; g.n_slots()];
+        if let Ok(order) = g.topo_order() {
+            for id in order {
+                let n = g.node(id);
+                is_const[id.index()] = match n.op {
+                    OpKind::Weight => true,
+                    OpKind::Input => false,
+                    _ => !n.inputs.is_empty() && n.inputs.iter().all(|p| is_const[p.node.index()]),
+                };
+            }
+        }
+        is_const
+    }
+
+    /// Hot-path cost: runtime / flops / traffic / launches, *without* the
+    /// peak-memory analysis (which needs a liveness sweep). This is what
+    /// the search baselines and the environment reward evaluate thousands
+    /// of times per episode — see EXPERIMENTS.md §Perf/L3.
+    pub fn graph_cost_fast(&self, g: &Graph) -> GraphCost {
+        let mut total = GraphCost::default();
+        let is_const = self.const_set(g);
+        for id in g.live_ids() {
+            if is_const[id.index()] {
+                continue;
+            }
+            let node = g.node(id);
+            if matches!(node.op, OpKind::Input | OpKind::Weight) {
+                continue;
+            }
+            let c = self.cached_op_cost(g, id);
+            total.flops += c.flops;
+            total.mem_bytes += c.bytes;
+            total.launches += c.launches;
+            total.runtime_ms += self.device.op_time_ms(&c);
+        }
+        if self.noise_std > 0.0 {
+            let n = 1.0 + self.noise_std * self.noise_rng.borrow_mut().normal() as f64;
+            total.runtime_ms *= n.max(0.5);
+        }
+        total
+    }
+
+    /// Full cost report for a graph.
+    pub fn graph_cost(&self, g: &Graph) -> GraphCost {
+        let mut total = GraphCost::default();
+        let mut weight_bytes = 0f64;
+        let mut act_bytes_max = 0f64;
+        let is_const = self.const_set(g);
+        let cons = g.consumers();
+        // A constant node is *resident* iff some non-constant op reads it
+        // (it is the materialised, precomputed parameter).
+        let resident = |id: crate::graph::NodeId| -> bool {
+            cons.get(&id)
+                .map(|v| v.iter().any(|(c, _)| !is_const[c.index()]))
+                .unwrap_or(false)
+        };
+        for id in g.live_ids() {
+            let node = g.node(id);
+            match node.op {
+                OpKind::Input => {}
+                OpKind::Weight => {
+                    if resident(id) {
+                        weight_bytes += node.outs[0].bytes() as f64;
+                    }
+                }
+                _ if is_const[id.index()] => {
+                    if resident(id) {
+                        weight_bytes += node.outs.iter().map(|t| t.bytes() as f64).sum::<f64>();
+                    }
+                }
+                _ => {
+                    let c = self.cached_op_cost(g, id);
+                    total.flops += c.flops;
+                    total.mem_bytes += c.bytes;
+                    total.launches += c.launches;
+                    total.runtime_ms += self.device.op_time_ms(&c);
+                    let out_b: f64 = node.outs.iter().map(|t| t.bytes() as f64).sum();
+                    act_bytes_max = act_bytes_max.max(out_b);
+                }
+            }
+        }
+        // Peak memory approximation: all weights resident + the two largest
+        // activation frontiers (double-buffered producer/consumer).
+        total.peak_bytes = weight_bytes + 2.0 * act_bytes_max + self.activation_frontier(g);
+        if self.noise_std > 0.0 {
+            let n = 1.0 + self.noise_std * self.noise_rng.borrow_mut().normal() as f64;
+            total.runtime_ms *= n.max(0.5);
+        }
+        total
+    }
+
+    /// Largest sum of simultaneously-live activation bytes along the topo order.
+    fn activation_frontier(&self, g: &Graph) -> f64 {
+        let order = match g.topo_order() {
+            Ok(o) => o,
+            Err(_) => return 0.0,
+        };
+        let consumers = g.consumers();
+        let mut remaining: HashMap<crate::graph::NodeId, usize> = HashMap::new();
+        for id in g.live_ids() {
+            remaining.insert(id, consumers.get(&id).map_or(0, |v| v.len()));
+        }
+        let is_const = self.const_set(g);
+        let mut live = 0f64;
+        let mut peak = 0f64;
+        let mut alive: HashMap<crate::graph::NodeId, f64> = HashMap::new();
+        for id in order {
+            let node = g.node(id);
+            if matches!(node.op, OpKind::Weight) || is_const[id.index()] {
+                continue;
+            }
+            let bytes: f64 = node.outs.iter().map(|t| t.bytes() as f64).sum();
+            live += bytes;
+            alive.insert(id, bytes);
+            peak = peak.max(live);
+            for p in &node.inputs {
+                if let Some(r) = remaining.get_mut(&p.node) {
+                    *r = r.saturating_sub(1);
+                    if *r == 0 {
+                        if let Some(b) = alive.remove(&p.node) {
+                            live -= b;
+                        }
+                    }
+                }
+            }
+        }
+        peak
+    }
+
+    /// Estimated end-to-end runtime in milliseconds (the paper's `RT`).
+    pub fn graph_runtime_ms(&self, g: &Graph) -> f64 {
+        self.graph_cost_fast(g).runtime_ms
+    }
+
+    /// Estimated inference memory in GiB (Table 2's "Mem. usage").
+    pub fn graph_memory_gib(&self, g: &Graph) -> f64 {
+        self.graph_cost(g).peak_bytes / (1024.0 * 1024.0 * 1024.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Activation, GraphBuilder, PadMode};
+
+    fn conv_graph(fused: bool) -> Graph {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 16, 32, 32]);
+        if fused {
+            let ci = 16;
+            let w = b.weight(&[32, ci, 3, 3]);
+            b.op(
+                crate::graph::OpKind::Conv2d { stride: 1, pad: PadMode::Same, act: Activation::Relu },
+                &[x, w],
+            )
+            .unwrap();
+        } else {
+            let c = b.conv(x, 32, 3, 1, PadMode::Same).unwrap();
+            b.relu(c).unwrap();
+        }
+        b.finish()
+    }
+
+    #[test]
+    fn fused_conv_relu_cheaper() {
+        let cm = CostModel::new(DeviceProfile::rtx2070());
+        let unfused = cm.graph_runtime_ms(&conv_graph(false));
+        let fused = cm.graph_runtime_ms(&conv_graph(true));
+        assert!(fused < unfused, "fused {fused} !< unfused {unfused}");
+    }
+
+    #[test]
+    fn costs_positive_and_monotone_in_size() {
+        let cm = CostModel::new(DeviceProfile::rtx2070());
+        let small = {
+            let mut b = GraphBuilder::new();
+            let x = b.input(&[1, 8, 16, 16]);
+            b.conv(x, 8, 3, 1, PadMode::Same).unwrap();
+            b.finish()
+        };
+        let big = {
+            let mut b = GraphBuilder::new();
+            let x = b.input(&[1, 8, 64, 64]);
+            b.conv(x, 8, 3, 1, PadMode::Same).unwrap();
+            b.finish()
+        };
+        let ts = cm.graph_runtime_ms(&small);
+        let tb = cm.graph_runtime_ms(&big);
+        assert!(ts > 0.0);
+        assert!(tb > ts);
+    }
+
+    #[test]
+    fn noise_is_seeded_and_bounded() {
+        let g = conv_graph(false);
+        let base = CostModel::new(DeviceProfile::rtx2070()).graph_runtime_ms(&g);
+        let a = CostModel::new(DeviceProfile::rtx2070()).with_noise(0.05, 1).graph_runtime_ms(&g);
+        let b = CostModel::new(DeviceProfile::rtx2070()).with_noise(0.05, 1).graph_runtime_ms(&g);
+        assert_eq!(a, b, "same seed, same noise");
+        assert!((a / base - 1.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn const_subtrees_cost_nothing() {
+        // conv(x, mul(w, reshape(scale))) — the weight arithmetic is
+        // load-time precomputable and must not add launches or flops.
+        let cm = CostModel::new(DeviceProfile::rtx2070());
+        let folded = {
+            let mut b = GraphBuilder::new();
+            let x = b.input(&[1, 8, 16, 16]);
+            let w = b.weight(&[8, 8, 3, 3]);
+            let s = b.weight(&[8]);
+            let sr = b.reshape(s, &[8, 1, 1, 1]).unwrap();
+            let w2 = b.op(crate::graph::OpKind::Mul, &[w, sr]).unwrap();
+            b.op(
+                crate::graph::OpKind::Conv2d { stride: 1, pad: PadMode::Same, act: Activation::None },
+                &[x, w2],
+            )
+            .unwrap();
+            b.finish()
+        };
+        let plain = {
+            let mut b = GraphBuilder::new();
+            let x = b.input(&[1, 8, 16, 16]);
+            b.conv(x, 8, 3, 1, PadMode::Same).unwrap();
+            b.finish()
+        };
+        let cf = cm.graph_cost(&folded);
+        let cp = cm.graph_cost(&plain);
+        assert_eq!(cf.launches, cp.launches);
+        assert!((cf.runtime_ms - cp.runtime_ms).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fast_and_full_costs_agree_on_hot_fields() {
+        let cm = CostModel::new(DeviceProfile::rtx2070());
+        for (_, g) in crate::zoo::all() {
+            let fast = cm.graph_cost_fast(&g);
+            let full = cm.graph_cost(&g);
+            assert_eq!(fast.launches, full.launches);
+            assert!((fast.runtime_ms - full.runtime_ms).abs() < 1e-9);
+            assert!((fast.flops - full.flops).abs() < 1e-3);
+            assert!((fast.mem_bytes - full.mem_bytes).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn memory_includes_weights() {
+        let cm = CostModel::new(DeviceProfile::rtx2070());
+        let g = conv_graph(false);
+        let c = cm.graph_cost(&g);
+        // 32*16*3*3 weight floats at minimum.
+        assert!(c.peak_bytes > (32 * 16 * 3 * 3 * 4) as f64);
+    }
+}

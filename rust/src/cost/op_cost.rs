@@ -1,0 +1,181 @@
+//! Per-operator cost: FLOPs, bytes moved, launch count, and an efficiency
+//! factor modelling how well the op maps onto the device's compute units
+//! (GEMM-like ops run near peak; elementwise and memory-shuffling ops do
+//! not). The numbers feed the roofline in [`super::device`].
+
+use crate::graph::{OpKind, TensorDesc};
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpCost {
+    pub flops: f64,
+    pub bytes: f64,
+    pub launches: u64,
+    /// Fraction of peak compute this op achieves (0, 1].
+    pub efficiency: f64,
+}
+
+impl OpCost {
+    fn zero() -> Self {
+        Self { flops: 0.0, bytes: 0.0, launches: 0, efficiency: 1.0 }
+    }
+}
+
+fn io_bytes(inputs: &[&TensorDesc], outputs: &[TensorDesc]) -> f64 {
+    let read: usize = inputs.iter().map(|t| t.bytes()).sum();
+    let write: usize = outputs.iter().map(|t| t.bytes()).sum();
+    (read + write) as f64
+}
+
+/// Fused activations add one pass of elementwise flops but no extra launch
+/// or memory round-trip — that asymmetry is exactly why fusion rules win.
+fn act_flops(act: crate::graph::Activation, n: usize) -> f64 {
+    match act {
+        crate::graph::Activation::None => 0.0,
+        crate::graph::Activation::Relu => n as f64,
+        crate::graph::Activation::Gelu => 8.0 * n as f64,
+    }
+}
+
+pub fn op_cost(op: &OpKind, inputs: &[&TensorDesc], outputs: &[TensorDesc]) -> OpCost {
+    use OpKind::*;
+    let bytes = io_bytes(inputs, outputs);
+    let out_elems: usize = outputs.iter().map(|t| t.n_elems()).sum();
+    match op {
+        Input | Weight => OpCost::zero(),
+        ConvBias { act, .. } => {
+            let w = inputs[1];
+            let (ci, kh, kw) = (w.shape[1], w.shape[2], w.shape[3]);
+            let macs = outputs[0].n_elems() as f64 * (ci * kh * kw) as f64;
+            OpCost {
+                // bias add rides the conv epilogue: +1 flop/elem, no launch.
+                flops: 2.0 * macs + out_elems as f64 + act_flops(*act, out_elems),
+                bytes,
+                launches: 1,
+                efficiency: 0.85,
+            }
+        }
+        Conv2d { act, .. } => {
+            let w = inputs[1];
+            let (ci, kh, kw) = (w.shape[1], w.shape[2], w.shape[3]);
+            let macs = outputs[0].n_elems() as f64 * (ci * kh * kw) as f64;
+            OpCost {
+                flops: 2.0 * macs + act_flops(*act, out_elems),
+                bytes,
+                launches: 1,
+                efficiency: 0.85, // cuDNN implicit-GEMM territory
+            }
+        }
+        MatMul { act, .. } => {
+            let a = inputs[0];
+            let k = a.shape[a.rank() - if matches!(op, MatMul { trans_a: true, .. }) { 2 } else { 1 }];
+            let macs = outputs[0].n_elems() as f64 * k as f64;
+            OpCost {
+                flops: 2.0 * macs + act_flops(*act, out_elems),
+                bytes,
+                launches: 1,
+                efficiency: 0.9,
+            }
+        }
+        Linear { act } => {
+            let k = inputs[1].shape[0];
+            let macs = outputs[0].n_elems() as f64 * k as f64;
+            OpCost {
+                flops: 2.0 * macs + out_elems as f64 + act_flops(*act, out_elems),
+                bytes,
+                launches: 1,
+                efficiency: 0.9,
+            }
+        }
+        Add | Mul => OpCost { flops: out_elems as f64, bytes, launches: 1, efficiency: 0.12 },
+        AddN { n } => OpCost {
+            // One fused pass over n inputs: (n-1) adds per element.
+            flops: (n.saturating_sub(1) * out_elems) as f64,
+            bytes,
+            launches: 1,
+            efficiency: 0.12,
+        },
+        Relu | Sigmoid | Tanh | Identity | Scale { .. } => OpCost {
+            flops: out_elems as f64,
+            bytes,
+            launches: if matches!(op, Identity) { 0 } else { 1 },
+            efficiency: 0.12,
+        },
+        Gelu => OpCost { flops: 8.0 * out_elems as f64, bytes, launches: 1, efficiency: 0.12 },
+        BatchNorm => OpCost { flops: 2.0 * out_elems as f64, bytes, launches: 1, efficiency: 0.12 },
+        MaxPool { k, .. } | AvgPool { k, .. } => OpCost {
+            flops: (k * k * out_elems) as f64,
+            bytes,
+            launches: 1,
+            efficiency: 0.2,
+        },
+        Concat { .. } => OpCost { flops: 0.0, bytes, launches: 1, efficiency: 1.0 },
+        // Split compiles to strided views over the producer's buffer.
+        Split { .. } => OpCost { flops: 0.0, bytes: 0.0, launches: 0, efficiency: 1.0 },
+        Reshape { .. } => OpCost { flops: 0.0, bytes: 0.0, launches: 0, efficiency: 1.0 },
+        Transpose { .. } => OpCost { flops: 0.0, bytes, launches: 1, efficiency: 1.0 },
+        Softmax { axis } => {
+            let _ = axis;
+            OpCost { flops: 5.0 * out_elems as f64, bytes, launches: 1, efficiency: 0.15 }
+        }
+        LayerNorm => OpCost { flops: 8.0 * out_elems as f64, bytes, launches: 1, efficiency: 0.15 },
+        FusedAddLayerNorm => OpCost {
+            // add + layernorm flops, but ONE launch and no intermediate
+            // round-trip — the §4.10 transformer fusion payoff.
+            flops: 9.0 * out_elems as f64,
+            bytes,
+            launches: 1,
+            efficiency: 0.15,
+        },
+        Enlarge { .. } => OpCost { flops: 0.0, bytes, launches: 1, efficiency: 1.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Activation, PadMode};
+
+    #[test]
+    fn conv_flops_formula() {
+        let x = TensorDesc::f32(&[1, 16, 32, 32]);
+        let w = TensorDesc::f32(&[32, 16, 3, 3]);
+        let out = vec![TensorDesc::f32(&[1, 32, 32, 32])];
+        let c = op_cost(
+            &OpKind::Conv2d { stride: 1, pad: PadMode::Same, act: Activation::None },
+            &[&x, &w],
+            &out,
+        );
+        let expect = 2.0 * (32 * 32 * 32) as f64 * (16 * 3 * 3) as f64;
+        assert_eq!(c.flops, expect);
+        assert_eq!(c.launches, 1);
+    }
+
+    #[test]
+    fn fused_add_ln_beats_separate() {
+        let x = TensorDesc::f32(&[1, 128, 768]);
+        let g = TensorDesc::f32(&[768]);
+        let out = vec![x.clone()];
+        let fused = op_cost(&OpKind::FusedAddLayerNorm, &[&x, &x, &g, &g], &out);
+        let add = op_cost(&OpKind::Add, &[&x, &x], &out);
+        let ln = op_cost(&OpKind::LayerNorm, &[&x, &g, &g], &out);
+        assert!(fused.launches < add.launches + ln.launches);
+        assert!(fused.bytes < add.bytes + ln.bytes);
+    }
+
+    #[test]
+    fn reshape_is_free() {
+        let x = TensorDesc::f32(&[4, 4]);
+        let c = op_cost(&OpKind::Reshape { shape: vec![16] }, &[&x], &[TensorDesc::f32(&[16])]);
+        assert_eq!(c.launches, 0);
+        assert_eq!(c.bytes, 0.0);
+    }
+
+    #[test]
+    fn addn_single_launch() {
+        let x = TensorDesc::f32(&[64, 64]);
+        let out = vec![x.clone()];
+        let c = op_cost(&OpKind::AddN { n: 4 }, &[&x, &x, &x, &x], &out);
+        assert_eq!(c.launches, 1);
+        assert_eq!(c.flops, 3.0 * 64.0 * 64.0);
+    }
+}

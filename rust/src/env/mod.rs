@@ -1,0 +1,360 @@
+//! The Gym-style graph-optimisation environment (§3.1).
+//!
+//! `step((xfer_id, location))` applies one substitution and returns the
+//! paper's 4-tuple: next state, reward, terminal flag and extra info. The
+//! observation mirrors §3.1.3's `(graph_tuple, xfer_tuples, location_masks,
+//! xfer_mask)`: a tensorised graph encoding for the GNN plus validity masks
+//! for both action heads. `xfer_id == N_XFERS` is the NO-OP action that
+//! terminates the episode (§3.1.3).
+
+pub mod reward;
+pub mod state;
+
+pub use reward::RewardKind;
+pub use state::{EncodedGraph, StateEncoder};
+
+use crate::cost::CostModel;
+use crate::graph::Graph;
+use crate::xfer::{apply_rule, Location, RuleSet};
+
+#[derive(Debug, Clone)]
+pub struct EnvConfig {
+    /// Hard cap on episode length.
+    pub max_steps: usize,
+    /// Reward for invalid actions (paper Eq. 2/3: -100).
+    pub invalid_penalty: f32,
+    pub reward: RewardKind,
+    /// Per-xfer location limit (paper: 200).
+    pub max_locs: usize,
+}
+
+impl Default for EnvConfig {
+    fn default() -> Self {
+        Self { max_steps: 60, invalid_penalty: -100.0, reward: RewardKind::Combined { alpha: 0.8, beta: 0.2 }, max_locs: 200 }
+    }
+}
+
+/// Everything the agent observes about the current state.
+#[derive(Debug, Clone)]
+pub struct Observation {
+    /// Valid transformations, length `n_xfers + 1` (NO-OP always valid).
+    pub xfer_mask: Vec<bool>,
+    /// Number of valid locations per xfer.
+    pub location_counts: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct StepInfo {
+    pub rule_name: Option<&'static str>,
+    pub runtime_ms: f64,
+    pub mem_bytes: f64,
+    pub flops: f64,
+    pub launches: u64,
+    pub valid: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct StepResult {
+    pub reward: f32,
+    pub done: bool,
+    pub info: StepInfo,
+}
+
+pub struct Env<'a> {
+    pub rules: &'a RuleSet,
+    pub cost: &'a CostModel,
+    pub cfg: EnvConfig,
+    initial: Graph,
+    pub graph: Graph,
+    /// Per-rule match lists for the current graph (truncated to max_locs).
+    locations: Vec<Vec<Location>>,
+    steps: usize,
+    rt_initial: f64,
+    rt_prev: f64,
+    mem_initial: f64,
+    mem_prev: f64,
+    /// Applied (xfer, location) history for the Fig. 10 heatmap.
+    pub history: Vec<(usize, usize)>,
+}
+
+impl<'a> Env<'a> {
+    pub fn new(graph: Graph, rules: &'a RuleSet, cost: &'a CostModel, cfg: EnvConfig) -> Self {
+        let gc = cost.graph_cost_fast(&graph);
+        let mut env = Self {
+            rules,
+            cost,
+            cfg,
+            initial: graph.clone(),
+            graph,
+            locations: Vec::new(),
+            steps: 0,
+            rt_initial: gc.runtime_ms,
+            rt_prev: gc.runtime_ms,
+            mem_initial: gc.mem_bytes,
+            mem_prev: gc.mem_bytes,
+            history: Vec::new(),
+        };
+        env.refresh_locations();
+        env
+    }
+
+    /// NO-OP action id (== number of xfer slots).
+    pub fn noop_action(&self) -> usize {
+        self.rules.len()
+    }
+
+    pub fn reset(&mut self) {
+        self.graph = self.initial.clone();
+        self.steps = 0;
+        self.rt_prev = self.rt_initial;
+        self.mem_prev = self.mem_initial;
+        self.history.clear();
+        self.refresh_locations();
+    }
+
+    fn refresh_locations(&mut self) {
+        self.locations = self
+            .rules
+            .rules
+            .iter()
+            .map(|r| {
+                let mut locs = r.find(&self.graph);
+                locs.truncate(self.cfg.max_locs);
+                locs
+            })
+            .collect();
+    }
+
+    pub fn observe(&self) -> Observation {
+        let mut xfer_mask: Vec<bool> = self.locations.iter().map(|l| !l.is_empty()).collect();
+        xfer_mask.push(true); // NO-OP
+        Observation {
+            xfer_mask,
+            location_counts: self.locations.iter().map(|l| l.len()).collect(),
+        }
+    }
+
+    /// Xfer mask padded into a fixed `slots`-wide action space: rules at
+    /// their slot index, NO-OP at the *last* slot, dead slots invalid.
+    /// (The AOT artifacts reserve N_XFERS slots; the library may be smaller.)
+    pub fn padded_xfer_mask(&self, slots: usize) -> Vec<f32> {
+        let mut m = vec![0.0f32; slots];
+        for (i, locs) in self.locations.iter().enumerate() {
+            if i < slots - 1 && !locs.is_empty() {
+                m[i] = 1.0;
+            }
+        }
+        m[slots - 1] = 1.0; // NO-OP
+        m
+    }
+
+    /// Location-validity mask (length max_locs) for one xfer.
+    pub fn location_mask(&self, xfer: usize) -> Vec<bool> {
+        let n = self.locations.get(xfer).map_or(0, |l| l.len());
+        (0..self.cfg.max_locs).map(|i| i < n).collect()
+    }
+
+    pub fn runtime_ms(&self) -> f64 {
+        self.rt_prev
+    }
+
+    pub fn initial_runtime_ms(&self) -> f64 {
+        self.rt_initial
+    }
+
+    /// Relative runtime improvement so far, in percent.
+    pub fn improvement_pct(&self) -> f64 {
+        100.0 * (self.rt_initial - self.rt_prev) / self.rt_initial
+    }
+
+    pub fn steps_taken(&self) -> usize {
+        self.steps
+    }
+
+    /// The paper's `step(action)`.
+    pub fn step(&mut self, action: (usize, usize)) -> StepResult {
+        let (xfer, loc) = action;
+        self.steps += 1;
+        let cap_hit = self.steps >= self.cfg.max_steps;
+
+        // NO-OP terminates (§3.1.3).
+        if xfer == self.noop_action() {
+            return StepResult {
+                reward: 0.0,
+                done: true,
+                info: self.info(None, true),
+            };
+        }
+
+        let valid = xfer < self.rules.len() && loc < self.locations[xfer].len();
+        if !valid {
+            return StepResult {
+                reward: self.cfg.invalid_penalty,
+                done: cap_hit,
+                info: self.info(None, false),
+            };
+        }
+
+        let rule = self.rules.get(xfer).unwrap();
+        let location = self.locations[xfer][loc].clone();
+        let mut next = self.graph.clone();
+        match apply_rule(&mut next, rule, &location) {
+            Ok(()) => {
+                let gc = self.cost.graph_cost_fast(&next);
+                let reward = self.cfg.reward.compute(
+                    self.rt_initial,
+                    self.rt_prev,
+                    gc.runtime_ms,
+                    self.mem_initial,
+                    self.mem_prev,
+                    gc.mem_bytes,
+                );
+                self.graph = next;
+                self.rt_prev = gc.runtime_ms;
+                self.mem_prev = gc.mem_bytes;
+                self.history.push((xfer, loc));
+                self.refresh_locations();
+                StepResult {
+                    reward,
+                    done: cap_hit,
+                    info: self.info(Some(rule.name()), true),
+                }
+            }
+            Err(_) => StepResult {
+                reward: self.cfg.invalid_penalty,
+                done: cap_hit,
+                info: self.info(None, false),
+            },
+        }
+    }
+
+    fn info(&self, rule_name: Option<&'static str>, valid: bool) -> StepInfo {
+        let gc = self.cost.graph_cost_fast(&self.graph);
+        StepInfo {
+            rule_name,
+            runtime_ms: gc.runtime_ms,
+            mem_bytes: gc.mem_bytes,
+            flops: gc.flops,
+            launches: gc.launches,
+            valid,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::DeviceProfile;
+    use crate::graph::{GraphBuilder, PadMode};
+    use crate::xfer::library::standard_library;
+
+    fn tiny_graph() -> Graph {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 3, 8, 8]);
+        let c = b.conv(x, 4, 3, 1, PadMode::Same).unwrap();
+        let _ = b.relu(c).unwrap();
+        b.finish()
+    }
+
+    fn setup() -> (RuleSet, CostModel) {
+        (standard_library(), CostModel::new(DeviceProfile::rtx2070()))
+    }
+
+    #[test]
+    fn noop_terminates() {
+        let (rules, cost) = setup();
+        let mut env = Env::new(tiny_graph(), &rules, &cost, EnvConfig::default());
+        let noop = env.noop_action();
+        let res = env.step((noop, 0));
+        assert!(res.done);
+        assert_eq!(res.reward, 0.0);
+    }
+
+    #[test]
+    fn invalid_action_penalised() {
+        let (rules, cost) = setup();
+        let mut env = Env::new(tiny_graph(), &rules, &cost, EnvConfig::default());
+        let res = env.step((0, 199));
+        assert_eq!(res.reward, -100.0);
+        assert!(!res.done);
+        assert!(!res.info.valid);
+    }
+
+    #[test]
+    fn valid_fusion_gives_positive_reward() {
+        let (rules, cost) = setup();
+        let mut env = Env::new(tiny_graph(), &rules, &cost, EnvConfig::default());
+        let fuse = rules.index_of("fuse_conv_relu").unwrap();
+        let obs = env.observe();
+        assert!(obs.xfer_mask[fuse]);
+        let res = env.step((fuse, 0));
+        assert!(res.info.valid);
+        assert!(res.reward > 0.0, "fusion reward {}", res.reward);
+        assert!(env.improvement_pct() > 0.0);
+    }
+
+    #[test]
+    fn mask_always_admits_noop() {
+        let (rules, cost) = setup();
+        let env = Env::new(tiny_graph(), &rules, &cost, EnvConfig::default());
+        let obs = env.observe();
+        assert_eq!(obs.xfer_mask.len(), rules.len() + 1);
+        assert!(obs.xfer_mask[rules.len()]);
+    }
+
+    #[test]
+    fn reset_restores_initial_state() {
+        let (rules, cost) = setup();
+        let mut env = Env::new(tiny_graph(), &rules, &cost, EnvConfig::default());
+        let fuse = rules.index_of("fuse_conv_relu").unwrap();
+        env.step((fuse, 0));
+        let rt_after = env.runtime_ms();
+        env.reset();
+        assert!(env.runtime_ms() > rt_after);
+        assert_eq!(env.steps_taken(), 0);
+        assert!(env.history.is_empty());
+    }
+
+    #[test]
+    fn episode_caps_at_max_steps() {
+        let (rules, cost) = setup();
+        let cfg = EnvConfig { max_steps: 3, ..Default::default() };
+        let mut env = Env::new(tiny_graph(), &rules, &cost, cfg);
+        let mut done = false;
+        for _ in 0..3 {
+            done = env.step((0, 150)).done; // repeatedly invalid
+        }
+        assert!(done);
+    }
+
+    #[test]
+    fn masks_reflect_matches() {
+        let (rules, cost) = setup();
+        let env = Env::new(tiny_graph(), &rules, &cost, EnvConfig::default());
+        let fuse = rules.index_of("fuse_conv_relu").unwrap();
+        let merge3 = rules.index_of("merge_linear3").unwrap();
+        let obs = env.observe();
+        assert!(obs.xfer_mask[fuse]);
+        assert!(!obs.xfer_mask[merge3]);
+        assert_eq!(obs.location_counts[fuse], 1);
+        let lm = env.location_mask(fuse);
+        assert!(lm[0]);
+        assert!(!lm[1]);
+    }
+
+    #[test]
+    fn bert_episode_random_walk_improves_or_neutral() {
+        let (rules, cost) = setup();
+        let mut env = Env::new(crate::zoo::bert_base(), &rules, &cost, EnvConfig::default());
+        let mut rng = crate::util::Rng::new(5);
+        for _ in 0..5 {
+            let obs = env.observe();
+            let valid: Vec<usize> = (0..rules.len()).filter(|&i| obs.xfer_mask[i]).collect();
+            let x = valid[rng.below(valid.len())];
+            let l = rng.below(obs.location_counts[x]);
+            let res = env.step((x, l));
+            assert!(res.info.valid);
+        }
+        assert_eq!(env.history.len(), 5);
+    }
+}

@@ -1,0 +1,104 @@
+//! Reward functions (§3.1.4, Eq. 2 and Eq. 3; Fig. 5's R1–R5).
+//!
+//! All runtime/memory deltas are normalised by the *initial* graph cost and
+//! expressed in percent, so rewards are comparable across graphs of very
+//! different absolute runtimes (BERT ~4 ms vs ResNet-50 ~26 ms in Table 2)
+//! and the -100 invalid penalty keeps its intended magnitude.
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RewardKind {
+    /// Eq. 2 / Fig. 5 "R5": incremental runtime improvement
+    /// `r_t = RT_{t-1} - RT_t`.
+    Incremental,
+    /// Fig. 5 "R2": improvement of the *new* runtime over the initial graph
+    /// `r_t = RT_0 - RT_t`.
+    NewRuntime,
+    /// Eq. 3: `alpha (RT_{t-1} - RT_t) + beta (M_{t-1} - M_t)`.
+    /// Fig. 5: R1 = tuned (0.8, 0.2); R3 = (0.1, 0.9); R4 = (0.5, 0.5).
+    Combined { alpha: f32, beta: f32 },
+}
+
+impl RewardKind {
+    /// Named presets matching Fig. 5's legend.
+    pub fn preset(name: &str) -> anyhow::Result<Self> {
+        Ok(match name {
+            "r1" => RewardKind::Combined { alpha: 0.8, beta: 0.2 },
+            "r2" => RewardKind::NewRuntime,
+            "r3" => RewardKind::Combined { alpha: 0.1, beta: 0.9 },
+            "r4" => RewardKind::Combined { alpha: 0.5, beta: 0.5 },
+            "r5" => RewardKind::Incremental,
+            _ => anyhow::bail!("unknown reward preset '{}' (r1..r5)", name),
+        })
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            RewardKind::Incremental => "incremental".into(),
+            RewardKind::NewRuntime => "new_runtime".into(),
+            RewardKind::Combined { alpha, beta } => format!("combined(a={alpha},b={beta})"),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn compute(
+        &self,
+        rt_initial: f64,
+        rt_prev: f64,
+        rt_new: f64,
+        mem_initial: f64,
+        mem_prev: f64,
+        mem_new: f64,
+    ) -> f32 {
+        let rt0 = rt_initial.max(1e-12);
+        let m0 = mem_initial.max(1e-12);
+        let d_rt = 100.0 * (rt_prev - rt_new) / rt0;
+        let d_mem = 100.0 * (mem_prev - mem_new) / m0;
+        let total_rt = 100.0 * (rt_initial - rt_new) / rt0;
+        match self {
+            RewardKind::Incremental => d_rt as f32,
+            RewardKind::NewRuntime => total_rt as f32,
+            RewardKind::Combined { alpha, beta } => (*alpha as f64 * d_rt + *beta as f64 * d_mem) as f32,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn incremental_is_stepwise_delta() {
+        let r = RewardKind::Incremental.compute(10.0, 8.0, 6.0, 1.0, 1.0, 1.0);
+        assert!((r - 20.0).abs() < 1e-5); // (8-6)/10 = 20%
+    }
+
+    #[test]
+    fn new_runtime_is_total_improvement() {
+        let r = RewardKind::NewRuntime.compute(10.0, 8.0, 6.0, 1.0, 1.0, 1.0);
+        assert!((r - 40.0).abs() < 1e-5); // (10-6)/10 = 40%
+    }
+
+    #[test]
+    fn combined_mixes_runtime_and_memory() {
+        let k = RewardKind::Combined { alpha: 0.5, beta: 0.5 };
+        let r = k.compute(10.0, 10.0, 8.0, 100.0, 100.0, 60.0);
+        // 0.5*20% + 0.5*40% = 30%.
+        assert!((r - 30.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn regressions_are_negative() {
+        let r = RewardKind::Incremental.compute(10.0, 8.0, 9.0, 1.0, 1.0, 1.0);
+        assert!(r < 0.0);
+    }
+
+    #[test]
+    fn presets_match_figure5() {
+        assert_eq!(
+            RewardKind::preset("r1").unwrap(),
+            RewardKind::Combined { alpha: 0.8, beta: 0.2 }
+        );
+        assert_eq!(RewardKind::preset("r5").unwrap(), RewardKind::Incremental);
+        assert!(RewardKind::preset("bogus").is_err());
+    }
+}

@@ -1,0 +1,170 @@
+//! Graph -> tensor encoding: the `graph_tuple` half of the observation.
+//!
+//! The GNN artifacts consume three tensors per graph (shapes fixed at AOT
+//! time, read from the manifest): node features `[N, F]`, adjacency
+//! `[N, N]` and a node mask `[N]`. Only *op* nodes are encoded — sources
+//! carry no information the op features (flops/bytes, which depend on the
+//! weight shapes) do not already include. Graphs larger than `N` ops are
+//! truncated in topological order (documented scaling decision, DESIGN.md).
+
+use std::collections::HashMap;
+
+use crate::cost::op_cost;
+use crate::graph::{Graph, NodeId, OpKind, TensorDesc};
+
+#[derive(Debug, Clone)]
+pub struct EncodedGraph {
+    /// Row-major `[n, f]`.
+    pub feats: Vec<f32>,
+    /// Row-major `[n, n]`, directed op->op edges.
+    pub adj: Vec<f32>,
+    /// `[n]`, 1.0 for live rows.
+    pub mask: Vec<f32>,
+    pub n: usize,
+    pub f: usize,
+}
+
+pub struct StateEncoder {
+    pub max_nodes: usize,
+    pub n_feats: usize,
+}
+
+impl StateEncoder {
+    pub fn new(max_nodes: usize, n_feats: usize) -> Self {
+        assert!(n_feats >= crate::graph::op::N_OP_CLASSES + 10, "feature width too small");
+        Self { max_nodes, n_feats }
+    }
+
+    pub fn encode(&self, g: &Graph) -> EncodedGraph {
+        let (n, f) = (self.max_nodes, self.n_feats);
+        let mut feats = vec![0.0f32; n * f];
+        let mut adj = vec![0.0f32; n * n];
+        let mut mask = vec![0.0f32; n];
+
+        let order = match g.topo_order() {
+            Ok(o) => o,
+            Err(_) => return EncodedGraph { feats, adj, mask, n, f },
+        };
+        let ops: Vec<NodeId> = order
+            .into_iter()
+            .filter(|id| !matches!(g.node(*id).op, OpKind::Input | OpKind::Weight))
+            .take(n)
+            .collect();
+        let row_of: HashMap<NodeId, usize> =
+            ops.iter().enumerate().map(|(i, &id)| (id, i)).collect();
+
+        let depths = g.depths();
+        let max_depth = depths.values().copied().max().unwrap_or(1).max(1) as f32;
+        let consumers = g.consumers();
+        let outputs: std::collections::HashSet<NodeId> = g.output_ids().into_iter().collect();
+
+        for (row, &id) in ops.iter().enumerate() {
+            mask[row] = 1.0;
+            let node = g.node(id);
+            let descs: Vec<&TensorDesc> = node
+                .inputs
+                .iter()
+                .filter_map(|p| g.out_desc(*p).ok())
+                .collect();
+            let cost = op_cost(&node.op, &descs, &node.outs);
+            let base = row * f;
+            // One-hot op class.
+            feats[base + node.op.class_index()] = 1.0;
+            let k = crate::graph::op::N_OP_CLASSES;
+            let out_elems: usize = node.outs.iter().map(|t| t.n_elems()).sum();
+            feats[base + k] = ((cost.flops + 1.0).ln() / 20.0) as f32;
+            feats[base + k + 1] = ((cost.bytes + 1.0).ln() / 20.0) as f32;
+            feats[base + k + 2] = (out_elems as f32 + 1.0).ln() / 15.0;
+            feats[base + k + 3] = depths.get(&id).copied().unwrap_or(0) as f32 / max_depth;
+            feats[base + k + 4] = node.inputs.len() as f32 / 6.0;
+            feats[base + k + 5] =
+                consumers.get(&id).map_or(0, |v| v.len()) as f32 / 6.0;
+            feats[base + k + 6] = if outputs.contains(&id) { 1.0 } else { 0.0 };
+            feats[base + k + 7] = cost.launches as f32;
+            feats[base + k + 8] = cost.efficiency as f32;
+            feats[base + k + 9] = node.outs.len() as f32 / 4.0;
+
+            // Directed edges from producing ops (weight/input edges dropped).
+            for p in &node.inputs {
+                if let Some(&src_row) = row_of.get(&p.node) {
+                    adj[src_row * n + row] = 1.0;
+                }
+            }
+        }
+        EncodedGraph { feats, adj, mask, n, f }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, PadMode};
+
+    fn enc() -> StateEncoder {
+        StateEncoder::new(320, 32)
+    }
+
+    #[test]
+    fn encode_small_graph() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 3, 8, 8]);
+        let c = b.conv(x, 4, 3, 1, PadMode::Same).unwrap();
+        let _ = b.relu(c).unwrap();
+        let g = b.finish();
+        let e = enc().encode(&g);
+        assert_eq!(e.mask.iter().sum::<f32>(), 2.0); // conv + relu
+        // conv -> relu edge present.
+        assert_eq!(e.adj[0 * 320 + 1], 1.0);
+        // class one-hots valid.
+        assert_eq!(e.feats[0 * 32 + crate::graph::OpKind::Relu.class_index()], 0.0);
+    }
+
+    #[test]
+    fn encoding_masks_beyond_live_nodes() {
+        let g = crate::zoo::squeezenet1_1();
+        let e = enc().encode(&g);
+        let live = e.mask.iter().filter(|&&m| m > 0.0).count();
+        assert_eq!(live, g.n_ops());
+        // Everything past the live rows is zero.
+        for row in live..e.n {
+            assert_eq!(e.mask[row], 0.0);
+            assert!(e.feats[row * e.f..(row + 1) * e.f].iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn zoo_graphs_fit_without_truncation() {
+        for (info, g) in crate::zoo::all() {
+            let e = enc().encode(&g);
+            let live = e.mask.iter().filter(|&&m| m > 0.0).count();
+            assert_eq!(live, g.n_ops(), "{} truncated", info.name);
+        }
+    }
+
+    #[test]
+    fn rewrite_changes_encoding() {
+        let lib = crate::xfer::library::standard_library();
+        let g = crate::zoo::bert_base();
+        let e1 = enc().encode(&g);
+        let rule = lib.get(lib.index_of("fuse_add_ln").unwrap()).unwrap();
+        let mut g2 = g.clone();
+        let loc = rule.find(&g2)[0].clone();
+        crate::xfer::apply_rule(&mut g2, rule, &loc).unwrap();
+        let e2 = enc().encode(&g2);
+        assert_ne!(e1.feats, e2.feats);
+    }
+
+    #[test]
+    fn adjacency_is_directed_and_acyclic_in_rows() {
+        let g = crate::zoo::resnet18();
+        let e = enc().encode(&g);
+        // Topological encoding: all edges go from lower row to higher row.
+        for src in 0..e.n {
+            for dst in 0..e.n {
+                if e.adj[src * e.n + dst] > 0.0 {
+                    assert!(src < dst, "back edge {src}->{dst}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,231 @@
+//! Figure reproductions: Fig. 5 (reward functions), Fig. 6 (runtime vs
+//! baselines), Fig. 7 (optimisation time), Fig. 8 (WM loss curves),
+//! Fig. 9 (dream rewards), Fig. 10 (transformation heatmap).
+
+use std::collections::HashMap;
+
+use crate::coordinator::Pipeline;
+use crate::cost::CostModel;
+use crate::csv_row;
+use crate::env::{Env, RewardKind};
+use crate::runtime::ParamStore;
+use crate::search::{greedy_optimise, taso_optimise, TasoConfig};
+use crate::util::csv::CsvWriter;
+use crate::util::stats::{ci95, mean, minmax_normalise};
+use crate::util::Rng;
+use crate::xfer::library::standard_library;
+
+use super::{eval_agent, train_model_based, ExperimentCtx};
+
+/// **Fig. 5**: model-free agent on BERT under reward functions R1–R5;
+/// normalised reward per training iteration.
+pub fn fig5(ctx: &ExperimentCtx) -> anyhow::Result<()> {
+    let pipe = Pipeline::new(ctx.engine)?;
+    let graph = crate::zoo::bert_base();
+    let rules = standard_library();
+    let presets = ["r1", "r2", "r3", "r4", "r5"];
+
+    let mut w = CsvWriter::create(ctx.out("fig5.csv"), &["reward_fn", "iteration", "reward", "reward_norm"])?;
+    println!("\nFig. 5: reward-function comparison (model-free, BERT)");
+    for preset in presets {
+        let mut cfg = ctx.cfg.clone();
+        cfg.env.reward = RewardKind::preset(preset)?;
+        let cost = CostModel::new(cfg.device);
+        let mut env = Env::new(graph.clone(), &rules, &cost, cfg.env.clone());
+        let gnn = ParamStore::init(ctx.engine, "gnn", cfg.seed as i32)?;
+        let mut ctrl = ParamStore::init(ctx.engine, "ctrl", cfg.seed as i32 + 10)?;
+        let mut rng = Rng::new(cfg.seed ^ preset.len() as u64);
+        let mut curve = Vec::with_capacity(cfg.free_iterations);
+        for _ in 0..cfg.free_iterations {
+            let (mean_reward, _) = pipe.model_free_iteration(
+                &gnn,
+                &mut ctrl,
+                &mut env,
+                cfg.free_episodes_per_iter,
+                &cfg.ppo,
+                &mut rng,
+            )?;
+            curve.push(mean_reward as f64);
+        }
+        let norm = minmax_normalise(&curve);
+        for (i, (&r, &n)) in curve.iter().zip(&norm).enumerate() {
+            csv_row!(w; preset, i, format!("{r:.4}"), format!("{n:.4}"))?;
+        }
+        println!(
+            "  {}: first {:.2} -> last {:.2} (mean {:.2})",
+            preset,
+            curve.first().unwrap_or(&0.0),
+            curve.last().unwrap_or(&0.0),
+            mean(&curve)
+        );
+    }
+    w.flush()
+}
+
+/// **Fig. 6**: relative runtime improvement per graph for TF-greedy, TASO,
+/// model-free RL and model-based RLFlow (mean ± 95% CI over `runs`).
+pub fn fig6(ctx: &ExperimentCtx, runs: usize) -> anyhow::Result<()> {
+    let pipe = Pipeline::new(ctx.engine)?;
+    let rules = standard_library();
+    let cost = CostModel::new(ctx.cfg.device);
+    let mut w = CsvWriter::create(
+        ctx.out("fig6.csv"),
+        &["graph", "method", "improvement_pct_mean", "ci95"],
+    )?;
+    println!("\nFig. 6: runtime improvement of optimised graphs (%)");
+    println!("{:<15} {:>10} {:>10} {:>12} {:>12}", "Graph", "TF", "TASO", "ModelFree", "RLFlow");
+    for (info, g) in crate::zoo::all() {
+        // Deterministic baselines.
+        let (_, tf_log) = greedy_optimise(&g, &rules, &cost, 50);
+        let (_, taso_log) = taso_optimise(&g, &rules, &cost, &TasoConfig::default());
+
+        // Model-free PPO agent trained in the real environment.
+        let mut free_scores = Vec::new();
+        {
+            let mut cfg = ctx.cfg.clone();
+            let gnn = ParamStore::init(ctx.engine, "gnn", cfg.seed as i32)?;
+            let mut ctrl = ParamStore::init(ctx.engine, "ctrl", cfg.seed as i32 + 20)?;
+            let mut rng = Rng::new(cfg.seed + 100);
+            let mut env = Env::new(g.clone(), &rules, &cost, cfg.env.clone());
+            for _ in 0..cfg.free_iterations {
+                pipe.model_free_iteration(&gnn, &mut ctrl, &mut env, cfg.free_episodes_per_iter, &cfg.ppo, &mut rng)?;
+            }
+            for run in 0..runs {
+                let mut rng = Rng::new(cfg.seed + 200 + run as u64);
+                let mut env = Env::new(g.clone(), &rules, &cost, cfg.env.clone());
+                let res = pipe.eval_real(&gnn, &ctrl, None, &mut env, cfg.eval_greedy, &mut rng)?;
+                free_scores.push(res.best_improvement_pct);
+            }
+            cfg.graph = info.name.to_string();
+        }
+
+        // Model-based RLFlow.
+        let agent = train_model_based(&pipe, &ctx.cfg, &g, ctx.cfg.seed)?;
+        let (rl_scores, _, _) = eval_agent(&pipe, &ctx.cfg, &agent, &g, runs, ctx.cfg.seed)?;
+
+        let rows = [
+            ("tensorflow", vec![tf_log.improvement_pct()]),
+            ("taso", vec![taso_log.improvement_pct()]),
+            ("model_free", free_scores),
+            ("rlflow", rl_scores),
+        ];
+        print!("{:<15}", info.name);
+        for (method, scores) in &rows {
+            let m = mean(scores);
+            let ci = ci95(scores);
+            print!(" {:>9.1}%", m);
+            csv_row!(w; info.name, method, format!("{m:.3}"), format!("{ci:.3}"))?;
+        }
+        println!();
+    }
+    w.flush()
+}
+
+/// **Fig. 7**: wall-clock time to produce the optimised graph — trained
+/// RLFlow agent rollout vs TASO search.
+pub fn fig7(ctx: &ExperimentCtx, runs: usize) -> anyhow::Result<()> {
+    let pipe = Pipeline::new(ctx.engine)?;
+    let rules = standard_library();
+    let cost = CostModel::new(ctx.cfg.device);
+    let mut w = CsvWriter::create(
+        ctx.out("fig7.csv"),
+        &["graph", "rlflow_s", "taso_s", "greedy_s"],
+    )?;
+    println!("\nFig. 7: optimisation time (s)");
+    println!("{:<15} {:>10} {:>10} {:>10}", "Graph", "RLFlow", "TASO", "Greedy");
+    for (info, g) in crate::zoo::all() {
+        let t0 = std::time::Instant::now();
+        let (_, taso_log) = taso_optimise(&g, &rules, &cost, &TasoConfig::default());
+        let taso_s = t0.elapsed().as_secs_f64();
+        let _ = taso_log;
+
+        let t0 = std::time::Instant::now();
+        let (_, _greedy_log) = greedy_optimise(&g, &rules, &cost, 50);
+        let greedy_s = t0.elapsed().as_secs_f64();
+
+        // RLFlow: agent rollout only (paper: "does not include the time
+        // needed to learn the world model, nor training the controller").
+        let agent = train_model_based(&pipe, &ctx.cfg, &g, ctx.cfg.seed)?;
+        let t0 = std::time::Instant::now();
+        let (_, _, _mean_step) = eval_agent(&pipe, &ctx.cfg, &agent, &g, runs, ctx.cfg.seed)?;
+        let rlflow_s = t0.elapsed().as_secs_f64() / runs as f64;
+
+        println!("{:<15} {:>10.3} {:>10.3} {:>10.3}", info.name, rlflow_s, taso_s, greedy_s);
+        csv_row!(w; info.name, format!("{rlflow_s:.4}"), format!("{taso_s:.4}"), format!("{greedy_s:.4}"))?;
+    }
+    w.flush()
+}
+
+/// **Fig. 8**: world-model log-likelihood loss during training, per graph.
+pub fn fig8(ctx: &ExperimentCtx) -> anyhow::Result<()> {
+    let pipe = Pipeline::new(ctx.engine)?;
+    let mut w = CsvWriter::create(
+        ctx.out("fig8.csv"),
+        &["graph", "step", "total", "nll", "reward_mse", "mask_bce", "done_bce"],
+    )?;
+    println!("\nFig. 8: world-model training loss per graph");
+    for (info, g) in crate::zoo::all() {
+        let agent = train_model_based(&pipe, &ctx.cfg, &g, ctx.cfg.seed)?;
+        for (i, l) in agent.wm_curve.iter().enumerate() {
+            csv_row!(w; info.name, i, format!("{:.5}", l.total), format!("{:.5}", l.nll), format!("{:.5}", l.reward_mse), format!("{:.5}", l.mask_bce), format!("{:.5}", l.done_bce))?;
+        }
+        let first = agent.wm_curve.first().map(|l| l.total).unwrap_or(0.0);
+        let last = agent.wm_curve.last().map(|l| l.total).unwrap_or(0.0);
+        println!("  {:<15} loss {:.3} -> {:.3} over {} steps", info.name, first, last, agent.wm_curve.len());
+    }
+    w.flush()
+}
+
+/// **Fig. 9**: predicted (dream) reward per epoch while training the
+/// controller inside the world model, min-max normalised per graph.
+pub fn fig9(ctx: &ExperimentCtx) -> anyhow::Result<()> {
+    let pipe = Pipeline::new(ctx.engine)?;
+    let mut w = CsvWriter::create(ctx.out("fig9.csv"), &["graph", "epoch", "reward", "reward_norm"])?;
+    println!("\nFig. 9: predicted reward inside the dream per graph");
+    for (info, g) in crate::zoo::all() {
+        let agent = train_model_based(&pipe, &ctx.cfg, &g, ctx.cfg.seed)?;
+        let curve: Vec<f64> = agent.dream_curve.iter().map(|&r| r as f64).collect();
+        let norm = minmax_normalise(&curve);
+        for (i, (&r, &nrm)) in curve.iter().zip(&norm).enumerate() {
+            csv_row!(w; info.name, i, format!("{r:.4}"), format!("{nrm:.4}"))?;
+        }
+        println!(
+            "  {:<15} dream reward {:.2} -> {:.2}",
+            info.name,
+            curve.first().unwrap_or(&0.0),
+            curve.last().unwrap_or(&0.0)
+        );
+    }
+    w.flush()
+}
+
+/// **Fig. 10**: heatmap of transformations applied by the trained agent
+/// during evaluation (rule name x graph -> count).
+pub fn fig10(ctx: &ExperimentCtx) -> anyhow::Result<()> {
+    let pipe = Pipeline::new(ctx.engine)?;
+    let rules = standard_library();
+    let mut w = CsvWriter::create(ctx.out("fig10.csv"), &["graph", "rule", "count"])?;
+    println!("\nFig. 10: transformations applied by the trained controller");
+    let mut any_counts: HashMap<&'static str, usize> = HashMap::new();
+    for (info, g) in crate::zoo::all() {
+        let agent = train_model_based(&pipe, &ctx.cfg, &g, ctx.cfg.seed)?;
+        let (_, history, _) = eval_agent(&pipe, &ctx.cfg, &agent, &g, 3, ctx.cfg.seed)?;
+        let mut counts: HashMap<usize, usize> = HashMap::new();
+        for (xfer, _) in history {
+            *counts.entry(xfer).or_default() += 1;
+        }
+        let mut named: Vec<(&'static str, usize)> = counts
+            .into_iter()
+            .filter_map(|(x, c)| rules.get(x).map(|r| (r.name(), c)))
+            .collect();
+        named.sort_by(|a, b| b.1.cmp(&a.1));
+        print!("  {:<15}", info.name);
+        for (name, c) in &named {
+            print!(" {}x{}", name, c);
+            *any_counts.entry(name).or_default() += c;
+            csv_row!(w; info.name, name, c)?;
+        }
+        println!();
+    }
+    w.flush()
+}

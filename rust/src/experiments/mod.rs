@@ -1,0 +1,167 @@
+//! Experiment drivers: one per table and figure in the paper's evaluation
+//! (§4). Each regenerates the corresponding result as a CSV under
+//! `results/` plus a human-readable table on stdout — the DESIGN.md
+//! experiment index maps each ID to the modules it exercises.
+
+pub mod figures;
+pub mod suite;
+pub mod tables;
+
+use std::path::PathBuf;
+
+use crate::agent::Episode;
+use crate::config::RunConfig;
+use crate::coordinator::{collect_random_parallel, Pipeline};
+use crate::cost::CostModel;
+use crate::env::Env;
+use crate::graph::Graph;
+use crate::runtime::{Engine, ParamStore};
+use crate::util::Rng;
+use crate::wm::WmLosses;
+
+pub struct ExperimentCtx<'e> {
+    pub engine: &'e Engine,
+    pub cfg: RunConfig,
+    pub out_dir: PathBuf,
+}
+
+impl<'e> ExperimentCtx<'e> {
+    pub fn new(engine: &'e Engine, cfg: RunConfig, out_dir: impl Into<PathBuf>) -> Self {
+        let out_dir = out_dir.into();
+        let _ = std::fs::create_dir_all(&out_dir);
+        Self { engine, cfg, out_dir }
+    }
+
+    pub fn out(&self, file: &str) -> PathBuf {
+        self.out_dir.join(file)
+    }
+}
+
+/// Everything the model-based training pipeline produces for one graph.
+pub struct TrainedAgent {
+    pub gnn: ParamStore,
+    pub wm: ParamStore,
+    pub ctrl: ParamStore,
+    pub ae_losses: Vec<f32>,
+    pub wm_curve: Vec<WmLosses>,
+    pub dream_curve: Vec<f32>,
+    pub episodes: Vec<Episode>,
+    /// Wall-clock seconds spent in each stage.
+    pub stage_seconds: Vec<(&'static str, f64)>,
+}
+
+/// Run the full model-based pipeline (collect -> AE -> encode -> WM ->
+/// dream controller) on one graph. The shared engine of Fig. 6/8/9/10 and
+/// Tables 2/3.
+pub fn train_model_based(
+    pipe: &Pipeline,
+    cfg: &RunConfig,
+    graph: &Graph,
+    seed: u64,
+) -> anyhow::Result<TrainedAgent> {
+    let mut rng = Rng::new(seed);
+    let mut stage_seconds = Vec::new();
+    let timed = |stage: &'static str, out: &mut Vec<(&'static str, f64)>, t0: std::time::Instant| {
+        out.push((stage, t0.elapsed().as_secs_f64()));
+    };
+
+    let t0 = std::time::Instant::now();
+    let mut episodes = collect_random_parallel(
+        graph,
+        &cfg.env,
+        cfg.device,
+        (pipe.encoder.max_nodes, pipe.encoder.n_feats),
+        pipe.dims.x1,
+        cfg.collect_episodes,
+        cfg.collect_noop_prob,
+        cfg.collect_workers,
+        seed,
+    );
+    timed("collect", &mut stage_seconds, t0);
+
+    let t0 = std::time::Instant::now();
+    let mut gnn = ParamStore::init(pipe.engine, "gnn", seed as i32)?;
+    let ae_losses = pipe.train_gnn_ae(&mut gnn, &episodes, cfg.ae_steps, cfg.ae_lr, &mut rng)?;
+    timed("gnn_ae", &mut stage_seconds, t0);
+
+    let t0 = std::time::Instant::now();
+    pipe.encode_episodes(&gnn, &mut episodes)?;
+    timed("encode", &mut stage_seconds, t0);
+
+    let t0 = std::time::Instant::now();
+    let mut wm = ParamStore::init(pipe.engine, "wm", seed as i32 + 1)?;
+    let wm_curve = pipe.train_wm(&mut wm, &episodes, &cfg.wm, &mut rng)?;
+    timed("wm", &mut stage_seconds, t0);
+
+    let t0 = std::time::Instant::now();
+    let mut ctrl = ParamStore::init(pipe.engine, "ctrl", seed as i32 + 2)?;
+    let dream_curve = pipe.train_controller_dream(
+        &mut ctrl,
+        &wm,
+        &episodes,
+        cfg.dream_epochs,
+        cfg.dream_horizon,
+        cfg.temperature,
+        cfg.wm.reward_scale,
+        &cfg.ppo,
+        &mut rng,
+    )?;
+    timed("dream_ctrl", &mut stage_seconds, t0);
+
+    Ok(TrainedAgent { gnn, wm, ctrl, ae_losses, wm_curve, dream_curve, episodes, stage_seconds })
+}
+
+/// Evaluate a trained agent `runs` times on a fresh environment; returns
+/// per-run best improvements (%) and the merged action history.
+pub fn eval_agent(
+    pipe: &Pipeline,
+    cfg: &RunConfig,
+    agent: &TrainedAgent,
+    graph: &Graph,
+    runs: usize,
+    seed: u64,
+) -> anyhow::Result<(Vec<f64>, Vec<(usize, usize)>, f64)> {
+    let rules = crate::xfer::library::standard_library();
+    let cost = CostModel::new(cfg.device);
+    let mut improvements = Vec::with_capacity(runs);
+    let mut history = Vec::new();
+    let mut step_s = Vec::new();
+    for run in 0..runs {
+        let mut rng = Rng::new(seed ^ (run as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15));
+        let mut env = Env::new(graph.clone(), &rules, &cost, cfg.env.clone());
+        let res = pipe.eval_real(&agent.gnn, &agent.ctrl, Some(&agent.wm), &mut env, cfg.eval_greedy, &mut rng)?;
+        improvements.push(res.best_improvement_pct);
+        history.extend(res.history);
+        step_s.push(res.mean_step_s);
+    }
+    let mean_step = step_s.iter().sum::<f64>() / step_s.len().max(1) as f64;
+    Ok((improvements, history, mean_step))
+}
+
+/// Dispatch an experiment by paper id.
+pub fn run(ctx: &ExperimentCtx, id: &str, runs: usize) -> anyhow::Result<()> {
+    match id {
+        "table1" => tables::table1(ctx),
+        "table2" => tables::table2(ctx, runs),
+        "table3" => tables::table3(ctx, runs),
+        "fig5" => figures::fig5(ctx),
+        "fig6" => figures::fig6(ctx, runs),
+        "fig7" => figures::fig7(ctx, runs),
+        "fig8" => figures::fig8(ctx),
+        "fig9" => figures::fig9(ctx),
+        "fig10" => figures::fig10(ctx),
+        "suite" => suite::suite(ctx, runs),
+        "table3shared" => suite::table3_shared(
+            ctx,
+            runs,
+            &[0.1, 0.5, 1.0, 1.5, 2.0, 3.0],
+        ),
+        "all" => {
+            for id in ["table1", "fig5", "fig8", "fig9", "fig10", "fig6", "fig7", "table2", "table3"] {
+                run(ctx, id, runs)?;
+            }
+            Ok(())
+        }
+        _ => anyhow::bail!("unknown experiment '{id}' (table1|table2|table3|fig5..fig10|all)"),
+    }
+}

@@ -1,0 +1,224 @@
+//! Consolidated experiment suite: trains the model-based agent ONCE per
+//! graph and emits every result that depends on it — Fig. 6 (runtime vs
+//! baselines), Fig. 8 (WM loss), Fig. 9 (dream reward), Fig. 10
+//! (transformation heatmap) and Table 2 (time/memory improvement) — plus
+//! the deterministic baselines. On a single-core box this is ~4x cheaper
+//! than running the per-figure drivers separately.
+
+use std::collections::HashMap;
+
+use crate::coordinator::Pipeline;
+use crate::cost::CostModel;
+use crate::csv_row;
+use crate::env::Env;
+use crate::runtime::ParamStore;
+use crate::search::{greedy_optimise, taso_optimise, TasoConfig};
+use crate::util::csv::CsvWriter;
+use crate::util::stats::{ci95, mean, minmax_normalise};
+use crate::util::Rng;
+use crate::xfer::library::standard_library;
+
+use super::{eval_agent, train_model_based, ExperimentCtx};
+
+pub fn suite(ctx: &ExperimentCtx, runs: usize) -> anyhow::Result<()> {
+    let pipe = Pipeline::new(ctx.engine)?;
+    let rules = standard_library();
+    let cost = CostModel::new(ctx.cfg.device);
+
+    let mut w6 = CsvWriter::create(ctx.out("fig6.csv"), &["graph", "method", "improvement_pct_mean", "ci95"])?;
+    let mut w8 = CsvWriter::create(
+        ctx.out("fig8.csv"),
+        &["graph", "step", "total", "nll", "reward_mse", "mask_bce", "done_bce"],
+    )?;
+    let mut w9 = CsvWriter::create(ctx.out("fig9.csv"), &["graph", "epoch", "reward", "reward_norm"])?;
+    let mut w10 = CsvWriter::create(ctx.out("fig10.csv"), &["graph", "rule", "count"])?;
+    let mut w2 = CsvWriter::create(
+        ctx.out("table2.csv"),
+        &["graph", "tf_ms", "tf_gib", "rlflow_time_impr_pct", "rlflow_mem_impr_pct"],
+    )?;
+    let mut w7 = CsvWriter::create(ctx.out("fig7.csv"), &["graph", "rlflow_s", "taso_s", "greedy_s"])?;
+
+    println!("\n==== consolidated suite: fig6/7/8/9/10 + table2 ====");
+    // `--graph <name>` (or -s graph=) restricts the suite to one graph so
+    // long runs can be chunked into separate processes; "all"/"bert"
+    // default config runs everything when unfiltered via graph=all.
+    let filter = ctx.cfg.graph.to_lowercase();
+    for (info, g) in crate::zoo::all() {
+        if filter != "all" && !info.name.to_lowercase().contains(&filter) {
+            continue;
+        }
+        println!("\n-- {} --", info.name);
+        // Deterministic baselines (also Fig. 7 timings).
+        let t0 = std::time::Instant::now();
+        let (tf_graph, tf_log) = greedy_optimise(&g, &rules, &cost, 60);
+        let greedy_s = t0.elapsed().as_secs_f64();
+        let t0 = std::time::Instant::now();
+        let (_, taso_log) = taso_optimise(&g, &rules, &cost, &TasoConfig::default());
+        let taso_s = t0.elapsed().as_secs_f64();
+
+        // One model-based training run.
+        let agent = train_model_based(&pipe, &ctx.cfg, &g, ctx.cfg.seed)?;
+        for (stage, secs) in &agent.stage_seconds {
+            println!("   {:<12} {:>6.1}s", stage, secs);
+        }
+
+        // Fig. 8 rows.
+        for (i, l) in agent.wm_curve.iter().enumerate() {
+            csv_row!(w8; info.name, i, format!("{:.5}", l.total), format!("{:.5}", l.nll), format!("{:.5}", l.reward_mse), format!("{:.5}", l.mask_bce), format!("{:.5}", l.done_bce))?;
+        }
+        // Fig. 9 rows.
+        let curve: Vec<f64> = agent.dream_curve.iter().map(|&r| r as f64).collect();
+        let norm = minmax_normalise(&curve);
+        for (i, (&r, &nrm)) in curve.iter().zip(&norm).enumerate() {
+            csv_row!(w9; info.name, i, format!("{r:.4}"), format!("{nrm:.4}"))?;
+        }
+
+        // Evaluation (Fig. 6 RLFlow bar + Fig. 10 history + Fig. 7 timing).
+        let t0 = std::time::Instant::now();
+        let (rl_scores, history, _) = eval_agent(&pipe, &ctx.cfg, &agent, &g, runs, ctx.cfg.seed)?;
+        let rlflow_s = t0.elapsed().as_secs_f64() / runs as f64;
+
+        // Model-free baseline (reduced iterations from the config).
+        let mut free_scores = Vec::new();
+        {
+            let gnn = &agent.gnn; // share the trained encoder
+            let mut ctrl = ParamStore::init(ctx.engine, "ctrl", ctx.cfg.seed as i32 + 77)?;
+            let mut rng = Rng::new(ctx.cfg.seed + 500);
+            let mut env = Env::new(g.clone(), &rules, &cost, ctx.cfg.env.clone());
+            for _ in 0..ctx.cfg.free_iterations {
+                pipe.model_free_iteration(gnn, &mut ctrl, &mut env, ctx.cfg.free_episodes_per_iter, &ctx.cfg.ppo, &mut rng)?;
+            }
+            for run in 0..runs {
+                let mut rng = Rng::new(ctx.cfg.seed + 600 + run as u64);
+                let mut env = Env::new(g.clone(), &rules, &cost, ctx.cfg.env.clone());
+                let res = pipe.eval_real(gnn, &ctrl, None, &mut env, ctx.cfg.eval_greedy, &mut rng)?;
+                free_scores.push(res.best_improvement_pct);
+            }
+        }
+
+        // Fig. 6 rows + console table.
+        let rows = [
+            ("tensorflow", vec![tf_log.improvement_pct()]),
+            ("taso", vec![taso_log.improvement_pct()]),
+            ("model_free", free_scores),
+            ("rlflow", rl_scores.clone()),
+        ];
+        print!("   fig6:");
+        for (method, scores) in &rows {
+            let m = mean(scores);
+            print!(" {}={:.1}%", method, m);
+            csv_row!(w6; info.name, method, format!("{m:.3}"), format!("{:.3}", ci95(scores)))?;
+        }
+        println!();
+
+        // Fig. 7 row.
+        csv_row!(w7; info.name, format!("{rlflow_s:.4}"), format!("{taso_s:.4}"), format!("{greedy_s:.4}"))?;
+        println!("   fig7: rlflow {:.2}s | taso {:.2}s | greedy {:.2}s", rlflow_s, taso_s, greedy_s);
+
+        // Fig. 10 rows.
+        let mut counts: HashMap<usize, usize> = HashMap::new();
+        for (xfer, _) in history {
+            *counts.entry(xfer).or_default() += 1;
+        }
+        let mut named: Vec<(&'static str, usize)> = counts
+            .into_iter()
+            .filter_map(|(x, c)| rules.get(x).map(|r| (r.name(), c)))
+            .collect();
+        named.sort_by(|a, b| b.1.cmp(&a.1));
+        for (name, c) in &named {
+            csv_row!(w10; info.name, name, c)?;
+        }
+        println!("   fig10: {:?}", &named[..named.len().min(6)]);
+
+        // Table 2 row: improvements vs the TF-optimised baseline.
+        let tf_ms = cost.graph_runtime_ms(&tf_graph);
+        let tf_gib = cost.graph_memory_gib(&tf_graph);
+        let raw_ms = cost.graph_runtime_ms(&g);
+        let best = rl_scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let rl_ms = raw_ms * (1.0 - best / 100.0);
+        let t_impr = 100.0 * (tf_ms - rl_ms) / tf_ms;
+        // Memory via the best evaluated graph.
+        let mut rng = Rng::new(ctx.cfg.seed);
+        let mut env = Env::new(g.clone(), &rules, &cost, ctx.cfg.env.clone());
+        let res = pipe.eval_real(&agent.gnn, &agent.ctrl, Some(&agent.wm), &mut env, true, &mut rng)?;
+        let rl_gib = res
+            .best_graph
+            .as_ref()
+            .map(|bg| cost.graph_memory_gib(bg))
+            .unwrap_or(tf_gib);
+        let m_impr = 100.0 * (tf_gib - rl_gib) / tf_gib;
+        println!("   table2: tf {tf_ms:.2}ms/{tf_gib:.3}GiB, rlflow impr {t_impr:.1}% time / {m_impr:.1}% mem");
+        csv_row!(w2; info.name, format!("{tf_ms:.4}"), format!("{tf_gib:.5}"), format!("{t_impr:.2}"), format!("{m_impr:.2}"))?;
+
+        for w in [&mut w6, &mut w7, &mut w8, &mut w9, &mut w10, &mut w2] {
+            w.flush()?;
+        }
+    }
+    Ok(())
+}
+
+/// Temperature sweep sharing one collected dataset + one trained world
+/// model across all temperatures (only the controller and its evaluation
+/// depend on tau — retraining the WM per temperature would change nothing
+/// but cost, cf. §4.8).
+pub fn table3_shared(ctx: &ExperimentCtx, runs: usize, temps: &[f32]) -> anyhow::Result<()> {
+    let pipe = Pipeline::new(ctx.engine)?;
+    let graph = crate::zoo::bert_base();
+    let rules = standard_library();
+    let cost = CostModel::new(ctx.cfg.device);
+    let mut rng = Rng::new(ctx.cfg.seed);
+
+    // Shared stages 1-4.
+    let mut episodes = crate::coordinator::collect_random_parallel(
+        &graph,
+        &ctx.cfg.env,
+        ctx.cfg.device,
+        (pipe.encoder.max_nodes, pipe.encoder.n_feats),
+        pipe.dims.x1,
+        ctx.cfg.collect_episodes,
+        ctx.cfg.collect_noop_prob,
+        ctx.cfg.collect_workers,
+        ctx.cfg.seed,
+    );
+    let mut gnn = ParamStore::init(ctx.engine, "gnn", ctx.cfg.seed as i32)?;
+    pipe.train_gnn_ae(&mut gnn, &episodes, ctx.cfg.ae_steps, ctx.cfg.ae_lr, &mut rng)?;
+    pipe.encode_episodes(&gnn, &mut episodes)?;
+    let mut wm = ParamStore::init(ctx.engine, "wm", ctx.cfg.seed as i32 + 1)?;
+    pipe.train_wm(&mut wm, &episodes, &ctx.cfg.wm, &mut rng)?;
+
+    let mut w = CsvWriter::create(
+        ctx.out("table3.csv"),
+        &["temperature", "wm_score_mean", "wm_score_std", "real_score_mean", "real_score_std"],
+    )?;
+    println!("\nTable 3: temperature sweep (BERT, shared world model)");
+    for &tau in temps {
+        let mut ctrl = ParamStore::init(ctx.engine, "ctrl", ctx.cfg.seed as i32 + 2)?;
+        let dream_curve = pipe.train_controller_dream(
+            &mut ctrl,
+            &wm,
+            &episodes,
+            ctx.cfg.dream_epochs,
+            ctx.cfg.dream_horizon,
+            tau,
+            ctx.cfg.wm.reward_scale,
+            &ctx.cfg.ppo,
+            &mut rng,
+        )?;
+        let tail = &dream_curve[dream_curve.len().saturating_sub(5)..];
+        let wm_scores: Vec<f64> = tail.iter().map(|&r| r as f64).collect();
+        let (wm_mean, wm_std) = crate::util::stats::mean_std(&wm_scores);
+
+        let mut real_scores = Vec::new();
+        for run in 0..runs {
+            let mut erng = Rng::new(ctx.cfg.seed ^ (run as u64 + 1) ^ (tau.to_bits() as u64));
+            let mut env = Env::new(graph.clone(), &rules, &cost, ctx.cfg.env.clone());
+            let res = pipe.eval_real(&gnn, &ctrl, Some(&wm), &mut env, ctx.cfg.eval_greedy, &mut erng)?;
+            real_scores.push(res.best_improvement_pct);
+        }
+        let (real_mean, real_std) = crate::util::stats::mean_std(&real_scores);
+        println!("  tau {:>5.2}: WM {:>6.2}% ± {:>4.2} | real {:>6.2}% ± {:>4.2}", tau, wm_mean, wm_std, real_mean, real_std);
+        csv_row!(w; tau, format!("{wm_mean:.3}"), format!("{wm_std:.3}"), format!("{real_mean:.3}"), format!("{real_std:.3}"))?;
+        w.flush()?;
+    }
+    Ok(())
+}

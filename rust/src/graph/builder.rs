@@ -1,0 +1,249 @@
+//! Ergonomic construction layer used by the model zoo and rule patterns.
+//!
+//! Wraps a [`Graph`] with chainable helpers (`conv_bn_relu`, `linear`,
+//! `attention`, ...) so the six evaluation models read like their paper
+//! definitions. All helpers panic-free: errors propagate via `anyhow`.
+
+use super::graph::{Graph, PortRef};
+use super::op::{Activation, OpKind, PadMode};
+use super::tensor::TensorDesc;
+
+pub struct GraphBuilder {
+    pub g: Graph,
+}
+
+impl Default for GraphBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl GraphBuilder {
+    pub fn new() -> Self {
+        Self { g: Graph::new() }
+    }
+
+    pub fn finish(self) -> Graph {
+        self.g
+    }
+
+    pub fn input(&mut self, shape: &[usize]) -> PortRef {
+        PortRef::of(self.g.add_source(OpKind::Input, TensorDesc::f32(shape)))
+    }
+
+    pub fn weight(&mut self, shape: &[usize]) -> PortRef {
+        PortRef::of(self.g.add_source(OpKind::Weight, TensorDesc::f32(shape)))
+    }
+
+    pub fn op(&mut self, op: OpKind, inputs: &[PortRef]) -> anyhow::Result<PortRef> {
+        Ok(PortRef::of(self.g.add(op, inputs)?))
+    }
+
+    pub fn op_multi(&mut self, op: OpKind, inputs: &[PortRef]) -> anyhow::Result<Vec<PortRef>> {
+        let id = self.g.add(op, inputs)?;
+        let n = self.g.node(id).outs.len();
+        Ok((0..n).map(|p| PortRef { node: id, port: p as u16 }).collect())
+    }
+
+    /// Convolution with a fresh weight of shape [co, ci, k, k].
+    pub fn conv(
+        &mut self,
+        x: PortRef,
+        co: usize,
+        k: usize,
+        stride: usize,
+        pad: PadMode,
+    ) -> anyhow::Result<PortRef> {
+        let ci = self.channels(x)?;
+        let w = self.weight(&[co, ci, k, k]);
+        self.op(OpKind::Conv2d { stride, pad, act: Activation::None }, &[x, w])
+    }
+
+    /// conv -> batchnorm -> relu, the CNN zoo workhorse. BN kept as an
+    /// explicit node so fusion substitutions have something to fuse.
+    pub fn conv_bn_relu(
+        &mut self,
+        x: PortRef,
+        co: usize,
+        k: usize,
+        stride: usize,
+        pad: PadMode,
+    ) -> anyhow::Result<PortRef> {
+        let c = self.conv(x, co, k, stride, pad)?;
+        let b = self.batchnorm(c)?;
+        self.op(OpKind::Relu, &[b])
+    }
+
+    pub fn batchnorm(&mut self, x: PortRef) -> anyhow::Result<PortRef> {
+        let c = self.channels(x)?;
+        let scale = self.weight(&[c]);
+        let shift = self.weight(&[c]);
+        self.op(OpKind::BatchNorm, &[x, scale, shift])
+    }
+
+    /// Dense layer with fresh weight + bias: x @ W + b.
+    pub fn linear(&mut self, x: PortRef, d_out: usize, act: Activation) -> anyhow::Result<PortRef> {
+        let d_in = *self.shape(x)?.last().unwrap();
+        let w = self.weight(&[d_in, d_out]);
+        let b = self.weight(&[d_out]);
+        self.op(OpKind::Linear { act }, &[x, w, b])
+    }
+
+    pub fn layernorm(&mut self, x: PortRef) -> anyhow::Result<PortRef> {
+        let d = *self.shape(x)?.last().unwrap();
+        let gamma = self.weight(&[d]);
+        let beta = self.weight(&[d]);
+        self.op(OpKind::LayerNorm, &[x, gamma, beta])
+    }
+
+    pub fn add(&mut self, a: PortRef, b: PortRef) -> anyhow::Result<PortRef> {
+        self.op(OpKind::Add, &[a, b])
+    }
+
+    pub fn relu(&mut self, x: PortRef) -> anyhow::Result<PortRef> {
+        self.op(OpKind::Relu, &[x])
+    }
+
+    pub fn gelu(&mut self, x: PortRef) -> anyhow::Result<PortRef> {
+        self.op(OpKind::Gelu, &[x])
+    }
+
+    pub fn maxpool(&mut self, x: PortRef, k: usize, stride: usize) -> anyhow::Result<PortRef> {
+        self.op(OpKind::MaxPool { k, stride, pad: PadMode::Same }, &[x])
+    }
+
+    pub fn avgpool(&mut self, x: PortRef, k: usize, stride: usize) -> anyhow::Result<PortRef> {
+        self.op(OpKind::AvgPool { k, stride, pad: PadMode::Same }, &[x])
+    }
+
+    pub fn concat(&mut self, axis: usize, xs: &[PortRef]) -> anyhow::Result<PortRef> {
+        self.op(OpKind::Concat { axis }, xs)
+    }
+
+    pub fn reshape(&mut self, x: PortRef, shape: &[usize]) -> anyhow::Result<PortRef> {
+        self.op(OpKind::Reshape { shape: shape.to_vec() }, &[x])
+    }
+
+    pub fn transpose(&mut self, x: PortRef, perm: &[usize]) -> anyhow::Result<PortRef> {
+        self.op(OpKind::Transpose { perm: perm.to_vec() }, &[x])
+    }
+
+    pub fn softmax(&mut self, x: PortRef, axis: usize) -> anyhow::Result<PortRef> {
+        self.op(OpKind::Softmax { axis }, &[x])
+    }
+
+    /// Multi-head self-attention block over [B, S, D] built from primitive
+    /// ops (separate Q/K/V projections, scaled dot-product, output proj) —
+    /// exactly the structure RLFlow's transformer rules target (§4.10).
+    pub fn self_attention(
+        &mut self,
+        x: PortRef,
+        heads: usize,
+    ) -> anyhow::Result<PortRef> {
+        let shape = self.shape(x)?.clone();
+        let (b, s, d) = (shape[0], shape[1], shape[2]);
+        anyhow::ensure!(d % heads == 0, "attention: dims {} not divisible by heads {}", d, heads);
+        let dh = d / heads;
+
+        let q = self.linear(x, d, Activation::None)?;
+        let k = self.linear(x, d, Activation::None)?;
+        let v = self.linear(x, d, Activation::None)?;
+
+        // [B,S,D] -> [B,H,S,dh]
+        let split = |bld: &mut Self, t: PortRef| -> anyhow::Result<PortRef> {
+            let r = bld.reshape(t, &[b, s, heads, dh])?;
+            bld.transpose(r, &[0, 2, 1, 3])
+        };
+        let qh = split(self, q)?;
+        let kh = split(self, k)?;
+        let vh = split(self, v)?;
+
+        let scores = self.op(
+            OpKind::MatMul { trans_a: false, trans_b: true, act: Activation::None },
+            &[qh, kh],
+        )?; // [B,H,S,S]
+        let scaled = self.op(
+            OpKind::Scale { factor: 1.0 / (dh as f32).sqrt() },
+            &[scores],
+        )?;
+        let probs = self.softmax(scaled, 3)?;
+        let ctx = self.op(
+            OpKind::MatMul { trans_a: false, trans_b: false, act: Activation::None },
+            &[probs, vh],
+        )?; // [B,H,S,dh]
+        let merged = self.transpose(ctx, &[0, 2, 1, 3])?;
+        let flat = self.reshape(merged, &[b, s, d])?;
+        self.linear(flat, d, Activation::None)
+    }
+
+    /// Transformer encoder block (Fig. 11): MHA + residual add + layernorm,
+    /// then FFN + residual add + layernorm. Post-LN variant as in BERT.
+    pub fn transformer_encoder(
+        &mut self,
+        x: PortRef,
+        heads: usize,
+        ffn_mult: usize,
+    ) -> anyhow::Result<PortRef> {
+        let d = *self.shape(x)?.last().unwrap();
+        let attn = self.self_attention(x, heads)?;
+        let res1 = self.add(x, attn)?;
+        let ln1 = self.layernorm(res1)?;
+        let ff1 = self.linear(ln1, d * ffn_mult, Activation::Gelu)?;
+        let ff2 = self.linear(ff1, d, Activation::None)?;
+        let res2 = self.add(ln1, ff2)?;
+        self.layernorm(res2)
+    }
+
+    // ---- introspection ------------------------------------------------------
+
+    pub fn shape(&self, p: PortRef) -> anyhow::Result<&Vec<usize>> {
+        Ok(&self.g.out_desc(p)?.shape)
+    }
+
+    fn channels(&self, x: PortRef) -> anyhow::Result<usize> {
+        let s = self.shape(x)?;
+        anyhow::ensure!(s.len() == 4, "expected NCHW, got rank {}", s.len());
+        Ok(s[1])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_bn_relu_chain() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 3, 32, 32]);
+        let y = b.conv_bn_relu(x, 16, 3, 1, PadMode::Same).unwrap();
+        assert_eq!(b.shape(y).unwrap(), &vec![1, 16, 32, 32]);
+        b.finish().validate().unwrap();
+    }
+
+    #[test]
+    fn attention_preserves_shape() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[2, 16, 64]);
+        let y = b.self_attention(x, 4).unwrap();
+        assert_eq!(b.shape(y).unwrap(), &vec![2, 16, 64]);
+        b.finish().validate().unwrap();
+    }
+
+    #[test]
+    fn encoder_block_valid() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 8, 32]);
+        let y = b.transformer_encoder(x, 4, 2).unwrap();
+        assert_eq!(b.shape(y).unwrap(), &vec![1, 8, 32]);
+        let g = b.finish();
+        g.validate().unwrap();
+        assert!(g.n_ops() > 15);
+    }
+
+    #[test]
+    fn attention_rejects_bad_heads() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 8, 30]);
+        assert!(b.self_attention(x, 4).is_err());
+    }
+}

@@ -1,0 +1,411 @@
+//! The computation-graph DAG.
+//!
+//! Nodes live in an arena indexed by [`NodeId`]; removal tombstones the slot
+//! (`dead = true`) so ids held by substitution matches stay valid for the
+//! lifetime of one environment step. [`Graph::compact`] renumbers when a
+//! fresh canonical copy is needed (hashing, serialisation, episodes reset).
+
+use std::collections::HashMap;
+
+
+use super::op::OpKind;
+use super::shapes;
+use super::tensor::TensorDesc;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+impl NodeId {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// A reference to one output port of a node (multi-output ops: `Split`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PortRef {
+    pub node: NodeId,
+    pub port: u16,
+}
+
+impl PortRef {
+    pub fn of(node: NodeId) -> Self {
+        Self { node, port: 0 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub op: OpKind,
+    pub inputs: Vec<PortRef>,
+    pub outs: Vec<TensorDesc>,
+    pub dead: bool,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub(crate) nodes: Vec<Node>,
+}
+
+impl Graph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    // ---- construction -----------------------------------------------------
+
+    /// Add a source node (Input / Weight) with an explicit descriptor.
+    pub fn add_source(&mut self, op: OpKind, desc: TensorDesc) -> NodeId {
+        debug_assert!(matches!(op, OpKind::Input | OpKind::Weight));
+        self.push(Node { op, inputs: vec![], outs: vec![desc], dead: false })
+    }
+
+    /// Add an operator node; output shapes are inferred and validated.
+    pub fn add(&mut self, op: OpKind, inputs: &[PortRef]) -> anyhow::Result<NodeId> {
+        let descs: Vec<&TensorDesc> = inputs
+            .iter()
+            .map(|p| self.out_desc(*p))
+            .collect::<anyhow::Result<_>>()?;
+        let outs = shapes::infer(&op, &descs)?;
+        Ok(self.push(Node { op, inputs: inputs.to_vec(), outs, dead: false }))
+    }
+
+    fn push(&mut self, node: Node) -> NodeId {
+        let id = NodeId(self.nodes.len() as u32);
+        self.nodes.push(node);
+        id
+    }
+
+    // ---- access -------------------------------------------------------------
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.index()]
+    }
+
+    pub fn node_mut(&mut self, id: NodeId) -> &mut Node {
+        &mut self.nodes[id.index()]
+    }
+
+    pub fn out_desc(&self, p: PortRef) -> anyhow::Result<&TensorDesc> {
+        let n = self
+            .nodes
+            .get(p.node.index())
+            .ok_or_else(|| anyhow::anyhow!("dangling node id {:?}", p.node))?;
+        anyhow::ensure!(!n.dead, "reference to dead node {:?}", p.node);
+        n.outs
+            .get(p.port as usize)
+            .ok_or_else(|| anyhow::anyhow!("port {} out of range for {:?}", p.port, p.node))
+    }
+
+    /// Iterate live node ids.
+    pub fn live_ids(&self) -> impl Iterator<Item = NodeId> + '_ {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| !n.dead)
+            .map(|(i, _)| NodeId(i as u32))
+    }
+
+    pub fn n_live(&self) -> usize {
+        self.nodes.iter().filter(|n| !n.dead).count()
+    }
+
+    /// Number of live nodes excluding Input/Weight sources ("ops").
+    pub fn n_ops(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| !n.dead && !matches!(n.op, OpKind::Input | OpKind::Weight))
+            .count()
+    }
+
+    /// consumers[node] = list of (consumer id, consumer's input slot).
+    pub fn consumers(&self) -> HashMap<NodeId, Vec<(NodeId, usize)>> {
+        let mut map: HashMap<NodeId, Vec<(NodeId, usize)>> = HashMap::new();
+        for id in self.live_ids() {
+            for (slot, inp) in self.node(id).inputs.iter().enumerate() {
+                map.entry(inp.node).or_default().push((id, slot));
+            }
+        }
+        map
+    }
+
+    /// Live nodes with no live consumers (excluding sources): graph outputs.
+    pub fn output_ids(&self) -> Vec<NodeId> {
+        let cons = self.consumers();
+        self.live_ids()
+            .filter(|id| {
+                !matches!(self.node(*id).op, OpKind::Input | OpKind::Weight)
+                    && cons.get(id).map_or(true, |v| v.is_empty())
+            })
+            .collect()
+    }
+
+    /// Topological order of live nodes (sources first). Errors on cycles.
+    pub fn topo_order(&self) -> anyhow::Result<Vec<NodeId>> {
+        let mut indeg: HashMap<NodeId, usize> = HashMap::new();
+        let cons = self.consumers();
+        for id in self.live_ids() {
+            indeg.insert(id, self.node(id).inputs.len());
+        }
+        let mut queue: Vec<NodeId> = indeg
+            .iter()
+            .filter(|(_, &d)| d == 0)
+            .map(|(&id, _)| id)
+            .collect();
+        queue.sort();
+        let mut order = Vec::with_capacity(indeg.len());
+        let mut qi = 0;
+        while qi < queue.len() {
+            let id = queue[qi];
+            qi += 1;
+            order.push(id);
+            if let Some(cs) = cons.get(&id) {
+                // A consumer may reference `id` in several slots; decrement per edge.
+                for (c, _) in cs {
+                    let d = indeg.get_mut(c).unwrap();
+                    *d -= 1;
+                    if *d == 0 {
+                        queue.push(*c);
+                    }
+                }
+            }
+        }
+        anyhow::ensure!(order.len() == self.n_live(), "cycle detected in graph");
+        Ok(order)
+    }
+
+    // ---- mutation ---------------------------------------------------------
+
+    /// Redirect every consumer of `from` to read `to` instead.
+    pub fn replace_uses(&mut self, from: PortRef, to: PortRef) {
+        for n in self.nodes.iter_mut().filter(|n| !n.dead) {
+            for inp in n.inputs.iter_mut() {
+                if *inp == from {
+                    *inp = to;
+                }
+            }
+        }
+    }
+
+    pub fn kill(&mut self, id: NodeId) {
+        self.nodes[id.index()].dead = true;
+    }
+
+    /// Remove nodes not reachable (as ancestors) from any graph output.
+    pub fn dce(&mut self) {
+        let outputs = self.output_ids();
+        let mut alive = vec![false; self.nodes.len()];
+        let mut stack = outputs;
+        while let Some(id) = stack.pop() {
+            if alive[id.index()] {
+                continue;
+            }
+            alive[id.index()] = true;
+            for inp in &self.node(id).inputs {
+                stack.push(inp.node);
+            }
+        }
+        for (i, n) in self.nodes.iter_mut().enumerate() {
+            if !alive[i] {
+                n.dead = true;
+            }
+        }
+    }
+
+    /// Rebuild a dense graph with dead slots dropped and ids renumbered in
+    /// topological order. Returns the new graph and old->new id map.
+    pub fn compact(&self) -> anyhow::Result<(Graph, HashMap<NodeId, NodeId>)> {
+        let order = self.topo_order()?;
+        let mut map = HashMap::new();
+        let mut g = Graph::new();
+        for id in order {
+            let n = self.node(id);
+            let inputs: Vec<PortRef> = n
+                .inputs
+                .iter()
+                .map(|p| PortRef { node: map[&p.node], port: p.port })
+                .collect();
+            let new_id = g.push(Node {
+                op: n.op.clone(),
+                inputs,
+                outs: n.outs.clone(),
+                dead: false,
+            });
+            map.insert(id, new_id);
+        }
+        Ok((g, map))
+    }
+
+    /// Structural validation: acyclic, ports in range, shapes re-infer to
+    /// the stored descriptors. Used by tests and after every substitution.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let _ = self.topo_order()?;
+        for id in self.live_ids() {
+            let n = self.node(id);
+            if matches!(n.op, OpKind::Input | OpKind::Weight) {
+                anyhow::ensure!(n.inputs.is_empty(), "source with inputs at {:?}", id);
+                continue;
+            }
+            let descs: Vec<&TensorDesc> = n
+                .inputs
+                .iter()
+                .map(|p| self.out_desc(*p))
+                .collect::<anyhow::Result<_>>()?;
+            let outs = shapes::infer(&n.op, &descs)?;
+            anyhow::ensure!(
+                outs == n.outs,
+                "stored shapes stale at {:?}: {:?} vs {:?}",
+                id,
+                n.outs,
+                outs
+            );
+        }
+        Ok(())
+    }
+
+    /// Depth (longest path length from any source) per live node.
+    pub fn depths(&self) -> HashMap<NodeId, usize> {
+        let mut depth = HashMap::new();
+        if let Ok(order) = self.topo_order() {
+            for id in order {
+                let d = self
+                    .node(id)
+                    .inputs
+                    .iter()
+                    .map(|p| depth.get(&p.node).copied().unwrap_or(0) + 1)
+                    .max()
+                    .unwrap_or(0);
+                depth.insert(id, d);
+            }
+        }
+        depth
+    }
+}
+
+impl std::fmt::Display for Graph {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for id in self.live_ids() {
+            let n = self.node(id);
+            let ins: Vec<String> = n
+                .inputs
+                .iter()
+                .map(|p| format!("%{}.{}", p.node.0, p.port))
+                .collect();
+            let outs: Vec<String> = n.outs.iter().map(|t| t.to_string()).collect();
+            writeln!(
+                f,
+                "%{} = {}({}) -> {}",
+                id.0,
+                n.op.name(),
+                ins.join(", "),
+                outs.join(", ")
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::op::Activation;
+    use crate::graph::PadMode;
+
+    fn small() -> (Graph, NodeId, NodeId) {
+        let mut g = Graph::new();
+        let x = g.add_source(OpKind::Input, TensorDesc::f32(&[1, 8, 16, 16]));
+        let w = g.add_source(OpKind::Weight, TensorDesc::f32(&[16, 8, 3, 3]));
+        let c = g
+            .add(
+                OpKind::Conv2d { stride: 1, pad: PadMode::Same, act: Activation::None },
+                &[PortRef::of(x), PortRef::of(w)],
+            )
+            .unwrap();
+        let r = g.add(OpKind::Relu, &[PortRef::of(c)]).unwrap();
+        (g, c, r)
+    }
+
+    #[test]
+    fn build_and_validate() {
+        let (g, _, _) = small();
+        g.validate().unwrap();
+        assert_eq!(g.n_live(), 4);
+        assert_eq!(g.n_ops(), 2);
+    }
+
+    #[test]
+    fn outputs_are_sinks() {
+        let (g, _, r) = small();
+        assert_eq!(g.output_ids(), vec![r]);
+    }
+
+    #[test]
+    fn topo_order_parents_first() {
+        let (g, _, _) = small();
+        let order = g.topo_order().unwrap();
+        let pos: HashMap<NodeId, usize> =
+            order.iter().enumerate().map(|(i, &id)| (id, i)).collect();
+        for id in g.live_ids() {
+            for inp in &g.node(id).inputs {
+                assert!(pos[&inp.node] < pos[&id]);
+            }
+        }
+    }
+
+    #[test]
+    fn dce_removes_orphaned_weights() {
+        // Killing an op strands its weight; DCE must clean the weight up
+        // (weights are never graph outputs).
+        let (mut g, c, r) = small();
+        g.kill(r);
+        g.kill(c);
+        g.dce();
+        let w = NodeId(1);
+        assert!(g.node(w).dead, "orphan weight should be collected");
+        // The input is also unreachable from any output now.
+        assert!(g.node(NodeId(0)).dead);
+    }
+
+    #[test]
+    fn compact_renumbers_dense() {
+        let mut g = Graph::new();
+        let x = g.add_source(OpKind::Input, TensorDesc::f32(&[4, 4]));
+        let dead_relu = g.add(OpKind::Relu, &[PortRef::of(x)]).unwrap();
+        let live_tanh = g.add(OpKind::Tanh, &[PortRef::of(x)]).unwrap();
+        g.kill(dead_relu);
+        let (g2, map) = g.compact().unwrap();
+        assert_eq!(g2.n_live(), 2);
+        assert!(g2.nodes.iter().all(|n| !n.dead));
+        assert!(!map.contains_key(&dead_relu));
+        assert!(map.contains_key(&live_tanh));
+        g2.validate().unwrap();
+    }
+
+    #[test]
+    fn replace_uses_rewires_all() {
+        let mut g = Graph::new();
+        let a = g.add_source(OpKind::Input, TensorDesc::f32(&[4, 4]));
+        let b = g.add_source(OpKind::Input, TensorDesc::f32(&[4, 4]));
+        let s1 = g.add(OpKind::Add, &[PortRef::of(a), PortRef::of(a)]).unwrap();
+        g.replace_uses(PortRef::of(a), PortRef::of(b));
+        assert_eq!(g.node(s1).inputs, vec![PortRef::of(b), PortRef::of(b)]);
+    }
+
+    #[test]
+    fn cycle_is_detected() {
+        let (mut g, c, r) = small();
+        // Create a cycle: conv reads relu.
+        g.node_mut(c).inputs[0] = PortRef::of(r);
+        assert!(g.topo_order().is_err());
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn depths_increase_along_edges() {
+        let (g, c, r) = small();
+        let d = g.depths();
+        assert_eq!(d[&NodeId(0)], 0);
+        assert_eq!(d[&c], 1);
+        assert_eq!(d[&r], 2);
+    }
+}

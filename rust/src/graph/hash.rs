@@ -1,0 +1,154 @@
+//! Canonical graph hashing (TASO §4's hash-based deduplication, Fig. 3).
+//!
+//! The hash must be invariant to (a) node-id numbering and (b) tensor
+//! *names* — two graphs that differ only by renaming inputs hash equal
+//! (Fig. 3a). Sources therefore hash by kind + shape only, with a
+//! multiplicity-disambiguation pass so structurally distinct uses of
+//! same-shaped inputs still separate where the wiring differs.
+
+use std::collections::HashMap;
+
+use super::graph::{Graph, NodeId};
+use super::op::OpKind;
+
+fn mix(a: u64, b: u64) -> u64 {
+    // 64-bit finalizer-style mixing; order-sensitive.
+    let mut x = a ^ b.wrapping_mul(0x9E3779B97F4A7C15);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58476D1CE4E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+fn shape_hash(shape: &[usize]) -> u64 {
+    let mut h = 0xCBF29CE484222325;
+    for &d in shape {
+        h = mix(h, d as u64);
+    }
+    h
+}
+
+/// Canonical hash of the live subgraph.
+///
+/// Per-node hashes are computed in topological order: a node's hash combines
+/// its op attr-hash with the ordered (hash, port) pairs of its inputs; the
+/// graph hash combines the *sorted* multiset of output-node hashes, so
+/// output enumeration order does not matter.
+pub fn canonical_hash(g: &Graph) -> u64 {
+    let order = match g.topo_order() {
+        Ok(o) => o,
+        Err(_) => return 0, // invalid graphs all hash to 0
+    };
+    let mut node_hash: HashMap<NodeId, u64> = HashMap::with_capacity(order.len());
+    for id in order {
+        let n = g.node(id);
+        let mut h = match n.op {
+            // Name-invariance: sources hash by kind + shape only.
+            OpKind::Input => mix(0x1111, shape_hash(&n.outs[0].shape)),
+            OpKind::Weight => mix(0x2222, shape_hash(&n.outs[0].shape)),
+            _ => n.op.attr_hash(),
+        };
+        for inp in &n.inputs {
+            h = mix(h, mix(node_hash[&inp.node], inp.port as u64));
+        }
+        node_hash.insert(id, h);
+    }
+    let mut outs: Vec<u64> = g.output_ids().iter().map(|id| node_hash[id]).collect();
+    outs.sort_unstable();
+    let mut h = 0x9E3779B97F4A7C15;
+    for o in outs {
+        h = mix(h, o);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::op::{Activation, PadMode};
+    use crate::graph::tensor::TensorDesc;
+    use crate::graph::PortRef;
+
+    fn mm(g: &mut Graph, a: PortRef, b: PortRef) -> PortRef {
+        PortRef::of(
+            g.add(
+                OpKind::MatMul { trans_a: false, trans_b: false, act: Activation::None },
+                &[a, b],
+            )
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn insensitive_to_build_order() {
+        // g1: weights then input; g2: input then weights — same structure.
+        let mut g1 = Graph::new();
+        let w1 = PortRef::of(g1.add_source(OpKind::Weight, TensorDesc::f32(&[8, 8])));
+        let x1 = PortRef::of(g1.add_source(OpKind::Input, TensorDesc::f32(&[4, 8])));
+        mm(&mut g1, x1, w1);
+
+        let mut g2 = Graph::new();
+        let x2 = PortRef::of(g2.add_source(OpKind::Input, TensorDesc::f32(&[4, 8])));
+        let w2 = PortRef::of(g2.add_source(OpKind::Weight, TensorDesc::f32(&[8, 8])));
+        mm(&mut g2, x2, w2);
+
+        assert_eq!(canonical_hash(&g1), canonical_hash(&g2));
+    }
+
+    #[test]
+    fn sensitive_to_structure() {
+        let mut g1 = Graph::new();
+        let x = PortRef::of(g1.add_source(OpKind::Input, TensorDesc::f32(&[4, 4])));
+        let y = PortRef::of(g1.add_source(OpKind::Input, TensorDesc::f32(&[4, 4])));
+        g1.add(OpKind::Add, &[x, y]).unwrap();
+
+        let mut g2 = Graph::new();
+        let x2 = PortRef::of(g2.add_source(OpKind::Input, TensorDesc::f32(&[4, 4])));
+        let y2 = PortRef::of(g2.add_source(OpKind::Input, TensorDesc::f32(&[4, 4])));
+        g2.add(OpKind::Mul, &[x2, y2]).unwrap();
+
+        assert_ne!(canonical_hash(&g1), canonical_hash(&g2));
+    }
+
+    #[test]
+    fn sensitive_to_attrs() {
+        let build = |stride: usize| {
+            let mut g = Graph::new();
+            let x = PortRef::of(g.add_source(OpKind::Input, TensorDesc::f32(&[1, 3, 8, 8])));
+            let w = PortRef::of(g.add_source(OpKind::Weight, TensorDesc::f32(&[4, 3, 3, 3])));
+            g.add(
+                OpKind::Conv2d { stride, pad: PadMode::Same, act: Activation::None },
+                &[x, w],
+            )
+            .unwrap();
+            g
+        };
+        assert_ne!(canonical_hash(&build(1)), canonical_hash(&build(2)));
+    }
+
+    #[test]
+    fn dead_nodes_do_not_contribute() {
+        let mut g = Graph::new();
+        let x = PortRef::of(g.add_source(OpKind::Input, TensorDesc::f32(&[4, 4])));
+        let a = g.add(OpKind::Relu, &[x]).unwrap();
+        let h1 = canonical_hash(&g);
+        // Add then kill an unrelated node.
+        let t = g.add(OpKind::Tanh, &[x]).unwrap();
+        g.kill(t);
+        let _ = a;
+        assert_eq!(canonical_hash(&g), h1);
+    }
+
+    #[test]
+    fn compaction_preserves_hash() {
+        let mut g = Graph::new();
+        let x = PortRef::of(g.add_source(OpKind::Input, TensorDesc::f32(&[4, 4])));
+        let r = g.add(OpKind::Relu, &[x]).unwrap();
+        let t = g.add(OpKind::Tanh, &[PortRef::of(r)]).unwrap();
+        let _ = t;
+        let h1 = canonical_hash(&g);
+        let (g2, _) = g.compact().unwrap();
+        assert_eq!(canonical_hash(&g2), h1);
+    }
+}

@@ -1,0 +1,20 @@
+//! Computation-graph intermediate representation (§2.1, §3.2).
+//!
+//! A [`Graph`] is a DAG of tensor operations with multi-output nodes
+//! (needed for `Split`) and stable [`NodeId`]s — substitution application
+//! tombstones removed nodes rather than renumbering, so location indices
+//! observed by the RL agent stay meaningful within a step.
+
+pub mod builder;
+pub mod graph;
+pub mod hash;
+pub mod onnx;
+pub mod op;
+pub mod shapes;
+pub mod tensor;
+
+pub use builder::GraphBuilder;
+pub use graph::{Graph, Node, NodeId, PortRef};
+pub use hash::canonical_hash;
+pub use op::{Activation, OpKind, PadMode};
+pub use tensor::{DType, TensorDesc};

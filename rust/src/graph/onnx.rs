@@ -1,0 +1,372 @@
+//! ONNX-style JSON serialisation (§3.1.2).
+//!
+//! The paper ingests models via the ONNX binary format; we serialise the
+//! same information (ops, attributes, tensor descriptors, edges) as JSON —
+//! an open, diffable stand-in that round-trips every graph in the zoo and
+//! lets optimised graphs be exported for inspection (`rlflow optimize
+//! --export out.json`).
+//!
+//! Format sketch:
+//! ```json
+//! { "ir_version": 1, "producer": "rlflow", "graph_name": "bert",
+//!   "nodes": [ {"op": "conv2d", "stride": 1, "pad": "same", "act": "relu",
+//!               "inputs": [[0,0],[1,0]], "outs": [{"dtype":"f32","shape":[1,16,32,32]}]} ] }
+//! ```
+
+use crate::util::json::{parse, Json};
+
+use super::graph::{Graph, NodeId, PortRef};
+use super::op::{Activation, OpKind, PadMode};
+use super::tensor::{DType, TensorDesc};
+
+// ---------------------------------------------------------------------------
+// OpKind <-> JSON
+// ---------------------------------------------------------------------------
+
+fn act_str(a: Activation) -> &'static str {
+    match a {
+        Activation::None => "none",
+        Activation::Relu => "relu",
+        Activation::Gelu => "gelu",
+    }
+}
+
+fn act_parse(s: &str) -> anyhow::Result<Activation> {
+    Ok(match s {
+        "none" => Activation::None,
+        "relu" => Activation::Relu,
+        "gelu" => Activation::Gelu,
+        _ => anyhow::bail!("unknown activation '{}'", s),
+    })
+}
+
+fn pad_str(p: PadMode) -> &'static str {
+    match p {
+        PadMode::Same => "same",
+        PadMode::Valid => "valid",
+    }
+}
+
+fn pad_parse(s: &str) -> anyhow::Result<PadMode> {
+    Ok(match s {
+        "same" => PadMode::Same,
+        "valid" => PadMode::Valid,
+        _ => anyhow::bail!("unknown pad mode '{}'", s),
+    })
+}
+
+pub fn op_to_json(op: &OpKind) -> Json {
+    let mut j = Json::obj();
+    j.set("op", Json::Str(op.name().into()));
+    match op {
+        OpKind::Conv2d { stride, pad, act } | OpKind::ConvBias { stride, pad, act } => {
+            j.set("stride", Json::Num(*stride as f64));
+            j.set("pad", Json::Str(pad_str(*pad).into()));
+            j.set("act", Json::Str(act_str(*act).into()));
+        }
+        OpKind::MatMul { trans_a, trans_b, act } => {
+            j.set("trans_a", Json::Bool(*trans_a));
+            j.set("trans_b", Json::Bool(*trans_b));
+            j.set("act", Json::Str(act_str(*act).into()));
+        }
+        OpKind::Linear { act } => {
+            j.set("act", Json::Str(act_str(*act).into()));
+        }
+        OpKind::AddN { n } => {
+            j.set("n", Json::Num(*n as f64));
+        }
+        OpKind::MaxPool { k, stride, pad } | OpKind::AvgPool { k, stride, pad } => {
+            j.set("k", Json::Num(*k as f64));
+            j.set("stride", Json::Num(*stride as f64));
+            j.set("pad", Json::Str(pad_str(*pad).into()));
+        }
+        OpKind::Concat { axis } | OpKind::Softmax { axis } => {
+            j.set("axis", Json::Num(*axis as f64));
+        }
+        OpKind::Split { axis, parts } => {
+            j.set("axis", Json::Num(*axis as f64));
+            j.set("parts", Json::Num(*parts as f64));
+        }
+        OpKind::Reshape { shape } => {
+            j.set("shape", Json::from_usizes(shape));
+        }
+        OpKind::Transpose { perm } => {
+            j.set("perm", Json::from_usizes(perm));
+        }
+        OpKind::Scale { factor } => {
+            j.set("factor", Json::Num(*factor as f64));
+        }
+        OpKind::Enlarge { kh, kw } => {
+            j.set("kh", Json::Num(*kh as f64));
+            j.set("kw", Json::Num(*kw as f64));
+        }
+        _ => {}
+    }
+    j
+}
+
+pub fn op_from_json(j: &Json) -> anyhow::Result<OpKind> {
+    let name = j.get("op")?.as_str()?;
+    Ok(match name {
+        "input" => OpKind::Input,
+        "weight" => OpKind::Weight,
+        "conv_bias" => OpKind::ConvBias {
+            stride: j.get("stride")?.as_usize()?,
+            pad: pad_parse(j.get("pad")?.as_str()?)?,
+            act: act_parse(j.get("act")?.as_str()?)?,
+        },
+        "conv2d" => OpKind::Conv2d {
+            stride: j.get("stride")?.as_usize()?,
+            pad: pad_parse(j.get("pad")?.as_str()?)?,
+            act: act_parse(j.get("act")?.as_str()?)?,
+        },
+        "matmul" => OpKind::MatMul {
+            trans_a: j.get("trans_a")?.as_bool()?,
+            trans_b: j.get("trans_b")?.as_bool()?,
+            act: act_parse(j.get("act")?.as_str()?)?,
+        },
+        "linear" => OpKind::Linear { act: act_parse(j.get("act")?.as_str()?)? },
+        "add" => OpKind::Add,
+        "mul" => OpKind::Mul,
+        "addn" => OpKind::AddN { n: j.get("n")?.as_usize()? },
+        "relu" => OpKind::Relu,
+        "gelu" => OpKind::Gelu,
+        "sigmoid" => OpKind::Sigmoid,
+        "tanh" => OpKind::Tanh,
+        "batchnorm" => OpKind::BatchNorm,
+        "maxpool" => OpKind::MaxPool {
+            k: j.get("k")?.as_usize()?,
+            stride: j.get("stride")?.as_usize()?,
+            pad: pad_parse(j.get("pad")?.as_str()?)?,
+        },
+        "avgpool" => OpKind::AvgPool {
+            k: j.get("k")?.as_usize()?,
+            stride: j.get("stride")?.as_usize()?,
+            pad: pad_parse(j.get("pad")?.as_str()?)?,
+        },
+        "concat" => OpKind::Concat { axis: j.get("axis")?.as_usize()? },
+        "split" => OpKind::Split {
+            axis: j.get("axis")?.as_usize()?,
+            parts: j.get("parts")?.as_usize()?,
+        },
+        "reshape" => OpKind::Reshape { shape: j.get("shape")?.usize_array()? },
+        "transpose" => OpKind::Transpose { perm: j.get("perm")?.usize_array()? },
+        "softmax" => OpKind::Softmax { axis: j.get("axis")?.as_usize()? },
+        "layernorm" => OpKind::LayerNorm,
+        "fused_add_layernorm" => OpKind::FusedAddLayerNorm,
+        "scale" => OpKind::Scale { factor: j.get("factor")?.as_f64()? as f32 },
+        "enlarge" => OpKind::Enlarge {
+            kh: j.get("kh")?.as_usize()?,
+            kw: j.get("kw")?.as_usize()?,
+        },
+        "identity" => OpKind::Identity,
+        _ => anyhow::bail!("unknown op '{}'", name),
+    })
+}
+
+fn desc_to_json(t: &TensorDesc) -> Json {
+    let mut j = Json::obj();
+    j.set(
+        "dtype",
+        Json::Str(match t.dtype {
+            DType::F32 => "f32".into(),
+            DType::I32 => "i32".into(),
+        }),
+    );
+    j.set("shape", Json::from_usizes(&t.shape));
+    j
+}
+
+fn desc_from_json(j: &Json) -> anyhow::Result<TensorDesc> {
+    let dtype = match j.get("dtype")?.as_str()? {
+        "f32" => DType::F32,
+        "i32" => DType::I32,
+        d => anyhow::bail!("unknown dtype '{}'", d),
+    };
+    Ok(TensorDesc { shape: j.get("shape")?.usize_array()?, dtype })
+}
+
+// ---------------------------------------------------------------------------
+// Graph <-> JSON
+// ---------------------------------------------------------------------------
+
+pub fn export(g: &Graph, name: &str) -> anyhow::Result<Json> {
+    let (dense, _) = g.compact()?;
+    let nodes: Vec<Json> = dense
+        .live_ids()
+        .map(|id| {
+            let n = dense.node(id);
+            let mut j = op_to_json(&n.op);
+            j.set(
+                "inputs",
+                Json::Arr(
+                    n.inputs
+                        .iter()
+                        .map(|p| Json::Arr(vec![Json::Num(p.node.0 as f64), Json::Num(p.port as f64)]))
+                        .collect(),
+                ),
+            );
+            j.set("outs", Json::Arr(n.outs.iter().map(desc_to_json).collect()));
+            j
+        })
+        .collect();
+    let mut m = Json::obj();
+    m.set("ir_version", Json::Num(1.0));
+    m.set("producer", Json::Str("rlflow".into()));
+    m.set("graph_name", Json::Str(name.into()));
+    m.set("nodes", Json::Arr(nodes));
+    Ok(m)
+}
+
+pub fn import(m: &Json) -> anyhow::Result<Graph> {
+    let mut g = Graph::new();
+    for (i, nj) in m.get("nodes")?.as_arr()?.iter().enumerate() {
+        let op = op_from_json(nj)?;
+        let outs: Vec<TensorDesc> = nj
+            .get("outs")?
+            .as_arr()?
+            .iter()
+            .map(desc_from_json)
+            .collect::<anyhow::Result<_>>()?;
+        match op {
+            OpKind::Input | OpKind::Weight => {
+                anyhow::ensure!(outs.len() == 1, "source node {} needs one descriptor", i);
+                g.add_source(op, outs[0].clone());
+            }
+            _ => {
+                let inputs: Vec<PortRef> = nj
+                    .get("inputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(|p| {
+                        let pair = p.as_arr()?;
+                        anyhow::ensure!(pair.len() == 2, "input ref must be [node, port]");
+                        let node = pair[0].as_usize()?;
+                        anyhow::ensure!(node < i, "forward reference in node {}", i);
+                        Ok(PortRef { node: NodeId(node as u32), port: pair[1].as_usize()? as u16 })
+                    })
+                    .collect::<anyhow::Result<_>>()?;
+                let id = g.add(op, &inputs)?;
+                // Imported descriptors must agree with local shape inference:
+                // catches corrupted or hand-edited files early.
+                anyhow::ensure!(
+                    g.node(id).outs == outs,
+                    "node {}: stored shapes disagree with inference",
+                    i
+                );
+            }
+        }
+    }
+    g.validate()?;
+    Ok(g)
+}
+
+pub fn save<P: AsRef<std::path::Path>>(g: &Graph, name: &str, path: P) -> anyhow::Result<()> {
+    let model = export(g, name)?;
+    std::fs::write(path, model.to_string_pretty())?;
+    Ok(())
+}
+
+pub fn load<P: AsRef<std::path::Path>>(path: P) -> anyhow::Result<Graph> {
+    let text = std::fs::read_to_string(path)?;
+    import(&parse(&text)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+    use crate::graph::canonical_hash;
+
+    fn sample() -> Graph {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 3, 16, 16]);
+        let c = b.conv_bn_relu(x, 8, 3, 1, PadMode::Same).unwrap();
+        let _ = b.maxpool(c, 2, 2).unwrap();
+        b.finish()
+    }
+
+    fn transformerish() -> Graph {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 8, 32]);
+        let _ = b.transformer_encoder(x, 4, 2).unwrap();
+        b.finish()
+    }
+
+    #[test]
+    fn round_trip_preserves_hash() {
+        for g in [sample(), transformerish()] {
+            let model = export(&g, "t").unwrap();
+            let g2 = import(&model).unwrap();
+            assert_eq!(canonical_hash(&g), canonical_hash(&g2));
+            assert_eq!(g.n_live(), g2.n_live());
+        }
+    }
+
+    #[test]
+    fn json_round_trip_via_disk() {
+        let g = sample();
+        let path = std::env::temp_dir().join("rlflow_onnx_test.json");
+        save(&g, "t", &path).unwrap();
+        let g2 = load(&path).unwrap();
+        assert_eq!(canonical_hash(&g), canonical_hash(&g2));
+    }
+
+    #[test]
+    fn all_ops_round_trip() {
+        use OpKind::*;
+        let ops = vec![
+            Input,
+            Weight,
+            Conv2d { stride: 2, pad: PadMode::Valid, act: Activation::Relu },
+            ConvBias { stride: 1, pad: PadMode::Same, act: Activation::None },
+            MatMul { trans_a: true, trans_b: false, act: Activation::None },
+            Linear { act: Activation::Gelu },
+            Add,
+            Mul,
+            AddN { n: 4 },
+            Relu,
+            Gelu,
+            Sigmoid,
+            Tanh,
+            BatchNorm,
+            MaxPool { k: 3, stride: 2, pad: PadMode::Same },
+            AvgPool { k: 2, stride: 2, pad: PadMode::Valid },
+            Concat { axis: 1 },
+            Split { axis: 2, parts: 3 },
+            Reshape { shape: vec![2, 3, 4] },
+            Transpose { perm: vec![1, 0] },
+            Softmax { axis: 3 },
+            LayerNorm,
+            FusedAddLayerNorm,
+            Scale { factor: 0.125 },
+            Enlarge { kh: 5, kw: 5 },
+            Identity,
+        ];
+        for op in ops {
+            let j = op_to_json(&op);
+            let back = op_from_json(&j).unwrap();
+            assert_eq!(op, back, "round trip failed for {:?}", op);
+        }
+    }
+
+    #[test]
+    fn corrupted_shapes_rejected() {
+        let g = sample();
+        let mut model = export(&g, "t").unwrap();
+        // Corrupt the last node's descriptor (an op node, since sources lead).
+        if let Json::Obj(m) = &mut model {
+            if let Some(Json::Arr(nodes)) = m.get_mut("nodes") {
+                let last = nodes.len() - 1;
+                if let Json::Obj(n) = &mut nodes[last] {
+                    if let Some(Json::Arr(outs)) = n.get_mut("outs") {
+                        if let Json::Obj(d) = &mut outs[0] {
+                            d.insert("shape".into(), Json::from_usizes(&[9, 9, 9, 9]));
+                        }
+                    }
+                }
+            }
+        }
+        assert!(import(&model).is_err());
+    }
+}

@@ -1,0 +1,273 @@
+//! Operator vocabulary.
+//!
+//! The set covers everything the six evaluation graphs need (§4.2) plus the
+//! fused operators that substitution rules introduce (`act` on conv/matmul,
+//! `AddN`, `FusedAddLayerNorm`) — the transformer add/norm fusion of §4.10
+//! is representable only because those fused forms exist.
+
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Activation {
+    None,
+    Relu,
+    Gelu,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PadMode {
+    /// Output spatial size = ceil(in / stride).
+    Same,
+    /// No padding: out = floor((in - k) / stride) + 1.
+    Valid,
+}
+
+/// One graph operator. Weights are graph nodes (`Weight`) so substitutions
+/// can rewrite them (e.g. concatenating two conv kernels when merging).
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    /// External input tensor.
+    Input,
+    /// Trainable parameter (constant at optimisation time).
+    Weight,
+    /// 2-D convolution, NCHW x OIHW. Inputs: (x, w).
+    Conv2d { stride: usize, pad: PadMode, act: Activation },
+    /// Convolution with fused per-channel bias (BN-folded form).
+    /// Inputs: (x, w, bias[C_out]).
+    ConvBias { stride: usize, pad: PadMode, act: Activation },
+    /// Matrix product over the last two dims (leading dims broadcast-batched).
+    /// Inputs: (a, b).
+    MatMul { trans_a: bool, trans_b: bool, act: Activation },
+    /// x @ w + b with optional activation. Inputs: (x, w, b).
+    Linear { act: Activation },
+    /// Elementwise with numpy broadcasting. Inputs: (a, b).
+    Add,
+    Mul,
+    /// n-ary elementwise sum of same-shape tensors (fusion product, §4.10).
+    AddN { n: usize },
+    Relu,
+    Gelu,
+    Sigmoid,
+    Tanh,
+    /// Inference-mode batch norm: per-channel scale/shift on NCHW.
+    /// Inputs: (x, scale[C], shift[C]).
+    BatchNorm,
+    /// Inputs: (x,). Window pooling on NCHW.
+    MaxPool { k: usize, stride: usize, pad: PadMode },
+    AvgPool { k: usize, stride: usize, pad: PadMode },
+    /// Concatenate along `axis`. Inputs: n tensors.
+    Concat { axis: usize },
+    /// Split into `parts` equal chunks along `axis`. One input, `parts` outputs.
+    Split { axis: usize, parts: usize },
+    Reshape { shape: Vec<usize> },
+    Transpose { perm: Vec<usize> },
+    Softmax { axis: usize },
+    /// Layer normalisation over the last axis. Inputs: (x, gamma, beta).
+    LayerNorm,
+    /// layernorm(x + y) fused. Inputs: (x, y, gamma, beta). §4.10's win.
+    FusedAddLayerNorm,
+    /// Scalar multiply (attention scaling). Inputs: (x,). Factor is an attr.
+    Scale { factor: f32 },
+    /// TASO-style kernel enlargement: zero-pad a conv weight spatially to
+    /// (kh, kw). Inputs: (w,).
+    Enlarge { kh: usize, kw: usize },
+    Identity,
+}
+
+/// Coarse operator classes used for the GNN one-hot feature (first feature
+/// block) and for rule-generator alphabet grouping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpClass {
+    Input,
+    Weight,
+    Conv,
+    MatMul,
+    Ewise,
+    ActFn,
+    Norm,
+    Pool,
+    Shape,
+    Softmax,
+    Fused,
+    Other,
+}
+
+pub const N_OP_CLASSES: usize = 12;
+
+impl OpKind {
+    pub fn class(&self) -> OpClass {
+        use OpKind::*;
+        match self {
+            Input => OpClass::Input,
+            Weight => OpClass::Weight,
+            Conv2d { .. } | ConvBias { .. } => OpClass::Conv,
+            MatMul { .. } | Linear { .. } => OpClass::MatMul,
+            Add | Mul | AddN { .. } | Scale { .. } => OpClass::Ewise,
+            Relu | Gelu | Sigmoid | Tanh => OpClass::ActFn,
+            BatchNorm | LayerNorm => OpClass::Norm,
+            MaxPool { .. } | AvgPool { .. } => OpClass::Pool,
+            Concat { .. } | Split { .. } | Reshape { .. } | Transpose { .. }
+            | Enlarge { .. } | Identity => OpClass::Shape,
+            Softmax { .. } => OpClass::Softmax,
+            FusedAddLayerNorm => OpClass::Fused,
+        }
+    }
+
+    pub fn class_index(&self) -> usize {
+        use OpClass::*;
+        match self.class() {
+            Input => 0,
+            Weight => 1,
+            Conv => 2,
+            MatMul => 3,
+            Ewise => 4,
+            ActFn => 5,
+            Norm => 6,
+            Pool => 7,
+            Shape => 8,
+            Softmax => 9,
+            Fused => 10,
+            Other => 11,
+        }
+    }
+
+    /// Number of output ports.
+    pub fn n_outputs(&self) -> usize {
+        match self {
+            OpKind::Split { parts, .. } => *parts,
+            _ => 1,
+        }
+    }
+
+    /// Expected input arity; `None` means variadic (validated elsewhere).
+    pub fn arity(&self) -> Option<usize> {
+        use OpKind::*;
+        match self {
+            Input | Weight => Some(0),
+            Conv2d { .. } | MatMul { .. } | Add | Mul => Some(2),
+            ConvBias { .. } | Linear { .. } | BatchNorm | LayerNorm => Some(3),
+            FusedAddLayerNorm => Some(4),
+            AddN { n } => Some(*n),
+            Relu | Gelu | Sigmoid | Tanh | MaxPool { .. } | AvgPool { .. }
+            | Split { .. } | Reshape { .. } | Transpose { .. } | Softmax { .. }
+            | Scale { .. } | Enlarge { .. } | Identity => Some(1),
+            Concat { .. } => None,
+        }
+    }
+
+    /// Stable short name (serialisation + display + hashing).
+    pub fn name(&self) -> &'static str {
+        use OpKind::*;
+        match self {
+            Input => "input",
+            Weight => "weight",
+            Conv2d { .. } => "conv2d",
+            ConvBias { .. } => "conv_bias",
+            MatMul { .. } => "matmul",
+            Linear { .. } => "linear",
+            Add => "add",
+            Mul => "mul",
+            AddN { .. } => "addn",
+            Relu => "relu",
+            Gelu => "gelu",
+            Sigmoid => "sigmoid",
+            Tanh => "tanh",
+            BatchNorm => "batchnorm",
+            MaxPool { .. } => "maxpool",
+            AvgPool { .. } => "avgpool",
+            Concat { .. } => "concat",
+            Split { .. } => "split",
+            Reshape { .. } => "reshape",
+            Transpose { .. } => "transpose",
+            Softmax { .. } => "softmax",
+            LayerNorm => "layernorm",
+            FusedAddLayerNorm => "fused_add_layernorm",
+            Scale { .. } => "scale",
+            Enlarge { .. } => "enlarge",
+            Identity => "identity",
+        }
+    }
+
+    /// Attribute hash component (shape-independent).
+    pub fn attr_hash(&self) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        self.name().hash(&mut h);
+        match self {
+            OpKind::Conv2d { stride, pad, act } | OpKind::ConvBias { stride, pad, act } => {
+                stride.hash(&mut h);
+                (*pad as u8).hash(&mut h);
+                (*act as u8).hash(&mut h);
+            }
+            OpKind::MatMul { trans_a, trans_b, act } => {
+                trans_a.hash(&mut h);
+                trans_b.hash(&mut h);
+                (*act as u8).hash(&mut h);
+            }
+            OpKind::Linear { act } => (*act as u8).hash(&mut h),
+            OpKind::AddN { n } => n.hash(&mut h),
+            OpKind::MaxPool { k, stride, pad } | OpKind::AvgPool { k, stride, pad } => {
+                k.hash(&mut h);
+                stride.hash(&mut h);
+                (*pad as u8).hash(&mut h);
+            }
+            OpKind::Concat { axis } | OpKind::Softmax { axis } => axis.hash(&mut h),
+            OpKind::Split { axis, parts } => {
+                axis.hash(&mut h);
+                parts.hash(&mut h);
+            }
+            OpKind::Reshape { shape } => shape.hash(&mut h),
+            OpKind::Transpose { perm } => perm.hash(&mut h),
+            OpKind::Scale { factor } => factor.to_bits().hash(&mut h),
+            OpKind::Enlarge { kh, kw } => {
+                kh.hash(&mut h);
+                kw.hash(&mut h);
+            }
+            _ => {}
+        }
+        h.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arity_matches_docs() {
+        assert_eq!(OpKind::Conv2d { stride: 1, pad: PadMode::Same, act: Activation::None }.arity(), Some(2));
+        assert_eq!(OpKind::FusedAddLayerNorm.arity(), Some(4));
+        assert_eq!(OpKind::AddN { n: 5 }.arity(), Some(5));
+        assert_eq!(OpKind::Concat { axis: 1 }.arity(), None);
+    }
+
+    #[test]
+    fn split_has_multiple_outputs() {
+        assert_eq!(OpKind::Split { axis: 1, parts: 3 }.n_outputs(), 3);
+        assert_eq!(OpKind::Add.n_outputs(), 1);
+    }
+
+    #[test]
+    fn attr_hash_distinguishes_attrs() {
+        let a = OpKind::Conv2d { stride: 1, pad: PadMode::Same, act: Activation::None };
+        let b = OpKind::Conv2d { stride: 2, pad: PadMode::Same, act: Activation::None };
+        let c = OpKind::Conv2d { stride: 1, pad: PadMode::Same, act: Activation::Relu };
+        assert_ne!(a.attr_hash(), b.attr_hash());
+        assert_ne!(a.attr_hash(), c.attr_hash());
+        assert_eq!(a.attr_hash(), a.clone().attr_hash());
+    }
+
+    #[test]
+    fn class_index_in_bounds() {
+        for op in [
+            OpKind::Input,
+            OpKind::Weight,
+            OpKind::Add,
+            OpKind::Relu,
+            OpKind::LayerNorm,
+            OpKind::Softmax { axis: 1 },
+            OpKind::FusedAddLayerNorm,
+        ] {
+            assert!(op.class_index() < N_OP_CLASSES);
+        }
+    }
+}

@@ -1,0 +1,274 @@
+//! Shape inference: given an operator and its input descriptors, compute the
+//! output descriptors (or a descriptive error). This is the single source of
+//! truth — the builder, the substitution applier and the ONNX importer all
+//! route through [`infer`].
+
+use super::op::{OpKind, PadMode};
+use super::tensor::{DType, TensorDesc};
+
+pub fn conv_out_dim(input: usize, k: usize, stride: usize, pad: PadMode) -> Option<usize> {
+    match pad {
+        PadMode::Same => Some(input.div_ceil(stride)),
+        PadMode::Valid => {
+            if input < k {
+                None
+            } else {
+                Some((input - k) / stride + 1)
+            }
+        }
+    }
+}
+
+pub fn infer(op: &OpKind, inputs: &[&TensorDesc]) -> anyhow::Result<Vec<TensorDesc>> {
+    use OpKind::*;
+    if let Some(n) = op.arity() {
+        anyhow::ensure!(inputs.len() == n, "{}: expected {} inputs, got {}", op.name(), n, inputs.len());
+    } else {
+        anyhow::ensure!(!inputs.is_empty(), "{}: needs at least one input", op.name());
+    }
+    let out = match op {
+        Input | Weight => {
+            anyhow::bail!("{}: source ops carry their own descriptor", op.name())
+        }
+        ConvBias { stride, pad, .. } => {
+            let x = inputs[0];
+            let w = inputs[1];
+            anyhow::ensure!(x.rank() == 4 && w.rank() == 4, "conv_bias: need NCHW x OIHW");
+            anyhow::ensure!(x.shape[1] == w.shape[1], "conv_bias: channel mismatch");
+            anyhow::ensure!(inputs[2].shape == vec![w.shape[0]], "conv_bias: bias must be [C_out]");
+            let oh = conv_out_dim(x.shape[2], w.shape[2], *stride, *pad)
+                .ok_or_else(|| anyhow::anyhow!("conv_bias: kernel too large"))?;
+            let ow = conv_out_dim(x.shape[3], w.shape[3], *stride, *pad)
+                .ok_or_else(|| anyhow::anyhow!("conv_bias: kernel too large"))?;
+            vec![TensorDesc::f32(&[x.shape[0], w.shape[0], oh, ow])]
+        }
+        Conv2d { stride, pad, .. } => {
+            let x = inputs[0];
+            let w = inputs[1];
+            anyhow::ensure!(x.rank() == 4 && w.rank() == 4, "conv2d: need NCHW x OIHW");
+            let (n, c, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+            let (co, ci, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+            anyhow::ensure!(c == ci, "conv2d: channels {} != kernel in-channels {}", c, ci);
+            let oh = conv_out_dim(h, kh, *stride, *pad)
+                .ok_or_else(|| anyhow::anyhow!("conv2d: kernel {}x{} larger than input {}x{}", kh, kw, h, wd))?;
+            let ow = conv_out_dim(wd, kw, *stride, *pad)
+                .ok_or_else(|| anyhow::anyhow!("conv2d: kernel too large"))?;
+            vec![TensorDesc::f32(&[n, co, oh, ow])]
+        }
+        MatMul { trans_a, trans_b, .. } => {
+            let a = inputs[0];
+            let b = inputs[1];
+            anyhow::ensure!(a.rank() >= 2 && b.rank() >= 2, "matmul: rank >= 2 required");
+            let (am, ak) = last2(a, *trans_a);
+            let (bk, bn) = last2(b, *trans_b);
+            anyhow::ensure!(ak == bk, "matmul: inner dims {} != {}", ak, bk);
+            let batch = TensorDesc::broadcast(
+                &a.shape[..a.rank() - 2],
+                &b.shape[..b.rank() - 2],
+            )
+            .ok_or_else(|| anyhow::anyhow!("matmul: batch dims incompatible"))?;
+            let mut shape = batch;
+            shape.push(am);
+            shape.push(bn);
+            vec![TensorDesc::f32(&shape)]
+        }
+        Linear { .. } => {
+            let x = inputs[0];
+            let w = inputs[1];
+            let b = inputs[2];
+            anyhow::ensure!(x.rank() >= 2 && w.rank() == 2, "linear: x rank>=2, w rank 2");
+            let k = *x.shape.last().unwrap();
+            anyhow::ensure!(w.shape[0] == k, "linear: inner dims {} != {}", w.shape[0], k);
+            anyhow::ensure!(b.shape == vec![w.shape[1]], "linear: bias shape mismatch");
+            let mut shape = x.shape.clone();
+            *shape.last_mut().unwrap() = w.shape[1];
+            vec![TensorDesc::f32(&shape)]
+        }
+        Add | Mul => {
+            let s = TensorDesc::broadcast(&inputs[0].shape, &inputs[1].shape)
+                .ok_or_else(|| anyhow::anyhow!("{}: shapes {} vs {} not broadcastable", op.name(), inputs[0], inputs[1]))?;
+            vec![TensorDesc { shape: s, dtype: inputs[0].dtype }]
+        }
+        AddN { .. } => {
+            for i in 1..inputs.len() {
+                anyhow::ensure!(inputs[i].shape == inputs[0].shape, "addn: all shapes must match");
+            }
+            vec![inputs[0].clone()]
+        }
+        Relu | Gelu | Sigmoid | Tanh | Identity => vec![inputs[0].clone()],
+        Scale { .. } => vec![inputs[0].clone()],
+        BatchNorm => {
+            let x = inputs[0];
+            anyhow::ensure!(x.rank() == 4, "batchnorm: NCHW input");
+            let c = x.shape[1];
+            anyhow::ensure!(inputs[1].shape == vec![c] && inputs[2].shape == vec![c], "batchnorm: scale/shift must be [C]");
+            vec![x.clone()]
+        }
+        MaxPool { k, stride, pad } | AvgPool { k, stride, pad } => {
+            let x = inputs[0];
+            anyhow::ensure!(x.rank() == 4, "pool: NCHW input");
+            let oh = conv_out_dim(x.shape[2], *k, *stride, *pad)
+                .ok_or_else(|| anyhow::anyhow!("pool: window larger than input"))?;
+            let ow = conv_out_dim(x.shape[3], *k, *stride, *pad)
+                .ok_or_else(|| anyhow::anyhow!("pool: window larger than input"))?;
+            vec![TensorDesc::f32(&[x.shape[0], x.shape[1], oh, ow])]
+        }
+        Concat { axis } => {
+            let first = inputs[0];
+            anyhow::ensure!(*axis < first.rank(), "concat: axis out of range");
+            let mut dim = 0;
+            for t in inputs {
+                anyhow::ensure!(t.rank() == first.rank(), "concat: rank mismatch");
+                for d in 0..t.rank() {
+                    if d != *axis {
+                        anyhow::ensure!(t.shape[d] == first.shape[d], "concat: non-axis dim mismatch");
+                    }
+                }
+                dim += t.shape[*axis];
+            }
+            let mut shape = first.shape.clone();
+            shape[*axis] = dim;
+            vec![TensorDesc { shape, dtype: first.dtype }]
+        }
+        Split { axis, parts } => {
+            let x = inputs[0];
+            anyhow::ensure!(*axis < x.rank(), "split: axis out of range");
+            anyhow::ensure!(*parts > 0 && x.shape[*axis] % parts == 0, "split: {} not divisible by {}", x.shape[*axis], parts);
+            let mut shape = x.shape.clone();
+            shape[*axis] /= parts;
+            vec![TensorDesc { shape, dtype: x.dtype }; *parts]
+        }
+        Reshape { shape } => {
+            let x = inputs[0];
+            anyhow::ensure!(shape.iter().product::<usize>() == x.n_elems(), "reshape: {} elems -> {:?}", x.n_elems(), shape);
+            vec![TensorDesc { shape: shape.clone(), dtype: x.dtype }]
+        }
+        Transpose { perm } => {
+            let x = inputs[0];
+            anyhow::ensure!(perm.len() == x.rank(), "transpose: perm rank mismatch");
+            let mut seen = vec![false; perm.len()];
+            for &p in perm {
+                anyhow::ensure!(p < perm.len() && !seen[p], "transpose: invalid perm");
+                seen[p] = true;
+            }
+            let shape: Vec<usize> = perm.iter().map(|&p| x.shape[p]).collect();
+            vec![TensorDesc { shape, dtype: x.dtype }]
+        }
+        Softmax { axis } => {
+            anyhow::ensure!(*axis < inputs[0].rank(), "softmax: axis out of range");
+            vec![inputs[0].clone()]
+        }
+        LayerNorm => {
+            let x = inputs[0];
+            let d = *x.shape.last().ok_or_else(|| anyhow::anyhow!("layernorm: scalar input"))?;
+            anyhow::ensure!(inputs[1].shape == vec![d] && inputs[2].shape == vec![d], "layernorm: gamma/beta must be [{}]", d);
+            vec![x.clone()]
+        }
+        FusedAddLayerNorm => {
+            let x = inputs[0];
+            anyhow::ensure!(inputs[1].shape == x.shape, "fused_add_layernorm: x/y shape mismatch");
+            let d = *x.shape.last().unwrap();
+            anyhow::ensure!(inputs[2].shape == vec![d] && inputs[3].shape == vec![d], "fused_add_layernorm: gamma/beta must be [{}]", d);
+            vec![x.clone()]
+        }
+        Enlarge { kh, kw } => {
+            let w = inputs[0];
+            anyhow::ensure!(w.rank() == 4, "enlarge: OIHW weight");
+            anyhow::ensure!(*kh >= w.shape[2] && *kw >= w.shape[3], "enlarge: target smaller than kernel");
+            anyhow::ensure!((kh - w.shape[2]) % 2 == 0 && (kw - w.shape[3]) % 2 == 0, "enlarge: padding must be symmetric");
+            vec![TensorDesc { shape: vec![w.shape[0], w.shape[1], *kh, *kw], dtype: w.dtype }]
+        }
+    };
+    debug_assert!(out.iter().all(|t| t.dtype == DType::F32 || t.dtype == DType::I32));
+    Ok(out)
+}
+
+fn last2(t: &TensorDesc, trans: bool) -> (usize, usize) {
+    let r = t.rank();
+    let (m, n) = (t.shape[r - 2], t.shape[r - 1]);
+    if trans {
+        (n, m)
+    } else {
+        (m, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::op::Activation;
+
+    fn d(shape: &[usize]) -> TensorDesc {
+        TensorDesc::f32(shape)
+    }
+
+    #[test]
+    fn conv_same_and_valid() {
+        let x = d(&[1, 3, 32, 32]);
+        let w = d(&[16, 3, 3, 3]);
+        let op = OpKind::Conv2d { stride: 1, pad: PadMode::Same, act: Activation::None };
+        assert_eq!(infer(&op, &[&x, &w]).unwrap()[0].shape, vec![1, 16, 32, 32]);
+        let op2 = OpKind::Conv2d { stride: 2, pad: PadMode::Valid, act: Activation::None };
+        assert_eq!(infer(&op2, &[&x, &w]).unwrap()[0].shape, vec![1, 16, 15, 15]);
+    }
+
+    #[test]
+    fn conv_channel_mismatch_errors() {
+        let x = d(&[1, 4, 8, 8]);
+        let w = d(&[8, 3, 3, 3]);
+        let op = OpKind::Conv2d { stride: 1, pad: PadMode::Same, act: Activation::None };
+        assert!(infer(&op, &[&x, &w]).is_err());
+    }
+
+    #[test]
+    fn matmul_batched_and_transposed() {
+        let a = d(&[8, 12, 64, 64]);
+        let b = d(&[64, 32]);
+        let op = OpKind::MatMul { trans_a: false, trans_b: false, act: Activation::None };
+        assert_eq!(infer(&op, &[&a, &b]).unwrap()[0].shape, vec![8, 12, 64, 32]);
+        let bt = d(&[32, 64]);
+        let op_t = OpKind::MatMul { trans_a: false, trans_b: true, act: Activation::None };
+        assert_eq!(infer(&op_t, &[&a, &bt]).unwrap()[0].shape, vec![8, 12, 64, 32]);
+    }
+
+    #[test]
+    fn split_and_concat_round_trip() {
+        let x = d(&[2, 12, 64]);
+        let outs = infer(&OpKind::Split { axis: 1, parts: 3 }, &[&x]).unwrap();
+        assert_eq!(outs.len(), 3);
+        assert_eq!(outs[0].shape, vec![2, 4, 64]);
+        let refs: Vec<&TensorDesc> = outs.iter().collect();
+        let back = infer(&OpKind::Concat { axis: 1 }, &refs).unwrap();
+        assert_eq!(back[0].shape, x.shape);
+    }
+
+    #[test]
+    fn split_indivisible_errors() {
+        let x = d(&[2, 7, 4]);
+        assert!(infer(&OpKind::Split { axis: 1, parts: 3 }, &[&x]).is_err());
+    }
+
+    #[test]
+    fn transpose_validates_perm() {
+        let x = d(&[2, 3, 4]);
+        assert!(infer(&OpKind::Transpose { perm: vec![0, 0, 1] }, &[&x]).is_err());
+        let ok = infer(&OpKind::Transpose { perm: vec![2, 0, 1] }, &[&x]).unwrap();
+        assert_eq!(ok[0].shape, vec![4, 2, 3]);
+    }
+
+    #[test]
+    fn enlarge_pads_kernel() {
+        let w = d(&[16, 8, 3, 3]);
+        let out = infer(&OpKind::Enlarge { kh: 5, kw: 5 }, &[&w]).unwrap();
+        assert_eq!(out[0].shape, vec![16, 8, 5, 5]);
+        assert!(infer(&OpKind::Enlarge { kh: 4, kw: 5 }, &[&w]).is_err()); // asymmetric
+    }
+
+    #[test]
+    fn fused_add_layernorm_shape() {
+        let x = d(&[2, 16, 64]);
+        let g = d(&[64]);
+        let out = infer(&OpKind::FusedAddLayerNorm, &[&x, &x, &g, &g]).unwrap();
+        assert_eq!(out[0].shape, x.shape);
+    }
+}

@@ -1,0 +1,91 @@
+//! Tensor metadata: shape + dtype. All activations in the evaluation graphs
+//! are f32; i32 exists for completeness of the ONNX-style serialisation.
+
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+        }
+    }
+}
+
+/// Shape + dtype of one tensor value flowing along a graph edge.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TensorDesc {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorDesc {
+    pub fn f32(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), dtype: DType::F32 }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn n_elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.n_elems() * self.dtype.size_bytes()
+    }
+
+    /// Numpy-style broadcast of two shapes; `None` if incompatible.
+    pub fn broadcast(a: &[usize], b: &[usize]) -> Option<Vec<usize>> {
+        let rank = a.len().max(b.len());
+        let mut out = vec![0usize; rank];
+        for i in 0..rank {
+            let da = if i < rank - a.len() { 1 } else { a[i - (rank - a.len())] };
+            let db = if i < rank - b.len() { 1 } else { b[i - (rank - b.len())] };
+            out[i] = if da == db {
+                da
+            } else if da == 1 {
+                db
+            } else if db == 1 {
+                da
+            } else {
+                return None;
+            };
+        }
+        Some(out)
+    }
+}
+
+impl std::fmt::Display for TensorDesc {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let dims: Vec<String> = self.shape.iter().map(|d| d.to_string()).collect();
+        write!(f, "{:?}[{}]", self.dtype, dims.join("x"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elem_count_and_bytes() {
+        let t = TensorDesc::f32(&[2, 3, 4]);
+        assert_eq!(t.n_elems(), 24);
+        assert_eq!(t.bytes(), 96);
+        assert_eq!(t.rank(), 3);
+    }
+
+    #[test]
+    fn broadcast_rules() {
+        assert_eq!(TensorDesc::broadcast(&[4, 1], &[3]), Some(vec![4, 3]));
+        assert_eq!(TensorDesc::broadcast(&[2, 3], &[2, 3]), Some(vec![2, 3]));
+        assert_eq!(TensorDesc::broadcast(&[5], &[2, 5]), Some(vec![2, 5]));
+        assert_eq!(TensorDesc::broadcast(&[2, 3], &[4]), None);
+        assert_eq!(TensorDesc::broadcast(&[], &[7]), Some(vec![7]));
+    }
+}

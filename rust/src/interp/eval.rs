@@ -1,0 +1,603 @@
+//! Reference interpreter: execute a [`Graph`] on concrete tensors.
+//!
+//! Two jobs (DESIGN.md §System inventory):
+//!  1. Fingerprint candidate substitutions in the TASO-style generator —
+//!     evaluate both sides on random inputs bounded to 4x4x4x4 (§3.2) and
+//!     compare.
+//!  2. Back property tests: applying any library rule anywhere must leave
+//!     the graph's input/output function unchanged.
+
+use std::collections::HashMap;
+
+use crate::graph::{Graph, NodeId, OpKind, PadMode};
+use crate::util::Rng;
+
+use super::tensor::Tensor;
+
+/// Evaluate the whole graph. `feeds` supplies Input *and* Weight values by
+/// node id; missing weights are generated deterministically from `seed` so
+/// two semantically equal graphs with identically-shaped weights in the same
+/// traversal order receive the same values.
+pub fn eval_graph(
+    g: &Graph,
+    feeds: &HashMap<NodeId, Tensor>,
+    seed: u64,
+) -> anyhow::Result<HashMap<NodeId, Vec<Tensor>>> {
+    let order = g.topo_order()?;
+    let mut values: HashMap<NodeId, Vec<Tensor>> = HashMap::new();
+    let mut wrng = Rng::new(seed);
+    for id in order {
+        let node = g.node(id);
+        let outs = match &node.op {
+            OpKind::Input | OpKind::Weight => {
+                let t = if let Some(t) = feeds.get(&id) {
+                    anyhow::ensure!(
+                        t.shape == node.outs[0].shape,
+                        "feed for {:?} has shape {:?}, node wants {:?}",
+                        id,
+                        t.shape,
+                        node.outs[0].shape
+                    );
+                    t.clone()
+                } else {
+                    anyhow::ensure!(
+                        matches!(node.op, OpKind::Weight),
+                        "missing feed for input {:?}",
+                        id
+                    );
+                    Tensor::random(&node.outs[0].shape, &mut wrng)
+                };
+                vec![t]
+            }
+            op => {
+                let inputs: Vec<&Tensor> = node
+                    .inputs
+                    .iter()
+                    .map(|p| &values[&p.node][p.port as usize])
+                    .collect();
+                eval_op(op, &inputs)?
+            }
+        };
+        // Interpreter output shapes must agree with static inference.
+        for (o, d) in outs.iter().zip(&node.outs) {
+            anyhow::ensure!(
+                o.shape == d.shape,
+                "{}: interpreter shape {:?} != inferred {:?}",
+                node.op.name(),
+                o.shape,
+                d.shape
+            );
+        }
+        values.insert(id, outs);
+    }
+    Ok(values)
+}
+
+/// Evaluate only the graph outputs, sorted by node id for stable comparison.
+pub fn eval_outputs(
+    g: &Graph,
+    feeds: &HashMap<NodeId, Tensor>,
+    seed: u64,
+) -> anyhow::Result<Vec<Tensor>> {
+    let values = eval_graph(g, feeds, seed)?;
+    let mut out_ids = g.output_ids();
+    out_ids.sort();
+    Ok(out_ids
+        .iter()
+        .flat_map(|id| values[id].clone())
+        .collect())
+}
+
+fn gelu(x: f32) -> f32 {
+    // tanh approximation, matching jax.nn.gelu's default.
+    0.5 * x * (1.0 + ((0.7978845608 * (x + 0.044715 * x * x * x)) as f32).tanh())
+}
+
+pub fn eval_op(op: &OpKind, inputs: &[&Tensor]) -> anyhow::Result<Vec<Tensor>> {
+    use OpKind::*;
+    Ok(match op {
+        Input | Weight => anyhow::bail!("sources are fed, not evaluated"),
+        Conv2d { stride, pad, act } => {
+            let y = conv2d(inputs[0], inputs[1], *stride, *pad)?;
+            vec![apply_act(y, *act)]
+        }
+        ConvBias { stride, pad, act } => {
+            let y = conv2d(inputs[0], inputs[1], *stride, *pad)?;
+            let c = inputs[2].shape[0];
+            let b4 = Tensor::from_vec(&[1, c, 1, 1], inputs[2].data.clone())?;
+            let y = broadcast_ewise(&y, &b4, |a, b| a + b)?;
+            vec![apply_act(y, *act)]
+        }
+        MatMul { trans_a, trans_b, act } => {
+            let y = matmul(inputs[0], inputs[1], *trans_a, *trans_b)?;
+            vec![apply_act(y, *act)]
+        }
+        Linear { act } => {
+            let y = matmul(inputs[0], inputs[1], false, false)?;
+            let b = inputs[2].broadcast_to(&y.shape)?;
+            let y = zip_ewise(&y, &b, |a, b| a + b)?;
+            vec![apply_act(y, *act)]
+        }
+        Add => vec![broadcast_ewise(inputs[0], inputs[1], |a, b| a + b)?],
+        Mul => vec![broadcast_ewise(inputs[0], inputs[1], |a, b| a * b)?],
+        AddN { .. } => {
+            let mut acc = inputs[0].clone();
+            for t in &inputs[1..] {
+                acc = zip_ewise(&acc, t, |a, b| a + b)?;
+            }
+            vec![acc]
+        }
+        Relu => vec![map_ewise(inputs[0], |x| x.max(0.0))],
+        Gelu => vec![map_ewise(inputs[0], gelu)],
+        Sigmoid => vec![map_ewise(inputs[0], |x| 1.0 / (1.0 + (-x).exp()))],
+        Tanh => vec![map_ewise(inputs[0], f32::tanh)],
+        Identity => vec![inputs[0].clone()],
+        Scale { factor } => {
+            let f = *factor;
+            vec![map_ewise(inputs[0], move |x| x * f)]
+        }
+        BatchNorm => vec![batchnorm(inputs[0], inputs[1], inputs[2])?],
+        MaxPool { k, stride, pad } => {
+            vec![pool(inputs[0], *k, *stride, *pad, f32::NEG_INFINITY, |a, b| a.max(b), |acc, _| acc)?]
+        }
+        AvgPool { k, stride, pad } => {
+            vec![pool(inputs[0], *k, *stride, *pad, 0.0, |a, b| a + b, |acc, n| acc / n as f32)?]
+        }
+        Concat { axis } => vec![concat(inputs, *axis)?],
+        Split { axis, parts } => split(inputs[0], *axis, *parts)?,
+        Reshape { shape } =>
+
+            vec![Tensor::from_vec(shape, inputs[0].data.clone())?],
+        Transpose { perm } => vec![transpose(inputs[0], perm)],
+        Softmax { axis } => vec![softmax(inputs[0], *axis)],
+        LayerNorm => vec![layernorm(inputs[0], inputs[1], inputs[2])?],
+        FusedAddLayerNorm => {
+            let sum = zip_ewise(inputs[0], inputs[1], |a, b| a + b)?;
+            vec![layernorm(&sum, inputs[2], inputs[3])?]
+        }
+        Enlarge { kh, kw } => vec![enlarge(inputs[0], *kh, *kw)?],
+    })
+}
+
+fn apply_act(t: Tensor, act: crate::graph::Activation) -> Tensor {
+    use crate::graph::Activation::*;
+    match act {
+        None => t,
+        Relu => map_ewise(&t, |x| x.max(0.0)),
+        Gelu => map_ewise(&t, gelu),
+    }
+}
+
+fn map_ewise(t: &Tensor, f: impl Fn(f32) -> f32) -> Tensor {
+    Tensor { shape: t.shape.clone(), data: t.data.iter().map(|&x| f(x)).collect() }
+}
+
+fn zip_ewise(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> anyhow::Result<Tensor> {
+    anyhow::ensure!(a.shape == b.shape, "ewise shape mismatch {:?} vs {:?}", a.shape, b.shape);
+    Ok(Tensor {
+        shape: a.shape.clone(),
+        data: a.data.iter().zip(&b.data).map(|(&x, &y)| f(x, y)).collect(),
+    })
+}
+
+fn broadcast_ewise(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> anyhow::Result<Tensor> {
+    let shape = crate::graph::TensorDesc::broadcast(&a.shape, &b.shape)
+        .ok_or_else(|| anyhow::anyhow!("not broadcastable"))?;
+    let ab = a.broadcast_to(&shape)?;
+    let bb = b.broadcast_to(&shape)?;
+    zip_ewise(&ab, &bb, f)
+}
+
+fn matmul(a: &Tensor, b: &Tensor, trans_a: bool, trans_b: bool) -> anyhow::Result<Tensor> {
+    // Normalise to 3-D batch x M x K without copying data when possible.
+    let a2 = maybe_transpose_last2(a, trans_a);
+    let b2 = maybe_transpose_last2(b, trans_b);
+    let (ar, br) = (a2.rank(), b2.rank());
+    let (m, k) = (a2.shape[ar - 2], a2.shape[ar - 1]);
+    let (k2, n) = (b2.shape[br - 2], b2.shape[br - 1]);
+    anyhow::ensure!(k == k2, "matmul inner dim mismatch");
+    let batch_shape = crate::graph::TensorDesc::broadcast(&a2.shape[..ar - 2], &b2.shape[..br - 2])
+        .ok_or_else(|| anyhow::anyhow!("matmul batch mismatch"))?;
+    let batch: usize = batch_shape.iter().product();
+
+    let mut full_a = batch_shape.clone();
+    full_a.extend_from_slice(&[m, k]);
+    let mut full_b = batch_shape.clone();
+    full_b.extend_from_slice(&[k, n]);
+    let ab = a2.broadcast_to(&full_a)?;
+    let bb = b2.broadcast_to(&full_b)?;
+
+    let mut out_shape = batch_shape;
+    out_shape.extend_from_slice(&[m, n]);
+    let mut out = Tensor::zeros(&out_shape);
+    for bi in 0..batch {
+        let ao = bi * m * k;
+        let bo = bi * k * n;
+        let oo = bi * m * n;
+        for i in 0..m {
+            for kk in 0..k {
+                let av = ab.data[ao + i * k + kk];
+                if av == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    out.data[oo + i * n + j] += av * bb.data[bo + kk * n + j];
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn maybe_transpose_last2(t: &Tensor, trans: bool) -> Tensor {
+    if !trans {
+        return t.clone();
+    }
+    let r = t.rank();
+    let mut perm: Vec<usize> = (0..r).collect();
+    perm.swap(r - 2, r - 1);
+    transpose(t, &perm)
+}
+
+fn transpose(t: &Tensor, perm: &[usize]) -> Tensor {
+    let shape: Vec<usize> = perm.iter().map(|&p| t.shape[p]).collect();
+    let mut out = Tensor::zeros(&shape);
+    let in_strides = t.strides();
+    let rank = t.rank();
+    let mut idx = vec![0usize; rank];
+    for off in 0..out.n_elems() {
+        let mut rem = off;
+        for d in (0..rank).rev() {
+            idx[d] = rem % shape[d];
+            rem /= shape[d];
+        }
+        let mut src = 0;
+        for d in 0..rank {
+            src += idx[d] * in_strides[perm[d]];
+        }
+        out.data[off] = t.data[src];
+    }
+    out
+}
+
+fn conv2d(x: &Tensor, w: &Tensor, stride: usize, pad: PadMode) -> anyhow::Result<Tensor> {
+    anyhow::ensure!(x.rank() == 4 && w.rank() == 4, "conv2d wants NCHW x OIHW");
+    let (n, c, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (co, ci, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    anyhow::ensure!(c == ci, "conv2d channel mismatch");
+    let oh = crate::graph::shapes::conv_out_dim(h, kh, stride, pad)
+        .ok_or_else(|| anyhow::anyhow!("kernel too large"))?;
+    let ow = crate::graph::shapes::conv_out_dim(wd, kw, stride, pad)
+        .ok_or_else(|| anyhow::anyhow!("kernel too large"))?;
+    // SAME padding offsets (TensorFlow convention).
+    let (pt, pl) = match pad {
+        PadMode::Valid => (0isize, 0isize),
+        PadMode::Same => {
+            let pad_h = ((oh - 1) * stride + kh).saturating_sub(h);
+            let pad_w = ((ow - 1) * stride + kw).saturating_sub(wd);
+            ((pad_h / 2) as isize, (pad_w / 2) as isize)
+        }
+    };
+    let mut out = Tensor::zeros(&[n, co, oh, ow]);
+    for ni in 0..n {
+        for coi in 0..co {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0.0;
+                    for cii in 0..ci {
+                        for ky in 0..kh {
+                            let iy = (oy * stride + ky) as isize - pt;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            for kx in 0..kw {
+                                let ix = (ox * stride + kx) as isize - pl;
+                                if ix < 0 || ix >= wd as isize {
+                                    continue;
+                                }
+                                acc += x.at(&[ni, cii, iy as usize, ix as usize])
+                                    * w.at(&[coi, cii, ky, kx]);
+                            }
+                        }
+                    }
+                    out.set(&[ni, coi, oy, ox], acc);
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn batchnorm(x: &Tensor, scale: &Tensor, shift: &Tensor) -> anyhow::Result<Tensor> {
+    anyhow::ensure!(x.rank() == 4, "batchnorm wants NCHW");
+    let c = x.shape[1];
+    anyhow::ensure!(scale.shape == vec![c] && shift.shape == vec![c], "bn param shape");
+    let mut out = x.clone();
+    let hw = x.shape[2] * x.shape[3];
+    for ni in 0..x.shape[0] {
+        for ci in 0..c {
+            let base = (ni * c + ci) * hw;
+            for i in 0..hw {
+                out.data[base + i] = out.data[base + i] * scale.data[ci] + shift.data[ci];
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn pool(
+    x: &Tensor,
+    k: usize,
+    stride: usize,
+    pad: PadMode,
+    init: f32,
+    combine: impl Fn(f32, f32) -> f32,
+    finish: impl Fn(f32, usize) -> f32,
+) -> anyhow::Result<Tensor> {
+    anyhow::ensure!(x.rank() == 4, "pool wants NCHW");
+    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let oh = crate::graph::shapes::conv_out_dim(h, k, stride, pad)
+        .ok_or_else(|| anyhow::anyhow!("window too large"))?;
+    let ow = crate::graph::shapes::conv_out_dim(w, k, stride, pad)
+        .ok_or_else(|| anyhow::anyhow!("window too large"))?;
+    let (pt, pl) = match pad {
+        PadMode::Valid => (0isize, 0isize),
+        PadMode::Same => {
+            let pad_h = ((oh - 1) * stride + k).saturating_sub(h);
+            let pad_w = ((ow - 1) * stride + k).saturating_sub(w);
+            ((pad_h / 2) as isize, (pad_w / 2) as isize)
+        }
+    };
+    let mut out = Tensor::zeros(&[n, c, oh, ow]);
+    for ni in 0..n {
+        for ci in 0..c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = init;
+                    let mut count = 0usize;
+                    for ky in 0..k {
+                        let iy = (oy * stride + ky) as isize - pt;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..k {
+                            let ix = (ox * stride + kx) as isize - pl;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            acc = combine(acc, x.at(&[ni, ci, iy as usize, ix as usize]));
+                            count += 1;
+                        }
+                    }
+                    out.set(&[ni, ci, oy, ox], finish(acc, count.max(1)));
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn concat(inputs: &[&Tensor], axis: usize) -> anyhow::Result<Tensor> {
+    let first = inputs[0];
+    let mut out_shape = first.shape.clone();
+    out_shape[axis] = inputs.iter().map(|t| t.shape[axis]).sum();
+    let mut out = Tensor::zeros(&out_shape);
+    let outer: usize = first.shape[..axis].iter().product();
+    let inner: usize = first.shape[axis + 1..].iter().product();
+    let out_axis = out_shape[axis];
+    let mut axis_off = 0;
+    for t in inputs {
+        let t_axis = t.shape[axis];
+        for o in 0..outer {
+            for a in 0..t_axis {
+                let src = (o * t_axis + a) * inner;
+                let dst = (o * out_axis + axis_off + a) * inner;
+                out.data[dst..dst + inner].copy_from_slice(&t.data[src..src + inner]);
+            }
+        }
+        axis_off += t_axis;
+    }
+    Ok(out)
+}
+
+fn split(x: &Tensor, axis: usize, parts: usize) -> anyhow::Result<Vec<Tensor>> {
+    anyhow::ensure!(x.shape[axis] % parts == 0, "split indivisible");
+    let part_axis = x.shape[axis] / parts;
+    let mut shape = x.shape.clone();
+    shape[axis] = part_axis;
+    let outer: usize = x.shape[..axis].iter().product();
+    let inner: usize = x.shape[axis + 1..].iter().product();
+    let mut outs = vec![Tensor::zeros(&shape); parts];
+    for (p, out) in outs.iter_mut().enumerate() {
+        for o in 0..outer {
+            for a in 0..part_axis {
+                let src = (o * x.shape[axis] + p * part_axis + a) * inner;
+                let dst = (o * part_axis + a) * inner;
+                out.data[dst..dst + inner].copy_from_slice(&x.data[src..src + inner]);
+            }
+        }
+    }
+    Ok(outs)
+}
+
+fn softmax(x: &Tensor, axis: usize) -> Tensor {
+    let axis_len = x.shape[axis];
+    let outer: usize = x.shape[..axis].iter().product();
+    let inner: usize = x.shape[axis + 1..].iter().product();
+    let mut out = x.clone();
+    for o in 0..outer {
+        for i in 0..inner {
+            let idx = |a: usize| (o * axis_len + a) * inner + i;
+            let mut mx = f32::NEG_INFINITY;
+            for a in 0..axis_len {
+                mx = mx.max(out.data[idx(a)]);
+            }
+            let mut sum = 0.0;
+            for a in 0..axis_len {
+                let e = (out.data[idx(a)] - mx).exp();
+                out.data[idx(a)] = e;
+                sum += e;
+            }
+            for a in 0..axis_len {
+                out.data[idx(a)] /= sum;
+            }
+        }
+    }
+    out
+}
+
+fn layernorm(x: &Tensor, gamma: &Tensor, beta: &Tensor) -> anyhow::Result<Tensor> {
+    let d = *x.shape.last().unwrap();
+    anyhow::ensure!(gamma.shape == vec![d] && beta.shape == vec![d], "ln param shape");
+    let rows = x.n_elems() / d;
+    let mut out = x.clone();
+    for r in 0..rows {
+        let row = &mut out.data[r * d..(r + 1) * d];
+        let mean: f32 = row.iter().sum::<f32>() / d as f32;
+        let var: f32 = row.iter().map(|v| (v - mean).powi(2)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for (i, v) in row.iter_mut().enumerate() {
+            *v = (*v - mean) * inv * gamma.data[i] + beta.data[i];
+        }
+    }
+    Ok(out)
+}
+
+fn enlarge(w: &Tensor, kh: usize, kw: usize) -> anyhow::Result<Tensor> {
+    anyhow::ensure!(w.rank() == 4, "enlarge wants OIHW");
+    let (co, ci, oh, ow) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    let (dy, dx) = ((kh - oh) / 2, (kw - ow) / 2);
+    let mut out = Tensor::zeros(&[co, ci, kh, kw]);
+    for a in 0..co {
+        for b in 0..ci {
+            for y in 0..oh {
+                for x in 0..ow {
+                    out.set(&[a, b, y + dy, x + dx], w.at(&[a, b, y, x]));
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Activation, GraphBuilder};
+
+    #[test]
+    fn matmul_2x2() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Tensor::from_vec(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        let c = matmul(&a, &b, false, false).unwrap();
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_transpose_consistency() {
+        let mut rng = Rng::new(0);
+        let a = Tensor::random(&[3, 4], &mut rng);
+        let b = Tensor::random(&[5, 4], &mut rng);
+        let direct = matmul(&a, &b, false, true).unwrap();
+        let bt = transpose(&b, &[1, 0]);
+        let via = matmul(&a, &bt, false, false).unwrap();
+        assert!(direct.allclose(&via, 1e-6));
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 kernel with single 1.0 acts as identity on channels=1.
+        let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let w = Tensor::from_vec(&[1, 1, 1, 1], vec![1.0]).unwrap();
+        let y = conv2d(&x, &w, 1, PadMode::Same).unwrap();
+        assert_eq!(y.data, x.data);
+    }
+
+    #[test]
+    fn conv_valid_window_sum() {
+        let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let w = Tensor::from_vec(&[1, 1, 2, 2], vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        let y = conv2d(&x, &w, 1, PadMode::Valid).unwrap();
+        assert_eq!(y.shape, vec![1, 1, 1, 1]);
+        assert_eq!(y.data, vec![10.0]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = Rng::new(1);
+        let x = Tensor::random(&[3, 5], &mut rng);
+        let s = softmax(&x, 1);
+        for r in 0..3 {
+            let sum: f32 = s.data[r * 5..(r + 1) * 5].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let mut rng = Rng::new(2);
+        let x = Tensor::random(&[4, 8], &mut rng);
+        let gamma = Tensor::from_vec(&[8], vec![1.0; 8]).unwrap();
+        let beta = Tensor::zeros(&[8]);
+        let y = layernorm(&x, &gamma, &beta).unwrap();
+        for r in 0..4 {
+            let row = &y.data[r * 8..(r + 1) * 8];
+            let mean: f32 = row.iter().sum::<f32>() / 8.0;
+            assert!(mean.abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn split_concat_inverse() {
+        let mut rng = Rng::new(3);
+        let x = Tensor::random(&[2, 6, 3], &mut rng);
+        let parts = split(&x, 1, 3).unwrap();
+        let refs: Vec<&Tensor> = parts.iter().collect();
+        let back = concat(&refs, 1).unwrap();
+        assert_eq!(back.data, x.data);
+    }
+
+    #[test]
+    fn enlarge_preserves_conv_same_result() {
+        // conv(x, w3) == conv(x, enlarge(w3 -> 5)) under SAME padding.
+        let mut rng = Rng::new(4);
+        let x = Tensor::random(&[1, 2, 6, 6], &mut rng);
+        let w = Tensor::random(&[3, 2, 3, 3], &mut rng);
+        let y1 = conv2d(&x, &w, 1, PadMode::Same).unwrap();
+        let w5 = enlarge(&w, 5, 5).unwrap();
+        let y2 = conv2d(&x, &w5, 1, PadMode::Same).unwrap();
+        assert!(y1.allclose(&y2, 1e-5), "max diff {:?}", y1.max_abs_diff(&y2));
+    }
+
+    #[test]
+    fn graph_eval_end_to_end() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 4]);
+        let y = b.linear(x, 3, Activation::Relu).unwrap();
+        let g = b.finish();
+        let mut feeds = HashMap::new();
+        feeds.insert(x.node, Tensor::from_vec(&[1, 4], vec![1.0, 2.0, 3.0, 4.0]).unwrap());
+        let outs = eval_outputs(&g, &feeds, 7).unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].shape, vec![1, 3]);
+        assert!(outs[0].data.iter().all(|&v| v >= 0.0));
+        let _ = y;
+    }
+
+    #[test]
+    fn deterministic_weight_seeding() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[2, 4]);
+        let _ = b.linear(x, 4, Activation::None).unwrap();
+        let g = b.finish();
+        let mut feeds = HashMap::new();
+        let mut rng = Rng::new(9);
+        feeds.insert(x.node, Tensor::random(&[2, 4], &mut rng));
+        let o1 = eval_outputs(&g, &feeds, 5).unwrap();
+        let o2 = eval_outputs(&g, &feeds, 5).unwrap();
+        let o3 = eval_outputs(&g, &feeds, 6).unwrap();
+        assert_eq!(o1[0].data, o2[0].data);
+        assert_ne!(o1[0].data, o3[0].data);
+    }
+}

@@ -1,0 +1,152 @@
+//! Reference tensor interpreter (DESIGN.md: substitution verification +
+//! semantic-equivalence property tests).
+
+pub mod eval;
+pub mod tensor;
+
+pub use eval::{eval_graph, eval_op, eval_outputs};
+pub use tensor::Tensor;
+
+use std::collections::HashMap;
+
+use crate::graph::{Graph, NodeId, OpKind};
+use crate::util::Rng;
+
+/// Are two graphs semantically equivalent on random inputs? (§3.2:
+/// `forall I: G(I) = G'(I)`, checked on `trials` random draws.)
+///
+/// Inputs are matched *by shape signature in first-use order*, mirroring the
+/// paper's bounded verification; weights are seeded identically on both
+/// sides via the shared `seed`. Returns `Ok(false)` on any mismatch of
+/// output arity, shape or value.
+pub fn semantically_equal(
+    a: &Graph,
+    b: &Graph,
+    trials: usize,
+    seed: u64,
+    tol: f32,
+) -> anyhow::Result<bool> {
+    let a_inputs = input_ids(a);
+    let b_inputs = input_ids(b);
+    if input_signature(a, &a_inputs) != input_signature(b, &b_inputs) {
+        return Ok(false);
+    }
+    let mut rng = Rng::new(seed);
+    for trial in 0..trials {
+        let mut feeds_a = HashMap::new();
+        let mut feeds_b = HashMap::new();
+        for (ia, ib) in a_inputs.iter().zip(&b_inputs) {
+            let t = Tensor::random(&a.node(*ia).outs[0].shape, &mut rng);
+            feeds_a.insert(*ia, t.clone());
+            feeds_b.insert(*ib, t);
+        }
+        let wseed = seed ^ (trial as u64).wrapping_mul(0x2545F4914F6CDD1D);
+        let oa = eval_outputs(a, &feeds_a, wseed)?;
+        let ob = eval_outputs(b, &feeds_b, wseed)?;
+        if oa.len() != ob.len() {
+            return Ok(false);
+        }
+        for (ta, tb) in oa.iter().zip(&ob) {
+            if !ta.allclose(tb, tol) {
+                return Ok(false);
+            }
+        }
+    }
+    Ok(true)
+}
+
+fn input_ids(g: &Graph) -> Vec<NodeId> {
+    let mut ids: Vec<NodeId> = g
+        .live_ids()
+        .filter(|id| matches!(g.node(*id).op, OpKind::Input))
+        .collect();
+    ids.sort();
+    ids
+}
+
+fn input_signature(g: &Graph, ids: &[NodeId]) -> Vec<Vec<usize>> {
+    ids.iter().map(|id| g.node(*id).outs[0].shape.clone()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Activation, GraphBuilder, OpKind};
+
+    #[test]
+    fn identical_structures_equal() {
+        let build = || {
+            let mut b = GraphBuilder::new();
+            let x = b.input(&[2, 4]);
+            let y = b.input(&[2, 4]);
+            let s = b.add(x, y).unwrap();
+            let _ = b.relu(s).unwrap();
+            b.finish()
+        };
+        assert!(semantically_equal(&build(), &build(), 3, 42, 1e-5).unwrap());
+    }
+
+    #[test]
+    fn add_commutes() {
+        let mut b1 = GraphBuilder::new();
+        let x1 = b1.input(&[2, 4]);
+        let y1 = b1.input(&[2, 4]);
+        b1.add(x1, y1).unwrap();
+
+        let mut b2 = GraphBuilder::new();
+        let x2 = b2.input(&[2, 4]);
+        let y2 = b2.input(&[2, 4]);
+        b2.add(y2, x2).unwrap();
+
+        assert!(semantically_equal(&b1.finish(), &b2.finish(), 3, 1, 1e-5).unwrap());
+    }
+
+    #[test]
+    fn different_ops_not_equal() {
+        let mut b1 = GraphBuilder::new();
+        let x1 = b1.input(&[2, 4]);
+        b1.relu(x1).unwrap();
+
+        let mut b2 = GraphBuilder::new();
+        let x2 = b2.input(&[2, 4]);
+        b2.op(OpKind::Tanh, &[x2]).unwrap();
+
+        assert!(!semantically_equal(&b1.finish(), &b2.finish(), 3, 1, 1e-5).unwrap());
+    }
+
+    #[test]
+    fn signature_mismatch_short_circuits() {
+        let mut b1 = GraphBuilder::new();
+        let x1 = b1.input(&[2, 4]);
+        b1.relu(x1).unwrap();
+
+        let mut b2 = GraphBuilder::new();
+        let x2 = b2.input(&[4, 2]);
+        b2.relu(x2).unwrap();
+
+        assert!(!semantically_equal(&b1.finish(), &b2.finish(), 1, 1, 1e-5).unwrap());
+    }
+
+    #[test]
+    fn linear_vs_manual_matmul_add() {
+        // linear(x) == matmul(x, w) + b with identical weight seeding — the
+        // weights are drawn in traversal order, which matches when the graph
+        // declares w before b in both variants.
+        let mut b1 = GraphBuilder::new();
+        let x1 = b1.input(&[2, 4]);
+        b1.linear(x1, 3, Activation::None).unwrap();
+        let g1 = b1.finish();
+
+        let mut b2 = GraphBuilder::new();
+        let x2 = b2.input(&[2, 4]);
+        let w = b2.weight(&[4, 3]);
+        let bias = b2.weight(&[3]);
+        let mm = b2
+            .op(OpKind::MatMul { trans_a: false, trans_b: false, act: Activation::None }, &[x2, w])
+            .unwrap();
+        b2.op(OpKind::Add, &[mm, bias]).unwrap();
+        let g2 = b2.finish();
+
+        assert!(semantically_equal(&g1, &g2, 3, 11, 1e-4).unwrap());
+    }
+}

@@ -1,0 +1,167 @@
+//! Dense f32 tensor with row-major layout — the value type of the reference
+//! interpreter. Deliberately simple: correctness source of truth, not a
+//! performance path (the generator only evaluates 4x4x4x4-bounded graphs,
+//! mirroring TASO's verification bound, §3.2).
+
+use crate::graph::TensorDesc;
+use crate::util::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            shape.iter().product::<usize>() == data.len(),
+            "shape {:?} does not hold {} elements",
+            shape,
+            data.len()
+        );
+        Ok(Self { shape: shape.to_vec(), data })
+    }
+
+    pub fn random(shape: &[usize], rng: &mut Rng) -> Self {
+        let n: usize = shape.iter().product();
+        Self { shape: shape.to_vec(), data: (0..n).map(|_| rng.normal()).collect() }
+    }
+
+    pub fn n_elems(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn desc(&self) -> TensorDesc {
+        TensorDesc::f32(&self.shape)
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.rank()];
+        for i in (0..self.rank().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        debug_assert_eq!(idx.len(), self.rank());
+        let s = self.strides();
+        let off: usize = idx.iter().zip(&s).map(|(i, st)| i * st).sum();
+        self.data[off]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let s = self.strides();
+        let off: usize = idx.iter().zip(&s).map(|(i, st)| i * st).sum();
+        self.data[off] = v;
+    }
+
+    /// Max |a - b| over all elements; `None` on shape mismatch.
+    pub fn max_abs_diff(&self, other: &Tensor) -> Option<f32> {
+        if self.shape != other.shape {
+            return None;
+        }
+        Some(
+            self.data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f32::max),
+        )
+    }
+
+    /// Approximate equality with mixed absolute/relative tolerance.
+    pub fn allclose(&self, other: &Tensor, tol: f32) -> bool {
+        if self.shape != other.shape {
+            return false;
+        }
+        self.data.iter().zip(&other.data).all(|(a, b)| {
+            let scale = 1.0_f32.max(a.abs()).max(b.abs());
+            (a - b).abs() <= tol * scale
+        })
+    }
+
+    /// Apply numpy broadcasting of `self` to `shape` (shape must be a valid
+    /// broadcast target).
+    pub fn broadcast_to(&self, shape: &[usize]) -> anyhow::Result<Tensor> {
+        anyhow::ensure!(
+            TensorDesc::broadcast(&self.shape, shape) == Some(shape.to_vec()),
+            "cannot broadcast {:?} to {:?}",
+            self.shape,
+            shape
+        );
+        let mut out = Tensor::zeros(shape);
+        let rank = shape.len();
+        let pad = rank - self.rank();
+        let src_strides = self.strides();
+        let mut idx = vec![0usize; rank];
+        for off in 0..out.n_elems() {
+            // Decode off -> idx.
+            let mut rem = off;
+            for d in (0..rank).rev() {
+                idx[d] = rem % shape[d];
+                rem /= shape[d];
+            }
+            let mut src_off = 0;
+            for d in 0..self.rank() {
+                let full_idx = idx[pad + d];
+                let i = if self.shape[d] == 1 { 0 } else { full_idx };
+                src_off += i * src_strides[d];
+            }
+            out.data[off] = self.data[src_off];
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_row_major() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+    }
+
+    #[test]
+    fn index_round_trip() {
+        let mut t = Tensor::zeros(&[2, 3]);
+        t.set(&[1, 2], 7.0);
+        assert_eq!(t.at(&[1, 2]), 7.0);
+        assert_eq!(t.data[5], 7.0);
+    }
+
+    #[test]
+    fn broadcast_scalar_row() {
+        let t = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = t.broadcast_to(&[2, 3]).unwrap();
+        assert_eq!(b.data, vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn broadcast_column() {
+        let t = Tensor::from_vec(&[2, 1], vec![5.0, 6.0]).unwrap();
+        let b = t.broadcast_to(&[2, 3]).unwrap();
+        assert_eq!(b.data, vec![5.0, 5.0, 5.0, 6.0, 6.0, 6.0]);
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = Tensor::from_vec(&[2], vec![1.0, 100.0]).unwrap();
+        let b = Tensor::from_vec(&[2], vec![1.0 + 1e-6, 100.0 + 1e-4]).unwrap();
+        assert!(a.allclose(&b, 1e-5));
+        let c = Tensor::from_vec(&[2], vec![1.1, 100.0]).unwrap();
+        assert!(!a.allclose(&c, 1e-5));
+    }
+}

@@ -1,0 +1,43 @@
+//! # RLFlow
+//!
+//! Reproduction of *"RLFlow: Optimising Neural Network Subgraph
+//! Transformation with World Models"* (Parker, Alabed & Yoneki, 2022) as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! The Rust crate is Layer 3: the complete optimisation system — the
+//! computation-graph IR, the TASO-style substitution engine, the analytic
+//! cost model, the Gym-style RL environment, the search baselines, and the
+//! coordinator that drives the AOT-compiled neural artifacts (GNN encoder,
+//! MDN-RNN world model, PPO controller) through the PJRT C API. Python is
+//! build-time only.
+//!
+//! Quick tour (see `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use rlflow::zoo;
+//! use rlflow::cost::{CostModel, DeviceProfile};
+//! use rlflow::search::greedy_optimise;
+//! use rlflow::xfer::library::standard_library;
+//!
+//! let graph = zoo::bert_base();
+//! let cost = CostModel::new(DeviceProfile::rtx2070());
+//! let rules = standard_library();
+//! let (optimised, _log) = greedy_optimise(&graph, &rules, &cost, 100);
+//! println!("runtime: {:.3} ms -> {:.3} ms",
+//!          cost.graph_runtime_ms(&graph), cost.graph_runtime_ms(&optimised));
+//! ```
+
+pub mod agent;
+pub mod config;
+pub mod coordinator;
+pub mod cost;
+pub mod env;
+pub mod experiments;
+pub mod graph;
+pub mod interp;
+pub mod runtime;
+pub mod search;
+pub mod util;
+pub mod wm;
+pub mod xfer;
+pub mod zoo;

@@ -1,0 +1,218 @@
+//! `rlflow` — command-line interface to the RLFlow system.
+//!
+//! ```text
+//! rlflow zoo                               list the evaluation graphs
+//! rlflow optimize --graph bert --method taso|greedy [--export out.json]
+//! rlflow train --graph bert [--config cfg.json] [-s key=value ...]
+//! rlflow experiment <table1|table2|table3|fig5..fig10|all> [--runs N]
+//! rlflow generate-rules [--verify]
+//! ```
+//!
+//! Config resolution: defaults -> `--config file.json` -> `-s key=value`.
+
+use rlflow::config::RunConfig;
+use rlflow::coordinator::Pipeline;
+use rlflow::cost::CostModel;
+use rlflow::experiments::{self, ExperimentCtx};
+use rlflow::runtime::Engine;
+use rlflow::search::{greedy_optimise, taso_optimise, TasoConfig};
+use rlflow::xfer::library::standard_library;
+
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+    overrides: Vec<String>,
+}
+
+fn parse_args() -> Args {
+    let mut positional = Vec::new();
+    let mut flags = std::collections::HashMap::new();
+    let mut overrides = Vec::new();
+    let mut it = std::env::args().skip(1).peekable();
+    while let Some(arg) = it.next() {
+        if arg == "-s" || arg == "--set" {
+            if let Some(v) = it.next() {
+                overrides.push(v);
+            }
+        } else if let Some(name) = arg.strip_prefix("--") {
+            let value = if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                it.next().unwrap()
+            } else {
+                "true".to_string()
+            };
+            flags.insert(name.to_string(), value);
+        } else {
+            positional.push(arg);
+        }
+    }
+    Args { positional, flags, overrides }
+}
+
+fn build_config(args: &Args) -> anyhow::Result<RunConfig> {
+    let mut cfg = if args.flags.get("smoke").map(|v| v == "true").unwrap_or(false) {
+        RunConfig::smoke()
+    } else {
+        RunConfig::default()
+    };
+    if let Some(path) = args.flags.get("config") {
+        let text = std::fs::read_to_string(path)?;
+        cfg.apply_json(&rlflow::util::json::parse(&text)?)?;
+    }
+    if let Some(g) = args.flags.get("graph") {
+        cfg.graph = g.clone();
+    }
+    for o in &args.overrides {
+        cfg.apply_override(o)?;
+    }
+    Ok(cfg)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = parse_args();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "zoo" => cmd_zoo(),
+        "optimize" => cmd_optimize(&args),
+        "train" => cmd_train(&args),
+        "experiment" => cmd_experiment(&args),
+        "generate-rules" => cmd_generate_rules(&args),
+        _ => {
+            println!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+rlflow — neural-network subgraph transformation with world models
+
+USAGE:
+  rlflow zoo
+  rlflow optimize --graph <name> --method <greedy|taso> [--export out.json]
+  rlflow train [--graph <name>] [--config cfg.json] [--smoke] [--save dir] [-s key=value]...
+  rlflow experiment <table1|table2|table3|fig5|...|fig10|all> [--runs N] [--smoke] [--out dir]
+  rlflow generate-rules [--verify] [--inputs N] [--ops N]
+";
+
+fn cmd_zoo() -> anyhow::Result<()> {
+    let rules = standard_library();
+    let cost = CostModel::new(rlflow::cost::DeviceProfile::rtx2070());
+    println!("{:<15} {:>6} {:>8} {:>12} {:>14}", "Graph", "Ops", "Nodes", "Runtime(ms)", "Substitutions");
+    for (info, g) in rlflow::zoo::all() {
+        println!(
+            "{:<15} {:>6} {:>8} {:>12.3} {:>14}",
+            info.name,
+            g.n_ops(),
+            g.n_live(),
+            cost.graph_runtime_ms(&g),
+            rules.count_matches(&g)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
+    let cfg = build_config(args)?;
+    let graph = rlflow::zoo::by_name(&cfg.graph)?;
+    let rules = standard_library();
+    let cost = CostModel::new(cfg.device);
+    let method = args.flags.get("method").map(String::as_str).unwrap_or("taso");
+    let (optimised, log) = match method {
+        "greedy" => greedy_optimise(&graph, &rules, &cost, 100),
+        "taso" => taso_optimise(&graph, &rules, &cost, &TasoConfig::default()),
+        m => anyhow::bail!("unknown method '{m}' (greedy|taso; for RL use `rlflow train`)"),
+    };
+    println!(
+        "{}: {:.3} ms -> {:.3} ms ({:.1}% better) in {:.2}s, {} graphs explored",
+        cfg.graph,
+        log.initial_ms,
+        log.final_ms,
+        log.improvement_pct(),
+        log.elapsed_s,
+        log.graphs_explored
+    );
+    for (rule, ms) in &log.steps {
+        println!("  applied {:<22} -> {:.3} ms", rule, ms);
+    }
+    if let Some(path) = args.flags.get("export") {
+        rlflow::graph::onnx::save(&optimised, &cfg.graph, path)?;
+        println!("exported optimised graph to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let cfg = build_config(args)?;
+    let engine = Engine::load_default()?;
+    let pipe = Pipeline::new(&engine)?;
+    let graph = rlflow::zoo::by_name(&cfg.graph)?;
+    println!("training model-based agent on {} (seed {})", cfg.graph, cfg.seed);
+    let agent = experiments::train_model_based(&pipe, &cfg, &graph, cfg.seed)?;
+    for (stage, secs) in &agent.stage_seconds {
+        println!("  {:<12} {:.1}s", stage, secs);
+    }
+    let (scores, _, mean_step) =
+        experiments::eval_agent(&pipe, &cfg, &agent, &graph, cfg.eval_episodes, cfg.seed)?;
+    let (m, s) = rlflow::util::stats::mean_std(&scores);
+    println!(
+        "eval: {:.2}% ± {:.2} improvement over {} runs ({:.1} ms/step)",
+        m,
+        s,
+        scores.len(),
+        mean_step * 1e3
+    );
+
+    if let Some(dir) = args.flags.get("save") {
+        std::fs::create_dir_all(dir)?;
+        agent.gnn.save(format!("{dir}/gnn.rlw"))?;
+        agent.wm.save(format!("{dir}/wm.rlw"))?;
+        agent.ctrl.save(format!("{dir}/ctrl.rlw"))?;
+        println!("saved parameters to {dir}/");
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("experiment id required (table1..3, fig5..10, all)"))?;
+    let cfg = build_config(args)?;
+    let runs: usize = args
+        .flags
+        .get("runs")
+        .map(|r| r.parse())
+        .transpose()?
+        .unwrap_or(5);
+    let out = args.flags.get("out").cloned().unwrap_or_else(|| "results".into());
+    let engine = Engine::load_default()?;
+    let ctx = ExperimentCtx::new(&engine, cfg, out);
+    experiments::run(&ctx, id, runs)
+}
+
+fn cmd_generate_rules(args: &Args) -> anyhow::Result<()> {
+    let n_inputs: usize = args.flags.get("inputs").map(|v| v.parse()).transpose()?.unwrap_or(2);
+    let max_ops: usize = args.flags.get("ops").map(|v| v.parse()).transpose()?.unwrap_or(2);
+    let (cands, stats) = rlflow::xfer::generator::generate(n_inputs, max_ops, 42);
+    println!(
+        "enumerated {} graphs, {} fingerprint groups, {} candidate pairs",
+        stats.enumerated, stats.groups, stats.candidates
+    );
+    println!(
+        "pruned: {} renamings, {} common-subgraph; verified: {}",
+        stats.pruned_renaming, stats.pruned_common, stats.verified
+    );
+    for c in cands.iter().filter(|c| c.verified).take(10) {
+        println!("--- verified substitution ---\nLHS:\n{}RHS:\n{}", c.lhs, c.rhs);
+    }
+    if args.flags.get("verify").map(|v| v == "true").unwrap_or(false) {
+        let lib = standard_library();
+        let graphs: Vec<rlflow::graph::Graph> = vec![rlflow::zoo::squeezenet1_1()];
+        println!("verifying curated library on SqueezeNet (interpreter)...");
+        let report = rlflow::xfer::generator::verify_library(&lib, &graphs, 11)?;
+        for (name, sites) in report {
+            println!("  {:<24} {} sites OK", name, sites);
+        }
+    }
+    Ok(())
+}

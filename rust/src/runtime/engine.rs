@@ -1,0 +1,254 @@
+//! PJRT execution engine: load HLO text -> compile -> execute.
+//!
+//! Follows the /opt/xla-example/load_hlo pattern: HLO *text* is the
+//! interchange format (serialized protos from jax >= 0.5 carry 64-bit ids
+//! the bundled xla_extension 0.5.1 rejects), computations were lowered with
+//! `return_tuple=True` so every execution returns one tuple literal that we
+//! decompose host-side.
+//!
+//! Executables are compiled lazily on first use and cached; per-artifact
+//! wall-clock accounting backs the §Perf analysis and the paper's
+//! dream-vs-real step-time comparison (§4.4: 10 ms vs 850 ms).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::time::Instant;
+
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::{ArtifactSpec, Dt, Manifest};
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_s: f64,
+    pub compile_s: f64,
+}
+
+pub struct Engine {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    exes: RefCell<HashMap<String, std::rc::Rc<PjRtLoadedExecutable>>>,
+    stats: RefCell<HashMap<String, ExecStats>>,
+    /// Device-resident parameter buffers keyed by (family, version):
+    /// uploading a 10 MB theta literal per policy call dominated acting
+    /// latency (EXPERIMENTS.md §Perf/L3) — parameters change only at train
+    /// steps, so they stay on device between calls. The host literal is
+    /// kept alongside: `BufferFromHostLiteral` transfers asynchronously and
+    /// the source literal must outlive the transfer (the vendored C shim
+    /// awaits readiness in `execute` for exactly this reason).
+    params: RefCell<HashMap<(String, u64), std::rc::Rc<(PjRtBuffer, Literal)>>>,
+}
+
+impl Engine {
+    pub fn load(manifest: Manifest) -> anyhow::Result<Self> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self {
+            client,
+            manifest,
+            exes: RefCell::new(HashMap::new()),
+            stats: RefCell::new(HashMap::new()),
+            params: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Load with the default artifact directory.
+    pub fn load_default() -> anyhow::Result<Self> {
+        Self::load(Manifest::load(Manifest::default_dir())?)
+    }
+
+    fn executable(&self, name: &str) -> anyhow::Result<std::rc::Rc<PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let t0 = Instant::now();
+        let path = self.manifest.hlo_path(name)?;
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.stats.borrow_mut().entry(name.to_string()).or_default().compile_s += dt;
+        let rc = std::rc::Rc::new(exe);
+        self.exes.borrow_mut().insert(name.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Eagerly compile a set of artifacts (avoids first-call latency spikes).
+    pub fn warmup(&self, names: &[&str]) -> anyhow::Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact. Argument count and (for f32/i32 tensors)
+    /// element counts are validated against the manifest.
+    pub fn exec(&self, name: &str, args: &[Literal]) -> anyhow::Result<Vec<Literal>> {
+        let spec = self.manifest.artifact(name)?.clone();
+        anyhow::ensure!(
+            args.len() == spec.inputs.len(),
+            "{name}: got {} args, manifest says {}",
+            args.len(),
+            spec.inputs.len()
+        );
+        for (lit, arg) in args.iter().zip(&spec.inputs) {
+            let got = lit.element_count();
+            anyhow::ensure!(
+                got == arg.n_elems(),
+                "{name}.{}: literal has {} elems, expected {} {:?}",
+                arg.name,
+                got,
+                arg.n_elems(),
+                arg.shape
+            );
+        }
+        let exe = self.executable(name)?;
+        let t0 = Instant::now();
+        let outs = exe
+            .execute(args)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
+        let result = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?;
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))?;
+        anyhow::ensure!(
+            parts.len() == spec.outputs.len(),
+            "{name}: got {} outputs, manifest says {}",
+            parts.len(),
+            spec.outputs.len()
+        );
+        let dt = t0.elapsed().as_secs_f64();
+        let mut stats = self.stats.borrow_mut();
+        let s = stats.entry(name.to_string()).or_default();
+        s.calls += 1;
+        s.total_s += dt;
+        Ok(parts)
+    }
+
+    /// Upload a literal to the device.
+    pub fn upload(&self, lit: &Literal) -> anyhow::Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .map_err(|e| anyhow::anyhow!("upload: {e:?}"))
+    }
+
+    /// Device-resident copy of a parameter store's theta, cached by
+    /// (family, version). Superseded versions are evicted.
+    pub fn device_theta(
+        &self,
+        store: &super::params::ParamStore,
+    ) -> anyhow::Result<std::rc::Rc<(PjRtBuffer, Literal)>> {
+        let key = (store.family.clone(), store.version);
+        if let Some(b) = self.params.borrow().get(&key) {
+            return Ok(b.clone());
+        }
+        let lit = store.theta_lit()?;
+        let buf = self.upload(&lit)?;
+        let entry = std::rc::Rc::new((buf, lit));
+        let mut cache = self.params.borrow_mut();
+        cache.retain(|(fam, _), _| fam != &store.family);
+        cache.insert(key, entry.clone());
+        Ok(entry)
+    }
+
+    /// Execute with a device-resident leading argument (theta) and host
+    /// literals for the rest — the acting hot path.
+    pub fn exec_with_theta(
+        &self,
+        name: &str,
+        theta: &(PjRtBuffer, Literal),
+        rest: &[Literal],
+    ) -> anyhow::Result<Vec<Literal>> {
+        let spec = self.manifest.artifact(name)?.clone();
+        anyhow::ensure!(
+            rest.len() + 1 == spec.inputs.len(),
+            "{name}: got {} args, manifest says {}",
+            rest.len() + 1,
+            spec.inputs.len()
+        );
+        let exe = self.executable(name)?;
+        let t0 = Instant::now();
+        let mut bufs: Vec<PjRtBuffer> = Vec::with_capacity(rest.len());
+        for lit in rest {
+            bufs.push(self.upload(lit)?);
+        }
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(rest.len() + 1);
+        args.push(&theta.0);
+        args.extend(bufs.iter());
+        let outs = exe
+            .execute_b(&args)
+            .map_err(|e| anyhow::anyhow!("execute_b {name}: {e:?}"))?;
+        let result = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?;
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        let mut stats = self.stats.borrow_mut();
+        let s = stats.entry(name.to_string()).or_default();
+        s.calls += 1;
+        s.total_s += dt;
+        Ok(parts)
+    }
+
+    pub fn stats(&self) -> HashMap<String, ExecStats> {
+        self.stats.borrow().clone()
+    }
+
+    pub fn spec(&self, name: &str) -> anyhow::Result<&ArtifactSpec> {
+        self.manifest.artifact(name)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal helpers
+// ---------------------------------------------------------------------------
+
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> anyhow::Result<Literal> {
+    anyhow::ensure!(shape.iter().product::<usize>() == data.len(), "lit_f32 shape mismatch");
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("reshape literal: {e:?}"))
+}
+
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> anyhow::Result<Literal> {
+    anyhow::ensure!(shape.iter().product::<usize>() == data.len(), "lit_i32 shape mismatch");
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("reshape literal: {e:?}"))
+}
+
+pub fn lit_scalar_f32(v: f32) -> Literal {
+    Literal::scalar(v)
+}
+
+pub fn lit_scalar_i32(v: i32) -> Literal {
+    Literal::scalar(v)
+}
+
+pub fn zeros_like_spec(spec: &super::manifest::ArgSpec) -> anyhow::Result<Literal> {
+    match spec.dtype {
+        Dt::F32 => lit_f32(&vec![0.0; spec.n_elems()], &spec.shape),
+        Dt::I32 => lit_i32(&vec![0; spec.n_elems()], &spec.shape),
+    }
+}
+
+pub fn to_vec_f32(l: &Literal) -> anyhow::Result<Vec<f32>> {
+    l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("literal to f32 vec: {e:?}"))
+}
+
+pub fn scalar_f32(l: &Literal) -> anyhow::Result<f32> {
+    l.get_first_element::<f32>()
+        .map_err(|e| anyhow::anyhow!("literal scalar: {e:?}"))
+}

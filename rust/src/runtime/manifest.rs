@@ -1,0 +1,151 @@
+//! `artifacts/manifest.json` — the L2 -> L3 contract.
+//!
+//! aot.py writes it; this module is the only Rust code that knows its
+//! schema. All hyperparameters (MAX_NODES, N_XFERS, ...) reach the Rust
+//! side exclusively through here — DESIGN.md forbids hardcoding them.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::parse;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dt {
+    F32,
+    I32,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dt,
+}
+
+impl ArgSpec {
+    pub fn n_elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<ArgSpec>,
+    pub outputs: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub hp: HashMap<String, f64>,
+    pub param_sizes: HashMap<String, usize>,
+    pub artifacts: HashMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load<P: AsRef<Path>>(dir: P) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("cannot read {} (run `make artifacts`): {e}", path.display()))?;
+        let j = parse(&text)?;
+
+        let mut hp = HashMap::new();
+        for (k, v) in j.get("hp")?.as_obj()? {
+            hp.insert(k.clone(), v.as_f64()?);
+        }
+        let mut param_sizes = HashMap::new();
+        for (k, v) in j.get("param_sizes")?.as_obj()? {
+            param_sizes.insert(k.clone(), v.as_usize()?);
+        }
+        let mut artifacts = HashMap::new();
+        for (name, a) in j.get("artifacts")?.as_obj()? {
+            let inputs = a
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(|i| {
+                    Ok(ArgSpec {
+                        name: i.get("name")?.as_str()?.to_string(),
+                        shape: i.get("shape")?.usize_array()?,
+                        dtype: match i.get("dtype")?.as_str()? {
+                            "float32" => Dt::F32,
+                            "int32" => Dt::I32,
+                            d => anyhow::bail!("unsupported dtype {}", d),
+                        },
+                    })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let outputs = a
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(|o| Ok(o.as_str()?.to_string()))
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec { file: a.get("file")?.as_str()?.to_string(), inputs, outputs },
+            );
+        }
+        Ok(Self { dir, hp, param_sizes, artifacts })
+    }
+
+    pub fn hp_usize(&self, key: &str) -> anyhow::Result<usize> {
+        let v = *self
+            .hp
+            .get(key)
+            .ok_or_else(|| anyhow::anyhow!("hp '{}' missing from manifest", key))?;
+        Ok(v as usize)
+    }
+
+    pub fn artifact(&self, name: &str) -> anyhow::Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact '{}' not in manifest", name))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> anyhow::Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+
+    /// Standard artifact directory: $RLFLOW_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("RLFLOW_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        Manifest::default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(Manifest::default_dir()).unwrap();
+        assert!(m.hp_usize("MAX_NODES").unwrap() >= 64);
+        assert!(m.hp_usize("N_XFERS").unwrap() >= 32);
+        assert_eq!(m.hp_usize("MAX_LOCS").unwrap(), 200);
+        let spec = m.artifact("wm_step_1").unwrap();
+        assert_eq!(spec.outputs.len(), 8);
+        assert!(m.hlo_path("wm_step_1").unwrap().exists());
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        if !artifacts_available() {
+            return;
+        }
+        let m = Manifest::load(Manifest::default_dir()).unwrap();
+        assert!(m.artifact("nope").is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: the bridge between the Rust coordinator and the AOT
+//! artifacts produced by `make artifacts` (see DESIGN.md architecture).
+
+pub mod engine;
+pub mod manifest;
+pub mod params;
+
+pub use engine::{lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, scalar_f32, to_vec_f32, zeros_like_spec, Engine};
+pub use manifest::{ArgSpec, ArtifactSpec, Dt, Manifest};
+pub use params::ParamStore;

@@ -1,0 +1,150 @@
+//! Parameter + optimiser state for one model family (gnn / wm / ctrl).
+//!
+//! Parameters are flat f32 vectors (the L2 contract, see model.py). The
+//! store owns `(theta, m, v, t)` as host vectors, threads them through
+//! train-step artifacts, and persists to a tiny length-prefixed binary
+//! format (`.rlw`) so trained agents can be reloaded between runs.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use xla::Literal;
+
+use super::engine::{lit_f32, lit_scalar_f32, scalar_f32, to_vec_f32, Engine};
+
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    pub family: String,
+    pub theta: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t: f32,
+    /// Monotone counter bumped on every parameter change; keys the
+    /// engine's device-resident theta cache.
+    pub version: u64,
+}
+
+impl ParamStore {
+    /// Initialise via the family's `*_init` artifact.
+    pub fn init(engine: &Engine, family: &str, seed: i32) -> anyhow::Result<Self> {
+        let out = engine.exec(&format!("{family}_init"), &[Literal::scalar(seed)])?;
+        let theta = to_vec_f32(&out[0])?;
+        let n = theta.len();
+        let expected = *engine
+            .manifest
+            .param_sizes
+            .get(family)
+            .ok_or_else(|| anyhow::anyhow!("unknown family {family}"))?;
+        anyhow::ensure!(n == expected, "{family}: init returned {n} params, manifest says {expected}");
+        Ok(Self { family: family.to_string(), theta, m: vec![0.0; n], v: vec![0.0; n], t: 0.0, version: 0 })
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.theta.len()
+    }
+
+    /// The four leading arguments of every `*_train` artifact.
+    pub fn train_args(&self) -> anyhow::Result<Vec<Literal>> {
+        let n = self.theta.len();
+        Ok(vec![
+            lit_f32(&self.theta, &[n])?,
+            lit_f32(&self.m, &[n])?,
+            lit_f32(&self.v, &[n])?,
+            lit_scalar_f32(self.t),
+        ])
+    }
+
+    pub fn theta_lit(&self) -> anyhow::Result<Literal> {
+        lit_f32(&self.theta, &[self.theta.len()])
+    }
+
+    /// Absorb the four leading outputs of a train-step artifact.
+    pub fn absorb(&mut self, outs: &[Literal]) -> anyhow::Result<()> {
+        anyhow::ensure!(outs.len() >= 4, "train step returned too few outputs");
+        self.theta = to_vec_f32(&outs[0])?;
+        self.m = to_vec_f32(&outs[1])?;
+        self.v = to_vec_f32(&outs[2])?;
+        self.t = scalar_f32(&outs[3])?;
+        self.version += 1;
+        Ok(())
+    }
+
+    // ---- persistence ----------------------------------------------------
+
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> anyhow::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(b"RLW1")?;
+        let name = self.family.as_bytes();
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name)?;
+        f.write_all(&(self.theta.len() as u64).to_le_bytes())?;
+        f.write_all(&self.t.to_le_bytes())?;
+        for vec in [&self.theta, &self.m, &self.v] {
+            let bytes: Vec<u8> = vec.iter().flat_map(|x| x.to_le_bytes()).collect();
+            f.write_all(&bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load_file<P: AsRef<Path>>(path: P) -> anyhow::Result<Self> {
+        let mut f = std::fs::File::open(path)?;
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == b"RLW1", "bad magic");
+        let mut len4 = [0u8; 4];
+        f.read_exact(&mut len4)?;
+        let name_len = u32::from_le_bytes(len4) as usize;
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let mut len8 = [0u8; 8];
+        f.read_exact(&mut len8)?;
+        let n = u64::from_le_bytes(len8) as usize;
+        let mut t4 = [0u8; 4];
+        f.read_exact(&mut t4)?;
+        let t = f32::from_le_bytes(t4);
+        let mut read_vec = |n: usize| -> anyhow::Result<Vec<f32>> {
+            let mut buf = vec![0u8; n * 4];
+            f.read_exact(&mut buf)?;
+            Ok(buf
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect())
+        };
+        let theta = read_vec(n)?;
+        let m = read_vec(n)?;
+        let v = read_vec(n)?;
+        Ok(Self { family: String::from_utf8(name)?, theta, m, v, t, version: 0 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_load_round_trip() {
+        let store = ParamStore {
+            family: "wm".into(),
+            theta: vec![1.5, -2.0, 3.25],
+            m: vec![0.1, 0.2, 0.3],
+            v: vec![0.01, 0.02, 0.03],
+            t: 7.0,
+            version: 3,
+        };
+        let path = std::env::temp_dir().join("rlflow_params_test.rlw");
+        store.save(&path).unwrap();
+        let back = ParamStore::load_file(&path).unwrap();
+        assert_eq!(back.family, "wm");
+        assert_eq!(back.theta, store.theta);
+        assert_eq!(back.m, store.m);
+        assert_eq!(back.v, store.v);
+        assert_eq!(back.t, 7.0);
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        let path = std::env::temp_dir().join("rlflow_params_bad.rlw");
+        std::fs::write(&path, b"JUNKdata").unwrap();
+        assert!(ParamStore::load_file(&path).is_err());
+    }
+}

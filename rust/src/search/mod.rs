@@ -1,0 +1,262 @@
+//! Search baselines the paper compares against (§4.4, Fig. 6/7).
+//!
+//! * [`greedy_optimise`] — TensorFlow-style rule application: repeatedly
+//!   take the single best cost-*decreasing* substitution until none exists.
+//! * [`taso_optimise`] — TASO's cost-based backtracking search, realised
+//!   as a relaxed beam: at each depth every substitution of every frontier
+//!   graph is tried; candidates below `alpha * best_cost` survive (the
+//!   relaxation that lets the search take locally-worsening steps towards
+//!   better optima), deduplicated by canonical hash, best `beam` kept.
+//!
+//! Both run over exactly the same rule set and cost model as the RL agent,
+//! so Fig. 6 compares *search strategies*, not substitution vocabularies.
+
+use std::collections::HashSet;
+use std::time::Instant;
+
+use crate::cost::CostModel;
+use crate::graph::{canonical_hash, Graph};
+use crate::xfer::{apply_rule, RuleSet};
+
+#[derive(Debug, Clone)]
+pub struct SearchLog {
+    pub steps: Vec<(String, f64)>,
+    pub initial_ms: f64,
+    pub final_ms: f64,
+    pub elapsed_s: f64,
+    pub graphs_explored: usize,
+}
+
+impl SearchLog {
+    pub fn improvement_pct(&self) -> f64 {
+        100.0 * (self.initial_ms - self.final_ms) / self.initial_ms.max(1e-12)
+    }
+}
+
+/// TF-style greedy optimisation.
+pub fn greedy_optimise(
+    graph: &Graph,
+    rules: &RuleSet,
+    cost: &CostModel,
+    max_steps: usize,
+) -> (Graph, SearchLog) {
+    let start = Instant::now();
+    let initial_ms = cost.graph_runtime_ms(graph);
+    let mut current = graph.clone();
+    let mut current_ms = initial_ms;
+    let mut log = Vec::new();
+    let mut explored = 0;
+
+    for _ in 0..max_steps {
+        let mut best: Option<(Graph, f64, &'static str)> = None;
+        for rule in &rules.rules {
+            for loc in rule.find(&current) {
+                let mut candidate = current.clone();
+                if apply_rule(&mut candidate, rule.as_ref(), &loc).is_err() {
+                    continue;
+                }
+                explored += 1;
+                let ms = cost.graph_runtime_ms(&candidate);
+                if ms < current_ms - 1e-12
+                    && best.as_ref().map_or(true, |(_, b, _)| ms < *b)
+                {
+                    best = Some((candidate, ms, rule.name()));
+                }
+            }
+        }
+        match best {
+            Some((g, ms, name)) => {
+                current = g;
+                current_ms = ms;
+                log.push((name.to_string(), ms));
+            }
+            None => break,
+        }
+    }
+    (
+        current,
+        SearchLog {
+            steps: log,
+            initial_ms,
+            final_ms: current_ms,
+            elapsed_s: start.elapsed().as_secs_f64(),
+            graphs_explored: explored,
+        },
+    )
+}
+
+#[derive(Debug, Clone)]
+pub struct TasoConfig {
+    /// Relaxation factor: candidates with cost < alpha * best are kept.
+    pub alpha: f64,
+    /// Beam width (graphs carried between iterations).
+    pub beam: usize,
+    /// Maximum search depth (substitution-sequence length).
+    pub depth: usize,
+}
+
+impl Default for TasoConfig {
+    fn default() -> Self {
+        Self { alpha: 1.05, beam: 4, depth: 80 }
+    }
+}
+
+/// TASO-style cost-based backtracking search, realised as a relaxed beam:
+/// at every depth, all substitutions of every frontier graph are applied;
+/// candidates costing less than `alpha * best` survive (the relaxation that
+/// lets the search take locally-worsening steps), deduplicated by canonical
+/// hash, and the cheapest `beam` continue.
+pub fn taso_optimise(
+    graph: &Graph,
+    rules: &RuleSet,
+    cost: &CostModel,
+    cfg: &TasoConfig,
+) -> (Graph, SearchLog) {
+    let start = Instant::now();
+    let initial_ms = cost.graph_runtime_ms(graph);
+    let mut best_graph = graph.clone();
+    let mut best_ms = initial_ms;
+    let mut seen: HashSet<u64> = HashSet::new();
+    seen.insert(canonical_hash(graph));
+
+    let mut frontier: Vec<(f64, Graph)> = vec![(initial_ms, graph.clone())];
+    let mut explored = 0;
+    let mut log = Vec::new();
+    let mut stale = 0usize;
+
+    for _ in 0..cfg.depth {
+        let mut candidates: Vec<(f64, Graph, &'static str)> = Vec::new();
+        for (_, g) in &frontier {
+            for rule in &rules.rules {
+                for loc in rule.find(g) {
+                    let mut candidate = g.clone();
+                    if apply_rule(&mut candidate, rule.as_ref(), &loc).is_err() {
+                        continue;
+                    }
+                    let h = canonical_hash(&candidate);
+                    if !seen.insert(h) {
+                        continue;
+                    }
+                    explored += 1;
+                    let ms = cost.graph_runtime_ms(&candidate);
+                    if ms < cfg.alpha * best_ms {
+                        candidates.push((ms, candidate, rule.name()));
+                    }
+                }
+            }
+        }
+        if candidates.is_empty() {
+            break;
+        }
+        candidates.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+        candidates.truncate(cfg.beam);
+        if candidates[0].0 < best_ms {
+            best_ms = candidates[0].0;
+            best_graph = candidates[0].1.clone();
+            log.push((candidates[0].2.to_string(), best_ms));
+            stale = 0;
+        } else {
+            // Within-alpha exploration that stops paying off terminates the
+            // search (TASO's budget exhaustion analogue).
+            stale += 1;
+            if stale >= 6 {
+                break;
+            }
+        }
+        frontier = candidates.into_iter().map(|(ms, g, _)| (ms, g)).collect();
+    }
+    (
+        best_graph,
+        SearchLog {
+            steps: log,
+            initial_ms,
+            final_ms: best_ms,
+            elapsed_s: start.elapsed().as_secs_f64(),
+            graphs_explored: explored,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::DeviceProfile;
+    use crate::graph::{GraphBuilder, PadMode};
+    use crate::xfer::library::standard_library;
+
+    fn fixture() -> (Graph, RuleSet, CostModel) {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 3, 16, 16]);
+        let c1 = b.conv_bn_relu(x, 8, 3, 1, PadMode::Same).unwrap();
+        let c2 = b.conv(c1, 8, 1, 1, PadMode::Same).unwrap();
+        let c3 = b.conv(c2, 8, 1, 1, PadMode::Same).unwrap();
+        let _ = b.relu(c3).unwrap();
+        (
+            b.finish(),
+            standard_library(),
+            CostModel::new(DeviceProfile::rtx2070()),
+        )
+    }
+
+    #[test]
+    fn greedy_strictly_improves() {
+        let (g, rules, cost) = fixture();
+        let (opt, log) = greedy_optimise(&g, &rules, &cost, 50);
+        assert!(log.final_ms < log.initial_ms);
+        assert!(log.improvement_pct() > 0.0);
+        opt.validate().unwrap();
+        // Log runtimes decrease monotonically.
+        for w in log.steps.windows(2) {
+            assert!(w[1].1 <= w[0].1 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn taso_at_least_matches_greedy() {
+        let (g, rules, cost) = fixture();
+        let (_, greedy_log) = greedy_optimise(&g, &rules, &cost, 50);
+        let (opt, taso_log) = taso_optimise(&g, &rules, &cost, &TasoConfig::default());
+        assert!(
+            taso_log.final_ms <= greedy_log.final_ms + 1e-9,
+            "taso {} > greedy {}",
+            taso_log.final_ms,
+            greedy_log.final_ms
+        );
+        opt.validate().unwrap();
+    }
+
+    #[test]
+    fn taso_respects_depth_bound() {
+        let (g, rules, cost) = fixture();
+        let cfg = TasoConfig { depth: 1, beam: 4, ..Default::default() };
+        let (_, log) = taso_optimise(&g, &rules, &cost, &cfg);
+        // One depth level: explored graphs bounded by first-level matches.
+        assert!(log.graphs_explored <= rules.count_matches(&g));
+        assert!(log.steps.len() <= 1);
+    }
+
+    #[test]
+    fn optimised_graphs_semantically_equal() {
+        let (g, rules, cost) = fixture();
+        let (greedy_g, _) = greedy_optimise(&g, &rules, &cost, 20);
+        assert!(crate::interp::semantically_equal(&g, &greedy_g, 2, 77, 2e-3).unwrap());
+        let (taso_g, _) = taso_optimise(
+            &g,
+            &rules,
+            &cost,
+            &TasoConfig { depth: 4, beam: 4, ..Default::default() },
+        );
+        assert!(crate::interp::semantically_equal(&g, &taso_g, 2, 78, 2e-3).unwrap());
+    }
+
+    #[test]
+    fn bert_transformer_fusions_found_by_greedy() {
+        let g = crate::zoo::bert_base();
+        let rules = standard_library();
+        let cost = CostModel::new(DeviceProfile::rtx2070());
+        let (_, log) = greedy_optimise(&g, &rules, &cost, 60);
+        assert!(log.improvement_pct() > 0.5, "got {}%", log.improvement_pct());
+        // The transformer fusion family must appear in the log.
+        assert!(log.steps.iter().any(|(n, _)| n == "fuse_add_ln" || n == "merge_linear3"));
+    }
+}

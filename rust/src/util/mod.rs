@@ -1,0 +1,9 @@
+//! Small shared utilities: deterministic RNG, sampling, CSV emission.
+
+pub mod csv;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+pub use stats::{mean, mean_std};

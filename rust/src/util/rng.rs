@@ -1,0 +1,181 @@
+//! Seeded xoshiro256** RNG.
+//!
+//! Every stochastic component in RLFlow (random agent, measurement noise,
+//! GMM sampling, rollout shuffling) draws from one of these, seeded from the
+//! experiment config, so every experiment in EXPERIMENTS.md is replayable
+//! bit-for-bit.
+
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // SplitMix64 expansion of the seed into the xoshiro state.
+        let mut x = seed.wrapping_add(0x9E3779B97F4A7C15);
+        let mut next = || {
+            x = x.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Self { s: [next(), next(), next(), next()] }
+    }
+
+    /// Derive an independent stream (for parallel workers).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0xA24BAED4963EE407))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform in [0, 1) with f64 precision.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n). n must be > 0.
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.f32().max(1e-7);
+        let u2 = self.f32();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos()
+    }
+
+    /// Sample an index from unnormalised non-negative weights.
+    pub fn sample_weighted(&mut self, w: &[f32]) -> usize {
+        let total: f32 = w.iter().sum();
+        if total <= 0.0 {
+            return self.below(w.len().max(1));
+        }
+        let mut r = self.f32() * total;
+        for (i, &wi) in w.iter().enumerate() {
+            r -= wi;
+            if r <= 0.0 {
+                return i;
+            }
+        }
+        w.len() - 1
+    }
+
+    /// Sample from logits (softmax with temperature 1), respecting a mask.
+    /// Masked-out entries (mask=false) are never selected.
+    pub fn sample_logits_masked(&mut self, logits: &[f32], mask: &[bool]) -> usize {
+        debug_assert_eq!(logits.len(), mask.len());
+        let mx = logits
+            .iter()
+            .zip(mask)
+            .filter(|(_, &m)| m)
+            .map(|(&l, _)| l)
+            .fold(f32::NEG_INFINITY, f32::max);
+        if !mx.is_finite() {
+            // No valid entry: caller's invariant broken; fall back uniform.
+            return self.below(logits.len());
+        }
+        let w: Vec<f32> = logits
+            .iter()
+            .zip(mask)
+            .map(|(&l, &m)| if m { (l - mx).exp() } else { 0.0 })
+            .collect();
+        self.sample_weighted(&w)
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_diverge() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Rng::new(3);
+        for _ in 0..1000 {
+            assert!(r.below(13) < 13);
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 50_000;
+        let xs: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        let mean: f32 = xs.iter().sum::<f32>() / n as f32;
+        let var: f32 = xs.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn masked_sampling_respects_mask() {
+        let mut r = Rng::new(5);
+        let logits = [0.0_f32, 10.0, 0.0];
+        let mask = [true, false, true];
+        for _ in 0..200 {
+            assert_ne!(r.sample_logits_masked(&logits, &mask), 1);
+        }
+    }
+
+    #[test]
+    fn weighted_prefers_heavy() {
+        let mut r = Rng::new(9);
+        let mut counts = [0usize; 2];
+        for _ in 0..2000 {
+            counts[r.sample_weighted(&[1.0, 9.0])] += 1;
+        }
+        assert!(counts[1] > counts[0] * 4);
+    }
+}

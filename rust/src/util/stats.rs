@@ -1,0 +1,64 @@
+//! Tiny statistics helpers used by the experiment harness.
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// (mean, sample standard deviation).
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    let m = mean(xs);
+    if xs.len() < 2 {
+        return (m, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64;
+    (m, var.sqrt())
+}
+
+/// Half-width of the 95% confidence interval (normal approximation).
+pub fn ci95(xs: &[f64]) -> f64 {
+    let (_, sd) = mean_std(xs);
+    1.96 * sd / (xs.len().max(1) as f64).sqrt()
+}
+
+/// Min-max normalise into [0, 1]; constant series map to 0.5.
+pub fn minmax_normalise(xs: &[f64]) -> Vec<f64> {
+    let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if !(hi - lo).is_finite() || hi - lo < 1e-12 {
+        return vec![0.5; xs.len()];
+    }
+    xs.iter().map(|x| (x - lo) / (hi - lo)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basic() {
+        let (m, s) = mean_std(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((m - 5.0).abs() < 1e-12);
+        assert!((s - 2.138089935299395).abs() < 1e-9);
+    }
+
+    #[test]
+    fn minmax_bounds() {
+        let n = minmax_normalise(&[3.0, 1.0, 2.0]);
+        assert_eq!(n, vec![1.0, 0.0, 0.5]);
+    }
+
+    #[test]
+    fn minmax_constant() {
+        assert_eq!(minmax_normalise(&[2.0, 2.0]), vec![0.5, 0.5]);
+    }
+
+    #[test]
+    fn ci_shrinks_with_n() {
+        let a = ci95(&[1.0, 2.0, 3.0, 4.0]);
+        let b = ci95(&[1.0, 2.0, 3.0, 4.0, 1.0, 2.0, 3.0, 4.0, 1.0, 2.0, 3.0, 4.0]);
+        assert!(b < a);
+    }
+}

@@ -1,0 +1,163 @@
+//! The imagined environment (§3.3): controller training happens entirely
+//! inside these latent rollouts — no calls into the real graph environment.
+//!
+//! A step runs `wm_step_b`, samples the next latent from the MDN with
+//! temperature τ, reads the predicted reward, thresholds the predicted
+//! xfer-validity logits into the next action mask, and thresholds the done
+//! head. All three failure modes §4.7 analyses (imperfect reward, invalid
+//! next state, wrong mask) are therefore reproducible here.
+
+use crate::runtime::{lit_f32, lit_i32, to_vec_f32, Engine, ParamStore};
+use crate::util::Rng;
+
+use super::mdn::sample_mdn;
+
+pub struct DreamEnv<'e> {
+    pub engine: &'e Engine,
+    pub temperature: f32,
+    pub b: usize,
+    zdim: usize,
+    rdim: usize,
+    x1: usize,
+    k: usize,
+    /// Reward scale used at WM training time (predictions are unscaled by it).
+    pub reward_scale: f32,
+    pub z: Vec<f32>,
+    pub h: Vec<f32>,
+    pub c: Vec<f32>,
+    /// Current per-row xfer mask (f32 0/1), `b * x1`.
+    pub xmask: Vec<f32>,
+    pub done: Vec<bool>,
+}
+
+impl<'e> DreamEnv<'e> {
+    pub fn new(engine: &'e Engine, temperature: f32, reward_scale: f32) -> anyhow::Result<Self> {
+        let b = engine.manifest.hp_usize("B_DREAM")?;
+        let zdim = engine.manifest.hp_usize("LATENT")?;
+        let rdim = engine.manifest.hp_usize("RNN_HIDDEN")?;
+        let x1 = engine.manifest.hp_usize("N_XFERS1")?;
+        let k = engine.manifest.hp_usize("MDN_K")?;
+        Ok(Self {
+            engine,
+            temperature,
+            b,
+            zdim,
+            rdim,
+            x1,
+            k,
+            reward_scale,
+            z: vec![0.0; b * zdim],
+            h: vec![0.0; b * rdim],
+            c: vec![0.0; b * rdim],
+            xmask: vec![1.0; b * x1],
+            done: vec![false; b],
+        })
+    }
+
+    /// Reset every row from real initial latents + masks (cycled if fewer
+    /// provided than the dream batch).
+    pub fn reset(&mut self, z0: &[Vec<f32>], xmask0: &[Vec<f32>]) -> anyhow::Result<()> {
+        anyhow::ensure!(!z0.is_empty() && z0.len() == xmask0.len(), "dream reset needs seeds");
+        for row in 0..self.b {
+            let src = row % z0.len();
+            anyhow::ensure!(z0[src].len() == self.zdim, "latent width mismatch");
+            anyhow::ensure!(xmask0[src].len() == self.x1, "mask width mismatch");
+            self.z[row * self.zdim..(row + 1) * self.zdim].copy_from_slice(&z0[src]);
+            self.xmask[row * self.x1..(row + 1) * self.x1].copy_from_slice(&xmask0[src]);
+        }
+        self.h.fill(0.0);
+        self.c.fill(0.0);
+        self.done.fill(false);
+        Ok(())
+    }
+
+    pub fn noop(&self) -> usize {
+        self.x1 - 1
+    }
+
+    /// One imagined step for the whole batch. Returns (rewards, dones).
+    pub fn step(
+        &mut self,
+        wm: &ParamStore,
+        actions: &[(usize, usize)],
+        rng: &mut Rng,
+    ) -> anyhow::Result<(Vec<f32>, Vec<bool>)> {
+        anyhow::ensure!(actions.len() == self.b, "dream step: wrong batch size");
+        let mut a = Vec::with_capacity(self.b * 2);
+        for &(x, l) in actions {
+            a.push(x as i32);
+            a.push(l as i32);
+        }
+        let theta = self.engine.device_theta(wm)?;
+        let out = self.engine.exec_with_theta(
+            "wm_step_b",
+            &theta,
+            &[
+                lit_f32(&self.z, &[self.b, self.zdim])?,
+                lit_i32(&a, &[self.b, 2])?,
+                lit_f32(&self.h, &[self.b, self.rdim])?,
+                lit_f32(&self.c, &[self.b, self.rdim])?,
+            ],
+        )?;
+        let log_pi = to_vec_f32(&out[0])?;
+        let mu = to_vec_f32(&out[1])?;
+        let log_sig = to_vec_f32(&out[2])?;
+        let rewards_pred = to_vec_f32(&out[3])?;
+        let mask_logits = to_vec_f32(&out[4])?;
+        let done_logits = to_vec_f32(&out[5])?;
+        let h1 = to_vec_f32(&out[6])?;
+        let c1 = to_vec_f32(&out[7])?;
+
+        let zk = self.zdim * self.k;
+        let mut rewards = vec![0.0f32; self.b];
+        let mut dones = vec![false; self.b];
+        for row in 0..self.b {
+            if self.done[row] {
+                dones[row] = true;
+                continue;
+            }
+            // NO-OP terminates in the real env; mirror that exactly.
+            let noop_taken = actions[row].0 == self.noop();
+            let z_next = sample_mdn(
+                &log_pi[row * zk..(row + 1) * zk],
+                &mu[row * zk..(row + 1) * zk],
+                &log_sig[row * zk..(row + 1) * zk],
+                self.zdim,
+                self.k,
+                self.temperature,
+                rng,
+            );
+            self.z[row * self.zdim..(row + 1) * self.zdim].copy_from_slice(&z_next);
+            rewards[row] = if noop_taken { 0.0 } else { rewards_pred[row] * self.reward_scale };
+            // Predicted next-state xfer mask; NO-OP slot always valid.
+            for xi in 0..self.x1 {
+                let logit = mask_logits[row * self.x1 + xi];
+                self.xmask[row * self.x1 + xi] =
+                    if xi == self.noop() || logit > 0.0 { 1.0 } else { 0.0 };
+            }
+            let done_pred = done_logits[row] > 0.0;
+            dones[row] = noop_taken || done_pred;
+            self.done[row] = dones[row];
+        }
+        self.h = h1;
+        self.c = c1;
+        Ok((rewards, dones))
+    }
+
+    pub fn all_done(&self) -> bool {
+        self.done.iter().all(|&d| d)
+    }
+
+    /// Row-major copies of the current latent/hidden state (PPO features).
+    pub fn row_z(&self, row: usize) -> Vec<f32> {
+        self.z[row * self.zdim..(row + 1) * self.zdim].to_vec()
+    }
+
+    pub fn row_h(&self, row: usize) -> Vec<f32> {
+        self.h[row * self.rdim..(row + 1) * self.rdim].to_vec()
+    }
+
+    pub fn row_xmask(&self, row: usize) -> Vec<f32> {
+        self.xmask[row * self.x1..(row + 1) * self.x1].to_vec()
+    }
+}

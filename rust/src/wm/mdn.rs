@@ -1,0 +1,117 @@
+//! GMM sampling with temperature (§3.3.2, Fig. 4).
+//!
+//! The `wm_step_*` artifacts return raw MDN parameters; sampling happens
+//! here in Rust so the temperature sweep (Table 3) never re-exports
+//! artifacts. Per Ha & Schmidhuber: mixture logits are divided by τ before
+//! the softmax and the chosen component's σ is scaled by √τ — τ→0 gives
+//! deterministic predictions, larger τ more diverse futures.
+
+use crate::util::Rng;
+
+/// Sample one latent vector from per-dimension K-component mixtures.
+///
+/// `log_pi`, `mu`, `log_sig` are `[z_dim * k]` row-major (dimension-major).
+pub fn sample_mdn(
+    log_pi: &[f32],
+    mu: &[f32],
+    log_sig: &[f32],
+    z_dim: usize,
+    k: usize,
+    temperature: f32,
+    rng: &mut Rng,
+) -> Vec<f32> {
+    debug_assert_eq!(log_pi.len(), z_dim * k);
+    let tau = temperature.max(1e-4);
+    let sqrt_tau = tau.sqrt();
+    let mut out = Vec::with_capacity(z_dim);
+    let all_true = vec![true; k];
+    for d in 0..z_dim {
+        let row = &log_pi[d * k..(d + 1) * k];
+        let scaled: Vec<f32> = row.iter().map(|&l| l / tau).collect();
+        let comp = rng.sample_logits_masked(&scaled, &all_true);
+        let m = mu[d * k + comp];
+        let s = log_sig[d * k + comp].exp();
+        out.push(m + s * sqrt_tau * rng.normal());
+    }
+    out
+}
+
+/// Deterministic mode of the mixture (argmax component mean) — used for
+/// greedy latent rollouts and tests.
+pub fn mdn_mode(log_pi: &[f32], mu: &[f32], z_dim: usize, k: usize) -> Vec<f32> {
+    (0..z_dim)
+        .map(|d| {
+            let row = &log_pi[d * k..(d + 1) * k];
+            let best = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            mu[d * k + best]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn low_temperature_concentrates_on_mode() {
+        let (z, k) = (4, 3);
+        // Component 1 dominant everywhere, mu distinct.
+        let log_pi: Vec<f32> = (0..z * k).map(|i| if i % k == 1 { 5.0 } else { -5.0 }).collect();
+        let mu: Vec<f32> = (0..z * k).map(|i| (i % k) as f32 * 10.0).collect();
+        let log_sig = vec![-6.0; z * k];
+        let mut rng = Rng::new(0);
+        let s = sample_mdn(&log_pi, &mu, &log_sig, z, k, 0.01, &mut rng);
+        let mode = mdn_mode(&log_pi, &mu, z, k);
+        for (a, b) in s.iter().zip(&mode) {
+            assert!((a - b).abs() < 0.1, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn high_temperature_diversifies_components() {
+        let (z, k) = (1, 2);
+        let log_pi = vec![2.0, -2.0]; // component 0 preferred
+        let mu = vec![0.0, 100.0];
+        let log_sig = vec![-6.0, -6.0];
+        let mut rng = Rng::new(1);
+        let mut saw_minor = false;
+        for _ in 0..500 {
+            let s = sample_mdn(&log_pi, &mu, &log_sig, z, k, 3.0, &mut rng);
+            if s[0] > 50.0 {
+                saw_minor = true;
+                break;
+            }
+        }
+        assert!(saw_minor, "tau=3 should occasionally pick the minor component");
+        // At tau=0.05 the minor component should effectively never appear.
+        let mut rng = Rng::new(2);
+        for _ in 0..500 {
+            let s = sample_mdn(&log_pi, &mu, &log_sig, z, k, 0.05, &mut rng);
+            assert!(s[0] < 50.0);
+        }
+    }
+
+    #[test]
+    fn sigma_scales_with_sqrt_tau() {
+        let (z, k) = (1, 1);
+        let log_pi = vec![0.0];
+        let mu = vec![0.0];
+        let log_sig = vec![0.0]; // sigma = 1
+        let spread = |tau: f32, seed: u64| {
+            let mut rng = Rng::new(seed);
+            let xs: Vec<f32> = (0..4000)
+                .map(|_| sample_mdn(&log_pi, &mu, &log_sig, z, k, tau, &mut rng)[0])
+                .collect();
+            let mean = xs.iter().sum::<f32>() / xs.len() as f32;
+            (xs.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / xs.len() as f32).sqrt()
+        };
+        let s1 = spread(1.0, 3);
+        let s4 = spread(4.0, 3);
+        assert!((s4 / s1 - 2.0).abs() < 0.2, "sqrt-tau scaling: {s1} vs {s4}");
+    }
+}

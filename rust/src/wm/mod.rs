@@ -1,0 +1,10 @@
+//! World model (§3.3): MDN-RNN training, GMM sampling with temperature,
+//! and the imagined (dream) environment the controller trains in.
+
+pub mod dream;
+pub mod mdn;
+pub mod trainer;
+
+pub use dream::DreamEnv;
+pub use mdn::{mdn_mode, sample_mdn};
+pub use trainer::{WmLosses, WmTrainCfg, WmTrainer};

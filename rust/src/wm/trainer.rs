@@ -1,0 +1,153 @@
+//! World-model training (§3.3.2, Fig. 8): teacher-forced sequence batches
+//! sampled from collected episodes, driven through the `wm_train` artifact
+//! with the paper's 2nd-degree polynomial learning-rate decay.
+
+use xla::Literal;
+
+use crate::agent::buffer::{sample_windows, Episode};
+use crate::runtime::{lit_f32, lit_i32, lit_scalar_f32, scalar_f32, Engine, ParamStore};
+use crate::util::Rng;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WmLosses {
+    pub total: f32,
+    pub nll: f32,
+    pub reward_mse: f32,
+    pub mask_bce: f32,
+    pub done_bce: f32,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct WmTrainCfg {
+    pub lr_start: f32,
+    pub lr_end: f32,
+    /// Polynomial decay power (paper §4.7: 2nd-degree).
+    pub decay_power: f32,
+    pub total_steps: usize,
+    /// Rewards are divided by this before regression (keeps MSE in range
+    /// against the -100 invalid penalty).
+    pub reward_scale: f32,
+}
+
+impl Default for WmTrainCfg {
+    fn default() -> Self {
+        Self { lr_start: 1e-3, lr_end: 1e-5, decay_power: 2.0, total_steps: 300, reward_scale: 10.0 }
+    }
+}
+
+impl WmTrainCfg {
+    pub fn lr_at(&self, step: usize) -> f32 {
+        let p = (step as f32 / self.total_steps.max(1) as f32).min(1.0);
+        self.lr_end + (self.lr_start - self.lr_end) * (1.0 - p).powf(self.decay_power)
+    }
+}
+
+pub struct WmTrainer<'e> {
+    pub engine: &'e Engine,
+    b: usize,
+    t: usize,
+    zdim: usize,
+    x1: usize,
+}
+
+impl<'e> WmTrainer<'e> {
+    pub fn new(engine: &'e Engine) -> anyhow::Result<Self> {
+        Ok(Self {
+            engine,
+            b: engine.manifest.hp_usize("B_WM")?,
+            t: engine.manifest.hp_usize("SEQ_LEN")?,
+            zdim: engine.manifest.hp_usize("LATENT")?,
+            x1: engine.manifest.hp_usize("N_XFERS1")?,
+        })
+    }
+
+    /// Assemble the 7 batch tensors from sampled episode windows.
+    /// Requires `ep.z` to be filled by the encoder pass.
+    pub fn make_batch(
+        &self,
+        episodes: &[Episode],
+        reward_scale: f32,
+        rng: &mut Rng,
+    ) -> anyhow::Result<Vec<Literal>> {
+        let (b, t, zd, x1) = (self.b, self.t, self.zdim, self.x1);
+        let windows = sample_windows(episodes, b, rng);
+        let mut z = vec![0.0f32; b * t * zd];
+        let mut a = vec![0i32; b * t * 2];
+        let mut z_next = vec![0.0f32; b * t * zd];
+        let mut r = vec![0.0f32; b * t];
+        let mut xm = vec![0.0f32; b * t * x1];
+        let mut done = vec![0.0f32; b * t];
+        let mut valid = vec![0.0f32; b * t];
+
+        for (bi, (ep, start)) in windows.into_iter().enumerate() {
+            anyhow::ensure!(
+                ep.z.len() == ep.states.len() && !ep.z.is_empty(),
+                "episode latents not encoded"
+            );
+            for ti in 0..t {
+                let s = start + ti;
+                if s >= ep.len() {
+                    break;
+                }
+                let base = (bi * t + ti) * zd;
+                z[base..base + zd].copy_from_slice(&ep.z[s]);
+                z_next[base..base + zd].copy_from_slice(&ep.z[s + 1]);
+                a[(bi * t + ti) * 2] = ep.actions[s].0 as i32;
+                a[(bi * t + ti) * 2 + 1] = ep.actions[s].1 as i32;
+                r[bi * t + ti] = ep.rewards[s] / reward_scale;
+                // Mask target: validity of the NEXT state (what the dream
+                // env needs to predict after taking a_t).
+                let xm_base = (bi * t + ti) * x1;
+                xm[xm_base..xm_base + x1].copy_from_slice(&ep.xmasks[s + 1]);
+                done[bi * t + ti] = ep.dones[s];
+                valid[bi * t + ti] = 1.0;
+            }
+        }
+        Ok(vec![
+            lit_f32(&z, &[b, t, zd])?,
+            lit_i32(&a, &[b, t, 2])?,
+            lit_f32(&z_next, &[b, t, zd])?,
+            lit_f32(&r, &[b, t])?,
+            lit_f32(&xm, &[b, t, x1])?,
+            lit_f32(&done, &[b, t])?,
+            lit_f32(&valid, &[b, t])?,
+        ])
+    }
+
+    /// One gradient step; returns the component losses (Fig. 8's curve).
+    pub fn train_step(
+        &self,
+        wm: &mut ParamStore,
+        episodes: &[Episode],
+        lr: f32,
+        reward_scale: f32,
+        rng: &mut Rng,
+    ) -> anyhow::Result<WmLosses> {
+        let mut args = wm.train_args()?;
+        args.extend(self.make_batch(episodes, reward_scale, rng)?);
+        args.push(lit_scalar_f32(lr));
+        let out = self.engine.exec("wm_train", &args)?;
+        wm.absorb(&out)?;
+        Ok(WmLosses {
+            total: scalar_f32(&out[4])?,
+            nll: scalar_f32(&out[5])?,
+            reward_mse: scalar_f32(&out[6])?,
+            mask_bce: scalar_f32(&out[7])?,
+            done_bce: scalar_f32(&out[8])?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn polynomial_decay_schedule() {
+        let cfg = WmTrainCfg { lr_start: 1.0, lr_end: 0.0, decay_power: 2.0, total_steps: 100, reward_scale: 1.0 };
+        assert!((cfg.lr_at(0) - 1.0).abs() < 1e-6);
+        assert!((cfg.lr_at(50) - 0.25).abs() < 1e-6);
+        assert!(cfg.lr_at(100) < 1e-6);
+        assert!(cfg.lr_at(200) < 1e-6); // clamps past the horizon
+    }
+}

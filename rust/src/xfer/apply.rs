@@ -1,0 +1,59 @@
+//! Splice helpers shared by all rule implementations.
+
+use crate::graph::{Graph, NodeId, PortRef};
+
+/// If `p` refers to a source (Input/Weight), wrap it in an `Identity` op so
+/// the spliced value remains an observable graph *output* (sources are never
+/// counted as outputs). Rewrites at graph sinks rely on this.
+fn op_port(g: &mut Graph, p: PortRef) -> anyhow::Result<PortRef> {
+    if matches!(
+        g.node(p.node).op,
+        crate::graph::OpKind::Input | crate::graph::OpKind::Weight
+    ) {
+        Ok(PortRef::of(g.add(crate::graph::OpKind::Identity, &[p])?))
+    } else {
+        Ok(p)
+    }
+}
+
+/// Redirect all consumers of `old` (port 0) to `new`, then kill `old`.
+/// Shapes must match — rewrites may never change an observable tensor.
+pub fn splice(g: &mut Graph, old: NodeId, new: PortRef) -> anyhow::Result<()> {
+    let old_desc = g.node(old).outs[0].clone();
+    let new_desc = g.out_desc(new)?.clone();
+    anyhow::ensure!(
+        old_desc == new_desc,
+        "splice shape mismatch: {} -> {}",
+        old_desc,
+        new_desc
+    );
+    let new = op_port(g, new)?;
+    g.replace_uses(PortRef::of(old), new);
+    g.kill(old);
+    Ok(())
+}
+
+/// Splice a specific output port of a multi-output node.
+pub fn splice_port(g: &mut Graph, old: PortRef, new: PortRef) -> anyhow::Result<()> {
+    let old_desc = g.out_desc(old)?.clone();
+    let new_desc = g.out_desc(new)?.clone();
+    anyhow::ensure!(old_desc == new_desc, "splice shape mismatch");
+    let new = op_port(g, new)?;
+    g.replace_uses(old, new);
+    Ok(())
+}
+
+/// Fetch the op of `id`, erroring if the id is stale (dead/out of range).
+pub fn live_op(g: &Graph, id: NodeId) -> anyhow::Result<&crate::graph::OpKind> {
+    anyhow::ensure!(id.index() < g.n_slots(), "stale node id {:?}", id);
+    let n = g.node(id);
+    anyhow::ensure!(!n.dead, "node {:?} is dead", id);
+    Ok(&n.op)
+}
+
+impl Graph {
+    /// Arena capacity (including dead slots) — used for staleness checks.
+    pub fn n_slots(&self) -> usize {
+        self.nodes.len()
+    }
+}

@@ -1,0 +1,1628 @@
+//! The curated substitution-rule library (§3.2, Fig. 10's x-axis).
+//!
+//! Around forty semantics-preserving rewrites covering the families TASO's
+//! generator discovers: operator fusion (conv/matmul/linear activations,
+//! add->layernorm), operator merging (parallel conv/linear/matmul branches,
+//! including the Q/K/V projection merge that pays off on BERT/ViT), constant
+//! composition (back-to-back 1x1 convs / linears), shape-algebra
+//! eliminations (transpose pairs, reshape pairs, concat/split inverses),
+//! commutations and deliberate cost-*increasing* enlargements (§3.2: "the
+//! specific transformation applied does not need to be strictly optimal").
+//!
+//! Every rule is verified in two ways:
+//!  * unit tests here assert `semantically_equal(before, after)` via the
+//!    interpreter on random tensors;
+//!  * the generator re-verifies the whole library on randomly sampled
+//!    anchor graphs at build time (`rlflow generate-rules --verify`).
+
+use crate::graph::{Activation, Graph, NodeId, OpKind, PadMode, PortRef};
+use crate::pred;
+
+use super::apply::{live_op, splice, splice_port};
+use super::matcher::{find_chains, find_siblings, sorted_consumers, OpPred};
+use super::{Location, Rule, RuleSet};
+
+/// A rule defined by a pair of closures.
+pub struct FnRule {
+    name: &'static str,
+    find: Box<dyn Fn(&Graph) -> Vec<Location> + Send + Sync>,
+    apply: Box<dyn Fn(&mut Graph, &Location) -> anyhow::Result<()> + Send + Sync>,
+}
+
+impl Rule for FnRule {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+    fn find(&self, g: &Graph) -> Vec<Location> {
+        (self.find)(g)
+    }
+    fn apply(&self, g: &mut Graph, loc: &Location) -> anyhow::Result<()> {
+        (self.apply)(g, loc)
+    }
+}
+
+pub(crate) fn rule(
+    name: &'static str,
+    find: impl Fn(&Graph) -> Vec<Location> + Send + Sync + 'static,
+    apply: impl Fn(&mut Graph, &Location) -> anyhow::Result<()> + Send + Sync + 'static,
+) -> Box<dyn Rule> {
+    Box::new(FnRule { name, find: Box::new(find), apply: Box::new(apply) })
+}
+
+// ---------------------------------------------------------------------------
+// Family 1: activation fusion / unfusion
+// ---------------------------------------------------------------------------
+
+fn fuse_act_into(
+    name: &'static str,
+    base: OpPred,
+    act_pred: OpPred,
+    act: Activation,
+    refit: fn(&OpKind, Activation) -> Option<OpKind>,
+) -> Box<dyn Rule> {
+    rule(
+        name,
+        move |g| find_chains(g, &[OpPred { ..base_copy(&base) }, OpPred { ..base_copy(&act_pred) }]),
+        move |g, loc| {
+            anyhow::ensure!(loc.len() == 2, "{name}: bad location");
+            let (op_id, act_id) = (loc[0], loc[1]);
+            let fused = refit(live_op(g, op_id)?, act)
+                .ok_or_else(|| anyhow::anyhow!("{name}: op not fusable"))?;
+            let inputs = g.node(op_id).inputs.clone();
+            let new = g.add(fused, &inputs)?;
+            splice(g, act_id, PortRef::of(new))?;
+            g.kill(op_id);
+            Ok(())
+        },
+    )
+}
+
+// OpPred has fn fields; a manual copy helper keeps `fuse_act_into` generic.
+fn base_copy(p: &OpPred) -> OpPred {
+    OpPred { label: p.label, test: p.test }
+}
+
+fn refit_conv(op: &OpKind, act: Activation) -> Option<OpKind> {
+    match op {
+        OpKind::Conv2d { stride, pad, act: Activation::None } => {
+            Some(OpKind::Conv2d { stride: *stride, pad: *pad, act })
+        }
+        _ => None,
+    }
+}
+
+fn refit_conv_bias(op: &OpKind, act: Activation) -> Option<OpKind> {
+    match op {
+        OpKind::ConvBias { stride, pad, act: Activation::None } => {
+            Some(OpKind::ConvBias { stride: *stride, pad: *pad, act })
+        }
+        _ => None,
+    }
+}
+
+fn refit_matmul(op: &OpKind, act: Activation) -> Option<OpKind> {
+    match op {
+        OpKind::MatMul { trans_a, trans_b, act: Activation::None } => {
+            Some(OpKind::MatMul { trans_a: *trans_a, trans_b: *trans_b, act })
+        }
+        _ => None,
+    }
+}
+
+fn refit_linear(op: &OpKind, act: Activation) -> Option<OpKind> {
+    match op {
+        OpKind::Linear { act: Activation::None } => Some(OpKind::Linear { act }),
+        _ => None,
+    }
+}
+
+/// Unfuse: op{act=A} -> op{none} + A.
+fn unfuse_act(
+    name: &'static str,
+    sel: fn(&OpKind) -> Option<(OpKind, Activation)>,
+) -> Box<dyn Rule> {
+    rule(
+        name,
+        move |g| {
+            g.live_ids()
+                .filter(|&id| sel(&g.node(id).op).is_some())
+                .map(|id| vec![id])
+                .collect()
+        },
+        move |g, loc| {
+            let id = loc[0];
+            let (plain, act) =
+                sel(live_op(g, id)?).ok_or_else(|| anyhow::anyhow!("{name}: not fused"))?;
+            let inputs = g.node(id).inputs.clone();
+            let base = g.add(plain, &inputs)?;
+            let act_op = match act {
+                Activation::Relu => OpKind::Relu,
+                Activation::Gelu => OpKind::Gelu,
+                Activation::None => anyhow::bail!("{name}: nothing to unfuse"),
+            };
+            let a = g.add(act_op, &[PortRef::of(base)])?;
+            splice(g, id, PortRef::of(a))
+        },
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Family 2: normalisation fusion
+// ---------------------------------------------------------------------------
+
+/// conv -> batchnorm  ==>  conv(x, w * scale) + shift  (weights const-folded).
+fn fold_bn_into_conv() -> Box<dyn Rule> {
+    rule(
+        "fold_bn_conv",
+        |g| {
+            find_chains(
+                g,
+                &[
+                    pred!(conv: OpKind::Conv2d { act: Activation::None, .. }),
+                    pred!(bn: OpKind::BatchNorm),
+                ],
+            )
+        },
+        |g, loc| {
+            let (conv_id, bn_id) = (loc[0], loc[1]);
+            let OpKind::Conv2d { stride, pad, act: Activation::None } = *live_op(g, conv_id)? else {
+                anyhow::bail!("fold_bn_conv: stale conv")
+            };
+            let conv_in = g.node(conv_id).inputs.clone();
+            let bn_in = g.node(bn_id).inputs.clone();
+            let (x, w) = (conv_in[0], conv_in[1]);
+            let (scale, shift) = (bn_in[1], bn_in[2]);
+            let c = g.out_desc(scale)?.shape[0];
+            // w' = w * scale[:, None, None, None]  (weight-const, folded)
+            let scale_r = g.add(OpKind::Reshape { shape: vec![c, 1, 1, 1] }, &[scale])?;
+            let w2 = g.add(OpKind::Mul, &[w, PortRef::of(scale_r)])?;
+            // conv_bias(x, w', shift): the bias rides the conv epilogue.
+            let out = g.add(
+                OpKind::ConvBias { stride, pad, act: Activation::None },
+                &[x, PortRef::of(w2), shift],
+            )?;
+            splice(g, bn_id, PortRef::of(out))?;
+            g.kill(conv_id);
+            Ok(())
+        },
+    )
+}
+
+/// add -> layernorm  ==>  fused_add_layernorm (§4.10's transformer win).
+fn fuse_add_layernorm() -> Box<dyn Rule> {
+    rule(
+        "fuse_add_ln",
+        |g| find_chains(g, &[pred!(add: OpKind::Add), pred!(ln: OpKind::LayerNorm)]),
+        |g, loc| {
+            let (add_id, ln_id) = (loc[0], loc[1]);
+            let add_in = g.node(add_id).inputs.clone();
+            let ln_in = g.node(ln_id).inputs.clone();
+            // Fused op requires equal shapes (no broadcast add).
+            anyhow::ensure!(
+                g.out_desc(add_in[0])?.shape == g.out_desc(add_in[1])?.shape,
+                "fuse_add_ln: broadcast add not fusable"
+            );
+            let fused = g.add(
+                OpKind::FusedAddLayerNorm,
+                &[add_in[0], add_in[1], ln_in[1], ln_in[2]],
+            )?;
+            splice(g, ln_id, PortRef::of(fused))?;
+            g.kill(add_id);
+            Ok(())
+        },
+    )
+}
+
+fn unfuse_add_layernorm() -> Box<dyn Rule> {
+    rule(
+        "unfuse_add_ln",
+        |g| {
+            g.live_ids()
+                .filter(|&id| matches!(g.node(id).op, OpKind::FusedAddLayerNorm))
+                .map(|id| vec![id])
+                .collect()
+        },
+        |g, loc| {
+            let id = loc[0];
+            anyhow::ensure!(matches!(live_op(g, id)?, OpKind::FusedAddLayerNorm));
+            let ins = g.node(id).inputs.clone();
+            let add = g.add(OpKind::Add, &[ins[0], ins[1]])?;
+            let ln = g.add(OpKind::LayerNorm, &[PortRef::of(add), ins[2], ins[3]])?;
+            splice(g, id, PortRef::of(ln))
+        },
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Family 3: n-ary add fusion
+// ---------------------------------------------------------------------------
+
+fn fuse_add_add() -> Box<dyn Rule> {
+    rule(
+        "fuse_add_add",
+        |g| {
+            find_chains(g, &[pred!(a: OpKind::Add), pred!(b: OpKind::Add)])
+                .into_iter()
+                .filter(|loc| {
+                    // AddN needs equal shapes: reject broadcasting adds.
+                    let a = g.node(loc[0]).inputs.clone();
+                    let b = g.node(loc[1]).inputs.clone();
+                    let shapes: Vec<_> = a
+                        .iter()
+                        .chain(b.iter().skip(1))
+                        .filter_map(|p| g.out_desc(*p).ok())
+                        .map(|d| d.shape.clone())
+                        .collect();
+                    shapes.windows(2).all(|w| w[0] == w[1])
+                })
+                .collect()
+        },
+        |g, loc| {
+            let (a_id, b_id) = (loc[0], loc[1]);
+            let a_in = g.node(a_id).inputs.clone();
+            let b_in = g.node(b_id).inputs.clone();
+            let fused = g.add(OpKind::AddN { n: 3 }, &[a_in[0], a_in[1], b_in[1]])?;
+            splice(g, b_id, PortRef::of(fused))?;
+            g.kill(a_id);
+            Ok(())
+        },
+    )
+}
+
+fn fuse_addn_add() -> Box<dyn Rule> {
+    rule(
+        "fuse_addn_add",
+        |g| find_chains(g, &[pred!(a: OpKind::AddN { .. }), pred!(b: OpKind::Add)]),
+        |g, loc| {
+            let (a_id, b_id) = (loc[0], loc[1]);
+            let mut ins = g.node(a_id).inputs.clone();
+            let extra = g.node(b_id).inputs[1];
+            anyhow::ensure!(
+                g.out_desc(extra)?.shape == g.out_desc(ins[0])?.shape,
+                "fuse_addn_add: shape mismatch"
+            );
+            ins.push(extra);
+            let n = ins.len();
+            let fused = g.add(OpKind::AddN { n }, &ins)?;
+            splice(g, b_id, PortRef::of(fused))?;
+            g.kill(a_id);
+            Ok(())
+        },
+    )
+}
+
+fn unfuse_addn() -> Box<dyn Rule> {
+    rule(
+        "unfuse_addn",
+        |g| {
+            g.live_ids()
+                .filter(|&id| matches!(g.node(id).op, OpKind::AddN { .. }))
+                .map(|id| vec![id])
+                .collect()
+        },
+        |g, loc| {
+            let id = loc[0];
+            anyhow::ensure!(matches!(live_op(g, id)?, OpKind::AddN { .. }));
+            let ins = g.node(id).inputs.clone();
+            let mut acc = g.add(OpKind::Add, &[ins[0], ins[1]])?;
+            for p in &ins[2..] {
+                acc = g.add(OpKind::Add, &[PortRef::of(acc), *p])?;
+            }
+            splice(g, id, PortRef::of(acc))
+        },
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Family 4: parallel-branch merging (the TASO headline rules)
+// ---------------------------------------------------------------------------
+
+fn merge_conv_siblings() -> Box<dyn Rule> {
+    rule(
+        "merge_conv2",
+        |g| {
+            find_siblings(g, &pred!(conv: OpKind::Conv2d { .. }), 2)
+                .into_iter()
+                .filter(|pair| {
+                    let (a, b) = (g.node(pair[0]), g.node(pair[1]));
+                    if a.op != b.op {
+                        return false;
+                    }
+                    let (wa, wb) = (a.inputs[1], b.inputs[1]);
+                    match (g.out_desc(wa), g.out_desc(wb)) {
+                        (Ok(da), Ok(db)) => da.shape == db.shape,
+                        _ => false,
+                    }
+                })
+                .collect()
+        },
+        |g, loc| {
+            let (a_id, b_id) = (loc[0], loc[1]);
+            let op = live_op(g, a_id)?.clone();
+            anyhow::ensure!(&op == live_op(g, b_id)?, "merge_conv2: attrs differ");
+            let (x, wa) = (g.node(a_id).inputs[0], g.node(a_id).inputs[1]);
+            let wb = g.node(b_id).inputs[1];
+            anyhow::ensure!(g.node(b_id).inputs[0] == x, "merge_conv2: different inputs");
+            let wcat = g.add(OpKind::Concat { axis: 0 }, &[wa, wb])?;
+            let conv = g.add(op, &[x, PortRef::of(wcat)])?;
+            let split = g.add(OpKind::Split { axis: 1, parts: 2 }, &[PortRef::of(conv)])?;
+            splice_port(g, PortRef::of(a_id), PortRef { node: split, port: 0 })?;
+            splice_port(g, PortRef::of(b_id), PortRef { node: split, port: 1 })?;
+            g.kill(a_id);
+            g.kill(b_id);
+            Ok(())
+        },
+    )
+}
+
+fn merge_linear_siblings(name: &'static str, k: usize) -> Box<dyn Rule> {
+    rule(
+        name,
+        move |g| {
+            find_siblings(g, &pred!(lin: OpKind::Linear { .. }), k)
+                .into_iter()
+                .filter(|grp| {
+                    let first = g.node(grp[0]);
+                    grp.iter().all(|&id| {
+                        let n = g.node(id);
+                        n.op == first.op
+                            && n.inputs[0] == first.inputs[0]
+                            && n.outs[0].shape == first.outs[0].shape
+                    })
+                })
+                .collect()
+        },
+        move |g, loc| {
+            anyhow::ensure!(loc.len() == k, "{name}: bad arity");
+            let op = live_op(g, loc[0])?.clone();
+            let x = g.node(loc[0]).inputs[0];
+            let ws: Vec<PortRef> = loc.iter().map(|&id| g.node(id).inputs[1]).collect();
+            let bs: Vec<PortRef> = loc.iter().map(|&id| g.node(id).inputs[2]).collect();
+            for &id in loc {
+                anyhow::ensure!(&op == live_op(g, id)?, "{name}: attrs differ");
+                anyhow::ensure!(g.node(id).inputs[0] == x, "{name}: inputs differ");
+            }
+            let wcat = g.add(OpKind::Concat { axis: 1 }, &ws)?;
+            let bcat = g.add(OpKind::Concat { axis: 0 }, &bs)?;
+            let lin = g.add(op, &[x, PortRef::of(wcat), PortRef::of(bcat)])?;
+            let rank = g.node(lin).outs[0].shape.len();
+            let split = g.add(OpKind::Split { axis: rank - 1, parts: k }, &[PortRef::of(lin)])?;
+            for (i, &id) in loc.iter().enumerate() {
+                splice_port(g, PortRef::of(id), PortRef { node: split, port: i as u16 })?;
+                g.kill(id);
+            }
+            Ok(())
+        },
+    )
+}
+
+fn merge_matmul_siblings() -> Box<dyn Rule> {
+    rule(
+        "merge_matmul2",
+        |g| {
+            find_siblings(
+                g,
+                &pred!(mm: OpKind::MatMul { trans_a: false, trans_b: false, .. }),
+                2,
+            )
+            .into_iter()
+            .filter(|pair| {
+                let (a, b) = (g.node(pair[0]), g.node(pair[1]));
+                if a.op != b.op || a.inputs[0] != b.inputs[0] {
+                    return false;
+                }
+                match (g.out_desc(a.inputs[1]), g.out_desc(b.inputs[1])) {
+                    (Ok(da), Ok(db)) => da.shape == db.shape && da.rank() == 2,
+                    _ => false,
+                }
+            })
+            .collect()
+        },
+        |g, loc| {
+            let (a_id, b_id) = (loc[0], loc[1]);
+            let op = live_op(g, a_id)?.clone();
+            let x = g.node(a_id).inputs[0];
+            let (ra, rb) = (g.node(a_id).inputs[1], g.node(b_id).inputs[1]);
+            let rcat = g.add(OpKind::Concat { axis: 1 }, &[ra, rb])?;
+            let mm = g.add(op, &[x, PortRef::of(rcat)])?;
+            let rank = g.node(mm).outs[0].shape.len();
+            let split = g.add(OpKind::Split { axis: rank - 1, parts: 2 }, &[PortRef::of(mm)])?;
+            splice_port(g, PortRef::of(a_id), PortRef { node: split, port: 0 })?;
+            splice_port(g, PortRef::of(b_id), PortRef { node: split, port: 1 })?;
+            g.kill(a_id);
+            g.kill(b_id);
+            Ok(())
+        },
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Family 5: constant composition
+// ---------------------------------------------------------------------------
+
+/// Two back-to-back 1x1 stride-1 convs compose into one (w' = w2 @ w1).
+fn compose_1x1_convs() -> Box<dyn Rule> {
+    fn is_1x1(g: &Graph, id: NodeId) -> bool {
+        let n = g.node(id);
+        if !matches!(
+            n.op,
+            OpKind::Conv2d { stride: 1, pad: PadMode::Same, act: Activation::None }
+        ) {
+            return false;
+        }
+        g.out_desc(n.inputs[1])
+            .map(|d| d.shape[2] == 1 && d.shape[3] == 1)
+            .unwrap_or(false)
+    }
+    rule(
+        "compose_conv1x1",
+        |g| {
+            find_chains(
+                g,
+                &[
+                    pred!(c1: OpKind::Conv2d { stride: 1, pad: PadMode::Same, act: Activation::None }),
+                    pred!(c2: OpKind::Conv2d { stride: 1, pad: PadMode::Same, .. }),
+                ],
+            )
+            .into_iter()
+            .filter(|loc| is_1x1(g, loc[0]) && {
+                let n = g.node(loc[1]);
+                g.out_desc(n.inputs[1])
+                    .map(|d| d.shape[2] == 1 && d.shape[3] == 1)
+                    .unwrap_or(false)
+            })
+            .collect()
+        },
+        |g, loc| {
+            let (c1, c2) = (loc[0], loc[1]);
+            let op2 = live_op(g, c2)?.clone();
+            let (x, w1) = (g.node(c1).inputs[0], g.node(c1).inputs[1]);
+            let w2 = g.node(c2).inputs[1];
+            let d1 = g.out_desc(w1)?.shape.clone(); // [C1, C0, 1, 1]
+            let d2 = g.out_desc(w2)?.shape.clone(); // [C2, C1, 1, 1]
+            let (c0, c1ch, c2ch) = (d1[1], d1[0], d2[0]);
+            let w1m = g.add(OpKind::Reshape { shape: vec![c1ch, c0] }, &[w1])?;
+            let w2m = g.add(OpKind::Reshape { shape: vec![c2ch, c1ch] }, &[w2])?;
+            let wm = g.add(
+                OpKind::MatMul { trans_a: false, trans_b: false, act: Activation::None },
+                &[PortRef::of(w2m), PortRef::of(w1m)],
+            )?;
+            let wr = g.add(OpKind::Reshape { shape: vec![c2ch, c0, 1, 1] }, &[PortRef::of(wm)])?;
+            let conv = g.add(op2, &[x, PortRef::of(wr)])?;
+            splice(g, c2, PortRef::of(conv))?;
+            g.kill(c1);
+            Ok(())
+        },
+    )
+}
+
+/// linear(linear(x)) composes when the inner has no activation.
+fn compose_linears() -> Box<dyn Rule> {
+    rule(
+        "compose_linear",
+        |g| {
+            find_chains(
+                g,
+                &[
+                    pred!(l1: OpKind::Linear { act: Activation::None }),
+                    pred!(l2: OpKind::Linear { .. }),
+                ],
+            )
+        },
+        |g, loc| {
+            let (l1, l2) = (loc[0], loc[1]);
+            let op2 = live_op(g, l2)?.clone();
+            let (x, w1, b1) = (
+                g.node(l1).inputs[0],
+                g.node(l1).inputs[1],
+                g.node(l1).inputs[2],
+            );
+            let (w2, b2) = (g.node(l2).inputs[1], g.node(l2).inputs[2]);
+            let d1 = g.out_desc(w1)?.shape[1];
+            let d2 = g.out_desc(w2)?.shape[1];
+            // w' = w1 @ w2 ; b' = b1 @ w2 + b2
+            let wm = g.add(
+                OpKind::MatMul { trans_a: false, trans_b: false, act: Activation::None },
+                &[w1, w2],
+            )?;
+            let b1r = g.add(OpKind::Reshape { shape: vec![1, d1] }, &[b1])?;
+            let b1w = g.add(
+                OpKind::MatMul { trans_a: false, trans_b: false, act: Activation::None },
+                &[PortRef::of(b1r), w2],
+            )?;
+            let b1f = g.add(OpKind::Reshape { shape: vec![d2] }, &[PortRef::of(b1w)])?;
+            let bsum = g.add(OpKind::Add, &[PortRef::of(b1f), b2])?;
+            let lin = g.add(op2, &[x, PortRef::of(wm), PortRef::of(bsum)])?;
+            splice(g, l2, PortRef::of(lin))?;
+            g.kill(l1);
+            Ok(())
+        },
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Family 6: shape algebra
+// ---------------------------------------------------------------------------
+
+fn elim_transpose_pair() -> Box<dyn Rule> {
+    rule(
+        "elim_transpose2",
+        |g| {
+            find_chains(g, &[pred!(t1: OpKind::Transpose { .. }), pred!(t2: OpKind::Transpose { .. })])
+                .into_iter()
+                .filter(|loc| {
+                    let (p1, p2) = (perm_of(g, loc[0]), perm_of(g, loc[1]));
+                    compose_perm(&p1, &p2).iter().enumerate().all(|(i, &p)| i == p)
+                })
+                .collect()
+        },
+        |g, loc| {
+            let (t1, t2) = (loc[0], loc[1]);
+            let src = g.node(t1).inputs[0];
+            splice(g, t2, src)?;
+            g.kill(t1);
+            Ok(())
+        },
+    )
+}
+
+fn perm_of(g: &Graph, id: NodeId) -> Vec<usize> {
+    match &g.node(id).op {
+        OpKind::Transpose { perm } => perm.clone(),
+        _ => vec![],
+    }
+}
+
+/// apply p1 then p2 => combined[i] = p1[p2[i]].
+fn compose_perm(p1: &[usize], p2: &[usize]) -> Vec<usize> {
+    p2.iter().map(|&i| p1[i]).collect()
+}
+
+fn merge_transpose_pair() -> Box<dyn Rule> {
+    rule(
+        "merge_transpose2",
+        |g| {
+            find_chains(g, &[pred!(t1: OpKind::Transpose { .. }), pred!(t2: OpKind::Transpose { .. })])
+                .into_iter()
+                .filter(|loc| {
+                    let (p1, p2) = (perm_of(g, loc[0]), perm_of(g, loc[1]));
+                    // Only when NOT the identity pair (that's elim's job).
+                    !compose_perm(&p1, &p2).iter().enumerate().all(|(i, &p)| i == p)
+                })
+                .collect()
+        },
+        |g, loc| {
+            let (t1, t2) = (loc[0], loc[1]);
+            let src = g.node(t1).inputs[0];
+            let combined = compose_perm(&perm_of(g, t1), &perm_of(g, t2));
+            let t = g.add(OpKind::Transpose { perm: combined }, &[src])?;
+            splice(g, t2, PortRef::of(t))?;
+            g.kill(t1);
+            Ok(())
+        },
+    )
+}
+
+fn merge_reshape_pair() -> Box<dyn Rule> {
+    rule(
+        "merge_reshape2",
+        |g| find_chains(g, &[pred!(r1: OpKind::Reshape { .. }), pred!(r2: OpKind::Reshape { .. })]),
+        |g, loc| {
+            let (r1, r2) = (loc[0], loc[1]);
+            let src = g.node(r1).inputs[0];
+            let final_shape = match &g.node(r2).op {
+                OpKind::Reshape { shape } => shape.clone(),
+                _ => anyhow::bail!("merge_reshape2: stale location"),
+            };
+            let r = g.add(OpKind::Reshape { shape: final_shape }, &[src])?;
+            splice(g, r2, PortRef::of(r))?;
+            g.kill(r1);
+            Ok(())
+        },
+    )
+}
+
+/// matmul(a, transpose(b)) => matmul{trans_b}(a, b) when the transpose
+/// swaps the last two axes.
+fn absorb_transpose_rhs() -> Box<dyn Rule> {
+    rule(
+        "absorb_transpose_rhs",
+        |g| {
+            let cons = sorted_consumers(g);
+            let mut out = Vec::new();
+            for id in g.live_ids() {
+                let n = g.node(id);
+                let OpKind::MatMul { trans_a, trans_b: false, act } = n.op else { continue };
+                let _ = (trans_a, act);
+                let rhs = n.inputs[1];
+                if rhs.port != 0 {
+                    continue;
+                }
+                let t = g.node(rhs.node);
+                let OpKind::Transpose { perm } = &t.op else { continue };
+                let r = perm.len();
+                if r < 2 {
+                    continue;
+                }
+                let mut want: Vec<usize> = (0..r).collect();
+                want.swap(r - 2, r - 1);
+                if perm != &want {
+                    continue;
+                }
+                // Transpose must be exclusively feeding this matmul.
+                if cons.get(&rhs.node).map(|v| v.len()) != Some(1) {
+                    continue;
+                }
+                out.push(vec![rhs.node, id]);
+            }
+            out
+        },
+        |g, loc| {
+            let (t_id, mm_id) = (loc[0], loc[1]);
+            let OpKind::MatMul { trans_a, trans_b: false, act } = *live_op(g, mm_id)? else {
+                anyhow::bail!("absorb_transpose_rhs: stale matmul")
+            };
+            let a = g.node(mm_id).inputs[0];
+            let b_src = g.node(t_id).inputs[0];
+            let mm = g.add(OpKind::MatMul { trans_a, trans_b: true, act }, &[a, b_src])?;
+            splice(g, mm_id, PortRef::of(mm))?;
+            g.kill(t_id);
+            Ok(())
+        },
+    )
+}
+
+/// Inverse of the above: matmul{trans_b}(a, b) => matmul(a, transpose(b)).
+fn emit_transpose_rhs() -> Box<dyn Rule> {
+    rule(
+        "emit_transpose_rhs",
+        |g| {
+            g.live_ids()
+                .filter(|&id| matches!(g.node(id).op, OpKind::MatMul { trans_b: true, .. }))
+                .map(|id| vec![id])
+                .collect()
+        },
+        |g, loc| {
+            let id = loc[0];
+            let OpKind::MatMul { trans_a, trans_b: true, act } = *live_op(g, id)? else {
+                anyhow::bail!("emit_transpose_rhs: stale")
+            };
+            let (a, b) = (g.node(id).inputs[0], g.node(id).inputs[1]);
+            let r = g.out_desc(b)?.rank();
+            let mut perm: Vec<usize> = (0..r).collect();
+            perm.swap(r - 2, r - 1);
+            let t = g.add(OpKind::Transpose { perm }, &[b])?;
+            let mm = g.add(OpKind::MatMul { trans_a, trans_b: false, act }, &[a, PortRef::of(t)])?;
+            splice(g, id, PortRef::of(mm))
+        },
+    )
+}
+
+fn elim_concat_split() -> Box<dyn Rule> {
+    rule(
+        "elim_concat_split",
+        |g| {
+            find_chains(g, &[pred!(c: OpKind::Concat { .. }), pred!(s: OpKind::Split { .. })])
+                .into_iter()
+                .filter(|loc| {
+                    let (c, s) = (g.node(loc[0]), g.node(loc[1]));
+                    let (OpKind::Concat { axis: ca }, OpKind::Split { axis: sa, parts }) =
+                        (&c.op, &s.op)
+                    else {
+                        return false;
+                    };
+                    if ca != sa || c.inputs.len() != *parts {
+                        return false;
+                    }
+                    // All concat inputs must have the shape of the split outputs.
+                    c.inputs.iter().all(|p| {
+                        g.out_desc(*p).map(|d| d.shape == s.outs[0].shape).unwrap_or(false)
+                    })
+                })
+                .collect()
+        },
+        |g, loc| {
+            let (c_id, s_id) = (loc[0], loc[1]);
+            let ins = g.node(c_id).inputs.clone();
+            for (i, src) in ins.iter().enumerate() {
+                splice_port(g, PortRef { node: s_id, port: i as u16 }, *src)?;
+            }
+            g.kill(s_id);
+            g.kill(c_id);
+            Ok(())
+        },
+    )
+}
+
+fn elim_split_concat() -> Box<dyn Rule> {
+    rule(
+        "elim_split_concat",
+        |g| {
+            let mut out = Vec::new();
+            let cons = sorted_consumers(g);
+            for id in g.live_ids() {
+                let n = g.node(id);
+                let OpKind::Concat { axis } = n.op else { continue };
+                if n.inputs.is_empty() {
+                    continue;
+                }
+                let src = n.inputs[0].node;
+                let OpKind::Split { axis: sa, parts } = g.node(src).op else { continue };
+                if sa != axis || n.inputs.len() != parts {
+                    continue;
+                }
+                // inputs must be split ports 0..parts in order and the
+                // split must feed only this concat.
+                let in_order = n
+                    .inputs
+                    .iter()
+                    .enumerate()
+                    .all(|(i, p)| p.node == src && p.port as usize == i);
+                let sole = cons.get(&src).map(|v| v.iter().all(|(c, _)| *c == id)).unwrap_or(false);
+                if in_order && sole {
+                    out.push(vec![src, id]);
+                }
+            }
+            out
+        },
+        |g, loc| {
+            let (s_id, c_id) = (loc[0], loc[1]);
+            let src = g.node(s_id).inputs[0];
+            splice(g, c_id, src)?;
+            g.kill(s_id);
+            Ok(())
+        },
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Family 7: commutation + misc
+// ---------------------------------------------------------------------------
+
+/// relu(maxpool(x)) <=> maxpool(relu(x)) — exact for max pooling.
+fn swap_relu_maxpool() -> Box<dyn Rule> {
+    rule(
+        "swap_relu_maxpool",
+        |g| find_chains(g, &[pred!(r: OpKind::Relu), pred!(p: OpKind::MaxPool { .. })]),
+        |g, loc| {
+            let (r_id, p_id) = (loc[0], loc[1]);
+            let pool_op = live_op(g, p_id)?.clone();
+            let x = g.node(r_id).inputs[0];
+            let pool = g.add(pool_op, &[x])?;
+            let relu = g.add(OpKind::Relu, &[PortRef::of(pool)])?;
+            splice(g, p_id, PortRef::of(relu))?;
+            g.kill(r_id);
+            Ok(())
+        },
+    )
+}
+
+fn swap_maxpool_relu() -> Box<dyn Rule> {
+    rule(
+        "swap_maxpool_relu",
+        |g| find_chains(g, &[pred!(p: OpKind::MaxPool { .. }), pred!(r: OpKind::Relu)]),
+        |g, loc| {
+            let (p_id, r_id) = (loc[0], loc[1]);
+            let pool_op = live_op(g, p_id)?.clone();
+            let x = g.node(p_id).inputs[0];
+            let relu = g.add(OpKind::Relu, &[x])?;
+            let pool = g.add(pool_op, &[PortRef::of(relu)])?;
+            splice(g, r_id, PortRef::of(pool))?;
+            g.kill(p_id);
+            Ok(())
+        },
+    )
+}
+
+/// matmul(scale(a), b) => scale(matmul(a, b)).
+fn hoist_scale_matmul() -> Box<dyn Rule> {
+    rule(
+        "hoist_scale_matmul",
+        |g| {
+            find_chains(g, &[pred!(s: OpKind::Scale { .. }), pred!(m: OpKind::MatMul { .. })])
+                .into_iter()
+                // Chain guarantees matmul reads scale as FIRST input (a side).
+                .collect()
+        },
+        |g, loc| {
+            let (s_id, m_id) = (loc[0], loc[1]);
+            let scale_op = live_op(g, s_id)?.clone();
+            let mm_op = live_op(g, m_id)?.clone();
+            anyhow::ensure!(
+                matches!(mm_op, OpKind::MatMul { act: Activation::None, .. }),
+                "hoist_scale_matmul: fused activation blocks hoist"
+            );
+            let a = g.node(s_id).inputs[0];
+            let b = g.node(m_id).inputs[1];
+            let mm = g.add(mm_op, &[a, b])?;
+            let sc = g.add(scale_op, &[PortRef::of(mm)])?;
+            splice(g, m_id, PortRef::of(sc))?;
+            g.kill(s_id);
+            Ok(())
+        },
+    )
+}
+
+/// relu(relu(x)) => relu(x).
+fn relu_idempotent() -> Box<dyn Rule> {
+    rule(
+        "relu_idempotent",
+        |g| find_chains(g, &[pred!(a: OpKind::Relu), pred!(b: OpKind::Relu)]),
+        |g, loc| {
+            let (a_id, b_id) = (loc[0], loc[1]);
+            splice(g, b_id, PortRef::of(a_id))?;
+            Ok(())
+        },
+    )
+}
+
+fn elim_identity() -> Box<dyn Rule> {
+    rule(
+        "elim_identity",
+        |g| {
+            g.live_ids()
+                .filter(|&id| {
+                    let n = g.node(id);
+                    matches!(n.op, OpKind::Identity)
+                        && !matches!(
+                            g.node(n.inputs[0].node).op,
+                            OpKind::Input | OpKind::Weight
+                        )
+                })
+                .map(|id| vec![id])
+                .collect()
+        },
+        |g, loc| {
+            let id = loc[0];
+            anyhow::ensure!(matches!(live_op(g, id)?, OpKind::Identity));
+            let src = g.node(id).inputs[0];
+            splice(g, id, src)
+        },
+    )
+}
+
+/// matmul + bias add => linear.
+fn fuse_matmul_bias() -> Box<dyn Rule> {
+    rule(
+        "fuse_matmul_bias",
+        |g| {
+            find_chains(
+                g,
+                &[
+                    pred!(m: OpKind::MatMul { trans_a: false, trans_b: false, act: Activation::None }),
+                    pred!(a: OpKind::Add),
+                ],
+            )
+            .into_iter()
+            .filter(|loc| {
+                let mm = g.node(loc[0]);
+                let add = g.node(loc[1]);
+                let w_rank2 = g.out_desc(mm.inputs[1]).map(|d| d.rank() == 2).unwrap_or(false);
+                let d_out = mm.outs[0].shape.last().copied().unwrap_or(0);
+                let bias_vec = g
+                    .out_desc(add.inputs[1])
+                    .map(|d| d.shape == vec![d_out])
+                    .unwrap_or(false);
+                w_rank2 && bias_vec
+            })
+            .collect()
+        },
+        |g, loc| {
+            let (m_id, a_id) = (loc[0], loc[1]);
+            let x = g.node(m_id).inputs[0];
+            let w = g.node(m_id).inputs[1];
+            let b = g.node(a_id).inputs[1];
+            let lin = g.add(OpKind::Linear { act: Activation::None }, &[x, w, b])?;
+            splice(g, a_id, PortRef::of(lin))?;
+            g.kill(m_id);
+            Ok(())
+        },
+    )
+}
+
+fn unfuse_linear() -> Box<dyn Rule> {
+    rule(
+        "unfuse_linear",
+        |g| {
+            g.live_ids()
+                .filter(|&id| matches!(g.node(id).op, OpKind::Linear { act: Activation::None }))
+                .map(|id| vec![id])
+                .collect()
+        },
+        |g, loc| {
+            let id = loc[0];
+            anyhow::ensure!(matches!(live_op(g, id)?, OpKind::Linear { act: Activation::None }));
+            let ins = g.node(id).inputs.clone();
+            let mm = g.add(
+                OpKind::MatMul { trans_a: false, trans_b: false, act: Activation::None },
+                &[ins[0], ins[1]],
+            )?;
+            let add = g.add(OpKind::Add, &[PortRef::of(mm), ins[2]])?;
+            splice(g, id, PortRef::of(add))
+        },
+    )
+}
+
+/// Kernel enlargement (TASO's `enlarge`): kxk SAME stride-1 conv -> (k+2).
+/// Cost-increasing on its own; opens merge opportunities with neighbouring
+/// convs of the larger kernel size.
+fn enlarge_conv(name: &'static str, from_k: usize) -> Box<dyn Rule> {
+    rule(
+        name,
+        move |g| {
+            g.live_ids()
+                .filter(|&id| {
+                    let n = g.node(id);
+                    matches!(
+                        n.op,
+                        OpKind::Conv2d { stride: 1, pad: PadMode::Same, .. }
+                    ) && g
+                        .out_desc(n.inputs[1])
+                        .map(|d| d.shape[2] == from_k && d.shape[3] == from_k)
+                        .unwrap_or(false)
+                        // Enlarged SAME conv is only exactly equal when the
+                        // spatial input is at least the enlarged kernel.
+                        && g.out_desc(n.inputs[0])
+                            .map(|d| d.shape[2] >= from_k + 2 && d.shape[3] >= from_k + 2)
+                            .unwrap_or(false)
+                })
+                .map(|id| vec![id])
+                .collect()
+        },
+        move |g, loc| {
+            let id = loc[0];
+            let op = live_op(g, id)?.clone();
+            anyhow::ensure!(matches!(op, OpKind::Conv2d { stride: 1, pad: PadMode::Same, .. }));
+            let (x, w) = (g.node(id).inputs[0], g.node(id).inputs[1]);
+            let big = g.add(OpKind::Enlarge { kh: from_k + 2, kw: from_k + 2 }, &[w])?;
+            let conv = g.add(op, &[x, PortRef::of(big)])?;
+            splice(g, id, PortRef::of(conv))
+        },
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Library assembly
+// ---------------------------------------------------------------------------
+
+/// The standard RLFlow rule library. Order is stable: it defines the agent's
+/// xfer-slot indices and the Fig. 10 axis.
+pub fn standard_library() -> RuleSet {
+    RuleSet::new(vec![
+        // fusion
+        fuse_act_into(
+            "fuse_conv_relu",
+            pred!(c: OpKind::Conv2d { act: Activation::None, .. }),
+            pred!(r: OpKind::Relu),
+            Activation::Relu,
+            refit_conv,
+        ),
+        unfuse_act("unfuse_conv_relu", |op| match op {
+            OpKind::Conv2d { stride, pad, act: Activation::Relu } => Some((
+                OpKind::Conv2d { stride: *stride, pad: *pad, act: Activation::None },
+                Activation::Relu,
+            )),
+            _ => None,
+        }),
+        fuse_act_into(
+            "fuse_matmul_relu",
+            pred!(m: OpKind::MatMul { act: Activation::None, .. }),
+            pred!(r: OpKind::Relu),
+            Activation::Relu,
+            refit_matmul,
+        ),
+        fuse_act_into(
+            "fuse_linear_relu",
+            pred!(l: OpKind::Linear { act: Activation::None }),
+            pred!(r: OpKind::Relu),
+            Activation::Relu,
+            refit_linear,
+        ),
+        fuse_act_into(
+            "fuse_linear_gelu",
+            pred!(l: OpKind::Linear { act: Activation::None }),
+            pred!(r: OpKind::Gelu),
+            Activation::Gelu,
+            refit_linear,
+        ),
+        unfuse_act("unfuse_linear_act", |op| match op {
+            OpKind::Linear { act: Activation::Relu } => {
+                Some((OpKind::Linear { act: Activation::None }, Activation::Relu))
+            }
+            OpKind::Linear { act: Activation::Gelu } => {
+                Some((OpKind::Linear { act: Activation::None }, Activation::Gelu))
+            }
+            _ => None,
+        }),
+        fuse_act_into(
+            "fuse_convbias_relu",
+            pred!(c: OpKind::ConvBias { act: Activation::None, .. }),
+            pred!(r: OpKind::Relu),
+            Activation::Relu,
+            refit_conv_bias,
+        ),
+        unfuse_act("unfuse_convbias_relu", |op| match op {
+            OpKind::ConvBias { stride, pad, act: Activation::Relu } => Some((
+                OpKind::ConvBias { stride: *stride, pad: *pad, act: Activation::None },
+                Activation::Relu,
+            )),
+            _ => None,
+        }),
+        // normalisation
+        fold_bn_into_conv(),
+        fuse_add_layernorm(),
+        unfuse_add_layernorm(),
+        // n-ary adds
+        fuse_add_add(),
+        fuse_addn_add(),
+        unfuse_addn(),
+        // merging
+        merge_conv_siblings(),
+        merge_linear_siblings("merge_linear2", 2),
+        merge_linear_siblings("merge_linear3", 3),
+        merge_matmul_siblings(),
+        // composition
+        compose_1x1_convs(),
+        compose_linears(),
+        // shape algebra
+        elim_transpose_pair(),
+        merge_transpose_pair(),
+        merge_reshape_pair(),
+        absorb_transpose_rhs(),
+        emit_transpose_rhs(),
+        elim_concat_split(),
+        elim_split_concat(),
+        // commutation + misc
+        swap_relu_maxpool(),
+        swap_maxpool_relu(),
+        hoist_scale_matmul(),
+        relu_idempotent(),
+        elim_identity(),
+        fuse_matmul_bias(),
+        unfuse_linear(),
+        enlarge_conv("enlarge_conv1x1", 1),
+        enlarge_conv("enlarge_conv3x3", 3),
+    ]
+    .into_iter()
+    .chain(super::library_ext::extended_rules())
+    .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::interp::semantically_equal;
+    use crate::xfer::apply_rule;
+
+    /// Apply every location of `rule_name` on `g` (fresh copy each time) and
+    /// check the rewrite is semantics-preserving and validates.
+    fn check_rule_on(g: &Graph, rule_name: &str) -> usize {
+        let lib = standard_library();
+        let idx = lib.index_of(rule_name).unwrap_or_else(|| panic!("no rule {rule_name}"));
+        let rule = lib.get(idx).unwrap();
+        let locs = rule.find(g);
+        for loc in &locs {
+            let mut g2 = g.clone();
+            apply_rule(&mut g2, rule, loc).unwrap();
+            g2.validate().unwrap();
+            assert!(
+                semantically_equal(g, &g2, 2, 1234, 2e-3).unwrap(),
+                "{rule_name} at {:?} changed semantics",
+                loc
+            );
+        }
+        locs.len()
+    }
+
+    fn conv_relu_graph() -> Graph {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 3, 8, 8]);
+        let c = b.conv(x, 4, 3, 1, PadMode::Same).unwrap();
+        let _ = b.relu(c).unwrap();
+        b.finish()
+    }
+
+    #[test]
+    fn fuse_conv_relu_preserves_semantics() {
+        assert_eq!(check_rule_on(&conv_relu_graph(), "fuse_conv_relu"), 1);
+    }
+
+    #[test]
+    fn fuse_then_unfuse_round_trips_hash() {
+        use crate::graph::canonical_hash;
+        let g = conv_relu_graph();
+        let lib = standard_library();
+        let fuse = lib.get(lib.index_of("fuse_conv_relu").unwrap()).unwrap();
+        let unfuse = lib.get(lib.index_of("unfuse_conv_relu").unwrap()).unwrap();
+        let mut g2 = g.clone();
+        let floc = fuse.find(&g2)[0].clone();
+        apply_rule(&mut g2, fuse, &floc).unwrap();
+        assert_ne!(canonical_hash(&g), canonical_hash(&g2));
+        let loc = unfuse.find(&g2)[0].clone();
+        apply_rule(&mut g2, unfuse, &loc).unwrap();
+        assert_eq!(canonical_hash(&g), canonical_hash(&g2));
+    }
+
+    #[test]
+    fn fold_bn_preserves_semantics() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 3, 6, 6]);
+        let c = b.conv(x, 4, 3, 1, PadMode::Same).unwrap();
+        let _ = b.batchnorm(c).unwrap();
+        let g = b.finish();
+        assert_eq!(check_rule_on(&g, "fold_bn_conv"), 1);
+    }
+
+    #[test]
+    fn convbias_fusion_preserves_semantics() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 3, 6, 6]);
+        let w = b.weight(&[4, 3, 3, 3]);
+        let bias = b.weight(&[4]);
+        let cb = b
+            .op(
+                OpKind::ConvBias { stride: 1, pad: PadMode::Same, act: Activation::None },
+                &[x, w, bias],
+            )
+            .unwrap();
+        let _ = b.relu(cb).unwrap();
+        let g = b.finish();
+        assert_eq!(check_rule_on(&g, "fuse_convbias_relu"), 1);
+    }
+
+    #[test]
+    fn fold_bn_then_relu_fusion_chain() {
+        // conv -> bn -> relu: fold_bn gives conv_bias + relu, then
+        // fuse_convbias_relu collapses to one op. Launch count 3 -> 1.
+        use crate::cost::{CostModel, DeviceProfile};
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 3, 6, 6]);
+        let _ = b.conv_bn_relu(x, 4, 3, 1, PadMode::Same).unwrap();
+        let g = b.finish();
+        let cm = CostModel::new(DeviceProfile::rtx2070());
+        let lib = standard_library();
+        let before = cm.graph_cost(&g).launches;
+
+        let fold = lib.get(lib.index_of("fold_bn_conv").unwrap()).unwrap();
+        let mut g2 = g.clone();
+        let loc = fold.find(&g2)[0].clone();
+        crate::xfer::apply_rule(&mut g2, fold, &loc).unwrap();
+        assert!(crate::interp::semantically_equal(&g, &g2, 2, 5, 2e-3).unwrap());
+
+        let fuse = lib.get(lib.index_of("fuse_convbias_relu").unwrap()).unwrap();
+        let loc = fuse.find(&g2)[0].clone();
+        crate::xfer::apply_rule(&mut g2, fuse, &loc).unwrap();
+        assert!(crate::interp::semantically_equal(&g, &g2, 2, 6, 2e-3).unwrap());
+        let after = cm.graph_cost(&g2).launches;
+        assert_eq!(before, 3);
+        assert_eq!(after, 1);
+    }
+
+    #[test]
+    fn fuse_add_ln_preserves_semantics() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 4, 16]);
+        let y = b.input(&[1, 4, 16]);
+        let s = b.add(x, y).unwrap();
+        let _ = b.layernorm(s).unwrap();
+        let g = b.finish();
+        assert_eq!(check_rule_on(&g, "fuse_add_ln"), 1);
+        assert_eq!(check_rule_on(&g, "unfuse_add_ln"), 0);
+    }
+
+    #[test]
+    fn addn_family_preserves_semantics() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[2, 8]);
+        let y = b.input(&[2, 8]);
+        let z = b.input(&[2, 8]);
+        let s1 = b.add(x, y).unwrap();
+        let _ = b.add(s1, z).unwrap();
+        let g = b.finish();
+        assert_eq!(check_rule_on(&g, "fuse_add_add"), 1);
+
+        // Build the AddN version and unfuse it back.
+        let mut b2 = GraphBuilder::new();
+        let x2 = b2.input(&[2, 8]);
+        let y2 = b2.input(&[2, 8]);
+        let z2 = b2.input(&[2, 8]);
+        let _ = b2.op(OpKind::AddN { n: 3 }, &[x2, y2, z2]).unwrap();
+        let g2 = b2.finish();
+        assert_eq!(check_rule_on(&g2, "unfuse_addn"), 1);
+    }
+
+    #[test]
+    fn merge_conv_siblings_preserves_semantics() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 3, 6, 6]);
+        let c1 = b.conv(x, 4, 3, 1, PadMode::Same).unwrap();
+        let c2 = b.conv(x, 4, 3, 1, PadMode::Same).unwrap();
+        let _ = b.relu(c1).unwrap();
+        let _ = b.relu(c2).unwrap();
+        let g = b.finish();
+        assert_eq!(check_rule_on(&g, "merge_conv2"), 1);
+    }
+
+    #[test]
+    fn merge_linear3_qkv_preserves_semantics() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[4, 16]);
+        for _ in 0..3 {
+            let l = b.linear(x, 16, Activation::None).unwrap();
+            b.relu(l).unwrap();
+        }
+        let g = b.finish();
+        assert_eq!(check_rule_on(&g, "merge_linear3"), 1);
+        // Pairwise merges also available: C(3,2) = 3.
+        assert_eq!(check_rule_on(&g, "merge_linear2"), 3);
+    }
+
+    #[test]
+    fn compose_linears_preserves_semantics() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[3, 8]);
+        let l1 = b.linear(x, 12, Activation::None).unwrap();
+        let node = l1.node;
+        let _ = b.linear(l1, 5, Activation::None).unwrap();
+        let g = b.finish();
+        let _ = node;
+        assert_eq!(check_rule_on(&g, "compose_linear"), 1);
+    }
+
+    #[test]
+    fn compose_1x1_convs_preserves_semantics() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 3, 5, 5]);
+        let c1 = b.conv(x, 6, 1, 1, PadMode::Same).unwrap();
+        let _ = b.conv(c1, 4, 1, 1, PadMode::Same).unwrap();
+        let g = b.finish();
+        assert_eq!(check_rule_on(&g, "compose_conv1x1"), 1);
+    }
+
+    #[test]
+    fn transpose_pair_rules() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[2, 3, 4]);
+        let t1 = b.transpose(x, &[1, 2, 0]).unwrap();
+        let _ = b.transpose(t1, &[2, 0, 1]).unwrap(); // inverse of t1
+        let g = b.finish();
+        assert_eq!(check_rule_on(&g, "elim_transpose2"), 1);
+        assert_eq!(check_rule_on(&g, "merge_transpose2"), 0);
+
+        let mut b2 = GraphBuilder::new();
+        let x2 = b2.input(&[2, 3, 4]);
+        let t1 = b2.transpose(x2, &[1, 2, 0]).unwrap();
+        let _ = b2.transpose(t1, &[0, 2, 1]).unwrap(); // NOT inverse
+        let g2 = b2.finish();
+        assert_eq!(check_rule_on(&g2, "merge_transpose2"), 1);
+        assert_eq!(check_rule_on(&g2, "elim_transpose2"), 0);
+    }
+
+    #[test]
+    fn absorb_and_emit_transpose_rhs() {
+        let mut b = GraphBuilder::new();
+        let a = b.input(&[2, 4]);
+        let c = b.input(&[3, 4]);
+        let ct = b.transpose(c, &[1, 0]).unwrap();
+        let _ = b
+            .op(OpKind::MatMul { trans_a: false, trans_b: false, act: Activation::None }, &[a, ct])
+            .unwrap();
+        let g = b.finish();
+        assert_eq!(check_rule_on(&g, "absorb_transpose_rhs"), 1);
+
+        let mut b2 = GraphBuilder::new();
+        let a2 = b2.input(&[2, 4]);
+        let c2 = b2.input(&[3, 4]);
+        let _ = b2
+            .op(OpKind::MatMul { trans_a: false, trans_b: true, act: Activation::None }, &[a2, c2])
+            .unwrap();
+        let g2 = b2.finish();
+        assert_eq!(check_rule_on(&g2, "emit_transpose_rhs"), 1);
+    }
+
+    #[test]
+    fn concat_split_eliminations() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 4, 8]);
+        let y = b.input(&[1, 4, 8]);
+        let cat = b.concat(1, &[x, y]).unwrap();
+        let parts = b.op_multi(OpKind::Split { axis: 1, parts: 2 }, &[cat]).unwrap();
+        let _ = b.relu(parts[0]).unwrap();
+        let _ = b.relu(parts[1]).unwrap();
+        let g = b.finish();
+        assert_eq!(check_rule_on(&g, "elim_concat_split"), 1);
+
+        let mut b2 = GraphBuilder::new();
+        let x2 = b2.input(&[1, 8, 8]);
+        let parts = b2.op_multi(OpKind::Split { axis: 1, parts: 2 }, &[x2]).unwrap();
+        let _ = b2.concat(1, &parts).unwrap();
+        let g2 = b2.finish();
+        assert_eq!(check_rule_on(&g2, "elim_split_concat"), 1);
+    }
+
+    #[test]
+    fn commutation_rules() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 3, 8, 8]);
+        let r = b.relu(x).unwrap();
+        let _ = b.maxpool(r, 2, 2).unwrap();
+        let g = b.finish();
+        assert_eq!(check_rule_on(&g, "swap_relu_maxpool"), 1);
+
+        let mut b2 = GraphBuilder::new();
+        let x2 = b2.input(&[1, 3, 8, 8]);
+        let p = b2.maxpool(x2, 2, 2).unwrap();
+        let _ = b2.relu(p).unwrap();
+        let g2 = b2.finish();
+        assert_eq!(check_rule_on(&g2, "swap_maxpool_relu"), 1);
+    }
+
+    #[test]
+    fn hoist_scale_preserves_semantics() {
+        let mut b = GraphBuilder::new();
+        let a = b.input(&[2, 4]);
+        let c = b.input(&[4, 3]);
+        let s = b.op(OpKind::Scale { factor: 0.5 }, &[a]).unwrap();
+        let _ = b
+            .op(OpKind::MatMul { trans_a: false, trans_b: false, act: Activation::None }, &[s, c])
+            .unwrap();
+        let g = b.finish();
+        assert_eq!(check_rule_on(&g, "hoist_scale_matmul"), 1);
+    }
+
+    #[test]
+    fn matmul_bias_linear_round_trip() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[2, 4]);
+        let w = b.weight(&[4, 3]);
+        let bias = b.weight(&[3]);
+        let mm = b
+            .op(OpKind::MatMul { trans_a: false, trans_b: false, act: Activation::None }, &[x, w])
+            .unwrap();
+        let _ = b.op(OpKind::Add, &[mm, bias]).unwrap();
+        let g = b.finish();
+        assert_eq!(check_rule_on(&g, "fuse_matmul_bias"), 1);
+
+        let mut b2 = GraphBuilder::new();
+        let x2 = b2.input(&[2, 4]);
+        let _ = b2.linear(x2, 3, Activation::None).unwrap();
+        let g2 = b2.finish();
+        assert_eq!(check_rule_on(&g2, "unfuse_linear"), 1);
+    }
+
+    #[test]
+    fn enlarge_preserves_semantics() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 2, 8, 8]);
+        let _ = b.conv(x, 3, 3, 1, PadMode::Same).unwrap();
+        let g = b.finish();
+        assert_eq!(check_rule_on(&g, "enlarge_conv3x3"), 1);
+        assert_eq!(check_rule_on(&g, "enlarge_conv1x1"), 0);
+    }
+
+    #[test]
+    fn relu_idempotent_rule() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[2, 4]);
+        let r1 = b.relu(x).unwrap();
+        let _ = b.relu(r1).unwrap();
+        let g = b.finish();
+        assert_eq!(check_rule_on(&g, "relu_idempotent"), 1);
+    }
+
+    #[test]
+    fn library_names_unique_and_sized() {
+        let lib = standard_library();
+        assert!(lib.len() >= 30, "library has {} rules", lib.len());
+        assert!(lib.len() <= 48, "library exceeds xfer slots");
+    }
+
+    #[test]
+    fn every_rule_fires_somewhere_in_zoo_or_unit_graphs() {
+        // Each rule must be reachable: find() returns > 0 on at least one
+        // zoo graph or one of the synthetic graphs used above.
+        let lib = standard_library();
+        let mut graphs: Vec<Graph> = crate::zoo::all().into_iter().map(|(_, g)| g).collect();
+        graphs.push(conv_relu_graph());
+        // Synthetic coverage graphs for rules the zoo never triggers.
+        {
+            let mut b = GraphBuilder::new();
+            let x = b.input(&[2, 3, 4]);
+            let t1 = b.transpose(x, &[1, 2, 0]).unwrap();
+            let _ = b.transpose(t1, &[2, 0, 1]).unwrap();
+            let t3 = b.transpose(x, &[1, 2, 0]).unwrap();
+            let _ = b.transpose(t3, &[0, 2, 1]).unwrap(); // non-inverse pair
+            let r1 = b.reshape(x, &[6, 4]).unwrap();
+            let _ = b.reshape(r1, &[24]).unwrap();
+            graphs.push(b.finish());
+        }
+        {
+            let mut b = GraphBuilder::new();
+            let x = b.input(&[1, 4, 8]);
+            let y = b.input(&[1, 4, 8]);
+            let cat = b.concat(1, &[x, y]).unwrap();
+            let parts = b.op_multi(OpKind::Split { axis: 1, parts: 2 }, &[cat]).unwrap();
+            let c2 = b.concat(1, &parts).unwrap();
+            let _ = b.op(OpKind::Identity, &[c2]).unwrap();
+            graphs.push(b.finish());
+        }
+        {
+            let mut b = GraphBuilder::new();
+            let x = b.input(&[1, 3, 8, 8]);
+            let r = b.relu(x).unwrap();
+            let r2 = b.relu(r).unwrap();
+            let p = b.maxpool(r2, 2, 2).unwrap();
+            let _ = b.relu(p).unwrap();
+            graphs.push(b.finish());
+        }
+        {
+            let mut b = GraphBuilder::new();
+            let x = b.input(&[1, 3, 6, 6]);
+            let c1 = b.conv(x, 6, 1, 1, PadMode::Same).unwrap();
+            let c2 = b.conv(c1, 4, 1, 1, PadMode::Same).unwrap();
+            let c3 = b.conv(c2, 4, 3, 1, PadMode::Same).unwrap();
+            let _ = b.batchnorm(c3).unwrap();
+            graphs.push(b.finish());
+        }
+        {
+            let mut b = GraphBuilder::new();
+            let x = b.input(&[2, 8]);
+            let y = b.input(&[2, 8]);
+            let z = b.input(&[2, 8]);
+            let n3 = b.op(OpKind::AddN { n: 3 }, &[x, y, z]).unwrap();
+            let _ = b.add(n3, x).unwrap();
+            let s1 = b.add(x, y).unwrap();
+            let _ = b.add(s1, z).unwrap();
+            let l1 = b.linear(x, 8, Activation::None).unwrap();
+            let _ = b.linear(l1, 4, Activation::Relu).unwrap();
+            let lr = b.linear(y, 8, Activation::None).unwrap();
+            let _ = b.relu(lr).unwrap();
+            let lg = b.linear(z, 8, Activation::None).unwrap();
+            let _ = b.gelu(lg).unwrap();
+            let w8 = b.weight(&[8, 4]);
+            let m1 = b
+                .op(OpKind::MatMul { trans_a: false, trans_b: false, act: Activation::None }, &[x, w8])
+                .unwrap();
+            let _ = b.relu(m1);
+            // Sibling matmuls off the same LHS for merge_matmul2.
+            let w8b = b.weight(&[8, 4]);
+            let m2 = b
+                .op(OpKind::MatMul { trans_a: false, trans_b: false, act: Activation::None }, &[x, w8b])
+                .unwrap();
+            let _ = b.op(OpKind::Tanh, &[m2]).unwrap();
+            graphs.push(b.finish());
+        }
+        {
+            let mut b = GraphBuilder::new();
+            let x = b.input(&[1, 3, 6, 6]);
+            let c1 = b.conv(x, 4, 3, 1, PadMode::Same).unwrap();
+            let c2 = b.conv(x, 4, 3, 1, PadMode::Same).unwrap();
+            let _ = b.add(c1, c2).unwrap();
+            let x2 = b.input(&[2, 4]);
+            let w2 = b.weight(&[4, 3]);
+            let mm = b
+                .op(OpKind::MatMul { trans_a: false, trans_b: false, act: Activation::None },
+                    &[x2, w2])
+                .unwrap();
+            let bias = b.weight(&[3]);
+            let _ = b.op(OpKind::Add, &[mm, bias]).unwrap();
+            graphs.push(b.finish());
+        }
+        {
+            // ConvBias coverage: folded conv followed by relu.
+            let mut b = GraphBuilder::new();
+            let x = b.input(&[1, 3, 8, 8]);
+            let w = b.weight(&[4, 3, 3, 3]);
+            let bias = b.weight(&[4]);
+            let cb = b
+                .op(
+                    OpKind::ConvBias { stride: 1, pad: PadMode::Same, act: Activation::None },
+                    &[x, w, bias],
+                )
+                .unwrap();
+            let _ = b.relu(cb).unwrap();
+            let cb2 = b
+                .op(
+                    OpKind::ConvBias { stride: 1, pad: PadMode::Same, act: Activation::Relu },
+                    &[x, w, bias],
+                )
+                .unwrap();
+            let _ = cb2;
+            // Identical parallel ConvBias pair for merge_convbias2.
+            let wb = b.weight(&[4, 3, 3, 3]);
+            let bb = b.weight(&[4]);
+            let m1 = b
+                .op(
+                    OpKind::ConvBias { stride: 1, pad: PadMode::Same, act: Activation::None },
+                    &[x, w, bias],
+                )
+                .unwrap();
+            let m2 = b
+                .op(
+                    OpKind::ConvBias { stride: 1, pad: PadMode::Same, act: Activation::None },
+                    &[x, wb, bb],
+                )
+                .unwrap();
+            let _ = b.relu(m1).unwrap();
+            let _ = b.relu(m2).unwrap();
+            // Stacked VALID max-pools + weight-mul chains + scale-rhs matmul.
+            let p1 = b
+                .op(OpKind::MaxPool { k: 2, stride: 2, pad: PadMode::Valid }, &[x])
+                .unwrap();
+            let _ = b
+                .op(OpKind::MaxPool { k: 2, stride: 2, pad: PadMode::Valid }, &[p1])
+                .unwrap();
+            let flat = b.input(&[2, 8]);
+            let wv = b.weight(&[8]);
+            let wv2 = b.weight(&[8]);
+            let mm1 = b.op(OpKind::Mul, &[flat, wv]).unwrap();
+            let _ = b.op(OpKind::Mul, &[mm1, wv2]).unwrap();
+            let wmat = b.weight(&[8, 5]);
+            let swm = b.op(OpKind::Scale { factor: 0.5 }, &[wmat]).unwrap();
+            let _ = b
+                .op(OpKind::MatMul { trans_a: false, trans_b: false, act: Activation::None }, &[flat, swm])
+                .unwrap();
+            let at = b.transpose(flat, &[1, 0]).unwrap();
+            let w28 = b.weight(&[2, 6]);
+            let _ = b
+                .op(OpKind::MatMul { trans_a: false, trans_b: false, act: Activation::None }, &[at, w28])
+                .unwrap();
+            let y8 = b.input(&[2, 8]);
+            let sadd = b.op(OpKind::Add, &[flat, y8]).unwrap();
+            let _ = b.transpose(sadd, &[1, 0]).unwrap();
+            let t1 = b.transpose(flat, &[1, 0]).unwrap();
+            let t2 = b.transpose(y8, &[1, 0]).unwrap();
+            let _ = b.op(OpKind::Add, &[t1, t2]).unwrap();
+            let sc1 = b.op(OpKind::Scale { factor: 2.0 }, &[flat]).unwrap();
+            let _ = b.op(OpKind::Scale { factor: 0.5 }, &[sc1]).unwrap();
+            graphs.push(b.finish());
+        }
+        {
+            // Fused-form coverage: unfuse + emit rules need fused inputs.
+            let mut b = GraphBuilder::new();
+            let x = b.input(&[1, 3, 8, 8]);
+            let w = b.weight(&[4, 3, 3, 3]);
+            let _ = b
+                .op(
+                    OpKind::Conv2d { stride: 1, pad: PadMode::Same, act: Activation::Relu },
+                    &[x, w],
+                )
+                .unwrap();
+            let a = b.input(&[2, 4]);
+            let c = b.input(&[3, 4]);
+            let _ = b
+                .op(OpKind::MatMul { trans_a: false, trans_b: true, act: Activation::None }, &[a, c])
+                .unwrap();
+            let ct = b.transpose(c, &[1, 0]).unwrap();
+            let _ = b
+                .op(OpKind::MatMul { trans_a: false, trans_b: false, act: Activation::None }, &[a, ct])
+                .unwrap();
+            let p = b.input(&[1, 4, 16]);
+            let q = b.input(&[1, 4, 16]);
+            let gamma = b.weight(&[16]);
+            let beta = b.weight(&[16]);
+            let _ = b.op(OpKind::FusedAddLayerNorm, &[p, q, gamma, beta]).unwrap();
+            let sc = b.op(OpKind::Scale { factor: 0.25 }, &[a]).unwrap();
+            let w45 = b.weight(&[4, 5]);
+            let _ = b
+                .op(OpKind::MatMul { trans_a: false, trans_b: false, act: Activation::None }, &[sc, w45])
+                .unwrap();
+            graphs.push(b.finish());
+        }
+        for rule in &lib.rules {
+            let hits: usize = graphs.iter().map(|g| rule.find(g).len()).sum();
+            assert!(hits > 0, "rule {} never fires", rule.name());
+        }
+    }
+
+    #[test]
+    fn bert_has_transformer_fusion_opportunities() {
+        let g = crate::zoo::bert_base();
+        let lib = standard_library();
+        let addln = lib.get(lib.index_of("fuse_add_ln").unwrap()).unwrap();
+        assert_eq!(addln.find(&g).len(), 24); // 2 per encoder layer
+        let qkv = lib.get(lib.index_of("merge_linear3").unwrap()).unwrap();
+        assert!(!qkv.find(&g).is_empty());
+    }
+}

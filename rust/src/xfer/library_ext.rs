@@ -1,0 +1,466 @@
+//! Extended rule families: merged fused-conv branches, LHS transpose
+//! absorption, pooling composition, transpose distribution over
+//! elementwise ops, and RHS scale hoisting. Registered after the core
+//! library; together they fill the artifact's 48 xfer slots with
+//! genuinely distinct rewrites (the paper's agent chooses among >100).
+
+use crate::graph::{Activation, NodeId, OpKind, PadMode, PortRef};
+#[cfg(test)]
+use crate::graph::Graph;
+use crate::pred;
+
+use super::apply::{live_op, splice, splice_port};
+use super::library::rule;
+use super::matcher::{find_chains, find_siblings, sorted_consumers};
+use super::Rule;
+
+/// Merge two parallel `ConvBias` branches with identical attributes and
+/// weight shapes (arises after BN folding in ResNet/Inception blocks).
+pub fn merge_convbias_siblings() -> Box<dyn Rule> {
+    rule(
+        "merge_convbias2",
+        |g| {
+            find_siblings(g, &pred!(cb: OpKind::ConvBias { .. }), 2)
+                .into_iter()
+                .filter(|pair| {
+                    let (a, b) = (g.node(pair[0]), g.node(pair[1]));
+                    a.op == b.op
+                        && a.inputs[0] == b.inputs[0]
+                        && match (g.out_desc(a.inputs[1]), g.out_desc(b.inputs[1])) {
+                            (Ok(da), Ok(db)) => da.shape == db.shape,
+                            _ => false,
+                        }
+                })
+                .collect()
+        },
+        |g, loc| {
+            let (a_id, b_id) = (loc[0], loc[1]);
+            let op = live_op(g, a_id)?.clone();
+            anyhow::ensure!(&op == live_op(g, b_id)?, "merge_convbias2: attrs differ");
+            let (x, wa, ba) = (
+                g.node(a_id).inputs[0],
+                g.node(a_id).inputs[1],
+                g.node(a_id).inputs[2],
+            );
+            let (wb, bb) = (g.node(b_id).inputs[1], g.node(b_id).inputs[2]);
+            anyhow::ensure!(g.node(b_id).inputs[0] == x, "merge_convbias2: inputs differ");
+            let wcat = g.add(OpKind::Concat { axis: 0 }, &[wa, wb])?;
+            let bcat = g.add(OpKind::Concat { axis: 0 }, &[ba, bb])?;
+            let conv = g.add(op, &[x, PortRef::of(wcat), PortRef::of(bcat)])?;
+            let split = g.add(OpKind::Split { axis: 1, parts: 2 }, &[PortRef::of(conv)])?;
+            splice_port(g, PortRef::of(a_id), PortRef { node: split, port: 0 })?;
+            splice_port(g, PortRef::of(b_id), PortRef { node: split, port: 1 })?;
+            g.kill(a_id);
+            g.kill(b_id);
+            Ok(())
+        },
+    )
+}
+
+/// matmul(transpose(a), b) => matmul{trans_a}(a, b) for last-two-swap
+/// transposes feeding the LHS exclusively.
+pub fn absorb_transpose_lhs() -> Box<dyn Rule> {
+    rule(
+        "absorb_transpose_lhs",
+        |g| {
+            let cons = sorted_consumers(g);
+            let mut out = Vec::new();
+            for id in g.live_ids() {
+                let n = g.node(id);
+                let OpKind::MatMul { trans_a: false, trans_b, act } = n.op else { continue };
+                let _ = (trans_b, act);
+                let lhs = n.inputs[0];
+                if lhs.port != 0 {
+                    continue;
+                }
+                let OpKind::Transpose { perm } = &g.node(lhs.node).op else { continue };
+                let r = perm.len();
+                if r < 2 {
+                    continue;
+                }
+                let mut want: Vec<usize> = (0..r).collect();
+                want.swap(r - 2, r - 1);
+                if perm != &want || cons.get(&lhs.node).map(|v| v.len()) != Some(1) {
+                    continue;
+                }
+                out.push(vec![lhs.node, id]);
+            }
+            out
+        },
+        |g, loc| {
+            let (t_id, mm_id) = (loc[0], loc[1]);
+            let OpKind::MatMul { trans_a: false, trans_b, act } = *live_op(g, mm_id)? else {
+                anyhow::bail!("absorb_transpose_lhs: stale matmul")
+            };
+            let a_src = g.node(t_id).inputs[0];
+            let b = g.node(mm_id).inputs[1];
+            let mm = g.add(OpKind::MatMul { trans_a: true, trans_b, act }, &[a_src, b])?;
+            splice(g, mm_id, PortRef::of(mm))?;
+            g.kill(t_id);
+            Ok(())
+        },
+    )
+}
+
+/// Compose two stacked max-pools (VALID padding): maxpool(k1, s1) then
+/// maxpool(k2, s2) == maxpool(k1 + (k2-1)*s1, s1*s2). Exact for max.
+pub fn compose_maxpools() -> Box<dyn Rule> {
+    rule(
+        "compose_maxpool2",
+        |g| {
+            find_chains(
+                g,
+                &[
+                    pred!(p1: OpKind::MaxPool { pad: PadMode::Valid, .. }),
+                    pred!(p2: OpKind::MaxPool { pad: PadMode::Valid, .. }),
+                ],
+            )
+        },
+        |g, loc| {
+            let (p1, p2) = (loc[0], loc[1]);
+            let OpKind::MaxPool { k: k1, stride: s1, pad: PadMode::Valid } = *live_op(g, p1)? else {
+                anyhow::bail!("compose_maxpool2: stale")
+            };
+            let OpKind::MaxPool { k: k2, stride: s2, pad: PadMode::Valid } = *live_op(g, p2)? else {
+                anyhow::bail!("compose_maxpool2: stale")
+            };
+            let x = g.node(p1).inputs[0];
+            let fused = g.add(
+                OpKind::MaxPool { k: k1 + (k2 - 1) * s1, stride: s1 * s2, pad: PadMode::Valid },
+                &[x],
+            )?;
+            // Output shapes must agree exactly (guaranteed for VALID).
+            anyhow::ensure!(
+                g.node(fused).outs[0] == g.node(p2).outs[0],
+                "compose_maxpool2: shape drift"
+            );
+            splice(g, p2, PortRef::of(fused))?;
+            g.kill(p1);
+            Ok(())
+        },
+    )
+}
+
+/// transpose(add(a, b)) => add(transpose(a), transpose(b)) — distributes
+/// the data movement into the branches where it may cancel against
+/// existing transposes. Requires a non-broadcast add.
+pub fn push_transpose_through_add() -> Box<dyn Rule> {
+    rule(
+        "push_transpose_add",
+        |g| {
+            find_chains(g, &[pred!(a: OpKind::Add), pred!(t: OpKind::Transpose { .. })])
+                .into_iter()
+                .filter(|loc| {
+                    let add = g.node(loc[0]);
+                    match (g.out_desc(add.inputs[0]), g.out_desc(add.inputs[1])) {
+                        (Ok(a), Ok(b)) => a.shape == b.shape,
+                        _ => false,
+                    }
+                })
+                .collect()
+        },
+        |g, loc| {
+            let (add_id, t_id) = (loc[0], loc[1]);
+            let OpKind::Transpose { perm } = live_op(g, t_id)?.clone() else {
+                anyhow::bail!("push_transpose_add: stale")
+            };
+            let (a, b) = (g.node(add_id).inputs[0], g.node(add_id).inputs[1]);
+            let ta = g.add(OpKind::Transpose { perm: perm.clone() }, &[a])?;
+            let tb = g.add(OpKind::Transpose { perm }, &[b])?;
+            let sum = g.add(OpKind::Add, &[PortRef::of(ta), PortRef::of(tb)])?;
+            splice(g, t_id, PortRef::of(sum))?;
+            g.kill(add_id);
+            Ok(())
+        },
+    )
+}
+
+/// Inverse: add(transpose(a), transpose(b)) with equal perms => transpose(add).
+pub fn pull_transpose_out_of_add() -> Box<dyn Rule> {
+    rule(
+        "pull_transpose_add",
+        |g| {
+            let cons = sorted_consumers(g);
+            let mut out = Vec::new();
+            for id in g.live_ids() {
+                let n = g.node(id);
+                if !matches!(n.op, OpKind::Add) || n.inputs.len() != 2 {
+                    continue;
+                }
+                let (pa, pb) = (n.inputs[0], n.inputs[1]);
+                let (ta, tb) = (g.node(pa.node), g.node(pb.node));
+                let (OpKind::Transpose { perm: qa }, OpKind::Transpose { perm: qb }) = (&ta.op, &tb.op) else {
+                    continue;
+                };
+                if qa != qb || pa.node == pb.node {
+                    continue;
+                }
+                let sole = |t: NodeId| cons.get(&t).map(|v| v.len()) == Some(1);
+                if sole(pa.node) && sole(pb.node) {
+                    out.push(vec![pa.node, pb.node, id]);
+                }
+            }
+            out
+        },
+        |g, loc| {
+            let (ta, tb, add_id) = (loc[0], loc[1], loc[2]);
+            let OpKind::Transpose { perm } = live_op(g, ta)?.clone() else {
+                anyhow::bail!("pull_transpose_add: stale")
+            };
+            let a_src = g.node(ta).inputs[0];
+            let b_src = g.node(tb).inputs[0];
+            let sum = g.add(OpKind::Add, &[a_src, b_src])?;
+            let t = g.add(OpKind::Transpose { perm }, &[PortRef::of(sum)])?;
+            splice(g, add_id, PortRef::of(t))?;
+            g.kill(ta);
+            g.kill(tb);
+            Ok(())
+        },
+    )
+}
+
+/// matmul(a, scale(b)) => scale(matmul(a, b)) — RHS counterpart of
+/// hoist_scale_matmul (the chain matcher only follows first inputs).
+pub fn hoist_scale_matmul_rhs() -> Box<dyn Rule> {
+    rule(
+        "hoist_scale_matmul_rhs",
+        |g| {
+            let cons = sorted_consumers(g);
+            let mut out = Vec::new();
+            for id in g.live_ids() {
+                let n = g.node(id);
+                let OpKind::MatMul { act: Activation::None, .. } = n.op else { continue };
+                let rhs = n.inputs[1];
+                if !matches!(g.node(rhs.node).op, OpKind::Scale { .. }) {
+                    continue;
+                }
+                if cons.get(&rhs.node).map(|v| v.len()) != Some(1) {
+                    continue;
+                }
+                out.push(vec![rhs.node, id]);
+            }
+            out
+        },
+        |g, loc| {
+            let (s_id, mm_id) = (loc[0], loc[1]);
+            let scale_op = live_op(g, s_id)?.clone();
+            let mm_op = live_op(g, mm_id)?.clone();
+            let a = g.node(mm_id).inputs[0];
+            let b_src = g.node(s_id).inputs[0];
+            let mm = g.add(mm_op, &[a, b_src])?;
+            let sc = g.add(scale_op, &[PortRef::of(mm)])?;
+            splice(g, mm_id, PortRef::of(sc))?;
+            g.kill(s_id);
+            Ok(())
+        },
+    )
+}
+
+/// scale(scale(x)) => scale(x) with the product factor.
+pub fn compose_scales() -> Box<dyn Rule> {
+    rule(
+        "compose_scale2",
+        |g| find_chains(g, &[pred!(a: OpKind::Scale { .. }), pred!(b: OpKind::Scale { .. })]),
+        |g, loc| {
+            let (s1, s2) = (loc[0], loc[1]);
+            let OpKind::Scale { factor: f1 } = *live_op(g, s1)? else {
+                anyhow::bail!("compose_scale2: stale")
+            };
+            let OpKind::Scale { factor: f2 } = *live_op(g, s2)? else {
+                anyhow::bail!("compose_scale2: stale")
+            };
+            let x = g.node(s1).inputs[0];
+            let s = g.add(OpKind::Scale { factor: f1 * f2 }, &[x])?;
+            splice(g, s2, PortRef::of(s))?;
+            g.kill(s1);
+            Ok(())
+        },
+    )
+}
+
+/// mul(x, w) + add(*, b) with per-last-axis weight/bias vectors => a
+/// scale-shift pair is recognisable as an (inference-time) BatchNorm when
+/// x is NCHW and w/b broadcast over channels. Kept general: fuses the two
+/// elementwise passes into one AddN-style op is not expressible, so this
+/// rule instead *reassociates* mul-by-weight chains:
+/// mul(mul(x, a), b) => mul(x, a*b) when a, b are weight-constant.
+pub fn compose_weight_muls() -> Box<dyn Rule> {
+    rule(
+        "compose_mul2",
+        |g| {
+            find_chains(g, &[pred!(a: OpKind::Mul), pred!(b: OpKind::Mul)])
+                .into_iter()
+                .filter(|loc| {
+                    // Second operands of both muls must be equal-shaped so
+                    // the combined constant keeps broadcasting semantics.
+                    let m1 = g.node(loc[0]);
+                    let m2 = g.node(loc[1]);
+                    match (g.out_desc(m1.inputs[1]), g.out_desc(m2.inputs[1])) {
+                        (Ok(a), Ok(b)) => a.shape == b.shape,
+                        _ => false,
+                    }
+                })
+                .collect()
+        },
+        |g, loc| {
+            let (m1, m2) = (loc[0], loc[1]);
+            let x = g.node(m1).inputs[0];
+            let a = g.node(m1).inputs[1];
+            let b = g.node(m2).inputs[1];
+            let ab = g.add(OpKind::Mul, &[a, b])?;
+            let out = g.add(OpKind::Mul, &[x, PortRef::of(ab)])?;
+            splice(g, m2, PortRef::of(out))?;
+            g.kill(m1);
+            Ok(())
+        },
+    )
+}
+
+/// All extended rules in registration order.
+pub fn extended_rules() -> Vec<Box<dyn Rule>> {
+    vec![
+        merge_convbias_siblings(),
+        absorb_transpose_lhs(),
+        compose_maxpools(),
+        push_transpose_through_add(),
+        pull_transpose_out_of_add(),
+        hoist_scale_matmul_rhs(),
+        compose_scales(),
+        compose_weight_muls(),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::interp::semantically_equal;
+    use crate::xfer::apply_rule;
+    use crate::xfer::library::standard_library;
+
+    fn check_rule_on(g: &Graph, rule_name: &str) -> usize {
+        let lib = standard_library();
+        let idx = lib.index_of(rule_name).unwrap_or_else(|| panic!("no rule {rule_name}"));
+        let rule = lib.get(idx).unwrap();
+        let locs = rule.find(g);
+        for loc in &locs {
+            let mut g2 = g.clone();
+            apply_rule(&mut g2, rule, loc).unwrap();
+            g2.validate().unwrap();
+            assert!(
+                semantically_equal(g, &g2, 2, 4242, 2e-3).unwrap(),
+                "{rule_name} at {:?} changed semantics",
+                loc
+            );
+        }
+        locs.len()
+    }
+
+    #[test]
+    fn merge_convbias_preserves_semantics() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 3, 6, 6]);
+        for _ in 0..2 {
+            let w = b.weight(&[4, 3, 3, 3]);
+            let bias = b.weight(&[4]);
+            let cb = b
+                .op(
+                    OpKind::ConvBias { stride: 1, pad: PadMode::Same, act: Activation::Relu },
+                    &[x, w, bias],
+                )
+                .unwrap();
+            b.relu(cb).unwrap();
+        }
+        let g = b.finish();
+        assert_eq!(check_rule_on(&g, "merge_convbias2"), 1);
+    }
+
+    #[test]
+    fn absorb_transpose_lhs_preserves_semantics() {
+        let mut b = GraphBuilder::new();
+        let a = b.input(&[4, 2]);
+        let c = b.input(&[4, 3]);
+        let at = b.transpose(a, &[1, 0]).unwrap();
+        let _ = b
+            .op(OpKind::MatMul { trans_a: false, trans_b: false, act: Activation::None }, &[at, c])
+            .unwrap();
+        let g = b.finish();
+        assert_eq!(check_rule_on(&g, "absorb_transpose_lhs"), 1);
+    }
+
+    #[test]
+    fn compose_maxpools_preserves_semantics() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 2, 16, 16]);
+        let p1 = b
+            .op(OpKind::MaxPool { k: 2, stride: 2, pad: PadMode::Valid }, &[x])
+            .unwrap();
+        let _ = b
+            .op(OpKind::MaxPool { k: 2, stride: 2, pad: PadMode::Valid }, &[p1])
+            .unwrap();
+        let g = b.finish();
+        assert_eq!(check_rule_on(&g, "compose_maxpool2"), 1);
+    }
+
+    #[test]
+    fn transpose_add_distribution_round_trip() {
+        use crate::graph::canonical_hash;
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[2, 3, 4]);
+        let y = b.input(&[2, 3, 4]);
+        let s = b.add(x, y).unwrap();
+        let _ = b.transpose(s, &[0, 2, 1]).unwrap();
+        let g = b.finish();
+        assert_eq!(check_rule_on(&g, "push_transpose_add"), 1);
+
+        let lib = standard_library();
+        let push = lib.get(lib.index_of("push_transpose_add").unwrap()).unwrap();
+        let pull = lib.get(lib.index_of("pull_transpose_add").unwrap()).unwrap();
+        let mut g2 = g.clone();
+        let loc = push.find(&g2)[0].clone();
+        apply_rule(&mut g2, push, &loc).unwrap();
+        assert_eq!(check_rule_on(&g2, "pull_transpose_add"), 1);
+        let loc_b = pull.find(&g2)[0].clone();
+        apply_rule(&mut g2, pull, &loc_b).unwrap();
+        assert_eq!(canonical_hash(&g), canonical_hash(&g2));
+    }
+
+    #[test]
+    fn scale_rules_preserve_semantics() {
+        let mut b = GraphBuilder::new();
+        let a = b.input(&[2, 4]);
+        let w = b.weight(&[4, 3]);
+        let sb = b.op(OpKind::Scale { factor: 0.5 }, &[w]).unwrap();
+        let _ = b
+            .op(OpKind::MatMul { trans_a: false, trans_b: false, act: Activation::None }, &[a, sb])
+            .unwrap();
+        let g = b.finish();
+        assert_eq!(check_rule_on(&g, "hoist_scale_matmul_rhs"), 1);
+
+        let mut b2 = GraphBuilder::new();
+        let a2 = b2.input(&[2, 4]);
+        let s1 = b2.op(OpKind::Scale { factor: 2.0 }, &[a2]).unwrap();
+        let _ = b2.op(OpKind::Scale { factor: 0.25 }, &[s1]).unwrap();
+        let g2 = b2.finish();
+        assert_eq!(check_rule_on(&g2, "compose_scale2"), 1);
+    }
+
+    #[test]
+    fn compose_mul_preserves_semantics() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[2, 8]);
+        let w1 = b.weight(&[8]);
+        let w2 = b.weight(&[8]);
+        let m1 = b.op(OpKind::Mul, &[x, w1]).unwrap();
+        let _ = b.op(OpKind::Mul, &[m1, w2]).unwrap();
+        let g = b.finish();
+        assert_eq!(check_rule_on(&g, "compose_mul2"), 1);
+    }
+
+    #[test]
+    fn library_fits_slot_budget() {
+        let lib = standard_library();
+        assert!(lib.len() <= 48, "library ({}) exceeds artifact slots", lib.len());
+        assert!(lib.len() >= 40, "library ({}) thinner than expected", lib.len());
+    }
+}

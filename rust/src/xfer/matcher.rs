@@ -1,0 +1,270 @@
+//! Structural pattern matching primitives.
+//!
+//! Every library rule matches one of two shapes, so the matcher exposes two
+//! workhorses instead of a fully general (NP-hard) isomorphism search:
+//!
+//!  * [`find_chains`] — a linear chain `p0 -> p1 -> ... -> pk` where each
+//!    interior node's *only* consumer is the next chain element (so the
+//!    chain can be deleted wholesale after replacement);
+//!  * [`find_siblings`] — `k` distinct nodes matching a predicate that all
+//!    read the *same* tensor (parallel branches to merge).
+//!
+//! Both run in O(nodes * pattern) with deterministic output order, which
+//! the environment relies on for stable location indices (§3.1.3).
+
+use std::collections::HashMap;
+
+use crate::graph::{Graph, NodeId, OpKind, PortRef};
+
+/// Operator predicate for one pattern position.
+pub struct OpPred {
+    pub label: &'static str,
+    pub test: fn(&OpKind) -> bool,
+}
+
+impl OpPred {
+    pub fn exact_name(label: &'static str, test: fn(&OpKind) -> bool) -> Self {
+        Self { label, test }
+    }
+}
+
+/// Convenience macro: `pred!(relu: OpKind::Relu)` or with a guard.
+#[macro_export]
+macro_rules! pred {
+    ($label:ident : $($pat:tt)+) => {
+        $crate::xfer::matcher::OpPred {
+            label: stringify!($label),
+            test: |op| matches!(op, $($pat)+),
+        }
+    };
+}
+
+/// consumers map with deterministic ordering (by consumer id, then slot).
+pub fn sorted_consumers(g: &Graph) -> HashMap<NodeId, Vec<(NodeId, usize)>> {
+    let mut map = g.consumers();
+    for v in map.values_mut() {
+        v.sort();
+    }
+    map
+}
+
+/// Does `id` have exactly one consumer, and is it `next` reading port 0?
+fn sole_consumer_is(
+    cons: &HashMap<NodeId, Vec<(NodeId, usize)>>,
+    id: NodeId,
+    next: NodeId,
+) -> bool {
+    match cons.get(&id) {
+        Some(v) => v.len() == 1 && v[0].0 == next,
+        None => false,
+    }
+}
+
+/// Find all chains `[n0, n1, ..., nk]` with `ni -> ni+1` dataflow where
+/// `ni+1` reads `ni` as its **first** input, every interior node has a
+/// single output port in use and a single consumer. Output order follows
+/// node-id order of the chain head.
+pub fn find_chains(g: &Graph, preds: &[OpPred]) -> Vec<Vec<NodeId>> {
+    assert!(preds.len() >= 2, "chains need at least two positions");
+    let cons = sorted_consumers(g);
+    let mut out = Vec::new();
+    for head in g.live_ids() {
+        if !(preds[0].test)(&g.node(head).op) {
+            continue;
+        }
+        let mut chain = vec![head];
+        let mut ok = true;
+        for pred in &preds[1..] {
+            let cur = *chain.last().unwrap();
+            // The follower must read `cur` (port 0 of it) as first input.
+            let next = match cons.get(&cur) {
+                Some(v) if v.len() == 1 => v[0].0,
+                _ => {
+                    ok = false;
+                    break;
+                }
+            };
+            let reads_first = g
+                .node(next)
+                .inputs
+                .first()
+                .is_some_and(|p| p.node == cur && p.port == 0);
+            if !reads_first || !(pred.test)(&g.node(next).op) || !sole_consumer_is(&cons, cur, next)
+            {
+                ok = false;
+                break;
+            }
+            chain.push(next);
+        }
+        if ok {
+            out.push(chain);
+        }
+    }
+    out
+}
+
+/// Find unordered groups of exactly `k` distinct nodes satisfying `pred`
+/// that all read the same producer port as their **first** input. Groups
+/// are emitted as sorted node-id lists; each combination appears once.
+pub fn find_siblings(g: &Graph, pred: &OpPred, k: usize) -> Vec<Vec<NodeId>> {
+    let mut by_src: HashMap<PortRef, Vec<NodeId>> = HashMap::new();
+    for id in g.live_ids() {
+        let node = g.node(id);
+        if !(pred.test)(&node.op) {
+            continue;
+        }
+        if let Some(first) = node.inputs.first() {
+            by_src.entry(*first).or_default().push(id);
+        }
+    }
+    let mut srcs: Vec<PortRef> = by_src.keys().copied().collect();
+    srcs.sort_by_key(|p| (p.node, p.port));
+    let mut out = Vec::new();
+    for src in srcs {
+        let mut sibs = by_src.remove(&src).unwrap();
+        sibs.sort();
+        if sibs.len() < k {
+            continue;
+        }
+        // Enumerate k-combinations in lexicographic order (bounded: sibling
+        // groups in real graphs are small).
+        combinations(&sibs, k, &mut out);
+    }
+    out
+}
+
+fn combinations(items: &[NodeId], k: usize, out: &mut Vec<Vec<NodeId>>) {
+    let n = items.len();
+    if k > n {
+        return;
+    }
+    let mut idx: Vec<usize> = (0..k).collect();
+    loop {
+        out.push(idx.iter().map(|&i| items[i]).collect());
+        // Advance combination.
+        let mut i = k;
+        loop {
+            if i == 0 {
+                return;
+            }
+            i -= 1;
+            if idx[i] != i + n - k {
+                break;
+            }
+            if i == 0 {
+                return;
+            }
+        }
+        idx[i] += 1;
+        for j in i + 1..k {
+            idx[j] = idx[j - 1] + 1;
+        }
+    }
+}
+
+/// Is every consumer of `id` within `allowed`? (Safe-deletion check for
+/// interior nodes of a match.)
+pub fn consumers_within(g: &Graph, id: NodeId, allowed: &[NodeId]) -> bool {
+    g.consumers()
+        .get(&id)
+        .map(|v| v.iter().all(|(c, _)| allowed.contains(c)))
+        .unwrap_or(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Activation, GraphBuilder, PadMode};
+
+    #[test]
+    fn chain_conv_relu_found() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 3, 8, 8]);
+        let c = b.conv(x, 4, 3, 1, PadMode::Same).unwrap();
+        let _ = b.relu(c).unwrap();
+        let g = b.finish();
+        let chains = find_chains(
+            &g,
+            &[
+                pred!(conv: OpKind::Conv2d { act: Activation::None, .. }),
+                pred!(relu: OpKind::Relu),
+            ],
+        );
+        assert_eq!(chains.len(), 1);
+        assert_eq!(chains[0].len(), 2);
+    }
+
+    #[test]
+    fn chain_requires_single_consumer() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 3, 8, 8]);
+        let c = b.conv(x, 4, 3, 1, PadMode::Same).unwrap();
+        let _ = b.relu(c).unwrap();
+        let _ = b.op(OpKind::Tanh, &[c]).unwrap(); // second consumer of conv
+        let g = b.finish();
+        let chains = find_chains(
+            &g,
+            &[
+                pred!(conv: OpKind::Conv2d { .. }),
+                pred!(relu: OpKind::Relu),
+            ],
+        );
+        assert!(chains.is_empty());
+    }
+
+    #[test]
+    fn siblings_shared_input() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 16]);
+        let _ = b.linear(x, 8, Activation::None).unwrap();
+        let _ = b.linear(x, 8, Activation::None).unwrap();
+        let _ = b.linear(x, 8, Activation::None).unwrap();
+        let g = b.finish();
+        let pairs = find_siblings(&g, &pred!(lin: OpKind::Linear { .. }), 2);
+        assert_eq!(pairs.len(), 3); // C(3,2)
+        let triples = find_siblings(&g, &pred!(lin: OpKind::Linear { .. }), 3);
+        assert_eq!(triples.len(), 1);
+    }
+
+    #[test]
+    fn siblings_require_same_source() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 16]);
+        let y = b.input(&[1, 16]);
+        let _ = b.linear(x, 8, Activation::None).unwrap();
+        let _ = b.linear(y, 8, Activation::None).unwrap();
+        let g = b.finish();
+        assert!(find_siblings(&g, &pred!(lin: OpKind::Linear { .. }), 2).is_empty());
+    }
+
+    #[test]
+    fn combinations_count() {
+        let items: Vec<NodeId> = (0..5).map(NodeId).collect();
+        let mut out = Vec::new();
+        combinations(&items, 3, &mut out);
+        assert_eq!(out.len(), 10);
+        // All unique and sorted.
+        for c in &out {
+            assert!(c.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn deterministic_order() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 3, 8, 8]);
+        for _ in 0..3 {
+            let c = b.conv(x, 4, 3, 1, PadMode::Same).unwrap();
+            let _ = b.relu(c).unwrap();
+        }
+        let g = b.finish();
+        let p = || {
+            find_chains(
+                &g,
+                &[pred!(conv: OpKind::Conv2d { .. }), pred!(relu: OpKind::Relu)],
+            )
+        };
+        assert_eq!(p(), p());
+        assert_eq!(p().len(), 3);
+    }
+}

@@ -1,0 +1,81 @@
+//! Substitution engine (§3.2): rules, matcher, application, generation.
+//!
+//! A [`Rule`] knows how to *find* its applicable locations in a graph and
+//! how to *apply* itself at one of them. Locations are ordered lists of
+//! anchor [`NodeId`]s — the environment exposes `min(matches, MAX_LOCS)`
+//! of them to the agent as the location action (§3.1.3).
+//!
+//! Weight-only arithmetic introduced by rewrites (concatenated kernels,
+//! BN-folded weights, composed 1x1 convs) stays in the graph as ordinary
+//! ops over `Weight` sources: the interpreter then verifies substitutions
+//! *exactly*, while the cost model constant-folds weight-only subtrees to
+//! zero runtime (they are precomputed at model-load time, as TASO does).
+
+pub mod apply;
+pub mod generator;
+pub mod library;
+pub mod library_ext;
+pub mod matcher;
+
+use crate::graph::{Graph, NodeId};
+
+/// Anchor nodes identifying one applicable site of a rule.
+pub type Location = Vec<NodeId>;
+
+pub trait Rule: Send + Sync {
+    /// Stable, unique rule name (also its display label in Fig. 10).
+    fn name(&self) -> &'static str;
+
+    /// All sites where this rule can fire, in deterministic order.
+    fn find(&self, g: &Graph) -> Vec<Location>;
+
+    /// Rewrite the graph at `loc`. `loc` must come from a `find` on the
+    /// *current* graph state. Implementations must leave the graph valid.
+    fn apply(&self, g: &mut Graph, loc: &Location) -> anyhow::Result<()>;
+}
+
+/// Apply a rule site and run the post-rewrite housekeeping every caller
+/// needs: dead-code elimination plus (debug) validation.
+pub fn apply_rule(g: &mut Graph, rule: &dyn Rule, loc: &Location) -> anyhow::Result<()> {
+    rule.apply(g, loc)?;
+    g.dce();
+    debug_assert!(g.validate().is_ok(), "rule {} broke the graph", rule.name());
+    Ok(())
+}
+
+/// A rule set with stable slot indices (the agent's xfer action space).
+pub struct RuleSet {
+    pub rules: Vec<Box<dyn Rule>>,
+}
+
+impl RuleSet {
+    pub fn new(rules: Vec<Box<dyn Rule>>) -> Self {
+        let mut seen = std::collections::HashSet::new();
+        for r in &rules {
+            assert!(seen.insert(r.name()), "duplicate rule name {}", r.name());
+        }
+        Self { rules }
+    }
+
+    pub fn len(&self) -> usize {
+        self.rules.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+
+    pub fn get(&self, idx: usize) -> Option<&dyn Rule> {
+        self.rules.get(idx).map(|b| b.as_ref())
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.rules.iter().position(|r| r.name() == name)
+    }
+
+    /// Total number of applicable sites across all rules (Table 1's
+    /// "Substitutions" column).
+    pub fn count_matches(&self, g: &Graph) -> usize {
+        self.rules.iter().map(|r| r.find(g).len()).sum()
+    }
+}

@@ -1,0 +1,77 @@
+//! BERT-Base encoder stack (Devlin et al., 2019), batch 1, sequence 128.
+//!
+//! 12 transformer encoder layers of hidden size 768 with 12 heads, built
+//! entirely from primitive ops (separate Q/K/V linears, scaled dot-product
+//! attention, post-LN residual blocks). The repeated Add -> LayerNorm pairs
+//! are the exact pattern RLFlow's §4.10 fusion discovers.
+//!
+//! The embedding front-end is represented by the pre-embedded input tensor
+//! [1, 128, 768] (token/position lookup is not a graph-optimisation target
+//! in TASO either).
+
+use crate::graph::{Graph, GraphBuilder};
+
+pub const SEQ: usize = 128;
+pub const HIDDEN: usize = 768;
+pub const HEADS: usize = 12;
+pub const LAYERS: usize = 12;
+
+pub fn bert_base() -> Graph {
+    build().expect("bert construction is static")
+}
+
+fn build() -> anyhow::Result<Graph> {
+    let mut b = GraphBuilder::new();
+    let mut x = b.input(&[1, SEQ, HIDDEN]);
+    for _ in 0..LAYERS {
+        x = b.transformer_encoder(x, HEADS, 4)?;
+    }
+    let g = b.finish();
+    g.validate()?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    #[test]
+    fn twelve_encoder_layers() {
+        let g = bert_base();
+        let lns = g
+            .live_ids()
+            .filter(|&id| matches!(g.node(id).op, OpKind::LayerNorm))
+            .count();
+        assert_eq!(lns, 2 * LAYERS);
+        let softmaxes = g
+            .live_ids()
+            .filter(|&id| matches!(g.node(id).op, OpKind::Softmax { .. }))
+            .count();
+        assert_eq!(softmaxes, LAYERS);
+    }
+
+    #[test]
+    fn output_shape_is_hidden_states() {
+        let g = bert_base();
+        let outs = g.output_ids();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(g.node(outs[0]).outs[0].shape, vec![1, SEQ, HIDDEN]);
+    }
+
+    #[test]
+    fn add_layernorm_chains_exist() {
+        // The §4.10 target: LayerNorm whose x input is an Add.
+        let g = bert_base();
+        let mut pairs = 0;
+        for id in g.live_ids() {
+            if matches!(g.node(id).op, OpKind::LayerNorm) {
+                let src = g.node(id).inputs[0].node;
+                if matches!(g.node(src).op, OpKind::Add) {
+                    pairs += 1;
+                }
+            }
+        }
+        assert_eq!(pairs, 2 * LAYERS);
+    }
+}

@@ -1,0 +1,158 @@
+//! InceptionV3 (Szegedy et al., CVPR 2016), NCHW, batch 1.
+//!
+//! Full stem plus the canonical mixed blocks: 3x InceptionA, reduction B,
+//! 2x InceptionC (the 7x7-factorised branches use 1x7/7x1 pairs collapsed
+//! to 7x7-SAME convs to stay within the square-kernel IR), reduction D and
+//! 2x InceptionE. Multi-branch concats everywhere — the richest rule-match
+//! surface in the zoo, which is also why TASO historically does *better*
+//! than RL here (§4.4).
+
+use crate::graph::{Graph, GraphBuilder, PadMode, PortRef};
+
+fn cbr(b: &mut GraphBuilder, x: PortRef, co: usize, k: usize, stride: usize, pad: PadMode) -> anyhow::Result<PortRef> {
+    b.conv_bn_relu(x, co, k, stride, pad)
+}
+
+fn inception_a(b: &mut GraphBuilder, x: PortRef, pool_ch: usize) -> anyhow::Result<PortRef> {
+    let b1 = cbr(b, x, 64, 1, 1, PadMode::Same)?;
+
+    let b2 = cbr(b, x, 48, 1, 1, PadMode::Same)?;
+    let b2 = cbr(b, b2, 64, 5, 1, PadMode::Same)?;
+
+    let b3 = cbr(b, x, 64, 1, 1, PadMode::Same)?;
+    let b3 = cbr(b, b3, 96, 3, 1, PadMode::Same)?;
+    let b3 = cbr(b, b3, 96, 3, 1, PadMode::Same)?;
+
+    let b4 = b.avgpool(x, 3, 1)?;
+    let b4 = cbr(b, b4, pool_ch, 1, 1, PadMode::Same)?;
+
+    b.concat(1, &[b1, b2, b3, b4])
+}
+
+fn reduction_b(b: &mut GraphBuilder, x: PortRef) -> anyhow::Result<PortRef> {
+    let b1 = cbr(b, x, 384, 3, 2, PadMode::Valid)?;
+
+    let b2 = cbr(b, x, 64, 1, 1, PadMode::Same)?;
+    let b2 = cbr(b, b2, 96, 3, 1, PadMode::Same)?;
+    let b2 = cbr(b, b2, 96, 3, 2, PadMode::Valid)?;
+
+    let b3 = b.op(
+        crate::graph::OpKind::MaxPool { k: 3, stride: 2, pad: PadMode::Valid },
+        &[x],
+    )?;
+    b.concat(1, &[b1, b2, b3])
+}
+
+fn inception_c(b: &mut GraphBuilder, x: PortRef, mid: usize) -> anyhow::Result<PortRef> {
+    let b1 = cbr(b, x, 192, 1, 1, PadMode::Same)?;
+
+    // 7x7 factorised branch (collapsed to square 7x7 SAME).
+    let b2 = cbr(b, x, mid, 1, 1, PadMode::Same)?;
+    let b2 = cbr(b, b2, 192, 7, 1, PadMode::Same)?;
+
+    let b3 = cbr(b, x, mid, 1, 1, PadMode::Same)?;
+    let b3 = cbr(b, b3, mid, 7, 1, PadMode::Same)?;
+    let b3 = cbr(b, b3, 192, 7, 1, PadMode::Same)?;
+
+    let b4 = b.avgpool(x, 3, 1)?;
+    let b4 = cbr(b, b4, 192, 1, 1, PadMode::Same)?;
+
+    b.concat(1, &[b1, b2, b3, b4])
+}
+
+fn reduction_d(b: &mut GraphBuilder, x: PortRef) -> anyhow::Result<PortRef> {
+    let b1 = cbr(b, x, 192, 1, 1, PadMode::Same)?;
+    let b1 = cbr(b, b1, 320, 3, 2, PadMode::Valid)?;
+
+    let b2 = cbr(b, x, 192, 1, 1, PadMode::Same)?;
+    let b2 = cbr(b, b2, 192, 7, 1, PadMode::Same)?;
+    let b2 = cbr(b, b2, 192, 3, 2, PadMode::Valid)?;
+
+    let b3 = b.op(
+        crate::graph::OpKind::MaxPool { k: 3, stride: 2, pad: PadMode::Valid },
+        &[x],
+    )?;
+    b.concat(1, &[b1, b2, b3])
+}
+
+fn inception_e(b: &mut GraphBuilder, x: PortRef) -> anyhow::Result<PortRef> {
+    let b1 = cbr(b, x, 320, 1, 1, PadMode::Same)?;
+
+    // Split 3x3 branch (1x3 + 3x1 in the original; square-collapsed).
+    let b2 = cbr(b, x, 384, 1, 1, PadMode::Same)?;
+    let b2a = cbr(b, b2, 384, 3, 1, PadMode::Same)?;
+    let b2b = cbr(b, b2, 384, 3, 1, PadMode::Same)?;
+    let b2cat = b.concat(1, &[b2a, b2b])?;
+
+    let b3 = cbr(b, x, 448, 1, 1, PadMode::Same)?;
+    let b3 = cbr(b, b3, 384, 3, 1, PadMode::Same)?;
+    let b3a = cbr(b, b3, 384, 3, 1, PadMode::Same)?;
+    let b3b = cbr(b, b3, 384, 3, 1, PadMode::Same)?;
+    let b3cat = b.concat(1, &[b3a, b3b])?;
+
+    let b4 = b.avgpool(x, 3, 1)?;
+    let b4 = cbr(b, b4, 192, 1, 1, PadMode::Same)?;
+
+    b.concat(1, &[b1, b2cat, b3cat, b4])
+}
+
+pub fn inception_v3() -> Graph {
+    build().expect("inception construction is static")
+}
+
+fn build() -> anyhow::Result<Graph> {
+    let mut b = GraphBuilder::new();
+    let x = b.input(&[1, 3, 299, 299]);
+    // Stem.
+    let mut y = cbr(&mut b, x, 32, 3, 2, PadMode::Valid)?;
+    y = cbr(&mut b, y, 32, 3, 1, PadMode::Valid)?;
+    y = cbr(&mut b, y, 64, 3, 1, PadMode::Same)?;
+    y = b.maxpool(y, 3, 2)?;
+    y = cbr(&mut b, y, 80, 1, 1, PadMode::Same)?;
+    y = cbr(&mut b, y, 192, 3, 1, PadMode::Valid)?;
+    y = b.maxpool(y, 3, 2)?;
+
+    // Mixed blocks.
+    y = inception_a(&mut b, y, 32)?;
+    y = inception_a(&mut b, y, 64)?;
+    y = inception_a(&mut b, y, 64)?;
+    y = reduction_b(&mut b, y)?;
+    y = inception_c(&mut b, y, 128)?;
+    y = inception_c(&mut b, y, 192)?;
+    y = reduction_d(&mut b, y)?;
+    y = inception_e(&mut b, y)?;
+    y = inception_e(&mut b, y)?;
+
+    // Head.
+    let s = b.shape(y)?.clone();
+    let pooled = b.avgpool(y, s[2], s[2])?;
+    let flat = b.reshape(pooled, &[1, s[1]])?;
+    b.linear(flat, 1000, crate::graph::Activation::None)?;
+    let g = b.finish();
+    g.validate()?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    #[test]
+    fn block_structure_present() {
+        let g = inception_v3();
+        let concats = g
+            .live_ids()
+            .filter(|&id| matches!(g.node(id).op, OpKind::Concat { .. }))
+            .count();
+        // 3xA + B + 2xC + D + 2xE(3 concats each) = 3+1+2+1+6 = 13.
+        assert_eq!(concats, 13);
+    }
+
+    #[test]
+    fn op_budget() {
+        let g = inception_v3();
+        assert!(g.n_ops() <= 320, "{} ops", g.n_ops());
+        assert!(g.n_ops() > 150, "{} ops", g.n_ops());
+    }
+}

@@ -1,0 +1,148 @@
+//! Model zoo: the six evaluation graphs of paper Table 1.
+//!
+//! | Graph         | Type          | Layers | Unique |
+//! |---------------|---------------|--------|--------|
+//! | InceptionV3   | Convolutional | 43     | 12     |
+//! | ResNet-18     | Convolutional | 18     | 6      |
+//! | ResNet-50     | Convolutional | 50     | 6      |
+//! | SqueezeNet1.1 | Convolutional | 21     | 3      |
+//! | BERT-Base     | Transformer   | 12     | 3      |
+//! | ViT-Base      | Transformer   | 16     | 5      |
+//!
+//! "Layers" follows the paper's counting convention (named architectural
+//! layers, not graph ops); `GraphInfo` reports both so Table 1 can print the
+//! paper's columns alongside the actual op counts.
+//!
+//! All models are built at inference batch size 1 (TASO's setting) from
+//! primitive ops — BatchNorm is kept explicit so conv+bn fusion rules have
+//! work to do, and attention is composed from matmul/softmax so the
+//! transformer substitutions of §4.10 apply.
+
+mod bert;
+mod inception;
+mod resnet;
+mod squeezenet;
+mod vit;
+
+pub use bert::bert_base;
+pub use inception::inception_v3;
+pub use resnet::{resnet18, resnet50};
+pub use squeezenet::squeezenet1_1;
+pub use vit::vit_base;
+
+use crate::graph::Graph;
+
+#[derive(Debug, Clone)]
+pub struct GraphInfo {
+    pub name: &'static str,
+    pub family: &'static str,
+    /// Paper Table 1 "Layers".
+    pub layers: usize,
+    /// Paper Table 1 "Unique Layers".
+    pub unique_layers: usize,
+}
+
+/// All six evaluation graphs with their Table 1 metadata.
+pub fn all() -> Vec<(GraphInfo, Graph)> {
+    vec![
+        (
+            GraphInfo { name: "InceptionV3", family: "Convolutional", layers: 43, unique_layers: 12 },
+            inception_v3(),
+        ),
+        (
+            GraphInfo { name: "ResNet-18", family: "Convolutional", layers: 18, unique_layers: 6 },
+            resnet18(),
+        ),
+        (
+            GraphInfo { name: "ResNet-50", family: "Convolutional", layers: 50, unique_layers: 6 },
+            resnet50(),
+        ),
+        (
+            GraphInfo { name: "SqueezeNet1.1", family: "Convolutional", layers: 21, unique_layers: 3 },
+            squeezenet1_1(),
+        ),
+        (
+            GraphInfo { name: "BERT-Base", family: "Transformer", layers: 12, unique_layers: 3 },
+            bert_base(),
+        ),
+        (
+            GraphInfo { name: "ViT-Base", family: "Transformer", layers: 16, unique_layers: 5 },
+            vit_base(),
+        ),
+    ]
+}
+
+/// Look a zoo graph up by (case-insensitive) name.
+pub fn by_name(name: &str) -> anyhow::Result<Graph> {
+    let lower = name.to_lowercase();
+    Ok(match lower.as_str() {
+        "inceptionv3" | "inception" => inception_v3(),
+        "resnet18" | "resnet-18" => resnet18(),
+        "resnet50" | "resnet-50" => resnet50(),
+        "squeezenet" | "squeezenet1.1" => squeezenet1_1(),
+        "bert" | "bert-base" => bert_base(),
+        "vit" | "vit-base" => vit_base(),
+        _ => anyhow::bail!(
+            "unknown graph '{}' (expected one of inceptionv3, resnet18, resnet50, squeezenet, bert, vit)",
+            name
+        ),
+    })
+}
+
+pub const NAMES: [&str; 6] = ["inceptionv3", "resnet18", "resnet50", "squeezenet", "bert", "vit"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_graphs_validate() {
+        for (info, g) in all() {
+            g.validate().unwrap_or_else(|e| panic!("{} invalid: {e}", info.name));
+            assert!(g.n_ops() > 10, "{} suspiciously small", info.name);
+        }
+    }
+
+    #[test]
+    fn all_graphs_fit_encoder_budget() {
+        // MAX_NODES=320 op nodes (sources are not encoded).
+        for (info, g) in all() {
+            assert!(
+                g.n_ops() <= 320,
+                "{}: {} ops exceeds encoder budget",
+                info.name,
+                g.n_ops()
+            );
+        }
+    }
+
+    #[test]
+    fn by_name_round_trip() {
+        for name in NAMES {
+            by_name(name).unwrap();
+        }
+        assert!(by_name("alexnet").is_err());
+    }
+
+    #[test]
+    fn transformers_have_layernorm() {
+        use crate::graph::OpKind;
+        for g in [bert_base(), vit_base()] {
+            let has_ln = g
+                .live_ids()
+                .any(|id| matches!(g.node(id).op, OpKind::LayerNorm));
+            assert!(has_ln);
+        }
+    }
+
+    #[test]
+    fn cnns_have_batchnorm_or_pool() {
+        use crate::graph::OpKind;
+        for g in [resnet18(), resnet50(), inception_v3()] {
+            let has = g.live_ids().any(|id| {
+                matches!(g.node(id).op, OpKind::BatchNorm | OpKind::MaxPool { .. })
+            });
+            assert!(has);
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! ResNet-18 and ResNet-50 (He et al., CVPR 2016), NCHW, batch 1.
+//!
+//! ResNet-18 uses basic blocks (two 3x3 convs), ResNet-50 bottleneck blocks
+//! (1x1 -> 3x3 -> 1x1) with stage depths [3, 4, 6, 3]. Projection shortcuts
+//! where shape changes, identity adds elsewhere — the residual `Add` nodes
+//! are what several substitution rules target.
+
+use crate::graph::{Graph, GraphBuilder, PadMode, PortRef};
+
+fn stem(b: &mut GraphBuilder) -> anyhow::Result<PortRef> {
+    let x = b.input(&[1, 3, 224, 224]);
+    let c = b.conv_bn_relu(x, 64, 7, 2, PadMode::Same)?;
+    b.maxpool(c, 3, 2)
+}
+
+/// Basic residual block: 3x3 conv-bn-relu, 3x3 conv-bn, shortcut, add, relu.
+fn basic_block(
+    b: &mut GraphBuilder,
+    x: PortRef,
+    channels: usize,
+    stride: usize,
+) -> anyhow::Result<PortRef> {
+    let c1 = b.conv_bn_relu(x, channels, 3, stride, PadMode::Same)?;
+    let c2 = b.conv(c1, channels, 3, 1, PadMode::Same)?;
+    let c2 = b.batchnorm(c2)?;
+    let shortcut = if stride != 1 || in_channels(b, x)? != channels {
+        let s = b.conv(x, channels, 1, stride, PadMode::Same)?;
+        b.batchnorm(s)?
+    } else {
+        x
+    };
+    let sum = b.add(c2, shortcut)?;
+    b.relu(sum)
+}
+
+/// Bottleneck block: 1x1 reduce, 3x3, 1x1 expand (4x), shortcut, add, relu.
+fn bottleneck(
+    b: &mut GraphBuilder,
+    x: PortRef,
+    mid: usize,
+    stride: usize,
+) -> anyhow::Result<PortRef> {
+    let out_ch = mid * 4;
+    let c1 = b.conv_bn_relu(x, mid, 1, 1, PadMode::Same)?;
+    let c2 = b.conv_bn_relu(c1, mid, 3, stride, PadMode::Same)?;
+    let c3 = b.conv(c2, out_ch, 1, 1, PadMode::Same)?;
+    let c3 = b.batchnorm(c3)?;
+    let shortcut = if stride != 1 || in_channels(b, x)? != out_ch {
+        let s = b.conv(x, out_ch, 1, stride, PadMode::Same)?;
+        b.batchnorm(s)?
+    } else {
+        x
+    };
+    let sum = b.add(c3, shortcut)?;
+    b.relu(sum)
+}
+
+fn in_channels(b: &GraphBuilder, x: PortRef) -> anyhow::Result<usize> {
+    Ok(b.shape(x)?[1])
+}
+
+fn head(b: &mut GraphBuilder, x: PortRef, classes: usize) -> anyhow::Result<PortRef> {
+    let s = b.shape(x)?.clone();
+    let pooled = b.avgpool(x, s[2], s[2])?; // global average pool
+    let flat = b.reshape(pooled, &[1, s[1]])?;
+    b.linear(flat, classes, crate::graph::Activation::None)
+}
+
+pub fn resnet18() -> Graph {
+    build_resnet18().expect("resnet18 construction is static")
+}
+
+fn build_resnet18() -> anyhow::Result<Graph> {
+    let mut b = GraphBuilder::new();
+    let mut x = stem(&mut b)?;
+    for (channels, blocks, first_stride) in [(64, 2, 1), (128, 2, 2), (256, 2, 2), (512, 2, 2)] {
+        for i in 0..blocks {
+            let stride = if i == 0 { first_stride } else { 1 };
+            x = basic_block(&mut b, x, channels, stride)?;
+        }
+    }
+    head(&mut b, x, 1000)?;
+    let g = b.finish();
+    g.validate()?;
+    Ok(g)
+}
+
+pub fn resnet50() -> Graph {
+    build_resnet50().expect("resnet50 construction is static")
+}
+
+fn build_resnet50() -> anyhow::Result<Graph> {
+    let mut b = GraphBuilder::new();
+    let mut x = stem(&mut b)?;
+    for (mid, blocks, first_stride) in [(64, 3, 1), (128, 4, 2), (256, 6, 2), (512, 3, 2)] {
+        for i in 0..blocks {
+            let stride = if i == 0 { first_stride } else { 1 };
+            x = bottleneck(&mut b, x, mid, stride)?;
+        }
+    }
+    head(&mut b, x, 1000)?;
+    let g = b.finish();
+    g.validate()?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    fn conv_count(g: &Graph) -> usize {
+        g.live_ids()
+            .filter(|&id| matches!(g.node(id).op, OpKind::Conv2d { .. }))
+            .count()
+    }
+
+    #[test]
+    fn resnet18_has_expected_convs() {
+        // stem 1 + 8 basic blocks x 2 + 3 projection shortcuts = 20.
+        assert_eq!(conv_count(&resnet18()), 20);
+    }
+
+    #[test]
+    fn resnet50_has_expected_convs() {
+        // stem 1 + 16 bottlenecks x 3 + 4 projections = 53.
+        assert_eq!(conv_count(&resnet50()), 53);
+    }
+
+    #[test]
+    fn output_is_logits() {
+        for g in [resnet18(), resnet50()] {
+            let outs = g.output_ids();
+            assert_eq!(outs.len(), 1);
+            assert_eq!(g.node(outs[0]).outs[0].shape, vec![1, 1000]);
+        }
+    }
+}

@@ -1,0 +1,82 @@
+//! SqueezeNet 1.1 (Iandola et al., 2016), NCHW, batch 1.
+//!
+//! Fire modules: a 1x1 squeeze conv feeding parallel 1x1 and 3x3 expand
+//! convs whose outputs concatenate — the concat-of-parallel-convs pattern
+//! several TASO merge rules exploit.
+
+use crate::graph::{Graph, GraphBuilder, PadMode, PortRef};
+
+fn fire(
+    b: &mut GraphBuilder,
+    x: PortRef,
+    squeeze: usize,
+    expand: usize,
+) -> anyhow::Result<PortRef> {
+    let s = b.conv(x, squeeze, 1, 1, PadMode::Same)?;
+    let s = b.relu(s)?;
+    let e1 = b.conv(s, expand, 1, 1, PadMode::Same)?;
+    let e1 = b.relu(e1)?;
+    let e3 = b.conv(s, expand, 3, 1, PadMode::Same)?;
+    let e3 = b.relu(e3)?;
+    b.concat(1, &[e1, e3])
+}
+
+pub fn squeezenet1_1() -> Graph {
+    build().expect("squeezenet construction is static")
+}
+
+fn build() -> anyhow::Result<Graph> {
+    let mut b = GraphBuilder::new();
+    let x = b.input(&[1, 3, 224, 224]);
+    let c = b.conv(x, 64, 3, 2, PadMode::Valid)?;
+    let c = b.relu(c)?;
+    let mut y = b.maxpool(c, 3, 2)?;
+
+    y = fire(&mut b, y, 16, 64)?;
+    y = fire(&mut b, y, 16, 64)?;
+    y = b.maxpool(y, 3, 2)?;
+    y = fire(&mut b, y, 32, 128)?;
+    y = fire(&mut b, y, 32, 128)?;
+    y = b.maxpool(y, 3, 2)?;
+    y = fire(&mut b, y, 48, 192)?;
+    y = fire(&mut b, y, 48, 192)?;
+    y = fire(&mut b, y, 64, 256)?;
+    y = fire(&mut b, y, 64, 256)?;
+
+    // Classifier: 1x1 conv to classes, relu, global average pool.
+    let c10 = b.conv(y, 1000, 1, 1, PadMode::Same)?;
+    let c10 = b.relu(c10)?;
+    let s = b.shape(c10)?.clone();
+    let pooled = b.avgpool(c10, s[2], s[2])?;
+    b.reshape(pooled, &[1, 1000])?;
+    let g = b.finish();
+    g.validate()?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    #[test]
+    fn conv_count_matches_architecture() {
+        // 1 stem + 8 fires x 3 + 1 classifier = 26.
+        let g = squeezenet1_1();
+        let convs = g
+            .live_ids()
+            .filter(|&id| matches!(g.node(id).op, OpKind::Conv2d { .. }))
+            .count();
+        assert_eq!(convs, 26);
+    }
+
+    #[test]
+    fn has_concat_fire_outputs() {
+        let g = squeezenet1_1();
+        let concats = g
+            .live_ids()
+            .filter(|&id| matches!(g.node(id).op, OpKind::Concat { .. }))
+            .count();
+        assert_eq!(concats, 8);
+    }
+}

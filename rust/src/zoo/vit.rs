@@ -1,0 +1,73 @@
+//! ViT-Base (Dosovitskiy et al., ICLR 2021), batch 1, 224x224, patch 16.
+//!
+//! Patch embedding as a strided 16x16 conv, flatten to [1, 196, 768],
+//! then 12 transformer encoder layers (12 heads, MLP ratio 4) and a
+//! classification head. Same encoder block as BERT — which is why §4.10's
+//! fused substitutions transfer between the two (paper Fig. 11 caption).
+
+use crate::graph::{Activation, Graph, GraphBuilder, PadMode};
+
+pub const IMG: usize = 224;
+pub const PATCH: usize = 16;
+pub const HIDDEN: usize = 768;
+pub const HEADS: usize = 12;
+pub const LAYERS: usize = 12;
+
+pub fn vit_base() -> Graph {
+    build().expect("vit construction is static")
+}
+
+fn build() -> anyhow::Result<Graph> {
+    let n_patches = (IMG / PATCH) * (IMG / PATCH); // 196
+    let mut b = GraphBuilder::new();
+    let img = b.input(&[1, 3, IMG, IMG]);
+    // Patch embedding: 16x16/16 conv -> [1, 768, 14, 14].
+    let emb = b.conv(img, HIDDEN, PATCH, PATCH, PadMode::Valid)?;
+    let flat = b.reshape(emb, &[1, HIDDEN, n_patches])?;
+    let tokens = b.transpose(flat, &[0, 2, 1])?; // [1, 196, 768]
+    // Learned position embedding.
+    let pos = b.weight(&[1, n_patches, HIDDEN]);
+    let mut x = b.add(tokens, pos)?;
+    for _ in 0..LAYERS {
+        x = b.transformer_encoder(x, HEADS, 4)?;
+    }
+    let ln = b.layernorm(x)?;
+    // Classification head over the token representations (the downstream
+    // readout picks the CLS row; graph-wise this is a per-token linear).
+    let cls_in = b.reshape(ln, &[n_patches, HIDDEN])?;
+    b.linear(cls_in, 1000, Activation::None)?;
+    let g = b.finish();
+    g.validate()?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    #[test]
+    fn patch_embed_is_strided_conv() {
+        let g = vit_base();
+        let has = g.live_ids().any(|id| {
+            matches!(g.node(id).op, OpKind::Conv2d { stride, .. } if stride == PATCH)
+        });
+        assert!(has);
+    }
+
+    #[test]
+    fn encoder_depth() {
+        let g = vit_base();
+        let softmaxes = g
+            .live_ids()
+            .filter(|&id| matches!(g.node(id).op, OpKind::Softmax { .. }))
+            .count();
+        assert_eq!(softmaxes, LAYERS);
+    }
+
+    #[test]
+    fn op_budget() {
+        let g = vit_base();
+        assert!(g.n_ops() <= 320, "{} ops", g.n_ops());
+    }
+}

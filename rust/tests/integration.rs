@@ -1,0 +1,125 @@
+//! End-to-end integration: the full model-based pipeline on a small graph
+//! with smoke-scale settings, exercising every artifact. Skips when
+//! artifacts are absent.
+
+use rlflow::agent::PpoCfg;
+use rlflow::config::RunConfig;
+use rlflow::coordinator::{collect_random_parallel, Pipeline};
+use rlflow::cost::{CostModel, DeviceProfile};
+use rlflow::env::{Env, EnvConfig};
+use rlflow::graph::{GraphBuilder, PadMode};
+use rlflow::runtime::{Engine, Manifest, ParamStore};
+use rlflow::util::Rng;
+use rlflow::xfer::library::standard_library;
+
+fn engine() -> Option<Engine> {
+    if !Manifest::default_dir().join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Engine::load_default().expect("engine"))
+}
+
+fn small_graph() -> rlflow::graph::Graph {
+    let mut b = GraphBuilder::new();
+    let x = b.input(&[1, 3, 16, 16]);
+    let c1 = b.conv_bn_relu(x, 8, 3, 1, PadMode::Same).unwrap();
+    let c2 = b.conv(c1, 8, 1, 1, PadMode::Same).unwrap();
+    let c3 = b.conv(c2, 8, 1, 1, PadMode::Same).unwrap();
+    let r = b.relu(c3).unwrap();
+    let _ = b.maxpool(r, 2, 2).unwrap();
+    b.finish()
+}
+
+#[test]
+fn model_based_pipeline_end_to_end() {
+    let Some(eng) = engine() else { return };
+    let cfg = RunConfig::smoke();
+    let pipe = Pipeline::new(&eng).unwrap();
+    let mut rng = Rng::new(cfg.seed);
+
+    // 1. Random collection (parallel, engine-free).
+    let mut episodes = collect_random_parallel(
+        &small_graph(),
+        &cfg.env,
+        cfg.device,
+        (pipe.encoder.max_nodes, pipe.encoder.n_feats),
+        pipe.dims.x1,
+        cfg.collect_episodes,
+        cfg.collect_noop_prob,
+        cfg.collect_workers,
+        cfg.seed,
+    );
+    assert_eq!(episodes.len(), cfg.collect_episodes);
+
+    // 2. GNN auto-encoder.
+    let mut gnn = ParamStore::init(&eng, "gnn", 0).unwrap();
+    let ae_losses = pipe
+        .train_gnn_ae(&mut gnn, &episodes, cfg.ae_steps, cfg.ae_lr, &mut rng)
+        .unwrap();
+    assert_eq!(ae_losses.len(), cfg.ae_steps);
+    assert!(ae_losses.iter().all(|l| l.is_finite()));
+
+    // 3. Encode.
+    pipe.encode_episodes(&gnn, &mut episodes).unwrap();
+    assert!(episodes.iter().all(|e| e.z.len() == e.states.len()));
+    assert!(episodes[0].z[0].iter().any(|v| v.abs() > 0.0));
+
+    // 4. World model.
+    let mut wm = ParamStore::init(&eng, "wm", 1).unwrap();
+    let wm_curve = pipe.train_wm(&mut wm, &episodes, &cfg.wm, &mut rng).unwrap();
+    assert_eq!(wm_curve.len(), cfg.wm.total_steps);
+    assert!(wm_curve.iter().all(|l| l.total.is_finite()));
+
+    // 5. Controller in the dream.
+    let mut ctrl = ParamStore::init(&eng, "ctrl", 2).unwrap();
+    let dream_curve = pipe
+        .train_controller_dream(
+            &mut ctrl,
+            &wm,
+            &episodes,
+            cfg.dream_epochs,
+            cfg.dream_horizon,
+            cfg.temperature,
+            cfg.wm.reward_scale,
+            &cfg.ppo,
+            &mut rng,
+        )
+        .unwrap();
+    assert_eq!(dream_curve.len(), cfg.dream_epochs);
+
+    // 6. Real-environment evaluation.
+    let rules = standard_library();
+    let cost = CostModel::new(cfg.device);
+    let mut env = Env::new(small_graph(), &rules, &cost, cfg.env.clone());
+    let result = pipe
+        .eval_real(&gnn, &ctrl, Some(&wm), &mut env, false, &mut rng)
+        .unwrap();
+    assert!(result.steps > 0);
+    assert!(result.best_improvement_pct >= 0.0);
+    assert!(result.mean_step_s > 0.0);
+}
+
+#[test]
+fn model_free_ppo_iteration_runs() {
+    let Some(eng) = engine() else { return };
+    let pipe = Pipeline::new(&eng).unwrap();
+    let mut rng = Rng::new(7);
+    let gnn = ParamStore::init(&eng, "gnn", 0).unwrap();
+    let mut ctrl = ParamStore::init(&eng, "ctrl", 3).unwrap();
+    let rules = standard_library();
+    let cost = CostModel::new(DeviceProfile::rtx2070());
+    let mut env = Env::new(
+        small_graph(),
+        &rules,
+        &cost,
+        EnvConfig { max_steps: 6, ..Default::default() },
+    );
+    let before = ctrl.theta.clone();
+    let (mean_reward, stats) = pipe
+        .model_free_iteration(&gnn, &mut ctrl, &mut env, 2, &PpoCfg::default(), &mut rng)
+        .unwrap();
+    assert!(mean_reward.is_finite());
+    assert!(stats.entropy.is_finite());
+    assert_ne!(before, ctrl.theta, "PPO update should move parameters");
+}

@@ -1,0 +1,281 @@
+//! Property-based tests over the core invariants, using seeded randomised
+//! generation (the offline build has no proptest crate; `rlflow::util::Rng`
+//! provides deterministic, replayable exploration — failures print the
+//! offending seed).
+
+use std::collections::HashMap;
+
+use rlflow::cost::{CostModel, DeviceProfile};
+use rlflow::env::{Env, EnvConfig};
+use rlflow::graph::{canonical_hash, Activation, Graph, GraphBuilder, OpKind, PadMode, PortRef};
+use rlflow::interp::semantically_equal;
+use rlflow::util::Rng;
+use rlflow::xfer::library::standard_library;
+use rlflow::xfer::{apply_rule, RuleSet};
+
+/// Random small-but-varied graph: conv/linear/attention fragments glued by
+/// elementwise ops. Always valid by construction.
+fn random_graph(rng: &mut Rng) -> Graph {
+    let mut b = GraphBuilder::new();
+    match rng.below(3) {
+        0 => {
+            // CNN-ish.
+            let x = b.input(&[1, 3, 8, 8]);
+            let mut cur = x;
+            for _ in 0..(1 + rng.below(3)) {
+                cur = match rng.below(4) {
+                    0 => b.conv_bn_relu(cur, 4 + rng.below(4), 3, 1, PadMode::Same).unwrap(),
+                    1 => {
+                        let c = b.conv(cur, 4 + rng.below(4), 1, 1, PadMode::Same).unwrap();
+                        b.relu(c).unwrap()
+                    }
+                    2 => b.maxpool(cur, 2, 1).unwrap(),
+                    _ => {
+                        let c1 = b.conv(cur, 4, 3, 1, PadMode::Same).unwrap();
+                        let c2 = b.conv(cur, 4, 3, 1, PadMode::Same).unwrap();
+                        b.concat(1, &[c1, c2]).unwrap()
+                    }
+                };
+            }
+        }
+        1 => {
+            // Transformer-ish.
+            let x = b.input(&[1, 4, 16]);
+            let mut cur = x;
+            for _ in 0..(1 + rng.below(2)) {
+                cur = b.transformer_encoder(cur, 2, 2).unwrap();
+            }
+        }
+        _ => {
+            // Elementwise algebra.
+            let x = b.input(&[2, 8]);
+            let y = b.input(&[2, 8]);
+            let mut cur = b.add(x, y).unwrap();
+            for _ in 0..(1 + rng.below(4)) {
+                cur = match rng.below(4) {
+                    0 => b.add(cur, x).unwrap(),
+                    1 => b.relu(cur).unwrap(),
+                    2 => b.linear(cur, 8, Activation::None).unwrap(),
+                    _ => b.op(OpKind::Tanh, &[cur]).unwrap(),
+                };
+            }
+        }
+    }
+    b.finish()
+}
+
+#[test]
+fn prop_rule_application_preserves_semantics() {
+    // For random graphs and random applicable rules, the rewritten graph
+    // computes the same function (interpreter, random inputs).
+    let lib = standard_library();
+    let mut rng = Rng::new(0xFEED);
+    let mut applications = 0;
+    for trial in 0..40 {
+        let g = random_graph(&mut rng);
+        let applicable: Vec<(usize, Vec<_>)> = (0..lib.len())
+            .map(|i| (i, lib.get(i).unwrap().find(&g)))
+            .filter(|(_, locs)| !locs.is_empty())
+            .collect();
+        if applicable.is_empty() {
+            continue;
+        }
+        let (ri, locs) = &applicable[rng.below(applicable.len())];
+        let rule = lib.get(*ri).unwrap();
+        let loc = &locs[rng.below(locs.len())];
+        let mut g2 = g.clone();
+        apply_rule(&mut g2, rule, loc).unwrap_or_else(|e| panic!("trial {trial}: {} failed: {e}", rule.name()));
+        g2.validate().unwrap();
+        assert!(
+            semantically_equal(&g, &g2, 2, 0x1234 + trial as u64, 2e-3).unwrap(),
+            "trial {trial}: rule {} changed semantics at {:?}",
+            rule.name(),
+            loc
+        );
+        applications += 1;
+    }
+    assert!(applications > 20, "too few rule applications exercised: {applications}");
+}
+
+#[test]
+fn prop_hash_invariant_under_source_reordering() {
+    // Building the same structure with sources declared in different order
+    // must hash identically (tensor-renaming invariance, Fig. 3a).
+    let build = |weights_first: bool| {
+        let mut g = Graph::new();
+        let (x, w) = if weights_first {
+            let w = g.add_source(OpKind::Weight, rlflow::graph::TensorDesc::f32(&[8, 4]));
+            let x = g.add_source(OpKind::Input, rlflow::graph::TensorDesc::f32(&[2, 8]));
+            (x, w)
+        } else {
+            let x = g.add_source(OpKind::Input, rlflow::graph::TensorDesc::f32(&[2, 8]));
+            let w = g.add_source(OpKind::Weight, rlflow::graph::TensorDesc::f32(&[8, 4]));
+            (x, w)
+        };
+        let mm = g
+            .add(
+                OpKind::MatMul { trans_a: false, trans_b: false, act: Activation::None },
+                &[PortRef::of(x), PortRef::of(w)],
+            )
+            .unwrap();
+        g.add(OpKind::Relu, &[PortRef::of(mm)]).unwrap();
+        g
+    };
+    assert_eq!(canonical_hash(&build(true)), canonical_hash(&build(false)));
+}
+
+#[test]
+fn prop_hash_stable_under_rule_round_trips() {
+    // fuse + unfuse pairs must return to the original canonical hash.
+    let lib = standard_library();
+    let pairs = [
+        ("fuse_conv_relu", "unfuse_conv_relu"),
+        ("fuse_add_ln", "unfuse_add_ln"),
+        ("fuse_matmul_bias", "unfuse_linear"),
+    ];
+    let mut rng = Rng::new(0xABCD);
+    for trial in 0..30 {
+        let g = random_graph(&mut rng);
+        for (fwd, bwd) in pairs {
+            let f = lib.get(lib.index_of(fwd).unwrap()).unwrap();
+            let b = lib.get(lib.index_of(bwd).unwrap()).unwrap();
+            let locs = f.find(&g);
+            if locs.is_empty() {
+                continue;
+            }
+            let mut g2 = g.clone();
+            apply_rule(&mut g2, f, &locs[0]).unwrap();
+            let locs_b = b.find(&g2);
+            assert!(!locs_b.is_empty(), "trial {trial}: {bwd} can't invert {fwd}");
+            // Find the inverse location restoring the hash.
+            let restored = locs_b.iter().any(|lb| {
+                let mut g3 = g2.clone();
+                apply_rule(&mut g3, b, lb).is_ok() && canonical_hash(&g3) == canonical_hash(&g)
+            });
+            assert!(restored, "trial {trial}: {fwd}/{bwd} round trip failed");
+        }
+    }
+}
+
+#[test]
+fn prop_env_masks_always_admit_action() {
+    // Whatever sequence of valid actions is taken, the mask always admits
+    // at least the NO-OP, and every masked-valid action succeeds.
+    let lib = standard_library();
+    let cost = CostModel::new(DeviceProfile::rtx2070());
+    let mut rng = Rng::new(0x5EED);
+    for _ in 0..15 {
+        let g = random_graph(&mut rng);
+        let mut env = Env::new(g, &lib, &cost, EnvConfig { max_steps: 10, ..Default::default() });
+        loop {
+            let obs = env.observe();
+            assert!(obs.xfer_mask[env.noop_action()], "NO-OP must stay valid");
+            let valid: Vec<usize> = (0..lib.len()).filter(|&i| obs.xfer_mask[i]).collect();
+            if valid.is_empty() || rng.f32() < 0.2 {
+                let res = env.step((env.noop_action(), 0));
+                assert!(res.done);
+                break;
+            }
+            let x = valid[rng.below(valid.len())];
+            assert!(obs.location_counts[x] > 0, "masked-valid xfer has no locations");
+            let l = rng.below(obs.location_counts[x]);
+            let res = env.step((x, l));
+            assert!(res.info.valid, "masked-valid action failed to apply");
+            if res.done {
+                break;
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_cost_positive_and_fusion_never_hurts_launches() {
+    let lib = standard_library();
+    let cost = CostModel::new(DeviceProfile::rtx2070());
+    let fusions = ["fuse_conv_relu", "fuse_add_ln", "fuse_add_add", "fuse_matmul_bias"];
+    let mut rng = Rng::new(0xC057);
+    for _ in 0..25 {
+        let g = random_graph(&mut rng);
+        let before = cost.graph_cost(&g);
+        assert!(before.runtime_ms > 0.0);
+        assert!(before.peak_bytes >= 0.0);
+        for name in fusions {
+            let rule = lib.get(lib.index_of(name).unwrap()).unwrap();
+            for loc in rule.find(&g).into_iter().take(2) {
+                let mut g2 = g.clone();
+                apply_rule(&mut g2, rule, &loc).unwrap();
+                let after = cost.graph_cost(&g2);
+                assert!(
+                    after.launches <= before.launches,
+                    "{name} increased launches {} -> {}",
+                    before.launches,
+                    after.launches
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_topo_order_valid_after_arbitrary_rule_sequences() {
+    let lib = standard_library();
+    let mut rng = Rng::new(0x70B0);
+    for _ in 0..15 {
+        let mut g = random_graph(&mut rng);
+        for _ in 0..6 {
+            let applicable: Vec<(usize, Vec<_>)> = (0..lib.len())
+                .map(|i| (i, lib.get(i).unwrap().find(&g)))
+                .filter(|(_, l)| !l.is_empty())
+                .collect();
+            if applicable.is_empty() {
+                break;
+            }
+            let (ri, locs) = &applicable[rng.below(applicable.len())];
+            let loc = &locs[rng.below(locs.len())];
+            apply_rule(&mut g, lib.get(*ri).unwrap(), loc).unwrap();
+            // Full structural validation after every rewrite.
+            g.validate().unwrap();
+            let order = g.topo_order().unwrap();
+            let pos: HashMap<_, _> = order.iter().enumerate().map(|(i, &id)| (id, i)).collect();
+            for id in g.live_ids() {
+                for inp in &g.node(id).inputs {
+                    assert!(pos[&inp.node] < pos[&id], "topo violation after rewrite");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_onnx_round_trip_random_graphs() {
+    let mut rng = Rng::new(0x0881);
+    for _ in 0..20 {
+        let g = random_graph(&mut rng);
+        let json = rlflow::graph::onnx::export(&g, "prop").unwrap();
+        let g2 = rlflow::graph::onnx::import(&json).unwrap();
+        assert_eq!(canonical_hash(&g), canonical_hash(&g2));
+        assert_eq!(g.n_ops(), g2.n_ops());
+    }
+}
+
+#[test]
+fn prop_search_never_worse_than_input() {
+    let lib: RuleSet = standard_library();
+    let cost = CostModel::new(DeviceProfile::rtx2070());
+    let mut rng = Rng::new(0x5EA2);
+    for _ in 0..10 {
+        let g = random_graph(&mut rng);
+        let base = cost.graph_runtime_ms(&g);
+        let (og, glog) = rlflow::search::greedy_optimise(&g, &lib, &cost, 20);
+        assert!(glog.final_ms <= base + 1e-9);
+        og.validate().unwrap();
+        let (tg, tlog) = rlflow::search::taso_optimise(
+            &g,
+            &lib,
+            &cost,
+            &rlflow::search::TasoConfig { depth: 4, beam: 4, ..Default::default() },
+        );
+        assert!(tlog.final_ms <= base + 1e-9);
+        tg.validate().unwrap();
+    }
+}
