@@ -14,21 +14,25 @@ use rlflow::xfer::library::standard_library;
 fn main() -> anyhow::Result<()> {
     let rules = standard_library();
     let cost = CostModel::new(DeviceProfile::rtx2070());
+    println!("search engine: transposition table + delta costing (worker count per run below)");
     println!(
-        "{:<15} {:>12} {:>10} {:>10} {:>9} {:>9}",
-        "Graph", "Base (ms)", "Greedy %", "TASO %", "Greedy s", "TASO s"
+        "{:<15} {:>12} {:>10} {:>10} {:>9} {:>9} {:>9} {:>9} {:>8}",
+        "Graph", "Base (ms)", "Greedy %", "TASO %", "Greedy s", "TASO s", "explored", "memohits", "workers"
     );
     for (info, g) in rlflow::zoo::all() {
         let (_, glog) = greedy_optimise(&g, &rules, &cost, 50);
         let (_, tlog) = taso_optimise(&g, &rules, &cost, &TasoConfig::default());
         println!(
-            "{:<15} {:>12.3} {:>9.1}% {:>9.1}% {:>9.2} {:>9.2}",
+            "{:<15} {:>12.3} {:>9.1}% {:>9.1}% {:>9.2} {:>9.2} {:>9} {:>9} {:>8}",
             info.name,
             glog.initial_ms,
             glog.improvement_pct(),
             tlog.improvement_pct(),
             glog.elapsed_s,
-            tlog.elapsed_s
+            tlog.elapsed_s,
+            tlog.graphs_explored,
+            tlog.memo_hits,
+            tlog.threads
         );
     }
     println!("\nExpected shape (paper Fig. 6): TASO >= greedy everywhere; the gap");

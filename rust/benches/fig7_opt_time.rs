@@ -3,36 +3,79 @@
 //! of Fig. 7 needs trained artifacts and lives in
 //! `rlflow experiment fig7`; this bench isolates the search costs, which
 //! dominate TASO's bar in the paper.
+//!
+//! Two rows per graph: the pre-engine sequential seed path (single thread,
+//! no memoisation, full cost recompute per candidate — the `*_reference`
+//! oracles) and the parallel memoised engine (scoped worker threads,
+//! transposition table, incremental delta costing). The `speedup` column
+//! is seed-time / engine-time; `cost ok` checks the engine found the same
+//! final cost as the seed path (to 1e-6 relative).
 
 use std::time::Instant;
 
 use rlflow::cost::{CostModel, DeviceProfile};
-use rlflow::search::{greedy_optimise, taso_optimise, TasoConfig};
+use rlflow::search::{
+    greedy_optimise, greedy_optimise_reference, taso_optimise, taso_optimise_reference,
+    TasoConfig,
+};
 use rlflow::xfer::library::standard_library;
 
 fn main() {
     let rules = standard_library();
-    let cost = CostModel::new(DeviceProfile::rtx2070());
+    let mut workers = 0;
     println!(
-        "{:<15} {:>12} {:>12} {:>10} {:>10}",
-        "Graph", "greedy (s)", "taso (s)", "greedy %", "taso %"
+        "{:<15} {:>10} {:>10} {:>8} {:>10} {:>10} {:>8} {:>9} {:>8}",
+        "Graph",
+        "greedy(s)",
+        "g-eng(s)",
+        "g-spd",
+        "taso(s)",
+        "t-eng(s)",
+        "t-spd",
+        "memohits",
+        "cost ok"
     );
     for (info, g) in rlflow::zoo::all() {
+        // Fresh cost model per timed run: the per-op cost cache persists
+        // inside a CostModel, so sharing one would let the seed run warm
+        // the cache for the engine run (or vice versa) and bias the
+        // speedup columns.
+        let cost = CostModel::new(DeviceProfile::rtx2070());
         let t0 = Instant::now();
-        let (_, glog) = greedy_optimise(&g, &rules, &cost, 50);
-        let greedy_s = t0.elapsed().as_secs_f64();
+        let (_, gref) = greedy_optimise_reference(&g, &rules, &cost, 50);
+        let greedy_seed_s = t0.elapsed().as_secs_f64();
 
+        let cost = CostModel::new(DeviceProfile::rtx2070());
         let t0 = Instant::now();
-        let (_, tlog) = taso_optimise(&g, &rules, &cost, &TasoConfig::default());
-        let taso_s = t0.elapsed().as_secs_f64();
+        let (_, geng) = greedy_optimise(&g, &rules, &cost, 50);
+        let greedy_eng_s = t0.elapsed().as_secs_f64();
 
+        let cost = CostModel::new(DeviceProfile::rtx2070());
+        let t0 = Instant::now();
+        let (_, tref) = taso_optimise_reference(&g, &rules, &cost, &TasoConfig::default());
+        let taso_seed_s = t0.elapsed().as_secs_f64();
+
+        let cost = CostModel::new(DeviceProfile::rtx2070());
+        let t0 = Instant::now();
+        let (_, teng) = taso_optimise(&g, &rules, &cost, &TasoConfig::default());
+        let taso_eng_s = t0.elapsed().as_secs_f64();
+
+        let rel = |a: f64, b: f64| (a - b).abs() / b.max(1e-12);
+        let ok = rel(geng.final_ms, gref.final_ms) < 1e-6
+            && rel(teng.final_ms, tref.final_ms) < 1e-6;
+        workers = teng.threads;
         println!(
-            "{:<15} {:>12.3} {:>12.3} {:>9.1}% {:>9.1}%",
+            "{:<15} {:>10.3} {:>10.3} {:>7.1}x {:>10.3} {:>10.3} {:>7.1}x {:>9} {:>8}",
             info.name,
-            greedy_s,
-            taso_s,
-            glog.improvement_pct(),
-            tlog.improvement_pct()
+            greedy_seed_s,
+            greedy_eng_s,
+            greedy_seed_s / greedy_eng_s.max(1e-9),
+            taso_seed_s,
+            taso_eng_s,
+            taso_seed_s / taso_eng_s.max(1e-9),
+            teng.memo_hits,
+            if ok { "yes" } else { "NO" }
         );
     }
+    println!("engine workers (from SearchLog): {workers}");
 }

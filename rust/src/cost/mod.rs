@@ -21,8 +21,9 @@ pub use op_cost::{op_cost, OpCost};
 use std::cell::RefCell;
 use std::collections::HashMap;
 
-use crate::graph::{Graph, OpKind};
+use crate::graph::{Graph, NodeId, OpKind};
 use crate::util::Rng;
+use crate::xfer::ApplyReport;
 
 /// Cost summary for a whole graph.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
@@ -43,6 +44,21 @@ pub struct CostModel {
     noise_rng: RefCell<Rng>,
     /// Per-op memoisation keyed by (attr hash, input shapes hash).
     cache: RefCell<HashMap<u64, OpCost>>,
+}
+
+/// Clones duplicate the device, the noise configuration *and state*, and a
+/// snapshot of the per-op memo cache — parallel search workers each own a
+/// clone (the `RefCell` interior makes `CostModel` deliberately `!Sync`),
+/// warm-starting from whatever the parent has already costed.
+impl Clone for CostModel {
+    fn clone(&self) -> Self {
+        Self {
+            device: self.device,
+            noise_std: self.noise_std,
+            noise_rng: RefCell::new(self.noise_rng.borrow().clone()),
+            cache: RefCell::new(self.cache.borrow().clone()),
+        }
+    }
 }
 
 impl CostModel {
@@ -88,19 +104,62 @@ impl CostModel {
     /// feeding it is a `Weight`. Constant subtrees (folded BN scales,
     /// concatenated kernels, composed 1x1 weights...) are precomputed at
     /// model-load time — TASO does the same — so they cost zero runtime.
+    ///
+    /// Runs on every candidate the search baselines cost, so it uses an
+    /// explicit-stack DFS over flat arena-indexed state instead of the
+    /// HashMap-heavy `Graph::topo_order`. Nodes on a cycle resolve to
+    /// non-constant (such graphs are invalid and never costed for real).
     pub fn const_set(&self, g: &Graph) -> Vec<bool> {
-        let mut is_const = vec![false; g.n_slots()];
-        if let Ok(order) = g.topo_order() {
-            for id in order {
-                let n = g.node(id);
-                is_const[id.index()] = match n.op {
-                    OpKind::Weight => true,
-                    OpKind::Input => false,
-                    _ => !n.inputs.is_empty() && n.inputs.iter().all(|p| is_const[p.node.index()]),
-                };
+        const UNSEEN: u8 = 0;
+        const OPEN: u8 = 1; // on the DFS stack
+        const CONST: u8 = 2;
+        const VAR: u8 = 3;
+        let n = g.n_slots();
+        let mut state = vec![UNSEEN; n];
+        // (node index, next input position) resume points.
+        let mut stack: Vec<(u32, u32)> = Vec::new();
+        for root in g.live_ids() {
+            if state[root.index()] != UNSEEN {
+                continue;
+            }
+            state[root.index()] = OPEN;
+            stack.push((root.0, 0));
+            while let Some((idx, ip)) = stack.pop() {
+                let node = &g.nodes[idx as usize];
+                if ip == 0 {
+                    let leaf = match node.op {
+                        OpKind::Weight => Some(CONST),
+                        OpKind::Input => Some(VAR),
+                        _ if node.inputs.is_empty() => Some(VAR),
+                        _ => None,
+                    };
+                    if let Some(s) = leaf {
+                        state[idx as usize] = s;
+                        continue;
+                    }
+                }
+                if (ip as usize) < node.inputs.len() {
+                    let child = node.inputs[ip as usize].node.index();
+                    stack.push((idx, ip + 1));
+                    if state[child] == UNSEEN {
+                        state[child] = OPEN;
+                        stack.push((child as u32, 0));
+                    }
+                } else {
+                    // An OPEN child here means a cycle: treat as non-const.
+                    state[idx as usize] = if node
+                        .inputs
+                        .iter()
+                        .all(|p| state[p.node.index()] == CONST)
+                    {
+                        CONST
+                    } else {
+                        VAR
+                    };
+                }
             }
         }
-        is_const
+        state.into_iter().map(|s| s == CONST).collect()
     }
 
     /// Hot-path cost: runtime / flops / traffic / launches, *without* the
@@ -223,6 +282,93 @@ impl CostModel {
         self.graph_cost_fast(g).runtime_ms
     }
 
+    /// Fold a worker clone's per-op memo entries back into this model's
+    /// cache, so op costs computed inside a parallel search depth are not
+    /// recomputed at the next one. Values are a deterministic function of
+    /// the key, so merge order cannot affect any result.
+    pub fn absorb_cache(&self, worker: &CostModel) {
+        let theirs = worker.cache.borrow();
+        let mut ours = self.cache.borrow_mut();
+        for (k, v) in theirs.iter() {
+            ours.entry(*k).or_insert(*v);
+        }
+    }
+
+    /// Runtime contribution of one node: zero for sources, constant-folded
+    /// subtrees and dead slots; the roofline time otherwise. Mirrors
+    /// exactly which nodes [`CostModel::graph_cost_fast`] accumulates.
+    fn node_time_ms(&self, g: &Graph, id: NodeId, is_const: &[bool]) -> f64 {
+        let node = g.node(id);
+        if node.dead || is_const[id.index()] || matches!(node.op, OpKind::Input | OpKind::Weight) {
+            return 0.0;
+        }
+        self.device.op_time_ms(&self.cached_op_cost(g, id))
+    }
+
+    /// Incremental runtime after one rule application: start from the
+    /// parent's runtime and re-cost only the nodes whose contribution the
+    /// rewrite changed — the nodes the [`ApplyReport`] says were removed or
+    /// added, plus survivors whose constness flipped (a rewrite can promote
+    /// a subtree to weight-only arithmetic, or demote one back).
+    ///
+    /// Surviving nodes outside that set keep their contribution: rules only
+    /// rewire inputs through `splice`, which enforces descriptor equality,
+    /// so their per-op cost key (op attrs + input shapes) cannot change.
+    ///
+    /// The result equals `graph_runtime_ms(after)` up to f64 summation
+    /// order (the full recompute stays the oracle; `tests/props.rs` pins
+    /// the agreement to 1e-9). With measurement noise enabled the delta
+    /// identity does not hold, so this falls back to the full recompute.
+    pub fn delta_runtime_ms(
+        &self,
+        before: &Graph,
+        before_ms: f64,
+        after: &Graph,
+        report: &ApplyReport,
+    ) -> f64 {
+        self.delta_runtime_ms_with(before, &self.const_set(before), before_ms, after, report)
+    }
+
+    /// [`CostModel::delta_runtime_ms`] with the parent's const set supplied
+    /// by the caller — it is identical for every candidate expanded from
+    /// one parent graph, so the search computes it once per frontier entry
+    /// instead of once per (rule, location) site.
+    pub fn delta_runtime_ms_with(
+        &self,
+        before: &Graph,
+        const_before: &[bool],
+        before_ms: f64,
+        after: &Graph,
+        report: &ApplyReport,
+    ) -> f64 {
+        if self.noise_std > 0.0 {
+            return self.graph_runtime_ms(after);
+        }
+        let const_after = self.const_set(after);
+        let mut ms = before_ms;
+        for &id in &report.removed {
+            ms -= self.node_time_ms(before, id, const_before);
+        }
+        for &id in &report.added {
+            ms += self.node_time_ms(after, id, &const_after);
+        }
+        let prefix = report.prev_slots.min(const_after.len());
+        for idx in 0..prefix {
+            if const_before[idx] == const_after[idx] {
+                continue;
+            }
+            let id = NodeId(idx as u32);
+            // Removed/added slots are already handled above; a flip only
+            // matters for nodes live on both sides.
+            if before.node(id).dead || after.node(id).dead {
+                continue;
+            }
+            ms -= self.node_time_ms(before, id, const_before);
+            ms += self.node_time_ms(after, id, &const_after);
+        }
+        ms
+    }
+
     /// Estimated inference memory in GiB (Table 2's "Mem. usage").
     pub fn graph_memory_gib(&self, g: &Graph) -> f64 {
         self.graph_cost(g).peak_bytes / (1024.0 * 1024.0 * 1024.0)
@@ -332,6 +478,89 @@ mod tests {
             assert!((fast.runtime_ms - full.runtime_ms).abs() < 1e-9);
             assert!((fast.flops - full.flops).abs() < 1e-3);
             assert!((fast.mem_bytes - full.mem_bytes).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn delta_runtime_matches_full_recompute() {
+        // Every applicable rule site on a mixed graph: the incremental cost
+        // must agree with the full oracle to float-sum precision.
+        let cm = CostModel::new(DeviceProfile::rtx2070());
+        let lib = crate::xfer::library::standard_library();
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 3, 16, 16]);
+        let c1 = b.conv_bn_relu(x, 8, 3, 1, PadMode::Same).unwrap();
+        let c2 = b.conv(c1, 8, 1, 1, PadMode::Same).unwrap();
+        let _ = b.relu(c2).unwrap();
+        let g = b.finish();
+        let base = cm.graph_runtime_ms(&g);
+        let mut checked = 0;
+        for ri in 0..lib.len() {
+            let rule = lib.get(ri).unwrap();
+            for loc in rule.find(&g) {
+                let mut g2 = g.clone();
+                let Ok(report) = crate::xfer::apply_rule(&mut g2, rule, &loc) else {
+                    continue;
+                };
+                let delta = cm.delta_runtime_ms(&g, base, &g2, &report);
+                let full = cm.graph_runtime_ms(&g2);
+                assert!(
+                    (delta - full).abs() < 1e-9,
+                    "{}: delta {delta} vs full {full}",
+                    rule.name()
+                );
+                checked += 1;
+            }
+        }
+        assert!(checked > 3, "too few rule sites exercised: {checked}");
+    }
+
+    #[test]
+    fn delta_runtime_with_noise_falls_back_to_oracle() {
+        let cm = CostModel::new(DeviceProfile::rtx2070()).with_noise(0.05, 9);
+        let lib = crate::xfer::library::standard_library();
+        let g = conv_graph(false);
+        let rule = lib.get(lib.index_of("fuse_conv_relu").unwrap()).unwrap();
+        let loc = rule.find(&g)[0].clone();
+        let mut g2 = g.clone();
+        let report = crate::xfer::apply_rule(&mut g2, rule, &loc).unwrap();
+        let delta = cm.delta_runtime_ms(&g, 1234.5, &g2, &report);
+        // Under noise the fallback ignores `before_ms` entirely.
+        assert!(delta > 0.0 && delta < 1234.5);
+    }
+
+    #[test]
+    fn clone_replays_noise_and_shares_no_state() {
+        let g = conv_graph(false);
+        let a = CostModel::new(DeviceProfile::rtx2070()).with_noise(0.05, 3);
+        let b = a.clone();
+        assert_eq!(a.graph_runtime_ms(&g), b.graph_runtime_ms(&g));
+        // Advancing one clone's rng must not affect the other.
+        let _ = a.graph_runtime_ms(&g);
+        let c = b.clone();
+        assert_eq!(b.graph_runtime_ms(&g), c.graph_runtime_ms(&g));
+    }
+
+    #[test]
+    fn const_set_matches_topo_reference() {
+        // The DFS const_set must agree with a straightforward topo-order
+        // evaluation on every zoo graph.
+        let cm = CostModel::new(DeviceProfile::rtx2070());
+        for (_, g) in crate::zoo::all() {
+            let fast = cm.const_set(&g);
+            let mut reference = vec![false; g.n_slots()];
+            for id in g.topo_order().unwrap() {
+                let n = g.node(id);
+                reference[id.index()] = match n.op {
+                    OpKind::Weight => true,
+                    OpKind::Input => false,
+                    _ => {
+                        !n.inputs.is_empty()
+                            && n.inputs.iter().all(|p| reference[p.node.index()])
+                    }
+                };
+            }
+            assert_eq!(fast, reference);
         }
     }
 

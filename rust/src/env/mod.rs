@@ -199,7 +199,7 @@ impl<'a> Env<'a> {
         let location = self.locations[xfer][loc].clone();
         let mut next = self.graph.clone();
         match apply_rule(&mut next, rule, &location) {
-            Ok(()) => {
+            Ok(_) => {
                 let gc = self.cost.graph_cost_fast(&next);
                 let reward = self.cfg.reward.compute(
                     self.rt_initial,

@@ -55,6 +55,13 @@ pub fn suite(ctx: &ExperimentCtx, runs: usize) -> anyhow::Result<()> {
         let t0 = std::time::Instant::now();
         let (_, taso_log) = taso_optimise(&g, &rules, &cost, &TasoConfig::default());
         let taso_s = t0.elapsed().as_secs_f64();
+        println!(
+            "   search: {} workers, taso explored {} ({} memo hits), greedy {} steps",
+            taso_log.threads,
+            taso_log.graphs_explored,
+            taso_log.memo_hits,
+            tf_log.steps.len()
+        );
 
         // One model-based training run.
         let agent = train_model_based(&pipe, &ctx.cfg, &g, ctx.cfg.seed)?;

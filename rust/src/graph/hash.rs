@@ -6,9 +6,7 @@
 //! multiplicity-disambiguation pass so structurally distinct uses of
 //! same-shaped inputs still separate where the wiring differs.
 
-use std::collections::HashMap;
-
-use super::graph::{Graph, NodeId};
+use super::graph::Graph;
 use super::op::OpKind;
 
 fn mix(a: u64, b: u64) -> u64 {
@@ -31,30 +29,83 @@ fn shape_hash(shape: &[usize]) -> u64 {
 
 /// Canonical hash of the live subgraph.
 ///
-/// Per-node hashes are computed in topological order: a node's hash combines
-/// its op attr-hash with the ordered (hash, port) pairs of its inputs; the
-/// graph hash combines the *sorted* multiset of output-node hashes, so
-/// output enumeration order does not matter.
+/// Per-node hashes are computed bottom-up: a node's hash combines its op
+/// attr-hash with the ordered (hash, port) pairs of its inputs; the graph
+/// hash combines the *sorted* multiset of output-node hashes, so output
+/// enumeration order does not matter. A node's hash depends only on its
+/// ancestors, so any topological processing order yields the same value.
+///
+/// This runs once per search candidate (it keys the transposition table in
+/// `crate::search`), so it avoids the HashMap-based `Graph::topo_order` /
+/// `Graph::consumers` helpers in favour of flat arena-indexed vectors: an
+/// in-degree worklist over a CSR consumer layout.
 pub fn canonical_hash(g: &Graph) -> u64 {
-    let order = match g.topo_order() {
-        Ok(o) => o,
-        Err(_) => return 0, // invalid graphs all hash to 0
-    };
-    let mut node_hash: HashMap<NodeId, u64> = HashMap::with_capacity(order.len());
-    for id in order {
-        let n = g.node(id);
-        let mut h = match n.op {
-            // Name-invariance: sources hash by kind + shape only.
-            OpKind::Input => mix(0x1111, shape_hash(&n.outs[0].shape)),
-            OpKind::Weight => mix(0x2222, shape_hash(&n.outs[0].shape)),
-            _ => n.op.attr_hash(),
-        };
-        for inp in &n.inputs {
-            h = mix(h, mix(node_hash[&inp.node], inp.port as u64));
+    let n = g.n_slots();
+    let mut live = vec![false; n];
+    let mut indeg = vec![0u32; n];
+    // CSR consumer adjacency: head[i]..head[i+1] indexes `edges`, one entry
+    // per (consumer, input-slot) edge, matching the per-edge in-degrees.
+    let mut head = vec![0u32; n + 1];
+    for id in g.live_ids() {
+        let i = id.index();
+        live[i] = true;
+        indeg[i] = g.node(id).inputs.len() as u32;
+        for inp in &g.node(id).inputs {
+            head[inp.node.index() + 1] += 1;
         }
-        node_hash.insert(id, h);
     }
-    let mut outs: Vec<u64> = g.output_ids().iter().map(|id| node_hash[id]).collect();
+    for i in 0..n {
+        head[i + 1] += head[i];
+    }
+    let mut edges = vec![0u32; head[n] as usize];
+    let mut cursor: Vec<u32> = head[..n].to_vec();
+    for id in g.live_ids() {
+        for inp in &g.node(id).inputs {
+            let p = inp.node.index();
+            edges[cursor[p] as usize] = id.0;
+            cursor[p] += 1;
+        }
+    }
+
+    let mut queue: Vec<u32> = (0..n as u32)
+        .filter(|&i| live[i as usize] && indeg[i as usize] == 0)
+        .collect();
+    let mut node_hash = vec![0u64; n];
+    let mut qi = 0;
+    while qi < queue.len() {
+        let idx = queue[qi] as usize;
+        qi += 1;
+        let node = &g.nodes[idx];
+        let mut h = match node.op {
+            // Name-invariance: sources hash by kind + shape only.
+            OpKind::Input => mix(0x1111, shape_hash(&node.outs[0].shape)),
+            OpKind::Weight => mix(0x2222, shape_hash(&node.outs[0].shape)),
+            _ => node.op.attr_hash(),
+        };
+        for inp in &node.inputs {
+            h = mix(h, mix(node_hash[inp.node.index()], inp.port as u64));
+        }
+        node_hash[idx] = h;
+        for &c in &edges[head[idx] as usize..head[idx + 1] as usize] {
+            indeg[c as usize] -= 1;
+            if indeg[c as usize] == 0 {
+                queue.push(c);
+            }
+        }
+    }
+    if qi != g.n_live() {
+        return 0; // cycle: invalid graphs all hash to 0
+    }
+
+    // Outputs: live non-source nodes with no live consumers.
+    let mut outs: Vec<u64> = (0..n)
+        .filter(|&i| {
+            live[i]
+                && !matches!(g.nodes[i].op, OpKind::Input | OpKind::Weight)
+                && head[i] == head[i + 1]
+        })
+        .map(|i| node_hash[i])
+        .collect();
     outs.sort_unstable();
     let mut h = 0x9E3779B97F4A7C15;
     for o in outs {

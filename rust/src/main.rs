@@ -15,7 +15,7 @@ use rlflow::coordinator::Pipeline;
 use rlflow::cost::CostModel;
 use rlflow::experiments::{self, ExperimentCtx};
 use rlflow::runtime::Engine;
-use rlflow::search::{greedy_optimise, taso_optimise, TasoConfig};
+use rlflow::search::{taso_optimise, TasoConfig};
 use rlflow::xfer::library::standard_library;
 
 struct Args {
@@ -117,19 +117,29 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
     let rules = standard_library();
     let cost = CostModel::new(cfg.device);
     let method = args.flags.get("method").map(String::as_str).unwrap_or("taso");
+    // `--threads N` pins the search worker count (0/default = all cores);
+    // results are bit-identical for every value.
+    let threads: usize = match args.flags.get("threads") {
+        Some(t) => t
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad --threads '{t}': {e}"))?,
+        None => 0,
+    };
     let (optimised, log) = match method {
-        "greedy" => greedy_optimise(&graph, &rules, &cost, 100),
-        "taso" => taso_optimise(&graph, &rules, &cost, &TasoConfig::default()),
+        "greedy" => rlflow::search::greedy_optimise_threads(&graph, &rules, &cost, 100, threads),
+        "taso" => taso_optimise(&graph, &rules, &cost, &TasoConfig { threads, ..Default::default() }),
         m => anyhow::bail!("unknown method '{m}' (greedy|taso; for RL use `rlflow train`)"),
     };
     println!(
-        "{}: {:.3} ms -> {:.3} ms ({:.1}% better) in {:.2}s, {} graphs explored",
+        "{}: {:.3} ms -> {:.3} ms ({:.1}% better) in {:.2}s, {} graphs explored ({} threads, {} memo hits)",
         cfg.graph,
         log.initial_ms,
         log.final_ms,
         log.improvement_pct(),
         log.elapsed_s,
-        log.graphs_explored
+        log.graphs_explored,
+        log.threads,
+        log.memo_hits
     );
     for (rule, ms) in &log.steps {
         println!("  applied {:<22} -> {:.3} ms", rule, ms);

@@ -1,0 +1,271 @@
+//! Shared frontier machinery behind both deterministic search baselines.
+//!
+//! [`Frontier`] owns the graphs alive at the current search depth plus the
+//! cross-depth [`TranspositionTable`]; [`Frontier::expand`] is the one
+//! candidate-generation path both `greedy_optimise` and `taso_optimise`
+//! call. Expansion fans (frontier graph, rule) pairs out across scoped
+//! worker threads — the same worker-owns-its-clone pattern as
+//! `coordinator::collect_random_parallel`: the `RuleSet` is `Sync` and is
+//! shared by reference, while each worker owns a [`CostModel`] clone
+//! (interior mutability makes the cost model deliberately `!Sync`).
+//!
+//! Determinism: workers take pairs round-robin but results are merged back
+//! in canonical (frontier entry, rule, location) enumeration order, and all
+//! transposition-table updates happen on the caller's thread during that
+//! merge. The candidate stream is therefore *bit-identical* for every
+//! thread count, which the search property tests pin down.
+//!
+//! Costing: a candidate already in the table reuses the memoised runtime
+//! (re-derived graphs are never re-costed); a fresh candidate is costed
+//! incrementally from its parent via [`CostModel::delta_runtime_ms`].
+
+use std::collections::HashMap;
+
+use crate::cost::CostModel;
+use crate::graph::{canonical_hash, Graph};
+use crate::xfer::{apply_rule, RuleSet};
+
+/// Cross-depth memo of every graph the search has costed, keyed by
+/// [`canonical_hash`] — the ruler/equality-saturation dedup idiom: two
+/// substitution sequences reaching the same graph share one table slot.
+#[derive(Debug, Clone, Default)]
+pub struct TranspositionTable {
+    map: HashMap<u64, f64>,
+    /// Candidates served from the table instead of being re-costed, plus
+    /// (in dedup mode) candidates dropped as already explored.
+    pub hits: usize,
+}
+
+impl TranspositionTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn contains(&self, hash: u64) -> bool {
+        self.map.contains_key(&hash)
+    }
+
+    pub fn get(&self, hash: u64) -> Option<f64> {
+        self.map.get(&hash).copied()
+    }
+
+    /// Record a costed graph; returns `true` when the hash was fresh.
+    /// A duplicate never clobbers the stored cost: the first (canonical-
+    /// order) derivation's value is the one memo hits must keep returning.
+    pub fn insert(&mut self, hash: u64, ms: f64) -> bool {
+        match self.map.entry(hash) {
+            std::collections::hash_map::Entry::Occupied(_) => false,
+            std::collections::hash_map::Entry::Vacant(slot) => {
+                slot.insert(ms);
+                true
+            }
+        }
+    }
+}
+
+/// One graph alive at the current search depth, with its tracked runtime.
+#[derive(Debug, Clone)]
+pub struct FrontierEntry {
+    pub ms: f64,
+    pub graph: Graph,
+}
+
+/// One expanded candidate, emitted in canonical enumeration order.
+#[derive(Debug)]
+pub struct Candidate {
+    pub rule_name: &'static str,
+    pub hash: u64,
+    pub ms: f64,
+    /// Present iff `ms` beat the expansion's keep threshold (everything
+    /// else is recorded in the table but its graph is dropped worker-side).
+    pub graph: Option<Graph>,
+    /// The runtime came from the transposition table, not a fresh costing.
+    pub memo_hit: bool,
+}
+
+struct PairOut {
+    cands: Vec<Candidate>,
+    /// Candidates skipped worker-side as already in the table (dedup mode).
+    skipped: usize,
+}
+
+/// The beam/frontier state shared by the search baselines.
+#[derive(Debug)]
+pub struct Frontier {
+    pub entries: Vec<FrontierEntry>,
+    pub table: TranspositionTable,
+}
+
+impl Frontier {
+    /// Seed the frontier (and the table) with the initial graph.
+    pub fn new(graph: Graph, ms: f64) -> Self {
+        let mut table = TranspositionTable::new();
+        table.insert(canonical_hash(&graph), ms);
+        Self { entries: vec![FrontierEntry { ms, graph }], table }
+    }
+
+    /// Expand every (entry, rule, location) site once and return the
+    /// candidates in canonical order. Graphs are retained only for
+    /// candidates costing below `keep_below` (and, when
+    /// `best_only_per_pair` is set, only the cheapest kept candidate of
+    /// each (entry, rule) pair — what greedy selection needs). With
+    /// `drop_seen`, candidates whose hash is already in the table are
+    /// dropped entirely (TASO's explored-set dedup); otherwise the table
+    /// serves purely as a cost memo.
+    ///
+    /// The table itself is NOT updated here — callers fold the returned
+    /// candidates in with [`TranspositionTable::insert`] so that in-depth
+    /// duplicates resolve in canonical order. Worker-side skips are added
+    /// to `table.hits`.
+    pub fn expand(
+        &mut self,
+        rules: &RuleSet,
+        cost: &CostModel,
+        keep_below: f64,
+        drop_seen: bool,
+        best_only_per_pair: bool,
+        threads: usize,
+    ) -> Vec<Candidate> {
+        let entries = &self.entries;
+        let table = &self.table;
+        let n_pairs = entries.len() * rules.len();
+        // Measurement noise draws per costing call: sharding would make
+        // draws depend on worker assignment, so noisy models always expand
+        // sequentially (the same downgrade `search::resolve_threads`
+        // applies — enforced here too so direct `Frontier` users keep the
+        // bit-identical contract).
+        let threads = if cost.noise_std > 0.0 {
+            1
+        } else {
+            effective_threads(threads, n_pairs)
+        };
+
+        // One const set per parent graph: identical for all of a parent's
+        // candidates, so don't recompute it per (rule, location) site.
+        let parent_consts: Vec<Vec<bool>> =
+            entries.iter().map(|e| cost.const_set(&e.graph)).collect();
+        let parent_consts = &parent_consts;
+
+        let expand_pair = |entry_idx: usize, rule_idx: usize, cm: &CostModel| -> PairOut {
+            let parent = &entries[entry_idx];
+            let rule = rules.rules[rule_idx].as_ref();
+            let mut cands: Vec<Candidate> = Vec::new();
+            let mut skipped = 0usize;
+            let mut best_kept: Option<usize> = None;
+            for loc in rule.find(&parent.graph) {
+                let mut candidate = parent.graph.clone();
+                let report = match apply_rule(&mut candidate, rule, &loc) {
+                    Ok(r) => r,
+                    Err(_) => continue,
+                };
+                let hash = canonical_hash(&candidate);
+                if drop_seen && table.contains(hash) {
+                    skipped += 1;
+                    continue;
+                }
+                let (ms, memo_hit) = match table.get(hash) {
+                    Some(ms) => (ms, true),
+                    None => (
+                        cm.delta_runtime_ms_with(
+                            &parent.graph,
+                            &parent_consts[entry_idx],
+                            parent.ms,
+                            &candidate,
+                            &report,
+                        ),
+                        false,
+                    ),
+                };
+                let keep = ms < keep_below;
+                if keep {
+                    let better = match best_kept {
+                        Some(b) => ms < cands[b].ms,
+                        None => true,
+                    };
+                    if better {
+                        best_kept = Some(cands.len());
+                    }
+                }
+                cands.push(Candidate {
+                    rule_name: rule.name(),
+                    hash,
+                    ms,
+                    graph: keep.then_some(candidate),
+                    memo_hit,
+                });
+            }
+            if best_only_per_pair {
+                for (i, c) in cands.iter_mut().enumerate() {
+                    if Some(i) != best_kept {
+                        c.graph = None;
+                    }
+                }
+            }
+            PairOut { cands, skipped }
+        };
+
+        // Pairs in canonical order: frontier entries major, rules minor.
+        let n_rules = rules.len();
+        let pair_of = move |i: usize| (i / n_rules, i % n_rules);
+
+        let mut outs: Vec<Option<PairOut>> = (0..n_pairs).map(|_| None).collect();
+        if threads <= 1 {
+            for (i, slot) in outs.iter_mut().enumerate() {
+                let (e, r) = pair_of(i);
+                *slot = Some(expand_pair(e, r, cost));
+            }
+        } else {
+            // Workers take pairs round-robin (cheap load balancing); the
+            // merge below restores canonical order regardless.
+            std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(threads);
+                for w in 0..threads {
+                    let expand_pair = &expand_pair;
+                    let cm = cost.clone();
+                    handles.push(scope.spawn(move || {
+                        let mut mine: Vec<(usize, PairOut)> = Vec::new();
+                        let mut i = w;
+                        while i < n_pairs {
+                            let (e, r) = pair_of(i);
+                            mine.push((i, expand_pair(e, r, &cm)));
+                            i += threads;
+                        }
+                        (mine, cm)
+                    }));
+                }
+                for h in handles {
+                    let (mine, cm) = h.join().expect("search worker panicked");
+                    // Fold the worker's freshly computed op costs back so
+                    // the next depth's clones start warm.
+                    cost.absorb_cache(&cm);
+                    for (i, out) in mine {
+                        outs[i] = Some(out);
+                    }
+                }
+            });
+        }
+
+        let mut cands = Vec::new();
+        for out in outs.into_iter().flatten() {
+            self.table.hits += out.skipped;
+            cands.extend(out.cands);
+        }
+        cands
+    }
+}
+
+/// Resolve a requested thread count: 0 means "all available cores",
+/// bounded by the number of work items.
+pub(crate) fn effective_threads(requested: usize, work_items: usize) -> usize {
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let t = if requested == 0 { hw } else { requested };
+    t.min(work_items).max(1)
+}

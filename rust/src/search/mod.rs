@@ -10,13 +10,51 @@
 //!
 //! Both run over exactly the same rule set and cost model as the RL agent,
 //! so Fig. 6 compares *search strategies*, not substitution vocabularies.
+//!
+//! # Engine
+//!
+//! Since the substitution frontier explodes combinatorially on transformer
+//! graphs (X-RLflow), both baselines share one engine
+//! ([`frontier::Frontier`]) with three ingredients:
+//!
+//! 1. **Parallel candidate expansion** — (frontier graph, rule) pairs fan
+//!    out over `std::thread::scope` workers (REGAL's standard fix), each
+//!    owning a [`CostModel`] clone while sharing the `Sync` rule set, the
+//!    same pattern as `coordinator::collect_random_parallel`.
+//! 2. **A transposition table** ([`frontier::TranspositionTable`]) keyed
+//!    on [`canonical_hash`](crate::graph::canonical_hash) that persists
+//!    across beam depths: a graph re-derived through a different
+//!    substitution sequence is never re-costed, and TASO's explored-set
+//!    dedup drops it before the graph is even retained.
+//! 3. **Incremental costing** — fresh candidates are costed via
+//!    `CostModel::delta_runtime_ms`, re-costing only the nodes the rule
+//!    application touched; the full `graph_runtime_ms` recompute remains
+//!    the oracle (reported `final_ms` always comes from it).
+//!
+//! # Determinism
+//!
+//! Worker results are merged in canonical (frontier entry, rule, location)
+//! enumeration order and every table update happens during that merge, so
+//! results are **bit-identical for every thread count** — `threads: 1` *is*
+//! the sequential reference (`tests/props.rs` pins this). With measurement
+//! noise enabled (`CostModel::noise_std > 0`) expansion drops to one
+//! thread and full recomputes so noise draws stay replayable.
+//!
+//! The pre-engine implementations are kept verbatim as
+//! [`greedy_optimise_reference`] / [`taso_optimise_reference`]: single
+//! thread, no memoisation, a full cost recompute per candidate. They are
+//! the semantic oracle for the property tests and the baseline bar for
+//! `benches/fig7_opt_time.rs`.
 
-use std::collections::HashSet;
+pub mod frontier;
+
 use std::time::Instant;
 
 use crate::cost::CostModel;
 use crate::graph::{canonical_hash, Graph};
 use crate::xfer::{apply_rule, RuleSet};
+
+pub use frontier::{Candidate, Frontier, FrontierEntry, TranspositionTable};
 
 #[derive(Debug, Clone)]
 pub struct SearchLog {
@@ -25,6 +63,13 @@ pub struct SearchLog {
     pub final_ms: f64,
     pub elapsed_s: f64,
     pub graphs_explored: usize,
+    /// Unique graphs in the transposition table when the search ended.
+    pub table_size: usize,
+    /// Candidates answered by the table: cost-memo reuses (greedy) plus
+    /// already-explored drops (TASO) — work the seed path would redo.
+    pub memo_hits: usize,
+    /// Worker threads candidate expansion ran with.
+    pub threads: usize,
 }
 
 impl SearchLog {
@@ -33,8 +78,194 @@ impl SearchLog {
     }
 }
 
-/// TF-style greedy optimisation.
+/// TF-style greedy optimisation (parallel, memoised engine; auto threads).
 pub fn greedy_optimise(
+    graph: &Graph,
+    rules: &RuleSet,
+    cost: &CostModel,
+    max_steps: usize,
+) -> (Graph, SearchLog) {
+    greedy_optimise_threads(graph, rules, cost, max_steps, 0)
+}
+
+/// [`greedy_optimise`] with an explicit worker-thread count (0 = all
+/// cores). Results are bit-identical for every `threads` value.
+pub fn greedy_optimise_threads(
+    graph: &Graph,
+    rules: &RuleSet,
+    cost: &CostModel,
+    max_steps: usize,
+    threads: usize,
+) -> (Graph, SearchLog) {
+    let start = Instant::now();
+    let initial_ms = cost.graph_runtime_ms(graph);
+    let threads = resolve_threads(cost, threads);
+    let mut front = Frontier::new(graph.clone(), initial_ms);
+    let mut current_ms = initial_ms;
+    let mut log = Vec::new();
+    let mut explored = 0usize;
+
+    for _ in 0..max_steps {
+        // Keep only candidates that strictly improve on the current graph,
+        // and only the cheapest per (entry, rule) pair — the argmin is all
+        // greedy needs. The table acts as a pure cost memo here (greedy
+        // never drops re-derived candidates from consideration).
+        let cands = front.expand(rules, cost, current_ms - 1e-12, false, true, threads);
+        let mut best: Option<(f64, Graph, &'static str)> = None;
+        for c in cands {
+            explored += 1;
+            front.table.hits += c.memo_hit as usize;
+            front.table.insert(c.hash, c.ms);
+            if let Some(g) = c.graph {
+                // Strict `<`: the earliest candidate in canonical order
+                // wins ties, exactly as the sequential reference does.
+                if best.as_ref().map_or(true, |(b, _, _)| c.ms < *b) {
+                    best = Some((c.ms, g, c.rule_name));
+                }
+            }
+        }
+        match best {
+            Some((ms, g, name)) => {
+                log.push((name.to_string(), ms));
+                current_ms = ms;
+                front.entries = vec![FrontierEntry { ms, graph: g }];
+            }
+            None => break,
+        }
+    }
+
+    let final_graph = front.entries.swap_remove(0).graph;
+    let final_ms = cost.graph_runtime_ms(&final_graph);
+    let slog = SearchLog {
+        steps: log,
+        initial_ms,
+        final_ms,
+        elapsed_s: start.elapsed().as_secs_f64(),
+        graphs_explored: explored,
+        table_size: front.table.len(),
+        memo_hits: front.table.hits,
+        threads,
+    };
+    (final_graph, slog)
+}
+
+#[derive(Debug, Clone)]
+pub struct TasoConfig {
+    /// Relaxation factor: candidates with cost < alpha * best are kept.
+    pub alpha: f64,
+    /// Beam width (graphs carried between iterations).
+    pub beam: usize,
+    /// Maximum search depth (substitution-sequence length).
+    pub depth: usize,
+    /// Worker threads for candidate expansion; 0 = all available cores.
+    /// Any value yields bit-identical results (1 = sequential reference).
+    pub threads: usize,
+}
+
+impl Default for TasoConfig {
+    fn default() -> Self {
+        Self { alpha: 1.05, beam: 4, depth: 80, threads: 0 }
+    }
+}
+
+/// TASO-style cost-based backtracking search, realised as a relaxed beam:
+/// at every depth, all substitutions of every frontier graph are applied;
+/// candidates costing less than `alpha * best` survive (the relaxation that
+/// lets the search take locally-worsening steps), deduplicated by canonical
+/// hash against every graph ever explored, and the cheapest `beam`
+/// continue. Expansion runs on the parallel memoised engine (see module
+/// docs); results are bit-identical for every `cfg.threads` value.
+pub fn taso_optimise(
+    graph: &Graph,
+    rules: &RuleSet,
+    cost: &CostModel,
+    cfg: &TasoConfig,
+) -> (Graph, SearchLog) {
+    let start = Instant::now();
+    let initial_ms = cost.graph_runtime_ms(graph);
+    let threads = resolve_threads(cost, cfg.threads);
+    let mut best_graph = graph.clone();
+    let mut best_ms = initial_ms;
+    let mut front = Frontier::new(graph.clone(), initial_ms);
+    let mut explored = 0usize;
+    let mut log = Vec::new();
+    let mut stale = 0usize;
+
+    for _ in 0..cfg.depth {
+        // `best_ms` is frozen for the whole depth, so the alpha filter can
+        // run worker-side; `drop_seen` applies the explored-set dedup
+        // against the frozen table snapshot there too.
+        let cands = front.expand(rules, cost, cfg.alpha * best_ms, true, false, threads);
+        let mut survivors: Vec<(f64, Graph, &'static str)> = Vec::new();
+        for c in cands {
+            // In-depth duplicates (two workers deriving the same graph)
+            // resolve here, in canonical order: first derivation counts.
+            if !front.table.insert(c.hash, c.ms) {
+                front.table.hits += 1;
+                continue;
+            }
+            explored += 1;
+            if let Some(g) = c.graph {
+                survivors.push((c.ms, g, c.rule_name));
+            }
+        }
+        if survivors.is_empty() {
+            break;
+        }
+        survivors.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+        survivors.truncate(cfg.beam);
+        if survivors[0].0 < best_ms {
+            best_ms = survivors[0].0;
+            best_graph = survivors[0].1.clone();
+            log.push((survivors[0].2.to_string(), best_ms));
+            stale = 0;
+        } else {
+            // Within-alpha exploration that stops paying off terminates the
+            // search (TASO's budget exhaustion analogue).
+            stale += 1;
+            if stale >= 6 {
+                break;
+            }
+        }
+        front.entries = survivors
+            .into_iter()
+            .map(|(ms, graph, _)| FrontierEntry { ms, graph })
+            .collect();
+    }
+
+    let final_ms = cost.graph_runtime_ms(&best_graph);
+    let slog = SearchLog {
+        steps: log,
+        initial_ms,
+        final_ms,
+        elapsed_s: start.elapsed().as_secs_f64(),
+        graphs_explored: explored,
+        table_size: front.table.len(),
+        memo_hits: front.table.hits,
+        threads,
+    };
+    (best_graph, slog)
+}
+
+/// Thread resolution shared by both baselines: measurement noise forces the
+/// sequential path (noise draws must stay replayable), otherwise 0 means
+/// "all available cores".
+fn resolve_threads(cost: &CostModel, requested: usize) -> usize {
+    if cost.noise_std > 0.0 {
+        1
+    } else {
+        frontier::effective_threads(requested, usize::MAX)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reference implementations (the pre-engine seed path)
+// ---------------------------------------------------------------------------
+
+/// The original single-threaded greedy search: no memoisation, a full cost
+/// recompute for every candidate. Kept verbatim as the semantic oracle for
+/// the property tests and the baseline bar in `benches/fig7_opt_time.rs`.
+pub fn greedy_optimise_reference(
     graph: &Graph,
     rules: &RuleSet,
     cost: &CostModel,
@@ -81,32 +312,17 @@ pub fn greedy_optimise(
             final_ms: current_ms,
             elapsed_s: start.elapsed().as_secs_f64(),
             graphs_explored: explored,
+            table_size: 0,
+            memo_hits: 0,
+            threads: 1,
         },
     )
 }
 
-#[derive(Debug, Clone)]
-pub struct TasoConfig {
-    /// Relaxation factor: candidates with cost < alpha * best are kept.
-    pub alpha: f64,
-    /// Beam width (graphs carried between iterations).
-    pub beam: usize,
-    /// Maximum search depth (substitution-sequence length).
-    pub depth: usize,
-}
-
-impl Default for TasoConfig {
-    fn default() -> Self {
-        Self { alpha: 1.05, beam: 4, depth: 80 }
-    }
-}
-
-/// TASO-style cost-based backtracking search, realised as a relaxed beam:
-/// at every depth, all substitutions of every frontier graph are applied;
-/// candidates costing less than `alpha * best` survive (the relaxation that
-/// lets the search take locally-worsening steps), deduplicated by canonical
-/// hash, and the cheapest `beam` continue.
-pub fn taso_optimise(
+/// The original single-threaded TASO search: dedup within the run but no
+/// cost memoisation and a full recompute per candidate. See
+/// [`greedy_optimise_reference`] for why it is kept.
+pub fn taso_optimise_reference(
     graph: &Graph,
     rules: &RuleSet,
     cost: &CostModel,
@@ -116,17 +332,17 @@ pub fn taso_optimise(
     let initial_ms = cost.graph_runtime_ms(graph);
     let mut best_graph = graph.clone();
     let mut best_ms = initial_ms;
-    let mut seen: HashSet<u64> = HashSet::new();
+    let mut seen: std::collections::HashSet<u64> = std::collections::HashSet::new();
     seen.insert(canonical_hash(graph));
 
-    let mut frontier: Vec<(f64, Graph)> = vec![(initial_ms, graph.clone())];
+    let mut front: Vec<(f64, Graph)> = vec![(initial_ms, graph.clone())];
     let mut explored = 0;
     let mut log = Vec::new();
     let mut stale = 0usize;
 
     for _ in 0..cfg.depth {
         let mut candidates: Vec<(f64, Graph, &'static str)> = Vec::new();
-        for (_, g) in &frontier {
+        for (_, g) in &front {
             for rule in &rules.rules {
                 for loc in rule.find(g) {
                     let mut candidate = g.clone();
@@ -156,14 +372,12 @@ pub fn taso_optimise(
             log.push((candidates[0].2.to_string(), best_ms));
             stale = 0;
         } else {
-            // Within-alpha exploration that stops paying off terminates the
-            // search (TASO's budget exhaustion analogue).
             stale += 1;
             if stale >= 6 {
                 break;
             }
         }
-        frontier = candidates.into_iter().map(|(ms, g, _)| (ms, g)).collect();
+        front = candidates.into_iter().map(|(ms, g, _)| (ms, g)).collect();
     }
     (
         best_graph,
@@ -173,6 +387,9 @@ pub fn taso_optimise(
             final_ms: best_ms,
             elapsed_s: start.elapsed().as_secs_f64(),
             graphs_explored: explored,
+            table_size: 0,
+            memo_hits: 0,
+            threads: 1,
         },
     )
 }
@@ -258,5 +475,65 @@ mod tests {
         assert!(log.improvement_pct() > 0.5, "got {}%", log.improvement_pct());
         // The transformer fusion family must appear in the log.
         assert!(log.steps.iter().any(|(n, _)| n == "fuse_add_ln" || n == "merge_linear3"));
+    }
+
+    #[test]
+    fn parallel_is_bit_identical_to_sequential() {
+        // threads=1 IS the sequential reference; any other thread count
+        // must reproduce it exactly — costs to the bit, graphs to the hash.
+        let (g, rules, cost) = fixture();
+        for threads in [2, 4] {
+            let (sg, slog) =
+                taso_optimise(&g, &rules, &cost, &TasoConfig { threads: 1, ..Default::default() });
+            let (pg, plog) =
+                taso_optimise(&g, &rules, &cost, &TasoConfig { threads, ..Default::default() });
+            assert_eq!(slog.final_ms.to_bits(), plog.final_ms.to_bits());
+            assert_eq!(canonical_hash(&sg), canonical_hash(&pg));
+            assert_eq!(slog.graphs_explored, plog.graphs_explored);
+            assert_eq!(slog.steps, plog.steps);
+
+            let (sg, slog) = greedy_optimise_threads(&g, &rules, &cost, 50, 1);
+            let (pg, plog) = greedy_optimise_threads(&g, &rules, &cost, 50, threads);
+            assert_eq!(slog.final_ms.to_bits(), plog.final_ms.to_bits());
+            assert_eq!(canonical_hash(&sg), canonical_hash(&pg));
+            assert_eq!(slog.graphs_explored, plog.graphs_explored);
+            assert_eq!(slog.steps, plog.steps);
+        }
+    }
+
+    #[test]
+    fn engine_agrees_with_reference_oracle() {
+        // Memoisation + delta costing must not change what the search
+        // finds on the fixture (near-ties may resolve differently, so the
+        // pin is relative cost; bitwise equality is pinned against the
+        // threads=1 run elsewhere).
+        let (g, rules, cost) = fixture();
+        let (_, log) = taso_optimise(&g, &rules, &cost, &TasoConfig::default());
+        let (_, rlog) = taso_optimise_reference(&g, &rules, &cost, &TasoConfig::default());
+        let rel = (log.final_ms - rlog.final_ms).abs() / rlog.final_ms.max(1e-12);
+        assert!(rel < 1e-6, "engine {} vs reference {}", log.final_ms, rlog.final_ms);
+        let (_, log) = greedy_optimise(&g, &rules, &cost, 50);
+        let (_, rlog) = greedy_optimise_reference(&g, &rules, &cost, 50);
+        let rel = (log.final_ms - rlog.final_ms).abs() / rlog.final_ms.max(1e-12);
+        assert!(rel < 1e-6, "greedy engine {} vs reference {}", log.final_ms, rlog.final_ms);
+    }
+
+    #[test]
+    fn transposition_table_tracks_explored_graphs() {
+        let (g, rules, cost) = fixture();
+        let (_, log) = taso_optimise(&g, &rules, &cost, &TasoConfig::default());
+        // Every explored graph plus the seed is in the table, exactly once.
+        assert_eq!(log.table_size, log.graphs_explored + 1);
+        let (_, glog) = greedy_optimise(&g, &rules, &cost, 50);
+        assert!(glog.table_size <= glog.graphs_explored + 1);
+        assert!(glog.table_size > 0);
+    }
+
+    #[test]
+    fn noise_forces_sequential_expansion() {
+        let (g, rules, _) = fixture();
+        let noisy = CostModel::new(DeviceProfile::rtx2070()).with_noise(0.05, 7);
+        let (_, log) = taso_optimise(&g, &rules, &noisy, &TasoConfig::default());
+        assert_eq!(log.threads, 1);
     }
 }

@@ -1,6 +1,47 @@
-//! Splice helpers shared by all rule implementations.
+//! Splice helpers shared by all rule implementations, and the
+//! [`ApplyReport`] describing what one application changed.
 
 use crate::graph::{Graph, NodeId, PortRef};
+
+/// What one rule application changed, computed by [`crate::xfer::apply_rule`]
+/// as a live-set diff (so it includes nodes collected by the post-rewrite
+/// DCE, not just the rule's explicit kills). This is the contract the
+/// incremental cost path (`CostModel::delta_runtime_ms`) consumes: every
+/// node whose runtime contribution can have changed is either listed here
+/// or had its constness flipped.
+#[derive(Debug, Clone, Default)]
+pub struct ApplyReport {
+    /// Arena size before the rewrite: ids at or above this are new slots.
+    pub prev_slots: usize,
+    /// Nodes live before the rewrite and dead after it.
+    pub removed: Vec<NodeId>,
+    /// Nodes created by the rewrite and still live after DCE.
+    pub added: Vec<NodeId>,
+}
+
+impl ApplyReport {
+    /// Diff the post-rewrite graph against the pre-rewrite live set.
+    pub(crate) fn diff(g: &Graph, prev_slots: usize, live_before: &[bool]) -> Self {
+        let mut removed = Vec::new();
+        let mut added = Vec::new();
+        for (i, was_live) in live_before.iter().enumerate().take(prev_slots) {
+            if *was_live && g.nodes[i].dead {
+                removed.push(NodeId(i as u32));
+            }
+        }
+        for i in prev_slots..g.n_slots() {
+            if !g.nodes[i].dead {
+                added.push(NodeId(i as u32));
+            }
+        }
+        Self { prev_slots, removed, added }
+    }
+
+    /// All nodes the application touched (removed then added).
+    pub fn touched(&self) -> impl Iterator<Item = NodeId> + '_ {
+        self.removed.iter().chain(self.added.iter()).copied()
+    }
+}
 
 /// If `p` refers to a source (Input/Weight), wrap it in an `Identity` op so
 /// the spliced value remains an observable graph *output* (sources are never

@@ -238,6 +238,60 @@ mod tests {
     }
 
     #[test]
+    fn chain_rejects_interior_node_with_multiple_consumers() {
+        // conv -> relu -> tanh where the *interior* relu also feeds a
+        // second consumer: the 3-node chain must not match (the chain body
+        // could not be deleted wholesale), while the conv->relu prefix —
+        // whose interior is empty — still does.
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 3, 8, 8]);
+        let c = b.conv(x, 4, 3, 1, PadMode::Same).unwrap();
+        let r = b.relu(c).unwrap();
+        let _ = b.op(OpKind::Tanh, &[r]).unwrap();
+        let _ = b.op(OpKind::Sigmoid, &[r]).unwrap(); // second consumer of relu
+        let g = b.finish();
+        let triple = find_chains(
+            &g,
+            &[
+                pred!(conv: OpKind::Conv2d { .. }),
+                pred!(relu: OpKind::Relu),
+                pred!(tanh: OpKind::Tanh),
+            ],
+        );
+        assert!(triple.is_empty(), "interior multi-consumer chain must not match");
+        let pair = find_chains(
+            &g,
+            &[pred!(conv: OpKind::Conv2d { .. }), pred!(relu: OpKind::Relu)],
+        );
+        assert_eq!(pair.len(), 1, "the 2-chain has no interior node and stays valid");
+    }
+
+    #[test]
+    fn siblings_order_is_deterministic_and_sorted() {
+        // The environment exposes location indices to the agent (§3.1.3),
+        // so sibling groups must come out in one stable order: sources in
+        // (node, port) order, members sorted, combinations lexicographic.
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 16]);
+        let y = b.input(&[1, 16]);
+        let _ = b.linear(y, 8, Activation::None).unwrap();
+        let _ = b.linear(y, 8, Activation::None).unwrap();
+        let _ = b.linear(x, 8, Activation::None).unwrap();
+        let _ = b.linear(x, 8, Activation::None).unwrap();
+        let g = b.finish();
+        let run = || find_siblings(&g, &pred!(lin: OpKind::Linear { .. }), 2);
+        let groups = run();
+        assert_eq!(groups, run(), "repeat calls must agree exactly");
+        assert_eq!(groups.len(), 2);
+        for grp in &groups {
+            assert!(grp.windows(2).all(|w| w[0] < w[1]), "members sorted");
+        }
+        // Groups ordered by shared-source node id: x's pair before y's.
+        let src_of = |grp: &Vec<NodeId>| g.node(grp[0]).inputs[0].node;
+        assert!(src_of(&groups[0]) < src_of(&groups[1]));
+    }
+
+    #[test]
     fn combinations_count() {
         let items: Vec<NodeId> = (0..5).map(NodeId).collect();
         let mut out = Vec::new();

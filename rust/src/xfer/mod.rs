@@ -17,6 +17,8 @@ pub mod library;
 pub mod library_ext;
 pub mod matcher;
 
+pub use apply::ApplyReport;
+
 use crate::graph::{Graph, NodeId};
 
 /// Anchor nodes identifying one applicable site of a rule.
@@ -35,12 +37,16 @@ pub trait Rule: Send + Sync {
 }
 
 /// Apply a rule site and run the post-rewrite housekeeping every caller
-/// needs: dead-code elimination plus (debug) validation.
-pub fn apply_rule(g: &mut Graph, rule: &dyn Rule, loc: &Location) -> anyhow::Result<()> {
+/// needs: dead-code elimination plus (debug) validation. Returns the
+/// [`ApplyReport`] live-set diff so callers can re-cost incrementally
+/// (`CostModel::delta_runtime_ms`) instead of walking the whole graph.
+pub fn apply_rule(g: &mut Graph, rule: &dyn Rule, loc: &Location) -> anyhow::Result<ApplyReport> {
+    let prev_slots = g.n_slots();
+    let live_before: Vec<bool> = g.nodes.iter().map(|n| !n.dead).collect();
     rule.apply(g, loc)?;
     g.dce();
     debug_assert!(g.validate().is_ok(), "rule {} broke the graph", rule.name());
-    Ok(())
+    Ok(ApplyReport::diff(g, prev_slots, &live_before))
 }
 
 /// A rule set with stable slot indices (the agent's xfer action space).

@@ -258,6 +258,121 @@ fn prop_onnx_round_trip_random_graphs() {
     }
 }
 
+/// One convolutional + one transformer zoo graph: enough structural
+/// diversity for the search-equivalence properties while keeping the
+/// debug-build test walltime sane (debug asserts validate every candidate).
+fn zoo_subset() -> Vec<(rlflow::zoo::GraphInfo, Graph)> {
+    rlflow::zoo::all()
+        .into_iter()
+        .filter(|(i, _)| i.name == "SqueezeNet1.1" || i.name == "BERT-Base")
+        .collect()
+}
+
+#[test]
+fn prop_parallel_search_bit_identical_to_sequential_on_zoo() {
+    // The parallel memoised engine merges worker output in canonical order,
+    // so `threads: 1` (the sequential reference) and any worker count must
+    // produce the same optimisation to the bit: same final cost, same final
+    // graph (canonical hash), same explored count, same step log.
+    let lib = standard_library();
+    let cost = CostModel::new(DeviceProfile::rtx2070());
+    for (info, g) in zoo_subset() {
+        let cfg = |threads| rlflow::search::TasoConfig {
+            depth: 3,
+            beam: 3,
+            threads,
+            ..Default::default()
+        };
+        let (sg, slog) = rlflow::search::taso_optimise(&g, &lib, &cost, &cfg(1));
+        let (pg, plog) = rlflow::search::taso_optimise(&g, &lib, &cost, &cfg(4));
+        assert_eq!(
+            slog.final_ms.to_bits(),
+            plog.final_ms.to_bits(),
+            "{}: parallel taso diverged from sequential",
+            info.name
+        );
+        assert_eq!(canonical_hash(&sg), canonical_hash(&pg), "{}", info.name);
+        assert_eq!(slog.graphs_explored, plog.graphs_explored, "{}", info.name);
+        assert_eq!(slog.steps, plog.steps, "{}", info.name);
+
+        let (sg, slog) = rlflow::search::greedy_optimise_threads(&g, &lib, &cost, 8, 1);
+        let (pg, plog) = rlflow::search::greedy_optimise_threads(&g, &lib, &cost, 8, 4);
+        assert_eq!(
+            slog.final_ms.to_bits(),
+            plog.final_ms.to_bits(),
+            "{}: parallel greedy diverged from sequential",
+            info.name
+        );
+        assert_eq!(canonical_hash(&sg), canonical_hash(&pg), "{}", info.name);
+        assert_eq!(slog.graphs_explored, plog.graphs_explored, "{}", info.name);
+        assert_eq!(slog.steps, plog.steps, "{}", info.name);
+    }
+}
+
+#[test]
+fn prop_search_engine_matches_reference_oracle() {
+    // Memoisation + delta costing must not change what the search finds.
+    // Near-ties between candidates may resolve differently (delta vs full
+    // recompute differ in the last f64 bits, and exact ties across
+    // differently-derived graphs are ordering-sensitive), so the pinned
+    // agreement is relative cost, not bitwise equality — bitwise equality
+    // is pinned against the `threads: 1` run in the test above.
+    let lib = standard_library();
+    let cost = CostModel::new(DeviceProfile::rtx2070());
+    for (info, g) in zoo_subset() {
+        let cfg = rlflow::search::TasoConfig { depth: 3, beam: 3, ..Default::default() };
+        let (_, elog) = rlflow::search::taso_optimise(&g, &lib, &cost, &cfg);
+        let (_, rlog) = rlflow::search::taso_optimise_reference(&g, &lib, &cost, &cfg);
+        let rel = (elog.final_ms - rlog.final_ms).abs() / rlog.final_ms.max(1e-12);
+        assert!(
+            rel < 1e-6,
+            "{}: engine {} vs reference {}",
+            info.name,
+            elog.final_ms,
+            rlog.final_ms
+        );
+        assert_eq!(elog.initial_ms.to_bits(), rlog.initial_ms.to_bits(), "{}", info.name);
+    }
+}
+
+#[test]
+fn prop_delta_cost_agrees_with_full_recompute() {
+    // Along random rule-application walks, the incremental cost must track
+    // the full oracle to 1e-9 at every step — including chained drift.
+    let lib = standard_library();
+    let cost = CostModel::new(DeviceProfile::rtx2070());
+    let mut rng = Rng::new(0xDE17A);
+    let mut checked = 0;
+    for _ in 0..20 {
+        let mut g = random_graph(&mut rng);
+        let mut tracked_ms = cost.graph_runtime_ms(&g);
+        for _ in 0..6 {
+            let applicable: Vec<(usize, Vec<_>)> = (0..lib.len())
+                .map(|i| (i, lib.get(i).unwrap().find(&g)))
+                .filter(|(_, l)| !l.is_empty())
+                .collect();
+            if applicable.is_empty() {
+                break;
+            }
+            let (ri, locs) = &applicable[rng.below(applicable.len())];
+            let loc = &locs[rng.below(locs.len())];
+            let mut g2 = g.clone();
+            let report = apply_rule(&mut g2, lib.get(*ri).unwrap(), loc).unwrap();
+            let delta = cost.delta_runtime_ms(&g, tracked_ms, &g2, &report);
+            let full = cost.graph_runtime_ms(&g2);
+            assert!(
+                (delta - full).abs() < 1e-9,
+                "delta {delta} vs full {full} after {}",
+                lib.get(*ri).unwrap().name()
+            );
+            g = g2;
+            tracked_ms = delta; // chain the incremental path on purpose
+            checked += 1;
+        }
+    }
+    assert!(checked > 40, "too few delta checks exercised: {checked}");
+}
+
 #[test]
 fn prop_search_never_worse_than_input() {
     let lib: RuleSet = standard_library();

@@ -1,0 +1,126 @@
+//! Vendored, dependency-free shim of the `anyhow` API surface rlflow uses:
+//! [`Error`], [`Result`], and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! The offline build cannot fetch crates.io, so this crate keeps the
+//! ergonomic error idiom without the dependency. Errors are a rendered
+//! message (no backtraces, no downcasting); any `std::error::Error` value
+//! converts via `?` exactly as with real anyhow.
+
+use std::fmt;
+
+/// A rendered error message.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Mirrors anyhow's blanket conversion: `?` on any std error produces an
+// `Error`. Coherent because `Error` itself does not implement
+// `std::error::Error` (same trick as the real crate).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(&e)
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a message, a format string, or any
+/// displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    fn fails(flag: bool) -> super::Result<u32> {
+        super::ensure!(flag, "flag was {}", flag);
+        Ok(7)
+    }
+
+    fn bails() -> super::Result<()> {
+        super::bail!("nope: {}", 3);
+    }
+
+    fn io_question_mark() -> super::Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/real/path/xyz")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        assert_eq!(fails(true).unwrap(), 7);
+        assert_eq!(fails(false).unwrap_err().to_string(), "flag was false");
+        assert!(bails().unwrap_err().to_string().contains("nope: 3"));
+    }
+
+    #[test]
+    fn std_errors_convert() {
+        let e = io_question_mark().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn anyhow_macro_forms() {
+        let a = super::anyhow!("plain");
+        let b = super::anyhow!("fmt {}", 2);
+        let c = super::anyhow!(String::from("owned"));
+        assert_eq!(a.to_string(), "plain");
+        assert_eq!(b.to_string(), "fmt 2");
+        assert_eq!(c.to_string(), "owned");
+    }
+}

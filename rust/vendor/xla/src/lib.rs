@@ -1,0 +1,240 @@
+//! Vendored offline shim of the `xla` crate surface rlflow uses.
+//!
+//! Host-side [`Literal`]s are fully functional (shape-carrying f32/i32
+//! buffers — everything batch-building code and its tests need). The PJRT
+//! device types compile but their entry points return [`Error`]: running
+//! AOT artifacts requires the real `xla_extension` backend, and every
+//! caller in rlflow already skips gracefully when the engine cannot load
+//! (`Engine::load` fails fast on `PjRtClient::cpu()`).
+
+use std::fmt;
+
+/// Error type; callers format it with `{:?}`.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn offline(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT unavailable in the offline build (link a real xla_extension to execute artifacts)"
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// Literals (functional)
+// ---------------------------------------------------------------------------
+
+#[doc(hidden)]
+#[derive(Debug, Clone, PartialEq)]
+pub enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// A host tensor: dims + typed storage. Mirrors the subset of the real
+/// `xla::Literal` API that rlflow calls.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    storage: Storage,
+    dims: Vec<i64>,
+}
+
+/// Element types storable in a [`Literal`].
+pub trait NativeType: Copy + fmt::Debug {
+    fn wrap(v: Vec<Self>) -> Storage;
+    fn unwrap(s: &Storage) -> Option<&[Self]>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<Self>) -> Storage {
+        Storage::F32(v)
+    }
+    fn unwrap(s: &Storage) -> Option<&[Self]> {
+        match s {
+            Storage::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<Self>) -> Storage {
+        Storage::I32(v)
+    }
+    fn unwrap(s: &Storage) -> Option<&[Self]> {
+        match s {
+            Storage::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { storage: T::wrap(vec![v]), dims: vec![] }
+    }
+
+    /// Rank-1 literal.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { storage: T::wrap(data.to_vec()), dims: vec![data.len() as i64] }
+    }
+
+    /// Reinterpret with new dims; element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = self.element_count() as i64;
+        if want != have {
+            return Err(Error(format!("reshape: {have} elements into dims {dims:?}")));
+        }
+        Ok(Literal { storage: self.storage.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.storage {
+            Storage::F32(v) => v.len(),
+            Storage::I32(v) => v.len(),
+            Storage::Tuple(t) => t.iter().map(|l| l.element_count()).sum(),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.storage)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| Error(format!("to_vec: wrong element type for {:?}", self.dims)))
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        T::unwrap(&self.storage)
+            .and_then(|s| s.first().copied())
+            .ok_or_else(|| Error("get_first_element: empty or wrong type".to_string()))
+    }
+
+    /// Build a tuple literal (what executions return in the real backend).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { storage: Storage::Tuple(parts), dims: vec![] }
+    }
+
+    /// Decompose a tuple literal.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.storage {
+            Storage::Tuple(t) => Ok(t),
+            _ => Err(Error("to_tuple: literal is not a tuple".to_string())),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT device types (stubbed: compile, error at runtime)
+// ---------------------------------------------------------------------------
+
+/// Parsed HLO module. Construction requires the real backend.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<Self> {
+        Err(offline(&format!("parse HLO {path}")))
+    }
+}
+
+/// An XLA computation handle.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(offline("to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(offline("execute"))
+    }
+
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(offline("execute_b"))
+    }
+}
+
+/// PJRT client. `cpu()` fails fast in the offline build, which is how
+/// `Engine::load` reports that artifacts cannot run.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(offline("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(offline("compile"))
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _lit: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Err(offline("buffer_from_host_literal"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err());
+        assert_eq!(l.get_first_element::<f32>().unwrap(), 1.0);
+        assert!(Literal::vec1(&[1i32]).reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn tuple_round_trip() {
+        let t = Literal::tuple(vec![Literal::scalar(1.0f32), Literal::scalar(2i32)]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(Literal::scalar(0i32).to_tuple().is_err());
+    }
+
+    #[test]
+    fn pjrt_is_offline() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+    }
+}
