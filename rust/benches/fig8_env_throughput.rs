@@ -1,0 +1,140 @@
+//! Bench: environment step throughput — the denominator of RLFlow's
+//! sample-efficiency story (§3.1). Three rows per graph:
+//!
+//!  * `seed` — the pre-incremental environment (`full_refresh: true`):
+//!    every step re-runs all `Rule::find`s and a full cost recompute;
+//!  * `incr` — the incremental environment: dirty-region match
+//!    maintenance + `delta_cost_fast` rewards;
+//!  * `pool B` — `EnvPool` at B = 1/4/8 environments, aggregate steps/sec
+//!    across the batch.
+//!
+//! `parity` checks the incremental walk visited exactly the same history
+//! as the seed walk (same seeded policy → bit-identical observations).
+//! Results are appended to BENCH_env.json at the repository root.
+
+use std::time::Instant;
+
+use rlflow::cost::{CostModel, DeviceProfile};
+use rlflow::env::{Env, EnvConfig, EnvPool, EnvPoolConfig};
+use rlflow::util::Rng;
+use rlflow::xfer::library::standard_library;
+
+const WALK_STEPS: usize = 40;
+const POOL_SIZES: [usize; 3] = [1, 4, 8];
+
+/// Seeded random valid-action walk; resets when an episode ends or the
+/// graph runs out of matches. Deterministic given the env + seed.
+fn walk(env: &mut Env, rng: &mut Rng, steps: usize) -> Vec<(usize, usize)> {
+    let n_rules = env.rules.len();
+    let mut history = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let obs = env.observe();
+        let valid: Vec<usize> = (0..n_rules).filter(|&i| obs.xfer_mask[i]).collect();
+        if valid.is_empty() {
+            env.reset();
+            continue;
+        }
+        let x = valid[rng.below(valid.len())];
+        let l = rng.below(obs.location_counts[x].max(1));
+        let res = env.step((x, l));
+        history.push((x, l));
+        if res.done {
+            env.reset();
+        }
+    }
+    history
+}
+
+fn main() {
+    let rules = standard_library();
+    println!(
+        "{:<15} {:>10} {:>10} {:>7} {:>8} {}",
+        "Graph", "seed st/s", "incr st/s", "speedup", "parity", "pool st/s (B=1/4/8)"
+    );
+    let mut json_rows = Vec::new();
+    for (info, g) in rlflow::zoo::all() {
+        let cost = CostModel::new(DeviceProfile::rtx2070());
+        let mut env = Env::new(
+            g.clone(),
+            &rules,
+            &cost,
+            EnvConfig { full_refresh: true, ..Default::default() },
+        );
+        let t0 = Instant::now();
+        let seed_history = walk(&mut env, &mut Rng::new(0xBEEF), WALK_STEPS);
+        let seed_sps = seed_history.len() as f64 / t0.elapsed().as_secs_f64();
+
+        let cost = CostModel::new(DeviceProfile::rtx2070());
+        let mut env = Env::new(g.clone(), &rules, &cost, EnvConfig::default());
+        let t0 = Instant::now();
+        let incr_history = walk(&mut env, &mut Rng::new(0xBEEF), WALK_STEPS);
+        let incr_sps = incr_history.len() as f64 / t0.elapsed().as_secs_f64();
+        let parity = seed_history == incr_history;
+        let stats = env.state().match_stats();
+
+        let mut pool_sps = Vec::new();
+        for &b in &POOL_SIZES {
+            let base = CostModel::new(DeviceProfile::rtx2070());
+            let mut pool = EnvPool::new(
+                &g,
+                standard_library(),
+                &base,
+                &EnvPoolConfig { n_envs: b, seed: 0xBEEF, ..Default::default() },
+            );
+            let t0 = Instant::now();
+            let per_env = pool.map_envs(|_, env, rng| walk(env, rng, WALK_STEPS).len());
+            let total: usize = per_env.iter().sum();
+            pool_sps.push(total as f64 / t0.elapsed().as_secs_f64());
+        }
+
+        println!(
+            "{:<15} {:>10.1} {:>10.1} {:>6.1}x {:>8} {:>8.1} /{:>8.1} /{:>8.1}   (refinds {} keeps {})",
+            info.name,
+            seed_sps,
+            incr_sps,
+            incr_sps / seed_sps.max(1e-9),
+            if parity { "ok" } else { "DIVERGED" },
+            pool_sps[0],
+            pool_sps[1],
+            pool_sps[2],
+            stats.refinds,
+            stats.keeps,
+        );
+        json_rows.push(format!(
+            concat!(
+                "    {{\"graph\": \"{}\", \"walk_steps\": {}, \"seed_steps_per_s\": {:.2}, ",
+                "\"incremental_steps_per_s\": {:.2}, \"speedup\": {:.3}, \"parity\": {}, ",
+                "\"pool_steps_per_s\": {{\"1\": {:.2}, \"4\": {:.2}, \"8\": {:.2}}}, ",
+                "\"match_refinds\": {}, \"match_keeps\": {}}}"
+            ),
+            info.name,
+            WALK_STEPS,
+            seed_sps,
+            incr_sps,
+            incr_sps / seed_sps.max(1e-9),
+            parity,
+            pool_sps[0],
+            pool_sps[1],
+            pool_sps[2],
+            stats.refinds,
+            stats.keeps,
+        ));
+    }
+
+    // `cargo bench` runs from the package root (rust/); the results file
+    // lives beside CHANGES.md at the repository root.
+    let out = if std::path::Path::new("../CHANGES.md").exists() {
+        "../BENCH_env.json"
+    } else {
+        "BENCH_env.json"
+    };
+    let json = format!(
+        "{{\n  \"bench\": \"fig8_env_throughput\",\n  \"walk_steps\": {},\n  \"rows\": [\n{}\n  ]\n}}\n",
+        WALK_STEPS,
+        json_rows.join(",\n")
+    );
+    match std::fs::write(out, &json) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

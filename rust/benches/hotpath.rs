@@ -34,10 +34,31 @@ fn main() -> anyhow::Result<()> {
     bench("env.new (match + cost)", 10, || {
         let _ = Env::new(bert.clone(), &rules, &cost, EnvConfig::default());
     });
-    bench("env.step (fuse_add_ln)", 10, || {
+    // Steady-state step cost, incremental vs the full-refresh reference
+    // (construction excluded; fig8_env_throughput has the full table).
+    {
         let mut env = Env::new(bert.clone(), &rules, &cost, EnvConfig::default());
-        let _ = env.step((fuse, 0));
-    });
+        bench("env.step (incremental)", 10, || {
+            if env.observe().location_counts[fuse] == 0 {
+                env.reset();
+            }
+            let _ = env.step((fuse, 0));
+        });
+    }
+    {
+        let mut env = Env::new(
+            bert.clone(),
+            &rules,
+            &cost,
+            EnvConfig { full_refresh: true, ..Default::default() },
+        );
+        bench("env.step (full refresh)", 10, || {
+            if env.observe().location_counts[fuse] == 0 {
+                env.reset();
+            }
+            let _ = env.step((fuse, 0));
+        });
+    }
     bench("encoder.encode", 20, || {
         let _ = encoder.encode(&bert);
     });
@@ -126,7 +147,7 @@ fn main() -> anyhow::Result<()> {
     let t0 = Instant::now();
     let mut steps = 0usize;
     while steps < 10 {
-        let e = encoder.encode(&env.graph);
+        let e = encoder.encode(env.graph());
         let _z = engine
             .exec_with_theta(
                 "gnn_encode_1",

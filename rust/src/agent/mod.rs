@@ -9,4 +9,4 @@ pub mod random;
 pub use buffer::{gae, CompactState, Episode};
 pub use policy::{act_batch, masked_log_softmax, ActOut, PolicyDims};
 pub use ppo::{ppo_update, PpoBuffer, PpoCfg, PpoStats};
-pub use random::{collect_one, collect_random_episodes};
+pub use random::{collect_one, collect_random_episodes, collect_random_pool};

@@ -4,7 +4,7 @@
 //! from the set of valid actions is equal."
 
 use crate::agent::buffer::{CompactState, Episode};
-use crate::env::{Env, StateEncoder};
+use crate::env::{Env, EnvPool, StateEncoder};
 use crate::util::Rng;
 
 /// Collect `n_episodes` random-policy episodes from `env`.
@@ -28,6 +28,28 @@ pub fn collect_random_episodes(
         .collect()
 }
 
+/// Collect `n_episodes` random episodes from a [`EnvPool`], B environments
+/// at a time. The episode *counts* split round-robin (env `i` runs
+/// `n/B + (i < n%B)` episodes), each env collecting its block back-to-back
+/// from its own forked RNG, and the blocks are returned env-major (all of
+/// env 0's episodes, then env 1's, ...). Ownership is deterministic and
+/// bit-identical for any pool thread count.
+pub fn collect_random_pool(
+    pool: &mut EnvPool,
+    encoder: &StateEncoder,
+    n_slots: usize,
+    n_episodes: usize,
+    noop_prob: f32,
+) -> Vec<Episode> {
+    let b = pool.n_envs();
+    let counts: Vec<usize> =
+        (0..b).map(|i| n_episodes / b + usize::from(i < n_episodes % b)).collect();
+    let per_env: Vec<Vec<Episode>> = pool.map_envs(|i, env, rng| {
+        collect_random_episodes(env, encoder, n_slots, counts[i], noop_prob, rng)
+    });
+    per_env.into_iter().flatten().collect()
+}
+
 pub fn collect_one(
     env: &mut Env,
     encoder: &StateEncoder,
@@ -41,7 +63,7 @@ pub fn collect_one(
     loop {
         let obs = env.observe();
         ep.states
-            .push(CompactState::from_encoded(&encoder.encode(&env.graph)));
+            .push(CompactState::from_encoded(&encoder.encode(env.graph())));
         ep.xmasks.push(env.padded_xfer_mask(n_slots));
 
         let valid: Vec<usize> = (0..env.rules.len())
@@ -61,7 +83,7 @@ pub fn collect_one(
         if res.done {
             // Final state snapshot (z_next target for the last step).
             ep.states
-                .push(CompactState::from_encoded(&encoder.encode(&env.graph)));
+                .push(CompactState::from_encoded(&encoder.encode(env.graph())));
             ep.xmasks.push(env.padded_xfer_mask(n_slots));
             return ep;
         }
@@ -100,6 +122,41 @@ mod tests {
             assert_eq!(ep.xmasks.len(), ep.len() + 1);
             assert_eq!(*ep.dones.last().unwrap(), 1.0);
             assert!(ep.len() <= 6);
+        }
+    }
+
+    #[test]
+    fn pool_collection_splits_episodes_round_robin() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 3, 8, 8]);
+        let c = b.conv_bn_relu(x, 4, 3, 1, PadMode::Same).unwrap();
+        let _ = b.maxpool(c, 2, 2).unwrap();
+        let g = b.finish();
+        let cost = CostModel::new(DeviceProfile::rtx2070());
+        let mk = |threads| {
+            crate::env::EnvPool::new(
+                &g,
+                standard_library(),
+                &cost,
+                &crate::env::EnvPoolConfig {
+                    n_envs: 3,
+                    threads,
+                    seed: 21,
+                    env: EnvConfig { max_steps: 5, ..Default::default() },
+                    ..Default::default()
+                },
+            )
+        };
+        let encoder = StateEncoder::new(320, 32);
+        let eps = collect_random_pool(&mut mk(2), &encoder, 49, 7, 0.1);
+        assert_eq!(eps.len(), 7);
+        assert!(eps.iter().all(|e| !e.is_empty()));
+        // Thread-count invariance of the collected set.
+        let eps1 = collect_random_pool(&mut mk(1), &encoder, 49, 7, 0.1);
+        assert_eq!(eps.len(), eps1.len());
+        for (a, b) in eps.iter().zip(&eps1) {
+            assert_eq!(a.actions, b.actions);
+            assert_eq!(a.rewards, b.rewards);
         }
     }
 

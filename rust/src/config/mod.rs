@@ -18,6 +18,9 @@ pub struct RunConfig {
     /// Multiplicative measurement-noise std (0 disables).
     pub cost_noise: f64,
     pub env: EnvConfig,
+    /// Batched environments per rollout/eval pass (`EnvPool` width B;
+    /// CLI `--envs B`).
+    pub envs: usize,
     /// Random-rollout collection.
     pub collect_episodes: usize,
     pub collect_noop_prob: f32,
@@ -48,6 +51,7 @@ impl Default for RunConfig {
             device: DeviceProfile::rtx2070(),
             cost_noise: 0.0,
             env: EnvConfig::default(),
+            envs: 4,
             collect_episodes: 48,
             collect_noop_prob: 0.05,
             collect_workers: 4,
@@ -70,6 +74,7 @@ impl RunConfig {
     /// A drastically reduced profile for smoke tests and CI.
     pub fn smoke() -> Self {
         Self {
+            envs: 2,
             collect_episodes: 6,
             collect_workers: 2,
             ae_steps: 4,
@@ -111,6 +116,7 @@ impl RunConfig {
                 "max_steps" => self.env.max_steps = value.as_usize()?,
                 "reward" => self.env.reward = RewardKind::preset(value.as_str()?)?,
                 "invalid_penalty" => self.env.invalid_penalty = value.as_f64()? as f32,
+                "envs" => self.envs = value.as_usize()?,
                 "collect_episodes" => self.collect_episodes = value.as_usize()?,
                 "collect_noop_prob" => self.collect_noop_prob = value.as_f64()? as f32,
                 "collect_workers" => self.collect_workers = value.as_usize()?,
@@ -187,6 +193,8 @@ mod tests {
         assert_eq!(cfg.graph, "resnet18");
         cfg.apply_override("eval_greedy=true").unwrap();
         assert!(cfg.eval_greedy);
+        cfg.apply_override("envs=8").unwrap();
+        assert_eq!(cfg.envs, 8);
         assert!(cfg.apply_override("nonsense").is_err());
     }
 }

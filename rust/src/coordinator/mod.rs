@@ -24,10 +24,13 @@ pub fn worker_seeds(root: u64, n: usize) -> Vec<u64> {
     (0..n).map(|i| rng.fork(i as u64).next_u64()).collect()
 }
 
-/// Collect random episodes from several identical environments in
-/// parallel (std::thread; each worker owns its own rule set + cost model —
-/// the PJRT engine is never touched here, so collection scales across
-/// cores while encoding stays on the engine thread).
+/// Collect random episodes from a batch of `n_envs` identical
+/// environments driven through [`crate::env::EnvPool`] on `n_workers`
+/// scoped threads (the PJRT engine is never touched here, so collection
+/// scales across cores while encoding stays on the engine thread). All
+/// environments share one read-only cost-cache snapshot; the episode set
+/// is bit-identical for any worker count given a fixed seed.
+#[allow(clippy::too_many_arguments)]
 pub fn collect_random_parallel(
     graph: &crate::graph::Graph,
     env_cfg: &crate::env::EnvConfig,
@@ -36,41 +39,26 @@ pub fn collect_random_parallel(
     n_slots: usize,
     n_episodes: usize,
     noop_prob: f32,
+    n_envs: usize,
     n_workers: usize,
     seed: u64,
 ) -> Vec<crate::agent::Episode> {
-    let n_workers = n_workers.max(1);
-    let seeds = worker_seeds(seed, n_workers);
-    let per_worker = n_episodes.div_ceil(n_workers);
-    let mut all = Vec::with_capacity(n_episodes);
-    std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        for w in 0..n_workers {
-            let g = graph.clone();
-            let cfg = env_cfg.clone();
-            let wseed = seeds[w];
-            handles.push(scope.spawn(move || {
-                let rules = crate::xfer::library::standard_library();
-                let cost = crate::cost::CostModel::new(device);
-                let mut env = crate::env::Env::new(g, &rules, &cost, cfg);
-                let encoder = crate::env::StateEncoder::new(encoder_dims.0, encoder_dims.1);
-                let mut rng = Rng::new(wseed);
-                crate::agent::collect_random_episodes(
-                    &mut env,
-                    &encoder,
-                    n_slots,
-                    per_worker,
-                    noop_prob,
-                    &mut rng,
-                )
-            }));
-        }
-        for h in handles {
-            all.extend(h.join().expect("collection worker panicked"));
-        }
-    });
-    all.truncate(n_episodes);
-    all
+    let rules = crate::xfer::library::standard_library();
+    let base_cost = crate::cost::CostModel::new(device);
+    let mut pool = crate::env::EnvPool::new(
+        graph,
+        rules,
+        &base_cost,
+        &crate::env::EnvPoolConfig {
+            n_envs: n_envs.max(1).min(n_episodes.max(1)),
+            env: env_cfg.clone(),
+            threads: n_workers,
+            seed,
+            noise_std: 0.0,
+        },
+    );
+    let encoder = crate::env::StateEncoder::new(encoder_dims.0, encoder_dims.1);
+    crate::agent::collect_random_pool(&mut pool, &encoder, n_slots, n_episodes, noop_prob)
 }
 
 #[cfg(test)]
@@ -95,6 +83,7 @@ mod tests {
             49,
             6,
             0.1,
+            3,
             3,
             42,
         );

@@ -10,7 +10,7 @@ use xla::Literal;
 use crate::agent::{
     act_batch, gae, Episode, PolicyDims, PpoBuffer, PpoCfg, PpoStats,
 };
-use crate::env::{Env, StateEncoder};
+use crate::env::{Env, EnvPool, StateEncoder};
 use crate::graph::Graph;
 use crate::runtime::{lit_f32, lit_scalar_f32, scalar_f32, to_vec_f32, Engine, ParamStore};
 use crate::util::Rng;
@@ -324,11 +324,11 @@ impl<'e> Pipeline<'e> {
         let mut h = vec![0.0f32; self.dims.rdim];
         let mut c = vec![0.0f32; self.dims.rdim];
         let mut best = env.improvement_pct();
-        let mut best_graph = env.graph.clone();
+        let mut best_graph = env.graph().clone();
         let mut step_times = Vec::new();
         loop {
             let t0 = Instant::now();
-            let z = self.encode_state(gnn, &env.graph)?;
+            let z = self.encode_state(gnn, env.graph())?;
             let xmask = env.padded_xfer_mask(self.dims.x1);
             let acts = act_batch(
                 self.engine,
@@ -362,7 +362,7 @@ impl<'e> Pipeline<'e> {
             step_times.push(t0.elapsed().as_secs_f64());
             if env.improvement_pct() > best {
                 best = env.improvement_pct();
-                best_graph = env.graph.clone();
+                best_graph = env.graph().clone();
             }
             if res.done {
                 break;
@@ -372,10 +372,129 @@ impl<'e> Pipeline<'e> {
             best_improvement_pct: best,
             final_improvement_pct: env.improvement_pct(),
             steps: env.steps_taken(),
-            history: env.history.clone(),
+            history: env.history().to_vec(),
             mean_step_s: step_times.iter().sum::<f64>() / step_times.len().max(1) as f64,
             best_graph: Some(best_graph),
         })
+    }
+
+    /// [`Pipeline::eval_real`] over a whole [`EnvPool`]: B independent
+    /// evaluation episodes advance together, one batched `step_where` per
+    /// pass. Policy/world-model artifact calls stay on the engine thread
+    /// (the PJRT engine is not shared across threads); the environment
+    /// work — matching and costing — fans out across the pool's workers.
+    /// Each env gets its own forked RNG, so results don't depend on when
+    /// other rows terminate, nor on the pool's thread count.
+    pub fn eval_real_pool(
+        &self,
+        gnn: &ParamStore,
+        ctrl: &ParamStore,
+        wm: Option<&ParamStore>,
+        pool: &mut EnvPool,
+        greedy: bool,
+        rng: &mut Rng,
+    ) -> anyhow::Result<Vec<EvalResult>> {
+        pool.reset_all();
+        let b = pool.n_envs();
+        let noop_env = pool.rules().len();
+        let mut rngs: Vec<Rng> = (0..b).map(|i| rng.fork(i as u64)).collect();
+        let mut h = vec![vec![0.0f32; self.dims.rdim]; b];
+        let mut c = vec![vec![0.0f32; self.dims.rdim]; b];
+        let mut done = vec![false; b];
+        let mut best: Vec<f64> = (0..b).map(|i| pool.state(i).improvement_pct()).collect();
+        let mut best_graph: Vec<Graph> = (0..b).map(|i| pool.state(i).graph().clone()).collect();
+        let mut step_secs = vec![0.0f64; b];
+        while done.iter().any(|d| !d) {
+            let t0 = Instant::now();
+            // Per-row policy on the engine thread.
+            let mut slot_actions: Vec<Option<(usize, usize)>> = vec![None; b];
+            let mut zs: Vec<Vec<f32>> = vec![Vec::new(); b];
+            for i in 0..b {
+                if done[i] {
+                    continue;
+                }
+                let state = pool.state(i);
+                let z = self.encode_state(gnn, state.graph())?;
+                let xmask = state.padded_xfer_mask(self.dims.x1);
+                let acts = act_batch(
+                    self.engine,
+                    "ctrl_policy_1",
+                    &self.dims,
+                    ctrl,
+                    &z,
+                    &h[i],
+                    &xmask,
+                    |_, x| state.location_mask(x),
+                    &mut rngs[i],
+                    greedy,
+                )?;
+                slot_actions[i] = Some(acts[0].action);
+                zs[i] = z;
+            }
+            // One batched environment pass.
+            let env_actions: Vec<Option<(usize, usize)>> = slot_actions
+                .iter()
+                .map(|a| {
+                    a.map(|a| if a.0 == self.dims.noop() { (noop_env, 0) } else { a })
+                })
+                .collect();
+            let results = pool.step_where(&env_actions);
+            // Advance the recurrent world-model context for stepped rows
+            // *inside* the timed pass, so mean_step_s stays comparable to
+            // the single-env eval_real (which also times wm_step_1).
+            if let Some(wm_store) = wm {
+                for i in 0..b {
+                    if results[i].is_none() {
+                        continue;
+                    }
+                    let action = slot_actions[i].expect("stepped row had an action");
+                    let theta = self.engine.device_theta(wm_store)?;
+                    let out = self.engine.exec_with_theta(
+                        "wm_step_1",
+                        &theta,
+                        &[
+                            lit_f32(&zs[i], &[1, self.dims.zdim])?,
+                            crate::runtime::lit_i32(
+                                &[action.0 as i32, action.1 as i32],
+                                &[1, 2],
+                            )?,
+                            lit_f32(&h[i], &[1, self.dims.rdim])?,
+                            lit_f32(&c[i], &[1, self.dims.rdim])?,
+                        ],
+                    )?;
+                    h[i] = to_vec_f32(&out[6])?;
+                    c[i] = to_vec_f32(&out[7])?;
+                }
+            }
+            let alive = results.iter().filter(|r| r.is_some()).count().max(1);
+            let pass_s = t0.elapsed().as_secs_f64();
+            for i in 0..b {
+                let Some(res) = &results[i] else { continue };
+                step_secs[i] += pass_s / alive as f64;
+                let impr = pool.state(i).improvement_pct();
+                if impr > best[i] {
+                    best[i] = impr;
+                    best_graph[i] = pool.state(i).graph().clone();
+                }
+                if res.done {
+                    done[i] = true;
+                }
+            }
+        }
+        Ok((0..b)
+            .zip(best_graph)
+            .map(|(i, bg)| {
+                let state = pool.state(i);
+                EvalResult {
+                    best_improvement_pct: best[i],
+                    final_improvement_pct: state.improvement_pct(),
+                    steps: state.steps_taken(),
+                    history: state.history().to_vec(),
+                    mean_step_s: step_secs[i] / state.steps_taken().max(1) as f64,
+                    best_graph: Some(bg),
+                }
+            })
+            .collect())
     }
 
     // ------------------------------------------------------------------
@@ -400,7 +519,7 @@ impl<'e> Pipeline<'e> {
             env.reset();
             let mut traj = PpoRowTraj::default();
             loop {
-                let z = self.encode_state(gnn, &env.graph)?;
+                let z = self.encode_state(gnn, env.graph())?;
                 let xmask = env.padded_xfer_mask(self.dims.x1);
                 let acts = act_batch(
                     self.engine,

@@ -1,0 +1,125 @@
+//! Incremental match maintenance for the environment step loop.
+//!
+//! The seed environment re-ran every `Rule::find` over the whole graph
+//! after each applied substitution — O(rules × graph) per step, the
+//! dominant cost of an RL rollout (X-RLflow makes the same observation).
+//! [`MatchCache`] instead keeps the per-rule match lists and, after a
+//! rewrite, consults the [`DirtyRegion`] of the [`ApplyReport`]:
+//!
+//!  * a cached location containing a dirty node may have died — the rule
+//!    is re-found;
+//!  * a *new* match must contain a live node whose local state the rewrite
+//!    changed, so a rule is re-found when some live dirty node satisfies
+//!    its [`Rule::op_relevant`] fingerprint;
+//!  * every other rule's list is provably byte-identical to what a full
+//!    refresh would produce (match validity and enumeration order are
+//!    functions of per-node local state, which is unchanged outside the
+//!    dirty region) and is kept as-is.
+//!
+//! Re-found rules run their ordinary full `find`, so the maintained lists
+//! equal the full-refresh reference *exactly*, ordering included — pinned
+//! by `tests/env_incremental.rs` over seeded random walks on the zoo.
+//!
+//! [`ApplyReport`]: crate::xfer::ApplyReport
+
+use crate::graph::Graph;
+use crate::xfer::{DirtyRegion, Location, RuleSet};
+
+/// Counters for the maintenance decisions (exposed for benches/tests).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MatchStats {
+    /// Rules whose `find` was re-run after a rewrite.
+    pub refinds: u64,
+    /// Rules whose cached list was provably unchanged and kept.
+    pub keeps: u64,
+}
+
+/// Per-rule match lists maintained incrementally. Lists are stored *full*
+/// (untruncated); observation masks cap them at `max_locs` so truncation
+/// never loses matches across invalidations.
+#[derive(Clone, Default)]
+pub struct MatchCache {
+    lists: Vec<Vec<Location>>,
+    stats: MatchStats,
+}
+
+impl MatchCache {
+    /// Full refresh: run every rule's `find` from scratch (construction,
+    /// reset, and the `_reference` oracle path).
+    pub fn full(rules: &RuleSet, g: &Graph) -> Self {
+        let mut cache = Self::default();
+        cache.refresh_full(rules, g);
+        cache
+    }
+
+    /// Re-derive every list from scratch.
+    pub fn refresh_full(&mut self, rules: &RuleSet, g: &Graph) {
+        self.lists = rules.rules.iter().map(|r| r.find(g)).collect();
+    }
+
+    /// Patch the lists after one applied substitution: re-find exactly the
+    /// rules whose patterns can intersect the dirty region, keep the rest.
+    pub fn refresh(&mut self, rules: &RuleSet, after: &Graph, dirty: &DirtyRegion) {
+        debug_assert_eq!(self.lists.len(), rules.len(), "cache/rule-set mismatch");
+        for (list, rule) in self.lists.iter_mut().zip(rules.rules.iter()) {
+            let gains = dirty.any_live(after, |op| rule.op_relevant(op));
+            let losses =
+                || list.iter().any(|loc| loc.iter().any(|&id| dirty.contains(id)));
+            if gains || losses() {
+                *list = rule.find(after);
+                self.stats.refinds += 1;
+            } else {
+                self.stats.keeps += 1;
+            }
+        }
+    }
+
+    pub fn lists(&self) -> &[Vec<Location>] {
+        &self.lists
+    }
+
+    pub fn stats(&self) -> MatchStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Activation, GraphBuilder, OpKind, PadMode};
+    use crate::xfer::library::standard_library;
+    use crate::xfer::apply_rule;
+
+    /// Mixed conv + linear graph so some rule families are provably far
+    /// from any conv-side rewrite.
+    fn mixed_graph() -> Graph {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 3, 8, 8]);
+        let c = b.conv(x, 4, 3, 1, PadMode::Same).unwrap();
+        let _ = b.relu(c).unwrap();
+        let y = b.input(&[2, 8]);
+        let l = b.linear(y, 8, Activation::None).unwrap();
+        let _ = b.op(OpKind::Tanh, &[l]).unwrap();
+        b.finish()
+    }
+
+    #[test]
+    fn refresh_equals_full_after_one_application() {
+        let rules = standard_library();
+        let g = mixed_graph();
+        let mut cache = MatchCache::full(&rules, &g);
+        let fuse = rules.index_of("fuse_conv_relu").unwrap();
+        let loc = cache.lists()[fuse][0].clone();
+        let mut g2 = g.clone();
+        let report = apply_rule(&mut g2, rules.get(fuse).unwrap(), &loc).unwrap();
+        let dirty = report.dirty_region(&g, &g2);
+        cache.refresh(&rules, &g2, &dirty);
+        let oracle = MatchCache::full(&rules, &g2);
+        assert_eq!(cache.lists(), oracle.lists());
+        // And the conv-side rewrite must not have re-found every rule:
+        // e.g. the scale/reshape families cannot intersect the region.
+        let stats = cache.stats();
+        assert!(stats.keeps > 0, "no rule skipped: {stats:?}");
+        assert!(stats.refinds > 0, "fusion must invalidate the conv rules");
+    }
+}

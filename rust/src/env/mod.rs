@@ -6,14 +6,31 @@
 //! xfer_mask)`: a tensorised graph encoding for the GNN plus validity masks
 //! for both action heads. `xfer_id == N_XFERS` is the NO-OP action that
 //! terminates the episode (§3.1.3).
+//!
+//! The step loop is *incremental*: per-rule match lists are maintained in
+//! place against the [`DirtyRegion`] of each applied substitution
+//! ([`incremental::MatchCache`]) and the §3.1.4 reward is driven by
+//! [`CostModel::delta_cost_fast`] off the same [`ApplyReport`] — one step
+//! costs O(touched region), not O(graph). Setting
+//! [`EnvConfig::full_refresh`] restores the original re-match-everything /
+//! re-cost-everything behaviour as the `_reference` oracle the property
+//! tests pin the incremental path against (bit-identical observations and
+//! histories; rewards to 1e-9).
+//!
+//! [`ApplyReport`]: crate::xfer::ApplyReport
+//! [`DirtyRegion`]: crate::xfer::DirtyRegion
 
+pub mod incremental;
+pub mod pool;
 pub mod reward;
 pub mod state;
 
+pub use incremental::{MatchCache, MatchStats};
+pub use pool::{EnvPool, EnvPoolConfig};
 pub use reward::RewardKind;
 pub use state::{EncodedGraph, StateEncoder};
 
-use crate::cost::CostModel;
+use crate::cost::{CostModel, GraphCost};
 use crate::graph::Graph;
 use crate::xfer::{apply_rule, Location, RuleSet};
 
@@ -26,11 +43,20 @@ pub struct EnvConfig {
     pub reward: RewardKind,
     /// Per-xfer location limit (paper: 200).
     pub max_locs: usize,
+    /// Disable incremental match/cost maintenance and re-derive everything
+    /// from scratch each step — the `_reference` oracle for tests/benches.
+    pub full_refresh: bool,
 }
 
 impl Default for EnvConfig {
     fn default() -> Self {
-        Self { max_steps: 60, invalid_penalty: -100.0, reward: RewardKind::Combined { alpha: 0.8, beta: 0.2 }, max_locs: 200 }
+        Self {
+            max_steps: 60,
+            invalid_penalty: -100.0,
+            reward: RewardKind::Combined { alpha: 0.8, beta: 0.2 },
+            max_locs: 200,
+            full_refresh: false,
+        }
     }
 }
 
@@ -39,7 +65,7 @@ impl Default for EnvConfig {
 pub struct Observation {
     /// Valid transformations, length `n_xfers + 1` (NO-OP always valid).
     pub xfer_mask: Vec<bool>,
-    /// Number of valid locations per xfer.
+    /// Number of valid locations per xfer (capped at `max_locs`).
     pub location_counts: Vec<usize>,
 }
 
@@ -60,98 +86,59 @@ pub struct StepResult {
     pub info: StepInfo,
 }
 
-pub struct Env<'a> {
-    pub rules: &'a RuleSet,
-    pub cost: &'a CostModel,
-    pub cfg: EnvConfig,
+/// The owned, `Send` half of an environment: everything that mutates
+/// during an episode. [`Env`] borrows the shared rule set and cost model
+/// around it; [`EnvPool`] moves `EnvState`s across its worker threads
+/// while sharing one `RuleSet` and giving each state its own `CostModel`.
+#[derive(Clone, Default)]
+pub struct EnvState {
+    cfg: EnvConfig,
     initial: Graph,
-    pub graph: Graph,
-    /// Per-rule match lists for the current graph (truncated to max_locs).
-    locations: Vec<Vec<Location>>,
+    graph: Graph,
+    /// Per-rule match lists for the current graph (full; observation masks
+    /// truncate to `cfg.max_locs`).
+    cache: MatchCache,
     steps: usize,
     rt_initial: f64,
     rt_prev: f64,
     mem_initial: f64,
     mem_prev: f64,
     /// Applied (xfer, location) history for the Fig. 10 heatmap.
-    pub history: Vec<(usize, usize)>,
+    history: Vec<(usize, usize)>,
+    /// Hot-field cost of `graph`, maintained incrementally.
+    last_cost: GraphCost,
+    initial_cost: GraphCost,
 }
 
-impl<'a> Env<'a> {
-    pub fn new(graph: Graph, rules: &'a RuleSet, cost: &'a CostModel, cfg: EnvConfig) -> Self {
+impl EnvState {
+    pub fn new(graph: Graph, rules: &RuleSet, cost: &CostModel, cfg: EnvConfig) -> Self {
         let gc = cost.graph_cost_fast(&graph);
-        let mut env = Self {
-            rules,
-            cost,
+        Self {
             cfg,
             initial: graph.clone(),
+            cache: MatchCache::full(rules, &graph),
             graph,
-            locations: Vec::new(),
             steps: 0,
             rt_initial: gc.runtime_ms,
             rt_prev: gc.runtime_ms,
             mem_initial: gc.mem_bytes,
             mem_prev: gc.mem_bytes,
             history: Vec::new(),
-        };
-        env.refresh_locations();
-        env
-    }
-
-    /// NO-OP action id (== number of xfer slots).
-    pub fn noop_action(&self) -> usize {
-        self.rules.len()
-    }
-
-    pub fn reset(&mut self) {
-        self.graph = self.initial.clone();
-        self.steps = 0;
-        self.rt_prev = self.rt_initial;
-        self.mem_prev = self.mem_initial;
-        self.history.clear();
-        self.refresh_locations();
-    }
-
-    fn refresh_locations(&mut self) {
-        self.locations = self
-            .rules
-            .rules
-            .iter()
-            .map(|r| {
-                let mut locs = r.find(&self.graph);
-                locs.truncate(self.cfg.max_locs);
-                locs
-            })
-            .collect();
-    }
-
-    pub fn observe(&self) -> Observation {
-        let mut xfer_mask: Vec<bool> = self.locations.iter().map(|l| !l.is_empty()).collect();
-        xfer_mask.push(true); // NO-OP
-        Observation {
-            xfer_mask,
-            location_counts: self.locations.iter().map(|l| l.len()).collect(),
+            last_cost: gc,
+            initial_cost: gc,
         }
     }
 
-    /// Xfer mask padded into a fixed `slots`-wide action space: rules at
-    /// their slot index, NO-OP at the *last* slot, dead slots invalid.
-    /// (The AOT artifacts reserve N_XFERS slots; the library may be smaller.)
-    pub fn padded_xfer_mask(&self, slots: usize) -> Vec<f32> {
-        let mut m = vec![0.0f32; slots];
-        for (i, locs) in self.locations.iter().enumerate() {
-            if i < slots - 1 && !locs.is_empty() {
-                m[i] = 1.0;
-            }
-        }
-        m[slots - 1] = 1.0; // NO-OP
-        m
+    pub fn graph(&self) -> &Graph {
+        &self.graph
     }
 
-    /// Location-validity mask (length max_locs) for one xfer.
-    pub fn location_mask(&self, xfer: usize) -> Vec<bool> {
-        let n = self.locations.get(xfer).map_or(0, |l| l.len());
-        (0..self.cfg.max_locs).map(|i| i < n).collect()
+    pub fn history(&self) -> &[(usize, usize)] {
+        &self.history
+    }
+
+    pub fn steps_taken(&self) -> usize {
+        self.steps
     }
 
     pub fn runtime_ms(&self) -> f64 {
@@ -167,69 +154,226 @@ impl<'a> Env<'a> {
         100.0 * (self.rt_initial - self.rt_prev) / self.rt_initial
     }
 
+    /// Match-maintenance counters (re-finds vs kept lists).
+    pub fn match_stats(&self) -> MatchStats {
+        self.cache.stats()
+    }
+
+    pub fn observe(&self) -> Observation {
+        let lists = self.cache.lists();
+        let mut xfer_mask: Vec<bool> = lists.iter().map(|l| !l.is_empty()).collect();
+        xfer_mask.push(true); // NO-OP
+        Observation {
+            xfer_mask,
+            location_counts: lists.iter().map(|l| l.len().min(self.cfg.max_locs)).collect(),
+        }
+    }
+
+    /// Xfer mask padded into a fixed `slots`-wide action space: rules at
+    /// their slot index, NO-OP at the *last* slot, dead slots invalid.
+    /// (The AOT artifacts reserve N_XFERS slots; the library may be
+    /// smaller.) A library *larger* than the slot space cannot be
+    /// expressed — the overflow is saturated away explicitly, and debug
+    /// builds assert on the misconfiguration instead of silently dropping
+    /// valid rules.
+    pub fn padded_xfer_mask(&self, slots: usize) -> Vec<f32> {
+        let n_rules = self.cache.lists().len();
+        debug_assert!(
+            n_rules < slots,
+            "xfer slot space ({slots}) cannot hold {n_rules} rules + NO-OP"
+        );
+        let mut m = vec![0.0f32; slots];
+        let expressible = n_rules.min(slots.saturating_sub(1));
+        for (i, locs) in self.cache.lists()[..expressible].iter().enumerate() {
+            if !locs.is_empty() {
+                m[i] = 1.0;
+            }
+        }
+        m[slots - 1] = 1.0; // NO-OP
+        m
+    }
+
+    /// Location-validity mask (length max_locs) for one xfer.
+    pub fn location_mask(&self, xfer: usize) -> Vec<bool> {
+        let n = self
+            .cache
+            .lists()
+            .get(xfer)
+            .map_or(0, |l| l.len().min(self.cfg.max_locs));
+        (0..self.cfg.max_locs).map(|i| i < n).collect()
+    }
+}
+
+pub struct Env<'a> {
+    pub rules: &'a RuleSet,
+    pub cost: &'a CostModel,
+    state: EnvState,
+}
+
+impl<'a> Env<'a> {
+    pub fn new(graph: Graph, rules: &'a RuleSet, cost: &'a CostModel, cfg: EnvConfig) -> Self {
+        Self { rules, cost, state: EnvState::new(graph, rules, cost, cfg) }
+    }
+
+    /// Rehydrate an environment around a state produced by
+    /// [`Env::into_state`] — no matching or costing is redone. The state
+    /// must have been built against the same rule set (slot indices are
+    /// positional).
+    pub fn from_state(rules: &'a RuleSet, cost: &'a CostModel, state: EnvState) -> Self {
+        debug_assert_eq!(state.cache.lists().len(), rules.len(), "state/rule-set mismatch");
+        Self { rules, cost, state }
+    }
+
+    /// Surrender the owned state (for [`EnvPool`] worker hand-off).
+    pub fn into_state(self) -> EnvState {
+        self.state
+    }
+
+    pub fn state(&self) -> &EnvState {
+        &self.state
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.state.graph
+    }
+
+    pub fn history(&self) -> &[(usize, usize)] {
+        &self.state.history
+    }
+
+    /// NO-OP action id (== number of xfer slots).
+    pub fn noop_action(&self) -> usize {
+        self.rules.len()
+    }
+
+    pub fn reset(&mut self) {
+        let s = &mut self.state;
+        s.graph = s.initial.clone();
+        s.steps = 0;
+        s.rt_prev = s.rt_initial;
+        s.mem_prev = s.mem_initial;
+        s.history.clear();
+        s.last_cost = s.initial_cost;
+        s.cache.refresh_full(self.rules, &s.graph);
+    }
+
+    /// The incremental per-rule match lists.
+    pub fn match_lists(&self) -> &[Vec<Location>] {
+        self.state.cache.lists()
+    }
+
+    /// Fresh full-refresh match lists — the `_reference` oracle the
+    /// incremental maintenance is property-tested against.
+    pub fn match_lists_reference(&self) -> Vec<Vec<Location>> {
+        self.rules.rules.iter().map(|r| r.find(&self.state.graph)).collect()
+    }
+
+    pub fn observe(&self) -> Observation {
+        self.state.observe()
+    }
+
+    pub fn padded_xfer_mask(&self, slots: usize) -> Vec<f32> {
+        self.state.padded_xfer_mask(slots)
+    }
+
+    pub fn location_mask(&self, xfer: usize) -> Vec<bool> {
+        self.state.location_mask(xfer)
+    }
+
+    pub fn runtime_ms(&self) -> f64 {
+        self.state.rt_prev
+    }
+
+    pub fn initial_runtime_ms(&self) -> f64 {
+        self.state.rt_initial
+    }
+
+    /// Relative runtime improvement so far, in percent.
+    pub fn improvement_pct(&self) -> f64 {
+        self.state.improvement_pct()
+    }
+
     pub fn steps_taken(&self) -> usize {
-        self.steps
+        self.state.steps
     }
 
     /// The paper's `step(action)`.
     pub fn step(&mut self, action: (usize, usize)) -> StepResult {
         let (xfer, loc) = action;
-        self.steps += 1;
-        let cap_hit = self.steps >= self.cfg.max_steps;
+        self.state.steps += 1;
+        let cap_hit = self.state.steps >= self.state.cfg.max_steps;
 
         // NO-OP terminates (§3.1.3).
         if xfer == self.noop_action() {
-            return StepResult {
-                reward: 0.0,
-                done: true,
-                info: self.info(None, true),
-            };
+            return StepResult { reward: 0.0, done: true, info: self.info(None, true) };
         }
 
-        let valid = xfer < self.rules.len() && loc < self.locations[xfer].len();
+        let avail = self
+            .state
+            .cache
+            .lists()
+            .get(xfer)
+            .map_or(0, |l| l.len().min(self.state.cfg.max_locs));
+        let valid = xfer < self.rules.len() && loc < avail;
         if !valid {
             return StepResult {
-                reward: self.cfg.invalid_penalty,
+                reward: self.state.cfg.invalid_penalty,
                 done: cap_hit,
                 info: self.info(None, false),
             };
         }
 
         let rule = self.rules.get(xfer).unwrap();
-        let location = self.locations[xfer][loc].clone();
-        let mut next = self.graph.clone();
+        let location = self.state.cache.lists()[xfer][loc].clone();
+        let mut next = self.state.graph.clone();
         match apply_rule(&mut next, rule, &location) {
-            Ok(_) => {
-                let gc = self.cost.graph_cost_fast(&next);
-                let reward = self.cfg.reward.compute(
-                    self.rt_initial,
-                    self.rt_prev,
+            Ok(report) => {
+                // Incremental reward costing: re-cost only what the rule
+                // touched, off the cached parent cost. (Under measurement
+                // noise both paths fall back to one full recompute, so the
+                // oracle and the incremental env stay bit-identical there
+                // too.)
+                let gc = if self.state.cfg.full_refresh {
+                    self.cost.graph_cost_fast(&next)
+                } else {
+                    self.cost.delta_cost_fast(&self.state.graph, &self.state.last_cost, &next, &report)
+                };
+                let reward = self.state.cfg.reward.compute(
+                    self.state.rt_initial,
+                    self.state.rt_prev,
                     gc.runtime_ms,
-                    self.mem_initial,
-                    self.mem_prev,
+                    self.state.mem_initial,
+                    self.state.mem_prev,
                     gc.mem_bytes,
                 );
-                self.graph = next;
-                self.rt_prev = gc.runtime_ms;
-                self.mem_prev = gc.mem_bytes;
-                self.history.push((xfer, loc));
-                self.refresh_locations();
-                StepResult {
-                    reward,
-                    done: cap_hit,
-                    info: self.info(Some(rule.name()), true),
+                if self.state.cfg.full_refresh {
+                    self.state.graph = next;
+                    self.state.cache.refresh_full(self.rules, &self.state.graph);
+                } else {
+                    // Incremental match maintenance: drop/re-find only the
+                    // rules whose patterns can intersect the dirty region.
+                    let dirty = report.dirty_region(&self.state.graph, &next);
+                    self.state.graph = next;
+                    self.state.cache.refresh(self.rules, &self.state.graph, &dirty);
                 }
+                self.state.rt_prev = gc.runtime_ms;
+                self.state.mem_prev = gc.mem_bytes;
+                self.state.last_cost = gc;
+                self.state.history.push((xfer, loc));
+                StepResult { reward, done: cap_hit, info: self.info(Some(rule.name()), true) }
             }
             Err(_) => StepResult {
-                reward: self.cfg.invalid_penalty,
+                reward: self.state.cfg.invalid_penalty,
                 done: cap_hit,
                 info: self.info(None, false),
             },
         }
     }
 
+    /// Step info off the cached cost of the current graph — invalid and
+    /// NO-OP steps never trigger a recompute (the graph did not change).
     fn info(&self, rule_name: Option<&'static str>, valid: bool) -> StepInfo {
-        let gc = self.cost.graph_cost_fast(&self.graph);
+        let gc = &self.state.last_cost;
         StepInfo {
             rule_name,
             runtime_ms: gc.runtime_ms,
@@ -281,6 +425,19 @@ mod tests {
     }
 
     #[test]
+    fn invalid_and_noop_steps_reuse_cached_cost() {
+        // Satellite fix: info() must come from the cached GraphCost, and
+        // non-applying steps must not change it.
+        let (rules, cost) = setup();
+        let mut env = Env::new(tiny_graph(), &rules, &cost, EnvConfig::default());
+        let before = env.step((0, 199)).info;
+        let again = env.step((0, 199)).info;
+        assert_eq!(before.runtime_ms.to_bits(), again.runtime_ms.to_bits());
+        assert_eq!(before.launches, again.launches);
+        assert_eq!(before.runtime_ms.to_bits(), env.runtime_ms().to_bits());
+    }
+
+    #[test]
     fn valid_fusion_gives_positive_reward() {
         let (rules, cost) = setup();
         let mut env = Env::new(tiny_graph(), &rules, &cost, EnvConfig::default());
@@ -312,7 +469,8 @@ mod tests {
         env.reset();
         assert!(env.runtime_ms() > rt_after);
         assert_eq!(env.steps_taken(), 0);
-        assert!(env.history.is_empty());
+        assert!(env.history().is_empty());
+        assert_eq!(env.match_lists(), env.match_lists_reference());
     }
 
     #[test]
@@ -343,6 +501,71 @@ mod tests {
     }
 
     #[test]
+    fn padded_mask_places_rules_and_noop() {
+        // Satellite fix: exact-fit slot space (rules + NO-OP) keeps every
+        // rule expressible, with the NO-OP pinned to the last slot.
+        let (rules, cost) = setup();
+        let env = Env::new(tiny_graph(), &rules, &cost, EnvConfig::default());
+        let slots = rules.len() + 1;
+        let m = env.padded_xfer_mask(slots);
+        assert_eq!(m.len(), slots);
+        assert_eq!(m[slots - 1], 1.0);
+        let obs = env.observe();
+        for i in 0..rules.len() {
+            assert_eq!(m[i] >= 0.5, obs.xfer_mask[i], "slot {i} mask drifted");
+        }
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "cannot hold")]
+    fn padded_mask_overflow_asserts_in_debug() {
+        let (rules, cost) = setup();
+        let env = Env::new(tiny_graph(), &rules, &cost, EnvConfig::default());
+        // Slot space smaller than the library: rules would be silently
+        // inexpressible — debug builds must flag it.
+        let _ = env.padded_xfer_mask(rules.len());
+    }
+
+    #[test]
+    fn incremental_walk_matches_reference_oracle() {
+        // Lockstep random walk: the incremental env and the full-refresh
+        // reference must agree on observations, histories (bitwise) and
+        // rewards/runtimes (1e-9). The heavyweight zoo-wide version lives
+        // in tests/env_incremental.rs.
+        let (rules, cost) = setup();
+        let g = crate::zoo::squeezenet1_1();
+        let mut inc = Env::new(g.clone(), &rules, &cost, EnvConfig::default());
+        let mut reference =
+            Env::new(g, &rules, &cost, EnvConfig { full_refresh: true, ..Default::default() });
+        let mut rng = crate::util::Rng::new(0xE7E7);
+        for _ in 0..8 {
+            let obs = reference.observe();
+            let inc_obs = inc.observe();
+            assert_eq!(obs.xfer_mask, inc_obs.xfer_mask);
+            assert_eq!(obs.location_counts, inc_obs.location_counts);
+            assert_eq!(inc.match_lists(), inc.match_lists_reference());
+            let valid: Vec<usize> = (0..rules.len()).filter(|&i| obs.xfer_mask[i]).collect();
+            if valid.is_empty() {
+                break;
+            }
+            let x = valid[rng.below(valid.len())];
+            let l = rng.below(obs.location_counts[x]);
+            let r_ref = reference.step((x, l));
+            let r_inc = inc.step((x, l));
+            assert_eq!(r_ref.done, r_inc.done);
+            assert!((r_ref.reward - r_inc.reward).abs() < 1e-6);
+            assert!((reference.runtime_ms() - inc.runtime_ms()).abs() < 1e-9);
+            if r_ref.done {
+                break;
+            }
+        }
+        assert_eq!(reference.history(), inc.history());
+        let stats = inc.state().match_stats();
+        assert!(stats.keeps > 0, "incremental env never skipped a re-find");
+    }
+
+    #[test]
     fn bert_episode_random_walk_improves_or_neutral() {
         let (rules, cost) = setup();
         let mut env = Env::new(crate::zoo::bert_base(), &rules, &cost, EnvConfig::default());
@@ -355,6 +578,6 @@ mod tests {
             let res = env.step((x, l));
             assert!(res.info.valid);
         }
-        assert_eq!(env.history.len(), 5);
+        assert_eq!(env.history().len(), 5);
     }
 }

@@ -1,0 +1,319 @@
+//! Vectorised environment pool: B environments stepped in one batched
+//! call across scoped worker threads.
+//!
+//! Layout follows the crate's worker-owns-its-model idiom
+//! (`search::frontier`): the `RuleSet` is `Sync` and shared by reference;
+//! each environment owns its [`EnvState`] plus a [`CostModel`] built from
+//! one shared read-only memo snapshot ([`CostModel::from_snapshot`]) with
+//! a small private overlay — the ROADMAP's shared-cache design. Per-env
+//! RNG and noise streams fork deterministically from the pool seed
+//! (`coordinator::worker_seeds`), and every environment's trajectory is a
+//! function of its own slot only, so results are **bit-identical for any
+//! `threads` value** — pinned by `tests/env_incremental.rs`.
+//!
+//! `step_batch` / `observe_batch` are what `coordinator::Pipeline` rollout
+//! / eval and `experiments::suite` drive to collect B episodes per pass
+//! instead of one.
+
+use crate::cost::{CostModel, CostSnapshot};
+use crate::graph::Graph;
+use crate::util::Rng;
+use crate::xfer::RuleSet;
+
+use super::{Env, EnvConfig, EnvState, Observation, StepResult};
+
+#[derive(Debug, Clone)]
+pub struct EnvPoolConfig {
+    /// Number of environments (B).
+    pub n_envs: usize,
+    pub env: EnvConfig,
+    /// Worker threads for batched calls (0 = all cores, capped at B).
+    pub threads: usize,
+    /// Root seed; per-env RNG/noise streams fork deterministically.
+    pub seed: u64,
+    /// Per-env measurement-noise std (0 = deterministic).
+    pub noise_std: f64,
+}
+
+impl Default for EnvPoolConfig {
+    fn default() -> Self {
+        Self { n_envs: 1, env: EnvConfig::default(), threads: 0, seed: 0, noise_std: 0.0 }
+    }
+}
+
+/// Domain separator: the measurement-noise stream of an env must be
+/// independent of its action stream even though both derive from the same
+/// per-env seed.
+const NOISE_STREAM: u64 = 0x9E3779B97F4A7C15;
+
+struct EnvSlot {
+    cost: CostModel,
+    state: EnvState,
+    rng: Rng,
+}
+
+impl EnvSlot {
+    /// Rehydrate an [`Env`] around the slot's owned state, run `f`, and
+    /// store the state back. Field-level borrows keep this allocation-free.
+    fn with_env<R>(&mut self, rules: &RuleSet, f: impl FnOnce(&mut Env, &mut Rng) -> R) -> R {
+        let state = std::mem::take(&mut self.state);
+        let mut env = Env::from_state(rules, &self.cost, state);
+        let r = f(&mut env, &mut self.rng);
+        self.state = env.into_state();
+        r
+    }
+}
+
+pub struct EnvPool {
+    rules: RuleSet,
+    threads: usize,
+    snapshot: CostSnapshot,
+    slots: Vec<EnvSlot>,
+}
+
+impl EnvPool {
+    /// Build B identical environments on `graph`. `base_cost` is costed
+    /// once against the graph so the shared snapshot starts warm — every
+    /// env then reads the frozen per-op costs lock-free.
+    pub fn new(graph: &Graph, rules: RuleSet, base_cost: &CostModel, cfg: &EnvPoolConfig) -> Self {
+        let n = cfg.n_envs.max(1);
+        let _ = base_cost.graph_cost_fast(graph);
+        let snapshot = base_cost.snapshot();
+        let seeds = crate::coordinator::worker_seeds(cfg.seed, n);
+        // One full match/cost pass builds a template the noise-free envs
+        // clone — identical to constructing each from scratch (matching
+        // and costing are deterministic), without B-1 redundant
+        // O(rules x graph) passes. Noisy envs must draw their initial
+        // cost from their own stream, so they construct individually.
+        let template = if cfg.noise_std > 0.0 {
+            None
+        } else {
+            let cost = CostModel::from_snapshot(&snapshot);
+            Some(EnvState::new(graph.clone(), &rules, &cost, cfg.env.clone()))
+        };
+        let slots: Vec<EnvSlot> = seeds
+            .into_iter()
+            .map(|seed| {
+                let mut cost = CostModel::from_snapshot(&snapshot);
+                if cfg.noise_std > 0.0 {
+                    cost = cost.with_noise(cfg.noise_std, seed ^ NOISE_STREAM);
+                }
+                let state = match &template {
+                    Some(t) => t.clone(),
+                    None => EnvState::new(graph.clone(), &rules, &cost, cfg.env.clone()),
+                };
+                EnvSlot { cost, state, rng: Rng::new(seed) }
+            })
+            .collect();
+        Self { rules, threads: cfg.threads, snapshot, slots }
+    }
+
+    pub fn n_envs(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn rules(&self) -> &RuleSet {
+        &self.rules
+    }
+
+    /// NO-OP action id, identical for every env.
+    pub fn noop_action(&self) -> usize {
+        self.rules.len()
+    }
+
+    /// The shared read-only cost snapshot the envs were built from.
+    pub fn snapshot(&self) -> &CostSnapshot {
+        &self.snapshot
+    }
+
+    /// Read-only view of env `i`'s owned state.
+    pub fn state(&self, i: usize) -> &EnvState {
+        &self.slots[i].state
+    }
+
+    /// Run `f(i, env, rng)` once per environment, fanned out over scoped
+    /// worker threads in contiguous chunks. Each env's computation depends
+    /// only on its own slot and `i`, so any thread count produces
+    /// identical results.
+    pub fn map_envs<R, F>(&mut self, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize, &mut Env, &mut Rng) -> R + Sync,
+    {
+        let rules = &self.rules;
+        let n = self.slots.len();
+        let threads = crate::search::frontier::effective_threads(self.threads, n);
+        if threads <= 1 {
+            return self
+                .slots
+                .iter_mut()
+                .enumerate()
+                .map(|(i, slot)| slot.with_env(rules, |env, rng| f(i, env, rng)))
+                .collect();
+        }
+        let chunk = n.div_ceil(threads);
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            for (ci, (slots, outs)) in
+                self.slots.chunks_mut(chunk).zip(out.chunks_mut(chunk)).enumerate()
+            {
+                let f = &f;
+                scope.spawn(move || {
+                    for (j, (slot, o)) in slots.iter_mut().zip(outs.iter_mut()).enumerate() {
+                        let i = ci * chunk + j;
+                        *o = Some(slot.with_env(rules, |env, rng| f(i, env, rng)));
+                    }
+                });
+            }
+        });
+        out.into_iter().map(|o| o.expect("pool worker dropped a slot")).collect()
+    }
+
+    /// Step every environment with its action. `actions.len()` must be B.
+    pub fn step_batch(&mut self, actions: &[(usize, usize)]) -> Vec<StepResult> {
+        assert_eq!(actions.len(), self.slots.len(), "one action per env");
+        self.map_envs(|i, env, _| env.step(actions[i]))
+    }
+
+    /// Step the subset of environments with a `Some` action (finished rows
+    /// of an eval batch pass `None`).
+    pub fn step_where(&mut self, actions: &[Option<(usize, usize)>]) -> Vec<Option<StepResult>> {
+        assert_eq!(actions.len(), self.slots.len(), "one action slot per env");
+        self.map_envs(|i, env, _| actions[i].map(|a| env.step(a)))
+    }
+
+    /// Observations for all environments (mask assembly only — cheap, so
+    /// it stays on the calling thread).
+    pub fn observe_batch(&self) -> Vec<Observation> {
+        self.slots.iter().map(|s| s.state.observe()).collect()
+    }
+
+    /// Reset every environment to its initial graph (parallel: the reset
+    /// re-derives each env's match lists from scratch).
+    pub fn reset_all(&mut self) {
+        self.map_envs(|_, env, _| env.reset());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::DeviceProfile;
+    use crate::graph::{GraphBuilder, PadMode};
+    use crate::xfer::library::standard_library;
+
+    fn small_graph() -> Graph {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 3, 8, 8]);
+        let c = b.conv_bn_relu(x, 4, 3, 1, PadMode::Same).unwrap();
+        let _ = b.maxpool(c, 2, 2).unwrap();
+        b.finish()
+    }
+
+    fn pool_with(threads: usize, n_envs: usize) -> EnvPool {
+        let cost = CostModel::new(DeviceProfile::rtx2070());
+        EnvPool::new(
+            &small_graph(),
+            standard_library(),
+            &cost,
+            &EnvPoolConfig { n_envs, threads, seed: 7, ..Default::default() },
+        )
+    }
+
+    /// Seeded random rollout through the pool API; returns per-env
+    /// (reward, history) traces.
+    fn rollout(pool: &mut EnvPool, steps: usize) -> Vec<(Vec<f32>, Vec<(usize, usize)>)> {
+        let b = pool.n_envs();
+        let mut traces: Vec<Vec<f32>> = vec![Vec::new(); b];
+        for _ in 0..steps {
+            let obs = pool.observe_batch();
+            let actions: Vec<(usize, usize)> = (0..b)
+                .map(|i| {
+                    // Per-env deterministic pick: first valid xfer, loc 0.
+                    (0..obs[i].xfer_mask.len() - 1)
+                        .find(|&x| obs[i].xfer_mask[x])
+                        .map(|x| (x, 0))
+                        .unwrap_or((pool.noop_action(), 0))
+                })
+                .collect();
+            let results = pool.step_batch(&actions);
+            for (i, r) in results.iter().enumerate() {
+                traces[i].push(r.reward);
+            }
+        }
+        (0..b).map(|i| (traces[i].clone(), pool.state(i).history().to_vec())).collect()
+    }
+
+    #[test]
+    fn pool_matches_single_env_stepping() {
+        let mut pool = pool_with(2, 3);
+        let out = rollout(&mut pool, 3);
+        // A lone Env driven with the same policy must agree with row 0.
+        let rules = standard_library();
+        let cost = CostModel::new(DeviceProfile::rtx2070());
+        let mut env = Env::new(small_graph(), &rules, &cost, EnvConfig::default());
+        let mut rewards = Vec::new();
+        for _ in 0..3 {
+            let obs = env.observe();
+            let a = (0..rules.len())
+                .find(|&x| obs.xfer_mask[x])
+                .map(|x| (x, 0))
+                .unwrap_or((env.noop_action(), 0));
+            rewards.push(env.step(a).reward);
+        }
+        assert_eq!(out[0].0, rewards);
+        assert_eq!(out[0].1, env.history().to_vec());
+    }
+
+    #[test]
+    fn pool_deterministic_across_thread_counts() {
+        let a = rollout(&mut pool_with(1, 4), 4);
+        let b = rollout(&mut pool_with(3, 4), 4);
+        let c = rollout(&mut pool_with(0, 4), 4);
+        assert_eq!(a, b);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn step_where_skips_none_rows() {
+        let mut pool = pool_with(2, 3);
+        let noop = pool.noop_action();
+        let res = pool.step_where(&[Some((noop, 0)), None, Some((noop, 0))]);
+        assert!(res[0].as_ref().unwrap().done);
+        assert!(res[1].is_none());
+        assert!(res[2].as_ref().unwrap().done);
+        assert_eq!(pool.state(1).steps_taken(), 0, "None row must not step");
+    }
+
+    #[test]
+    fn reset_all_restores_every_env() {
+        let mut pool = pool_with(2, 3);
+        let _ = rollout(&mut pool, 2);
+        pool.reset_all();
+        for i in 0..pool.n_envs() {
+            assert_eq!(pool.state(i).steps_taken(), 0);
+            assert!(pool.state(i).history().is_empty());
+        }
+    }
+
+    #[test]
+    fn noise_streams_are_per_env_deterministic() {
+        let cost = CostModel::new(DeviceProfile::rtx2070());
+        let mk = |threads| {
+            EnvPool::new(
+                &small_graph(),
+                standard_library(),
+                &cost,
+                &EnvPoolConfig { n_envs: 3, threads, seed: 11, noise_std: 0.05, ..Default::default() },
+            )
+        };
+        let a = rollout(&mut mk(1), 3);
+        let b = rollout(&mut mk(3), 3);
+        assert_eq!(a, b, "noisy pools must still be thread-count invariant");
+        // Different seeds give different noise draws.
+        let mut p1 = mk(1);
+        let r1 = p1.state(0).runtime_ms();
+        let r2 = p1.state(1).runtime_ms();
+        assert_ne!(r1.to_bits(), r2.to_bits(), "per-env noise streams should differ");
+    }
+}

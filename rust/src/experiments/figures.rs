@@ -90,12 +90,20 @@ pub fn fig6(ctx: &ExperimentCtx, runs: usize) -> anyhow::Result<()> {
             for _ in 0..cfg.free_iterations {
                 pipe.model_free_iteration(&gnn, &mut ctrl, &mut env, cfg.free_episodes_per_iter, &cfg.ppo, &mut rng)?;
             }
-            for run in 0..runs {
-                let mut rng = Rng::new(cfg.seed + 200 + run as u64);
-                let mut env = Env::new(g.clone(), &rules, &cost, cfg.env.clone());
-                let res = pipe.eval_real(&gnn, &ctrl, None, &mut env, cfg.eval_greedy, &mut rng)?;
-                free_scores.push(res.best_improvement_pct);
-            }
+            // Pooled model-free evaluation: `runs` episodes per pass.
+            let results = super::eval_pool_scores(
+                &pipe,
+                &cfg.env,
+                cfg.device,
+                &g,
+                &gnn,
+                &ctrl,
+                None,
+                runs,
+                cfg.eval_greedy,
+                cfg.seed + 200,
+            )?;
+            free_scores.extend(results.iter().map(|r| r.best_improvement_pct));
             cfg.graph = info.name.to_string();
         }
 

@@ -13,7 +13,6 @@ use crate::agent::Episode;
 use crate::config::RunConfig;
 use crate::coordinator::{collect_random_parallel, Pipeline};
 use crate::cost::CostModel;
-use crate::env::Env;
 use crate::graph::Graph;
 use crate::runtime::{Engine, ParamStore};
 use crate::util::Rng;
@@ -74,6 +73,9 @@ pub fn train_model_based(
         pipe.dims.x1,
         cfg.collect_episodes,
         cfg.collect_noop_prob,
+        // n_envs comes from `envs` alone: collect_workers is a pure
+        // performance knob and must never change the collected episodes.
+        cfg.envs,
         cfg.collect_workers,
         seed,
     );
@@ -111,8 +113,44 @@ pub fn train_model_based(
     Ok(TrainedAgent { gnn, wm, ctrl, ae_losses, wm_curve, dream_curve, episodes, stage_seconds })
 }
 
-/// Evaluate a trained agent `runs` times on a fresh environment; returns
-/// per-run best improvements (%) and the merged action history.
+/// Build a `runs`-wide deterministic [`crate::env::EnvPool`] on `graph`
+/// and run one batched evaluation pass — the single place eval pools are
+/// configured (eval_agent, fig6's model-free bars, the suite and the
+/// table 3 sweep all route through here).
+#[allow(clippy::too_many_arguments)]
+pub fn eval_pool_scores(
+    pipe: &Pipeline,
+    env_cfg: &crate::env::EnvConfig,
+    device: crate::cost::DeviceProfile,
+    graph: &Graph,
+    gnn: &crate::runtime::ParamStore,
+    ctrl: &crate::runtime::ParamStore,
+    wm: Option<&crate::runtime::ParamStore>,
+    runs: usize,
+    greedy: bool,
+    seed: u64,
+) -> anyhow::Result<Vec<crate::coordinator::EvalResult>> {
+    let cost = CostModel::new(device);
+    let mut pool = crate::env::EnvPool::new(
+        graph,
+        crate::xfer::library::standard_library(),
+        &cost,
+        &crate::env::EnvPoolConfig {
+            n_envs: runs.max(1),
+            env: env_cfg.clone(),
+            threads: 0,
+            seed,
+            noise_std: 0.0,
+        },
+    );
+    let mut rng = Rng::new(seed);
+    pipe.eval_real_pool(gnn, ctrl, wm, &mut pool, greedy, &mut rng)
+}
+
+/// Evaluate a trained agent `runs` times; returns per-run best
+/// improvements (%) and the merged action history. The `runs` episodes
+/// run as one [`crate::env::EnvPool`] batch — B episodes per pass instead
+/// of one.
 pub fn eval_agent(
     pipe: &Pipeline,
     cfg: &RunConfig,
@@ -121,20 +159,22 @@ pub fn eval_agent(
     runs: usize,
     seed: u64,
 ) -> anyhow::Result<(Vec<f64>, Vec<(usize, usize)>, f64)> {
-    let rules = crate::xfer::library::standard_library();
-    let cost = CostModel::new(cfg.device);
-    let mut improvements = Vec::with_capacity(runs);
-    let mut history = Vec::new();
-    let mut step_s = Vec::new();
-    for run in 0..runs {
-        let mut rng = Rng::new(seed ^ (run as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15));
-        let mut env = Env::new(graph.clone(), &rules, &cost, cfg.env.clone());
-        let res = pipe.eval_real(&agent.gnn, &agent.ctrl, Some(&agent.wm), &mut env, cfg.eval_greedy, &mut rng)?;
-        improvements.push(res.best_improvement_pct);
-        history.extend(res.history);
-        step_s.push(res.mean_step_s);
-    }
-    let mean_step = step_s.iter().sum::<f64>() / step_s.len().max(1) as f64;
+    let results = eval_pool_scores(
+        pipe,
+        &cfg.env,
+        cfg.device,
+        graph,
+        &agent.gnn,
+        &agent.ctrl,
+        Some(&agent.wm),
+        runs,
+        cfg.eval_greedy,
+        seed,
+    )?;
+    let improvements = results.iter().map(|r| r.best_improvement_pct).collect();
+    let history = results.iter().flat_map(|r| r.history.iter().copied()).collect();
+    let mean_step =
+        results.iter().map(|r| r.mean_step_s).sum::<f64>() / results.len().max(1) as f64;
     Ok((improvements, history, mean_step))
 }
 

@@ -95,12 +95,20 @@ pub fn suite(ctx: &ExperimentCtx, runs: usize) -> anyhow::Result<()> {
             for _ in 0..ctx.cfg.free_iterations {
                 pipe.model_free_iteration(gnn, &mut ctrl, &mut env, ctx.cfg.free_episodes_per_iter, &ctx.cfg.ppo, &mut rng)?;
             }
-            for run in 0..runs {
-                let mut rng = Rng::new(ctx.cfg.seed + 600 + run as u64);
-                let mut env = Env::new(g.clone(), &rules, &cost, ctx.cfg.env.clone());
-                let res = pipe.eval_real(gnn, &ctrl, None, &mut env, ctx.cfg.eval_greedy, &mut rng)?;
-                free_scores.push(res.best_improvement_pct);
-            }
+            // All `runs` eval episodes advance as one EnvPool batch.
+            let results = super::eval_pool_scores(
+                &pipe,
+                &ctx.cfg.env,
+                ctx.cfg.device,
+                &g,
+                gnn,
+                &ctrl,
+                None,
+                runs,
+                ctx.cfg.eval_greedy,
+                ctx.cfg.seed + 600,
+            )?;
+            free_scores.extend(results.iter().map(|r| r.best_improvement_pct));
         }
 
         // Fig. 6 rows + console table.
@@ -171,8 +179,6 @@ pub fn suite(ctx: &ExperimentCtx, runs: usize) -> anyhow::Result<()> {
 pub fn table3_shared(ctx: &ExperimentCtx, runs: usize, temps: &[f32]) -> anyhow::Result<()> {
     let pipe = Pipeline::new(ctx.engine)?;
     let graph = crate::zoo::bert_base();
-    let rules = standard_library();
-    let cost = CostModel::new(ctx.cfg.device);
     let mut rng = Rng::new(ctx.cfg.seed);
 
     // Shared stages 1-4.
@@ -184,6 +190,7 @@ pub fn table3_shared(ctx: &ExperimentCtx, runs: usize, temps: &[f32]) -> anyhow:
         pipe.dims.x1,
         ctx.cfg.collect_episodes,
         ctx.cfg.collect_noop_prob,
+        ctx.cfg.envs,
         ctx.cfg.collect_workers,
         ctx.cfg.seed,
     );
@@ -215,13 +222,20 @@ pub fn table3_shared(ctx: &ExperimentCtx, runs: usize, temps: &[f32]) -> anyhow:
         let wm_scores: Vec<f64> = tail.iter().map(|&r| r as f64).collect();
         let (wm_mean, wm_std) = crate::util::stats::mean_std(&wm_scores);
 
-        let mut real_scores = Vec::new();
-        for run in 0..runs {
-            let mut erng = Rng::new(ctx.cfg.seed ^ (run as u64 + 1) ^ (tau.to_bits() as u64));
-            let mut env = Env::new(graph.clone(), &rules, &cost, ctx.cfg.env.clone());
-            let res = pipe.eval_real(&gnn, &ctrl, Some(&wm), &mut env, ctx.cfg.eval_greedy, &mut erng)?;
-            real_scores.push(res.best_improvement_pct);
-        }
+        // One pooled pass per temperature: `runs` episodes step together.
+        let results = super::eval_pool_scores(
+            &pipe,
+            &ctx.cfg.env,
+            ctx.cfg.device,
+            &graph,
+            &gnn,
+            &ctrl,
+            Some(&wm),
+            runs,
+            ctx.cfg.eval_greedy,
+            ctx.cfg.seed ^ (tau.to_bits() as u64),
+        )?;
+        let real_scores: Vec<f64> = results.iter().map(|r| r.best_improvement_pct).collect();
         let (real_mean, real_std) = crate::util::stats::mean_std(&real_scores);
         println!("  tau {:>5.2}: WM {:>6.2}% ± {:>4.2} | real {:>6.2}% ± {:>4.2}", tau, wm_mean, wm_std, real_mean, real_std);
         csv_row!(w; tau, format!("{wm_mean:.3}"), format!("{wm_std:.3}"), format!("{real_mean:.3}"), format!("{real_std:.3}"))?;

@@ -2,8 +2,8 @@
 //!
 //! ```text
 //! rlflow zoo                               list the evaluation graphs
-//! rlflow optimize --graph bert --method taso|greedy [--export out.json]
-//! rlflow train --graph bert [--config cfg.json] [-s key=value ...]
+//! rlflow optimize --graph bert --method taso|greedy [--threads N] [--export out.json]
+//! rlflow train --graph bert [--envs B] [--config cfg.json] [-s key=value ...]
 //! rlflow experiment <table1|table2|table3|fig5..fig10|all> [--runs N]
 //! rlflow generate-rules [--verify]
 //! ```
@@ -61,6 +61,13 @@ fn build_config(args: &Args) -> anyhow::Result<RunConfig> {
     if let Some(g) = args.flags.get("graph") {
         cfg.graph = g.clone();
     }
+    // `--envs B`: width of the batched EnvPool used by rollout collection
+    // and evaluation (equivalent to `-s envs=B`).
+    if let Some(e) = args.flags.get("envs") {
+        cfg.envs = e
+            .parse()
+            .map_err(|err| anyhow::anyhow!("bad --envs '{e}': {err}"))?;
+    }
     for o in &args.overrides {
         cfg.apply_override(o)?;
     }
@@ -88,9 +95,9 @@ rlflow — neural-network subgraph transformation with world models
 
 USAGE:
   rlflow zoo
-  rlflow optimize --graph <name> --method <greedy|taso> [--export out.json]
-  rlflow train [--graph <name>] [--config cfg.json] [--smoke] [--save dir] [-s key=value]...
-  rlflow experiment <table1|table2|table3|fig5|...|fig10|all> [--runs N] [--smoke] [--out dir]
+  rlflow optimize --graph <name> --method <greedy|taso> [--threads N] [--export out.json]
+  rlflow train [--graph <name>] [--envs B] [--config cfg.json] [--smoke] [--save dir] [-s key=value]...
+  rlflow experiment <table1|table2|table3|fig5|...|fig10|all> [--runs N] [--envs B] [--smoke] [--out dir]
   rlflow generate-rules [--verify] [--inputs N] [--ops N]
 ";
 

@@ -4,10 +4,11 @@
 //! cross-depth [`TranspositionTable`]; [`Frontier::expand`] is the one
 //! candidate-generation path both `greedy_optimise` and `taso_optimise`
 //! call. Expansion fans (frontier graph, rule) pairs out across scoped
-//! worker threads — the same worker-owns-its-clone pattern as
-//! `coordinator::collect_random_parallel`: the `RuleSet` is `Sync` and is
-//! shared by reference, while each worker owns a [`CostModel`] clone
-//! (interior mutability makes the cost model deliberately `!Sync`).
+//! worker threads — the same worker-owns-its-model pattern as
+//! `env::EnvPool`: the `RuleSet` is `Sync` and is shared by reference,
+//! while each worker owns a [`CostModel`] built from the parent's shared
+//! read-only memo snapshot plus a small private overlay (interior
+//! mutability makes the cost model deliberately `!Sync`).
 //!
 //! Determinism: workers take pairs round-robin but results are merged back
 //! in canonical (frontier entry, rule, location) enumeration order, and all
@@ -224,12 +225,17 @@ impl Frontier {
             }
         } else {
             // Workers take pairs round-robin (cheap load balancing); the
-            // merge below restores canonical order regardless.
+            // merge below restores canonical order regardless. Each worker
+            // shares the parent's frozen memo snapshot and keeps only its
+            // fresh entries in a private overlay — no per-depth copy of the
+            // whole cache. (Noisy models never reach here, so the
+            // snapshot's noise-free default is exact.)
+            let snap = cost.snapshot();
             std::thread::scope(|scope| {
                 let mut handles = Vec::with_capacity(threads);
                 for w in 0..threads {
                     let expand_pair = &expand_pair;
-                    let cm = cost.clone();
+                    let cm = CostModel::from_snapshot(&snap);
                     handles.push(scope.spawn(move || {
                         let mut mine: Vec<(usize, PairOut)> = Vec::new();
                         let mut i = w;

@@ -41,6 +41,106 @@ impl ApplyReport {
     pub fn touched(&self) -> impl Iterator<Item = NodeId> + '_ {
         self.removed.iter().chain(self.added.iter()).copied()
     }
+
+    /// The full set of nodes whose *local match state* this application
+    /// changed — the query surface the incremental environment re-matches
+    /// against. See [`DirtyRegion`].
+    pub fn dirty_region(&self, before: &Graph, after: &Graph) -> DirtyRegion {
+        DirtyRegion::compute(before, after, self)
+    }
+}
+
+/// Every node whose local match state — operator, input list, or consumer
+/// set — one rule application changed. Pattern matches are functions of
+/// exactly that per-node state (chains test ops, first-input edges and
+/// sole-consumer properties; sibling groups test ops and shared first
+/// inputs), so a match can appear, disappear, or reorder only if it
+/// contains a node in this set. The environment's incremental match
+/// maintenance (`env::incremental`) keeps every cached location that does
+/// not intersect it.
+///
+/// Membership, all in after-graph slot numbering (arena slots are stable
+/// across a rewrite):
+///  * nodes removed or added by the rewrite (the [`ApplyReport`] diff);
+///  * surviving nodes whose input list was rewired (`splice` redirects the
+///    consumers of every replaced node);
+///  * nodes whose consumer set changed: producers feeding a removed node
+///    (before) or an added node (after), and producers a rewired survivor
+///    stopped or started reading.
+#[derive(Debug, Clone, Default)]
+pub struct DirtyRegion {
+    /// Membership bitmap indexed by after-arena slot.
+    dirty: Vec<bool>,
+    /// Dirty nodes still live in the after graph, ascending id order.
+    live: Vec<NodeId>,
+}
+
+impl DirtyRegion {
+    pub fn compute(before: &Graph, after: &Graph, report: &ApplyReport) -> Self {
+        let n = after.n_slots();
+        let mut dirty = vec![false; n];
+        for id in report.touched() {
+            dirty[id.index()] = true;
+        }
+        // Producers of the removed nodes lost a consumer; producers of the
+        // added nodes gained one.
+        for &id in &report.removed {
+            for p in &before.node(id).inputs {
+                dirty[p.node.index()] = true;
+            }
+        }
+        for &id in &report.added {
+            for p in &after.node(id).inputs {
+                dirty[p.node.index()] = true;
+            }
+        }
+        // Surviving nodes whose inputs were rewired, plus the producers on
+        // both sides of the rewiring (their consumer sets changed). The
+        // direct diff is O(slots) and catches in-place input mutation too,
+        // not just `replace_uses` rewiring.
+        for idx in 0..report.prev_slots.min(n) {
+            let (b, a) = (&before.nodes[idx], &after.nodes[idx]);
+            if b.dead || a.dead || b.inputs == a.inputs {
+                continue;
+            }
+            dirty[idx] = true;
+            for p in b.inputs.iter().chain(a.inputs.iter()) {
+                dirty[p.node.index()] = true;
+            }
+        }
+        let live = dirty
+            .iter()
+            .enumerate()
+            .filter(|&(i, &d)| d && !after.nodes[i].dead)
+            .map(|(i, _)| NodeId(i as u32))
+            .collect();
+        Self { dirty, live }
+    }
+
+    /// Was `id`'s local match state changed by the application?
+    pub fn contains(&self, id: NodeId) -> bool {
+        self.dirty.get(id.index()).copied().unwrap_or(false)
+    }
+
+    /// Dirty nodes still live in the after graph.
+    pub fn live_nodes(&self) -> &[NodeId] {
+        &self.live
+    }
+
+    /// Does any live dirty node satisfy `relevant`? (The gains test: a new
+    /// match must contain a live changed node, so a rule none of whose
+    /// relevant ops appear here cannot have gained one.)
+    pub fn any_live<F: Fn(&crate::graph::OpKind) -> bool>(&self, g: &Graph, relevant: F) -> bool {
+        self.live.iter().any(|&id| relevant(&g.node(id).op))
+    }
+
+    pub fn len(&self) -> usize {
+        self.dirty.iter().filter(|&&d| d).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        !self.dirty.iter().any(|&d| d)
+    }
 }
 
 /// If `p` refers to a source (Input/Weight), wrap it in an `Identity` op so
@@ -96,5 +196,47 @@ impl Graph {
     /// Arena capacity (including dead slots) — used for staleness checks.
     pub fn n_slots(&self) -> usize {
         self.nodes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::graph::{GraphBuilder, OpKind, PadMode};
+    use crate::xfer::library::standard_library;
+
+    #[test]
+    fn dirty_region_covers_touched_neighbourhood() {
+        // x -> conv -> relu -> tanh -> sigmoid; fusing conv+relu must dirty
+        // the fused pair, the new node, the producers (x, w) and the
+        // rewired consumer (tanh) — but not the far sigmoid.
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 3, 8, 8]);
+        let c = b.conv(x, 4, 3, 1, PadMode::Same).unwrap();
+        let r = b.relu(c).unwrap();
+        let t = b.op(OpKind::Tanh, &[r]).unwrap();
+        let s = b.op(OpKind::Sigmoid, &[t]).unwrap();
+        let g = b.finish();
+
+        let lib = standard_library();
+        let rule = lib.get(lib.index_of("fuse_conv_relu").unwrap()).unwrap();
+        let loc = rule.find(&g)[0].clone();
+        let mut g2 = g.clone();
+        let report = crate::xfer::apply_rule(&mut g2, rule, &loc).unwrap();
+        let dirty = report.dirty_region(&g, &g2);
+
+        assert!(dirty.contains(c.node), "killed conv must be dirty");
+        assert!(dirty.contains(r.node), "killed relu must be dirty");
+        for &id in &report.added {
+            assert!(dirty.contains(id), "added node must be dirty");
+        }
+        assert!(dirty.contains(x.node), "producer lost a consumer");
+        assert!(dirty.contains(t.node), "rewired consumer must be dirty");
+        assert!(!dirty.contains(s.node), "untouched sink must stay clean");
+        // Live set excludes the killed nodes and is relevance-queryable.
+        assert!(dirty.live_nodes().iter().all(|&id| !g2.node(id).dead));
+        assert!(dirty.any_live(&g2, |op| matches!(op, OpKind::Tanh)));
+        assert!(!dirty.any_live(&g2, |op| matches!(op, OpKind::Sigmoid)));
+        assert!(!dirty.is_empty());
+        assert!(dirty.len() >= 4);
     }
 }

@@ -19,14 +19,17 @@ use crate::graph::{Activation, Graph, NodeId, OpKind, PadMode, PortRef};
 use crate::pred;
 
 use super::apply::{live_op, splice, splice_port};
-use super::matcher::{find_chains, find_siblings, sorted_consumers, OpPred};
+use super::matcher::{find_chains, find_siblings, sorted_consumers, OpPred, OpRelevance};
 use super::{Location, Rule, RuleSet};
 
-/// A rule defined by a pair of closures.
+/// A rule defined by a pair of closures, plus an optional operator
+/// relevance fingerprint for incremental re-matching (`env::incremental`).
 pub struct FnRule {
     name: &'static str,
     find: Box<dyn Fn(&Graph) -> Vec<Location> + Send + Sync>,
     apply: Box<dyn Fn(&mut Graph, &Location) -> anyhow::Result<()> + Send + Sync>,
+    /// `None` = conservative: the rule re-matches after every rewrite.
+    relevant: Option<OpRelevance>,
 }
 
 impl Rule for FnRule {
@@ -39,14 +42,52 @@ impl Rule for FnRule {
     fn apply(&self, g: &mut Graph, loc: &Location) -> anyhow::Result<()> {
         (self.apply)(g, loc)
     }
+    fn op_relevant(&self, op: &OpKind) -> bool {
+        match &self.relevant {
+            Some(rel) => rel.matches(op),
+            None => true,
+        }
+    }
 }
 
+/// Conservative constructor: no relevance fingerprint, so the rule is
+/// re-matched after every rewrite. Use for rules whose match validity
+/// depends on nodes outside their reported `Location`.
+#[allow(dead_code)]
 pub(crate) fn rule(
     name: &'static str,
     find: impl Fn(&Graph) -> Vec<Location> + Send + Sync + 'static,
     apply: impl Fn(&mut Graph, &Location) -> anyhow::Result<()> + Send + Sync + 'static,
 ) -> Box<dyn Rule> {
-    Box::new(FnRule { name, find: Box::new(find), apply: Box::new(apply) })
+    Box::new(FnRule { name, find: Box::new(find), apply: Box::new(apply), relevant: None })
+}
+
+/// [`rule`] with an [`OpRelevance`] fingerprint. The caller warrants the
+/// contract documented on [`Rule::op_relevant`]: the reported `Location`
+/// lists every node a match's validity depends on, and every node of every
+/// possible match satisfies the fingerprint.
+pub(crate) fn rule_with(
+    name: &'static str,
+    relevant: OpRelevance,
+    find: impl Fn(&Graph) -> Vec<Location> + Send + Sync + 'static,
+    apply: impl Fn(&mut Graph, &Location) -> anyhow::Result<()> + Send + Sync + 'static,
+) -> Box<dyn Rule> {
+    Box::new(FnRule {
+        name,
+        find: Box::new(find),
+        apply: Box::new(apply),
+        relevant: Some(relevant),
+    })
+}
+
+/// [`rule_with`] for the common position-predicate-union fingerprint.
+pub(crate) fn rule_rel(
+    name: &'static str,
+    tests: &[fn(&OpKind) -> bool],
+    find: impl Fn(&Graph) -> Vec<Location> + Send + Sync + 'static,
+    apply: impl Fn(&mut Graph, &Location) -> anyhow::Result<()> + Send + Sync + 'static,
+) -> Box<dyn Rule> {
+    rule_with(name, OpRelevance::of(tests), find, apply)
 }
 
 // ---------------------------------------------------------------------------
@@ -60,8 +101,10 @@ fn fuse_act_into(
     act: Activation,
     refit: fn(&OpKind, Activation) -> Option<OpKind>,
 ) -> Box<dyn Rule> {
-    rule(
+    let tests = [base.test, act_pred.test];
+    rule_rel(
         name,
+        &tests,
         move |g| find_chains(g, &[OpPred { ..base_copy(&base) }, OpPred { ..base_copy(&act_pred) }]),
         move |g, loc| {
             anyhow::ensure!(loc.len() == 2, "{name}: bad location");
@@ -121,8 +164,9 @@ fn unfuse_act(
     name: &'static str,
     sel: fn(&OpKind) -> Option<(OpKind, Activation)>,
 ) -> Box<dyn Rule> {
-    rule(
+    rule_with(
         name,
+        OpRelevance::from_fn(move |op| sel(op).is_some()),
         move |g| {
             g.live_ids()
                 .filter(|&id| sel(&g.node(id).op).is_some())
@@ -152,8 +196,12 @@ fn unfuse_act(
 
 /// conv -> batchnorm  ==>  conv(x, w * scale) + shift  (weights const-folded).
 fn fold_bn_into_conv() -> Box<dyn Rule> {
-    rule(
+    rule_rel(
         "fold_bn_conv",
+        &[
+            |op| matches!(op, OpKind::Conv2d { act: Activation::None, .. }),
+            |op| matches!(op, OpKind::BatchNorm),
+        ],
         |g| {
             find_chains(
                 g,
@@ -190,8 +238,12 @@ fn fold_bn_into_conv() -> Box<dyn Rule> {
 
 /// add -> layernorm  ==>  fused_add_layernorm (§4.10's transformer win).
 fn fuse_add_layernorm() -> Box<dyn Rule> {
-    rule(
+    rule_rel(
         "fuse_add_ln",
+        &[
+            |op| matches!(op, OpKind::Add),
+            |op| matches!(op, OpKind::LayerNorm),
+        ],
         |g| find_chains(g, &[pred!(add: OpKind::Add), pred!(ln: OpKind::LayerNorm)]),
         |g, loc| {
             let (add_id, ln_id) = (loc[0], loc[1]);
@@ -214,8 +266,9 @@ fn fuse_add_layernorm() -> Box<dyn Rule> {
 }
 
 fn unfuse_add_layernorm() -> Box<dyn Rule> {
-    rule(
+    rule_rel(
         "unfuse_add_ln",
+        &[|op| matches!(op, OpKind::FusedAddLayerNorm)],
         |g| {
             g.live_ids()
                 .filter(|&id| matches!(g.node(id).op, OpKind::FusedAddLayerNorm))
@@ -238,8 +291,9 @@ fn unfuse_add_layernorm() -> Box<dyn Rule> {
 // ---------------------------------------------------------------------------
 
 fn fuse_add_add() -> Box<dyn Rule> {
-    rule(
+    rule_rel(
         "fuse_add_add",
+        &[|op| matches!(op, OpKind::Add)],
         |g| {
             find_chains(g, &[pred!(a: OpKind::Add), pred!(b: OpKind::Add)])
                 .into_iter()
@@ -270,8 +324,12 @@ fn fuse_add_add() -> Box<dyn Rule> {
 }
 
 fn fuse_addn_add() -> Box<dyn Rule> {
-    rule(
+    rule_rel(
         "fuse_addn_add",
+        &[
+            |op| matches!(op, OpKind::AddN { .. }),
+            |op| matches!(op, OpKind::Add),
+        ],
         |g| find_chains(g, &[pred!(a: OpKind::AddN { .. }), pred!(b: OpKind::Add)]),
         |g, loc| {
             let (a_id, b_id) = (loc[0], loc[1]);
@@ -292,8 +350,9 @@ fn fuse_addn_add() -> Box<dyn Rule> {
 }
 
 fn unfuse_addn() -> Box<dyn Rule> {
-    rule(
+    rule_rel(
         "unfuse_addn",
+        &[|op| matches!(op, OpKind::AddN { .. })],
         |g| {
             g.live_ids()
                 .filter(|&id| matches!(g.node(id).op, OpKind::AddN { .. }))
@@ -318,8 +377,9 @@ fn unfuse_addn() -> Box<dyn Rule> {
 // ---------------------------------------------------------------------------
 
 fn merge_conv_siblings() -> Box<dyn Rule> {
-    rule(
+    rule_rel(
         "merge_conv2",
+        &[|op| matches!(op, OpKind::Conv2d { .. })],
         |g| {
             find_siblings(g, &pred!(conv: OpKind::Conv2d { .. }), 2)
                 .into_iter()
@@ -356,8 +416,9 @@ fn merge_conv_siblings() -> Box<dyn Rule> {
 }
 
 fn merge_linear_siblings(name: &'static str, k: usize) -> Box<dyn Rule> {
-    rule(
+    rule_rel(
         name,
+        &[|op| matches!(op, OpKind::Linear { .. })],
         move |g| {
             find_siblings(g, &pred!(lin: OpKind::Linear { .. }), k)
                 .into_iter()
@@ -397,8 +458,9 @@ fn merge_linear_siblings(name: &'static str, k: usize) -> Box<dyn Rule> {
 }
 
 fn merge_matmul_siblings() -> Box<dyn Rule> {
-    rule(
+    rule_rel(
         "merge_matmul2",
+        &[|op| matches!(op, OpKind::MatMul { trans_a: false, trans_b: false, .. })],
         |g| {
             find_siblings(
                 g,
@@ -454,8 +516,9 @@ fn compose_1x1_convs() -> Box<dyn Rule> {
             .map(|d| d.shape[2] == 1 && d.shape[3] == 1)
             .unwrap_or(false)
     }
-    rule(
+    rule_rel(
         "compose_conv1x1",
+        &[|op| matches!(op, OpKind::Conv2d { stride: 1, pad: PadMode::Same, .. })],
         |g| {
             find_chains(
                 g,
@@ -498,8 +561,9 @@ fn compose_1x1_convs() -> Box<dyn Rule> {
 
 /// linear(linear(x)) composes when the inner has no activation.
 fn compose_linears() -> Box<dyn Rule> {
-    rule(
+    rule_rel(
         "compose_linear",
+        &[|op| matches!(op, OpKind::Linear { .. })],
         |g| {
             find_chains(
                 g,
@@ -545,8 +609,9 @@ fn compose_linears() -> Box<dyn Rule> {
 // ---------------------------------------------------------------------------
 
 fn elim_transpose_pair() -> Box<dyn Rule> {
-    rule(
+    rule_rel(
         "elim_transpose2",
+        &[|op| matches!(op, OpKind::Transpose { .. })],
         |g| {
             find_chains(g, &[pred!(t1: OpKind::Transpose { .. }), pred!(t2: OpKind::Transpose { .. })])
                 .into_iter()
@@ -579,8 +644,9 @@ fn compose_perm(p1: &[usize], p2: &[usize]) -> Vec<usize> {
 }
 
 fn merge_transpose_pair() -> Box<dyn Rule> {
-    rule(
+    rule_rel(
         "merge_transpose2",
+        &[|op| matches!(op, OpKind::Transpose { .. })],
         |g| {
             find_chains(g, &[pred!(t1: OpKind::Transpose { .. }), pred!(t2: OpKind::Transpose { .. })])
                 .into_iter()
@@ -604,8 +670,9 @@ fn merge_transpose_pair() -> Box<dyn Rule> {
 }
 
 fn merge_reshape_pair() -> Box<dyn Rule> {
-    rule(
+    rule_rel(
         "merge_reshape2",
+        &[|op| matches!(op, OpKind::Reshape { .. })],
         |g| find_chains(g, &[pred!(r1: OpKind::Reshape { .. }), pred!(r2: OpKind::Reshape { .. })]),
         |g, loc| {
             let (r1, r2) = (loc[0], loc[1]);
@@ -625,8 +692,12 @@ fn merge_reshape_pair() -> Box<dyn Rule> {
 /// matmul(a, transpose(b)) => matmul{trans_b}(a, b) when the transpose
 /// swaps the last two axes.
 fn absorb_transpose_rhs() -> Box<dyn Rule> {
-    rule(
+    rule_rel(
         "absorb_transpose_rhs",
+        &[
+            |op| matches!(op, OpKind::Transpose { .. }),
+            |op| matches!(op, OpKind::MatMul { trans_b: false, .. }),
+        ],
         |g| {
             let cons = sorted_consumers(g);
             let mut out = Vec::new();
@@ -674,8 +745,9 @@ fn absorb_transpose_rhs() -> Box<dyn Rule> {
 
 /// Inverse of the above: matmul{trans_b}(a, b) => matmul(a, transpose(b)).
 fn emit_transpose_rhs() -> Box<dyn Rule> {
-    rule(
+    rule_rel(
         "emit_transpose_rhs",
+        &[|op| matches!(op, OpKind::MatMul { trans_b: true, .. })],
         |g| {
             g.live_ids()
                 .filter(|&id| matches!(g.node(id).op, OpKind::MatMul { trans_b: true, .. }))
@@ -699,8 +771,12 @@ fn emit_transpose_rhs() -> Box<dyn Rule> {
 }
 
 fn elim_concat_split() -> Box<dyn Rule> {
-    rule(
+    rule_rel(
         "elim_concat_split",
+        &[
+            |op| matches!(op, OpKind::Concat { .. }),
+            |op| matches!(op, OpKind::Split { .. }),
+        ],
         |g| {
             find_chains(g, &[pred!(c: OpKind::Concat { .. }), pred!(s: OpKind::Split { .. })])
                 .into_iter()
@@ -735,8 +811,12 @@ fn elim_concat_split() -> Box<dyn Rule> {
 }
 
 fn elim_split_concat() -> Box<dyn Rule> {
-    rule(
+    rule_rel(
         "elim_split_concat",
+        &[
+            |op| matches!(op, OpKind::Split { .. }),
+            |op| matches!(op, OpKind::Concat { .. }),
+        ],
         |g| {
             let mut out = Vec::new();
             let cons = sorted_consumers(g);
@@ -781,8 +861,12 @@ fn elim_split_concat() -> Box<dyn Rule> {
 
 /// relu(maxpool(x)) <=> maxpool(relu(x)) — exact for max pooling.
 fn swap_relu_maxpool() -> Box<dyn Rule> {
-    rule(
+    rule_rel(
         "swap_relu_maxpool",
+        &[
+            |op| matches!(op, OpKind::Relu),
+            |op| matches!(op, OpKind::MaxPool { .. }),
+        ],
         |g| find_chains(g, &[pred!(r: OpKind::Relu), pred!(p: OpKind::MaxPool { .. })]),
         |g, loc| {
             let (r_id, p_id) = (loc[0], loc[1]);
@@ -798,8 +882,12 @@ fn swap_relu_maxpool() -> Box<dyn Rule> {
 }
 
 fn swap_maxpool_relu() -> Box<dyn Rule> {
-    rule(
+    rule_rel(
         "swap_maxpool_relu",
+        &[
+            |op| matches!(op, OpKind::MaxPool { .. }),
+            |op| matches!(op, OpKind::Relu),
+        ],
         |g| find_chains(g, &[pred!(p: OpKind::MaxPool { .. }), pred!(r: OpKind::Relu)]),
         |g, loc| {
             let (p_id, r_id) = (loc[0], loc[1]);
@@ -816,8 +904,12 @@ fn swap_maxpool_relu() -> Box<dyn Rule> {
 
 /// matmul(scale(a), b) => scale(matmul(a, b)).
 fn hoist_scale_matmul() -> Box<dyn Rule> {
-    rule(
+    rule_rel(
         "hoist_scale_matmul",
+        &[
+            |op| matches!(op, OpKind::Scale { .. }),
+            |op| matches!(op, OpKind::MatMul { .. }),
+        ],
         |g| {
             find_chains(g, &[pred!(s: OpKind::Scale { .. }), pred!(m: OpKind::MatMul { .. })])
                 .into_iter()
@@ -845,8 +937,9 @@ fn hoist_scale_matmul() -> Box<dyn Rule> {
 
 /// relu(relu(x)) => relu(x).
 fn relu_idempotent() -> Box<dyn Rule> {
-    rule(
+    rule_rel(
         "relu_idempotent",
+        &[|op| matches!(op, OpKind::Relu)],
         |g| find_chains(g, &[pred!(a: OpKind::Relu), pred!(b: OpKind::Relu)]),
         |g, loc| {
             let (a_id, b_id) = (loc[0], loc[1]);
@@ -857,8 +950,9 @@ fn relu_idempotent() -> Box<dyn Rule> {
 }
 
 fn elim_identity() -> Box<dyn Rule> {
-    rule(
+    rule_rel(
         "elim_identity",
+        &[|op| matches!(op, OpKind::Identity)],
         |g| {
             g.live_ids()
                 .filter(|&id| {
@@ -883,8 +977,17 @@ fn elim_identity() -> Box<dyn Rule> {
 
 /// matmul + bias add => linear.
 fn fuse_matmul_bias() -> Box<dyn Rule> {
-    rule(
+    rule_rel(
         "fuse_matmul_bias",
+        &[
+            |op| {
+                matches!(
+                    op,
+                    OpKind::MatMul { trans_a: false, trans_b: false, act: Activation::None }
+                )
+            },
+            |op| matches!(op, OpKind::Add),
+        ],
         |g| {
             find_chains(
                 g,
@@ -921,8 +1024,9 @@ fn fuse_matmul_bias() -> Box<dyn Rule> {
 }
 
 fn unfuse_linear() -> Box<dyn Rule> {
-    rule(
+    rule_rel(
         "unfuse_linear",
+        &[|op| matches!(op, OpKind::Linear { act: Activation::None })],
         |g| {
             g.live_ids()
                 .filter(|&id| matches!(g.node(id).op, OpKind::Linear { act: Activation::None }))
@@ -947,8 +1051,9 @@ fn unfuse_linear() -> Box<dyn Rule> {
 /// Cost-increasing on its own; opens merge opportunities with neighbouring
 /// convs of the larger kernel size.
 fn enlarge_conv(name: &'static str, from_k: usize) -> Box<dyn Rule> {
-    rule(
+    rule_rel(
         name,
+        &[|op| matches!(op, OpKind::Conv2d { stride: 1, pad: PadMode::Same, .. })],
         move |g| {
             g.live_ids()
                 .filter(|&id| {
@@ -1624,5 +1729,32 @@ mod tests {
         assert_eq!(addln.find(&g).len(), 24); // 2 per encoder layer
         let qkv = lib.get(lib.index_of("merge_linear3").unwrap()).unwrap();
         assert!(!qkv.find(&g).is_empty());
+    }
+
+    #[test]
+    fn relevance_fingerprint_covers_every_match_node() {
+        // The incremental maintenance contract (Rule::op_relevant): every
+        // node of every reported location must satisfy the fingerprint —
+        // a fingerprint narrower than its `find` would silently miss new
+        // matches after a rewrite. Exercised over the whole zoo.
+        let lib = standard_library();
+        let mut checked = 0usize;
+        for (_, g) in crate::zoo::all() {
+            for rule in &lib.rules {
+                for loc in rule.find(&g) {
+                    for &id in &loc {
+                        assert!(
+                            rule.op_relevant(&g.node(id).op),
+                            "{}: match node {:?} ({}) outside relevance fingerprint",
+                            rule.name(),
+                            id,
+                            g.node(id).op.name()
+                        );
+                        checked += 1;
+                    }
+                }
+            }
+        }
+        assert!(checked > 100, "too few match nodes exercised: {checked}");
     }
 }

@@ -10,15 +10,16 @@ use crate::graph::Graph;
 use crate::pred;
 
 use super::apply::{live_op, splice, splice_port};
-use super::library::rule;
+use super::library::rule_rel;
 use super::matcher::{find_chains, find_siblings, sorted_consumers};
 use super::Rule;
 
 /// Merge two parallel `ConvBias` branches with identical attributes and
 /// weight shapes (arises after BN folding in ResNet/Inception blocks).
 pub fn merge_convbias_siblings() -> Box<dyn Rule> {
-    rule(
+    rule_rel(
         "merge_convbias2",
+        &[|op| matches!(op, OpKind::ConvBias { .. })],
         |g| {
             find_siblings(g, &pred!(cb: OpKind::ConvBias { .. }), 2)
                 .into_iter()
@@ -60,8 +61,12 @@ pub fn merge_convbias_siblings() -> Box<dyn Rule> {
 /// matmul(transpose(a), b) => matmul{trans_a}(a, b) for last-two-swap
 /// transposes feeding the LHS exclusively.
 pub fn absorb_transpose_lhs() -> Box<dyn Rule> {
-    rule(
+    rule_rel(
         "absorb_transpose_lhs",
+        &[
+            |op| matches!(op, OpKind::Transpose { .. }),
+            |op| matches!(op, OpKind::MatMul { trans_a: false, .. }),
+        ],
         |g| {
             let cons = sorted_consumers(g);
             let mut out = Vec::new();
@@ -105,8 +110,9 @@ pub fn absorb_transpose_lhs() -> Box<dyn Rule> {
 /// Compose two stacked max-pools (VALID padding): maxpool(k1, s1) then
 /// maxpool(k2, s2) == maxpool(k1 + (k2-1)*s1, s1*s2). Exact for max.
 pub fn compose_maxpools() -> Box<dyn Rule> {
-    rule(
+    rule_rel(
         "compose_maxpool2",
+        &[|op| matches!(op, OpKind::MaxPool { pad: PadMode::Valid, .. })],
         |g| {
             find_chains(
                 g,
@@ -145,8 +151,12 @@ pub fn compose_maxpools() -> Box<dyn Rule> {
 /// the data movement into the branches where it may cancel against
 /// existing transposes. Requires a non-broadcast add.
 pub fn push_transpose_through_add() -> Box<dyn Rule> {
-    rule(
+    rule_rel(
         "push_transpose_add",
+        &[
+            |op| matches!(op, OpKind::Add),
+            |op| matches!(op, OpKind::Transpose { .. }),
+        ],
         |g| {
             find_chains(g, &[pred!(a: OpKind::Add), pred!(t: OpKind::Transpose { .. })])
                 .into_iter()
@@ -177,8 +187,12 @@ pub fn push_transpose_through_add() -> Box<dyn Rule> {
 
 /// Inverse: add(transpose(a), transpose(b)) with equal perms => transpose(add).
 pub fn pull_transpose_out_of_add() -> Box<dyn Rule> {
-    rule(
+    rule_rel(
         "pull_transpose_add",
+        &[
+            |op| matches!(op, OpKind::Transpose { .. }),
+            |op| matches!(op, OpKind::Add),
+        ],
         |g| {
             let cons = sorted_consumers(g);
             let mut out = Vec::new();
@@ -222,8 +236,12 @@ pub fn pull_transpose_out_of_add() -> Box<dyn Rule> {
 /// matmul(a, scale(b)) => scale(matmul(a, b)) — RHS counterpart of
 /// hoist_scale_matmul (the chain matcher only follows first inputs).
 pub fn hoist_scale_matmul_rhs() -> Box<dyn Rule> {
-    rule(
+    rule_rel(
         "hoist_scale_matmul_rhs",
+        &[
+            |op| matches!(op, OpKind::Scale { .. }),
+            |op| matches!(op, OpKind::MatMul { act: Activation::None, .. }),
+        ],
         |g| {
             let cons = sorted_consumers(g);
             let mut out = Vec::new();
@@ -258,8 +276,9 @@ pub fn hoist_scale_matmul_rhs() -> Box<dyn Rule> {
 
 /// scale(scale(x)) => scale(x) with the product factor.
 pub fn compose_scales() -> Box<dyn Rule> {
-    rule(
+    rule_rel(
         "compose_scale2",
+        &[|op| matches!(op, OpKind::Scale { .. })],
         |g| find_chains(g, &[pred!(a: OpKind::Scale { .. }), pred!(b: OpKind::Scale { .. })]),
         |g, loc| {
             let (s1, s2) = (loc[0], loc[1]);
@@ -285,8 +304,9 @@ pub fn compose_scales() -> Box<dyn Rule> {
 /// rule instead *reassociates* mul-by-weight chains:
 /// mul(mul(x, a), b) => mul(x, a*b) when a, b are weight-constant.
 pub fn compose_weight_muls() -> Box<dyn Rule> {
-    rule(
+    rule_rel(
         "compose_mul2",
+        &[|op| matches!(op, OpKind::Mul)],
         |g| {
             find_chains(g, &[pred!(a: OpKind::Mul), pred!(b: OpKind::Mul)])
                 .into_iter()

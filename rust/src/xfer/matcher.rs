@@ -171,6 +171,42 @@ pub fn consumers_within(g: &Graph, id: NodeId, allowed: &[NodeId]) -> bool {
         .unwrap_or(true)
 }
 
+/// Operator fingerprint of a rule's pattern: the union of the op
+/// predicates any position of the pattern can bind.
+///
+/// This is the sound "could this node participate in *any* match of the
+/// rule?" query the incremental environment (`env::incremental`) uses to
+/// skip re-matching: a rewrite can only create a match that contains a
+/// node whose local state (operator, inputs, consumer set) it changed, and
+/// that node's operator must satisfy one of these predicates. Rules whose
+/// match validity depends on nodes *outside* their reported [`Location`]
+/// and relevance set must not declare one (they fall back to re-matching
+/// after every rewrite).
+///
+/// [`Location`]: crate::xfer::Location
+pub struct OpRelevance {
+    test: Box<dyn Fn(&OpKind) -> bool + Send + Sync>,
+}
+
+impl OpRelevance {
+    /// Union of position predicates (the common case: one per pattern
+    /// position, e.g. the `pred!` tests handed to [`find_chains`]).
+    pub fn of(tests: &[fn(&OpKind) -> bool]) -> Self {
+        let tests = tests.to_vec();
+        Self::from_fn(move |op| tests.iter().any(|t| t(op)))
+    }
+
+    /// Arbitrary predicate (rules parameterised at construction time).
+    pub fn from_fn(f: impl Fn(&OpKind) -> bool + Send + Sync + 'static) -> Self {
+        Self { test: Box::new(f) }
+    }
+
+    /// Could a node with this operator appear in a match?
+    pub fn matches(&self, op: &OpKind) -> bool {
+        (self.test)(op)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -301,6 +337,18 @@ mod tests {
         for c in &out {
             assert!(c.windows(2).all(|w| w[0] < w[1]));
         }
+    }
+
+    #[test]
+    fn relevance_is_union_of_predicates() {
+        let rel = OpRelevance::of(&[
+            |op| matches!(op, OpKind::Relu),
+            |op| matches!(op, OpKind::Tanh),
+        ]);
+        assert!(rel.matches(&OpKind::Relu));
+        assert!(rel.matches(&OpKind::Tanh));
+        assert!(!rel.matches(&OpKind::Sigmoid));
+        assert!(!rel.matches(&OpKind::Add));
     }
 
     #[test]

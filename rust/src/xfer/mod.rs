@@ -17,9 +17,9 @@ pub mod library;
 pub mod library_ext;
 pub mod matcher;
 
-pub use apply::ApplyReport;
+pub use apply::{ApplyReport, DirtyRegion};
 
-use crate::graph::{Graph, NodeId};
+use crate::graph::{Graph, NodeId, OpKind};
 
 /// Anchor nodes identifying one applicable site of a rule.
 pub type Location = Vec<NodeId>;
@@ -34,6 +34,21 @@ pub trait Rule: Send + Sync {
     /// Rewrite the graph at `loc`. `loc` must come from a `find` on the
     /// *current* graph state. Implementations must leave the graph valid.
     fn apply(&self, g: &mut Graph, loc: &Location) -> anyhow::Result<()>;
+
+    /// Could a node with this operator participate in *any* match of this
+    /// rule? Consumed by the incremental match maintenance
+    /// (`env::incremental`): after a rewrite, a rule is only re-matched
+    /// when some node in the dirty region is relevant to it (or one of its
+    /// cached locations was touched). The default is the conservative
+    /// "yes" — such rules re-match after every rewrite. Implementations
+    /// tightening this must guarantee two things: (a) every node whose
+    /// local state (operator, inputs, consumer set) a match's validity
+    /// depends on is listed in the reported [`Location`], and (b) every
+    /// node of every possible match satisfies the relevance test.
+    fn op_relevant(&self, op: &OpKind) -> bool {
+        let _ = op;
+        true
+    }
 }
 
 /// Apply a rule site and run the post-rewrite housekeeping every caller

@@ -1,0 +1,203 @@
+//! Properties of the incremental environment core and the vectorised
+//! EnvPool, pinned against the full-refresh `_reference` oracle
+//! (`EnvConfig { full_refresh: true }`) over seeded random walks:
+//!
+//!  * incremental match lists == a from-scratch `Rule::find` refresh at
+//!    every step (bitwise, ordering included);
+//!  * observations and histories bitwise identical to the oracle;
+//!  * delta-driven rewards/runtimes equal to the full-recompute oracle to
+//!    1e-9 (f64 summation order is the only permitted difference);
+//!  * `EnvPool` results bit-identical for any thread count given fixed
+//!    seeds.
+
+use rlflow::agent::collect_random_pool;
+use rlflow::cost::{CostModel, DeviceProfile};
+use rlflow::env::{Env, EnvConfig, EnvPool, EnvPoolConfig, StateEncoder};
+use rlflow::util::Rng;
+use rlflow::xfer::library::standard_library;
+use rlflow::zoo;
+
+/// One convolutional + one transformer zoo graph: enough structural
+/// diversity for the maintenance properties while keeping debug-build
+/// walltime sane (a full-refresh oracle step is O(rules x graph)).
+fn zoo_subset() -> Vec<rlflow::graph::Graph> {
+    vec![zoo::squeezenet1_1(), zoo::bert_base()]
+}
+
+#[test]
+fn incremental_env_bit_identical_to_reference_on_zoo_walks() {
+    let rules = standard_library();
+    let cost = CostModel::new(DeviceProfile::rtx2070());
+    for (gi, g) in zoo_subset().into_iter().enumerate() {
+        let mut inc = Env::new(g.clone(), &rules, &cost, EnvConfig::default());
+        let mut oracle =
+            Env::new(g, &rules, &cost, EnvConfig { full_refresh: true, ..Default::default() });
+        let mut rng = Rng::new(0x11C0 ^ gi as u64);
+        let mut checked = 0;
+        for step in 0..10 {
+            // Observations must agree bitwise before acting.
+            let obs = oracle.observe();
+            let inc_obs = inc.observe();
+            assert_eq!(obs.xfer_mask, inc_obs.xfer_mask, "graph {gi} step {step}");
+            assert_eq!(obs.location_counts, inc_obs.location_counts, "graph {gi} step {step}");
+            // The maintained lists must equal a from-scratch refresh.
+            assert_eq!(
+                inc.match_lists(),
+                inc.match_lists_reference(),
+                "graph {gi} step {step}: maintained lists diverged from full refresh"
+            );
+            let valid: Vec<usize> = (0..rules.len()).filter(|&i| obs.xfer_mask[i]).collect();
+            if valid.is_empty() {
+                break;
+            }
+            let x = valid[rng.below(valid.len())];
+            let l = rng.below(obs.location_counts[x]);
+            let r_ref = oracle.step((x, l));
+            let r_inc = inc.step((x, l));
+            assert!(r_ref.info.valid && r_inc.info.valid);
+            assert_eq!(r_ref.done, r_inc.done);
+            // Delta-driven rewards == full-recompute rewards (1e-9 on the
+            // underlying f64 runtimes; the f32 rewards inherit it).
+            assert!(
+                (r_ref.reward - r_inc.reward).abs() < 1e-6,
+                "graph {gi} step {step}: reward {} vs {}",
+                r_inc.reward,
+                r_ref.reward
+            );
+            assert!(
+                (oracle.runtime_ms() - inc.runtime_ms()).abs() < 1e-9,
+                "graph {gi} step {step}: runtime {} vs {}",
+                inc.runtime_ms(),
+                oracle.runtime_ms()
+            );
+            assert_eq!(r_ref.info.launches, r_inc.info.launches);
+            checked += 1;
+            if r_ref.done {
+                break;
+            }
+        }
+        assert_eq!(oracle.history(), inc.history());
+        assert!(checked >= 5, "graph {gi}: walk too short ({checked} steps)");
+        // The incremental env must actually have skipped re-finds (how
+        // many depends on which op families the walk touches).
+        let stats = inc.state().match_stats();
+        assert!(stats.keeps > 0, "graph {gi}: no rule ever skipped, got {stats:?}");
+        assert!(stats.refinds > 0, "graph {gi}: no rule ever re-found, got {stats:?}");
+    }
+}
+
+#[test]
+fn incremental_env_matches_reference_under_noise() {
+    // Under measurement noise both paths fall back to one full recompute
+    // per applied step, drawing from the same per-model stream — so the
+    // agreement is exact, not just 1e-9.
+    let rules = standard_library();
+    let g = zoo::squeezenet1_1();
+    let mk_cost = || CostModel::new(DeviceProfile::rtx2070()).with_noise(0.05, 77);
+    let (inc_cost, ref_cost) = (mk_cost(), mk_cost());
+    let mut inc = Env::new(g.clone(), &rules, &inc_cost, EnvConfig::default());
+    let mut oracle =
+        Env::new(g, &rules, &ref_cost, EnvConfig { full_refresh: true, ..Default::default() });
+    let mut rng = Rng::new(0x5EED);
+    for _ in 0..6 {
+        let obs = oracle.observe();
+        assert_eq!(obs.xfer_mask, inc.observe().xfer_mask);
+        let valid: Vec<usize> = (0..rules.len()).filter(|&i| obs.xfer_mask[i]).collect();
+        if valid.is_empty() {
+            break;
+        }
+        let x = valid[rng.below(valid.len())];
+        let l = rng.below(obs.location_counts[x]);
+        let r_ref = oracle.step((x, l));
+        let r_inc = inc.step((x, l));
+        assert_eq!(r_ref.reward.to_bits(), r_inc.reward.to_bits());
+        assert_eq!(oracle.runtime_ms().to_bits(), inc.runtime_ms().to_bits());
+        if r_ref.done {
+            break;
+        }
+    }
+}
+
+#[test]
+fn env_pool_episodes_bit_identical_for_any_thread_count() {
+    let g = zoo::squeezenet1_1();
+    let encoder = StateEncoder::new(320, 32);
+    let collect = |threads: usize| {
+        let cost = CostModel::new(DeviceProfile::rtx2070());
+        let mut pool = EnvPool::new(
+            &g,
+            standard_library(),
+            &cost,
+            &EnvPoolConfig {
+                n_envs: 4,
+                threads,
+                seed: 99,
+                env: EnvConfig { max_steps: 6, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        collect_random_pool(&mut pool, &encoder, 49, 8, 0.1)
+    };
+    let a = collect(1);
+    for threads in [2, 4, 0] {
+        let b = collect(threads);
+        assert_eq!(a.len(), b.len(), "threads={threads}");
+        for (ea, eb) in a.iter().zip(&b) {
+            assert_eq!(ea.actions, eb.actions, "threads={threads}");
+            assert_eq!(ea.dones, eb.dones, "threads={threads}");
+            assert_eq!(
+                ea.rewards.iter().map(|r| r.to_bits()).collect::<Vec<_>>(),
+                eb.rewards.iter().map(|r| r.to_bits()).collect::<Vec<_>>(),
+                "threads={threads}"
+            );
+            assert_eq!(ea.xmasks, eb.xmasks, "threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn env_pool_batched_walks_match_lone_envs() {
+    // Pool row i stepped through step_batch must equal a lone Env driven
+    // by the same per-env seeded policy on its own cost model.
+    let g = zoo::squeezenet1_1();
+    let rules = standard_library();
+    let base = CostModel::new(DeviceProfile::rtx2070());
+    let mut pool = EnvPool::new(
+        &g,
+        standard_library(),
+        &base,
+        &EnvPoolConfig { n_envs: 3, threads: 2, seed: 5, ..Default::default() },
+    );
+    let b = pool.n_envs();
+    for _ in 0..4 {
+        let obs = pool.observe_batch();
+        let actions: Vec<(usize, usize)> = obs
+            .iter()
+            .map(|o| {
+                (0..rules.len())
+                    .find(|&x| o.xfer_mask[x])
+                    .map(|x| (x, 0))
+                    .unwrap_or((rules.len(), 0))
+            })
+            .collect();
+        let _ = pool.step_batch(&actions);
+    }
+    for i in 0..b {
+        let cost = CostModel::new(DeviceProfile::rtx2070());
+        let mut lone = Env::new(g.clone(), &rules, &cost, EnvConfig::default());
+        for _ in 0..4 {
+            let o = lone.observe();
+            let a = (0..rules.len())
+                .find(|&x| o.xfer_mask[x])
+                .map(|x| (x, 0))
+                .unwrap_or((lone.noop_action(), 0));
+            let _ = lone.step(a);
+        }
+        assert_eq!(pool.state(i).history(), lone.history(), "env {i}");
+        assert_eq!(
+            pool.state(i).runtime_ms().to_bits(),
+            lone.runtime_ms().to_bits(),
+            "env {i}"
+        );
+    }
+}

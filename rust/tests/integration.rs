@@ -47,6 +47,7 @@ fn model_based_pipeline_end_to_end() {
         pipe.dims.x1,
         cfg.collect_episodes,
         cfg.collect_noop_prob,
+        cfg.envs,
         cfg.collect_workers,
         cfg.seed,
     );
