@@ -12,10 +12,12 @@
 //! (they report 10 ms vs 850 ms = 85x on ResNet-50).
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example optimize_bert [-- --smoke]
+//! cargo run --release --example optimize_bert [-- --smoke]
 //! ```
 //!
-//! The run is recorded in EXPERIMENTS.md §End-to-end.
+//! Runs on the backend seam: the PJRT artifacts when `make artifacts` has
+//! produced them, the pure-Rust host backend otherwise — so this driver
+//! works fully offline. The run is recorded in EXPERIMENTS.md §End-to-end.
 
 use std::time::Instant;
 
@@ -24,7 +26,7 @@ use rlflow::coordinator::Pipeline;
 use rlflow::cost::CostModel;
 use rlflow::env::Env;
 use rlflow::experiments::{eval_agent, train_model_based};
-use rlflow::runtime::Engine;
+use rlflow::runtime::{backend_by_name, Backend};
 use rlflow::search::{greedy_optimise, taso_optimise, TasoConfig};
 use rlflow::util::Rng;
 use rlflow::wm::DreamEnv;
@@ -35,8 +37,9 @@ fn main() -> anyhow::Result<()> {
     let mut cfg = if smoke { RunConfig::smoke() } else { RunConfig::default() };
     cfg.graph = "bert".into();
 
-    let engine = Engine::load_default()?;
-    let pipe = Pipeline::new(&engine)?;
+    let backend = backend_by_name(&cfg.backend)?;
+    println!("model-execution backend: {}", backend.name());
+    let pipe = Pipeline::new(backend.as_ref())?;
     let graph = rlflow::zoo::bert_base();
     let rules = standard_library();
     let cost = CostModel::new(cfg.device);
@@ -70,7 +73,10 @@ fn main() -> anyhow::Result<()> {
     println!("\nworld-model loss (Fig. 8 analogue):");
     let curve = &agent.wm_curve;
     for i in (0..curve.len()).step_by((curve.len() / 8).max(1)) {
-        println!("  step {:>4}: total {:>8.4}  nll {:>8.4}  mask {:>6.4}", i, curve[i].total, curve[i].nll, curve[i].mask_bce);
+        println!(
+            "  step {:>4}: total {:>8.4}  nll {:>8.4}  mask {:>6.4}",
+            i, curve[i].total, curve[i].nll, curve[i].mask_bce
+        );
     }
     println!("\ndream reward curve (Fig. 9 analogue):");
     let dc = &agent.dream_curve;
@@ -99,14 +105,15 @@ fn main() -> anyhow::Result<()> {
 
     // ---- dream vs real step time (the 85x claim) -----------------------
     let mut rng = Rng::new(cfg.seed);
-    let mut dream = DreamEnv::new(&engine, cfg.temperature, cfg.wm.reward_scale)?;
+    let mut dream = DreamEnv::new(backend.as_ref(), cfg.temperature, cfg.wm.reward_scale)?;
     let z0: Vec<Vec<f32>> = agent.episodes.iter().map(|e| e.z[0].clone()).collect();
     let xm0: Vec<Vec<f32>> = agent.episodes.iter().map(|e| e.xmasks[0].clone()).collect();
     dream.reset(&z0, &xm0)?;
     let steps = 50;
     let t0 = Instant::now();
     for _ in 0..steps {
-        let actions: Vec<(usize, usize)> = (0..dream.b).map(|_| (0, 0)).collect();
+        let actions: Vec<rlflow::agent::Action> =
+            (0..dream.b).map(|_| rlflow::agent::Action::new(0, 0)).collect();
         let _ = dream.step(&agent.wm, &actions, &mut rng)?;
         dream.done.fill(false); // keep stepping for timing purposes
     }
@@ -116,7 +123,11 @@ fn main() -> anyhow::Result<()> {
     // Real step cost: measured during eval (includes encode+policy+env).
     println!("\nstep-time comparison (paper §4.4: 10 ms dream vs 850 ms real = 85x):");
     println!("  real env step : {:>8.2} ms", real_step_s * 1e3);
-    println!("  dream step    : {:>8.3} ms (amortised over batch of {})", dream_step_s * 1e3, dream.b);
+    println!(
+        "  dream step    : {:>8.3} ms (amortised over batch of {})",
+        dream_step_s * 1e3,
+        dream.b
+    );
     println!("  speedup       : {:>8.1}x", real_step_s / dream_step_s);
 
     // Sample efficiency accounting (§4.4).

@@ -1,14 +1,16 @@
-//! Bench: L3 hot-path micro-benchmarks + artifact execution latencies.
+//! Bench: L3 hot-path micro-benchmarks + model-program execution latencies.
 //!
 //! Covers every operation on the per-step critical path of training and
 //! evaluation; §Perf in EXPERIMENTS.md tracks these numbers before/after
-//! optimisation. Artifact timings are skipped when artifacts are missing.
+//! optimisation. Program latencies run on whatever backend `auto` resolves
+//! to — the PJRT artifacts when built, the pure-Rust host backend
+//! otherwise — so this section no longer skips offline.
 
 use std::time::Instant;
 
 use rlflow::cost::{CostModel, DeviceProfile};
 use rlflow::env::{Env, EnvConfig, StateEncoder};
-use rlflow::runtime::{lit_f32, lit_i32, Engine, Manifest, ParamStore};
+use rlflow::runtime::{backend_by_name, Backend, ParamStore, TensorView};
 use rlflow::util::Rng;
 use rlflow::xfer::library::standard_library;
 
@@ -78,62 +80,79 @@ fn main() -> anyhow::Result<()> {
         let _ = cost.graph_cost_fast(&bert);
     });
 
-    if !Manifest::default_dir().join("manifest.json").exists() {
-        println!("\nartifacts not built — skipping artifact latency benches");
-        return Ok(());
-    }
-
-    println!("\n== artifact execution latencies (PJRT CPU) ==");
-    let engine = Engine::load_default()?;
-    let m = &engine.manifest;
+    let backend = backend_by_name("auto")?;
+    println!("\n== model-program latencies (backend: {}) ==", backend.name());
+    let m = backend.manifest();
     let (n, f) = (m.hp_usize("MAX_NODES")?, m.hp_usize("NODE_FEATS")?);
     let zdim = m.hp_usize("LATENT")?;
     let r = m.hp_usize("RNN_HIDDEN")?;
-    let gnn = ParamStore::init(&engine, "gnn", 0)?;
-    let wm = ParamStore::init(&engine, "wm", 1)?;
-    let ctrl = ParamStore::init(&engine, "ctrl", 2)?;
-    engine.warmup(&["gnn_encode_1", "wm_step_1", "wm_step_b", "ctrl_policy_1", "ctrl_policy_b"])?;
-
-    let e = encoder.encode(&bert);
-    let feats = lit_f32(&e.feats, &[1, n, f])?;
-    let adj = lit_f32(&e.adj, &[1, n, n])?;
-    let mask = lit_f32(&e.mask, &[1, n])?;
-    bench("gnn_encode_1 (BERT state)", 20, || {
-        let _ = engine
-            .exec("gnn_encode_1", &[gnn.theta_lit().unwrap(), feats.clone(), adj.clone(), mask.clone()])
-            .unwrap();
-    });
-
-    let z1 = lit_f32(&vec![0.1; zdim], &[1, zdim])?;
-    let a1 = lit_i32(&[0, 0], &[1, 2])?;
-    let h1 = lit_f32(&vec![0.0; r], &[1, r])?;
-    let c1 = lit_f32(&vec![0.0; r], &[1, r])?;
-    let wm_step_ms = bench("wm_step_1 (dream step b=1)", 50, || {
-        let _ = engine
-            .exec("wm_step_1", &[wm.theta_lit().unwrap(), z1.clone(), a1.clone(), h1.clone(), c1.clone()])
-            .unwrap();
-    });
-
     let b = m.hp_usize("B_DREAM")?;
-    let zb = lit_f32(&vec![0.1; b * zdim], &[b, zdim])?;
-    let ab = lit_i32(&vec![0; b * 2], &[b, 2])?;
-    let hb = lit_f32(&vec![0.0; b * r], &[b, r])?;
-    let cb = lit_f32(&vec![0.0; b * r], &[b, r])?;
-    bench("wm_step_b (dream batch)", 50, || {
-        let _ = engine
-            .exec("wm_step_b", &[wm.theta_lit().unwrap(), zb.clone(), ab.clone(), hb.clone(), cb.clone()])
+    let gnn = ParamStore::init(backend.as_ref(), "gnn", 0)?;
+    let wm = ParamStore::init(backend.as_ref(), "wm", 1)?;
+    let ctrl = ParamStore::init(backend.as_ref(), "ctrl", 2)?;
+
+    // Encoder sized to the backend's manifest (host dims may differ).
+    let benc = StateEncoder::new(n, f);
+    let e = benc.encode(&bert);
+    bench("gnn_encode_1 (BERT state)", 20, || {
+        let _ = backend
+            .exec_with_params(
+                "gnn_encode_1",
+                &gnn,
+                &[
+                    TensorView::f32(&e.feats, &[1, n, f]),
+                    TensorView::f32(&e.adj, &[1, n, n]),
+                    TensorView::f32(&e.mask, &[1, n]),
+                ],
+            )
             .unwrap();
     });
 
-    bench("ctrl_policy_1 (theta upload)", 20, || {
-        let _ = engine
-            .exec("ctrl_policy_1", &[ctrl.theta_lit().unwrap(), z1.clone(), h1.clone()])
+    let z1 = vec![0.1f32; zdim];
+    let a1 = [0i32, 0];
+    let h1 = vec![0.0f32; r];
+    let c1 = vec![0.0f32; r];
+    let wm_step_ms = bench("wm_step_1 (dream step b=1)", 50, || {
+        let _ = backend
+            .exec_with_params(
+                "wm_step_1",
+                &wm,
+                &[
+                    TensorView::f32(&z1, &[1, zdim]),
+                    TensorView::i32(&a1, &[1, 2]),
+                    TensorView::f32(&h1, &[1, r]),
+                    TensorView::f32(&c1, &[1, r]),
+                ],
+            )
             .unwrap();
     });
-    let theta_ctrl = engine.device_theta(&ctrl).unwrap();
-    let ctrl_cached_ms = bench("ctrl_policy_1 (theta cached)", 50, || {
-        let _ = engine
-            .exec_with_theta("ctrl_policy_1", &theta_ctrl, &[z1.clone(), h1.clone()])
+
+    let zb = vec![0.1f32; b * zdim];
+    let ab = vec![0i32; b * 2];
+    let hb = vec![0.0f32; b * r];
+    let cb = vec![0.0f32; b * r];
+    bench("wm_step_b (dream batch)", 50, || {
+        let _ = backend
+            .exec_with_params(
+                "wm_step_b",
+                &wm,
+                &[
+                    TensorView::f32(&zb, &[b, zdim]),
+                    TensorView::i32(&ab, &[b, 2]),
+                    TensorView::f32(&hb, &[b, r]),
+                    TensorView::f32(&cb, &[b, r]),
+                ],
+            )
+            .unwrap();
+    });
+
+    let ctrl_ms = bench("ctrl_policy_1 (cached theta)", 50, || {
+        let _ = backend
+            .exec_with_params(
+                "ctrl_policy_1",
+                &ctrl,
+                &[TensorView::f32(&z1, &[1, zdim]), TensorView::f32(&h1, &[1, r])],
+            )
             .unwrap();
     });
 
@@ -142,25 +161,27 @@ fn main() -> anyhow::Result<()> {
     // dream acting step = (policy_b + wm_step_b) / B_DREAM.
     let mut env = Env::new(bert.clone(), &rules, &cost, EnvConfig::default());
     let mut rng = Rng::new(0);
-    let theta_gnn = engine.device_theta(&gnn).unwrap();
-    let theta_wm = engine.device_theta(&wm).unwrap();
     let t0 = Instant::now();
     let mut steps = 0usize;
     while steps < 10 {
-        let e = encoder.encode(env.graph());
-        let _z = engine
-            .exec_with_theta(
+        let es = benc.encode(env.graph());
+        let _z = backend
+            .exec_with_params(
                 "gnn_encode_1",
-                &theta_gnn,
+                &gnn,
                 &[
-                    lit_f32(&e.feats, &[1, n, f]).unwrap(),
-                    lit_f32(&e.adj, &[1, n, n]).unwrap(),
-                    lit_f32(&e.mask, &[1, n]).unwrap(),
+                    TensorView::f32(&es.feats, &[1, n, f]),
+                    TensorView::f32(&es.adj, &[1, n, n]),
+                    TensorView::f32(&es.mask, &[1, n]),
                 ],
             )
             .unwrap();
-        let _pol = engine
-            .exec_with_theta("ctrl_policy_1", &theta_ctrl, &[z1.clone(), h1.clone()])
+        let _pol = backend
+            .exec_with_params(
+                "ctrl_policy_1",
+                &ctrl,
+                &[TensorView::f32(&z1, &[1, zdim]), TensorView::f32(&h1, &[1, r])],
+            )
             .unwrap();
         let obs = env.observe();
         let valid: Vec<usize> = (0..rules.len()).filter(|&i| obs.xfer_mask[i]).collect();
@@ -171,8 +192,17 @@ fn main() -> anyhow::Result<()> {
         let x = valid[rng.below(valid.len())];
         let l = rng.below(obs.location_counts[x].max(1));
         let res = env.step((x, l));
-        let _wm = engine
-            .exec_with_theta("wm_step_1", &theta_wm, &[z1.clone(), a1.clone(), h1.clone(), c1.clone()])
+        let _wm = backend
+            .exec_with_params(
+                "wm_step_1",
+                &wm,
+                &[
+                    TensorView::f32(&z1, &[1, zdim]),
+                    TensorView::i32(&a1, &[1, 2]),
+                    TensorView::f32(&h1, &[1, r]),
+                    TensorView::f32(&c1, &[1, r]),
+                ],
+            )
             .unwrap();
         steps += 1;
         if res.done {
@@ -182,17 +212,30 @@ fn main() -> anyhow::Result<()> {
     let real_ms = t0.elapsed().as_secs_f64() / steps as f64 * 1e3;
     let t0 = Instant::now();
     for _ in 0..20 {
-        let _pol = engine
-            .exec_with_theta("ctrl_policy_b", &theta_ctrl, &[zb.clone(), hb.clone()])
+        let _pol = backend
+            .exec_with_params(
+                "ctrl_policy_b",
+                &ctrl,
+                &[TensorView::f32(&zb, &[b, zdim]), TensorView::f32(&hb, &[b, r])],
+            )
             .unwrap();
-        let _wm = engine
-            .exec_with_theta("wm_step_b", &theta_wm, &[zb.clone(), ab.clone(), hb.clone(), cb.clone()])
+        let _wm = backend
+            .exec_with_params(
+                "wm_step_b",
+                &wm,
+                &[
+                    TensorView::f32(&zb, &[b, zdim]),
+                    TensorView::i32(&ab, &[b, 2]),
+                    TensorView::f32(&hb, &[b, r]),
+                    TensorView::f32(&cb, &[b, r]),
+                ],
+            )
             .unwrap();
     }
     let dream_ms = t0.elapsed().as_secs_f64() / (20 * b) as f64 * 1e3;
     println!("  real acting step (BERT)      {:>10.3} ms", real_ms);
     println!("  dream acting step (/B={b})   {:>10.3} ms", dream_ms);
     println!("  ratio                        {:>10.1}x", real_ms / dream_ms);
-    let _ = (wm_step_ms, ctrl_cached_ms);
+    let _ = (wm_step_ms, ctrl_ms);
     Ok(())
 }

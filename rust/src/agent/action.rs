@@ -1,0 +1,129 @@
+//! The single source of truth for the action space: slot-space actions and
+//! the NO-OP mapping between the learned models' fixed slot space and the
+//! environment's rule indices.
+//!
+//! The models act in *slot space*: `N_XFERS1` transformation slots with the
+//! NO-OP pinned to the **last** slot (the AOT artifacts reserve the slot
+//! count at export time; the rule library may be smaller). The environment
+//! uses *rule space*: rule indices `0..rules.len()` with NO-OP at
+//! `rules.len()`. Before this type, that mapping lived in three places
+//! (`PolicyDims::noop`, `DreamEnv::noop`, `Pipeline::to_env_action`);
+//! [`ActionSpace`] now owns both directions.
+
+/// A `(transformation slot, location)` action in the models' slot space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Action {
+    pub slot: usize,
+    pub loc: usize,
+}
+
+impl Action {
+    pub fn new(slot: usize, loc: usize) -> Self {
+        Self { slot, loc }
+    }
+
+    /// The raw `(slot, loc)` pair (world-model embeddings, episode storage).
+    pub fn pair(self) -> (usize, usize) {
+        (self.slot, self.loc)
+    }
+}
+
+/// Slot-space geometry plus the environment-side NO-OP index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ActionSpace {
+    n_slots: usize,
+    env_noop: usize,
+}
+
+impl ActionSpace {
+    /// `n_slots` = N_XFERS1 (incl. NO-OP); `env_noop` = the environment's
+    /// NO-OP action id (`rules.len()`).
+    pub fn new(n_slots: usize, env_noop: usize) -> Self {
+        assert!(n_slots >= 1, "action space needs at least the NO-OP slot");
+        assert!(
+            env_noop < n_slots,
+            "env rule count {env_noop} does not fit {n_slots} slots (incl. NO-OP)"
+        );
+        Self { n_slots, env_noop }
+    }
+
+    /// Slot-space-only view for contexts with no real environment (dream
+    /// rollouts): every non-NO-OP slot maps to itself.
+    pub fn slots_only(n_slots: usize) -> Self {
+        Self::new(n_slots, n_slots - 1)
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.n_slots
+    }
+
+    /// The NO-OP slot: always the last one.
+    pub fn noop_slot(&self) -> usize {
+        self.n_slots - 1
+    }
+
+    pub fn noop(&self) -> Action {
+        Action::new(self.noop_slot(), 0)
+    }
+
+    pub fn is_noop(&self, a: Action) -> bool {
+        a.slot == self.noop_slot()
+    }
+
+    /// Slot action -> environment `(xfer, loc)` action (NO-OP remaps to the
+    /// environment's `rules.len()` id).
+    pub fn to_env(&self, a: Action) -> (usize, usize) {
+        if self.is_noop(a) {
+            (self.env_noop, 0)
+        } else {
+            (a.slot, a.loc)
+        }
+    }
+
+    /// Environment action -> slot action (inverse of [`ActionSpace::to_env`]).
+    pub fn from_env(&self, (xfer, loc): (usize, usize)) -> Action {
+        if xfer == self.env_noop {
+            self.noop()
+        } else {
+            Action::new(xfer, loc)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noop_is_last_slot() {
+        let s = ActionSpace::new(49, 40);
+        assert_eq!(s.noop_slot(), 48);
+        assert_eq!(s.noop(), Action::new(48, 0));
+        assert!(s.is_noop(Action::new(48, 7)));
+        assert!(!s.is_noop(Action::new(0, 0)));
+    }
+
+    #[test]
+    fn env_round_trip() {
+        let s = ActionSpace::new(49, 40);
+        // Ordinary actions pass through unchanged.
+        assert_eq!(s.to_env(Action::new(3, 17)), (3, 17));
+        assert_eq!(s.from_env((3, 17)), Action::new(3, 17));
+        // NO-OP remaps slot 48 <-> env id 40.
+        assert_eq!(s.to_env(s.noop()), (40, 0));
+        assert_eq!(s.from_env((40, 5)), s.noop());
+    }
+
+    #[test]
+    fn slots_only_maps_noop_to_itself() {
+        let s = ActionSpace::slots_only(5);
+        assert_eq!(s.to_env(s.noop()), (4, 0));
+        assert_eq!(s.to_env(Action::new(2, 9)), (2, 9));
+    }
+
+    #[test]
+    #[should_panic(expected = "does not fit")]
+    fn env_noop_must_fit_slot_space() {
+        let _ = ActionSpace::new(5, 5);
+    }
+}

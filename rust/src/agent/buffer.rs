@@ -33,7 +33,14 @@ impl CompactState {
     }
 
     /// Write dense (feats, adj, mask) rows into per-sample slices of a batch.
-    pub fn write_dense(&self, n: usize, f: usize, feats: &mut [f32], adj: &mut [f32], mask: &mut [f32]) {
+    pub fn write_dense(
+        &self,
+        n: usize,
+        f: usize,
+        feats: &mut [f32],
+        adj: &mut [f32],
+        mask: &mut [f32],
+    ) {
         debug_assert_eq!(feats.len(), n * f);
         debug_assert_eq!(adj.len(), n * n);
         debug_assert_eq!(mask.len(), n);
@@ -82,7 +89,13 @@ impl Episode {
 
 /// Generalised Advantage Estimation over one episode's rewards/values.
 /// `values` has length T+1 (bootstrap value of the final state).
-pub fn gae(rewards: &[f32], values: &[f32], dones: &[f32], gamma: f32, lam: f32) -> (Vec<f32>, Vec<f32>) {
+pub fn gae(
+    rewards: &[f32],
+    values: &[f32],
+    dones: &[f32],
+    gamma: f32,
+    lam: f32,
+) -> (Vec<f32>, Vec<f32>) {
     let t_len = rewards.len();
     assert_eq!(values.len(), t_len + 1);
     assert_eq!(dones.len(), t_len);

@@ -1,12 +1,15 @@
-//! Agents: rollout storage, the random data-collection agent, masked
-//! policy acting over the controller artifacts, and the PPO update driver.
+//! Agents: rollout storage, the random data-collection agent, the typed
+//! action space, masked policy acting over the controller programs, and
+//! the PPO update driver.
 
+pub mod action;
 pub mod buffer;
 pub mod policy;
 pub mod ppo;
 pub mod random;
 
+pub use action::{Action, ActionSpace};
 pub use buffer::{gae, CompactState, Episode};
-pub use policy::{act_batch, masked_log_softmax, ActOut, PolicyDims};
-pub use ppo::{ppo_update, PpoBuffer, PpoCfg, PpoStats};
+pub use policy::{masked_log_softmax, ActOut, ObsBatch, PolicyDims, PolicyNet};
+pub use ppo::{ppo_update, PpoBatch, PpoBuffer, PpoCfg, PpoStats};
 pub use random::{collect_one, collect_random_episodes, collect_random_pool};

@@ -1,12 +1,19 @@
 //! Controller acting: masked two-step (xfer, location) sampling on top of
-//! the `ctrl_policy_*` artifacts (§3.1.3: "using the same trunk network, we
+//! the `ctrl_policy_*` programs (§3.1.3: "using the same trunk network, we
 //! first predict the transformation, apply the location mask for the
 //! selected transformation, then predict the location").
+//!
+//! [`PolicyNet`] is the typed acting API over any [`Backend`]: it owns the
+//! program choice (`ctrl_policy_1` for single states, `ctrl_policy_b` for
+//! dream batches), the masked sampling, and the guarantee that the NO-OP
+//! slot is always selectable — a row whose predicted xfer mask is entirely
+//! invalid would otherwise sample an arbitrary action with `logp = -inf`
+//! and poison the PPO buffer.
 
-use xla::Literal;
-
-use crate::runtime::{lit_f32, to_vec_f32, Engine, ParamStore};
+use crate::runtime::{Backend, Manifest, ParamStore, TensorView};
 use crate::util::Rng;
+
+use super::action::{Action, ActionSpace};
 
 /// Numerically stable masked log-softmax (masked entries -> -inf).
 pub fn masked_log_softmax(logits: &[f32], mask: &[bool]) -> Vec<f32> {
@@ -49,7 +56,7 @@ fn argmax_masked(logits: &[f32], mask: &[bool]) -> usize {
 
 #[derive(Debug, Clone)]
 pub struct ActOut {
-    pub action: (usize, usize),
+    pub action: Action,
     pub logp: f32,
     pub value: f32,
 }
@@ -64,7 +71,7 @@ pub struct PolicyDims {
 }
 
 impl PolicyDims {
-    pub fn from_manifest(m: &crate::runtime::Manifest) -> anyhow::Result<Self> {
+    pub fn from_manifest(m: &Manifest) -> anyhow::Result<Self> {
         Ok(Self {
             zdim: m.hp_usize("LATENT")?,
             rdim: m.hp_usize("RNN_HIDDEN")?,
@@ -72,66 +79,112 @@ impl PolicyDims {
             max_locs: m.hp_usize("MAX_LOCS")?,
         })
     }
-
-    pub fn noop(&self) -> usize {
-        self.x1 - 1
-    }
 }
 
-/// Run the batched policy artifact and sample per-row actions.
-///
-/// `xmask`: `b * x1` validity (>=0.5 is valid). `loc_mask(row, xfer)` gives
-/// the location mask for that row's chosen xfer.
-#[allow(clippy::too_many_arguments)]
-pub fn act_batch(
-    engine: &Engine,
-    artifact: &str,
-    dims: &PolicyDims,
-    ctrl: &ParamStore,
-    z: &[f32],
-    h: &[f32],
-    xmask: &[f32],
-    loc_mask: impl Fn(usize, usize) -> Vec<bool>,
-    rng: &mut Rng,
-    greedy: bool,
-) -> anyhow::Result<Vec<ActOut>> {
-    let b = z.len() / dims.zdim;
-    anyhow::ensure!(h.len() == b * dims.rdim && xmask.len() == b * dims.x1, "act_batch: bad arg sizes");
-    let theta = engine.device_theta(ctrl)?;
-    let rest: Vec<Literal> = vec![
-        lit_f32(z, &[b, dims.zdim])?,
-        lit_f32(h, &[b, dims.rdim])?,
-    ];
-    let out = engine.exec_with_theta(artifact, &theta, &rest)?;
-    let xlogits = to_vec_f32(&out[0])?;
-    let llogits = to_vec_f32(&out[1])?;
-    let values = to_vec_f32(&out[2])?;
+/// One acting batch: latents, recurrent context and per-row xfer validity,
+/// all row-major (`b * zdim`, `b * rdim`, `b * x1`).
+#[derive(Debug, Clone, Copy)]
+pub struct ObsBatch<'a> {
+    pub z: &'a [f32],
+    pub h: &'a [f32],
+    pub xmask: &'a [f32],
+}
 
-    let mut results = Vec::with_capacity(b);
-    for row in 0..b {
-        let xl = &xlogits[row * dims.x1..(row + 1) * dims.x1];
-        let xm: Vec<bool> = xmask[row * dims.x1..(row + 1) * dims.x1]
-            .iter()
-            .map(|&m| m >= 0.5)
-            .collect();
-        let x_lsm = masked_log_softmax(xl, &xm);
-        let x = if greedy { argmax_masked(xl, &xm) } else { rng.sample_logits_masked(xl, &xm) };
-        let mut logp = x_lsm[x];
+/// Typed acting API over the controller programs of any backend.
+pub struct PolicyNet<'b> {
+    pub backend: &'b dyn Backend,
+    pub dims: PolicyDims,
+    /// Slot-space geometry (NO-OP handling during sampling).
+    pub space: ActionSpace,
+    /// Batch width of the `ctrl_policy_b` program (B_DREAM).
+    pub batch_b: usize,
+}
 
-        let action = if x == dims.noop() {
-            (x, 0)
-        } else {
-            let lm = loc_mask(row, x);
-            let base = (row * dims.x1 + x) * dims.max_locs;
-            let ll = &llogits[base..base + dims.max_locs];
-            let l_lsm = masked_log_softmax(ll, &lm);
-            let l = if greedy { argmax_masked(ll, &lm) } else { rng.sample_logits_masked(ll, &lm) };
-            logp += l_lsm[l];
-            (x, l)
-        };
-        results.push(ActOut { action, logp, value: values[row] });
+impl<'b> PolicyNet<'b> {
+    pub fn new(backend: &'b dyn Backend) -> anyhow::Result<Self> {
+        let dims = PolicyDims::from_manifest(backend.manifest())?;
+        Ok(Self {
+            backend,
+            dims,
+            space: ActionSpace::slots_only(dims.x1),
+            batch_b: backend.hp("B_DREAM")?,
+        })
     }
-    Ok(results)
+
+    /// Run the policy program and sample per-row actions.
+    ///
+    /// `obs.xmask`: `b * x1` validity (>= 0.5 is valid); the NO-OP slot is
+    /// forced valid regardless, exactly as the dream env does.
+    /// `loc_mask(row, xfer)` gives the location mask for that row's chosen
+    /// xfer.
+    pub fn act_batch(
+        &self,
+        ctrl: &ParamStore,
+        obs: &ObsBatch,
+        loc_mask: impl Fn(usize, usize) -> Vec<bool>,
+        rng: &mut Rng,
+        greedy: bool,
+    ) -> anyhow::Result<Vec<ActOut>> {
+        let dims = &self.dims;
+        let b = obs.z.len() / dims.zdim.max(1);
+        anyhow::ensure!(
+            obs.z.len() == b * dims.zdim
+                && obs.h.len() == b * dims.rdim
+                && obs.xmask.len() == b * dims.x1,
+            "act_batch: bad obs sizes"
+        );
+        let program = if b == 1 {
+            "ctrl_policy_1"
+        } else if b == self.batch_b {
+            "ctrl_policy_b"
+        } else {
+            anyhow::bail!("act_batch: batch {b} matches neither 1 nor B_DREAM {}", self.batch_b)
+        };
+        let out = self.backend.exec_with_params(
+            program,
+            ctrl,
+            &[
+                TensorView::f32(obs.z, &[b, dims.zdim]),
+                TensorView::f32(obs.h, &[b, dims.rdim]),
+            ],
+        )?;
+        let xlogits = &out[0].data;
+        let llogits = &out[1].data;
+        let values = &out[2].data;
+
+        let noop = self.space.noop_slot();
+        let mut results = Vec::with_capacity(b);
+        for row in 0..b {
+            let xl = &xlogits[row * dims.x1..(row + 1) * dims.x1];
+            // Force the NO-OP slot valid: an all-masked row (possible when
+            // the dream env's mask head predicts nothing valid) must
+            // degrade to "terminate" with a finite logp, not an arbitrary
+            // uniform action at logp = -inf.
+            let xm: Vec<bool> = obs.xmask[row * dims.x1..(row + 1) * dims.x1]
+                .iter()
+                .enumerate()
+                .map(|(i, &m)| i == noop || m >= 0.5)
+                .collect();
+            let x_lsm = masked_log_softmax(xl, &xm);
+            let x = if greedy { argmax_masked(xl, &xm) } else { rng.sample_logits_masked(xl, &xm) };
+            let mut logp = x_lsm[x];
+
+            let action = if x == noop {
+                Action::new(x, 0)
+            } else {
+                let lm = loc_mask(row, x);
+                let base = (row * dims.x1 + x) * dims.max_locs;
+                let ll = &llogits[base..base + dims.max_locs];
+                let l_lsm = masked_log_softmax(ll, &lm);
+                let l =
+                    if greedy { argmax_masked(ll, &lm) } else { rng.sample_logits_masked(ll, &lm) };
+                logp += l_lsm[l];
+                Action::new(x, l)
+            };
+            results.push(ActOut { action, logp, value: values[row] });
+        }
+        Ok(results)
+    }
 }
 
 #[cfg(test)]
@@ -155,5 +208,59 @@ mod tests {
     #[test]
     fn argmax_respects_mask() {
         assert_eq!(argmax_masked(&[5.0, 9.0, 1.0], &[true, false, true]), 0);
+    }
+
+    #[test]
+    fn all_masked_row_falls_back_to_noop() {
+        // Regression (satellite): a row whose xfer mask is entirely invalid
+        // must force the NO-OP slot and report a finite logp.
+        let backend = crate::runtime::HostBackend::with_config(crate::runtime::HostConfig {
+            max_nodes: 8,
+            node_feats: 24,
+            gnn_hidden: 4,
+            latent: 4,
+            rnn_hidden: 4,
+            mdn_k: 2,
+            act_emb: 2,
+            ctrl_hidden: 4,
+            n_xfers1: 5,
+            max_locs: 6,
+            b_dream: 2,
+            b_wm: 2,
+            seq_len: 2,
+            b_ppo: 4,
+            b_enc: 2,
+        });
+        let policy = PolicyNet::new(&backend).unwrap();
+        let ctrl = ParamStore::init(&backend, "ctrl", 0).unwrap();
+        let z = vec![0.1f32; 2 * 4];
+        let h = vec![0.0f32; 2 * 4];
+        let xmask = vec![0.0f32; 2 * 5]; // every slot invalid on both rows
+        let mut rng = Rng::new(3);
+        let acts = policy
+            .act_batch(
+                &ctrl,
+                &ObsBatch { z: &z, h: &h, xmask: &xmask },
+                |_, _| vec![true; 6],
+                &mut rng,
+                false,
+            )
+            .unwrap();
+        for a in &acts {
+            assert_eq!(a.action, policy.space.noop(), "must fall back to NO-OP");
+            assert!(a.logp.is_finite(), "logp must stay finite, got {}", a.logp);
+            assert!((a.logp - 0.0).abs() < 1e-5, "NO-OP is the only valid slot: logp ~ ln(1)");
+        }
+        // Greedy path takes the same fallback.
+        let acts = policy
+            .act_batch(
+                &ctrl,
+                &ObsBatch { z: &z, h: &h, xmask: &xmask },
+                |_, _| vec![true; 6],
+                &mut rng,
+                true,
+            )
+            .unwrap();
+        assert!(acts.iter().all(|a| a.action == policy.space.noop() && a.logp.is_finite()));
     }
 }

@@ -1,12 +1,11 @@
 //! PPO update driver: assembles fixed-size batches and runs the
-//! `ctrl_train` artifact (clipped surrogate, entropy bonus — the loss lives
-//! in L2, this module owns batching and statistics).
+//! `ctrl_train` program (clipped surrogate, entropy bonus — the loss lives
+//! in the backend, this module owns batching and statistics).
 
-use xla::Literal;
-
-use crate::runtime::{lit_f32, lit_i32, lit_scalar_f32, scalar_f32, Engine, ParamStore};
+use crate::runtime::{Backend, ParamStore, TensorView};
 use crate::util::Rng;
 
+use super::action::Action;
 use super::policy::PolicyDims;
 
 #[derive(Debug, Clone, Copy)]
@@ -34,17 +33,48 @@ pub struct PpoStats {
     pub approx_kl: f32,
 }
 
-/// Accumulates transitions; `build` resamples to the artifact's fixed B.
+/// Accumulates transitions; `batch` resamples to the program's fixed B.
 #[derive(Debug, Default, Clone)]
 pub struct PpoBuffer {
     pub z: Vec<Vec<f32>>,
     pub h: Vec<Vec<f32>>,
-    pub act: Vec<(usize, usize)>,
+    pub act: Vec<Action>,
     pub logp: Vec<f32>,
     pub adv: Vec<f32>,
     pub ret: Vec<f32>,
     pub xmask: Vec<Vec<f32>>,
     pub lmask: Vec<Vec<f32>>,
+}
+
+/// An owned, fixed-size `ctrl_train` batch; [`PpoBatch::views`] borrows it
+/// as the eight tensor arguments following `(theta, m, v, t)`.
+pub struct PpoBatch {
+    pub b: usize,
+    dims: PolicyDims,
+    z: Vec<f32>,
+    h: Vec<f32>,
+    act: Vec<i32>,
+    logp: Vec<f32>,
+    adv: Vec<f32>,
+    ret: Vec<f32>,
+    xm: Vec<f32>,
+    lm: Vec<f32>,
+}
+
+impl PpoBatch {
+    pub fn views(&self) -> Vec<TensorView<'_>> {
+        let (b, d) = (self.b, &self.dims);
+        vec![
+            TensorView::f32(&self.z, &[b, d.zdim]),
+            TensorView::f32(&self.h, &[b, d.rdim]),
+            TensorView::i32(&self.act, &[b, 2]),
+            TensorView::f32(&self.logp, &[b]),
+            TensorView::f32(&self.adv, &[b]),
+            TensorView::f32(&self.ret, &[b]),
+            TensorView::f32(&self.xm, &[b, d.x1]),
+            TensorView::f32(&self.lm, &[b, d.max_locs]),
+        ]
+    }
 }
 
 impl PpoBuffer {
@@ -61,7 +91,7 @@ impl PpoBuffer {
         &mut self,
         z: Vec<f32>,
         h: Vec<f32>,
-        act: (usize, usize),
+        act: Action,
         logp: f32,
         adv: f32,
         ret: f32,
@@ -82,14 +112,14 @@ impl PpoBuffer {
         *self = Self::default();
     }
 
-    /// Materialise the fixed-size artifact batch (sampling with replacement
+    /// Materialise the fixed-size train batch (sampling with replacement
     /// when fewer than `b_ppo` transitions are available).
-    pub fn build_args(
+    pub fn batch(
         &self,
         dims: &PolicyDims,
         b_ppo: usize,
         rng: &mut Rng,
-    ) -> anyhow::Result<Vec<Literal>> {
+    ) -> anyhow::Result<PpoBatch> {
         anyhow::ensure!(!self.is_empty(), "empty PPO buffer");
         let idx: Vec<usize> = if self.len() >= b_ppo {
             let mut all: Vec<usize> = (0..self.len()).collect();
@@ -99,62 +129,59 @@ impl PpoBuffer {
         } else {
             (0..b_ppo).map(|_| rng.below(self.len())).collect()
         };
-        let mut z = Vec::with_capacity(b_ppo * dims.zdim);
-        let mut h = Vec::with_capacity(b_ppo * dims.rdim);
-        let mut act = Vec::with_capacity(b_ppo * 2);
-        let mut logp = Vec::with_capacity(b_ppo);
-        let mut adv = Vec::with_capacity(b_ppo);
-        let mut ret = Vec::with_capacity(b_ppo);
-        let mut xm = Vec::with_capacity(b_ppo * dims.x1);
-        let mut lm = Vec::with_capacity(b_ppo * dims.max_locs);
+        let mut batch = PpoBatch {
+            b: b_ppo,
+            dims: *dims,
+            z: Vec::with_capacity(b_ppo * dims.zdim),
+            h: Vec::with_capacity(b_ppo * dims.rdim),
+            act: Vec::with_capacity(b_ppo * 2),
+            logp: Vec::with_capacity(b_ppo),
+            adv: Vec::with_capacity(b_ppo),
+            ret: Vec::with_capacity(b_ppo),
+            xm: Vec::with_capacity(b_ppo * dims.x1),
+            lm: Vec::with_capacity(b_ppo * dims.max_locs),
+        };
         for &i in &idx {
-            z.extend_from_slice(&self.z[i]);
-            h.extend_from_slice(&self.h[i]);
-            act.push(self.act[i].0 as i32);
-            act.push(self.act[i].1 as i32);
-            logp.push(self.logp[i]);
-            adv.push(self.adv[i]);
-            ret.push(self.ret[i]);
-            xm.extend_from_slice(&self.xmask[i]);
-            lm.extend_from_slice(&self.lmask[i]);
+            batch.z.extend_from_slice(&self.z[i]);
+            batch.h.extend_from_slice(&self.h[i]);
+            batch.act.push(self.act[i].slot as i32);
+            batch.act.push(self.act[i].loc as i32);
+            batch.logp.push(self.logp[i]);
+            batch.adv.push(self.adv[i]);
+            batch.ret.push(self.ret[i]);
+            batch.xm.extend_from_slice(&self.xmask[i]);
+            batch.lm.extend_from_slice(&self.lmask[i]);
         }
-        Ok(vec![
-            lit_f32(&z, &[b_ppo, dims.zdim])?,
-            lit_f32(&h, &[b_ppo, dims.rdim])?,
-            lit_i32(&act, &[b_ppo, 2])?,
-            lit_f32(&logp, &[b_ppo])?,
-            lit_f32(&adv, &[b_ppo])?,
-            lit_f32(&ret, &[b_ppo])?,
-            lit_f32(&xm, &[b_ppo, dims.x1])?,
-            lit_f32(&lm, &[b_ppo, dims.max_locs])?,
-        ])
+        Ok(batch)
     }
 }
 
 /// One PPO update: `cfg.epochs` gradient steps on resampled batches.
 pub fn ppo_update(
-    engine: &Engine,
+    backend: &dyn Backend,
     ctrl: &mut ParamStore,
     buffer: &PpoBuffer,
     dims: &PolicyDims,
     cfg: &PpoCfg,
     rng: &mut Rng,
 ) -> anyhow::Result<PpoStats> {
-    let b_ppo = engine.manifest.hp_usize("B_PPO")?;
+    let b_ppo = backend.hp("B_PPO")?;
     let mut stats = PpoStats::default();
     for _ in 0..cfg.epochs {
-        let mut args = ctrl.train_args()?;
-        args.extend(buffer.build_args(dims, b_ppo, rng)?);
-        args.push(lit_scalar_f32(cfg.lr));
-        args.push(lit_scalar_f32(cfg.clip));
-        args.push(lit_scalar_f32(cfg.ent_coef));
-        let out = engine.exec("ctrl_train", &args)?;
+        let batch = buffer.batch(dims, b_ppo, rng)?;
+        let mut args = ctrl.train_args();
+        args.extend(batch.views());
+        args.push(TensorView::ScalarF32(cfg.lr));
+        args.push(TensorView::ScalarF32(cfg.clip));
+        args.push(TensorView::ScalarF32(cfg.ent_coef));
+        let out = backend.exec("ctrl_train", &args)?;
+        drop(args);
         ctrl.absorb(&out)?;
         stats = PpoStats {
-            pi_loss: scalar_f32(&out[4])?,
-            v_loss: scalar_f32(&out[5])?,
-            entropy: scalar_f32(&out[6])?,
-            approx_kl: scalar_f32(&out[7])?,
+            pi_loss: out[4].data[0],
+            v_loss: out[5].data[0],
+            entropy: out[6].data[0],
+            approx_kl: out[7].data[0],
         };
     }
     Ok(stats)
@@ -173,7 +200,7 @@ mod tests {
             buf.push(
                 vec![i as f32; 4],
                 vec![0.0; 8],
-                (i % 5, i % 10),
+                Action::new(i % 5, i % 10),
                 -1.0,
                 0.5,
                 1.0,
@@ -184,29 +211,30 @@ mod tests {
     }
 
     #[test]
-    fn build_args_pads_small_buffers() {
+    fn batch_pads_small_buffers() {
         let mut buf = PpoBuffer::default();
         push_n(&mut buf, 3);
         let mut rng = Rng::new(0);
-        let args = buf.build_args(&dims(), 16, &mut rng).unwrap();
-        assert_eq!(args.len(), 8);
-        assert_eq!(args[0].element_count(), 16 * 4);
-        assert_eq!(args[2].element_count(), 16 * 2);
+        let batch = buf.batch(&dims(), 16, &mut rng).unwrap();
+        let views = batch.views();
+        assert_eq!(views.len(), 8);
+        assert_eq!(views[0].n_elems(), 16 * 4);
+        assert_eq!(views[2].n_elems(), 16 * 2);
     }
 
     #[test]
-    fn build_args_subsamples_large_buffers() {
+    fn batch_subsamples_large_buffers() {
         let mut buf = PpoBuffer::default();
         push_n(&mut buf, 100);
         let mut rng = Rng::new(1);
-        let args = buf.build_args(&dims(), 16, &mut rng).unwrap();
-        assert_eq!(args[4].element_count(), 16);
+        let batch = buf.batch(&dims(), 16, &mut rng).unwrap();
+        assert_eq!(batch.views()[4].n_elems(), 16);
     }
 
     #[test]
     fn empty_buffer_errors() {
         let buf = PpoBuffer::default();
         let mut rng = Rng::new(2);
-        assert!(buf.build_args(&dims(), 16, &mut rng).is_err());
+        assert!(buf.batch(&dims(), 16, &mut rng).is_err());
     }
 }

@@ -58,6 +58,7 @@ pub fn collect_one(
     rng: &mut Rng,
 ) -> Episode {
     assert!(n_slots > env.rules.len(), "slot space smaller than rule set");
+    let space = crate::agent::ActionSpace::new(n_slots, env.noop_action());
     env.reset();
     let mut ep = Episode::default();
     loop {
@@ -69,15 +70,15 @@ pub fn collect_one(
         let valid: Vec<usize> = (0..env.rules.len())
             .filter(|&i| obs.xfer_mask[i])
             .collect();
-        let (env_action, slot_action) = if valid.is_empty() || rng.f32() < noop_prob {
-            ((env.noop_action(), 0), (n_slots - 1, 0))
+        let slot_action = if valid.is_empty() || rng.f32() < noop_prob {
+            space.noop()
         } else {
             let x = valid[rng.below(valid.len())];
             let l = rng.below(obs.location_counts[x].max(1));
-            ((x, l), (x, l))
+            crate::agent::Action::new(x, l)
         };
-        let res = env.step(env_action);
-        ep.actions.push((slot_action.0 as u16, slot_action.1 as u16));
+        let res = env.step(space.to_env(slot_action));
+        ep.actions.push((slot_action.slot as u16, slot_action.loc as u16));
         ep.rewards.push(res.reward);
         ep.dones.push(if res.done { 1.0 } else { 0.0 });
         if res.done {

@@ -14,6 +14,9 @@ use crate::wm::WmTrainCfg;
 pub struct RunConfig {
     pub seed: u64,
     pub graph: String,
+    /// Model-execution backend: "host" (pure Rust, offline), "pjrt" (AOT
+    /// artifacts) or "auto" (pjrt when artifacts exist, host otherwise).
+    pub backend: String,
     pub device: DeviceProfile,
     /// Multiplicative measurement-noise std (0 disables).
     pub cost_noise: f64,
@@ -48,6 +51,7 @@ impl Default for RunConfig {
         Self {
             seed: 42,
             graph: "bert".into(),
+            backend: "auto".into(),
             device: DeviceProfile::rtx2070(),
             cost_noise: 0.0,
             env: EnvConfig::default(),
@@ -104,6 +108,7 @@ impl RunConfig {
             match key.as_str() {
                 "seed" => self.seed = value.as_usize()? as u64,
                 "graph" => self.graph = value.as_str()?.to_string(),
+                "backend" => self.backend = value.as_str()?.to_string(),
                 "device" => {
                     self.device = match value.as_str()? {
                         "rtx2070" => DeviceProfile::rtx2070(),
@@ -169,7 +174,8 @@ mod tests {
     #[test]
     fn json_overrides_apply() {
         let mut cfg = RunConfig::default();
-        let j = parse(r#"{"graph": "vit", "temperature": 1.5, "wm_steps": 77, "reward": "r5"}"#).unwrap();
+        let j = parse(r#"{"graph": "vit", "temperature": 1.5, "wm_steps": 77, "reward": "r5"}"#)
+            .unwrap();
         cfg.apply_json(&j).unwrap();
         assert_eq!(cfg.graph, "vit");
         assert_eq!(cfg.temperature, 1.5);
@@ -195,6 +201,8 @@ mod tests {
         assert!(cfg.eval_greedy);
         cfg.apply_override("envs=8").unwrap();
         assert_eq!(cfg.envs, 8);
+        cfg.apply_override("backend=host").unwrap();
+        assert_eq!(cfg.backend, "host");
         assert!(cfg.apply_override("nonsense").is_err());
     }
 }

@@ -1,5 +1,7 @@
 //! The coordinator: end-to-end training/evaluation pipelines (Fig. 2's
-//! data flow) built on the runtime engine and the environment.
+//! data flow) built on the backend seam ([`crate::runtime::Backend`]) and
+//! the environment — the same pipeline runs on the PJRT artifacts or the
+//! pure-Rust host backend.
 //!
 //! Model-based pipeline (the paper's RLFlow agent):
 //!   1. random rollouts in the real env          -> `collect`
@@ -26,8 +28,8 @@ pub fn worker_seeds(root: u64, n: usize) -> Vec<u64> {
 
 /// Collect random episodes from a batch of `n_envs` identical
 /// environments driven through [`crate::env::EnvPool`] on `n_workers`
-/// scoped threads (the PJRT engine is never touched here, so collection
-/// scales across cores while encoding stays on the engine thread). All
+/// scoped threads (no backend is touched here, so collection scales
+/// across cores while encoding stays on the backend thread). All
 /// environments share one read-only cost-cache snapshot; the episode set
 /// is bit-identical for any worker count given a fixed seed.
 #[allow(clippy::too_many_arguments)]

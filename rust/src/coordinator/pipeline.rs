@@ -1,24 +1,25 @@
-//! Pipeline stages. One `Pipeline` owns the engine handle and the state
-//! encoder; every stage is a pure function over parameter stores +
-//! episodes, so the CLI, the examples and the experiment drivers compose
-//! them freely.
+//! Pipeline stages. One `Pipeline` owns the backend handle, the typed
+//! policy/world-model APIs and the state encoder; every stage is a pure
+//! function over parameter stores + episodes, so the CLI, the examples and
+//! the experiment drivers compose them freely — on either backend.
 
 use std::time::Instant;
 
-use xla::Literal;
-
 use crate::agent::{
-    act_batch, gae, Episode, PolicyDims, PpoBuffer, PpoCfg, PpoStats,
+    gae, Action, ActionSpace, Episode, ObsBatch, PolicyDims, PolicyNet, PpoBuffer, PpoCfg,
+    PpoStats,
 };
 use crate::env::{Env, EnvPool, StateEncoder};
 use crate::graph::Graph;
-use crate::runtime::{lit_f32, lit_scalar_f32, scalar_f32, to_vec_f32, Engine, ParamStore};
+use crate::runtime::{Backend, ParamStore, TensorView};
 use crate::util::Rng;
-use crate::wm::{DreamEnv, WmLosses, WmTrainCfg, WmTrainer};
+use crate::wm::{DreamEnv, WmLosses, WmTrainCfg, WmTrainer, WorldModel};
 
 pub struct Pipeline<'e> {
-    pub engine: &'e Engine,
+    pub backend: &'e dyn Backend,
     pub dims: PolicyDims,
+    pub policy: PolicyNet<'e>,
+    pub world: WorldModel<'e>,
     pub encoder: StateEncoder,
     n: usize,
     f: usize,
@@ -38,54 +39,67 @@ pub struct EvalResult {
     pub best_graph: Option<Graph>,
 }
 
+/// Owned dense (feats, adj, mask) buffers for one GNN batch.
+struct StateBatch {
+    b: usize,
+    n: usize,
+    f: usize,
+    feats: Vec<f32>,
+    adj: Vec<f32>,
+    mask: Vec<f32>,
+}
+
+impl StateBatch {
+    fn views(&self) -> [TensorView<'_>; 3] {
+        [
+            TensorView::f32(&self.feats, &[self.b, self.n, self.f]),
+            TensorView::f32(&self.adj, &[self.b, self.n, self.n]),
+            TensorView::f32(&self.mask, &[self.b, self.n]),
+        ]
+    }
+}
+
 impl<'e> Pipeline<'e> {
-    pub fn new(engine: &'e Engine) -> anyhow::Result<Self> {
-        let n = engine.manifest.hp_usize("MAX_NODES")?;
-        let f = engine.manifest.hp_usize("NODE_FEATS")?;
+    pub fn new(backend: &'e dyn Backend) -> anyhow::Result<Self> {
+        let n = backend.hp("MAX_NODES")?;
+        let f = backend.hp("NODE_FEATS")?;
         Ok(Self {
-            engine,
-            dims: PolicyDims::from_manifest(&engine.manifest)?,
+            backend,
+            dims: PolicyDims::from_manifest(backend.manifest())?,
+            policy: PolicyNet::new(backend)?,
+            world: WorldModel::new(backend)?,
             encoder: StateEncoder::new(n, f),
             n,
             f,
-            b_enc: engine.manifest.hp_usize("B_ENC")?,
+            b_enc: backend.hp("B_ENC")?,
         })
-    }
-
-    /// Map an artifact-slot action to the environment action space
-    /// (NO-OP: last slot -> env.noop_action()).
-    pub fn to_env_action(&self, a: (usize, usize), env: &Env) -> (usize, usize) {
-        if a.0 == self.dims.noop() {
-            (env.noop_action(), 0)
-        } else {
-            a
-        }
     }
 
     // ------------------------------------------------------------------
     // Stage 2: GNN auto-encoder
     // ------------------------------------------------------------------
 
-    fn batch_states(&self, states: &[&crate::agent::CompactState]) -> anyhow::Result<[Literal; 3]> {
+    fn batch_states(&self, states: &[&crate::agent::CompactState]) -> StateBatch {
         let b = states.len();
         let (n, f) = (self.n, self.f);
-        let mut feats = vec![0.0f32; b * n * f];
-        let mut adj = vec![0.0f32; b * n * n];
-        let mut mask = vec![0.0f32; b * n];
+        let mut batch = StateBatch {
+            b,
+            n,
+            f,
+            feats: vec![0.0f32; b * n * f],
+            adj: vec![0.0f32; b * n * n],
+            mask: vec![0.0f32; b * n],
+        };
         for (i, s) in states.iter().enumerate() {
             s.write_dense(
                 n,
                 f,
-                &mut feats[i * n * f..(i + 1) * n * f],
-                &mut adj[i * n * n..(i + 1) * n * n],
-                &mut mask[i * n..(i + 1) * n],
+                &mut batch.feats[i * n * f..(i + 1) * n * f],
+                &mut batch.adj[i * n * n..(i + 1) * n * n],
+                &mut batch.mask[i * n..(i + 1) * n],
             );
         }
-        Ok([
-            lit_f32(&feats, &[b, n, f])?,
-            lit_f32(&adj, &[b, n, n])?,
-            lit_f32(&mask, &[b, n])?,
-        ])
+        batch
     }
 
     /// Train the graph auto-encoder on random state minibatches.
@@ -104,12 +118,14 @@ impl<'e> Pipeline<'e> {
         for _ in 0..steps {
             let batch: Vec<&crate::agent::CompactState> =
                 (0..self.b_enc).map(|_| pool[rng.below(pool.len())]).collect();
-            let [feats, adj, mask] = self.batch_states(&batch)?;
-            let mut args = gnn.train_args()?;
-            args.extend([feats, adj, mask, lit_scalar_f32(lr)]);
-            let out = self.engine.exec("gnn_ae_train", &args)?;
+            let state_batch = self.batch_states(&batch);
+            let mut args = gnn.train_args();
+            args.extend(state_batch.views());
+            args.push(TensorView::ScalarF32(lr));
+            let out = self.backend.exec("gnn_ae_train", &args)?;
+            drop(args);
             gnn.absorb(&out)?;
-            losses.push(scalar_f32(&out[4])?);
+            losses.push(out[4].data[0]);
         }
         Ok(losses)
     }
@@ -143,12 +159,9 @@ impl<'e> Pipeline<'e> {
             while states.len() < self.b_enc {
                 states.push(states[0]);
             }
-            let [feats, adj, mask] = self.batch_states(&states)?;
-            let theta = self.engine.device_theta(gnn)?;
-            let out = self
-                .engine
-                .exec_with_theta("gnn_encode_b", &theta, &[feats, adj, mask])?;
-            let zs = to_vec_f32(&out[0])?;
+            let batch = self.batch_states(&states);
+            let out = self.backend.exec_with_params("gnn_encode_b", gnn, &batch.views())?;
+            let zs = &out[0].data;
             let zd = self.dims.zdim;
             for (i, &(ei, si)) in chunk.iter().enumerate() {
                 episodes[ei].z[si] = zs[i * zd..(i + 1) * zd].to_vec();
@@ -160,17 +173,16 @@ impl<'e> Pipeline<'e> {
     /// Encode one live environment state (the acting path).
     pub fn encode_state(&self, gnn: &ParamStore, g: &Graph) -> anyhow::Result<Vec<f32>> {
         let e = self.encoder.encode(g);
-        let theta = self.engine.device_theta(gnn)?;
-        let out = self.engine.exec_with_theta(
+        let out = self.backend.exec_with_params(
             "gnn_encode_1",
-            &theta,
+            gnn,
             &[
-                lit_f32(&e.feats, &[1, self.n, self.f])?,
-                lit_f32(&e.adj, &[1, self.n, self.n])?,
-                lit_f32(&e.mask, &[1, self.n])?,
+                TensorView::f32(&e.feats, &[1, self.n, self.f]),
+                TensorView::f32(&e.adj, &[1, self.n, self.n]),
+                TensorView::f32(&e.mask, &[1, self.n]),
             ],
         )?;
-        to_vec_f32(&out[0])
+        Ok(out[0].data.clone())
     }
 
     // ------------------------------------------------------------------
@@ -184,7 +196,7 @@ impl<'e> Pipeline<'e> {
         cfg: &WmTrainCfg,
         rng: &mut Rng,
     ) -> anyhow::Result<Vec<WmLosses>> {
-        let trainer = WmTrainer::new(self.engine)?;
+        let trainer = WmTrainer::new(self.backend)?;
         let mut curve = Vec::with_capacity(cfg.total_steps);
         for step in 0..cfg.total_steps {
             let lr = cfg.lr_at(step);
@@ -225,7 +237,7 @@ impl<'e> Pipeline<'e> {
             .collect();
         anyhow::ensure!(!z0.is_empty(), "no encoded episodes to seed the dream");
 
-        let mut dream = DreamEnv::new(self.engine, temperature, reward_scale)?;
+        let mut dream = DreamEnv::new(self.backend, temperature, reward_scale)?;
         let all_locs = vec![1.0f32; self.dims.max_locs];
         let mut curve = Vec::with_capacity(epochs);
 
@@ -239,14 +251,9 @@ impl<'e> Pipeline<'e> {
                     break;
                 }
                 let alive: Vec<usize> = (0..b).filter(|&r| !dream.done[r]).collect();
-                let acts = act_batch(
-                    self.engine,
-                    "ctrl_policy_b",
-                    &self.dims,
+                let acts = self.policy.act_batch(
                     ctrl,
-                    &dream.z,
-                    &dream.h,
-                    &dream.xmask,
+                    &ObsBatch { z: &dream.z, h: &dream.h, xmask: &dream.xmask },
                     |_, _| all_locs.iter().map(|&v| v >= 0.5).collect(),
                     rng,
                     false,
@@ -254,7 +261,7 @@ impl<'e> Pipeline<'e> {
                 let pre_z: Vec<Vec<f32>> = (0..b).map(|r| dream.row_z(r)).collect();
                 let pre_h: Vec<Vec<f32>> = (0..b).map(|r| dream.row_h(r)).collect();
                 let pre_xm: Vec<Vec<f32>> = (0..b).map(|r| dream.row_xmask(r)).collect();
-                let actions: Vec<(usize, usize)> = acts.iter().map(|a| a.action).collect();
+                let actions: Vec<Action> = acts.iter().map(|a| a.action).collect();
                 let (rewards, dones) = dream.step(wm, &actions, rng)?;
                 for &r in &alive {
                     traj[r].push(
@@ -295,7 +302,8 @@ impl<'e> Pipeline<'e> {
                 }
             }
             if !buffer.is_empty() {
-                let _ = crate::agent::ppo_update(self.engine, ctrl, &buffer, &self.dims, ppo, rng)?;
+                let _ =
+                    crate::agent::ppo_update(self.backend, ctrl, &buffer, &self.dims, ppo, rng)?;
             }
             curve.push(if rows > 0 { epoch_reward / rows as f32 } else { 0.0 });
         }
@@ -307,10 +315,9 @@ impl<'e> Pipeline<'e> {
     // ------------------------------------------------------------------
 
     /// Run the trained controller against the real environment. When `wm`
-    /// is provided the recurrent context h advances through `wm_step_1`
-    /// (the paper's a_t = pi([z_t, h_t]) controller); with `None` the
-    /// model-free configuration (h = 0) is used.
-    #[allow(clippy::too_many_arguments)]
+    /// is provided the recurrent context h advances through the world
+    /// model (the paper's a_t = pi([z_t, h_t]) controller); with `None`
+    /// the model-free configuration (h = 0) is used.
     pub fn eval_real(
         &self,
         gnn: &ParamStore,
@@ -321,6 +328,7 @@ impl<'e> Pipeline<'e> {
         rng: &mut Rng,
     ) -> anyhow::Result<EvalResult> {
         env.reset();
+        let space = ActionSpace::new(self.dims.x1, env.noop_action());
         let mut h = vec![0.0f32; self.dims.rdim];
         let mut c = vec![0.0f32; self.dims.rdim];
         let mut best = env.improvement_pct();
@@ -330,34 +338,19 @@ impl<'e> Pipeline<'e> {
             let t0 = Instant::now();
             let z = self.encode_state(gnn, env.graph())?;
             let xmask = env.padded_xfer_mask(self.dims.x1);
-            let acts = act_batch(
-                self.engine,
-                "ctrl_policy_1",
-                &self.dims,
+            let acts = self.policy.act_batch(
                 ctrl,
-                &z,
-                &h,
-                &xmask,
+                &ObsBatch { z: &z, h: &h, xmask: &xmask },
                 |_, x| env.location_mask(x),
                 rng,
                 greedy,
             )?;
             let action = acts[0].action;
-            let res = env.step(self.to_env_action(action, env));
+            let res = env.step(space.to_env(action));
             if let Some(wm_store) = wm {
-                let theta = self.engine.device_theta(wm_store)?;
-                let out = self.engine.exec_with_theta(
-                    "wm_step_1",
-                    &theta,
-                    &[
-                        lit_f32(&z, &[1, self.dims.zdim])?,
-                        crate::runtime::lit_i32(&[action.0 as i32, action.1 as i32], &[1, 2])?,
-                        lit_f32(&h, &[1, self.dims.rdim])?,
-                        lit_f32(&c, &[1, self.dims.rdim])?,
-                    ],
-                )?;
-                h = to_vec_f32(&out[6])?;
-                c = to_vec_f32(&out[7])?;
+                let out = self.world.step(wm_store, &z, &[action], &h, &c)?;
+                h = out.h1;
+                c = out.c1;
             }
             step_times.push(t0.elapsed().as_secs_f64());
             if env.improvement_pct() > best {
@@ -380,7 +373,7 @@ impl<'e> Pipeline<'e> {
 
     /// [`Pipeline::eval_real`] over a whole [`EnvPool`]: B independent
     /// evaluation episodes advance together, one batched `step_where` per
-    /// pass. Policy/world-model artifact calls stay on the engine thread
+    /// pass. Policy/world-model program calls stay on the backend thread
     /// (the PJRT engine is not shared across threads); the environment
     /// work — matching and costing — fans out across the pool's workers.
     /// Each env gets its own forked RNG, so results don't depend on when
@@ -396,7 +389,7 @@ impl<'e> Pipeline<'e> {
     ) -> anyhow::Result<Vec<EvalResult>> {
         pool.reset_all();
         let b = pool.n_envs();
-        let noop_env = pool.rules().len();
+        let space = ActionSpace::new(self.dims.x1, pool.noop_action());
         let mut rngs: Vec<Rng> = (0..b).map(|i| rng.fork(i as u64)).collect();
         let mut h = vec![vec![0.0f32; self.dims.rdim]; b];
         let mut c = vec![vec![0.0f32; self.dims.rdim]; b];
@@ -406,8 +399,8 @@ impl<'e> Pipeline<'e> {
         let mut step_secs = vec![0.0f64; b];
         while done.iter().any(|d| !d) {
             let t0 = Instant::now();
-            // Per-row policy on the engine thread.
-            let mut slot_actions: Vec<Option<(usize, usize)>> = vec![None; b];
+            // Per-row policy on the backend thread.
+            let mut slot_actions: Vec<Option<Action>> = vec![None; b];
             let mut zs: Vec<Vec<f32>> = vec![Vec::new(); b];
             for i in 0..b {
                 if done[i] {
@@ -416,14 +409,9 @@ impl<'e> Pipeline<'e> {
                 let state = pool.state(i);
                 let z = self.encode_state(gnn, state.graph())?;
                 let xmask = state.padded_xfer_mask(self.dims.x1);
-                let acts = act_batch(
-                    self.engine,
-                    "ctrl_policy_1",
-                    &self.dims,
+                let acts = self.policy.act_batch(
                     ctrl,
-                    &z,
-                    &h[i],
-                    &xmask,
+                    &ObsBatch { z: &z, h: &h[i], xmask: &xmask },
                     |_, x| state.location_mask(x),
                     &mut rngs[i],
                     greedy,
@@ -432,38 +420,21 @@ impl<'e> Pipeline<'e> {
                 zs[i] = z;
             }
             // One batched environment pass.
-            let env_actions: Vec<Option<(usize, usize)>> = slot_actions
-                .iter()
-                .map(|a| {
-                    a.map(|a| if a.0 == self.dims.noop() { (noop_env, 0) } else { a })
-                })
-                .collect();
+            let env_actions: Vec<Option<(usize, usize)>> =
+                slot_actions.iter().map(|a| a.map(|a| space.to_env(a))).collect();
             let results = pool.step_where(&env_actions);
             // Advance the recurrent world-model context for stepped rows
             // *inside* the timed pass, so mean_step_s stays comparable to
-            // the single-env eval_real (which also times wm_step_1).
+            // the single-env eval_real (which also times the wm step).
             if let Some(wm_store) = wm {
                 for i in 0..b {
                     if results[i].is_none() {
                         continue;
                     }
                     let action = slot_actions[i].expect("stepped row had an action");
-                    let theta = self.engine.device_theta(wm_store)?;
-                    let out = self.engine.exec_with_theta(
-                        "wm_step_1",
-                        &theta,
-                        &[
-                            lit_f32(&zs[i], &[1, self.dims.zdim])?,
-                            crate::runtime::lit_i32(
-                                &[action.0 as i32, action.1 as i32],
-                                &[1, 2],
-                            )?,
-                            lit_f32(&h[i], &[1, self.dims.rdim])?,
-                            lit_f32(&c[i], &[1, self.dims.rdim])?,
-                        ],
-                    )?;
-                    h[i] = to_vec_f32(&out[6])?;
-                    c[i] = to_vec_f32(&out[7])?;
+                    let out = self.world.step(wm_store, &zs[i], &[action], &h[i], &c[i])?;
+                    h[i] = out.h1;
+                    c[i] = out.c1;
                 }
             }
             let alive = results.iter().filter(|r| r.is_some()).count().max(1);
@@ -512,6 +483,7 @@ impl<'e> Pipeline<'e> {
         ppo: &PpoCfg,
         rng: &mut Rng,
     ) -> anyhow::Result<(f32, PpoStats)> {
+        let space = ActionSpace::new(self.dims.x1, env.noop_action());
         let h0 = vec![0.0f32; self.dims.rdim];
         let mut buffer = PpoBuffer::default();
         let mut total_reward = 0.0f32;
@@ -521,28 +493,23 @@ impl<'e> Pipeline<'e> {
             loop {
                 let z = self.encode_state(gnn, env.graph())?;
                 let xmask = env.padded_xfer_mask(self.dims.x1);
-                let acts = act_batch(
-                    self.engine,
-                    "ctrl_policy_1",
-                    &self.dims,
+                let acts = self.policy.act_batch(
                     ctrl,
-                    &z,
-                    &h0,
-                    &xmask,
+                    &ObsBatch { z: &z, h: &h0, xmask: &xmask },
                     |_, x| env.location_mask(x),
                     rng,
                     false,
                 )?;
                 let a = &acts[0];
-                let lmask: Vec<f32> = if a.action.0 == self.dims.noop() {
+                let lmask: Vec<f32> = if space.is_noop(a.action) {
                     vec![1.0; self.dims.max_locs]
                 } else {
-                    env.location_mask(a.action.0)
+                    env.location_mask(a.action.slot)
                         .iter()
                         .map(|&m| if m { 1.0 } else { 0.0 })
                         .collect()
                 };
-                let res = env.step(self.to_env_action(a.action, env));
+                let res = env.step(space.to_env(a.action));
                 traj.push(z, h0.clone(), xmask, a.action, a.logp, a.value, res.reward, res.done);
                 traj.lmasks.push(lmask);
                 if res.done {
@@ -568,7 +535,7 @@ impl<'e> Pipeline<'e> {
                 );
             }
         }
-        let stats = crate::agent::ppo_update(self.engine, ctrl, &buffer, &self.dims, ppo, rng)?;
+        let stats = crate::agent::ppo_update(self.backend, ctrl, &buffer, &self.dims, ppo, rng)?;
         Ok((total_reward / n_episodes.max(1) as f32, stats))
     }
 }
@@ -580,7 +547,7 @@ struct PpoRowTraj {
     h: Vec<Vec<f32>>,
     xmasks: Vec<Vec<f32>>,
     lmasks: Vec<Vec<f32>>,
-    actions: Vec<(usize, usize)>,
+    actions: Vec<Action>,
     logps: Vec<f32>,
     values: Vec<f32>,
     rewards: Vec<f32>,
@@ -594,7 +561,7 @@ impl PpoRowTraj {
         z: Vec<f32>,
         h: Vec<f32>,
         xmask: Vec<f32>,
-        action: (usize, usize),
+        action: Action,
         logp: f32,
         value: f32,
         reward: f32,

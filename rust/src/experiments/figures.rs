@@ -20,20 +20,23 @@ use super::{eval_agent, train_model_based, ExperimentCtx};
 /// **Fig. 5**: model-free agent on BERT under reward functions R1–R5;
 /// normalised reward per training iteration.
 pub fn fig5(ctx: &ExperimentCtx) -> anyhow::Result<()> {
-    let pipe = Pipeline::new(ctx.engine)?;
+    let pipe = Pipeline::new(ctx.backend)?;
     let graph = crate::zoo::bert_base();
     let rules = standard_library();
     let presets = ["r1", "r2", "r3", "r4", "r5"];
 
-    let mut w = CsvWriter::create(ctx.out("fig5.csv"), &["reward_fn", "iteration", "reward", "reward_norm"])?;
+    let mut w = CsvWriter::create(
+        ctx.out("fig5.csv"),
+        &["reward_fn", "iteration", "reward", "reward_norm"],
+    )?;
     println!("\nFig. 5: reward-function comparison (model-free, BERT)");
     for preset in presets {
         let mut cfg = ctx.cfg.clone();
         cfg.env.reward = RewardKind::preset(preset)?;
         let cost = CostModel::new(cfg.device);
         let mut env = Env::new(graph.clone(), &rules, &cost, cfg.env.clone());
-        let gnn = ParamStore::init(ctx.engine, "gnn", cfg.seed as i32)?;
-        let mut ctrl = ParamStore::init(ctx.engine, "ctrl", cfg.seed as i32 + 10)?;
+        let gnn = ParamStore::init(ctx.backend, "gnn", cfg.seed as i32)?;
+        let mut ctrl = ParamStore::init(ctx.backend, "ctrl", cfg.seed as i32 + 10)?;
         let mut rng = Rng::new(cfg.seed ^ preset.len() as u64);
         let mut curve = Vec::with_capacity(cfg.free_iterations);
         for _ in 0..cfg.free_iterations {
@@ -65,7 +68,7 @@ pub fn fig5(ctx: &ExperimentCtx) -> anyhow::Result<()> {
 /// **Fig. 6**: relative runtime improvement per graph for TF-greedy, TASO,
 /// model-free RL and model-based RLFlow (mean ± 95% CI over `runs`).
 pub fn fig6(ctx: &ExperimentCtx, runs: usize) -> anyhow::Result<()> {
-    let pipe = Pipeline::new(ctx.engine)?;
+    let pipe = Pipeline::new(ctx.backend)?;
     let rules = standard_library();
     let cost = CostModel::new(ctx.cfg.device);
     let mut w = CsvWriter::create(
@@ -83,12 +86,19 @@ pub fn fig6(ctx: &ExperimentCtx, runs: usize) -> anyhow::Result<()> {
         let mut free_scores = Vec::new();
         {
             let mut cfg = ctx.cfg.clone();
-            let gnn = ParamStore::init(ctx.engine, "gnn", cfg.seed as i32)?;
-            let mut ctrl = ParamStore::init(ctx.engine, "ctrl", cfg.seed as i32 + 20)?;
+            let gnn = ParamStore::init(ctx.backend, "gnn", cfg.seed as i32)?;
+            let mut ctrl = ParamStore::init(ctx.backend, "ctrl", cfg.seed as i32 + 20)?;
             let mut rng = Rng::new(cfg.seed + 100);
             let mut env = Env::new(g.clone(), &rules, &cost, cfg.env.clone());
             for _ in 0..cfg.free_iterations {
-                pipe.model_free_iteration(&gnn, &mut ctrl, &mut env, cfg.free_episodes_per_iter, &cfg.ppo, &mut rng)?;
+                pipe.model_free_iteration(
+                    &gnn,
+                    &mut ctrl,
+                    &mut env,
+                    cfg.free_episodes_per_iter,
+                    &cfg.ppo,
+                    &mut rng,
+                )?;
             }
             // Pooled model-free evaluation: `runs` episodes per pass.
             let results = super::eval_pool_scores(
@@ -132,7 +142,7 @@ pub fn fig6(ctx: &ExperimentCtx, runs: usize) -> anyhow::Result<()> {
 /// **Fig. 7**: wall-clock time to produce the optimised graph — trained
 /// RLFlow agent rollout vs TASO search.
 pub fn fig7(ctx: &ExperimentCtx, runs: usize) -> anyhow::Result<()> {
-    let pipe = Pipeline::new(ctx.engine)?;
+    let pipe = Pipeline::new(ctx.backend)?;
     let rules = standard_library();
     let cost = CostModel::new(ctx.cfg.device);
     let mut w = CsvWriter::create(
@@ -166,7 +176,7 @@ pub fn fig7(ctx: &ExperimentCtx, runs: usize) -> anyhow::Result<()> {
 
 /// **Fig. 8**: world-model log-likelihood loss during training, per graph.
 pub fn fig8(ctx: &ExperimentCtx) -> anyhow::Result<()> {
-    let pipe = Pipeline::new(ctx.engine)?;
+    let pipe = Pipeline::new(ctx.backend)?;
     let mut w = CsvWriter::create(
         ctx.out("fig8.csv"),
         &["graph", "step", "total", "nll", "reward_mse", "mask_bce", "done_bce"],
@@ -179,7 +189,13 @@ pub fn fig8(ctx: &ExperimentCtx) -> anyhow::Result<()> {
         }
         let first = agent.wm_curve.first().map(|l| l.total).unwrap_or(0.0);
         let last = agent.wm_curve.last().map(|l| l.total).unwrap_or(0.0);
-        println!("  {:<15} loss {:.3} -> {:.3} over {} steps", info.name, first, last, agent.wm_curve.len());
+        println!(
+            "  {:<15} loss {:.3} -> {:.3} over {} steps",
+            info.name,
+            first,
+            last,
+            agent.wm_curve.len()
+        );
     }
     w.flush()
 }
@@ -187,8 +203,9 @@ pub fn fig8(ctx: &ExperimentCtx) -> anyhow::Result<()> {
 /// **Fig. 9**: predicted (dream) reward per epoch while training the
 /// controller inside the world model, min-max normalised per graph.
 pub fn fig9(ctx: &ExperimentCtx) -> anyhow::Result<()> {
-    let pipe = Pipeline::new(ctx.engine)?;
-    let mut w = CsvWriter::create(ctx.out("fig9.csv"), &["graph", "epoch", "reward", "reward_norm"])?;
+    let pipe = Pipeline::new(ctx.backend)?;
+    let mut w =
+        CsvWriter::create(ctx.out("fig9.csv"), &["graph", "epoch", "reward", "reward_norm"])?;
     println!("\nFig. 9: predicted reward inside the dream per graph");
     for (info, g) in crate::zoo::all() {
         let agent = train_model_based(&pipe, &ctx.cfg, &g, ctx.cfg.seed)?;
@@ -210,7 +227,7 @@ pub fn fig9(ctx: &ExperimentCtx) -> anyhow::Result<()> {
 /// **Fig. 10**: heatmap of transformations applied by the trained agent
 /// during evaluation (rule name x graph -> count).
 pub fn fig10(ctx: &ExperimentCtx) -> anyhow::Result<()> {
-    let pipe = Pipeline::new(ctx.engine)?;
+    let pipe = Pipeline::new(ctx.backend)?;
     let rules = standard_library();
     let mut w = CsvWriter::create(ctx.out("fig10.csv"), &["graph", "rule", "count"])?;
     println!("\nFig. 10: transformations applied by the trained controller");

@@ -14,21 +14,21 @@ use crate::config::RunConfig;
 use crate::coordinator::{collect_random_parallel, Pipeline};
 use crate::cost::CostModel;
 use crate::graph::Graph;
-use crate::runtime::{Engine, ParamStore};
+use crate::runtime::{Backend, ParamStore};
 use crate::util::Rng;
 use crate::wm::WmLosses;
 
 pub struct ExperimentCtx<'e> {
-    pub engine: &'e Engine,
+    pub backend: &'e dyn Backend,
     pub cfg: RunConfig,
     pub out_dir: PathBuf,
 }
 
 impl<'e> ExperimentCtx<'e> {
-    pub fn new(engine: &'e Engine, cfg: RunConfig, out_dir: impl Into<PathBuf>) -> Self {
+    pub fn new(backend: &'e dyn Backend, cfg: RunConfig, out_dir: impl Into<PathBuf>) -> Self {
         let out_dir = out_dir.into();
         let _ = std::fs::create_dir_all(&out_dir);
-        Self { engine, cfg, out_dir }
+        Self { backend, cfg, out_dir }
     }
 
     pub fn out(&self, file: &str) -> PathBuf {
@@ -82,7 +82,7 @@ pub fn train_model_based(
     timed("collect", &mut stage_seconds, t0);
 
     let t0 = std::time::Instant::now();
-    let mut gnn = ParamStore::init(pipe.engine, "gnn", seed as i32)?;
+    let mut gnn = ParamStore::init(pipe.backend, "gnn", seed as i32)?;
     let ae_losses = pipe.train_gnn_ae(&mut gnn, &episodes, cfg.ae_steps, cfg.ae_lr, &mut rng)?;
     timed("gnn_ae", &mut stage_seconds, t0);
 
@@ -91,12 +91,12 @@ pub fn train_model_based(
     timed("encode", &mut stage_seconds, t0);
 
     let t0 = std::time::Instant::now();
-    let mut wm = ParamStore::init(pipe.engine, "wm", seed as i32 + 1)?;
+    let mut wm = ParamStore::init(pipe.backend, "wm", seed as i32 + 1)?;
     let wm_curve = pipe.train_wm(&mut wm, &episodes, &cfg.wm, &mut rng)?;
     timed("wm", &mut stage_seconds, t0);
 
     let t0 = std::time::Instant::now();
-    let mut ctrl = ParamStore::init(pipe.engine, "ctrl", seed as i32 + 2)?;
+    let mut ctrl = ParamStore::init(pipe.backend, "ctrl", seed as i32 + 2)?;
     let dream_curve = pipe.train_controller_dream(
         &mut ctrl,
         &wm,
@@ -197,7 +197,9 @@ pub fn run(ctx: &ExperimentCtx, id: &str, runs: usize) -> anyhow::Result<()> {
             &[0.1, 0.5, 1.0, 1.5, 2.0, 3.0],
         ),
         "all" => {
-            for id in ["table1", "fig5", "fig8", "fig9", "fig10", "fig6", "fig7", "table2", "table3"] {
+            for id in
+                ["table1", "fig5", "fig8", "fig9", "fig10", "fig6", "fig7", "table2", "table3"]
+            {
                 run(ctx, id, runs)?;
             }
             Ok(())

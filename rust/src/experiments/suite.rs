@@ -21,22 +21,27 @@ use crate::xfer::library::standard_library;
 use super::{eval_agent, train_model_based, ExperimentCtx};
 
 pub fn suite(ctx: &ExperimentCtx, runs: usize) -> anyhow::Result<()> {
-    let pipe = Pipeline::new(ctx.engine)?;
+    let pipe = Pipeline::new(ctx.backend)?;
     let rules = standard_library();
     let cost = CostModel::new(ctx.cfg.device);
 
-    let mut w6 = CsvWriter::create(ctx.out("fig6.csv"), &["graph", "method", "improvement_pct_mean", "ci95"])?;
+    let mut w6 = CsvWriter::create(
+        ctx.out("fig6.csv"),
+        &["graph", "method", "improvement_pct_mean", "ci95"],
+    )?;
     let mut w8 = CsvWriter::create(
         ctx.out("fig8.csv"),
         &["graph", "step", "total", "nll", "reward_mse", "mask_bce", "done_bce"],
     )?;
-    let mut w9 = CsvWriter::create(ctx.out("fig9.csv"), &["graph", "epoch", "reward", "reward_norm"])?;
+    let mut w9 =
+        CsvWriter::create(ctx.out("fig9.csv"), &["graph", "epoch", "reward", "reward_norm"])?;
     let mut w10 = CsvWriter::create(ctx.out("fig10.csv"), &["graph", "rule", "count"])?;
     let mut w2 = CsvWriter::create(
         ctx.out("table2.csv"),
         &["graph", "tf_ms", "tf_gib", "rlflow_time_impr_pct", "rlflow_mem_impr_pct"],
     )?;
-    let mut w7 = CsvWriter::create(ctx.out("fig7.csv"), &["graph", "rlflow_s", "taso_s", "greedy_s"])?;
+    let mut w7 =
+        CsvWriter::create(ctx.out("fig7.csv"), &["graph", "rlflow_s", "taso_s", "greedy_s"])?;
 
     println!("\n==== consolidated suite: fig6/7/8/9/10 + table2 ====");
     // `--graph <name>` (or -s graph=) restricts the suite to one graph so
@@ -89,11 +94,18 @@ pub fn suite(ctx: &ExperimentCtx, runs: usize) -> anyhow::Result<()> {
         let mut free_scores = Vec::new();
         {
             let gnn = &agent.gnn; // share the trained encoder
-            let mut ctrl = ParamStore::init(ctx.engine, "ctrl", ctx.cfg.seed as i32 + 77)?;
+            let mut ctrl = ParamStore::init(ctx.backend, "ctrl", ctx.cfg.seed as i32 + 77)?;
             let mut rng = Rng::new(ctx.cfg.seed + 500);
             let mut env = Env::new(g.clone(), &rules, &cost, ctx.cfg.env.clone());
             for _ in 0..ctx.cfg.free_iterations {
-                pipe.model_free_iteration(gnn, &mut ctrl, &mut env, ctx.cfg.free_episodes_per_iter, &ctx.cfg.ppo, &mut rng)?;
+                pipe.model_free_iteration(
+                    gnn,
+                    &mut ctrl,
+                    &mut env,
+                    ctx.cfg.free_episodes_per_iter,
+                    &ctx.cfg.ppo,
+                    &mut rng,
+                )?;
             }
             // All `runs` eval episodes advance as one EnvPool batch.
             let results = super::eval_pool_scores(
@@ -128,7 +140,10 @@ pub fn suite(ctx: &ExperimentCtx, runs: usize) -> anyhow::Result<()> {
 
         // Fig. 7 row.
         csv_row!(w7; info.name, format!("{rlflow_s:.4}"), format!("{taso_s:.4}"), format!("{greedy_s:.4}"))?;
-        println!("   fig7: rlflow {:.2}s | taso {:.2}s | greedy {:.2}s", rlflow_s, taso_s, greedy_s);
+        println!(
+            "   fig7: rlflow {:.2}s | taso {:.2}s | greedy {:.2}s",
+            rlflow_s, taso_s, greedy_s
+        );
 
         // Fig. 10 rows.
         let mut counts: HashMap<usize, usize> = HashMap::new();
@@ -155,14 +170,17 @@ pub fn suite(ctx: &ExperimentCtx, runs: usize) -> anyhow::Result<()> {
         // Memory via the best evaluated graph.
         let mut rng = Rng::new(ctx.cfg.seed);
         let mut env = Env::new(g.clone(), &rules, &cost, ctx.cfg.env.clone());
-        let res = pipe.eval_real(&agent.gnn, &agent.ctrl, Some(&agent.wm), &mut env, true, &mut rng)?;
+        let res =
+            pipe.eval_real(&agent.gnn, &agent.ctrl, Some(&agent.wm), &mut env, true, &mut rng)?;
         let rl_gib = res
             .best_graph
             .as_ref()
             .map(|bg| cost.graph_memory_gib(bg))
             .unwrap_or(tf_gib);
         let m_impr = 100.0 * (tf_gib - rl_gib) / tf_gib;
-        println!("   table2: tf {tf_ms:.2}ms/{tf_gib:.3}GiB, rlflow impr {t_impr:.1}% time / {m_impr:.1}% mem");
+        println!(
+            "   table2: tf {tf_ms:.2}ms/{tf_gib:.3}GiB, rlflow impr {t_impr:.1}% time / {m_impr:.1}% mem"
+        );
         csv_row!(w2; info.name, format!("{tf_ms:.4}"), format!("{tf_gib:.5}"), format!("{t_impr:.2}"), format!("{m_impr:.2}"))?;
 
         for w in [&mut w6, &mut w7, &mut w8, &mut w9, &mut w10, &mut w2] {
@@ -177,7 +195,7 @@ pub fn suite(ctx: &ExperimentCtx, runs: usize) -> anyhow::Result<()> {
 /// depend on tau — retraining the WM per temperature would change nothing
 /// but cost, cf. §4.8).
 pub fn table3_shared(ctx: &ExperimentCtx, runs: usize, temps: &[f32]) -> anyhow::Result<()> {
-    let pipe = Pipeline::new(ctx.engine)?;
+    let pipe = Pipeline::new(ctx.backend)?;
     let graph = crate::zoo::bert_base();
     let mut rng = Rng::new(ctx.cfg.seed);
 
@@ -194,10 +212,10 @@ pub fn table3_shared(ctx: &ExperimentCtx, runs: usize, temps: &[f32]) -> anyhow:
         ctx.cfg.collect_workers,
         ctx.cfg.seed,
     );
-    let mut gnn = ParamStore::init(ctx.engine, "gnn", ctx.cfg.seed as i32)?;
+    let mut gnn = ParamStore::init(ctx.backend, "gnn", ctx.cfg.seed as i32)?;
     pipe.train_gnn_ae(&mut gnn, &episodes, ctx.cfg.ae_steps, ctx.cfg.ae_lr, &mut rng)?;
     pipe.encode_episodes(&gnn, &mut episodes)?;
-    let mut wm = ParamStore::init(ctx.engine, "wm", ctx.cfg.seed as i32 + 1)?;
+    let mut wm = ParamStore::init(ctx.backend, "wm", ctx.cfg.seed as i32 + 1)?;
     pipe.train_wm(&mut wm, &episodes, &ctx.cfg.wm, &mut rng)?;
 
     let mut w = CsvWriter::create(
@@ -206,7 +224,7 @@ pub fn table3_shared(ctx: &ExperimentCtx, runs: usize, temps: &[f32]) -> anyhow:
     )?;
     println!("\nTable 3: temperature sweep (BERT, shared world model)");
     for &tau in temps {
-        let mut ctrl = ParamStore::init(ctx.engine, "ctrl", ctx.cfg.seed as i32 + 2)?;
+        let mut ctrl = ParamStore::init(ctx.backend, "ctrl", ctx.cfg.seed as i32 + 2)?;
         let dream_curve = pipe.train_controller_dream(
             &mut ctrl,
             &wm,
@@ -237,7 +255,10 @@ pub fn table3_shared(ctx: &ExperimentCtx, runs: usize, temps: &[f32]) -> anyhow:
         )?;
         let real_scores: Vec<f64> = results.iter().map(|r| r.best_improvement_pct).collect();
         let (real_mean, real_std) = crate::util::stats::mean_std(&real_scores);
-        println!("  tau {:>5.2}: WM {:>6.2}% ± {:>4.2} | real {:>6.2}% ± {:>4.2}", tau, wm_mean, wm_std, real_mean, real_std);
+        println!(
+            "  tau {:>5.2}: WM {:>6.2}% ± {:>4.2} | real {:>6.2}% ± {:>4.2}",
+            tau, wm_mean, wm_std, real_mean, real_std
+        );
         csv_row!(w; tau, format!("{wm_mean:.3}"), format!("{wm_std:.3}"), format!("{real_mean:.3}"), format!("{real_std:.3}"))?;
         w.flush()?;
     }

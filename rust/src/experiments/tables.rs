@@ -21,7 +21,10 @@ pub fn table1(ctx: &ExperimentCtx) -> anyhow::Result<()> {
         &["graph", "type", "layers", "unique_layers", "ops", "substitutions"],
     )?;
     println!("\nTable 1: properties of the evaluation graphs");
-    println!("{:<15} {:<14} {:>6} {:>7} {:>6} {:>14}", "Graph", "Type", "Layers", "Unique", "Ops", "Substitutions");
+    println!(
+        "{:<15} {:<14} {:>6} {:>7} {:>6} {:>14}",
+        "Graph", "Type", "Layers", "Unique", "Ops", "Substitutions"
+    );
     for (info, g) in crate::zoo::all() {
         let subs = rules.count_matches(&g);
         println!(
@@ -36,7 +39,7 @@ pub fn table1(ctx: &ExperimentCtx) -> anyhow::Result<()> {
 /// **Table 2**: inference time (ms) and memory (GiB) of the TF-optimised
 /// baseline, and RLFlow's percentage improvement on both at tau = 1.0.
 pub fn table2(ctx: &ExperimentCtx, runs: usize) -> anyhow::Result<()> {
-    let pipe = crate::coordinator::Pipeline::new(ctx.engine)?;
+    let pipe = crate::coordinator::Pipeline::new(ctx.backend)?;
     let rules = standard_library();
     let cost = CostModel::new(ctx.cfg.device);
     let mut cfg = ctx.cfg.clone();
@@ -47,7 +50,10 @@ pub fn table2(ctx: &ExperimentCtx, runs: usize) -> anyhow::Result<()> {
         &["graph", "tf_ms", "tf_gib", "rlflow_time_impr_pct", "rlflow_mem_impr_pct"],
     )?;
     println!("\nTable 2: improvement vs TensorFlow-style baseline (tau=1.0)");
-    println!("{:<15} {:>10} {:>10} {:>12} {:>12}", "Graph", "Inf (ms)", "Mem (GiB)", "%t impr", "%m impr");
+    println!(
+        "{:<15} {:>10} {:>10} {:>12} {:>12}",
+        "Graph", "Inf (ms)", "Mem (GiB)", "%t impr", "%m impr"
+    );
     for (info, g) in crate::zoo::all() {
         // "TensorFlow" baseline: greedy rule application.
         let (tf_graph, _) = greedy_optimise(&g, &rules, &cost, 50);
@@ -66,7 +72,8 @@ pub fn table2(ctx: &ExperimentCtx, runs: usize) -> anyhow::Result<()> {
         // Memory: evaluate the best graph directly.
         let mut rng = Rng::new(cfg.seed);
         let mut env = crate::env::Env::new(g.clone(), &rules, &cost, cfg.env.clone());
-        let res = pipe.eval_real(&agent.gnn, &agent.ctrl, Some(&agent.wm), &mut env, true, &mut rng)?;
+        let res =
+            pipe.eval_real(&agent.gnn, &agent.ctrl, Some(&agent.wm), &mut env, true, &mut rng)?;
         let rl_gib = res
             .best_graph
             .as_ref()
@@ -74,7 +81,10 @@ pub fn table2(ctx: &ExperimentCtx, runs: usize) -> anyhow::Result<()> {
             .unwrap_or(tf_gib);
         let m_impr = 100.0 * (tf_gib - rl_gib) / tf_gib;
 
-        println!("{:<15} {:>10.2} {:>10.3} {:>11.1}% {:>11.1}%", info.name, tf_ms, tf_gib, t_impr, m_impr);
+        println!(
+            "{:<15} {:>10.2} {:>10.3} {:>11.1}% {:>11.1}%",
+            info.name, tf_ms, tf_gib, t_impr, m_impr
+        );
         csv_row!(w; info.name, format!("{tf_ms:.4}"), format!("{tf_gib:.5}"), format!("{t_impr:.2}"), format!("{m_impr:.2}"))?;
     }
     w.flush()
@@ -83,7 +93,7 @@ pub fn table2(ctx: &ExperimentCtx, runs: usize) -> anyhow::Result<()> {
 /// **Table 3**: temperature sweep on BERT — world-model (dream) score vs
 /// real-environment score, `runs` evaluations each.
 pub fn table3(ctx: &ExperimentCtx, runs: usize) -> anyhow::Result<()> {
-    let pipe = crate::coordinator::Pipeline::new(ctx.engine)?;
+    let pipe = crate::coordinator::Pipeline::new(ctx.backend)?;
     let graph = crate::zoo::bert_base();
     let temps = [0.1f32, 0.5, 0.75, 1.0, 1.2, 1.5, 1.75, 2.0, 2.5, 3.0];
 
@@ -136,6 +146,9 @@ mod tests {
         let resnet = crate::zoo::resnet18();
         assert!(!rules.get(addln).unwrap().find(&bert).is_empty());
         assert!(rules.get(addln).unwrap().find(&resnet).is_empty());
-        assert!(!rules.get(conv_relu).unwrap().find(&resnet).is_empty() || rules.get(conv_relu).unwrap().find(&bert).is_empty());
+        assert!(
+            !rules.get(conv_relu).unwrap().find(&resnet).is_empty()
+                || rules.get(conv_relu).unwrap().find(&bert).is_empty()
+        );
     }
 }

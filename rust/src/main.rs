@@ -3,18 +3,21 @@
 //! ```text
 //! rlflow zoo                               list the evaluation graphs
 //! rlflow optimize --graph bert --method taso|greedy [--threads N] [--export out.json]
-//! rlflow train --graph bert [--envs B] [--config cfg.json] [-s key=value ...]
+//! rlflow train --graph bert [--backend host|pjrt|auto] [--envs B] [--config cfg.json] [-s key=value ...]
+//! rlflow eval --load dir [--graph bert] [--backend host|pjrt|auto]
 //! rlflow experiment <table1|table2|table3|fig5..fig10|all> [--runs N]
 //! rlflow generate-rules [--verify]
 //! ```
 //!
 //! Config resolution: defaults -> `--config file.json` -> `-s key=value`.
+//! `--backend host` runs the whole train/dream/eval loop on the pure-Rust
+//! [`rlflow::runtime::HostBackend`] — no artifacts, no `xla_extension`.
 
 use rlflow::config::RunConfig;
 use rlflow::coordinator::Pipeline;
 use rlflow::cost::CostModel;
 use rlflow::experiments::{self, ExperimentCtx};
-use rlflow::runtime::Engine;
+use rlflow::runtime::{backend_by_name, Backend, ParamStore};
 use rlflow::search::{taso_optimise, TasoConfig};
 use rlflow::xfer::library::standard_library;
 
@@ -68,6 +71,10 @@ fn build_config(args: &Args) -> anyhow::Result<RunConfig> {
             .parse()
             .map_err(|err| anyhow::anyhow!("bad --envs '{e}': {err}"))?;
     }
+    // `--backend host|pjrt|auto` (equivalent to `-s backend=...`).
+    if let Some(b) = args.flags.get("backend") {
+        cfg.backend = b.clone();
+    }
     for o in &args.overrides {
         cfg.apply_override(o)?;
     }
@@ -81,6 +88,7 @@ fn main() -> anyhow::Result<()> {
         "zoo" => cmd_zoo(),
         "optimize" => cmd_optimize(&args),
         "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
         "experiment" => cmd_experiment(&args),
         "generate-rules" => cmd_generate_rules(&args),
         _ => {
@@ -96,15 +104,26 @@ rlflow — neural-network subgraph transformation with world models
 USAGE:
   rlflow zoo
   rlflow optimize --graph <name> --method <greedy|taso> [--threads N] [--export out.json]
-  rlflow train [--graph <name>] [--envs B] [--config cfg.json] [--smoke] [--save dir] [-s key=value]...
-  rlflow experiment <table1|table2|table3|fig5|...|fig10|all> [--runs N] [--envs B] [--smoke] [--out dir]
+  rlflow train [--graph <name>] [--backend host|pjrt|auto] [--envs B] [--config cfg.json] [--smoke] [--save dir] [-s key=value]...
+  rlflow eval --load <dir> [--graph <name>] [--backend host|pjrt|auto] [--envs B] [-s key=value]...
+  rlflow experiment <table1|table2|table3|fig5|...|fig10|all> [--runs N] [--backend B] [--envs B] [--smoke] [--out dir]
   rlflow generate-rules [--verify] [--inputs N] [--ops N]
+
+BACKENDS:
+  host   pure-Rust model execution — the full collect/WM/dream/PPO/eval
+         loop runs offline with no artifacts and no xla_extension
+  pjrt   AOT-compiled XLA artifacts (requires `make artifacts` + a linked
+         xla_extension)
+  auto   pjrt when artifacts/manifest.json exists, host otherwise (default)
 ";
 
 fn cmd_zoo() -> anyhow::Result<()> {
     let rules = standard_library();
     let cost = CostModel::new(rlflow::cost::DeviceProfile::rtx2070());
-    println!("{:<15} {:>6} {:>8} {:>12} {:>14}", "Graph", "Ops", "Nodes", "Runtime(ms)", "Substitutions");
+    println!(
+        "{:<15} {:>6} {:>8} {:>12} {:>14}",
+        "Graph", "Ops", "Nodes", "Runtime(ms)", "Substitutions"
+    );
     for (info, g) in rlflow::zoo::all() {
         println!(
             "{:<15} {:>6} {:>8} {:>12.3} {:>14}",
@@ -134,7 +153,9 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
     };
     let (optimised, log) = match method {
         "greedy" => rlflow::search::greedy_optimise_threads(&graph, &rules, &cost, 100, threads),
-        "taso" => taso_optimise(&graph, &rules, &cost, &TasoConfig { threads, ..Default::default() }),
+        "taso" => {
+            taso_optimise(&graph, &rules, &cost, &TasoConfig { threads, ..Default::default() })
+        }
         m => anyhow::bail!("unknown method '{m}' (greedy|taso; for RL use `rlflow train`)"),
     };
     println!(
@@ -160,10 +181,15 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let cfg = build_config(args)?;
-    let engine = Engine::load_default()?;
-    let pipe = Pipeline::new(&engine)?;
+    let backend = backend_by_name(&cfg.backend)?;
+    let pipe = Pipeline::new(backend.as_ref())?;
     let graph = rlflow::zoo::by_name(&cfg.graph)?;
-    println!("training model-based agent on {} (seed {})", cfg.graph, cfg.seed);
+    println!(
+        "training model-based agent on {} (seed {}, backend {})",
+        cfg.graph,
+        cfg.seed,
+        backend.name()
+    );
     let agent = experiments::train_model_based(&pipe, &cfg, &graph, cfg.seed)?;
     for (stage, secs) in &agent.stage_seconds {
         println!("  {:<12} {:.1}s", stage, secs);
@@ -202,9 +228,74 @@ fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
         .transpose()?
         .unwrap_or(5);
     let out = args.flags.get("out").cloned().unwrap_or_else(|| "results".into());
-    let engine = Engine::load_default()?;
-    let ctx = ExperimentCtx::new(&engine, cfg, out);
+    let backend = backend_by_name(&cfg.backend)?;
+    println!("experiment backend: {}", backend.name());
+    let ctx = ExperimentCtx::new(backend.as_ref(), cfg, out);
     experiments::run(&ctx, id, runs)
+}
+
+/// Evaluate previously trained parameters (`rlflow train --save dir`)
+/// against the real environment.
+fn cmd_eval(args: &Args) -> anyhow::Result<()> {
+    let cfg = build_config(args)?;
+    let dir = args
+        .flags
+        .get("load")
+        .ok_or_else(|| anyhow::anyhow!("eval requires --load <dir> (from `rlflow train --save`)"))?;
+    let backend = backend_by_name(&cfg.backend)?;
+    let pipe = Pipeline::new(backend.as_ref())?;
+    let graph = rlflow::zoo::by_name(&cfg.graph)?;
+
+    let load = |family: &str| -> anyhow::Result<ParamStore> {
+        let store = ParamStore::load_file(format!("{dir}/{family}.rlw"))?;
+        let expected = *backend
+            .manifest()
+            .param_sizes
+            .get(family)
+            .ok_or_else(|| anyhow::anyhow!("unknown family {family}"))?;
+        anyhow::ensure!(
+            store.n_params() == expected,
+            "{family}: saved params have {} values, backend '{}' expects {expected} \
+             (were they trained on a different backend?)",
+            store.n_params(),
+            backend.name()
+        );
+        Ok(store)
+    };
+    let gnn = load("gnn")?;
+    let wm = load("wm")?;
+    let ctrl = load("ctrl")?;
+
+    println!(
+        "evaluating saved agent from {dir}/ on {} ({} runs, backend {})",
+        cfg.graph,
+        cfg.eval_episodes,
+        backend.name()
+    );
+    let results = experiments::eval_pool_scores(
+        &pipe,
+        &cfg.env,
+        cfg.device,
+        &graph,
+        &gnn,
+        &ctrl,
+        Some(&wm),
+        cfg.eval_episodes,
+        cfg.eval_greedy,
+        cfg.seed,
+    )?;
+    let scores: Vec<f64> = results.iter().map(|r| r.best_improvement_pct).collect();
+    let (m, s) = rlflow::util::stats::mean_std(&scores);
+    let mean_step =
+        results.iter().map(|r| r.mean_step_s).sum::<f64>() / results.len().max(1) as f64;
+    println!(
+        "eval: {:.2}% ± {:.2} improvement over {} runs ({:.1} ms/step)",
+        m,
+        s,
+        scores.len(),
+        mean_step * 1e3
+    );
+    Ok(())
 }
 
 fn cmd_generate_rules(args: &Args) -> anyhow::Result<()> {

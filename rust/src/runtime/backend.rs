@@ -1,0 +1,270 @@
+//! The backend seam: every neural program the RLFlow loop executes —
+//! GNN auto-encoder forward/train, latent encode, `ctrl_policy_*`,
+//! `wm_step_*`, and the train steps — goes through the [`Backend`] trait.
+//!
+//! A backend owns three things:
+//!  1. a [`Manifest`] describing its program contract (names, argument
+//!     shapes/dtypes, output arity, hyperparameters, parameter sizes);
+//!  2. execution of named programs over typed [`TensorView`] arguments,
+//!     returning [`Tensor`] outputs;
+//!  3. parameter handling — `*_init` programs seed a
+//!     [`ParamStore`](super::ParamStore), and [`Backend::exec_with_params`]
+//!     lets the backend cache an uploaded copy of a store's theta keyed by
+//!     its version (the PJRT backend keeps it device-resident).
+//!
+//! Two implementations exist: [`PjrtBackend`](super::PjrtBackend) runs the
+//! AOT-compiled XLA artifacts, and [`HostBackend`](super::HostBackend)
+//! implements the same program families natively in Rust so the full
+//! collect -> GNN-AE -> WM -> dream-PPO -> eval cycle runs offline and
+//! deterministically — no `manifest.json`, no `xla_extension`.
+
+use std::collections::HashMap;
+
+use crate::interp::Tensor;
+
+use super::manifest::{ArtifactSpec, Dt, Manifest};
+
+/// Per-program execution accounting (calls, wall-clock, compile time).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_s: f64,
+    pub compile_s: f64,
+}
+
+/// A borrowed, typed view of one program argument. Array variants carry an
+/// explicit shape; scalar variants are rank-0 and own their value.
+#[derive(Debug, Clone)]
+pub enum TensorView<'a> {
+    F32 { data: &'a [f32], shape: Vec<usize> },
+    I32 { data: &'a [i32], shape: Vec<usize> },
+    ScalarF32(f32),
+    ScalarI32(i32),
+}
+
+impl<'a> TensorView<'a> {
+    pub fn f32(data: &'a [f32], shape: &[usize]) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len(), "f32 view shape mismatch");
+        TensorView::F32 { data, shape: shape.to_vec() }
+    }
+
+    pub fn i32(data: &'a [i32], shape: &[usize]) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len(), "i32 view shape mismatch");
+        TensorView::I32 { data, shape: shape.to_vec() }
+    }
+
+    pub fn n_elems(&self) -> usize {
+        match self {
+            TensorView::F32 { data, .. } => data.len(),
+            TensorView::I32 { data, .. } => data.len(),
+            TensorView::ScalarF32(_) | TensorView::ScalarI32(_) => 1,
+        }
+    }
+
+    pub fn dtype(&self) -> Dt {
+        match self {
+            TensorView::F32 { .. } | TensorView::ScalarF32(_) => Dt::F32,
+            TensorView::I32 { .. } | TensorView::ScalarI32(_) => Dt::I32,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            TensorView::F32 { shape, .. } | TensorView::I32 { shape, .. } => shape,
+            TensorView::ScalarF32(_) | TensorView::ScalarI32(_) => &[],
+        }
+    }
+
+    /// Borrow the f32 payload (array variants only).
+    pub fn as_f32(&self) -> anyhow::Result<&'a [f32]> {
+        match self {
+            TensorView::F32 { data, .. } => Ok(*data),
+            other => anyhow::bail!("expected f32 tensor argument, got {:?}", other.dtype_name()),
+        }
+    }
+
+    /// Borrow the i32 payload (array variants only).
+    pub fn as_i32(&self) -> anyhow::Result<&'a [i32]> {
+        match self {
+            TensorView::I32 { data, .. } => Ok(*data),
+            other => anyhow::bail!("expected i32 tensor argument, got {:?}", other.dtype_name()),
+        }
+    }
+
+    /// Read a rank-0/1-element f32 argument.
+    pub fn scalar_f32(&self) -> anyhow::Result<f32> {
+        match self {
+            TensorView::ScalarF32(v) => Ok(*v),
+            TensorView::F32 { data, .. } if data.len() == 1 => Ok(data[0]),
+            other => anyhow::bail!("expected f32 scalar argument, got {:?}", other.dtype_name()),
+        }
+    }
+
+    /// Read a rank-0/1-element i32 argument.
+    pub fn scalar_i32(&self) -> anyhow::Result<i32> {
+        match self {
+            TensorView::ScalarI32(v) => Ok(*v),
+            TensorView::I32 { data, .. } if data.len() == 1 => Ok(data[0]),
+            other => anyhow::bail!("expected i32 scalar argument, got {:?}", other.dtype_name()),
+        }
+    }
+
+    fn dtype_name(&self) -> &'static str {
+        match self {
+            TensorView::F32 { .. } => "f32 tensor",
+            TensorView::I32 { .. } => "i32 tensor",
+            TensorView::ScalarF32(_) => "f32 scalar",
+            TensorView::ScalarI32(_) => "i32 scalar",
+        }
+    }
+}
+
+/// Check an argument list against a program's manifest spec: arity, element
+/// counts and dtypes. Both backends route every `exec` through this, so the
+/// contract is enforced identically on either side of the seam.
+pub fn validate_args(
+    program: &str,
+    spec: &ArtifactSpec,
+    args: &[TensorView],
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        args.len() == spec.inputs.len(),
+        "{program}: got {} args, spec says {}",
+        args.len(),
+        spec.inputs.len()
+    );
+    for (view, arg) in args.iter().zip(&spec.inputs) {
+        anyhow::ensure!(
+            view.dtype() == arg.dtype,
+            "{program}.{}: argument dtype {:?}, spec says {:?}",
+            arg.name,
+            view.dtype(),
+            arg.dtype
+        );
+        anyhow::ensure!(
+            view.n_elems() == arg.n_elems(),
+            "{program}.{}: argument has {} elems, spec wants {} {:?}",
+            arg.name,
+            view.n_elems(),
+            arg.n_elems(),
+            arg.shape
+        );
+    }
+    Ok(())
+}
+
+/// Backend-agnostic model execution. Object-safe: the coordinator, agents
+/// and experiment drivers hold `&dyn Backend` and never know whether
+/// programs run as XLA artifacts or native Rust.
+pub trait Backend {
+    /// Short identifier ("host", "pjrt") for logs and CLI output.
+    fn name(&self) -> &'static str;
+
+    /// The program contract: hyperparameters, parameter sizes, and one
+    /// [`ArtifactSpec`] per executable program.
+    fn manifest(&self) -> &Manifest;
+
+    /// Execute a named program. Arguments are validated against the
+    /// manifest spec; outputs arrive in the spec's declared order.
+    fn exec(&self, program: &str, args: &[TensorView]) -> anyhow::Result<Vec<Tensor>>;
+
+    /// Execute with a parameter store's theta as the implicit leading
+    /// argument. Backends may cache an uploaded copy keyed by
+    /// `(family, version)` — this is the acting hot path.
+    fn exec_with_params(
+        &self,
+        program: &str,
+        params: &super::ParamStore,
+        rest: &[TensorView],
+    ) -> anyhow::Result<Vec<Tensor>>;
+
+    /// Per-program execution statistics accumulated so far.
+    fn stats(&self) -> HashMap<String, ExecStats>;
+
+    /// Hyperparameter lookup (manifest-backed).
+    fn hp(&self, key: &str) -> anyhow::Result<usize> {
+        self.manifest().hp_usize(key)
+    }
+
+    /// Program spec lookup (manifest-backed).
+    fn spec(&self, program: &str) -> anyhow::Result<&ArtifactSpec> {
+        self.manifest().artifact(program)
+    }
+}
+
+/// Build a backend by CLI name: `host` (pure Rust, always available),
+/// `pjrt` (AOT artifacts; needs `manifest.json` + a linked
+/// `xla_extension`), or `auto` (pjrt when artifacts exist, host otherwise).
+pub fn backend_by_name(kind: &str) -> anyhow::Result<Box<dyn Backend>> {
+    match kind {
+        "host" => Ok(Box::new(super::HostBackend::new())),
+        "pjrt" => Ok(Box::new(super::PjrtBackend::load_default()?)),
+        "auto" => {
+            // Prefer the artifacts when they exist AND the PJRT client
+            // actually comes up; a stale manifest.json next to the
+            // vendored (offline) xla shim must not keep the host path
+            // from running.
+            if Manifest::default_dir().join("manifest.json").exists() {
+                if let Ok(pjrt) = super::PjrtBackend::load_default() {
+                    return Ok(Box::new(pjrt));
+                }
+            }
+            Ok(Box::new(super::HostBackend::new()))
+        }
+        other => anyhow::bail!("unknown backend '{other}' (host|pjrt|auto)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ArgSpec;
+
+    fn spec2() -> ArtifactSpec {
+        ArtifactSpec {
+            file: String::new(),
+            inputs: vec![
+                ArgSpec { name: "x".into(), shape: vec![2, 3], dtype: Dt::F32 },
+                ArgSpec { name: "s".into(), shape: vec![], dtype: Dt::I32 },
+            ],
+            outputs: vec!["y".into()],
+        }
+    }
+
+    #[test]
+    fn views_report_shape_and_elems() {
+        let data = [1.0f32; 6];
+        let v = TensorView::f32(&data, &[2, 3]);
+        assert_eq!(v.n_elems(), 6);
+        assert_eq!(v.shape(), &[2, 3]);
+        assert_eq!(TensorView::ScalarI32(7).n_elems(), 1);
+        assert!(TensorView::ScalarF32(1.0).shape().is_empty());
+    }
+
+    #[test]
+    fn validate_accepts_matching_args() {
+        let data = [0.0f32; 6];
+        let args = [TensorView::f32(&data, &[2, 3]), TensorView::ScalarI32(1)];
+        assert!(validate_args("p", &spec2(), &args).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_arity_shape_and_dtype() {
+        let data = [0.0f32; 6];
+        let short = [TensorView::f32(&data, &[2, 3])];
+        assert!(validate_args("p", &spec2(), &short).is_err());
+        let bad_elems = [TensorView::f32(&data[..4], &[2, 2]), TensorView::ScalarI32(1)];
+        assert!(validate_args("p", &spec2(), &bad_elems).is_err());
+        let bad_dtype = [TensorView::f32(&data, &[2, 3]), TensorView::ScalarF32(1.0)];
+        assert!(validate_args("p", &spec2(), &bad_dtype).is_err());
+    }
+
+    #[test]
+    fn scalar_accessors() {
+        assert_eq!(TensorView::ScalarF32(2.5).scalar_f32().unwrap(), 2.5);
+        assert_eq!(TensorView::ScalarI32(-3).scalar_i32().unwrap(), -3);
+        let one = [4.0f32];
+        assert_eq!(TensorView::f32(&one, &[1]).scalar_f32().unwrap(), 4.0);
+        assert!(TensorView::ScalarI32(0).scalar_f32().is_err());
+    }
+}

@@ -1,0 +1,358 @@
+//! Host controller: a shared tanh trunk over `[z, h]` with three heads —
+//! transformation logits, location logits and a value estimate — plus the
+//! clipped-surrogate PPO train step. Mirrors the `ctrl_*` artifact
+//! contract: `ctrl_init`, `ctrl_policy_1`, `ctrl_policy_b`, `ctrl_train`.
+//!
+//! The location head is trunk-conditioned but shared across transformations
+//! (the per-xfer `[X1, L]` block tiles one `[L]` row): a per-xfer offset
+//! would be softmax-shift-invariant and receive zero gradient, so the
+//! artifact contract's shape is kept without dead parameters.
+
+use super::nn::{acc_rows, acc_xt_dy, adam_step, dy_wt, linear, tanh_inplace, ParamLayout};
+
+pub struct CtrlNet {
+    pub zdim: usize,
+    pub rdim: usize,
+    pub hidden: usize,
+    pub x1: usize,
+    pub locs: usize,
+    pub layout: ParamLayout,
+}
+
+pub struct PolicyOut {
+    pub xlogits: Vec<f32>, // [b, X1]
+    pub llogits: Vec<f32>, // [b, X1 * L] (tiled)
+    pub values: Vec<f32>,  // [b]
+}
+
+pub struct PpoStepStats {
+    pub pi_loss: f32,
+    pub v_loss: f32,
+    pub entropy: f32,
+    pub approx_kl: f32,
+}
+
+/// Forward activations shared by acting and training.
+struct Trunk {
+    u: Vec<f32>,  // [b, Z+R]
+    tt: Vec<f32>, // [b, C]
+}
+
+impl CtrlNet {
+    pub fn new(zdim: usize, rdim: usize, hidden: usize, x1: usize, locs: usize) -> Self {
+        let u = zdim + rdim;
+        let mut layout = ParamLayout::new();
+        layout.add("wt", u * hidden, u);
+        layout.add("bt", hidden, 0);
+        layout.add("wx", hidden * x1, hidden);
+        layout.add("bx", x1, 0);
+        layout.add("wl", hidden * locs, hidden);
+        layout.add("bl", locs, 0);
+        layout.add("wv", hidden, hidden);
+        layout.add("bv", 1, 0);
+        Self { zdim, rdim, hidden, x1, locs, layout }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.layout.total()
+    }
+
+    pub fn init(&self, seed: i32) -> Vec<f32> {
+        self.layout.init(0x6374726C ^ (seed as u64).wrapping_mul(0x9E3779B97F4A7C15), |_| 0.0)
+    }
+
+    fn trunk(&self, theta: &[f32], z: &[f32], h: &[f32], b: usize) -> Trunk {
+        let (zd, rd, c) = (self.zdim, self.rdim, self.hidden);
+        let u_dim = zd + rd;
+        let mut u = vec![0.0f32; b * u_dim];
+        for r in 0..b {
+            u[r * u_dim..r * u_dim + zd].copy_from_slice(&z[r * zd..(r + 1) * zd]);
+            u[r * u_dim + zd..(r + 1) * u_dim].copy_from_slice(&h[r * rd..(r + 1) * rd]);
+        }
+        let mut tt =
+            linear(&u, self.layout.view(theta, "wt"), self.layout.view(theta, "bt"), b, u_dim, c);
+        tanh_inplace(&mut tt);
+        Trunk { u, tt }
+    }
+
+    /// The `ctrl_policy_*` forward.
+    pub fn policy(&self, theta: &[f32], z: &[f32], h: &[f32], b: usize) -> PolicyOut {
+        let (c, x1, locs) = (self.hidden, self.x1, self.locs);
+        let t = self.trunk(theta, z, h, b);
+        let xlogits =
+            linear(&t.tt, self.layout.view(theta, "wx"), self.layout.view(theta, "bx"), b, c, x1);
+        let la =
+            linear(&t.tt, self.layout.view(theta, "wl"), self.layout.view(theta, "bl"), b, c, locs);
+        let vals =
+            linear(&t.tt, self.layout.view(theta, "wv"), self.layout.view(theta, "bv"), b, c, 1);
+        let mut llogits = vec![0.0f32; b * x1 * locs];
+        for r in 0..b {
+            let row = &la[r * locs..(r + 1) * locs];
+            for x in 0..x1 {
+                llogits[(r * x1 + x) * locs..(r * x1 + x + 1) * locs].copy_from_slice(row);
+            }
+        }
+        PolicyOut { xlogits, llogits, values: vals }
+    }
+
+    /// One PPO Adam step (`ctrl_train`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step(
+        &self,
+        theta: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        t_step: f32,
+        z: &[f32],
+        h: &[f32],
+        act: &[i32],
+        logp_old: &[f32],
+        adv: &[f32],
+        ret: &[f32],
+        xmask: &[f32],
+        lmask: &[f32],
+        b: usize,
+        lr: f32,
+        clip: f32,
+        ent_coef: f32,
+    ) -> PpoStepStats {
+        let (c, x1, locs) = (self.hidden, self.x1, self.locs);
+        let u_dim = self.zdim + self.rdim;
+        let noop = x1 - 1;
+        let binv = 1.0 / b.max(1) as f32;
+
+        let trunk = self.trunk(theta, z, h, b);
+        let tt = &trunk.tt;
+        let xlogits =
+            linear(tt, self.layout.view(theta, "wx"), self.layout.view(theta, "bx"), b, c, x1);
+        let la =
+            linear(tt, self.layout.view(theta, "wl"), self.layout.view(theta, "bl"), b, c, locs);
+        let vals =
+            linear(tt, self.layout.view(theta, "wv"), self.layout.view(theta, "bv"), b, c, 1);
+
+        // Advantage normalisation (batch-level, standard PPO practice).
+        let a_mean = adv.iter().sum::<f32>() * binv;
+        let a_var = adv.iter().map(|a| (a - a_mean) * (a - a_mean)).sum::<f32>() * binv;
+        let a_std = a_var.sqrt().max(1e-6);
+
+        let mut dxlogits = vec![0.0f32; b * x1];
+        let mut dla = vec![0.0f32; b * locs];
+        let mut dvals = vec![0.0f32; b];
+        let (mut pi_loss, mut v_loss, mut entropy, mut kl) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+
+        for r in 0..b {
+            let advn = (adv[r] - a_mean) / a_std;
+            let xm: Vec<bool> = (0..x1)
+                .map(|j| j == noop || xmask[r * x1 + j] >= 0.5) // NO-OP always valid
+                .collect();
+            let xrow = &xlogits[r * x1..(r + 1) * x1];
+            let (x_lsm, px) = masked_lsm(xrow, &xm);
+            let ax = (act[r * 2] as usize).min(x1 - 1);
+            let al = (act[r * 2 + 1] as usize).min(locs - 1);
+
+            let lm: Vec<bool> = (0..locs).map(|j| lmask[r * locs + j] >= 0.5).collect();
+            let loc_used = ax != noop && lm.iter().any(|&v| v);
+            let lrow = &la[r * locs..(r + 1) * locs];
+            let (l_lsm, pl) = masked_lsm(lrow, &lm);
+
+            let mut logp = x_lsm[ax];
+            if loc_used {
+                logp += l_lsm[al];
+            }
+            let logp = logp.max(-30.0);
+            let old = logp_old[r].max(-30.0);
+            let ratio = (logp - old).exp();
+            let ratio_c = ratio.clamp(1.0 - clip, 1.0 + clip);
+            let unclipped = ratio * advn;
+            let clipped = ratio_c * advn;
+            pi_loss += -unclipped.min(clipped) * binv;
+            kl += (old - logp) * binv;
+
+            // d(-min)/dlogp: the clipped branch has zero gradient when active.
+            let dlogp = if unclipped <= clipped { -advn * ratio * binv } else { 0.0 };
+            for j in 0..x1 {
+                let onehot = if j == ax { 1.0 } else { 0.0 };
+                dxlogits[r * x1 + j] += dlogp * (onehot - px[j]);
+            }
+            if loc_used {
+                for j in 0..locs {
+                    let onehot = if j == al { 1.0 } else { 0.0 };
+                    dla[r * locs + j] += dlogp * (onehot - pl[j]);
+                }
+            }
+
+            // Entropy bonus on the transformation head.
+            let mut h_row = 0.0f32;
+            for j in 0..x1 {
+                if px[j] > 0.0 {
+                    h_row -= px[j] * x_lsm[j];
+                }
+            }
+            entropy += h_row * binv;
+            for j in 0..x1 {
+                if px[j] > 0.0 {
+                    // d(-ent_coef * H)/dl_j = ent_coef * p_j (log p_j + H)
+                    dxlogits[r * x1 + j] += ent_coef * px[j] * (x_lsm[j] + h_row) * binv;
+                }
+            }
+
+            // Value loss (0.5 coefficient in the total objective).
+            let dv = vals[r] - ret[r];
+            v_loss += dv * dv * binv;
+            dvals[r] = dv * binv; // 0.5 * 2 * (v - ret) / b
+        }
+
+        // ---- backward through heads and trunk ----------------------------
+        let mut grad = vec![0.0f32; theta.len()];
+        let mut dwx = vec![0.0f32; c * x1];
+        let mut dbx = vec![0.0f32; x1];
+        let mut dwl = vec![0.0f32; c * locs];
+        let mut dbl = vec![0.0f32; locs];
+        let mut dwv = vec![0.0f32; c];
+        let mut dbv = vec![0.0f32; 1];
+        acc_xt_dy(&trunk.tt, &dxlogits, b, c, x1, &mut dwx);
+        acc_rows(&dxlogits, b, x1, &mut dbx);
+        acc_xt_dy(&trunk.tt, &dla, b, c, locs, &mut dwl);
+        acc_rows(&dla, b, locs, &mut dbl);
+        acc_xt_dy(&trunk.tt, &dvals, b, c, 1, &mut dwv);
+        acc_rows(&dvals, b, 1, &mut dbv);
+
+        let mut dtt = dy_wt(&dxlogits, self.layout.view(theta, "wx"), b, x1, c);
+        let dtt_l = dy_wt(&dla, self.layout.view(theta, "wl"), b, locs, c);
+        let dtt_v = dy_wt(&dvals, self.layout.view(theta, "wv"), b, 1, c);
+        for i in 0..dtt.len() {
+            dtt[i] += dtt_l[i] + dtt_v[i];
+        }
+        let mut dpre = dtt;
+        for (dp, tv) in dpre.iter_mut().zip(&trunk.tt) {
+            *dp *= 1.0 - tv * tv;
+        }
+        let mut dwt = vec![0.0f32; u_dim * c];
+        let mut dbt = vec![0.0f32; c];
+        acc_xt_dy(&trunk.u, &dpre, b, u_dim, c, &mut dwt);
+        acc_rows(&dpre, b, c, &mut dbt);
+
+        self.layout.scatter(&mut grad, "wt", &dwt);
+        self.layout.scatter(&mut grad, "bt", &dbt);
+        self.layout.scatter(&mut grad, "wx", &dwx);
+        self.layout.scatter(&mut grad, "bx", &dbx);
+        self.layout.scatter(&mut grad, "wl", &dwl);
+        self.layout.scatter(&mut grad, "bl", &dbl);
+        self.layout.scatter(&mut grad, "wv", &dwv);
+        self.layout.scatter(&mut grad, "bv", &dbv);
+        adam_step(theta, m, v, t_step, &grad, lr);
+
+        PpoStepStats { pi_loss, v_loss, entropy, approx_kl: kl }
+    }
+}
+
+/// Masked log-softmax plus the matching probabilities (0 where masked).
+fn masked_lsm(logits: &[f32], mask: &[bool]) -> (Vec<f32>, Vec<f32>) {
+    let mx = logits
+        .iter()
+        .zip(mask)
+        .filter(|(_, &m)| m)
+        .map(|(&l, _)| l)
+        .fold(f32::NEG_INFINITY, f32::max);
+    if !mx.is_finite() {
+        return (vec![f32::NEG_INFINITY; logits.len()], vec![0.0; logits.len()]);
+    }
+    let lse = logits
+        .iter()
+        .zip(mask)
+        .filter(|(_, &m)| m)
+        .map(|(&l, _)| (l - mx).exp())
+        .sum::<f32>()
+        .ln()
+        + mx;
+    let lsm: Vec<f32> = logits
+        .iter()
+        .zip(mask)
+        .map(|(&l, &m)| if m { l - lse } else { f32::NEG_INFINITY })
+        .collect();
+    let p: Vec<f32> = lsm.iter().map(|&l| if l.is_finite() { l.exp() } else { 0.0 }).collect();
+    (lsm, p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn net() -> CtrlNet {
+        CtrlNet::new(4, 6, 8, 5, 7)
+    }
+
+    #[test]
+    fn policy_shapes_and_tiling() {
+        let n = net();
+        let theta = n.init(0);
+        let b = 2;
+        let z = vec![0.1f32; b * 4];
+        let h = vec![0.0f32; b * 6];
+        let out = n.policy(&theta, &z, &h, b);
+        assert_eq!(out.xlogits.len(), b * 5);
+        assert_eq!(out.llogits.len(), b * 5 * 7);
+        assert_eq!(out.values.len(), b);
+        // Location block tiles across xfers.
+        assert_eq!(out.llogits[..7], out.llogits[7..14]);
+    }
+
+    #[test]
+    fn ppo_step_moves_params_and_reports_finite_stats() {
+        let n = net();
+        let mut theta = n.init(1);
+        let before = theta.clone();
+        let mut m = vec![0.0f32; theta.len()];
+        let mut v = vec![0.0f32; theta.len()];
+        let b = 6;
+        let mut rng = Rng::new(5);
+        let z: Vec<f32> = (0..b * 4).map(|_| rng.normal() * 0.3).collect();
+        let h = vec![0.0f32; b * 6];
+        let act: Vec<i32> = (0..b).flat_map(|r| [(r % 4) as i32, (r % 7) as i32]).collect();
+        let logp_old = vec![-1.5f32; b];
+        let adv: Vec<f32> = (0..b).map(|r| if r % 2 == 0 { 1.0 } else { -0.5 }).collect();
+        let ret = vec![0.3f32; b];
+        let xmask = vec![1.0f32; b * 5];
+        let lmask = vec![1.0f32; b * 7];
+        let stats = n.train_step(
+            &mut theta, &mut m, &mut v, 1.0, &z, &h, &act, &logp_old, &adv, &ret, &xmask,
+            &lmask, b, 3e-3, 0.2, 0.01,
+        );
+        assert!(stats.pi_loss.is_finite());
+        assert!(stats.v_loss > 0.0);
+        assert!(stats.entropy > 0.0);
+        assert!(stats.approx_kl.is_finite());
+        assert_ne!(before, theta, "PPO step should move parameters");
+    }
+
+    #[test]
+    fn all_invalid_masks_stay_finite() {
+        // Zero masks (contract-test shape probing) must not produce NaNs.
+        let n = net();
+        let mut theta = n.init(2);
+        let mut m = vec![0.0f32; theta.len()];
+        let mut v = vec![0.0f32; theta.len()];
+        let b = 2;
+        let stats = n.train_step(
+            &mut theta,
+            &mut m,
+            &mut v,
+            1.0,
+            &vec![0.0; b * 4],
+            &vec![0.0; b * 6],
+            &vec![0i32; b * 2],
+            &vec![0.0; b],
+            &vec![0.0; b],
+            &vec![0.0; b],
+            &vec![0.0; b * 5],
+            &vec![0.0; b * 7],
+            b,
+            1e-3,
+            0.2,
+            0.01,
+        );
+        assert!(stats.pi_loss.is_finite() && stats.v_loss.is_finite());
+        assert!(theta.iter().all(|p| p.is_finite()));
+    }
+}

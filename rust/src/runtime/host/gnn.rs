@@ -1,0 +1,305 @@
+//! Host GNN auto-encoder: one round of neighbourhood message passing, a
+//! pooled latent head, and a two-part reconstruction loss (per-node feature
+//! decoder + graph-level decoder through the latent) so every parameter
+//! tensor receives gradient. Mirrors the `gnn_*` artifact contract:
+//! `gnn_init`, `gnn_encode_1`, `gnn_encode_b`, `gnn_ae_train`.
+
+use super::nn::{acc_rows, acc_xt_dy, adam_step, dy_wt, linear, tanh_inplace, ParamLayout};
+
+pub struct GnnNet {
+    pub n: usize,
+    pub f: usize,
+    pub h: usize,
+    pub z: usize,
+    pub layout: ParamLayout,
+}
+
+/// Per-sample forward activations kept for the backward pass.
+struct GnnFwd {
+    live: Vec<usize>,
+    msg: Vec<f32>,   // [live, F] aggregated neighbourhood features
+    hid: Vec<f32>,   // [live, H] tanh hidden rows
+    pooled: Vec<f32>, // [H]
+    z: Vec<f32>,     // [Z]
+    xbar: Vec<f32>,  // [F] mean live feature row
+}
+
+impl GnnNet {
+    pub fn new(n: usize, f: usize, h: usize, z: usize) -> Self {
+        let mut layout = ParamLayout::new();
+        layout.add("w1", f * h, f);
+        layout.add("b1", h, 0);
+        layout.add("w2", h * z, h);
+        layout.add("b2", z, 0);
+        layout.add("w3", h * f, h);
+        layout.add("b3", f, 0);
+        layout.add("w4", z * f, z);
+        layout.add("b4", f, 0);
+        Self { n, f, h, z, layout }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.layout.total()
+    }
+
+    pub fn init(&self, seed: i32) -> Vec<f32> {
+        // Family tag keeps gnn/wm/ctrl streams distinct for equal seeds.
+        self.layout.init(0x676E6E ^ (seed as u64).wrapping_mul(0x9E3779B97F4A7C15), |_| 0.0)
+    }
+
+    /// Forward one sample. `feats` `[N,F]`, `adj` `[N,N]`, `mask` `[N]`.
+    fn forward(&self, theta: &[f32], feats: &[f32], adj: &[f32], mask: &[f32]) -> GnnFwd {
+        let (n, f, h, z) = (self.n, self.f, self.h, self.z);
+        let live: Vec<usize> = (0..n).filter(|&i| mask[i] > 0.5).collect();
+        let l = live.len();
+        let denom = l.max(1) as f32;
+
+        // msg_i = (x_i + Σ_j a[j,i] x_j + Σ_j a[i,j] x_j) / deg_i — a fixed
+        // linear aggregation, so no gradient flows through it.
+        let mut msg = vec![0.0f32; l * f];
+        for (ri, &i) in live.iter().enumerate() {
+            let mut deg = 1.0f32;
+            let row = &mut msg[ri * f..(ri + 1) * f];
+            row.copy_from_slice(&feats[i * f..(i + 1) * f]);
+            for &j in &live {
+                let w_in = adj[j * n + i];
+                let w_out = adj[i * n + j];
+                let w = w_in + w_out;
+                if w > 0.0 {
+                    deg += w;
+                    let src = &feats[j * f..(j + 1) * f];
+                    for (r, s) in row.iter_mut().zip(src) {
+                        *r += w * s;
+                    }
+                }
+            }
+            let inv = 1.0 / deg;
+            for r in row.iter_mut() {
+                *r *= inv;
+            }
+        }
+
+        let mut hid =
+            linear(&msg, self.layout.view(theta, "w1"), self.layout.view(theta, "b1"), l, f, h);
+        tanh_inplace(&mut hid);
+
+        let mut pooled = vec![0.0f32; h];
+        for ri in 0..l {
+            for (p, v) in pooled.iter_mut().zip(&hid[ri * h..(ri + 1) * h]) {
+                *p += v;
+            }
+        }
+        for p in pooled.iter_mut() {
+            *p /= denom;
+        }
+
+        let mut zv =
+            linear(&pooled, self.layout.view(theta, "w2"), self.layout.view(theta, "b2"), 1, h, z);
+        tanh_inplace(&mut zv);
+
+        let mut xbar = vec![0.0f32; f];
+        for &i in &live {
+            for (x, v) in xbar.iter_mut().zip(&feats[i * f..(i + 1) * f]) {
+                *x += v;
+            }
+        }
+        for x in xbar.iter_mut() {
+            *x /= denom;
+        }
+
+        GnnFwd { live, msg, hid, pooled, z: zv, xbar }
+    }
+
+    /// Encode a batch of graphs to latents: returns `[b, Z]` row-major.
+    pub fn encode(
+        &self,
+        theta: &[f32],
+        feats: &[f32],
+        adj: &[f32],
+        mask: &[f32],
+        b: usize,
+    ) -> Vec<f32> {
+        let (n, f) = (self.n, self.f);
+        let mut out = Vec::with_capacity(b * self.z);
+        for s in 0..b {
+            let fwd = self.forward(
+                theta,
+                &feats[s * n * f..(s + 1) * n * f],
+                &adj[s * n * n..(s + 1) * n * n],
+                &mask[s * n..(s + 1) * n],
+            );
+            out.extend_from_slice(&fwd.z);
+        }
+        out
+    }
+
+    /// One auto-encoder Adam step over a batch; returns the mean loss.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step(
+        &self,
+        theta: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        t: f32,
+        feats: &[f32],
+        adj: &[f32],
+        mask: &[f32],
+        b: usize,
+        lr: f32,
+    ) -> f32 {
+        let (n, f, h, z) = (self.n, self.f, self.h, self.z);
+        let mut grad = vec![0.0f32; theta.len()];
+        let mut dw1 = vec![0.0f32; f * h];
+        let mut db1 = vec![0.0f32; h];
+        let mut dw2 = vec![0.0f32; h * z];
+        let mut db2 = vec![0.0f32; z];
+        let mut dw3 = vec![0.0f32; h * f];
+        let mut db3 = vec![0.0f32; f];
+        let mut dw4 = vec![0.0f32; z * f];
+        let mut db4 = vec![0.0f32; f];
+        let mut total_loss = 0.0f32;
+        let binv = 1.0 / b.max(1) as f32;
+
+        for s in 0..b {
+            let sf = &feats[s * n * f..(s + 1) * n * f];
+            let sm = &mask[s * n..(s + 1) * n];
+            let fwd = self.forward(theta, sf, &adj[s * n * n..(s + 1) * n * n], sm);
+            let l = fwd.live.len();
+            let denom = l.max(1) as f32;
+
+            // Node decoder: xhat = hid w3 + b3, masked MSE against feats.
+            let xhat = {
+                let w3 = self.layout.view(theta, "w3");
+                linear(&fwd.hid, w3, self.layout.view(theta, "b3"), l, h, f)
+            };
+            let node_scale = 1.0 / (denom * f as f32);
+            let mut l_node = 0.0f32;
+            let mut dxhat = vec![0.0f32; l * f];
+            for (ri, &i) in fwd.live.iter().enumerate() {
+                for j in 0..f {
+                    let d = xhat[ri * f + j] - sf[i * f + j];
+                    l_node += d * d * node_scale;
+                    dxhat[ri * f + j] = 2.0 * d * node_scale * binv;
+                }
+            }
+
+            // Graph decoder: xbar_hat = z w4 + b4, MSE against xbar.
+            let xbar_hat = {
+                let w4 = self.layout.view(theta, "w4");
+                linear(&fwd.z, w4, self.layout.view(theta, "b4"), 1, z, f)
+            };
+            let graph_scale = 1.0 / f as f32;
+            let mut l_graph = 0.0f32;
+            let mut dxbar_hat = vec![0.0f32; f];
+            for j in 0..f {
+                let d = xbar_hat[j] - fwd.xbar[j];
+                l_graph += d * d * graph_scale;
+                dxbar_hat[j] = 2.0 * d * graph_scale * binv;
+            }
+            total_loss += (l_node + l_graph) * binv;
+
+            // ---- backward ------------------------------------------------
+            // Graph head -> latent.
+            acc_xt_dy(&fwd.z, &dxbar_hat, 1, z, f, &mut dw4);
+            acc_rows(&dxbar_hat, 1, f, &mut db4);
+            let dz = dy_wt(&dxbar_hat, self.layout.view(theta, "w4"), 1, f, z);
+            let dzpre: Vec<f32> =
+                dz.iter().zip(&fwd.z).map(|(d, zv)| d * (1.0 - zv * zv)).collect();
+            acc_xt_dy(&fwd.pooled, &dzpre, 1, h, z, &mut dw2);
+            acc_rows(&dzpre, 1, z, &mut db2);
+            let dpooled = dy_wt(&dzpre, self.layout.view(theta, "w2"), 1, z, h);
+
+            // Node head -> hidden rows (plus the pooled-path contribution).
+            acc_xt_dy(&fwd.hid, &dxhat, l, h, f, &mut dw3);
+            acc_rows(&dxhat, l, f, &mut db3);
+            let mut dhid = dy_wt(&dxhat, self.layout.view(theta, "w3"), l, f, h);
+            for ri in 0..l {
+                for j in 0..h {
+                    dhid[ri * h + j] += dpooled[j] / denom;
+                }
+            }
+            let mut dpre1 = dhid;
+            for (dp, hv) in dpre1.iter_mut().zip(&fwd.hid) {
+                *dp *= 1.0 - hv * hv;
+            }
+            acc_xt_dy(&fwd.msg, &dpre1, l, f, h, &mut dw1);
+            acc_rows(&dpre1, l, h, &mut db1);
+        }
+
+        self.layout.scatter(&mut grad, "w1", &dw1);
+        self.layout.scatter(&mut grad, "b1", &db1);
+        self.layout.scatter(&mut grad, "w2", &dw2);
+        self.layout.scatter(&mut grad, "b2", &db2);
+        self.layout.scatter(&mut grad, "w3", &dw3);
+        self.layout.scatter(&mut grad, "b3", &db3);
+        self.layout.scatter(&mut grad, "w4", &dw4);
+        self.layout.scatter(&mut grad, "b4", &db4);
+        adam_step(theta, m, v, t, &grad, lr);
+        total_loss
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn toy_batch(net: &GnnNet, b: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let (n, f) = (net.n, net.f);
+        let mut rng = Rng::new(seed);
+        let mut feats = vec![0.0f32; b * n * f];
+        let mut adj = vec![0.0f32; b * n * n];
+        let mut mask = vec![0.0f32; b * n];
+        for s in 0..b {
+            let live = 3 + rng.below(3);
+            for i in 0..live {
+                mask[s * n + i] = 1.0;
+                for j in 0..f {
+                    feats[(s * n + i) * f + j] = rng.normal() * 0.5;
+                }
+                if i > 0 {
+                    adj[s * n * n + (i - 1) * n + i] = 1.0; // chain edges
+                }
+            }
+        }
+        (feats, adj, mask)
+    }
+
+    #[test]
+    fn init_is_seed_deterministic() {
+        let net = GnnNet::new(8, 6, 5, 4);
+        assert_eq!(net.init(3), net.init(3));
+        assert_ne!(net.init(3), net.init(4));
+        assert_eq!(net.init(0).len(), net.n_params());
+    }
+
+    #[test]
+    fn encode_shapes_and_masking() {
+        let net = GnnNet::new(8, 6, 5, 4);
+        let theta = net.init(1);
+        let (feats, adj, mask) = toy_batch(&net, 2, 9);
+        let z = net.encode(&theta, &feats, &adj, &mask, 2);
+        assert_eq!(z.len(), 2 * 4);
+        assert!(z.iter().all(|v| v.is_finite() && v.abs() <= 1.0));
+        // All-dead mask still encodes (zeros latent through the bias path).
+        let dead = vec![0.0f32; 8];
+        let z0 = net.encode(&theta, &feats[..8 * 6], &adj[..64], &dead, 1);
+        assert!(z0.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn train_step_decreases_loss() {
+        let net = GnnNet::new(8, 6, 5, 4);
+        let mut theta = net.init(2);
+        let mut m = vec![0.0f32; theta.len()];
+        let mut v = vec![0.0f32; theta.len()];
+        let (feats, adj, mask) = toy_batch(&net, 4, 11);
+        let first = net.train_step(&mut theta, &mut m, &mut v, 1.0, &feats, &adj, &mask, 4, 1e-2);
+        let mut last = first;
+        for t in 2..=40 {
+            last =
+                net.train_step(&mut theta, &mut m, &mut v, t as f32, &feats, &adj, &mask, 4, 1e-2);
+        }
+        assert!(last.is_finite() && last < first, "AE loss {first} -> {last}");
+    }
+}

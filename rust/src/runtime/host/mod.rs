@@ -1,0 +1,534 @@
+//! [`HostBackend`]: the pure-Rust implementation of the [`Backend`] seam.
+//!
+//! Implements the five program families natively — GNN auto-encoder
+//! forward/train ([`gnn::GnnNet`]), latent encode, `ctrl_policy_*` + PPO
+//! train ([`ctrl::CtrlNet`]), `wm_step_*` + WM train ([`wm::WmNet`]) — over
+//! plain `f32` buffers, seeded-initialised, so the full RLFlow
+//! collect -> AE -> WM -> dream-PPO -> eval loop runs offline and
+//! deterministically with no `manifest.json` and no `xla_extension`.
+//!
+//! The backend publishes a synthetic [`Manifest`] carrying the same
+//! hyperparameter keys, parameter sizes and per-program argument/output
+//! specs the AOT pipeline would write, and validates every call against it
+//! exactly like the PJRT engine — the contract test in
+//! `tests/host_backend.rs` drives every program through those specs so the
+//! two backends stay interchangeable.
+
+pub mod ctrl;
+pub mod gnn;
+pub mod nn;
+pub mod wm;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use crate::interp::Tensor;
+
+use super::backend::{validate_args, Backend, ExecStats, TensorView};
+use super::manifest::{ArgSpec, ArtifactSpec, Dt, Manifest};
+use super::params::ParamStore;
+
+/// Host model dimensions. Defaults are sized for the real rule library and
+/// the zoo graphs; tests shrink them for speed.
+#[derive(Debug, Clone)]
+pub struct HostConfig {
+    pub max_nodes: usize,
+    pub node_feats: usize,
+    pub gnn_hidden: usize,
+    pub latent: usize,
+    pub rnn_hidden: usize,
+    pub mdn_k: usize,
+    pub act_emb: usize,
+    pub ctrl_hidden: usize,
+    /// Xfer slot count incl. the NO-OP slot (rule library size + 1).
+    pub n_xfers1: usize,
+    pub max_locs: usize,
+    pub b_dream: usize,
+    pub b_wm: usize,
+    pub seq_len: usize,
+    pub b_ppo: usize,
+    pub b_enc: usize,
+}
+
+impl Default for HostConfig {
+    fn default() -> Self {
+        Self {
+            max_nodes: 320,
+            node_feats: 32,
+            gnn_hidden: 32,
+            latent: 16,
+            rnn_hidden: 32,
+            mdn_k: 3,
+            act_emb: 8,
+            ctrl_hidden: 64,
+            n_xfers1: crate::xfer::library::standard_library().len() + 1,
+            max_locs: 200,
+            b_dream: 8,
+            b_wm: 8,
+            seq_len: 8,
+            b_ppo: 64,
+            b_enc: 8,
+        }
+    }
+}
+
+pub struct HostBackend {
+    cfg: HostConfig,
+    manifest: Manifest,
+    gnn: gnn::GnnNet,
+    wm: wm::WmNet,
+    ctrl: ctrl::CtrlNet,
+    stats: RefCell<HashMap<String, ExecStats>>,
+}
+
+impl Default for HostBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HostBackend {
+    pub fn new() -> Self {
+        Self::with_config(HostConfig::default())
+    }
+
+    pub fn with_config(cfg: HostConfig) -> Self {
+        let gnn = gnn::GnnNet::new(cfg.max_nodes, cfg.node_feats, cfg.gnn_hidden, cfg.latent);
+        let wm = wm::WmNet::new(
+            cfg.latent,
+            cfg.rnn_hidden,
+            cfg.mdn_k,
+            cfg.n_xfers1,
+            cfg.max_locs,
+            cfg.act_emb,
+        );
+        let ctrl = ctrl::CtrlNet::new(
+            cfg.latent,
+            cfg.rnn_hidden,
+            cfg.ctrl_hidden,
+            cfg.n_xfers1,
+            cfg.max_locs,
+        );
+        let manifest = build_manifest(&cfg, gnn.n_params(), wm.n_params(), ctrl.n_params());
+        Self { cfg, manifest, gnn, wm, ctrl, stats: RefCell::new(HashMap::new()) }
+    }
+
+    pub fn config(&self) -> &HostConfig {
+        &self.cfg
+    }
+
+    fn dispatch(&self, program: &str, args: &[TensorView]) -> anyhow::Result<Vec<Tensor>> {
+        let cfg = &self.cfg;
+        let (z, r) = (cfg.latent, cfg.rnn_hidden);
+        let (x1, locs, zk) = (cfg.n_xfers1, cfg.max_locs, cfg.latent * cfg.mdn_k);
+        match program {
+            "gnn_init" | "wm_init" | "ctrl_init" => {
+                let seed = args[0].scalar_i32()?;
+                let theta = match program {
+                    "gnn_init" => self.gnn.init(seed),
+                    "wm_init" => self.wm.init(seed),
+                    _ => self.ctrl.init(seed),
+                };
+                let p = theta.len();
+                Ok(vec![Tensor::from_vec(&[p], theta)?])
+            }
+            "gnn_encode_1" | "gnn_encode_b" => {
+                let b = if program == "gnn_encode_1" { 1 } else { cfg.b_enc };
+                let zs = self.gnn.encode(
+                    args[0].as_f32()?,
+                    args[1].as_f32()?,
+                    args[2].as_f32()?,
+                    args[3].as_f32()?,
+                    b,
+                );
+                Ok(vec![Tensor::from_vec(&[b, z], zs)?])
+            }
+            "gnn_ae_train" => {
+                let b = cfg.b_enc;
+                let mut theta = args[0].as_f32()?.to_vec();
+                let mut mm = args[1].as_f32()?.to_vec();
+                let mut vv = args[2].as_f32()?.to_vec();
+                let t = args[3].scalar_f32()? + 1.0;
+                let lr = args[7].scalar_f32()?;
+                let loss = self.gnn.train_step(
+                    &mut theta,
+                    &mut mm,
+                    &mut vv,
+                    t,
+                    args[4].as_f32()?,
+                    args[5].as_f32()?,
+                    args[6].as_f32()?,
+                    b,
+                    lr,
+                );
+                let p = theta.len();
+                Ok(vec![
+                    Tensor::from_vec(&[p], theta)?,
+                    Tensor::from_vec(&[p], mm)?,
+                    Tensor::from_vec(&[p], vv)?,
+                    Tensor::from_vec(&[], vec![t])?,
+                    Tensor::from_vec(&[], vec![loss])?,
+                ])
+            }
+            "ctrl_policy_1" | "ctrl_policy_b" => {
+                let b = if program == "ctrl_policy_1" { 1 } else { cfg.b_dream };
+                let out =
+                    self.ctrl.policy(args[0].as_f32()?, args[1].as_f32()?, args[2].as_f32()?, b);
+                Ok(vec![
+                    Tensor::from_vec(&[b, x1], out.xlogits)?,
+                    Tensor::from_vec(&[b, x1 * locs], out.llogits)?,
+                    Tensor::from_vec(&[b], out.values)?,
+                ])
+            }
+            "ctrl_train" => {
+                let b = cfg.b_ppo;
+                let mut theta = args[0].as_f32()?.to_vec();
+                let mut mm = args[1].as_f32()?.to_vec();
+                let mut vv = args[2].as_f32()?.to_vec();
+                let t = args[3].scalar_f32()? + 1.0;
+                let stats = self.ctrl.train_step(
+                    &mut theta,
+                    &mut mm,
+                    &mut vv,
+                    t,
+                    args[4].as_f32()?,
+                    args[5].as_f32()?,
+                    args[6].as_i32()?,
+                    args[7].as_f32()?,
+                    args[8].as_f32()?,
+                    args[9].as_f32()?,
+                    args[10].as_f32()?,
+                    args[11].as_f32()?,
+                    b,
+                    args[12].scalar_f32()?,
+                    args[13].scalar_f32()?,
+                    args[14].scalar_f32()?,
+                );
+                let p = theta.len();
+                Ok(vec![
+                    Tensor::from_vec(&[p], theta)?,
+                    Tensor::from_vec(&[p], mm)?,
+                    Tensor::from_vec(&[p], vv)?,
+                    Tensor::from_vec(&[], vec![t])?,
+                    Tensor::from_vec(&[], vec![stats.pi_loss])?,
+                    Tensor::from_vec(&[], vec![stats.v_loss])?,
+                    Tensor::from_vec(&[], vec![stats.entropy])?,
+                    Tensor::from_vec(&[], vec![stats.approx_kl])?,
+                ])
+            }
+            "wm_step_1" | "wm_step_b" => {
+                let b = if program == "wm_step_1" { 1 } else { cfg.b_dream };
+                let out = self.wm.step(
+                    args[0].as_f32()?,
+                    args[1].as_f32()?,
+                    args[2].as_i32()?,
+                    args[3].as_f32()?,
+                    args[4].as_f32()?,
+                    b,
+                );
+                Ok(vec![
+                    Tensor::from_vec(&[b, zk], out.log_pi)?,
+                    Tensor::from_vec(&[b, zk], out.mu)?,
+                    Tensor::from_vec(&[b, zk], out.log_sig)?,
+                    Tensor::from_vec(&[b], out.reward)?,
+                    Tensor::from_vec(&[b, x1], out.mask_logits)?,
+                    Tensor::from_vec(&[b], out.done_logits)?,
+                    Tensor::from_vec(&[b, r], out.h1)?,
+                    Tensor::from_vec(&[b, r], out.c1)?,
+                ])
+            }
+            "wm_train" => {
+                let (b, t_len) = (cfg.b_wm, cfg.seq_len);
+                let mut theta = args[0].as_f32()?.to_vec();
+                let mut mm = args[1].as_f32()?.to_vec();
+                let mut vv = args[2].as_f32()?.to_vec();
+                let t = args[3].scalar_f32()? + 1.0;
+                let lr = args[11].scalar_f32()?;
+                let losses = self.wm.train_step(
+                    &mut theta,
+                    &mut mm,
+                    &mut vv,
+                    t,
+                    args[4].as_f32()?,
+                    args[5].as_i32()?,
+                    args[6].as_f32()?,
+                    args[7].as_f32()?,
+                    args[8].as_f32()?,
+                    args[9].as_f32()?,
+                    args[10].as_f32()?,
+                    b,
+                    t_len,
+                    lr,
+                );
+                let p = theta.len();
+                Ok(vec![
+                    Tensor::from_vec(&[p], theta)?,
+                    Tensor::from_vec(&[p], mm)?,
+                    Tensor::from_vec(&[p], vv)?,
+                    Tensor::from_vec(&[], vec![t])?,
+                    Tensor::from_vec(&[], vec![losses.total])?,
+                    Tensor::from_vec(&[], vec![losses.nll])?,
+                    Tensor::from_vec(&[], vec![losses.reward_mse])?,
+                    Tensor::from_vec(&[], vec![losses.mask_bce])?,
+                    Tensor::from_vec(&[], vec![losses.done_bce])?,
+                ])
+            }
+            other => anyhow::bail!("host backend has no program '{other}'"),
+        }
+    }
+}
+
+impl Backend for HostBackend {
+    fn name(&self) -> &'static str {
+        "host"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn exec(&self, program: &str, args: &[TensorView]) -> anyhow::Result<Vec<Tensor>> {
+        let spec = self.manifest.artifact(program)?;
+        validate_args(program, spec, args)?;
+        let t0 = Instant::now();
+        let outs = self.dispatch(program, args)?;
+        anyhow::ensure!(
+            outs.len() == spec.outputs.len(),
+            "{program}: produced {} outputs, spec says {}",
+            outs.len(),
+            spec.outputs.len()
+        );
+        let mut stats = self.stats.borrow_mut();
+        let s = stats.entry(program.to_string()).or_default();
+        s.calls += 1;
+        s.total_s += t0.elapsed().as_secs_f64();
+        Ok(outs)
+    }
+
+    fn exec_with_params(
+        &self,
+        program: &str,
+        params: &ParamStore,
+        rest: &[TensorView],
+    ) -> anyhow::Result<Vec<Tensor>> {
+        let n = params.theta.len();
+        let mut args: Vec<TensorView> = Vec::with_capacity(rest.len() + 1);
+        args.push(TensorView::f32(&params.theta, &[n]));
+        args.extend(rest.iter().cloned());
+        self.exec(program, &args)
+    }
+
+    fn stats(&self) -> HashMap<String, ExecStats> {
+        self.stats.borrow().clone()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic manifest (the host side of the L2 -> L3 contract)
+// ---------------------------------------------------------------------------
+
+fn f32a(name: &str, shape: &[usize]) -> ArgSpec {
+    ArgSpec { name: name.to_string(), shape: shape.to_vec(), dtype: Dt::F32 }
+}
+
+fn i32a(name: &str, shape: &[usize]) -> ArgSpec {
+    ArgSpec { name: name.to_string(), shape: shape.to_vec(), dtype: Dt::I32 }
+}
+
+fn outs(names: &[&str]) -> Vec<String> {
+    names.iter().map(|s| s.to_string()).collect()
+}
+
+fn build_manifest(cfg: &HostConfig, p_gnn: usize, p_wm: usize, p_ctrl: usize) -> Manifest {
+    let (n, f, z, r) = (cfg.max_nodes, cfg.node_feats, cfg.latent, cfg.rnn_hidden);
+    let (x1, locs) = (cfg.n_xfers1, cfg.max_locs);
+    let mut hp = HashMap::new();
+    for (key, v) in [
+        ("MAX_NODES", n),
+        ("NODE_FEATS", f),
+        ("LATENT", z),
+        ("RNN_HIDDEN", r),
+        ("MDN_K", cfg.mdn_k),
+        ("N_XFERS", x1 - 1),
+        ("N_XFERS1", x1),
+        ("MAX_LOCS", locs),
+        ("B_DREAM", cfg.b_dream),
+        ("B_WM", cfg.b_wm),
+        ("SEQ_LEN", cfg.seq_len),
+        ("B_PPO", cfg.b_ppo),
+        ("B_ENC", cfg.b_enc),
+    ] {
+        hp.insert(key.to_string(), v as f64);
+    }
+    let mut param_sizes = HashMap::new();
+    param_sizes.insert("gnn".to_string(), p_gnn);
+    param_sizes.insert("wm".to_string(), p_wm);
+    param_sizes.insert("ctrl".to_string(), p_ctrl);
+
+    let adam_in = |p: usize| {
+        vec![f32a("theta", &[p]), f32a("m", &[p]), f32a("v", &[p]), f32a("t", &[])]
+    };
+    let encode_in = |p: usize, b: usize| {
+        vec![
+            f32a("theta", &[p]),
+            f32a("feats", &[b, n, f]),
+            f32a("adj", &[b, n, n]),
+            f32a("mask", &[b, n]),
+        ]
+    };
+    let policy_in = |b: usize| {
+        vec![f32a("theta", &[p_ctrl]), f32a("z", &[b, z]), f32a("h", &[b, r])]
+    };
+    let wm_step_in = |b: usize| {
+        vec![
+            f32a("theta", &[p_wm]),
+            f32a("z", &[b, z]),
+            i32a("a", &[b, 2]),
+            f32a("h", &[b, r]),
+            f32a("c", &[b, r]),
+        ]
+    };
+    let wm_step_out = outs(&[
+        "log_pi", "mu", "log_sig", "reward", "mask_logits", "done_logits", "h1", "c1",
+    ]);
+    let adam_out = ["theta", "m", "v", "t"];
+
+    let mut artifacts = HashMap::new();
+    let mut put = |name: &str, inputs: Vec<ArgSpec>, outputs: Vec<String>| {
+        artifacts.insert(
+            name.to_string(),
+            ArtifactSpec { file: format!("{name}.host"), inputs, outputs },
+        );
+    };
+
+    put("gnn_init", vec![i32a("seed", &[])], outs(&["theta"]));
+    put("wm_init", vec![i32a("seed", &[])], outs(&["theta"]));
+    put("ctrl_init", vec![i32a("seed", &[])], outs(&["theta"]));
+    put("gnn_encode_1", encode_in(p_gnn, 1), outs(&["z"]));
+    put("gnn_encode_b", encode_in(p_gnn, cfg.b_enc), outs(&["z"]));
+    {
+        let mut inputs = adam_in(p_gnn);
+        inputs.extend(encode_in(p_gnn, cfg.b_enc).into_iter().skip(1));
+        inputs.push(f32a("lr", &[]));
+        let mut o = adam_out.to_vec();
+        o.push("loss");
+        put("gnn_ae_train", inputs, outs(&o));
+    }
+    put("ctrl_policy_1", policy_in(1), outs(&["xlogits", "llogits", "values"]));
+    put("ctrl_policy_b", policy_in(cfg.b_dream), outs(&["xlogits", "llogits", "values"]));
+    {
+        let b = cfg.b_ppo;
+        let mut inputs = adam_in(p_ctrl);
+        inputs.extend([
+            f32a("z", &[b, z]),
+            f32a("h", &[b, r]),
+            i32a("act", &[b, 2]),
+            f32a("logp", &[b]),
+            f32a("adv", &[b]),
+            f32a("ret", &[b]),
+            f32a("xmask", &[b, x1]),
+            f32a("lmask", &[b, locs]),
+            f32a("lr", &[]),
+            f32a("clip", &[]),
+            f32a("ent_coef", &[]),
+        ]);
+        let mut o = adam_out.to_vec();
+        o.extend(["pi_loss", "v_loss", "entropy", "approx_kl"]);
+        put("ctrl_train", inputs, outs(&o));
+    }
+    put("wm_step_1", wm_step_in(1), wm_step_out.clone());
+    put("wm_step_b", wm_step_in(cfg.b_dream), wm_step_out);
+    {
+        let (b, t) = (cfg.b_wm, cfg.seq_len);
+        let mut inputs = adam_in(p_wm);
+        inputs.extend([
+            f32a("z", &[b, t, z]),
+            i32a("a", &[b, t, 2]),
+            f32a("z_next", &[b, t, z]),
+            f32a("r", &[b, t]),
+            f32a("xm", &[b, t, x1]),
+            f32a("done", &[b, t]),
+            f32a("valid", &[b, t]),
+            f32a("lr", &[]),
+        ]);
+        let mut o = adam_out.to_vec();
+        o.extend(["total", "nll", "reward_mse", "mask_bce", "done_bce"]);
+        put("wm_train", inputs, outs(&o));
+    }
+
+    Manifest { dir: PathBuf::from("(host)"), hp, param_sizes, artifacts }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> HostBackend {
+        HostBackend::with_config(HostConfig {
+            max_nodes: 16,
+            node_feats: 24,
+            gnn_hidden: 8,
+            latent: 6,
+            rnn_hidden: 8,
+            mdn_k: 2,
+            act_emb: 4,
+            ctrl_hidden: 8,
+            n_xfers1: 7,
+            max_locs: 12,
+            b_dream: 3,
+            b_wm: 2,
+            seq_len: 3,
+            b_ppo: 4,
+            b_enc: 2,
+        })
+    }
+
+    #[test]
+    fn manifest_names_cover_all_program_families() {
+        let b = tiny();
+        let names: Vec<&str> = vec![
+            "gnn_init",
+            "gnn_encode_1",
+            "gnn_encode_b",
+            "gnn_ae_train",
+            "ctrl_init",
+            "ctrl_policy_1",
+            "ctrl_policy_b",
+            "ctrl_train",
+            "wm_init",
+            "wm_step_1",
+            "wm_step_b",
+            "wm_train",
+        ];
+        for n in &names {
+            assert!(b.manifest().artifact(n).is_ok(), "missing program {n}");
+        }
+        assert_eq!(b.manifest().artifacts.len(), names.len());
+    }
+
+    #[test]
+    fn init_validates_and_sizes_match_param_sizes() {
+        let b = tiny();
+        for fam in ["gnn", "wm", "ctrl"] {
+            let out = b.exec(&format!("{fam}_init"), &[TensorView::ScalarI32(9)]).unwrap();
+            assert_eq!(out[0].data.len(), b.manifest().param_sizes[fam]);
+        }
+        // Wrong dtype rejected.
+        assert!(b.exec("gnn_init", &[TensorView::ScalarF32(9.0)]).is_err());
+        // Wrong arity rejected.
+        assert!(b.exec("gnn_init", &[]).is_err());
+        // Unknown program rejected.
+        assert!(b.exec("nope", &[TensorView::ScalarI32(0)]).is_err());
+    }
+
+    #[test]
+    fn stats_are_recorded_per_program() {
+        let b = tiny();
+        let _ = b.exec("ctrl_init", &[TensorView::ScalarI32(0)]).unwrap();
+        let _ = b.exec("ctrl_init", &[TensorView::ScalarI32(1)]).unwrap();
+        let stats = b.stats();
+        assert_eq!(stats["ctrl_init"].calls, 2);
+    }
+}

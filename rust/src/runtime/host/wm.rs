@@ -1,0 +1,532 @@
+//! Host MDN-RNN world model: an LSTM over `[z, action-embedding, location]`
+//! with five heads — per-dimension K-component mixture density (log_pi, mu,
+//! log_sig), reward, next-state xfer-mask logits and a done logit. Mirrors
+//! the `wm_*` artifact contract: `wm_init`, `wm_step_1`, `wm_step_b`,
+//! `wm_train`.
+//!
+//! Training is teacher-forced with per-step truncated backpropagation (the
+//! incoming `h, c` of each step are treated as constants): every parameter
+//! tensor — input/recurrent weights, action embeddings and all heads —
+//! still receives gradient at every step, while keeping the backward pass
+//! a single LSTM-cell rule.
+
+use super::nn::{
+    acc_rows, acc_xt_dy, adam_step, dy_wt, linear, log_sum_exp, sigmoid, softmax_inplace,
+    softplus, ParamLayout,
+};
+
+const LN_2PI: f32 = 1.837_877_1;
+
+pub struct WmNet {
+    pub zdim: usize,
+    pub rdim: usize,
+    pub k: usize,
+    pub x1: usize,
+    pub locs: usize,
+    /// Action-embedding width; LSTM input is `zdim + de + 1`.
+    pub de: usize,
+    pub layout: ParamLayout,
+}
+
+/// One batched step's outputs (all row-major over the batch).
+pub struct WmHeads {
+    pub log_pi: Vec<f32>,      // [b, Z*K], dimension-major (d*K + k)
+    pub mu: Vec<f32>,          // [b, Z*K]
+    pub log_sig: Vec<f32>,     // [b, Z*K]
+    pub reward: Vec<f32>,      // [b]
+    pub mask_logits: Vec<f32>, // [b, X1]
+    pub done_logits: Vec<f32>, // [b]
+    pub h1: Vec<f32>,          // [b, R]
+    pub c1: Vec<f32>,          // [b, R]
+}
+
+pub struct WmStepLosses {
+    pub total: f32,
+    pub nll: f32,
+    pub reward_mse: f32,
+    pub mask_bce: f32,
+    pub done_bce: f32,
+}
+
+/// Forward activations of one batched LSTM step, kept for backward.
+struct CellFwd {
+    x: Vec<f32>,       // [b, I]
+    h_prev: Vec<f32>,  // [b, R]
+    c_prev: Vec<f32>,  // [b, R]
+    gi: Vec<f32>,      // [b, R] sigmoid(i)
+    gf: Vec<f32>,      // [b, R] sigmoid(f)
+    gg: Vec<f32>,      // [b, R] tanh(g)
+    go: Vec<f32>,      // [b, R] sigmoid(o)
+    tanh_c1: Vec<f32>, // [b, R]
+    sig_tanh: Vec<f32>, // [b, Z*K] tanh of the raw log_sig head
+    heads: WmHeads,
+    ax: Vec<usize>,    // [b] clamped xfer slots (embedding rows)
+}
+
+impl WmNet {
+    pub fn new(zdim: usize, rdim: usize, k: usize, x1: usize, locs: usize, de: usize) -> Self {
+        let i_dim = zdim + de + 1;
+        let zk = zdim * k;
+        let mut layout = ParamLayout::new();
+        layout.add("emb", x1 * de, x1);
+        layout.add("wxh", i_dim * 4 * rdim, i_dim);
+        layout.add("whh", rdim * 4 * rdim, rdim);
+        layout.add("bh", 4 * rdim, 0);
+        layout.add("wpi", rdim * zk, rdim);
+        layout.add("bpi", zk, 0);
+        layout.add("wmu", rdim * zk, rdim);
+        layout.add("bmu", zk, 0);
+        layout.add("wsig", rdim * zk, rdim);
+        layout.add("bsig", zk, 0);
+        layout.add("wr", rdim, rdim);
+        layout.add("br", 1, 0);
+        layout.add("wmk", rdim * x1, rdim);
+        layout.add("bmk", x1, 0);
+        layout.add("wd", rdim, rdim);
+        layout.add("bd", 1, 0);
+        Self { zdim, rdim, k, x1, locs, de, layout }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.layout.total()
+    }
+
+    pub fn init(&self, seed: i32) -> Vec<f32> {
+        let mut theta =
+            self.layout.init(0x776D ^ (seed as u64).wrapping_mul(0x9E3779B97F4A7C15), |_| 0.0);
+        // Forget-gate bias starts at 1 (standard LSTM trick).
+        let r = self.rdim;
+        self.layout.view_mut(&mut theta, "bh")[r..2 * r].fill(1.0);
+        theta
+    }
+
+    fn i_dim(&self) -> usize {
+        self.zdim + self.de + 1
+    }
+
+    /// One batched forward step.
+    fn cell_forward(
+        &self,
+        theta: &[f32],
+        z: &[f32],
+        a: &[i32],
+        h: &[f32],
+        c: &[f32],
+        b: usize,
+    ) -> CellFwd {
+        let (zd, r, i_dim, zk) = (self.zdim, self.rdim, self.i_dim(), self.zdim * self.k);
+        // Assemble the LSTM input rows.
+        let emb = self.layout.view(theta, "emb");
+        let mut x = vec![0.0f32; b * i_dim];
+        let mut ax = vec![0usize; b];
+        for row in 0..b {
+            let slot = (a[row * 2].max(0) as usize).min(self.x1 - 1);
+            let loc = a[row * 2 + 1].max(0) as f32 / self.locs.max(1) as f32;
+            ax[row] = slot;
+            let xr = &mut x[row * i_dim..(row + 1) * i_dim];
+            xr[..zd].copy_from_slice(&z[row * zd..(row + 1) * zd]);
+            xr[zd..zd + self.de].copy_from_slice(&emb[slot * self.de..(slot + 1) * self.de]);
+            xr[zd + self.de] = loc;
+        }
+
+        let mut gates = {
+            let wxh = self.layout.view(theta, "wxh");
+            linear(&x, wxh, self.layout.view(theta, "bh"), b, i_dim, 4 * r)
+        };
+        let zero_bias = vec![0.0f32; 4 * r];
+        let rec = linear(h, self.layout.view(theta, "whh"), &zero_bias, b, r, 4 * r);
+        for (g, rc) in gates.iter_mut().zip(&rec) {
+            *g += rc;
+        }
+
+        let mut gi = vec![0.0f32; b * r];
+        let mut gf = vec![0.0f32; b * r];
+        let mut gg = vec![0.0f32; b * r];
+        let mut go = vec![0.0f32; b * r];
+        let mut c1 = vec![0.0f32; b * r];
+        let mut tanh_c1 = vec![0.0f32; b * r];
+        let mut h1 = vec![0.0f32; b * r];
+        for row in 0..b {
+            for j in 0..r {
+                let base = row * 4 * r;
+                let i_v = sigmoid(gates[base + j]);
+                let f_v = sigmoid(gates[base + r + j]);
+                let g_v = gates[base + 2 * r + j].tanh();
+                let o_v = sigmoid(gates[base + 3 * r + j]);
+                let c_v = f_v * c[row * r + j] + i_v * g_v;
+                let tc = c_v.tanh();
+                gi[row * r + j] = i_v;
+                gf[row * r + j] = f_v;
+                gg[row * r + j] = g_v;
+                go[row * r + j] = o_v;
+                c1[row * r + j] = c_v;
+                tanh_c1[row * r + j] = tc;
+                h1[row * r + j] = o_v * tc;
+            }
+        }
+
+        let log_pi =
+            linear(&h1, self.layout.view(theta, "wpi"), self.layout.view(theta, "bpi"), b, r, zk);
+        let mu =
+            linear(&h1, self.layout.view(theta, "wmu"), self.layout.view(theta, "bmu"), b, r, zk);
+        let sig_raw =
+            linear(&h1, self.layout.view(theta, "wsig"), self.layout.view(theta, "bsig"), b, r, zk);
+        let sig_tanh: Vec<f32> = sig_raw.iter().map(|v| v.tanh()).collect();
+        // log_sig in [-4, 2]: bounded yet smooth, so gradients never die.
+        let log_sig: Vec<f32> = sig_tanh.iter().map(|t| 3.0 * t - 1.0).collect();
+        let reward =
+            linear(&h1, self.layout.view(theta, "wr"), self.layout.view(theta, "br"), b, r, 1);
+        let mask_logits = {
+            let wmk = self.layout.view(theta, "wmk");
+            linear(&h1, wmk, self.layout.view(theta, "bmk"), b, r, self.x1)
+        };
+        let done_logits =
+            linear(&h1, self.layout.view(theta, "wd"), self.layout.view(theta, "bd"), b, r, 1);
+
+        CellFwd {
+            x,
+            h_prev: h.to_vec(),
+            c_prev: c.to_vec(),
+            gi,
+            gf,
+            gg,
+            go,
+            tanh_c1,
+            sig_tanh,
+            heads: WmHeads { log_pi, mu, log_sig, reward, mask_logits, done_logits, h1, c1 },
+            ax,
+        }
+    }
+
+    /// The `wm_step_*` forward.
+    pub fn step(
+        &self,
+        theta: &[f32],
+        z: &[f32],
+        a: &[i32],
+        h: &[f32],
+        c: &[f32],
+        b: usize,
+    ) -> WmHeads {
+        self.cell_forward(theta, z, a, h, c, b).heads
+    }
+
+    /// One teacher-forced Adam step over `[b, t]` sequence batches
+    /// (`wm_train`). Returns the component losses.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step(
+        &self,
+        theta: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        t_adam: f32,
+        z: &[f32],
+        a: &[i32],
+        z_next: &[f32],
+        r_target: &[f32],
+        xm_target: &[f32],
+        done_target: &[f32],
+        valid: &[f32],
+        b: usize,
+        t_len: usize,
+        lr: f32,
+    ) -> WmStepLosses {
+        let (zd, r, i_dim, k, x1) = (self.zdim, self.rdim, self.i_dim(), self.k, self.x1);
+        let zk = zd * k;
+        let denom = valid.iter().sum::<f32>().max(1.0);
+
+        let mut grad = vec![0.0f32; theta.len()];
+        let mut demb = vec![0.0f32; x1 * self.de];
+        let mut dwxh = vec![0.0f32; i_dim * 4 * r];
+        let mut dwhh = vec![0.0f32; r * 4 * r];
+        let mut dbh = vec![0.0f32; 4 * r];
+        let mut dwpi = vec![0.0f32; r * zk];
+        let mut dbpi = vec![0.0f32; zk];
+        let mut dwmu = vec![0.0f32; r * zk];
+        let mut dbmu = vec![0.0f32; zk];
+        let mut dwsig = vec![0.0f32; r * zk];
+        let mut dbsig = vec![0.0f32; zk];
+        let mut dwr = vec![0.0f32; r];
+        let mut dbr = vec![0.0f32; 1];
+        let mut dwmk = vec![0.0f32; r * x1];
+        let mut dbmk = vec![0.0f32; x1];
+        let mut dwd = vec![0.0f32; r];
+        let mut dbd = vec![0.0f32; 1];
+
+        let (mut nll, mut r_mse, mut m_bce, mut d_bce) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        let mut h = vec![0.0f32; b * r];
+        let mut c = vec![0.0f32; b * r];
+
+        for ti in 0..t_len {
+            // Gather the time-slice into step-batch layout.
+            let mut zs = vec![0.0f32; b * zd];
+            let mut as_ = vec![0i32; b * 2];
+            for row in 0..b {
+                let s = (row * t_len + ti) * zd;
+                zs[row * zd..(row + 1) * zd].copy_from_slice(&z[s..s + zd]);
+                as_[row * 2] = a[(row * t_len + ti) * 2];
+                as_[row * 2 + 1] = a[(row * t_len + ti) * 2 + 1];
+            }
+            let fwd = self.cell_forward(theta, &zs, &as_, &h, &c, b);
+
+            // ---- losses + head gradients ---------------------------------
+            let mut dlp = vec![0.0f32; b * zk];
+            let mut dmu = vec![0.0f32; b * zk];
+            let mut dls = vec![0.0f32; b * zk];
+            let mut drh = vec![0.0f32; b];
+            let mut dmk = vec![0.0f32; b * x1];
+            let mut ddn = vec![0.0f32; b];
+            for row in 0..b {
+                let wv = valid[row * t_len + ti] / denom;
+                if wv == 0.0 {
+                    continue;
+                }
+                // MDN NLL over each latent dimension.
+                let wdim = wv / zd as f32;
+                for d in 0..zd {
+                    let base = row * zk + d * k;
+                    let raw = &fwd.heads.log_pi[base..base + k];
+                    let lse_pi = log_sum_exp(raw);
+                    let x_t = z_next[(row * t_len + ti) * zd + d];
+                    let mut lp = vec![0.0f32; k];
+                    for kk in 0..k {
+                        let lsg = fwd.heads.log_sig[base + kk];
+                        let sg = lsg.exp();
+                        let dev = (x_t - fwd.heads.mu[base + kk]) / sg;
+                        lp[kk] = (raw[kk] - lse_pi) - lsg - 0.5 * LN_2PI - 0.5 * dev * dev;
+                    }
+                    let nll_d = -log_sum_exp(&lp);
+                    nll += nll_d * wdim;
+                    let mut gamma = lp;
+                    softmax_inplace(&mut gamma);
+                    for kk in 0..k {
+                        let pi_k = (raw[kk] - lse_pi).exp();
+                        let lsg = fwd.heads.log_sig[base + kk];
+                        let sg = lsg.exp();
+                        let dev = (x_t - fwd.heads.mu[base + kk]) / sg;
+                        dlp[base + kk] = (pi_k - gamma[kk]) * wdim;
+                        dmu[base + kk] =
+                            gamma[kk] * (fwd.heads.mu[base + kk] - x_t) / (sg * sg) * wdim;
+                        dls[base + kk] = gamma[kk] * (1.0 - dev * dev) * wdim;
+                    }
+                }
+                // Reward regression.
+                let dr = fwd.heads.reward[row] - r_target[row * t_len + ti];
+                r_mse += dr * dr * wv;
+                drh[row] = 2.0 * dr * wv;
+                // Next-state mask BCE.
+                let wmask = wv / x1 as f32;
+                for xi in 0..x1 {
+                    let logit = fwd.heads.mask_logits[row * x1 + xi];
+                    let target = xm_target[(row * t_len + ti) * x1 + xi];
+                    m_bce += (softplus(logit) - target * logit) * wmask;
+                    dmk[row * x1 + xi] = (sigmoid(logit) - target) * wmask;
+                }
+                // Done BCE.
+                let dl = fwd.heads.done_logits[row];
+                let dt = done_target[row * t_len + ti];
+                d_bce += (softplus(dl) - dt * dl) * wv;
+                ddn[row] = (sigmoid(dl) - dt) * wv;
+            }
+
+            // ---- backward: heads -> h1 -> one LSTM cell -------------------
+            // log_sig = 3 * tanh(sig_raw) - 1.
+            let mut dsig_raw = dls;
+            for (d, th) in dsig_raw.iter_mut().zip(&fwd.sig_tanh) {
+                *d *= 3.0 * (1.0 - th * th);
+            }
+            let h1 = &fwd.heads.h1;
+            acc_xt_dy(h1, &dlp, b, r, zk, &mut dwpi);
+            acc_rows(&dlp, b, zk, &mut dbpi);
+            acc_xt_dy(h1, &dmu, b, r, zk, &mut dwmu);
+            acc_rows(&dmu, b, zk, &mut dbmu);
+            acc_xt_dy(h1, &dsig_raw, b, r, zk, &mut dwsig);
+            acc_rows(&dsig_raw, b, zk, &mut dbsig);
+            acc_xt_dy(h1, &drh, b, r, 1, &mut dwr);
+            acc_rows(&drh, b, 1, &mut dbr);
+            acc_xt_dy(h1, &dmk, b, r, x1, &mut dwmk);
+            acc_rows(&dmk, b, x1, &mut dbmk);
+            acc_xt_dy(h1, &ddn, b, r, 1, &mut dwd);
+            acc_rows(&ddn, b, 1, &mut dbd);
+
+            let mut dh1 = dy_wt(&dlp, self.layout.view(theta, "wpi"), b, zk, r);
+            let wmu = self.layout.view(theta, "wmu");
+            for (dst, add) in dh1.iter_mut().zip(dy_wt(&dmu, wmu, b, zk, r)) {
+                *dst += add;
+            }
+            let wsig = self.layout.view(theta, "wsig");
+            for (dst, add) in dh1.iter_mut().zip(dy_wt(&dsig_raw, wsig, b, zk, r)) {
+                *dst += add;
+            }
+            let wr = self.layout.view(theta, "wr");
+            for (dst, add) in dh1.iter_mut().zip(dy_wt(&drh, wr, b, 1, r)) {
+                *dst += add;
+            }
+            let wmk = self.layout.view(theta, "wmk");
+            for (dst, add) in dh1.iter_mut().zip(dy_wt(&dmk, wmk, b, x1, r)) {
+                *dst += add;
+            }
+            let wd = self.layout.view(theta, "wd");
+            for (dst, add) in dh1.iter_mut().zip(dy_wt(&ddn, wd, b, 1, r)) {
+                *dst += add;
+            }
+
+            let mut dgates = vec![0.0f32; b * 4 * r];
+            for row in 0..b {
+                for j in 0..r {
+                    let idx = row * r + j;
+                    let o_v = fwd.go[idx];
+                    let tc = fwd.tanh_c1[idx];
+                    let dh = dh1[idx];
+                    let do_pre = dh * tc * o_v * (1.0 - o_v);
+                    let dc1 = dh * o_v * (1.0 - tc * tc);
+                    let i_v = fwd.gi[idx];
+                    let f_v = fwd.gf[idx];
+                    let g_v = fwd.gg[idx];
+                    let di_pre = dc1 * g_v * i_v * (1.0 - i_v);
+                    let df_pre = dc1 * fwd.c_prev[idx] * f_v * (1.0 - f_v);
+                    let dg_pre = dc1 * i_v * (1.0 - g_v * g_v);
+                    let base = row * 4 * r;
+                    dgates[base + j] = di_pre;
+                    dgates[base + r + j] = df_pre;
+                    dgates[base + 2 * r + j] = dg_pre;
+                    dgates[base + 3 * r + j] = do_pre;
+                }
+            }
+            acc_xt_dy(&fwd.x, &dgates, b, i_dim, 4 * r, &mut dwxh);
+            acc_xt_dy(&fwd.h_prev, &dgates, b, r, 4 * r, &mut dwhh);
+            acc_rows(&dgates, b, 4 * r, &mut dbh);
+            let dx = dy_wt(&dgates, self.layout.view(theta, "wxh"), b, 4 * r, i_dim);
+            for row in 0..b {
+                let slot = fwd.ax[row];
+                for e in 0..self.de {
+                    demb[slot * self.de + e] += dx[row * i_dim + zd + e];
+                }
+            }
+
+            // Teacher forcing: advance the (detached) recurrent state.
+            h = fwd.heads.h1;
+            c = fwd.heads.c1;
+        }
+
+        self.layout.scatter(&mut grad, "emb", &demb);
+        self.layout.scatter(&mut grad, "wxh", &dwxh);
+        self.layout.scatter(&mut grad, "whh", &dwhh);
+        self.layout.scatter(&mut grad, "bh", &dbh);
+        self.layout.scatter(&mut grad, "wpi", &dwpi);
+        self.layout.scatter(&mut grad, "bpi", &dbpi);
+        self.layout.scatter(&mut grad, "wmu", &dwmu);
+        self.layout.scatter(&mut grad, "bmu", &dbmu);
+        self.layout.scatter(&mut grad, "wsig", &dwsig);
+        self.layout.scatter(&mut grad, "bsig", &dbsig);
+        self.layout.scatter(&mut grad, "wr", &dwr);
+        self.layout.scatter(&mut grad, "br", &dbr);
+        self.layout.scatter(&mut grad, "wmk", &dwmk);
+        self.layout.scatter(&mut grad, "bmk", &dbmk);
+        self.layout.scatter(&mut grad, "wd", &dwd);
+        self.layout.scatter(&mut grad, "bd", &dbd);
+        adam_step(theta, m, v, t_adam, &grad, lr);
+
+        WmStepLosses {
+            total: nll + r_mse + m_bce + d_bce,
+            nll,
+            reward_mse: r_mse,
+            mask_bce: m_bce,
+            done_bce: d_bce,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn net() -> WmNet {
+        WmNet::new(4, 6, 2, 5, 10, 3)
+    }
+
+    #[test]
+    fn step_shapes_and_evolution() {
+        let n = net();
+        let theta = n.init(1);
+        let b = 2;
+        let z = vec![0.3f32; b * 4];
+        let a = vec![1i32, 2, 4, 0];
+        let h = vec![0.0f32; b * 6];
+        let c = vec![0.0f32; b * 6];
+        let out = n.step(&theta, &z, &a, &h, &c, b);
+        assert_eq!(out.log_pi.len(), b * 4 * 2);
+        assert_eq!(out.mask_logits.len(), b * 5);
+        assert_eq!(out.h1.len(), b * 6);
+        assert!(out.h1.iter().any(|v| v.abs() > 0.0), "hidden state did not evolve");
+        assert!(out.log_sig.iter().all(|v| (-4.0..=2.0).contains(v)));
+        // Deterministic.
+        let again = n.step(&theta, &z, &a, &h, &c, b);
+        assert_eq!(out.h1, again.h1);
+        assert_eq!(out.log_pi, again.log_pi);
+    }
+
+    #[test]
+    fn train_decreases_loss_on_synthetic_dynamics() {
+        // z_next = 0.9 z, constant small reward, all-valid masks.
+        let n = net();
+        let mut theta = n.init(3);
+        let mut m = vec![0.0f32; theta.len()];
+        let mut v = vec![0.0f32; theta.len()];
+        let (b, t) = (3, 4);
+        let mut rng = Rng::new(9);
+        let z: Vec<f32> = (0..b * t * 4).map(|_| rng.normal() * 0.5).collect();
+        let z_next: Vec<f32> = z.iter().map(|x| 0.9 * x).collect();
+        let a: Vec<i32> = (0..b * t * 2).map(|i| (i % 5) as i32).collect();
+        let r: Vec<f32> = vec![0.05; b * t];
+        let xm = vec![1.0f32; b * t * 5];
+        let done = vec![0.0f32; b * t];
+        let valid = vec![1.0f32; b * t];
+        let first = n
+            .train_step(
+                &mut theta, &mut m, &mut v, 1.0, &z, &a, &z_next, &r, &xm, &done, &valid, b, t,
+                1e-2,
+            )
+            .total;
+        let mut last = first;
+        for step in 2..=60 {
+            last = n
+                .train_step(
+                    &mut theta, &mut m, &mut v, step as f32, &z, &a, &z_next, &r, &xm, &done,
+                    &valid, b, t, 1e-2,
+                )
+                .total;
+        }
+        assert!(last.is_finite() && last < first, "wm loss {first} -> {last}");
+        assert!(theta.iter().all(|p| p.is_finite()));
+    }
+
+    #[test]
+    fn invalid_steps_carry_no_gradient() {
+        let n = net();
+        let theta0 = n.init(5);
+        let mut theta = theta0.clone();
+        let mut m = vec![0.0f32; theta.len()];
+        let mut v = vec![0.0f32; theta.len()];
+        let (b, t) = (2, 3);
+        let losses = n.train_step(
+            &mut theta,
+            &mut m,
+            &mut v,
+            1.0,
+            &vec![0.5; b * t * 4],
+            &vec![0i32; b * t * 2],
+            &vec![0.4; b * t * 4],
+            &vec![0.1; b * t],
+            &vec![1.0; b * t * 5],
+            &vec![0.0; b * t],
+            &vec![0.0; b * t], // nothing valid
+            b,
+            t,
+            1e-2,
+        );
+        assert_eq!(losses.total, 0.0);
+        assert_eq!(theta, theta0, "all-invalid batch must be a no-op");
+    }
+}

@@ -1,10 +1,22 @@
-//! PJRT runtime: the bridge between the Rust coordinator and the AOT
-//! artifacts produced by `make artifacts` (see DESIGN.md architecture).
+//! Model execution runtime: the bridge between the Rust coordinator and
+//! the neural programs (GNN encoder, MDN-RNN world model, PPO controller).
+//!
+//! The [`Backend`] trait is the seam: callers execute *named programs over
+//! typed tensor views* and never see the substrate. [`PjrtBackend`] runs
+//! the AOT artifacts produced by `make artifacts` through the PJRT C API;
+//! [`HostBackend`] implements the same program families natively in Rust
+//! so the full train/eval loop runs offline (`rlflow train --backend
+//! host`). [`backend_by_name`] maps the CLI `--backend {host,pjrt,auto}`
+//! flag to a concrete instance.
 
-pub mod engine;
+pub mod backend;
+pub mod host;
 pub mod manifest;
 pub mod params;
+pub mod pjrt;
 
-pub use engine::{lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, scalar_f32, to_vec_f32, zeros_like_spec, Engine};
+pub use backend::{backend_by_name, validate_args, Backend, ExecStats, TensorView};
+pub use host::{HostBackend, HostConfig};
 pub use manifest::{ArgSpec, ArtifactSpec, Dt, Manifest};
 pub use params::ParamStore;
+pub use pjrt::PjrtBackend;

@@ -1,16 +1,16 @@
 //! Parameter + optimiser state for one model family (gnn / wm / ctrl).
 //!
 //! Parameters are flat f32 vectors (the L2 contract, see model.py). The
-//! store owns `(theta, m, v, t)` as host vectors, threads them through
-//! train-step artifacts, and persists to a tiny length-prefixed binary
-//! format (`.rlw`) so trained agents can be reloaded between runs.
+//! store owns `(theta, m, v, t)` as host vectors, threads them through the
+//! backend's train-step programs, and persists to a tiny length-prefixed
+//! binary format (`.rlw`) so trained agents can be reloaded between runs.
 
 use std::io::{Read, Write};
 use std::path::Path;
 
-use xla::Literal;
+use crate::interp::Tensor;
 
-use super::engine::{lit_f32, lit_scalar_f32, scalar_f32, to_vec_f32, Engine};
+use super::backend::{Backend, TensorView};
 
 #[derive(Debug, Clone)]
 pub struct ParamStore {
@@ -20,51 +20,68 @@ pub struct ParamStore {
     pub v: Vec<f32>,
     pub t: f32,
     /// Monotone counter bumped on every parameter change; keys the
-    /// engine's device-resident theta cache.
+    /// backend's cached uploaded-theta entries.
     pub version: u64,
 }
 
 impl ParamStore {
-    /// Initialise via the family's `*_init` artifact.
-    pub fn init(engine: &Engine, family: &str, seed: i32) -> anyhow::Result<Self> {
-        let out = engine.exec(&format!("{family}_init"), &[Literal::scalar(seed)])?;
-        let theta = to_vec_f32(&out[0])?;
+    /// Initialise via the family's `*_init` program on any backend.
+    pub fn init(backend: &dyn Backend, family: &str, seed: i32) -> anyhow::Result<Self> {
+        let out = backend.exec(&format!("{family}_init"), &[TensorView::ScalarI32(seed)])?;
+        anyhow::ensure!(!out.is_empty(), "{family}_init returned no outputs");
+        let theta = out[0].data.clone();
         let n = theta.len();
-        let expected = *engine
-            .manifest
+        let expected = *backend
+            .manifest()
             .param_sizes
             .get(family)
             .ok_or_else(|| anyhow::anyhow!("unknown family {family}"))?;
-        anyhow::ensure!(n == expected, "{family}: init returned {n} params, manifest says {expected}");
-        Ok(Self { family: family.to_string(), theta, m: vec![0.0; n], v: vec![0.0; n], t: 0.0, version: 0 })
+        anyhow::ensure!(
+            n == expected,
+            "{family}: init returned {n} params, manifest says {expected}"
+        );
+        Ok(Self {
+            family: family.to_string(),
+            theta,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            t: 0.0,
+            version: 0,
+        })
     }
 
     pub fn n_params(&self) -> usize {
         self.theta.len()
     }
 
-    /// The four leading arguments of every `*_train` artifact.
-    pub fn train_args(&self) -> anyhow::Result<Vec<Literal>> {
+    /// The four leading arguments of every `*_train` program.
+    pub fn train_args(&self) -> Vec<TensorView<'_>> {
         let n = self.theta.len();
-        Ok(vec![
-            lit_f32(&self.theta, &[n])?,
-            lit_f32(&self.m, &[n])?,
-            lit_f32(&self.v, &[n])?,
-            lit_scalar_f32(self.t),
-        ])
+        vec![
+            TensorView::f32(&self.theta, &[n]),
+            TensorView::f32(&self.m, &[n]),
+            TensorView::f32(&self.v, &[n]),
+            TensorView::ScalarF32(self.t),
+        ]
     }
 
-    pub fn theta_lit(&self) -> anyhow::Result<Literal> {
-        lit_f32(&self.theta, &[self.theta.len()])
-    }
-
-    /// Absorb the four leading outputs of a train-step artifact.
-    pub fn absorb(&mut self, outs: &[Literal]) -> anyhow::Result<()> {
+    /// Absorb the four leading outputs of a train-step program.
+    pub fn absorb(&mut self, outs: &[Tensor]) -> anyhow::Result<()> {
         anyhow::ensure!(outs.len() >= 4, "train step returned too few outputs");
-        self.theta = to_vec_f32(&outs[0])?;
-        self.m = to_vec_f32(&outs[1])?;
-        self.v = to_vec_f32(&outs[2])?;
-        self.t = scalar_f32(&outs[3])?;
+        for (i, name) in ["theta", "m", "v"].iter().enumerate() {
+            anyhow::ensure!(
+                outs[i].data.len() == self.theta.len(),
+                "{}: train step returned {} values for {name}, store holds {}",
+                self.family,
+                outs[i].data.len(),
+                self.theta.len()
+            );
+        }
+        anyhow::ensure!(outs[3].data.len() == 1, "{}: t output is not a scalar", self.family);
+        self.theta = outs[0].data.clone();
+        self.m = outs[1].data.clone();
+        self.v = outs[2].data.clone();
+        self.t = outs[3].data[0];
         self.version += 1;
         Ok(())
     }
@@ -146,5 +163,29 @@ mod tests {
         let path = std::env::temp_dir().join("rlflow_params_bad.rlw");
         std::fs::write(&path, b"JUNKdata").unwrap();
         assert!(ParamStore::load_file(&path).is_err());
+    }
+
+    #[test]
+    fn absorb_bumps_version_and_checks_size() {
+        let mut store = ParamStore {
+            family: "ctrl".into(),
+            theta: vec![0.0; 3],
+            m: vec![0.0; 3],
+            v: vec![0.0; 3],
+            t: 0.0,
+            version: 0,
+        };
+        let outs = vec![
+            Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]).unwrap(),
+            Tensor::from_vec(&[3], vec![0.1, 0.1, 0.1]).unwrap(),
+            Tensor::from_vec(&[3], vec![0.2, 0.2, 0.2]).unwrap(),
+            Tensor::from_vec(&[], vec![1.0]).unwrap(),
+        ];
+        store.absorb(&outs).unwrap();
+        assert_eq!(store.version, 1);
+        assert_eq!(store.t, 1.0);
+        assert_eq!(store.theta, vec![1.0, 2.0, 3.0]);
+        let wrong = vec![Tensor::from_vec(&[1], vec![1.0]).unwrap(); 4];
+        assert!(store.absorb(&wrong).is_err());
     }
 }

@@ -1,4 +1,4 @@
-//! PJRT execution engine: load HLO text -> compile -> execute.
+//! PJRT implementation of [`Backend`]: load HLO text -> compile -> execute.
 //!
 //! Follows the /opt/xla-example/load_hlo pattern: HLO *text* is the
 //! interchange format (serialized protos from jax >= 0.5 carry 64-bit ids
@@ -8,7 +8,9 @@
 //!
 //! Executables are compiled lazily on first use and cached; per-artifact
 //! wall-clock accounting backs the §Perf analysis and the paper's
-//! dream-vs-real step-time comparison (§4.4: 10 ms vs 850 ms).
+//! dream-vs-real step-time comparison (§4.4: 10 ms vs 850 ms). In the
+//! offline build (vendored `xla` shim) construction fails fast at
+//! `PjRtClient::cpu()` — use [`HostBackend`](super::HostBackend) there.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -16,16 +18,13 @@ use std::time::Instant;
 
 use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
-use super::manifest::{ArtifactSpec, Dt, Manifest};
+use crate::interp::Tensor;
 
-#[derive(Debug, Default, Clone, Copy)]
-pub struct ExecStats {
-    pub calls: u64,
-    pub total_s: f64,
-    pub compile_s: f64,
-}
+use super::backend::{validate_args, Backend, ExecStats, TensorView};
+use super::manifest::Manifest;
+use super::params::ParamStore;
 
-pub struct Engine {
+pub struct PjrtBackend {
     client: PjRtClient,
     pub manifest: Manifest,
     exes: RefCell<HashMap<String, std::rc::Rc<PjRtLoadedExecutable>>>,
@@ -40,7 +39,7 @@ pub struct Engine {
     params: RefCell<HashMap<(String, u64), std::rc::Rc<(PjRtBuffer, Literal)>>>,
 }
 
-impl Engine {
+impl PjrtBackend {
     pub fn load(manifest: Manifest) -> anyhow::Result<Self> {
         let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
         Ok(Self {
@@ -79,35 +78,17 @@ impl Engine {
         Ok(rc)
     }
 
-    /// Eagerly compile a set of artifacts (avoids first-call latency spikes).
-    pub fn warmup(&self, names: &[&str]) -> anyhow::Result<()> {
-        for n in names {
-            self.executable(n)?;
-        }
-        Ok(())
+    fn record(&self, name: &str, dt: f64) {
+        let mut stats = self.stats.borrow_mut();
+        let s = stats.entry(name.to_string()).or_default();
+        s.calls += 1;
+        s.total_s += dt;
     }
 
-    /// Execute an artifact. Argument count and (for f32/i32 tensors)
-    /// element counts are validated against the manifest.
-    pub fn exec(&self, name: &str, args: &[Literal]) -> anyhow::Result<Vec<Literal>> {
-        let spec = self.manifest.artifact(name)?.clone();
-        anyhow::ensure!(
-            args.len() == spec.inputs.len(),
-            "{name}: got {} args, manifest says {}",
-            args.len(),
-            spec.inputs.len()
-        );
-        for (lit, arg) in args.iter().zip(&spec.inputs) {
-            let got = lit.element_count();
-            anyhow::ensure!(
-                got == arg.n_elems(),
-                "{name}.{}: literal has {} elems, expected {} {:?}",
-                arg.name,
-                got,
-                arg.n_elems(),
-                arg.shape
-            );
-        }
+    /// Execute an artifact over raw literals (the legacy low-level path;
+    /// argument counts were already validated by the caller).
+    fn exec_literals(&self, name: &str, args: &[Literal]) -> anyhow::Result<Vec<Literal>> {
+        let n_outputs = self.manifest.artifact(name)?.outputs.len();
         let exe = self.executable(name)?;
         let t0 = Instant::now();
         let outs = exe
@@ -120,21 +101,17 @@ impl Engine {
             .to_tuple()
             .map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))?;
         anyhow::ensure!(
-            parts.len() == spec.outputs.len(),
+            parts.len() == n_outputs,
             "{name}: got {} outputs, manifest says {}",
             parts.len(),
-            spec.outputs.len()
+            n_outputs
         );
-        let dt = t0.elapsed().as_secs_f64();
-        let mut stats = self.stats.borrow_mut();
-        let s = stats.entry(name.to_string()).or_default();
-        s.calls += 1;
-        s.total_s += dt;
+        self.record(name, t0.elapsed().as_secs_f64());
         Ok(parts)
     }
 
     /// Upload a literal to the device.
-    pub fn upload(&self, lit: &Literal) -> anyhow::Result<PjRtBuffer> {
+    fn upload(&self, lit: &Literal) -> anyhow::Result<PjRtBuffer> {
         self.client
             .buffer_from_host_literal(None, lit)
             .map_err(|e| anyhow::anyhow!("upload: {e:?}"))
@@ -142,15 +119,15 @@ impl Engine {
 
     /// Device-resident copy of a parameter store's theta, cached by
     /// (family, version). Superseded versions are evicted.
-    pub fn device_theta(
+    fn device_theta(
         &self,
-        store: &super::params::ParamStore,
+        store: &ParamStore,
     ) -> anyhow::Result<std::rc::Rc<(PjRtBuffer, Literal)>> {
         let key = (store.family.clone(), store.version);
         if let Some(b) = self.params.borrow().get(&key) {
             return Ok(b.clone());
         }
-        let lit = store.theta_lit()?;
+        let lit = lit_f32(&store.theta, &[store.theta.len()])?;
         let buf = self.upload(&lit)?;
         let entry = std::rc::Rc::new((buf, lit));
         let mut cache = self.params.borrow_mut();
@@ -158,62 +135,93 @@ impl Engine {
         cache.insert(key, entry.clone());
         Ok(entry)
     }
+}
 
-    /// Execute with a device-resident leading argument (theta) and host
-    /// literals for the rest — the acting hot path.
-    pub fn exec_with_theta(
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn exec(&self, program: &str, args: &[TensorView]) -> anyhow::Result<Vec<Tensor>> {
+        let spec = self.manifest.artifact(program)?;
+        validate_args(program, spec, args)?;
+        let lits = args.iter().map(view_to_literal).collect::<anyhow::Result<Vec<_>>>()?;
+        let outs = self.exec_literals(program, &lits)?;
+        outs.iter().map(literal_to_tensor).collect()
+    }
+
+    fn exec_with_params(
         &self,
-        name: &str,
-        theta: &(PjRtBuffer, Literal),
-        rest: &[Literal],
-    ) -> anyhow::Result<Vec<Literal>> {
-        let spec = self.manifest.artifact(name)?.clone();
-        anyhow::ensure!(
-            rest.len() + 1 == spec.inputs.len(),
-            "{name}: got {} args, manifest says {}",
-            rest.len() + 1,
-            spec.inputs.len()
-        );
-        let exe = self.executable(name)?;
+        program: &str,
+        params: &ParamStore,
+        rest: &[TensorView],
+    ) -> anyhow::Result<Vec<Tensor>> {
+        let spec = self.manifest.artifact(program)?;
+        // Same contract enforcement as the host side: validate theta + rest
+        // against the full spec before anything reaches the device.
+        {
+            let n = params.theta.len();
+            let mut full: Vec<TensorView> = Vec::with_capacity(rest.len() + 1);
+            full.push(TensorView::f32(&params.theta, &[n]));
+            full.extend(rest.iter().cloned());
+            validate_args(program, spec, &full)?;
+        }
+        let theta = self.device_theta(params)?;
+        let exe = self.executable(program)?;
         let t0 = Instant::now();
         let mut bufs: Vec<PjRtBuffer> = Vec::with_capacity(rest.len());
-        for lit in rest {
-            bufs.push(self.upload(lit)?);
+        for view in rest {
+            bufs.push(self.upload(&view_to_literal(view)?)?);
         }
         let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(rest.len() + 1);
         args.push(&theta.0);
         args.extend(bufs.iter());
         let outs = exe
             .execute_b(&args)
-            .map_err(|e| anyhow::anyhow!("execute_b {name}: {e:?}"))?;
+            .map_err(|e| anyhow::anyhow!("execute_b {program}: {e:?}"))?;
         let result = outs[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?;
+            .map_err(|e| anyhow::anyhow!("fetch {program}: {e:?}"))?;
         let parts = result
             .to_tuple()
-            .map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))?;
-        let dt = t0.elapsed().as_secs_f64();
-        let mut stats = self.stats.borrow_mut();
-        let s = stats.entry(name.to_string()).or_default();
-        s.calls += 1;
-        s.total_s += dt;
-        Ok(parts)
+            .map_err(|e| anyhow::anyhow!("untuple {program}: {e:?}"))?;
+        self.record(program, t0.elapsed().as_secs_f64());
+        parts.iter().map(literal_to_tensor).collect()
     }
 
-    pub fn stats(&self) -> HashMap<String, ExecStats> {
+    fn stats(&self) -> HashMap<String, ExecStats> {
         self.stats.borrow().clone()
-    }
-
-    pub fn spec(&self, name: &str) -> anyhow::Result<&ArtifactSpec> {
-        self.manifest.artifact(name)
     }
 }
 
 // ---------------------------------------------------------------------------
-// Literal helpers
+// Literal conversion helpers
 // ---------------------------------------------------------------------------
 
-pub fn lit_f32(data: &[f32], shape: &[usize]) -> anyhow::Result<Literal> {
+fn view_to_literal(view: &TensorView) -> anyhow::Result<Literal> {
+    match view {
+        TensorView::F32 { data, shape } => lit_f32(data, shape),
+        TensorView::I32 { data, shape } => lit_i32(data, shape),
+        TensorView::ScalarF32(v) => Ok(Literal::scalar(*v)),
+        TensorView::ScalarI32(v) => Ok(Literal::scalar(*v)),
+    }
+}
+
+/// XLA result shapes live in the HLO program, not the literal API surface
+/// we use — outputs come back flat and callers index by element.
+fn literal_to_tensor(l: &Literal) -> anyhow::Result<Tensor> {
+    let data = l
+        .to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("literal to f32 vec: {e:?}"))?;
+    let n = data.len();
+    Tensor::from_vec(&[n], data)
+}
+
+fn lit_f32(data: &[f32], shape: &[usize]) -> anyhow::Result<Literal> {
     anyhow::ensure!(shape.iter().product::<usize>() == data.len(), "lit_f32 shape mismatch");
     let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
     Literal::vec1(data)
@@ -221,34 +229,10 @@ pub fn lit_f32(data: &[f32], shape: &[usize]) -> anyhow::Result<Literal> {
         .map_err(|e| anyhow::anyhow!("reshape literal: {e:?}"))
 }
 
-pub fn lit_i32(data: &[i32], shape: &[usize]) -> anyhow::Result<Literal> {
+fn lit_i32(data: &[i32], shape: &[usize]) -> anyhow::Result<Literal> {
     anyhow::ensure!(shape.iter().product::<usize>() == data.len(), "lit_i32 shape mismatch");
     let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
     Literal::vec1(data)
         .reshape(&dims)
         .map_err(|e| anyhow::anyhow!("reshape literal: {e:?}"))
-}
-
-pub fn lit_scalar_f32(v: f32) -> Literal {
-    Literal::scalar(v)
-}
-
-pub fn lit_scalar_i32(v: i32) -> Literal {
-    Literal::scalar(v)
-}
-
-pub fn zeros_like_spec(spec: &super::manifest::ArgSpec) -> anyhow::Result<Literal> {
-    match spec.dtype {
-        Dt::F32 => lit_f32(&vec![0.0; spec.n_elems()], &spec.shape),
-        Dt::I32 => lit_i32(&vec![0; spec.n_elems()], &spec.shape),
-    }
-}
-
-pub fn to_vec_f32(l: &Literal) -> anyhow::Result<Vec<f32>> {
-    l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("literal to f32 vec: {e:?}"))
-}
-
-pub fn scalar_f32(l: &Literal) -> anyhow::Result<f32> {
-    l.get_first_element::<f32>()
-        .map_err(|e| anyhow::anyhow!("literal scalar: {e:?}"))
 }

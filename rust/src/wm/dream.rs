@@ -1,25 +1,24 @@
 //! The imagined environment (§3.3): controller training happens entirely
 //! inside these latent rollouts — no calls into the real graph environment.
 //!
-//! A step runs `wm_step_b`, samples the next latent from the MDN with
-//! temperature τ, reads the predicted reward, thresholds the predicted
+//! A step advances the [`WorldModel`], samples the next latent from the MDN
+//! with temperature τ, reads the predicted reward, thresholds the predicted
 //! xfer-validity logits into the next action mask, and thresholds the done
 //! head. All three failure modes §4.7 analyses (imperfect reward, invalid
 //! next state, wrong mask) are therefore reproducible here.
 
-use crate::runtime::{lit_f32, lit_i32, to_vec_f32, Engine, ParamStore};
+use crate::agent::{Action, ActionSpace};
+use crate::runtime::{Backend, ParamStore};
 use crate::util::Rng;
 
 use super::mdn::sample_mdn;
+use super::model::WorldModel;
 
 pub struct DreamEnv<'e> {
-    pub engine: &'e Engine,
+    pub model: WorldModel<'e>,
     pub temperature: f32,
     pub b: usize,
-    zdim: usize,
-    rdim: usize,
-    x1: usize,
-    k: usize,
+    space: ActionSpace,
     /// Reward scale used at WM training time (predictions are unscaled by it).
     pub reward_scale: f32,
     pub z: Vec<f32>,
@@ -31,25 +30,24 @@ pub struct DreamEnv<'e> {
 }
 
 impl<'e> DreamEnv<'e> {
-    pub fn new(engine: &'e Engine, temperature: f32, reward_scale: f32) -> anyhow::Result<Self> {
-        let b = engine.manifest.hp_usize("B_DREAM")?;
-        let zdim = engine.manifest.hp_usize("LATENT")?;
-        let rdim = engine.manifest.hp_usize("RNN_HIDDEN")?;
-        let x1 = engine.manifest.hp_usize("N_XFERS1")?;
-        let k = engine.manifest.hp_usize("MDN_K")?;
+    pub fn new(
+        backend: &'e dyn Backend,
+        temperature: f32,
+        reward_scale: f32,
+    ) -> anyhow::Result<Self> {
+        let model = WorldModel::new(backend)?;
+        let d = model.dims;
+        let b = d.b_dream;
         Ok(Self {
-            engine,
+            model,
             temperature,
             b,
-            zdim,
-            rdim,
-            x1,
-            k,
+            space: ActionSpace::slots_only(d.x1),
             reward_scale,
-            z: vec![0.0; b * zdim],
-            h: vec![0.0; b * rdim],
-            c: vec![0.0; b * rdim],
-            xmask: vec![1.0; b * x1],
+            z: vec![0.0; b * d.zdim],
+            h: vec![0.0; b * d.rdim],
+            c: vec![0.0; b * d.rdim],
+            xmask: vec![1.0; b * d.x1],
             done: vec![false; b],
         })
     }
@@ -58,12 +56,13 @@ impl<'e> DreamEnv<'e> {
     /// provided than the dream batch).
     pub fn reset(&mut self, z0: &[Vec<f32>], xmask0: &[Vec<f32>]) -> anyhow::Result<()> {
         anyhow::ensure!(!z0.is_empty() && z0.len() == xmask0.len(), "dream reset needs seeds");
+        let (zdim, x1) = (self.model.dims.zdim, self.model.dims.x1);
         for row in 0..self.b {
             let src = row % z0.len();
-            anyhow::ensure!(z0[src].len() == self.zdim, "latent width mismatch");
-            anyhow::ensure!(xmask0[src].len() == self.x1, "mask width mismatch");
-            self.z[row * self.zdim..(row + 1) * self.zdim].copy_from_slice(&z0[src]);
-            self.xmask[row * self.x1..(row + 1) * self.x1].copy_from_slice(&xmask0[src]);
+            anyhow::ensure!(z0[src].len() == zdim, "latent width mismatch");
+            anyhow::ensure!(xmask0[src].len() == x1, "mask width mismatch");
+            self.z[row * zdim..(row + 1) * zdim].copy_from_slice(&z0[src]);
+            self.xmask[row * x1..(row + 1) * x1].copy_from_slice(&xmask0[src]);
         }
         self.h.fill(0.0);
         self.c.fill(0.0);
@@ -71,44 +70,23 @@ impl<'e> DreamEnv<'e> {
         Ok(())
     }
 
-    pub fn noop(&self) -> usize {
-        self.x1 - 1
+    /// The slot-space action geometry (NO-OP slot mapping).
+    pub fn space(&self) -> ActionSpace {
+        self.space
     }
 
     /// One imagined step for the whole batch. Returns (rewards, dones).
     pub fn step(
         &mut self,
         wm: &ParamStore,
-        actions: &[(usize, usize)],
+        actions: &[Action],
         rng: &mut Rng,
     ) -> anyhow::Result<(Vec<f32>, Vec<bool>)> {
         anyhow::ensure!(actions.len() == self.b, "dream step: wrong batch size");
-        let mut a = Vec::with_capacity(self.b * 2);
-        for &(x, l) in actions {
-            a.push(x as i32);
-            a.push(l as i32);
-        }
-        let theta = self.engine.device_theta(wm)?;
-        let out = self.engine.exec_with_theta(
-            "wm_step_b",
-            &theta,
-            &[
-                lit_f32(&self.z, &[self.b, self.zdim])?,
-                lit_i32(&a, &[self.b, 2])?,
-                lit_f32(&self.h, &[self.b, self.rdim])?,
-                lit_f32(&self.c, &[self.b, self.rdim])?,
-            ],
-        )?;
-        let log_pi = to_vec_f32(&out[0])?;
-        let mu = to_vec_f32(&out[1])?;
-        let log_sig = to_vec_f32(&out[2])?;
-        let rewards_pred = to_vec_f32(&out[3])?;
-        let mask_logits = to_vec_f32(&out[4])?;
-        let done_logits = to_vec_f32(&out[5])?;
-        let h1 = to_vec_f32(&out[6])?;
-        let c1 = to_vec_f32(&out[7])?;
+        let d = self.model.dims;
+        let out = self.model.step(wm, &self.z, actions, &self.h, &self.c)?;
 
-        let zk = self.zdim * self.k;
+        let zk = d.zdim * d.k;
         let mut rewards = vec![0.0f32; self.b];
         let mut dones = vec![false; self.b];
         for row in 0..self.b {
@@ -117,30 +95,30 @@ impl<'e> DreamEnv<'e> {
                 continue;
             }
             // NO-OP terminates in the real env; mirror that exactly.
-            let noop_taken = actions[row].0 == self.noop();
+            let noop_taken = self.space.is_noop(actions[row]);
             let z_next = sample_mdn(
-                &log_pi[row * zk..(row + 1) * zk],
-                &mu[row * zk..(row + 1) * zk],
-                &log_sig[row * zk..(row + 1) * zk],
-                self.zdim,
-                self.k,
+                &out.log_pi[row * zk..(row + 1) * zk],
+                &out.mu[row * zk..(row + 1) * zk],
+                &out.log_sig[row * zk..(row + 1) * zk],
+                d.zdim,
+                d.k,
                 self.temperature,
                 rng,
             );
-            self.z[row * self.zdim..(row + 1) * self.zdim].copy_from_slice(&z_next);
-            rewards[row] = if noop_taken { 0.0 } else { rewards_pred[row] * self.reward_scale };
+            self.z[row * d.zdim..(row + 1) * d.zdim].copy_from_slice(&z_next);
+            rewards[row] = if noop_taken { 0.0 } else { out.rewards[row] * self.reward_scale };
             // Predicted next-state xfer mask; NO-OP slot always valid.
-            for xi in 0..self.x1 {
-                let logit = mask_logits[row * self.x1 + xi];
-                self.xmask[row * self.x1 + xi] =
-                    if xi == self.noop() || logit > 0.0 { 1.0 } else { 0.0 };
+            for xi in 0..d.x1 {
+                let logit = out.mask_logits[row * d.x1 + xi];
+                self.xmask[row * d.x1 + xi] =
+                    if xi == self.space.noop_slot() || logit > 0.0 { 1.0 } else { 0.0 };
             }
-            let done_pred = done_logits[row] > 0.0;
+            let done_pred = out.done_logits[row] > 0.0;
             dones[row] = noop_taken || done_pred;
             self.done[row] = dones[row];
         }
-        self.h = h1;
-        self.c = c1;
+        self.h = out.h1;
+        self.c = out.c1;
         Ok((rewards, dones))
     }
 
@@ -150,14 +128,17 @@ impl<'e> DreamEnv<'e> {
 
     /// Row-major copies of the current latent/hidden state (PPO features).
     pub fn row_z(&self, row: usize) -> Vec<f32> {
-        self.z[row * self.zdim..(row + 1) * self.zdim].to_vec()
+        let zdim = self.model.dims.zdim;
+        self.z[row * zdim..(row + 1) * zdim].to_vec()
     }
 
     pub fn row_h(&self, row: usize) -> Vec<f32> {
-        self.h[row * self.rdim..(row + 1) * self.rdim].to_vec()
+        let rdim = self.model.dims.rdim;
+        self.h[row * rdim..(row + 1) * rdim].to_vec()
     }
 
     pub fn row_xmask(&self, row: usize) -> Vec<f32> {
-        self.xmask[row * self.x1..(row + 1) * self.x1].to_vec()
+        let x1 = self.model.dims.x1;
+        self.xmask[row * x1..(row + 1) * x1].to_vec()
     }
 }

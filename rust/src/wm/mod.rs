@@ -1,10 +1,13 @@
-//! World model (§3.3): MDN-RNN training, GMM sampling with temperature,
-//! and the imagined (dream) environment the controller trains in.
+//! World model (§3.3): the typed `wm_step_*` API, MDN-RNN training, GMM
+//! sampling with temperature, and the imagined (dream) environment the
+//! controller trains in.
 
 pub mod dream;
 pub mod mdn;
+pub mod model;
 pub mod trainer;
 
 pub use dream::DreamEnv;
 pub use mdn::{mdn_mode, sample_mdn};
-pub use trainer::{WmLosses, WmTrainCfg, WmTrainer};
+pub use model::{WmDims, WmStepOut, WorldModel};
+pub use trainer::{WmBatch, WmLosses, WmTrainCfg, WmTrainer};

@@ -1,0 +1,106 @@
+//! Typed `wm_step_*` API: one [`WorldModel`] wraps a backend and exposes
+//! the MDN-RNN transition as a method over latents, [`Action`]s and the
+//! recurrent `(h, c)` context — callers never touch program names or raw
+//! argument packing.
+
+use crate::agent::Action;
+use crate::runtime::{Backend, Manifest, ParamStore, TensorView};
+
+/// World-model dimensions read once from the manifest.
+#[derive(Debug, Clone, Copy)]
+pub struct WmDims {
+    pub zdim: usize,
+    pub rdim: usize,
+    pub x1: usize,
+    pub k: usize,
+    pub b_dream: usize,
+}
+
+impl WmDims {
+    pub fn from_manifest(m: &Manifest) -> anyhow::Result<Self> {
+        Ok(Self {
+            zdim: m.hp_usize("LATENT")?,
+            rdim: m.hp_usize("RNN_HIDDEN")?,
+            x1: m.hp_usize("N_XFERS1")?,
+            k: m.hp_usize("MDN_K")?,
+            b_dream: m.hp_usize("B_DREAM")?,
+        })
+    }
+}
+
+/// One batched transition's outputs, row-major over the batch.
+#[derive(Debug, Clone)]
+pub struct WmStepOut {
+    pub log_pi: Vec<f32>,      // [b, zdim * k], dimension-major
+    pub mu: Vec<f32>,          // [b, zdim * k]
+    pub log_sig: Vec<f32>,     // [b, zdim * k]
+    pub rewards: Vec<f32>,     // [b]
+    pub mask_logits: Vec<f32>, // [b, x1]
+    pub done_logits: Vec<f32>, // [b]
+    pub h1: Vec<f32>,          // [b, rdim]
+    pub c1: Vec<f32>,          // [b, rdim]
+}
+
+/// Typed transition API over the `wm_step_1` / `wm_step_b` programs.
+pub struct WorldModel<'b> {
+    pub backend: &'b dyn Backend,
+    pub dims: WmDims,
+}
+
+impl<'b> WorldModel<'b> {
+    pub fn new(backend: &'b dyn Backend) -> anyhow::Result<Self> {
+        Ok(Self { backend, dims: WmDims::from_manifest(backend.manifest())? })
+    }
+
+    /// Advance the recurrent model one step for `actions.len()` rows
+    /// (1 or B_DREAM — the two exported batch widths).
+    pub fn step(
+        &self,
+        wm: &ParamStore,
+        z: &[f32],
+        actions: &[Action],
+        h: &[f32],
+        c: &[f32],
+    ) -> anyhow::Result<WmStepOut> {
+        let d = &self.dims;
+        let b = actions.len();
+        anyhow::ensure!(
+            z.len() == b * d.zdim && h.len() == b * d.rdim && c.len() == b * d.rdim,
+            "wm step: bad state sizes for batch {b}"
+        );
+        let program = if b == 1 {
+            "wm_step_1"
+        } else if b == d.b_dream {
+            "wm_step_b"
+        } else {
+            anyhow::bail!("wm step: batch {b} matches neither 1 nor B_DREAM {}", d.b_dream)
+        };
+        let mut a = Vec::with_capacity(b * 2);
+        for act in actions {
+            a.push(act.slot as i32);
+            a.push(act.loc as i32);
+        }
+        let out = self.backend.exec_with_params(
+            program,
+            wm,
+            &[
+                TensorView::f32(z, &[b, d.zdim]),
+                TensorView::i32(&a, &[b, 2]),
+                TensorView::f32(h, &[b, d.rdim]),
+                TensorView::f32(c, &[b, d.rdim]),
+            ],
+        )?;
+        anyhow::ensure!(out.len() == 8, "wm step: expected 8 outputs, got {}", out.len());
+        let mut it = out.into_iter().map(|t| t.data);
+        Ok(WmStepOut {
+            log_pi: it.next().unwrap(),
+            mu: it.next().unwrap(),
+            log_sig: it.next().unwrap(),
+            rewards: it.next().unwrap(),
+            mask_logits: it.next().unwrap(),
+            done_logits: it.next().unwrap(),
+            h1: it.next().unwrap(),
+            c1: it.next().unwrap(),
+        })
+    }
+}

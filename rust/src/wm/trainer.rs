@@ -1,11 +1,9 @@
 //! World-model training (§3.3.2, Fig. 8): teacher-forced sequence batches
-//! sampled from collected episodes, driven through the `wm_train` artifact
+//! sampled from collected episodes, driven through the `wm_train` program
 //! with the paper's 2nd-degree polynomial learning-rate decay.
 
-use xla::Literal;
-
 use crate::agent::buffer::{sample_windows, Episode};
-use crate::runtime::{lit_f32, lit_i32, lit_scalar_f32, scalar_f32, Engine, ParamStore};
+use crate::runtime::{Backend, ParamStore, TensorView};
 use crate::util::Rng;
 
 #[derive(Debug, Clone, Copy, Default)]
@@ -31,7 +29,13 @@ pub struct WmTrainCfg {
 
 impl Default for WmTrainCfg {
     fn default() -> Self {
-        Self { lr_start: 1e-3, lr_end: 1e-5, decay_power: 2.0, total_steps: 300, reward_scale: 10.0 }
+        Self {
+            lr_start: 1e-3,
+            lr_end: 1e-5,
+            decay_power: 2.0,
+            total_steps: 300,
+            reward_scale: 10.0,
+        }
     }
 }
 
@@ -42,8 +46,39 @@ impl WmTrainCfg {
     }
 }
 
+/// An owned `[b, t]` teacher-forcing batch; [`WmBatch::views`] borrows it
+/// as the seven tensor arguments following `(theta, m, v, t)`.
+pub struct WmBatch {
+    b: usize,
+    t: usize,
+    zdim: usize,
+    x1: usize,
+    z: Vec<f32>,
+    a: Vec<i32>,
+    z_next: Vec<f32>,
+    r: Vec<f32>,
+    xm: Vec<f32>,
+    done: Vec<f32>,
+    valid: Vec<f32>,
+}
+
+impl WmBatch {
+    pub fn views(&self) -> Vec<TensorView<'_>> {
+        let (b, t) = (self.b, self.t);
+        vec![
+            TensorView::f32(&self.z, &[b, t, self.zdim]),
+            TensorView::i32(&self.a, &[b, t, 2]),
+            TensorView::f32(&self.z_next, &[b, t, self.zdim]),
+            TensorView::f32(&self.r, &[b, t]),
+            TensorView::f32(&self.xm, &[b, t, self.x1]),
+            TensorView::f32(&self.done, &[b, t]),
+            TensorView::f32(&self.valid, &[b, t]),
+        ]
+    }
+}
+
 pub struct WmTrainer<'e> {
-    pub engine: &'e Engine,
+    pub backend: &'e dyn Backend,
     b: usize,
     t: usize,
     zdim: usize,
@@ -51,13 +86,13 @@ pub struct WmTrainer<'e> {
 }
 
 impl<'e> WmTrainer<'e> {
-    pub fn new(engine: &'e Engine) -> anyhow::Result<Self> {
+    pub fn new(backend: &'e dyn Backend) -> anyhow::Result<Self> {
         Ok(Self {
-            engine,
-            b: engine.manifest.hp_usize("B_WM")?,
-            t: engine.manifest.hp_usize("SEQ_LEN")?,
-            zdim: engine.manifest.hp_usize("LATENT")?,
-            x1: engine.manifest.hp_usize("N_XFERS1")?,
+            backend,
+            b: backend.hp("B_WM")?,
+            t: backend.hp("SEQ_LEN")?,
+            zdim: backend.hp("LATENT")?,
+            x1: backend.hp("N_XFERS1")?,
         })
     }
 
@@ -68,16 +103,22 @@ impl<'e> WmTrainer<'e> {
         episodes: &[Episode],
         reward_scale: f32,
         rng: &mut Rng,
-    ) -> anyhow::Result<Vec<Literal>> {
+    ) -> anyhow::Result<WmBatch> {
         let (b, t, zd, x1) = (self.b, self.t, self.zdim, self.x1);
         let windows = sample_windows(episodes, b, rng);
-        let mut z = vec![0.0f32; b * t * zd];
-        let mut a = vec![0i32; b * t * 2];
-        let mut z_next = vec![0.0f32; b * t * zd];
-        let mut r = vec![0.0f32; b * t];
-        let mut xm = vec![0.0f32; b * t * x1];
-        let mut done = vec![0.0f32; b * t];
-        let mut valid = vec![0.0f32; b * t];
+        let mut batch = WmBatch {
+            b,
+            t,
+            zdim: zd,
+            x1,
+            z: vec![0.0; b * t * zd],
+            a: vec![0; b * t * 2],
+            z_next: vec![0.0; b * t * zd],
+            r: vec![0.0; b * t],
+            xm: vec![0.0; b * t * x1],
+            done: vec![0.0; b * t],
+            valid: vec![0.0; b * t],
+        };
 
         for (bi, (ep, start)) in windows.into_iter().enumerate() {
             anyhow::ensure!(
@@ -90,28 +131,20 @@ impl<'e> WmTrainer<'e> {
                     break;
                 }
                 let base = (bi * t + ti) * zd;
-                z[base..base + zd].copy_from_slice(&ep.z[s]);
-                z_next[base..base + zd].copy_from_slice(&ep.z[s + 1]);
-                a[(bi * t + ti) * 2] = ep.actions[s].0 as i32;
-                a[(bi * t + ti) * 2 + 1] = ep.actions[s].1 as i32;
-                r[bi * t + ti] = ep.rewards[s] / reward_scale;
+                batch.z[base..base + zd].copy_from_slice(&ep.z[s]);
+                batch.z_next[base..base + zd].copy_from_slice(&ep.z[s + 1]);
+                batch.a[(bi * t + ti) * 2] = ep.actions[s].0 as i32;
+                batch.a[(bi * t + ti) * 2 + 1] = ep.actions[s].1 as i32;
+                batch.r[bi * t + ti] = ep.rewards[s] / reward_scale;
                 // Mask target: validity of the NEXT state (what the dream
                 // env needs to predict after taking a_t).
                 let xm_base = (bi * t + ti) * x1;
-                xm[xm_base..xm_base + x1].copy_from_slice(&ep.xmasks[s + 1]);
-                done[bi * t + ti] = ep.dones[s];
-                valid[bi * t + ti] = 1.0;
+                batch.xm[xm_base..xm_base + x1].copy_from_slice(&ep.xmasks[s + 1]);
+                batch.done[bi * t + ti] = ep.dones[s];
+                batch.valid[bi * t + ti] = 1.0;
             }
         }
-        Ok(vec![
-            lit_f32(&z, &[b, t, zd])?,
-            lit_i32(&a, &[b, t, 2])?,
-            lit_f32(&z_next, &[b, t, zd])?,
-            lit_f32(&r, &[b, t])?,
-            lit_f32(&xm, &[b, t, x1])?,
-            lit_f32(&done, &[b, t])?,
-            lit_f32(&valid, &[b, t])?,
-        ])
+        Ok(batch)
     }
 
     /// One gradient step; returns the component losses (Fig. 8's curve).
@@ -123,17 +156,19 @@ impl<'e> WmTrainer<'e> {
         reward_scale: f32,
         rng: &mut Rng,
     ) -> anyhow::Result<WmLosses> {
-        let mut args = wm.train_args()?;
-        args.extend(self.make_batch(episodes, reward_scale, rng)?);
-        args.push(lit_scalar_f32(lr));
-        let out = self.engine.exec("wm_train", &args)?;
+        let batch = self.make_batch(episodes, reward_scale, rng)?;
+        let mut args = wm.train_args();
+        args.extend(batch.views());
+        args.push(TensorView::ScalarF32(lr));
+        let out = self.backend.exec("wm_train", &args)?;
+        drop(args);
         wm.absorb(&out)?;
         Ok(WmLosses {
-            total: scalar_f32(&out[4])?,
-            nll: scalar_f32(&out[5])?,
-            reward_mse: scalar_f32(&out[6])?,
-            mask_bce: scalar_f32(&out[7])?,
-            done_bce: scalar_f32(&out[8])?,
+            total: out[4].data[0],
+            nll: out[5].data[0],
+            reward_mse: out[6].data[0],
+            mask_bce: out[7].data[0],
+            done_bce: out[8].data[0],
         })
     }
 }
@@ -144,7 +179,13 @@ mod tests {
 
     #[test]
     fn polynomial_decay_schedule() {
-        let cfg = WmTrainCfg { lr_start: 1.0, lr_end: 0.0, decay_power: 2.0, total_steps: 100, reward_scale: 1.0 };
+        let cfg = WmTrainCfg {
+            lr_start: 1.0,
+            lr_end: 0.0,
+            decay_power: 2.0,
+            total_steps: 100,
+            reward_scale: 1.0,
+        };
         assert!((cfg.lr_at(0) - 1.0).abs() < 1e-6);
         assert!((cfg.lr_at(50) - 0.25).abs() < 1e-6);
         assert!(cfg.lr_at(100) < 1e-6);

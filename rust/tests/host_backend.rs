@@ -1,0 +1,368 @@
+//! Offline tier-1 coverage of the backend seam: a miniature
+//! collect -> GNN-AE -> encode -> WM -> dream-PPO -> eval cycle on the
+//! pure-Rust [`HostBackend`] (no `manifest.json`, no `xla_extension`),
+//! seeded-determinism pins for MDN sampling / dream rollouts / the full
+//! training loop, and the manifest-contract test keeping the host
+//! programs interchangeable with the PJRT artifacts.
+
+use rlflow::agent::{Action, PpoCfg};
+use rlflow::config::RunConfig;
+use rlflow::coordinator::{collect_random_parallel, Pipeline};
+use rlflow::cost::{CostModel, DeviceProfile};
+use rlflow::env::{Env, EnvConfig};
+use rlflow::graph::{GraphBuilder, PadMode};
+use rlflow::runtime::{Backend, Dt, HostBackend, HostConfig, ParamStore, TensorView};
+use rlflow::util::Rng;
+use rlflow::wm::{sample_mdn, DreamEnv};
+use rlflow::xfer::library::standard_library;
+
+/// Small host dimensions sized for the tiny test graph; the xfer slot
+/// space still matches the real rule library so the env mapping is exact.
+fn tiny_config() -> HostConfig {
+    HostConfig {
+        max_nodes: 48,
+        node_feats: 32,
+        gnn_hidden: 12,
+        latent: 8,
+        rnn_hidden: 12,
+        mdn_k: 2,
+        act_emb: 4,
+        ctrl_hidden: 16,
+        n_xfers1: standard_library().len() + 1,
+        max_locs: 200,
+        b_dream: 4,
+        b_wm: 4,
+        seq_len: 4,
+        b_ppo: 16,
+        b_enc: 4,
+    }
+}
+
+fn tiny_run_config() -> RunConfig {
+    let mut cfg = RunConfig::smoke();
+    cfg.backend = "host".into();
+    cfg.collect_episodes = 4;
+    cfg.ae_steps = 3;
+    cfg.wm.total_steps = 4;
+    cfg.dream_epochs = 2;
+    cfg.dream_horizon = 4;
+    cfg.ppo.epochs = 2;
+    cfg.env.max_steps = 6;
+    cfg
+}
+
+fn small_graph() -> rlflow::graph::Graph {
+    let mut b = GraphBuilder::new();
+    let x = b.input(&[1, 3, 16, 16]);
+    let c1 = b.conv_bn_relu(x, 8, 3, 1, PadMode::Same).unwrap();
+    let c2 = b.conv(c1, 8, 1, 1, PadMode::Same).unwrap();
+    let r = b.relu(c2).unwrap();
+    let _ = b.maxpool(r, 2, 2).unwrap();
+    b.finish()
+}
+
+/// The acceptance-criterion test: the complete model-based loop runs
+/// offline on the host backend, end to end.
+#[test]
+fn full_cycle_runs_offline_on_host_backend() {
+    let backend = HostBackend::with_config(tiny_config());
+    let cfg = tiny_run_config();
+    let pipe = Pipeline::new(&backend).unwrap();
+    let mut rng = Rng::new(cfg.seed);
+
+    // 1. Random collection (backend-free).
+    let mut episodes = collect_random_parallel(
+        &small_graph(),
+        &cfg.env,
+        cfg.device,
+        (pipe.encoder.max_nodes, pipe.encoder.n_feats),
+        pipe.dims.x1,
+        cfg.collect_episodes,
+        cfg.collect_noop_prob,
+        cfg.envs,
+        cfg.collect_workers,
+        cfg.seed,
+    );
+    assert_eq!(episodes.len(), cfg.collect_episodes);
+
+    // 2. GNN auto-encoder.
+    let mut gnn = ParamStore::init(&backend, "gnn", 0).unwrap();
+    let ae_losses =
+        pipe.train_gnn_ae(&mut gnn, &episodes, cfg.ae_steps, cfg.ae_lr, &mut rng).unwrap();
+    assert_eq!(ae_losses.len(), cfg.ae_steps);
+    assert!(ae_losses.iter().all(|l| l.is_finite()));
+
+    // 3. Encode.
+    pipe.encode_episodes(&gnn, &mut episodes).unwrap();
+    assert!(episodes.iter().all(|e| e.z.len() == e.states.len()));
+    assert!(episodes[0].z[0].iter().any(|v| v.abs() > 0.0));
+
+    // 4. World model.
+    let mut wm = ParamStore::init(&backend, "wm", 1).unwrap();
+    let wm_curve = pipe.train_wm(&mut wm, &episodes, &cfg.wm, &mut rng).unwrap();
+    assert_eq!(wm_curve.len(), cfg.wm.total_steps);
+    assert!(wm_curve.iter().all(|l| l.total.is_finite()));
+
+    // 5. Controller in the dream.
+    let mut ctrl = ParamStore::init(&backend, "ctrl", 2).unwrap();
+    let before = ctrl.theta.clone();
+    let dream_curve = pipe
+        .train_controller_dream(
+            &mut ctrl,
+            &wm,
+            &episodes,
+            cfg.dream_epochs,
+            cfg.dream_horizon,
+            cfg.temperature,
+            cfg.wm.reward_scale,
+            &cfg.ppo,
+            &mut rng,
+        )
+        .unwrap();
+    assert_eq!(dream_curve.len(), cfg.dream_epochs);
+    assert_ne!(before, ctrl.theta, "dream PPO must move the controller");
+
+    // 6. Real-environment evaluation.
+    let rules = standard_library();
+    let cost = CostModel::new(cfg.device);
+    let mut env = Env::new(small_graph(), &rules, &cost, cfg.env.clone());
+    let result = pipe.eval_real(&gnn, &ctrl, Some(&wm), &mut env, false, &mut rng).unwrap();
+    assert!(result.steps > 0);
+    assert!(result.mean_step_s > 0.0);
+    assert!(result.best_improvement_pct >= 0.0);
+}
+
+#[test]
+fn full_cycle_is_bit_deterministic_under_a_fixed_seed() {
+    let run = || {
+        let backend = HostBackend::with_config(tiny_config());
+        let cfg = tiny_run_config();
+        let pipe = Pipeline::new(&backend).unwrap();
+        let agent =
+            rlflow::experiments::train_model_based(&pipe, &cfg, &small_graph(), cfg.seed).unwrap();
+        let mut rng = Rng::new(cfg.seed + 7);
+        let rules = standard_library();
+        let cost = CostModel::new(cfg.device);
+        let mut env = Env::new(small_graph(), &rules, &cost, cfg.env.clone());
+        let eval =
+            pipe.eval_real(&agent.gnn, &agent.ctrl, Some(&agent.wm), &mut env, false, &mut rng)
+                .unwrap();
+        (agent.gnn.theta, agent.wm.theta, agent.ctrl.theta, eval.history, eval.steps)
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.0, b.0, "gnn params must be bit-identical across runs");
+    assert_eq!(a.1, b.1, "wm params must be bit-identical across runs");
+    assert_eq!(a.2, b.2, "ctrl params must be bit-identical across runs");
+    assert_eq!(a.3, b.3, "eval action history must replay identically");
+    assert_eq!(a.4, b.4);
+}
+
+#[test]
+fn sample_mdn_is_bit_deterministic_per_seed() {
+    let (z, k) = (6, 3);
+    let mut rng_p = Rng::new(11);
+    let log_pi: Vec<f32> = (0..z * k).map(|_| rng_p.normal()).collect();
+    let mu: Vec<f32> = (0..z * k).map(|_| rng_p.normal()).collect();
+    let log_sig: Vec<f32> = (0..z * k).map(|_| rng_p.normal() * 0.3 - 1.0).collect();
+    let draw = |seed: u64| {
+        let mut rng = Rng::new(seed);
+        (0..10)
+            .flat_map(|_| sample_mdn(&log_pi, &mu, &log_sig, z, k, 1.3, &mut rng))
+            .collect::<Vec<f32>>()
+    };
+    let a = draw(42);
+    let b = draw(42);
+    assert_eq!(a, b, "same seed must give bit-identical MDN samples");
+    assert_ne!(a, draw(43), "different seeds must diverge");
+}
+
+#[test]
+fn dream_rollout_is_bit_deterministic_per_seed() {
+    let backend = HostBackend::with_config(tiny_config());
+    let x1 = backend.hp("N_XFERS1").unwrap();
+    let zdim = backend.hp("LATENT").unwrap();
+    let wm = ParamStore::init(&backend, "wm", 4).unwrap();
+    let z0 = vec![vec![0.2f32; zdim], vec![-0.1f32; zdim]];
+    let xm0 = vec![vec![1.0f32; x1]; 2];
+
+    let rollout = |seed: u64| {
+        let mut dream = DreamEnv::new(&backend, 1.0, 10.0).unwrap();
+        dream.reset(&z0, &xm0).unwrap();
+        let mut rng = Rng::new(seed);
+        let mut rewards = Vec::new();
+        for step in 0..5 {
+            let actions: Vec<Action> =
+                (0..dream.b).map(|row| Action::new((row + step) % (x1 - 1), 0)).collect();
+            let (r, _) = dream.step(&wm, &actions, &mut rng).unwrap();
+            rewards.extend(r);
+        }
+        (rewards, dream.z.clone(), dream.xmask.clone())
+    };
+    let a = rollout(1);
+    let b = rollout(1);
+    assert_eq!(a.0, b.0, "dream rewards must be bit-identical");
+    assert_eq!(a.1, b.1, "dream latents must be bit-identical");
+    assert_eq!(a.2, b.2, "dream masks must be bit-identical");
+    let c = rollout(2);
+    assert_ne!(a.1, c.1, "different rollout seeds must diverge");
+}
+
+/// Manifest-contract test: every host program executes with inputs built
+/// purely from its published [`rlflow::runtime::ArtifactSpec`] and returns
+/// exactly the declared number of outputs — the property that keeps
+/// `HostBackend` and `PjrtBackend` interchangeable behind the trait.
+#[test]
+fn host_programs_match_their_artifact_specs() {
+    let backend = HostBackend::with_config(tiny_config());
+    let manifest = backend.manifest();
+    let mut names: Vec<&String> = manifest.artifacts.keys().collect();
+    names.sort();
+    assert_eq!(names.len(), 12, "expected the 12 host programs, got {names:?}");
+
+    for name in names {
+        let spec = manifest.artifact(name).unwrap();
+        // Build arguments purely from the spec.
+        let mut f32_bufs: Vec<Vec<f32>> = Vec::new();
+        let mut i32_bufs: Vec<Vec<i32>> = Vec::new();
+        for arg in &spec.inputs {
+            match arg.dtype {
+                Dt::F32 => f32_bufs.push(vec![0.0; arg.n_elems()]),
+                Dt::I32 => i32_bufs.push(vec![1; arg.n_elems()]),
+            }
+        }
+        let (mut fi, mut ii) = (0, 0);
+        let mut args: Vec<TensorView> = Vec::new();
+        for arg in &spec.inputs {
+            match arg.dtype {
+                Dt::F32 => {
+                    args.push(TensorView::f32(&f32_bufs[fi], &arg.shape));
+                    fi += 1;
+                }
+                Dt::I32 => {
+                    args.push(TensorView::i32(&i32_bufs[ii], &arg.shape));
+                    ii += 1;
+                }
+            }
+        }
+        let out = backend
+            .exec(name, &args)
+            .unwrap_or_else(|e| panic!("{name} rejected its own spec: {e}"));
+        assert_eq!(
+            out.len(),
+            spec.outputs.len(),
+            "{name}: output arity drifted from the spec"
+        );
+        for (t, oname) in out.iter().zip(&spec.outputs) {
+            assert!(
+                t.data.iter().all(|v| v.is_finite()),
+                "{name}.{oname} produced non-finite values on spec-shaped zeros"
+            );
+        }
+        // Dropping one argument must be rejected.
+        if !args.is_empty() {
+            let short = &args[..args.len() - 1];
+            assert!(backend.exec(name, short).is_err(), "{name} accepted too few args");
+        }
+    }
+}
+
+#[test]
+fn host_output_widths_follow_hyperparameters() {
+    let backend = HostBackend::with_config(tiny_config());
+    let (z, r) = (backend.hp("LATENT").unwrap(), backend.hp("RNN_HIDDEN").unwrap());
+    let (x1, locs) = (backend.hp("N_XFERS1").unwrap(), backend.hp("MAX_LOCS").unwrap());
+    let k = backend.hp("MDN_K").unwrap();
+    let b = backend.hp("B_DREAM").unwrap();
+
+    let ctrl = ParamStore::init(&backend, "ctrl", 1).unwrap();
+    let zb = vec![0.1f32; b * z];
+    let hb = vec![0.0f32; b * r];
+    let out = backend
+        .exec_with_params(
+            "ctrl_policy_b",
+            &ctrl,
+            &[TensorView::f32(&zb, &[b, z]), TensorView::f32(&hb, &[b, r])],
+        )
+        .unwrap();
+    assert_eq!(out[0].data.len(), b * x1);
+    assert_eq!(out[0].shape, vec![b, x1]);
+    assert_eq!(out[1].data.len(), b * x1 * locs);
+    assert_eq!(out[2].data.len(), b);
+
+    let wm = ParamStore::init(&backend, "wm", 2).unwrap();
+    let ab = vec![0i32; b * 2];
+    let cb = vec![0.0f32; b * r];
+    let out = backend
+        .exec_with_params(
+            "wm_step_b",
+            &wm,
+            &[
+                TensorView::f32(&zb, &[b, z]),
+                TensorView::i32(&ab, &[b, 2]),
+                TensorView::f32(&hb, &[b, r]),
+                TensorView::f32(&cb, &[b, r]),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 8);
+    assert_eq!(out[0].data.len(), b * z * k);
+    assert_eq!(out[4].data.len(), b * x1);
+    assert_eq!(out[6].data.len(), b * r);
+    assert!(out[6].data.iter().any(|v| v.abs() > 0.0), "hidden state did not evolve");
+}
+
+#[test]
+fn exec_with_params_equals_explicit_theta() {
+    let backend = HostBackend::with_config(tiny_config());
+    let (z, r) = (backend.hp("LATENT").unwrap(), backend.hp("RNN_HIDDEN").unwrap());
+    let ctrl = ParamStore::init(&backend, "ctrl", 3).unwrap();
+    let z1 = vec![0.3f32; z];
+    let h1 = vec![0.1f32; r];
+    let rest = [TensorView::f32(&z1, &[1, z]), TensorView::f32(&h1, &[1, r])];
+    let a = backend.exec_with_params("ctrl_policy_1", &ctrl, &rest).unwrap();
+    let n = ctrl.theta.len();
+    let mut args = vec![TensorView::f32(&ctrl.theta, &[n])];
+    args.extend(rest.iter().cloned());
+    let b = backend.exec("ctrl_policy_1", &args).unwrap();
+    assert_eq!(a[0].data, b[0].data);
+    assert_eq!(a[2].data, b[2].data);
+}
+
+#[test]
+fn init_deterministic_and_distinct_per_family() {
+    let backend = HostBackend::with_config(tiny_config());
+    let a = ParamStore::init(&backend, "ctrl", 42).unwrap();
+    let b = ParamStore::init(&backend, "ctrl", 42).unwrap();
+    let c = ParamStore::init(&backend, "ctrl", 43).unwrap();
+    assert_eq!(a.theta, b.theta);
+    assert_ne!(a.theta, c.theta);
+    // Families draw from distinct streams even at equal seeds.
+    let g = ParamStore::init(&backend, "gnn", 42).unwrap();
+    assert_ne!(a.theta.len(), 0);
+    assert_ne!(g.theta.get(..4), a.theta.get(..4));
+}
+
+#[test]
+fn model_free_ppo_iteration_runs_on_host() {
+    let backend = HostBackend::with_config(tiny_config());
+    let pipe = Pipeline::new(&backend).unwrap();
+    let mut rng = Rng::new(7);
+    let gnn = ParamStore::init(&backend, "gnn", 0).unwrap();
+    let mut ctrl = ParamStore::init(&backend, "ctrl", 3).unwrap();
+    let rules = standard_library();
+    let cost = CostModel::new(DeviceProfile::rtx2070());
+    let mut env = Env::new(
+        small_graph(),
+        &rules,
+        &cost,
+        EnvConfig { max_steps: 5, ..Default::default() },
+    );
+    let before = ctrl.theta.clone();
+    let (mean_reward, stats) = pipe
+        .model_free_iteration(&gnn, &mut ctrl, &mut env, 2, &PpoCfg::default(), &mut rng)
+        .unwrap();
+    assert!(mean_reward.is_finite());
+    assert!(stats.entropy.is_finite());
+    assert_ne!(before, ctrl.theta, "PPO update should move parameters");
+}

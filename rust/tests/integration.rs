@@ -8,16 +8,16 @@ use rlflow::coordinator::{collect_random_parallel, Pipeline};
 use rlflow::cost::{CostModel, DeviceProfile};
 use rlflow::env::{Env, EnvConfig};
 use rlflow::graph::{GraphBuilder, PadMode};
-use rlflow::runtime::{Engine, Manifest, ParamStore};
+use rlflow::runtime::{Manifest, ParamStore, PjrtBackend};
 use rlflow::util::Rng;
 use rlflow::xfer::library::standard_library;
 
-fn engine() -> Option<Engine> {
+fn engine() -> Option<PjrtBackend> {
     if !Manifest::default_dir().join("manifest.json").exists() {
         eprintln!("skipping: artifacts not built");
         return None;
     }
-    Some(Engine::load_default().expect("engine"))
+    Some(PjrtBackend::load_default().expect("pjrt backend"))
 }
 
 fn small_graph() -> rlflow::graph::Graph {

@@ -1,41 +1,49 @@
-//! Integration tests against the real AOT artifacts (require
-//! `make artifacts` to have run; they skip gracefully otherwise).
+//! Integration tests against the real AOT artifacts via the PJRT backend
+//! (require `make artifacts` to have run; they skip gracefully otherwise).
+//! The same program contract runs offline in `tests/host_backend.rs`.
 
-use rlflow::runtime::{lit_f32, lit_i32, lit_scalar_f32, scalar_f32, to_vec_f32, Engine, Manifest, ParamStore};
+use rlflow::runtime::{Backend, Manifest, ParamStore, PjrtBackend, TensorView};
 
-fn engine() -> Option<Engine> {
+fn backend() -> Option<PjrtBackend> {
     if !Manifest::default_dir().join("manifest.json").exists() {
         eprintln!("skipping: artifacts not built");
         return None;
     }
-    Some(Engine::load_default().expect("engine"))
+    Some(PjrtBackend::load_default().expect("pjrt backend"))
 }
 
 #[test]
 fn gnn_init_and_encode() {
-    let Some(eng) = engine() else { return };
+    let Some(eng) = backend() else { return };
     let gnn = ParamStore::init(&eng, "gnn", 0).unwrap();
     assert!(gnn.n_params() > 1000);
 
-    let n = eng.manifest.hp_usize("MAX_NODES").unwrap();
-    let f = eng.manifest.hp_usize("NODE_FEATS").unwrap();
-    let z = eng.manifest.hp_usize("LATENT").unwrap();
-    let feats = lit_f32(&vec![0.1; n * f], &[1, n, f]).unwrap();
-    let adj = lit_f32(&vec![0.0; n * n], &[1, n, n]).unwrap();
+    let n = eng.manifest().hp_usize("MAX_NODES").unwrap();
+    let f = eng.manifest().hp_usize("NODE_FEATS").unwrap();
+    let z = eng.manifest().hp_usize("LATENT").unwrap();
+    let feats = vec![0.1f32; n * f];
+    let adj = vec![0.0f32; n * n];
     let mut mask = vec![0.0f32; n];
     mask[..10].fill(1.0);
-    let mask = lit_f32(&mask, &[1, n]).unwrap();
     let out = eng
-        .exec("gnn_encode_1", &[gnn.theta_lit().unwrap(), feats, adj, mask])
+        .exec_with_params(
+            "gnn_encode_1",
+            &gnn,
+            &[
+                TensorView::f32(&feats, &[1, n, f]),
+                TensorView::f32(&adj, &[1, n, n]),
+                TensorView::f32(&mask, &[1, n]),
+            ],
+        )
         .unwrap();
-    let zv = to_vec_f32(&out[0]).unwrap();
+    let zv = &out[0].data;
     assert_eq!(zv.len(), z);
     assert!(zv.iter().all(|v| v.is_finite() && v.abs() <= 1.0));
 }
 
 #[test]
 fn init_deterministic_across_calls() {
-    let Some(eng) = engine() else { return };
+    let Some(eng) = backend() else { return };
     let a = ParamStore::init(&eng, "ctrl", 42).unwrap();
     let b = ParamStore::init(&eng, "ctrl", 42).unwrap();
     let c = ParamStore::init(&eng, "ctrl", 43).unwrap();
@@ -45,59 +53,72 @@ fn init_deterministic_across_calls() {
 
 #[test]
 fn wm_step_shapes_and_finiteness() {
-    let Some(eng) = engine() else { return };
+    let Some(eng) = backend() else { return };
     let wm = ParamStore::init(&eng, "wm", 1).unwrap();
-    let zdim = eng.manifest.hp_usize("LATENT").unwrap();
-    let r = eng.manifest.hp_usize("RNN_HIDDEN").unwrap();
-    let k = eng.manifest.hp_usize("MDN_K").unwrap();
-    let x1 = eng.manifest.hp_usize("N_XFERS1").unwrap();
+    let zdim = eng.manifest().hp_usize("LATENT").unwrap();
+    let r = eng.manifest().hp_usize("RNN_HIDDEN").unwrap();
+    let k = eng.manifest().hp_usize("MDN_K").unwrap();
+    let x1 = eng.manifest().hp_usize("N_XFERS1").unwrap();
 
-    let z = lit_f32(&vec![0.3; zdim], &[1, zdim]).unwrap();
-    let a = lit_i32(&[2, 7], &[1, 2]).unwrap();
-    let h = lit_f32(&vec![0.0; r], &[1, r]).unwrap();
-    let c = lit_f32(&vec![0.0; r], &[1, r]).unwrap();
+    let z = vec![0.3f32; zdim];
+    let a = [2i32, 7];
+    let h = vec![0.0f32; r];
+    let c = vec![0.0f32; r];
     let out = eng
-        .exec("wm_step_1", &[wm.theta_lit().unwrap(), z, a, h, c])
+        .exec_with_params(
+            "wm_step_1",
+            &wm,
+            &[
+                TensorView::f32(&z, &[1, zdim]),
+                TensorView::i32(&a, &[1, 2]),
+                TensorView::f32(&h, &[1, r]),
+                TensorView::f32(&c, &[1, r]),
+            ],
+        )
         .unwrap();
     assert_eq!(out.len(), 8);
-    let log_pi = to_vec_f32(&out[0]).unwrap();
-    assert_eq!(log_pi.len(), zdim * k);
-    let mask_logits = to_vec_f32(&out[4]).unwrap();
-    assert_eq!(mask_logits.len(), x1);
-    let h1 = to_vec_f32(&out[6]).unwrap();
+    assert_eq!(out[0].data.len(), zdim * k);
+    assert_eq!(out[4].data.len(), x1);
+    let h1 = &out[6].data;
     assert_eq!(h1.len(), r);
     assert!(h1.iter().any(|v| v.abs() > 0.0), "hidden state did not evolve");
     for o in &out {
-        assert!(to_vec_f32(o).map(|v| v.iter().all(|x| x.is_finite())).unwrap_or(true));
+        assert!(o.data.iter().all(|x| x.is_finite()));
     }
 }
 
 #[test]
 fn ctrl_policy_logits() {
-    let Some(eng) = engine() else { return };
+    let Some(eng) = backend() else { return };
     let ctrl = ParamStore::init(&eng, "ctrl", 2).unwrap();
-    let zdim = eng.manifest.hp_usize("LATENT").unwrap();
-    let r = eng.manifest.hp_usize("RNN_HIDDEN").unwrap();
-    let x1 = eng.manifest.hp_usize("N_XFERS1").unwrap();
-    let l = eng.manifest.hp_usize("MAX_LOCS").unwrap();
+    let zdim = eng.manifest().hp_usize("LATENT").unwrap();
+    let r = eng.manifest().hp_usize("RNN_HIDDEN").unwrap();
+    let x1 = eng.manifest().hp_usize("N_XFERS1").unwrap();
+    let l = eng.manifest().hp_usize("MAX_LOCS").unwrap();
 
-    let z = lit_f32(&vec![0.1; zdim], &[1, zdim]).unwrap();
-    let h = lit_f32(&vec![0.0; r], &[1, r]).unwrap();
-    let out = eng.exec("ctrl_policy_1", &[ctrl.theta_lit().unwrap(), z, h]).unwrap();
-    assert_eq!(to_vec_f32(&out[0]).unwrap().len(), x1);
-    assert_eq!(to_vec_f32(&out[1]).unwrap().len(), x1 * l);
-    assert_eq!(to_vec_f32(&out[2]).unwrap().len(), 1);
+    let z = vec![0.1f32; zdim];
+    let h = vec![0.0f32; r];
+    let out = eng
+        .exec_with_params(
+            "ctrl_policy_1",
+            &ctrl,
+            &[TensorView::f32(&z, &[1, zdim]), TensorView::f32(&h, &[1, r])],
+        )
+        .unwrap();
+    assert_eq!(out[0].data.len(), x1);
+    assert_eq!(out[1].data.len(), x1 * l);
+    assert_eq!(out[2].data.len(), 1);
 }
 
 #[test]
 fn wm_train_step_decreases_loss() {
-    let Some(eng) = engine() else { return };
+    let Some(eng) = backend() else { return };
     let mut wm = ParamStore::init(&eng, "wm", 3).unwrap();
-    let zdim = eng.manifest.hp_usize("LATENT").unwrap();
-    let x1 = eng.manifest.hp_usize("N_XFERS1").unwrap();
+    let zdim = eng.manifest().hp_usize("LATENT").unwrap();
+    let x1 = eng.manifest().hp_usize("N_XFERS1").unwrap();
     let (b, t) = (
-        eng.manifest.hp_usize("B_WM").unwrap(),
-        eng.manifest.hp_usize("SEQ_LEN").unwrap(),
+        eng.manifest().hp_usize("B_WM").unwrap(),
+        eng.manifest().hp_usize("SEQ_LEN").unwrap(),
     );
 
     // Deterministic synthetic batch: z_next = 0.9 * z.
@@ -110,35 +131,29 @@ fn wm_train_step_decreases_loss() {
     let done = vec![0.0f32; b * t];
     let valid = vec![1.0f32; b * t];
 
-    let mut args = wm.train_args().unwrap();
-    args.push(lit_f32(&z, &[b, t, zdim]).unwrap());
-    args.push(lit_i32(&a, &[b, t, 2]).unwrap());
-    args.push(lit_f32(&z_next, &[b, t, zdim]).unwrap());
-    args.push(lit_f32(&r_, &[b, t]).unwrap());
-    args.push(lit_f32(&xm, &[b, t, x1]).unwrap());
-    args.push(lit_f32(&done, &[b, t]).unwrap());
-    args.push(lit_f32(&valid, &[b, t]).unwrap());
-    args.push(lit_scalar_f32(1e-3));
+    let run_step = |wm: &mut ParamStore| -> f32 {
+        let mut args = wm.train_args();
+        args.extend([
+            TensorView::f32(&z, &[b, t, zdim]),
+            TensorView::i32(&a, &[b, t, 2]),
+            TensorView::f32(&z_next, &[b, t, zdim]),
+            TensorView::f32(&r_, &[b, t]),
+            TensorView::f32(&xm, &[b, t, x1]),
+            TensorView::f32(&done, &[b, t]),
+            TensorView::f32(&valid, &[b, t]),
+            TensorView::ScalarF32(1e-3),
+        ]);
+        let out = eng.exec("wm_train", &args).unwrap();
+        drop(args);
+        wm.absorb(&out).unwrap();
+        out[4].data[0]
+    };
 
-    let out = eng.exec("wm_train", &args).unwrap();
-    let first_loss = scalar_f32(&out[4]).unwrap();
-    wm.absorb(&out).unwrap();
+    let first_loss = run_step(&mut wm);
     assert_eq!(wm.t, 1.0);
-
     let mut last_loss = first_loss;
     for _ in 0..4 {
-        let mut args = wm.train_args().unwrap();
-        args.push(lit_f32(&z, &[b, t, zdim]).unwrap());
-        args.push(lit_i32(&a, &[b, t, 2]).unwrap());
-        args.push(lit_f32(&z_next, &[b, t, zdim]).unwrap());
-        args.push(lit_f32(&r_, &[b, t]).unwrap());
-        args.push(lit_f32(&xm, &[b, t, x1]).unwrap());
-        args.push(lit_f32(&done, &[b, t]).unwrap());
-        args.push(lit_f32(&valid, &[b, t]).unwrap());
-        args.push(lit_scalar_f32(1e-3));
-        let out = eng.exec("wm_train", &args).unwrap();
-        last_loss = scalar_f32(&out[4]).unwrap();
-        wm.absorb(&out).unwrap();
+        last_loss = run_step(&mut wm);
     }
     assert!(last_loss < first_loss, "wm loss {first_loss} -> {last_loss}");
     assert!(last_loss.is_finite());
@@ -146,7 +161,7 @@ fn wm_train_step_decreases_loss() {
 
 #[test]
 fn engine_stats_recorded() {
-    let Some(eng) = engine() else { return };
+    let Some(eng) = backend() else { return };
     let _ = ParamStore::init(&eng, "gnn", 0).unwrap();
     let stats = eng.stats();
     let s = stats.get("gnn_init").unwrap();
