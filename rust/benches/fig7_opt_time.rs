@@ -4,19 +4,28 @@
 //! `rlflow experiment fig7`; this bench isolates the search costs, which
 //! dominate TASO's bar in the paper.
 //!
-//! Two rows per graph: the pre-engine sequential seed path (single thread,
-//! no memoisation, full cost recompute per candidate — the `*_reference`
-//! oracles) and the parallel memoised engine (scoped worker threads,
-//! transposition table, incremental delta costing). The `speedup` column
-//! is seed-time / engine-time; `cost ok` checks the engine found the same
-//! final cost as the seed path (to 1e-6 relative).
+//! Three timing tiers per graph:
+//!
+//!  * `seed` — the pre-engine sequential path (single thread, no
+//!    memoisation, full cost recompute per candidate — the `*_reference`
+//!    oracles);
+//!  * `engine` — the parallel location-sharded engine (scoped worker
+//!    threads, transposition table, incremental delta costing), cold;
+//!  * `warm` — the same search repeated against a persistent
+//!    `SearchCache`: a pure result-memo lookup, the cross-run amortisation
+//!    `experiments::suite` relies on.
+//!
+//! `cost ok` checks engine and warm runs found the same final cost as the
+//! seed path (to 1e-6 relative; the warm lookup is bit-identical to the
+//! cold engine run by construction). Results are appended to
+//! BENCH_search.json at the repository root.
 
 use std::time::Instant;
 
 use rlflow::cost::{CostModel, DeviceProfile};
 use rlflow::search::{
-    greedy_optimise, greedy_optimise_reference, taso_optimise, taso_optimise_reference,
-    TasoConfig,
+    greedy_optimise, greedy_optimise_reference, taso_optimise, taso_optimise_cached,
+    taso_optimise_reference, SearchCache, TasoConfig,
 };
 use rlflow::xfer::library::standard_library;
 
@@ -24,7 +33,7 @@ fn main() {
     let rules = standard_library();
     let mut workers = 0;
     println!(
-        "{:<15} {:>10} {:>10} {:>8} {:>10} {:>10} {:>8} {:>9} {:>8}",
+        "{:<15} {:>10} {:>10} {:>8} {:>10} {:>10} {:>8} {:>10} {:>9} {:>8}",
         "Graph",
         "greedy(s)",
         "g-eng(s)",
@@ -32,9 +41,11 @@ fn main() {
         "taso(s)",
         "t-eng(s)",
         "t-spd",
+        "t-warm(s)",
         "memohits",
         "cost ok"
     );
+    let mut json_rows = Vec::new();
     for (info, g) in rlflow::zoo::all() {
         // Fresh cost model per timed run: the per-op cost cache persists
         // inside a CostModel, so sharing one would let the seed run warm
@@ -60,12 +71,24 @@ fn main() {
         let (_, teng) = taso_optimise(&g, &rules, &cost, &TasoConfig::default());
         let taso_eng_s = t0.elapsed().as_secs_f64();
 
+        // Warm column: fill a persistent cache once (untimed), then time
+        // the repeat — the pure result-memo lookup path.
+        let cache = SearchCache::new();
+        let cost = CostModel::new(DeviceProfile::rtx2070());
+        let (_, _cold) = taso_optimise_cached(&g, &rules, &cost, &TasoConfig::default(), &cache);
+        let t0 = Instant::now();
+        let (_, twarm) = taso_optimise_cached(&g, &rules, &cost, &TasoConfig::default(), &cache);
+        let taso_warm_s = t0.elapsed().as_secs_f64();
+        let warm_hit = twarm.from_cache;
+
         let rel = |a: f64, b: f64| (a - b).abs() / b.max(1e-12);
         let ok = rel(geng.final_ms, gref.final_ms) < 1e-6
-            && rel(teng.final_ms, tref.final_ms) < 1e-6;
+            && rel(teng.final_ms, tref.final_ms) < 1e-6
+            && twarm.final_ms.to_bits() == teng.final_ms.to_bits()
+            && warm_hit;
         workers = teng.threads;
         println!(
-            "{:<15} {:>10.3} {:>10.3} {:>7.1}x {:>10.3} {:>10.3} {:>7.1}x {:>9} {:>8}",
+            "{:<15} {:>10.3} {:>10.3} {:>7.1}x {:>10.3} {:>10.3} {:>7.1}x {:>10.5} {:>9} {:>8}",
             info.name,
             greedy_seed_s,
             greedy_eng_s,
@@ -73,9 +96,47 @@ fn main() {
             taso_seed_s,
             taso_eng_s,
             taso_seed_s / taso_eng_s.max(1e-9),
+            taso_warm_s,
             teng.memo_hits,
             if ok { "yes" } else { "NO" }
         );
+        json_rows.push(format!(
+            concat!(
+                "    {{\"graph\": \"{}\", \"greedy_seed_s\": {:.4}, \"greedy_engine_s\": {:.4}, ",
+                "\"greedy_speedup\": {:.2}, \"taso_seed_s\": {:.4}, \"taso_engine_s\": {:.4}, ",
+                "\"taso_speedup\": {:.2}, \"taso_warm_s\": {:.6}, \"warm_speedup\": {:.2}, ",
+                "\"warm_is_cache_hit\": {}, \"engine_memo_hits\": {}, \"cost_parity\": {}}}"
+            ),
+            info.name,
+            greedy_seed_s,
+            greedy_eng_s,
+            greedy_seed_s / greedy_eng_s.max(1e-9),
+            taso_seed_s,
+            taso_eng_s,
+            taso_seed_s / taso_eng_s.max(1e-9),
+            taso_warm_s,
+            taso_eng_s / taso_warm_s.max(1e-9),
+            warm_hit,
+            teng.memo_hits,
+            ok,
+        ));
     }
     println!("engine workers (from SearchLog): {workers}");
+
+    // `cargo bench` runs from the package root (rust/); the results file
+    // lives beside CHANGES.md at the repository root.
+    let out = if std::path::Path::new("../CHANGES.md").exists() {
+        "../BENCH_search.json"
+    } else {
+        "BENCH_search.json"
+    };
+    let json = format!(
+        "{{\n  \"bench\": \"fig7_opt_time\",\n  \"placeholder\": false,\n  \"engine_workers\": {},\n  \"rows\": [\n{}\n  ]\n}}\n",
+        workers,
+        json_rows.join(",\n")
+    );
+    match std::fs::write(out, &json) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
 }

@@ -129,7 +129,7 @@ fn main() {
         "BENCH_env.json"
     };
     let json = format!(
-        "{{\n  \"bench\": \"fig8_env_throughput\",\n  \"walk_steps\": {},\n  \"rows\": [\n{}\n  ]\n}}\n",
+        "{{\n  \"bench\": \"fig8_env_throughput\",\n  \"placeholder\": false,\n  \"walk_steps\": {},\n  \"rows\": [\n{}\n  ]\n}}\n",
         WALK_STEPS,
         json_rows.join(",\n")
     );

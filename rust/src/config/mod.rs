@@ -93,6 +93,20 @@ impl RunConfig {
         }
     }
 
+    /// Cost model this config describes: the device profile, with the
+    /// §3.1.4 measurement-noise field layered on when `cost_noise > 0`
+    /// (seeded from the run seed, so noisy runs replay bit-for-bit). The
+    /// single source of truth for `rlflow optimize` and every experiment
+    /// driver (`ExperimentCtx::cost_model` delegates here).
+    pub fn cost_model(&self) -> crate::cost::CostModel {
+        let cm = crate::cost::CostModel::new(self.device);
+        if self.cost_noise > 0.0 {
+            cm.with_noise(self.cost_noise, self.seed ^ 0xC057_4011)
+        } else {
+            cm
+        }
+    }
+
     pub fn load_json<P: AsRef<Path>>(path: P) -> anyhow::Result<Self> {
         let text = std::fs::read_to_string(path)?;
         let j = parse(&text)?;

@@ -37,7 +37,7 @@ pub struct MatchStats {
 /// Per-rule match lists maintained incrementally. Lists are stored *full*
 /// (untruncated); observation masks cap them at `max_locs` so truncation
 /// never loses matches across invalidations.
-#[derive(Clone, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct MatchCache {
     lists: Vec<Vec<Location>>,
     stats: MatchStats,
@@ -74,10 +74,13 @@ impl MatchCache {
         }
     }
 
+    /// The maintained per-rule match lists (slot-indexed like the rule
+    /// set; always equal to a from-scratch `Rule::find` pass).
     pub fn lists(&self) -> &[Vec<Location>] {
         &self.lists
     }
 
+    /// Maintenance counters accumulated so far.
     pub fn stats(&self) -> MatchStats {
         self.stats
     }

@@ -34,6 +34,8 @@ use crate::cost::{CostModel, GraphCost};
 use crate::graph::Graph;
 use crate::xfer::{apply_rule, Location, RuleSet};
 
+/// Knobs of one environment instance (episode shape, reward, incremental
+/// vs full-refresh maintenance).
 #[derive(Debug, Clone)]
 pub struct EnvConfig {
     /// Hard cap on episode length.
@@ -69,20 +71,32 @@ pub struct Observation {
     pub location_counts: Vec<usize>,
 }
 
+/// The `info` half of the paper's step 4-tuple: the current graph's hot
+/// costs plus what (if anything) was applied.
 #[derive(Debug, Clone)]
 pub struct StepInfo {
+    /// Name of the applied rule (`None` for NO-OP/invalid steps).
     pub rule_name: Option<&'static str>,
+    /// Estimated runtime of the current graph, in ms.
     pub runtime_ms: f64,
+    /// Memory traffic of the current graph, in bytes.
     pub mem_bytes: f64,
+    /// Floating-point operations of the current graph.
     pub flops: f64,
+    /// Kernel launches of the current graph.
     pub launches: u64,
+    /// The action applied successfully.
     pub valid: bool,
 }
 
+/// What one [`Env::step`] returned: reward, terminal flag, and step info.
 #[derive(Debug, Clone)]
 pub struct StepResult {
+    /// The §3.1.4 reward (or the invalid penalty).
     pub reward: f32,
+    /// The episode ended (NO-OP or step cap).
     pub done: bool,
+    /// Cost/validity details of the step.
     pub info: StepInfo,
 }
 
@@ -111,6 +125,8 @@ pub struct EnvState {
 }
 
 impl EnvState {
+    /// Build a fresh episode state on `graph`: one full match pass + one
+    /// full costing (everything later is maintained incrementally).
     pub fn new(graph: Graph, rules: &RuleSet, cost: &CostModel, cfg: EnvConfig) -> Self {
         let gc = cost.graph_cost_fast(&graph);
         Self {
@@ -129,22 +145,27 @@ impl EnvState {
         }
     }
 
+    /// The current graph.
     pub fn graph(&self) -> &Graph {
         &self.graph
     }
 
+    /// Applied (xfer, location) actions so far (Fig. 10's heatmap data).
     pub fn history(&self) -> &[(usize, usize)] {
         &self.history
     }
 
+    /// Steps taken this episode (valid, invalid and NO-OP alike).
     pub fn steps_taken(&self) -> usize {
         self.steps
     }
 
+    /// Tracked runtime of the current graph, in ms.
     pub fn runtime_ms(&self) -> f64 {
         self.rt_prev
     }
 
+    /// Runtime of the episode's initial graph, in ms.
     pub fn initial_runtime_ms(&self) -> f64 {
         self.rt_initial
     }
@@ -159,6 +180,7 @@ impl EnvState {
         self.cache.stats()
     }
 
+    /// Assemble the §3.1.3 observation masks from the maintained lists.
     pub fn observe(&self) -> Observation {
         let lists = self.cache.lists();
         let mut xfer_mask: Vec<bool> = lists.iter().map(|l| !l.is_empty()).collect();
@@ -204,13 +226,19 @@ impl EnvState {
     }
 }
 
+/// The Gym-style environment (§3.1): the shared rule set + cost model,
+/// borrowed around an owned [`EnvState`]. See the module docs for the
+/// incremental step dataflow.
 pub struct Env<'a> {
+    /// The substitution vocabulary (slot indices = xfer actions).
     pub rules: &'a RuleSet,
+    /// The cost model rewards are computed against.
     pub cost: &'a CostModel,
     state: EnvState,
 }
 
 impl<'a> Env<'a> {
+    /// Build an environment with a fresh [`EnvState`] on `graph`.
     pub fn new(graph: Graph, rules: &'a RuleSet, cost: &'a CostModel, cfg: EnvConfig) -> Self {
         Self { rules, cost, state: EnvState::new(graph, rules, cost, cfg) }
     }
@@ -229,14 +257,17 @@ impl<'a> Env<'a> {
         self.state
     }
 
+    /// Read-only view of the owned episode state.
     pub fn state(&self) -> &EnvState {
         &self.state
     }
 
+    /// The current graph.
     pub fn graph(&self) -> &Graph {
         &self.state.graph
     }
 
+    /// Applied (xfer, location) actions so far.
     pub fn history(&self) -> &[(usize, usize)] {
         &self.state.history
     }
@@ -246,6 +277,8 @@ impl<'a> Env<'a> {
         self.rules.len()
     }
 
+    /// Restore the initial graph and re-derive the match lists from
+    /// scratch (episode boundary).
     pub fn reset(&mut self) {
         let s = &mut self.state;
         s.graph = s.initial.clone();
@@ -268,22 +301,28 @@ impl<'a> Env<'a> {
         self.rules.rules.iter().map(|r| r.find(&self.state.graph)).collect()
     }
 
+    /// The §3.1.3 observation masks (see [`EnvState::observe`]).
     pub fn observe(&self) -> Observation {
         self.state.observe()
     }
 
+    /// Xfer mask padded into a fixed `slots`-wide action space (see
+    /// [`EnvState::padded_xfer_mask`]).
     pub fn padded_xfer_mask(&self, slots: usize) -> Vec<f32> {
         self.state.padded_xfer_mask(slots)
     }
 
+    /// Location-validity mask for one xfer.
     pub fn location_mask(&self, xfer: usize) -> Vec<bool> {
         self.state.location_mask(xfer)
     }
 
+    /// Tracked runtime of the current graph, in ms.
     pub fn runtime_ms(&self) -> f64 {
         self.state.rt_prev
     }
 
+    /// Runtime of the episode's initial graph, in ms.
     pub fn initial_runtime_ms(&self) -> f64 {
         self.state.rt_initial
     }
@@ -293,6 +332,7 @@ impl<'a> Env<'a> {
         self.state.improvement_pct()
     }
 
+    /// Steps taken this episode.
     pub fn steps_taken(&self) -> usize {
         self.state.steps
     }
@@ -329,10 +369,11 @@ impl<'a> Env<'a> {
         match apply_rule(&mut next, rule, &location) {
             Ok(report) => {
                 // Incremental reward costing: re-cost only what the rule
-                // touched, off the cached parent cost. (Under measurement
-                // noise both paths fall back to one full recompute, so the
-                // oracle and the incremental env stay bit-identical there
-                // too.)
+                // touched, off the cached parent cost. (The §3.1.4 noise
+                // model is a stateless per-kernel field, so the delta
+                // resamples only the touched nodes and agrees with the
+                // full-recompute oracle to f64 summation order even with
+                // noise enabled — no full-refresh fallback.)
                 let gc = if self.state.cfg.full_refresh {
                     self.cost.graph_cost_fast(&next)
                 } else {

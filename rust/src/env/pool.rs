@@ -6,10 +6,11 @@
 //! each environment owns its [`EnvState`] plus a [`CostModel`] built from
 //! one shared read-only memo snapshot ([`CostModel::from_snapshot`]) with
 //! a small private overlay — the ROADMAP's shared-cache design. Per-env
-//! RNG and noise streams fork deterministically from the pool seed
-//! (`coordinator::worker_seeds`), and every environment's trajectory is a
-//! function of its own slot only, so results are **bit-identical for any
-//! `threads` value** — pinned by `tests/env_incremental.rs`.
+//! RNG seeds and measurement-noise fields fork deterministically from the
+//! pool seed (`coordinator::worker_seeds`), and every environment's
+//! trajectory is a function of its own slot only, so results are
+//! **bit-identical for any `threads` value** — pinned by
+//! `tests/env_incremental.rs`.
 //!
 //! `step_batch` / `observe_batch` are what `coordinator::Pipeline` rollout
 //! / eval and `experiments::suite` drive to collect B episodes per pass
@@ -22,6 +23,8 @@ use crate::xfer::RuleSet;
 
 use super::{Env, EnvConfig, EnvState, Observation, StepResult};
 
+/// Shape of an [`EnvPool`]: batch width, per-env config, worker threads,
+/// and the deterministic seed the per-env streams fork from.
 #[derive(Debug, Clone)]
 pub struct EnvPoolConfig {
     /// Number of environments (B).
@@ -41,7 +44,7 @@ impl Default for EnvPoolConfig {
     }
 }
 
-/// Domain separator: the measurement-noise stream of an env must be
+/// Domain separator: the measurement-noise field of an env must be
 /// independent of its action stream even though both derive from the same
 /// per-env seed.
 const NOISE_STREAM: u64 = 0x9E3779B97F4A7C15;
@@ -64,6 +67,8 @@ impl EnvSlot {
     }
 }
 
+/// B environments stepped as one batch across scoped worker threads (see
+/// the module docs for the sharing layout and determinism contract).
 pub struct EnvPool {
     rules: RuleSet,
     threads: usize,
@@ -83,8 +88,9 @@ impl EnvPool {
         // One full match/cost pass builds a template the noise-free envs
         // clone — identical to constructing each from scratch (matching
         // and costing are deterministic), without B-1 redundant
-        // O(rules x graph) passes. Noisy envs must draw their initial
-        // cost from their own stream, so they construct individually.
+        // O(rules x graph) passes. Noisy envs cost under their own per-env
+        // noise field (different seeds, different initial runtimes), so
+        // they construct individually.
         let template = if cfg.noise_std > 0.0 {
             None
         } else {
@@ -108,10 +114,12 @@ impl EnvPool {
         Self { rules, threads: cfg.threads, snapshot, slots }
     }
 
+    /// Batch width B.
     pub fn n_envs(&self) -> usize {
         self.slots.len()
     }
 
+    /// The rule set every environment shares.
     pub fn rules(&self) -> &RuleSet {
         &self.rules
     }

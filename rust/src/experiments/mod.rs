@@ -8,6 +8,7 @@ pub mod suite;
 pub mod tables;
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use crate::agent::Episode;
 use crate::config::RunConfig;
@@ -15,24 +16,61 @@ use crate::coordinator::{collect_random_parallel, Pipeline};
 use crate::cost::CostModel;
 use crate::graph::Graph;
 use crate::runtime::{Backend, ParamStore};
+use crate::search::SearchCache;
 use crate::util::Rng;
 use crate::wm::WmLosses;
 
+/// Everything an experiment driver needs: the model-execution backend, the
+/// resolved run configuration, the output directory, and the persistent
+/// search cache shared across every deterministic baseline the context runs.
 pub struct ExperimentCtx<'e> {
+    /// Model-execution backend (host / pjrt / auto).
     pub backend: &'e dyn Backend,
+    /// Resolved run configuration.
     pub cfg: RunConfig,
+    /// Directory the CSV outputs land in.
     pub out_dir: PathBuf,
+    /// Cross-run search memoisation: every `greedy`/`taso` baseline of
+    /// every figure/table this context runs shares it, so `experiment all`
+    /// (and repeated runs within one process, via
+    /// [`ExperimentCtx::with_cache`] + `search::memo::global`) re-optimises
+    /// each zoo graph exactly once per search config.
+    pub search_cache: Arc<SearchCache>,
 }
 
 impl<'e> ExperimentCtx<'e> {
+    /// A context with a fresh private [`SearchCache`].
     pub fn new(backend: &'e dyn Backend, cfg: RunConfig, out_dir: impl Into<PathBuf>) -> Self {
         let out_dir = out_dir.into();
         let _ = std::fs::create_dir_all(&out_dir);
-        Self { backend, cfg, out_dir }
+        Self { backend, cfg, out_dir, search_cache: Arc::new(SearchCache::new()) }
     }
 
+    /// Share an existing cache (the CLI passes `search::memo::global()`
+    /// unless `--fresh-cache` is given).
+    pub fn with_cache(mut self, cache: Arc<SearchCache>) -> Self {
+        self.search_cache = cache;
+        self
+    }
+
+    /// Path of one output file inside the context's output directory.
     pub fn out(&self, file: &str) -> PathBuf {
         self.out_dir.join(file)
+    }
+
+    /// Cost model for the deterministic baselines and environments: the
+    /// configured device profile, with the §3.1.4 measurement-noise field
+    /// layered on when `cfg.cost_noise > 0` (see [`RunConfig::cost_model`];
+    /// noisy experiments replay bit-for-bit — and still cache, since the
+    /// noise configuration is part of the search-config fingerprint).
+    pub fn cost_model(&self) -> CostModel {
+        self.cfg.cost_model()
+    }
+
+    /// One-line hit/miss/evict summary of the shared search cache, for the
+    /// experiment drivers' stdout reports.
+    pub fn cache_summary(&self) -> String {
+        format!("search cache: {}", self.search_cache.stats())
     }
 }
 

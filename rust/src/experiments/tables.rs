@@ -1,9 +1,8 @@
 //! Table reproductions: Table 1 (graph properties), Table 2 (inference
 //! time + memory improvement), Table 3 (temperature sweep).
 
-use crate::cost::CostModel;
 use crate::csv_row;
-use crate::search::greedy_optimise;
+use crate::search::greedy_optimise_cached;
 use crate::util::csv::CsvWriter;
 use crate::util::stats::mean_std;
 use crate::util::Rng;
@@ -41,7 +40,7 @@ pub fn table1(ctx: &ExperimentCtx) -> anyhow::Result<()> {
 pub fn table2(ctx: &ExperimentCtx, runs: usize) -> anyhow::Result<()> {
     let pipe = crate::coordinator::Pipeline::new(ctx.backend)?;
     let rules = standard_library();
-    let cost = CostModel::new(ctx.cfg.device);
+    let cost = ctx.cost_model();
     let mut cfg = ctx.cfg.clone();
     cfg.temperature = 1.0;
 
@@ -55,8 +54,9 @@ pub fn table2(ctx: &ExperimentCtx, runs: usize) -> anyhow::Result<()> {
         "Graph", "Inf (ms)", "Mem (GiB)", "%t impr", "%m impr"
     );
     for (info, g) in crate::zoo::all() {
-        // "TensorFlow" baseline: greedy rule application.
-        let (tf_graph, _) = greedy_optimise(&g, &rules, &cost, 50);
+        // "TensorFlow" baseline: greedy rule application (memoised across
+        // the context — fig6/suite optimise the same graphs).
+        let (tf_graph, _) = greedy_optimise_cached(&g, &rules, &cost, 50, 0, &ctx.search_cache);
         let tf_ms = cost.graph_runtime_ms(&tf_graph);
         let tf_gib = cost.graph_memory_gib(&tf_graph);
 

@@ -26,6 +26,32 @@
 //! println!("runtime: {:.3} ms -> {:.3} ms",
 //!          cost.graph_runtime_ms(&graph), cost.graph_runtime_ms(&optimised));
 //! ```
+//!
+//! The repository-root `README.md` covers the build/test/bench entry
+//! points and the `rlflow` CLI; `ARCHITECTURE.md` maps the modules, the
+//! `runtime::Backend` seam, and the incremental match/cost dataflow.
+//!
+//! Public seams at a glance:
+//!
+//! * [`graph`] — the arena-based computation-graph IR + canonical hashing.
+//! * [`xfer`] — the substitution engine: rules, matcher, [`xfer::ApplyReport`]
+//!   / [`xfer::DirtyRegion`] incremental-rewrite contracts.
+//! * [`cost`] — the roofline cost model with snapshot/overlay memo sharing
+//!   and exact incremental deltas (noise included).
+//! * [`search`] — the deterministic baselines on the parallel memoised
+//!   engine, plus the persistent cross-run [`search::SearchCache`].
+//! * [`env`] — the Gym-style environment, incremental match maintenance
+//!   and the vectorised [`env::EnvPool`].
+//! * [`runtime`] — the [`runtime::Backend`] execution seam (pure-Rust host
+//!   backend or PJRT artifacts).
+//! * [`agent`] / [`wm`] / [`coordinator`] — PPO controller, MDN-RNN world
+//!   model, and the training pipeline that drives them.
+//! * [`experiments`] — one driver per paper table/figure.
+
+// New public items must carry rustdoc; the doc build is part of CI
+// (`cargo doc --no-deps`). Pre-existing undocumented items surface as
+// warnings and are burned down opportunistically, module by module.
+#![warn(missing_docs)]
 
 pub mod agent;
 pub mod config;

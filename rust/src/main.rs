@@ -18,7 +18,9 @@ use rlflow::coordinator::Pipeline;
 use rlflow::cost::CostModel;
 use rlflow::experiments::{self, ExperimentCtx};
 use rlflow::runtime::{backend_by_name, Backend, ParamStore};
-use rlflow::search::{taso_optimise, TasoConfig};
+use rlflow::search::{
+    greedy_optimise_cached, memo, taso_optimise_cached, SearchCache, TasoConfig,
+};
 use rlflow::xfer::library::standard_library;
 
 struct Args {
@@ -103,11 +105,18 @@ rlflow — neural-network subgraph transformation with world models
 
 USAGE:
   rlflow zoo
-  rlflow optimize --graph <name> --method <greedy|taso> [--threads N] [--export out.json]
+  rlflow optimize --graph <name> --method <greedy|taso> [--threads N] [--repeat N] [--fresh-cache] [--export out.json]
   rlflow train [--graph <name>] [--backend host|pjrt|auto] [--envs B] [--config cfg.json] [--smoke] [--save dir] [-s key=value]...
   rlflow eval --load <dir> [--graph <name>] [--backend host|pjrt|auto] [--envs B] [-s key=value]...
-  rlflow experiment <table1|table2|table3|fig5|...|fig10|all> [--runs N] [--backend B] [--envs B] [--smoke] [--out dir]
+  rlflow experiment <table1|table2|table3|fig5|...|fig10|all> [--runs N] [--backend B] [--envs B] [--smoke] [--out dir] [--fresh-cache]
   rlflow generate-rules [--verify] [--inputs N] [--ops N]
+
+CACHING:
+  optimize/experiment hold a persistent search cache: repeated identical
+  searches (same graph, same config) are pure lookups, and the
+  transposition table persists across searches sharing a config.
+  --fresh-cache starts from an empty cache instead; hit/miss/evict stats
+  are printed after each command.
 
 BACKENDS:
   host   pure-Rust model execution — the full collect/WM/dream/PPO/eval
@@ -137,11 +146,24 @@ fn cmd_zoo() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Select the search cache a command runs against: the process-global one
+/// (persists across every search this process performs) unless
+/// `--fresh-cache` asked for an empty private cache.
+fn search_cache(args: &Args) -> std::sync::Arc<SearchCache> {
+    if args.flags.get("fresh-cache").map(|v| v == "true").unwrap_or(false) {
+        std::sync::Arc::new(SearchCache::new())
+    } else {
+        memo::global()
+    }
+}
+
 fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
     let cfg = build_config(args)?;
     let graph = rlflow::zoo::by_name(&cfg.graph)?;
     let rules = standard_library();
-    let cost = CostModel::new(cfg.device);
+    // Honours `-s cost_noise=...` (the noise config is part of the search
+    // cache fingerprint, so noisy and clean runs never alias).
+    let cost = cfg.cost_model();
     let method = args.flags.get("method").map(String::as_str).unwrap_or("taso");
     // `--threads N` pins the search worker count (0/default = all cores);
     // results are bit-identical for every value.
@@ -151,15 +173,34 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
             .map_err(|e| anyhow::anyhow!("bad --threads '{t}': {e}"))?,
         None => 0,
     };
-    let (optimised, log) = match method {
-        "greedy" => rlflow::search::greedy_optimise_threads(&graph, &rules, &cost, 100, threads),
-        "taso" => {
-            taso_optimise(&graph, &rules, &cost, &TasoConfig { threads, ..Default::default() })
-        }
-        m => anyhow::bail!("unknown method '{m}' (greedy|taso; for RL use `rlflow train`)"),
-    };
+    // `--repeat N` re-runs the search N times — with the persistent cache
+    // every repeat after the first is a pure lookup (demo/benchmark knob).
+    let repeat: usize = args
+        .flags
+        .get("repeat")
+        .map(|r| r.parse())
+        .transpose()
+        .map_err(|e| anyhow::anyhow!("bad --repeat: {e}"))?
+        .unwrap_or(1)
+        .max(1);
+    let cache = search_cache(args);
+    let mut result = None;
+    for _ in 0..repeat {
+        result = Some(match method {
+            "greedy" => greedy_optimise_cached(&graph, &rules, &cost, 100, threads, &cache),
+            "taso" => taso_optimise_cached(
+                &graph,
+                &rules,
+                &cost,
+                &TasoConfig { threads, ..Default::default() },
+                &cache,
+            ),
+            m => anyhow::bail!("unknown method '{m}' (greedy|taso; for RL use `rlflow train`)"),
+        });
+    }
+    let (optimised, log) = result.expect("repeat >= 1 always runs the search");
     println!(
-        "{}: {:.3} ms -> {:.3} ms ({:.1}% better) in {:.2}s, {} graphs explored ({} threads, {} memo hits)",
+        "{}: {:.3} ms -> {:.3} ms ({:.1}% better) in {:.2}s, {} graphs explored ({} threads, {} memo hits{})",
         cfg.graph,
         log.initial_ms,
         log.final_ms,
@@ -167,8 +208,10 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
         log.elapsed_s,
         log.graphs_explored,
         log.threads,
-        log.memo_hits
+        log.memo_hits,
+        if log.from_cache { ", cached result" } else { "" }
     );
+    println!("search cache: {}", cache.stats());
     for (rule, ms) in &log.steps {
         println!("  applied {:<22} -> {:.3} ms", rule, ms);
     }
@@ -230,8 +273,13 @@ fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
     let out = args.flags.get("out").cloned().unwrap_or_else(|| "results".into());
     let backend = backend_by_name(&cfg.backend)?;
     println!("experiment backend: {}", backend.name());
-    let ctx = ExperimentCtx::new(backend.as_ref(), cfg, out);
-    experiments::run(&ctx, id, runs)
+    // Every experiment this process runs shares the persistent search
+    // cache, so `experiment all` optimises each zoo graph once per search
+    // config (`--fresh-cache` opts out).
+    let ctx = ExperimentCtx::new(backend.as_ref(), cfg, out).with_cache(search_cache(args));
+    experiments::run(&ctx, id, runs)?;
+    println!("{}", ctx.cache_summary());
+    Ok(())
 }
 
 /// Evaluate previously trained parameters (`rlflow train --save dir`)

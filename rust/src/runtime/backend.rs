@@ -27,8 +27,11 @@ use super::manifest::{ArtifactSpec, Dt, Manifest};
 /// Per-program execution accounting (calls, wall-clock, compile time).
 #[derive(Debug, Default, Clone, Copy)]
 pub struct ExecStats {
+    /// Number of times the program ran.
     pub calls: u64,
+    /// Total wall-clock seconds spent executing.
     pub total_s: f64,
+    /// Seconds spent compiling/loading the program (PJRT path).
     pub compile_s: f64,
 }
 
@@ -36,23 +39,40 @@ pub struct ExecStats {
 /// explicit shape; scalar variants are rank-0 and own their value.
 #[derive(Debug, Clone)]
 pub enum TensorView<'a> {
-    F32 { data: &'a [f32], shape: Vec<usize> },
-    I32 { data: &'a [i32], shape: Vec<usize> },
+    /// Borrowed f32 array with an explicit shape.
+    F32 {
+        /// Flat element buffer (row-major).
+        data: &'a [f32],
+        /// Logical dimensions; product must equal `data.len()`.
+        shape: Vec<usize>,
+    },
+    /// Borrowed i32 array with an explicit shape.
+    I32 {
+        /// Flat element buffer (row-major).
+        data: &'a [i32],
+        /// Logical dimensions; product must equal `data.len()`.
+        shape: Vec<usize>,
+    },
+    /// Owned rank-0 f32 value.
     ScalarF32(f32),
+    /// Owned rank-0 i32 value.
     ScalarI32(i32),
 }
 
 impl<'a> TensorView<'a> {
+    /// View a borrowed f32 buffer under `shape`.
     pub fn f32(data: &'a [f32], shape: &[usize]) -> Self {
         debug_assert_eq!(shape.iter().product::<usize>(), data.len(), "f32 view shape mismatch");
         TensorView::F32 { data, shape: shape.to_vec() }
     }
 
+    /// View a borrowed i32 buffer under `shape`.
     pub fn i32(data: &'a [i32], shape: &[usize]) -> Self {
         debug_assert_eq!(shape.iter().product::<usize>(), data.len(), "i32 view shape mismatch");
         TensorView::I32 { data, shape: shape.to_vec() }
     }
 
+    /// Number of elements the view covers (1 for scalars).
     pub fn n_elems(&self) -> usize {
         match self {
             TensorView::F32 { data, .. } => data.len(),
@@ -61,6 +81,7 @@ impl<'a> TensorView<'a> {
         }
     }
 
+    /// Element dtype of the view.
     pub fn dtype(&self) -> Dt {
         match self {
             TensorView::F32 { .. } | TensorView::ScalarF32(_) => Dt::F32,
@@ -68,6 +89,7 @@ impl<'a> TensorView<'a> {
         }
     }
 
+    /// Logical shape (empty for scalars).
     pub fn shape(&self) -> &[usize] {
         match self {
             TensorView::F32 { shape, .. } | TensorView::I32 { shape, .. } => shape,

@@ -3,59 +3,129 @@
 //! [`Frontier`] owns the graphs alive at the current search depth plus the
 //! cross-depth [`TranspositionTable`]; [`Frontier::expand`] is the one
 //! candidate-generation path both `greedy_optimise` and `taso_optimise`
-//! call. Expansion fans (frontier graph, rule) pairs out across scoped
-//! worker threads — the same worker-owns-its-model pattern as
-//! `env::EnvPool`: the `RuleSet` is `Sync` and is shared by reference,
-//! while each worker owns a [`CostModel`] built from the parent's shared
-//! read-only memo snapshot plus a small private overlay (interior
-//! mutability makes the cost model deliberately `!Sync`).
+//! call.
 //!
-//! Determinism: workers take pairs round-robin but results are merged back
-//! in canonical (frontier entry, rule, location) enumeration order, and all
+//! # Location-level sharding
+//!
+//! Expansion fans individual **(frontier entry, rule, match location)**
+//! sites out across scoped worker threads — the same worker-owns-its-model
+//! pattern as `env::EnvPool`: the `RuleSet` is `Sync` and is shared by
+//! reference, while each worker owns a [`CostModel`] built from the
+//! parent's shared read-only memo snapshot plus a small private overlay
+//! (interior mutability makes the cost model deliberately `!Sync`). Because
+//! the work unit is one location rather than one `(entry, rule)` pair, a
+//! single match-heavy rule (`fuse_add_ln` on a transformer has one site per
+//! residual block) no longer serialises a depth behind one worker.
+//!
+//! Per-site sharding needs the match locations *before* the fan-out, but
+//! running `Rule::find` once to count and again to apply would double the
+//! matching work. Instead every [`FrontierEntry`] carries its own
+//! [`MatchCache`] (the incremental per-rule match lists the environment
+//! core introduced): the root entry runs one full find, and each surviving
+//! candidate's lists are derived from its parent's by patching only the
+//! rules that can intersect the rewrite's `DirtyRegion`
+//! ([`Frontier::entry_from_candidate`]). `Rule::find` therefore runs
+//! exactly once per (entry, invalidated rule) — never per work item, and
+//! never twice for the same lists.
+//!
+//! # Determinism
+//!
+//! Workers take sites round-robin but results are merged back in canonical
+//! (frontier entry, rule, location) enumeration order, and all
 //! transposition-table updates happen on the caller's thread during that
 //! merge. The candidate stream is therefore *bit-identical* for every
-//! thread count, which the search property tests pin down.
+//! thread count, which the search property tests pin down. Measurement
+//! noise no longer forces a sequential downgrade: the noise model is a
+//! stateless per-kernel field (see `cost`), so noisy expansions parallelise
+//! exactly like clean ones.
 //!
-//! Costing: a candidate already in the table reuses the memoised runtime
-//! (re-derived graphs are never re-costed); a fresh candidate is costed
-//! incrementally from its parent via [`CostModel::delta_runtime_ms`].
+//! # Costing
+//!
+//! A candidate already in the table (or in the table's read-only *base*
+//! layer seeded from a persistent [`SearchCache`]) reuses the memoised
+//! runtime; a fresh candidate is costed incrementally from its parent via
+//! [`CostModel::delta_runtime_ms`].
+//!
+//! [`MatchCache`]: crate::env::MatchCache
+//! [`SearchCache`]: crate::search::SearchCache
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::cost::CostModel;
+use crate::env::MatchCache;
 use crate::graph::{canonical_hash, Graph};
-use crate::xfer::{apply_rule, RuleSet};
+use crate::xfer::{apply_rule, ApplyReport, RuleSet};
 
 /// Cross-depth memo of every graph the search has costed, keyed by
 /// [`canonical_hash`] — the ruler/equality-saturation dedup idiom: two
 /// substitution sequences reaching the same graph share one table slot.
+///
+/// The table has two layers. The **local** map holds graphs costed by *this
+/// run*; it doubles as TASO's explored-set, so [`TranspositionTable::insert`]
+/// and [`TranspositionTable::contains`] see only it. The optional **base**
+/// layer is a frozen map inherited from a persistent
+/// [`SearchCache`](crate::search::SearchCache): [`TranspositionTable::get`]
+/// falls through to it, so costs memoised by earlier runs with the same
+/// config fingerprint are reused without ever polluting this run's
+/// explored-set semantics (a graph another run explored is still a fresh
+/// candidate here). Base-served costs carry the *first derivation's* f64
+/// value, which can differ from a fresh derivation's in the last ulps —
+/// the same summation-order caveat in-run memoisation already has against
+/// the `_reference` oracles; exact near-ties may therefore resolve
+/// differently warm vs `--fresh-cache`, while repeated identical searches
+/// stay bit-identical through the result memo.
 #[derive(Debug, Clone, Default)]
 pub struct TranspositionTable {
     map: HashMap<u64, f64>,
+    /// Read-only cost entries inherited across runs (empty when the search
+    /// runs without a persistent cache).
+    base: Arc<HashMap<u64, f64>>,
     /// Candidates served from the table instead of being re-costed, plus
     /// (in dedup mode) candidates dropped as already explored.
     pub hits: usize,
 }
 
 impl TranspositionTable {
+    /// An empty table with no inherited base layer.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Install the read-only cost layer inherited from a persistent cache.
+    pub fn set_base(&mut self, base: Arc<HashMap<u64, f64>>) {
+        self.base = base;
+    }
+
+    /// Number of graphs costed by *this run* (the base layer is excluded).
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// True when this run has not costed any graph yet.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
 
+    /// Entries inherited from the persistent cache (not explored this run).
+    pub fn base_len(&self) -> usize {
+        self.base.len()
+    }
+
+    /// Was `hash` explored by *this run*? (Explored-set semantics: the
+    /// inherited base layer deliberately does not count — a graph another
+    /// run explored is still a fresh candidate for this one.)
     pub fn contains(&self, hash: u64) -> bool {
         self.map.contains_key(&hash)
     }
 
+    /// Memoised runtime for `hash`, if any: this run's entry first (the
+    /// in-run first derivation stays canonical), then the inherited base.
     pub fn get(&self, hash: u64) -> Option<f64> {
-        self.map.get(&hash).copied()
+        self.map
+            .get(&hash)
+            .or_else(|| self.base.get(&hash))
+            .copied()
     }
 
     /// Record a costed graph; returns `true` when the hash was fresh.
@@ -70,57 +140,105 @@ impl TranspositionTable {
             }
         }
     }
+
+    /// This run's fresh entries (hash, runtime) — what a persistent cache
+    /// absorbs back after the search ends.
+    pub fn local_entries(&self) -> impl Iterator<Item = (u64, f64)> + '_ {
+        self.map.iter().map(|(&k, &v)| (k, v))
+    }
 }
 
-/// One graph alive at the current search depth, with its tracked runtime.
+/// One graph alive at the current search depth, with its tracked runtime
+/// and its incrementally-maintained per-rule match lists.
 #[derive(Debug, Clone)]
 pub struct FrontierEntry {
+    /// Tracked runtime of `graph` (memo/delta value; the full recompute is
+    /// re-run once at search end).
     pub ms: f64,
+    /// The graph itself.
     pub graph: Graph,
+    /// Per-rule match lists for `graph`. Maintained incrementally from the
+    /// parent entry's lists (see the module docs), and always equal to a
+    /// from-scratch `Rule::find` pass — the invariant
+    /// `tests/env_incremental.rs` pins for the environment's cache.
+    pub matches: MatchCache,
 }
 
 /// One expanded candidate, emitted in canonical enumeration order.
 #[derive(Debug)]
 pub struct Candidate {
+    /// Name of the rule that produced this candidate.
     pub rule_name: &'static str,
+    /// Index of the frontier entry this candidate was expanded from.
+    pub entry_idx: usize,
+    /// Canonical hash of the candidate graph.
     pub hash: u64,
+    /// Tracked runtime (memoised or incrementally costed).
     pub ms: f64,
     /// Present iff `ms` beat the expansion's keep threshold (everything
     /// else is recorded in the table but its graph is dropped worker-side).
     pub graph: Option<Graph>,
-    /// The runtime came from the transposition table, not a fresh costing.
+    /// The application's live-set diff; present iff `graph` is (survivor
+    /// entries need it to patch their match lists).
+    pub report: Option<ApplyReport>,
+    /// The runtime came from the transposition table (either layer), not a
+    /// fresh costing.
     pub memo_hit: bool,
 }
 
-struct PairOut {
-    cands: Vec<Candidate>,
-    /// Candidates skipped worker-side as already in the table (dedup mode).
-    skipped: usize,
+struct ItemOut {
+    /// The expanded candidate; `None` when the application failed or the
+    /// site was dropped as already explored.
+    cand: Option<Candidate>,
+    /// The site was skipped worker-side as already in the table (dedup
+    /// mode).
+    seen: bool,
 }
 
 /// The beam/frontier state shared by the search baselines.
 #[derive(Debug)]
 pub struct Frontier {
+    /// Graphs alive at the current depth.
     pub entries: Vec<FrontierEntry>,
+    /// Cross-depth cost memo + explored-set.
     pub table: TranspositionTable,
 }
 
 impl Frontier {
-    /// Seed the frontier (and the table) with the initial graph.
-    pub fn new(graph: Graph, ms: f64) -> Self {
+    /// Seed the frontier (and the table) with the initial graph. Runs the
+    /// one full `Rule::find` pass of the whole search; every later match
+    /// list derives incrementally from this one.
+    pub fn new(graph: Graph, ms: f64, rules: &RuleSet) -> Self {
         let mut table = TranspositionTable::new();
         table.insert(canonical_hash(&graph), ms);
-        Self { entries: vec![FrontierEntry { ms, graph }], table }
+        let matches = MatchCache::full(rules, &graph);
+        Self { entries: vec![FrontierEntry { ms, graph, matches }], table }
+    }
+
+    /// Build the next-depth entry for a kept candidate: clone the parent's
+    /// match lists and re-find only the rules whose patterns can intersect
+    /// the rewrite's dirty region. `Rule::find` is never run for the
+    /// untouched rules — their lists are provably byte-identical.
+    pub fn entry_from_candidate(&self, rules: &RuleSet, c: Candidate) -> FrontierEntry {
+        let parent = &self.entries[c.entry_idx];
+        let graph = c.graph.expect("only kept candidates become frontier entries");
+        let report = c.report.expect("kept candidates carry their apply report");
+        let dirty = report.dirty_region(&parent.graph, &graph);
+        let mut matches = parent.matches.clone();
+        matches.refresh(rules, &graph, &dirty);
+        FrontierEntry { ms: c.ms, graph, matches }
     }
 
     /// Expand every (entry, rule, location) site once and return the
-    /// candidates in canonical order. Graphs are retained only for
-    /// candidates costing below `keep_below` (and, when
-    /// `best_only_per_pair` is set, only the cheapest kept candidate of
-    /// each (entry, rule) pair — what greedy selection needs). With
-    /// `drop_seen`, candidates whose hash is already in the table are
-    /// dropped entirely (TASO's explored-set dedup); otherwise the table
-    /// serves purely as a cost memo.
+    /// candidates in canonical order. Graphs (and their apply reports) are
+    /// retained only for candidates costing below `keep_below`; with
+    /// `best_only`, each worker stripe additionally keeps the graph of only
+    /// its earliest-minimal kept candidate (greedy consumes one global
+    /// argmin, so retaining more is pure memory — and the global
+    /// earliest-min is always some stripe's earliest-min, so selection is
+    /// unchanged). With `drop_seen`, sites whose result hash is already in
+    /// this run's table are dropped entirely (TASO's explored-set dedup);
+    /// otherwise the table serves purely as a cost memo.
     ///
     /// The table itself is NOT updated here — callers fold the returned
     /// candidates in with [`TranspositionTable::insert`] so that in-depth
@@ -132,118 +250,141 @@ impl Frontier {
         cost: &CostModel,
         keep_below: f64,
         drop_seen: bool,
-        best_only_per_pair: bool,
+        best_only: bool,
         threads: usize,
     ) -> Vec<Candidate> {
         let entries = &self.entries;
         let table = &self.table;
-        let n_pairs = entries.len() * rules.len();
-        // Measurement noise draws per costing call: sharding would make
-        // draws depend on worker assignment, so noisy models always expand
-        // sequentially (the same downgrade `search::resolve_threads`
-        // applies — enforced here too so direct `Frontier` users keep the
-        // bit-identical contract).
-        let threads = if cost.noise_std > 0.0 {
-            1
-        } else {
-            effective_threads(threads, n_pairs)
-        };
+
+        // Work items at (entry, rule, location) granularity, flattened in
+        // canonical enumeration order. The index into this vec IS the merge
+        // order, so thread assignment cannot reorder the candidate stream.
+        let mut items: Vec<(u32, u32, u32)> = Vec::new();
+        for (e, entry) in entries.iter().enumerate() {
+            for (r, list) in entry.matches.lists().iter().enumerate() {
+                for l in 0..list.len() {
+                    items.push((e as u32, r as u32, l as u32));
+                }
+            }
+        }
+        let n_items = items.len();
+        let threads = effective_threads(threads, n_items);
+        let items = &items;
 
         // One const set per parent graph: identical for all of a parent's
-        // candidates, so don't recompute it per (rule, location) site.
+        // candidates, so don't recompute it per site.
         let parent_consts: Vec<Vec<bool>> =
             entries.iter().map(|e| cost.const_set(&e.graph)).collect();
         let parent_consts = &parent_consts;
 
-        let expand_pair = |entry_idx: usize, rule_idx: usize, cm: &CostModel| -> PairOut {
-            let parent = &entries[entry_idx];
-            let rule = rules.rules[rule_idx].as_ref();
-            let mut cands: Vec<Candidate> = Vec::new();
-            let mut skipped = 0usize;
-            let mut best_kept: Option<usize> = None;
-            for loc in rule.find(&parent.graph) {
-                let mut candidate = parent.graph.clone();
-                let report = match apply_rule(&mut candidate, rule, &loc) {
-                    Ok(r) => r,
-                    Err(_) => continue,
-                };
-                let hash = canonical_hash(&candidate);
-                if drop_seen && table.contains(hash) {
-                    skipped += 1;
-                    continue;
-                }
-                let (ms, memo_hit) = match table.get(hash) {
-                    Some(ms) => (ms, true),
-                    None => (
-                        cm.delta_runtime_ms_with(
-                            &parent.graph,
-                            &parent_consts[entry_idx],
-                            parent.ms,
-                            &candidate,
-                            &report,
-                        ),
-                        false,
+        let expand_item = |i: usize, cm: &CostModel| -> ItemOut {
+            let (e, r, l) = items[i];
+            let (e, r, l) = (e as usize, r as usize, l as usize);
+            let parent = &entries[e];
+            let rule = rules.rules[r].as_ref();
+            let loc = &parent.matches.lists()[r][l];
+            let mut candidate = parent.graph.clone();
+            let report = match apply_rule(&mut candidate, rule, loc) {
+                Ok(rep) => rep,
+                Err(_) => return ItemOut { cand: None, seen: false },
+            };
+            let hash = canonical_hash(&candidate);
+            if drop_seen && table.contains(hash) {
+                return ItemOut { cand: None, seen: true };
+            }
+            let (ms, memo_hit) = match table.get(hash) {
+                Some(ms) => (ms, true),
+                None => (
+                    cm.delta_runtime_ms_with(
+                        &parent.graph,
+                        &parent_consts[e],
+                        parent.ms,
+                        &candidate,
+                        &report,
                     ),
-                };
-                let keep = ms < keep_below;
-                if keep {
-                    let better = match best_kept {
-                        Some(b) => ms < cands[b].ms,
-                        None => true,
-                    };
-                    if better {
-                        best_kept = Some(cands.len());
-                    }
-                }
-                cands.push(Candidate {
+                    false,
+                ),
+            };
+            let keep = ms < keep_below;
+            let (graph, report) = if keep {
+                (Some(candidate), Some(report))
+            } else {
+                (None, None)
+            };
+            ItemOut {
+                cand: Some(Candidate {
                     rule_name: rule.name(),
+                    entry_idx: e,
                     hash,
                     ms,
-                    graph: keep.then_some(candidate),
+                    graph,
+                    report,
                     memo_hit,
-                });
+                }),
+                seen: false,
             }
-            if best_only_per_pair {
-                for (i, c) in cands.iter_mut().enumerate() {
-                    if Some(i) != best_kept {
-                        c.graph = None;
-                    }
-                }
-            }
-            PairOut { cands, skipped }
         };
 
-        // Pairs in canonical order: frontier entries major, rules minor.
-        let n_rules = rules.len();
-        let pair_of = move |i: usize| (i / n_rules, i % n_rules);
+        // One round-robin stripe of the work items. With `best_only`, the
+        // stripe nulls the graph/report of every kept candidate except its
+        // earliest-minimal one (strict `<`, ascending site order) as it
+        // goes, so peak memory stays at one retained graph per stripe.
+        let run_stripe = |w: usize, stride: usize, cm: &CostModel| -> Vec<(usize, ItemOut)> {
+            let mut mine: Vec<(usize, ItemOut)> = Vec::new();
+            let mut best_kept: Option<(usize, f64)> = None; // (index into mine, ms)
+            let mut i = w;
+            while i < n_items {
+                let out = expand_item(i, cm);
+                mine.push((i, out));
+                if best_only {
+                    let last = mine.len() - 1;
+                    let kept_ms = mine[last]
+                        .1
+                        .cand
+                        .as_ref()
+                        .and_then(|c| c.graph.as_ref().map(|_| c.ms));
+                    if let Some(ms) = kept_ms {
+                        match best_kept {
+                            Some((prev, best_ms)) if ms < best_ms => {
+                                let c = mine[prev].1.cand.as_mut().expect("kept candidate");
+                                c.graph = None;
+                                c.report = None;
+                                best_kept = Some((last, ms));
+                            }
+                            Some(_) => {
+                                let c = mine[last].1.cand.as_mut().expect("kept candidate");
+                                c.graph = None;
+                                c.report = None;
+                            }
+                            None => best_kept = Some((last, ms)),
+                        }
+                    }
+                }
+                i += stride;
+            }
+            mine
+        };
 
-        let mut outs: Vec<Option<PairOut>> = (0..n_pairs).map(|_| None).collect();
+        let mut outs: Vec<Option<ItemOut>> = (0..n_items).map(|_| None).collect();
         if threads <= 1 {
-            for (i, slot) in outs.iter_mut().enumerate() {
-                let (e, r) = pair_of(i);
-                *slot = Some(expand_pair(e, r, cost));
+            for (i, out) in run_stripe(0, 1, cost) {
+                outs[i] = Some(out);
             }
         } else {
-            // Workers take pairs round-robin (cheap load balancing); the
+            // Workers take sites round-robin (cheap load balancing); the
             // merge below restores canonical order regardless. Each worker
             // shares the parent's frozen memo snapshot and keeps only its
             // fresh entries in a private overlay — no per-depth copy of the
-            // whole cache. (Noisy models never reach here, so the
-            // snapshot's noise-free default is exact.)
+            // whole cache. Workers inherit the parent's noise field, so
+            // noisy costs are bit-identical to the sequential path.
             let snap = cost.snapshot();
             std::thread::scope(|scope| {
                 let mut handles = Vec::with_capacity(threads);
                 for w in 0..threads {
-                    let expand_pair = &expand_pair;
-                    let cm = CostModel::from_snapshot(&snap);
+                    let run_stripe = &run_stripe;
+                    let cm = CostModel::from_snapshot(&snap).with_noise_of(cost);
                     handles.push(scope.spawn(move || {
-                        let mut mine: Vec<(usize, PairOut)> = Vec::new();
-                        let mut i = w;
-                        while i < n_pairs {
-                            let (e, r) = pair_of(i);
-                            mine.push((i, expand_pair(e, r, &cm)));
-                            i += threads;
-                        }
+                        let mine = run_stripe(w, threads, &cm);
                         (mine, cm)
                     }));
                 }
@@ -261,8 +402,8 @@ impl Frontier {
 
         let mut cands = Vec::new();
         for out in outs.into_iter().flatten() {
-            self.table.hits += out.skipped;
-            cands.extend(out.cands);
+            self.table.hits += out.seen as usize;
+            cands.extend(out.cand);
         }
         cands
     }

@@ -17,10 +17,13 @@
 //! graphs (X-RLflow), both baselines share one engine
 //! ([`frontier::Frontier`]) with three ingredients:
 //!
-//! 1. **Parallel candidate expansion** — (frontier graph, rule) pairs fan
-//!    out over `std::thread::scope` workers (REGAL's standard fix), each
-//!    owning a [`CostModel`] clone while sharing the `Sync` rule set, the
-//!    same pattern as `coordinator::collect_random_parallel`.
+//! 1. **Location-level parallel expansion** — individual (frontier graph,
+//!    rule, match location) sites fan out over `std::thread::scope`
+//!    workers, each owning a [`CostModel`] built from a shared read-only
+//!    snapshot. Sharding at site granularity (instead of (graph, rule)
+//!    pairs) keeps one match-heavy rule from serialising a depth behind a
+//!    single worker; per-entry match lists are maintained incrementally
+//!    (`env::MatchCache` + `DirtyRegion`) so `Rule::find` never runs twice.
 //! 2. **A transposition table** ([`frontier::TranspositionTable`]) keyed
 //!    on [`canonical_hash`](crate::graph::canonical_hash) that persists
 //!    across beam depths: a graph re-derived through a different
@@ -31,14 +34,23 @@
 //!    application touched; the full `graph_runtime_ms` recompute remains
 //!    the oracle (reported `final_ms` always comes from it).
 //!
+//! # Cross-run memoisation
+//!
+//! [`memo::SearchCache`] persists results *across* search calls: a repeated
+//! identical search (same config fingerprint, same root graph) is a pure
+//! lookup, and the transposition table of every run seeds the next run's as
+//! a read-only base layer. `experiments::ExperimentCtx` and the `rlflow`
+//! CLI hold one cache across their whole lifetime ([`greedy_optimise_cached`]
+//! / [`taso_optimise_cached`]; opt out with `--fresh-cache`).
+//!
 //! # Determinism
 //!
 //! Worker results are merged in canonical (frontier entry, rule, location)
 //! enumeration order and every table update happens during that merge, so
 //! results are **bit-identical for every thread count** — `threads: 1` *is*
-//! the sequential reference (`tests/props.rs` pins this). With measurement
-//! noise enabled (`CostModel::noise_std > 0`) expansion drops to one
-//! thread and full recomputes so noise draws stay replayable.
+//! the sequential reference (`tests/props.rs` pins this). Measurement noise
+//! (`CostModel::noise_std > 0`) is a stateless per-kernel field, so noisy
+//! searches parallelise, memoise and cache exactly like clean ones.
 //!
 //! The pre-engine implementations are kept verbatim as
 //! [`greedy_optimise_reference`] / [`taso_optimise_reference`]: single
@@ -47,6 +59,7 @@
 //! `benches/fig7_opt_time.rs`.
 
 pub mod frontier;
+pub mod memo;
 
 use std::time::Instant;
 
@@ -55,24 +68,36 @@ use crate::graph::{canonical_hash, Graph};
 use crate::xfer::{apply_rule, RuleSet};
 
 pub use frontier::{Candidate, Frontier, FrontierEntry, TranspositionTable};
+pub use memo::{CacheStats, SearchCache};
 
+/// What one search run did: the applied-substitution trail plus the
+/// counters the benches and experiment tables report.
 #[derive(Debug, Clone)]
 pub struct SearchLog {
+    /// Applied substitutions as (rule name, runtime after application).
     pub steps: Vec<(String, f64)>,
+    /// Runtime of the input graph (full recompute).
     pub initial_ms: f64,
+    /// Runtime of the returned graph (full recompute).
     pub final_ms: f64,
+    /// Wall-clock seconds the search (or cache lookup) took.
     pub elapsed_s: f64,
+    /// Unique graphs costed by this run.
     pub graphs_explored: usize,
-    /// Unique graphs in the transposition table when the search ended.
+    /// Unique graphs in this run's transposition table when the search
+    /// ended (cross-run base entries excluded).
     pub table_size: usize,
-    /// Candidates answered by the table: cost-memo reuses (greedy) plus
-    /// already-explored drops (TASO) — work the seed path would redo.
+    /// Candidates answered by the table: cost-memo reuses (both layers)
+    /// plus already-explored drops (TASO) — work the seed path would redo.
     pub memo_hits: usize,
     /// Worker threads candidate expansion ran with.
     pub threads: usize,
+    /// The whole result came from a persistent [`SearchCache`] lookup.
+    pub from_cache: bool,
 }
 
 impl SearchLog {
+    /// Relative runtime improvement of the search, in percent.
     pub fn improvement_pct(&self) -> f64 {
         100.0 * (self.initial_ms - self.final_ms) / self.initial_ms.max(1e-12)
     }
@@ -97,38 +122,79 @@ pub fn greedy_optimise_threads(
     max_steps: usize,
     threads: usize,
 ) -> (Graph, SearchLog) {
+    greedy_engine(graph, rules, cost, max_steps, threads, None)
+}
+
+/// [`greedy_optimise_threads`] backed by a persistent [`SearchCache`]: a
+/// repeated identical search is a pure lookup, and fresh runs seed / flush
+/// the cache's cost memo for their config fingerprint.
+pub fn greedy_optimise_cached(
+    graph: &Graph,
+    rules: &RuleSet,
+    cost: &CostModel,
+    max_steps: usize,
+    threads: usize,
+    cache: &SearchCache,
+) -> (Graph, SearchLog) {
+    let fp = greedy_fingerprint(cost, rules, max_steps);
+    if let Some(hit) = cache.lookup(fp, graph) {
+        return hit;
+    }
+    let (g, log) = greedy_engine(graph, rules, cost, max_steps, threads, Some((cache, fp)));
+    cache.store(fp, graph, &g, &log);
+    (g, log)
+}
+
+/// The config fingerprint [`greedy_optimise_cached`] keys its cache
+/// entries with — exposed so callers that ran an *uncached* search can
+/// [`SearchCache::store`] its result under the right key.
+pub fn greedy_fingerprint(cost: &CostModel, rules: &RuleSet, max_steps: usize) -> u64 {
+    memo::config_fingerprint("greedy", &[max_steps as u64], cost, rules)
+}
+
+fn greedy_engine(
+    graph: &Graph,
+    rules: &RuleSet,
+    cost: &CostModel,
+    max_steps: usize,
+    threads: usize,
+    memo: Option<(&SearchCache, u64)>,
+) -> (Graph, SearchLog) {
     let start = Instant::now();
     let initial_ms = cost.graph_runtime_ms(graph);
-    let threads = resolve_threads(cost, threads);
-    let mut front = Frontier::new(graph.clone(), initial_ms);
+    let threads = frontier::effective_threads(threads, usize::MAX);
+    let mut front = Frontier::new(graph.clone(), initial_ms, rules);
+    if let Some((cache, fp)) = memo {
+        front.table.set_base(cache.cost_base(fp));
+    }
     let mut current_ms = initial_ms;
     let mut log = Vec::new();
     let mut explored = 0usize;
 
     for _ in 0..max_steps {
         // Keep only candidates that strictly improve on the current graph,
-        // and only the cheapest per (entry, rule) pair — the argmin is all
-        // greedy needs. The table acts as a pure cost memo here (greedy
-        // never drops re-derived candidates from consideration).
+        // and (best_only) retain at most one graph per worker stripe — the
+        // argmin is all greedy needs. The table acts as a pure cost memo
+        // here (greedy never drops re-derived candidates from
+        // consideration).
         let cands = front.expand(rules, cost, current_ms - 1e-12, false, true, threads);
-        let mut best: Option<(f64, Graph, &'static str)> = None;
+        let mut best: Option<Candidate> = None;
         for c in cands {
             explored += 1;
             front.table.hits += c.memo_hit as usize;
             front.table.insert(c.hash, c.ms);
-            if let Some(g) = c.graph {
-                // Strict `<`: the earliest candidate in canonical order
-                // wins ties, exactly as the sequential reference does.
-                if best.as_ref().map_or(true, |(b, _, _)| c.ms < *b) {
-                    best = Some((c.ms, g, c.rule_name));
-                }
+            // Strict `<`: the earliest candidate in canonical order wins
+            // ties, exactly as the sequential reference does.
+            if c.graph.is_some() && best.as_ref().map_or(true, |b| c.ms < b.ms) {
+                best = Some(c);
             }
         }
         match best {
-            Some((ms, g, name)) => {
-                log.push((name.to_string(), ms));
-                current_ms = ms;
-                front.entries = vec![FrontierEntry { ms, graph: g }];
+            Some(c) => {
+                log.push((c.rule_name.to_string(), c.ms));
+                current_ms = c.ms;
+                let entry = front.entry_from_candidate(rules, c);
+                front.entries = vec![entry];
             }
             None => break,
         }
@@ -136,6 +202,9 @@ pub fn greedy_optimise_threads(
 
     let final_graph = front.entries.swap_remove(0).graph;
     let final_ms = cost.graph_runtime_ms(&final_graph);
+    if let Some((cache, fp)) = memo {
+        cache.absorb_costs(fp, &front.table);
+    }
     let slog = SearchLog {
         steps: log,
         initial_ms,
@@ -145,10 +214,12 @@ pub fn greedy_optimise_threads(
         table_size: front.table.len(),
         memo_hits: front.table.hits,
         threads,
+        from_cache: false,
     };
     (final_graph, slog)
 }
 
+/// Knobs of the TASO-style relaxed beam search.
 #[derive(Debug, Clone)]
 pub struct TasoConfig {
     /// Relaxation factor: candidates with cost < alpha * best are kept.
@@ -181,12 +252,60 @@ pub fn taso_optimise(
     cost: &CostModel,
     cfg: &TasoConfig,
 ) -> (Graph, SearchLog) {
+    taso_engine(graph, rules, cost, cfg, None)
+}
+
+/// [`taso_optimise`] backed by a persistent [`SearchCache`]. The cache's
+/// cost memo seeds only the table's read-only layer — TASO's explored-set
+/// dedup stays per-run, so seeding never *drops* candidates a cold run
+/// would explore. Memoised candidate costs carry their first derivation's
+/// f64 value (see [`TranspositionTable`]), so exact near-ties may resolve
+/// differently warm vs fresh; repeated identical searches are bit-identical
+/// via the result memo.
+pub fn taso_optimise_cached(
+    graph: &Graph,
+    rules: &RuleSet,
+    cost: &CostModel,
+    cfg: &TasoConfig,
+    cache: &SearchCache,
+) -> (Graph, SearchLog) {
+    let fp = taso_fingerprint(cost, rules, cfg);
+    if let Some(hit) = cache.lookup(fp, graph) {
+        return hit;
+    }
+    let (g, log) = taso_engine(graph, rules, cost, cfg, Some((cache, fp)));
+    cache.store(fp, graph, &g, &log);
+    (g, log)
+}
+
+/// The config fingerprint [`taso_optimise_cached`] keys its cache entries
+/// with — exposed so callers that ran an *uncached* search can
+/// [`SearchCache::store`] its result under the right key.
+pub fn taso_fingerprint(cost: &CostModel, rules: &RuleSet, cfg: &TasoConfig) -> u64 {
+    memo::config_fingerprint(
+        "taso",
+        &[cfg.alpha.to_bits(), cfg.beam as u64, cfg.depth as u64],
+        cost,
+        rules,
+    )
+}
+
+fn taso_engine(
+    graph: &Graph,
+    rules: &RuleSet,
+    cost: &CostModel,
+    cfg: &TasoConfig,
+    memo: Option<(&SearchCache, u64)>,
+) -> (Graph, SearchLog) {
     let start = Instant::now();
     let initial_ms = cost.graph_runtime_ms(graph);
-    let threads = resolve_threads(cost, cfg.threads);
+    let threads = frontier::effective_threads(cfg.threads, usize::MAX);
     let mut best_graph = graph.clone();
     let mut best_ms = initial_ms;
-    let mut front = Frontier::new(graph.clone(), initial_ms);
+    let mut front = Frontier::new(graph.clone(), initial_ms, rules);
+    if let Some((cache, fp)) = memo {
+        front.table.set_base(cache.cost_base(fp));
+    }
     let mut explored = 0usize;
     let mut log = Vec::new();
     let mut stale = 0usize;
@@ -196,8 +315,9 @@ pub fn taso_optimise(
         // run worker-side; `drop_seen` applies the explored-set dedup
         // against the frozen table snapshot there too.
         let cands = front.expand(rules, cost, cfg.alpha * best_ms, true, false, threads);
-        let mut survivors: Vec<(f64, Graph, &'static str)> = Vec::new();
+        let mut survivors: Vec<Candidate> = Vec::new();
         for c in cands {
+            front.table.hits += c.memo_hit as usize;
             // In-depth duplicates (two workers deriving the same graph)
             // resolve here, in canonical order: first derivation counts.
             if !front.table.insert(c.hash, c.ms) {
@@ -205,19 +325,19 @@ pub fn taso_optimise(
                 continue;
             }
             explored += 1;
-            if let Some(g) = c.graph {
-                survivors.push((c.ms, g, c.rule_name));
+            if c.graph.is_some() {
+                survivors.push(c);
             }
         }
         if survivors.is_empty() {
             break;
         }
-        survivors.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+        survivors.sort_by(|a, b| a.ms.partial_cmp(&b.ms).unwrap_or(std::cmp::Ordering::Equal));
         survivors.truncate(cfg.beam);
-        if survivors[0].0 < best_ms {
-            best_ms = survivors[0].0;
-            best_graph = survivors[0].1.clone();
-            log.push((survivors[0].2.to_string(), best_ms));
+        if survivors[0].ms < best_ms {
+            best_ms = survivors[0].ms;
+            best_graph = survivors[0].graph.clone().expect("survivors keep their graphs");
+            log.push((survivors[0].rule_name.to_string(), best_ms));
             stale = 0;
         } else {
             // Within-alpha exploration that stops paying off terminates the
@@ -227,13 +347,17 @@ pub fn taso_optimise(
                 break;
             }
         }
-        front.entries = survivors
+        let next: Vec<FrontierEntry> = survivors
             .into_iter()
-            .map(|(ms, graph, _)| FrontierEntry { ms, graph })
+            .map(|c| front.entry_from_candidate(rules, c))
             .collect();
+        front.entries = next;
     }
 
     let final_ms = cost.graph_runtime_ms(&best_graph);
+    if let Some((cache, fp)) = memo {
+        cache.absorb_costs(fp, &front.table);
+    }
     let slog = SearchLog {
         steps: log,
         initial_ms,
@@ -243,19 +367,9 @@ pub fn taso_optimise(
         table_size: front.table.len(),
         memo_hits: front.table.hits,
         threads,
+        from_cache: false,
     };
     (best_graph, slog)
-}
-
-/// Thread resolution shared by both baselines: measurement noise forces the
-/// sequential path (noise draws must stay replayable), otherwise 0 means
-/// "all available cores".
-fn resolve_threads(cost: &CostModel, requested: usize) -> usize {
-    if cost.noise_std > 0.0 {
-        1
-    } else {
-        frontier::effective_threads(requested, usize::MAX)
-    }
 }
 
 // ---------------------------------------------------------------------------
@@ -315,6 +429,7 @@ pub fn greedy_optimise_reference(
             table_size: 0,
             memo_hits: 0,
             threads: 1,
+            from_cache: false,
         },
     )
 }
@@ -390,6 +505,7 @@ pub fn taso_optimise_reference(
             table_size: 0,
             memo_hits: 0,
             threads: 1,
+            from_cache: false,
         },
     )
 }
@@ -530,10 +646,42 @@ mod tests {
     }
 
     #[test]
-    fn noise_forces_sequential_expansion() {
+    fn noisy_search_runs_parallel_and_matches_sequential() {
+        // The per-kernel noise field is stateless, so noisy expansion no
+        // longer needs the sequential downgrade the old stream-drawing
+        // model forced: any thread count reproduces the sequential run to
+        // the bit, noise included.
         let (g, rules, _) = fixture();
         let noisy = CostModel::new(DeviceProfile::rtx2070()).with_noise(0.05, 7);
-        let (_, log) = taso_optimise(&g, &rules, &noisy, &TasoConfig::default());
-        assert_eq!(log.threads, 1);
+        let (sg, slog) =
+            taso_optimise(&g, &rules, &noisy, &TasoConfig { threads: 1, ..Default::default() });
+        let (pg, plog) =
+            taso_optimise(&g, &rules, &noisy, &TasoConfig { threads: 2, ..Default::default() });
+        assert_eq!(plog.threads, 2, "noise must not force the sequential path");
+        assert_eq!(slog.final_ms.to_bits(), plog.final_ms.to_bits());
+        assert_eq!(canonical_hash(&sg), canonical_hash(&pg));
+        assert_eq!(slog.graphs_explored, plog.graphs_explored);
+        assert_eq!(slog.steps, plog.steps);
+        // And the noise actually engaged: the clean run differs.
+        let clean = CostModel::new(DeviceProfile::rtx2070());
+        let (_, clog) = taso_optimise(&g, &rules, &clean, &TasoConfig::default());
+        assert_ne!(clog.final_ms.to_bits(), plog.final_ms.to_bits());
+    }
+
+    #[test]
+    fn cached_search_repeats_as_pure_lookup() {
+        let (g, rules, cost) = fixture();
+        let cache = SearchCache::new();
+        let (g1, log1) = taso_optimise_cached(&g, &rules, &cost, &TasoConfig::default(), &cache);
+        assert!(!log1.from_cache);
+        let (g2, log2) = taso_optimise_cached(&g, &rules, &cost, &TasoConfig::default(), &cache);
+        assert!(log2.from_cache, "second identical search must be a lookup");
+        assert_eq!(log1.final_ms.to_bits(), log2.final_ms.to_bits());
+        assert_eq!(canonical_hash(&g1), canonical_hash(&g2));
+        assert_eq!(log1.steps, log2.steps);
+        let stats = cache.stats();
+        assert_eq!(stats.result_hits, 1);
+        assert_eq!(stats.result_misses, 1);
+        assert!(stats.cost_entries > 0, "the run's table must persist");
     }
 }

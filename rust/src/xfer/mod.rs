@@ -99,4 +99,20 @@ impl RuleSet {
     pub fn count_matches(&self, g: &Graph) -> usize {
         self.rules.iter().map(|r| r.find(g).len()).sum()
     }
+
+    /// Order-sensitive fingerprint of the rule vocabulary: the rule names
+    /// at their slot indices. Rule names are unique (enforced by
+    /// [`RuleSet::new`]) and slot order is the agent's action space, so two
+    /// equal fingerprints mean the same searches and the same action
+    /// numbering — what the persistent `search::SearchCache` keys on.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xCBF29CE484222325;
+        for r in &self.rules {
+            for b in r.name().bytes() {
+                h = (h ^ b as u64).wrapping_mul(0x100000001B3);
+            }
+            h = h.rotate_left(7) ^ 0x2D;
+        }
+        h
+    }
 }

@@ -88,17 +88,32 @@ fn incremental_env_bit_identical_to_reference_on_zoo_walks() {
 
 #[test]
 fn incremental_env_matches_reference_under_noise() {
-    // Under measurement noise both paths fall back to one full recompute
-    // per applied step, drawing from the same per-model stream — so the
-    // agreement is exact, not just 1e-9.
+    // The §3.1.4 noise model is a stateless per-kernel field, so the
+    // incremental path resamples only the nodes a rewrite touched —
+    // `delta_cost_fast` never falls back to a full recompute — and still
+    // tracks the full-recompute oracle to f64 summation order (1e-9 on
+    // runtimes; the f32 rewards inherit it at 1e-6).
     let rules = standard_library();
     let g = zoo::squeezenet1_1();
     let mk_cost = || CostModel::new(DeviceProfile::rtx2070()).with_noise(0.05, 77);
     let (inc_cost, ref_cost) = (mk_cost(), mk_cost());
+    // Noise must actually engage: the noisy initial runtime differs from
+    // the clean one.
+    let clean = CostModel::new(DeviceProfile::rtx2070());
     let mut inc = Env::new(g.clone(), &rules, &inc_cost, EnvConfig::default());
-    let mut oracle =
-        Env::new(g, &rules, &ref_cost, EnvConfig { full_refresh: true, ..Default::default() });
+    let mut oracle = Env::new(
+        g.clone(),
+        &rules,
+        &ref_cost,
+        EnvConfig { full_refresh: true, ..Default::default() },
+    );
+    assert_ne!(
+        inc.initial_runtime_ms().to_bits(),
+        clean.graph_runtime_ms(&g).to_bits(),
+        "noise field did not perturb the initial runtime"
+    );
     let mut rng = Rng::new(0x5EED);
+    let mut applied = 0;
     for _ in 0..6 {
         let obs = oracle.observe();
         assert_eq!(obs.xfer_mask, inc.observe().xfer_mask);
@@ -110,12 +125,21 @@ fn incremental_env_matches_reference_under_noise() {
         let l = rng.below(obs.location_counts[x]);
         let r_ref = oracle.step((x, l));
         let r_inc = inc.step((x, l));
-        assert_eq!(r_ref.reward.to_bits(), r_inc.reward.to_bits());
-        assert_eq!(oracle.runtime_ms().to_bits(), inc.runtime_ms().to_bits());
+        assert!((r_ref.reward - r_inc.reward).abs() < 1e-6);
+        assert!(
+            (oracle.runtime_ms() - inc.runtime_ms()).abs() < 1e-9,
+            "noisy runtime {} vs {}",
+            inc.runtime_ms(),
+            oracle.runtime_ms()
+        );
+        assert_eq!(r_ref.info.launches, r_inc.info.launches);
+        applied += 1;
         if r_ref.done {
             break;
         }
     }
+    assert!(applied >= 3, "noisy walk too short ({applied} steps)");
+    assert_eq!(oracle.history(), inc.history());
 }
 
 #[test]

@@ -1,0 +1,233 @@
+//! Properties of the cross-run search memoisation layer
+//! (`search::memo::SearchCache`) and the location-sharded expansion engine:
+//!
+//!  * a repeated identical search is a pure result-memo lookup, returning
+//!    bit-identical graphs and costs with an observable hit-rate;
+//!  * different search configs never share cache entries (fingerprint
+//!    isolation);
+//!  * warm cost-memo runs on *different* roots reuse persisted costs while
+//!    agreeing with fresh-cache runs on what they find;
+//!  * location-level sharding is thread-count invariant even when a single
+//!    match-heavy rule dominates the work;
+//!  * all of the above holds with §3.1.4 measurement noise enabled (the
+//!    noise field is part of the fingerprint).
+
+use rlflow::cost::{CostModel, DeviceProfile};
+use rlflow::graph::{canonical_hash, Graph, GraphBuilder, PadMode};
+use rlflow::search::{
+    greedy_optimise_cached, greedy_optimise_threads, taso_optimise, taso_optimise_cached,
+    SearchCache, TasoConfig,
+};
+use rlflow::xfer::library::standard_library;
+
+fn fixture() -> Graph {
+    let mut b = GraphBuilder::new();
+    let x = b.input(&[1, 3, 16, 16]);
+    let c1 = b.conv_bn_relu(x, 8, 3, 1, PadMode::Same).unwrap();
+    let c2 = b.conv(c1, 8, 1, 1, PadMode::Same).unwrap();
+    let c3 = b.conv(c2, 8, 1, 1, PadMode::Same).unwrap();
+    let _ = b.relu(c3).unwrap();
+    b.finish()
+}
+
+/// A graph whose substitution surface is dominated by ONE rule with many
+/// locations (`fuse_conv_relu` across every block) — the straggler shape
+/// that (graph, rule)-pair sharding serialised behind a single worker.
+fn conv_relu_heavy() -> Graph {
+    let mut b = GraphBuilder::new();
+    let x = b.input(&[1, 4, 16, 16]);
+    let mut cur = x;
+    for _ in 0..6 {
+        let c = b.conv(cur, 4, 1, 1, PadMode::Same).unwrap();
+        cur = b.relu(c).unwrap();
+    }
+    b.finish()
+}
+
+fn small_cfg() -> TasoConfig {
+    TasoConfig { depth: 4, beam: 3, ..Default::default() }
+}
+
+#[test]
+fn second_identical_search_is_pure_lookup() {
+    let g = fixture();
+    let rules = standard_library();
+    let cost = CostModel::new(DeviceProfile::rtx2070());
+    let cache = SearchCache::new();
+
+    let (g1, log1) = taso_optimise_cached(&g, &rules, &cost, &small_cfg(), &cache);
+    assert!(!log1.from_cache);
+    let (g2, log2) = taso_optimise_cached(&g, &rules, &cost, &small_cfg(), &cache);
+    assert!(log2.from_cache, "second identical taso search must be a lookup");
+    assert_eq!(log1.final_ms.to_bits(), log2.final_ms.to_bits());
+    assert_eq!(log1.initial_ms.to_bits(), log2.initial_ms.to_bits());
+    assert_eq!(canonical_hash(&g1), canonical_hash(&g2));
+    assert_eq!(log1.steps, log2.steps);
+    assert_eq!(log1.graphs_explored, log2.graphs_explored);
+
+    let (h1, glog1) = greedy_optimise_cached(&g, &rules, &cost, 50, 0, &cache);
+    assert!(!glog1.from_cache, "greedy uses a different fingerprint than taso");
+    let (h2, glog2) = greedy_optimise_cached(&g, &rules, &cost, 50, 0, &cache);
+    assert!(glog2.from_cache);
+    assert_eq!(glog1.final_ms.to_bits(), glog2.final_ms.to_bits());
+    assert_eq!(canonical_hash(&h1), canonical_hash(&h2));
+
+    let stats = cache.stats();
+    assert_eq!(stats.result_hits, 2, "one taso + one greedy repeat");
+    assert_eq!(stats.result_misses, 2);
+    assert_eq!(stats.result_entries, 2);
+    assert!(stats.cost_entries > 0, "transposition tables must persist");
+    assert_eq!(stats.evictions, 0);
+}
+
+#[test]
+fn config_fingerprints_are_isolated() {
+    // Different TasoConfigs must never share entries: each config gets its
+    // own result slot and its own cost shard.
+    let g = fixture();
+    let rules = standard_library();
+    let cost = CostModel::new(DeviceProfile::rtx2070());
+    let cache = SearchCache::new();
+
+    let (_, a) = taso_optimise_cached(&g, &rules, &cost, &small_cfg(), &cache);
+    let alpha_cfg = TasoConfig { alpha: 1.10, ..small_cfg() };
+    let (_, b) = taso_optimise_cached(&g, &rules, &cost, &alpha_cfg, &cache);
+    let beam_cfg = TasoConfig { beam: 2, ..small_cfg() };
+    let (_, c) = taso_optimise_cached(&g, &rules, &cost, &beam_cfg, &cache);
+    assert!(!a.from_cache && !b.from_cache && !c.from_cache);
+
+    let stats = cache.stats();
+    assert_eq!(stats.result_hits, 0, "no config may alias another's entry");
+    assert_eq!(stats.result_misses, 3);
+    assert_eq!(stats.result_entries, 3);
+
+    // The thread count is NOT part of the fingerprint: results are
+    // bit-identical for every worker count, so a different `threads`
+    // value hits the same entry.
+    let threads_cfg = TasoConfig { threads: 2, ..small_cfg() };
+    let (_, d) = taso_optimise_cached(&g, &rules, &cost, &threads_cfg, &cache);
+    assert!(d.from_cache, "thread count must not split the cache");
+    assert_eq!(a.final_ms.to_bits(), d.final_ms.to_bits());
+}
+
+#[test]
+fn warm_cost_memo_reuses_entries_and_agrees_with_cold_runs() {
+    // Optimise a graph, then a *different* root that shares derived
+    // candidates (the optimised graph itself, reachable mid-search). The
+    // warm run must (a) observably hit the persisted cost memo and (b)
+    // agree with a fresh-cache run of the same search.
+    let g = fixture();
+    let rules = standard_library();
+    let cost = CostModel::new(DeviceProfile::rtx2070());
+    let cache = SearchCache::new();
+
+    let (opt, first) = greedy_optimise_cached(&g, &rules, &cost, 50, 0, &cache);
+    // Re-rooting the same config on a graph the first search derived:
+    // its candidates overlap the persisted shard.
+    let (warm_g, warm) = greedy_optimise_cached(&opt, &rules, &cost, 50, 0, &cache);
+    assert!(!warm.from_cache, "different root must not hit the result memo");
+    assert!(
+        warm.memo_hits > 0,
+        "warm run should reuse persisted costs (got {} hits, {} explored)",
+        warm.memo_hits,
+        warm.graphs_explored
+    );
+
+    let fresh_cache = SearchCache::new();
+    let (cold_g, cold) = greedy_optimise_cached(&opt, &rules, &cost, 50, 0, &fresh_cache);
+    // Same search semantics: identical step trail and final structure; the
+    // warm run's memoised candidate costs may differ from freshly-derived
+    // ones in the last f64 ulps (first-derivation-canonical contract), so
+    // the cost pin is relative.
+    assert_eq!(canonical_hash(&warm_g), canonical_hash(&cold_g));
+    let rel = (warm.final_ms - cold.final_ms).abs() / cold.final_ms.max(1e-12);
+    assert!(rel < 1e-9, "warm {} vs cold {}", warm.final_ms, cold.final_ms);
+    assert_eq!(
+        warm.steps.iter().map(|(n, _)| n.clone()).collect::<Vec<_>>(),
+        cold.steps.iter().map(|(n, _)| n.clone()).collect::<Vec<_>>()
+    );
+    let _ = first;
+}
+
+#[test]
+fn location_sharding_is_thread_invariant_on_match_heavy_rule() {
+    // One rule, many locations: exactly the shape that used to straggle.
+    // Any worker count must reproduce the sequential run to the bit.
+    let g = conv_relu_heavy();
+    let rules = standard_library();
+    let cost = CostModel::new(DeviceProfile::rtx2070());
+
+    let (sg, slog) = greedy_optimise_threads(&g, &rules, &cost, 20, 1);
+    assert!(
+        slog.steps.iter().filter(|(n, _)| n == "fuse_conv_relu").count() >= 4,
+        "fixture must actually be fuse_conv_relu heavy: {:?}",
+        slog.steps
+    );
+    for threads in [2, 3, 5] {
+        let (pg, plog) = greedy_optimise_threads(&g, &rules, &cost, 20, threads);
+        assert_eq!(slog.final_ms.to_bits(), plog.final_ms.to_bits(), "threads={threads}");
+        assert_eq!(canonical_hash(&sg), canonical_hash(&pg), "threads={threads}");
+        assert_eq!(slog.graphs_explored, plog.graphs_explored, "threads={threads}");
+        assert_eq!(slog.steps, plog.steps, "threads={threads}");
+    }
+
+    let (sg, slog) = taso_optimise(&g, &rules, &cost, &TasoConfig { threads: 1, ..small_cfg() });
+    for threads in [2, 4] {
+        let (pg, plog) =
+            taso_optimise(&g, &rules, &cost, &TasoConfig { threads, ..small_cfg() });
+        assert_eq!(slog.final_ms.to_bits(), plog.final_ms.to_bits(), "threads={threads}");
+        assert_eq!(canonical_hash(&sg), canonical_hash(&pg), "threads={threads}");
+        assert_eq!(slog.steps, plog.steps, "threads={threads}");
+    }
+}
+
+#[test]
+fn noisy_searches_cache_and_stay_thread_invariant() {
+    // The noise field (std + seed) is part of the config fingerprint, so
+    // noisy searches memoise like clean ones — and never alias across
+    // seeds.
+    let g = fixture();
+    let rules = standard_library();
+    let noisy = CostModel::new(DeviceProfile::rtx2070()).with_noise(0.05, 21);
+    let cache = SearchCache::new();
+
+    let (g1, log1) = taso_optimise_cached(&g, &rules, &noisy, &small_cfg(), &cache);
+    let (g2, log2) = taso_optimise_cached(&g, &rules, &noisy, &small_cfg(), &cache);
+    assert!(log2.from_cache, "same noise config must hit");
+    assert_eq!(log1.final_ms.to_bits(), log2.final_ms.to_bits());
+    assert_eq!(canonical_hash(&g1), canonical_hash(&g2));
+
+    let other_seed = CostModel::new(DeviceProfile::rtx2070()).with_noise(0.05, 22);
+    let (_, log3) = taso_optimise_cached(&g, &rules, &other_seed, &small_cfg(), &cache);
+    assert!(!log3.from_cache, "a different noise seed is a different config");
+
+    // Parallel noisy expansion matches sequential bitwise.
+    let (sg, slog) =
+        taso_optimise(&g, &rules, &noisy, &TasoConfig { threads: 1, ..small_cfg() });
+    let (pg, plog) =
+        taso_optimise(&g, &rules, &noisy, &TasoConfig { threads: 3, ..small_cfg() });
+    assert_eq!(slog.final_ms.to_bits(), plog.final_ms.to_bits());
+    assert_eq!(canonical_hash(&sg), canonical_hash(&pg));
+    assert_eq!(slog.steps, plog.steps);
+}
+
+#[test]
+fn zoo_graph_repeat_matches_cold_run_with_observable_hits() {
+    // The acceptance-shaped check: repeated optimisation of a real zoo
+    // graph through one persistent cache reuses it (hit-rate > 0) and
+    // returns results bit-identical to the cold run.
+    let g = rlflow::zoo::squeezenet1_1();
+    let rules = standard_library();
+    let cost = CostModel::new(DeviceProfile::rtx2070());
+    let cache = SearchCache::new();
+    let cfg = TasoConfig { depth: 3, beam: 3, ..Default::default() };
+
+    let (cold_g, cold) = taso_optimise_cached(&g, &rules, &cost, &cfg, &cache);
+    let (warm_g, warm) = taso_optimise_cached(&g, &rules, &cost, &cfg, &cache);
+    assert!(warm.from_cache);
+    assert_eq!(cold.final_ms.to_bits(), warm.final_ms.to_bits());
+    assert_eq!(canonical_hash(&cold_g), canonical_hash(&warm_g));
+    assert_eq!(cold.steps, warm.steps);
+    let stats = cache.stats();
+    assert!(stats.result_hits > 0, "hit-rate must be observable: {stats:?}");
+}
