@@ -1,0 +1,353 @@
+//! Bench: host-backend training throughput — the PR-5 kernel/Workspace
+//! rework measured end to end.
+//!
+//! Four kernel configurations run the same seeded synthetic workload:
+//!
+//!  * `seed_scalar` — the seed scalar triple-loop kernels
+//!    (`KernelMode::Reference`), the pre-rework baseline;
+//!  * `blocked_t1`  — cache-blocked kernels, single thread;
+//!  * `blocked_t4`  — blocked kernels, 4 worker threads;
+//!  * `blocked_t8`  — blocked kernels, 8 worker threads.
+//!
+//! Per program family the table reports ms/call and the speedup of each
+//! blocked column over the seed scalar baseline, plus a `parity` column
+//! checking the outputs are bit-identical across all four configurations
+//! (the kernel determinism contract). The final section times one full
+//! train step (gnn_ae_train + wm_train + ctrl_train) per configuration —
+//! end-to-end train steps/sec. Results are written to BENCH_train.json at
+//! the repository root.
+
+use std::time::Instant;
+
+use rlflow::runtime::{
+    Backend, HostBackend, HostConfig, KernelCfg, ParamStore, TensorView,
+};
+use rlflow::util::Rng;
+
+const CONFIG_NAMES: [&str; 4] = ["seed_scalar", "blocked_t1", "blocked_t4", "blocked_t8"];
+
+fn kernel_cfg(name: &str) -> KernelCfg {
+    match name {
+        "seed_scalar" => KernelCfg::reference(),
+        "blocked_t1" => KernelCfg::blocked(1),
+        "blocked_t4" => KernelCfg::blocked(4),
+        "blocked_t8" => KernelCfg::blocked(8),
+        other => panic!("unknown config {other}"),
+    }
+}
+
+/// Seeded synthetic workload sized to the backend's manifest.
+struct Workload {
+    n: usize,
+    f: usize,
+    z: usize,
+    r: usize,
+    x1: usize,
+    locs: usize,
+    b_enc: usize,
+    b_dream: usize,
+    b_ppo: usize,
+    b_wm: usize,
+    t_len: usize,
+    // gnn
+    feats: Vec<f32>,
+    adj: Vec<f32>,
+    mask: Vec<f32>,
+    // ctrl
+    zb: Vec<f32>,
+    hb: Vec<f32>,
+    zp: Vec<f32>,
+    hp_: Vec<f32>,
+    act: Vec<i32>,
+    logp: Vec<f32>,
+    adv: Vec<f32>,
+    ret: Vec<f32>,
+    xm: Vec<f32>,
+    lm: Vec<f32>,
+    // wm
+    zd: Vec<f32>,
+    ad: Vec<i32>,
+    hd: Vec<f32>,
+    cd: Vec<f32>,
+    zt: Vec<f32>,
+    at: Vec<i32>,
+    zt_next: Vec<f32>,
+    rt: Vec<f32>,
+    xmt: Vec<f32>,
+    dn: Vec<f32>,
+    vl: Vec<f32>,
+}
+
+impl Workload {
+    fn new(backend: &dyn Backend, seed: u64) -> Self {
+        let m = backend.manifest();
+        let hp = |k: &str| m.hp_usize(k).unwrap();
+        let (n, f, z, r) = (hp("MAX_NODES"), hp("NODE_FEATS"), hp("LATENT"), hp("RNN_HIDDEN"));
+        let (x1, locs) = (hp("N_XFERS1"), hp("MAX_LOCS"));
+        let (b_enc, b_dream, b_ppo, b_wm, t_len) =
+            (hp("B_ENC"), hp("B_DREAM"), hp("B_PPO"), hp("B_WM"), hp("SEQ_LEN"));
+        let mut rng = Rng::new(seed);
+        // Dense graph batch: every node live, chain + skip edges.
+        let feats: Vec<f32> = (0..b_enc * n * f).map(|_| rng.normal() * 0.5).collect();
+        let mut adj = vec![0.0f32; b_enc * n * n];
+        for s in 0..b_enc {
+            for i in 1..n {
+                adj[s * n * n + (i - 1) * n + i] = 1.0;
+                if i >= 4 {
+                    adj[s * n * n + (i - 4) * n + i] = 1.0;
+                }
+            }
+        }
+        let mask = vec![1.0f32; b_enc * n];
+        let zt: Vec<f32> = (0..b_wm * t_len * z).map(|_| rng.normal() * 0.5).collect();
+        Self {
+            n,
+            f,
+            z,
+            r,
+            x1,
+            locs,
+            b_enc,
+            b_dream,
+            b_ppo,
+            b_wm,
+            t_len,
+            feats,
+            adj,
+            mask,
+            zb: (0..b_dream * z).map(|_| rng.normal() * 0.4).collect(),
+            hb: (0..b_dream * r).map(|_| rng.normal() * 0.2).collect(),
+            zp: (0..b_ppo * z).map(|_| rng.normal() * 0.4).collect(),
+            hp_: (0..b_ppo * r).map(|_| rng.normal() * 0.2).collect(),
+            act: (0..b_ppo).flat_map(|i| [(i % x1) as i32, (i % locs) as i32]).collect(),
+            logp: vec![-1.2; b_ppo],
+            adv: (0..b_ppo).map(|i| if i % 2 == 0 { 1.0 } else { -0.7 }).collect(),
+            ret: vec![0.3; b_ppo],
+            xm: vec![1.0; b_ppo * x1],
+            lm: vec![1.0; b_ppo * locs],
+            zd: (0..b_dream * z).map(|_| rng.normal() * 0.5).collect(),
+            ad: (0..b_dream).flat_map(|i| [(i % x1) as i32, (i % locs) as i32]).collect(),
+            hd: vec![0.0; b_dream * r],
+            cd: vec![0.0; b_dream * r],
+            zt_next: zt.iter().map(|v| 0.9 * v).collect(),
+            zt,
+            at: (0..b_wm * t_len).flat_map(|i| [(i % x1) as i32, (i % locs) as i32]).collect(),
+            rt: vec![0.05; b_wm * t_len],
+            xmt: vec![1.0; b_wm * t_len * x1],
+            dn: vec![0.0; b_wm * t_len],
+            vl: vec![1.0; b_wm * t_len],
+        }
+    }
+
+    fn gnn_rest(&self) -> Vec<TensorView<'_>> {
+        vec![
+            TensorView::f32(&self.feats, &[self.b_enc, self.n, self.f]),
+            TensorView::f32(&self.adj, &[self.b_enc, self.n, self.n]),
+            TensorView::f32(&self.mask, &[self.b_enc, self.n]),
+        ]
+    }
+
+    fn ctrl_train_rest(&self) -> Vec<TensorView<'_>> {
+        vec![
+            TensorView::f32(&self.zp, &[self.b_ppo, self.z]),
+            TensorView::f32(&self.hp_, &[self.b_ppo, self.r]),
+            TensorView::i32(&self.act, &[self.b_ppo, 2]),
+            TensorView::f32(&self.logp, &[self.b_ppo]),
+            TensorView::f32(&self.adv, &[self.b_ppo]),
+            TensorView::f32(&self.ret, &[self.b_ppo]),
+            TensorView::f32(&self.xm, &[self.b_ppo, self.x1]),
+            TensorView::f32(&self.lm, &[self.b_ppo, self.locs]),
+            TensorView::ScalarF32(3e-4),
+            TensorView::ScalarF32(0.2),
+            TensorView::ScalarF32(0.01),
+        ]
+    }
+
+    fn wm_train_rest(&self) -> Vec<TensorView<'_>> {
+        let (b, t) = (self.b_wm, self.t_len);
+        vec![
+            TensorView::f32(&self.zt, &[b, t, self.z]),
+            TensorView::i32(&self.at, &[b, t, 2]),
+            TensorView::f32(&self.zt_next, &[b, t, self.z]),
+            TensorView::f32(&self.rt, &[b, t]),
+            TensorView::f32(&self.xmt, &[b, t, self.x1]),
+            TensorView::f32(&self.dn, &[b, t]),
+            TensorView::f32(&self.vl, &[b, t]),
+            TensorView::ScalarF32(1e-3),
+        ]
+    }
+}
+
+fn bench<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    f(); // warm-up (also warms the workspace arena)
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64 * 1e3
+}
+
+/// Per-config result: program -> ms/call, plus a parity signature.
+struct ConfigRun {
+    ms: Vec<(&'static str, f64)>,
+    steps_per_s: f64,
+    signature: Vec<f32>,
+}
+
+fn run_config(name: &str) -> ConfigRun {
+    let backend =
+        HostBackend::with_config(HostConfig { kernels: kernel_cfg(name), ..HostConfig::default() });
+    let w = Workload::new(&backend, 0xBEEF);
+    let gnn = ParamStore::init(&backend, "gnn", 0).unwrap();
+    let wm = ParamStore::init(&backend, "wm", 1).unwrap();
+    let ctrl = ParamStore::init(&backend, "ctrl", 2).unwrap();
+    let mut ms: Vec<(&'static str, f64)> = Vec::new();
+    let mut signature: Vec<f32> = Vec::new();
+
+    // --- forward programs -------------------------------------------------
+    let enc = backend.exec_with_params("gnn_encode_b", &gnn, &w.gnn_rest()).unwrap();
+    signature.extend(&enc[0].data);
+    ms.push((
+        "gnn_encode_b",
+        bench(3, || {
+            let _ = backend.exec_with_params("gnn_encode_b", &gnn, &w.gnn_rest()).unwrap();
+        }),
+    ));
+    let pol_rest = [
+        TensorView::f32(&w.zb, &[w.b_dream, w.z]),
+        TensorView::f32(&w.hb, &[w.b_dream, w.r]),
+    ];
+    let pol = backend.exec_with_params("ctrl_policy_b", &ctrl, &pol_rest).unwrap();
+    for t in &pol {
+        signature.extend(&t.data);
+    }
+    ms.push((
+        "ctrl_policy_b",
+        bench(50, || {
+            let _ = backend.exec_with_params("ctrl_policy_b", &ctrl, &pol_rest).unwrap();
+        }),
+    ));
+    let wm_rest = [
+        TensorView::f32(&w.zd, &[w.b_dream, w.z]),
+        TensorView::i32(&w.ad, &[w.b_dream, 2]),
+        TensorView::f32(&w.hd, &[w.b_dream, w.r]),
+        TensorView::f32(&w.cd, &[w.b_dream, w.r]),
+    ];
+    let step = backend.exec_with_params("wm_step_b", &wm, &wm_rest).unwrap();
+    for t in &step {
+        signature.extend(&t.data);
+    }
+    ms.push((
+        "wm_step_b",
+        bench(100, || {
+            let _ = backend.exec_with_params("wm_step_b", &wm, &wm_rest).unwrap();
+        }),
+    ));
+
+    // --- train programs (fresh stores per timed section so the Adam
+    // trajectory is identical in every configuration) ---------------------
+    let mut g2 = ParamStore::init(&backend, "gnn", 7).unwrap();
+    ms.push((
+        "gnn_ae_train",
+        bench(3, || {
+            let _ = backend.train_step("gnn_ae_train", &mut g2, &w.gnn_rest()).unwrap();
+        }),
+    ));
+    signature.extend(&g2.theta);
+    let mut c2 = ParamStore::init(&backend, "ctrl", 8).unwrap();
+    ms.push((
+        "ctrl_train",
+        bench(20, || {
+            let _ = backend.train_step("ctrl_train", &mut c2, &w.ctrl_train_rest()).unwrap();
+        }),
+    ));
+    signature.extend(&c2.theta);
+    let mut w2 = ParamStore::init(&backend, "wm", 9).unwrap();
+    ms.push((
+        "wm_train",
+        bench(10, || {
+            let _ = backend.train_step("wm_train", &mut w2, &w.wm_train_rest()).unwrap();
+        }),
+    ));
+    signature.extend(&w2.theta);
+
+    // --- end-to-end: one full train step = AE + WM + PPO ------------------
+    let mut ge = ParamStore::init(&backend, "gnn", 17).unwrap();
+    let mut we = ParamStore::init(&backend, "wm", 18).unwrap();
+    let mut ce = ParamStore::init(&backend, "ctrl", 19).unwrap();
+    let per_step = bench(3, || {
+        let _ = backend.train_step("gnn_ae_train", &mut ge, &w.gnn_rest()).unwrap();
+        let _ = backend.train_step("wm_train", &mut we, &w.wm_train_rest()).unwrap();
+        let _ = backend.train_step("ctrl_train", &mut ce, &w.ctrl_train_rest()).unwrap();
+    });
+    ConfigRun { ms, steps_per_s: 1e3 / per_step, signature }
+}
+
+fn main() {
+    let runs: Vec<ConfigRun> = CONFIG_NAMES.iter().map(|n| run_config(n)).collect();
+    let parity = runs.iter().all(|r| r.signature == runs[0].signature);
+
+    println!(
+        "{:<15} {:>12} {:>12} {:>12} {:>12} {:>9} {:>7}",
+        "program", "seed ms", "blocked t1", "blocked t4", "blocked t8", "t8 spdup", "parity"
+    );
+    let mut json_rows = Vec::new();
+    for (pi, &(prog, _)) in runs[0].ms.iter().enumerate() {
+        let col = |ci: usize| runs[ci].ms[pi].1;
+        let spdup = col(0) / col(3).max(1e-9);
+        println!(
+            "{:<15} {:>12.3} {:>12.3} {:>12.3} {:>12.3} {:>8.2}x {:>7}",
+            prog,
+            col(0),
+            col(1),
+            col(2),
+            col(3),
+            spdup,
+            if parity { "ok" } else { "DIVERGED" },
+        );
+        json_rows.push(format!(
+            concat!(
+                "    {{\"program\": \"{}\", \"seed_scalar_ms\": {:.4}, \"blocked_t1_ms\": {:.4}, ",
+                "\"blocked_t4_ms\": {:.4}, \"blocked_t8_ms\": {:.4}, \"speedup_t8\": {:.3}}}"
+            ),
+            prog,
+            col(0),
+            col(1),
+            col(2),
+            col(3),
+            spdup,
+        ));
+    }
+    println!();
+    for (ci, name) in CONFIG_NAMES.iter().enumerate() {
+        println!("end-to-end train steps/sec [{name:>12}]: {:.2}", runs[ci].steps_per_s);
+    }
+    println!("output parity across configurations: {}", if parity { "ok" } else { "DIVERGED" });
+
+    // `cargo bench` runs from the package root (rust/); the results file
+    // lives beside CHANGES.md at the repository root.
+    let out = if std::path::Path::new("../CHANGES.md").exists() {
+        "../BENCH_train.json"
+    } else {
+        "BENCH_train.json"
+    };
+    let steps: Vec<String> = CONFIG_NAMES
+        .iter()
+        .zip(&runs)
+        .map(|(n, r)| format!("\"{}\": {:.3}", n, r.steps_per_s))
+        .collect();
+    let json = format!(
+        concat!(
+            "{{\n  \"bench\": \"fig_train_throughput\",\n  \"placeholder\": false,\n",
+            "  \"parity\": {},\n  \"rows\": [\n{}\n  ],\n",
+            "  \"end_to_end_train_steps_per_s\": {{{}}}\n}}\n"
+        ),
+        parity,
+        json_rows.join(",\n"),
+        steps.join(", ")
+    );
+    match std::fs::write(out, &json) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

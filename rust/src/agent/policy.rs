@@ -111,12 +111,132 @@ impl<'b> PolicyNet<'b> {
         })
     }
 
-    /// Run the policy program and sample per-row actions.
+    /// Run the `ctrl_policy_*` forward for `b` rows and return the flat
+    /// `(xlogits, llogits, values)` buffers.
+    ///
+    /// Any width is accepted: `b == 1` and `b == B_DREAM` map directly to
+    /// the exported programs; every other width (an EnvPool of alive
+    /// evaluation rows, an odd last collection batch) is chunked into
+    /// `B_DREAM`-wide program calls — the final chunk padded by repeating
+    /// its first row — and dispatched as one
+    /// [`exec_with_params_batch`](crate::runtime::Backend::exec_with_params_batch),
+    /// so parameter binding and manifest lookup are amortised across the
+    /// whole observation batch. Rows are computed independently by every
+    /// backend program, so padded rows cannot perturb real ones and the
+    /// per-row outputs are bit-identical to `b` separate
+    /// `ctrl_policy_1` calls.
+    pub fn forward_rows(
+        &self,
+        ctrl: &ParamStore,
+        z: &[f32],
+        h: &[f32],
+        b: usize,
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let dims = &self.dims;
+        if b == 1 || b == self.batch_b {
+            let program = if b == 1 { "ctrl_policy_1" } else { "ctrl_policy_b" };
+            let out = self.backend.exec_with_params(
+                program,
+                ctrl,
+                &[TensorView::f32(z, &[b, dims.zdim]), TensorView::f32(h, &[b, dims.rdim])],
+            )?;
+            let mut it = out.into_iter().map(|t| t.data);
+            return Ok((it.next().unwrap(), it.next().unwrap(), it.next().unwrap()));
+        }
+        // Chunk + pad to the exported B_DREAM width.
+        let bb = self.batch_b;
+        let n_chunks = b.div_ceil(bb);
+        let mut bufs: Vec<(Vec<f32>, Vec<f32>)> = Vec::with_capacity(n_chunks);
+        for chunk in 0..n_chunks {
+            let lo = chunk * bb;
+            let hi = (lo + bb).min(b);
+            let mut zc = Vec::with_capacity(bb * dims.zdim);
+            let mut hc = Vec::with_capacity(bb * dims.rdim);
+            for row in lo..hi {
+                zc.extend_from_slice(&z[row * dims.zdim..(row + 1) * dims.zdim]);
+                hc.extend_from_slice(&h[row * dims.rdim..(row + 1) * dims.rdim]);
+            }
+            for _ in hi..lo + bb {
+                zc.extend_from_slice(&z[lo * dims.zdim..(lo + 1) * dims.zdim]);
+                hc.extend_from_slice(&h[lo * dims.rdim..(lo + 1) * dims.rdim]);
+            }
+            bufs.push((zc, hc));
+        }
+        let rests: Vec<Vec<TensorView>> = bufs
+            .iter()
+            .map(|(zc, hc)| {
+                vec![
+                    TensorView::f32(zc, &[bb, dims.zdim]),
+                    TensorView::f32(hc, &[bb, dims.rdim]),
+                ]
+            })
+            .collect();
+        let outs = self.backend.exec_with_params_batch("ctrl_policy_b", ctrl, &rests)?;
+        let mut xlogits = Vec::with_capacity(b * dims.x1);
+        let mut llogits = Vec::with_capacity(b * dims.x1 * dims.max_locs);
+        let mut values = Vec::with_capacity(b);
+        for (chunk, out) in outs.into_iter().enumerate() {
+            let real = (b - chunk * bb).min(bb);
+            xlogits.extend_from_slice(&out[0].data[..real * dims.x1]);
+            llogits.extend_from_slice(&out[1].data[..real * dims.x1 * dims.max_locs]);
+            values.extend_from_slice(&out[2].data[..real]);
+        }
+        Ok((xlogits, llogits, values))
+    }
+
+    /// Sample one row's `(xfer, location)` action from the flat forward
+    /// buffers (the shared core of [`act_batch`](Self::act_batch) and
+    /// [`act_rows`](Self::act_rows)).
+    #[allow(clippy::too_many_arguments)]
+    fn sample_row(
+        &self,
+        row: usize,
+        xlogits: &[f32],
+        llogits: &[f32],
+        values: &[f32],
+        xmask: &[f32],
+        loc_mask: &impl Fn(usize, usize) -> Vec<bool>,
+        rng: &mut Rng,
+        greedy: bool,
+    ) -> ActOut {
+        let dims = &self.dims;
+        let noop = self.space.noop_slot();
+        let xl = &xlogits[row * dims.x1..(row + 1) * dims.x1];
+        // Force the NO-OP slot valid: an all-masked row (possible when
+        // the dream env's mask head predicts nothing valid) must
+        // degrade to "terminate" with a finite logp, not an arbitrary
+        // uniform action at logp = -inf.
+        let xm: Vec<bool> = xmask[row * dims.x1..(row + 1) * dims.x1]
+            .iter()
+            .enumerate()
+            .map(|(i, &m)| i == noop || m >= 0.5)
+            .collect();
+        let x_lsm = masked_log_softmax(xl, &xm);
+        let x = if greedy { argmax_masked(xl, &xm) } else { rng.sample_logits_masked(xl, &xm) };
+        let mut logp = x_lsm[x];
+
+        let action = if x == noop {
+            Action::new(x, 0)
+        } else {
+            let lm = loc_mask(row, x);
+            let base = (row * dims.x1 + x) * dims.max_locs;
+            let ll = &llogits[base..base + dims.max_locs];
+            let l_lsm = masked_log_softmax(ll, &lm);
+            let l =
+                if greedy { argmax_masked(ll, &lm) } else { rng.sample_logits_masked(ll, &lm) };
+            logp += l_lsm[l];
+            Action::new(x, l)
+        };
+        ActOut { action, logp, value: values[row] }
+    }
+
+    /// Run the policy program and sample per-row actions from one RNG
+    /// stream (rows consume it in ascending order).
     ///
     /// `obs.xmask`: `b * x1` validity (>= 0.5 is valid); the NO-OP slot is
     /// forced valid regardless, exactly as the dream env does.
     /// `loc_mask(row, xfer)` gives the location mask for that row's chosen
-    /// xfer.
+    /// xfer. Any batch width is accepted (see [`forward_rows`](Self::forward_rows)).
     pub fn act_batch(
         &self,
         ctrl: &ParamStore,
@@ -133,57 +253,42 @@ impl<'b> PolicyNet<'b> {
                 && obs.xmask.len() == b * dims.x1,
             "act_batch: bad obs sizes"
         );
-        let program = if b == 1 {
-            "ctrl_policy_1"
-        } else if b == self.batch_b {
-            "ctrl_policy_b"
-        } else {
-            anyhow::bail!("act_batch: batch {b} matches neither 1 nor B_DREAM {}", self.batch_b)
-        };
-        let out = self.backend.exec_with_params(
-            program,
-            ctrl,
-            &[
-                TensorView::f32(obs.z, &[b, dims.zdim]),
-                TensorView::f32(obs.h, &[b, dims.rdim]),
-            ],
-        )?;
-        let xlogits = &out[0].data;
-        let llogits = &out[1].data;
-        let values = &out[2].data;
+        let (xlogits, llogits, values) = self.forward_rows(ctrl, obs.z, obs.h, b)?;
+        Ok((0..b)
+            .map(|row| {
+                self.sample_row(row, &xlogits, &llogits, &values, obs.xmask, &loc_mask, rng, greedy)
+            })
+            .collect())
+    }
 
-        let noop = self.space.noop_slot();
-        let mut results = Vec::with_capacity(b);
-        for row in 0..b {
-            let xl = &xlogits[row * dims.x1..(row + 1) * dims.x1];
-            // Force the NO-OP slot valid: an all-masked row (possible when
-            // the dream env's mask head predicts nothing valid) must
-            // degrade to "terminate" with a finite logp, not an arbitrary
-            // uniform action at logp = -inf.
-            let xm: Vec<bool> = obs.xmask[row * dims.x1..(row + 1) * dims.x1]
-                .iter()
-                .enumerate()
-                .map(|(i, &m)| i == noop || m >= 0.5)
-                .collect();
-            let x_lsm = masked_log_softmax(xl, &xm);
-            let x = if greedy { argmax_masked(xl, &xm) } else { rng.sample_logits_masked(xl, &xm) };
-            let mut logp = x_lsm[x];
-
-            let action = if x == noop {
-                Action::new(x, 0)
-            } else {
-                let lm = loc_mask(row, x);
-                let base = (row * dims.x1 + x) * dims.max_locs;
-                let ll = &llogits[base..base + dims.max_locs];
-                let l_lsm = masked_log_softmax(ll, &lm);
-                let l =
-                    if greedy { argmax_masked(ll, &lm) } else { rng.sample_logits_masked(ll, &lm) };
-                logp += l_lsm[l];
-                Action::new(x, l)
-            };
-            results.push(ActOut { action, logp, value: values[row] });
-        }
-        Ok(results)
+    /// [`act_batch`](Self::act_batch) with one independent RNG stream per
+    /// row — the EnvPool evaluation path, where row `i`'s sampling must
+    /// not depend on which other rows are still alive. One batched
+    /// forward, per-row streams.
+    pub fn act_rows(
+        &self,
+        ctrl: &ParamStore,
+        obs: &ObsBatch,
+        loc_mask: impl Fn(usize, usize) -> Vec<bool>,
+        rngs: &mut [Rng],
+        greedy: bool,
+    ) -> anyhow::Result<Vec<ActOut>> {
+        let dims = &self.dims;
+        let b = rngs.len();
+        anyhow::ensure!(
+            obs.z.len() == b * dims.zdim
+                && obs.h.len() == b * dims.rdim
+                && obs.xmask.len() == b * dims.x1,
+            "act_rows: bad obs sizes"
+        );
+        let (xlogits, llogits, values) = self.forward_rows(ctrl, obs.z, obs.h, b)?;
+        Ok(rngs
+            .iter_mut()
+            .enumerate()
+            .map(|(row, rng)| {
+                self.sample_row(row, &xlogits, &llogits, &values, obs.xmask, &loc_mask, rng, greedy)
+            })
+            .collect())
     }
 }
 
@@ -230,6 +335,7 @@ mod tests {
             seq_len: 2,
             b_ppo: 4,
             b_enc: 2,
+            kernels: crate::runtime::KernelCfg::default(),
         });
         let policy = PolicyNet::new(&backend).unwrap();
         let ctrl = ParamStore::init(&backend, "ctrl", 0).unwrap();

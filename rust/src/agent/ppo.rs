@@ -156,7 +156,9 @@ impl PpoBuffer {
     }
 }
 
-/// One PPO update: `cfg.epochs` gradient steps on resampled batches.
+/// One PPO update: `cfg.epochs` gradient steps on resampled batches,
+/// driven through [`Backend::train_step`] (the host backend updates the
+/// store's Adam state in place — no parameter-vector copies per epoch).
 pub fn ppo_update(
     backend: &dyn Backend,
     ctrl: &mut ParamStore,
@@ -169,19 +171,17 @@ pub fn ppo_update(
     let mut stats = PpoStats::default();
     for _ in 0..cfg.epochs {
         let batch = buffer.batch(dims, b_ppo, rng)?;
-        let mut args = ctrl.train_args();
-        args.extend(batch.views());
-        args.push(TensorView::ScalarF32(cfg.lr));
-        args.push(TensorView::ScalarF32(cfg.clip));
-        args.push(TensorView::ScalarF32(cfg.ent_coef));
-        let out = backend.exec("ctrl_train", &args)?;
-        drop(args);
-        ctrl.absorb(&out)?;
+        let mut rest = batch.views();
+        rest.push(TensorView::ScalarF32(cfg.lr));
+        rest.push(TensorView::ScalarF32(cfg.clip));
+        rest.push(TensorView::ScalarF32(cfg.ent_coef));
+        let out = backend.train_step("ctrl_train", ctrl, &rest)?;
+        drop(rest);
         stats = PpoStats {
-            pi_loss: out[4].data[0],
-            v_loss: out[5].data[0],
-            entropy: out[6].data[0],
-            approx_kl: out[7].data[0],
+            pi_loss: out[0].data[0],
+            v_loss: out[1].data[0],
+            entropy: out[2].data[0],
+            approx_kl: out[3].data[0],
         };
     }
     Ok(stats)

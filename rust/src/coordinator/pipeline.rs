@@ -119,13 +119,12 @@ impl<'e> Pipeline<'e> {
             let batch: Vec<&crate::agent::CompactState> =
                 (0..self.b_enc).map(|_| pool[rng.below(pool.len())]).collect();
             let state_batch = self.batch_states(&batch);
-            let mut args = gnn.train_args();
-            args.extend(state_batch.views());
-            args.push(TensorView::ScalarF32(lr));
-            let out = self.backend.exec("gnn_ae_train", &args)?;
-            drop(args);
-            gnn.absorb(&out)?;
-            losses.push(out[4].data[0]);
+            let mut rest: Vec<TensorView> = state_batch.views().to_vec();
+            rest.push(TensorView::ScalarF32(lr));
+            // In-place Adam absorb on the host backend (no theta copies).
+            let out = self.backend.train_step("gnn_ae_train", gnn, &rest)?;
+            drop(rest);
+            losses.push(out[0].data[0]);
         }
         Ok(losses)
     }
@@ -183,6 +182,69 @@ impl<'e> Pipeline<'e> {
             ],
         )?;
         Ok(out[0].data.clone())
+    }
+
+    /// Encode several live graphs in one batched pass: full `B_ENC`-wide
+    /// groups go through `gnn_encode_b` and any remainder rows go through
+    /// `gnn_encode_1` — never padded, so a pass with few alive rows costs
+    /// exactly the per-row path it replaced (each GNN forward is O(n²F));
+    /// each program family is dispatched as a single
+    /// [`exec_with_params_batch`](Backend::exec_with_params_batch). Rows
+    /// encode independently, so each returned latent is bit-identical to
+    /// a lone `encode_state` call on that graph.
+    pub fn encode_graphs(
+        &self,
+        gnn: &ParamStore,
+        graphs: &[&Graph],
+    ) -> anyhow::Result<Vec<Vec<f32>>> {
+        if graphs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let (n, f, be) = (self.n, self.f, self.b_enc);
+        let zd = self.dims.zdim;
+        let full = graphs.len() / be * be;
+        let pack = |chunk: &[&Graph]| -> StateBatch {
+            let b = chunk.len();
+            let mut batch = StateBatch {
+                b,
+                n,
+                f,
+                feats: vec![0.0f32; b * n * f],
+                adj: vec![0.0f32; b * n * n],
+                mask: vec![0.0f32; b * n],
+            };
+            for (slot, &g) in chunk.iter().enumerate() {
+                let e = self.encoder.encode(g);
+                batch.feats[slot * n * f..(slot + 1) * n * f].copy_from_slice(&e.feats);
+                batch.adj[slot * n * n..(slot + 1) * n * n].copy_from_slice(&e.adj);
+                batch.mask[slot * n..(slot + 1) * n].copy_from_slice(&e.mask);
+            }
+            batch
+        };
+        let mut zs = Vec::with_capacity(graphs.len());
+        if full > 0 {
+            let batches: Vec<StateBatch> =
+                graphs[..full].chunks_exact(be).map(pack).collect();
+            let rests: Vec<Vec<TensorView>> =
+                batches.iter().map(|b| b.views().to_vec()).collect();
+            let outs = self.backend.exec_with_params_batch("gnn_encode_b", gnn, &rests)?;
+            for out in outs {
+                for slot in 0..be {
+                    zs.push(out[0].data[slot * zd..(slot + 1) * zd].to_vec());
+                }
+            }
+        }
+        if full < graphs.len() {
+            let singles: Vec<StateBatch> =
+                graphs[full..].iter().map(|&g| pack(&[g])).collect();
+            let rests: Vec<Vec<TensorView>> =
+                singles.iter().map(|b| b.views().to_vec()).collect();
+            let outs = self.backend.exec_with_params_batch("gnn_encode_1", gnn, &rests)?;
+            for out in outs {
+                zs.push(out[0].data[..zd].to_vec());
+            }
+        }
+        Ok(zs)
     }
 
     // ------------------------------------------------------------------
@@ -374,10 +436,15 @@ impl<'e> Pipeline<'e> {
     /// [`Pipeline::eval_real`] over a whole [`EnvPool`]: B independent
     /// evaluation episodes advance together, one batched `step_where` per
     /// pass. Policy/world-model program calls stay on the backend thread
-    /// (the PJRT engine is not shared across threads); the environment
-    /// work — matching and costing — fans out across the pool's workers.
-    /// Each env gets its own forked RNG, so results don't depend on when
-    /// other rows terminate, nor on the pool's thread count.
+    /// (the PJRT engine is not shared across threads) but are *batched*
+    /// across the alive rows — one [`Pipeline::encode_graphs`] pass, one
+    /// [`PolicyNet::act_rows`] forward and one batched
+    /// [`WorldModel::step`] per pool pass instead of per-row program
+    /// calls; the environment work — matching and costing — fans out
+    /// across the pool's workers. Each env keeps its own forked RNG
+    /// stream, so per-row results are bit-identical to the per-row path
+    /// and don't depend on when other rows terminate, nor on the pool's
+    /// thread count.
     pub fn eval_real_pool(
         &self,
         gnn: &ParamStore,
@@ -399,25 +466,36 @@ impl<'e> Pipeline<'e> {
         let mut step_secs = vec![0.0f64; b];
         while done.iter().any(|d| !d) {
             let t0 = Instant::now();
-            // Per-row policy on the backend thread.
+            let alive: Vec<usize> = (0..b).filter(|&i| !done[i]).collect();
+            let ab = alive.len();
+            // One batched encode over the alive rows.
+            let graphs: Vec<&Graph> = alive.iter().map(|&i| pool.state(i).graph()).collect();
+            let z_alive = self.encode_graphs(gnn, &graphs)?;
+            // Flat alive-row observation batch for one policy forward.
+            let mut zflat = Vec::with_capacity(ab * self.dims.zdim);
+            let mut hflat = Vec::with_capacity(ab * self.dims.rdim);
+            let mut xmflat = Vec::with_capacity(ab * self.dims.x1);
+            for (ai, &i) in alive.iter().enumerate() {
+                zflat.extend_from_slice(&z_alive[ai]);
+                hflat.extend_from_slice(&h[i]);
+                xmflat.extend(pool.state(i).padded_xfer_mask(self.dims.x1));
+            }
+            // Per-row RNG streams advance exactly as on the per-row path:
+            // swap the alive streams out, sample, swap them back.
+            let mut alive_rngs: Vec<Rng> = alive.iter().map(|&i| rngs[i].clone()).collect();
+            let acts = self.policy.act_rows(
+                ctrl,
+                &ObsBatch { z: &zflat, h: &hflat, xmask: &xmflat },
+                |ai, x| pool.state(alive[ai]).location_mask(x),
+                &mut alive_rngs,
+                greedy,
+            )?;
+            for (ai, &i) in alive.iter().enumerate() {
+                std::mem::swap(&mut rngs[i], &mut alive_rngs[ai]);
+            }
             let mut slot_actions: Vec<Option<Action>> = vec![None; b];
-            let mut zs: Vec<Vec<f32>> = vec![Vec::new(); b];
-            for i in 0..b {
-                if done[i] {
-                    continue;
-                }
-                let state = pool.state(i);
-                let z = self.encode_state(gnn, state.graph())?;
-                let xmask = state.padded_xfer_mask(self.dims.x1);
-                let acts = self.policy.act_batch(
-                    ctrl,
-                    &ObsBatch { z: &z, h: &h[i], xmask: &xmask },
-                    |_, x| state.location_mask(x),
-                    &mut rngs[i],
-                    greedy,
-                )?;
-                slot_actions[i] = Some(acts[0].action);
-                zs[i] = z;
+            for (ai, &i) in alive.iter().enumerate() {
+                slot_actions[i] = Some(acts[ai].action);
             }
             // One batched environment pass.
             let env_actions: Vec<Option<(usize, usize)>> =
@@ -425,23 +503,40 @@ impl<'e> Pipeline<'e> {
             let results = pool.step_where(&env_actions);
             // Advance the recurrent world-model context for stepped rows
             // *inside* the timed pass, so mean_step_s stays comparable to
-            // the single-env eval_real (which also times the wm step).
+            // the single-env eval_real (which also times the wm step) —
+            // one batched wm step over the stepped rows.
             if let Some(wm_store) = wm {
-                for i in 0..b {
-                    if results[i].is_none() {
-                        continue;
+                // (alive index, env index) pairs — no rescan of `alive`.
+                let stepped: Vec<(usize, usize)> = alive
+                    .iter()
+                    .copied()
+                    .enumerate()
+                    .filter(|&(_, i)| results[i].is_some())
+                    .collect();
+                if !stepped.is_empty() {
+                    let mut zw = Vec::with_capacity(stepped.len() * self.dims.zdim);
+                    let mut hw = Vec::with_capacity(stepped.len() * self.dims.rdim);
+                    let mut cw = Vec::with_capacity(stepped.len() * self.dims.rdim);
+                    let mut actions = Vec::with_capacity(stepped.len());
+                    for &(ai, i) in &stepped {
+                        zw.extend_from_slice(&z_alive[ai]);
+                        hw.extend_from_slice(&h[i]);
+                        cw.extend_from_slice(&c[i]);
+                        actions.push(slot_actions[i].expect("stepped row had an action"));
                     }
-                    let action = slot_actions[i].expect("stepped row had an action");
-                    let out = self.world.step(wm_store, &zs[i], &[action], &h[i], &c[i])?;
-                    h[i] = out.h1;
-                    c[i] = out.c1;
+                    let out = self.world.step(wm_store, &zw, &actions, &hw, &cw)?;
+                    for (si, &(_, i)) in stepped.iter().enumerate() {
+                        let r = self.dims.rdim;
+                        h[i].copy_from_slice(&out.h1[si * r..(si + 1) * r]);
+                        c[i].copy_from_slice(&out.c1[si * r..(si + 1) * r]);
+                    }
                 }
             }
-            let alive = results.iter().filter(|r| r.is_some()).count().max(1);
+            let n_stepped = results.iter().filter(|r| r.is_some()).count().max(1);
             let pass_s = t0.elapsed().as_secs_f64();
             for i in 0..b {
                 let Some(res) = &results[i] else { continue };
-                step_secs[i] += pass_s / alive as f64;
+                step_secs[i] += pass_s / n_stepped as f64;
                 let impr = pool.state(i).improvement_pct();
                 if impr > best[i] {
                     best[i] = impr;

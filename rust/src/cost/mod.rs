@@ -360,13 +360,11 @@ impl CostModel {
         let mut weight_bytes = 0f64;
         let mut act_bytes_max = 0f64;
         let is_const = self.const_set(g);
-        let cons = g.consumers();
+        let cons = g.consumers_vec();
         // A constant node is *resident* iff some non-constant op reads it
         // (it is the materialised, precomputed parameter).
         let resident = |id: crate::graph::NodeId| -> bool {
-            cons.get(&id)
-                .map(|v| v.iter().any(|(c, _)| !is_const[c.index()]))
-                .unwrap_or(false)
+            cons[id.index()].iter().any(|(c, _)| !is_const[c.index()])
         };
         for id in g.live_ids() {
             let node = g.node(id);
@@ -406,15 +404,14 @@ impl CostModel {
             Ok(o) => o,
             Err(_) => return 0.0,
         };
-        let consumers = g.consumers();
-        let mut remaining: HashMap<crate::graph::NodeId, usize> = HashMap::new();
-        for id in g.live_ids() {
-            remaining.insert(id, consumers.get(&id).map_or(0, |v| v.len()));
-        }
+        let consumers = g.consumers_vec();
+        let mut remaining: Vec<usize> = consumers.iter().map(|v| v.len()).collect();
         let is_const = self.const_set(g);
         let mut live = 0f64;
         let mut peak = 0f64;
-        let mut alive: HashMap<crate::graph::NodeId, f64> = HashMap::new();
+        // Dense arena-indexed frontier: alive[i] holds the resident bytes
+        // of node i (0.0 once its last consumer has fired).
+        let mut alive: Vec<f64> = vec![0.0; remaining.len()];
         for id in order {
             let node = g.node(id);
             if matches!(node.op, OpKind::Weight) || is_const[id.index()] {
@@ -422,16 +419,13 @@ impl CostModel {
             }
             let bytes: f64 = node.outs.iter().map(|t| t.bytes() as f64).sum();
             live += bytes;
-            alive.insert(id, bytes);
+            alive[id.index()] = bytes;
             peak = peak.max(live);
             for p in &node.inputs {
-                if let Some(r) = remaining.get_mut(&p.node) {
-                    *r = r.saturating_sub(1);
-                    if *r == 0 {
-                        if let Some(b) = alive.remove(&p.node) {
-                            live -= b;
-                        }
-                    }
+                let r = &mut remaining[p.node.index()];
+                *r = r.saturating_sub(1);
+                if *r == 0 {
+                    live -= std::mem::take(&mut alive[p.node.index()]);
                 }
             }
         }

@@ -53,9 +53,9 @@ impl StateEncoder {
         let row_of: HashMap<NodeId, usize> =
             ops.iter().enumerate().map(|(i, &id)| (id, i)).collect();
 
-        let depths = g.depths();
-        let max_depth = depths.values().copied().max().unwrap_or(1).max(1) as f32;
-        let consumers = g.consumers();
+        let depths = g.depths_vec();
+        let max_depth = depths.iter().copied().max().unwrap_or(1).max(1) as f32;
+        let consumers = g.consumers_vec();
         let outputs: std::collections::HashSet<NodeId> = g.output_ids().into_iter().collect();
 
         for (row, &id) in ops.iter().enumerate() {
@@ -75,10 +75,9 @@ impl StateEncoder {
             feats[base + k] = ((cost.flops + 1.0).ln() / 20.0) as f32;
             feats[base + k + 1] = ((cost.bytes + 1.0).ln() / 20.0) as f32;
             feats[base + k + 2] = (out_elems as f32 + 1.0).ln() / 15.0;
-            feats[base + k + 3] = depths.get(&id).copied().unwrap_or(0) as f32 / max_depth;
+            feats[base + k + 3] = depths[id.index()] as f32 / max_depth;
             feats[base + k + 4] = node.inputs.len() as f32 / 6.0;
-            feats[base + k + 5] =
-                consumers.get(&id).map_or(0, |v| v.len()) as f32 / 6.0;
+            feats[base + k + 5] = consumers[id.index()].len() as f32 / 6.0;
             feats[base + k + 6] = if outputs.contains(&id) { 1.0 } else { 0.0 };
             feats[base + k + 7] = cost.launches as f32;
             feats[base + k + 8] = cost.efficiency as f32;

@@ -119,6 +119,10 @@ impl Graph {
     }
 
     /// consumers[node] = list of (consumer id, consumer's input slot).
+    ///
+    /// HashMap form, kept for cold callers; the hot paths (matcher, state
+    /// encoder, costing, topo order) use the dense arena-indexed
+    /// [`Graph::consumers_vec`].
     pub fn consumers(&self) -> HashMap<NodeId, Vec<(NodeId, usize)>> {
         let mut map: HashMap<NodeId, Vec<(NodeId, usize)>> = HashMap::new();
         for id in self.live_ids() {
@@ -129,48 +133,67 @@ impl Graph {
         map
     }
 
+    /// Dense consumer lists indexed by arena slot (`NodeId::index`): entry
+    /// `i` lists `(consumer id, consumer's input slot)` for node `i`; dead
+    /// slots hold empty lists. Because live ids are visited in ascending
+    /// order and inputs in slot order, each list is already sorted by
+    /// `(consumer id, slot)` — the order [`sorted_consumers`] produces.
+    ///
+    /// [`sorted_consumers`]: crate::xfer::matcher::sorted_consumers
+    pub fn consumers_vec(&self) -> Vec<Vec<(NodeId, usize)>> {
+        let mut cons: Vec<Vec<(NodeId, usize)>> = vec![Vec::new(); self.nodes.len()];
+        for id in self.live_ids() {
+            for (slot, inp) in self.node(id).inputs.iter().enumerate() {
+                cons[inp.node.index()].push((id, slot));
+            }
+        }
+        cons
+    }
+
     /// Live nodes with no live consumers (excluding sources): graph outputs.
     pub fn output_ids(&self) -> Vec<NodeId> {
-        let cons = self.consumers();
+        let cons = self.consumers_vec();
         self.live_ids()
             .filter(|id| {
                 !matches!(self.node(*id).op, OpKind::Input | OpKind::Weight)
-                    && cons.get(id).map_or(true, |v| v.is_empty())
+                    && cons[id.index()].is_empty()
             })
             .collect()
     }
 
     /// Topological order of live nodes (sources first). Errors on cycles.
     pub fn topo_order(&self) -> anyhow::Result<Vec<NodeId>> {
-        let mut indeg: HashMap<NodeId, usize> = HashMap::new();
-        let cons = self.consumers();
+        // Dense arena-indexed working state (indeg < 0 marks dead slots);
+        // initial zero-indegree queue in ascending id order, then consumer
+        // discovery order — the same order the seed HashMap walk produced.
+        let cons = self.consumers_vec();
+        let mut indeg: Vec<isize> = vec![-1; self.nodes.len()];
+        let mut n_live = 0usize;
+        let mut queue: Vec<NodeId> = Vec::new();
         for id in self.live_ids() {
-            indeg.insert(id, self.node(id).inputs.len());
+            let d = self.node(id).inputs.len();
+            indeg[id.index()] = d as isize;
+            n_live += 1;
+            if d == 0 {
+                queue.push(id);
+            }
         }
-        let mut queue: Vec<NodeId> = indeg
-            .iter()
-            .filter(|(_, &d)| d == 0)
-            .map(|(&id, _)| id)
-            .collect();
-        queue.sort();
-        let mut order = Vec::with_capacity(indeg.len());
+        let mut order = Vec::with_capacity(n_live);
         let mut qi = 0;
         while qi < queue.len() {
             let id = queue[qi];
             qi += 1;
             order.push(id);
-            if let Some(cs) = cons.get(&id) {
-                // A consumer may reference `id` in several slots; decrement per edge.
-                for (c, _) in cs {
-                    let d = indeg.get_mut(c).unwrap();
-                    *d -= 1;
-                    if *d == 0 {
-                        queue.push(*c);
-                    }
+            // A consumer may reference `id` in several slots; decrement per edge.
+            for (c, _) in &cons[id.index()] {
+                let d = &mut indeg[c.index()];
+                *d -= 1;
+                if *d == 0 {
+                    queue.push(*c);
                 }
             }
         }
-        anyhow::ensure!(order.len() == self.n_live(), "cycle detected in graph");
+        anyhow::ensure!(order.len() == n_live, "cycle detected in graph");
         Ok(order)
     }
 
@@ -214,7 +237,27 @@ impl Graph {
 
     /// Rebuild a dense graph with dead slots dropped and ids renumbered in
     /// topological order. Returns the new graph and old->new id map.
+    ///
+    /// Fast path: a graph with no dead slots whose edges all point to
+    /// lower arena indices (true for every builder-produced or previously
+    /// compacted graph) is already a dense topological numbering, so the
+    /// result is a plain clone with the identity map and the topo sort is
+    /// skipped entirely. Note the fast path *keeps* the existing valid
+    /// numbering rather than re-deriving the Kahn order the slow path
+    /// produces — both are topological, but a forward-ordered graph that
+    /// interleaves sources with ops keeps its interleaved ids instead of
+    /// having sources renumbered first.
     pub fn compact(&self) -> anyhow::Result<(Graph, HashMap<NodeId, NodeId>)> {
+        let forward_ordered = self
+            .nodes
+            .iter()
+            .enumerate()
+            .all(|(i, n)| !n.dead && n.inputs.iter().all(|p| p.node.index() < i));
+        if forward_ordered {
+            let map: HashMap<NodeId, NodeId> =
+                (0..self.nodes.len() as u32).map(|i| (NodeId(i), NodeId(i))).collect();
+            return Ok((self.clone(), map));
+        }
         let order = self.topo_order()?;
         let mut map = HashMap::new();
         let mut g = Graph::new();
@@ -264,18 +307,28 @@ impl Graph {
     }
 
     /// Depth (longest path length from any source) per live node.
+    ///
+    /// HashMap form, kept for cold callers; hot paths use the dense
+    /// [`Graph::depths_vec`].
     pub fn depths(&self) -> HashMap<NodeId, usize> {
-        let mut depth = HashMap::new();
+        let dense = self.depths_vec();
+        self.live_ids().map(|id| (id, dense[id.index()])).collect()
+    }
+
+    /// Depth per arena slot (`NodeId::index`), 0 for dead slots. Dense
+    /// variant of [`Graph::depths`] for the encoder/matcher hot paths.
+    pub fn depths_vec(&self) -> Vec<usize> {
+        let mut depth = vec![0usize; self.nodes.len()];
         if let Ok(order) = self.topo_order() {
             for id in order {
                 let d = self
                     .node(id)
                     .inputs
                     .iter()
-                    .map(|p| depth.get(&p.node).copied().unwrap_or(0) + 1)
+                    .map(|p| depth[p.node.index()] + 1)
                     .max()
                     .unwrap_or(0);
-                depth.insert(id, d);
+                depth[id.index()] = d;
             }
         }
         depth
@@ -407,5 +460,49 @@ mod tests {
         assert_eq!(d[&NodeId(0)], 0);
         assert_eq!(d[&c], 1);
         assert_eq!(d[&r], 2);
+    }
+
+    #[test]
+    fn dense_helpers_agree_with_map_versions() {
+        let (mut g, c, _) = small();
+        let extra = g.add(OpKind::Tanh, &[PortRef::of(c)]).unwrap();
+        g.kill(extra); // a dead slot exercises the empty-list case
+        let cons_map = g.consumers();
+        let cons_vec = g.consumers_vec();
+        assert_eq!(cons_vec.len(), 5);
+        for id in g.live_ids() {
+            let want = cons_map.get(&id).cloned().unwrap_or_default();
+            assert_eq!(cons_vec[id.index()], want, "consumers differ at {id:?}");
+            // The dense lists come out pre-sorted by (consumer, slot).
+            assert!(cons_vec[id.index()].windows(2).all(|w| w[0] <= w[1]));
+        }
+        assert!(cons_vec[extra.index()].is_empty());
+        let d_map = g.depths();
+        let d_vec = g.depths_vec();
+        for id in g.live_ids() {
+            assert_eq!(d_map[&id], d_vec[id.index()], "depths differ at {id:?}");
+        }
+        assert_eq!(d_vec[extra.index()], 0);
+    }
+
+    #[test]
+    fn compact_short_circuits_dense_graphs_to_identity() {
+        // Builder graphs have no dead slots and forward-only edges, so
+        // compaction is a clone + identity map.
+        let (g, _, _) = small();
+        let (g2, map) = g.compact().unwrap();
+        assert_eq!(g2.n_live(), g.n_live());
+        for id in g.live_ids() {
+            assert_eq!(map[&id], id, "dense graph must map identically");
+            assert_eq!(g2.node(id).inputs, g.node(id).inputs);
+        }
+        g2.validate().unwrap();
+        // With a dead slot the full renumbering path still runs.
+        let mut g3 = g.clone();
+        g3.kill(NodeId(3));
+        g3.dce();
+        let (g4, map4) = g3.compact().unwrap();
+        assert!(g4.nodes.iter().all(|n| !n.dead));
+        assert!(map4.len() < g3.nodes.len());
     }
 }

@@ -24,7 +24,8 @@ use crate::interp::Tensor;
 
 use super::manifest::{ArtifactSpec, Dt, Manifest};
 
-/// Per-program execution accounting (calls, wall-clock, compile time).
+/// Per-program execution accounting (calls, wall-clock, compile time,
+/// scratch-arena traffic).
 #[derive(Debug, Default, Clone, Copy)]
 pub struct ExecStats {
     /// Number of times the program ran.
@@ -33,6 +34,12 @@ pub struct ExecStats {
     pub total_s: f64,
     /// Seconds spent compiling/loading the program (PJRT path).
     pub compile_s: f64,
+    /// Bytes of fresh scratch memory the program's calls allocated (host
+    /// path; zero in steady state once the workspace is warm).
+    pub alloc_bytes: u64,
+    /// Scratch-buffer checkouts served from the workspace free list
+    /// without allocating (host path).
+    pub scratch_reuse: u64,
 }
 
 /// A borrowed, typed view of one program argument. Array variants carry an
@@ -190,6 +197,19 @@ pub trait Backend {
     /// manifest spec; outputs arrive in the spec's declared order.
     fn exec(&self, program: &str, args: &[TensorView]) -> anyhow::Result<Vec<Tensor>>;
 
+    /// Execute the same program over several independent argument sets.
+    /// Semantically identical to calling [`Backend::exec`] per entry (and
+    /// that is the default implementation); backends override it to
+    /// amortise per-call overhead — the host backend does one manifest
+    /// lookup, one workspace checkout and one stats update per batch.
+    fn exec_batch(
+        &self,
+        program: &str,
+        calls: &[Vec<TensorView>],
+    ) -> anyhow::Result<Vec<Vec<Tensor>>> {
+        calls.iter().map(|args| self.exec(program, args)).collect()
+    }
+
     /// Execute with a parameter store's theta as the implicit leading
     /// argument. Backends may cache an uploaded copy keyed by
     /// `(family, version)` — this is the acting hot path.
@@ -199,6 +219,44 @@ pub trait Backend {
         params: &super::ParamStore,
         rest: &[TensorView],
     ) -> anyhow::Result<Vec<Tensor>>;
+
+    /// [`Backend::exec_batch`] with a parameter store bound once as the
+    /// leading argument of every call — the batched acting hot path
+    /// (EnvPool-width observation batches, PPO/WM minibatch sweeps).
+    fn exec_with_params_batch(
+        &self,
+        program: &str,
+        params: &super::ParamStore,
+        rests: &[Vec<TensorView>],
+    ) -> anyhow::Result<Vec<Vec<Tensor>>> {
+        rests.iter().map(|rest| self.exec_with_params(program, params, rest)).collect()
+    }
+
+    /// Run one `*_train` program against a parameter store: `(theta, m, v,
+    /// t)` are taken from the store, the updated values are absorbed back
+    /// (version bumped), and only the program's *remaining* outputs — the
+    /// loss/stat scalars after the four optimiser tensors — are returned,
+    /// in spec order.
+    ///
+    /// The default implementation routes through [`Backend::exec`] +
+    /// [`ParamStore::absorb`](super::ParamStore::absorb) (what every
+    /// trainer did by hand before this seam). The host backend overrides
+    /// it to update the store's vectors in place, skipping the five full
+    /// parameter-vector copies per step that the exec path's
+    /// value-semantics contract forces.
+    fn train_step(
+        &self,
+        program: &str,
+        params: &mut super::ParamStore,
+        rest: &[TensorView],
+    ) -> anyhow::Result<Vec<Tensor>> {
+        let mut args = params.train_args();
+        args.extend(rest.iter().cloned());
+        let out = self.exec(program, &args)?;
+        drop(args);
+        params.absorb(&out)?;
+        Ok(out.into_iter().skip(4).collect())
+    }
 
     /// Per-program execution statistics accumulated so far.
     fn stats(&self) -> HashMap<String, ExecStats>;

@@ -7,8 +7,13 @@
 //! (the per-xfer `[X1, L]` block tiles one `[L]` row): a per-xfer offset
 //! would be softmax-shift-invariant and receive zero gradient, so the
 //! artifact contract's shape is kept without dead parameters.
+//!
+//! Dense math runs through [`super::kernels`] (fused linear+tanh trunk,
+//! blocked/threaded GEMMs, bit-identical to the scalar reference) and all
+//! scratch comes from the caller's [`Workspace`].
 
-use super::nn::{acc_rows, acc_xt_dy, adam_step, dy_wt, linear, tanh_inplace, ParamLayout};
+use super::kernels::{acc_xt_dy, dy_wt_acc, dy_wt_into, linear_into, Act, KernelCfg, Workspace};
+use super::nn::{acc_rows, adam_step, ParamLayout};
 
 pub struct CtrlNet {
     pub zdim: usize,
@@ -32,10 +37,16 @@ pub struct PpoStepStats {
     pub approx_kl: f32,
 }
 
-/// Forward activations shared by acting and training.
+/// Forward activations shared by acting and training (workspace-owned).
 struct Trunk {
     u: Vec<f32>,  // [b, Z+R]
     tt: Vec<f32>, // [b, C]
+}
+
+impl Trunk {
+    fn recycle(self, ws: &mut Workspace) {
+        ws.put_all([self.u, self.tt]);
+    }
 }
 
 impl CtrlNet {
@@ -61,30 +72,104 @@ impl CtrlNet {
         self.layout.init(0x6374726C ^ (seed as u64).wrapping_mul(0x9E3779B97F4A7C15), |_| 0.0)
     }
 
-    fn trunk(&self, theta: &[f32], z: &[f32], h: &[f32], b: usize) -> Trunk {
+    fn trunk(
+        &self,
+        ws: &mut Workspace,
+        kc: &KernelCfg,
+        theta: &[f32],
+        z: &[f32],
+        h: &[f32],
+        b: usize,
+    ) -> Trunk {
         let (zd, rd, c) = (self.zdim, self.rdim, self.hidden);
         let u_dim = zd + rd;
-        let mut u = vec![0.0f32; b * u_dim];
+        let mut u = ws.take(b * u_dim);
         for r in 0..b {
             u[r * u_dim..r * u_dim + zd].copy_from_slice(&z[r * zd..(r + 1) * zd]);
             u[r * u_dim + zd..(r + 1) * u_dim].copy_from_slice(&h[r * rd..(r + 1) * rd]);
         }
-        let mut tt =
-            linear(&u, self.layout.view(theta, "wt"), self.layout.view(theta, "bt"), b, u_dim, c);
-        tanh_inplace(&mut tt);
+        let mut tt = ws.take(b * c);
+        linear_into(
+            kc,
+            &u,
+            self.layout.view(theta, "wt"),
+            Some(self.layout.view(theta, "bt")),
+            b,
+            u_dim,
+            c,
+            Act::Tanh,
+            &mut tt,
+        );
         Trunk { u, tt }
     }
 
-    /// The `ctrl_policy_*` forward.
-    pub fn policy(&self, theta: &[f32], z: &[f32], h: &[f32], b: usize) -> PolicyOut {
+    /// Run one affine head off the trunk into a workspace buffer.
+    fn head(
+        &self,
+        ws: &mut Workspace,
+        kc: &KernelCfg,
+        theta: &[f32],
+        tt: &[f32],
+        w: &'static str,
+        bias: &'static str,
+        b: usize,
+        n: usize,
+    ) -> Vec<f32> {
+        let mut out = ws.take(b * n);
+        linear_into(
+            kc,
+            tt,
+            self.layout.view(theta, w),
+            Some(self.layout.view(theta, bias)),
+            b,
+            self.hidden,
+            n,
+            Act::None,
+            &mut out,
+        );
+        out
+    }
+
+    /// The `ctrl_policy_*` forward. Output vectors are plain allocations
+    /// (they leave as program outputs); every intermediate is
+    /// workspace-scratch, so the steady-state acting path allocates only
+    /// its outputs.
+    pub fn policy(
+        &self,
+        ws: &mut Workspace,
+        kc: &KernelCfg,
+        theta: &[f32],
+        z: &[f32],
+        h: &[f32],
+        b: usize,
+    ) -> PolicyOut {
         let (c, x1, locs) = (self.hidden, self.x1, self.locs);
-        let t = self.trunk(theta, z, h, b);
-        let xlogits =
-            linear(&t.tt, self.layout.view(theta, "wx"), self.layout.view(theta, "bx"), b, c, x1);
-        let la =
-            linear(&t.tt, self.layout.view(theta, "wl"), self.layout.view(theta, "bl"), b, c, locs);
-        let vals =
-            linear(&t.tt, self.layout.view(theta, "wv"), self.layout.view(theta, "bv"), b, c, 1);
+        let t = self.trunk(ws, kc, theta, z, h, b);
+        let mut xlogits = vec![0.0f32; b * x1];
+        linear_into(
+            kc,
+            &t.tt,
+            self.layout.view(theta, "wx"),
+            Some(self.layout.view(theta, "bx")),
+            b,
+            c,
+            x1,
+            Act::None,
+            &mut xlogits,
+        );
+        let la = self.head(ws, kc, theta, &t.tt, "wl", "bl", b, locs);
+        let mut values = vec![0.0f32; b];
+        linear_into(
+            kc,
+            &t.tt,
+            self.layout.view(theta, "wv"),
+            Some(self.layout.view(theta, "bv")),
+            b,
+            c,
+            1,
+            Act::None,
+            &mut values,
+        );
         let mut llogits = vec![0.0f32; b * x1 * locs];
         for r in 0..b {
             let row = &la[r * locs..(r + 1) * locs];
@@ -92,13 +177,17 @@ impl CtrlNet {
                 llogits[(r * x1 + x) * locs..(r * x1 + x + 1) * locs].copy_from_slice(row);
             }
         }
-        PolicyOut { xlogits, llogits, values: vals }
+        ws.put(la);
+        t.recycle(ws);
+        PolicyOut { xlogits, llogits, values }
     }
 
     /// One PPO Adam step (`ctrl_train`).
     #[allow(clippy::too_many_arguments)]
     pub fn train_step(
         &self,
+        ws: &mut Workspace,
+        kc: &KernelCfg,
         theta: &mut [f32],
         m: &mut [f32],
         v: &mut [f32],
@@ -121,39 +210,37 @@ impl CtrlNet {
         let noop = x1 - 1;
         let binv = 1.0 / b.max(1) as f32;
 
-        let trunk = self.trunk(theta, z, h, b);
-        let tt = &trunk.tt;
-        let xlogits =
-            linear(tt, self.layout.view(theta, "wx"), self.layout.view(theta, "bx"), b, c, x1);
-        let la =
-            linear(tt, self.layout.view(theta, "wl"), self.layout.view(theta, "bl"), b, c, locs);
-        let vals =
-            linear(tt, self.layout.view(theta, "wv"), self.layout.view(theta, "bv"), b, c, 1);
+        let trunk = self.trunk(ws, kc, theta, z, h, b);
+        let xlogits = self.head(ws, kc, theta, &trunk.tt, "wx", "bx", b, x1);
+        let la = self.head(ws, kc, theta, &trunk.tt, "wl", "bl", b, locs);
+        let vals = self.head(ws, kc, theta, &trunk.tt, "wv", "bv", b, 1);
 
         // Advantage normalisation (batch-level, standard PPO practice).
         let a_mean = adv.iter().sum::<f32>() * binv;
         let a_var = adv.iter().map(|a| (a - a_mean) * (a - a_mean)).sum::<f32>() * binv;
         let a_std = a_var.sqrt().max(1e-6);
 
-        let mut dxlogits = vec![0.0f32; b * x1];
-        let mut dla = vec![0.0f32; b * locs];
-        let mut dvals = vec![0.0f32; b];
+        let mut dxlogits = ws.take(b * x1);
+        let mut dla = ws.take(b * locs);
+        let mut dvals = ws.take(b);
+        let mut x_lsm = ws.take(x1);
+        let mut px = ws.take(x1);
+        let mut l_lsm = ws.take(locs);
+        let mut pl = ws.take(locs);
         let (mut pi_loss, mut v_loss, mut entropy, mut kl) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
 
         for r in 0..b {
             let advn = (adv[r] - a_mean) / a_std;
-            let xm: Vec<bool> = (0..x1)
-                .map(|j| j == noop || xmask[r * x1 + j] >= 0.5) // NO-OP always valid
-                .collect();
             let xrow = &xlogits[r * x1..(r + 1) * x1];
-            let (x_lsm, px) = masked_lsm(xrow, &xm);
+            let xm = |j: usize| j == noop || xmask[r * x1 + j] >= 0.5; // NO-OP always valid
+            masked_lsm_into(xrow, xm, &mut x_lsm, &mut px);
             let ax = (act[r * 2] as usize).min(x1 - 1);
             let al = (act[r * 2 + 1] as usize).min(locs - 1);
 
-            let lm: Vec<bool> = (0..locs).map(|j| lmask[r * locs + j] >= 0.5).collect();
-            let loc_used = ax != noop && lm.iter().any(|&v| v);
+            let lm = |j: usize| lmask[r * locs + j] >= 0.5;
+            let loc_used = ax != noop && (0..locs).any(lm);
             let lrow = &la[r * locs..(r + 1) * locs];
-            let (l_lsm, pl) = masked_lsm(lrow, &lm);
+            masked_lsm_into(lrow, lm, &mut l_lsm, &mut pl);
 
             let mut logp = x_lsm[ax];
             if loc_used {
@@ -201,35 +288,34 @@ impl CtrlNet {
             v_loss += dv * dv * binv;
             dvals[r] = dv * binv; // 0.5 * 2 * (v - ret) / b
         }
+        ws.put_all([x_lsm, px, l_lsm, pl]);
 
         // ---- backward through heads and trunk ----------------------------
-        let mut grad = vec![0.0f32; theta.len()];
-        let mut dwx = vec![0.0f32; c * x1];
-        let mut dbx = vec![0.0f32; x1];
-        let mut dwl = vec![0.0f32; c * locs];
-        let mut dbl = vec![0.0f32; locs];
-        let mut dwv = vec![0.0f32; c];
-        let mut dbv = vec![0.0f32; 1];
-        acc_xt_dy(&trunk.tt, &dxlogits, b, c, x1, &mut dwx);
+        let mut grad = ws.take(theta.len());
+        let mut dwx = ws.take(c * x1);
+        let mut dbx = ws.take(x1);
+        let mut dwl = ws.take(c * locs);
+        let mut dbl = ws.take(locs);
+        let mut dwv = ws.take(c);
+        let mut dbv = ws.take(1);
+        acc_xt_dy(kc, &trunk.tt, &dxlogits, b, c, x1, &mut dwx);
         acc_rows(&dxlogits, b, x1, &mut dbx);
-        acc_xt_dy(&trunk.tt, &dla, b, c, locs, &mut dwl);
+        acc_xt_dy(kc, &trunk.tt, &dla, b, c, locs, &mut dwl);
         acc_rows(&dla, b, locs, &mut dbl);
-        acc_xt_dy(&trunk.tt, &dvals, b, c, 1, &mut dwv);
+        acc_xt_dy(kc, &trunk.tt, &dvals, b, c, 1, &mut dwv);
         acc_rows(&dvals, b, 1, &mut dbv);
 
-        let mut dtt = dy_wt(&dxlogits, self.layout.view(theta, "wx"), b, x1, c);
-        let dtt_l = dy_wt(&dla, self.layout.view(theta, "wl"), b, locs, c);
-        let dtt_v = dy_wt(&dvals, self.layout.view(theta, "wv"), b, 1, c);
-        for i in 0..dtt.len() {
-            dtt[i] += dtt_l[i] + dtt_v[i];
-        }
+        let mut dtt = ws.take(b * c);
+        dy_wt_into(kc, &dxlogits, self.layout.view(theta, "wx"), b, x1, c, &mut dtt);
+        dy_wt_acc(kc, &dla, self.layout.view(theta, "wl"), b, locs, c, &mut dtt);
+        dy_wt_acc(kc, &dvals, self.layout.view(theta, "wv"), b, 1, c, &mut dtt);
         let mut dpre = dtt;
         for (dp, tv) in dpre.iter_mut().zip(&trunk.tt) {
             *dp *= 1.0 - tv * tv;
         }
-        let mut dwt = vec![0.0f32; u_dim * c];
-        let mut dbt = vec![0.0f32; c];
-        acc_xt_dy(&trunk.u, &dpre, b, u_dim, c, &mut dwt);
+        let mut dwt = ws.take(u_dim * c);
+        let mut dbt = ws.take(c);
+        acc_xt_dy(kc, &trunk.u, &dpre, b, u_dim, c, &mut dwt);
         acc_rows(&dpre, b, c, &mut dbt);
 
         self.layout.scatter(&mut grad, "wt", &dwt);
@@ -242,36 +328,52 @@ impl CtrlNet {
         self.layout.scatter(&mut grad, "bv", &dbv);
         adam_step(theta, m, v, t_step, &grad, lr);
 
+        ws.put_all([xlogits, la, vals, dxlogits, dla, dvals]);
+        ws.put_all([grad, dwx, dbx, dwl, dbl, dwv, dbv, dpre, dwt, dbt]);
+        trunk.recycle(ws);
+
         PpoStepStats { pi_loss, v_loss, entropy, approx_kl: kl }
     }
 }
 
-/// Masked log-softmax plus the matching probabilities (0 where masked).
-fn masked_lsm(logits: &[f32], mask: &[bool]) -> (Vec<f32>, Vec<f32>) {
-    let mx = logits
-        .iter()
-        .zip(mask)
-        .filter(|(_, &m)| m)
-        .map(|(&l, _)| l)
-        .fold(f32::NEG_INFINITY, f32::max);
-    if !mx.is_finite() {
-        return (vec![f32::NEG_INFINITY; logits.len()], vec![0.0; logits.len()]);
+/// Masked log-softmax + matching probabilities (0 where masked), written
+/// into caller-provided buffers. Bit-identical to the seed's allocating
+/// `masked_lsm` (same accumulation order over unmasked entries).
+fn masked_lsm_into(
+    logits: &[f32],
+    mask: impl Fn(usize) -> bool,
+    lsm: &mut [f32],
+    p: &mut [f32],
+) {
+    debug_assert_eq!(logits.len(), lsm.len());
+    debug_assert_eq!(logits.len(), p.len());
+    let mut mx = f32::NEG_INFINITY;
+    for (j, &l) in logits.iter().enumerate() {
+        if mask(j) {
+            mx = mx.max(l);
+        }
     }
-    let lse = logits
-        .iter()
-        .zip(mask)
-        .filter(|(_, &m)| m)
-        .map(|(&l, _)| (l - mx).exp())
-        .sum::<f32>()
-        .ln()
-        + mx;
-    let lsm: Vec<f32> = logits
-        .iter()
-        .zip(mask)
-        .map(|(&l, &m)| if m { l - lse } else { f32::NEG_INFINITY })
-        .collect();
-    let p: Vec<f32> = lsm.iter().map(|&l| if l.is_finite() { l.exp() } else { 0.0 }).collect();
-    (lsm, p)
+    if !mx.is_finite() {
+        lsm.fill(f32::NEG_INFINITY);
+        p.fill(0.0);
+        return;
+    }
+    let mut sum = 0.0f32;
+    for (j, &l) in logits.iter().enumerate() {
+        if mask(j) {
+            sum += (l - mx).exp();
+        }
+    }
+    let lse = sum.ln() + mx;
+    for (j, &l) in logits.iter().enumerate() {
+        if mask(j) {
+            lsm[j] = l - lse;
+            p[j] = lsm[j].exp();
+        } else {
+            lsm[j] = f32::NEG_INFINITY;
+            p[j] = 0.0;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -286,11 +388,13 @@ mod tests {
     #[test]
     fn policy_shapes_and_tiling() {
         let n = net();
+        let mut ws = Workspace::new();
+        let kc = KernelCfg::default();
         let theta = n.init(0);
         let b = 2;
         let z = vec![0.1f32; b * 4];
         let h = vec![0.0f32; b * 6];
-        let out = n.policy(&theta, &z, &h, b);
+        let out = n.policy(&mut ws, &kc, &theta, &z, &h, b);
         assert_eq!(out.xlogits.len(), b * 5);
         assert_eq!(out.llogits.len(), b * 5 * 7);
         assert_eq!(out.values.len(), b);
@@ -299,8 +403,28 @@ mod tests {
     }
 
     #[test]
+    fn policy_is_mode_and_thread_invariant() {
+        let n = net();
+        let theta = n.init(6);
+        let b = 3;
+        let mut rng = Rng::new(2);
+        let z: Vec<f32> = (0..b * 4).map(|_| rng.normal() * 0.4).collect();
+        let h: Vec<f32> = (0..b * 6).map(|_| rng.normal() * 0.2).collect();
+        let mut ws = Workspace::new();
+        let want = n.policy(&mut ws, &KernelCfg::reference(), &theta, &z, &h, b);
+        for threads in [1, 2, 8] {
+            let got = n.policy(&mut ws, &KernelCfg::blocked(threads), &theta, &z, &h, b);
+            assert_eq!(want.xlogits, got.xlogits);
+            assert_eq!(want.llogits, got.llogits);
+            assert_eq!(want.values, got.values);
+        }
+    }
+
+    #[test]
     fn ppo_step_moves_params_and_reports_finite_stats() {
         let n = net();
+        let mut ws = Workspace::new();
+        let kc = KernelCfg::default();
         let mut theta = n.init(1);
         let before = theta.clone();
         let mut m = vec![0.0f32; theta.len()];
@@ -316,8 +440,8 @@ mod tests {
         let xmask = vec![1.0f32; b * 5];
         let lmask = vec![1.0f32; b * 7];
         let stats = n.train_step(
-            &mut theta, &mut m, &mut v, 1.0, &z, &h, &act, &logp_old, &adv, &ret, &xmask,
-            &lmask, b, 3e-3, 0.2, 0.01,
+            &mut ws, &kc, &mut theta, &mut m, &mut v, 1.0, &z, &h, &act, &logp_old, &adv, &ret,
+            &xmask, &lmask, b, 3e-3, 0.2, 0.01,
         );
         assert!(stats.pi_loss.is_finite());
         assert!(stats.v_loss > 0.0);
@@ -330,11 +454,15 @@ mod tests {
     fn all_invalid_masks_stay_finite() {
         // Zero masks (contract-test shape probing) must not produce NaNs.
         let n = net();
+        let mut ws = Workspace::new();
+        let kc = KernelCfg::default();
         let mut theta = n.init(2);
         let mut m = vec![0.0f32; theta.len()];
         let mut v = vec![0.0f32; theta.len()];
         let b = 2;
         let stats = n.train_step(
+            &mut ws,
+            &kc,
             &mut theta,
             &mut m,
             &mut v,

@@ -3,8 +3,17 @@
 //! decoder + graph-level decoder through the latent) so every parameter
 //! tensor receives gradient. Mirrors the `gnn_*` artifact contract:
 //! `gnn_init`, `gnn_encode_1`, `gnn_encode_b`, `gnn_ae_train`.
+//!
+//! All dense math runs through the mode-switchable kernels in
+//! [`super::kernels`] (blocked + threaded by default, the seed scalar
+//! loops in reference mode — bit-identical either way), and every
+//! intermediate buffer is drawn from the caller's [`Workspace`] so
+//! steady-state training allocates no scratch memory.
 
-use super::nn::{acc_rows, acc_xt_dy, adam_step, dy_wt, linear, tanh_inplace, ParamLayout};
+use super::kernels::{
+    acc_xt_dy, dy_wt_into, linear_into, par_row_stripes, plan_threads, Act, KernelCfg, Workspace,
+};
+use super::nn::{acc_rows, adam_step, ParamLayout};
 
 pub struct GnnNet {
     pub n: usize,
@@ -14,14 +23,22 @@ pub struct GnnNet {
     pub layout: ParamLayout,
 }
 
-/// Per-sample forward activations kept for the backward pass.
+/// Per-sample forward activations kept for the backward pass. Every buffer
+/// is workspace-owned; call [`GnnFwd::recycle`] when done.
 struct GnnFwd {
     live: Vec<usize>,
-    msg: Vec<f32>,   // [live, F] aggregated neighbourhood features
-    hid: Vec<f32>,   // [live, H] tanh hidden rows
+    msg: Vec<f32>,    // [live, F] aggregated neighbourhood features
+    hid: Vec<f32>,    // [live, H] tanh hidden rows
     pooled: Vec<f32>, // [H]
-    z: Vec<f32>,     // [Z]
-    xbar: Vec<f32>,  // [F] mean live feature row
+    z: Vec<f32>,      // [Z]
+    xbar: Vec<f32>,   // [F] mean live feature row
+}
+
+impl GnnFwd {
+    fn recycle(self, ws: &mut Workspace) {
+        ws.put_idx(self.live);
+        ws.put_all([self.msg, self.hid, self.pooled, self.z, self.xbar]);
+    }
 }
 
 impl GnnNet {
@@ -48,42 +65,68 @@ impl GnnNet {
     }
 
     /// Forward one sample. `feats` `[N,F]`, `adj` `[N,N]`, `mask` `[N]`.
-    fn forward(&self, theta: &[f32], feats: &[f32], adj: &[f32], mask: &[f32]) -> GnnFwd {
+    fn forward(
+        &self,
+        ws: &mut Workspace,
+        kc: &KernelCfg,
+        theta: &[f32],
+        feats: &[f32],
+        adj: &[f32],
+        mask: &[f32],
+    ) -> GnnFwd {
         let (n, f, h, z) = (self.n, self.f, self.h, self.z);
-        let live: Vec<usize> = (0..n).filter(|&i| mask[i] > 0.5).collect();
+        let mut live = ws.take_idx();
+        live.extend((0..n).filter(|&i| mask[i] > 0.5));
         let l = live.len();
         let denom = l.max(1) as f32;
 
         // msg_i = (x_i + Σ_j a[j,i] x_j + Σ_j a[i,j] x_j) / deg_i — a fixed
-        // linear aggregation, so no gradient flows through it.
-        let mut msg = vec![0.0f32; l * f];
-        for (ri, &i) in live.iter().enumerate() {
-            let mut deg = 1.0f32;
-            let row = &mut msg[ri * f..(ri + 1) * f];
-            row.copy_from_slice(&feats[i * f..(i + 1) * f]);
-            for &j in &live {
-                let w_in = adj[j * n + i];
-                let w_out = adj[i * n + j];
-                let w = w_in + w_out;
-                if w > 0.0 {
-                    deg += w;
-                    let src = &feats[j * f..(j + 1) * f];
-                    for (r, s) in row.iter_mut().zip(src) {
-                        *r += w * s;
+        // linear aggregation, so no gradient flows through it. Rows are
+        // independent, so the O(l²·F) loop stripes across threads with the
+        // same bit pattern at any count.
+        let mut msg = ws.take(l * f);
+        let t = plan_threads(kc, l, l * l * f);
+        {
+            let live = &live;
+            par_row_stripes(&mut msg, l, f, t, |r0, chunk| {
+                for (ri, row) in chunk.chunks_exact_mut(f).enumerate() {
+                    let i = live[r0 + ri];
+                    let mut deg = 1.0f32;
+                    row.copy_from_slice(&feats[i * f..(i + 1) * f]);
+                    for &j in live.iter() {
+                        let w_in = adj[j * n + i];
+                        let w_out = adj[i * n + j];
+                        let w = w_in + w_out;
+                        if w > 0.0 {
+                            deg += w;
+                            let src = &feats[j * f..(j + 1) * f];
+                            for (r, s) in row.iter_mut().zip(src) {
+                                *r += w * s;
+                            }
+                        }
+                    }
+                    let inv = 1.0 / deg;
+                    for r in row.iter_mut() {
+                        *r *= inv;
                     }
                 }
-            }
-            let inv = 1.0 / deg;
-            for r in row.iter_mut() {
-                *r *= inv;
-            }
+            });
         }
 
-        let mut hid =
-            linear(&msg, self.layout.view(theta, "w1"), self.layout.view(theta, "b1"), l, f, h);
-        tanh_inplace(&mut hid);
+        let mut hid = ws.take(l * h);
+        linear_into(
+            kc,
+            &msg,
+            self.layout.view(theta, "w1"),
+            Some(self.layout.view(theta, "b1")),
+            l,
+            f,
+            h,
+            Act::Tanh,
+            &mut hid,
+        );
 
-        let mut pooled = vec![0.0f32; h];
+        let mut pooled = ws.take(h);
         for ri in 0..l {
             for (p, v) in pooled.iter_mut().zip(&hid[ri * h..(ri + 1) * h]) {
                 *p += v;
@@ -93,11 +136,20 @@ impl GnnNet {
             *p /= denom;
         }
 
-        let mut zv =
-            linear(&pooled, self.layout.view(theta, "w2"), self.layout.view(theta, "b2"), 1, h, z);
-        tanh_inplace(&mut zv);
+        let mut zv = ws.take(z);
+        linear_into(
+            kc,
+            &pooled,
+            self.layout.view(theta, "w2"),
+            Some(self.layout.view(theta, "b2")),
+            1,
+            h,
+            z,
+            Act::Tanh,
+            &mut zv,
+        );
 
-        let mut xbar = vec![0.0f32; f];
+        let mut xbar = ws.take(f);
         for &i in &live {
             for (x, v) in xbar.iter_mut().zip(&feats[i * f..(i + 1) * f]) {
                 *x += v;
@@ -113,6 +165,8 @@ impl GnnNet {
     /// Encode a batch of graphs to latents: returns `[b, Z]` row-major.
     pub fn encode(
         &self,
+        ws: &mut Workspace,
+        kc: &KernelCfg,
         theta: &[f32],
         feats: &[f32],
         adj: &[f32],
@@ -123,12 +177,15 @@ impl GnnNet {
         let mut out = Vec::with_capacity(b * self.z);
         for s in 0..b {
             let fwd = self.forward(
+                ws,
+                kc,
                 theta,
                 &feats[s * n * f..(s + 1) * n * f],
                 &adj[s * n * n..(s + 1) * n * n],
                 &mask[s * n..(s + 1) * n],
             );
             out.extend_from_slice(&fwd.z);
+            fwd.recycle(ws);
         }
         out
     }
@@ -137,6 +194,8 @@ impl GnnNet {
     #[allow(clippy::too_many_arguments)]
     pub fn train_step(
         &self,
+        ws: &mut Workspace,
+        kc: &KernelCfg,
         theta: &mut [f32],
         m: &mut [f32],
         v: &mut [f32],
@@ -148,33 +207,41 @@ impl GnnNet {
         lr: f32,
     ) -> f32 {
         let (n, f, h, z) = (self.n, self.f, self.h, self.z);
-        let mut grad = vec![0.0f32; theta.len()];
-        let mut dw1 = vec![0.0f32; f * h];
-        let mut db1 = vec![0.0f32; h];
-        let mut dw2 = vec![0.0f32; h * z];
-        let mut db2 = vec![0.0f32; z];
-        let mut dw3 = vec![0.0f32; h * f];
-        let mut db3 = vec![0.0f32; f];
-        let mut dw4 = vec![0.0f32; z * f];
-        let mut db4 = vec![0.0f32; f];
+        let mut grad = ws.take(theta.len());
+        let mut dw1 = ws.take(f * h);
+        let mut db1 = ws.take(h);
+        let mut dw2 = ws.take(h * z);
+        let mut db2 = ws.take(z);
+        let mut dw3 = ws.take(h * f);
+        let mut db3 = ws.take(f);
+        let mut dw4 = ws.take(z * f);
+        let mut db4 = ws.take(f);
         let mut total_loss = 0.0f32;
         let binv = 1.0 / b.max(1) as f32;
 
         for s in 0..b {
             let sf = &feats[s * n * f..(s + 1) * n * f];
             let sm = &mask[s * n..(s + 1) * n];
-            let fwd = self.forward(theta, sf, &adj[s * n * n..(s + 1) * n * n], sm);
+            let fwd = self.forward(ws, kc, theta, sf, &adj[s * n * n..(s + 1) * n * n], sm);
             let l = fwd.live.len();
             let denom = l.max(1) as f32;
 
             // Node decoder: xhat = hid w3 + b3, masked MSE against feats.
-            let xhat = {
-                let w3 = self.layout.view(theta, "w3");
-                linear(&fwd.hid, w3, self.layout.view(theta, "b3"), l, h, f)
-            };
+            let mut xhat = ws.take(l * f);
+            linear_into(
+                kc,
+                &fwd.hid,
+                self.layout.view(theta, "w3"),
+                Some(self.layout.view(theta, "b3")),
+                l,
+                h,
+                f,
+                Act::None,
+                &mut xhat,
+            );
             let node_scale = 1.0 / (denom * f as f32);
             let mut l_node = 0.0f32;
-            let mut dxhat = vec![0.0f32; l * f];
+            let mut dxhat = ws.take(l * f);
             for (ri, &i) in fwd.live.iter().enumerate() {
                 for j in 0..f {
                     let d = xhat[ri * f + j] - sf[i * f + j];
@@ -184,13 +251,21 @@ impl GnnNet {
             }
 
             // Graph decoder: xbar_hat = z w4 + b4, MSE against xbar.
-            let xbar_hat = {
-                let w4 = self.layout.view(theta, "w4");
-                linear(&fwd.z, w4, self.layout.view(theta, "b4"), 1, z, f)
-            };
+            let mut xbar_hat = ws.take(f);
+            linear_into(
+                kc,
+                &fwd.z,
+                self.layout.view(theta, "w4"),
+                Some(self.layout.view(theta, "b4")),
+                1,
+                z,
+                f,
+                Act::None,
+                &mut xbar_hat,
+            );
             let graph_scale = 1.0 / f as f32;
             let mut l_graph = 0.0f32;
-            let mut dxbar_hat = vec![0.0f32; f];
+            let mut dxbar_hat = ws.take(f);
             for j in 0..f {
                 let d = xbar_hat[j] - fwd.xbar[j];
                 l_graph += d * d * graph_scale;
@@ -200,19 +275,24 @@ impl GnnNet {
 
             // ---- backward ------------------------------------------------
             // Graph head -> latent.
-            acc_xt_dy(&fwd.z, &dxbar_hat, 1, z, f, &mut dw4);
+            acc_xt_dy(kc, &fwd.z, &dxbar_hat, 1, z, f, &mut dw4);
             acc_rows(&dxbar_hat, 1, f, &mut db4);
-            let dz = dy_wt(&dxbar_hat, self.layout.view(theta, "w4"), 1, f, z);
-            let dzpre: Vec<f32> =
-                dz.iter().zip(&fwd.z).map(|(d, zv)| d * (1.0 - zv * zv)).collect();
-            acc_xt_dy(&fwd.pooled, &dzpre, 1, h, z, &mut dw2);
+            let mut dz = ws.take(z);
+            dy_wt_into(kc, &dxbar_hat, self.layout.view(theta, "w4"), 1, f, z, &mut dz);
+            let mut dzpre = ws.take(z);
+            for ((dp, d), zv) in dzpre.iter_mut().zip(&dz).zip(&fwd.z) {
+                *dp = d * (1.0 - zv * zv);
+            }
+            acc_xt_dy(kc, &fwd.pooled, &dzpre, 1, h, z, &mut dw2);
             acc_rows(&dzpre, 1, z, &mut db2);
-            let dpooled = dy_wt(&dzpre, self.layout.view(theta, "w2"), 1, z, h);
+            let mut dpooled = ws.take(h);
+            dy_wt_into(kc, &dzpre, self.layout.view(theta, "w2"), 1, z, h, &mut dpooled);
 
             // Node head -> hidden rows (plus the pooled-path contribution).
-            acc_xt_dy(&fwd.hid, &dxhat, l, h, f, &mut dw3);
+            acc_xt_dy(kc, &fwd.hid, &dxhat, l, h, f, &mut dw3);
             acc_rows(&dxhat, l, f, &mut db3);
-            let mut dhid = dy_wt(&dxhat, self.layout.view(theta, "w3"), l, f, h);
+            let mut dhid = ws.take(l * h);
+            dy_wt_into(kc, &dxhat, self.layout.view(theta, "w3"), l, f, h, &mut dhid);
             for ri in 0..l {
                 for j in 0..h {
                     dhid[ri * h + j] += dpooled[j] / denom;
@@ -222,8 +302,11 @@ impl GnnNet {
             for (dp, hv) in dpre1.iter_mut().zip(&fwd.hid) {
                 *dp *= 1.0 - hv * hv;
             }
-            acc_xt_dy(&fwd.msg, &dpre1, l, f, h, &mut dw1);
+            acc_xt_dy(kc, &fwd.msg, &dpre1, l, f, h, &mut dw1);
             acc_rows(&dpre1, l, h, &mut db1);
+
+            ws.put_all([xhat, dxhat, xbar_hat, dxbar_hat, dz, dzpre, dpooled, dpre1]);
+            fwd.recycle(ws);
         }
 
         self.layout.scatter(&mut grad, "w1", &dw1);
@@ -235,6 +318,7 @@ impl GnnNet {
         self.layout.scatter(&mut grad, "w4", &dw4);
         self.layout.scatter(&mut grad, "b4", &db4);
         adam_step(theta, m, v, t, &grad, lr);
+        ws.put_all([grad, dw1, db1, dw2, db2, dw3, db3, dw4, db4]);
         total_loss
     }
 }
@@ -276,30 +360,83 @@ mod tests {
     #[test]
     fn encode_shapes_and_masking() {
         let net = GnnNet::new(8, 6, 5, 4);
+        let mut ws = Workspace::new();
+        let kc = KernelCfg::default();
         let theta = net.init(1);
         let (feats, adj, mask) = toy_batch(&net, 2, 9);
-        let z = net.encode(&theta, &feats, &adj, &mask, 2);
+        let z = net.encode(&mut ws, &kc, &theta, &feats, &adj, &mask, 2);
         assert_eq!(z.len(), 2 * 4);
         assert!(z.iter().all(|v| v.is_finite() && v.abs() <= 1.0));
         // All-dead mask still encodes (zeros latent through the bias path).
         let dead = vec![0.0f32; 8];
-        let z0 = net.encode(&theta, &feats[..8 * 6], &adj[..64], &dead, 1);
+        let z0 = net.encode(&mut ws, &kc, &theta, &feats[..8 * 6], &adj[..64], &dead, 1);
         assert!(z0.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn encode_is_mode_and_thread_invariant() {
+        let net = GnnNet::new(12, 6, 5, 4);
+        let theta = net.init(5);
+        let (feats, adj, mask) = toy_batch(&net, 3, 21);
+        let mut ws = Workspace::new();
+        let want = net.encode(&mut ws, &KernelCfg::reference(), &theta, &feats, &adj, &mask, 3);
+        for threads in [1, 2, 8] {
+            let got = net.encode(
+                &mut ws,
+                &KernelCfg::blocked(threads),
+                &theta,
+                &feats,
+                &adj,
+                &mask,
+                3,
+            );
+            assert_eq!(want, got, "encode must be bit-identical at {threads} threads");
+        }
     }
 
     #[test]
     fn train_step_decreases_loss() {
         let net = GnnNet::new(8, 6, 5, 4);
+        let mut ws = Workspace::new();
+        let kc = KernelCfg::default();
         let mut theta = net.init(2);
         let mut m = vec![0.0f32; theta.len()];
         let mut v = vec![0.0f32; theta.len()];
         let (feats, adj, mask) = toy_batch(&net, 4, 11);
-        let first = net.train_step(&mut theta, &mut m, &mut v, 1.0, &feats, &adj, &mask, 4, 1e-2);
+        let first = net.train_step(
+            &mut ws, &kc, &mut theta, &mut m, &mut v, 1.0, &feats, &adj, &mask, 4, 1e-2,
+        );
         let mut last = first;
         for t in 2..=40 {
-            last =
-                net.train_step(&mut theta, &mut m, &mut v, t as f32, &feats, &adj, &mask, 4, 1e-2);
+            last = net.train_step(
+                &mut ws, &kc, &mut theta, &mut m, &mut v, t as f32, &feats, &adj, &mask, 4, 1e-2,
+            );
         }
         assert!(last.is_finite() && last < first, "AE loss {first} -> {last}");
+    }
+
+    #[test]
+    fn train_scratch_is_fully_recycled() {
+        let net = GnnNet::new(8, 6, 5, 4);
+        let mut ws = Workspace::new();
+        let kc = KernelCfg::blocked(2);
+        let mut theta = net.init(4);
+        let mut m = vec![0.0f32; theta.len()];
+        let mut v = vec![0.0f32; theta.len()];
+        let (feats, adj, mask) = toy_batch(&net, 4, 13);
+        // Warm-up call populates the arena.
+        net.train_step(&mut ws, &kc, &mut theta, &mut m, &mut v, 1.0, &feats, &adj, &mask, 4, 1e-3);
+        let warm = ws.stats();
+        for t in 2..=6 {
+            net.train_step(
+                &mut ws, &kc, &mut theta, &mut m, &mut v, t as f32, &feats, &adj, &mask, 4, 1e-3,
+            );
+        }
+        let now = ws.stats();
+        assert_eq!(
+            warm.alloc_bytes, now.alloc_bytes,
+            "steady-state train steps must allocate no scratch"
+        );
+        assert!(now.reuses > warm.reuses, "steady-state takes must hit the free list");
     }
 }

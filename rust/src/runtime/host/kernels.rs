@@ -1,0 +1,653 @@
+//! Blocked, multi-threaded dense kernels + the zero-alloc [`Workspace`]
+//! scratch arena — the throughput layer under `host::{gnn, ctrl, wm}`.
+//!
+//! Two kernel modes exist behind [`KernelCfg`]:
+//!
+//!  * [`KernelMode::Reference`] — the seed scalar triple-loop kernels
+//!    (`nn::linear_reference` et al.), kept verbatim as the numeric oracle;
+//!  * [`KernelMode::Blocked`] — cache-blocked loops with a fixed row/stripe
+//!    partition fanned out over `std::thread::scope`.
+//!
+//! **Determinism contract.** Every output element is computed wholly by one
+//! thread, and its floating-point reduction order (k ascending for
+//! `linear_into`, sample-row ascending for `acc_xt_dy`, column ascending
+//! for `dy_wt_into` — including the seed kernels' skip of exact-zero
+//! inputs) is identical to the scalar reference. Blocking and threading
+//! only change *which thread* computes an element and in what wall-clock
+//! order elements complete, never the arithmetic applied to any single
+//! element. Outputs are therefore bit-identical for any thread count and
+//! either mode — the same contract the search engine pins for
+//! `TasoConfig::threads` (`tests/host_kernels.rs` pins it here).
+//!
+//! [`Workspace`] recycles scratch buffers across program calls so the
+//! steady-state training loop performs no per-call heap allocation for
+//! intermediates: `take` serves a cleared buffer from the free list when
+//! one with enough capacity exists and only allocates on first use (or
+//! growth), with reuse/allocation counters surfaced per program through
+//! [`ExecStats`](crate::runtime::ExecStats).
+
+use super::nn;
+
+/// Column-block width for the blocked GEMM inner loops. Sized so an output
+/// block plus one weight-row block stay L1-resident; at the host model's
+/// dimensions a row usually fits in a single block, and the structure only
+/// engages on wider heads.
+const NC: usize = 1024;
+
+/// Minimum multiply-accumulate count before a kernel fans out worker
+/// threads; below this, `std::thread` spawn latency outweighs the win.
+const PAR_MIN_MACS: usize = 1 << 19;
+
+/// Which kernel implementation a [`HostBackend`](super::HostBackend) runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelMode {
+    /// Seed scalar triple-loop kernels — the bit-exact oracle.
+    Reference,
+    /// Cache-blocked loops, multi-threaded above [`PAR_MIN_MACS`] work.
+    Blocked,
+}
+
+/// Kernel selection + thread budget for one backend instance.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelCfg {
+    /// Implementation to run (outputs are bit-identical either way).
+    pub mode: KernelMode,
+    /// Worker-thread cap for the blocked mode (1 = fully serial).
+    pub threads: usize,
+}
+
+impl Default for KernelCfg {
+    fn default() -> Self {
+        Self { mode: KernelMode::Blocked, threads: default_threads() }
+    }
+}
+
+impl KernelCfg {
+    /// The seed scalar kernels (single-threaded oracle).
+    pub fn reference() -> Self {
+        Self { mode: KernelMode::Reference, threads: 1 }
+    }
+
+    /// Blocked kernels at an explicit thread cap.
+    pub fn blocked(threads: usize) -> Self {
+        Self { mode: KernelMode::Blocked, threads: threads.max(1) }
+    }
+}
+
+/// Default worker-thread cap: `RLFLOW_HOST_THREADS` when set, else the
+/// machine's available parallelism capped at 8 (the host programs' GEMMs
+/// are too small to feed more).
+pub fn default_threads() -> usize {
+    if let Ok(s) = std::env::var("RLFLOW_HOST_THREADS") {
+        if let Ok(n) = s.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+}
+
+/// Activation fused into the forward GEMM epilogue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Act {
+    /// Plain affine output.
+    None,
+    /// `tanh` applied in the same pass over each finished output row.
+    Tanh,
+}
+
+// ---------------------------------------------------------------------------
+// Workspace
+// ---------------------------------------------------------------------------
+
+/// Cumulative scratch-arena accounting (monotone counters).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct WorkspaceStats {
+    /// Buffer checkouts served from the free list without allocating.
+    pub reuses: u64,
+    /// Buffer checkouts that had to allocate fresh memory.
+    pub allocations: u64,
+    /// Total bytes of fresh scratch memory allocated.
+    pub alloc_bytes: u64,
+}
+
+/// A free-list arena of reusable `f32` scratch buffers.
+///
+/// The host nets draw every intermediate (activations, per-tensor gradient
+/// buffers, LSTM gate planes) from here and return it before finishing, so
+/// after a warm-up call per program the training hot path allocates no
+/// scratch memory: `take` finds a parked buffer with enough capacity,
+/// clears it and hands it back. Buffers are zero-filled exactly like the
+/// `vec![0.0; n]` allocations they replace, so recycling is invisible to
+/// the numerics.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    free: Vec<Vec<f32>>,
+    free_idx: Vec<Vec<usize>>,
+    free_i32: Vec<Vec<i32>>,
+    stats: WorkspaceStats,
+}
+
+impl Workspace {
+    /// An empty arena (buffers are allocated lazily on first use).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Cumulative reuse/allocation counters.
+    pub fn stats(&self) -> WorkspaceStats {
+        self.stats
+    }
+
+    /// Check out a zero-filled buffer of `len` elements.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        // Best fit: the smallest parked buffer that already has capacity,
+        // so a tiny request never pins the arena's largest buffer.
+        let mut best: Option<(usize, usize)> = None; // (index, capacity)
+        for (i, b) in self.free.iter().enumerate() {
+            let cap = b.capacity();
+            if cap >= len && best.map_or(true, |(_, c)| cap < c) {
+                best = Some((i, cap));
+            }
+        }
+        match best {
+            Some((i, _)) => {
+                let mut b = self.free.swap_remove(i);
+                b.clear();
+                b.resize(len, 0.0);
+                self.stats.reuses += 1;
+                b
+            }
+            None => {
+                self.stats.allocations += 1;
+                self.stats.alloc_bytes += (len * std::mem::size_of::<f32>()) as u64;
+                vec![0.0; len]
+            }
+        }
+    }
+
+    /// Check out a buffer initialised as a copy of `src`.
+    pub fn take_copy(&mut self, src: &[f32]) -> Vec<f32> {
+        let mut b = self.take(src.len());
+        b.copy_from_slice(src);
+        b
+    }
+
+    /// Return a buffer to the free list for later reuse.
+    pub fn put(&mut self, buf: Vec<f32>) {
+        if buf.capacity() > 0 {
+            self.free.push(buf);
+        }
+    }
+
+    /// Return several buffers at once.
+    pub fn put_all<I: IntoIterator<Item = Vec<f32>>>(&mut self, bufs: I) {
+        for b in bufs {
+            self.put(b);
+        }
+    }
+
+    /// Check out an *empty* index buffer (callers push into it).
+    pub fn take_idx(&mut self) -> Vec<usize> {
+        match self.free_idx.pop() {
+            Some(mut b) => {
+                b.clear();
+                self.stats.reuses += 1;
+                b
+            }
+            None => {
+                self.stats.allocations += 1;
+                Vec::new()
+            }
+        }
+    }
+
+    /// Return an index buffer to the free list.
+    pub fn put_idx(&mut self, buf: Vec<usize>) {
+        if buf.capacity() > 0 {
+            self.free_idx.push(buf);
+        }
+    }
+
+    /// Check out a zero-filled i32 buffer of `len` elements.
+    pub fn take_i32(&mut self, len: usize) -> Vec<i32> {
+        match self.free_i32.iter().position(|b| b.capacity() >= len) {
+            Some(i) => {
+                let mut b = self.free_i32.swap_remove(i);
+                b.clear();
+                b.resize(len, 0);
+                self.stats.reuses += 1;
+                b
+            }
+            None => {
+                self.stats.allocations += 1;
+                self.stats.alloc_bytes += (len * std::mem::size_of::<i32>()) as u64;
+                vec![0; len]
+            }
+        }
+    }
+
+    /// Return an i32 buffer to the free list.
+    pub fn put_i32(&mut self, buf: Vec<i32>) {
+        if buf.capacity() > 0 {
+            self.free_i32.push(buf);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Threading helper
+// ---------------------------------------------------------------------------
+
+/// Worker count for a row-partitioned kernel: 1 in reference mode or
+/// unless the config allows more, there are rows to split, and the
+/// arithmetic volume clears [`PAR_MIN_MACS`]. Purely a scheduling decision
+/// — outputs are identical for every return value. Public so the nets can
+/// stripe their own row-independent loops (e.g. the GNN's neighbourhood
+/// aggregation) under the same policy.
+pub fn plan_threads(cfg: &KernelCfg, rows: usize, macs: usize) -> usize {
+    if cfg.mode == KernelMode::Reference || cfg.threads <= 1 || rows <= 1 || macs < PAR_MIN_MACS {
+        1
+    } else {
+        cfg.threads.min(rows)
+    }
+}
+
+/// Split `out` into `t` contiguous row stripes and run `body(first_row,
+/// stripe)` on each, fanning out over scoped threads when `t > 1`. The
+/// stripe boundaries depend only on `(rows, t)`, and every row is written
+/// by exactly one worker.
+pub fn par_row_stripes<F>(out: &mut [f32], rows: usize, row_w: usize, t: usize, body: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(out.len(), rows * row_w);
+    if t <= 1 || rows <= 1 {
+        body(0, out);
+        return;
+    }
+    let per = (rows + t - 1) / t;
+    std::thread::scope(|scope| {
+        let mut rest = out;
+        let mut r0 = 0;
+        while !rest.is_empty() {
+            let take = (per * row_w).min(rest.len());
+            let (chunk, tail) = rest.split_at_mut(take);
+            let first = r0;
+            let bref = &body;
+            scope.spawn(move || bref(first, chunk));
+            r0 += take / row_w;
+            rest = tail;
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Forward: y = x w (+ bias) (+ activation)
+// ---------------------------------------------------------------------------
+
+/// `y = act(x w + bias)` over `m` rows: x `[m,k]`, w `[k,n]`, bias `[n]`
+/// (or none for a pure matmul), y `[m,n]`. The fused activation runs in
+/// the same pass over each finished row. Bit-identical to
+/// [`nn::linear_reference`] followed by a `tanh` sweep, for any thread
+/// count.
+pub fn linear_into(
+    cfg: &KernelCfg,
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+    act: Act,
+    y: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(y.len(), m * n);
+    if let Some(b) = bias {
+        debug_assert_eq!(b.len(), n);
+    }
+    if cfg.mode == KernelMode::Reference {
+        for r in 0..m {
+            let yr = &mut y[r * n..(r + 1) * n];
+            match bias {
+                Some(b) => yr.copy_from_slice(b),
+                None => yr.fill(0.0),
+            }
+            for i in 0..k {
+                let xv = x[r * k + i];
+                if xv == 0.0 {
+                    continue;
+                }
+                let wr = &w[i * n..(i + 1) * n];
+                for (yj, wj) in yr.iter_mut().zip(wr) {
+                    *yj += xv * wj;
+                }
+            }
+            if act == Act::Tanh {
+                nn::tanh_inplace(yr);
+            }
+        }
+        return;
+    }
+    let t = plan_threads(cfg, m, m * k * n);
+    par_row_stripes(y, m, n, t, |r0, chunk| {
+        for (ri, yr) in chunk.chunks_exact_mut(n).enumerate() {
+            let r = r0 + ri;
+            match bias {
+                Some(b) => yr.copy_from_slice(b),
+                None => yr.fill(0.0),
+            }
+            let xr = &x[r * k..(r + 1) * k];
+            // Column blocks keep the y block and each w row block hot; the
+            // per-element accumulation order stays k ascending (with the
+            // reference's exact-zero skip), so blocking is invisible to
+            // the bit pattern.
+            let mut jb = 0;
+            while jb < n {
+                let je = (jb + NC).min(n);
+                for (i, &xv) in xr.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let wr = &w[i * n + jb..i * n + je];
+                    for (yj, wj) in yr[jb..je].iter_mut().zip(wr) {
+                        *yj += xv * wj;
+                    }
+                }
+                jb = je;
+            }
+            if act == Act::Tanh {
+                nn::tanh_inplace(yr);
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Backward: dw += xᵀ dy
+// ---------------------------------------------------------------------------
+
+/// `dw += xᵀ dy`: x `[m,k]`, dy `[m,n]`, dw `[k,n]`. Parallel over stripes
+/// of `k` (each worker owns whole dw rows); per-element accumulation order
+/// is sample-row ascending, exactly like [`nn::acc_xt_dy_reference`].
+pub fn acc_xt_dy(
+    cfg: &KernelCfg,
+    x: &[f32],
+    dy: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    dw: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(dy.len(), m * n);
+    debug_assert_eq!(dw.len(), k * n);
+    if cfg.mode == KernelMode::Reference {
+        nn::acc_xt_dy_reference(x, dy, m, k, n, dw);
+        return;
+    }
+    let t = plan_threads(cfg, k, m * k * n);
+    par_row_stripes(dw, k, n, t, |i0, chunk| {
+        for (ii, dwr) in chunk.chunks_exact_mut(n).enumerate() {
+            let i = i0 + ii;
+            for r in 0..m {
+                let xv = x[r * k + i];
+                if xv == 0.0 {
+                    continue;
+                }
+                let dyr = &dy[r * n..(r + 1) * n];
+                for (dwj, dyj) in dwr.iter_mut().zip(dyr) {
+                    *dwj += xv * dyj;
+                }
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Backward: dx = dy wᵀ
+// ---------------------------------------------------------------------------
+
+/// `dx = dy wᵀ`: dy `[m,n]`, w `[k,n]`, dx `[m,k]`. Parallel over row
+/// stripes of dx; per-element reduction order is column ascending, exactly
+/// like [`nn::dy_wt_reference`].
+pub fn dy_wt_into(
+    cfg: &KernelCfg,
+    dy: &[f32],
+    w: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    dx: &mut [f32],
+) {
+    debug_assert_eq!(dy.len(), m * n);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(dx.len(), m * k);
+    if cfg.mode == KernelMode::Reference {
+        for r in 0..m {
+            let dyr = &dy[r * n..(r + 1) * n];
+            for i in 0..k {
+                let wr = &w[i * n..(i + 1) * n];
+                let mut acc = 0.0f32;
+                for (dyj, wj) in dyr.iter().zip(wr) {
+                    acc += dyj * wj;
+                }
+                dx[r * k + i] = acc;
+            }
+        }
+        return;
+    }
+    let t = plan_threads(cfg, m, m * k * n);
+    par_row_stripes(dx, m, k, t, |r0, chunk| {
+        for (ri, dxr) in chunk.chunks_exact_mut(k).enumerate() {
+            let dyr = &dy[(r0 + ri) * n..(r0 + ri + 1) * n];
+            for (i, dst) in dxr.iter_mut().enumerate() {
+                let wr = &w[i * n..(i + 1) * n];
+                let mut acc = 0.0f32;
+                for (dyj, wj) in dyr.iter().zip(wr) {
+                    acc += dyj * wj;
+                }
+                *dst = acc;
+            }
+        }
+    });
+}
+
+/// `dx += dy wᵀ` (accumulating form for head-gradient merges): same
+/// reduction order as [`dy_wt_into`] per added term.
+pub fn dy_wt_acc(
+    cfg: &KernelCfg,
+    dy: &[f32],
+    w: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    dx: &mut [f32],
+) {
+    debug_assert_eq!(dx.len(), m * k);
+    if cfg.mode == KernelMode::Reference {
+        for r in 0..m {
+            let dyr = &dy[r * n..(r + 1) * n];
+            for i in 0..k {
+                let wr = &w[i * n..(i + 1) * n];
+                let mut acc = 0.0f32;
+                for (dyj, wj) in dyr.iter().zip(wr) {
+                    acc += dyj * wj;
+                }
+                dx[r * k + i] += acc;
+            }
+        }
+        return;
+    }
+    let t = plan_threads(cfg, m, m * k * n);
+    par_row_stripes(dx, m, k, t, |r0, chunk| {
+        for (ri, dxr) in chunk.chunks_exact_mut(k).enumerate() {
+            let dyr = &dy[(r0 + ri) * n..(r0 + ri + 1) * n];
+            for (i, dst) in dxr.iter_mut().enumerate() {
+                let wr = &w[i * n..(i + 1) * n];
+                let mut acc = 0.0f32;
+                for (dyj, wj) in dyr.iter().zip(wr) {
+                    acc += dyj * wj;
+                }
+                *dst += acc;
+            }
+        }
+    });
+}
+
+/// Backward through a fused tanh epilogue: `dpre = dy * (1 - y²)` where
+/// `y` is the *activated* forward output, written over `dy` in place.
+pub fn tanh_backward_inplace(dy: &mut [f32], y: &[f32]) {
+    debug_assert_eq!(dy.len(), y.len());
+    for (d, v) in dy.iter_mut().zip(y) {
+        *d *= 1.0 - v * v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_with_zeros(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|_| if rng.below(5) == 0 { 0.0 } else { rng.normal() })
+            .collect()
+    }
+
+    #[test]
+    fn blocked_linear_matches_reference_for_all_thread_counts() {
+        let mut rng = Rng::new(7);
+        for &(m, k, n) in &[(1, 4, 3), (5, 7, 9), (33, 17, 21), (320, 32, 32)] {
+            let x = rand_with_zeros(&mut rng, m * k);
+            let w = rand_with_zeros(&mut rng, k * n);
+            let b: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            for act in [Act::None, Act::Tanh] {
+                let mut want = vec![0.0f32; m * n];
+                linear_into(&KernelCfg::reference(), &x, &w, Some(&b), m, k, n, act, &mut want);
+                for threads in [1, 2, 8] {
+                    let mut got = vec![0.0f32; m * n];
+                    linear_into(
+                        &KernelCfg::blocked(threads),
+                        &x,
+                        &w,
+                        Some(&b),
+                        m,
+                        k,
+                        n,
+                        act,
+                        &mut got,
+                    );
+                    assert_eq!(want, got, "linear m={m} k={k} n={n} threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_tanh_equals_seed_linear_then_tanh() {
+        let mut rng = Rng::new(9);
+        let (m, k, n) = (6, 5, 4);
+        let x = rand_with_zeros(&mut rng, m * k);
+        let w = rand_with_zeros(&mut rng, k * n);
+        let b = vec![0.25f32; n];
+        let mut seed = nn::linear_reference(&x, &w, &b, m, k, n);
+        nn::tanh_inplace(&mut seed);
+        let mut fused = vec![0.0f32; m * n];
+        linear_into(&KernelCfg::blocked(4), &x, &w, Some(&b), m, k, n, Act::Tanh, &mut fused);
+        assert_eq!(seed, fused);
+    }
+
+    #[test]
+    fn blocked_acc_xt_dy_matches_reference_for_all_thread_counts() {
+        let mut rng = Rng::new(11);
+        for &(m, k, n) in &[(2, 3, 4), (9, 13, 7), (64, 48, 64)] {
+            let x = rand_with_zeros(&mut rng, m * k);
+            let dy = rand_with_zeros(&mut rng, m * n);
+            let init: Vec<f32> = (0..k * n).map(|_| rng.normal() * 0.1).collect();
+            let mut want = init.clone();
+            nn::acc_xt_dy_reference(&x, &dy, m, k, n, &mut want);
+            for threads in [1, 2, 8] {
+                let mut got = init.clone();
+                acc_xt_dy(&KernelCfg::blocked(threads), &x, &dy, m, k, n, &mut got);
+                assert_eq!(want, got, "acc_xt_dy m={m} k={k} n={n} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_dy_wt_matches_reference_for_all_thread_counts() {
+        let mut rng = Rng::new(13);
+        for &(m, n, k) in &[(2, 3, 4), (17, 9, 11), (64, 64, 48)] {
+            let dy = rand_with_zeros(&mut rng, m * n);
+            let w = rand_with_zeros(&mut rng, k * n);
+            let want = nn::dy_wt_reference(&dy, &w, m, n, k);
+            for threads in [1, 2, 8] {
+                let mut got = vec![0.0f32; m * k];
+                dy_wt_into(&KernelCfg::blocked(threads), &dy, &w, m, n, k, &mut got);
+                assert_eq!(want, got, "dy_wt m={m} n={n} k={k} threads={threads}");
+                let mut acc = want.clone();
+                dy_wt_acc(&KernelCfg::blocked(threads), &dy, &w, m, n, k, &mut acc);
+                let doubled: Vec<f32> = want.iter().map(|v| v + v).collect();
+                assert_eq!(doubled, acc, "dy_wt_acc accumulates");
+            }
+        }
+    }
+
+    #[test]
+    fn workspace_reuses_after_warmup() {
+        let mut ws = Workspace::new();
+        let a = ws.take(64);
+        let b = ws.take(128);
+        assert_eq!(ws.stats().allocations, 2);
+        ws.put(a);
+        ws.put(b);
+        // Steady state: every take is served from the free list.
+        for _ in 0..10 {
+            let a = ws.take(64);
+            let b = ws.take(100); // fits the 128-capacity buffer
+            assert!(a.iter().all(|&v| v == 0.0), "recycled buffers must be zeroed");
+            ws.put(a);
+            ws.put(b);
+        }
+        assert_eq!(ws.stats().allocations, 2, "no new allocations after warm-up");
+        assert_eq!(ws.stats().reuses, 20);
+    }
+
+    #[test]
+    fn workspace_best_fit_prefers_smallest_buffer() {
+        let mut ws = Workspace::new();
+        let big = ws.take(1000);
+        let small = ws.take(10);
+        ws.put(big);
+        ws.put(small);
+        let got = ws.take(8);
+        assert!(got.capacity() < 1000, "tiny request must not pin the big buffer");
+        ws.put(got);
+    }
+
+    #[test]
+    fn tanh_backward_matches_manual() {
+        let y = vec![0.5f32, -0.25, 0.0];
+        let mut dy = vec![2.0f32, 2.0, 2.0];
+        tanh_backward_inplace(&mut dy, &y);
+        assert_eq!(dy, vec![2.0 * (1.0 - 0.25), 2.0 * (1.0 - 0.0625), 2.0]);
+    }
+
+    #[test]
+    fn par_row_stripes_covers_every_row_once() {
+        let rows = 7;
+        let mut out = vec![0.0f32; rows * 3];
+        par_row_stripes(&mut out, rows, 3, 3, |r0, chunk| {
+            for (ri, row) in chunk.chunks_exact_mut(3).enumerate() {
+                row.fill((r0 + ri) as f32 + 1.0);
+            }
+        });
+        for r in 0..rows {
+            assert!(out[r * 3..(r + 1) * 3].iter().all(|&v| v == r as f32 + 1.0));
+        }
+    }
+}

@@ -16,6 +16,7 @@
 
 pub mod ctrl;
 pub mod gnn;
+pub mod kernels;
 pub mod nn;
 pub mod wm;
 
@@ -26,6 +27,7 @@ use std::time::Instant;
 
 use crate::interp::Tensor;
 
+use self::kernels::{KernelCfg, Workspace};
 use super::backend::{validate_args, Backend, ExecStats, TensorView};
 use super::manifest::{ArgSpec, ArtifactSpec, Dt, Manifest};
 use super::params::ParamStore;
@@ -50,6 +52,9 @@ pub struct HostConfig {
     pub seq_len: usize,
     pub b_ppo: usize,
     pub b_enc: usize,
+    /// Kernel implementation + thread budget (outputs are bit-identical
+    /// for every setting — see [`kernels`]).
+    pub kernels: KernelCfg,
 }
 
 impl Default for HostConfig {
@@ -70,6 +75,7 @@ impl Default for HostConfig {
             seq_len: 8,
             b_ppo: 64,
             b_enc: 8,
+            kernels: KernelCfg::default(),
         }
     }
 }
@@ -81,6 +87,10 @@ pub struct HostBackend {
     wm: wm::WmNet,
     ctrl: ctrl::CtrlNet,
     stats: RefCell<HashMap<String, ExecStats>>,
+    /// Scratch arena shared by every program (the backend is single-caller
+    /// by contract, like the PJRT engine); steady-state calls reuse these
+    /// buffers instead of allocating.
+    ws: RefCell<Workspace>,
 }
 
 impl Default for HostBackend {
@@ -112,15 +122,34 @@ impl HostBackend {
             cfg.max_locs,
         );
         let manifest = build_manifest(&cfg, gnn.n_params(), wm.n_params(), ctrl.n_params());
-        Self { cfg, manifest, gnn, wm, ctrl, stats: RefCell::new(HashMap::new()) }
+        Self {
+            cfg,
+            manifest,
+            gnn,
+            wm,
+            ctrl,
+            stats: RefCell::new(HashMap::new()),
+            ws: RefCell::new(Workspace::new()),
+        }
     }
 
     pub fn config(&self) -> &HostConfig {
         &self.cfg
     }
 
-    fn dispatch(&self, program: &str, args: &[TensorView]) -> anyhow::Result<Vec<Tensor>> {
+    /// Cumulative scratch-arena counters (reuses / allocations / bytes).
+    pub fn workspace_stats(&self) -> kernels::WorkspaceStats {
+        self.ws.borrow().stats()
+    }
+
+    fn dispatch(
+        &self,
+        ws: &mut Workspace,
+        program: &str,
+        args: &[TensorView],
+    ) -> anyhow::Result<Vec<Tensor>> {
         let cfg = &self.cfg;
+        let kc = &cfg.kernels;
         let (z, r) = (cfg.latent, cfg.rnn_hidden);
         let (x1, locs, zk) = (cfg.n_xfers1, cfg.max_locs, cfg.latent * cfg.mdn_k);
         match program {
@@ -137,6 +166,8 @@ impl HostBackend {
             "gnn_encode_1" | "gnn_encode_b" => {
                 let b = if program == "gnn_encode_1" { 1 } else { cfg.b_enc };
                 let zs = self.gnn.encode(
+                    ws,
+                    kc,
                     args[0].as_f32()?,
                     args[1].as_f32()?,
                     args[2].as_f32()?,
@@ -153,6 +184,8 @@ impl HostBackend {
                 let t = args[3].scalar_f32()? + 1.0;
                 let lr = args[7].scalar_f32()?;
                 let loss = self.gnn.train_step(
+                    ws,
+                    kc,
                     &mut theta,
                     &mut mm,
                     &mut vv,
@@ -174,8 +207,14 @@ impl HostBackend {
             }
             "ctrl_policy_1" | "ctrl_policy_b" => {
                 let b = if program == "ctrl_policy_1" { 1 } else { cfg.b_dream };
-                let out =
-                    self.ctrl.policy(args[0].as_f32()?, args[1].as_f32()?, args[2].as_f32()?, b);
+                let out = self.ctrl.policy(
+                    ws,
+                    kc,
+                    args[0].as_f32()?,
+                    args[1].as_f32()?,
+                    args[2].as_f32()?,
+                    b,
+                );
                 Ok(vec![
                     Tensor::from_vec(&[b, x1], out.xlogits)?,
                     Tensor::from_vec(&[b, x1 * locs], out.llogits)?,
@@ -189,6 +228,8 @@ impl HostBackend {
                 let mut vv = args[2].as_f32()?.to_vec();
                 let t = args[3].scalar_f32()? + 1.0;
                 let stats = self.ctrl.train_step(
+                    ws,
+                    kc,
                     &mut theta,
                     &mut mm,
                     &mut vv,
@@ -221,6 +262,8 @@ impl HostBackend {
             "wm_step_1" | "wm_step_b" => {
                 let b = if program == "wm_step_1" { 1 } else { cfg.b_dream };
                 let out = self.wm.step(
+                    ws,
+                    kc,
                     args[0].as_f32()?,
                     args[1].as_f32()?,
                     args[2].as_i32()?,
@@ -247,6 +290,8 @@ impl HostBackend {
                 let t = args[3].scalar_f32()? + 1.0;
                 let lr = args[11].scalar_f32()?;
                 let losses = self.wm.train_step(
+                    ws,
+                    kc,
                     &mut theta,
                     &mut mm,
                     &mut vv,
@@ -293,7 +338,11 @@ impl Backend for HostBackend {
         let spec = self.manifest.artifact(program)?;
         validate_args(program, spec, args)?;
         let t0 = Instant::now();
-        let outs = self.dispatch(program, args)?;
+        let mut ws = self.ws.borrow_mut();
+        let w0 = ws.stats();
+        let outs = self.dispatch(&mut ws, program, args)?;
+        let w1 = ws.stats();
+        drop(ws);
         anyhow::ensure!(
             outs.len() == spec.outputs.len(),
             "{program}: produced {} outputs, spec says {}",
@@ -304,7 +353,43 @@ impl Backend for HostBackend {
         let s = stats.entry(program.to_string()).or_default();
         s.calls += 1;
         s.total_s += t0.elapsed().as_secs_f64();
+        s.alloc_bytes += w1.alloc_bytes - w0.alloc_bytes;
+        s.scratch_reuse += w1.reuses - w0.reuses;
         Ok(outs)
+    }
+
+    fn exec_batch(
+        &self,
+        program: &str,
+        calls: &[Vec<TensorView>],
+    ) -> anyhow::Result<Vec<Vec<Tensor>>> {
+        // Amortised path: one manifest lookup, one workspace checkout and
+        // one stats update for the whole batch of calls.
+        let spec = self.manifest.artifact(program)?;
+        let t0 = Instant::now();
+        let mut ws = self.ws.borrow_mut();
+        let w0 = ws.stats();
+        let mut all = Vec::with_capacity(calls.len());
+        for args in calls {
+            validate_args(program, spec, args)?;
+            let outs = self.dispatch(&mut ws, program, args)?;
+            anyhow::ensure!(
+                outs.len() == spec.outputs.len(),
+                "{program}: produced {} outputs, spec says {}",
+                outs.len(),
+                spec.outputs.len()
+            );
+            all.push(outs);
+        }
+        let w1 = ws.stats();
+        drop(ws);
+        let mut stats = self.stats.borrow_mut();
+        let s = stats.entry(program.to_string()).or_default();
+        s.calls += calls.len() as u64;
+        s.total_s += t0.elapsed().as_secs_f64();
+        s.alloc_bytes += w1.alloc_bytes - w0.alloc_bytes;
+        s.scratch_reuse += w1.reuses - w0.reuses;
+        Ok(all)
     }
 
     fn exec_with_params(
@@ -318,6 +403,136 @@ impl Backend for HostBackend {
         args.push(TensorView::f32(&params.theta, &[n]));
         args.extend(rest.iter().cloned());
         self.exec(program, &args)
+    }
+
+    fn exec_with_params_batch(
+        &self,
+        program: &str,
+        params: &ParamStore,
+        rests: &[Vec<TensorView>],
+    ) -> anyhow::Result<Vec<Vec<Tensor>>> {
+        // Bind theta once for the whole batch.
+        let n = params.theta.len();
+        let theta = TensorView::f32(&params.theta, &[n]);
+        let calls: Vec<Vec<TensorView>> = rests
+            .iter()
+            .map(|rest| {
+                let mut args = Vec::with_capacity(rest.len() + 1);
+                args.push(theta.clone());
+                args.extend(rest.iter().cloned());
+                args
+            })
+            .collect();
+        self.exec_batch(program, &calls)
+    }
+
+    fn train_step(
+        &self,
+        program: &str,
+        params: &mut ParamStore,
+        rest: &[TensorView],
+    ) -> anyhow::Result<Vec<Tensor>> {
+        // In-place fast path: the net updates the store's (theta, m, v)
+        // vectors directly — no copies through the exec value contract.
+        // Arguments are still validated against the full manifest spec.
+        let spec = self.manifest.artifact(program)?;
+        {
+            let mut args = params.train_args();
+            args.extend(rest.iter().cloned());
+            validate_args(program, spec, &args)?;
+        }
+        let cfg = &self.cfg;
+        let kc = &cfg.kernels;
+        let t0 = Instant::now();
+        let mut ws = self.ws.borrow_mut();
+        let w0 = ws.stats();
+        let t_new = params.t + 1.0;
+        let outs = match program {
+            "gnn_ae_train" => {
+                let lr = rest[3].scalar_f32()?;
+                let loss = self.gnn.train_step(
+                    &mut ws,
+                    kc,
+                    &mut params.theta,
+                    &mut params.m,
+                    &mut params.v,
+                    t_new,
+                    rest[0].as_f32()?,
+                    rest[1].as_f32()?,
+                    rest[2].as_f32()?,
+                    cfg.b_enc,
+                    lr,
+                );
+                vec![Tensor::from_vec(&[], vec![loss])?]
+            }
+            "ctrl_train" => {
+                let stats = self.ctrl.train_step(
+                    &mut ws,
+                    kc,
+                    &mut params.theta,
+                    &mut params.m,
+                    &mut params.v,
+                    t_new,
+                    rest[0].as_f32()?,
+                    rest[1].as_f32()?,
+                    rest[2].as_i32()?,
+                    rest[3].as_f32()?,
+                    rest[4].as_f32()?,
+                    rest[5].as_f32()?,
+                    rest[6].as_f32()?,
+                    rest[7].as_f32()?,
+                    cfg.b_ppo,
+                    rest[8].scalar_f32()?,
+                    rest[9].scalar_f32()?,
+                    rest[10].scalar_f32()?,
+                );
+                vec![
+                    Tensor::from_vec(&[], vec![stats.pi_loss])?,
+                    Tensor::from_vec(&[], vec![stats.v_loss])?,
+                    Tensor::from_vec(&[], vec![stats.entropy])?,
+                    Tensor::from_vec(&[], vec![stats.approx_kl])?,
+                ]
+            }
+            "wm_train" => {
+                let losses = self.wm.train_step(
+                    &mut ws,
+                    kc,
+                    &mut params.theta,
+                    &mut params.m,
+                    &mut params.v,
+                    t_new,
+                    rest[0].as_f32()?,
+                    rest[1].as_i32()?,
+                    rest[2].as_f32()?,
+                    rest[3].as_f32()?,
+                    rest[4].as_f32()?,
+                    rest[5].as_f32()?,
+                    rest[6].as_f32()?,
+                    cfg.b_wm,
+                    cfg.seq_len,
+                    rest[7].scalar_f32()?,
+                );
+                vec![
+                    Tensor::from_vec(&[], vec![losses.total])?,
+                    Tensor::from_vec(&[], vec![losses.nll])?,
+                    Tensor::from_vec(&[], vec![losses.reward_mse])?,
+                    Tensor::from_vec(&[], vec![losses.mask_bce])?,
+                    Tensor::from_vec(&[], vec![losses.done_bce])?,
+                ]
+            }
+            other => anyhow::bail!("'{other}' is not a train program"),
+        };
+        let w1 = ws.stats();
+        drop(ws);
+        params.t = t_new;
+        params.version += 1;
+        let mut stats = self.stats.borrow_mut();
+        let s = stats.entry(program.to_string()).or_default();
+        s.calls += 1;
+        s.total_s += t0.elapsed().as_secs_f64();
+        s.alloc_bytes += w1.alloc_bytes - w0.alloc_bytes;
+        s.scratch_reuse += w1.reuses - w0.reuses;
+        Ok(outs)
     }
 
     fn stats(&self) -> HashMap<String, ExecStats> {
@@ -482,6 +697,7 @@ mod tests {
             seq_len: 3,
             b_ppo: 4,
             b_enc: 2,
+            kernels: KernelCfg::default(),
         })
     }
 

@@ -1,11 +1,15 @@
-//! Shared numeric kernels for the host backend's native networks: flat
-//! parameter layouts, dense matmul forward/backward pieces, activations,
-//! and the Adam update every `*_train` program applies.
+//! Shared numeric primitives for the host backend's native networks: flat
+//! parameter layouts, the seed scalar matmul forward/backward kernels
+//! (kept as `*_reference` oracles for the blocked kernels in
+//! [`kernels`](super::kernels)), activations, and the Adam update every
+//! `*_train` program applies.
 //!
 //! Conventions: all matrices are row-major; a weight of shape `[in, out]`
 //! maps `y[r, j] = sum_i x[r, i] * w[i, j] + b[j]`. Gradients accumulate
 //! into per-tensor buffers that [`ParamLayout::scatter`] folds back into
 //! the flat gradient vector aligned with theta.
+
+use std::collections::HashSet;
 
 use crate::util::Rng;
 
@@ -14,18 +18,21 @@ use crate::util::Rng;
 /// seeded [`Rng`], so parameters are a pure function of the seed.
 pub struct ParamLayout {
     entries: Vec<(&'static str, usize, usize, usize)>, // (name, offset, len, fan_in)
+    /// Registered names, for the O(1) duplicate probe in `add`.
+    names: HashSet<&'static str>,
     total: usize,
 }
 
 impl ParamLayout {
     pub fn new() -> Self {
-        Self { entries: Vec::new(), total: 0 }
+        Self { entries: Vec::new(), names: HashSet::new(), total: 0 }
     }
 
     /// Register a tensor of `len` elements. `fan_in` scales its init
     /// (`fan_out = len / fan_in`); `fan_in == 0` marks a zero-init bias.
     pub fn add(&mut self, name: &'static str, len: usize, fan_in: usize) {
-        debug_assert!(self.entries.iter().all(|e| e.0 != name), "duplicate param {name}");
+        let _fresh = self.names.insert(name);
+        debug_assert!(_fresh, "duplicate param {name}");
         self.entries.push((name, self.total, len, fan_in));
         self.total += len;
     }
@@ -85,11 +92,15 @@ impl ParamLayout {
 }
 
 // ---------------------------------------------------------------------------
-// Dense kernels
+// Dense kernels — the seed scalar implementations, kept as the numeric
+// oracles for the blocked/threaded kernels in `super::kernels`.
 // ---------------------------------------------------------------------------
 
 /// `y = x w + b` over `m` rows: x `[m,k]`, w `[k,n]`, b `[n]` -> `[m,n]`.
-pub fn linear(x: &[f32], w: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+/// Seed scalar triple loop (reduction order: k ascending, exact zeros in x
+/// skipped) — the oracle [`kernels::linear_into`](super::kernels::linear_into)
+/// must match bit-for-bit.
+pub fn linear_reference(x: &[f32], w: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     debug_assert_eq!(x.len(), m * k);
     debug_assert_eq!(w.len(), k * n);
     debug_assert_eq!(b.len(), n);
@@ -111,8 +122,10 @@ pub fn linear(x: &[f32], w: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> 
     y
 }
 
-/// `dw += xᵀ dy`: x `[m,k]`, dy `[m,n]`, dw `[k,n]`.
-pub fn acc_xt_dy(x: &[f32], dy: &[f32], m: usize, k: usize, n: usize, dw: &mut [f32]) {
+/// `dw += xᵀ dy`: x `[m,k]`, dy `[m,n]`, dw `[k,n]`. Seed scalar loop
+/// (per-element accumulation order: sample row ascending) — the oracle for
+/// [`kernels::acc_xt_dy`](super::kernels::acc_xt_dy).
+pub fn acc_xt_dy_reference(x: &[f32], dy: &[f32], m: usize, k: usize, n: usize, dw: &mut [f32]) {
     debug_assert_eq!(dw.len(), k * n);
     for r in 0..m {
         for i in 0..k {
@@ -129,8 +142,10 @@ pub fn acc_xt_dy(x: &[f32], dy: &[f32], m: usize, k: usize, n: usize, dw: &mut [
     }
 }
 
-/// `dx = dy wᵀ`: dy `[m,n]`, w `[k,n]` -> `[m,k]`.
-pub fn dy_wt(dy: &[f32], w: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+/// `dx = dy wᵀ`: dy `[m,n]`, w `[k,n]` -> `[m,k]`. Seed scalar loop
+/// (reduction order: column ascending) — the oracle for
+/// [`kernels::dy_wt_into`](super::kernels::dy_wt_into).
+pub fn dy_wt_reference(dy: &[f32], w: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
     debug_assert_eq!(dy.len(), m * n);
     debug_assert_eq!(w.len(), k * n);
     let mut dx = vec![0.0f32; m * k];
@@ -251,7 +266,14 @@ mod tests {
     #[test]
     fn linear_matches_manual() {
         // x = [[1, 2]], w = [[1, 0, -1], [2, 1, 0]], b = [0.5, 0, 0]
-        let y = linear(&[1.0, 2.0], &[1.0, 0.0, -1.0, 2.0, 1.0, 0.0], &[0.5, 0.0, 0.0], 1, 2, 3);
+        let y = linear_reference(
+            &[1.0, 2.0],
+            &[1.0, 0.0, -1.0, 2.0, 1.0, 0.0],
+            &[0.5, 0.0, 0.0],
+            1,
+            2,
+            3,
+        );
         assert_eq!(y, vec![5.5, 2.0, -1.0]);
     }
 
@@ -264,12 +286,12 @@ mod tests {
         let b = vec![0.1f32; n];
         // Loss: sum of squares of y.
         let loss = |w: &[f32]| -> f32 {
-            linear(&x, w, &b, m, k, n).iter().map(|v| v * v).sum()
+            linear_reference(&x, w, &b, m, k, n).iter().map(|v| v * v).sum()
         };
-        let y = linear(&x, &w, &b, m, k, n);
+        let y = linear_reference(&x, &w, &b, m, k, n);
         let dy: Vec<f32> = y.iter().map(|v| 2.0 * v).collect();
         let mut dw = vec![0.0f32; k * n];
-        acc_xt_dy(&x, &dy, m, k, n, &mut dw);
+        acc_xt_dy_reference(&x, &dy, m, k, n, &mut dw);
         let eps = 1e-3f32;
         for i in 0..w.len() {
             let orig = w[i];
@@ -282,7 +304,7 @@ mod tests {
             assert!((num - dw[i]).abs() < 2e-2, "dw[{i}]: analytic {} vs numeric {}", dw[i], num);
         }
         // dx against the same loss.
-        let dx = dy_wt(&dy, &w, m, n, k);
+        let dx = dy_wt_reference(&dy, &w, m, n, k);
         assert_eq!(dx.len(), m * k);
     }
 

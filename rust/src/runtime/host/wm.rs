@@ -9,11 +9,14 @@
 //! tensor — input/recurrent weights, action embeddings and all heads —
 //! still receives gradient at every step, while keeping the backward pass
 //! a single LSTM-cell rule.
+//!
+//! Dense math runs through [`super::kernels`]; every intermediate — gate
+//! planes, head activations during training, per-step gather buffers —
+//! cycles through the caller's [`Workspace`], so a steady-state `wm_train`
+//! or `wm_step` call allocates nothing beyond its program outputs.
 
-use super::nn::{
-    acc_rows, acc_xt_dy, adam_step, dy_wt, linear, log_sum_exp, sigmoid, softmax_inplace,
-    softplus, ParamLayout,
-};
+use super::kernels::{acc_xt_dy, dy_wt_acc, dy_wt_into, linear_into, Act, KernelCfg, Workspace};
+use super::nn::{acc_rows, adam_step, log_sum_exp, sigmoid, softmax_inplace, softplus, ParamLayout};
 
 const LN_2PI: f32 = 1.837_877_1;
 
@@ -50,17 +53,52 @@ pub struct WmStepLosses {
 
 /// Forward activations of one batched LSTM step, kept for backward.
 struct CellFwd {
-    x: Vec<f32>,       // [b, I]
-    h_prev: Vec<f32>,  // [b, R]
-    c_prev: Vec<f32>,  // [b, R]
-    gi: Vec<f32>,      // [b, R] sigmoid(i)
-    gf: Vec<f32>,      // [b, R] sigmoid(f)
-    gg: Vec<f32>,      // [b, R] tanh(g)
-    go: Vec<f32>,      // [b, R] sigmoid(o)
-    tanh_c1: Vec<f32>, // [b, R]
+    x: Vec<f32>,        // [b, I]
+    h_prev: Vec<f32>,   // [b, R]
+    c_prev: Vec<f32>,   // [b, R]
+    gi: Vec<f32>,       // [b, R] sigmoid(i)
+    gf: Vec<f32>,       // [b, R] sigmoid(f)
+    gg: Vec<f32>,       // [b, R] tanh(g)
+    go: Vec<f32>,       // [b, R] sigmoid(o)
+    tanh_c1: Vec<f32>,  // [b, R]
     sig_tanh: Vec<f32>, // [b, Z*K] tanh of the raw log_sig head
     heads: WmHeads,
-    ax: Vec<usize>,    // [b] clamped xfer slots (embedding rows)
+    ax: Vec<usize>,     // [b] clamped xfer slots (embedding rows)
+}
+
+impl CellFwd {
+    /// Return every non-head scratch buffer to the arena.
+    fn recycle_scratch(self, ws: &mut Workspace) -> WmHeads {
+        ws.put_all([
+            self.x,
+            self.h_prev,
+            self.c_prev,
+            self.gi,
+            self.gf,
+            self.gg,
+            self.go,
+            self.tanh_c1,
+            self.sig_tanh,
+        ]);
+        ws.put_idx(self.ax);
+        self.heads
+    }
+}
+
+impl WmHeads {
+    /// Return every buffer except the recurrent state to the arena; hands
+    /// `(h1, c1)` back for the teacher-forced advance.
+    fn recycle_except_state(self, ws: &mut Workspace) -> (Vec<f32>, Vec<f32>) {
+        ws.put_all([
+            self.log_pi,
+            self.mu,
+            self.log_sig,
+            self.reward,
+            self.mask_logits,
+            self.done_logits,
+        ]);
+        (self.h1, self.c1)
+    }
 }
 
 impl WmNet {
@@ -104,48 +142,69 @@ impl WmNet {
         self.zdim + self.de + 1
     }
 
-    /// One batched forward step.
+    /// One batched forward step. With `scratch_heads` the head buffers come
+    /// from the workspace (the training path recycles them per timestep);
+    /// without, they are plain allocations that leave as program outputs.
     fn cell_forward(
         &self,
+        ws: &mut Workspace,
+        kc: &KernelCfg,
         theta: &[f32],
         z: &[f32],
         a: &[i32],
         h: &[f32],
         c: &[f32],
         b: usize,
+        scratch_heads: bool,
     ) -> CellFwd {
         let (zd, r, i_dim, zk) = (self.zdim, self.rdim, self.i_dim(), self.zdim * self.k);
+        let out_buf = |ws: &mut Workspace, len: usize| -> Vec<f32> {
+            if scratch_heads {
+                ws.take(len)
+            } else {
+                vec![0.0; len]
+            }
+        };
         // Assemble the LSTM input rows.
         let emb = self.layout.view(theta, "emb");
-        let mut x = vec![0.0f32; b * i_dim];
-        let mut ax = vec![0usize; b];
+        let mut x = ws.take(b * i_dim);
+        let mut ax = ws.take_idx();
         for row in 0..b {
             let slot = (a[row * 2].max(0) as usize).min(self.x1 - 1);
             let loc = a[row * 2 + 1].max(0) as f32 / self.locs.max(1) as f32;
-            ax[row] = slot;
+            ax.push(slot);
             let xr = &mut x[row * i_dim..(row + 1) * i_dim];
             xr[..zd].copy_from_slice(&z[row * zd..(row + 1) * zd]);
             xr[zd..zd + self.de].copy_from_slice(&emb[slot * self.de..(slot + 1) * self.de]);
             xr[zd + self.de] = loc;
         }
 
-        let mut gates = {
-            let wxh = self.layout.view(theta, "wxh");
-            linear(&x, wxh, self.layout.view(theta, "bh"), b, i_dim, 4 * r)
-        };
-        let zero_bias = vec![0.0f32; 4 * r];
-        let rec = linear(h, self.layout.view(theta, "whh"), &zero_bias, b, r, 4 * r);
+        let mut gates = ws.take(b * 4 * r);
+        linear_into(
+            kc,
+            &x,
+            self.layout.view(theta, "wxh"),
+            Some(self.layout.view(theta, "bh")),
+            b,
+            i_dim,
+            4 * r,
+            Act::None,
+            &mut gates,
+        );
+        let mut rec = ws.take(b * 4 * r);
+        linear_into(kc, h, self.layout.view(theta, "whh"), None, b, r, 4 * r, Act::None, &mut rec);
         for (g, rc) in gates.iter_mut().zip(&rec) {
             *g += rc;
         }
+        ws.put(rec);
 
-        let mut gi = vec![0.0f32; b * r];
-        let mut gf = vec![0.0f32; b * r];
-        let mut gg = vec![0.0f32; b * r];
-        let mut go = vec![0.0f32; b * r];
-        let mut c1 = vec![0.0f32; b * r];
-        let mut tanh_c1 = vec![0.0f32; b * r];
-        let mut h1 = vec![0.0f32; b * r];
+        let mut gi = ws.take(b * r);
+        let mut gf = ws.take(b * r);
+        let mut gg = ws.take(b * r);
+        let mut go = ws.take(b * r);
+        let mut c1 = out_buf(ws, b * r);
+        let mut tanh_c1 = ws.take(b * r);
+        let mut h1 = out_buf(ws, b * r);
         for row in 0..b {
             for j in 0..r {
                 let base = row * 4 * r;
@@ -164,29 +223,91 @@ impl WmNet {
                 h1[row * r + j] = o_v * tc;
             }
         }
+        ws.put(gates);
 
-        let log_pi =
-            linear(&h1, self.layout.view(theta, "wpi"), self.layout.view(theta, "bpi"), b, r, zk);
-        let mu =
-            linear(&h1, self.layout.view(theta, "wmu"), self.layout.view(theta, "bmu"), b, r, zk);
-        let sig_raw =
-            linear(&h1, self.layout.view(theta, "wsig"), self.layout.view(theta, "bsig"), b, r, zk);
-        let sig_tanh: Vec<f32> = sig_raw.iter().map(|v| v.tanh()).collect();
-        // log_sig in [-4, 2]: bounded yet smooth, so gradients never die.
-        let log_sig: Vec<f32> = sig_tanh.iter().map(|t| 3.0 * t - 1.0).collect();
-        let reward =
-            linear(&h1, self.layout.view(theta, "wr"), self.layout.view(theta, "br"), b, r, 1);
-        let mask_logits = {
-            let wmk = self.layout.view(theta, "wmk");
-            linear(&h1, wmk, self.layout.view(theta, "bmk"), b, r, self.x1)
-        };
-        let done_logits =
-            linear(&h1, self.layout.view(theta, "wd"), self.layout.view(theta, "bd"), b, r, 1);
+        let mut log_pi = out_buf(ws, b * zk);
+        linear_into(
+            kc,
+            &h1,
+            self.layout.view(theta, "wpi"),
+            Some(self.layout.view(theta, "bpi")),
+            b,
+            r,
+            zk,
+            Act::None,
+            &mut log_pi,
+        );
+        let mut mu = out_buf(ws, b * zk);
+        linear_into(
+            kc,
+            &h1,
+            self.layout.view(theta, "wmu"),
+            Some(self.layout.view(theta, "bmu")),
+            b,
+            r,
+            zk,
+            Act::None,
+            &mut mu,
+        );
+        // sig_raw -> tanh -> affine: log_sig in [-4, 2], bounded yet
+        // smooth, so gradients never die.
+        let mut sig_tanh = ws.take(b * zk);
+        linear_into(
+            kc,
+            &h1,
+            self.layout.view(theta, "wsig"),
+            Some(self.layout.view(theta, "bsig")),
+            b,
+            r,
+            zk,
+            Act::Tanh,
+            &mut sig_tanh,
+        );
+        let mut log_sig = out_buf(ws, b * zk);
+        for (ls, t) in log_sig.iter_mut().zip(&sig_tanh) {
+            *ls = 3.0 * t - 1.0;
+        }
+        let mut reward = out_buf(ws, b);
+        linear_into(
+            kc,
+            &h1,
+            self.layout.view(theta, "wr"),
+            Some(self.layout.view(theta, "br")),
+            b,
+            r,
+            1,
+            Act::None,
+            &mut reward,
+        );
+        let mut mask_logits = out_buf(ws, b * self.x1);
+        linear_into(
+            kc,
+            &h1,
+            self.layout.view(theta, "wmk"),
+            Some(self.layout.view(theta, "bmk")),
+            b,
+            r,
+            self.x1,
+            Act::None,
+            &mut mask_logits,
+        );
+        let mut done_logits = out_buf(ws, b);
+        linear_into(
+            kc,
+            &h1,
+            self.layout.view(theta, "wd"),
+            Some(self.layout.view(theta, "bd")),
+            b,
+            r,
+            1,
+            Act::None,
+            &mut done_logits,
+        );
 
         CellFwd {
             x,
-            h_prev: h.to_vec(),
-            c_prev: c.to_vec(),
+            h_prev: ws.take_copy(h),
+            c_prev: ws.take_copy(c),
             gi,
             gf,
             gg,
@@ -198,9 +319,12 @@ impl WmNet {
         }
     }
 
-    /// The `wm_step_*` forward.
+    /// The `wm_step_*` forward. Head buffers are plain allocations (they
+    /// leave as program outputs); all scratch cycles through `ws`.
     pub fn step(
         &self,
+        ws: &mut Workspace,
+        kc: &KernelCfg,
         theta: &[f32],
         z: &[f32],
         a: &[i32],
@@ -208,7 +332,8 @@ impl WmNet {
         c: &[f32],
         b: usize,
     ) -> WmHeads {
-        self.cell_forward(theta, z, a, h, c, b).heads
+        let fwd = self.cell_forward(ws, kc, theta, z, a, h, c, b, false);
+        fwd.recycle_scratch(ws)
     }
 
     /// One teacher-forced Adam step over `[b, t]` sequence batches
@@ -216,6 +341,8 @@ impl WmNet {
     #[allow(clippy::too_many_arguments)]
     pub fn train_step(
         &self,
+        ws: &mut Workspace,
+        kc: &KernelCfg,
         theta: &mut [f32],
         m: &mut [f32],
         v: &mut [f32],
@@ -235,47 +362,48 @@ impl WmNet {
         let zk = zd * k;
         let denom = valid.iter().sum::<f32>().max(1.0);
 
-        let mut grad = vec![0.0f32; theta.len()];
-        let mut demb = vec![0.0f32; x1 * self.de];
-        let mut dwxh = vec![0.0f32; i_dim * 4 * r];
-        let mut dwhh = vec![0.0f32; r * 4 * r];
-        let mut dbh = vec![0.0f32; 4 * r];
-        let mut dwpi = vec![0.0f32; r * zk];
-        let mut dbpi = vec![0.0f32; zk];
-        let mut dwmu = vec![0.0f32; r * zk];
-        let mut dbmu = vec![0.0f32; zk];
-        let mut dwsig = vec![0.0f32; r * zk];
-        let mut dbsig = vec![0.0f32; zk];
-        let mut dwr = vec![0.0f32; r];
-        let mut dbr = vec![0.0f32; 1];
-        let mut dwmk = vec![0.0f32; r * x1];
-        let mut dbmk = vec![0.0f32; x1];
-        let mut dwd = vec![0.0f32; r];
-        let mut dbd = vec![0.0f32; 1];
+        let mut grad = ws.take(theta.len());
+        let mut demb = ws.take(x1 * self.de);
+        let mut dwxh = ws.take(i_dim * 4 * r);
+        let mut dwhh = ws.take(r * 4 * r);
+        let mut dbh = ws.take(4 * r);
+        let mut dwpi = ws.take(r * zk);
+        let mut dbpi = ws.take(zk);
+        let mut dwmu = ws.take(r * zk);
+        let mut dbmu = ws.take(zk);
+        let mut dwsig = ws.take(r * zk);
+        let mut dbsig = ws.take(zk);
+        let mut dwr = ws.take(r);
+        let mut dbr = ws.take(1);
+        let mut dwmk = ws.take(r * x1);
+        let mut dbmk = ws.take(x1);
+        let mut dwd = ws.take(r);
+        let mut dbd = ws.take(1);
 
         let (mut nll, mut r_mse, mut m_bce, mut d_bce) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-        let mut h = vec![0.0f32; b * r];
-        let mut c = vec![0.0f32; b * r];
+        let mut h = ws.take(b * r);
+        let mut c = ws.take(b * r);
+        let mut lp_buf = ws.take(k);
 
         for ti in 0..t_len {
             // Gather the time-slice into step-batch layout.
-            let mut zs = vec![0.0f32; b * zd];
-            let mut as_ = vec![0i32; b * 2];
+            let mut zs = ws.take(b * zd);
+            let mut as_ = ws.take_i32(b * 2);
             for row in 0..b {
                 let s = (row * t_len + ti) * zd;
                 zs[row * zd..(row + 1) * zd].copy_from_slice(&z[s..s + zd]);
                 as_[row * 2] = a[(row * t_len + ti) * 2];
                 as_[row * 2 + 1] = a[(row * t_len + ti) * 2 + 1];
             }
-            let fwd = self.cell_forward(theta, &zs, &as_, &h, &c, b);
+            let fwd = self.cell_forward(ws, kc, theta, &zs, &as_, &h, &c, b, true);
 
             // ---- losses + head gradients ---------------------------------
-            let mut dlp = vec![0.0f32; b * zk];
-            let mut dmu = vec![0.0f32; b * zk];
-            let mut dls = vec![0.0f32; b * zk];
-            let mut drh = vec![0.0f32; b];
-            let mut dmk = vec![0.0f32; b * x1];
-            let mut ddn = vec![0.0f32; b];
+            let mut dlp = ws.take(b * zk);
+            let mut dmu = ws.take(b * zk);
+            let mut dls = ws.take(b * zk);
+            let mut drh = ws.take(b);
+            let mut dmk = ws.take(b * x1);
+            let mut ddn = ws.take(b);
             for row in 0..b {
                 let wv = valid[row * t_len + ti] / denom;
                 if wv == 0.0 {
@@ -288,17 +416,16 @@ impl WmNet {
                     let raw = &fwd.heads.log_pi[base..base + k];
                     let lse_pi = log_sum_exp(raw);
                     let x_t = z_next[(row * t_len + ti) * zd + d];
-                    let mut lp = vec![0.0f32; k];
                     for kk in 0..k {
                         let lsg = fwd.heads.log_sig[base + kk];
                         let sg = lsg.exp();
                         let dev = (x_t - fwd.heads.mu[base + kk]) / sg;
-                        lp[kk] = (raw[kk] - lse_pi) - lsg - 0.5 * LN_2PI - 0.5 * dev * dev;
+                        lp_buf[kk] = (raw[kk] - lse_pi) - lsg - 0.5 * LN_2PI - 0.5 * dev * dev;
                     }
-                    let nll_d = -log_sum_exp(&lp);
+                    let nll_d = -log_sum_exp(&lp_buf);
                     nll += nll_d * wdim;
-                    let mut gamma = lp;
-                    softmax_inplace(&mut gamma);
+                    let gamma = &mut lp_buf;
+                    softmax_inplace(gamma);
                     for kk in 0..k {
                         let pi_k = (raw[kk] - lse_pi).exp();
                         let lsg = fwd.heads.log_sig[base + kk];
@@ -336,42 +463,28 @@ impl WmNet {
                 *d *= 3.0 * (1.0 - th * th);
             }
             let h1 = &fwd.heads.h1;
-            acc_xt_dy(h1, &dlp, b, r, zk, &mut dwpi);
+            acc_xt_dy(kc, h1, &dlp, b, r, zk, &mut dwpi);
             acc_rows(&dlp, b, zk, &mut dbpi);
-            acc_xt_dy(h1, &dmu, b, r, zk, &mut dwmu);
+            acc_xt_dy(kc, h1, &dmu, b, r, zk, &mut dwmu);
             acc_rows(&dmu, b, zk, &mut dbmu);
-            acc_xt_dy(h1, &dsig_raw, b, r, zk, &mut dwsig);
+            acc_xt_dy(kc, h1, &dsig_raw, b, r, zk, &mut dwsig);
             acc_rows(&dsig_raw, b, zk, &mut dbsig);
-            acc_xt_dy(h1, &drh, b, r, 1, &mut dwr);
+            acc_xt_dy(kc, h1, &drh, b, r, 1, &mut dwr);
             acc_rows(&drh, b, 1, &mut dbr);
-            acc_xt_dy(h1, &dmk, b, r, x1, &mut dwmk);
+            acc_xt_dy(kc, h1, &dmk, b, r, x1, &mut dwmk);
             acc_rows(&dmk, b, x1, &mut dbmk);
-            acc_xt_dy(h1, &ddn, b, r, 1, &mut dwd);
+            acc_xt_dy(kc, h1, &ddn, b, r, 1, &mut dwd);
             acc_rows(&ddn, b, 1, &mut dbd);
 
-            let mut dh1 = dy_wt(&dlp, self.layout.view(theta, "wpi"), b, zk, r);
-            let wmu = self.layout.view(theta, "wmu");
-            for (dst, add) in dh1.iter_mut().zip(dy_wt(&dmu, wmu, b, zk, r)) {
-                *dst += add;
-            }
-            let wsig = self.layout.view(theta, "wsig");
-            for (dst, add) in dh1.iter_mut().zip(dy_wt(&dsig_raw, wsig, b, zk, r)) {
-                *dst += add;
-            }
-            let wr = self.layout.view(theta, "wr");
-            for (dst, add) in dh1.iter_mut().zip(dy_wt(&drh, wr, b, 1, r)) {
-                *dst += add;
-            }
-            let wmk = self.layout.view(theta, "wmk");
-            for (dst, add) in dh1.iter_mut().zip(dy_wt(&dmk, wmk, b, x1, r)) {
-                *dst += add;
-            }
-            let wd = self.layout.view(theta, "wd");
-            for (dst, add) in dh1.iter_mut().zip(dy_wt(&ddn, wd, b, 1, r)) {
-                *dst += add;
-            }
+            let mut dh1 = ws.take(b * r);
+            dy_wt_into(kc, &dlp, self.layout.view(theta, "wpi"), b, zk, r, &mut dh1);
+            dy_wt_acc(kc, &dmu, self.layout.view(theta, "wmu"), b, zk, r, &mut dh1);
+            dy_wt_acc(kc, &dsig_raw, self.layout.view(theta, "wsig"), b, zk, r, &mut dh1);
+            dy_wt_acc(kc, &drh, self.layout.view(theta, "wr"), b, 1, r, &mut dh1);
+            dy_wt_acc(kc, &dmk, self.layout.view(theta, "wmk"), b, x1, r, &mut dh1);
+            dy_wt_acc(kc, &ddn, self.layout.view(theta, "wd"), b, 1, r, &mut dh1);
 
-            let mut dgates = vec![0.0f32; b * 4 * r];
+            let mut dgates = ws.take(b * 4 * r);
             for row in 0..b {
                 for j in 0..r {
                     let idx = row * r + j;
@@ -393,10 +506,11 @@ impl WmNet {
                     dgates[base + 3 * r + j] = do_pre;
                 }
             }
-            acc_xt_dy(&fwd.x, &dgates, b, i_dim, 4 * r, &mut dwxh);
-            acc_xt_dy(&fwd.h_prev, &dgates, b, r, 4 * r, &mut dwhh);
+            acc_xt_dy(kc, &fwd.x, &dgates, b, i_dim, 4 * r, &mut dwxh);
+            acc_xt_dy(kc, &fwd.h_prev, &dgates, b, r, 4 * r, &mut dwhh);
             acc_rows(&dgates, b, 4 * r, &mut dbh);
-            let dx = dy_wt(&dgates, self.layout.view(theta, "wxh"), b, 4 * r, i_dim);
+            let mut dx = ws.take(b * i_dim);
+            dy_wt_into(kc, &dgates, self.layout.view(theta, "wxh"), b, 4 * r, i_dim, &mut dx);
             for row in 0..b {
                 let slot = fwd.ax[row];
                 for e in 0..self.de {
@@ -404,9 +518,15 @@ impl WmNet {
                 }
             }
 
-            // Teacher forcing: advance the (detached) recurrent state.
-            h = fwd.heads.h1;
-            c = fwd.heads.c1;
+            ws.put_all([dlp, dmu, dsig_raw, drh, dmk, ddn, dh1, dgates, dx, zs]);
+            ws.put_i32(as_);
+
+            // Teacher forcing: advance the (detached) recurrent state and
+            // recycle everything else from this timestep.
+            let heads = fwd.recycle_scratch(ws);
+            let (h1, c1) = heads.recycle_except_state(ws);
+            ws.put(std::mem::replace(&mut h, h1));
+            ws.put(std::mem::replace(&mut c, c1));
         }
 
         self.layout.scatter(&mut grad, "emb", &demb);
@@ -426,6 +546,9 @@ impl WmNet {
         self.layout.scatter(&mut grad, "wd", &dwd);
         self.layout.scatter(&mut grad, "bd", &dbd);
         adam_step(theta, m, v, t_adam, &grad, lr);
+
+        ws.put_all([grad, demb, dwxh, dwhh, dbh, dwpi, dbpi, dwmu, dbmu, dwsig, dbsig]);
+        ws.put_all([dwr, dbr, dwmk, dbmk, dwd, dbd, h, c, lp_buf]);
 
         WmStepLosses {
             total: nll + r_mse + m_bce + d_bce,
@@ -449,28 +572,57 @@ mod tests {
     #[test]
     fn step_shapes_and_evolution() {
         let n = net();
+        let mut ws = Workspace::new();
+        let kc = KernelCfg::default();
         let theta = n.init(1);
         let b = 2;
         let z = vec![0.3f32; b * 4];
         let a = vec![1i32, 2, 4, 0];
         let h = vec![0.0f32; b * 6];
         let c = vec![0.0f32; b * 6];
-        let out = n.step(&theta, &z, &a, &h, &c, b);
+        let out = n.step(&mut ws, &kc, &theta, &z, &a, &h, &c, b);
         assert_eq!(out.log_pi.len(), b * 4 * 2);
         assert_eq!(out.mask_logits.len(), b * 5);
         assert_eq!(out.h1.len(), b * 6);
         assert!(out.h1.iter().any(|v| v.abs() > 0.0), "hidden state did not evolve");
         assert!(out.log_sig.iter().all(|v| (-4.0..=2.0).contains(v)));
         // Deterministic.
-        let again = n.step(&theta, &z, &a, &h, &c, b);
+        let again = n.step(&mut ws, &kc, &theta, &z, &a, &h, &c, b);
         assert_eq!(out.h1, again.h1);
         assert_eq!(out.log_pi, again.log_pi);
+    }
+
+    #[test]
+    fn step_is_mode_and_thread_invariant() {
+        let n = net();
+        let theta = n.init(8);
+        let b = 3;
+        let mut rng = Rng::new(4);
+        let z: Vec<f32> = (0..b * 4).map(|_| rng.normal() * 0.5).collect();
+        let a: Vec<i32> = (0..b * 2).map(|i| (i % 5) as i32).collect();
+        let h: Vec<f32> = (0..b * 6).map(|_| rng.normal() * 0.2).collect();
+        let c: Vec<f32> = (0..b * 6).map(|_| rng.normal() * 0.2).collect();
+        let mut ws = Workspace::new();
+        let want = n.step(&mut ws, &KernelCfg::reference(), &theta, &z, &a, &h, &c, b);
+        for threads in [1, 2, 8] {
+            let got = n.step(&mut ws, &KernelCfg::blocked(threads), &theta, &z, &a, &h, &c, b);
+            assert_eq!(want.log_pi, got.log_pi);
+            assert_eq!(want.mu, got.mu);
+            assert_eq!(want.log_sig, got.log_sig);
+            assert_eq!(want.reward, got.reward);
+            assert_eq!(want.mask_logits, got.mask_logits);
+            assert_eq!(want.done_logits, got.done_logits);
+            assert_eq!(want.h1, got.h1);
+            assert_eq!(want.c1, got.c1);
+        }
     }
 
     #[test]
     fn train_decreases_loss_on_synthetic_dynamics() {
         // z_next = 0.9 z, constant small reward, all-valid masks.
         let n = net();
+        let mut ws = Workspace::new();
+        let kc = KernelCfg::default();
         let mut theta = n.init(3);
         let mut m = vec![0.0f32; theta.len()];
         let mut v = vec![0.0f32; theta.len()];
@@ -485,16 +637,16 @@ mod tests {
         let valid = vec![1.0f32; b * t];
         let first = n
             .train_step(
-                &mut theta, &mut m, &mut v, 1.0, &z, &a, &z_next, &r, &xm, &done, &valid, b, t,
-                1e-2,
+                &mut ws, &kc, &mut theta, &mut m, &mut v, 1.0, &z, &a, &z_next, &r, &xm, &done,
+                &valid, b, t, 1e-2,
             )
             .total;
         let mut last = first;
         for step in 2..=60 {
             last = n
                 .train_step(
-                    &mut theta, &mut m, &mut v, step as f32, &z, &a, &z_next, &r, &xm, &done,
-                    &valid, b, t, 1e-2,
+                    &mut ws, &kc, &mut theta, &mut m, &mut v, step as f32, &z, &a, &z_next, &r,
+                    &xm, &done, &valid, b, t, 1e-2,
                 )
                 .total;
         }
@@ -503,14 +655,53 @@ mod tests {
     }
 
     #[test]
+    fn train_scratch_is_fully_recycled() {
+        let n = net();
+        let mut ws = Workspace::new();
+        let kc = KernelCfg::blocked(2);
+        let mut theta = n.init(7);
+        let mut m = vec![0.0f32; theta.len()];
+        let mut v = vec![0.0f32; theta.len()];
+        let (b, t) = (2, 3);
+        let z = vec![0.5f32; b * t * 4];
+        let a = vec![1i32; b * t * 2];
+        let z_next = vec![0.4f32; b * t * 4];
+        let r = vec![0.1f32; b * t];
+        let xm = vec![1.0f32; b * t * 5];
+        let done = vec![0.0f32; b * t];
+        let valid = vec![1.0f32; b * t];
+        n.train_step(
+            &mut ws, &kc, &mut theta, &mut m, &mut v, 1.0, &z, &a, &z_next, &r, &xm, &done,
+            &valid, b, t, 1e-3,
+        );
+        let warm = ws.stats();
+        for step in 2..=6 {
+            n.train_step(
+                &mut ws, &kc, &mut theta, &mut m, &mut v, step as f32, &z, &a, &z_next, &r, &xm,
+                &done, &valid, b, t, 1e-3,
+            );
+        }
+        let now = ws.stats();
+        assert_eq!(
+            warm.alloc_bytes, now.alloc_bytes,
+            "steady-state wm_train must allocate no scratch"
+        );
+        assert!(now.reuses > warm.reuses);
+    }
+
+    #[test]
     fn invalid_steps_carry_no_gradient() {
         let n = net();
+        let mut ws = Workspace::new();
+        let kc = KernelCfg::default();
         let theta0 = n.init(5);
         let mut theta = theta0.clone();
         let mut m = vec![0.0f32; theta.len()];
         let mut v = vec![0.0f32; theta.len()];
         let (b, t) = (2, 3);
         let losses = n.train_step(
+            &mut ws,
+            &kc,
             &mut theta,
             &mut m,
             &mut v,

@@ -52,8 +52,16 @@ impl<'b> WorldModel<'b> {
         Ok(Self { backend, dims: WmDims::from_manifest(backend.manifest())? })
     }
 
-    /// Advance the recurrent model one step for `actions.len()` rows
-    /// (1 or B_DREAM — the two exported batch widths).
+    /// Advance the recurrent model one step for `actions.len()` rows.
+    ///
+    /// `b == 1` and `b == B_DREAM` map directly onto the exported
+    /// programs; any other width (e.g. the alive rows of an EnvPool
+    /// evaluation pass) is chunked into `B_DREAM`-wide calls — the last
+    /// chunk padded by repeating its first row — and dispatched as one
+    /// [`exec_with_params_batch`](crate::runtime::Backend::exec_with_params_batch).
+    /// Rows are computed independently by the backend programs, so the
+    /// per-row outputs are bit-identical to `b` separate `wm_step_1`
+    /// calls.
     pub fn step(
         &self,
         wm: &ParamStore,
@@ -68,39 +76,104 @@ impl<'b> WorldModel<'b> {
             z.len() == b * d.zdim && h.len() == b * d.rdim && c.len() == b * d.rdim,
             "wm step: bad state sizes for batch {b}"
         );
-        let program = if b == 1 {
-            "wm_step_1"
-        } else if b == d.b_dream {
-            "wm_step_b"
-        } else {
-            anyhow::bail!("wm step: batch {b} matches neither 1 nor B_DREAM {}", d.b_dream)
-        };
         let mut a = Vec::with_capacity(b * 2);
         for act in actions {
             a.push(act.slot as i32);
             a.push(act.loc as i32);
         }
-        let out = self.backend.exec_with_params(
-            program,
-            wm,
-            &[
-                TensorView::f32(z, &[b, d.zdim]),
-                TensorView::i32(&a, &[b, 2]),
-                TensorView::f32(h, &[b, d.rdim]),
-                TensorView::f32(c, &[b, d.rdim]),
-            ],
-        )?;
-        anyhow::ensure!(out.len() == 8, "wm step: expected 8 outputs, got {}", out.len());
-        let mut it = out.into_iter().map(|t| t.data);
-        Ok(WmStepOut {
-            log_pi: it.next().unwrap(),
-            mu: it.next().unwrap(),
-            log_sig: it.next().unwrap(),
-            rewards: it.next().unwrap(),
-            mask_logits: it.next().unwrap(),
-            done_logits: it.next().unwrap(),
-            h1: it.next().unwrap(),
-            c1: it.next().unwrap(),
-        })
+        if b == 1 || b == d.b_dream {
+            let program = if b == 1 { "wm_step_1" } else { "wm_step_b" };
+            let out = self.backend.exec_with_params(
+                program,
+                wm,
+                &[
+                    TensorView::f32(z, &[b, d.zdim]),
+                    TensorView::i32(&a, &[b, 2]),
+                    TensorView::f32(h, &[b, d.rdim]),
+                    TensorView::f32(c, &[b, d.rdim]),
+                ],
+            )?;
+            anyhow::ensure!(out.len() == 8, "wm step: expected 8 outputs, got {}", out.len());
+            let mut it = out.into_iter().map(|t| t.data);
+            return Ok(WmStepOut {
+                log_pi: it.next().unwrap(),
+                mu: it.next().unwrap(),
+                log_sig: it.next().unwrap(),
+                rewards: it.next().unwrap(),
+                mask_logits: it.next().unwrap(),
+                done_logits: it.next().unwrap(),
+                h1: it.next().unwrap(),
+                c1: it.next().unwrap(),
+            });
+        }
+        // Chunk + pad to the exported B_DREAM width.
+        let bb = d.b_dream;
+        let n_chunks = b.div_ceil(bb);
+        struct Chunk {
+            z: Vec<f32>,
+            a: Vec<i32>,
+            h: Vec<f32>,
+            c: Vec<f32>,
+        }
+        let mut chunks: Vec<Chunk> = Vec::with_capacity(n_chunks);
+        for ci in 0..n_chunks {
+            let lo = ci * bb;
+            let hi = (lo + bb).min(b);
+            let mut ch = Chunk {
+                z: Vec::with_capacity(bb * d.zdim),
+                a: Vec::with_capacity(bb * 2),
+                h: Vec::with_capacity(bb * d.rdim),
+                c: Vec::with_capacity(bb * d.rdim),
+            };
+            for row in lo..hi {
+                ch.z.extend_from_slice(&z[row * d.zdim..(row + 1) * d.zdim]);
+                ch.a.extend_from_slice(&a[row * 2..(row + 1) * 2]);
+                ch.h.extend_from_slice(&h[row * d.rdim..(row + 1) * d.rdim]);
+                ch.c.extend_from_slice(&c[row * d.rdim..(row + 1) * d.rdim]);
+            }
+            for _ in hi..lo + bb {
+                ch.z.extend_from_slice(&z[lo * d.zdim..(lo + 1) * d.zdim]);
+                ch.a.extend_from_slice(&a[lo * 2..(lo + 1) * 2]);
+                ch.h.extend_from_slice(&h[lo * d.rdim..(lo + 1) * d.rdim]);
+                ch.c.extend_from_slice(&c[lo * d.rdim..(lo + 1) * d.rdim]);
+            }
+            chunks.push(ch);
+        }
+        let rests: Vec<Vec<TensorView>> = chunks
+            .iter()
+            .map(|ch| {
+                vec![
+                    TensorView::f32(&ch.z, &[bb, d.zdim]),
+                    TensorView::i32(&ch.a, &[bb, 2]),
+                    TensorView::f32(&ch.h, &[bb, d.rdim]),
+                    TensorView::f32(&ch.c, &[bb, d.rdim]),
+                ]
+            })
+            .collect();
+        let outs = self.backend.exec_with_params_batch("wm_step_b", wm, &rests)?;
+        let zk = d.zdim * d.k;
+        let mut res = WmStepOut {
+            log_pi: Vec::with_capacity(b * zk),
+            mu: Vec::with_capacity(b * zk),
+            log_sig: Vec::with_capacity(b * zk),
+            rewards: Vec::with_capacity(b),
+            mask_logits: Vec::with_capacity(b * d.x1),
+            done_logits: Vec::with_capacity(b),
+            h1: Vec::with_capacity(b * d.rdim),
+            c1: Vec::with_capacity(b * d.rdim),
+        };
+        for (ci, out) in outs.into_iter().enumerate() {
+            anyhow::ensure!(out.len() == 8, "wm step: expected 8 outputs, got {}", out.len());
+            let real = (b - ci * bb).min(bb);
+            res.log_pi.extend_from_slice(&out[0].data[..real * zk]);
+            res.mu.extend_from_slice(&out[1].data[..real * zk]);
+            res.log_sig.extend_from_slice(&out[2].data[..real * zk]);
+            res.rewards.extend_from_slice(&out[3].data[..real]);
+            res.mask_logits.extend_from_slice(&out[4].data[..real * d.x1]);
+            res.done_logits.extend_from_slice(&out[5].data[..real]);
+            res.h1.extend_from_slice(&out[6].data[..real * d.rdim]);
+            res.c1.extend_from_slice(&out[7].data[..real * d.rdim]);
+        }
+        Ok(res)
     }
 }

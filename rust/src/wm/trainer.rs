@@ -148,6 +148,8 @@ impl<'e> WmTrainer<'e> {
     }
 
     /// One gradient step; returns the component losses (Fig. 8's curve).
+    /// Driven through [`Backend::train_step`], so the host backend updates
+    /// the store's Adam state in place.
     pub fn train_step(
         &self,
         wm: &mut ParamStore,
@@ -157,18 +159,16 @@ impl<'e> WmTrainer<'e> {
         rng: &mut Rng,
     ) -> anyhow::Result<WmLosses> {
         let batch = self.make_batch(episodes, reward_scale, rng)?;
-        let mut args = wm.train_args();
-        args.extend(batch.views());
-        args.push(TensorView::ScalarF32(lr));
-        let out = self.backend.exec("wm_train", &args)?;
-        drop(args);
-        wm.absorb(&out)?;
+        let mut rest = batch.views();
+        rest.push(TensorView::ScalarF32(lr));
+        let out = self.backend.train_step("wm_train", wm, &rest)?;
+        drop(rest);
         Ok(WmLosses {
-            total: out[4].data[0],
-            nll: out[5].data[0],
-            reward_mse: out[6].data[0],
-            mask_bce: out[7].data[0],
-            done_bce: out[8].data[0],
+            total: out[0].data[0],
+            nll: out[1].data[0],
+            reward_mse: out[2].data[0],
+            mask_bce: out[3].data[0],
+            done_bce: out[4].data[0],
         })
     }
 }

@@ -19,7 +19,7 @@ use crate::graph::{Activation, Graph, NodeId, OpKind, PadMode, PortRef};
 use crate::pred;
 
 use super::apply::{live_op, splice, splice_port};
-use super::matcher::{find_chains, find_siblings, sorted_consumers, OpPred, OpRelevance};
+use super::matcher::{find_chains, find_siblings, sorted_consumers_vec, OpPred, OpRelevance};
 use super::{Location, Rule, RuleSet};
 
 /// A rule defined by a pair of closures, plus an optional operator
@@ -699,7 +699,7 @@ fn absorb_transpose_rhs() -> Box<dyn Rule> {
             |op| matches!(op, OpKind::MatMul { trans_b: false, .. }),
         ],
         |g| {
-            let cons = sorted_consumers(g);
+            let cons = sorted_consumers_vec(g);
             let mut out = Vec::new();
             for id in g.live_ids() {
                 let n = g.node(id);
@@ -721,7 +721,7 @@ fn absorb_transpose_rhs() -> Box<dyn Rule> {
                     continue;
                 }
                 // Transpose must be exclusively feeding this matmul.
-                if cons.get(&rhs.node).map(|v| v.len()) != Some(1) {
+                if cons[rhs.node.index()].len() != 1 {
                     continue;
                 }
                 out.push(vec![rhs.node, id]);
@@ -819,7 +819,7 @@ fn elim_split_concat() -> Box<dyn Rule> {
         ],
         |g| {
             let mut out = Vec::new();
-            let cons = sorted_consumers(g);
+            let cons = sorted_consumers_vec(g);
             for id in g.live_ids() {
                 let n = g.node(id);
                 let OpKind::Concat { axis } = n.op else { continue };
@@ -838,7 +838,8 @@ fn elim_split_concat() -> Box<dyn Rule> {
                     .iter()
                     .enumerate()
                     .all(|(i, p)| p.node == src && p.port as usize == i);
-                let sole = cons.get(&src).map(|v| v.iter().all(|(c, _)| *c == id)).unwrap_or(false);
+                let sc = &cons[src.index()];
+                let sole = !sc.is_empty() && sc.iter().all(|(c, _)| *c == id);
                 if in_order && sole {
                     out.push(vec![src, id]);
                 }

@@ -11,7 +11,7 @@ use crate::pred;
 
 use super::apply::{live_op, splice, splice_port};
 use super::library::rule_rel;
-use super::matcher::{find_chains, find_siblings, sorted_consumers};
+use super::matcher::{find_chains, find_siblings, sorted_consumers_vec};
 use super::Rule;
 
 /// Merge two parallel `ConvBias` branches with identical attributes and
@@ -68,7 +68,7 @@ pub fn absorb_transpose_lhs() -> Box<dyn Rule> {
             |op| matches!(op, OpKind::MatMul { trans_a: false, .. }),
         ],
         |g| {
-            let cons = sorted_consumers(g);
+            let cons = sorted_consumers_vec(g);
             let mut out = Vec::new();
             for id in g.live_ids() {
                 let n = g.node(id);
@@ -85,7 +85,7 @@ pub fn absorb_transpose_lhs() -> Box<dyn Rule> {
                 }
                 let mut want: Vec<usize> = (0..r).collect();
                 want.swap(r - 2, r - 1);
-                if perm != &want || cons.get(&lhs.node).map(|v| v.len()) != Some(1) {
+                if perm != &want || cons[lhs.node.index()].len() != 1 {
                     continue;
                 }
                 out.push(vec![lhs.node, id]);
@@ -194,7 +194,7 @@ pub fn pull_transpose_out_of_add() -> Box<dyn Rule> {
             |op| matches!(op, OpKind::Add),
         ],
         |g| {
-            let cons = sorted_consumers(g);
+            let cons = sorted_consumers_vec(g);
             let mut out = Vec::new();
             for id in g.live_ids() {
                 let n = g.node(id);
@@ -209,7 +209,7 @@ pub fn pull_transpose_out_of_add() -> Box<dyn Rule> {
                 if qa != qb || pa.node == pb.node {
                     continue;
                 }
-                let sole = |t: NodeId| cons.get(&t).map(|v| v.len()) == Some(1);
+                let sole = |t: NodeId| cons[t.index()].len() == 1;
                 if sole(pa.node) && sole(pb.node) {
                     out.push(vec![pa.node, pb.node, id]);
                 }
@@ -243,7 +243,7 @@ pub fn hoist_scale_matmul_rhs() -> Box<dyn Rule> {
             |op| matches!(op, OpKind::MatMul { act: Activation::None, .. }),
         ],
         |g| {
-            let cons = sorted_consumers(g);
+            let cons = sorted_consumers_vec(g);
             let mut out = Vec::new();
             for id in g.live_ids() {
                 let n = g.node(id);
@@ -252,7 +252,7 @@ pub fn hoist_scale_matmul_rhs() -> Box<dyn Rule> {
                 if !matches!(g.node(rhs.node).op, OpKind::Scale { .. }) {
                     continue;
                 }
-                if cons.get(&rhs.node).map(|v| v.len()) != Some(1) {
+                if cons[rhs.node.index()].len() != 1 {
                     continue;
                 }
                 out.push(vec![rhs.node, id]);

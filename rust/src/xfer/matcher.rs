@@ -40,6 +40,10 @@ macro_rules! pred {
 }
 
 /// consumers map with deterministic ordering (by consumer id, then slot).
+///
+/// HashMap form for cold callers; the matcher and rule-library hot paths
+/// use the dense [`sorted_consumers_vec`] (the arena-indexed lists come
+/// out of graph construction already in `(consumer, slot)` order).
 pub fn sorted_consumers(g: &Graph) -> HashMap<NodeId, Vec<(NodeId, usize)>> {
     let mut map = g.consumers();
     for v in map.values_mut() {
@@ -48,16 +52,19 @@ pub fn sorted_consumers(g: &Graph) -> HashMap<NodeId, Vec<(NodeId, usize)>> {
     map
 }
 
+/// Dense consumer lists indexed by `NodeId::index`, each sorted by
+/// `(consumer id, slot)` — the allocation-light form of
+/// [`sorted_consumers`] the per-step matcher hot path uses.
+pub fn sorted_consumers_vec(g: &Graph) -> Vec<Vec<(NodeId, usize)>> {
+    let cons = g.consumers_vec();
+    debug_assert!(cons.iter().all(|v| v.windows(2).all(|w| w[0] <= w[1])));
+    cons
+}
+
 /// Does `id` have exactly one consumer, and is it `next` reading port 0?
-fn sole_consumer_is(
-    cons: &HashMap<NodeId, Vec<(NodeId, usize)>>,
-    id: NodeId,
-    next: NodeId,
-) -> bool {
-    match cons.get(&id) {
-        Some(v) => v.len() == 1 && v[0].0 == next,
-        None => false,
-    }
+fn sole_consumer_is(cons: &[Vec<(NodeId, usize)>], id: NodeId, next: NodeId) -> bool {
+    let v = &cons[id.index()];
+    v.len() == 1 && v[0].0 == next
 }
 
 /// Find all chains `[n0, n1, ..., nk]` with `ni -> ni+1` dataflow where
@@ -66,7 +73,7 @@ fn sole_consumer_is(
 /// node-id order of the chain head.
 pub fn find_chains(g: &Graph, preds: &[OpPred]) -> Vec<Vec<NodeId>> {
     assert!(preds.len() >= 2, "chains need at least two positions");
-    let cons = sorted_consumers(g);
+    let cons = sorted_consumers_vec(g);
     let mut out = Vec::new();
     for head in g.live_ids() {
         if !(preds[0].test)(&g.node(head).op) {
@@ -77,8 +84,8 @@ pub fn find_chains(g: &Graph, preds: &[OpPred]) -> Vec<Vec<NodeId>> {
         for pred in &preds[1..] {
             let cur = *chain.last().unwrap();
             // The follower must read `cur` (port 0 of it) as first input.
-            let next = match cons.get(&cur) {
-                Some(v) if v.len() == 1 => v[0].0,
+            let next = match &cons[cur.index()] {
+                v if v.len() == 1 => v[0].0,
                 _ => {
                     ok = false;
                     break;
@@ -165,10 +172,7 @@ fn combinations(items: &[NodeId], k: usize, out: &mut Vec<Vec<NodeId>>) {
 /// Is every consumer of `id` within `allowed`? (Safe-deletion check for
 /// interior nodes of a match.)
 pub fn consumers_within(g: &Graph, id: NodeId, allowed: &[NodeId]) -> bool {
-    g.consumers()
-        .get(&id)
-        .map(|v| v.iter().all(|(c, _)| allowed.contains(c)))
-        .unwrap_or(true)
+    g.consumers_vec()[id.index()].iter().all(|(c, _)| allowed.contains(c))
 }
 
 /// Operator fingerprint of a rule's pattern: the union of the op

@@ -35,6 +35,7 @@ fn tiny_config() -> HostConfig {
         seq_len: 4,
         b_ppo: 16,
         b_enc: 4,
+        kernels: rlflow::runtime::KernelCfg::default(),
     }
 }
 

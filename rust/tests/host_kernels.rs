@@ -1,0 +1,362 @@
+//! Tier-1 coverage of the host kernel layer (PR 5): blocked/threaded
+//! kernels bit-identical to the seed scalar reference at every thread
+//! count — from the raw GEMMs up through whole programs and the full
+//! training loop — plus the Workspace zero-alloc steady state and the
+//! batched-exec equivalences (`exec_batch`, arbitrary-width
+//! `act_batch`/`WorldModel::step`).
+
+use rlflow::agent::{Action, ObsBatch, PolicyNet};
+use rlflow::config::RunConfig;
+use rlflow::coordinator::Pipeline;
+use rlflow::graph::{GraphBuilder, PadMode};
+use rlflow::runtime::{
+    Backend, HostBackend, HostConfig, KernelCfg, ParamStore, TensorView,
+};
+use rlflow::util::Rng;
+use rlflow::wm::WorldModel;
+use rlflow::xfer::library::standard_library;
+
+fn tiny_config(kernels: KernelCfg) -> HostConfig {
+    HostConfig {
+        max_nodes: 48,
+        node_feats: 32,
+        gnn_hidden: 12,
+        latent: 8,
+        rnn_hidden: 12,
+        mdn_k: 2,
+        act_emb: 4,
+        ctrl_hidden: 16,
+        n_xfers1: standard_library().len() + 1,
+        max_locs: 200,
+        b_dream: 4,
+        b_wm: 4,
+        seq_len: 4,
+        b_ppo: 16,
+        b_enc: 4,
+        kernels,
+    }
+}
+
+fn small_graph() -> rlflow::graph::Graph {
+    let mut b = GraphBuilder::new();
+    let x = b.input(&[1, 3, 16, 16]);
+    let c1 = b.conv_bn_relu(x, 8, 3, 1, PadMode::Same).unwrap();
+    let c2 = b.conv(c1, 8, 1, 1, PadMode::Same).unwrap();
+    let r = b.relu(c2).unwrap();
+    let _ = b.maxpool(r, 2, 2).unwrap();
+    b.finish()
+}
+
+fn tiny_run_config() -> RunConfig {
+    let mut cfg = RunConfig::smoke();
+    cfg.backend = "host".into();
+    cfg.collect_episodes = 3;
+    cfg.ae_steps = 2;
+    cfg.wm.total_steps = 3;
+    cfg.dream_epochs = 2;
+    cfg.dream_horizon = 3;
+    cfg.ppo.epochs = 2;
+    cfg.env.max_steps = 5;
+    cfg
+}
+
+/// The acceptance pin: the complete training loop produces bit-identical
+/// parameters on the seed scalar kernels and on the blocked kernels at
+/// thread counts 1, 2 and 8.
+#[test]
+fn full_training_loop_is_bit_identical_across_kernel_modes_and_threads() {
+    let run = |kernels: KernelCfg| {
+        let backend = HostBackend::with_config(tiny_config(kernels));
+        let cfg = tiny_run_config();
+        let pipe = Pipeline::new(&backend).unwrap();
+        let agent =
+            rlflow::experiments::train_model_based(&pipe, &cfg, &small_graph(), cfg.seed).unwrap();
+        (agent.gnn.theta, agent.wm.theta, agent.ctrl.theta)
+    };
+    let seed = run(KernelCfg::reference());
+    for threads in [1, 2, 8] {
+        let got = run(KernelCfg::blocked(threads));
+        assert_eq!(seed.0, got.0, "gnn theta drifted at {threads} threads");
+        assert_eq!(seed.1, got.1, "wm theta drifted at {threads} threads");
+        assert_eq!(seed.2, got.2, "ctrl theta drifted at {threads} threads");
+    }
+}
+
+/// Finite-difference gradient check through the fused linear+tanh path:
+/// loss = Σ tanh(x w + b)², dw assembled with the blocked kernels.
+#[test]
+fn fused_forward_backward_matches_finite_difference() {
+    use rlflow::runtime::host::kernels::{acc_xt_dy, linear_into, tanh_backward_inplace, Act};
+    let kc = KernelCfg::blocked(4);
+    let (m, k, n) = (4, 5, 3);
+    let mut rng = Rng::new(17);
+    let x: Vec<f32> = (0..m * k).map(|_| rng.normal() * 0.7).collect();
+    let mut w: Vec<f32> = (0..k * n).map(|_| rng.normal() * 0.5).collect();
+    let b: Vec<f32> = (0..n).map(|_| rng.normal() * 0.1).collect();
+    let forward = |w: &[f32], y: &mut Vec<f32>| {
+        y.resize(m * n, 0.0);
+        linear_into(&kc, &x, w, Some(&b), m, k, n, Act::Tanh, y);
+    };
+    let mut y = Vec::new();
+    forward(&w, &mut y);
+    // dL/dy = 2y, through the tanh epilogue, then dw = xᵀ dpre.
+    let mut dpre: Vec<f32> = y.iter().map(|v| 2.0 * v).collect();
+    tanh_backward_inplace(&mut dpre, &y);
+    let mut dw = vec![0.0f32; k * n];
+    acc_xt_dy(&kc, &x, &dpre, m, k, n, &mut dw);
+    let loss = |w: &[f32]| -> f32 {
+        let mut y = Vec::new();
+        forward(w, &mut y);
+        y.iter().map(|v| v * v).sum()
+    };
+    let eps = 1e-3f32;
+    for i in 0..w.len() {
+        let orig = w[i];
+        w[i] = orig + eps;
+        let lp = loss(&w);
+        w[i] = orig - eps;
+        let lm = loss(&w);
+        w[i] = orig;
+        let num = (lp - lm) / (2.0 * eps);
+        assert!(
+            (num - dw[i]).abs() < 2e-2,
+            "dw[{i}]: analytic {} vs numeric {}",
+            dw[i],
+            num
+        );
+    }
+}
+
+/// `exec_batch` returns exactly what per-call `exec` returns.
+#[test]
+fn exec_batch_equals_sequential_exec() {
+    let backend = HostBackend::with_config(tiny_config(KernelCfg::default()));
+    let (z, r) = (backend.hp("LATENT").unwrap(), backend.hp("RNN_HIDDEN").unwrap());
+    let b = backend.hp("B_DREAM").unwrap();
+    let ctrl = ParamStore::init(&backend, "ctrl", 3).unwrap();
+    let n = ctrl.theta.len();
+    let mut rng = Rng::new(5);
+    let zs: Vec<Vec<f32>> =
+        (0..3).map(|_| (0..b * z).map(|_| rng.normal() * 0.3).collect()).collect();
+    let hs: Vec<Vec<f32>> =
+        (0..3).map(|_| (0..b * r).map(|_| rng.normal() * 0.2).collect()).collect();
+    let calls: Vec<Vec<TensorView>> = zs
+        .iter()
+        .zip(&hs)
+        .map(|(zb, hb)| {
+            vec![
+                TensorView::f32(&ctrl.theta, &[n]),
+                TensorView::f32(zb, &[b, z]),
+                TensorView::f32(hb, &[b, r]),
+            ]
+        })
+        .collect();
+    let batched = backend.exec_batch("ctrl_policy_b", &calls).unwrap();
+    for (args, out) in calls.iter().zip(&batched) {
+        let single = backend.exec("ctrl_policy_b", args).unwrap();
+        assert_eq!(single.len(), out.len());
+        for (a, bb) in single.iter().zip(out) {
+            assert_eq!(a.data, bb.data);
+        }
+    }
+    // Per-program stats counted every batched call.
+    assert!(backend.stats()["ctrl_policy_b"].calls >= 6);
+}
+
+/// Arbitrary-width `act_batch` (chunk + pad through `ctrl_policy_b`)
+/// yields bit-identical per-row results to one-row calls.
+#[test]
+fn act_batch_arbitrary_width_matches_per_row_calls() {
+    let backend = HostBackend::with_config(tiny_config(KernelCfg::default()));
+    let policy = PolicyNet::new(&backend).unwrap();
+    let ctrl = ParamStore::init(&backend, "ctrl", 1).unwrap();
+    let d = policy.dims;
+    // Width 6 = one full B_DREAM chunk + one padded chunk (B_DREAM = 4).
+    let b = 6;
+    let mut rng = Rng::new(9);
+    let z: Vec<f32> = (0..b * d.zdim).map(|_| rng.normal() * 0.4).collect();
+    let h: Vec<f32> = (0..b * d.rdim).map(|_| rng.normal() * 0.2).collect();
+    let mut xmask = vec![1.0f32; b * d.x1];
+    xmask[d.x1..2 * d.x1].fill(0.0); // one all-masked row exercises the NO-OP fallback
+    let mut seed_rng = Rng::new(77);
+    let mut rngs: Vec<Rng> = (0..b).map(|i| seed_rng.fork(i as u64)).collect();
+    let batched = policy
+        .act_rows(
+            &ctrl,
+            &ObsBatch { z: &z, h: &h, xmask: &xmask },
+            |_, _| vec![true; d.max_locs],
+            &mut rngs.clone(),
+            false,
+        )
+        .unwrap();
+    for row in 0..b {
+        let single = policy
+            .act_batch(
+                &ctrl,
+                &ObsBatch {
+                    z: &z[row * d.zdim..(row + 1) * d.zdim],
+                    h: &h[row * d.rdim..(row + 1) * d.rdim],
+                    xmask: &xmask[row * d.x1..(row + 1) * d.x1],
+                },
+                |_, _| vec![true; d.max_locs],
+                &mut rngs[row],
+                false,
+            )
+            .unwrap();
+        assert_eq!(single[0].action, batched[row].action, "row {row} action diverged");
+        assert_eq!(single[0].logp, batched[row].logp, "row {row} logp diverged");
+        assert_eq!(single[0].value, batched[row].value, "row {row} value diverged");
+    }
+}
+
+/// Arbitrary-width `WorldModel::step` (chunk + pad through `wm_step_b`)
+/// yields bit-identical per-row results to `wm_step_1` calls.
+#[test]
+fn wm_step_arbitrary_width_matches_per_row_calls() {
+    let backend = HostBackend::with_config(tiny_config(KernelCfg::default()));
+    let world = WorldModel::new(&backend).unwrap();
+    let wm = ParamStore::init(&backend, "wm", 2).unwrap();
+    let d = world.dims;
+    let b = 7; // not 1, not B_DREAM
+    let mut rng = Rng::new(13);
+    let z: Vec<f32> = (0..b * d.zdim).map(|_| rng.normal() * 0.5).collect();
+    let h: Vec<f32> = (0..b * d.rdim).map(|_| rng.normal() * 0.2).collect();
+    let c: Vec<f32> = (0..b * d.rdim).map(|_| rng.normal() * 0.2).collect();
+    let actions: Vec<Action> =
+        (0..b).map(|i| Action::new(i % (d.x1 - 1), i % 5)).collect();
+    let batched = world.step(&wm, &z, &actions, &h, &c).unwrap();
+    let zk = d.zdim * d.k;
+    for row in 0..b {
+        let single = world
+            .step(
+                &wm,
+                &z[row * d.zdim..(row + 1) * d.zdim],
+                &actions[row..row + 1],
+                &h[row * d.rdim..(row + 1) * d.rdim],
+                &c[row * d.rdim..(row + 1) * d.rdim],
+            )
+            .unwrap();
+        assert_eq!(single.log_pi, batched.log_pi[row * zk..(row + 1) * zk]);
+        assert_eq!(single.mu, batched.mu[row * zk..(row + 1) * zk]);
+        assert_eq!(single.rewards[0], batched.rewards[row]);
+        assert_eq!(single.h1, batched.h1[row * d.rdim..(row + 1) * d.rdim]);
+        assert_eq!(single.c1, batched.c1[row * d.rdim..(row + 1) * d.rdim]);
+    }
+}
+
+/// The zero-alloc acceptance pin: after one warm call per program, the
+/// steady-state `exec_with_params`/`train_step` hot paths allocate no
+/// scratch — every Workspace checkout is served from the free list, and
+/// the per-program `ExecStats` counters prove it.
+#[test]
+fn steady_state_exec_allocates_no_scratch() {
+    let backend = HostBackend::with_config(tiny_config(KernelCfg::default()));
+    let (z, r) = (backend.hp("LATENT").unwrap(), backend.hp("RNN_HIDDEN").unwrap());
+    let ctrl = ParamStore::init(&backend, "ctrl", 0).unwrap();
+    let z1 = vec![0.3f32; z];
+    let h1 = vec![0.1f32; r];
+    let rest = [TensorView::f32(&z1, &[1, z]), TensorView::f32(&h1, &[1, r])];
+    // Warm-up: first call populates the arena.
+    backend.exec_with_params("ctrl_policy_1", &ctrl, &rest).unwrap();
+    let warm = backend.stats()["ctrl_policy_1"];
+    for _ in 0..5 {
+        backend.exec_with_params("ctrl_policy_1", &ctrl, &rest).unwrap();
+    }
+    let now = backend.stats()["ctrl_policy_1"];
+    assert_eq!(
+        warm.alloc_bytes, now.alloc_bytes,
+        "steady-state ctrl_policy_1 must allocate no scratch"
+    );
+    assert!(
+        now.scratch_reuse > warm.scratch_reuse,
+        "steady-state calls must reuse workspace buffers"
+    );
+
+    // Same property on the train hot path (in-place Adam absorb).
+    let mut store = ParamStore::init(&backend, "ctrl", 4).unwrap();
+    let b = backend.hp("B_PPO").unwrap();
+    let (x1, locs) = (backend.hp("N_XFERS1").unwrap(), backend.hp("MAX_LOCS").unwrap());
+    let zb = vec![0.2f32; b * z];
+    let hb = vec![0.0f32; b * r];
+    let act = vec![0i32; b * 2];
+    let logp = vec![-1.0f32; b];
+    let adv: Vec<f32> = (0..b).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+    let ret = vec![0.2f32; b];
+    let xm = vec![1.0f32; b * x1];
+    let lm = vec![1.0f32; b * locs];
+    let rest: Vec<TensorView> = vec![
+        TensorView::f32(&zb, &[b, z]),
+        TensorView::f32(&hb, &[b, r]),
+        TensorView::i32(&act, &[b, 2]),
+        TensorView::f32(&logp, &[b]),
+        TensorView::f32(&adv, &[b]),
+        TensorView::f32(&ret, &[b]),
+        TensorView::f32(&xm, &[b, x1]),
+        TensorView::f32(&lm, &[b, locs]),
+        TensorView::ScalarF32(1e-3),
+        TensorView::ScalarF32(0.2),
+        TensorView::ScalarF32(0.01),
+    ];
+    backend.train_step("ctrl_train", &mut store, &rest).unwrap();
+    let warm = backend.stats()["ctrl_train"];
+    let v0 = store.version;
+    for _ in 0..4 {
+        backend.train_step("ctrl_train", &mut store, &rest).unwrap();
+    }
+    let now = backend.stats()["ctrl_train"];
+    assert_eq!(
+        warm.alloc_bytes, now.alloc_bytes,
+        "steady-state ctrl_train must allocate no scratch"
+    );
+    assert!(now.scratch_reuse > warm.scratch_reuse);
+    assert_eq!(store.version, v0 + 4, "in-place train steps must bump the version");
+    assert_eq!(store.t, 5.0, "t advances once per step");
+}
+
+/// The in-place host `train_step` produces exactly what the exec-path
+/// value contract produces (theta absorb round trip).
+#[test]
+fn in_place_train_step_matches_exec_path() {
+    let backend = HostBackend::with_config(tiny_config(KernelCfg::default()));
+    let (n_lat, r) = (backend.hp("LATENT").unwrap(), backend.hp("RNN_HIDDEN").unwrap());
+    let b = backend.hp("B_PPO").unwrap();
+    let (x1, locs) = (backend.hp("N_XFERS1").unwrap(), backend.hp("MAX_LOCS").unwrap());
+    let zb = vec![0.1f32; b * n_lat];
+    let hb = vec![0.0f32; b * r];
+    let act: Vec<i32> = (0..b).flat_map(|i| [(i % x1) as i32, (i % locs) as i32]).collect();
+    let logp = vec![-1.2f32; b];
+    let adv: Vec<f32> = (0..b).map(|i| (i as f32 % 3.0) - 1.0).collect();
+    let ret = vec![0.1f32; b];
+    let xm = vec![1.0f32; b * x1];
+    let lm = vec![1.0f32; b * locs];
+    let rest: Vec<TensorView> = vec![
+        TensorView::f32(&zb, &[b, n_lat]),
+        TensorView::f32(&hb, &[b, r]),
+        TensorView::i32(&act, &[b, 2]),
+        TensorView::f32(&logp, &[b]),
+        TensorView::f32(&adv, &[b]),
+        TensorView::f32(&ret, &[b]),
+        TensorView::f32(&xm, &[b, x1]),
+        TensorView::f32(&lm, &[b, locs]),
+        TensorView::ScalarF32(3e-3),
+        TensorView::ScalarF32(0.2),
+        TensorView::ScalarF32(0.01),
+    ];
+    // In-place path.
+    let mut fast = ParamStore::init(&backend, "ctrl", 11).unwrap();
+    let fast_out = backend.train_step("ctrl_train", &mut fast, &rest).unwrap();
+    // Exec path (the PJRT-style value contract).
+    let mut slow = ParamStore::init(&backend, "ctrl", 11).unwrap();
+    let mut args = slow.train_args();
+    args.extend(rest.iter().cloned());
+    let out = backend.exec("ctrl_train", &args).unwrap();
+    drop(args);
+    slow.absorb(&out).unwrap();
+    assert_eq!(fast.theta, slow.theta, "in-place theta must match the exec path");
+    assert_eq!(fast.m, slow.m);
+    assert_eq!(fast.v, slow.v);
+    assert_eq!(fast.t, slow.t);
+    assert_eq!(fast_out[0].data, out[4].data, "loss outputs must line up (shifted by 4)");
+    // Unknown/non-train programs are rejected.
+    assert!(backend.train_step("ctrl_policy_1", &mut fast, &rest).is_err());
+}
