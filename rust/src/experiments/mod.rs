@@ -36,6 +36,13 @@ pub struct ExperimentCtx<'e> {
     /// [`ExperimentCtx::with_cache`] + `search::memo::global`) re-optimises
     /// each zoo graph exactly once per search config.
     pub search_cache: Arc<SearchCache>,
+    /// Optional synthesised-ruleset file (`rlflow synth` output) appended to
+    /// the handwritten library for the deterministic search baselines. The
+    /// RL environments keep the plain [`standard_library`] so the agent's
+    /// fixed xfer action space is unaffected.
+    ///
+    /// [`standard_library`]: crate::xfer::library::standard_library
+    pub rules_path: Option<String>,
 }
 
 impl<'e> ExperimentCtx<'e> {
@@ -43,7 +50,7 @@ impl<'e> ExperimentCtx<'e> {
     pub fn new(backend: &'e dyn Backend, cfg: RunConfig, out_dir: impl Into<PathBuf>) -> Self {
         let out_dir = out_dir.into();
         let _ = std::fs::create_dir_all(&out_dir);
-        Self { backend, cfg, out_dir, search_cache: Arc::new(SearchCache::new()) }
+        Self { backend, cfg, out_dir, search_cache: Arc::new(SearchCache::new()), rules_path: None }
     }
 
     /// Share an existing cache (the CLI passes `search::memo::global()`
@@ -51,6 +58,23 @@ impl<'e> ExperimentCtx<'e> {
     pub fn with_cache(mut self, cache: Arc<SearchCache>) -> Self {
         self.search_cache = cache;
         self
+    }
+
+    /// Load the deterministic search baselines' rules from a synthesised
+    /// ruleset file on top of the handwritten library (`--rules` on the
+    /// `experiment` subcommand).
+    pub fn with_rules(mut self, rules_path: Option<String>) -> Self {
+        self.rules_path = rules_path;
+        self
+    }
+
+    /// The rule vocabulary the deterministic search baselines run with:
+    /// the handwritten library, extended by [`ExperimentCtx::rules_path`]
+    /// when one was given. The combined set has its own
+    /// [`RuleSet::fingerprint`](crate::xfer::RuleSet::fingerprint), so
+    /// cached searches never alias across vocabularies.
+    pub fn search_rules(&self) -> anyhow::Result<crate::xfer::RuleSet> {
+        crate::xfer::synth::library_with_rules(self.rules_path.as_deref())
     }
 
     /// Path of one output file inside the context's output directory.

@@ -22,6 +22,9 @@ use super::{eval_agent, train_model_based, ExperimentCtx};
 pub fn suite(ctx: &ExperimentCtx, runs: usize) -> anyhow::Result<()> {
     let pipe = Pipeline::new(ctx.backend)?;
     let rules = standard_library();
+    // Deterministic baselines honour `--rules`; the RL environments below
+    // keep the plain handwritten library (fixed agent action space).
+    let search_vocab = ctx.search_rules()?;
     let cost = ctx.cost_model();
 
     let mut w6 = CsvWriter::create(
@@ -64,11 +67,16 @@ pub fn suite(ctx: &ExperimentCtx, runs: usize) -> anyhow::Result<()> {
         // is a pure cache lookup.
         let t0 = std::time::Instant::now();
         let (tf_graph, tf_log) =
-            greedy_optimise_cached(&g, &rules, &cost, 60, 0, &ctx.search_cache);
+            greedy_optimise_cached(&g, &search_vocab, &cost, 60, 0, &ctx.search_cache);
         let greedy_s = t0.elapsed().as_secs_f64();
         let t0 = std::time::Instant::now();
-        let (_, taso_log) =
-            taso_optimise_cached(&g, &rules, &cost, &TasoConfig::default(), &ctx.search_cache);
+        let (_, taso_log) = taso_optimise_cached(
+            &g,
+            &search_vocab,
+            &cost,
+            &TasoConfig::default(),
+            &ctx.search_cache,
+        );
         let taso_s = t0.elapsed().as_secs_f64();
         println!(
             "   search: {} workers, taso explored {} ({} memo hits{}), greedy {} steps{}",

@@ -14,7 +14,7 @@ use super::{eval_agent, train_model_based, ExperimentCtx};
 /// counts applicable rule sites on the unmodified graph (the paper's
 /// column counts TASO's applicable substitutions the same way).
 pub fn table1(ctx: &ExperimentCtx) -> anyhow::Result<()> {
-    let rules = standard_library();
+    let rules = ctx.search_rules()?;
     let mut w = CsvWriter::create(
         ctx.out("table1.csv"),
         &["graph", "type", "layers", "unique_layers", "ops", "substitutions"],
@@ -39,6 +39,10 @@ pub fn table1(ctx: &ExperimentCtx) -> anyhow::Result<()> {
 /// baseline, and RLFlow's percentage improvement on both at tau = 1.0.
 pub fn table2(ctx: &ExperimentCtx, runs: usize) -> anyhow::Result<()> {
     let pipe = crate::coordinator::Pipeline::new(ctx.backend)?;
+    // Greedy baseline uses the (possibly `--rules`-extended) search
+    // vocabulary; the RL environment below keeps the plain handwritten
+    // library so the agent's action space stays fixed.
+    let search_vocab = ctx.search_rules()?;
     let rules = standard_library();
     let cost = ctx.cost_model();
     let mut cfg = ctx.cfg.clone();
@@ -56,7 +60,8 @@ pub fn table2(ctx: &ExperimentCtx, runs: usize) -> anyhow::Result<()> {
     for (info, g) in crate::zoo::all() {
         // "TensorFlow" baseline: greedy rule application (memoised across
         // the context — fig6/suite optimise the same graphs).
-        let (tf_graph, _) = greedy_optimise_cached(&g, &rules, &cost, 50, 0, &ctx.search_cache);
+        let (tf_graph, _) =
+            greedy_optimise_cached(&g, &search_vocab, &cost, 50, 0, &ctx.search_cache);
         let tf_ms = cost.graph_runtime_ms(&tf_graph);
         let tf_gib = cost.graph_memory_gib(&tf_graph);
 

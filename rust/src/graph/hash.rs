@@ -5,6 +5,17 @@
 //! (Fig. 3a). Sources therefore hash by kind + shape only, with a
 //! multiplicity-disambiguation pass so structurally distinct uses of
 //! same-shaped inputs still separate where the wiring differs.
+//!
+//! The disambiguation is one round of Weisfeiler–Lehman-style refinement
+//! on the source nodes: each source folds in the sorted multiset of
+//! `(consumer op attrs, input slot, port)` triples over its live consumer
+//! edges. Renaming two sources is a structure-preserving bijection, so
+//! their refined hashes swap along with them (still Fig. 3a-invariant),
+//! while `add(x, x)` and `add(x, y)` — identical under shape-only source
+//! hashing — now separate: the former's single source carries both
+//! consumer slots. Without this the substitution generator's
+//! canonical-hash dedup silently merged semantically distinct enumerants
+//! (`x + x` is `2x`, not `x + y`), deflating the candidate pool.
 
 use super::graph::Graph;
 use super::op::OpKind;
@@ -32,8 +43,10 @@ fn shape_hash(shape: &[usize]) -> u64 {
 /// Per-node hashes are computed bottom-up: a node's hash combines its op
 /// attr-hash with the ordered (hash, port) pairs of its inputs; the graph
 /// hash combines the *sorted* multiset of output-node hashes, so output
-/// enumeration order does not matter. A node's hash depends only on its
-/// ancestors, so any topological processing order yields the same value.
+/// enumeration order does not matter. An op node's hash depends only on
+/// its ancestors (sources additionally fold in their consumer-edge
+/// context, computed in a separate pre-pass), so any topological
+/// processing order yields the same value.
 ///
 /// This runs once per search candidate (it keys the transposition table in
 /// `crate::search`), so it avoids the HashMap-based `Graph::topo_order` /
@@ -67,6 +80,28 @@ pub fn canonical_hash(g: &Graph) -> u64 {
         }
     }
 
+    // Multiplicity disambiguation: per-source context = sorted multiset of
+    // (consumer attrs, input slot, port) over live consumer edges. Pure
+    // renamings keep per-source contexts (the bijection maps consumer
+    // edges exactly), while distinct wirings of same-shaped sources —
+    // add(x, x) vs add(x, y) — get distinct source hashes.
+    let mut src_edges: Vec<(usize, u64)> = Vec::new();
+    for id in g.live_ids() {
+        let node = g.node(id);
+        for (slot, inp) in node.inputs.iter().enumerate() {
+            let p = inp.node.index();
+            if matches!(g.nodes[p].op, OpKind::Input | OpKind::Weight) {
+                let e = mix(node.op.attr_hash(), mix(slot as u64, inp.port as u64));
+                src_edges.push((p, e));
+            }
+        }
+    }
+    src_edges.sort_unstable();
+    let mut src_ctx = vec![0x5151_5151u64; n];
+    for (p, e) in src_edges {
+        src_ctx[p] = mix(src_ctx[p], e);
+    }
+
     let mut queue: Vec<u32> = (0..n as u32)
         .filter(|&i| live[i as usize] && indeg[i as usize] == 0)
         .collect();
@@ -77,9 +112,10 @@ pub fn canonical_hash(g: &Graph) -> u64 {
         qi += 1;
         let node = &g.nodes[idx];
         let mut h = match node.op {
-            // Name-invariance: sources hash by kind + shape only.
-            OpKind::Input => mix(0x1111, shape_hash(&node.outs[0].shape)),
-            OpKind::Weight => mix(0x2222, shape_hash(&node.outs[0].shape)),
+            // Name-invariance: sources hash by kind + shape + the
+            // consumer-edge context computed above (never by id).
+            OpKind::Input => mix(0x1111, mix(shape_hash(&node.outs[0].shape), src_ctx[idx])),
+            OpKind::Weight => mix(0x2222, mix(shape_hash(&node.outs[0].shape), src_ctx[idx])),
             _ => node.op.attr_hash(),
         };
         for inp in &node.inputs {
@@ -176,6 +212,52 @@ mod tests {
             g
         };
         assert_ne!(canonical_hash(&build(1)), canonical_hash(&build(2)));
+    }
+
+    #[test]
+    fn same_shaped_sources_separate_by_wiring() {
+        // add(x, y) and add(x, x) must NOT hash equal: the former reads two
+        // distinct sources, the latter one source twice (x + x == 2x).
+        let mut g1 = Graph::new();
+        let x = PortRef::of(g1.add_source(OpKind::Input, TensorDesc::f32(&[4, 4])));
+        let y = PortRef::of(g1.add_source(OpKind::Input, TensorDesc::f32(&[4, 4])));
+        g1.add(OpKind::Add, &[x, y]).unwrap();
+
+        let mut g2 = Graph::new();
+        let x2 = PortRef::of(g2.add_source(OpKind::Input, TensorDesc::f32(&[4, 4])));
+        let _y2 = g2.add_source(OpKind::Input, TensorDesc::f32(&[4, 4]));
+        g2.add(OpKind::Add, &[x2, x2]).unwrap();
+
+        assert_ne!(canonical_hash(&g1), canonical_hash(&g2));
+    }
+
+    #[test]
+    fn renaming_sources_still_merges() {
+        // add(x, y) vs add(y, x): swapping the two same-shaped sources is a
+        // pure renaming — the refinement must keep them hash-equal.
+        let mut g1 = Graph::new();
+        let x = PortRef::of(g1.add_source(OpKind::Input, TensorDesc::f32(&[4, 4])));
+        let y = PortRef::of(g1.add_source(OpKind::Input, TensorDesc::f32(&[4, 4])));
+        g1.add(OpKind::Add, &[x, y]).unwrap();
+
+        let mut g2 = Graph::new();
+        let x2 = PortRef::of(g2.add_source(OpKind::Input, TensorDesc::f32(&[4, 4])));
+        let y2 = PortRef::of(g2.add_source(OpKind::Input, TensorDesc::f32(&[4, 4])));
+        g2.add(OpKind::Add, &[y2, x2]).unwrap();
+
+        assert_eq!(canonical_hash(&g1), canonical_hash(&g2));
+
+        // And a deeper asymmetric wiring still separates: add(mul(x, y), x)
+        // vs add(mul(x, y), y) read different sources at the add's slot 1.
+        let build = |second_is_x: bool| {
+            let mut g = Graph::new();
+            let a = PortRef::of(g.add_source(OpKind::Input, TensorDesc::f32(&[4, 4])));
+            let b = PortRef::of(g.add_source(OpKind::Input, TensorDesc::f32(&[4, 4])));
+            let m = PortRef::of(g.add(OpKind::Mul, &[a, b]).unwrap());
+            g.add(OpKind::Add, &[m, if second_is_x { a } else { b }]).unwrap();
+            g
+        };
+        assert_ne!(canonical_hash(&build(true)), canonical_hash(&build(false)));
     }
 
     #[test]

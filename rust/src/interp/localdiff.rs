@@ -1,0 +1,385 @@
+//! Local differential equivalence checking for graph rewrites.
+//!
+//! Verifying a substitution on a full zoo graph means evaluating hundreds
+//! of full-resolution convolutions per random draw — far beyond what a
+//! test tier can afford. But a rewrite only touches a small region: the
+//! nodes it removed, the nodes it added, and the survivors it rewired.
+//! This module re-verifies exactly that region.
+//!
+//! Method: diff the pre/post arenas (slot numbering is stable across a
+//! rewrite), extract the removed cone (evaluated against the *before*
+//! graph) and the added cone (against the *after* graph), and feed both
+//! from a shared pool of random tensors keyed by `(slot, port)` — so a
+//! boundary port read by both sides sees the same value. Two observations
+//! then pin semantic preservation:
+//!
+//!  1. every rewired survivor's changed input must carry the same value
+//!     before and after, and
+//!  2. the multiset of values at changed graph outputs must be preserved.
+//!
+//! Rules that redirect consumers onto *pre-existing* nodes (identity
+//! elimination, common-subexpression merges) compare a removed cone
+//! against a surviving producer; those producers are pulled into both
+//! sides' evaluation sets symmetrically, so equality is judged on computed
+//! values rather than unlucky fresh feeds.
+//!
+//! Soundness of the locality argument: survivors outside the evaluated
+//! region compute the same function of their (unchanged) inputs on both
+//! sides, so the whole-graph functions agree iff the boundary values
+//! agree — which is what checks 1 and 2 establish on random draws.
+
+use std::collections::HashMap;
+
+use crate::graph::{Graph, NodeId, OpKind, PortRef};
+use crate::util::Rng;
+use crate::xfer::ApplyReport;
+
+use super::eval::eval_op;
+use super::Tensor;
+
+type PortKey = (u32, u16);
+
+fn key(p: PortRef) -> PortKey {
+    (p.node.0, p.port)
+}
+
+/// Shared random feed pool: one independent tensor per boundary port,
+/// seeded per key so demand order never changes the values.
+struct Feeds {
+    seed: u64,
+    cache: HashMap<PortKey, Tensor>,
+}
+
+impl Feeds {
+    fn new(seed: u64) -> Self {
+        Self { seed, cache: HashMap::new() }
+    }
+
+    fn get(&mut self, k: PortKey, shape: &[usize]) -> Tensor {
+        let seed = self.seed;
+        self.cache
+            .entry(k)
+            .or_insert_with(|| {
+                let mix = (k.0 as u64)
+                    .wrapping_mul(0x9E3779B97F4A7C15)
+                    .rotate_left(13)
+                    ^ (k.1 as u64).wrapping_mul(0xFF51AFD7ED558CCD);
+                Tensor::random(shape, &mut Rng::new(seed ^ mix))
+            })
+            .clone()
+    }
+}
+
+/// Demand-driven evaluator over one side's evaluation set: ports produced
+/// by in-set nodes are computed (recursively), everything else is fed.
+struct SideEval<'g> {
+    g: &'g Graph,
+    in_set: Vec<bool>,
+    memo: HashMap<PortKey, Tensor>,
+}
+
+impl<'g> SideEval<'g> {
+    fn new(g: &'g Graph, in_set: Vec<bool>) -> Self {
+        Self { g, in_set, memo: HashMap::new() }
+    }
+
+    fn value(&mut self, p: PortRef, feeds: &mut Feeds) -> anyhow::Result<Tensor> {
+        if let Some(t) = self.memo.get(&key(p)) {
+            return Ok(t.clone());
+        }
+        let desc = self.g.out_desc(p)?.clone();
+        let idx = p.node.index();
+        let node = self.g.node(p.node);
+        if !self.in_set[idx] || matches!(node.op, OpKind::Input | OpKind::Weight) {
+            return Ok(feeds.get(key(p), &desc.shape));
+        }
+        let (op, inputs) = (node.op.clone(), node.inputs.clone());
+        let ins: Vec<Tensor> = inputs
+            .iter()
+            .map(|q| self.value(*q, feeds))
+            .collect::<anyhow::Result<_>>()?;
+        let refs: Vec<&Tensor> = ins.iter().collect();
+        let outs = eval_op(&op, &refs)?;
+        for (port, t) in outs.into_iter().enumerate() {
+            self.memo.insert((p.node.0, port as u16), t);
+        }
+        self.memo
+            .get(&key(p))
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("port {} missing after eval of {:?}", p.port, p.node))
+    }
+}
+
+/// Rewired-survivor input pairs `(before_port, after_port)` — check 1's
+/// comparison list.
+fn rewired_pairs(
+    before: &Graph,
+    after: &Graph,
+    report: &ApplyReport,
+) -> anyhow::Result<Vec<(PortRef, PortRef)>> {
+    let mut pairs = Vec::new();
+    for idx in 0..report.prev_slots.min(after.n_slots()) {
+        let (b, a) = (&before.nodes[idx], &after.nodes[idx]);
+        if b.dead || a.dead || b.inputs == a.inputs {
+            continue;
+        }
+        anyhow::ensure!(
+            b.inputs.len() == a.inputs.len(),
+            "survivor {:?} changed arity across the rewrite",
+            NodeId(idx as u32)
+        );
+        for (pb, pa) in b.inputs.iter().zip(&a.inputs) {
+            if pb != pa {
+                pairs.push((*pb, *pa));
+            }
+        }
+    }
+    Ok(pairs)
+}
+
+/// Output ports present on one side only — check 2's comparison lists.
+fn output_diff(before: &Graph, after: &Graph) -> (Vec<PortRef>, Vec<PortRef>) {
+    let outs = |g: &Graph| -> Vec<PortRef> {
+        let mut ids = g.output_ids();
+        ids.sort();
+        ids.into_iter()
+            .flat_map(|id| {
+                (0..g.node(id).outs.len() as u16).map(move |p| PortRef { node: id, port: p })
+            })
+            .collect()
+    };
+    let (ob, oa) = (outs(before), outs(after));
+    let only_b: Vec<PortRef> = ob.iter().copied().filter(|p| !oa.contains(p)).collect();
+    let only_a: Vec<PortRef> = oa.iter().copied().filter(|p| !ob.contains(p)).collect();
+    (only_b, only_a)
+}
+
+/// Evaluation-set bitmaps for both sides: the changed slots plus the
+/// symmetric expansion of compared survivor producers.
+fn eval_sets(
+    before: &Graph,
+    after: &Graph,
+    report: &ApplyReport,
+    compared: &[PortRef],
+) -> (Vec<bool>, Vec<bool>) {
+    let n = after.n_slots().max(before.n_slots());
+    let mut set_b = vec![false; n];
+    let mut set_a = vec![false; n];
+    for &id in &report.removed {
+        set_b[id.index()] = true;
+    }
+    for &id in &report.added {
+        set_a[id.index()] = true;
+    }
+    // A compared port produced by a surviving op must be *computed*, not
+    // fed, on whichever side reads it — and symmetrically on the other
+    // side, so a node demanded by both resolves to one value per side
+    // derived from the same feeds.
+    for p in compared {
+        let idx = p.node.index();
+        if set_b[idx] || set_a[idx] {
+            continue;
+        }
+        let live_b = idx < before.n_slots() && !before.nodes[idx].dead;
+        let live_a = idx < after.n_slots() && !after.nodes[idx].dead;
+        if live_b && !matches!(before.nodes[idx].op, OpKind::Input | OpKind::Weight) {
+            set_b[idx] = true;
+        }
+        if live_a && !matches!(after.nodes[idx].op, OpKind::Input | OpKind::Weight) {
+            set_a[idx] = true;
+        }
+    }
+    (set_b, set_a)
+}
+
+/// Cheap cost proxy (multiply-accumulates) for evaluating one node.
+fn node_flops(g: &Graph, id: NodeId) -> u64 {
+    let n = g.node(id);
+    let out_elems: usize = n.outs.iter().map(|d| d.n_elems()).sum();
+    let in_desc = |k: usize| g.out_desc(n.inputs[k]).ok();
+    (match &n.op {
+        OpKind::Conv2d { .. } | OpKind::ConvBias { .. } => in_desc(1)
+            .map(|w| out_elems * w.shape.iter().skip(1).product::<usize>())
+            .unwrap_or(out_elems),
+        OpKind::MatMul { trans_a, .. } => in_desc(0)
+            .map(|a| {
+                let r = a.shape.len();
+                let k = if *trans_a { a.shape[r - 2] } else { a.shape[r - 1] };
+                out_elems * k
+            })
+            .unwrap_or(out_elems),
+        OpKind::Linear { .. } => in_desc(1)
+            .map(|w| out_elems * w.shape[0])
+            .unwrap_or(out_elems),
+        _ => out_elems,
+    }) as u64
+}
+
+/// Estimated cost of one local differential check of this rewrite: the
+/// removed cone (against `before`) plus the added cone (against `after`).
+/// Used by the soundness suite to budget which sites it can afford.
+pub fn rewrite_flops(before: &Graph, after: &Graph, report: &ApplyReport) -> u64 {
+    let rm: u64 = report.removed.iter().map(|&id| node_flops(before, id)).sum();
+    let ad: u64 = report.added.iter().map(|&id| node_flops(after, id)).sum();
+    rm + ad
+}
+
+/// Differentially check that the rewrite described by `report` preserved
+/// semantics, evaluating only the changed region (plus compared survivor
+/// producers) on `trials` shared random boundary draws.
+///
+/// Returns `Ok(false)` when some compared value diverges beyond `tol`
+/// (relative, per [`Tensor::allclose`]) or the changed-output multisets
+/// cannot be matched; errors indicate a malformed rewrite (arity change,
+/// dangling ports) or an op the interpreter rejects.
+pub fn locally_equivalent(
+    before: &Graph,
+    after: &Graph,
+    report: &ApplyReport,
+    trials: usize,
+    seed: u64,
+    tol: f32,
+) -> anyhow::Result<bool> {
+    let pairs = rewired_pairs(before, after, report)?;
+    let (only_b, only_a) = output_diff(before, after);
+    if pairs.is_empty() && only_b.is_empty() && only_a.is_empty() {
+        // The rewrite changed nothing observable (pure dead-code motion).
+        return Ok(true);
+    }
+    let compared: Vec<PortRef> = pairs
+        .iter()
+        .flat_map(|&(pb, pa)| [pb, pa])
+        .chain(only_b.iter().copied())
+        .chain(only_a.iter().copied())
+        .collect();
+    let (set_b, set_a) = eval_sets(before, after, report, &compared);
+
+    for trial in 0..trials {
+        let mut feeds = Feeds::new(seed ^ (trial as u64).wrapping_mul(0x2545F4914F6CDD1D));
+        let mut eb = SideEval::new(before, set_b.clone());
+        let mut ea = SideEval::new(after, set_a.clone());
+        // Check 1: rewired survivor inputs carry unchanged values.
+        for &(pb, pa) in &pairs {
+            let vb = eb.value(pb, &mut feeds)?;
+            let va = ea.value(pa, &mut feeds)?;
+            if !vb.allclose(&va, tol) {
+                return Ok(false);
+            }
+        }
+        // Check 2: changed graph outputs match as a value multiset.
+        if only_b.len() != only_a.len() {
+            return Ok(false);
+        }
+        let vb: Vec<Tensor> = only_b
+            .iter()
+            .map(|&p| eb.value(p, &mut feeds))
+            .collect::<anyhow::Result<_>>()?;
+        let va: Vec<Tensor> = only_a
+            .iter()
+            .map(|&p| ea.value(p, &mut feeds))
+            .collect::<anyhow::Result<_>>()?;
+        let mut used = vec![false; va.len()];
+        for t in &vb {
+            let hit = va
+                .iter()
+                .enumerate()
+                .find(|(i, u)| !used[*i] && t.allclose(u, tol))
+                .map(|(i, _)| i);
+            match hit {
+                Some(i) => used[i] = true,
+                None => return Ok(false),
+            }
+        }
+    }
+    Ok(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, PadMode};
+    use crate::xfer::library::standard_library;
+    use crate::xfer::{apply_rule, Rule};
+
+    fn check_rule_on(g: &Graph, rule: &dyn Rule) -> usize {
+        let mut sites = 0;
+        for loc in rule.find(g) {
+            let mut g2 = g.clone();
+            let report = apply_rule(&mut g2, rule, &loc).unwrap();
+            assert!(
+                locally_equivalent(g, &g2, &report, 2, 11, 3e-3).unwrap(),
+                "rule {} not locally equivalent",
+                rule.name()
+            );
+            sites += 1;
+        }
+        sites
+    }
+
+    #[test]
+    fn fusion_rewrites_check_out_locally() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 3, 8, 8]);
+        let c = b.conv_bn_relu(x, 4, 3, 1, PadMode::Same).unwrap();
+        let _ = b.op(OpKind::Tanh, &[c]).unwrap();
+        let g = b.finish();
+        let lib = standard_library();
+        let mut total = 0;
+        for rule in &lib.rules {
+            total += check_rule_on(&g, rule.as_ref());
+        }
+        assert!(total > 0, "no rule fired on the conv-bn-relu host");
+    }
+
+    #[test]
+    fn splice_to_survivor_is_handled() {
+        // transpose(transpose(x)) elimination rewires consumers onto the
+        // surviving producer — the symmetric-expansion path.
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[4, 6]);
+        let r = b.relu(x).unwrap();
+        let t1 = b.transpose(r, &[1, 0]).unwrap();
+        let t2 = b.transpose(t1, &[1, 0]).unwrap();
+        let _ = b.op(OpKind::Tanh, &[t2]).unwrap();
+        let g = b.finish();
+        let lib = standard_library();
+        let rule = lib.get(lib.index_of("elim_transpose2").unwrap()).unwrap();
+        assert!(check_rule_on(&g, rule) > 0);
+    }
+
+    #[test]
+    fn a_broken_rewrite_is_caught() {
+        // Hand-build an unsound "rewrite": replace relu with tanh.
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[4, 4]);
+        let r = b.relu(x).unwrap();
+        let _ = b.op(OpKind::Sigmoid, &[r]).unwrap();
+        let g = b.finish();
+        let mut g2 = g.clone();
+        let prev_slots = g2.n_slots();
+        let live_before: Vec<bool> = g2.nodes.iter().map(|n| !n.dead).collect();
+        let t = g2.add(OpKind::Tanh, &[PortRef::of(NodeId(0))]).unwrap();
+        crate::xfer::apply::splice(&mut g2, r.node, PortRef::of(t)).unwrap();
+        g2.dce();
+        let report = ApplyReport::diff(&g2, prev_slots, &live_before);
+        assert!(!locally_equivalent(&g, &g2, &report, 2, 5, 1e-3).unwrap());
+    }
+
+    #[test]
+    fn flop_estimate_scales_with_cone() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 3, 16, 16]);
+        let c = b.conv(x, 8, 3, 1, PadMode::Same).unwrap();
+        let r = b.relu(c).unwrap();
+        let _ = b.op(OpKind::Tanh, &[r]).unwrap();
+        let g = b.finish();
+        let lib = standard_library();
+        let rule = lib.get(lib.index_of("fuse_conv_relu").unwrap()).unwrap();
+        let loc = rule.find(&g)[0].clone();
+        let mut g2 = g.clone();
+        let report = apply_rule(&mut g2, rule, &loc).unwrap();
+        let f = rewrite_flops(&g, &g2, &report);
+        // conv cone dominates: out 8*16*16 elems * 3*3*3 macs, twice.
+        assert!(f > 50_000, "estimate suspiciously small: {f}");
+    }
+}

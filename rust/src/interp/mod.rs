@@ -2,9 +2,11 @@
 //! semantic-equivalence property tests).
 
 pub mod eval;
+pub mod localdiff;
 pub mod tensor;
 
 pub use eval::{eval_graph, eval_op, eval_outputs};
+pub use localdiff::{locally_equivalent, rewrite_flops};
 pub use tensor::Tensor;
 
 use std::collections::HashMap;

@@ -2,10 +2,11 @@
 //!
 //! ```text
 //! rlflow zoo                               list the evaluation graphs
-//! rlflow optimize --graph bert --method taso|greedy [--threads N] [--export out.json]
+//! rlflow optimize --graph bert --method taso|greedy [--threads N] [--rules rules.json] [--export out.json]
 //! rlflow train --graph bert [--backend host|pjrt|auto] [--envs B] [--config cfg.json] [-s key=value ...]
 //! rlflow eval --load dir [--graph bert] [--backend host|pjrt|auto]
-//! rlflow experiment <table1|table2|table3|fig5..fig10|all> [--runs N]
+//! rlflow experiment <table1|table2|table3|fig5..fig10|all> [--runs N] [--rules rules.json]
+//! rlflow synth --out rules.json [--alphabet groups] [--ops N] [--inputs N] [--seed S] [--tier T]
 //! rlflow generate-rules [--verify]
 //! ```
 //!
@@ -22,6 +23,7 @@ use rlflow::search::{
     greedy_optimise_cached, memo, taso_optimise_cached, SearchCache, TasoConfig,
 };
 use rlflow::xfer::library::standard_library;
+use rlflow::xfer::Rule;
 
 struct Args {
     positional: Vec<String>,
@@ -92,6 +94,7 @@ fn main() -> anyhow::Result<()> {
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
         "experiment" => cmd_experiment(&args),
+        "synth" => cmd_synth(&args),
         "generate-rules" => cmd_generate_rules(&args),
         _ => {
             println!("{}", HELP);
@@ -105,11 +108,21 @@ rlflow — neural-network subgraph transformation with world models
 
 USAGE:
   rlflow zoo
-  rlflow optimize --graph <name> --method <greedy|taso> [--threads N] [--repeat N] [--fresh-cache] [--export out.json]
+  rlflow optimize --graph <name> --method <greedy|taso> [--threads N] [--repeat N] [--fresh-cache] [--rules rules.json] [--export out.json]
   rlflow train [--graph <name>] [--backend host|pjrt|auto] [--envs B] [--config cfg.json] [--smoke] [--save dir] [-s key=value]...
   rlflow eval --load <dir> [--graph <name>] [--backend host|pjrt|auto] [--envs B] [-s key=value]...
-  rlflow experiment <table1|table2|table3|fig5|...|fig10|all> [--runs N] [--backend B] [--envs B] [--smoke] [--out dir] [--fresh-cache]
+  rlflow experiment <table1|table2|table3|fig5|...|fig10|all> [--runs N] [--backend B] [--envs B] [--smoke] [--out dir] [--fresh-cache] [--rules rules.json]
+  rlflow synth --out <rules.json> [--alphabet <groups|all>] [--inputs N] [--ops N] [--seed S] [--tier <always-safe|shape-preserving|all>] [--max-rules N]
   rlflow generate-rules [--verify] [--inputs N] [--ops N]
+
+RULE SYNTHESIS:
+  `rlflow synth` enumerates small graphs over the requested op alphabet
+  (groups: ewise, act, shape, matmul, scale, fused — comma-separated, or
+  `all`), verifies substitution candidates with the reference interpreter,
+  tiers them (always-safe ⊂ shape-preserving ⊂ all) and writes a ruleset
+  file. `--rules rules.json` on optimize/experiment appends the
+  synthesised rules to the handwritten library for search (the combined
+  vocabulary gets its own search-cache fingerprint).
 
 CACHING:
   optimize/experiment hold a persistent search cache: repeated identical
@@ -160,7 +173,10 @@ fn search_cache(args: &Args) -> std::sync::Arc<SearchCache> {
 fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
     let cfg = build_config(args)?;
     let graph = rlflow::zoo::by_name(&cfg.graph)?;
-    let rules = standard_library();
+    // `--rules path`: extend the handwritten library with a synthesised
+    // ruleset file (from `rlflow synth`) for this search.
+    let rules_path = args.flags.get("rules").map(String::as_str);
+    let rules = rlflow::xfer::synth::library_with_rules(rules_path)?;
     // Honours `-s cost_noise=...` (the noise config is part of the search
     // cache fingerprint, so noisy and clean runs never alias).
     let cost = cfg.cost_model();
@@ -276,7 +292,9 @@ fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
     // Every experiment this process runs shares the persistent search
     // cache, so `experiment all` optimises each zoo graph once per search
     // config (`--fresh-cache` opts out).
-    let ctx = ExperimentCtx::new(backend.as_ref(), cfg, out).with_cache(search_cache(args));
+    let ctx = ExperimentCtx::new(backend.as_ref(), cfg, out)
+        .with_cache(search_cache(args))
+        .with_rules(args.flags.get("rules").cloned());
     experiments::run(&ctx, id, runs)?;
     println!("{}", ctx.cache_summary());
     Ok(())
@@ -343,6 +361,73 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
         scores.len(),
         mean_step * 1e3
     );
+    Ok(())
+}
+
+/// `rlflow synth`: run the enumerative rule-synthesis pipeline and write a
+/// tiered ruleset file loadable via `--rules` on optimize/experiment.
+fn cmd_synth(args: &Args) -> anyhow::Result<()> {
+    use rlflow::xfer::synth::{save_rules, synthesise, SynthConfig, Tier};
+
+    let mut cfg = SynthConfig::default();
+    if let Some(v) = args.flags.get("inputs") {
+        cfg.n_inputs = v.parse().map_err(|e| anyhow::anyhow!("bad --inputs '{v}': {e}"))?;
+    }
+    if let Some(v) = args.flags.get("ops") {
+        cfg.max_ops = v.parse().map_err(|e| anyhow::anyhow!("bad --ops '{v}': {e}"))?;
+    }
+    if let Some(v) = args.flags.get("seed") {
+        cfg.seed = v.parse().map_err(|e| anyhow::anyhow!("bad --seed '{v}': {e}"))?;
+    }
+    if let Some(v) = args.flags.get("alphabet") {
+        cfg.alphabet = v.clone();
+    }
+    if let Some(v) = args.flags.get("tier") {
+        cfg.tier = Tier::parse(v)?;
+    }
+    if let Some(v) = args.flags.get("max-rules") {
+        cfg.max_rules = v.parse().map_err(|e| anyhow::anyhow!("bad --max-rules '{v}': {e}"))?;
+    }
+
+    println!(
+        "synthesising rules: alphabet [{}], {} inputs, up to {} ops, seed {}, tier {}",
+        cfg.alphabet,
+        cfg.n_inputs,
+        cfg.max_ops,
+        cfg.seed,
+        cfg.tier.as_str()
+    );
+    let out = synthesise(&cfg)?;
+    let s = &out.stats;
+    println!(
+        "enumerated {} graphs, {} fingerprint groups, {} candidate pairs",
+        s.enumerated, s.groups, s.candidates
+    );
+    println!(
+        "pruned: {} renamings, {} common-subgraph; verified {} (rejected {})",
+        s.pruned_renaming, s.pruned_common, s.verified, s.rejected
+    );
+    println!(
+        "tiers: {} always-safe, {} shape-preserving, {} all",
+        s.tier_always_safe, s.tier_shape_preserving, s.tier_all
+    );
+    println!("kept {} rules at tier <= {}:", out.rules.len(), cfg.tier.as_str());
+    for r in &out.rules {
+        println!(
+            "  {:<24} {:<16} {} -> {} ops{}",
+            r.name(),
+            r.tier().as_str(),
+            r.lhs().n_ops(),
+            r.rhs().n_ops(),
+            if r.shape_generic() { "" } else { " (square-only)" }
+        );
+    }
+    if let Some(path) = args.flags.get("out") {
+        save_rules(path, &out.rules, &cfg)?;
+        println!("wrote ruleset to {path}");
+    } else {
+        println!("(no --out given; ruleset not saved)");
+    }
     Ok(())
 }
 

@@ -16,9 +16,8 @@
 
 use std::collections::HashMap;
 
-use crate::graph::{canonical_hash, Activation, Graph, OpKind, PortRef};
-use crate::interp::{eval_outputs, semantically_equal, Tensor};
-use crate::util::Rng;
+use crate::graph::{canonical_hash, Activation, Graph, OpKind};
+use crate::interp::semantically_equal;
 
 #[derive(Debug, Clone)]
 pub struct Candidate {
@@ -54,92 +53,18 @@ fn alphabet() -> Vec<OpKind> {
 }
 
 /// Enumerate all graphs with exactly `n_inputs` 4x4 inputs and up to
-/// `max_ops` ops, single output. Returns deduplicated-by-structure graphs.
+/// `max_ops` ops, single output, deduplicated on canonical hash.
+///
+/// Thin wrapper over [`synth::enumerate_with`] with this module's legacy
+/// alphabet — the full synthesis pipeline (configurable alphabets, tiering,
+/// serialisation) lives in [`crate::xfer::synth`].
 pub fn enumerate_graphs(n_inputs: usize, max_ops: usize) -> Vec<Graph> {
-    let mut out = Vec::new();
-    let base = {
-        let mut g = Graph::new();
-        for _ in 0..n_inputs {
-            g.add_source(OpKind::Input, crate::graph::TensorDesc::f32(&[4, 4]));
-        }
-        g
-    };
-    let mut frontier = vec![base];
-    let mut seen = std::collections::HashSet::new();
-    for _depth in 0..max_ops {
-        let mut next = Vec::new();
-        for g in &frontier {
-            let ports: Vec<PortRef> = g
-                .live_ids()
-                .map(PortRef::of)
-                .collect();
-            for op in alphabet() {
-                let arity = op.arity().unwrap_or(2);
-                // All ordered port tuples of length `arity`.
-                let mut tuple = vec![0usize; arity];
-                loop {
-                    let inputs: Vec<PortRef> = tuple.iter().map(|&i| ports[i]).collect();
-                    let mut g2 = g.clone();
-                    if g2.add(op.clone(), &inputs).is_ok() {
-                        let h = canonical_hash(&g2);
-                        if seen.insert(h) {
-                            next.push(g2.clone());
-                            out.push(g2);
-                        }
-                    }
-                    // Advance the tuple counter.
-                    let mut i = 0;
-                    loop {
-                        if i == arity {
-                            break;
-                        }
-                        tuple[i] += 1;
-                        if tuple[i] < ports.len() {
-                            break;
-                        }
-                        tuple[i] = 0;
-                        i += 1;
-                    }
-                    if tuple.iter().all(|&t| t == 0) {
-                        break;
-                    }
-                }
-            }
-        }
-        frontier = next;
-    }
-    // Keep single-output graphs only (multi-output pairs are not
-    // substitution candidates in this generator).
-    out.retain(|g| g.output_ids().len() == 1);
-    out
+    crate::xfer::synth::enumerate_with(n_inputs, max_ops, &alphabet())
 }
 
 /// Evaluate a graph on shared random inputs and hash the outputs.
 fn fingerprint(g: &Graph, seed: u64) -> Option<u64> {
-    let mut rng = Rng::new(seed);
-    let mut feeds = HashMap::new();
-    let mut ids: Vec<_> = g
-        .live_ids()
-        .filter(|id| matches!(g.node(*id).op, OpKind::Input))
-        .collect();
-    ids.sort();
-    for id in ids {
-        feeds.insert(id, Tensor::random(&g.node(id).outs[0].shape, &mut rng));
-    }
-    let outs = eval_outputs(g, &feeds, seed ^ 0xABCD).ok()?;
-    let mut h = 0xCBF29CE484222325u64;
-    for t in outs {
-        for &d in &t.shape {
-            h = h.rotate_left(9) ^ (d as u64);
-        }
-        for v in t.data {
-            // Round to 1e-3 so float noise does not split groups; exact
-            // verification happens later.
-            let q = (v * 1000.0).round() as i64;
-            h = h.rotate_left(7).wrapping_mul(0x100000001B3) ^ (q as u64);
-        }
-    }
-    Some(h)
+    crate::xfer::synth::graph_fingerprint(g, seed)
 }
 
 /// Run the full generation pipeline.
@@ -243,6 +168,24 @@ mod tests {
         hashes.sort_unstable();
         hashes.dedup();
         assert_eq!(hashes.len(), n, "structural duplicates survived");
+    }
+
+    #[test]
+    fn enumeration_count_keeps_distinct_wirings() {
+        // Regression for the canonical-hash dedup key. Over the legacy
+        // 9-op alphabet with 2 inputs and 1 op, the distinct graphs modulo
+        // input renaming are exactly 13: each of the 4 binary ops
+        // contributes {f(x, x)} and {f(x, y) ≅ f(y, x)}, each of the 5
+        // unary ops contributes one. A dedup key blind to source wiring
+        // (the old shape-only source hash) collapses f(x, x) into f(x, y)
+        // and reports 9.
+        let graphs = enumerate_graphs(2, 1);
+        assert_eq!(graphs.len(), 13, "enumeration count drifted");
+        let n_add = graphs
+            .iter()
+            .filter(|g| g.live_ids().any(|id| matches!(g.node(id).op, OpKind::Add)))
+            .count();
+        assert_eq!(n_add, 2, "add(x, y) and add(x, x) must both survive dedup");
     }
 
     #[test]

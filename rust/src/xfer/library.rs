@@ -1738,11 +1738,38 @@ mod tests {
         // node of every reported location must satisfy the fingerprint —
         // a fingerprint narrower than its `find` would silently miss new
         // matches after a rewrite. Exercised over the whole zoo.
-        let lib = standard_library();
+        // Handwritten rules plus a smoke-scale synthesised set: SynthRule
+        // carries its own OpRelevance fingerprint and must honour the same
+        // contract with no special-casing.
+        let synth = crate::xfer::synth::synthesise(&crate::xfer::synth::SynthConfig {
+            alphabet: "ewise,act,shape,scale".into(),
+            tier: crate::xfer::synth::Tier::All,
+            ..Default::default()
+        })
+        .unwrap();
+        let mut rules = standard_library().rules;
+        rules.extend(crate::xfer::synth::boxed(synth.rules));
+        let lib = RuleSet::new(rules);
+        // Zoo graphs plus a small host graph the synthesised alphabet
+        // actually fires on (the zoo has no relu∘relu / transpose-pair /
+        // scale-pair chains at the synthesis shapes).
+        let mut graphs: Vec<Graph> = crate::zoo::all().into_iter().map(|(_, g)| g).collect();
+        {
+            let mut b = GraphBuilder::new();
+            let x = b.input(&[4, 4]);
+            let r = b.relu(x).unwrap();
+            let r2 = b.relu(r).unwrap();
+            let t = b.op(OpKind::Transpose { perm: vec![1, 0] }, &[r2]).unwrap();
+            let t2 = b.op(OpKind::Transpose { perm: vec![1, 0] }, &[t]).unwrap();
+            let s = b.op(OpKind::Scale { factor: 2.0 }, &[t2]).unwrap();
+            let _ = b.op(OpKind::Scale { factor: 0.5 }, &[s]).unwrap();
+            graphs.push(b.finish());
+        }
         let mut checked = 0usize;
-        for (_, g) in crate::zoo::all() {
+        let mut synth_checked = 0usize;
+        for g in &graphs {
             for rule in &lib.rules {
-                for loc in rule.find(&g) {
+                for loc in rule.find(g) {
                     for &id in &loc {
                         assert!(
                             rule.op_relevant(&g.node(id).op),
@@ -1752,10 +1779,14 @@ mod tests {
                             g.node(id).op.name()
                         );
                         checked += 1;
+                        if rule.name().starts_with("synth_") {
+                            synth_checked += 1;
+                        }
                     }
                 }
             }
         }
         assert!(checked > 100, "too few match nodes exercised: {checked}");
+        assert!(synth_checked > 0, "no synthesised match nodes exercised");
     }
 }

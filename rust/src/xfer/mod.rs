@@ -16,6 +16,7 @@ pub mod generator;
 pub mod library;
 pub mod library_ext;
 pub mod matcher;
+pub mod synth;
 
 pub use apply::{ApplyReport, DirtyRegion};
 

@@ -1,0 +1,173 @@
+//! Seeded, deterministic enumeration of small candidate graphs over a
+//! configurable operator alphabet (TASO §4 step 1, grown from the
+//! `xfer::generator` sketch).
+//!
+//! The alphabet is assembled from named groups so the CLI can scale the
+//! search space: `ewise` (Add/Mul), `act` (Relu/Tanh/Sigmoid/Gelu),
+//! `shape` (Identity/Transpose), `matmul` (the transpose variants),
+//! `scale` (reciprocal factors, so `scale∘scale` identities exist), and
+//! `fused` (MatMul with activation epilogues). Enumeration is exhaustive
+//! over ordered input tuples and deduplicates on [`canonical_hash`] — the
+//! name-invariant identity that merges pure input renamings while keeping
+//! distinct wirings (`add(x, x)` vs `add(x, y)`) apart.
+
+use crate::graph::{canonical_hash, Activation, Graph, OpKind, PortRef, TensorDesc};
+
+/// The operator groups an alphabet spec may name.
+pub const GROUPS: [&str; 6] = ["ewise", "act", "shape", "matmul", "scale", "fused"];
+
+/// Ops of one named group, in stable order.
+pub fn group_ops(name: &str) -> Option<Vec<OpKind>> {
+    let none = Activation::None;
+    Some(match name {
+        "ewise" => vec![OpKind::Add, OpKind::Mul],
+        "act" => vec![OpKind::Relu, OpKind::Tanh, OpKind::Sigmoid, OpKind::Gelu],
+        "shape" => vec![OpKind::Identity, OpKind::Transpose { perm: vec![1, 0] }],
+        "matmul" => vec![
+            OpKind::MatMul { trans_a: false, trans_b: false, act: none },
+            OpKind::MatMul { trans_a: false, trans_b: true, act: none },
+            OpKind::MatMul { trans_a: true, trans_b: false, act: none },
+        ],
+        // Reciprocal factors: scale(2)∘scale(0.5) is the exact identity the
+        // always-safe tier is seeded with.
+        "scale" => vec![OpKind::Scale { factor: 0.5 }, OpKind::Scale { factor: 2.0 }],
+        "fused" => vec![
+            OpKind::MatMul { trans_a: false, trans_b: false, act: Activation::Relu },
+            OpKind::MatMul { trans_a: false, trans_b: true, act: Activation::Relu },
+        ],
+        _ => return None,
+    })
+}
+
+/// Parse a comma-separated group spec (e.g. `"ewise,act,scale"`) into a
+/// deduplicated op alphabet in spec order. `"all"` expands to every group.
+pub fn alphabet_from_spec(spec: &str) -> anyhow::Result<Vec<OpKind>> {
+    let mut ops: Vec<OpKind> = Vec::new();
+    let names: Vec<&str> = if spec.trim() == "all" {
+        GROUPS.to_vec()
+    } else {
+        spec.split(',').map(str::trim).filter(|s| !s.is_empty()).collect()
+    };
+    anyhow::ensure!(!names.is_empty(), "empty alphabet spec");
+    for name in names {
+        let group = group_ops(name).ok_or_else(|| {
+            anyhow::anyhow!("unknown alphabet group '{}' (expected one of {:?})", name, GROUPS)
+        })?;
+        for op in group {
+            if !ops.contains(&op) {
+                ops.push(op);
+            }
+        }
+    }
+    Ok(ops)
+}
+
+/// Enumerate all graphs with exactly `n_inputs` 4x4 inputs and 1..=`max_ops`
+/// ops drawn from `alphabet`, keeping single-output graphs. Deterministic:
+/// output order is a pure function of (n_inputs, max_ops, alphabet).
+///
+/// Deduplication keys on [`canonical_hash`] — with the multiplicity
+/// disambiguation in `graph::hash`, renamings merge while distinct
+/// wirings of same-shaped inputs survive as separate enumerants.
+pub fn enumerate_with(n_inputs: usize, max_ops: usize, alphabet: &[OpKind]) -> Vec<Graph> {
+    let mut out = Vec::new();
+    let base = {
+        let mut g = Graph::new();
+        for _ in 0..n_inputs {
+            g.add_source(OpKind::Input, TensorDesc::f32(&[4, 4]));
+        }
+        g
+    };
+    let mut frontier = vec![base];
+    let mut seen = std::collections::HashSet::new();
+    for _depth in 0..max_ops {
+        let mut next = Vec::new();
+        for g in &frontier {
+            let ports: Vec<PortRef> = g.live_ids().map(PortRef::of).collect();
+            for op in alphabet {
+                let arity = op.arity().unwrap_or(2);
+                // All ordered port tuples of length `arity`.
+                let mut tuple = vec![0usize; arity];
+                loop {
+                    let inputs: Vec<PortRef> = tuple.iter().map(|&i| ports[i]).collect();
+                    let mut g2 = g.clone();
+                    if g2.add(op.clone(), &inputs).is_ok() {
+                        let h = canonical_hash(&g2);
+                        if seen.insert(h) {
+                            next.push(g2.clone());
+                            out.push(g2);
+                        }
+                    }
+                    // Advance the tuple counter.
+                    let mut i = 0;
+                    loop {
+                        if i == arity {
+                            break;
+                        }
+                        tuple[i] += 1;
+                        if tuple[i] < ports.len() {
+                            break;
+                        }
+                        tuple[i] = 0;
+                        i += 1;
+                    }
+                    if tuple.iter().all(|&t| t == 0) {
+                        break;
+                    }
+                }
+            }
+        }
+        frontier = next;
+    }
+    // Substitution candidates are single-output graphs only.
+    out.retain(|g| g.output_ids().len() == 1);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alphabet_spec_parses_and_dedups() {
+        let a = alphabet_from_spec("ewise,act,ewise").unwrap();
+        assert_eq!(a.len(), 6); // Add, Mul, Relu, Tanh, Sigmoid, Gelu — no dupes
+        assert!(alphabet_from_spec("nosuch").is_err());
+        assert!(alphabet_from_spec("").is_err());
+        let all = alphabet_from_spec("all").unwrap();
+        for g in GROUPS {
+            for op in group_ops(g).unwrap() {
+                assert!(all.contains(&op), "all missing {:?}", op);
+            }
+        }
+    }
+
+    #[test]
+    fn enumeration_is_deterministic() {
+        let a = alphabet_from_spec("ewise,shape").unwrap();
+        let g1 = enumerate_with(2, 2, &a);
+        let g2 = enumerate_with(2, 2, &a);
+        assert_eq!(g1.len(), g2.len());
+        for (x, y) in g1.iter().zip(&g2) {
+            assert_eq!(canonical_hash(x), canonical_hash(y));
+        }
+    }
+
+    #[test]
+    fn distinct_wirings_both_enumerate() {
+        // The canonical-hash dedup fix: add(x, y) AND add(x, x) must both
+        // survive (previously the shape-only source hash merged them).
+        let a = alphabet_from_spec("ewise").unwrap();
+        let graphs = enumerate_with(2, 1, &a);
+        let adds = graphs
+            .iter()
+            .filter(|g| {
+                g.live_ids()
+                    .filter(|&id| matches!(g.node(id).op, OpKind::Add))
+                    .count()
+                    == 1
+            })
+            .count();
+        assert_eq!(adds, 2, "expected add(x, y) and add(x, x) as distinct enumerants");
+    }
+}

@@ -1,0 +1,519 @@
+//! Enumerative substitution-rule synthesis (TASO §4 / ruler-style tiering).
+//!
+//! Pipeline dataflow:
+//!
+//! ```text
+//! alphabet spec ──> enumerate (canonical-hash dedup)
+//!                      │
+//!                      ▼
+//!            fingerprint on shared random 4x4 tensors (interp)
+//!                      │ group
+//!                      ▼
+//!            candidate pairs ──prune──> renamings / common-suffix pairs
+//!                      │
+//!                      ▼
+//!            exact re-verification on fresh draws (semantically_equal)
+//!                      │
+//!                      ▼
+//!     square bit-exactness probe + rectangular shape-generality probe
+//!                      │ tier
+//!                      ▼
+//!       always-safe ⊂ shape-preserving ⊂ all   ──>  [`SynthRule`]s
+//! ```
+//!
+//! The tiers mirror ruler's hierarchy: `always-safe` rules are bit-exact,
+//! shape-generic and non-expanding (safe to fire blindly); a
+//! `shape-preserving` rule verified at every probe shape within tolerance;
+//! `all` additionally admits rules only validated in the square enumeration
+//! regime (their matcher restricts sites to that shape class).
+//!
+//! Output rules implement [`Rule`](crate::xfer::Rule) and carry their own
+//! `OpRelevance` fingerprint, so they drop into the incremental matcher and
+//! the parallel search engine exactly like handwritten library rules.
+
+pub mod enumerate;
+pub mod rule;
+pub mod serialize;
+
+pub use enumerate::{alphabet_from_spec, enumerate_with};
+pub use rule::SynthRule;
+pub use serialize::{load_rules, save_rules};
+
+use std::collections::HashMap;
+
+use crate::graph::{canonical_hash, Graph, NodeId, OpKind, PortRef, TensorDesc};
+use crate::interp::{eval_outputs, semantically_equal, Tensor};
+use crate::util::Rng;
+use crate::xfer::RuleSet;
+
+/// Ruleset tier, ordered by inclusion: `AlwaysSafe ⊂ ShapePreserving ⊂ All`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Tier {
+    /// Bit-exact, verified at every probe shape, never adds ops.
+    AlwaysSafe,
+    /// Verified (within tolerance) at square and rectangular probe shapes.
+    ShapePreserving,
+    /// Verified only in the square enumeration regime; the rule's matcher
+    /// restricts its sites to that shape class.
+    All,
+}
+
+impl Tier {
+    /// Stable serialisation name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Tier::AlwaysSafe => "always-safe",
+            Tier::ShapePreserving => "shape-preserving",
+            Tier::All => "all",
+        }
+    }
+
+    /// Inverse of [`Tier::as_str`].
+    pub fn parse(s: &str) -> anyhow::Result<Tier> {
+        Ok(match s {
+            "always-safe" => Tier::AlwaysSafe,
+            "shape-preserving" => Tier::ShapePreserving,
+            "all" => Tier::All,
+            _ => anyhow::bail!(
+                "unknown tier '{}' (expected always-safe, shape-preserving or all)",
+                s
+            ),
+        })
+    }
+}
+
+/// Synthesis parameters. Everything that affects the output is in here, so
+/// equal configs produce bit-identical rulesets.
+#[derive(Debug, Clone)]
+pub struct SynthConfig {
+    /// Number of symbolic input slots the enumerator wires ops over.
+    pub n_inputs: usize,
+    /// Maximum ops per enumerated pattern side.
+    pub max_ops: usize,
+    /// Seed for fingerprinting and verification draws.
+    pub seed: u64,
+    /// Comma-separated alphabet group spec (see [`enumerate::GROUPS`]).
+    pub alphabet: String,
+    /// Keep rules up to (and including) this tier.
+    pub tier: Tier,
+    /// Cap on emitted rules after tier filtering; 0 means unlimited.
+    pub max_rules: usize,
+}
+
+impl Default for SynthConfig {
+    fn default() -> Self {
+        Self {
+            n_inputs: 2,
+            max_ops: 2,
+            seed: 42,
+            alphabet: "ewise,act,shape,matmul,scale,fused".into(),
+            tier: Tier::AlwaysSafe,
+            max_rules: 0,
+        }
+    }
+}
+
+/// Pipeline counters, for logging and the determinism property test.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct SynthStats {
+    /// Graphs surviving enumeration dedup.
+    pub enumerated: usize,
+    /// Fingerprint groups with at least two members.
+    pub groups: usize,
+    /// Candidate pairs examined.
+    pub candidates: usize,
+    /// Pairs pruned as pure input renamings (Fig. 3a).
+    pub pruned_renaming: usize,
+    /// Pairs pruned as common-suffix variants (Fig. 3b).
+    pub pruned_common: usize,
+    /// Pairs passing exact re-verification.
+    pub verified: usize,
+    /// Verified pairs rejected structurally (unbindable rhs sources etc.).
+    pub rejected: usize,
+    /// Rules assigned the always-safe tier (before tier filtering).
+    pub tier_always_safe: usize,
+    /// Rules assigned the shape-preserving tier.
+    pub tier_shape_preserving: usize,
+    /// Rules assigned the all tier.
+    pub tier_all: usize,
+}
+
+/// Synthesis result: tier-sorted rules plus pipeline counters.
+pub struct SynthOutput {
+    /// Emitted rules, sorted by (tier, name) — the on-disk order.
+    pub rules: Vec<SynthRule>,
+    /// Pipeline counters.
+    pub stats: SynthStats,
+}
+
+/// Evaluate a graph on shared random inputs and hash the (rounded) outputs.
+/// Shared with `xfer::generator`'s legacy pipeline.
+pub(crate) fn graph_fingerprint(g: &Graph, seed: u64) -> Option<u64> {
+    let mut rng = Rng::new(seed);
+    let mut feeds = HashMap::new();
+    let mut ids: Vec<NodeId> = g
+        .live_ids()
+        .filter(|id| matches!(g.node(*id).op, OpKind::Input))
+        .collect();
+    ids.sort();
+    for id in ids {
+        feeds.insert(id, Tensor::random(&g.node(id).outs[0].shape, &mut rng));
+    }
+    let outs = eval_outputs(g, &feeds, seed ^ 0xABCD).ok()?;
+    let mut h = 0xCBF29CE484222325u64;
+    for t in outs {
+        for &d in &t.shape {
+            h = h.rotate_left(9) ^ (d as u64);
+        }
+        for v in t.data {
+            // Round to 1e-3 so float noise does not split groups; exact
+            // verification happens later.
+            let q = (v * 1000.0).round() as i64;
+            h = h.rotate_left(7).wrapping_mul(0x100000001B3) ^ (q as u64);
+        }
+    }
+    Some(h)
+}
+
+/// Worst-case output divergence across `trials` shared random draws.
+/// `Some(0.0)` means the two sides are bit-identical on every draw; `None`
+/// means evaluation failed or outputs are incomparable.
+fn max_divergence(a: &Graph, b: &Graph, trials: usize, seed: u64) -> Option<f32> {
+    let collect = |g: &Graph| {
+        let mut ids: Vec<NodeId> = g
+            .live_ids()
+            .filter(|id| matches!(g.node(*id).op, OpKind::Input))
+            .collect();
+        ids.sort();
+        ids
+    };
+    let (a_in, b_in) = (collect(a), collect(b));
+    if a_in.len() != b_in.len() {
+        return None;
+    }
+    let mut rng = Rng::new(seed);
+    let mut worst = 0.0f32;
+    for trial in 0..trials {
+        let mut feeds_a = HashMap::new();
+        let mut feeds_b = HashMap::new();
+        for (ia, ib) in a_in.iter().zip(&b_in) {
+            if a.node(*ia).outs[0].shape != b.node(*ib).outs[0].shape {
+                return None;
+            }
+            let t = Tensor::random(&a.node(*ia).outs[0].shape, &mut rng);
+            feeds_a.insert(*ia, t.clone());
+            feeds_b.insert(*ib, t);
+        }
+        let wseed = seed ^ (trial as u64).wrapping_mul(0x2545F4914F6CDD1D);
+        let oa = eval_outputs(a, &feeds_a, wseed).ok()?;
+        let ob = eval_outputs(b, &feeds_b, wseed).ok()?;
+        if oa.len() != ob.len() {
+            return None;
+        }
+        for (ta, tb) in oa.iter().zip(&ob) {
+            worst = worst.max(ta.max_abs_diff(tb)?);
+        }
+    }
+    Some(worst)
+}
+
+/// Rebuild `g` with its sources (ascending-id order) re-typed to `shapes`.
+/// Fails if any op's shape inference rejects the new shapes.
+fn rebuild_with_shapes(g: &Graph, shapes: &[Vec<usize>]) -> anyhow::Result<Graph> {
+    let (g, _) = g.compact()?;
+    let mut out = Graph::new();
+    let mut map: HashMap<NodeId, NodeId> = HashMap::new();
+    let mut si = 0usize;
+    for id in g.live_ids() {
+        let n = g.node(id);
+        let new = match n.op {
+            OpKind::Input | OpKind::Weight => {
+                anyhow::ensure!(si < shapes.len(), "not enough probe shapes");
+                let d = TensorDesc { shape: shapes[si].clone(), dtype: n.outs[0].dtype };
+                si += 1;
+                out.add_source(n.op.clone(), d)
+            }
+            _ => {
+                let ins: Vec<PortRef> = n
+                    .inputs
+                    .iter()
+                    .map(|p| PortRef { node: map[&p.node], port: p.port })
+                    .collect();
+                out.add(n.op.clone(), &ins)?
+            }
+        };
+        map.insert(id, new);
+    }
+    anyhow::ensure!(si == shapes.len(), "probe shape count mismatch");
+    Ok(out)
+}
+
+/// Probe a verified square-regime pair at rectangular shapes.
+///
+/// Returns `(shape_generic, exact)`: `shape_generic` holds iff at least one
+/// rectangular assignment builds on both sides and verifies there — and no
+/// buildable assignment diverges (a pair that type-checks rectangularly but
+/// computes different values is square-only no matter what). `exact` holds
+/// if every buildable probe was bit-identical.
+fn probe_rectangular(lhs: &Graph, rhs: &Graph, n_src: usize, seed: u64) -> (bool, bool) {
+    let assignments: Vec<Vec<Vec<usize>>> = vec![
+        vec![vec![2, 6]; n_src],
+        vec![vec![6, 2]; n_src],
+        (0..n_src).map(|i| if i % 2 == 0 { vec![2, 6] } else { vec![6, 2] }).collect(),
+        (0..n_src).map(|i| if i % 2 == 0 { vec![6, 2] } else { vec![2, 6] }).collect(),
+    ];
+    let mut any_ok = false;
+    let mut exact = true;
+    for shapes in assignments {
+        let (gl, gr) = match (rebuild_with_shapes(lhs, &shapes), rebuild_with_shapes(rhs, &shapes))
+        {
+            (Ok(a), Ok(b)) => (a, b),
+            // An assignment only one side accepts is unreachable at apply
+            // time (find-time rhs inference rejects it) — not disqualifying.
+            _ => continue,
+        };
+        match max_divergence(&gl, &gr, 2, seed) {
+            Some(d) if d <= 1e-3 => {
+                any_ok = true;
+                if d > 0.0 {
+                    exact = false;
+                }
+            }
+            _ => return (false, false),
+        }
+    }
+    (any_ok, exact)
+}
+
+fn op_multiset(g: &Graph) -> Vec<u64> {
+    let mut v: Vec<u64> = g
+        .live_ids()
+        .filter(|id| !matches!(g.node(*id).op, OpKind::Input | OpKind::Weight))
+        .map(|id| g.node(id).op.attr_hash())
+        .collect();
+    v.sort_unstable();
+    v
+}
+
+/// Run the full synthesis pipeline for `cfg`. Deterministic: equal configs
+/// produce equal rule lists (names, tiers, order) and stats.
+pub fn synthesise(cfg: &SynthConfig) -> anyhow::Result<SynthOutput> {
+    let alphabet = alphabet_from_spec(&cfg.alphabet)?;
+    let graphs = enumerate_with(cfg.n_inputs, cfg.max_ops, &alphabet);
+    let mut stats = SynthStats { enumerated: graphs.len(), ..SynthStats::default() };
+
+    let mut groups: HashMap<u64, Vec<usize>> = HashMap::new();
+    for (i, g) in graphs.iter().enumerate() {
+        if let Some(fp) = graph_fingerprint(g, cfg.seed) {
+            groups.entry(fp).or_default().push(i);
+        }
+    }
+    stats.groups = groups.values().filter(|v| v.len() > 1).count();
+
+    let mut rules: Vec<SynthRule> = Vec::new();
+    let mut keys: Vec<u64> = groups.keys().copied().collect();
+    keys.sort_unstable();
+    for key in keys {
+        let members = &groups[&key];
+        for i in 0..members.len() {
+            for j in i + 1..members.len() {
+                stats.candidates += 1;
+                let (a, b) = (&graphs[members[i]], &graphs[members[j]]);
+                if canonical_hash(a) == canonical_hash(b) {
+                    stats.pruned_renaming += 1;
+                    continue;
+                }
+                if op_multiset(a) == op_multiset(b) && a.n_ops() == b.n_ops() {
+                    stats.pruned_common += 1;
+                    continue;
+                }
+                // Orientation: rewrite from the larger side to the smaller
+                // (ties broken by canonical hash, descending), flipped only
+                // if the preferred direction leaves rhs sources unbindable.
+                let (mut lhs, mut rhs) = if a.n_ops() > b.n_ops()
+                    || (a.n_ops() == b.n_ops() && canonical_hash(a) > canonical_hash(b))
+                {
+                    (a, b)
+                } else {
+                    (b, a)
+                };
+                if SynthRule::new(lhs, rhs, Tier::All, false).is_err() {
+                    std::mem::swap(&mut lhs, &mut rhs);
+                    if SynthRule::new(lhs, rhs, Tier::All, false).is_err() {
+                        stats.rejected += 1;
+                        continue;
+                    }
+                }
+                if !semantically_equal(lhs, rhs, 4, cfg.seed ^ 0x5EED, 1e-4).unwrap_or(false) {
+                    continue;
+                }
+                stats.verified += 1;
+                let d_square = max_divergence(lhs, rhs, 3, cfg.seed ^ 0xD1FF);
+                let (shape_generic, rect_exact) =
+                    probe_rectangular(lhs, rhs, cfg.n_inputs, cfg.seed ^ 0x4EC7);
+                let exact = d_square == Some(0.0) && rect_exact;
+                let tier = if shape_generic && exact && rhs.n_ops() <= lhs.n_ops() {
+                    Tier::AlwaysSafe
+                } else if shape_generic {
+                    Tier::ShapePreserving
+                } else {
+                    Tier::All
+                };
+                match SynthRule::new(lhs, rhs, tier, shape_generic) {
+                    Ok(rule) => {
+                        match tier {
+                            Tier::AlwaysSafe => stats.tier_always_safe += 1,
+                            Tier::ShapePreserving => stats.tier_shape_preserving += 1,
+                            Tier::All => stats.tier_all += 1,
+                        }
+                        rules.push(rule);
+                    }
+                    Err(_) => stats.rejected += 1,
+                }
+            }
+        }
+    }
+
+    // Dedup by content name (distinct enumerant pairs can canonicalise to
+    // the same rule), filter to the requested tier, stable output order.
+    let mut seen = std::collections::HashSet::new();
+    rules.retain(|r| seen.insert(r.name()));
+    rules.retain(|r| r.tier() <= cfg.tier);
+    rules.sort_by(|x, y| (x.tier(), x.name()).cmp(&(y.tier(), y.name())));
+    if cfg.max_rules > 0 {
+        rules.truncate(cfg.max_rules);
+    }
+    Ok(SynthOutput { rules, stats })
+}
+
+/// Box synthesised rules for [`RuleSet`] composition.
+pub fn boxed(rules: Vec<SynthRule>) -> Vec<Box<dyn crate::xfer::Rule>> {
+    rules.into_iter().map(|r| Box::new(r) as Box<dyn crate::xfer::Rule>).collect()
+}
+
+/// The standard handwritten library, optionally extended with a synthesised
+/// ruleset file (the `--rules <path>` flag). Synth rules append after the
+/// handwritten slots, so the combined `RuleSet::fingerprint` differs from
+/// the plain library's and search caches never mix the two vocabularies.
+pub fn library_with_rules(rules_path: Option<&str>) -> anyhow::Result<RuleSet> {
+    let mut rules = crate::xfer::library::standard_library().rules;
+    if let Some(path) = rules_path {
+        rules.extend(boxed(load_rules(path)?));
+    }
+    Ok(RuleSet::new(rules))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::xfer::Rule;
+
+    fn smoke_cfg() -> SynthConfig {
+        SynthConfig {
+            alphabet: "ewise,act,shape,scale".into(),
+            tier: Tier::All,
+            ..SynthConfig::default()
+        }
+    }
+
+    #[test]
+    fn pipeline_finds_and_tiers_known_identities() {
+        let out = synthesise(&smoke_cfg()).unwrap();
+        assert!(out.stats.enumerated > 10);
+        assert!(out.stats.verified > 0, "{:?}", out.stats);
+        assert!(!out.rules.is_empty());
+        // relu(relu(x)) → relu(x) must be discovered as always-safe.
+        let relu_squash = out.rules.iter().any(|r| {
+            r.tier() == Tier::AlwaysSafe
+                && r.lhs().n_ops() == 2
+                && r.rhs().n_ops() == 1
+                && r.lhs().live_ids().all(|id| {
+                    matches!(r.lhs().node(id).op, OpKind::Relu | OpKind::Input)
+                })
+                && r.rhs().live_ids().all(|id| {
+                    matches!(r.rhs().node(id).op, OpKind::Relu | OpKind::Input)
+                })
+        });
+        assert!(relu_squash, "relu∘relu → relu not found in always-safe tier");
+        // Tier sort order: always-safe block first.
+        let tiers: Vec<Tier> = out.rules.iter().map(|r| r.tier()).collect();
+        let mut sorted = tiers.clone();
+        sorted.sort();
+        assert_eq!(tiers, sorted);
+    }
+
+    #[test]
+    fn always_safe_tier_is_nonempty_and_subset() {
+        let all = synthesise(&smoke_cfg()).unwrap();
+        let safe = synthesise(&SynthConfig { tier: Tier::AlwaysSafe, ..smoke_cfg() }).unwrap();
+        assert!(!safe.rules.is_empty());
+        assert!(safe.rules.len() <= all.rules.len());
+        let all_names: std::collections::HashSet<&str> =
+            all.rules.iter().map(|r| r.name()).collect();
+        for r in &safe.rules {
+            assert_eq!(r.tier(), Tier::AlwaysSafe);
+            assert!(all_names.contains(r.name()), "tiering must be a filter");
+        }
+    }
+
+    #[test]
+    fn synthesised_rules_apply_soundly() {
+        let out = synthesise(&smoke_cfg()).unwrap();
+        let mut b = crate::graph::GraphBuilder::new();
+        let x = b.input(&[4, 4]);
+        let r = b.relu(x).unwrap();
+        let r2 = b.relu(r).unwrap();
+        let t = b.op(OpKind::Transpose { perm: vec![1, 0] }, &[r2]).unwrap();
+        let t2 = b.op(OpKind::Transpose { perm: vec![1, 0] }, &[t]).unwrap();
+        let _ = b.op(OpKind::Scale { factor: 0.5 }, &[t2]).unwrap();
+        let g = b.finish();
+        let mut applied = 0;
+        for rule in &out.rules {
+            for loc in rule.find(&g).into_iter().take(1) {
+                let mut g2 = g.clone();
+                crate::xfer::apply_rule(&mut g2, rule, &loc).unwrap();
+                assert!(
+                    semantically_equal(&g, &g2, 2, 17, 1e-4).unwrap(),
+                    "rule {} unsound on host graph",
+                    rule.name()
+                );
+                applied += 1;
+            }
+        }
+        assert!(applied > 0, "no synthesised rule matched the host graph");
+    }
+
+    #[test]
+    fn combined_library_composes_and_fingerprints() {
+        let dir = std::env::temp_dir().join("rlflow_synth_mod_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rules.json");
+        let cfg = SynthConfig { tier: Tier::AlwaysSafe, ..smoke_cfg() };
+        let out = synthesise(&cfg).unwrap();
+        save_rules(&path, &out.rules, &cfg).unwrap();
+
+        let plain = crate::xfer::library::standard_library();
+        let combined = library_with_rules(Some(path.to_str().unwrap())).unwrap();
+        assert_eq!(combined.len(), plain.len() + out.rules.len());
+        assert_ne!(
+            combined.fingerprint(),
+            plain.fingerprint(),
+            "combined vocabulary must not collide with the plain library"
+        );
+        // Handwritten slots keep their indices (agent action-space safety).
+        for (i, r) in plain.rules.iter().enumerate() {
+            assert_eq!(combined.index_of(r.name()), Some(i));
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn tier_parse_round_trips() {
+        for t in [Tier::AlwaysSafe, Tier::ShapePreserving, Tier::All] {
+            assert_eq!(Tier::parse(t.as_str()).unwrap(), t);
+        }
+        assert!(Tier::parse("fp-unsafe").is_err());
+        assert!(Tier::AlwaysSafe < Tier::ShapePreserving);
+        assert!(Tier::ShapePreserving < Tier::All);
+    }
+}

@@ -1,0 +1,544 @@
+//! [`SynthRule`]: a verified (lhs → rhs) substitution pair packaged as a
+//! first-class [`Rule`], so synthesised rules drop into the incremental
+//! `MatchCache`/`DirtyRegion` matcher and the parallel search engine with
+//! no special-casing.
+//!
+//! Matching is exact subgraph isomorphism on the lhs pattern: operator
+//! attributes must match exactly, op-to-op edges must map, and pattern
+//! sources bind (possibly non-injectively) to arbitrary producer ports in
+//! the target graph. A site is reported only if the rhs *re-infers* to the
+//! matched output descriptor at the bound shapes — so `apply` can never
+//! fail a splice, which is the contract the environment's action masking
+//! relies on.
+//!
+//! Rules verified only at the square enumeration shapes (`shape_generic ==
+//! false`) additionally restrict matches to uniform square f32 bindings —
+//! the shape class the random-testing validator actually covered.
+
+use std::collections::HashMap;
+
+use crate::graph::{canonical_hash, Graph, NodeId, OpKind, PortRef, TensorDesc};
+use crate::xfer::apply::splice;
+use crate::xfer::matcher::OpRelevance;
+use crate::xfer::{Location, Rule};
+
+use super::Tier;
+
+/// A synthesised substitution rule (verified lhs → rhs pair).
+pub struct SynthRule {
+    name: &'static str,
+    tier: Tier,
+    shape_generic: bool,
+    lhs: Graph,
+    rhs: Graph,
+    /// Live source ids of `lhs`, ascending. Position in this vector is the
+    /// *source index* shared with `rhs_sources` (renaming correspondence).
+    lhs_sources: Vec<NodeId>,
+    /// Live op ids of `lhs`, ascending — a topological order, because
+    /// patterns are compacted to forward-ordered form on construction.
+    lhs_ops: Vec<NodeId>,
+    lhs_out: NodeId,
+    rhs_sources: Vec<NodeId>,
+    rhs_ops: Vec<NodeId>,
+    rhs_out: NodeId,
+    relevance: OpRelevance,
+}
+
+fn sources_of(g: &Graph) -> Vec<NodeId> {
+    let mut ids: Vec<NodeId> = g
+        .live_ids()
+        .filter(|&id| matches!(g.node(id).op, OpKind::Input | OpKind::Weight))
+        .collect();
+    ids.sort();
+    ids
+}
+
+fn ops_of(g: &Graph) -> Vec<NodeId> {
+    let mut ids: Vec<NodeId> = g
+        .live_ids()
+        .filter(|&id| !matches!(g.node(id).op, OpKind::Input | OpKind::Weight))
+        .collect();
+    ids.sort();
+    ids
+}
+
+/// Source indices (positions in `sources`) that some op of `g` reads.
+fn used_sources(g: &Graph, sources: &[NodeId]) -> Vec<bool> {
+    let mut used = vec![false; sources.len()];
+    for id in g.live_ids() {
+        for inp in &g.node(id).inputs {
+            if let Some(si) = sources.iter().position(|&s| s == inp.node) {
+                used[si] = true;
+            }
+        }
+    }
+    used
+}
+
+impl SynthRule {
+    /// Package a verified pair. Both graphs are compacted (dense, forward
+    /// ordered); the rule's stable name is derived from their canonical
+    /// hashes, so identical pairs get identical names across runs.
+    ///
+    /// Errors if either side is not a single-output pattern, the source
+    /// signatures disagree, the rhs is op-free, or the rhs reads a source
+    /// the lhs never touches (such a source would be unbound at apply time).
+    pub fn new(lhs: &Graph, rhs: &Graph, tier: Tier, shape_generic: bool) -> anyhow::Result<Self> {
+        let (lhs, _) = lhs.compact()?;
+        let (rhs, _) = rhs.compact()?;
+        lhs.validate()?;
+        rhs.validate()?;
+
+        let lhs_sources = sources_of(&lhs);
+        let rhs_sources = sources_of(&rhs);
+        let lhs_ops = ops_of(&lhs);
+        let rhs_ops = ops_of(&rhs);
+        anyhow::ensure!(!lhs_ops.is_empty() && !rhs_ops.is_empty(), "op-free pattern side");
+        anyhow::ensure!(
+            lhs_sources.len() == rhs_sources.len(),
+            "source count mismatch: {} vs {}",
+            lhs_sources.len(),
+            rhs_sources.len()
+        );
+        for (&ls, &rs) in lhs_sources.iter().zip(&rhs_sources) {
+            anyhow::ensure!(
+                lhs.node(ls).outs[0] == rhs.node(rs).outs[0],
+                "source descriptor mismatch at index pair ({:?}, {:?})",
+                ls,
+                rs
+            );
+        }
+        let lhs_used = used_sources(&lhs, &lhs_sources);
+        let rhs_used = used_sources(&rhs, &rhs_sources);
+        for (si, (&lu, &ru)) in lhs_used.iter().zip(&rhs_used).enumerate() {
+            anyhow::ensure!(
+                lu || !ru,
+                "rhs reads source {} that the lhs never binds",
+                si
+            );
+        }
+        let louts = lhs.output_ids();
+        let routs = rhs.output_ids();
+        anyhow::ensure!(louts.len() == 1 && routs.len() == 1, "patterns must be single-output");
+        anyhow::ensure!(
+            lhs.node(louts[0]).outs[0] == rhs.node(routs[0]).outs[0],
+            "pattern output descriptors differ"
+        );
+
+        // Content-derived stable name: identical (lhs, rhs) pairs produce
+        // identical names across runs, machines and serialisation round
+        // trips. Leaked because `Rule::name` returns `&'static str` (the
+        // search frontier stores it by reference).
+        let (hl, hr) = (canonical_hash(&lhs), canonical_hash(&rhs));
+        let id = (hl ^ hr.rotate_left(17)).wrapping_mul(0x9E3779B97F4A7C15);
+        let name: &'static str =
+            Box::leak(format!("synth_{:016x}", id).into_boxed_str());
+
+        let mut kinds: Vec<OpKind> = Vec::new();
+        for &id in &lhs_ops {
+            let op = lhs.node(id).op.clone();
+            if !kinds.contains(&op) {
+                kinds.push(op);
+            }
+        }
+        let relevance = OpRelevance::from_fn(move |op| kinds.contains(op));
+
+        Ok(Self {
+            name,
+            tier,
+            shape_generic,
+            lhs_out: louts[0],
+            rhs_out: routs[0],
+            lhs,
+            rhs,
+            lhs_sources,
+            lhs_ops,
+            rhs_sources,
+            rhs_ops,
+            relevance,
+        })
+    }
+
+    /// The ruleset tier this rule was assigned at synthesis time.
+    pub fn tier(&self) -> Tier {
+        self.tier
+    }
+
+    /// Did the rule verify at non-square probe shapes (true) or only in the
+    /// square enumeration regime (false — matches are then restricted to
+    /// uniform square bindings)?
+    pub fn shape_generic(&self) -> bool {
+        self.shape_generic
+    }
+
+    /// The matched pattern.
+    pub fn lhs(&self) -> &Graph {
+        &self.lhs
+    }
+
+    /// The replacement pattern.
+    pub fn rhs(&self) -> &Graph {
+        &self.rhs
+    }
+
+    /// Position of `id` within `self.lhs_ops` (pattern op index).
+    fn lhs_op_pos(&self, id: NodeId) -> Option<usize> {
+        self.lhs_ops.iter().position(|&o| o == id)
+    }
+
+    /// Position of `id` within `self.lhs_sources` (source index).
+    fn lhs_src_pos(&self, id: NodeId) -> Option<usize> {
+        self.lhs_sources.iter().position(|&s| s == id)
+    }
+
+    /// Try to extend a partial assignment with `target` for pattern op
+    /// `pi`. Returns the source bindings added (for backtracking) or `None`
+    /// if the constraints fail.
+    fn try_bind(
+        &self,
+        g: &Graph,
+        pi: usize,
+        target: NodeId,
+        assigned: &[NodeId],
+        src_bind: &mut [Option<PortRef>],
+    ) -> Option<Vec<usize>> {
+        let pat = self.lhs.node(self.lhs_ops[pi]);
+        let tgt = g.node(target);
+        if tgt.dead || tgt.op != pat.op || tgt.inputs.len() != pat.inputs.len() {
+            return None;
+        }
+        let mut newly_bound = Vec::new();
+        for (k, lp) in pat.inputs.iter().enumerate() {
+            let tp = tgt.inputs[k];
+            if let Some(si) = self.lhs_src_pos(lp.node) {
+                match src_bind[si] {
+                    Some(p) if p == tp => {}
+                    Some(_) => {
+                        for &b in &newly_bound {
+                            src_bind[b] = None;
+                        }
+                        return None;
+                    }
+                    None => {
+                        src_bind[si] = Some(tp);
+                        newly_bound.push(si);
+                    }
+                }
+            } else {
+                // Op-to-op edge: must map to the already-assigned target
+                // (pattern is forward-ordered, so the producer has a lower
+                // pattern index and is bound).
+                let pos = self.lhs_op_pos(lp.node).expect("pattern edge to unknown node");
+                debug_assert!(pos < pi);
+                if tp.node != assigned[pos] || tp.port != lp.port {
+                    for &b in &newly_bound {
+                        src_bind[b] = None;
+                    }
+                    return None;
+                }
+            }
+        }
+        Some(newly_bound)
+    }
+
+    /// Simulate building the rhs at the bound shapes. Returns the inferred
+    /// output descriptor, or `None` if shape inference rejects the rhs.
+    fn infer_rhs_out(&self, g: &Graph, src_bind: &[Option<PortRef>]) -> Option<TensorDesc> {
+        let mut descs: HashMap<NodeId, TensorDesc> = HashMap::new();
+        for (si, &rs) in self.rhs_sources.iter().enumerate() {
+            if let Some(p) = src_bind[si] {
+                descs.insert(rs, g.out_desc(p).ok()?.clone());
+            }
+        }
+        let mut out = None;
+        for &id in &self.rhs_ops {
+            let node = self.rhs.node(id);
+            let ins: Vec<&TensorDesc> = node
+                .inputs
+                .iter()
+                .map(|p| descs.get(&p.node))
+                .collect::<Option<Vec<_>>>()?;
+            let inferred = crate::graph::shapes::infer(&node.op, &ins).ok()?;
+            if id == self.rhs_out {
+                out = Some(inferred[0].clone());
+            }
+            descs.insert(id, inferred.into_iter().next()?);
+        }
+        out
+    }
+
+    /// Square-regime guard for non-shape-generic rules: every bound source
+    /// must be the same `[n, n]` f32 tensor shape the validator covered.
+    fn bindings_in_verified_class(&self, g: &Graph, src_bind: &[Option<PortRef>]) -> bool {
+        if self.shape_generic {
+            return true;
+        }
+        let mut n: Option<usize> = None;
+        for p in src_bind.iter().flatten() {
+            let d = match g.out_desc(*p) {
+                Ok(d) => d,
+                Err(_) => return false,
+            };
+            if d.shape.len() != 2 || d.shape[0] != d.shape[1] || d.dtype != crate::graph::DType::F32
+            {
+                return false;
+            }
+            match n {
+                Some(m) if m != d.shape[0] => return false,
+                _ => n = Some(d.shape[0]),
+            }
+        }
+        true
+    }
+
+    /// Depth-first backtracking match over the pattern ops in index order.
+    fn search(
+        &self,
+        g: &Graph,
+        cands: &[Vec<NodeId>],
+        pi: usize,
+        assigned: &mut Vec<NodeId>,
+        src_bind: &mut Vec<Option<PortRef>>,
+        out: &mut Vec<Location>,
+    ) {
+        if pi == self.lhs_ops.len() {
+            if !self.bindings_in_verified_class(g, src_bind) {
+                return;
+            }
+            let matched_out = assigned[self.lhs_op_pos(self.lhs_out).unwrap()];
+            match self.infer_rhs_out(g, src_bind) {
+                Some(d) if d == g.node(matched_out).outs[0] => {
+                    out.push(assigned.clone());
+                }
+                _ => {}
+            }
+            return;
+        }
+        for &t in &cands[pi] {
+            if assigned.contains(&t) {
+                continue; // injective over pattern ops
+            }
+            if let Some(newly) = self.try_bind(g, pi, t, assigned, src_bind) {
+                assigned.push(t);
+                self.search(g, cands, pi + 1, assigned, src_bind, out);
+                assigned.pop();
+                for si in newly {
+                    src_bind[si] = None;
+                }
+            }
+        }
+    }
+
+    /// Re-derive the source bindings of a previously reported location,
+    /// erroring if the graph changed underneath it.
+    fn rebind(&self, g: &Graph, loc: &Location) -> anyhow::Result<Vec<Option<PortRef>>> {
+        anyhow::ensure!(loc.len() == self.lhs_ops.len(), "location arity mismatch");
+        let mut src_bind: Vec<Option<PortRef>> = vec![None; self.lhs_sources.len()];
+        for (pi, &t) in loc.iter().enumerate() {
+            anyhow::ensure!(t.index() < g.n_slots(), "stale node id {:?}", t);
+            anyhow::ensure!(
+                self.try_bind(g, pi, t, &loc[..pi], &mut src_bind).is_some(),
+                "location no longer matches rule {} at {:?}",
+                self.name,
+                t
+            );
+        }
+        Ok(src_bind)
+    }
+}
+
+impl Rule for SynthRule {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn find(&self, g: &Graph) -> Vec<Location> {
+        // Per-pattern-position candidate lists, ascending target id — the
+        // DFS below then emits locations in lexicographic order.
+        let mut cands: Vec<Vec<NodeId>> = vec![Vec::new(); self.lhs_ops.len()];
+        for id in g.live_ids() {
+            let op = &g.node(id).op;
+            for (pi, &pid) in self.lhs_ops.iter().enumerate() {
+                if *op == self.lhs.node(pid).op {
+                    cands[pi].push(id);
+                }
+            }
+        }
+        if cands.iter().any(|c| c.is_empty()) {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        let mut assigned = Vec::with_capacity(self.lhs_ops.len());
+        let mut src_bind = vec![None; self.lhs_sources.len()];
+        self.search(g, &cands, 0, &mut assigned, &mut src_bind, &mut out);
+        out
+    }
+
+    fn apply(&self, g: &mut Graph, loc: &Location) -> anyhow::Result<()> {
+        let src_bind = self.rebind(g, loc)?;
+        // Build the rhs on top of the bound sources; shape inference was
+        // pre-checked at find time, so `add` cannot fail on a live location.
+        let mut new_ids: HashMap<NodeId, NodeId> = HashMap::new();
+        for &rid in &self.rhs_ops {
+            let node = self.rhs.node(rid);
+            let ins: Vec<PortRef> = node
+                .inputs
+                .iter()
+                .map(|p| {
+                    if let Some(si) = self.rhs_sources.iter().position(|&s| s == p.node) {
+                        src_bind[si].ok_or_else(|| {
+                            anyhow::anyhow!("unbound source {} in rule {}", si, self.name)
+                        })
+                    } else {
+                        Ok(PortRef { node: new_ids[&p.node], port: p.port })
+                    }
+                })
+                .collect::<anyhow::Result<_>>()?;
+            let nid = g.add(node.op.clone(), &ins)?;
+            new_ids.insert(rid, nid);
+        }
+        let matched_out = loc[self.lhs_op_pos(self.lhs_out).unwrap()];
+        splice(g, matched_out, PortRef::of(new_ids[&self.rhs_out]))
+        // Interior lhs nodes left without consumers are collected by the
+        // caller's DCE pass (`xfer::apply_rule`).
+    }
+
+    /// Relevance fingerprint: exactly the operator set of the lhs pattern.
+    /// Sound for the incremental matcher because a match's validity is a
+    /// function of the matched nodes' operators and input wiring alone
+    /// (no consumer-set constraints), and every matched node is listed in
+    /// the reported [`Location`].
+    fn op_relevant(&self, op: &OpKind) -> bool {
+        self.relevance.matches(op)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::interp::semantically_equal;
+
+    /// relu(relu(x)) → relu(x), built by hand.
+    fn relu_squash() -> SynthRule {
+        let mut g = Graph::new();
+        let x = g.add_source(OpKind::Input, TensorDesc::f32(&[4, 4]));
+        let r1 = g.add(OpKind::Relu, &[PortRef::of(x)]).unwrap();
+        let _r2 = g.add(OpKind::Relu, &[PortRef::of(r1)]).unwrap();
+        let lhs = g;
+        let mut g = Graph::new();
+        let x = g.add_source(OpKind::Input, TensorDesc::f32(&[4, 4]));
+        let _r = g.add(OpKind::Relu, &[PortRef::of(x)]).unwrap();
+        let rhs = g;
+        SynthRule::new(&lhs, &rhs, Tier::AlwaysSafe, true).unwrap()
+    }
+
+    #[test]
+    fn name_is_stable_and_content_derived() {
+        let a = relu_squash();
+        let b = relu_squash();
+        assert_eq!(a.name(), b.name());
+        assert!(a.name().starts_with("synth_"));
+    }
+
+    #[test]
+    fn finds_and_applies_on_a_host_graph() {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[2, 8]);
+        let r1 = b.relu(x).unwrap();
+        let r2 = b.relu(r1).unwrap();
+        let _t = b.op(OpKind::Tanh, &[r2]).unwrap();
+        let g = b.finish();
+
+        let rule = relu_squash();
+        let locs = rule.find(&g);
+        assert_eq!(locs.len(), 1, "exactly one relu chain");
+        let mut g2 = g.clone();
+        crate::xfer::apply_rule(&mut g2, &rule, &locs[0]).unwrap();
+        assert_eq!(g2.n_ops(), g.n_ops() - 1);
+        assert!(semantically_equal(&g, &g2, 3, 7, 1e-5).unwrap());
+        // The rewritten graph offers no further sites.
+        assert!(rule.find(&g2).is_empty());
+    }
+
+    #[test]
+    fn relevance_covers_match_nodes_only() {
+        let rule = relu_squash();
+        assert!(rule.op_relevant(&OpKind::Relu));
+        assert!(!rule.op_relevant(&OpKind::Tanh));
+        assert!(!rule.op_relevant(&OpKind::Add));
+    }
+
+    #[test]
+    fn non_shape_generic_rules_match_square_only() {
+        let mut g = Graph::new();
+        let x = g.add_source(OpKind::Input, TensorDesc::f32(&[4, 4]));
+        let r1 = g.add(OpKind::Relu, &[PortRef::of(x)]).unwrap();
+        let _ = g.add(OpKind::Relu, &[PortRef::of(r1)]).unwrap();
+        let lhs = g;
+        let mut g = Graph::new();
+        let x = g.add_source(OpKind::Input, TensorDesc::f32(&[4, 4]));
+        let _ = g.add(OpKind::Relu, &[PortRef::of(x)]).unwrap();
+        let rhs = g;
+        let rule = SynthRule::new(&lhs, &rhs, Tier::All, false).unwrap();
+
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[2, 8]); // rectangular: outside the verified class
+        let r1 = b.relu(x).unwrap();
+        let _ = b.relu(r1).unwrap();
+        assert!(rule.find(&b.finish()).is_empty());
+
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[8, 8]); // square: inside
+        let r1 = b.relu(x).unwrap();
+        let _ = b.relu(r1).unwrap();
+        assert_eq!(rule.find(&b.finish()).len(), 1);
+    }
+
+    #[test]
+    fn rhs_reading_unbound_source_is_rejected() {
+        // lhs touches only x; rhs reads y — unbindable at apply time.
+        let mut g = Graph::new();
+        let x = g.add_source(OpKind::Input, TensorDesc::f32(&[4, 4]));
+        let _y = g.add_source(OpKind::Input, TensorDesc::f32(&[4, 4]));
+        let _ = g.add(OpKind::Relu, &[PortRef::of(x)]).unwrap();
+        let lhs = g;
+        let mut g = Graph::new();
+        let _x = g.add_source(OpKind::Input, TensorDesc::f32(&[4, 4]));
+        let y = g.add_source(OpKind::Input, TensorDesc::f32(&[4, 4]));
+        let _ = g.add(OpKind::Relu, &[PortRef::of(y)]).unwrap();
+        let rhs = g;
+        assert!(SynthRule::new(&lhs, &rhs, Tier::All, true).is_err());
+    }
+
+    #[test]
+    fn shared_source_pattern_requires_shared_wiring() {
+        // lhs add(x, x) must not match add(a, b) with distinct producers.
+        let mut g = Graph::new();
+        let x = g.add_source(OpKind::Input, TensorDesc::f32(&[4, 4]));
+        let _ = g.add(OpKind::Add, &[PortRef::of(x), PortRef::of(x)]).unwrap();
+        let lhs = g;
+        let mut g = Graph::new();
+        let x = g.add_source(OpKind::Input, TensorDesc::f32(&[4, 4]));
+        let _ = g.add(OpKind::Scale { factor: 2.0 }, &[PortRef::of(x)]).unwrap();
+        let rhs = g;
+        let rule = SynthRule::new(&lhs, &rhs, Tier::AlwaysSafe, true).unwrap();
+
+        let mut b = GraphBuilder::new();
+        let p = b.input(&[4, 4]);
+        let q = b.input(&[4, 4]);
+        let _ = b.add(p, q).unwrap();
+        assert!(rule.find(&b.finish()).is_empty(), "add(p, q) is not add(x, x)");
+
+        let mut b = GraphBuilder::new();
+        let p = b.input(&[4, 4]);
+        let r = b.relu(p).unwrap();
+        let _ = b.add(r, r).unwrap();
+        let g = b.finish();
+        let locs = rule.find(&g);
+        assert_eq!(locs.len(), 1);
+        let mut g2 = g.clone();
+        crate::xfer::apply_rule(&mut g2, &rule, &locs[0]).unwrap();
+        assert!(semantically_equal(&g, &g2, 2, 3, 1e-5).unwrap());
+    }
+}

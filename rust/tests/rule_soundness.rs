@@ -1,0 +1,173 @@
+//! Zoo-wide differential soundness suite for the handwritten rule library.
+//!
+//! Every rule in `library.rs`/`library_ext.rs` is applied at match sites on
+//! every zoo graph; each rewrite is checked with the local differential
+//! equivalence oracle (`interp::locally_equivalent`), which evaluates only
+//! the removed/added cones on shared random boundary inputs instead of
+//! interpreting the full model (299x299 convolutions in debug mode are not
+//! an option).
+//!
+//! The default test budgets interpreter work with `interp::rewrite_flops`:
+//! it checks every cheap site, plus — for each rule that matched anywhere —
+//! that rule's globally cheapest site up to a larger fallback budget, so no
+//! matching rule goes unchecked just because its cones are mid-sized. The
+//! `#[ignore]`d exhaustive variant checks every site of every rule on every
+//! graph with no budget (run with `cargo test -- --ignored` when you have
+//! time to burn).
+
+use rlflow::graph::Graph;
+use rlflow::interp::{locally_equivalent, rewrite_flops};
+use rlflow::xfer::library::standard_library;
+use rlflow::xfer::{apply_rule, Location, Rule};
+
+/// Sites at or below this cone cost are always checked.
+const CHEAP_FLOPS: u64 = 500_000;
+/// Per-rule fallback: the cheapest site of an otherwise-unchecked rule is
+/// checked when it costs at most this much.
+const FALLBACK_FLOPS: u64 = 8_000_000;
+/// Random boundary draws per checked site.
+const TRIALS: usize = 2;
+/// Relative tolerance; rewrites like BN-folding reassociate f32 arithmetic.
+const TOL: f32 = 3e-3;
+
+fn site_seed(rule: &str, graph: &str, idx: usize) -> u64 {
+    let mut h = 0xCBF29CE484222325u64;
+    for b in rule.bytes().chain(graph.bytes()) {
+        h = (h ^ b as u64).wrapping_mul(0x100000001B3);
+    }
+    h ^ (idx as u64).wrapping_mul(0x9E3779B97F4A7C15)
+}
+
+/// One applicable site, with the rewrite pre-applied and costed.
+struct Site {
+    graph_name: &'static str,
+    loc: Location,
+    flops: u64,
+}
+
+/// Check one site, returning an error string on unsoundness.
+fn check_site(rule: &dyn Rule, g: &Graph, site: &Site, idx: usize) -> Result<(), String> {
+    let mut g2 = g.clone();
+    let report = apply_rule(&mut g2, rule, &site.loc)
+        .map_err(|e| format!("{} on {}: apply failed: {e}", rule.name(), site.graph_name))?;
+    let seed = site_seed(rule.name(), site.graph_name, idx);
+    match locally_equivalent(g, &g2, &report, TRIALS, seed, TOL) {
+        Ok(true) => Ok(()),
+        Ok(false) => Err(format!(
+            "{} on {} at {:?}: rewrite changed semantics",
+            rule.name(),
+            site.graph_name,
+            site.loc
+        )),
+        Err(e) => Err(format!(
+            "{} on {} at {:?}: differential check errored: {e}",
+            rule.name(),
+            site.graph_name,
+            site.loc
+        )),
+    }
+}
+
+/// Enumerate (and cost) every site of every library rule on every zoo graph.
+/// Returns the zoo plus, per rule, its site list.
+fn all_sites() -> (Vec<(&'static str, Graph)>, Vec<(usize, Vec<Site>)>) {
+    let zoo: Vec<(&'static str, Graph)> =
+        rlflow::zoo::all().into_iter().map(|(info, g)| (info.name, g)).collect();
+    let lib = standard_library();
+    let mut per_rule = Vec::new();
+    for (ri, rule) in lib.rules.iter().enumerate() {
+        let mut sites = Vec::new();
+        for (name, g) in &zoo {
+            for loc in rule.find(g) {
+                let mut g2 = g.clone();
+                let flops = match apply_rule(&mut g2, rule.as_ref(), &loc) {
+                    Ok(report) => rewrite_flops(g, &g2, &report),
+                    // Apply failures are real bugs; surface them via a
+                    // zero-cost site the checker is guaranteed to pick up.
+                    Err(_) => 0,
+                };
+                sites.push(Site { graph_name: name, loc, flops });
+            }
+        }
+        per_rule.push((ri, sites));
+    }
+    (zoo, per_rule)
+}
+
+#[test]
+fn zoo_rules_are_locally_sound_within_budget() {
+    let (zoo, per_rule) = all_sites();
+    let lib = standard_library();
+    let graph_by_name = |n: &str| &zoo.iter().find(|(name, _)| *name == n).unwrap().1;
+
+    let mut failures: Vec<String> = Vec::new();
+    let mut checked_sites = 0usize;
+    let mut checked_rules = 0usize;
+    let mut matching_rules = 0usize;
+    for (ri, sites) in &per_rule {
+        let rule = lib.rules[*ri].as_ref();
+        if sites.is_empty() {
+            continue;
+        }
+        matching_rules += 1;
+        let mut rule_checked = false;
+        for (idx, site) in sites.iter().enumerate() {
+            if site.flops <= CHEAP_FLOPS {
+                if let Err(e) = check_site(rule, graph_by_name(site.graph_name), site, idx) {
+                    failures.push(e);
+                }
+                checked_sites += 1;
+                rule_checked = true;
+            }
+        }
+        if !rule_checked {
+            // All sites were expensive: check the cheapest one if the
+            // fallback budget covers it.
+            let (idx, cheapest) = sites
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, s)| s.flops)
+                .expect("non-empty site list");
+            if cheapest.flops <= FALLBACK_FLOPS {
+                if let Err(e) = check_site(rule, graph_by_name(cheapest.graph_name), cheapest, idx)
+                {
+                    failures.push(e);
+                }
+                checked_sites += 1;
+                rule_checked = true;
+            }
+        }
+        if rule_checked {
+            checked_rules += 1;
+        }
+    }
+    assert!(failures.is_empty(), "unsound rewrites:\n{}", failures.join("\n"));
+    // The budget must leave a meaningful fraction of the library covered —
+    // if these floors break, the budgets (or the zoo) changed character.
+    assert!(checked_sites >= 30, "only {checked_sites} sites fit the budget");
+    assert!(
+        checked_rules * 2 >= matching_rules,
+        "only {checked_rules}/{matching_rules} matching rules were checked"
+    );
+}
+
+/// Exhaustive variant: every site of every rule on every zoo graph, no
+/// flop budget. Hours of debug-mode interpreter time; run explicitly via
+/// `cargo test --release -- --ignored zoo_rules_are_locally_sound_everywhere`.
+#[test]
+#[ignore]
+fn zoo_rules_are_locally_sound_everywhere() {
+    let (zoo, per_rule) = all_sites();
+    let lib = standard_library();
+    let graph_by_name = |n: &str| &zoo.iter().find(|(name, _)| *name == n).unwrap().1;
+    let mut failures = Vec::new();
+    for (ri, sites) in &per_rule {
+        let rule = lib.rules[*ri].as_ref();
+        for (idx, site) in sites.iter().enumerate() {
+            if let Err(e) = check_site(rule, graph_by_name(site.graph_name), site, idx) {
+                failures.push(e);
+            }
+        }
+    }
+    assert!(failures.is_empty(), "unsound rewrites:\n{}", failures.join("\n"));
+}

@@ -1,0 +1,202 @@
+//! End-to-end properties of the `xfer::synth` pipeline:
+//!
+//!  * determinism — same config ⇒ bit-identical rule list, tier
+//!    assignment and serialised ruleset bytes (round-trip included);
+//!  * composition — synthesised rules drop into the incremental matcher
+//!    (maintained match lists == full refresh at every step) and the
+//!    parallel search (bit-identical for any thread count);
+//!  * usefulness — greedy/taso with handwritten + synthesised tiers never
+//!    end worse than the handwritten library alone.
+
+use rlflow::cost::{CostModel, DeviceProfile};
+use rlflow::env::{Env, EnvConfig};
+use rlflow::graph::{canonical_hash, Graph, GraphBuilder, OpKind};
+use rlflow::search::{greedy_optimise_threads, taso_optimise, TasoConfig};
+use rlflow::util::Rng;
+use rlflow::xfer::library::standard_library;
+use rlflow::xfer::synth::{
+    library_with_rules, load_rules, save_rules, synthesise, SynthConfig, Tier,
+};
+use rlflow::xfer::Rule;
+
+fn smoke_cfg() -> SynthConfig {
+    SynthConfig {
+        alphabet: "ewise,act,shape,scale".into(),
+        tier: Tier::All,
+        ..SynthConfig::default()
+    }
+}
+
+fn ruleset_path(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("rlflow_synth_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{tag}.json"))
+}
+
+/// Small host graph with sites for both handwritten rules (matmul/relu
+/// fusion, transpose pairs, relu idempotence) and synthesised ones
+/// (relu∘relu, transpose∘transpose, scale(2)∘scale(0.5), ...).
+fn host_graph() -> Graph {
+    let mut b = GraphBuilder::new();
+    let x = b.input(&[8, 8]);
+    let r = b.relu(x).unwrap();
+    let r2 = b.relu(r).unwrap();
+    let t = b.op(OpKind::Transpose { perm: vec![1, 0] }, &[r2]).unwrap();
+    let t2 = b.op(OpKind::Transpose { perm: vec![1, 0] }, &[t]).unwrap();
+    let s = b.op(OpKind::Scale { factor: 2.0 }, &[t2]).unwrap();
+    let s2 = b.op(OpKind::Scale { factor: 0.5 }, &[s]).unwrap();
+    let w = b.weight(&[8, 8]);
+    let mm = b
+        .op(
+            OpKind::MatMul {
+                trans_a: false,
+                trans_b: false,
+                act: rlflow::graph::Activation::None,
+            },
+            &[s2, w],
+        )
+        .unwrap();
+    let _ = b.relu(mm).unwrap();
+    b.finish()
+}
+
+#[test]
+fn synthesis_is_deterministic_and_round_trips() {
+    let cfg = smoke_cfg();
+    let a = synthesise(&cfg).unwrap();
+    let b = synthesise(&cfg).unwrap();
+    assert!(!a.rules.is_empty());
+    assert_eq!(a.stats, b.stats, "pipeline counters must be reproducible");
+    let sig = |out: &rlflow::xfer::synth::SynthOutput| {
+        out.rules
+            .iter()
+            .map(|r| (r.name(), r.tier(), r.shape_generic()))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(sig(&a), sig(&b), "rule list / tier assignment must be reproducible");
+
+    // Serialised bytes are bit-identical across runs, and a round trip
+    // through disk preserves every rule.
+    let (p1, p2) = (ruleset_path("det1"), ruleset_path("det2"));
+    save_rules(&p1, &a.rules, &cfg).unwrap();
+    save_rules(&p2, &b.rules, &cfg).unwrap();
+    let (bytes1, bytes2) = (std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+    assert_eq!(bytes1, bytes2, "serialised ruleset bytes must be bit-identical");
+    let back = load_rules(&p1).unwrap();
+    assert_eq!(
+        back.iter().map(|r| r.name()).collect::<Vec<_>>(),
+        a.rules.iter().map(|r| r.name()).collect::<Vec<_>>()
+    );
+    std::fs::remove_file(&p1).ok();
+    std::fs::remove_file(&p2).ok();
+}
+
+#[test]
+fn combined_ruleset_incremental_matches_full_refresh() {
+    let cfg = smoke_cfg();
+    let out = synthesise(&cfg).unwrap();
+    let path = ruleset_path("inc");
+    save_rules(&path, &out.rules, &cfg).unwrap();
+    let rules = library_with_rules(path.to_str()).unwrap();
+    std::fs::remove_file(&path).ok();
+    let g = host_graph();
+
+    // The synthesised rules must actually participate on this graph.
+    let synth_sites: usize = rules
+        .rules
+        .iter()
+        .filter(|r| r.name().starts_with("synth_"))
+        .map(|r| r.find(&g).len())
+        .sum();
+    assert!(synth_sites > 0, "no synthesised rule matches the host graph");
+
+    let cost = CostModel::new(DeviceProfile::rtx2070());
+    let mut inc = Env::new(g.clone(), &rules, &cost, EnvConfig::default());
+    let mut oracle =
+        Env::new(g, &rules, &cost, EnvConfig { full_refresh: true, ..Default::default() });
+    let mut rng = Rng::new(0x5717);
+    for step in 0..8 {
+        let obs = oracle.observe();
+        let inc_obs = inc.observe();
+        assert_eq!(obs.xfer_mask, inc_obs.xfer_mask, "step {step}");
+        assert_eq!(obs.location_counts, inc_obs.location_counts, "step {step}");
+        assert_eq!(
+            inc.match_lists(),
+            &inc.match_lists_reference()[..],
+            "step {step}: maintained lists diverged from full refresh"
+        );
+        let valid: Vec<usize> = (0..rules.len()).filter(|&i| obs.xfer_mask[i]).collect();
+        if valid.is_empty() {
+            break;
+        }
+        let x = valid[rng.below(valid.len())];
+        let l = rng.below(obs.location_counts[x]);
+        let r_ref = oracle.step((x, l));
+        let r_inc = inc.step((x, l));
+        assert!(r_ref.info.valid && r_inc.info.valid, "step {step}");
+        assert_eq!(r_ref.done, r_inc.done, "step {step}");
+    }
+}
+
+#[test]
+fn combined_ruleset_search_is_thread_invariant() {
+    let cfg = smoke_cfg();
+    let out = synthesise(&cfg).unwrap();
+    let path = ruleset_path("threads");
+    save_rules(&path, &out.rules, &cfg).unwrap();
+    let rules = library_with_rules(path.to_str()).unwrap();
+    std::fs::remove_file(&path).ok();
+    let g = host_graph();
+    let cost = CostModel::new(DeviceProfile::rtx2070());
+
+    let (sg, slog) =
+        taso_optimise(&g, &rules, &cost, &TasoConfig { threads: 1, ..Default::default() });
+    for threads in [2, 4] {
+        let (pg, plog) =
+            taso_optimise(&g, &rules, &cost, &TasoConfig { threads, ..Default::default() });
+        assert_eq!(slog.final_ms.to_bits(), plog.final_ms.to_bits(), "{threads} threads");
+        assert_eq!(canonical_hash(&sg), canonical_hash(&pg), "{threads} threads");
+        assert_eq!(slog.graphs_explored, plog.graphs_explored, "{threads} threads");
+    }
+    let (gg, glog) = greedy_optimise_threads(&g, &rules, &cost, 50, 1);
+    let (pg, plog) = greedy_optimise_threads(&g, &rules, &cost, 50, 4);
+    assert_eq!(glog.final_ms.to_bits(), plog.final_ms.to_bits());
+    assert_eq!(canonical_hash(&gg), canonical_hash(&pg));
+}
+
+#[test]
+fn combined_ruleset_never_ends_worse_than_handwritten() {
+    let cfg = SynthConfig { tier: Tier::AlwaysSafe, ..smoke_cfg() };
+    let out = synthesise(&cfg).unwrap();
+    assert!(!out.rules.is_empty(), "always-safe tier is empty at smoke scale");
+    let path = ruleset_path("cost");
+    save_rules(&path, &out.rules, &cfg).unwrap();
+    let combined = library_with_rules(path.to_str()).unwrap();
+    std::fs::remove_file(&path).ok();
+    let plain = standard_library();
+    let cost = CostModel::new(DeviceProfile::rtx2070());
+
+    // The host graph (where synthesised rules fire) plus one real zoo
+    // graph: a strictly larger vocabulary must never strand the search on
+    // a worse final cost.
+    let graphs = vec![host_graph(), rlflow::zoo::squeezenet1_1()];
+    for (i, g) in graphs.iter().enumerate() {
+        let (_, plain_log) = greedy_optimise_threads(g, &plain, &cost, 50, 0);
+        let (_, comb_log) = greedy_optimise_threads(g, &combined, &cost, 50, 0);
+        assert!(
+            comb_log.final_ms <= plain_log.final_ms * (1.0 + 1e-9),
+            "graph {i}: greedy with synth rules regressed ({} -> {})",
+            plain_log.final_ms,
+            comb_log.final_ms
+        );
+    }
+    let g = host_graph();
+    let (_, plain_log) = taso_optimise(&g, &plain, &cost, &TasoConfig::default());
+    let (_, comb_log) = taso_optimise(&g, &combined, &cost, &TasoConfig::default());
+    assert!(
+        comb_log.final_ms <= plain_log.final_ms * (1.0 + 1e-9),
+        "taso with synth rules regressed ({} -> {})",
+        plain_log.final_ms,
+        comb_log.final_ms
+    );
+}
