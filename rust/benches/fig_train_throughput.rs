@@ -1,21 +1,24 @@
-//! Bench: host-backend training throughput — the PR-5 kernel/Workspace
-//! rework measured end to end.
+//! Bench: host-backend training throughput — the versioned reduction
+//! orders (V1 scalar vs V2 lane-tiled + sample-parallel training)
+//! measured end to end.
 //!
-//! Four kernel configurations run the same seeded synthetic workload:
+//! Seven kernel configurations run the same seeded synthetic workload:
 //!
 //!  * `seed_scalar` — the seed scalar triple-loop kernels
 //!    (`KernelMode::Reference`), the pre-rework baseline;
-//!  * `blocked_t1`  — cache-blocked kernels, single thread;
-//!  * `blocked_t4`  — blocked kernels, 4 worker threads;
-//!  * `blocked_t8`  — blocked kernels, 8 worker threads.
+//!  * `v1_t1`/`v1_t4`/`v1_t8` — cache-blocked `V1Scalar` kernels at 1,
+//!    4 and 8 worker threads (the PR-5 configuration);
+//!  * `v2_t1`/`v2_t4`/`v2_t8` — `V2LaneTiled` SIMD-lane kernels with
+//!    sample-parallel train gradients at 1, 4 and 8 worker threads.
 //!
-//! Per program family the table reports ms/call and the speedup of each
-//! blocked column over the seed scalar baseline, plus a `parity` column
-//! checking the outputs are bit-identical across all four configurations
-//! (the kernel determinism contract). The final section times one full
-//! train step (gnn_ae_train + wm_train + ctrl_train) per configuration —
-//! end-to-end train steps/sec. Results are written to BENCH_train.json at
-//! the repository root.
+//! Per program family the table reports ms/call and speedups over the
+//! seed baseline. Parity is checked per order: `seed_scalar` and every
+//! `v1_*` column must be bit-identical, every `v2_*` column must be
+//! bit-identical, and the V1↔V2 pair must agree within a relative-error
+//! bound (reported as `v1_v2_max_rel_err`). The final section times one
+//! full train step (gnn_ae_train + wm_train + ctrl_train) per
+//! configuration — end-to-end train steps/sec. Results are written to
+//! BENCH_train.json at the repository root.
 
 use std::time::Instant;
 
@@ -24,16 +27,28 @@ use rlflow::runtime::{
 };
 use rlflow::util::Rng;
 
-const CONFIG_NAMES: [&str; 4] = ["seed_scalar", "blocked_t1", "blocked_t4", "blocked_t8"];
+const CONFIG_NAMES: [&str; 7] =
+    ["seed_scalar", "v1_t1", "v1_t4", "v1_t8", "v2_t1", "v2_t4", "v2_t8"];
 
 fn kernel_cfg(name: &str) -> KernelCfg {
     match name {
         "seed_scalar" => KernelCfg::reference(),
-        "blocked_t1" => KernelCfg::blocked(1),
-        "blocked_t4" => KernelCfg::blocked(4),
-        "blocked_t8" => KernelCfg::blocked(8),
+        "v1_t1" => KernelCfg::blocked(1),
+        "v1_t4" => KernelCfg::blocked(4),
+        "v1_t8" => KernelCfg::blocked(8),
+        "v2_t1" => KernelCfg::v2(1),
+        "v2_t4" => KernelCfg::v2(4),
+        "v2_t8" => KernelCfg::v2(8),
         other => panic!("unknown config {other}"),
     }
+}
+
+/// Largest elementwise relative error between two signatures.
+fn max_rel_err(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| ((x - y).abs() / x.abs().max(y.abs()).max(1e-6)) as f64)
+        .fold(0.0, f64::max)
 }
 
 /// Seeded synthetic workload sized to the backend's manifest.
@@ -285,44 +300,60 @@ fn run_config(name: &str) -> ConfigRun {
 
 fn main() {
     let runs: Vec<ConfigRun> = CONFIG_NAMES.iter().map(|n| run_config(n)).collect();
-    let parity = runs.iter().all(|r| r.signature == runs[0].signature);
+    // Per-order bit parity: seed + every v1_* column; every v2_* column.
+    let v1_bitwise = runs[..4].iter().all(|r| r.signature == runs[0].signature);
+    let v2_bitwise = runs[4..].iter().all(|r| r.signature == runs[4].signature);
+    let cross_err = max_rel_err(&runs[0].signature, &runs[4].signature);
 
     println!(
-        "{:<15} {:>12} {:>12} {:>12} {:>12} {:>9} {:>7}",
-        "program", "seed ms", "blocked t1", "blocked t4", "blocked t8", "t8 spdup", "parity"
+        "{:<15} {:>10} {:>9} {:>9} {:>9} {:>9} {:>10} {:>10}",
+        "program", "seed ms", "v1 t1", "v1 t8", "v2 t1", "v2 t8", "v2t8 spdup", "v2/v1 t8"
     );
     let mut json_rows = Vec::new();
     for (pi, &(prog, _)) in runs[0].ms.iter().enumerate() {
         let col = |ci: usize| runs[ci].ms[pi].1;
-        let spdup = col(0) / col(3).max(1e-9);
+        let spdup_v1 = col(0) / col(3).max(1e-9);
+        let spdup_v2 = col(0) / col(6).max(1e-9);
+        let v2_over_v1 = col(3) / col(6).max(1e-9);
         println!(
-            "{:<15} {:>12.3} {:>12.3} {:>12.3} {:>12.3} {:>8.2}x {:>7}",
+            "{:<15} {:>10.3} {:>9.3} {:>9.3} {:>9.3} {:>9.3} {:>9.2}x {:>9.2}x",
             prog,
             col(0),
             col(1),
-            col(2),
             col(3),
-            spdup,
-            if parity { "ok" } else { "DIVERGED" },
+            col(4),
+            col(6),
+            spdup_v2,
+            v2_over_v1,
         );
         json_rows.push(format!(
             concat!(
-                "    {{\"program\": \"{}\", \"seed_scalar_ms\": {:.4}, \"blocked_t1_ms\": {:.4}, ",
-                "\"blocked_t4_ms\": {:.4}, \"blocked_t8_ms\": {:.4}, \"speedup_t8\": {:.3}}}"
+                "    {{\"program\": \"{}\", \"seed_scalar_ms\": {:.4}, ",
+                "\"v1_t1_ms\": {:.4}, \"v1_t4_ms\": {:.4}, \"v1_t8_ms\": {:.4}, ",
+                "\"v2_t1_ms\": {:.4}, \"v2_t4_ms\": {:.4}, \"v2_t8_ms\": {:.4}, ",
+                "\"speedup_v1_t8\": {:.3}, \"speedup_v2_t8\": {:.3}, ",
+                "\"speedup_v2_over_v1_t8\": {:.3}}}"
             ),
             prog,
             col(0),
             col(1),
             col(2),
             col(3),
-            spdup,
+            col(4),
+            col(5),
+            col(6),
+            spdup_v1,
+            spdup_v2,
+            v2_over_v1,
         ));
     }
     println!();
     for (ci, name) in CONFIG_NAMES.iter().enumerate() {
         println!("end-to-end train steps/sec [{name:>12}]: {:.2}", runs[ci].steps_per_s);
     }
-    println!("output parity across configurations: {}", if parity { "ok" } else { "DIVERGED" });
+    println!("V1 parity (seed + v1_*): {}", if v1_bitwise { "ok" } else { "DIVERGED" });
+    println!("V2 parity (v2_*): {}", if v2_bitwise { "ok" } else { "DIVERGED" });
+    println!("V1<->V2 max relative error: {cross_err:.3e}");
 
     // `cargo bench` runs from the package root (rust/); the results file
     // lives beside CHANGES.md at the repository root.
@@ -339,10 +370,13 @@ fn main() {
     let json = format!(
         concat!(
             "{{\n  \"bench\": \"fig_train_throughput\",\n  \"placeholder\": false,\n",
-            "  \"parity\": {},\n  \"rows\": [\n{}\n  ],\n",
+            "  \"parity\": {{\"v1_bitwise\": {}, \"v2_bitwise\": {}, ",
+            "\"v1_v2_max_rel_err\": {:.6e}}},\n  \"rows\": [\n{}\n  ],\n",
             "  \"end_to_end_train_steps_per_s\": {{{}}}\n}}\n"
         ),
-        parity,
+        v1_bitwise,
+        v2_bitwise,
+        cross_err,
         json_rows.join(",\n"),
         steps.join(", ")
     );

@@ -60,6 +60,11 @@ impl StateBatch {
 }
 
 impl<'e> Pipeline<'e> {
+    /// How many `B_ENC` state batches [`Self::encode_episodes`] stages per
+    /// `exec_with_params_batch` call: enough to amortise dispatch, small
+    /// enough to keep staged input memory bounded on long episode sets.
+    pub const ENC_CHUNK_GROUP: usize = 4;
+
     pub fn new(backend: &'e dyn Backend) -> anyhow::Result<Self> {
         let n = backend.hp("MAX_NODES")?;
         let f = backend.hp("NODE_FEATS")?;
@@ -134,6 +139,13 @@ impl<'e> Pipeline<'e> {
     // ------------------------------------------------------------------
 
     /// Fill `ep.z` for every state of every episode (batched).
+    ///
+    /// Chunks of `B_ENC` states are dispatched several-at-a-time through
+    /// [`exec_with_params_batch`](Backend::exec_with_params_batch) —
+    /// bounding staged memory to [`Self::ENC_CHUNK_GROUP`] batches while
+    /// amortising per-call dispatch. Chunking and the pad-by-first-state
+    /// rule are unchanged, so every latent stays bit-identical to the
+    /// one-call-per-chunk history.
     pub fn encode_episodes(
         &self,
         gnn: &ParamStore,
@@ -149,21 +161,30 @@ impl<'e> Pipeline<'e> {
         for ep in episodes.iter_mut() {
             ep.z = vec![Vec::new(); ep.states.len()];
         }
-        for chunk in slots.chunks(self.b_enc) {
-            let mut states: Vec<&crate::agent::CompactState> = chunk
-                .iter()
-                .map(|&(ei, si)| &episodes[ei].states[si])
+        let zd = self.dims.zdim;
+        for group in slots.chunks(self.b_enc * Self::ENC_CHUNK_GROUP) {
+            let batches: Vec<StateBatch> = group
+                .chunks(self.b_enc)
+                .map(|chunk| {
+                    let mut states: Vec<&crate::agent::CompactState> = chunk
+                        .iter()
+                        .map(|&(ei, si)| &episodes[ei].states[si])
+                        .collect();
+                    // Pad the final partial batch by repeating the first state.
+                    while states.len() < self.b_enc {
+                        states.push(states[0]);
+                    }
+                    self.batch_states(&states)
+                })
                 .collect();
-            // Pad the final partial batch by repeating the first state.
-            while states.len() < self.b_enc {
-                states.push(states[0]);
-            }
-            let batch = self.batch_states(&states);
-            let out = self.backend.exec_with_params("gnn_encode_b", gnn, &batch.views())?;
-            let zs = &out[0].data;
-            let zd = self.dims.zdim;
-            for (i, &(ei, si)) in chunk.iter().enumerate() {
-                episodes[ei].z[si] = zs[i * zd..(i + 1) * zd].to_vec();
+            let rests: Vec<Vec<TensorView>> =
+                batches.iter().map(|b| b.views().to_vec()).collect();
+            let outs = self.backend.exec_with_params_batch("gnn_encode_b", gnn, &rests)?;
+            for (chunk, out) in group.chunks(self.b_enc).zip(&outs) {
+                let zs = &out[0].data;
+                for (i, &(ei, si)) in chunk.iter().enumerate() {
+                    episodes[ei].z[si] = zs[i * zd..(i + 1) * zd].to_vec();
+                }
             }
         }
         Ok(())

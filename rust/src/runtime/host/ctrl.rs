@@ -12,7 +12,10 @@
 //! blocked/threaded GEMMs, bit-identical to the scalar reference) and all
 //! scratch comes from the caller's [`Workspace`].
 
-use super::kernels::{acc_xt_dy, dy_wt_acc, dy_wt_into, linear_into, Act, KernelCfg, Workspace};
+use super::kernels::{
+    acc_xt_dy, dy_wt_acc, dy_wt_into, linear_into, v2_accumulate_grads, Act, KernelCfg,
+    ReductionOrder, Workspace,
+};
 use super::nn::{acc_rows, adam_step, ParamLayout};
 
 pub struct CtrlNet {
@@ -183,6 +186,15 @@ impl CtrlNet {
     }
 
     /// One PPO Adam step (`ctrl_train`).
+    ///
+    /// Batch-level statistics (advantage mean/std) are computed once over
+    /// the whole batch and shared by every sample group, so they are part
+    /// of both reduction orders' contracts. Under
+    /// [`ReductionOrder::V1Scalar`] the batch accumulates in one
+    /// sequential [`Self::accumulate_range`] call (the seed bit pattern);
+    /// under [`ReductionOrder::V2LaneTiled`] the fixed sample groups
+    /// accumulate into per-group buffers folded by a fixed pairwise tree —
+    /// bit-identical for any worker count.
     #[allow(clippy::too_many_arguments)]
     pub fn train_step(
         &self,
@@ -205,33 +217,110 @@ impl CtrlNet {
         clip: f32,
         ent_coef: f32,
     ) -> PpoStepStats {
-        let (c, x1, locs) = (self.hidden, self.x1, self.locs);
-        let u_dim = self.zdim + self.rdim;
-        let noop = x1 - 1;
         let binv = 1.0 / b.max(1) as f32;
-
-        let trunk = self.trunk(ws, kc, theta, z, h, b);
-        let xlogits = self.head(ws, kc, theta, &trunk.tt, "wx", "bx", b, x1);
-        let la = self.head(ws, kc, theta, &trunk.tt, "wl", "bl", b, locs);
-        let vals = self.head(ws, kc, theta, &trunk.tt, "wv", "bv", b, 1);
-
         // Advantage normalisation (batch-level, standard PPO practice).
         let a_mean = adv.iter().sum::<f32>() * binv;
         let a_var = adv.iter().map(|a| (a - a_mean) * (a - a_mean)).sum::<f32>() * binv;
         let a_std = a_var.sqrt().max(1e-6);
 
-        let mut dxlogits = ws.take(b * x1);
-        let mut dla = ws.take(b * locs);
-        let mut dvals = ws.take(b);
+        let theta_ref: &[f32] = theta;
+        let (grad, aux) = match kc.effective_order() {
+            ReductionOrder::V1Scalar => {
+                let mut grad = ws.take(theta_ref.len());
+                let mut aux = ws.take(4);
+                self.accumulate_range(
+                    ws, kc, theta_ref, z, h, act, logp_old, adv, ret, xmask, lmask, 0..b, binv,
+                    a_mean, a_std, clip, ent_coef, &mut grad, &mut aux,
+                );
+                (grad, aux)
+            }
+            ReductionOrder::V2LaneTiled => {
+                let c = self.hidden;
+                let wide = self.x1 + self.locs + 1;
+                let macs = b * ((self.zdim + self.rdim) * c + c * wide) * 3;
+                v2_accumulate_grads(
+                    ws,
+                    kc,
+                    b,
+                    theta_ref.len(),
+                    4,
+                    macs,
+                    |rows, cfg, cw, grad, aux| {
+                        self.accumulate_range(
+                            cw, cfg, theta_ref, z, h, act, logp_old, adv, ret, xmask, lmask, rows,
+                            binv, a_mean, a_std, clip, ent_coef, grad, aux,
+                        );
+                    },
+                )
+            }
+        };
+        adam_step(theta, m, v, t_step, &grad, lr);
+        let stats =
+            PpoStepStats { pi_loss: aux[0], v_loss: aux[1], entropy: aux[2], approx_kl: aux[3] };
+        ws.put_all([grad, aux]);
+        stats
+    }
+
+    /// Accumulate the PPO gradient and loss contributions of samples
+    /// `rows` into `grad` and `aux` (`[pi_loss, v_loss, entropy,
+    /// approx_kl]`). Trunk and head rows are per-sample independent, so
+    /// running them over a sub-range reproduces the full-batch rows
+    /// bit-exactly; one full-range call therefore reproduces the seed (V1)
+    /// bit pattern.
+    #[allow(clippy::too_many_arguments)]
+    fn accumulate_range(
+        &self,
+        ws: &mut Workspace,
+        kc: &KernelCfg,
+        theta: &[f32],
+        z: &[f32],
+        h: &[f32],
+        act: &[i32],
+        logp_old: &[f32],
+        adv: &[f32],
+        ret: &[f32],
+        xmask: &[f32],
+        lmask: &[f32],
+        rows: std::ops::Range<usize>,
+        binv: f32,
+        a_mean: f32,
+        a_std: f32,
+        clip: f32,
+        ent_coef: f32,
+        grad: &mut [f32],
+        aux: &mut [f32],
+    ) {
+        let (c, x1, locs) = (self.hidden, self.x1, self.locs);
+        let (zd, rd) = (self.zdim, self.rdim);
+        let u_dim = zd + rd;
+        let noop = x1 - 1;
+        let r0 = rows.start;
+        let br = rows.len();
+
+        let trunk = self.trunk(
+            ws,
+            kc,
+            theta,
+            &z[r0 * zd..rows.end * zd],
+            &h[r0 * rd..rows.end * rd],
+            br,
+        );
+        let xlogits = self.head(ws, kc, theta, &trunk.tt, "wx", "bx", br, x1);
+        let la = self.head(ws, kc, theta, &trunk.tt, "wl", "bl", br, locs);
+        let vals = self.head(ws, kc, theta, &trunk.tt, "wv", "bv", br, 1);
+
+        let mut dxlogits = ws.take(br * x1);
+        let mut dla = ws.take(br * locs);
+        let mut dvals = ws.take(br);
         let mut x_lsm = ws.take(x1);
         let mut px = ws.take(x1);
         let mut l_lsm = ws.take(locs);
         let mut pl = ws.take(locs);
-        let (mut pi_loss, mut v_loss, mut entropy, mut kl) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
 
-        for r in 0..b {
+        for ri in 0..br {
+            let r = r0 + ri; // global row for the batch input tensors
             let advn = (adv[r] - a_mean) / a_std;
-            let xrow = &xlogits[r * x1..(r + 1) * x1];
+            let xrow = &xlogits[ri * x1..(ri + 1) * x1];
             let xm = |j: usize| j == noop || xmask[r * x1 + j] >= 0.5; // NO-OP always valid
             masked_lsm_into(xrow, xm, &mut x_lsm, &mut px);
             let ax = (act[r * 2] as usize).min(x1 - 1);
@@ -239,7 +328,7 @@ impl CtrlNet {
 
             let lm = |j: usize| lmask[r * locs + j] >= 0.5;
             let loc_used = ax != noop && (0..locs).any(lm);
-            let lrow = &la[r * locs..(r + 1) * locs];
+            let lrow = &la[ri * locs..(ri + 1) * locs];
             masked_lsm_into(lrow, lm, &mut l_lsm, &mut pl);
 
             let mut logp = x_lsm[ax];
@@ -252,19 +341,19 @@ impl CtrlNet {
             let ratio_c = ratio.clamp(1.0 - clip, 1.0 + clip);
             let unclipped = ratio * advn;
             let clipped = ratio_c * advn;
-            pi_loss += -unclipped.min(clipped) * binv;
-            kl += (old - logp) * binv;
+            aux[0] += -unclipped.min(clipped) * binv;
+            aux[3] += (old - logp) * binv;
 
             // d(-min)/dlogp: the clipped branch has zero gradient when active.
             let dlogp = if unclipped <= clipped { -advn * ratio * binv } else { 0.0 };
             for j in 0..x1 {
                 let onehot = if j == ax { 1.0 } else { 0.0 };
-                dxlogits[r * x1 + j] += dlogp * (onehot - px[j]);
+                dxlogits[ri * x1 + j] += dlogp * (onehot - px[j]);
             }
             if loc_used {
                 for j in 0..locs {
                     let onehot = if j == al { 1.0 } else { 0.0 };
-                    dla[r * locs + j] += dlogp * (onehot - pl[j]);
+                    dla[ri * locs + j] += dlogp * (onehot - pl[j]);
                 }
             }
 
@@ -275,64 +364,60 @@ impl CtrlNet {
                     h_row -= px[j] * x_lsm[j];
                 }
             }
-            entropy += h_row * binv;
+            aux[2] += h_row * binv;
             for j in 0..x1 {
                 if px[j] > 0.0 {
                     // d(-ent_coef * H)/dl_j = ent_coef * p_j (log p_j + H)
-                    dxlogits[r * x1 + j] += ent_coef * px[j] * (x_lsm[j] + h_row) * binv;
+                    dxlogits[ri * x1 + j] += ent_coef * px[j] * (x_lsm[j] + h_row) * binv;
                 }
             }
 
             // Value loss (0.5 coefficient in the total objective).
-            let dv = vals[r] - ret[r];
-            v_loss += dv * dv * binv;
-            dvals[r] = dv * binv; // 0.5 * 2 * (v - ret) / b
+            let dv = vals[ri] - ret[r];
+            aux[1] += dv * dv * binv;
+            dvals[ri] = dv * binv; // 0.5 * 2 * (v - ret) / b
         }
         ws.put_all([x_lsm, px, l_lsm, pl]);
 
         // ---- backward through heads and trunk ----------------------------
-        let mut grad = ws.take(theta.len());
         let mut dwx = ws.take(c * x1);
         let mut dbx = ws.take(x1);
         let mut dwl = ws.take(c * locs);
         let mut dbl = ws.take(locs);
         let mut dwv = ws.take(c);
         let mut dbv = ws.take(1);
-        acc_xt_dy(kc, &trunk.tt, &dxlogits, b, c, x1, &mut dwx);
-        acc_rows(&dxlogits, b, x1, &mut dbx);
-        acc_xt_dy(kc, &trunk.tt, &dla, b, c, locs, &mut dwl);
-        acc_rows(&dla, b, locs, &mut dbl);
-        acc_xt_dy(kc, &trunk.tt, &dvals, b, c, 1, &mut dwv);
-        acc_rows(&dvals, b, 1, &mut dbv);
+        acc_xt_dy(kc, &trunk.tt, &dxlogits, br, c, x1, &mut dwx);
+        acc_rows(&dxlogits, br, x1, &mut dbx);
+        acc_xt_dy(kc, &trunk.tt, &dla, br, c, locs, &mut dwl);
+        acc_rows(&dla, br, locs, &mut dbl);
+        acc_xt_dy(kc, &trunk.tt, &dvals, br, c, 1, &mut dwv);
+        acc_rows(&dvals, br, 1, &mut dbv);
 
-        let mut dtt = ws.take(b * c);
-        dy_wt_into(kc, &dxlogits, self.layout.view(theta, "wx"), b, x1, c, &mut dtt);
-        dy_wt_acc(kc, &dla, self.layout.view(theta, "wl"), b, locs, c, &mut dtt);
-        dy_wt_acc(kc, &dvals, self.layout.view(theta, "wv"), b, 1, c, &mut dtt);
+        let mut dtt = ws.take(br * c);
+        dy_wt_into(kc, &dxlogits, self.layout.view(theta, "wx"), br, x1, c, &mut dtt);
+        dy_wt_acc(kc, &dla, self.layout.view(theta, "wl"), br, locs, c, &mut dtt);
+        dy_wt_acc(kc, &dvals, self.layout.view(theta, "wv"), br, 1, c, &mut dtt);
         let mut dpre = dtt;
         for (dp, tv) in dpre.iter_mut().zip(&trunk.tt) {
             *dp *= 1.0 - tv * tv;
         }
         let mut dwt = ws.take(u_dim * c);
         let mut dbt = ws.take(c);
-        acc_xt_dy(kc, &trunk.u, &dpre, b, u_dim, c, &mut dwt);
-        acc_rows(&dpre, b, c, &mut dbt);
+        acc_xt_dy(kc, &trunk.u, &dpre, br, u_dim, c, &mut dwt);
+        acc_rows(&dpre, br, c, &mut dbt);
 
-        self.layout.scatter(&mut grad, "wt", &dwt);
-        self.layout.scatter(&mut grad, "bt", &dbt);
-        self.layout.scatter(&mut grad, "wx", &dwx);
-        self.layout.scatter(&mut grad, "bx", &dbx);
-        self.layout.scatter(&mut grad, "wl", &dwl);
-        self.layout.scatter(&mut grad, "bl", &dbl);
-        self.layout.scatter(&mut grad, "wv", &dwv);
-        self.layout.scatter(&mut grad, "bv", &dbv);
-        adam_step(theta, m, v, t_step, &grad, lr);
+        self.layout.scatter(grad, "wt", &dwt);
+        self.layout.scatter(grad, "bt", &dbt);
+        self.layout.scatter(grad, "wx", &dwx);
+        self.layout.scatter(grad, "bx", &dbx);
+        self.layout.scatter(grad, "wl", &dwl);
+        self.layout.scatter(grad, "bl", &dbl);
+        self.layout.scatter(grad, "wv", &dwv);
+        self.layout.scatter(grad, "bv", &dbv);
 
         ws.put_all([xlogits, la, vals, dxlogits, dla, dvals]);
-        ws.put_all([grad, dwx, dbx, dwl, dbl, dwv, dbv, dpre, dwt, dbt]);
+        ws.put_all([dwx, dbx, dwl, dbl, dwv, dbv, dpre, dwt, dbt]);
         trunk.recycle(ws);
-
-        PpoStepStats { pi_loss, v_loss, entropy, approx_kl: kl }
     }
 }
 
@@ -482,5 +567,40 @@ mod tests {
         );
         assert!(stats.pi_loss.is_finite() && stats.v_loss.is_finite());
         assert!(theta.iter().all(|p| p.is_finite()));
+    }
+
+    #[test]
+    fn v2_ppo_step_is_bit_invariant_across_threads_and_lane_widths() {
+        let run = |kc: KernelCfg| {
+            let n = net();
+            let mut ws = Workspace::new();
+            let mut theta = n.init(9);
+            let mut m = vec![0.0f32; theta.len()];
+            let mut v = vec![0.0f32; theta.len()];
+            let b = 11; // odd width: uneven sample groups
+            let mut rng = Rng::new(41);
+            let z: Vec<f32> = (0..b * 4).map(|_| rng.normal() * 0.3).collect();
+            let h: Vec<f32> = (0..b * 6).map(|_| rng.normal() * 0.2).collect();
+            let act: Vec<i32> = (0..b).flat_map(|r| [(r % 4) as i32, (r % 7) as i32]).collect();
+            let logp_old = vec![-1.2f32; b];
+            let adv: Vec<f32> = (0..b).map(|r| if r % 2 == 0 { 0.8 } else { -0.4 }).collect();
+            let ret = vec![0.2f32; b];
+            let xmask = vec![1.0f32; b * 5];
+            let lmask = vec![1.0f32; b * 7];
+            let mut stats = Vec::new();
+            for t in 1..=3 {
+                let s = n.train_step(
+                    &mut ws, &kc, &mut theta, &mut m, &mut v, t as f32, &z, &h, &act, &logp_old,
+                    &adv, &ret, &xmask, &lmask, b, 3e-3, 0.2, 0.01,
+                );
+                stats.push([s.pi_loss, s.v_loss, s.entropy, s.approx_kl]);
+            }
+            (theta, stats)
+        };
+        let want = run(KernelCfg::v2(1).with_lane_groups(1));
+        for (threads, lanes) in [(2, 2), (8, 4), (3, 8)] {
+            let got = run(KernelCfg::v2(threads).with_lane_groups(lanes));
+            assert_eq!(want, got, "V2 PPO bits at threads={threads} lane_groups={lanes}");
+        }
     }
 }

@@ -11,7 +11,8 @@
 //! steady-state training allocates no scratch memory.
 
 use super::kernels::{
-    acc_xt_dy, dy_wt_into, linear_into, par_row_stripes, plan_threads, Act, KernelCfg, Workspace,
+    acc_xt_dy, axpy_v2, dy_wt_into, linear_into, par_row_stripes, plan_threads,
+    v2_accumulate_grads, Act, KernelCfg, ReductionOrder, Workspace,
 };
 use super::nn::{acc_rows, adam_step, ParamLayout};
 
@@ -99,10 +100,12 @@ impl GnnNet {
                         let w = w_in + w_out;
                         if w > 0.0 {
                             deg += w;
-                            let src = &feats[j * f..(j + 1) * f];
-                            for (r, s) in row.iter_mut().zip(src) {
-                                *r += w * s;
-                            }
+                            // Lane-chunked axpy (bit-identical to the plain
+                            // zip loop — elements are independent — so the
+                            // aggregation order is shared by both reduction
+                            // versions; the chunking just keeps the body
+                            // branch-free SIMD lane code).
+                            axpy_v2(w, &feats[j * f..(j + 1) * f], row);
                         }
                     }
                     let inv = 1.0 / deg;
@@ -191,6 +194,14 @@ impl GnnNet {
     }
 
     /// One auto-encoder Adam step over a batch; returns the mean loss.
+    ///
+    /// Under [`ReductionOrder::V1Scalar`] the whole batch accumulates in
+    /// one sequential [`Self::accumulate_range`] call — arithmetically
+    /// identical to the seed loop, preserving the V1 bit pins. Under
+    /// [`ReductionOrder::V2LaneTiled`] the batch splits into fixed sample
+    /// groups that accumulate (possibly on worker threads) into per-group
+    /// buffers folded by a fixed pairwise tree — bit-identical for any
+    /// worker count, toleranced against V1.
     #[allow(clippy::too_many_arguments)]
     pub fn train_step(
         &self,
@@ -206,8 +217,60 @@ impl GnnNet {
         b: usize,
         lr: f32,
     ) -> f32 {
+        let binv = 1.0 / b.max(1) as f32;
+        let theta_ref: &[f32] = theta;
+        let (grad, aux) = match kc.effective_order() {
+            ReductionOrder::V1Scalar => {
+                let mut grad = ws.take(theta_ref.len());
+                let mut aux = ws.take(1);
+                self.accumulate_range(
+                    ws, kc, theta_ref, feats, adj, mask, 0..b, binv, &mut grad, &mut aux,
+                );
+                (grad, aux)
+            }
+            ReductionOrder::V2LaneTiled => {
+                let macs = b * self.n * self.n * self.f + b * self.n * self.f * self.h * 3;
+                v2_accumulate_grads(
+                    ws,
+                    kc,
+                    b,
+                    theta_ref.len(),
+                    1,
+                    macs,
+                    |rows, cfg, cw, grad, aux| {
+                        self.accumulate_range(
+                            cw, cfg, theta_ref, feats, adj, mask, rows, binv, grad, aux,
+                        );
+                    },
+                )
+            }
+        };
+        adam_step(theta, m, v, t, &grad, lr);
+        let total_loss = aux[0];
+        ws.put_all([grad, aux]);
+        total_loss
+    }
+
+    /// Accumulate the AE gradient and mean-loss contribution of samples
+    /// `rows` into `grad` (flat, layout-aligned) and `aux[0]`. The
+    /// per-sample arithmetic and the within-range accumulation order are
+    /// exactly the seed's, so one full-range call reproduces the V1 bits
+    /// while the V2 path runs one call per fixed sample group.
+    #[allow(clippy::too_many_arguments)]
+    fn accumulate_range(
+        &self,
+        ws: &mut Workspace,
+        kc: &KernelCfg,
+        theta: &[f32],
+        feats: &[f32],
+        adj: &[f32],
+        mask: &[f32],
+        rows: std::ops::Range<usize>,
+        binv: f32,
+        grad: &mut [f32],
+        aux: &mut [f32],
+    ) {
         let (n, f, h, z) = (self.n, self.f, self.h, self.z);
-        let mut grad = ws.take(theta.len());
         let mut dw1 = ws.take(f * h);
         let mut db1 = ws.take(h);
         let mut dw2 = ws.take(h * z);
@@ -216,10 +279,8 @@ impl GnnNet {
         let mut db3 = ws.take(f);
         let mut dw4 = ws.take(z * f);
         let mut db4 = ws.take(f);
-        let mut total_loss = 0.0f32;
-        let binv = 1.0 / b.max(1) as f32;
 
-        for s in 0..b {
+        for s in rows {
             let sf = &feats[s * n * f..(s + 1) * n * f];
             let sm = &mask[s * n..(s + 1) * n];
             let fwd = self.forward(ws, kc, theta, sf, &adj[s * n * n..(s + 1) * n * n], sm);
@@ -271,7 +332,7 @@ impl GnnNet {
                 l_graph += d * d * graph_scale;
                 dxbar_hat[j] = 2.0 * d * graph_scale * binv;
             }
-            total_loss += (l_node + l_graph) * binv;
+            aux[0] += (l_node + l_graph) * binv;
 
             // ---- backward ------------------------------------------------
             // Graph head -> latent.
@@ -309,17 +370,15 @@ impl GnnNet {
             fwd.recycle(ws);
         }
 
-        self.layout.scatter(&mut grad, "w1", &dw1);
-        self.layout.scatter(&mut grad, "b1", &db1);
-        self.layout.scatter(&mut grad, "w2", &dw2);
-        self.layout.scatter(&mut grad, "b2", &db2);
-        self.layout.scatter(&mut grad, "w3", &dw3);
-        self.layout.scatter(&mut grad, "b3", &db3);
-        self.layout.scatter(&mut grad, "w4", &dw4);
-        self.layout.scatter(&mut grad, "b4", &db4);
-        adam_step(theta, m, v, t, &grad, lr);
-        ws.put_all([grad, dw1, db1, dw2, db2, dw3, db3, dw4, db4]);
-        total_loss
+        self.layout.scatter(grad, "w1", &dw1);
+        self.layout.scatter(grad, "b1", &db1);
+        self.layout.scatter(grad, "w2", &dw2);
+        self.layout.scatter(grad, "b2", &db2);
+        self.layout.scatter(grad, "w3", &dw3);
+        self.layout.scatter(grad, "b3", &db3);
+        self.layout.scatter(grad, "w4", &dw4);
+        self.layout.scatter(grad, "b4", &db4);
+        ws.put_all([dw1, db1, dw2, db2, dw3, db3, dw4, db4]);
     }
 }
 
@@ -417,26 +476,58 @@ mod tests {
 
     #[test]
     fn train_scratch_is_fully_recycled() {
-        let net = GnnNet::new(8, 6, 5, 4);
-        let mut ws = Workspace::new();
-        let kc = KernelCfg::blocked(2);
-        let mut theta = net.init(4);
-        let mut m = vec![0.0f32; theta.len()];
-        let mut v = vec![0.0f32; theta.len()];
-        let (feats, adj, mask) = toy_batch(&net, 4, 13);
-        // Warm-up call populates the arena.
-        net.train_step(&mut ws, &kc, &mut theta, &mut m, &mut v, 1.0, &feats, &adj, &mask, 4, 1e-3);
-        let warm = ws.stats();
-        for t in 2..=6 {
+        // Both reduction orders must be zero-alloc after one warm-up call —
+        // V2 additionally exercises the per-group buffers + child arenas.
+        for kc in [KernelCfg::blocked(2), KernelCfg::v2(2)] {
+            let net = GnnNet::new(8, 6, 5, 4);
+            let mut ws = Workspace::new();
+            let mut theta = net.init(4);
+            let mut m = vec![0.0f32; theta.len()];
+            let mut v = vec![0.0f32; theta.len()];
+            let (feats, adj, mask) = toy_batch(&net, 4, 13);
+            // Warm-up call populates the arena.
             net.train_step(
-                &mut ws, &kc, &mut theta, &mut m, &mut v, t as f32, &feats, &adj, &mask, 4, 1e-3,
+                &mut ws, &kc, &mut theta, &mut m, &mut v, 1.0, &feats, &adj, &mask, 4, 1e-3,
             );
+            let warm = ws.stats();
+            for t in 2..=6 {
+                net.train_step(
+                    &mut ws, &kc, &mut theta, &mut m, &mut v, t as f32, &feats, &adj, &mask, 4,
+                    1e-3,
+                );
+            }
+            let now = ws.stats();
+            assert_eq!(
+                warm.alloc_bytes, now.alloc_bytes,
+                "steady-state train steps must allocate no scratch ({:?})",
+                kc.order
+            );
+            assert!(now.reuses > warm.reuses, "steady-state takes must hit the free list");
         }
-        let now = ws.stats();
-        assert_eq!(
-            warm.alloc_bytes, now.alloc_bytes,
-            "steady-state train steps must allocate no scratch"
-        );
-        assert!(now.reuses > warm.reuses, "steady-state takes must hit the free list");
+    }
+
+    #[test]
+    fn v2_train_is_bit_invariant_across_threads_and_lane_widths() {
+        let run = |kc: KernelCfg| {
+            let net = GnnNet::new(8, 6, 5, 4);
+            let mut ws = Workspace::new();
+            let mut theta = net.init(6);
+            let mut m = vec![0.0f32; theta.len()];
+            let mut v = vec![0.0f32; theta.len()];
+            let (feats, adj, mask) = toy_batch(&net, 5, 29);
+            let mut losses = Vec::new();
+            for t in 1..=4 {
+                losses.push(net.train_step(
+                    &mut ws, &kc, &mut theta, &mut m, &mut v, t as f32, &feats, &adj, &mask, 5,
+                    1e-3,
+                ));
+            }
+            (theta, losses)
+        };
+        let want = run(KernelCfg::v2(1).with_lane_groups(1));
+        for (threads, lanes) in [(2, 2), (8, 4), (3, 8)] {
+            let got = run(KernelCfg::v2(threads).with_lane_groups(lanes));
+            assert_eq!(want, got, "V2 train bits at threads={threads} lane_groups={lanes}");
+        }
     }
 }

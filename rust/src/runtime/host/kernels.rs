@@ -8,23 +8,41 @@
 //!  * [`KernelMode::Blocked`] — cache-blocked loops with a fixed row/stripe
 //!    partition fanned out over `std::thread::scope`.
 //!
-//! **Determinism contract.** Every output element is computed wholly by one
-//! thread, and its floating-point reduction order (k ascending for
-//! `linear_into`, sample-row ascending for `acc_xt_dy`, column ascending
-//! for `dy_wt_into` — including the seed kernels' skip of exact-zero
-//! inputs) is identical to the scalar reference. Blocking and threading
-//! only change *which thread* computes an element and in what wall-clock
-//! order elements complete, never the arithmetic applied to any single
-//! element. Outputs are therefore bit-identical for any thread count and
-//! either mode — the same contract the search engine pins for
-//! `TasoConfig::threads` (`tests/host_kernels.rs` pins it here).
+//! **Determinism contract — versioned reduction orders.** Floating-point
+//! reduction order is pinned *per version* of [`ReductionOrder`], and
+//! within a version every output element's arithmetic is a pure function
+//! of the inputs — never of the thread count, stripe boundaries, or the
+//! runtime lane width:
+//!
+//!  * [`ReductionOrder::V1Scalar`] is the seed order: k ascending for
+//!    `linear_into`, sample-row ascending for `acc_xt_dy`, column
+//!    ascending for `dy_wt_into` — including the seed kernels' skip of
+//!    exact-zero inputs. Reference and blocked V1 kernels are bit-identical
+//!    to each other for any thread count (the original PR-5 pins).
+//!  * [`ReductionOrder::V2LaneTiled`] is a k-blocked, fixed-lane-count
+//!    order: dot-product reductions keep [`V2_LANES`] independent partial
+//!    sums (lane `ℓ` owns the elements with index ≡ `ℓ` mod `V2_LANES`,
+//!    visited ascending) combined by a fixed pairwise tree, and the
+//!    branch-free inner loops compile to f32 SIMD. The runtime lane-group
+//!    width ([`KernelCfg::lane_groups`]) only unrolls *independent* lanes,
+//!    so V2 outputs are bit-identical for any thread count **and any lane
+//!    width** — but not to V1: cross-version agreement is a toleranced
+//!    parity oracle, not a bit pin (`tests/host_kernels.rs` pins both).
+//!
+//! On top of V2's order the `*_train` programs accumulate gradients into
+//! per-sample-group buffers ([`v2_sample_groups`], a partition that
+//! depends only on the batch size) folded by [`tree_reduce_sum`]'s fixed
+//! pairwise tree, which unlocks sample-level train parallelism without
+//! giving up the per-version bit pin.
 //!
 //! [`Workspace`] recycles scratch buffers across program calls so the
 //! steady-state training loop performs no per-call heap allocation for
 //! intermediates: `take` serves a cleared buffer from the free list when
 //! one with enough capacity exists and only allocates on first use (or
 //! growth), with reuse/allocation counters surfaced per program through
-//! [`ExecStats`](crate::runtime::ExecStats).
+//! [`ExecStats`](crate::runtime::ExecStats). Sample-parallel regions check
+//! out whole child arenas ([`Workspace::take_children`]) so each worker's
+//! scratch recycles just as well.
 
 use super::nn;
 
@@ -38,6 +56,25 @@ const NC: usize = 1024;
 /// threads; below this, `std::thread` spawn latency outweighs the win.
 const PAR_MIN_MACS: usize = 1 << 19;
 
+/// Fixed logical lane count of the V2 reduction order: dot-product
+/// reductions keep this many independent partial sums (lane `ℓ` owns the
+/// elements with index ≡ `ℓ` mod `V2_LANES`, visited ascending) combined
+/// by a fixed pairwise tree. Part of the V2 bit contract — a *logical*
+/// count, never derived from the hardware vector width.
+pub const V2_LANES: usize = 8;
+
+/// Depth of the k-blocks in the V2 forward GEMM. Within a block the
+/// per-element accumulation order is still k ascending, so the blocking is
+/// structural (cache locality), not part of the bit pattern.
+pub const V2_KB: usize = 64;
+
+/// Number of contiguous sample groups the V2 `*_train` programs split a
+/// batch into ([`v2_sample_groups`]). Fixed so the gradient partition —
+/// and therefore the reduced gradient's bit pattern — depends only on the
+/// batch size, never on the worker count, and so per-group gradient
+/// buffers bound memory at `V2_GRAD_GROUPS × |theta|` per family.
+pub const V2_GRAD_GROUPS: usize = 8;
+
 /// Which kernel implementation a [`HostBackend`](super::HostBackend) runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum KernelMode {
@@ -47,6 +84,25 @@ pub enum KernelMode {
     Blocked,
 }
 
+/// Version of the floating-point reduction order the kernels commit to.
+///
+/// Determinism is pinned *per version*: a given version produces
+/// bit-identical outputs for any thread count and any runtime lane width.
+/// Different versions agree only within a small relative error — the
+/// cross-version parity oracle in `tests/host_kernels.rs`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ReductionOrder {
+    /// The seed order: scalar k-ascending accumulation with the exact-zero
+    /// input skip. Matches the PR-5 bit pins unchanged.
+    V1Scalar,
+    /// K-blocked, fixed-lane-count accumulators ([`V2_LANES`] logical
+    /// lanes, fixed pairwise combine tree) with branch-free SIMD-friendly
+    /// inner loops, plus [`V2_GRAD_GROUPS`]-way sample-parallel gradient
+    /// reduction in the train programs.
+    #[default]
+    V2LaneTiled,
+}
+
 /// Kernel selection + thread budget for one backend instance.
 #[derive(Debug, Clone, Copy)]
 pub struct KernelCfg {
@@ -54,38 +110,153 @@ pub struct KernelCfg {
     pub mode: KernelMode,
     /// Worker-thread cap for the blocked mode (1 = fully serial).
     pub threads: usize,
+    /// Reduction-order version the blocked kernels commit to. Reference
+    /// mode always runs the V1 order (it *is* the V1 oracle).
+    pub order: ReductionOrder,
+    /// Lane-group width hint for the V2 dot kernels: how many
+    /// [`V2_LANES`]-wide groups each inner-loop iteration advances. Pure
+    /// scheduling — every value yields identical bits (pinned by test).
+    pub lane_groups: usize,
 }
 
 impl Default for KernelCfg {
     fn default() -> Self {
-        Self { mode: KernelMode::Blocked, threads: default_threads() }
+        Self {
+            mode: KernelMode::Blocked,
+            threads: default_threads(),
+            order: default_reduction(),
+            lane_groups: default_lane_groups(),
+        }
     }
 }
 
 impl KernelCfg {
-    /// The seed scalar kernels (single-threaded oracle).
+    /// The seed scalar kernels (single-threaded oracle, V1 order).
     pub fn reference() -> Self {
-        Self { mode: KernelMode::Reference, threads: 1 }
+        Self {
+            mode: KernelMode::Reference,
+            threads: 1,
+            order: ReductionOrder::V1Scalar,
+            lane_groups: 1,
+        }
     }
 
-    /// Blocked kernels at an explicit thread cap.
+    /// Blocked kernels at an explicit thread cap, V1 order (the PR-5
+    /// configuration — bit-identical to [`Self::reference`]).
     pub fn blocked(threads: usize) -> Self {
-        Self { mode: KernelMode::Blocked, threads: threads.max(1) }
+        Self {
+            mode: KernelMode::Blocked,
+            threads: threads.max(1),
+            order: ReductionOrder::V1Scalar,
+            lane_groups: 1,
+        }
+    }
+
+    /// Blocked lane-tiled kernels (V2 order) at an explicit thread cap.
+    pub fn v2(threads: usize) -> Self {
+        Self {
+            mode: KernelMode::Blocked,
+            threads: threads.max(1),
+            order: ReductionOrder::V2LaneTiled,
+            lane_groups: default_lane_groups(),
+        }
+    }
+
+    /// Same config with an explicit lane-group width (tests sweep this to
+    /// pin V2's lane-width invariance).
+    pub fn with_lane_groups(mut self, lane_groups: usize) -> Self {
+        self.lane_groups = lane_groups.max(1);
+        self
+    }
+
+    /// The reduction order actually executed: reference mode pins the V1
+    /// oracle regardless of the configured `order`.
+    pub fn effective_order(&self) -> ReductionOrder {
+        if self.mode == KernelMode::Reference {
+            ReductionOrder::V1Scalar
+        } else {
+            self.order
+        }
     }
 }
 
-/// Default worker-thread cap: `RLFLOW_HOST_THREADS` when set, else the
-/// machine's available parallelism capped at 8 (the host programs' GEMMs
-/// are too small to feed more).
+/// Parse an `RLFLOW_HOST_THREADS` value: a positive integer.
+fn parse_threads(s: &str) -> Option<usize> {
+    s.trim().parse::<usize>().ok().filter(|&n| n > 0)
+}
+
+/// Parse an `RLFLOW_HOST_REDUCTION` value: `v1` / `v2` (case- and
+/// whitespace-insensitive; the long enum names are accepted too).
+fn parse_reduction(s: &str) -> Option<ReductionOrder> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "v1" | "v1scalar" | "scalar" => Some(ReductionOrder::V1Scalar),
+        "v2" | "v2lanetiled" | "lane-tiled" | "lanetiled" => Some(ReductionOrder::V2LaneTiled),
+        _ => None,
+    }
+}
+
+/// Default worker-thread cap: `RLFLOW_HOST_THREADS` when set and valid,
+/// else the machine's available parallelism capped at 8 (the host
+/// programs' GEMMs are too small to feed more). Invalid values warn on
+/// stderr and fall back to the machine default instead of being silently
+/// ignored.
 pub fn default_threads() -> usize {
-    if let Ok(s) = std::env::var("RLFLOW_HOST_THREADS") {
-        if let Ok(n) = s.trim().parse::<usize>() {
-            if n > 0 {
-                return n;
-            }
+    let fallback = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8);
+    match std::env::var("RLFLOW_HOST_THREADS") {
+        Ok(s) => parse_threads(&s).unwrap_or_else(|| {
+            eprintln!(
+                "warning: ignoring invalid RLFLOW_HOST_THREADS={s:?} \
+                 (expected a positive integer); using {fallback}"
+            );
+            fallback
+        }),
+        Err(std::env::VarError::NotPresent) => fallback,
+        Err(std::env::VarError::NotUnicode(raw)) => {
+            eprintln!(
+                "warning: ignoring non-unicode RLFLOW_HOST_THREADS={raw:?}; using {fallback}"
+            );
+            fallback
         }
     }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+}
+
+/// Default reduction order: `RLFLOW_HOST_REDUCTION` (`v1`/`v2`) when set
+/// and valid, else [`ReductionOrder::V2LaneTiled`]. Invalid values warn on
+/// stderr and fall back to V2.
+pub fn default_reduction() -> ReductionOrder {
+    let fallback = ReductionOrder::V2LaneTiled;
+    match std::env::var("RLFLOW_HOST_REDUCTION") {
+        Ok(s) => parse_reduction(&s).unwrap_or_else(|| {
+            eprintln!(
+                "warning: ignoring invalid RLFLOW_HOST_REDUCTION={s:?} \
+                 (expected \"v1\" or \"v2\"); using v2"
+            );
+            fallback
+        }),
+        Err(std::env::VarError::NotPresent) => fallback,
+        Err(std::env::VarError::NotUnicode(raw)) => {
+            eprintln!("warning: ignoring non-unicode RLFLOW_HOST_REDUCTION={raw:?}; using v2");
+            fallback
+        }
+    }
+}
+
+/// Default lane-group width for the V2 dot kernels: 4 groups (32 floats in
+/// flight) when the CPU has AVX2, else 2. Pure scheduling — V2 bits are
+/// identical for every width, so feature detection never changes results.
+#[cfg(target_arch = "x86_64")]
+pub fn default_lane_groups() -> usize {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        4
+    } else {
+        2
+    }
+}
+
+/// Default lane-group width for the V2 dot kernels (non-x86 fallback).
+#[cfg(not(target_arch = "x86_64"))]
+pub fn default_lane_groups() -> usize {
+    2
 }
 
 /// Activation fused into the forward GEMM epilogue.
@@ -126,6 +297,10 @@ pub struct Workspace {
     free: Vec<Vec<f32>>,
     free_idx: Vec<Vec<usize>>,
     free_i32: Vec<Vec<i32>>,
+    /// Parked child arenas for sample-parallel fan-out
+    /// ([`Self::take_children`]); each keeps its own free lists so worker
+    /// scratch recycles across checkouts.
+    children: Vec<Workspace>,
     stats: WorkspaceStats,
 }
 
@@ -234,6 +409,32 @@ impl Workspace {
             self.free_i32.push(buf);
         }
     }
+
+    /// Check out `n` independent child arenas, one per worker of a
+    /// sample-parallel region. Children keep their free lists across
+    /// checkouts (checkout order is stable, so each group sees the same
+    /// arena — and therefore the same parked buffers — every call), which
+    /// keeps per-group scratch zero-alloc in steady state.
+    pub fn take_children(&mut self, n: usize) -> Vec<Workspace> {
+        while self.children.len() < n {
+            self.children.push(Workspace::new());
+        }
+        let at = self.children.len() - n;
+        self.children.drain(at..).collect()
+    }
+
+    /// Park child arenas again, folding their activity into this arena's
+    /// counters. Children report deltas — their counters reset on every
+    /// put — so parent stats stay monotone without double counting.
+    pub fn put_children(&mut self, children: Vec<Workspace>) {
+        for mut child in children {
+            let s = std::mem::take(&mut child.stats);
+            self.stats.reuses += s.reuses;
+            self.stats.allocations += s.allocations;
+            self.stats.alloc_bytes += s.alloc_bytes;
+            self.children.push(child);
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -281,6 +482,190 @@ where
             rest = tail;
         }
     });
+}
+
+// ---------------------------------------------------------------------------
+// V2 lane primitives
+// ---------------------------------------------------------------------------
+
+/// V2 lane-order dot product at a monomorphised lane-group width: lane `ℓ`
+/// of a fixed [`V2_LANES`]-wide accumulator array owns the elements with
+/// index ≡ `ℓ` (mod `V2_LANES`), visited ascending; the lanes combine in a
+/// fixed pairwise tree. `UNROLL` only regroups *independent* lanes into
+/// wider straight-line blocks, so every width yields identical bits.
+#[inline]
+fn dot_v2_groups<const UNROLL: usize>(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut acc = [0.0f32; V2_LANES];
+    let step = V2_LANES * UNROLL;
+    let mut i = 0;
+    while i + step <= n {
+        for u in 0..UNROLL {
+            let base = i + u * V2_LANES;
+            let (ar, br) = (&a[base..base + V2_LANES], &b[base..base + V2_LANES]);
+            for l in 0..V2_LANES {
+                acc[l] += ar[l] * br[l];
+            }
+        }
+        i += step;
+    }
+    while i + V2_LANES <= n {
+        let (ar, br) = (&a[i..i + V2_LANES], &b[i..i + V2_LANES]);
+        for l in 0..V2_LANES {
+            acc[l] += ar[l] * br[l];
+        }
+        i += V2_LANES;
+    }
+    // Tail elements land in lanes 0.. in order, matching a final partial
+    // lane group.
+    for (l, j) in (i..n).enumerate() {
+        acc[l] += a[j] * b[j];
+    }
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+/// Runtime dispatch over the V2 lane-group width. The width is a pure
+/// scheduling hint (see [`KernelCfg::lane_groups`]); bits are identical
+/// for every value.
+#[inline]
+pub fn dot_v2(lane_groups: usize, a: &[f32], b: &[f32]) -> f32 {
+    match lane_groups {
+        0 | 1 => dot_v2_groups::<1>(a, b),
+        2 | 3 => dot_v2_groups::<2>(a, b),
+        _ => dot_v2_groups::<4>(a, b),
+    }
+}
+
+/// `dst += a * src` in the V2 lane idiom: the body is emitted as fixed
+/// [`V2_LANES`]-wide straight-line blocks plus a scalar remainder. Each
+/// element is independent, so the element order — and the bit pattern —
+/// matches the plain zip loop; the chunking only guarantees the compiler a
+/// branch-free vectorisable body (the GNN neighbourhood aggregation's V2
+/// inner loop).
+#[inline]
+pub fn axpy_v2(a: f32, src: &[f32], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    let n = dst.len();
+    let groups = n / V2_LANES;
+    for g in 0..groups {
+        let base = g * V2_LANES;
+        let s = &src[base..base + V2_LANES];
+        let d = &mut dst[base..base + V2_LANES];
+        for l in 0..V2_LANES {
+            d[l] += a * s[l];
+        }
+    }
+    for j in groups * V2_LANES..n {
+        dst[j] += a * src[j];
+    }
+}
+
+// ---------------------------------------------------------------------------
+// V2 sample-parallel gradient reduction
+// ---------------------------------------------------------------------------
+
+/// The fixed sample partition of the V2 gradient reduction: `b` samples
+/// split into at most [`V2_GRAD_GROUPS`] contiguous, non-empty groups.
+/// Depends only on `b`, so the grouping — and therefore the bit pattern of
+/// the tree-reduced gradient — is identical for every worker count.
+pub fn v2_sample_groups(b: usize) -> Vec<std::ops::Range<usize>> {
+    let g = V2_GRAD_GROUPS.min(b).max(1);
+    (0..g).map(|i| i * b / g..(i + 1) * b / g).filter(|r| !r.is_empty()).collect()
+}
+
+/// Fixed pairwise tree reduction over equal-length buffers: folds
+/// `bufs[i + gap]` into `bufs[i]` with stride-doubling gaps, leaving the
+/// total in `bufs[0]`. The combine order depends only on `bufs.len()`,
+/// never on which worker produced which buffer — part of the V2 bit
+/// contract.
+pub fn tree_reduce_sum(bufs: &mut [Vec<f32>]) {
+    let nb = bufs.len();
+    let mut gap = 1;
+    while gap < nb {
+        let mut i = 0;
+        while i + gap < nb {
+            let (left, right) = bufs.split_at_mut(i + gap);
+            for (d, s) in left[i].iter_mut().zip(&right[0]) {
+                *d += s;
+            }
+            i += 2 * gap;
+        }
+        gap *= 2;
+    }
+}
+
+/// Sample-parallel gradient harness for the V2 `*_train` programs.
+///
+/// Splits the batch with [`v2_sample_groups`] and runs `body(rows, cfg,
+/// child_ws, grad, aux)` once per group — each group gets its own child
+/// arena, a zeroed `grad_len` gradient buffer, and a zeroed `aux_len` loss
+/// accumulator — then folds the group buffers with [`tree_reduce_sum`].
+/// Groups fan out over scoped threads when the arithmetic volume (`macs`)
+/// clears the threading threshold; the partition and the combine tree are
+/// fixed, so the returned `(grad, aux)` buffers are bit-identical for any
+/// worker count. All scratch comes from (and returns to) `ws`, keeping the
+/// steady state zero-alloc.
+pub fn v2_accumulate_grads<F>(
+    ws: &mut Workspace,
+    cfg: &KernelCfg,
+    b: usize,
+    grad_len: usize,
+    aux_len: usize,
+    macs: usize,
+    body: F,
+) -> (Vec<f32>, Vec<f32>)
+where
+    F: Fn(std::ops::Range<usize>, &KernelCfg, &mut Workspace, &mut [f32], &mut [f32]) + Sync,
+{
+    let groups = v2_sample_groups(b);
+    let g = groups.len();
+    if g == 0 {
+        return (ws.take(grad_len), ws.take(aux_len));
+    }
+    let mut grads: Vec<Vec<f32>> = (0..g).map(|_| ws.take(grad_len)).collect();
+    let mut auxs: Vec<Vec<f32>> = (0..g).map(|_| ws.take(aux_len)).collect();
+    let mut kids = ws.take_children(g);
+    let t = plan_threads(cfg, g, macs);
+    if t <= 1 {
+        // Serial groups: keep the caller's config so the per-group kernels
+        // may still stripe internally (bits are invariant either way).
+        for (i, rows) in groups.iter().enumerate() {
+            body(rows.clone(), cfg, &mut kids[i], &mut grads[i], &mut auxs[i]);
+        }
+    } else {
+        // Workers own whole groups; the in-group kernels run serial to
+        // avoid oversubscription. Purely a schedule — same bits.
+        let inner = KernelCfg { threads: 1, ..*cfg };
+        let mut items: Vec<_> = groups
+            .iter()
+            .cloned()
+            .zip(kids.iter_mut())
+            .zip(grads.iter_mut())
+            .zip(auxs.iter_mut())
+            .map(|(((rows, kid), grad), aux)| (rows, kid, grad, aux))
+            .collect();
+        let per = (g + t - 1) / t;
+        std::thread::scope(|scope| {
+            for chunk in items.chunks_mut(per) {
+                let bref = &body;
+                let icfg = &inner;
+                scope.spawn(move || {
+                    for (rows, kid, grad, aux) in chunk.iter_mut() {
+                        bref(rows.clone(), icfg, kid, grad, aux);
+                    }
+                });
+            }
+        });
+    }
+    ws.put_children(kids);
+    tree_reduce_sum(&mut grads);
+    tree_reduce_sum(&mut auxs);
+    let grad = grads.swap_remove(0);
+    let aux = auxs.swap_remove(0);
+    ws.put_all(grads);
+    ws.put_all(auxs);
+    (grad, aux)
 }
 
 // ---------------------------------------------------------------------------
@@ -333,37 +718,75 @@ pub fn linear_into(
         return;
     }
     let t = plan_threads(cfg, m, m * k * n);
-    par_row_stripes(y, m, n, t, |r0, chunk| {
-        for (ri, yr) in chunk.chunks_exact_mut(n).enumerate() {
-            let r = r0 + ri;
-            match bias {
-                Some(b) => yr.copy_from_slice(b),
-                None => yr.fill(0.0),
-            }
-            let xr = &x[r * k..(r + 1) * k];
-            // Column blocks keep the y block and each w row block hot; the
-            // per-element accumulation order stays k ascending (with the
-            // reference's exact-zero skip), so blocking is invisible to
-            // the bit pattern.
-            let mut jb = 0;
-            while jb < n {
-                let je = (jb + NC).min(n);
-                for (i, &xv) in xr.iter().enumerate() {
-                    if xv == 0.0 {
-                        continue;
-                    }
-                    let wr = &w[i * n + jb..i * n + je];
-                    for (yj, wj) in yr[jb..je].iter_mut().zip(wr) {
-                        *yj += xv * wj;
-                    }
+    match cfg.effective_order() {
+        ReductionOrder::V1Scalar => par_row_stripes(y, m, n, t, |r0, chunk| {
+            for (ri, yr) in chunk.chunks_exact_mut(n).enumerate() {
+                let r = r0 + ri;
+                match bias {
+                    Some(b) => yr.copy_from_slice(b),
+                    None => yr.fill(0.0),
                 }
-                jb = je;
+                let xr = &x[r * k..(r + 1) * k];
+                // Column blocks keep the y block and each w row block hot;
+                // the per-element accumulation order stays k ascending
+                // (with the reference's exact-zero skip), so blocking is
+                // invisible to the bit pattern.
+                let mut jb = 0;
+                while jb < n {
+                    let je = (jb + NC).min(n);
+                    for (i, &xv) in xr.iter().enumerate() {
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        let wr = &w[i * n + jb..i * n + je];
+                        for (yj, wj) in yr[jb..je].iter_mut().zip(wr) {
+                            *yj += xv * wj;
+                        }
+                    }
+                    jb = je;
+                }
+                if act == Act::Tanh {
+                    nn::tanh_inplace(yr);
+                }
             }
-            if act == Act::Tanh {
-                nn::tanh_inplace(yr);
+        }),
+        ReductionOrder::V2LaneTiled => par_row_stripes(y, m, n, t, |r0, chunk| {
+            for (ri, yr) in chunk.chunks_exact_mut(n).enumerate() {
+                let r = r0 + ri;
+                match bias {
+                    Some(b) => yr.copy_from_slice(b),
+                    None => yr.fill(0.0),
+                }
+                let xr = &x[r * k..(r + 1) * k];
+                // V2: k-blocked and branch-free. Each y element still
+                // accumulates k ascending (blocks ascending, in-block k
+                // ascending) but without the data-dependent zero skip, so
+                // the j loop is straight-line lane code the compiler turns
+                // into f32 SIMD. Output elements are independent, so
+                // neither threads nor lane width can change bits.
+                let mut jb = 0;
+                while jb < n {
+                    let je = (jb + NC).min(n);
+                    let mut kb = 0;
+                    while kb < k {
+                        let ke = (kb + V2_KB).min(k);
+                        for i in kb..ke {
+                            let xv = xr[i];
+                            let wr = &w[i * n + jb..i * n + je];
+                            for (yj, wj) in yr[jb..je].iter_mut().zip(wr) {
+                                *yj += xv * wj;
+                            }
+                        }
+                        kb = ke;
+                    }
+                    jb = je;
+                }
+                if act == Act::Tanh {
+                    nn::tanh_inplace(yr);
+                }
             }
-        }
-    });
+        }),
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -390,21 +813,34 @@ pub fn acc_xt_dy(
         return;
     }
     let t = plan_threads(cfg, k, m * k * n);
-    par_row_stripes(dw, k, n, t, |i0, chunk| {
-        for (ii, dwr) in chunk.chunks_exact_mut(n).enumerate() {
-            let i = i0 + ii;
-            for r in 0..m {
-                let xv = x[r * k + i];
-                if xv == 0.0 {
-                    continue;
-                }
-                let dyr = &dy[r * n..(r + 1) * n];
-                for (dwj, dyj) in dwr.iter_mut().zip(dyr) {
-                    *dwj += xv * dyj;
+    match cfg.effective_order() {
+        ReductionOrder::V1Scalar => par_row_stripes(dw, k, n, t, |i0, chunk| {
+            for (ii, dwr) in chunk.chunks_exact_mut(n).enumerate() {
+                let i = i0 + ii;
+                for r in 0..m {
+                    let xv = x[r * k + i];
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let dyr = &dy[r * n..(r + 1) * n];
+                    for (dwj, dyj) in dwr.iter_mut().zip(dyr) {
+                        *dwj += xv * dyj;
+                    }
                 }
             }
-        }
-    });
+        }),
+        // V2: same sample-row-ascending per-element order, but branch-free
+        // (no zero skip) so the axpy over each dw row vectorises.
+        ReductionOrder::V2LaneTiled => par_row_stripes(dw, k, n, t, |i0, chunk| {
+            for (ii, dwr) in chunk.chunks_exact_mut(n).enumerate() {
+                let i = i0 + ii;
+                for r in 0..m {
+                    let xv = x[r * k + i];
+                    axpy_v2(xv, &dy[r * n..(r + 1) * n], dwr);
+                }
+            }
+        }),
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -441,19 +877,34 @@ pub fn dy_wt_into(
         return;
     }
     let t = plan_threads(cfg, m, m * k * n);
-    par_row_stripes(dx, m, k, t, |r0, chunk| {
-        for (ri, dxr) in chunk.chunks_exact_mut(k).enumerate() {
-            let dyr = &dy[(r0 + ri) * n..(r0 + ri + 1) * n];
-            for (i, dst) in dxr.iter_mut().enumerate() {
-                let wr = &w[i * n..(i + 1) * n];
-                let mut acc = 0.0f32;
-                for (dyj, wj) in dyr.iter().zip(wr) {
-                    acc += dyj * wj;
+    match cfg.effective_order() {
+        ReductionOrder::V1Scalar => par_row_stripes(dx, m, k, t, |r0, chunk| {
+            for (ri, dxr) in chunk.chunks_exact_mut(k).enumerate() {
+                let dyr = &dy[(r0 + ri) * n..(r0 + ri + 1) * n];
+                for (i, dst) in dxr.iter_mut().enumerate() {
+                    let wr = &w[i * n..(i + 1) * n];
+                    let mut acc = 0.0f32;
+                    for (dyj, wj) in dyr.iter().zip(wr) {
+                        acc += dyj * wj;
+                    }
+                    *dst = acc;
                 }
-                *dst = acc;
             }
+        }),
+        // V2: the serial dependency chain of the scalar dot is the SIMD
+        // blocker here — dot_v2's independent lane accumulators break it.
+        ReductionOrder::V2LaneTiled => {
+            let lg = cfg.lane_groups.max(1);
+            par_row_stripes(dx, m, k, t, |r0, chunk| {
+                for (ri, dxr) in chunk.chunks_exact_mut(k).enumerate() {
+                    let dyr = &dy[(r0 + ri) * n..(r0 + ri + 1) * n];
+                    for (i, dst) in dxr.iter_mut().enumerate() {
+                        *dst = dot_v2(lg, dyr, &w[i * n..(i + 1) * n]);
+                    }
+                }
+            });
         }
-    });
+    }
 }
 
 /// `dx += dy wᵀ` (accumulating form for head-gradient merges): same
@@ -483,19 +934,32 @@ pub fn dy_wt_acc(
         return;
     }
     let t = plan_threads(cfg, m, m * k * n);
-    par_row_stripes(dx, m, k, t, |r0, chunk| {
-        for (ri, dxr) in chunk.chunks_exact_mut(k).enumerate() {
-            let dyr = &dy[(r0 + ri) * n..(r0 + ri + 1) * n];
-            for (i, dst) in dxr.iter_mut().enumerate() {
-                let wr = &w[i * n..(i + 1) * n];
-                let mut acc = 0.0f32;
-                for (dyj, wj) in dyr.iter().zip(wr) {
-                    acc += dyj * wj;
+    match cfg.effective_order() {
+        ReductionOrder::V1Scalar => par_row_stripes(dx, m, k, t, |r0, chunk| {
+            for (ri, dxr) in chunk.chunks_exact_mut(k).enumerate() {
+                let dyr = &dy[(r0 + ri) * n..(r0 + ri + 1) * n];
+                for (i, dst) in dxr.iter_mut().enumerate() {
+                    let wr = &w[i * n..(i + 1) * n];
+                    let mut acc = 0.0f32;
+                    for (dyj, wj) in dyr.iter().zip(wr) {
+                        acc += dyj * wj;
+                    }
+                    *dst += acc;
                 }
-                *dst += acc;
             }
+        }),
+        ReductionOrder::V2LaneTiled => {
+            let lg = cfg.lane_groups.max(1);
+            par_row_stripes(dx, m, k, t, |r0, chunk| {
+                for (ri, dxr) in chunk.chunks_exact_mut(k).enumerate() {
+                    let dyr = &dy[(r0 + ri) * n..(r0 + ri + 1) * n];
+                    for (i, dst) in dxr.iter_mut().enumerate() {
+                        *dst += dot_v2(lg, dyr, &w[i * n..(i + 1) * n]);
+                    }
+                }
+            });
         }
-    });
+    }
 }
 
 /// Backward through a fused tanh epilogue: `dpre = dy * (1 - y²)` where
@@ -648,6 +1112,155 @@ mod tests {
         });
         for r in 0..rows {
             assert!(out[r * 3..(r + 1) * 3].iter().all(|&v| v == r as f32 + 1.0));
+        }
+    }
+
+    #[test]
+    fn env_override_parsers_accept_valid_and_reject_garbage() {
+        assert_eq!(parse_threads("4"), Some(4));
+        assert_eq!(parse_threads(" 2 \n"), Some(2));
+        assert_eq!(parse_threads("0"), None);
+        assert_eq!(parse_threads("-3"), None);
+        assert_eq!(parse_threads("four"), None);
+        assert_eq!(parse_threads(""), None);
+        assert_eq!(parse_reduction("v1"), Some(ReductionOrder::V1Scalar));
+        assert_eq!(parse_reduction("V1"), Some(ReductionOrder::V1Scalar));
+        assert_eq!(parse_reduction(" scalar "), Some(ReductionOrder::V1Scalar));
+        assert_eq!(parse_reduction("v2"), Some(ReductionOrder::V2LaneTiled));
+        assert_eq!(parse_reduction("V2LaneTiled"), Some(ReductionOrder::V2LaneTiled));
+        assert_eq!(parse_reduction("v3"), None);
+        assert_eq!(parse_reduction(""), None);
+        // The defaults never panic whatever the process env holds, and
+        // stay inside the valid domain.
+        assert!(default_threads() >= 1);
+        let _ = default_reduction();
+        assert!(default_lane_groups() >= 1);
+    }
+
+    #[test]
+    fn reference_mode_pins_the_v1_order() {
+        let cfg = KernelCfg {
+            mode: KernelMode::Reference,
+            threads: 1,
+            order: ReductionOrder::V2LaneTiled,
+            lane_groups: 4,
+        };
+        assert_eq!(cfg.effective_order(), ReductionOrder::V1Scalar);
+        assert_eq!(KernelCfg::v2(3).effective_order(), ReductionOrder::V2LaneTiled);
+        assert_eq!(KernelCfg::blocked(3).effective_order(), ReductionOrder::V1Scalar);
+    }
+
+    #[test]
+    fn v2_dot_is_lane_width_invariant_on_remainder_shapes() {
+        let mut rng = Rng::new(17);
+        for n in [0usize, 1, 7, 8, 9, 15, 16, 31, 33, 64, 130] {
+            let a = rand_with_zeros(&mut rng, n);
+            let b = rand_with_zeros(&mut rng, n);
+            let base = dot_v2(1, &a, &b);
+            for lg in [2, 3, 4, 8, 16] {
+                assert_eq!(
+                    base.to_bits(),
+                    dot_v2(lg, &a, &b).to_bits(),
+                    "dot_v2 n={n} lane_groups={lg}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_v2_matches_plain_loop_bitwise() {
+        let mut rng = Rng::new(19);
+        for n in [0usize, 1, 7, 8, 9, 23, 64, 130] {
+            let src = rand_with_zeros(&mut rng, n);
+            let a = rng.normal();
+            let init = rand_with_zeros(&mut rng, n);
+            let mut want = init.clone();
+            for (d, s) in want.iter_mut().zip(&src) {
+                *d += a * s;
+            }
+            let mut got = init.clone();
+            axpy_v2(a, &src, &mut got);
+            assert_eq!(want, got, "axpy n={n}");
+        }
+    }
+
+    #[test]
+    fn tree_reduce_is_a_fixed_pairwise_tree() {
+        // Single-element buffers chosen so f32 rounding distinguishes the
+        // pairwise tree from a left-to-right fold.
+        let vals = [1.0e8f32, 1.0, -1.0e8, 1.0, 1.0];
+        let mut bufs: Vec<Vec<f32>> = vals.iter().map(|&v| vec![v]).collect();
+        tree_reduce_sum(&mut bufs);
+        let expected = ((vals[0] + vals[1]) + (vals[2] + vals[3])) + vals[4];
+        assert_eq!(bufs[0][0].to_bits(), expected.to_bits());
+        let folded = vals.iter().copied().fold(0.0f32, |a, v| a + v);
+        assert_ne!(
+            bufs[0][0].to_bits(),
+            folded.to_bits(),
+            "test inputs must actually exercise order sensitivity"
+        );
+    }
+
+    #[test]
+    fn sample_groups_are_fixed_contiguous_and_cover_the_batch() {
+        for b in [0usize, 1, 2, 5, 8, 13, 16, 64, 100] {
+            let groups = v2_sample_groups(b);
+            assert!(groups.len() <= V2_GRAD_GROUPS);
+            let mut next = 0;
+            for r in &groups {
+                assert_eq!(r.start, next, "groups must tile the batch, b={b}");
+                assert!(r.end > r.start, "no empty groups, b={b}");
+                next = r.end;
+            }
+            assert_eq!(next, b, "groups must cover the batch, b={b}");
+        }
+    }
+
+    #[test]
+    fn workspace_children_are_recycled_and_fold_stats() {
+        let mut ws = Workspace::new();
+        let mut kids = ws.take_children(3);
+        let b = kids[0].take(32);
+        kids[0].put(b);
+        ws.put_children(kids);
+        let s1 = ws.stats();
+        assert_eq!(s1.allocations, 1);
+        // Second checkout: same arena order, so the parked buffer is found
+        // again and the parent counters fold the delta only.
+        let mut kids = ws.take_children(3);
+        let b = kids[0].take(32);
+        kids[0].put(b);
+        ws.put_children(kids);
+        let s2 = ws.stats();
+        assert_eq!(s2.allocations, 1, "child arenas keep buffers across checkouts");
+        assert_eq!(s2.reuses, 1);
+        assert_eq!(s2.alloc_bytes, s1.alloc_bytes);
+    }
+
+    #[test]
+    fn v2_accumulate_grads_bits_invariant_across_worker_counts() {
+        let run = |threads: usize| {
+            let mut ws = Workspace::new();
+            let cfg = KernelCfg::v2(threads);
+            // usize::MAX macs forces the threaded path whenever threads>1.
+            v2_accumulate_grads(&mut ws, &cfg, 13, 6, 2, usize::MAX, |rows, _cfg, cw, grad, aux| {
+                let scratch = cw.take(4);
+                for s in rows {
+                    for (j, g) in grad.iter_mut().enumerate() {
+                        *g += ((s * 7 + j) as f32).sin();
+                    }
+                    aux[0] += s as f32;
+                    aux[1] += 1.0;
+                }
+                cw.put(scratch);
+            })
+        };
+        let (g1, a1) = run(1);
+        assert_eq!(a1[1], 13.0, "every sample visited exactly once");
+        for t in [2, 3, 8] {
+            let (g, a) = run(t);
+            assert_eq!(g1, g, "grad bits at threads={t}");
+            assert_eq!(a1, a, "aux bits at threads={t}");
         }
     }
 }

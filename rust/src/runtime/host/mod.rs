@@ -52,8 +52,10 @@ pub struct HostConfig {
     pub seq_len: usize,
     pub b_ppo: usize,
     pub b_enc: usize,
-    /// Kernel implementation + thread budget (outputs are bit-identical
-    /// for every setting — see [`kernels`]).
+    /// Kernel implementation, thread budget and reduction-order version.
+    /// Outputs are bit-identical for every thread count and lane width
+    /// *within* an order; V1↔V2 agree to float tolerance — see [`kernels`].
+    /// Defaults honour `RLFLOW_HOST_THREADS` / `RLFLOW_HOST_REDUCTION`.
     pub kernels: KernelCfg,
 }
 

@@ -15,7 +15,10 @@
 //! cycles through the caller's [`Workspace`], so a steady-state `wm_train`
 //! or `wm_step` call allocates nothing beyond its program outputs.
 
-use super::kernels::{acc_xt_dy, dy_wt_acc, dy_wt_into, linear_into, Act, KernelCfg, Workspace};
+use super::kernels::{
+    acc_xt_dy, dy_wt_acc, dy_wt_into, linear_into, v2_accumulate_grads, Act, KernelCfg,
+    ReductionOrder, Workspace,
+};
 use super::nn::{acc_rows, adam_step, log_sum_exp, sigmoid, softmax_inplace, softplus, ParamLayout};
 
 const LN_2PI: f32 = 1.837_877_1;
@@ -358,11 +361,86 @@ impl WmNet {
         t_len: usize,
         lr: f32,
     ) -> WmStepLosses {
+        let (r, i_dim, x1) = (self.rdim, self.i_dim(), self.x1);
+        let zk = self.zdim * self.k;
+        // The valid-step normaliser is a batch-level statistic: it is computed
+        // over the whole `[b, t]` batch before any per-sample-group work so
+        // every group sees the same value. Part of both orders' contracts.
+        let denom = valid.iter().sum::<f32>().max(1.0);
+        let theta_ref: &[f32] = theta;
+
+        let (grad, aux) = match kc.effective_order() {
+            ReductionOrder::V1Scalar => {
+                // One full-range pass: arithmetically identical to the
+                // pre-versioning sequential loop, preserving the V1 bit-pins.
+                let mut grad = ws.take(theta_ref.len());
+                let mut aux = ws.take(4);
+                self.accumulate_range(
+                    ws, kc, theta_ref, z, a, z_next, r_target, xm_target, done_target, valid,
+                    0..b, t_len, denom, &mut grad, &mut aux,
+                );
+                (grad, aux)
+            }
+            ReductionOrder::V2LaneTiled => {
+                let macs = b * t_len * (i_dim * 4 * r + r * 4 * r + r * (3 * zk + x1 + 2)) * 3;
+                v2_accumulate_grads(
+                    ws,
+                    kc,
+                    b,
+                    theta_ref.len(),
+                    4,
+                    macs,
+                    |rows, cfg, cw, grad, aux| {
+                        self.accumulate_range(
+                            cw, cfg, theta_ref, z, a, z_next, r_target, xm_target, done_target,
+                            valid, rows, t_len, denom, grad, aux,
+                        );
+                    },
+                )
+            }
+        };
+
+        adam_step(theta, m, v, t_adam, &grad, lr);
+        let losses = WmStepLosses {
+            total: aux[0] + aux[1] + aux[2] + aux[3],
+            nll: aux[0],
+            reward_mse: aux[1],
+            mask_bce: aux[2],
+            done_bce: aux[3],
+        };
+        ws.put_all([grad, aux]);
+        losses
+    }
+
+    /// Teacher-forced forward/backward over `rows` of the sequence batch,
+    /// accumulating the parameter gradient into `grad` and the weighted loss
+    /// components into `aux` (`[nll, reward_mse, mask_bce, done_bce]`).
+    /// Global tensors (`z`, `a`, targets, `valid`) are indexed by the global
+    /// row `rows.start + row`; per-range activations by the local row.
+    #[allow(clippy::too_many_arguments)]
+    fn accumulate_range(
+        &self,
+        ws: &mut Workspace,
+        kc: &KernelCfg,
+        theta: &[f32],
+        z: &[f32],
+        a: &[i32],
+        z_next: &[f32],
+        r_target: &[f32],
+        xm_target: &[f32],
+        done_target: &[f32],
+        valid: &[f32],
+        rows: std::ops::Range<usize>,
+        t_len: usize,
+        denom: f32,
+        grad: &mut [f32],
+        aux: &mut [f32],
+    ) {
         let (zd, r, i_dim, k, x1) = (self.zdim, self.rdim, self.i_dim(), self.k, self.x1);
         let zk = zd * k;
-        let denom = valid.iter().sum::<f32>().max(1.0);
+        let r0 = rows.start;
+        let br = rows.len();
 
-        let mut grad = ws.take(theta.len());
         let mut demb = ws.take(x1 * self.de);
         let mut dwxh = ws.take(i_dim * 4 * r);
         let mut dwhh = ws.take(r * 4 * r);
@@ -380,32 +458,33 @@ impl WmNet {
         let mut dwd = ws.take(r);
         let mut dbd = ws.take(1);
 
-        let (mut nll, mut r_mse, mut m_bce, mut d_bce) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-        let mut h = ws.take(b * r);
-        let mut c = ws.take(b * r);
+        let mut h = ws.take(br * r);
+        let mut c = ws.take(br * r);
         let mut lp_buf = ws.take(k);
 
         for ti in 0..t_len {
             // Gather the time-slice into step-batch layout.
-            let mut zs = ws.take(b * zd);
-            let mut as_ = ws.take_i32(b * 2);
-            for row in 0..b {
-                let s = (row * t_len + ti) * zd;
+            let mut zs = ws.take(br * zd);
+            let mut as_ = ws.take_i32(br * 2);
+            for row in 0..br {
+                let g = r0 + row;
+                let s = (g * t_len + ti) * zd;
                 zs[row * zd..(row + 1) * zd].copy_from_slice(&z[s..s + zd]);
-                as_[row * 2] = a[(row * t_len + ti) * 2];
-                as_[row * 2 + 1] = a[(row * t_len + ti) * 2 + 1];
+                as_[row * 2] = a[(g * t_len + ti) * 2];
+                as_[row * 2 + 1] = a[(g * t_len + ti) * 2 + 1];
             }
-            let fwd = self.cell_forward(ws, kc, theta, &zs, &as_, &h, &c, b, true);
+            let fwd = self.cell_forward(ws, kc, theta, &zs, &as_, &h, &c, br, true);
 
             // ---- losses + head gradients ---------------------------------
-            let mut dlp = ws.take(b * zk);
-            let mut dmu = ws.take(b * zk);
-            let mut dls = ws.take(b * zk);
-            let mut drh = ws.take(b);
-            let mut dmk = ws.take(b * x1);
-            let mut ddn = ws.take(b);
-            for row in 0..b {
-                let wv = valid[row * t_len + ti] / denom;
+            let mut dlp = ws.take(br * zk);
+            let mut dmu = ws.take(br * zk);
+            let mut dls = ws.take(br * zk);
+            let mut drh = ws.take(br);
+            let mut dmk = ws.take(br * x1);
+            let mut ddn = ws.take(br);
+            for row in 0..br {
+                let g = r0 + row;
+                let wv = valid[g * t_len + ti] / denom;
                 if wv == 0.0 {
                     continue;
                 }
@@ -415,7 +494,7 @@ impl WmNet {
                     let base = row * zk + d * k;
                     let raw = &fwd.heads.log_pi[base..base + k];
                     let lse_pi = log_sum_exp(raw);
-                    let x_t = z_next[(row * t_len + ti) * zd + d];
+                    let x_t = z_next[(g * t_len + ti) * zd + d];
                     for kk in 0..k {
                         let lsg = fwd.heads.log_sig[base + kk];
                         let sg = lsg.exp();
@@ -423,7 +502,7 @@ impl WmNet {
                         lp_buf[kk] = (raw[kk] - lse_pi) - lsg - 0.5 * LN_2PI - 0.5 * dev * dev;
                     }
                     let nll_d = -log_sum_exp(&lp_buf);
-                    nll += nll_d * wdim;
+                    aux[0] += nll_d * wdim;
                     let gamma = &mut lp_buf;
                     softmax_inplace(gamma);
                     for kk in 0..k {
@@ -438,21 +517,21 @@ impl WmNet {
                     }
                 }
                 // Reward regression.
-                let dr = fwd.heads.reward[row] - r_target[row * t_len + ti];
-                r_mse += dr * dr * wv;
+                let dr = fwd.heads.reward[row] - r_target[g * t_len + ti];
+                aux[1] += dr * dr * wv;
                 drh[row] = 2.0 * dr * wv;
                 // Next-state mask BCE.
                 let wmask = wv / x1 as f32;
                 for xi in 0..x1 {
                     let logit = fwd.heads.mask_logits[row * x1 + xi];
-                    let target = xm_target[(row * t_len + ti) * x1 + xi];
-                    m_bce += (softplus(logit) - target * logit) * wmask;
+                    let target = xm_target[(g * t_len + ti) * x1 + xi];
+                    aux[2] += (softplus(logit) - target * logit) * wmask;
                     dmk[row * x1 + xi] = (sigmoid(logit) - target) * wmask;
                 }
                 // Done BCE.
                 let dl = fwd.heads.done_logits[row];
-                let dt = done_target[row * t_len + ti];
-                d_bce += (softplus(dl) - dt * dl) * wv;
+                let dt = done_target[g * t_len + ti];
+                aux[3] += (softplus(dl) - dt * dl) * wv;
                 ddn[row] = (sigmoid(dl) - dt) * wv;
             }
 
@@ -463,29 +542,29 @@ impl WmNet {
                 *d *= 3.0 * (1.0 - th * th);
             }
             let h1 = &fwd.heads.h1;
-            acc_xt_dy(kc, h1, &dlp, b, r, zk, &mut dwpi);
-            acc_rows(&dlp, b, zk, &mut dbpi);
-            acc_xt_dy(kc, h1, &dmu, b, r, zk, &mut dwmu);
-            acc_rows(&dmu, b, zk, &mut dbmu);
-            acc_xt_dy(kc, h1, &dsig_raw, b, r, zk, &mut dwsig);
-            acc_rows(&dsig_raw, b, zk, &mut dbsig);
-            acc_xt_dy(kc, h1, &drh, b, r, 1, &mut dwr);
-            acc_rows(&drh, b, 1, &mut dbr);
-            acc_xt_dy(kc, h1, &dmk, b, r, x1, &mut dwmk);
-            acc_rows(&dmk, b, x1, &mut dbmk);
-            acc_xt_dy(kc, h1, &ddn, b, r, 1, &mut dwd);
-            acc_rows(&ddn, b, 1, &mut dbd);
+            acc_xt_dy(kc, h1, &dlp, br, r, zk, &mut dwpi);
+            acc_rows(&dlp, br, zk, &mut dbpi);
+            acc_xt_dy(kc, h1, &dmu, br, r, zk, &mut dwmu);
+            acc_rows(&dmu, br, zk, &mut dbmu);
+            acc_xt_dy(kc, h1, &dsig_raw, br, r, zk, &mut dwsig);
+            acc_rows(&dsig_raw, br, zk, &mut dbsig);
+            acc_xt_dy(kc, h1, &drh, br, r, 1, &mut dwr);
+            acc_rows(&drh, br, 1, &mut dbr);
+            acc_xt_dy(kc, h1, &dmk, br, r, x1, &mut dwmk);
+            acc_rows(&dmk, br, x1, &mut dbmk);
+            acc_xt_dy(kc, h1, &ddn, br, r, 1, &mut dwd);
+            acc_rows(&ddn, br, 1, &mut dbd);
 
-            let mut dh1 = ws.take(b * r);
-            dy_wt_into(kc, &dlp, self.layout.view(theta, "wpi"), b, zk, r, &mut dh1);
-            dy_wt_acc(kc, &dmu, self.layout.view(theta, "wmu"), b, zk, r, &mut dh1);
-            dy_wt_acc(kc, &dsig_raw, self.layout.view(theta, "wsig"), b, zk, r, &mut dh1);
-            dy_wt_acc(kc, &drh, self.layout.view(theta, "wr"), b, 1, r, &mut dh1);
-            dy_wt_acc(kc, &dmk, self.layout.view(theta, "wmk"), b, x1, r, &mut dh1);
-            dy_wt_acc(kc, &ddn, self.layout.view(theta, "wd"), b, 1, r, &mut dh1);
+            let mut dh1 = ws.take(br * r);
+            dy_wt_into(kc, &dlp, self.layout.view(theta, "wpi"), br, zk, r, &mut dh1);
+            dy_wt_acc(kc, &dmu, self.layout.view(theta, "wmu"), br, zk, r, &mut dh1);
+            dy_wt_acc(kc, &dsig_raw, self.layout.view(theta, "wsig"), br, zk, r, &mut dh1);
+            dy_wt_acc(kc, &drh, self.layout.view(theta, "wr"), br, 1, r, &mut dh1);
+            dy_wt_acc(kc, &dmk, self.layout.view(theta, "wmk"), br, x1, r, &mut dh1);
+            dy_wt_acc(kc, &ddn, self.layout.view(theta, "wd"), br, 1, r, &mut dh1);
 
-            let mut dgates = ws.take(b * 4 * r);
-            for row in 0..b {
+            let mut dgates = ws.take(br * 4 * r);
+            for row in 0..br {
                 for j in 0..r {
                     let idx = row * r + j;
                     let o_v = fwd.go[idx];
@@ -506,12 +585,12 @@ impl WmNet {
                     dgates[base + 3 * r + j] = do_pre;
                 }
             }
-            acc_xt_dy(kc, &fwd.x, &dgates, b, i_dim, 4 * r, &mut dwxh);
-            acc_xt_dy(kc, &fwd.h_prev, &dgates, b, r, 4 * r, &mut dwhh);
-            acc_rows(&dgates, b, 4 * r, &mut dbh);
-            let mut dx = ws.take(b * i_dim);
-            dy_wt_into(kc, &dgates, self.layout.view(theta, "wxh"), b, 4 * r, i_dim, &mut dx);
-            for row in 0..b {
+            acc_xt_dy(kc, &fwd.x, &dgates, br, i_dim, 4 * r, &mut dwxh);
+            acc_xt_dy(kc, &fwd.h_prev, &dgates, br, r, 4 * r, &mut dwhh);
+            acc_rows(&dgates, br, 4 * r, &mut dbh);
+            let mut dx = ws.take(br * i_dim);
+            dy_wt_into(kc, &dgates, self.layout.view(theta, "wxh"), br, 4 * r, i_dim, &mut dx);
+            for row in 0..br {
                 let slot = fwd.ax[row];
                 for e in 0..self.de {
                     demb[slot * self.de + e] += dx[row * i_dim + zd + e];
@@ -529,34 +608,25 @@ impl WmNet {
             ws.put(std::mem::replace(&mut c, c1));
         }
 
-        self.layout.scatter(&mut grad, "emb", &demb);
-        self.layout.scatter(&mut grad, "wxh", &dwxh);
-        self.layout.scatter(&mut grad, "whh", &dwhh);
-        self.layout.scatter(&mut grad, "bh", &dbh);
-        self.layout.scatter(&mut grad, "wpi", &dwpi);
-        self.layout.scatter(&mut grad, "bpi", &dbpi);
-        self.layout.scatter(&mut grad, "wmu", &dwmu);
-        self.layout.scatter(&mut grad, "bmu", &dbmu);
-        self.layout.scatter(&mut grad, "wsig", &dwsig);
-        self.layout.scatter(&mut grad, "bsig", &dbsig);
-        self.layout.scatter(&mut grad, "wr", &dwr);
-        self.layout.scatter(&mut grad, "br", &dbr);
-        self.layout.scatter(&mut grad, "wmk", &dwmk);
-        self.layout.scatter(&mut grad, "bmk", &dbmk);
-        self.layout.scatter(&mut grad, "wd", &dwd);
-        self.layout.scatter(&mut grad, "bd", &dbd);
-        adam_step(theta, m, v, t_adam, &grad, lr);
+        self.layout.scatter(grad, "emb", &demb);
+        self.layout.scatter(grad, "wxh", &dwxh);
+        self.layout.scatter(grad, "whh", &dwhh);
+        self.layout.scatter(grad, "bh", &dbh);
+        self.layout.scatter(grad, "wpi", &dwpi);
+        self.layout.scatter(grad, "bpi", &dbpi);
+        self.layout.scatter(grad, "wmu", &dwmu);
+        self.layout.scatter(grad, "bmu", &dbmu);
+        self.layout.scatter(grad, "wsig", &dwsig);
+        self.layout.scatter(grad, "bsig", &dbsig);
+        self.layout.scatter(grad, "wr", &dwr);
+        self.layout.scatter(grad, "br", &dbr);
+        self.layout.scatter(grad, "wmk", &dwmk);
+        self.layout.scatter(grad, "bmk", &dbmk);
+        self.layout.scatter(grad, "wd", &dwd);
+        self.layout.scatter(grad, "bd", &dbd);
 
-        ws.put_all([grad, demb, dwxh, dwhh, dbh, dwpi, dbpi, dwmu, dbmu, dwsig, dbsig]);
+        ws.put_all([demb, dwxh, dwhh, dbh, dwpi, dbpi, dwmu, dbmu, dwsig, dbsig]);
         ws.put_all([dwr, dbr, dwmk, dbmk, dwd, dbd, h, c, lp_buf]);
-
-        WmStepLosses {
-            total: nll + r_mse + m_bce + d_bce,
-            nll,
-            reward_mse: r_mse,
-            mask_bce: m_bce,
-            done_bce: d_bce,
-        }
     }
 }
 
@@ -656,37 +726,73 @@ mod tests {
 
     #[test]
     fn train_scratch_is_fully_recycled() {
-        let n = net();
-        let mut ws = Workspace::new();
-        let kc = KernelCfg::blocked(2);
-        let mut theta = n.init(7);
-        let mut m = vec![0.0f32; theta.len()];
-        let mut v = vec![0.0f32; theta.len()];
-        let (b, t) = (2, 3);
-        let z = vec![0.5f32; b * t * 4];
-        let a = vec![1i32; b * t * 2];
-        let z_next = vec![0.4f32; b * t * 4];
-        let r = vec![0.1f32; b * t];
-        let xm = vec![1.0f32; b * t * 5];
-        let done = vec![0.0f32; b * t];
-        let valid = vec![1.0f32; b * t];
-        n.train_step(
-            &mut ws, &kc, &mut theta, &mut m, &mut v, 1.0, &z, &a, &z_next, &r, &xm, &done,
-            &valid, b, t, 1e-3,
-        );
-        let warm = ws.stats();
-        for step in 2..=6 {
+        for kc in [KernelCfg::blocked(2), KernelCfg::v2(2)] {
+            let n = net();
+            let mut ws = Workspace::new();
+            let mut theta = n.init(7);
+            let mut m = vec![0.0f32; theta.len()];
+            let mut v = vec![0.0f32; theta.len()];
+            let (b, t) = (2, 3);
+            let z = vec![0.5f32; b * t * 4];
+            let a = vec![1i32; b * t * 2];
+            let z_next = vec![0.4f32; b * t * 4];
+            let r = vec![0.1f32; b * t];
+            let xm = vec![1.0f32; b * t * 5];
+            let done = vec![0.0f32; b * t];
+            let valid = vec![1.0f32; b * t];
             n.train_step(
-                &mut ws, &kc, &mut theta, &mut m, &mut v, step as f32, &z, &a, &z_next, &r, &xm,
-                &done, &valid, b, t, 1e-3,
+                &mut ws, &kc, &mut theta, &mut m, &mut v, 1.0, &z, &a, &z_next, &r, &xm, &done,
+                &valid, b, t, 1e-3,
             );
+            let warm = ws.stats();
+            for step in 2..=6 {
+                n.train_step(
+                    &mut ws, &kc, &mut theta, &mut m, &mut v, step as f32, &z, &a, &z_next, &r,
+                    &xm, &done, &valid, b, t, 1e-3,
+                );
+            }
+            let now = ws.stats();
+            assert_eq!(
+                warm.alloc_bytes, now.alloc_bytes,
+                "steady-state wm_train must allocate no scratch ({:?})",
+                kc.order
+            );
+            assert!(now.reuses > warm.reuses);
         }
-        let now = ws.stats();
-        assert_eq!(
-            warm.alloc_bytes, now.alloc_bytes,
-            "steady-state wm_train must allocate no scratch"
-        );
-        assert!(now.reuses > warm.reuses);
+    }
+
+    #[test]
+    fn v2_train_is_bit_invariant_across_threads_and_lane_widths() {
+        let run = |kc: KernelCfg| {
+            let n = net();
+            let mut ws = Workspace::new();
+            let mut theta = n.init(21);
+            let mut m = vec![0.0f32; theta.len()];
+            let mut v = vec![0.0f32; theta.len()];
+            let (b, t) = (5, 3);
+            let mut rng = Rng::new(31);
+            let z: Vec<f32> = (0..b * t * 4).map(|_| rng.normal() * 0.5).collect();
+            let z_next: Vec<f32> = z.iter().map(|x| 0.8 * x + 0.05).collect();
+            let a: Vec<i32> = (0..b * t * 2).map(|i| (i % 5) as i32).collect();
+            let r: Vec<f32> = (0..b * t).map(|_| rng.normal() * 0.1).collect();
+            let xm: Vec<f32> = (0..b * t * 5).map(|i| (i % 2) as f32).collect();
+            let done = vec![0.0f32; b * t];
+            let valid: Vec<f32> = (0..b * t).map(|i| if i % 7 == 3 { 0.0 } else { 1.0 }).collect();
+            let mut losses = Vec::new();
+            for step in 1..=4 {
+                let l = n.train_step(
+                    &mut ws, &kc, &mut theta, &mut m, &mut v, step as f32, &z, &a, &z_next, &r,
+                    &xm, &done, &valid, b, t, 1e-2,
+                );
+                losses.push([l.total, l.nll, l.reward_mse, l.mask_bce, l.done_bce]);
+            }
+            (theta, losses)
+        };
+        let want = run(KernelCfg::v2(1).with_lane_groups(1));
+        for (threads, lanes) in [(2, 2), (8, 4), (3, 8)] {
+            let got = run(KernelCfg::v2(threads).with_lane_groups(lanes));
+            assert_eq!(want, got, "wm V2 train diverged at threads={threads} lanes={lanes}");
+        }
     }
 
     #[test]

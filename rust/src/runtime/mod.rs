@@ -16,7 +16,7 @@ pub mod params;
 pub mod pjrt;
 
 pub use backend::{backend_by_name, validate_args, Backend, ExecStats, TensorView};
-pub use host::kernels::{KernelCfg, KernelMode, Workspace, WorkspaceStats};
+pub use host::kernels::{KernelCfg, KernelMode, ReductionOrder, Workspace, WorkspaceStats};
 pub use host::{HostBackend, HostConfig};
 pub use manifest::{ArgSpec, ArtifactSpec, Dt, Manifest};
 pub use params::ParamStore;

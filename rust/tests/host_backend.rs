@@ -344,6 +344,50 @@ fn init_deterministic_and_distinct_per_family() {
     assert_ne!(g.theta.get(..4), a.theta.get(..4));
 }
 
+/// Backend-level reduction-order contract: a `HostConfig`-pinned order is
+/// bit-deterministic within itself at any thread count, and the V1↔V2
+/// pair agrees within a relative-error bound on the same encode inputs.
+#[test]
+fn reduction_orders_are_deterministic_and_parity_bounded() {
+    use rlflow::runtime::KernelCfg;
+    let encode = |kernels: KernelCfg| -> Vec<f32> {
+        let backend = HostBackend::with_config(HostConfig { kernels, ..tiny_config() });
+        let (n, f) = (backend.hp("MAX_NODES").unwrap(), backend.hp("NODE_FEATS").unwrap());
+        let b = backend.hp("B_ENC").unwrap();
+        let gnn = ParamStore::init(&backend, "gnn", 5).unwrap();
+        let mut rng = Rng::new(23);
+        let feats: Vec<f32> = (0..b * n * f).map(|_| rng.normal() * 0.5).collect();
+        let adj: Vec<f32> =
+            (0..b * n * n).map(|i| if i % 11 == 0 { 1.0 } else { 0.0 }).collect();
+        let mask: Vec<f32> = (0..b * n).map(|i| if i % n < 5 { 1.0 } else { 0.0 }).collect();
+        let out = backend
+            .exec_with_params(
+                "gnn_encode_b",
+                &gnn,
+                &[
+                    TensorView::f32(&feats, &[b, n, f]),
+                    TensorView::f32(&adj, &[b, n, n]),
+                    TensorView::f32(&mask, &[b, n]),
+                ],
+            )
+            .unwrap();
+        out[0].data.clone()
+    };
+    let v1 = encode(KernelCfg::blocked(2));
+    assert_eq!(v1, encode(KernelCfg::blocked(8)), "V1 must be thread-count invariant");
+    let v2 = encode(KernelCfg::v2(2));
+    assert_eq!(v2, encode(KernelCfg::v2(8)), "V2 must be thread-count invariant");
+    assert_eq!(
+        v2,
+        encode(KernelCfg::v2(3).with_lane_groups(8)),
+        "V2 must be lane-width invariant"
+    );
+    for (i, (&x, &y)) in v1.iter().zip(&v2).enumerate() {
+        let tol = 1e-5 + 1e-4 * x.abs().max(y.abs());
+        assert!((x - y).abs() <= tol, "z[{i}]: V1 {x} vs V2 {y} exceeds tol {tol}");
+    }
+}
+
 #[test]
 fn model_free_ppo_iteration_runs_on_host() {
     let backend = HostBackend::with_config(tiny_config());

@@ -1,7 +1,9 @@
-//! Tier-1 coverage of the host kernel layer (PR 5): blocked/threaded
-//! kernels bit-identical to the seed scalar reference at every thread
-//! count — from the raw GEMMs up through whole programs and the full
-//! training loop — plus the Workspace zero-alloc steady state and the
+//! Tier-1 coverage of the host kernel layer: blocked/threaded V1 kernels
+//! bit-identical to the seed scalar reference at every thread count —
+//! from the raw GEMMs up through whole programs and the full training
+//! loop — the V2 lane-tiled order bit-identical across thread counts
+//! and lane widths, the V1↔V2 toleranced parity oracle (GEMMs and full
+//! train steps), plus the Workspace zero-alloc steady state and the
 //! batched-exec equivalences (`exec_batch`, arbitrary-width
 //! `act_batch`/`WorldModel::step`).
 
@@ -359,4 +361,179 @@ fn in_place_train_step_matches_exec_path() {
     assert_eq!(fast_out[0].data, out[4].data, "loss outputs must line up (shifted by 4)");
     // Unknown/non-train programs are rejected.
     assert!(backend.train_step("ctrl_policy_1", &mut fast, &rest).is_err());
+}
+
+/// Elementwise toleranced comparison for the V1↔V2 parity oracle.
+fn assert_close(a: &[f32], b: &[f32], atol: f32, rtol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * x.abs().max(y.abs());
+        assert!(
+            (x - y).abs() <= tol,
+            "{what}[{i}]: V1 {x} vs V2 {y} exceeds tol {tol}"
+        );
+    }
+}
+
+/// The V2 acceptance pin: the complete training loop produces
+/// bit-identical parameters under `V2LaneTiled` for every (thread count,
+/// lane width) combination — the order is fixed by the version, not by
+/// the execution resources.
+#[test]
+fn v2_full_training_loop_is_bit_identical_across_threads_and_lane_widths() {
+    let run = |kernels: KernelCfg| {
+        let backend = HostBackend::with_config(tiny_config(kernels));
+        let cfg = tiny_run_config();
+        let pipe = Pipeline::new(&backend).unwrap();
+        let agent =
+            rlflow::experiments::train_model_based(&pipe, &cfg, &small_graph(), cfg.seed).unwrap();
+        (agent.gnn.theta, agent.wm.theta, agent.ctrl.theta)
+    };
+    let base = run(KernelCfg::v2(1).with_lane_groups(1));
+    for (threads, lanes) in [(2, 2), (8, 4), (3, 8)] {
+        let got = run(KernelCfg::v2(threads).with_lane_groups(lanes));
+        assert_eq!(base.0, got.0, "gnn theta drifted at threads={threads} lanes={lanes}");
+        assert_eq!(base.1, got.1, "wm theta drifted at threads={threads} lanes={lanes}");
+        assert_eq!(base.2, got.2, "ctrl theta drifted at threads={threads} lanes={lanes}");
+    }
+}
+
+/// Property sweep over odd/remainder GEMM shapes × thread counts × lane
+/// widths: V2 is bit-self-consistent everywhere, and V1↔V2 agree within
+/// a relative-error bound on every kernel.
+#[test]
+fn v2_kernels_bit_consistent_and_parity_bounded() {
+    use rlflow::runtime::host::kernels::{acc_xt_dy, dy_wt_acc, dy_wt_into, linear_into, Act};
+    let shapes =
+        [(1, 1, 1), (1, 9, 1), (2, 8, 16), (3, 5, 7), (5, 16, 9), (4, 33, 17), (33, 130, 21)];
+    for &(m, k, n) in &shapes {
+        let mut rng = Rng::new((m * 1_000 + k * 10 + n) as u64);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() * 0.7).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() * 0.5).collect();
+        let bias: Vec<f32> = (0..n).map(|_| rng.normal() * 0.1).collect();
+        let dy: Vec<f32> = (0..m * n).map(|_| rng.normal() * 0.3).collect();
+        let run = |kc: &KernelCfg| {
+            let mut y = vec![0.0f32; m * n];
+            linear_into(kc, &x, &w, Some(&bias), m, k, n, Act::Tanh, &mut y);
+            let mut dw = vec![0.0f32; k * n];
+            acc_xt_dy(kc, &x, &dy, m, k, n, &mut dw);
+            let mut dx = vec![0.0f32; m * k];
+            dy_wt_into(kc, &dy, &w, m, n, k, &mut dx);
+            let mut dx2 = dx.clone();
+            dy_wt_acc(kc, &dy, &w, m, n, k, &mut dx2);
+            (y, dw, dx, dx2)
+        };
+        let base = run(&KernelCfg::v2(1).with_lane_groups(1));
+        for threads in [1, 2, 3, 8] {
+            for lanes in [1, 2, 4, 8] {
+                let got = run(&KernelCfg::v2(threads).with_lane_groups(lanes));
+                assert_eq!(
+                    base, got,
+                    "V2 bits drifted at {m}x{k}x{n} threads={threads} lanes={lanes}"
+                );
+            }
+        }
+        let v1 = run(&KernelCfg::blocked(2));
+        assert_close(&v1.0, &base.0, 1e-5, 1e-4, "linear+tanh");
+        assert_close(&v1.1, &base.1, 1e-5, 1e-4, "acc_xt_dy");
+        assert_close(&v1.2, &base.2, 1e-5, 1e-4, "dy_wt_into");
+        assert_close(&v1.3, &base.3, 1e-5, 1e-4, "dy_wt_acc");
+    }
+}
+
+/// The cross-version oracle at full-program scale: several in-place
+/// train steps per family (`gnn_ae_train`, `ctrl_train`, `wm_train`) on
+/// identical inputs leave V1 and V2 parameters within a finite-
+/// difference-style relative bound of each other.
+#[test]
+fn v1_v2_parity_holds_through_full_train_steps() {
+    let run = |kernels: KernelCfg| -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let backend = HostBackend::with_config(tiny_config(kernels));
+        let z = backend.hp("LATENT").unwrap();
+        let r = backend.hp("RNN_HIDDEN").unwrap();
+        let (n, f) = (backend.hp("MAX_NODES").unwrap(), backend.hp("NODE_FEATS").unwrap());
+        let (x1, locs) = (backend.hp("N_XFERS1").unwrap(), backend.hp("MAX_LOCS").unwrap());
+        let mut rng = Rng::new(99);
+
+        // gnn_ae_train over a sparse synthetic state batch.
+        let be = backend.hp("B_ENC").unwrap();
+        let mut gnn = ParamStore::init(&backend, "gnn", 7).unwrap();
+        let theta0 = gnn.theta.clone();
+        let feats: Vec<f32> = (0..be * n * f).map(|_| rng.normal() * 0.5).collect();
+        let adj: Vec<f32> =
+            (0..be * n * n).map(|i| if i % 13 == 0 { 1.0 } else { 0.0 }).collect();
+        let mask: Vec<f32> = (0..be * n).map(|i| if i % n < 6 { 1.0 } else { 0.0 }).collect();
+        let rest: Vec<TensorView> = vec![
+            TensorView::f32(&feats, &[be, n, f]),
+            TensorView::f32(&adj, &[be, n, n]),
+            TensorView::f32(&mask, &[be, n]),
+            TensorView::ScalarF32(1e-3),
+        ];
+        for _ in 0..3 {
+            backend.train_step("gnn_ae_train", &mut gnn, &rest).unwrap();
+        }
+        assert_ne!(gnn.theta, theta0, "gnn params must move");
+
+        // ctrl_train on a fixed synthetic PPO batch.
+        let b = backend.hp("B_PPO").unwrap();
+        let mut ctrl = ParamStore::init(&backend, "ctrl", 11).unwrap();
+        let zb: Vec<f32> = (0..b * z).map(|_| rng.normal() * 0.4).collect();
+        let hb: Vec<f32> = (0..b * r).map(|_| rng.normal() * 0.2).collect();
+        let act: Vec<i32> =
+            (0..b).flat_map(|i| [(i % x1) as i32, (i % locs) as i32]).collect();
+        let logp: Vec<f32> = (0..b).map(|_| -1.0 + rng.normal() * 0.1).collect();
+        let adv: Vec<f32> = (0..b).map(|_| rng.normal()).collect();
+        let ret: Vec<f32> = (0..b).map(|_| rng.normal() * 0.3).collect();
+        let xm = vec![1.0f32; b * x1];
+        let lm = vec![1.0f32; b * locs];
+        let rest: Vec<TensorView> = vec![
+            TensorView::f32(&zb, &[b, z]),
+            TensorView::f32(&hb, &[b, r]),
+            TensorView::i32(&act, &[b, 2]),
+            TensorView::f32(&logp, &[b]),
+            TensorView::f32(&adv, &[b]),
+            TensorView::f32(&ret, &[b]),
+            TensorView::f32(&xm, &[b, x1]),
+            TensorView::f32(&lm, &[b, locs]),
+            TensorView::ScalarF32(1e-3),
+            TensorView::ScalarF32(0.2),
+            TensorView::ScalarF32(0.01),
+        ];
+        for _ in 0..3 {
+            backend.train_step("ctrl_train", &mut ctrl, &rest).unwrap();
+        }
+
+        // wm_train on a fixed synthetic sequence batch with invalid holes.
+        let (bw, t) = (backend.hp("B_WM").unwrap(), backend.hp("SEQ_LEN").unwrap());
+        let mut wm = ParamStore::init(&backend, "wm", 3).unwrap();
+        let zs: Vec<f32> = (0..bw * t * z).map(|_| rng.normal() * 0.5).collect();
+        let a: Vec<i32> =
+            (0..bw * t).flat_map(|i| [(i % x1) as i32, (i % 7) as i32]).collect();
+        let z_next: Vec<f32> = zs.iter().map(|v| 0.9 * v).collect();
+        let rt: Vec<f32> = (0..bw * t).map(|_| rng.normal() * 0.1).collect();
+        let xmt: Vec<f32> = (0..bw * t * x1).map(|i| (i % 2) as f32).collect();
+        let dt = vec![0.0f32; bw * t];
+        let valid: Vec<f32> =
+            (0..bw * t).map(|i| if i % 5 == 4 { 0.0 } else { 1.0 }).collect();
+        let rest: Vec<TensorView> = vec![
+            TensorView::f32(&zs, &[bw, t, z]),
+            TensorView::i32(&a, &[bw, t, 2]),
+            TensorView::f32(&z_next, &[bw, t, z]),
+            TensorView::f32(&rt, &[bw, t]),
+            TensorView::f32(&xmt, &[bw, t, x1]),
+            TensorView::f32(&dt, &[bw, t]),
+            TensorView::f32(&valid, &[bw, t]),
+            TensorView::ScalarF32(1e-3),
+        ];
+        for _ in 0..3 {
+            backend.train_step("wm_train", &mut wm, &rest).unwrap();
+        }
+
+        (gnn.theta, ctrl.theta, wm.theta)
+    };
+    let v1 = run(KernelCfg::blocked(2));
+    let v2 = run(KernelCfg::v2(8));
+    assert_close(&v1.0, &v2.0, 5e-4, 5e-3, "gnn theta");
+    assert_close(&v1.1, &v2.1, 5e-4, 5e-3, "ctrl theta");
+    assert_close(&v1.2, &v2.2, 5e-4, 5e-3, "wm theta");
 }

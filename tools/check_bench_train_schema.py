@@ -1,0 +1,82 @@
+#!/usr/bin/env python3
+"""Schema check for BENCH_train.json: the V1/V2 reduction-order columns.
+
+A placeholder file (written when the bench has not run yet) must document
+every required column in its `schema` block; a measured file must carry
+the columns in every row, the per-order parity verdicts, and an
+end-to-end entry per configuration. Exits non-zero with a message on the
+first violation.
+"""
+
+import json
+import sys
+
+REQUIRED_MS = [
+    "seed_scalar_ms",
+    "v1_t1_ms",
+    "v1_t4_ms",
+    "v1_t8_ms",
+    "v2_t1_ms",
+    "v2_t4_ms",
+    "v2_t8_ms",
+]
+REQUIRED_SPEEDUPS = ["speedup_v1_t8", "speedup_v2_t8", "speedup_v2_over_v1_t8"]
+REQUIRED_CONFIGS = ["seed_scalar", "v1_t1", "v1_t4", "v1_t8", "v2_t1", "v2_t4", "v2_t8"]
+REQUIRED_PARITY = ["v1_bitwise", "v2_bitwise", "v1_v2_max_rel_err"]
+
+
+def fail(msg: str) -> None:
+    print(f"BENCH_train.json schema check FAILED: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_train.json"
+    with open(path, encoding="utf-8") as fh:
+        data = json.load(fh)
+
+    if data.get("bench") != "fig_train_throughput":
+        fail(f"unexpected bench name {data.get('bench')!r}")
+
+    if data.get("placeholder", False):
+        # Placeholder mode: the schema block must describe every column so
+        # the measured file cannot silently drop one.
+        schema = data.get("schema", {})
+        for col in REQUIRED_MS + REQUIRED_SPEEDUPS:
+            if f"rows[].{col}" not in schema:
+                fail(f"placeholder schema is missing rows[].{col}")
+        for key in REQUIRED_PARITY:
+            if not any(k.startswith(f"parity.{key}") for k in schema):
+                fail(f"placeholder schema is missing parity.{key}")
+        print(f"{path}: placeholder schema documents all V1/V2 columns")
+        return
+
+    rows = data.get("rows", [])
+    if not rows:
+        fail("measured file has no rows")
+    for row in rows:
+        for col in REQUIRED_MS + REQUIRED_SPEEDUPS:
+            if col not in row:
+                fail(f"row {row.get('program')!r} is missing {col}")
+
+    parity = data.get("parity")
+    if not isinstance(parity, dict):
+        fail("measured file is missing the parity object")
+    for key in REQUIRED_PARITY:
+        if key not in parity:
+            fail(f"parity object is missing {key}")
+    if parity["v1_bitwise"] is not True:
+        fail("V1 outputs diverged across thread counts")
+    if parity["v2_bitwise"] is not True:
+        fail("V2 outputs diverged across thread counts")
+
+    steps = data.get("end_to_end_train_steps_per_s", {})
+    for cfg in REQUIRED_CONFIGS:
+        if cfg not in steps:
+            fail(f"end_to_end_train_steps_per_s is missing {cfg}")
+
+    print(f"{path}: measured rows carry all V1/V2 columns and parity verdicts")
+
+
+if __name__ == "__main__":
+    main()
