@@ -12,12 +12,67 @@
 //!   "nodes": [ {"op": "conv2d", "stride": 1, "pad": "same", "act": "relu",
 //!               "inputs": [[0,0],[1,0]], "outs": [{"dtype":"f32","shape":[1,16,32,32]}]} ] }
 //! ```
+//!
+//! # Untrusted input
+//!
+//! [`import`] is the decode path for the `rlflow serve` daemon and for
+//! ruleset files, so it must return `Err` — never panic — on arbitrary
+//! bytes. Beyond the structural checks (forward-only references, stored
+//! shapes re-inferred), every attribute and descriptor is bounded before it
+//! reaches shape inference: tensor ranks and element counts
+//! ([`MAX_RANK`]/[`MAX_ELEMS`], checked multiplication — a `[1e15,1e15]`
+//! descriptor errors instead of overflowing `n_elems`), window/stride
+//! attributes ([`MAX_ATTR_DIM`], strides >= 1 so output-dim division cannot
+//! divide by zero), fan-in and node counts ([`MAX_NODE_INPUTS`] /
+//! [`MAX_NODES`]), and port indices (must fit `u16` rather than silently
+//! truncating). `tests/onnx_robust.rs` fuzzes this contract.
 
 use crate::util::json::{parse, Json};
 
 use super::graph::{Graph, NodeId, PortRef};
 use super::op::{Activation, OpKind, PadMode};
 use super::tensor::{DType, TensorDesc};
+
+// ---------------------------------------------------------------------------
+// Resource bounds for untrusted input
+// ---------------------------------------------------------------------------
+
+/// Maximum nodes an imported model may declare.
+pub const MAX_NODES: usize = 1 << 20;
+/// Maximum inputs (fan-in) a single imported node may declare.
+pub const MAX_NODE_INPUTS: usize = 64;
+/// Maximum output descriptors a single imported node may declare.
+pub const MAX_NODE_OUTS: usize = 4096;
+/// Maximum tensor rank an imported descriptor may declare.
+pub const MAX_RANK: usize = 8;
+/// Maximum elements an imported tensor descriptor may describe (2^40).
+/// Checked with `checked_mul`, so absurd dimensions error instead of
+/// overflowing downstream `n_elems`/FLOP products.
+pub const MAX_ELEMS: usize = 1 << 40;
+/// Maximum value for scalar window/stride/padding-style attributes
+/// (`stride`, `k`, `kh`, `kw`).
+pub const MAX_ATTR_DIM: usize = 1 << 20;
+
+/// Bounded element count of a dimension list, or `Err` when the rank or
+/// the (checked) product exceeds the import limits.
+fn checked_numel(dims: &[usize], what: &str) -> anyhow::Result<usize> {
+    anyhow::ensure!(
+        (1..=MAX_RANK).contains(&dims.len()),
+        "{}: rank {} outside 1..={}",
+        what,
+        dims.len(),
+        MAX_RANK
+    );
+    let mut n: usize = 1;
+    for &d in dims {
+        anyhow::ensure!(d > 0, "{}: zero-sized dimension", what);
+        n = n
+            .checked_mul(d)
+            .ok_or_else(|| anyhow::anyhow!("{}: element count overflows", what))?;
+        anyhow::ensure!(n <= MAX_ELEMS, "{}: {} elements exceeds limit", what, n);
+    }
+    Ok(n)
+}
 
 // ---------------------------------------------------------------------------
 // OpKind <-> JSON
@@ -107,16 +162,37 @@ pub fn op_to_json(op: &OpKind) -> Json {
 
 pub fn op_from_json(j: &Json) -> anyhow::Result<OpKind> {
     let name = j.get("op")?.as_str()?;
+    // A scalar attribute in 1..=MAX_ATTR_DIM: window sizes, strides and
+    // padding targets must be positive (stride 0 would divide by zero in
+    // `conv_out_dim`) and sane.
+    let dim_attr = |key: &str| -> anyhow::Result<usize> {
+        let v = j.get(key)?.as_usize()?;
+        anyhow::ensure!(
+            (1..=MAX_ATTR_DIM).contains(&v),
+            "attribute '{}' = {} outside 1..={}",
+            key,
+            v,
+            MAX_ATTR_DIM
+        );
+        Ok(v)
+    };
+    // Axis-style attributes only need to fit a sane rank; range against the
+    // actual input rank is shape inference's job.
+    let axis_attr = |key: &str| -> anyhow::Result<usize> {
+        let v = j.get(key)?.as_usize()?;
+        anyhow::ensure!(v < MAX_RANK, "attribute '{}' = {} outside 0..{}", key, v, MAX_RANK);
+        Ok(v)
+    };
     Ok(match name {
         "input" => OpKind::Input,
         "weight" => OpKind::Weight,
         "conv_bias" => OpKind::ConvBias {
-            stride: j.get("stride")?.as_usize()?,
+            stride: dim_attr("stride")?,
             pad: pad_parse(j.get("pad")?.as_str()?)?,
             act: act_parse(j.get("act")?.as_str()?)?,
         },
         "conv2d" => OpKind::Conv2d {
-            stride: j.get("stride")?.as_usize()?,
+            stride: dim_attr("stride")?,
             pad: pad_parse(j.get("pad")?.as_str()?)?,
             act: act_parse(j.get("act")?.as_str()?)?,
         },
@@ -128,37 +204,68 @@ pub fn op_from_json(j: &Json) -> anyhow::Result<OpKind> {
         "linear" => OpKind::Linear { act: act_parse(j.get("act")?.as_str()?)? },
         "add" => OpKind::Add,
         "mul" => OpKind::Mul,
-        "addn" => OpKind::AddN { n: j.get("n")?.as_usize()? },
+        "addn" => {
+            // n == 0 would make shape inference index an empty input list.
+            let n = j.get("n")?.as_usize()?;
+            anyhow::ensure!(
+                (1..=MAX_NODE_INPUTS).contains(&n),
+                "addn: n = {} outside 1..={}",
+                n,
+                MAX_NODE_INPUTS
+            );
+            OpKind::AddN { n }
+        }
         "relu" => OpKind::Relu,
         "gelu" => OpKind::Gelu,
         "sigmoid" => OpKind::Sigmoid,
         "tanh" => OpKind::Tanh,
         "batchnorm" => OpKind::BatchNorm,
         "maxpool" => OpKind::MaxPool {
-            k: j.get("k")?.as_usize()?,
-            stride: j.get("stride")?.as_usize()?,
+            k: dim_attr("k")?,
+            stride: dim_attr("stride")?,
             pad: pad_parse(j.get("pad")?.as_str()?)?,
         },
         "avgpool" => OpKind::AvgPool {
-            k: j.get("k")?.as_usize()?,
-            stride: j.get("stride")?.as_usize()?,
+            k: dim_attr("k")?,
+            stride: dim_attr("stride")?,
             pad: pad_parse(j.get("pad")?.as_str()?)?,
         },
-        "concat" => OpKind::Concat { axis: j.get("axis")?.as_usize()? },
-        "split" => OpKind::Split {
-            axis: j.get("axis")?.as_usize()?,
-            parts: j.get("parts")?.as_usize()?,
-        },
-        "reshape" => OpKind::Reshape { shape: j.get("shape")?.usize_array()? },
-        "transpose" => OpKind::Transpose { perm: j.get("perm")?.usize_array()? },
-        "softmax" => OpKind::Softmax { axis: j.get("axis")?.as_usize()? },
+        "concat" => OpKind::Concat { axis: axis_attr("axis")? },
+        "split" => {
+            let parts = j.get("parts")?.as_usize()?;
+            anyhow::ensure!(
+                (1..=MAX_NODE_OUTS).contains(&parts),
+                "split: parts = {} outside 1..={}",
+                parts,
+                MAX_NODE_OUTS
+            );
+            OpKind::Split { axis: axis_attr("axis")?, parts }
+        }
+        "reshape" => {
+            let shape = j.get("shape")?.usize_array()?;
+            // Checked product: shape inference multiplies these dims, which
+            // must not overflow (debug) or wrap (release).
+            checked_numel(&shape, "reshape target")?;
+            OpKind::Reshape { shape }
+        }
+        "transpose" => {
+            let perm = j.get("perm")?.usize_array()?;
+            anyhow::ensure!(
+                perm.len() <= MAX_RANK,
+                "transpose: perm rank {} too large",
+                perm.len()
+            );
+            OpKind::Transpose { perm }
+        }
+        "softmax" => OpKind::Softmax { axis: axis_attr("axis")? },
         "layernorm" => OpKind::LayerNorm,
         "fused_add_layernorm" => OpKind::FusedAddLayerNorm,
-        "scale" => OpKind::Scale { factor: j.get("factor")?.as_f64()? as f32 },
-        "enlarge" => OpKind::Enlarge {
-            kh: j.get("kh")?.as_usize()?,
-            kw: j.get("kw")?.as_usize()?,
-        },
+        "scale" => {
+            let factor = j.get("factor")?.as_f64()?;
+            anyhow::ensure!(factor.is_finite(), "scale: factor must be finite");
+            OpKind::Scale { factor: factor as f32 }
+        }
+        "enlarge" => OpKind::Enlarge { kh: dim_attr("kh")?, kw: dim_attr("kw")? },
         "identity" => OpKind::Identity,
         _ => anyhow::bail!("unknown op '{}'", name),
     })
@@ -183,7 +290,11 @@ fn desc_from_json(j: &Json) -> anyhow::Result<TensorDesc> {
         "i32" => DType::I32,
         d => anyhow::bail!("unknown dtype '{}'", d),
     };
-    Ok(TensorDesc { shape: j.get("shape")?.usize_array()?, dtype })
+    let shape = j.get("shape")?.usize_array()?;
+    // Rank/element bounds before the descriptor can reach shape inference
+    // or `n_elems` (whose products are unchecked on the trusted hot path).
+    checked_numel(&shape, "tensor descriptor")?;
+    Ok(TensorDesc { shape, dtype })
 }
 
 // ---------------------------------------------------------------------------
@@ -202,7 +313,9 @@ pub fn export(g: &Graph, name: &str) -> anyhow::Result<Json> {
                 Json::Arr(
                     n.inputs
                         .iter()
-                        .map(|p| Json::Arr(vec![Json::Num(p.node.0 as f64), Json::Num(p.port as f64)]))
+                        .map(|p| {
+                            Json::Arr(vec![Json::Num(p.node.0 as f64), Json::Num(p.port as f64)])
+                        })
                         .collect(),
                 ),
             );
@@ -220,30 +333,51 @@ pub fn export(g: &Graph, name: &str) -> anyhow::Result<Json> {
 
 pub fn import(m: &Json) -> anyhow::Result<Graph> {
     let mut g = Graph::new();
-    for (i, nj) in m.get("nodes")?.as_arr()?.iter().enumerate() {
+    let nodes = m.get("nodes")?.as_arr()?;
+    anyhow::ensure!(
+        nodes.len() <= MAX_NODES,
+        "model declares {} nodes (limit {})",
+        nodes.len(),
+        MAX_NODES
+    );
+    for (i, nj) in nodes.iter().enumerate() {
         let op = op_from_json(nj)?;
-        let outs: Vec<TensorDesc> = nj
-            .get("outs")?
-            .as_arr()?
-            .iter()
-            .map(desc_from_json)
-            .collect::<anyhow::Result<_>>()?;
+        let outs_j = nj.get("outs")?.as_arr()?;
+        anyhow::ensure!(
+            outs_j.len() <= MAX_NODE_OUTS,
+            "node {}: {} output descriptors (limit {})",
+            i,
+            outs_j.len(),
+            MAX_NODE_OUTS
+        );
+        let outs: Vec<TensorDesc> =
+            outs_j.iter().map(desc_from_json).collect::<anyhow::Result<_>>()?;
         match op {
             OpKind::Input | OpKind::Weight => {
                 anyhow::ensure!(outs.len() == 1, "source node {} needs one descriptor", i);
                 g.add_source(op, outs[0].clone());
             }
             _ => {
-                let inputs: Vec<PortRef> = nj
-                    .get("inputs")?
-                    .as_arr()?
+                let inputs_j = nj.get("inputs")?.as_arr()?;
+                anyhow::ensure!(
+                    inputs_j.len() <= MAX_NODE_INPUTS,
+                    "node {}: fan-in {} (limit {})",
+                    i,
+                    inputs_j.len(),
+                    MAX_NODE_INPUTS
+                );
+                let inputs: Vec<PortRef> = inputs_j
                     .iter()
                     .map(|p| {
                         let pair = p.as_arr()?;
                         anyhow::ensure!(pair.len() == 2, "input ref must be [node, port]");
                         let node = pair[0].as_usize()?;
                         anyhow::ensure!(node < i, "forward reference in node {}", i);
-                        Ok(PortRef { node: NodeId(node as u32), port: pair[1].as_usize()? as u16 })
+                        let port = pair[1].as_usize()?;
+                        // `port` is stored as u16; an out-of-range value
+                        // must error, not truncate onto a valid port.
+                        anyhow::ensure!(port <= u16::MAX as usize, "port {} out of range", port);
+                        Ok(PortRef { node: NodeId(node as u32), port: port as u16 })
                     })
                     .collect::<anyhow::Result<_>>()?;
                 let id = g.add(op, &inputs)?;

@@ -40,6 +40,8 @@
 //!   and exact incremental deltas (noise included).
 //! * [`search`] — the deterministic baselines on the parallel memoised
 //!   engine, plus the persistent cross-run [`search::SearchCache`].
+//! * [`serve`] — the `rlflow serve` daemon: optimisation-as-a-service
+//!   with a disk-backed cache, request coalescing and admission control.
 //! * [`env`] — the Gym-style environment, incremental match maintenance
 //!   and the vectorised [`env::EnvPool`].
 //! * [`runtime`] — the [`runtime::Backend`] execution seam (pure-Rust host
@@ -63,6 +65,7 @@ pub mod graph;
 pub mod interp;
 pub mod runtime;
 pub mod search;
+pub mod serve;
 pub mod util;
 pub mod wm;
 pub mod xfer;

@@ -8,6 +8,8 @@
 //! rlflow experiment <table1|table2|table3|fig5..fig10|all> [--runs N] [--rules rules.json]
 //! rlflow synth --out rules.json [--alphabet groups] [--ops N] [--inputs N] [--seed S] [--tier T]
 //! rlflow generate-rules [--verify]
+//! rlflow serve --addr 127.0.0.1:7777 [--cache-dir DIR] [--workers N] [--queue N] [--timeout-ms T]
+//! rlflow request [--addr A] --graph bert [--method taso|greedy] | --stats | --ping | --shutdown
 //! ```
 //!
 //! Config resolution: defaults -> `--config file.json` -> `-s key=value`.
@@ -96,6 +98,8 @@ fn main() -> anyhow::Result<()> {
         "experiment" => cmd_experiment(&args),
         "synth" => cmd_synth(&args),
         "generate-rules" => cmd_generate_rules(&args),
+        "serve" => cmd_serve(&args),
+        "request" => cmd_request(&args),
         _ => {
             println!("{}", HELP);
             Ok(())
@@ -114,6 +118,9 @@ USAGE:
   rlflow experiment <table1|table2|table3|fig5|...|fig10|all> [--runs N] [--backend B] [--envs B] [--smoke] [--out dir] [--fresh-cache] [--rules rules.json]
   rlflow synth --out <rules.json> [--alphabet <groups|all>] [--inputs N] [--ops N] [--seed S] [--tier <always-safe|shape-preserving|all>] [--max-rules N]
   rlflow generate-rules [--verify] [--inputs N] [--ops N]
+  rlflow serve [--addr 127.0.0.1:7777] [--cache-dir DIR] [--workers N] [--queue N] [--timeout-ms T] [--threads N] [--snapshot-every N]
+  rlflow request [--addr A] (--graph <name> | --import model.json) [--method greedy|taso] [--timeout-ms T] [--export out.json]
+  rlflow request [--addr A] --stats | --ping | --shutdown
 
 RULE SYNTHESIS:
   `rlflow synth` enumerates small graphs over the requested op alphabet
@@ -130,6 +137,17 @@ CACHING:
   transposition table persists across searches sharing a config.
   --fresh-cache starts from an empty cache instead; hit/miss/evict stats
   are printed after each command.
+
+SERVING:
+  `rlflow serve` runs a long-lived optimisation daemon on a newline-
+  delimited JSON protocol: request = graph + search config, response =
+  optimised graph + cost log + cache provenance (fresh|cache|coalesced).
+  With --cache-dir the search cache persists on disk (append-only log +
+  compacted snapshots) and warm restarts answer previously served
+  requests bit-identically. Concurrent identical requests coalesce into
+  one search; a full queue sheds load with a typed `overloaded` error.
+  `rlflow request` is the matching client (--stats/--ping/--shutdown for
+  control; shutdown drains in-flight work, snapshots and exits).
 
 BACKENDS:
   host   pure-Rust model execution — the full collect/WM/dream/PPO/eval
@@ -456,4 +474,161 @@ fn cmd_generate_rules(args: &Args) -> anyhow::Result<()> {
         }
     }
     Ok(())
+}
+
+const DEFAULT_SERVE_ADDR: &str = "127.0.0.1:7777";
+
+fn usize_flag(args: &Args, name: &str, default: usize) -> anyhow::Result<usize> {
+    match args.flags.get(name) {
+        Some(v) => v.parse().map_err(|e| anyhow::anyhow!("bad --{name} '{v}': {e}")),
+        None => Ok(default),
+    }
+}
+
+/// `rlflow serve`: run the optimisation daemon in the foreground until a
+/// `shutdown` control request drains it.
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    use rlflow::serve::ServerConfig;
+    let addr = args
+        .flags
+        .get("addr")
+        .cloned()
+        .unwrap_or_else(|| DEFAULT_SERVE_ADDR.to_string());
+    let mut cfg = ServerConfig::new(addr);
+    cfg.workers = usize_flag(args, "workers", cfg.workers)?;
+    cfg.queue_cap = usize_flag(args, "queue", cfg.queue_cap)?;
+    cfg.default_timeout_ms =
+        usize_flag(args, "timeout-ms", cfg.default_timeout_ms as usize)? as u64;
+    cfg.core.threads = usize_flag(args, "threads", cfg.core.threads)?;
+    cfg.core.snapshot_every = usize_flag(args, "snapshot-every", cfg.core.snapshot_every)?;
+    cfg.core.max_results = usize_flag(args, "max-results", cfg.core.max_results)?;
+    if let Some(dir) = args.flags.get("cache-dir") {
+        cfg.core.cache_dir = Some(std::path::PathBuf::from(dir));
+    }
+    rlflow::serve::run(cfg)
+}
+
+/// `rlflow request`: one-shot client for the daemon — submit a graph for
+/// optimisation, or send a `stats`/`ping`/`shutdown` control request.
+fn cmd_request(args: &Args) -> anyhow::Result<()> {
+    use rlflow::serve::{client, encode_control, encode_optimize, Method, OptimizeRequest, Response};
+    let addr = args
+        .flags
+        .get("addr")
+        .cloned()
+        .unwrap_or_else(|| DEFAULT_SERVE_ADDR.to_string());
+    let flag = |name: &str| args.flags.get(name).map(|v| v == "true").unwrap_or(false);
+
+    if flag("ping") || flag("stats") || flag("shutdown") {
+        let kind = if flag("ping") {
+            "ping"
+        } else if flag("stats") {
+            "stats"
+        } else {
+            "shutdown"
+        };
+        let resp = client::roundtrip(&addr, &encode_control(kind), client::DEFAULT_READ_TIMEOUT)?;
+        return match resp {
+            Response::Pong => {
+                println!("pong");
+                Ok(())
+            }
+            Response::Stats(stats) => {
+                println!("{}", stats.to_string_pretty());
+                Ok(())
+            }
+            Response::Ok(detail) => {
+                println!("ok: {detail}");
+                Ok(())
+            }
+            Response::Error { code, message } => {
+                anyhow::bail!("server error ({}): {message}", code.as_str())
+            }
+            Response::Result { .. } => anyhow::bail!("unexpected result for a control request"),
+        };
+    }
+
+    // An optimise request: a zoo graph by name or an imported model file.
+    let (graph, name) = if let Some(path) = args.flags.get("import") {
+        let graph = rlflow::graph::onnx::load(path)?;
+        let stem = std::path::Path::new(path)
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "imported".to_string());
+        (graph, stem)
+    } else {
+        let name = args
+            .flags
+            .get("graph")
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!(
+                "request needs --graph <zoo name>, --import <model.json>, or a control flag \
+                 (--stats/--ping/--shutdown)"
+            ))?;
+        (rlflow::zoo::by_name(&name)?, name)
+    };
+    let method = match args.flags.get("method").map(String::as_str).unwrap_or("taso") {
+        "greedy" => Method::Greedy { max_steps: usize_flag(args, "max-steps", 100)? },
+        "taso" => {
+            let alpha = match args.flags.get("alpha") {
+                Some(v) => v.parse().map_err(|e| anyhow::anyhow!("bad --alpha '{v}': {e}"))?,
+                None => 1.05,
+            };
+            Method::Taso {
+                alpha,
+                beam: usize_flag(args, "beam", 4)?,
+                depth: usize_flag(args, "depth", 80)?,
+            }
+        }
+        m => anyhow::bail!("unknown method '{m}' (greedy|taso)"),
+    };
+    let timeout_ms = match args.flags.get("timeout-ms") {
+        Some(v) => Some(
+            v.parse::<u64>()
+                .map_err(|e| anyhow::anyhow!("bad --timeout-ms '{v}': {e}"))?,
+        ),
+        None => None,
+    };
+    let req = OptimizeRequest {
+        graph,
+        graph_name: name.clone(),
+        method,
+        cost_noise: 0.0,
+        noise_seed: 0,
+        timeout_ms,
+    };
+    // Give the daemon's own budget room to produce its typed `timeout`
+    // response before the client-side read deadline fires.
+    let read_timeout = match timeout_ms {
+        Some(t) => std::time::Duration::from_millis(t.saturating_add(30_000)),
+        None => client::DEFAULT_READ_TIMEOUT,
+    };
+    let resp = client::roundtrip(&addr, &encode_optimize(&req)?, read_timeout)?;
+    match resp {
+        Response::Result { payload, provenance, elapsed_s } => {
+            println!("provenance: {}", provenance.as_str());
+            println!(
+                "{name}: {:.3} ms -> {:.3} ms ({:.1}% better) in {:.2}s server-side, {} graphs explored",
+                payload.get("initial_ms")?.as_f64()?,
+                payload.get("final_ms")?.as_f64()?,
+                payload.get("improvement_pct")?.as_f64()?,
+                elapsed_s,
+                payload.get("graphs_explored")?.as_usize()?,
+            );
+            for step in payload.get("steps")?.as_arr()? {
+                let pair = step.as_arr()?;
+                anyhow::ensure!(pair.len() == 2, "malformed step in response");
+                println!("  applied {:<22} -> {:.3} ms", pair[0].as_str()?, pair[1].as_f64()?);
+            }
+            if let Some(path) = args.flags.get("export") {
+                std::fs::write(path, payload.get("graph")?.to_string_pretty())?;
+                println!("exported optimised graph to {path}");
+            }
+            Ok(())
+        }
+        Response::Error { code, message } => {
+            anyhow::bail!("server error ({}): {message}", code.as_str())
+        }
+        other => anyhow::bail!("unexpected response: {other:?}"),
+    }
 }

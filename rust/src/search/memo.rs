@@ -161,8 +161,16 @@ impl SearchCache {
     /// graph. On a hit the stored final graph and log are returned with
     /// `from_cache` set and `elapsed_s` re-stamped to the lookup time.
     pub fn lookup(&self, fp: u64, root: &Graph) -> Option<(Graph, SearchLog)> {
+        self.lookup_hashed(fp, canonical_hash(root))
+    }
+
+    /// [`SearchCache::lookup`] for callers that already hold the root's
+    /// canonical hash (the serve daemon keys requests, coalescing and disk
+    /// persistence by `(fingerprint, root hash)` and never needs the root
+    /// graph itself).
+    pub fn lookup_hashed(&self, fp: u64, root_hash: u64) -> Option<(Graph, SearchLog)> {
         let t0 = Instant::now();
-        let key = (fp, canonical_hash(root));
+        let key = (fp, root_hash);
         let mut guard = self.inner.write().expect("search cache poisoned");
         guard.tick += 1;
         let tick = guard.tick;
@@ -187,7 +195,14 @@ impl SearchCache {
     /// Memoise a finished search (`fp` on `root` produced `graph`/`log`).
     /// Evicts the least-recently-used result past the capacity bound.
     pub fn store(&self, fp: u64, root: &Graph, graph: &Graph, log: &SearchLog) {
-        let key = (fp, canonical_hash(root));
+        self.store_hashed(fp, canonical_hash(root), graph, log)
+    }
+
+    /// [`SearchCache::store`] keyed by a pre-computed root hash — the
+    /// persistence replay path: entries reloaded from disk carry the root's
+    /// hash, not the root graph. Counts neither a hit nor a miss.
+    pub fn store_hashed(&self, fp: u64, root_hash: u64, graph: &Graph, log: &SearchLog) {
+        let key = (fp, root_hash);
         let mut guard = self.inner.write().expect("search cache poisoned");
         guard.tick += 1;
         let tick = guard.tick;
@@ -204,6 +219,22 @@ impl SearchCache {
             inner.results.remove(&lru);
             inner.evictions += 1;
         }
+    }
+
+    /// Clone out every memoised result as `(fingerprint, root hash, graph,
+    /// log)`, sorted by key so a snapshot of a fixed cache state always
+    /// serialises to identical bytes. This is the compaction source for the
+    /// serve daemon's disk persistence; logs come back with `from_cache`
+    /// cleared, exactly as [`SearchCache::store_hashed`] will re-store them.
+    pub fn snapshot_results(&self) -> Vec<(u64, u64, Graph, SearchLog)> {
+        let inner = self.inner.read().expect("search cache poisoned");
+        let mut out: Vec<(u64, u64, Graph, SearchLog)> = inner
+            .results
+            .iter()
+            .map(|(&(fp, root), r)| (fp, root, r.graph.clone(), r.log.clone()))
+            .collect();
+        out.sort_by_key(|&(fp, root, _, _)| (fp, root));
+        out
     }
 
     /// The frozen cost map memoised for `fp` (empty for a cold fingerprint)
@@ -310,6 +341,41 @@ mod tests {
         assert_ne!(fp("greedy", &[60], &noisy), fp("greedy", &[60], &other_seed));
         // Stable across calls.
         assert_eq!(fp("taso", &[4, 80], &cost), fp("taso", &[4, 80], &cost));
+    }
+
+    #[test]
+    fn hashed_api_matches_graph_api() {
+        let cache = SearchCache::new();
+        let mut b = crate::graph::GraphBuilder::new();
+        let x = b.input(&[2, 4]);
+        let _ = b.relu(x).unwrap();
+        let g = b.finish();
+        let h = crate::graph::canonical_hash(&g);
+        let log = SearchLog {
+            steps: vec![("r".into(), 1.5)],
+            initial_ms: 2.0,
+            final_ms: 1.5,
+            elapsed_s: 0.1,
+            graphs_explored: 3,
+            table_size: 4,
+            memo_hits: 1,
+            threads: 2,
+            from_cache: false,
+        };
+        cache.store_hashed(7, h, &g, &log);
+        // The graph-keyed lookup finds the hash-keyed store and vice versa.
+        let (g1, l1) = cache.lookup(7, &g).expect("hash-keyed store must hit");
+        assert!(l1.from_cache);
+        assert_eq!(crate::graph::canonical_hash(&g1), h);
+        assert_eq!(l1.steps, log.steps);
+        let (_, l2) = cache.lookup_hashed(7, h).expect("graph hash must hit");
+        assert_eq!(l2.final_ms.to_bits(), log.final_ms.to_bits());
+        // Snapshot comes back sorted, with from_cache cleared.
+        cache.store_hashed(3, h, &g, &log);
+        let snap = cache.snapshot_results();
+        assert_eq!(snap.len(), 2);
+        assert!(snap[0].0 < snap[1].0, "snapshot must be key-sorted");
+        assert!(snap.iter().all(|(_, _, _, l)| !l.from_cache));
     }
 
     #[test]

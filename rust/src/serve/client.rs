@@ -1,0 +1,43 @@
+//! Minimal blocking client for the serve protocol — the engine behind
+//! `rlflow request`, the CI smoke job and the end-to-end tests.
+//!
+//! One connection per call: connect, write one request line, read one
+//! response line, decode. The daemon supports pipelined connections, but
+//! the CLI's needs are strictly request/response and a fresh connection
+//! keeps every invocation independent.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use super::protocol::{Response, MAX_LINE_BYTES};
+
+/// Default client-side read timeout (generous: a cold TASO search on the
+/// largest zoo graph finishes well inside this).
+pub const DEFAULT_READ_TIMEOUT: Duration = Duration::from_secs(900);
+
+/// Send one request line to `addr` and decode the single response line.
+/// `read_timeout` bounds the wait for the daemon's answer (the daemon
+/// enforces its own per-request budget too — see the protocol's
+/// `timeout` error).
+pub fn roundtrip(addr: &str, line: &str, read_timeout: Duration) -> anyhow::Result<Response> {
+    let mut stream = TcpStream::connect(addr)
+        .map_err(|e| anyhow::anyhow!("cannot connect to rlflow serve at {addr}: {e}"))?;
+    stream.set_read_timeout(Some(read_timeout))?;
+    stream.write_all(line.as_bytes())?;
+    stream.write_all(b"\n")?;
+    stream.flush()?;
+
+    let mut reader = BufReader::new(stream).take(MAX_LINE_BYTES as u64 + 1);
+    let mut resp = String::new();
+    let n = reader
+        .read_line(&mut resp)
+        .map_err(|e| anyhow::anyhow!("reading response from {addr}: {e}"))?;
+    anyhow::ensure!(n > 0, "server at {addr} closed the connection without responding");
+    anyhow::ensure!(
+        resp.len() <= MAX_LINE_BYTES,
+        "response line exceeds {} bytes",
+        MAX_LINE_BYTES
+    );
+    Response::decode(resp.trim())
+}

@@ -1,0 +1,48 @@
+//! `rlflow serve` — optimisation-as-a-service on the persistent
+//! [`SearchCache`](crate::search::SearchCache).
+//!
+//! A long-running, dependency-free daemon (`std::net` + threads, no
+//! async runtime) that turns search results into the cacheable commodity
+//! the ROADMAP's production north-star needs: one warm cache serving
+//! many callers, surviving restarts, with explicit load shedding instead
+//! of collapse under overload.
+//!
+//! ```text
+//!          ┌────────────────────────── rlflow serve ───────────────────────────┐
+//! client ──┤ TCP listener → line framing → bounded queue → worker pool         │
+//!  (NDJSON)│                                  │                │               │
+//!          │             stats/ping inline ◄──┘        ServeCore.optimize      │
+//!          │                                    (coalescing → SearchCache      │
+//!          │                                       → append log / snapshot)    │
+//!          └────────────────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! * [`protocol`] — the newline-delimited JSON wire format and its
+//!   determinism contract (the `result` payload is byte-identical for a
+//!   given request, whatever its provenance).
+//! * [`service`] — [`ServeCore`]: coalescing, provenance, counters;
+//!   fully testable without sockets.
+//! * [`persist`] — append-only result log + compacted snapshots under
+//!   `--cache-dir`; replay makes warm restarts bit-identical.
+//! * [`queue`] — the bounded admission queue (typed `overloaded`, never
+//!   a hang).
+//! * [`server`] — listener, connection handling, worker pool, graceful
+//!   drain.
+//! * [`client`] — the one-shot client behind `rlflow request`.
+
+pub mod client;
+pub mod persist;
+pub mod protocol;
+pub mod queue;
+pub mod server;
+pub mod service;
+pub mod stats;
+
+pub use protocol::{
+    decode_request, encode_control, encode_optimize, result_payload, ErrorCode, Method,
+    OptimizeRequest, Provenance, Request, Response,
+};
+pub use queue::{BoundedQueue, PushError};
+pub use server::{run, spawn, Handle, ServerConfig};
+pub use service::{Outcome, ServeConfig, ServeCore, ServeError, Served};
+pub use stats::{LatencyAgg, ServeStats};

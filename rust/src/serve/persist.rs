@@ -1,0 +1,411 @@
+//! Disk persistence for the daemon's [`SearchCache`](crate::search::SearchCache):
+//! an append-only result log plus a periodically compacted snapshot.
+//!
+//! # Layout (`--cache-dir`)
+//!
+//! ```text
+//! cache-dir/
+//!   results.log     one compact-JSON entry per line, appended per fresh search
+//!   snapshot.json   compacted full cache image, atomically replaced
+//! ```
+//!
+//! Every entry carries the memo key — `(config fingerprint, canonical
+//! root hash)`, both serialised as 16-hex-digit strings because a `u64`
+//! does not survive a JSON `f64` — plus the final graph (ONNX-style model
+//! JSON) and the memoised [`SearchLog`] fields. Startup replays the
+//! snapshot first, then the log (log entries are newer and overwrite);
+//! every [`Persister::snapshot_every`]-th append compacts the current
+//! cache image into `snapshot.json` (written to a temp file, then
+//! renamed) and truncates the log.
+//!
+//! # Crash behaviour
+//!
+//! * A torn final log line (crash mid-append) is skipped with a warning;
+//!   every complete line still replays.
+//! * A crash between snapshot rename and log truncation replays log
+//!   entries on top of the snapshot — re-storing an entry is idempotent.
+//! * `elapsed_s` is deliberately *not* persisted (it is per-serving wall
+//!   clock, not memoised state); replayed logs carry `elapsed_s = 0` and
+//!   `from_cache = false`, exactly like
+//!   [`SearchCache::store_hashed`](crate::search::SearchCache::store_hashed)
+//!   re-stores them — so a warm-restarted daemon's `result` payloads are
+//!   byte-identical to the pre-restart process (pinned in
+//!   `tests/serve_core.rs`).
+//!
+//! The snapshot header additionally persists lifetime hit/miss/evict
+//! counters so the `stats` surface is cumulative across restarts.
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader, Write};
+use std::path::{Path, PathBuf};
+
+use crate::graph::{onnx, Graph};
+use crate::search::{CacheStats, SearchLog};
+use crate::util::json::{parse, Json};
+
+/// File name of the append-only result log inside the cache dir.
+pub const LOG_FILE: &str = "results.log";
+/// File name of the compacted snapshot inside the cache dir.
+pub const SNAPSHOT_FILE: &str = "snapshot.json";
+/// Format tag written into (and required of) every snapshot.
+pub const SNAPSHOT_FORMAT: &str = "rlflow-servecache";
+/// Current snapshot format version.
+pub const SNAPSHOT_VERSION: usize = 1;
+
+/// One persisted memo entry: the `(fingerprint, root hash)` key plus the
+/// memoised result.
+#[derive(Debug, Clone)]
+pub struct CacheEntry {
+    /// Search-config fingerprint ([`crate::search::memo::config_fingerprint`]).
+    pub fp: u64,
+    /// Canonical hash of the root graph the search started from.
+    pub root: u64,
+    /// The optimised graph the search produced.
+    pub graph: Graph,
+    /// The memoised search log (wall clock zeroed, see module docs).
+    pub log: SearchLog,
+}
+
+fn hex(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+fn from_hex(s: &str) -> anyhow::Result<u64> {
+    anyhow::ensure!(s.len() == 16, "expected 16 hex digits, got '{s}'");
+    u64::from_str_radix(s, 16).map_err(|e| anyhow::anyhow!("bad hex '{s}': {e}"))
+}
+
+fn log_to_json(log: &SearchLog) -> Json {
+    let mut j = Json::obj();
+    j.set("initial_ms", Json::Num(log.initial_ms));
+    j.set("final_ms", Json::Num(log.final_ms));
+    j.set("graphs_explored", Json::Num(log.graphs_explored as f64));
+    j.set("table_size", Json::Num(log.table_size as f64));
+    j.set("memo_hits", Json::Num(log.memo_hits as f64));
+    j.set("threads", Json::Num(log.threads as f64));
+    j.set(
+        "steps",
+        Json::Arr(
+            log.steps
+                .iter()
+                .map(|(rule, ms)| Json::Arr(vec![Json::Str(rule.clone()), Json::Num(*ms)]))
+                .collect(),
+        ),
+    );
+    j
+}
+
+fn log_from_json(j: &Json) -> anyhow::Result<SearchLog> {
+    let steps = j
+        .get("steps")?
+        .as_arr()?
+        .iter()
+        .map(|s| {
+            let pair = s.as_arr()?;
+            anyhow::ensure!(pair.len() == 2, "step must be [rule, ms]");
+            Ok((pair[0].as_str()?.to_string(), pair[1].as_f64()?))
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    Ok(SearchLog {
+        steps,
+        initial_ms: j.get("initial_ms")?.as_f64()?,
+        final_ms: j.get("final_ms")?.as_f64()?,
+        elapsed_s: 0.0,
+        graphs_explored: j.get("graphs_explored")?.as_usize()?,
+        table_size: j.get("table_size")?.as_usize()?,
+        memo_hits: j.get("memo_hits")?.as_usize()?,
+        threads: j.get("threads")?.as_usize()?,
+        from_cache: false,
+    })
+}
+
+/// Serialise one entry as a (single-line when compact-encoded) JSON object.
+pub fn entry_to_json(e: &CacheEntry) -> anyhow::Result<Json> {
+    let mut j = Json::obj();
+    j.set("fp", Json::Str(hex(e.fp)));
+    j.set("root", Json::Str(hex(e.root)));
+    j.set("graph", onnx::export(&e.graph, "cached")?);
+    j.set("log", log_to_json(&e.log));
+    Ok(j)
+}
+
+/// Parse one persisted entry (the graph passes full [`onnx::import`]
+/// validation — a corrupted entry is an `Err`, never a bad cache hit).
+pub fn entry_from_json(j: &Json) -> anyhow::Result<CacheEntry> {
+    Ok(CacheEntry {
+        fp: from_hex(j.get("fp")?.as_str()?)?,
+        root: from_hex(j.get("root")?.as_str()?)?,
+        graph: onnx::import(j.get("graph")?)?,
+        log: log_from_json(j.get("log")?)?,
+    })
+}
+
+/// What [`Persister::open`] recovered from disk.
+pub struct Replay {
+    /// Entries to re-store (snapshot first, then log — newest last).
+    pub entries: Vec<CacheEntry>,
+    /// Lifetime cache counters persisted by the previous process
+    /// (`result_hits`, `result_misses`, `evictions`; sizes are zero).
+    pub prior: CacheStats,
+    /// Complete-but-unparseable log lines that were skipped.
+    pub skipped_lines: usize,
+}
+
+/// Owner of a cache dir's log + snapshot files (see module docs). One
+/// instance per daemon; callers serialise access behind a `Mutex`.
+pub struct Persister {
+    dir: PathBuf,
+    log: File,
+    appends_since_snapshot: usize,
+    /// Appends between automatic compactions.
+    pub snapshot_every: usize,
+}
+
+impl Persister {
+    /// Open (creating if needed) a cache dir, replaying whatever previous
+    /// processes persisted. A missing dir or empty files yield an empty
+    /// [`Replay`]; a corrupt *snapshot* is a hard error (it is written
+    /// atomically, so corruption means real trouble), while corrupt
+    /// trailing *log* lines are skipped and counted (torn final append).
+    pub fn open(dir: &Path, snapshot_every: usize) -> anyhow::Result<(Persister, Replay)> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow::anyhow!("cannot create cache dir {}: {e}", dir.display()))?;
+        let mut entries = Vec::new();
+        let mut prior = CacheStats::default();
+
+        let snap_path = dir.join(SNAPSHOT_FILE);
+        if snap_path.exists() {
+            let text = std::fs::read_to_string(&snap_path)?;
+            let j = parse(&text)
+                .map_err(|e| anyhow::anyhow!("corrupt snapshot {}: {e}", snap_path.display()))?;
+            let format = j.get("format")?.as_str()?;
+            anyhow::ensure!(
+                format == SNAPSHOT_FORMAT,
+                "{} is not a serve cache snapshot (format '{format}')",
+                snap_path.display()
+            );
+            let version = j.get("version")?.as_usize()?;
+            anyhow::ensure!(
+                version == SNAPSHOT_VERSION,
+                "snapshot version {version} unsupported (expected {SNAPSHOT_VERSION})"
+            );
+            let st = j.get("stats")?;
+            prior.result_hits = st.get("result_hits")?.as_usize()? as u64;
+            prior.result_misses = st.get("result_misses")?.as_usize()? as u64;
+            prior.evictions = st.get("evictions")?.as_usize()? as u64;
+            for ej in j.get("entries")?.as_arr()? {
+                entries.push(entry_from_json(ej).map_err(|e| {
+                    anyhow::anyhow!("corrupt snapshot entry in {}: {e}", snap_path.display())
+                })?);
+            }
+        }
+
+        let log_path = dir.join(LOG_FILE);
+        let mut skipped_lines = 0usize;
+        if log_path.exists() {
+            let reader = BufReader::new(File::open(&log_path)?);
+            for line in reader.lines() {
+                let line = line?;
+                if line.trim().is_empty() {
+                    continue;
+                }
+                match parse(&line).and_then(|j| entry_from_json(&j)) {
+                    Ok(e) => entries.push(e),
+                    Err(err) => {
+                        skipped_lines += 1;
+                        eprintln!("serve: skipping corrupt cache log line: {err}");
+                    }
+                }
+            }
+        }
+
+        let log = OpenOptions::new().append(true).create(true).open(&log_path)?;
+        Ok((
+            Persister {
+                dir: dir.to_path_buf(),
+                log,
+                appends_since_snapshot: 0,
+                snapshot_every: snapshot_every.max(1),
+            },
+            Replay { entries, prior, skipped_lines },
+        ))
+    }
+
+    /// Append one fresh result to the log (flushed before returning, so a
+    /// crash after a response was sent never loses its entry). Returns
+    /// `true` when a compaction is due — the caller then invokes
+    /// [`Persister::snapshot`] with the full current cache image.
+    pub fn append(&mut self, e: &CacheEntry) -> anyhow::Result<bool> {
+        let line = entry_to_json(e)?.to_string_compact();
+        self.log.write_all(line.as_bytes())?;
+        self.log.write_all(b"\n")?;
+        self.log.flush()?;
+        self.appends_since_snapshot += 1;
+        Ok(self.appends_since_snapshot >= self.snapshot_every)
+    }
+
+    /// Write a compacted snapshot of `entries` (plus lifetime `stats`
+    /// counters) atomically — temp file, then rename — and truncate the
+    /// log it subsumes. `entries` must be the cache's full current image
+    /// in deterministic order
+    /// ([`SearchCache::snapshot_results`](crate::search::SearchCache::snapshot_results)):
+    /// a fixed cache state always snapshots to identical bytes.
+    pub fn snapshot(&mut self, entries: &[CacheEntry], stats: &CacheStats) -> anyhow::Result<()> {
+        let mut st = Json::obj();
+        st.set("result_hits", Json::Num(stats.result_hits as f64));
+        st.set("result_misses", Json::Num(stats.result_misses as f64));
+        st.set("evictions", Json::Num(stats.evictions as f64));
+        let mut j = Json::obj();
+        j.set("format", Json::Str(SNAPSHOT_FORMAT.into()));
+        j.set("version", Json::Num(SNAPSHOT_VERSION as f64));
+        j.set("stats", st);
+        j.set(
+            "entries",
+            Json::Arr(entries.iter().map(entry_to_json).collect::<anyhow::Result<_>>()?),
+        );
+
+        let tmp = self.dir.join("snapshot.json.tmp");
+        let final_path = self.dir.join(SNAPSHOT_FILE);
+        {
+            let mut f = File::create(&tmp)?;
+            f.write_all(j.to_string_compact().as_bytes())?;
+            f.write_all(b"\n")?;
+            f.flush()?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, &final_path)?;
+        // The snapshot subsumes every logged entry: start the log over.
+        self.log = OpenOptions::new()
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(self.dir.join(LOG_FILE))?;
+        self.appends_since_snapshot = 0;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("rlflow-persist-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn sample_entry(fp: u64) -> CacheEntry {
+        let mut b = crate::graph::GraphBuilder::new();
+        let x = b.input(&[2, 4]);
+        let _ = b.relu(x).unwrap();
+        let g = b.finish();
+        let root = crate::graph::canonical_hash(&g);
+        CacheEntry {
+            fp,
+            root,
+            graph: g,
+            log: SearchLog {
+                steps: vec![("fuse".into(), 1.25)],
+                initial_ms: 2.0,
+                final_ms: 1.25,
+                elapsed_s: 0.0,
+                graphs_explored: 7,
+                table_size: 9,
+                memo_hits: 3,
+                threads: 4,
+                from_cache: false,
+            },
+        }
+    }
+
+    #[test]
+    fn entry_json_round_trips_keys_exactly() {
+        let e = sample_entry(0xDEAD_BEEF_0000_0001);
+        let j = entry_to_json(&e).unwrap();
+        let back = entry_from_json(&j).unwrap();
+        assert_eq!(back.fp, e.fp, "u64 keys must survive the hex encoding");
+        assert_eq!(back.root, e.root);
+        assert_eq!(
+            crate::graph::canonical_hash(&back.graph),
+            crate::graph::canonical_hash(&e.graph)
+        );
+        assert_eq!(back.log.steps, e.log.steps);
+        assert_eq!(back.log.final_ms.to_bits(), e.log.final_ms.to_bits());
+        // Re-encoding is byte-stable (deterministic persistence).
+        assert_eq!(
+            entry_to_json(&back).unwrap().to_string_compact(),
+            j.to_string_compact()
+        );
+    }
+
+    #[test]
+    fn log_and_snapshot_replay() {
+        let dir = tmpdir("replay");
+        {
+            let (mut p, replay) = Persister::open(&dir, 100).unwrap();
+            assert!(replay.entries.is_empty());
+            assert_eq!(replay.prior, CacheStats::default());
+            assert!(!p.append(&sample_entry(1)).unwrap());
+            assert!(!p.append(&sample_entry(2)).unwrap());
+        }
+        // Reopen: both logged entries replay, in append order.
+        {
+            let (mut p, replay) = Persister::open(&dir, 100).unwrap();
+            assert_eq!(replay.entries.len(), 2);
+            assert_eq!(replay.entries[0].fp, 1);
+            assert_eq!(replay.entries[1].fp, 2);
+            // Compact: snapshot carries the image + counters, log restarts.
+            let stats = CacheStats {
+                result_hits: 5,
+                result_misses: 3,
+                evictions: 1,
+                result_entries: 2,
+                cost_entries: 0,
+            };
+            p.snapshot(&replay.entries, &stats).unwrap();
+            assert!(!p.append(&sample_entry(3)).unwrap());
+        }
+        // Reopen again: snapshot entries first, then the fresh log entry;
+        // prior counters recovered.
+        let (_p, replay) = Persister::open(&dir, 100).unwrap();
+        assert_eq!(replay.entries.len(), 3);
+        assert_eq!(replay.entries[2].fp, 3);
+        assert_eq!(replay.prior.result_hits, 5);
+        assert_eq!(replay.prior.result_misses, 3);
+        assert_eq!(replay.prior.evictions, 1);
+        assert_eq!(replay.skipped_lines, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_log_line_is_skipped_not_fatal() {
+        let dir = tmpdir("torn");
+        {
+            let (mut p, _) = Persister::open(&dir, 100).unwrap();
+            let _ = p.append(&sample_entry(7)).unwrap();
+        }
+        // Simulate a crash mid-append: garbage trailing line.
+        {
+            let mut f = OpenOptions::new().append(true).open(dir.join(LOG_FILE)).unwrap();
+            f.write_all(b"{\"fp\":\"00000000000000").unwrap();
+        }
+        let (_p, replay) = Persister::open(&dir, 100).unwrap();
+        assert_eq!(replay.entries.len(), 1, "complete lines must still replay");
+        assert_eq!(replay.skipped_lines, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn append_cadence_requests_snapshot() {
+        let dir = tmpdir("cadence");
+        let (mut p, _) = Persister::open(&dir, 2).unwrap();
+        assert!(!p.append(&sample_entry(1)).unwrap());
+        assert!(p.append(&sample_entry(2)).unwrap(), "every 2nd append compacts");
+        p.snapshot(&[sample_entry(1), sample_entry(2)], &CacheStats::default()).unwrap();
+        // Cadence resets after a snapshot.
+        assert!(!p.append(&sample_entry(3)).unwrap());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

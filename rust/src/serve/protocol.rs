@@ -1,0 +1,548 @@
+//! Wire protocol of the `rlflow serve` daemon.
+//!
+//! Newline-delimited JSON: every request is one line, every response is
+//! one line (the writer escapes embedded newlines, so a compact-encoded
+//! [`Json`] document never spans lines). Graph payloads reuse the
+//! ONNX-style model format ([`crate::graph::onnx`]); framing reuses
+//! [`crate::util::json`] under serve-specific limits ([`MAX_LINE_BYTES`],
+//! [`MAX_WIRE_DEPTH`]) so an adversarial peer can neither exhaust the
+//! parser stack nor buffer unbounded input.
+//!
+//! # Requests
+//!
+//! ```text
+//! {"type":"optimize","graph":{<onnx model>},"method":"taso",
+//!  "alpha":1.05,"beam":4,"depth":80,
+//!  "cost_noise":0.0,"noise_seed":0,"timeout_ms":60000}
+//! {"type":"optimize","graph":{...},"method":"greedy","max_steps":100}
+//! {"type":"stats"}
+//! {"type":"ping"}
+//! {"type":"shutdown"}
+//! ```
+//!
+//! # Responses
+//!
+//! ```text
+//! {"type":"result","provenance":"fresh|cache|coalesced",
+//!  "elapsed_s":3.21,"result":{<deterministic payload>}}
+//! {"type":"stats","stats":{...}}
+//! {"type":"pong"}
+//! {"type":"ok","detail":"draining"}
+//! {"type":"error","code":"overloaded","message":"queue full (64 queued)"}
+//! ```
+//!
+//! # Determinism contract
+//!
+//! The `result` object is byte-deterministic for a given (config
+//! fingerprint, canonical root hash): object keys are `BTreeMap`-ordered,
+//! floats print shortest-round-trip, and every field it contains is either
+//! part of the memoised [`SearchLog`] or derived from it. Fields that
+//! legitimately vary between servings — wall-clock `elapsed_s` and the
+//! cache `provenance` — live in the envelope *next to* `result`, never
+//! inside it. This is what makes the warm-restart contract testable: the
+//! same request served fresh, from the in-memory memo, or from a
+//! restarted daemon's replayed disk cache compares equal on
+//! `result` bytes.
+
+use crate::graph::{onnx, Graph};
+use crate::search::SearchLog;
+use crate::util::json::{parse_with_limits, Json};
+
+/// Maximum bytes in one request or response line (8 MiB — the largest zoo
+/// graph exports to well under 1 MiB).
+pub const MAX_LINE_BYTES: usize = 8 << 20;
+
+/// Maximum JSON nesting depth accepted on the wire (graph models nest a
+/// constant handful of levels).
+pub const MAX_WIRE_DEPTH: usize = 32;
+
+/// Ceiling on client-requested timeouts (one day, in milliseconds).
+pub const MAX_TIMEOUT_MS: u64 = 86_400_000;
+
+/// Search algorithm + knobs requested for one optimisation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Method {
+    /// TF-style greedy descent with a step budget.
+    Greedy {
+        /// Maximum substitutions applied.
+        max_steps: usize,
+    },
+    /// TASO-style relaxed beam search.
+    Taso {
+        /// Relaxation factor (candidates below `alpha * best` survive).
+        alpha: f64,
+        /// Beam width.
+        beam: usize,
+        /// Maximum search depth.
+        depth: usize,
+    },
+}
+
+impl Method {
+    /// Wire name of the algorithm ("greedy" / "taso").
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Greedy { .. } => "greedy",
+            Method::Taso { .. } => "taso",
+        }
+    }
+}
+
+/// One graph-optimisation request: the payload of `{"type":"optimize"}`.
+#[derive(Debug, Clone)]
+pub struct OptimizeRequest {
+    /// The computation graph to optimise.
+    pub graph: Graph,
+    /// Display name echoed into the response payload's exported graph.
+    pub graph_name: String,
+    /// Search method and knobs.
+    pub method: Method,
+    /// Cost-model measurement-noise std-dev (0 = deterministic model).
+    pub cost_noise: f64,
+    /// Seed of the noise field (meaningful when `cost_noise > 0`).
+    pub noise_seed: u64,
+    /// Per-request wall-clock budget; `None` uses the server default.
+    pub timeout_ms: Option<u64>,
+}
+
+/// A decoded request line.
+#[derive(Debug, Clone)]
+pub enum Request {
+    /// Optimise a graph (boxed: the graph dominates the enum size).
+    Optimize(Box<OptimizeRequest>),
+    /// Return the daemon's counters.
+    Stats,
+    /// Liveness probe.
+    Ping,
+    /// Drain in-flight work and exit.
+    Shutdown,
+}
+
+/// Where a served result came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Provenance {
+    /// A live search ran for this request.
+    Fresh,
+    /// Answered from the persistent [`crate::search::SearchCache`]
+    /// (in-memory or replayed from disk).
+    Cache,
+    /// Attached to another request's in-flight search for the same
+    /// (fingerprint, root hash) and received its result.
+    Coalesced,
+}
+
+impl Provenance {
+    /// Wire string ("fresh" / "cache" / "coalesced").
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Provenance::Fresh => "fresh",
+            Provenance::Cache => "cache",
+            Provenance::Coalesced => "coalesced",
+        }
+    }
+
+    /// Parse a wire string back into a [`Provenance`].
+    pub fn parse(s: &str) -> anyhow::Result<Provenance> {
+        Ok(match s {
+            "fresh" => Provenance::Fresh,
+            "cache" => Provenance::Cache,
+            "coalesced" => Provenance::Coalesced,
+            other => anyhow::bail!("unknown provenance '{other}'"),
+        })
+    }
+}
+
+/// Typed error classes the daemon reports. Every failure mode maps to one
+/// of these — a client never sees a hang or a dropped connection for a
+/// condition the daemon detected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The bounded request queue is full: load was shed, try again later.
+    Overloaded,
+    /// The per-request wall-clock budget elapsed before a result was
+    /// ready. The underlying search keeps running and still warms the
+    /// cache — a retry of the same request typically hits.
+    Timeout,
+    /// The request line failed to parse or validate.
+    BadRequest,
+    /// The daemon is draining for shutdown and admits no new searches.
+    ShuttingDown,
+    /// The search failed for an unexpected internal reason.
+    Internal,
+}
+
+impl ErrorCode {
+    /// Wire string of the error class.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::Timeout => "timeout",
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::ShuttingDown => "shutting_down",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    /// Parse a wire string back into an [`ErrorCode`].
+    pub fn parse(s: &str) -> anyhow::Result<ErrorCode> {
+        Ok(match s {
+            "overloaded" => ErrorCode::Overloaded,
+            "timeout" => ErrorCode::Timeout,
+            "bad_request" => ErrorCode::BadRequest,
+            "shutting_down" => ErrorCode::ShuttingDown,
+            "internal" => ErrorCode::Internal,
+            other => anyhow::bail!("unknown error code '{other}'"),
+        })
+    }
+}
+
+/// A decoded response line.
+#[derive(Debug, Clone)]
+pub enum Response {
+    /// An optimisation result: the deterministic payload plus the
+    /// per-serving envelope (provenance, server-side wall clock).
+    Result {
+        /// Deterministic payload (see [`result_payload`]).
+        payload: Json,
+        /// Where the result came from.
+        provenance: Provenance,
+        /// Server-side seconds spent on this serving.
+        elapsed_s: f64,
+    },
+    /// Daemon counters (see [`super::stats::ServeStats::to_json`]).
+    Stats(Json),
+    /// Reply to `ping`.
+    Pong,
+    /// Acknowledgement of a control request.
+    Ok(String),
+    /// A typed failure.
+    Error {
+        /// The error class.
+        code: ErrorCode,
+        /// Human-readable detail.
+        message: String,
+    },
+}
+
+/// The deterministic `result` object for a served search: exported graph,
+/// endpoint costs, improvement and the applied-substitution trail. Every
+/// field is memoised state — nothing here may depend on wall clock, cache
+/// temperature or thread count (see the module docs' determinism
+/// contract; `tests/serve_core.rs` pins it).
+pub fn result_payload(graph: &Graph, name: &str, log: &SearchLog) -> anyhow::Result<Json> {
+    let mut p = Json::obj();
+    p.set("graph", onnx::export(graph, name)?);
+    p.set("initial_ms", Json::Num(log.initial_ms));
+    p.set("final_ms", Json::Num(log.final_ms));
+    p.set("improvement_pct", Json::Num(log.improvement_pct()));
+    p.set("graphs_explored", Json::Num(log.graphs_explored as f64));
+    p.set(
+        "steps",
+        Json::Arr(
+            log.steps
+                .iter()
+                .map(|(rule, ms)| Json::Arr(vec![Json::Str(rule.clone()), Json::Num(*ms)]))
+                .collect(),
+        ),
+    );
+    Ok(p)
+}
+
+/// Encode an optimise request as one wire line (no trailing newline).
+pub fn encode_optimize(req: &OptimizeRequest) -> anyhow::Result<String> {
+    let mut j = Json::obj();
+    j.set("type", Json::Str("optimize".into()));
+    j.set("graph", onnx::export(&req.graph, &req.graph_name)?);
+    j.set("method", Json::Str(req.method.name().into()));
+    match req.method {
+        Method::Greedy { max_steps } => {
+            j.set("max_steps", Json::Num(max_steps as f64));
+        }
+        Method::Taso { alpha, beam, depth } => {
+            j.set("alpha", Json::Num(alpha));
+            j.set("beam", Json::Num(beam as f64));
+            j.set("depth", Json::Num(depth as f64));
+        }
+    }
+    if req.cost_noise > 0.0 {
+        j.set("cost_noise", Json::Num(req.cost_noise));
+        j.set("noise_seed", Json::Num(req.noise_seed as f64));
+    }
+    if let Some(t) = req.timeout_ms {
+        j.set("timeout_ms", Json::Num(t as f64));
+    }
+    Ok(j.to_string_compact())
+}
+
+/// Encode a control request (`stats` / `ping` / `shutdown`) as one line.
+pub fn encode_control(kind: &str) -> String {
+    let mut j = Json::obj();
+    j.set("type", Json::Str(kind.into()));
+    j.to_string_compact()
+}
+
+/// Decode one request line. Enforces the wire limits, full JSON validity,
+/// graph well-formedness (via [`onnx::import`]) and knob ranges; any
+/// violation is an `Err` the server maps to a `bad_request` response.
+pub fn decode_request(line: &str) -> anyhow::Result<Request> {
+    let j = parse_with_limits(line, MAX_LINE_BYTES, MAX_WIRE_DEPTH)?;
+    let ty = j.get("type")?.as_str()?;
+    match ty {
+        "stats" => Ok(Request::Stats),
+        "ping" => Ok(Request::Ping),
+        "shutdown" => Ok(Request::Shutdown),
+        "optimize" => {
+            let graph_j = j.get("graph")?;
+            let graph = onnx::import(graph_j)?;
+            let graph_name = match graph_j.opt("graph_name") {
+                Some(n) => n.as_str()?.to_string(),
+                None => "graph".to_string(),
+            };
+            let method_name = match j.opt("method") {
+                Some(m) => m.as_str()?,
+                None => "taso",
+            };
+            let method = match method_name {
+                "greedy" => {
+                    let max_steps = match j.opt("max_steps") {
+                        Some(v) => v.as_usize()?,
+                        None => 100,
+                    };
+                    anyhow::ensure!(
+                        (1..=100_000).contains(&max_steps),
+                        "max_steps {} out of range [1, 100000]",
+                        max_steps
+                    );
+                    Method::Greedy { max_steps }
+                }
+                "taso" => {
+                    let alpha = match j.opt("alpha") {
+                        Some(v) => v.as_f64()?,
+                        None => 1.05,
+                    };
+                    anyhow::ensure!(
+                        alpha.is_finite() && (1.0..=16.0).contains(&alpha),
+                        "alpha {} out of range [1, 16]",
+                        alpha
+                    );
+                    let beam = match j.opt("beam") {
+                        Some(v) => v.as_usize()?,
+                        None => 4,
+                    };
+                    anyhow::ensure!(
+                        (1..=256).contains(&beam),
+                        "beam {} out of range [1, 256]",
+                        beam
+                    );
+                    let depth = match j.opt("depth") {
+                        Some(v) => v.as_usize()?,
+                        None => 80,
+                    };
+                    anyhow::ensure!(
+                        (1..=4096).contains(&depth),
+                        "depth {} out of range [1, 4096]",
+                        depth
+                    );
+                    Method::Taso { alpha, beam, depth }
+                }
+                other => anyhow::bail!("unknown method '{other}' (greedy|taso)"),
+            };
+            let cost_noise = match j.opt("cost_noise") {
+                Some(v) => v.as_f64()?,
+                None => 0.0,
+            };
+            anyhow::ensure!(
+                cost_noise.is_finite() && (0.0..=1.0).contains(&cost_noise),
+                "cost_noise {} out of range [0, 1]",
+                cost_noise
+            );
+            let noise_seed = match j.opt("noise_seed") {
+                Some(v) => v.as_usize()? as u64,
+                None => 0,
+            };
+            let timeout_ms = match j.opt("timeout_ms") {
+                Some(v) => {
+                    let t = v.as_usize()? as u64;
+                    anyhow::ensure!(
+                        t >= 1 && t <= MAX_TIMEOUT_MS,
+                        "timeout_ms {} out of range [1, {}]",
+                        t,
+                        MAX_TIMEOUT_MS
+                    );
+                    Some(t)
+                }
+                None => None,
+            };
+            Ok(Request::Optimize(Box::new(OptimizeRequest {
+                graph,
+                graph_name,
+                method,
+                cost_noise,
+                noise_seed,
+                timeout_ms,
+            })))
+        }
+        other => anyhow::bail!("unknown request type '{other}'"),
+    }
+}
+
+impl Response {
+    /// Shorthand for an error response.
+    pub fn error(code: ErrorCode, message: impl Into<String>) -> Response {
+        Response::Error { code, message: message.into() }
+    }
+
+    /// Encode as one wire line (no trailing newline).
+    pub fn encode(&self) -> String {
+        let mut j = Json::obj();
+        match self {
+            Response::Result { payload, provenance, elapsed_s } => {
+                j.set("type", Json::Str("result".into()));
+                j.set("provenance", Json::Str(provenance.as_str().into()));
+                j.set("elapsed_s", Json::Num(*elapsed_s));
+                j.set("result", payload.clone());
+            }
+            Response::Stats(stats) => {
+                j.set("type", Json::Str("stats".into()));
+                j.set("stats", stats.clone());
+            }
+            Response::Pong => {
+                j.set("type", Json::Str("pong".into()));
+            }
+            Response::Ok(detail) => {
+                j.set("type", Json::Str("ok".into()));
+                j.set("detail", Json::Str(detail.clone()));
+            }
+            Response::Error { code, message } => {
+                j.set("type", Json::Str("error".into()));
+                j.set("code", Json::Str(code.as_str().into()));
+                j.set("message", Json::Str(message.clone()));
+            }
+        }
+        j.to_string_compact()
+    }
+
+    /// Decode one response line (the client half of the protocol).
+    pub fn decode(line: &str) -> anyhow::Result<Response> {
+        let j = parse_with_limits(line, MAX_LINE_BYTES, MAX_WIRE_DEPTH)?;
+        Ok(match j.get("type")?.as_str()? {
+            "result" => Response::Result {
+                payload: j.get("result")?.clone(),
+                provenance: Provenance::parse(j.get("provenance")?.as_str()?)?,
+                elapsed_s: j.get("elapsed_s")?.as_f64()?,
+            },
+            "stats" => Response::Stats(j.get("stats")?.clone()),
+            "pong" => Response::Pong,
+            "ok" => Response::Ok(j.get("detail")?.as_str()?.to_string()),
+            "error" => Response::Error {
+                code: ErrorCode::parse(j.get("code")?.as_str()?)?,
+                message: j.get("message")?.as_str()?.to_string(),
+            },
+            other => anyhow::bail!("unknown response type '{other}'"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::canonical_hash;
+
+    fn tiny_graph() -> Graph {
+        let mut b = crate::graph::GraphBuilder::new();
+        let x = b.input(&[2, 4]);
+        let _ = b.relu(x).unwrap();
+        b.finish()
+    }
+
+    #[test]
+    fn optimize_request_round_trips() {
+        let g = tiny_graph();
+        let req = OptimizeRequest {
+            graph: g.clone(),
+            graph_name: "tiny".into(),
+            method: Method::Taso { alpha: 1.05, beam: 4, depth: 80 },
+            cost_noise: 0.0,
+            noise_seed: 0,
+            timeout_ms: Some(5000),
+        };
+        let line = encode_optimize(&req).unwrap();
+        assert!(!line.contains('\n'), "wire lines must be single-line");
+        match decode_request(&line).unwrap() {
+            Request::Optimize(d) => {
+                assert_eq!(canonical_hash(&d.graph), canonical_hash(&g));
+                assert_eq!(d.graph_name, "tiny");
+                assert_eq!(d.method, Method::Taso { alpha: 1.05, beam: 4, depth: 80 });
+                assert_eq!(d.timeout_ms, Some(5000));
+            }
+            other => panic!("decoded wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn control_requests_round_trip() {
+        assert!(matches!(decode_request(&encode_control("stats")).unwrap(), Request::Stats));
+        assert!(matches!(decode_request(&encode_control("ping")).unwrap(), Request::Ping));
+        assert!(matches!(decode_request(&encode_control("shutdown")).unwrap(), Request::Shutdown));
+    }
+
+    #[test]
+    fn responses_round_trip() {
+        let e = Response::error(ErrorCode::Overloaded, "queue full");
+        match Response::decode(&e.encode()).unwrap() {
+            Response::Error { code, message } => {
+                assert_eq!(code, ErrorCode::Overloaded);
+                assert_eq!(message, "queue full");
+            }
+            other => panic!("decoded wrong variant: {other:?}"),
+        }
+        match Response::decode(&Response::Pong.encode()).unwrap() {
+            Response::Pong => {}
+            other => panic!("decoded wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_requests_are_errors_not_panics() {
+        assert!(decode_request("").is_err());
+        assert!(decode_request("{").is_err());
+        assert!(decode_request("{\"type\":\"warp\"}").is_err());
+        assert!(decode_request("{\"type\":\"optimize\"}").is_err(), "missing graph");
+        // Out-of-range knobs are rejected, not clamped.
+        let g = tiny_graph();
+        let line = encode_optimize(&OptimizeRequest {
+            graph: g,
+            graph_name: "g".into(),
+            method: Method::Taso { alpha: 1.05, beam: 4, depth: 80 },
+            cost_noise: 0.0,
+            noise_seed: 0,
+            timeout_ms: None,
+        })
+        .unwrap();
+        let bad = line.replace("\"alpha\":1.05", "\"alpha\":99");
+        assert!(decode_request(&bad).is_err(), "alpha out of range must be rejected");
+    }
+
+    #[test]
+    fn result_payload_is_envelope_free() {
+        let g = tiny_graph();
+        let log = crate::search::SearchLog {
+            steps: vec![("fuse".into(), 1.25)],
+            initial_ms: 2.0,
+            final_ms: 1.25,
+            elapsed_s: 0.5,
+            graphs_explored: 7,
+            table_size: 9,
+            memo_hits: 3,
+            threads: 8,
+            from_cache: true,
+        };
+        let p = result_payload(&g, "tiny", &log).unwrap();
+        let bytes = p.to_string_compact();
+        // Per-serving fields must not leak into the deterministic payload.
+        assert!(!bytes.contains("elapsed"), "payload must not carry wall clock");
+        assert!(!bytes.contains("from_cache"), "payload must not carry provenance");
+        assert!(!bytes.contains("threads"), "payload must not carry thread count");
+        assert_eq!(p.get("graphs_explored").unwrap().as_usize().unwrap(), 7);
+    }
+}

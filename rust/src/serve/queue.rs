@@ -1,0 +1,140 @@
+//! Bounded MPMC work queue — the admission-control half of the daemon.
+//!
+//! Connection handlers push parsed optimise jobs; the worker pool pops
+//! them. The queue is deliberately *non-blocking on push*: a full queue
+//! returns the typed [`PushError::Overloaded`] immediately, which the
+//! server maps to the protocol's `overloaded` error — load is shed with
+//! an explicit response, never by letting a client hang on an unbounded
+//! backlog. `pop` blocks (that is the worker's idle state) and drains
+//! remaining jobs after [`BoundedQueue::close`] so graceful shutdown
+//! finishes accepted work before exiting.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// Why a push was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PushError {
+    /// The queue is at capacity; the caller should shed the request.
+    Overloaded {
+        /// Queue depth observed at rejection time.
+        depth: usize,
+    },
+    /// The queue was closed for shutdown; no new work is admitted.
+    Closed,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A capacity-bounded multi-producer/multi-consumer queue with explicit
+/// load shedding (see the module docs).
+pub struct BoundedQueue<T> {
+    state: Mutex<State<T>>,
+    ready: Condvar,
+    cap: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    /// A queue admitting at most `cap` pending items (minimum 1).
+    pub fn new(cap: usize) -> Self {
+        Self {
+            state: Mutex::new(State { items: VecDeque::new(), closed: false }),
+            ready: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Admit one item, or refuse immediately: [`PushError::Overloaded`]
+    /// at capacity, [`PushError::Closed`] after [`BoundedQueue::close`].
+    pub fn push(&self, item: T) -> Result<(), PushError> {
+        let mut s = self.state.lock().expect("serve queue poisoned");
+        if s.closed {
+            return Err(PushError::Closed);
+        }
+        if s.items.len() >= self.cap {
+            return Err(PushError::Overloaded { depth: s.items.len() });
+        }
+        s.items.push_back(item);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Block until an item is available and take it. Returns `None` only
+    /// once the queue is closed *and* fully drained — accepted work is
+    /// always completed before workers exit.
+    pub fn pop(&self) -> Option<T> {
+        let mut s = self.state.lock().expect("serve queue poisoned");
+        loop {
+            if let Some(item) = s.items.pop_front() {
+                return Some(item);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.ready.wait(s).expect("serve queue poisoned");
+        }
+    }
+
+    /// Stop admitting work and wake every blocked worker. Already-queued
+    /// items still drain through [`BoundedQueue::pop`].
+    pub fn close(&self) {
+        let mut s = self.state.lock().expect("serve queue poisoned");
+        s.closed = true;
+        self.ready.notify_all();
+    }
+
+    /// Number of items currently queued (the `stats` surface's
+    /// `queue_depth`).
+    pub fn depth(&self) -> usize {
+        self.state.lock().expect("serve queue poisoned").items.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_and_depth() {
+        let q = BoundedQueue::new(4);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.depth(), 2);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.depth(), 0);
+    }
+
+    #[test]
+    fn overflow_is_typed_not_blocking() {
+        let q = BoundedQueue::new(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        // The third push returns instantly with the typed error.
+        assert_eq!(q.push(3), Err(PushError::Overloaded { depth: 2 }));
+        assert_eq!(q.pop(), Some(1));
+        q.push(3).unwrap();
+    }
+
+    #[test]
+    fn close_drains_then_releases_workers() {
+        let q = Arc::new(BoundedQueue::new(8));
+        q.push(10).unwrap();
+        q.close();
+        assert_eq!(q.push(11), Err(PushError::Closed));
+        // Queued work drains; only then do poppers see the end.
+        assert_eq!(q.pop(), Some(10));
+        assert_eq!(q.pop(), None);
+        // A worker blocked in pop() when close() fires is woken.
+        let q2 = Arc::new(BoundedQueue::<u32>::new(1));
+        let qw = Arc::clone(&q2);
+        let h = std::thread::spawn(move || qw.pop());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q2.close();
+        assert_eq!(h.join().unwrap(), None);
+    }
+}

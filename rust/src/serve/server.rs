@@ -1,0 +1,346 @@
+//! The TCP shell of the daemon: listener, per-connection framing, the
+//! admission queue and the worker pool. All optimisation semantics live
+//! in [`ServeCore`] — this layer only moves lines and enforces the
+//! admission contract:
+//!
+//! ```text
+//! socket ── line framing ──> bounded queue ──> worker pool ──> ServeCore
+//!   │          (8 MiB cap)     (overloaded      (N workers,     (coalesce,
+//!   │                           when full)       deadline        cache,
+//!   └── stats/ping answered inline              pre-check)       persist)
+//! ```
+//!
+//! * `optimize` requests are queued; a full queue is answered with the
+//!   typed `overloaded` error immediately — never a hang.
+//! * `stats` and `ping` are answered inline on the connection thread, so
+//!   observability keeps working while the queue is saturated.
+//! * `shutdown` acknowledges, stops accepting, closes the queue (already
+//!   -admitted jobs drain), joins the workers, snapshots the cache and
+//!   returns from [`run`].
+//! * Every request carries a wall-clock deadline (its `timeout_ms` or
+//!   the server default). A job that expires while queued is answered
+//!   `timeout` without running; a search that outlives its deadline keeps
+//!   running (it still warms the cache) while the waiting request is
+//!   answered `timeout`.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::protocol::{self, ErrorCode, OptimizeRequest, Request, Response};
+use super::queue::{BoundedQueue, PushError};
+use super::service::{ServeConfig, ServeCore, ServeError};
+
+/// Simultaneous client connections admitted before shedding.
+const MAX_CONNS: usize = 256;
+/// Accept-loop poll interval while waiting for connections or shutdown.
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
+/// Extra wait past a request's deadline for its worker to deliver the
+/// timeout verdict before the connection handler gives up on the reply.
+const REPLY_GRACE: Duration = Duration::from_millis(250);
+
+/// Full daemon configuration: the TCP knobs plus the core's.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Listen address, e.g. `127.0.0.1:7777` (port 0 = ephemeral).
+    pub addr: String,
+    /// Worker threads consuming the queue. Each worker runs one search at
+    /// a time (searches parallelise internally via `core.threads`).
+    pub workers: usize,
+    /// Admission-queue capacity; pushes beyond it are shed.
+    pub queue_cap: usize,
+    /// Default per-request wall-clock budget (overridable per request).
+    pub default_timeout_ms: u64,
+    /// Serve-core knobs (cache dir, bounds, search threads).
+    pub core: ServeConfig,
+}
+
+impl ServerConfig {
+    /// Defaults: 2 workers, queue of 64, 10-minute timeout, in-memory
+    /// cache.
+    pub fn new(addr: impl Into<String>) -> Self {
+        Self {
+            addr: addr.into(),
+            workers: 2,
+            queue_cap: 64,
+            default_timeout_ms: 600_000,
+            core: ServeConfig::default(),
+        }
+    }
+}
+
+struct Job {
+    req: Box<OptimizeRequest>,
+    deadline: Instant,
+    reply: mpsc::Sender<Response>,
+}
+
+/// A running daemon: the bound address plus the join handle of its
+/// accept loop. Tests bind port 0 and read the actual port from `addr`.
+pub struct Handle {
+    /// The address the listener actually bound.
+    pub addr: SocketAddr,
+    thread: JoinHandle<anyhow::Result<()>>,
+}
+
+impl Handle {
+    /// Wait for the daemon to drain and exit (after a `shutdown`
+    /// request), propagating its result.
+    pub fn join(self) -> anyhow::Result<()> {
+        match self.thread.join() {
+            Ok(r) => r,
+            Err(_) => anyhow::bail!("serve accept loop panicked"),
+        }
+    }
+}
+
+/// Bind `cfg.addr` and run the daemon on background threads, returning
+/// once the listener is live. [`run`] is the foreground wrapper the CLI
+/// uses.
+pub fn spawn(cfg: ServerConfig) -> anyhow::Result<Handle> {
+    let core = Arc::new(ServeCore::open(&cfg.core)?);
+    let listener = TcpListener::bind(&cfg.addr)
+        .map_err(|e| anyhow::anyhow!("cannot bind {}: {e}", cfg.addr))?;
+    let addr = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let thread = std::thread::Builder::new()
+        .name("serve-accept".into())
+        .spawn(move || accept_loop(listener, core, cfg))?;
+    Ok(Handle { addr, thread })
+}
+
+/// Run the daemon in the foreground until a `shutdown` request drains
+/// it. Prints the bound address on startup and the final stats line on
+/// exit.
+pub fn run(cfg: ServerConfig) -> anyhow::Result<()> {
+    let replay_note = cfg.core.cache_dir.clone();
+    let handle = spawn(cfg)?;
+    println!("rlflow serve: listening on {}", handle.addr);
+    if let Some(dir) = replay_note {
+        println!("rlflow serve: persistent cache at {}", dir.display());
+    }
+    handle.join()
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    core: Arc<ServeCore>,
+    cfg: ServerConfig,
+) -> anyhow::Result<()> {
+    let queue: Arc<BoundedQueue<Job>> = Arc::new(BoundedQueue::new(cfg.queue_cap));
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let conns = Arc::new(AtomicUsize::new(0));
+
+    let mut workers = Vec::new();
+    for i in 0..cfg.workers.max(1) {
+        let q = Arc::clone(&queue);
+        let c = Arc::clone(&core);
+        workers.push(
+            std::thread::Builder::new()
+                .name(format!("serve-worker-{i}"))
+                .spawn(move || worker_loop(&q, &c))?,
+        );
+    }
+
+    while !shutdown.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if conns.fetch_add(1, Ordering::AcqRel) >= MAX_CONNS {
+                    conns.fetch_sub(1, Ordering::AcqRel);
+                    core.note_overload();
+                    let _ = shed_connection(stream);
+                    continue;
+                }
+                let q = Arc::clone(&queue);
+                let c = Arc::clone(&core);
+                let sd = Arc::clone(&shutdown);
+                let cn = Arc::clone(&conns);
+                let timeout_ms = cfg.default_timeout_ms;
+                let spawned = std::thread::Builder::new().name("serve-conn".into()).spawn(
+                    move || {
+                        handle_conn(stream, &q, &c, &sd, timeout_ms);
+                        cn.fetch_sub(1, Ordering::AcqRel);
+                    },
+                );
+                if spawned.is_err() {
+                    conns.fetch_sub(1, Ordering::AcqRel);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(e) => {
+                eprintln!("serve: accept failed: {e}");
+                std::thread::sleep(ACCEPT_POLL);
+            }
+        }
+    }
+
+    // Drain: no new admissions, finish queued work, persist, report.
+    queue.close();
+    for w in workers {
+        let _ = w.join();
+    }
+    core.flush()?;
+    println!("rlflow serve: drained; {}", core.stats(0));
+    Ok(())
+}
+
+fn worker_loop(queue: &BoundedQueue<Job>, core: &ServeCore) {
+    while let Some(job) = queue.pop() {
+        // A job that expired while queued is answered without running —
+        // the client already gave up on it.
+        if Instant::now() >= job.deadline {
+            let resp = Response::error(ErrorCode::Timeout, "request timed out while queued");
+            if job.reply.send(resp).is_ok() {
+                core.note_timeout();
+            }
+            continue;
+        }
+        let name = job.req.graph_name.clone();
+        let resp = match core.optimize(&job.req, Some(job.deadline)) {
+            Ok(outcome) => match outcome.payload(&name) {
+                Ok(payload) => Response::Result {
+                    payload,
+                    provenance: outcome.provenance,
+                    elapsed_s: outcome.elapsed_s,
+                },
+                Err(e) => Response::error(ErrorCode::Internal, format!("payload encode: {e}")),
+            },
+            Err(ServeError::Timeout) => Response::error(ErrorCode::Timeout, "request timed out"),
+            Err(ServeError::Failed(msg)) => Response::error(ErrorCode::Internal, msg),
+        };
+        let _ = job.reply.send(resp);
+    }
+}
+
+/// Over the connection cap: answer the first line (best effort) with
+/// `overloaded` and close.
+fn shed_connection(stream: TcpStream) -> std::io::Result<()> {
+    let mut stream = stream;
+    stream.set_nonblocking(false)?;
+    write_line(
+        &mut stream,
+        &Response::error(ErrorCode::Overloaded, "connection limit reached").encode(),
+    )
+}
+
+fn write_line(stream: &mut TcpStream, line: &str) -> std::io::Result<()> {
+    stream.write_all(line.as_bytes())?;
+    stream.write_all(b"\n")?;
+    stream.flush()
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    queue: &BoundedQueue<Job>,
+    core: &ServeCore,
+    shutdown: &AtomicBool,
+    default_timeout_ms: u64,
+) {
+    if stream.set_nonblocking(false).is_err() {
+        return;
+    }
+    let mut writer = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    loop {
+        let mut line = String::new();
+        // Per-line cap: reading one byte past the limit proves the line
+        // is oversized without ever buffering unbounded input.
+        let n = {
+            let mut limited = (&mut reader).take(protocol::MAX_LINE_BYTES as u64 + 1);
+            match limited.read_line(&mut line) {
+                Ok(n) => n,
+                Err(_) => {
+                    // Undecodable bytes (or a half-closed socket): the
+                    // stream cannot be re-framed, answer and close.
+                    core.note_bad_request();
+                    let _ = write_line(
+                        &mut writer,
+                        &Response::error(ErrorCode::BadRequest, "unreadable request line")
+                            .encode(),
+                    );
+                    return;
+                }
+            }
+        };
+        if n == 0 {
+            return; // clean EOF
+        }
+        if line.len() > protocol::MAX_LINE_BYTES {
+            core.note_bad_request();
+            let _ = write_line(
+                &mut writer,
+                &Response::error(
+                    ErrorCode::BadRequest,
+                    format!("request line exceeds {} bytes", protocol::MAX_LINE_BYTES),
+                )
+                .encode(),
+            );
+            return; // the rest of the stream is mid-line garbage
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let resp = match protocol::decode_request(trimmed) {
+            Err(e) => {
+                core.note_bad_request();
+                Response::error(ErrorCode::BadRequest, e.to_string())
+            }
+            Ok(Request::Ping) => Response::Pong,
+            Ok(Request::Stats) => Response::Stats(core.stats(queue.depth()).to_json()),
+            Ok(Request::Shutdown) => {
+                let resp = Response::Ok("draining".into());
+                let _ = write_line(&mut writer, &resp.encode());
+                shutdown.store(true, Ordering::Release);
+                return;
+            }
+            Ok(Request::Optimize(req)) => {
+                if shutdown.load(Ordering::Acquire) {
+                    Response::error(ErrorCode::ShuttingDown, "daemon is draining")
+                } else {
+                    serve_optimize(req, queue, core, default_timeout_ms)
+                }
+            }
+        };
+        if write_line(&mut writer, &resp.encode()).is_err() {
+            return;
+        }
+    }
+}
+
+fn serve_optimize(
+    req: Box<OptimizeRequest>,
+    queue: &BoundedQueue<Job>,
+    core: &ServeCore,
+    default_timeout_ms: u64,
+) -> Response {
+    let timeout = Duration::from_millis(req.timeout_ms.unwrap_or(default_timeout_ms));
+    let deadline = Instant::now() + timeout;
+    let (tx, rx) = mpsc::channel();
+    match queue.push(Job { req, deadline, reply: tx }) {
+        Err(PushError::Overloaded { depth }) => {
+            core.note_overload();
+            Response::error(ErrorCode::Overloaded, format!("queue full ({depth} queued)"))
+        }
+        Err(PushError::Closed) => Response::error(ErrorCode::ShuttingDown, "daemon is draining"),
+        Ok(()) => match rx.recv_timeout(timeout + REPLY_GRACE) {
+            Ok(resp) => resp,
+            Err(_) => {
+                // The worker never delivered (search overran its
+                // deadline as leader, or the pool is saturated): the
+                // search keeps running and warms the cache, but this
+                // request is done waiting.
+                core.note_timeout();
+                Response::error(ErrorCode::Timeout, "request timed out")
+            }
+        },
+    }
+}

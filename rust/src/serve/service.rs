@@ -1,0 +1,514 @@
+//! The socket-free heart of the daemon: [`ServeCore`] owns the shared
+//! [`SearchCache`], its disk [`Persister`], the in-flight coalescing map
+//! and every request-level counter. The TCP layer ([`super::server`]) is
+//! a thin shell over this type, which is what lets `tests/serve_core.rs`
+//! pin coalescing, persistence and provenance semantics without opening
+//! a socket.
+//!
+//! # Request lifecycle
+//!
+//! `optimize` keys the request by `(config fingerprint, canonical root
+//! hash)` — the same key the cache and the disk log use — then elects a
+//! role under the in-flight map's lock:
+//!
+//! * **Leader** — no identical request is running: registers a
+//!   [`Flight`], runs the cached search (which does its own memo
+//!   lookup/store), publishes the result to the flight, appends fresh
+//!   results to disk. Provenance is `cache` when the memo answered,
+//!   `fresh` when a live search ran.
+//! * **Follower** — an identical request is in flight: blocks on the
+//!   leader's flight (with the request's deadline) and returns the
+//!   shared result with provenance `coalesced`. N concurrent identical
+//!   requests execute exactly one search (pinned by test).
+//!
+//! A leader that panics or errors resolves its flight with an error on
+//! unwind (via a drop guard), so followers never hang on an abandoned
+//! flight — every failure mode surfaces as a typed error.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::cost::{CostModel, DeviceProfile};
+use crate::graph::canonical_hash;
+use crate::graph::Graph;
+use crate::search::{
+    greedy_fingerprint, greedy_optimise_cached, taso_fingerprint, taso_optimise_cached,
+    CacheStats, SearchCache, SearchLog, TasoConfig,
+};
+use crate::util::json::Json;
+use crate::xfer::library::standard_library;
+use crate::xfer::RuleSet;
+
+use super::persist::{CacheEntry, Persister};
+use super::protocol::{result_payload, Method, OptimizeRequest, Provenance};
+use super::stats::{LatencyAgg, ServeStats};
+
+/// Knobs of the serve core (the TCP layer adds its own on top).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Directory for the persistent cache (`None` = in-memory only).
+    pub cache_dir: Option<PathBuf>,
+    /// Result-memo bound of the shared [`SearchCache`].
+    pub max_results: usize,
+    /// Cost-memo bound of the shared [`SearchCache`].
+    pub max_cost_entries: usize,
+    /// Fresh results between automatic snapshot compactions.
+    pub snapshot_every: usize,
+    /// Worker threads per search (0 = all cores); results are
+    /// bit-identical for every value, so this is purely a resource knob.
+    pub threads: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            cache_dir: None,
+            max_results: 4096,
+            max_cost_entries: 1 << 20,
+            snapshot_every: 64,
+            threads: 0,
+        }
+    }
+}
+
+/// A finished serving: the optimised graph plus its memoised log.
+#[derive(Debug)]
+pub struct Served {
+    /// The optimised graph.
+    pub graph: Graph,
+    /// The search log as memoised (followers see the leader's log).
+    pub log: SearchLog,
+}
+
+/// One request's result envelope.
+#[derive(Debug, Clone)]
+pub struct Outcome {
+    /// Shared result (followers hold the same allocation as the leader).
+    pub served: Arc<Served>,
+    /// Where it came from.
+    pub provenance: Provenance,
+    /// Wall-clock seconds this request spent inside the core.
+    pub elapsed_s: f64,
+}
+
+impl Outcome {
+    /// The deterministic response payload for this serving (see
+    /// [`result_payload`]).
+    pub fn payload(&self, name: &str) -> anyhow::Result<Json> {
+        result_payload(&self.served.graph, name, &self.served.log)
+    }
+}
+
+/// Typed failures of [`ServeCore::optimize`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The request's deadline elapsed while waiting on a coalesced
+    /// search. The leader keeps running and still warms the cache.
+    Timeout,
+    /// The search failed (message preserved for the error response).
+    Failed(String),
+}
+
+#[derive(Default)]
+struct Flight {
+    slot: Mutex<Option<Result<Arc<Served>, String>>>,
+    done: Condvar,
+}
+
+/// Resolves the flight and unregisters it exactly once — including on
+/// unwind, so a panicking leader releases its followers with an error
+/// instead of stranding them.
+struct FlightGuard<'a> {
+    core: &'a ServeCore,
+    key: (u64, u64),
+    flight: Arc<Flight>,
+    resolved: bool,
+}
+
+impl FlightGuard<'_> {
+    fn finish(&mut self, result: Result<Arc<Served>, String>) {
+        if self.resolved {
+            return;
+        }
+        self.resolved = true;
+        if let Ok(mut slot) = self.flight.slot.lock() {
+            *slot = Some(result);
+        }
+        self.flight.done.notify_all();
+        if let Ok(mut map) = self.core.inflight.lock() {
+            map.remove(&self.key);
+        }
+    }
+
+    fn resolve(mut self, result: Result<Arc<Served>, String>) {
+        self.finish(result);
+    }
+}
+
+impl Drop for FlightGuard<'_> {
+    fn drop(&mut self) {
+        self.finish(Err("search aborted".to_string()));
+    }
+}
+
+/// The daemon's shared state. `Sync`: one instance is shared by every
+/// worker and connection thread behind an `Arc`.
+pub struct ServeCore {
+    rules: RuleSet,
+    device: DeviceProfile,
+    cache: Arc<SearchCache>,
+    persist: Option<Mutex<Persister>>,
+    inflight: Mutex<HashMap<(u64, u64), Arc<Flight>>>,
+    threads: usize,
+    prior: CacheStats,
+    replayed: usize,
+
+    requests: AtomicU64,
+    fresh_searches: AtomicU64,
+    served_from_cache: AtomicU64,
+    coalesced: AtomicU64,
+    rejected_overload: AtomicU64,
+    timeouts: AtomicU64,
+    bad_requests: AtomicU64,
+    in_flight: AtomicUsize,
+    latency: Mutex<LatencyAgg>,
+}
+
+impl ServeCore {
+    /// Build a core, replaying the persistent cache when `cfg.cache_dir`
+    /// is set: a warm-restarted core answers previously-served requests
+    /// bit-identically from the replayed memo.
+    pub fn open(cfg: &ServeConfig) -> anyhow::Result<ServeCore> {
+        let cache = Arc::new(SearchCache::with_capacity(cfg.max_results, cfg.max_cost_entries));
+        let mut prior = CacheStats::default();
+        let mut replayed = 0usize;
+        let persist = match &cfg.cache_dir {
+            Some(dir) => {
+                let (p, replay) = Persister::open(dir, cfg.snapshot_every)?;
+                for e in &replay.entries {
+                    cache.store_hashed(e.fp, e.root, &e.graph, &e.log);
+                }
+                replayed = replay.entries.len();
+                prior = replay.prior;
+                Some(Mutex::new(p))
+            }
+            None => None,
+        };
+        Ok(ServeCore {
+            rules: standard_library(),
+            device: DeviceProfile::rtx2070(),
+            cache,
+            persist,
+            inflight: Mutex::new(HashMap::new()),
+            threads: cfg.threads,
+            prior,
+            replayed,
+            requests: AtomicU64::new(0),
+            fresh_searches: AtomicU64::new(0),
+            served_from_cache: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            rejected_overload: AtomicU64::new(0),
+            timeouts: AtomicU64::new(0),
+            bad_requests: AtomicU64::new(0),
+            in_flight: AtomicUsize::new(0),
+            latency: Mutex::new(LatencyAgg::default()),
+        })
+    }
+
+    /// Results replayed from disk at startup (0 without a cache dir).
+    pub fn replayed(&self) -> usize {
+        self.replayed
+    }
+
+    /// The shared search cache (exposed for tests and the CLI).
+    pub fn cache(&self) -> &SearchCache {
+        &self.cache
+    }
+
+    /// Serve one optimisation request; `deadline` bounds how long the
+    /// caller is willing to wait (the admission layer derives it from the
+    /// request's `timeout_ms`). See the module docs for the
+    /// leader/follower lifecycle.
+    pub fn optimize(
+        &self,
+        req: &OptimizeRequest,
+        deadline: Option<Instant>,
+    ) -> Result<Outcome, ServeError> {
+        let t0 = Instant::now();
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.in_flight.fetch_add(1, Ordering::Relaxed);
+        let out = self.optimize_inner(req, deadline);
+        self.in_flight.fetch_sub(1, Ordering::Relaxed);
+        let elapsed_s = t0.elapsed().as_secs_f64();
+        match out {
+            Ok((served, provenance)) => {
+                if let Ok(mut agg) = self.latency.lock() {
+                    agg.record(elapsed_s);
+                }
+                Ok(Outcome { served, provenance, elapsed_s })
+            }
+            Err(e) => {
+                if e == ServeError::Timeout {
+                    self.timeouts.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e)
+            }
+        }
+    }
+
+    fn optimize_inner(
+        &self,
+        req: &OptimizeRequest,
+        deadline: Option<Instant>,
+    ) -> Result<(Arc<Served>, Provenance), ServeError> {
+        let cost = self.cost_model(req);
+        let root_hash = canonical_hash(&req.graph);
+        let fp = match req.method {
+            Method::Greedy { max_steps } => greedy_fingerprint(&cost, &self.rules, max_steps),
+            Method::Taso { alpha, beam, depth } => taso_fingerprint(
+                &cost,
+                &self.rules,
+                &TasoConfig { alpha, beam, depth, threads: self.threads },
+            ),
+        };
+        let key = (fp, root_hash);
+
+        enum Role {
+            Leader(Arc<Flight>),
+            Follower(Arc<Flight>),
+        }
+        let role = {
+            let mut map = self.inflight.lock().expect("serve inflight map poisoned");
+            match map.get(&key) {
+                Some(f) => Role::Follower(Arc::clone(f)),
+                None => {
+                    let f = Arc::new(Flight::default());
+                    map.insert(key, Arc::clone(&f));
+                    Role::Leader(f)
+                }
+            }
+        };
+
+        match role {
+            Role::Follower(flight) => {
+                self.coalesced.fetch_add(1, Ordering::Relaxed);
+                self.wait_flight(&flight, deadline).map(|s| (s, Provenance::Coalesced))
+            }
+            Role::Leader(flight) => {
+                let guard = FlightGuard { core: self, key, flight, resolved: false };
+                let (graph, log) = match req.method {
+                    Method::Greedy { max_steps } => greedy_optimise_cached(
+                        &req.graph,
+                        &self.rules,
+                        &cost,
+                        max_steps,
+                        self.threads,
+                        &self.cache,
+                    ),
+                    Method::Taso { alpha, beam, depth } => taso_optimise_cached(
+                        &req.graph,
+                        &self.rules,
+                        &cost,
+                        &TasoConfig { alpha, beam, depth, threads: self.threads },
+                        &self.cache,
+                    ),
+                };
+                let provenance = if log.from_cache {
+                    self.served_from_cache.fetch_add(1, Ordering::Relaxed);
+                    Provenance::Cache
+                } else {
+                    self.fresh_searches.fetch_add(1, Ordering::Relaxed);
+                    Provenance::Fresh
+                };
+                let served = Arc::new(Served { graph, log });
+                // Release followers before the (possibly slow) disk append.
+                guard.resolve(Ok(Arc::clone(&served)));
+                if provenance == Provenance::Fresh {
+                    self.persist_fresh(fp, root_hash, &served);
+                }
+                Ok((served, provenance))
+            }
+        }
+    }
+
+    fn wait_flight(
+        &self,
+        flight: &Flight,
+        deadline: Option<Instant>,
+    ) -> Result<Arc<Served>, ServeError> {
+        let mut slot = flight.slot.lock().expect("serve flight poisoned");
+        loop {
+            if let Some(result) = slot.as_ref() {
+                return match result {
+                    Ok(s) => Ok(Arc::clone(s)),
+                    Err(msg) => Err(ServeError::Failed(msg.clone())),
+                };
+            }
+            match deadline {
+                None => {
+                    slot = flight.done.wait(slot).expect("serve flight poisoned");
+                }
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        return Err(ServeError::Timeout);
+                    }
+                    let (s, _) = flight
+                        .done
+                        .wait_timeout(slot, d - now)
+                        .expect("serve flight poisoned");
+                    slot = s;
+                }
+            }
+        }
+    }
+
+    fn cost_model(&self, req: &OptimizeRequest) -> CostModel {
+        let cost = CostModel::new(self.device);
+        if req.cost_noise > 0.0 {
+            cost.with_noise(req.cost_noise, req.noise_seed)
+        } else {
+            cost
+        }
+    }
+
+    fn persist_fresh(&self, fp: u64, root: u64, served: &Served) {
+        let Some(persist) = &self.persist else { return };
+        let mut log = served.log.clone();
+        log.elapsed_s = 0.0;
+        log.from_cache = false;
+        let entry = CacheEntry { fp, root, graph: served.graph.clone(), log };
+        let mut p = persist.lock().expect("serve persister poisoned");
+        match p.append(&entry) {
+            Ok(true) => {
+                if let Err(e) = self.snapshot_locked(&mut p) {
+                    eprintln!("serve: snapshot failed: {e}");
+                }
+            }
+            Ok(false) => {}
+            Err(e) => eprintln!("serve: cache append failed: {e}"),
+        }
+    }
+
+    fn snapshot_locked(&self, p: &mut Persister) -> anyhow::Result<()> {
+        let entries: Vec<CacheEntry> = self
+            .cache
+            .snapshot_results()
+            .into_iter()
+            .map(|(fp, root, graph, log)| CacheEntry { fp, root, graph, log })
+            .collect();
+        p.snapshot(&entries, &self.cache_stats())
+    }
+
+    /// Force a compacted snapshot now (shutdown path; no-op without a
+    /// cache dir).
+    pub fn flush(&self) -> anyhow::Result<()> {
+        if let Some(persist) = &self.persist {
+            let mut p = persist.lock().expect("serve persister poisoned");
+            self.snapshot_locked(&mut p)?;
+        }
+        Ok(())
+    }
+
+    /// Lifetime cache counters: this process's [`SearchCache`] counters
+    /// plus the totals persisted by previous processes on the same cache
+    /// dir.
+    pub fn cache_stats(&self) -> CacheStats {
+        let s = self.cache.stats();
+        CacheStats {
+            result_hits: self.prior.result_hits + s.result_hits,
+            result_misses: self.prior.result_misses + s.result_misses,
+            evictions: self.prior.evictions + s.evictions,
+            result_entries: s.result_entries,
+            cost_entries: s.cost_entries,
+        }
+    }
+
+    /// Count one shed request (the admission layer owns the queue, the
+    /// core owns the counter so `stats` has a single source).
+    pub fn note_overload(&self) {
+        self.rejected_overload.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one undecodable request line.
+    pub fn note_bad_request(&self) {
+        self.bad_requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one timed-out request detected outside the core (a job that
+    /// expired while queued, or a reply the handler stopped waiting for).
+    pub fn note_timeout(&self) {
+        self.timeouts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One consistent snapshot of every counter; `queue_depth` is passed
+    /// in by the admission layer that owns the queue.
+    pub fn stats(&self, queue_depth: usize) -> ServeStats {
+        ServeStats {
+            cache: self.cache_stats(),
+            requests: self.requests.load(Ordering::Relaxed),
+            fresh_searches: self.fresh_searches.load(Ordering::Relaxed),
+            served_from_cache: self.served_from_cache.load(Ordering::Relaxed),
+            coalesced: self.coalesced.load(Ordering::Relaxed),
+            rejected_overload: self.rejected_overload.load(Ordering::Relaxed),
+            timeouts: self.timeouts.load(Ordering::Relaxed),
+            bad_requests: self.bad_requests.load(Ordering::Relaxed),
+            queue_depth,
+            in_flight: self.in_flight.load(Ordering::Relaxed),
+            latency: *self.latency.lock().expect("serve latency poisoned"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_request() -> OptimizeRequest {
+        let mut b = crate::graph::GraphBuilder::new();
+        let x = b.input(&[2, 4]);
+        let _ = b.relu(x).unwrap();
+        OptimizeRequest {
+            graph: b.finish(),
+            graph_name: "tiny".into(),
+            method: Method::Greedy { max_steps: 4 },
+            cost_noise: 0.0,
+            noise_seed: 0,
+            timeout_ms: None,
+        }
+    }
+
+    #[test]
+    fn fresh_then_cache_provenance() {
+        let core = ServeCore::open(&ServeConfig { threads: 1, ..Default::default() }).unwrap();
+        let req = tiny_request();
+        let first = core.optimize(&req, None).unwrap();
+        assert_eq!(first.provenance, Provenance::Fresh);
+        let second = core.optimize(&req, None).unwrap();
+        assert_eq!(second.provenance, Provenance::Cache);
+        // The deterministic payload is identical across provenances.
+        assert_eq!(
+            first.payload("tiny").unwrap().to_string_compact(),
+            second.payload("tiny").unwrap().to_string_compact()
+        );
+        let stats = core.stats(0);
+        assert_eq!(stats.requests, 2);
+        assert_eq!(stats.fresh_searches, 1);
+        assert_eq!(stats.served_from_cache, 1);
+        assert_eq!(stats.latency.count, 2);
+        assert_eq!(stats.in_flight, 0);
+    }
+
+    #[test]
+    fn different_configs_do_not_alias() {
+        let core = ServeCore::open(&ServeConfig { threads: 1, ..Default::default() }).unwrap();
+        let mut req = tiny_request();
+        assert_eq!(core.optimize(&req, None).unwrap().provenance, Provenance::Fresh);
+        req.method = Method::Greedy { max_steps: 5 };
+        // A different step budget is a different fingerprint: fresh again.
+        assert_eq!(core.optimize(&req, None).unwrap().provenance, Provenance::Fresh);
+    }
+}

@@ -1,0 +1,185 @@
+//! The daemon's observability surface: latency aggregates and the
+//! [`ServeStats`] snapshot returned by the protocol's `stats` request.
+//!
+//! Cache counters reuse [`CacheStats`] (hit/miss/evict semantics are
+//! identical to the CLI's `search cache:` line); the serve layer adds
+//! request-level counters (provenance split, shed load, timeouts), the
+//! live queue depth / in-flight gauge, and a constant-space latency
+//! aggregate (count / mean / min / max — no histogram allocation on the
+//! request path).
+
+use crate::search::CacheStats;
+use crate::util::json::Json;
+
+/// Constant-space aggregate of served-request latencies (successful
+/// servings only; sheds and timeouts are counted separately).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencyAgg {
+    /// Servings recorded.
+    pub count: u64,
+    /// Sum of latencies, seconds.
+    pub total_s: f64,
+    /// Fastest serving, seconds (0 until the first record).
+    pub min_s: f64,
+    /// Slowest serving, seconds.
+    pub max_s: f64,
+}
+
+impl LatencyAgg {
+    /// Fold one serving's wall-clock into the aggregate.
+    pub fn record(&mut self, secs: f64) {
+        if self.count == 0 || secs < self.min_s {
+            self.min_s = secs;
+        }
+        if secs > self.max_s {
+            self.max_s = secs;
+        }
+        self.count += 1;
+        self.total_s += secs;
+    }
+
+    /// Mean serving latency in seconds (0 when nothing was recorded).
+    pub fn mean_s(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total_s / self.count as f64
+        }
+    }
+
+    /// JSON object for the `stats` response.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("count", Json::Num(self.count as f64));
+        j.set("mean_s", Json::Num(self.mean_s()));
+        j.set("min_s", Json::Num(self.min_s));
+        j.set("max_s", Json::Num(self.max_s));
+        j
+    }
+}
+
+/// One consistent snapshot of every daemon counter, as returned by the
+/// `stats` request and printed on shutdown.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeStats {
+    /// Search-cache counters, cumulative across restarts when the daemon
+    /// persists to a `--cache-dir` (prior-process totals are replayed
+    /// from the snapshot header).
+    pub cache: CacheStats,
+    /// Optimise requests admitted (all provenances, including failures).
+    pub requests: u64,
+    /// Requests that ran a live search.
+    pub fresh_searches: u64,
+    /// Requests answered from the persistent cache.
+    pub served_from_cache: u64,
+    /// Requests that attached to another request's in-flight search.
+    pub coalesced: u64,
+    /// Requests shed with the `overloaded` error (queue full).
+    pub rejected_overload: u64,
+    /// Requests that hit their wall-clock budget.
+    pub timeouts: u64,
+    /// Lines that failed request decoding.
+    pub bad_requests: u64,
+    /// Jobs waiting in the admission queue right now.
+    pub queue_depth: usize,
+    /// Requests inside the serve core right now (leaders + followers).
+    pub in_flight: usize,
+    /// Latency aggregate over successful servings.
+    pub latency: LatencyAgg,
+}
+
+impl ServeStats {
+    /// JSON object for the `stats` response.
+    pub fn to_json(&self) -> Json {
+        let mut cache = Json::obj();
+        cache.set("result_hits", Json::Num(self.cache.result_hits as f64));
+        cache.set("result_misses", Json::Num(self.cache.result_misses as f64));
+        cache.set("evictions", Json::Num(self.cache.evictions as f64));
+        cache.set("result_entries", Json::Num(self.cache.result_entries as f64));
+        cache.set("cost_entries", Json::Num(self.cache.cost_entries as f64));
+        let mut j = Json::obj();
+        j.set("cache", cache);
+        j.set("requests", Json::Num(self.requests as f64));
+        j.set("fresh_searches", Json::Num(self.fresh_searches as f64));
+        j.set("served_from_cache", Json::Num(self.served_from_cache as f64));
+        j.set("coalesced", Json::Num(self.coalesced as f64));
+        j.set("rejected_overload", Json::Num(self.rejected_overload as f64));
+        j.set("timeouts", Json::Num(self.timeouts as f64));
+        j.set("bad_requests", Json::Num(self.bad_requests as f64));
+        j.set("queue_depth", Json::Num(self.queue_depth as f64));
+        j.set("in_flight", Json::Num(self.in_flight as f64));
+        j.set("latency", self.latency.to_json());
+        j
+    }
+}
+
+/// One-line summary, printed by the daemon on shutdown and by
+/// `rlflow request --stats`.
+impl std::fmt::Display for ServeStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} requests ({} fresh, {} cached, {} coalesced; {} shed, {} timed out, {} bad); \
+             queue {} / in-flight {}; mean latency {:.3}s; cache: {}",
+            self.requests,
+            self.fresh_searches,
+            self.served_from_cache,
+            self.coalesced,
+            self.rejected_overload,
+            self.timeouts,
+            self.bad_requests,
+            self.queue_depth,
+            self.in_flight,
+            self.latency.mean_s(),
+            self.cache
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_agg_tracks_extremes_and_mean() {
+        let mut a = LatencyAgg::default();
+        assert_eq!(a.mean_s(), 0.0);
+        a.record(0.2);
+        a.record(0.1);
+        a.record(0.6);
+        assert_eq!(a.count, 3);
+        assert!((a.min_s - 0.1).abs() < 1e-12);
+        assert!((a.max_s - 0.6).abs() < 1e-12);
+        assert!((a.mean_s() - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_json_has_every_counter() {
+        let s = ServeStats {
+            cache: CacheStats {
+                result_hits: 2,
+                result_misses: 1,
+                evictions: 0,
+                result_entries: 1,
+                cost_entries: 5,
+            },
+            requests: 3,
+            fresh_searches: 1,
+            served_from_cache: 1,
+            coalesced: 1,
+            rejected_overload: 4,
+            timeouts: 0,
+            bad_requests: 2,
+            queue_depth: 1,
+            in_flight: 2,
+            latency: LatencyAgg::default(),
+        };
+        let j = s.to_json();
+        assert_eq!(j.get("requests").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.get("rejected_overload").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(j.get("cache").unwrap().get("result_hits").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("latency").unwrap().get("count").unwrap().as_usize().unwrap(), 0);
+        // The Display line exists and mentions the shed count.
+        assert!(s.to_string().contains("4 shed"));
+    }
+}

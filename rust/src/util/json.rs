@@ -2,8 +2,17 @@
 //!
 //! The offline build environment carries no serde; this module covers the
 //! crate's JSON needs — the artifact manifest (read), the ONNX-style model
-//! format (read/write) and experiment outputs (write). It parses the full
-//! JSON grammar except exotic escapes (`\uXXXX` is supported).
+//! format (read/write), experiment outputs (write) and the `rlflow serve`
+//! wire protocol (read/write of untrusted bytes). It parses the full JSON
+//! grammar except exotic escapes (`\uXXXX` is supported).
+//!
+//! # Untrusted input
+//!
+//! [`parse`] is safe to run on adversarial bytes: nesting is bounded by
+//! [`MAX_DEPTH`] (a `[[[[...` bomb returns `Err` instead of overflowing the
+//! recursive parser's stack) and input length by [`MAX_INPUT_BYTES`].
+//! Callers with tighter budgets (the serve daemon caps request lines well
+//! below the default) use [`parse_with_limits`].
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -192,10 +201,36 @@ fn write_escaped(out: &mut String, s: &str) {
 // Parser
 // ---------------------------------------------------------------------------
 
+/// Default maximum container-nesting depth [`parse`] accepts. Deep enough
+/// for every document the crate produces (manifests, graphs, rulesets nest
+/// a handful of levels), shallow enough that the recursive-descent parser
+/// cannot be driven anywhere near stack exhaustion.
+pub const MAX_DEPTH: usize = 128;
+
+/// Default maximum input size [`parse`] accepts (64 MiB).
+pub const MAX_INPUT_BYTES: usize = 64 << 20;
+
+/// Parse a complete JSON document under the default limits
+/// ([`MAX_DEPTH`], [`MAX_INPUT_BYTES`]). Returns `Err` — never panics or
+/// overflows the stack — on malformed, oversized or adversarially nested
+/// input.
 pub fn parse(text: &str) -> anyhow::Result<Json> {
+    parse_with_limits(text, MAX_INPUT_BYTES, MAX_DEPTH)
+}
+
+/// [`parse`] with explicit limits: inputs longer than `max_bytes` or
+/// nesting containers deeper than `max_depth` are rejected up front /
+/// mid-parse with a descriptive error.
+pub fn parse_with_limits(text: &str, max_bytes: usize, max_depth: usize) -> anyhow::Result<Json> {
+    anyhow::ensure!(
+        text.len() <= max_bytes,
+        "input too large: {} bytes exceeds the {} byte limit",
+        text.len(),
+        max_bytes
+    );
     let bytes = text.as_bytes();
     let mut pos = 0usize;
-    let value = parse_value(bytes, &mut pos)?;
+    let value = parse_value(bytes, &mut pos, max_depth)?;
     skip_ws(bytes, &mut pos);
     anyhow::ensure!(pos == bytes.len(), "trailing garbage at byte {}", pos);
     Ok(value)
@@ -207,12 +242,12 @@ fn skip_ws(b: &[u8], pos: &mut usize) {
     }
 }
 
-fn parse_value(b: &[u8], pos: &mut usize) -> anyhow::Result<Json> {
+fn parse_value(b: &[u8], pos: &mut usize, depth: usize) -> anyhow::Result<Json> {
     skip_ws(b, pos);
     anyhow::ensure!(*pos < b.len(), "unexpected end of input");
     match b[*pos] {
-        b'{' => parse_obj(b, pos),
-        b'[' => parse_arr(b, pos),
+        b'{' => parse_obj(b, pos, depth),
+        b'[' => parse_arr(b, pos, depth),
         b'"' => Ok(Json::Str(parse_string(b, pos)?)),
         b't' => {
             expect(b, pos, "true")?;
@@ -241,7 +276,8 @@ fn expect(b: &[u8], pos: &mut usize, word: &str) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn parse_obj(b: &[u8], pos: &mut usize) -> anyhow::Result<Json> {
+fn parse_obj(b: &[u8], pos: &mut usize, depth: usize) -> anyhow::Result<Json> {
+    anyhow::ensure!(depth > 0, "nesting too deep at byte {}", pos);
     *pos += 1; // '{'
     let mut map = BTreeMap::new();
     skip_ws(b, pos);
@@ -255,7 +291,7 @@ fn parse_obj(b: &[u8], pos: &mut usize) -> anyhow::Result<Json> {
         skip_ws(b, pos);
         anyhow::ensure!(*pos < b.len() && b[*pos] == b':', "expected ':' at byte {}", pos);
         *pos += 1;
-        let val = parse_value(b, pos)?;
+        let val = parse_value(b, pos, depth - 1)?;
         map.insert(key, val);
         skip_ws(b, pos);
         anyhow::ensure!(*pos < b.len(), "unterminated object");
@@ -270,7 +306,8 @@ fn parse_obj(b: &[u8], pos: &mut usize) -> anyhow::Result<Json> {
     }
 }
 
-fn parse_arr(b: &[u8], pos: &mut usize) -> anyhow::Result<Json> {
+fn parse_arr(b: &[u8], pos: &mut usize, depth: usize) -> anyhow::Result<Json> {
+    anyhow::ensure!(depth > 0, "nesting too deep at byte {}", pos);
     *pos += 1; // '['
     let mut v = Vec::new();
     skip_ws(b, pos);
@@ -279,7 +316,7 @@ fn parse_arr(b: &[u8], pos: &mut usize) -> anyhow::Result<Json> {
         return Ok(Json::Arr(v));
     }
     loop {
-        v.push(parse_value(b, pos)?);
+        v.push(parse_value(b, pos, depth - 1)?);
         skip_ws(b, pos);
         anyhow::ensure!(*pos < b.len(), "unterminated array");
         match b[*pos] {
@@ -406,6 +443,48 @@ mod tests {
     #[test]
     fn unicode_escape() {
         assert_eq!(parse("\"\\u0041\"").unwrap(), Json::Str("A".into()));
+    }
+
+    #[test]
+    fn deep_nesting_rejected_not_overflowed() {
+        // Far past MAX_DEPTH: must come back as Err long before the
+        // recursive parser could threaten the stack. Unbalanced is fine —
+        // the depth check fires on the way down.
+        for open in ["[", "{\"k\":"] {
+            let deep = format!("{}0", open.repeat(50_000));
+            assert!(parse(&deep).is_err(), "deep '{open}' input must be rejected");
+        }
+        for (open, close) in [("[", "]"), ("{\"k\":", "}")] {
+            let balanced = format!("{}0{}", open.repeat(200), close.repeat(200));
+            assert!(
+                parse(&balanced).is_err(),
+                "nesting past MAX_DEPTH must be rejected even when balanced"
+            );
+        }
+    }
+
+    #[test]
+    fn nesting_within_limit_parses() {
+        let depth = MAX_DEPTH - 1;
+        let src = format!("{}0{}", "[".repeat(depth), "]".repeat(depth));
+        assert!(parse(&src).is_ok(), "nesting under the limit must still parse");
+    }
+
+    #[test]
+    fn oversized_input_rejected() {
+        // Custom tight budget: 11 bytes of input against a 10-byte limit.
+        let src = "[1,2,3,4,5]";
+        assert_eq!(src.len(), 11);
+        assert!(parse_with_limits(src, 10, MAX_DEPTH).is_err());
+        assert!(parse_with_limits(src, 11, MAX_DEPTH).is_ok());
+    }
+
+    #[test]
+    fn custom_depth_limit_applies() {
+        assert!(parse_with_limits("[[1]]", MAX_INPUT_BYTES, 2).is_ok());
+        assert!(parse_with_limits("[[[1]]]", MAX_INPUT_BYTES, 2).is_err());
+        assert!(parse_with_limits("{\"a\":{\"b\":1}}", MAX_INPUT_BYTES, 2).is_ok());
+        assert!(parse_with_limits("{\"a\":{\"b\":[1]}}", MAX_INPUT_BYTES, 2).is_err());
     }
 
     #[test]

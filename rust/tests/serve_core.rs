@@ -1,0 +1,267 @@
+//! Serve-subsystem contracts, pinned without (and then once with) a
+//! socket:
+//!
+//! * **Coalescing** — N concurrent identical requests execute exactly one
+//!   search; every caller receives byte-identical payload bytes.
+//! * **Warm-restart determinism** — a core reopened on a persisted
+//!   cache dir answers previously-served requests from cache,
+//!   bit-identically, with hit/miss counters carried across the restart.
+//! * **Admission control** — queue overflow is the typed `overloaded`
+//!   error on the wire, never a hang.
+//! * **End-to-end** — the TCP daemon on a loopback port serves the same
+//!   contracts through the newline-delimited JSON protocol.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Barrier};
+
+use rlflow::graph::{GraphBuilder, PadMode};
+use rlflow::serve::{
+    BoundedQueue, ErrorCode, Method, OptimizeRequest, Provenance, PushError, Response,
+    ServeConfig, ServeCore, ServerConfig,
+};
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("rlflow-serve-test-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// A small CNN fragment with real substitution opportunities, so served
+/// searches exercise actual rewrites (not just empty logs).
+fn small_graph() -> rlflow::graph::Graph {
+    let mut b = GraphBuilder::new();
+    let x = b.input(&[1, 3, 8, 8]);
+    let c1 = b.conv(x, 4, 3, 1, PadMode::Same).unwrap();
+    let r1 = b.relu(c1).unwrap();
+    let c2 = b.conv(r1, 4, 3, 1, PadMode::Same).unwrap();
+    let _ = b.relu(c2).unwrap();
+    b.finish()
+}
+
+fn small_request() -> OptimizeRequest {
+    OptimizeRequest {
+        graph: small_graph(),
+        graph_name: "small".into(),
+        method: Method::Greedy { max_steps: 8 },
+        cost_noise: 0.0,
+        noise_seed: 0,
+        timeout_ms: None,
+    }
+}
+
+fn single_thread_core(cache_dir: Option<PathBuf>) -> ServeCore {
+    ServeCore::open(&ServeConfig { cache_dir, threads: 1, ..Default::default() }).unwrap()
+}
+
+#[test]
+fn concurrent_identical_requests_coalesce_to_one_search() {
+    const N: usize = 8;
+    let core = Arc::new(single_thread_core(None));
+    let barrier = Arc::new(Barrier::new(N));
+    let mut payloads = Vec::new();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..N)
+            .map(|_| {
+                let core = Arc::clone(&core);
+                let barrier = Arc::clone(&barrier);
+                scope.spawn(move || {
+                    let req = small_request();
+                    barrier.wait();
+                    let out = core.optimize(&req, None).expect("serving must not fail");
+                    (out.provenance, out.payload("small").unwrap().to_string_compact())
+                })
+            })
+            .collect();
+        for h in handles {
+            payloads.push(h.join().unwrap());
+        }
+    });
+
+    // Exactly one live search ran, whatever the interleaving: every other
+    // request either coalesced onto it or hit the memo it stored.
+    let stats = core.stats(0);
+    assert_eq!(stats.fresh_searches, 1, "N identical requests must run one search");
+    assert_eq!(stats.requests, N as u64);
+    assert_eq!(
+        stats.fresh_searches + stats.served_from_cache + stats.coalesced,
+        N as u64,
+        "every request must be accounted to exactly one provenance"
+    );
+    let fresh = payloads.iter().filter(|(p, _)| *p == Provenance::Fresh).count();
+    assert_eq!(fresh, 1, "exactly one caller may observe `fresh`");
+    // All N callers got the same bytes.
+    let first = &payloads[0].1;
+    assert!(payloads.iter().all(|(_, bytes)| bytes == first), "payload bytes must be identical");
+    assert_eq!(core.cache().stats().result_misses, 1, "only the leader consulted the memo cold");
+}
+
+#[test]
+fn warm_restart_serves_bit_identical_responses() {
+    let dir = tmpdir("warm-restart");
+    let req = small_request();
+
+    // First process: one fresh search, one memo hit, then a snapshot.
+    let (cold_bytes, warm_bytes) = {
+        let core = single_thread_core(Some(dir.clone()));
+        assert_eq!(core.replayed(), 0);
+        let first = core.optimize(&req, None).unwrap();
+        assert_eq!(first.provenance, Provenance::Fresh);
+        let second = core.optimize(&req, None).unwrap();
+        assert_eq!(second.provenance, Provenance::Cache);
+        core.flush().unwrap();
+        (
+            first.payload("small").unwrap().to_string_compact(),
+            second.payload("small").unwrap().to_string_compact(),
+        )
+    };
+    assert_eq!(cold_bytes, warm_bytes, "provenance must not leak into the payload");
+
+    // Second process, same cache dir: the replayed memo answers the same
+    // request bit-identically, and the counters carried over.
+    let core2 = single_thread_core(Some(dir.clone()));
+    assert_eq!(core2.replayed(), 1, "the persisted result must replay");
+    let prior = core2.cache_stats();
+    assert_eq!(prior.result_hits, 1, "first process's hit survives the restart");
+    assert_eq!(prior.result_misses, 1, "first process's miss survives the restart");
+    let restarted = core2.optimize(&req, None).unwrap();
+    assert_eq!(restarted.provenance, Provenance::Cache, "warm restart must hit");
+    assert_eq!(
+        restarted.payload("small").unwrap().to_string_compact(),
+        cold_bytes,
+        "warm-restarted response must be byte-identical to the pre-restart process"
+    );
+    assert_eq!(core2.cache_stats().result_hits, 2);
+
+    // Third generation (restart of a restart, log-only replay this time).
+    drop(core2);
+    let core3 = single_thread_core(Some(dir.clone()));
+    assert_eq!(core3.replayed(), 1);
+    let again = core3.optimize(&req, None).unwrap();
+    assert_eq!(again.provenance, Provenance::Cache);
+    assert_eq!(again.payload("small").unwrap().to_string_compact(), cold_bytes);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn queue_overflow_is_the_typed_overloaded_error() {
+    let q: BoundedQueue<u32> = BoundedQueue::new(2);
+    q.push(1).unwrap();
+    q.push(2).unwrap();
+    let err = q.push(3).unwrap_err();
+    assert_eq!(err, PushError::Overloaded { depth: 2 });
+    // ... and the server maps it to the protocol's typed error, so a
+    // client sees an explicit response, never a hang.
+    let resp = Response::error(ErrorCode::Overloaded, "queue full (2 queued)");
+    let line = resp.encode();
+    assert!(line.contains("\"code\":\"overloaded\""), "wire line was {line}");
+    match Response::decode(&line).unwrap() {
+        Response::Error { code, .. } => assert_eq!(code, ErrorCode::Overloaded),
+        other => panic!("decoded wrong variant: {other:?}"),
+    }
+}
+
+#[test]
+fn persisted_stats_accumulate_across_generations() {
+    let dir = tmpdir("stats-accumulate");
+    let req = small_request();
+    {
+        let core = single_thread_core(Some(dir.clone()));
+        core.optimize(&req, None).unwrap(); // miss
+        core.optimize(&req, None).unwrap(); // hit
+        core.flush().unwrap();
+    }
+    {
+        let core = single_thread_core(Some(dir.clone()));
+        core.optimize(&req, None).unwrap(); // hit (replayed memo)
+        core.flush().unwrap();
+    }
+    let core = single_thread_core(Some(dir.clone()));
+    let stats = core.cache_stats();
+    assert_eq!(stats.result_hits, 2, "hits from both generations accumulate");
+    assert_eq!(stats.result_misses, 1, "the one cold miss is never recounted");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end over a loopback socket
+// ---------------------------------------------------------------------------
+
+#[test]
+fn daemon_end_to_end_on_loopback() {
+    use rlflow::serve::{client, encode_control, encode_optimize};
+
+    let dir = tmpdir("e2e");
+    let mut cfg = ServerConfig::new("127.0.0.1:0");
+    cfg.workers = 2;
+    cfg.core.threads = 1;
+    cfg.core.cache_dir = Some(dir.clone());
+    let handle = rlflow::serve::spawn(cfg.clone()).unwrap();
+    let addr = handle.addr.to_string();
+    let timeout = std::time::Duration::from_secs(60);
+
+    // Liveness.
+    match client::roundtrip(&addr, &encode_control("ping"), timeout).unwrap() {
+        Response::Pong => {}
+        other => panic!("expected pong, got {other:?}"),
+    }
+
+    // First serving is fresh, second is a cache hit with identical bytes.
+    let line = encode_optimize(&small_request()).unwrap();
+    let first = match client::roundtrip(&addr, &line, timeout).unwrap() {
+        Response::Result { payload, provenance, .. } => {
+            assert_eq!(provenance, Provenance::Fresh);
+            payload.to_string_compact()
+        }
+        other => panic!("expected result, got {other:?}"),
+    };
+    let second = match client::roundtrip(&addr, &line, timeout).unwrap() {
+        Response::Result { payload, provenance, .. } => {
+            assert_eq!(provenance, Provenance::Cache);
+            payload.to_string_compact()
+        }
+        other => panic!("expected result, got {other:?}"),
+    };
+    assert_eq!(first, second, "cache hit must return the fresh serving's bytes");
+
+    // Malformed lines get a typed bad_request, and the daemon survives.
+    match client::roundtrip(&addr, "{\"type\":\"warp\"}", timeout).unwrap() {
+        Response::Error { code, .. } => assert_eq!(code, ErrorCode::BadRequest),
+        other => panic!("expected bad_request, got {other:?}"),
+    }
+
+    // Stats reflect the traffic.
+    match client::roundtrip(&addr, &encode_control("stats"), timeout).unwrap() {
+        Response::Stats(stats) => {
+            assert_eq!(stats.get("requests").unwrap().as_usize().unwrap(), 2);
+            assert_eq!(stats.get("fresh_searches").unwrap().as_usize().unwrap(), 1);
+            assert_eq!(stats.get("served_from_cache").unwrap().as_usize().unwrap(), 1);
+            assert_eq!(stats.get("bad_requests").unwrap().as_usize().unwrap(), 1);
+        }
+        other => panic!("expected stats, got {other:?}"),
+    }
+
+    // Graceful drain via the control request.
+    match client::roundtrip(&addr, &encode_control("shutdown"), timeout).unwrap() {
+        Response::Ok(detail) => assert_eq!(detail, "draining"),
+        other => panic!("expected ok, got {other:?}"),
+    }
+    handle.join().unwrap();
+
+    // Warm restart on the same cache dir: the hit survives the process.
+    let handle2 = rlflow::serve::spawn(cfg).unwrap();
+    let addr2 = handle2.addr.to_string();
+    match client::roundtrip(&addr2, &line, timeout).unwrap() {
+        Response::Result { payload, provenance, .. } => {
+            assert_eq!(provenance, Provenance::Cache, "warm restart must hit");
+            assert_eq!(payload.to_string_compact(), first, "restart must be bit-identical");
+        }
+        other => panic!("expected result, got {other:?}"),
+    }
+    match client::roundtrip(&addr2, &encode_control("shutdown"), timeout).unwrap() {
+        Response::Ok(_) => {}
+        other => panic!("expected ok, got {other:?}"),
+    }
+    handle2.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
