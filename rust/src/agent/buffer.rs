@@ -71,6 +71,11 @@ pub struct Episode {
     pub dones: Vec<f32>,
     /// Latents per state, filled in by the encoder pass (empty until then).
     pub z: Vec<Vec<f32>>,
+    /// Version of the policy params the episode was collected under
+    /// (`ParamStore::version`; 0 = the random collection policy). A
+    /// learner batch must never mix versions — see
+    /// [`uniform_policy_version`] and `PpoBuffer::note_version`.
+    pub policy_version: u64,
 }
 
 impl Episode {
@@ -85,6 +90,26 @@ impl Episode {
     pub fn total_reward(&self) -> f32 {
         self.rewards.iter().sum()
     }
+}
+
+/// The single policy version a batch of episodes was collected under.
+/// Errors if the set is empty or spans two versions — the guard the
+/// async pipeline's learner stages run before assembling any training
+/// batch (a schedule must never let trajectories from two policy
+/// versions meet in one update).
+pub fn uniform_policy_version(episodes: &[Episode]) -> anyhow::Result<u64> {
+    let first = episodes
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("no episodes to take a policy version from"))?
+        .policy_version;
+    for ep in episodes {
+        anyhow::ensure!(
+            ep.policy_version == first,
+            "refusing to mix trajectories from policy versions {first} and {} in one batch",
+            ep.policy_version
+        );
+    }
+    Ok(first)
 }
 
 /// Generalised Advantage Estimation over one episode's rewards/values.
@@ -173,6 +198,26 @@ mod tests {
         let (adv, _) = gae(&rewards, &values, &dones, 0.9, 1.0);
         assert!(adv[0] > 0.0 && adv[0] < adv[1] && adv[1] < adv[2]);
         assert!((adv[2] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn policy_version_defaults_to_random_policy() {
+        assert_eq!(Episode::default().policy_version, 0, "0 tags the random collection policy");
+    }
+
+    #[test]
+    fn uniform_policy_version_accepts_one_version_only() {
+        let mut a = Episode::default();
+        a.policy_version = 3;
+        let mut b = Episode::default();
+        b.policy_version = 3;
+        assert_eq!(uniform_policy_version(&[a.clone(), b.clone()]).unwrap(), 3);
+        // Boundary: the very first episode of the *next* version must be
+        // rejected from the previous version's batch.
+        b.policy_version = 4;
+        let err = uniform_policy_version(&[a, b]).unwrap_err();
+        assert!(err.to_string().contains("refusing to mix"), "got: {err}");
+        assert!(uniform_policy_version(&[]).is_err(), "empty batch has no version");
     }
 
     #[test]

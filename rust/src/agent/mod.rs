@@ -9,7 +9,7 @@ pub mod ppo;
 pub mod random;
 
 pub use action::{Action, ActionSpace};
-pub use buffer::{gae, CompactState, Episode};
+pub use buffer::{gae, uniform_policy_version, CompactState, Episode};
 pub use policy::{masked_log_softmax, ActOut, ObsBatch, PolicyDims, PolicyNet};
 pub use ppo::{ppo_update, PpoBatch, PpoBuffer, PpoCfg, PpoStats};
 pub use random::{collect_one, collect_random_episodes, collect_random_pool};

@@ -44,6 +44,10 @@ pub struct PpoBuffer {
     pub ret: Vec<f32>,
     pub xmask: Vec<Vec<f32>>,
     pub lmask: Vec<Vec<f32>>,
+    /// Policy version the buffered transitions were acted under, set by
+    /// the first [`PpoBuffer::note_version`] (`None` until then). One
+    /// buffer = one PPO batch = one version; see `note_version`.
+    version: Option<u64>,
 }
 
 /// An owned, fixed-size `ctrl_train` batch; [`PpoBatch::views`] borrows it
@@ -110,6 +114,32 @@ impl PpoBuffer {
 
     pub fn clear(&mut self) {
         *self = Self::default();
+    }
+
+    /// Declare the policy version (`ParamStore::version`) the transitions
+    /// being pushed were acted under. The first call pins the buffer's
+    /// version; a later call with a *different* version is a typed error
+    /// — a PPO batch must never mix trajectories collected under two
+    /// policy versions (the importance ratios would silently be computed
+    /// against the wrong behaviour policy). [`PpoBuffer::clear`] resets
+    /// the pin along with the data.
+    pub fn note_version(&mut self, version: u64) -> anyhow::Result<()> {
+        match self.version {
+            None => {
+                self.version = Some(version);
+                Ok(())
+            }
+            Some(v) if v == version => Ok(()),
+            Some(v) => anyhow::bail!(
+                "refusing to mix trajectories from policy versions {v} and {version} \
+                 in one PPO batch"
+            ),
+        }
+    }
+
+    /// The pinned policy version, if [`PpoBuffer::note_version`] ran.
+    pub fn policy_version(&self) -> Option<u64> {
+        self.version
     }
 
     /// Materialise the fixed-size train batch (sampling with replacement
@@ -236,5 +266,31 @@ mod tests {
         let buf = PpoBuffer::default();
         let mut rng = Rng::new(2);
         assert!(buf.batch(&dims(), 16, &mut rng).is_err());
+    }
+
+    #[test]
+    fn note_version_pins_one_policy_version() {
+        let mut buf = PpoBuffer::default();
+        assert_eq!(buf.policy_version(), None);
+        buf.note_version(5).unwrap();
+        push_n(&mut buf, 2);
+        buf.note_version(5).unwrap(); // same version: fine
+        assert_eq!(buf.policy_version(), Some(5));
+        // Boundary: the first transition collected under the *next*
+        // params must be rejected from this batch.
+        let err = buf.note_version(6).unwrap_err();
+        assert!(err.to_string().contains("refusing to mix"), "got: {err}");
+    }
+
+    #[test]
+    fn clear_resets_the_version_pin() {
+        let mut buf = PpoBuffer::default();
+        buf.note_version(5).unwrap();
+        push_n(&mut buf, 2);
+        buf.clear();
+        assert!(buf.is_empty());
+        assert_eq!(buf.policy_version(), None);
+        buf.note_version(6).unwrap(); // a fresh buffer may start the next version
+        assert_eq!(buf.policy_version(), Some(6));
     }
 }

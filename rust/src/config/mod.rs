@@ -44,6 +44,20 @@ pub struct RunConfig {
     /// Evaluation.
     pub eval_episodes: usize,
     pub eval_greedy: bool,
+    /// Run training through the async actor/learner pipeline
+    /// (`coordinator::pipeline_async`) instead of the synchronous
+    /// reference path. CLI `--async` or `-s async=true`.
+    pub train_async: bool,
+    /// Actor/learner rounds the async pipeline splits the training
+    /// budget across (collection, AE, WM and dream budgets are divided
+    /// round-robin over rounds).
+    pub async_rounds: usize,
+    /// Worker threads per pipeline stage that fans out (the collector's
+    /// `EnvPool`).
+    pub async_stage_threads: usize,
+    /// Capacity of the bounded staging buffer between the collector and
+    /// the learner stages (backpressure bound; min 1).
+    pub async_staging_cap: usize,
 }
 
 impl Default for RunConfig {
@@ -70,6 +84,10 @@ impl Default for RunConfig {
             free_episodes_per_iter: 4,
             eval_episodes: 5,
             eval_greedy: false,
+            train_async: false,
+            async_rounds: 2,
+            async_stage_threads: 2,
+            async_staging_cap: 8,
         }
     }
 }
@@ -156,6 +174,10 @@ impl RunConfig {
                 "free_episodes_per_iter" => self.free_episodes_per_iter = value.as_usize()?,
                 "eval_episodes" => self.eval_episodes = value.as_usize()?,
                 "eval_greedy" => self.eval_greedy = value.as_bool()?,
+                "async" => self.train_async = value.as_bool()?,
+                "async_rounds" => self.async_rounds = value.as_usize()?,
+                "async_stage_threads" => self.async_stage_threads = value.as_usize()?,
+                "async_staging_cap" => self.async_staging_cap = value.as_usize()?,
                 other => anyhow::bail!("unknown config key '{}'", other),
             }
         }
@@ -217,6 +239,14 @@ mod tests {
         assert_eq!(cfg.envs, 8);
         cfg.apply_override("backend=host").unwrap();
         assert_eq!(cfg.backend, "host");
+        cfg.apply_override("async=true").unwrap();
+        assert!(cfg.train_async);
+        cfg.apply_override("async_rounds=3").unwrap();
+        assert_eq!(cfg.async_rounds, 3);
+        cfg.apply_override("async_stage_threads=4").unwrap();
+        assert_eq!(cfg.async_stage_threads, 4);
+        cfg.apply_override("async_staging_cap=2").unwrap();
+        assert_eq!(cfg.async_staging_cap, 2);
         assert!(cfg.apply_override("nonsense").is_err());
     }
 }

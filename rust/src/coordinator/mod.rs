@@ -13,10 +13,25 @@
 //!
 //! Model-free baseline (§4.4): PPO directly in the real environment via
 //! `train_model_free` — same controller artifacts, h ≡ 0.
+//!
+//! Asynchronous execution (`rlflow train --async`): `pipeline_async`
+//! runs the same macro-stages as pipelined micro-stages over bounded
+//! channels (`stage`), recording every cross-stage handoff to a
+//! replayable schedule trace (`trace`) — same seeds + same trace ⇒
+//! bit-identical final params.
 
 pub mod pipeline;
+pub mod pipeline_async;
+pub mod stage;
+pub mod trace;
 
 pub use pipeline::{EvalResult, Pipeline};
+pub use pipeline_async::{
+    replay_trace, train_async, train_reference, AsyncOutcome, AsyncTrainCfg, BackendFactory,
+    RoundEval,
+};
+pub use stage::{StageChannel, StageClosed};
+pub use trace::{Edge, Handoff, ScheduleTrace, TraceCursor, TraceSink, SHARD_BATCH};
 
 use crate::util::Rng;
 

@@ -118,6 +118,21 @@ impl<'e> Pipeline<'e> {
     ) -> anyhow::Result<Vec<f32>> {
         let pool: Vec<&crate::agent::CompactState> =
             episodes.iter().flat_map(|e| e.states.iter()).collect();
+        self.train_gnn_ae_states(gnn, &pool, steps, lr, rng)
+    }
+
+    /// [`Pipeline::train_gnn_ae`] on an explicit state pool. The async
+    /// pipeline's AE stage accumulates states across rounds and samples
+    /// from the growing pool directly; the episode-based entry point
+    /// above delegates here, so both paths share one sampling loop.
+    pub fn train_gnn_ae_states(
+        &self,
+        gnn: &mut ParamStore,
+        pool: &[&crate::agent::CompactState],
+        steps: usize,
+        lr: f32,
+        rng: &mut Rng,
+    ) -> anyhow::Result<Vec<f32>> {
         anyhow::ensure!(!pool.is_empty(), "no states to train on");
         let mut losses = Vec::with_capacity(steps);
         for _ in 0..steps {
@@ -318,14 +333,48 @@ impl<'e> Pipeline<'e> {
             .filter(|e| !e.z.is_empty())
             .map(|e| e.xmasks[0].clone())
             .collect();
+        self.train_controller_dream_seeded(
+            ctrl,
+            wm,
+            &z0,
+            &xm0,
+            epochs,
+            horizon,
+            temperature,
+            reward_scale,
+            ppo,
+            rng,
+        )
+    }
+
+    /// [`Pipeline::train_controller_dream`] on an explicit dream seed
+    /// pool (initial latents + xfer masks). The async pipeline's WM
+    /// stage ships the seed pool alongside its params, so the dream
+    /// stage never needs the episodes themselves; the episode-based
+    /// entry point above delegates here.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_controller_dream_seeded(
+        &self,
+        ctrl: &mut ParamStore,
+        wm: &ParamStore,
+        z0: &[Vec<f32>],
+        xm0: &[Vec<f32>],
+        epochs: usize,
+        horizon: usize,
+        temperature: f32,
+        reward_scale: f32,
+        ppo: &PpoCfg,
+        rng: &mut Rng,
+    ) -> anyhow::Result<Vec<f32>> {
         anyhow::ensure!(!z0.is_empty(), "no encoded episodes to seed the dream");
+        anyhow::ensure!(z0.len() == xm0.len(), "dream seed latents and masks must pair up");
 
         let mut dream = DreamEnv::new(self.backend, temperature, reward_scale)?;
         let all_locs = vec![1.0f32; self.dims.max_locs];
         let mut curve = Vec::with_capacity(epochs);
 
         for _ in 0..epochs {
-            dream.reset(&z0, &xm0)?;
+            dream.reset(z0, xm0)?;
             let b = dream.b;
             // Per-row trajectories.
             let mut traj: Vec<PpoRowTraj> = (0..b).map(|_| PpoRowTraj::default()).collect();
@@ -359,8 +408,12 @@ impl<'e> Pipeline<'e> {
                     );
                 }
             }
-            // Assemble PPO buffer with per-row GAE.
+            // Assemble PPO buffer with per-row GAE. Every trajectory in
+            // this epoch was acted under the current ctrl params; the
+            // buffer's version tag enforces that no later push mixes in
+            // data from another policy version.
             let mut buffer = PpoBuffer::default();
+            buffer.note_version(ctrl.version)?;
             let mut epoch_reward = 0.0f32;
             let mut rows = 0;
             for t in traj.into_iter().filter(|t| !t.rewards.is_empty()) {
@@ -602,6 +655,9 @@ impl<'e> Pipeline<'e> {
         let space = ActionSpace::new(self.dims.x1, env.noop_action());
         let h0 = vec![0.0f32; self.dims.rdim];
         let mut buffer = PpoBuffer::default();
+        // One iteration = one on-policy batch: every episode below acts
+        // under the same ctrl version (the update happens after).
+        buffer.note_version(ctrl.version)?;
         let mut total_reward = 0.0f32;
         for _ in 0..n_episodes {
             env.reset();

@@ -1,0 +1,1052 @@
+//! Asynchronous actor/learner pipeline with a replayable schedule-trace
+//! determinism contract.
+//!
+//! The synchronous pipeline (`experiments::train_model_based`) runs the
+//! paper's macro-stages strictly alternating: collect → GNN-AE → encode
+//! → WM → dream-PPO → eval, each stage idle while another runs. This
+//! module decomposes the same flow into pipelined micro-stages over
+//! bounded channels ([`StageChannel`]) on `std::thread::scope` — no
+//! async runtime, consistent with the crate's dependency-free rule:
+//!
+//! ```text
+//!  EnvPool shards ──streaming──▶ staging ──▶ AE ──▶ encoder ──▶ WM ──▶ dream ──▶ eval
+//!  (collect, round r+1)         (bounded)  (round r)  ...               (round r-k)
+//! ```
+//!
+//! Work is split into `rounds` batches: env shards stream round `r+1`
+//! trajectory blocks through the bounded staging buffer while the
+//! learner stages still train on round `r`; the GNN encoder runs as its
+//! own stage; world-model dreaming overlaps real-env evaluation of the
+//! previous round's params.
+//!
+//! **Determinism contract.** The dataflow is *round-synchronous*: every
+//! stage consumes exactly (all shard blocks of round `r`, the params of
+//! version `r`/`r+1`), so timing decides only *when* a handoff happens,
+//! never *what* it carries. Each handoff is recorded to a
+//! [`ScheduleTrace`] (edge, round, shard, param version consumed), and
+//! [`replay_trace`] re-executes the same handoff sequence through the
+//! sequential engine — so **same seeds + same trace ⇒ bit-identical
+//! final params**, the crate's oracle discipline (search, envs, kernels)
+//! extended across concurrency. [`train_reference`] is the synchronous
+//! oracle: the identical per-round arithmetic under the canonical
+//! schedule.
+//!
+//! Every stage thread builds its *own* backend instance through the
+//! [`BackendFactory`] (backends hold single-threaded interior state —
+//! `RefCell` stats and workspaces — and cannot be shared across
+//! threads); host-backend programs are pure functions of (params, args),
+//! so per-thread instances produce bit-identical numerics to one shared
+//! instance, which is what lets the sequential engine use a single
+//! backend for all stages.
+//!
+//! Randomness: collection uses the pool's per-env forked streams
+//! (persistent across rounds); AE/WM/dream each own a persistent
+//! per-stage stream advancing in round order; eval derives a fresh
+//! stream per round. No stream is shared between stages, so stage
+//! overlap cannot reorder draws.
+
+use std::collections::HashMap;
+
+use crate::agent::{collect_random_episodes, uniform_policy_version, CompactState, Episode};
+use crate::config::RunConfig;
+use crate::cost::CostModel;
+use crate::env::{EnvPool, EnvPoolConfig, StateEncoder};
+use crate::graph::Graph;
+use crate::runtime::{Backend, ParamStore};
+use crate::util::Rng;
+use crate::wm::{WmLosses, WmTrainer};
+use crate::xfer::library::standard_library;
+
+use super::pipeline::{EvalResult, Pipeline};
+use super::stage::StageChannel;
+use super::trace::{Edge, ScheduleTrace, TraceCursor, TraceSink, SHARD_BATCH};
+
+/// Builds one backend instance per stage thread. Backends hold
+/// single-threaded interior state, so every stage constructs its own;
+/// each call must return an identically-configured backend (host
+/// programs are pure functions of params + args, so per-instance
+/// numerics are bit-identical).
+pub type BackendFactory = dyn Fn() -> anyhow::Result<Box<dyn Backend>> + Sync;
+
+// Domain separators for the per-stage RNG streams (arbitrary, distinct).
+const STREAM_AE: u64 = 0x5AE0_11AE_5AE0_11AE;
+const STREAM_WM: u64 = 0x3D97_00AA_C0FF_EE01;
+const STREAM_DREAM: u64 = 0xD2EA_A10D_2EAA_10D2;
+const STREAM_EVAL: u64 = 0xE7A1_5EED_E7A1_5EED;
+const STREAM_EVAL_POOL: u64 = 0x9001_BEEF_9001_BEEF;
+
+/// Shape of an async training run.
+#[derive(Debug, Clone)]
+pub struct AsyncTrainCfg {
+    /// Number of pipelined batches the run's budgets split into
+    /// (collect episodes, AE steps, WM steps, dream epochs each split
+    /// round-robin across rounds).
+    pub rounds: usize,
+    /// Worker threads inside the parallel stages (the collector's
+    /// `EnvPool` fan-out). Never affects results — pinned by
+    /// `tests/pipeline_async.rs`.
+    pub stage_threads: usize,
+    /// Staging-buffer capacity in shard blocks: bounds how far the
+    /// collector runs ahead of the auto-encoder (backpressure, never
+    /// drop).
+    pub staging_cap: usize,
+    /// Test-only seeded timing jitter: `Some(seed)` sleeps 0–2 ms at
+    /// each handoff, deterministically per (round, shard), to shake the
+    /// schedule without touching any data. Must not change results.
+    pub jitter: Option<u64>,
+}
+
+impl AsyncTrainCfg {
+    /// The async knobs a [`RunConfig`] carries.
+    pub fn from_run(cfg: &RunConfig) -> Self {
+        Self {
+            rounds: cfg.async_rounds,
+            stage_threads: cfg.async_stage_threads,
+            staging_cap: cfg.async_staging_cap,
+            jitter: None,
+        }
+    }
+}
+
+/// Real-env evaluation results for one round's params.
+#[derive(Debug, Clone, Default)]
+pub struct RoundEval {
+    /// Round whose (GNN, WM, controller) version `round + 1` was evaluated.
+    pub round: u32,
+    /// Per-episode results (`cfg.eval_episodes` pool rows).
+    pub results: Vec<EvalResult>,
+}
+
+/// Everything an async (or reference, or replayed) run produces.
+#[derive(Debug, Clone)]
+pub struct AsyncOutcome {
+    /// Final GNN auto-encoder params (version `rounds`).
+    pub gnn: ParamStore,
+    /// Final world-model params (version `rounds`).
+    pub wm: ParamStore,
+    /// Final controller params (version `rounds`).
+    pub ctrl: ParamStore,
+    /// AE loss per training step, concatenated across rounds.
+    pub ae_losses: Vec<f32>,
+    /// WM losses per training step, concatenated across rounds.
+    pub wm_curve: Vec<WmLosses>,
+    /// Mean predicted dream reward per PPO epoch, concatenated.
+    pub dream_curve: Vec<f32>,
+    /// Per-round real-env evaluations.
+    pub evals: Vec<RoundEval>,
+    /// The recorded schedule (replayable via [`replay_trace`]).
+    pub trace: ScheduleTrace,
+}
+
+// ---------------------------------------------------------------------------
+// Work plan: deterministic per-round budget split
+// ---------------------------------------------------------------------------
+
+/// Round-robin split: part `i` of `parts` gets `total/parts` plus one of
+/// the `total % parts` leftovers.
+fn quota(total: usize, parts: usize, i: usize) -> usize {
+    total / parts + usize::from(i < total % parts)
+}
+
+/// The per-round work plan derived from (RunConfig, AsyncTrainCfg) —
+/// pure arithmetic, identical for every executor.
+struct Plan {
+    rounds: usize,
+    n_envs: usize,
+    /// `env_counts[r][i]`: episodes env shard `i` collects in round `r`.
+    env_counts: Vec<Vec<usize>>,
+    ae_steps: Vec<usize>,
+    wm_steps: Vec<usize>,
+    dream_epochs: Vec<usize>,
+}
+
+impl Plan {
+    fn new(cfg: &RunConfig, acfg: &AsyncTrainCfg) -> anyhow::Result<Plan> {
+        anyhow::ensure!(cfg.collect_episodes >= 1, "async training needs collect_episodes >= 1");
+        let rounds = acfg.rounds.max(1);
+        // Same clamp as collect_random_parallel: never more envs than episodes.
+        let n_envs = cfg.envs.max(1).min(cfg.collect_episodes);
+        let env_counts = (0..rounds)
+            .map(|r| {
+                let in_round = quota(cfg.collect_episodes, rounds, r);
+                (0..n_envs).map(|i| quota(in_round, n_envs, i)).collect()
+            })
+            .collect();
+        Ok(Plan {
+            rounds,
+            n_envs,
+            env_counts,
+            ae_steps: (0..rounds).map(|r| quota(cfg.ae_steps, rounds, r)).collect(),
+            wm_steps: (0..rounds).map(|r| quota(cfg.wm.total_steps, rounds, r)).collect(),
+            dream_epochs: (0..rounds).map(|r| quota(cfg.dream_epochs, rounds, r)).collect(),
+        })
+    }
+}
+
+/// splitmix64 finaliser over (seed, stream, round): stateless derivation
+/// of per-round seeds, independent of every persistent stream.
+fn mix(seed: u64, stream: u64, round: u64) -> u64 {
+    let mut z = seed ^ stream ^ round.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic 0–2 ms sleep per (round, shard) when jitter is on.
+fn jitter_sleep(jitter: Option<u64>, round: u32, shard: u32) {
+    if let Some(seed) = jitter {
+        let ms = mix(seed, u64::from(round) << 32 | u64::from(shard), 0xDE1A) % 3;
+        if ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+        }
+    }
+}
+
+/// One (round, env shard) block of collected trajectories.
+struct EpisodeBlock {
+    round: u32,
+    shard: u32,
+    episodes: Vec<Episode>,
+}
+
+// ---------------------------------------------------------------------------
+// Stage state: identical arithmetic for the threaded and sequential engines
+// ---------------------------------------------------------------------------
+
+struct AeStage {
+    gnn: ParamStore,
+    rng: Rng,
+    /// Growing pool of every collected state (AE samples minibatches
+    /// from all data seen so far, mirroring the synchronous stage).
+    states: Vec<CompactState>,
+    losses: Vec<f32>,
+    /// GNN version = AE rounds completed.
+    version: u32,
+}
+
+impl AeStage {
+    fn new(backend: &dyn Backend, seed: u64) -> anyhow::Result<Self> {
+        Ok(Self {
+            gnn: ParamStore::init(backend, "gnn", seed as i32)?,
+            rng: Rng::new(mix(seed, STREAM_AE, 0)),
+            states: Vec::new(),
+            losses: Vec::new(),
+            version: 0,
+        })
+    }
+
+    fn round(
+        &mut self,
+        pipe: &Pipeline,
+        plan: &Plan,
+        cfg: &RunConfig,
+        r: usize,
+        blocks: &[EpisodeBlock],
+    ) -> anyhow::Result<()> {
+        for b in blocks {
+            for ep in &b.episodes {
+                self.states.extend(ep.states.iter().cloned());
+            }
+        }
+        let pool: Vec<&CompactState> = self.states.iter().collect();
+        let mut losses =
+            pipe.train_gnn_ae_states(&mut self.gnn, &pool, plan.ae_steps[r], cfg.ae_lr, &mut self.rng)?;
+        self.losses.append(&mut losses);
+        self.version = r as u32 + 1;
+        Ok(())
+    }
+}
+
+/// Encoder stage: fills `ep.z` for one round's episodes under the GNN of
+/// version `r + 1`. Stateless — per-row encoding is independent, so
+/// per-round encoding is bit-identical to one big pass per round.
+fn encode_round(
+    pipe: &Pipeline,
+    gnn: &ParamStore,
+    blocks: Vec<EpisodeBlock>,
+) -> anyhow::Result<Vec<Episode>> {
+    let mut episodes: Vec<Episode> = blocks.into_iter().flat_map(|b| b.episodes).collect();
+    pipe.encode_episodes(gnn, &mut episodes)?;
+    Ok(episodes)
+}
+
+struct WmStage {
+    wm: ParamStore,
+    rng: Rng,
+    /// All encoded episodes so far (WM samples windows from the full set).
+    episodes: Vec<Episode>,
+    curve: Vec<WmLosses>,
+    /// Global step counter: the polynomial lr schedule indexes total
+    /// steps across rounds, exactly as the synchronous `train_wm` does.
+    step: usize,
+}
+
+impl WmStage {
+    fn new(backend: &dyn Backend, seed: u64) -> anyhow::Result<Self> {
+        Ok(Self {
+            wm: ParamStore::init(backend, "wm", seed as i32 + 1)?,
+            rng: Rng::new(mix(seed, STREAM_WM, 0)),
+            episodes: Vec::new(),
+            curve: Vec::new(),
+            step: 0,
+        })
+    }
+
+    /// Train this round's step budget; returns the dream seed pool
+    /// (initial latents + masks of every encoded episode so far).
+    #[allow(clippy::type_complexity)]
+    fn round(
+        &mut self,
+        pipe: &Pipeline,
+        plan: &Plan,
+        cfg: &RunConfig,
+        r: usize,
+        episodes: Vec<Episode>,
+    ) -> anyhow::Result<(Vec<Vec<f32>>, Vec<Vec<f32>>)> {
+        self.episodes.extend(episodes);
+        // A PPO-side invariant worth holding here too: one WM batch set
+        // never mixes collection-policy versions.
+        let _version = uniform_policy_version(&self.episodes)?;
+        let trainer = WmTrainer::new(pipe.backend)?;
+        for _ in 0..plan.wm_steps[r] {
+            let lr = cfg.wm.lr_at(self.step);
+            self.curve.push(trainer.train_step(
+                &mut self.wm,
+                &self.episodes,
+                lr,
+                cfg.wm.reward_scale,
+                &mut self.rng,
+            )?);
+            self.step += 1;
+        }
+        let z0 = self.episodes.iter().filter(|e| !e.z.is_empty()).map(|e| e.z[0].clone()).collect();
+        let xm0 =
+            self.episodes.iter().filter(|e| !e.z.is_empty()).map(|e| e.xmasks[0].clone()).collect();
+        Ok((z0, xm0))
+    }
+}
+
+struct DreamStage {
+    ctrl: ParamStore,
+    rng: Rng,
+    curve: Vec<f32>,
+}
+
+impl DreamStage {
+    fn new(backend: &dyn Backend, seed: u64) -> anyhow::Result<Self> {
+        Ok(Self {
+            ctrl: ParamStore::init(backend, "ctrl", seed as i32 + 2)?,
+            rng: Rng::new(mix(seed, STREAM_DREAM, 0)),
+            curve: Vec::new(),
+        })
+    }
+
+    fn round(
+        &mut self,
+        pipe: &Pipeline,
+        plan: &Plan,
+        cfg: &RunConfig,
+        r: usize,
+        wm: &ParamStore,
+        z0: &[Vec<f32>],
+        xm0: &[Vec<f32>],
+    ) -> anyhow::Result<()> {
+        let mut curve = pipe.train_controller_dream_seeded(
+            &mut self.ctrl,
+            wm,
+            z0,
+            xm0,
+            plan.dream_epochs[r],
+            cfg.dream_horizon,
+            cfg.temperature,
+            cfg.wm.reward_scale,
+            &cfg.ppo,
+            &mut self.rng,
+        )?;
+        self.curve.append(&mut curve);
+        Ok(())
+    }
+}
+
+struct EvalStage {
+    evals: Vec<RoundEval>,
+}
+
+impl EvalStage {
+    #[allow(clippy::too_many_arguments)]
+    fn round(
+        &mut self,
+        pipe: &Pipeline,
+        cfg: &RunConfig,
+        graph: &Graph,
+        r: usize,
+        gnn: &ParamStore,
+        ctrl: &ParamStore,
+        wm: &ParamStore,
+    ) -> anyhow::Result<()> {
+        let cost = CostModel::new(cfg.device);
+        let mut pool = EnvPool::new(
+            graph,
+            standard_library(),
+            &cost,
+            &EnvPoolConfig {
+                n_envs: cfg.eval_episodes.max(1),
+                env: cfg.env.clone(),
+                threads: 1,
+                seed: mix(cfg.seed, STREAM_EVAL_POOL, r as u64),
+                noise_std: 0.0,
+            },
+        );
+        // Stateless per-round stream: eval overlap with later rounds'
+        // training can never perturb draws.
+        let mut rng = Rng::new(mix(cfg.seed, STREAM_EVAL, r as u64));
+        let results = pipe.eval_real_pool(gnn, ctrl, Some(wm), &mut pool, cfg.eval_greedy, &mut rng)?;
+        self.evals.push(RoundEval { round: r as u32, results });
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Threaded executor
+// ---------------------------------------------------------------------------
+
+/// How a stage thread finished: `Done` with its product, or `Cancelled`
+/// because a neighbouring channel closed under it (the causing error is
+/// reported by the stage that failed).
+enum StageExit<T> {
+    Done(T),
+    Cancelled,
+}
+
+/// Fold one stage's result into (first error, payload). Stage order of
+/// the call sites (collect → … → eval) makes the *most upstream* real
+/// error the one reported.
+fn unpack<T>(r: anyhow::Result<StageExit<T>>, first_err: &mut Option<anyhow::Error>) -> Option<T> {
+    match r {
+        Ok(StageExit::Done(v)) => Some(v),
+        Ok(StageExit::Cancelled) => None,
+        Err(e) => {
+            if first_err.is_none() {
+                *first_err = Some(e);
+            }
+            None
+        }
+    }
+}
+
+struct EncJob {
+    round: u32,
+    gnn: ParamStore,
+    blocks: Vec<EpisodeBlock>,
+}
+
+struct WmJob {
+    round: u32,
+    gnn: ParamStore,
+    episodes: Vec<Episode>,
+}
+
+struct DreamJob {
+    round: u32,
+    gnn: ParamStore,
+    wm: ParamStore,
+    z0: Vec<Vec<f32>>,
+    xm0: Vec<Vec<f32>>,
+}
+
+struct EvalJob {
+    round: u32,
+    gnn: ParamStore,
+    wm: ParamStore,
+    ctrl: ParamStore,
+}
+
+struct AeOut {
+    gnn: ParamStore,
+    losses: Vec<f32>,
+}
+
+struct WmOut {
+    wm: ParamStore,
+    curve: Vec<WmLosses>,
+}
+
+struct DreamOut {
+    ctrl: ParamStore,
+    curve: Vec<f32>,
+}
+
+/// Dims the collector needs from the backend manifest (read once up
+/// front; the collector itself never touches a backend).
+struct CollectDims {
+    max_nodes: usize,
+    node_feats: usize,
+    n_slots: usize,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_collect(
+    cfg: &RunConfig,
+    acfg: &AsyncTrainCfg,
+    plan: &Plan,
+    graph: &Graph,
+    dims: &CollectDims,
+    staging: &StageChannel<EpisodeBlock>,
+    sink: &TraceSink,
+) -> anyhow::Result<StageExit<()>> {
+    let cost = CostModel::new(cfg.device);
+    let mut pool = EnvPool::new(
+        graph,
+        standard_library(),
+        &cost,
+        &EnvPoolConfig {
+            n_envs: plan.n_envs,
+            env: cfg.env.clone(),
+            threads: acfg.stage_threads,
+            seed: cfg.seed,
+            noise_std: 0.0,
+        },
+    );
+    let encoder = StateEncoder::new(dims.max_nodes, dims.node_feats);
+    for r in 0..plan.rounds {
+        let counts = &plan.env_counts[r];
+        let cancelled = std::sync::atomic::AtomicBool::new(false);
+        pool.map_envs_streaming(
+            |i, env, rng| {
+                collect_random_episodes(
+                    env,
+                    &encoder,
+                    dims.n_slots,
+                    counts[i],
+                    cfg.collect_noop_prob,
+                    rng,
+                )
+            },
+            |i, episodes| {
+                jitter_sleep(acfg.jitter, r as u32, i as u32);
+                sink.record(Edge::Staging, r as u32, i as u32, 0);
+                let block = EpisodeBlock { round: r as u32, shard: i as u32, episodes };
+                if staging.send(block).is_err() {
+                    cancelled.store(true, std::sync::atomic::Ordering::Relaxed);
+                }
+            },
+        );
+        if cancelled.load(std::sync::atomic::Ordering::Relaxed) {
+            return Ok(StageExit::Cancelled);
+        }
+    }
+    Ok(StageExit::Done(()))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_ae(
+    factory: &BackendFactory,
+    cfg: &RunConfig,
+    acfg: &AsyncTrainCfg,
+    plan: &Plan,
+    staging: &StageChannel<EpisodeBlock>,
+    out: &StageChannel<EncJob>,
+    sink: &TraceSink,
+) -> anyhow::Result<StageExit<AeOut>> {
+    let backend = factory()?;
+    let pipe = Pipeline::new(backend.as_ref())?;
+    let mut stage = AeStage::new(backend.as_ref(), cfg.seed)?;
+    let mut stash: HashMap<(u32, u32), EpisodeBlock> = HashMap::new();
+    for r in 0..plan.rounds {
+        // Drain staging eagerly into the stash, then assemble round r in
+        // canonical shard order. The stash is unbounded, so the staging
+        // buffer's backpressure bounds the *collector*, never this loop.
+        let mut blocks: Vec<EpisodeBlock> = Vec::with_capacity(plan.n_envs);
+        for shard in 0..plan.n_envs as u32 {
+            loop {
+                if let Some(b) = stash.remove(&(r as u32, shard)) {
+                    blocks.push(b);
+                    break;
+                }
+                match staging.recv() {
+                    Some(b) => {
+                        stash.insert((b.round, b.shard), b);
+                    }
+                    None => return Ok(StageExit::Cancelled),
+                }
+            }
+        }
+        for b in &blocks {
+            sink.record(Edge::AeIn, r as u32, b.shard, stage.version);
+        }
+        stage.round(&pipe, plan, cfg, r, &blocks)?;
+        jitter_sleep(acfg.jitter, r as u32, SHARD_BATCH);
+        let job = EncJob { round: r as u32, gnn: stage.gnn.clone(), blocks };
+        if out.send(job).is_err() {
+            return Ok(StageExit::Cancelled);
+        }
+    }
+    Ok(StageExit::Done(AeOut { gnn: stage.gnn, losses: stage.losses }))
+}
+
+fn run_enc(
+    factory: &BackendFactory,
+    plan: &Plan,
+    input: &StageChannel<EncJob>,
+    out: &StageChannel<WmJob>,
+    sink: &TraceSink,
+) -> anyhow::Result<StageExit<()>> {
+    let backend = factory()?;
+    let pipe = Pipeline::new(backend.as_ref())?;
+    for r in 0..plan.rounds {
+        let Some(job) = input.recv() else { return Ok(StageExit::Cancelled) };
+        debug_assert_eq!(job.round as usize, r);
+        sink.record(Edge::EncIn, job.round, SHARD_BATCH, job.round + 1);
+        let episodes = encode_round(&pipe, &job.gnn, job.blocks)?;
+        if out.send(WmJob { round: job.round, gnn: job.gnn, episodes }).is_err() {
+            return Ok(StageExit::Cancelled);
+        }
+    }
+    Ok(StageExit::Done(()))
+}
+
+fn run_wm(
+    factory: &BackendFactory,
+    cfg: &RunConfig,
+    plan: &Plan,
+    input: &StageChannel<WmJob>,
+    out: &StageChannel<DreamJob>,
+    sink: &TraceSink,
+) -> anyhow::Result<StageExit<WmOut>> {
+    let backend = factory()?;
+    let pipe = Pipeline::new(backend.as_ref())?;
+    let mut stage = WmStage::new(backend.as_ref(), cfg.seed)?;
+    for r in 0..plan.rounds {
+        let Some(job) = input.recv() else { return Ok(StageExit::Cancelled) };
+        sink.record(Edge::WmIn, job.round, SHARD_BATCH, job.round);
+        let (z0, xm0) = stage.round(&pipe, plan, cfg, r, job.episodes)?;
+        let dream = DreamJob { round: job.round, gnn: job.gnn, wm: stage.wm.clone(), z0, xm0 };
+        if out.send(dream).is_err() {
+            return Ok(StageExit::Cancelled);
+        }
+    }
+    Ok(StageExit::Done(WmOut { wm: stage.wm, curve: stage.curve }))
+}
+
+fn run_dream(
+    factory: &BackendFactory,
+    cfg: &RunConfig,
+    plan: &Plan,
+    input: &StageChannel<DreamJob>,
+    out: &StageChannel<EvalJob>,
+    sink: &TraceSink,
+) -> anyhow::Result<StageExit<DreamOut>> {
+    let backend = factory()?;
+    let pipe = Pipeline::new(backend.as_ref())?;
+    let mut stage = DreamStage::new(backend.as_ref(), cfg.seed)?;
+    for r in 0..plan.rounds {
+        let Some(job) = input.recv() else { return Ok(StageExit::Cancelled) };
+        sink.record(Edge::DreamIn, job.round, SHARD_BATCH, job.round + 1);
+        stage.round(&pipe, plan, cfg, r, &job.wm, &job.z0, &job.xm0)?;
+        let eval =
+            EvalJob { round: job.round, gnn: job.gnn, wm: job.wm, ctrl: stage.ctrl.clone() };
+        if out.send(eval).is_err() {
+            return Ok(StageExit::Cancelled);
+        }
+    }
+    Ok(StageExit::Done(DreamOut { ctrl: stage.ctrl, curve: stage.curve }))
+}
+
+fn run_eval(
+    factory: &BackendFactory,
+    cfg: &RunConfig,
+    plan: &Plan,
+    graph: &Graph,
+    input: &StageChannel<EvalJob>,
+    sink: &TraceSink,
+) -> anyhow::Result<StageExit<Vec<RoundEval>>> {
+    let backend = factory()?;
+    let pipe = Pipeline::new(backend.as_ref())?;
+    let mut stage = EvalStage { evals: Vec::new() };
+    for r in 0..plan.rounds {
+        let Some(job) = input.recv() else { return Ok(StageExit::Cancelled) };
+        sink.record(Edge::EvalIn, job.round, SHARD_BATCH, job.round + 1);
+        stage.round(&pipe, cfg, graph, r, &job.gnn, &job.ctrl, &job.wm)?;
+    }
+    Ok(StageExit::Done(stage.evals))
+}
+
+/// Run the pipelined async trainer: six stage threads (collect, AE,
+/// encode, WM, dream, eval) over bounded channels, recording the
+/// schedule trace as it runs. See the module docs for the determinism
+/// contract; `tests/pipeline_async.rs` pins
+/// `train_async == train_reference == replay_trace(own trace)` across
+/// stage-thread and env sweeps.
+pub fn train_async(
+    factory: &BackendFactory,
+    cfg: &RunConfig,
+    acfg: &AsyncTrainCfg,
+    graph: &Graph,
+) -> anyhow::Result<AsyncOutcome> {
+    let plan = Plan::new(cfg, acfg)?;
+    let dims = {
+        let backend = factory()?;
+        let pipe = Pipeline::new(backend.as_ref())?;
+        CollectDims {
+            max_nodes: pipe.encoder.max_nodes,
+            node_feats: pipe.encoder.n_feats,
+            n_slots: pipe.dims.x1,
+        }
+    };
+    let sink =
+        TraceSink::new(ScheduleTrace::new(cfg.seed, plan.n_envs as u32, plan.rounds as u32));
+    let staging: StageChannel<EpisodeBlock> = StageChannel::new(acfg.staging_cap);
+    let to_enc: StageChannel<EncJob> = StageChannel::new(2);
+    let to_wm: StageChannel<WmJob> = StageChannel::new(2);
+    let to_dream: StageChannel<DreamJob> = StageChannel::new(2);
+    let to_eval: StageChannel<EvalJob> = StageChannel::new(2);
+
+    let (collect_r, ae_r, enc_r, wm_r, dream_r, eval_r) = std::thread::scope(|s| {
+        // Each stage closes its input (cancels upstream if it exits
+        // early) and its output (EOF or cancel downstream) on the way
+        // out — errors propagate as channel closures, never deadlocks.
+        let h_collect = s.spawn(|| {
+            let r = run_collect(cfg, acfg, &plan, graph, &dims, &staging, &sink);
+            staging.close();
+            r
+        });
+        let h_ae = s.spawn(|| {
+            let r = run_ae(factory, cfg, acfg, &plan, &staging, &to_enc, &sink);
+            staging.close();
+            to_enc.close();
+            r
+        });
+        let h_enc = s.spawn(|| {
+            let r = run_enc(factory, &plan, &to_enc, &to_wm, &sink);
+            to_enc.close();
+            to_wm.close();
+            r
+        });
+        let h_wm = s.spawn(|| {
+            let r = run_wm(factory, cfg, &plan, &to_wm, &to_dream, &sink);
+            to_wm.close();
+            to_dream.close();
+            r
+        });
+        let h_dream = s.spawn(|| {
+            let r = run_dream(factory, cfg, &plan, &to_dream, &to_eval, &sink);
+            to_dream.close();
+            to_eval.close();
+            r
+        });
+        let h_eval = s.spawn(|| {
+            let r = run_eval(factory, cfg, &plan, graph, &to_eval, &sink);
+            to_eval.close();
+            r
+        });
+        (
+            h_collect.join().expect("collect stage panicked"),
+            h_ae.join().expect("ae stage panicked"),
+            h_enc.join().expect("encoder stage panicked"),
+            h_wm.join().expect("wm stage panicked"),
+            h_dream.join().expect("dream stage panicked"),
+            h_eval.join().expect("eval stage panicked"),
+        )
+    });
+
+    let mut first_err = None;
+    let collect_ok = unpack(collect_r, &mut first_err);
+    let ae = unpack(ae_r, &mut first_err);
+    let enc_ok = unpack(enc_r, &mut first_err);
+    let wm = unpack(wm_r, &mut first_err);
+    let dream = unpack(dream_r, &mut first_err);
+    let evals = unpack(eval_r, &mut first_err);
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    match (collect_ok, ae, enc_ok, wm, dream, evals) {
+        (Some(()), Some(ae), Some(()), Some(wm), Some(dream), Some(evals)) => Ok(AsyncOutcome {
+            gnn: ae.gnn,
+            wm: wm.wm,
+            ctrl: dream.ctrl,
+            ae_losses: ae.losses,
+            wm_curve: wm.curve,
+            dream_curve: dream.curve,
+            evals,
+            trace: sink.snapshot(),
+        }),
+        _ => anyhow::bail!("async pipeline cancelled without a recorded error"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sequential engine: the reference oracle and the replay mode
+// ---------------------------------------------------------------------------
+
+enum Schedule<'t> {
+    /// Round-major canonical order — the synchronous reference.
+    Canonical,
+    /// Follow a recorded trace's staging order, verifying every learner
+    /// handoff against it.
+    Replay(&'t ScheduleTrace),
+}
+
+/// Check a trace's staging events against the plan: right header, every
+/// (round, shard) block present exactly once, per-shard rounds
+/// ascending. Returns the staging order to execute.
+fn validate_staging(
+    trace: &ScheduleTrace,
+    plan: &Plan,
+    seed: u64,
+) -> anyhow::Result<Vec<(u32, u32)>> {
+    anyhow::ensure!(
+        trace.seed == seed
+            && trace.envs as usize == plan.n_envs
+            && trace.rounds as usize == plan.rounds,
+        "trace header (seed={} envs={} rounds={}) does not match this run \
+         (seed={} envs={} rounds={})",
+        trace.seed,
+        trace.envs,
+        trace.rounds,
+        seed,
+        plan.n_envs,
+        plan.rounds
+    );
+    let mut next_round = vec![0u32; plan.n_envs];
+    let mut order = Vec::with_capacity(plan.rounds * plan.n_envs);
+    for h in trace.events_on(Edge::Staging) {
+        anyhow::ensure!(
+            (h.shard as usize) < plan.n_envs,
+            "corrupt trace: staging event for unknown shard {}",
+            h.shard
+        );
+        anyhow::ensure!(
+            h.round == next_round[h.shard as usize],
+            "partial batch: shard {} jumps from round {} to round {} in the trace",
+            h.shard,
+            next_round[h.shard as usize],
+            h.round
+        );
+        anyhow::ensure!(h.version == 0, "corrupt trace: staging blocks carry policy version 0");
+        next_round[h.shard as usize] += 1;
+        order.push((h.round, h.shard));
+    }
+    for (shard, &got) in next_round.iter().enumerate() {
+        anyhow::ensure!(
+            got as usize == plan.rounds,
+            "partial batch: shard {shard} has {got}/{} blocks in the trace",
+            plan.rounds
+        );
+    }
+    Ok(order)
+}
+
+fn emit(
+    trace: &mut ScheduleTrace,
+    cursor: &mut Option<TraceCursor>,
+    edge: Edge,
+    round: u32,
+    shard: u32,
+    version: u32,
+) -> anyhow::Result<()> {
+    if let Some(c) = cursor {
+        c.expect(edge, round, shard, version)?;
+    }
+    trace.record(super::trace::Handoff { edge, round, shard, version });
+    Ok(())
+}
+
+/// One learner round of the sequential engine — byte-for-byte the same
+/// stage arithmetic the threaded executor runs, on one backend.
+#[allow(clippy::too_many_arguments)]
+fn seq_round(
+    pipe: &Pipeline,
+    cfg: &RunConfig,
+    plan: &Plan,
+    graph: &Graph,
+    r: usize,
+    blocks: Vec<EpisodeBlock>,
+    ae: &mut AeStage,
+    wm: &mut WmStage,
+    dream: &mut DreamStage,
+    eval: &mut EvalStage,
+    trace: &mut ScheduleTrace,
+    cursor: &mut Option<TraceCursor>,
+) -> anyhow::Result<()> {
+    let round = r as u32;
+    for b in &blocks {
+        emit(trace, cursor, Edge::AeIn, round, b.shard, ae.version)?;
+    }
+    ae.round(pipe, plan, cfg, r, &blocks)?;
+    emit(trace, cursor, Edge::EncIn, round, SHARD_BATCH, round + 1)?;
+    let episodes = encode_round(pipe, &ae.gnn, blocks)?;
+    emit(trace, cursor, Edge::WmIn, round, SHARD_BATCH, round)?;
+    let (z0, xm0) = wm.round(pipe, plan, cfg, r, episodes)?;
+    emit(trace, cursor, Edge::DreamIn, round, SHARD_BATCH, round + 1)?;
+    dream.round(pipe, plan, cfg, r, &wm.wm, &z0, &xm0)?;
+    emit(trace, cursor, Edge::EvalIn, round, SHARD_BATCH, round + 1)?;
+    eval.round(pipe, cfg, graph, r, &ae.gnn, &dream.ctrl, &wm.wm)
+}
+
+fn run_sequential(
+    factory: &BackendFactory,
+    cfg: &RunConfig,
+    acfg: &AsyncTrainCfg,
+    graph: &Graph,
+    schedule: Schedule,
+) -> anyhow::Result<AsyncOutcome> {
+    let plan = Plan::new(cfg, acfg)?;
+    let backend = factory()?;
+    let pipe = Pipeline::new(backend.as_ref())?;
+    let staging_order: Vec<(u32, u32)> = match &schedule {
+        Schedule::Canonical => (0..plan.rounds as u32)
+            .flat_map(|r| (0..plan.n_envs as u32).map(move |s| (r, s)))
+            .collect(),
+        Schedule::Replay(t) => validate_staging(t, &plan, cfg.seed)?,
+    };
+    let mut cursor = match &schedule {
+        Schedule::Replay(t) => Some(TraceCursor::new(t)),
+        Schedule::Canonical => None,
+    };
+    let mut trace = ScheduleTrace::new(cfg.seed, plan.n_envs as u32, plan.rounds as u32);
+
+    let cost = CostModel::new(cfg.device);
+    let mut pool = EnvPool::new(
+        graph,
+        standard_library(),
+        &cost,
+        &EnvPoolConfig {
+            n_envs: plan.n_envs,
+            env: cfg.env.clone(),
+            threads: 1,
+            seed: cfg.seed,
+            noise_std: 0.0,
+        },
+    );
+    let encoder = StateEncoder::new(pipe.encoder.max_nodes, pipe.encoder.n_feats);
+    let n_slots = pipe.dims.x1;
+
+    let mut ae = AeStage::new(backend.as_ref(), cfg.seed)?;
+    let mut wm = WmStage::new(backend.as_ref(), cfg.seed)?;
+    let mut dream = DreamStage::new(backend.as_ref(), cfg.seed)?;
+    let mut eval = EvalStage { evals: Vec::new() };
+
+    let mut stash: HashMap<(u32, u32), Vec<Episode>> = HashMap::new();
+    let mut arrived = vec![0usize; plan.rounds];
+    let mut next_round = 0usize;
+    for (round, shard) in staging_order {
+        // Collect the block exactly as the threaded collector would:
+        // this env's RNG stream advances through its rounds in order
+        // (validate_staging guarantees per-shard ascending rounds), and
+        // streams are per-env, so cross-shard order is irrelevant.
+        let count = plan.env_counts[round as usize][shard as usize];
+        let episodes = pool.map_env_at(shard as usize, |env, rng| {
+            collect_random_episodes(env, &encoder, n_slots, count, cfg.collect_noop_prob, rng)
+        });
+        emit(&mut trace, &mut cursor, Edge::Staging, round, shard, 0)?;
+        stash.insert((round, shard), episodes);
+        arrived[round as usize] += 1;
+        // Learner stages run as soon as their round is complete —
+        // round-major, exactly the order the threaded learners consume.
+        while next_round < plan.rounds && arrived[next_round] == plan.n_envs {
+            let blocks: Vec<EpisodeBlock> = (0..plan.n_envs as u32)
+                .map(|s| EpisodeBlock {
+                    round: next_round as u32,
+                    shard: s,
+                    episodes: stash.remove(&(next_round as u32, s)).expect("round was complete"),
+                })
+                .collect();
+            seq_round(
+                &pipe, cfg, &plan, graph, next_round, blocks, &mut ae, &mut wm, &mut dream,
+                &mut eval, &mut trace, &mut cursor,
+            )?;
+            next_round += 1;
+        }
+    }
+    anyhow::ensure!(next_round == plan.rounds, "incomplete schedule: {next_round} rounds ran");
+    if let Some(c) = &cursor {
+        c.finished()?;
+    }
+    Ok(AsyncOutcome {
+        gnn: ae.gnn,
+        wm: wm.wm,
+        ctrl: dream.ctrl,
+        ae_losses: ae.losses,
+        wm_curve: wm.curve,
+        dream_curve: dream.curve,
+        evals: eval.evals,
+        trace,
+    })
+}
+
+/// The synchronous reference oracle: the async pipeline's per-round
+/// arithmetic under the canonical (round-major) schedule, one thread,
+/// one backend. `train_async` must match it bit-for-bit.
+pub fn train_reference(
+    factory: &BackendFactory,
+    cfg: &RunConfig,
+    acfg: &AsyncTrainCfg,
+    graph: &Graph,
+) -> anyhow::Result<AsyncOutcome> {
+    run_sequential(factory, cfg, acfg, graph, Schedule::Canonical)
+}
+
+/// Replay a recorded schedule: re-execute the trace's handoff sequence
+/// through the sequential engine, verifying every learner handoff
+/// against the trace (divergence, torn traces and partial batches are
+/// typed errors). Same seeds + same trace ⇒ bit-identical params to the
+/// run that recorded it.
+pub fn replay_trace(
+    factory: &BackendFactory,
+    cfg: &RunConfig,
+    acfg: &AsyncTrainCfg,
+    graph: &Graph,
+    trace: &ScheduleTrace,
+) -> anyhow::Result<AsyncOutcome> {
+    run_sequential(factory, cfg, acfg, graph, Schedule::Replay(trace))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quota_splits_round_robin() {
+        assert_eq!((0..4).map(|i| quota(10, 4, i)).collect::<Vec<_>>(), vec![3, 3, 2, 2]);
+        assert_eq!((0..4).map(|i| quota(2, 4, i)).collect::<Vec<_>>(), vec![1, 1, 0, 0]);
+        assert_eq!((0..4).map(|i| quota(0, 4, i)).sum::<usize>(), 0);
+    }
+
+    #[test]
+    fn plan_budgets_are_conserved() {
+        let cfg = RunConfig { collect_episodes: 7, envs: 3, ae_steps: 5, ..RunConfig::smoke() };
+        let acfg = AsyncTrainCfg { rounds: 3, stage_threads: 1, staging_cap: 2, jitter: None };
+        let plan = Plan::new(&cfg, &acfg).unwrap();
+        assert_eq!(plan.n_envs, 3);
+        let collected: usize = plan.env_counts.iter().flatten().sum();
+        assert_eq!(collected, 7, "every episode is collected exactly once");
+        assert_eq!(plan.ae_steps.iter().sum::<usize>(), 5);
+        assert_eq!(plan.wm_steps.iter().sum::<usize>(), cfg.wm.total_steps);
+        assert_eq!(plan.dream_epochs.iter().sum::<usize>(), cfg.dream_epochs);
+    }
+
+    #[test]
+    fn validate_staging_rejects_partial_batches() {
+        let cfg = RunConfig { collect_episodes: 4, envs: 2, ..RunConfig::smoke() };
+        let acfg = AsyncTrainCfg { rounds: 2, stage_threads: 1, staging_cap: 2, jitter: None };
+        let plan = Plan::new(&cfg, &acfg).unwrap();
+        let mut t = ScheduleTrace::new(cfg.seed, 2, 2);
+        for (r, s) in [(0, 0), (0, 1), (1, 0), (1, 1)] {
+            t.record(super::super::trace::Handoff {
+                edge: Edge::Staging,
+                round: r,
+                shard: s,
+                version: 0,
+            });
+        }
+        assert!(validate_staging(&t, &plan, cfg.seed).is_ok());
+        let mut missing = t.clone();
+        missing.events.pop();
+        let err = validate_staging(&missing, &plan, cfg.seed).unwrap_err();
+        assert!(err.to_string().contains("partial batch"), "got: {err}");
+        let mut reordered = t.clone();
+        reordered.events.swap(1, 3); // shard 1 round 1 before round 0
+        assert!(validate_staging(&reordered, &plan, cfg.seed).is_err());
+        assert!(validate_staging(&t, &plan, cfg.seed ^ 1).is_err(), "seed mismatch must fail");
+    }
+}

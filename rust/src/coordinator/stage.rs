@@ -1,0 +1,176 @@
+//! Bounded blocking channels for the async training pipeline.
+//!
+//! `StageChannel` is the only synchronisation primitive the async
+//! pipeline uses between stages: a fixed-capacity FIFO built on
+//! `Mutex` + `Condvar` (the crate is dependency-free — no async
+//! runtime, no crossbeam). Its contract is exactly what the schedule
+//! trace needs:
+//!
+//! * **Backpressure, never drop**: `send` blocks while the buffer is
+//!   full; an item handed to `send` is either enqueued or returned in
+//!   the [`StageClosed`] error — it is never silently discarded.
+//! * **Per-producer FIFO**: items from one producer thread are
+//!   received in the order that producer sent them (the queue is a
+//!   strict FIFO; interleaving *across* producers is scheduling-
+//!   dependent, which is what the trace records).
+//! * **Close wakes everyone**: after [`StageChannel::close`], blocked
+//!   senders fail fast with [`StageClosed`] and receivers drain the
+//!   remaining items before observing end-of-stream (`None`).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// Error returned by [`StageChannel::send`] on a closed channel; the
+/// rejected item is handed back so the producer can account for it.
+#[derive(Debug)]
+pub struct StageClosed<T>(pub T);
+
+impl<T> std::fmt::Display for StageClosed<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "stage channel closed")
+    }
+}
+
+struct ChanState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded MPSC/MPMC blocking channel connecting two pipeline stages.
+pub struct StageChannel<T> {
+    state: Mutex<ChanState<T>>,
+    /// Signalled when an item arrives or the channel closes (receivers wait here).
+    ready: Condvar,
+    /// Signalled when an item leaves or the channel closes (senders wait here).
+    space: Condvar,
+    cap: usize,
+}
+
+impl<T> StageChannel<T> {
+    /// Create a channel holding at most `cap` in-flight items (min 1).
+    pub fn new(cap: usize) -> Self {
+        Self {
+            state: Mutex::new(ChanState { items: VecDeque::new(), closed: false }),
+            ready: Condvar::new(),
+            space: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Enqueue `item`, blocking while the buffer is full. Returns the
+    /// item back inside [`StageClosed`] if the channel was closed
+    /// before space opened up.
+    pub fn send(&self, item: T) -> Result<(), StageClosed<T>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(StageClosed(item));
+            }
+            if st.items.len() < self.cap {
+                st.items.push_back(item);
+                self.ready.notify_one();
+                return Ok(());
+            }
+            st = self.space.wait(st).unwrap();
+        }
+    }
+
+    /// Dequeue the next item, blocking while the buffer is empty.
+    /// Returns `None` only after the channel is closed *and* drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.space.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.ready.wait(st).unwrap();
+        }
+    }
+
+    /// Close the channel: blocked senders fail with [`StageClosed`],
+    /// receivers drain the remaining items then observe `None`.
+    /// Idempotent.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.ready.notify_all();
+        self.space.notify_all();
+    }
+
+    /// Number of items currently buffered (racy snapshot; exact only
+    /// when producers and consumers are quiescent).
+    pub fn depth(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    /// The configured capacity bound.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_within_capacity() {
+        let ch = StageChannel::new(4);
+        for i in 0..4 {
+            ch.send(i).unwrap();
+        }
+        assert_eq!(ch.depth(), 4);
+        for i in 0..4 {
+            assert_eq!(ch.recv(), Some(i));
+        }
+        ch.close();
+        assert_eq!(ch.recv(), None);
+    }
+
+    #[test]
+    fn send_blocks_until_space_then_succeeds() {
+        let ch = StageChannel::new(1);
+        ch.send(1u32).unwrap();
+        std::thread::scope(|s| {
+            let producer = s.spawn(|| ch.send(2).is_ok());
+            // The producer is blocked on the full buffer; draining one
+            // item must release it.
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            assert_eq!(ch.recv(), Some(1));
+            assert!(producer.join().unwrap());
+        });
+        assert_eq!(ch.recv(), Some(2));
+    }
+
+    #[test]
+    fn close_wakes_blocked_sender_with_item_returned() {
+        let ch = StageChannel::new(1);
+        ch.send(7u32).unwrap();
+        std::thread::scope(|s| {
+            let producer = s.spawn(|| ch.send(8));
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            ch.close();
+            let err = producer.join().unwrap().unwrap_err();
+            assert_eq!(err.0, 8, "the rejected item must be handed back");
+        });
+        // The item enqueued before close still drains.
+        assert_eq!(ch.recv(), Some(7));
+        assert_eq!(ch.recv(), None);
+    }
+
+    #[test]
+    fn close_drains_then_signals_end_of_stream() {
+        let ch = StageChannel::new(4);
+        ch.send("a").unwrap();
+        ch.send("b").unwrap();
+        ch.close();
+        assert!(ch.send("c").is_err());
+        assert_eq!(ch.recv(), Some("a"));
+        assert_eq!(ch.recv(), Some("b"));
+        assert_eq!(ch.recv(), None);
+    }
+}

@@ -1,0 +1,364 @@
+//! Schedule traces: the async pipeline's determinism contract.
+//!
+//! Every cross-stage handoff in `pipeline_async` — a collected shard
+//! block entering the staging buffer, a round of blocks consumed by the
+//! auto-encoder, an encoded round handed to the world model, and so on
+//! — is recorded as a [`Handoff`] (edge, batch round, env shard, param
+//! version consumed). The recorded [`ScheduleTrace`] is the *complete*
+//! description of the asynchronous schedule: replaying it through the
+//! sequential engine re-executes the same handoff sequence, so
+//! **same seeds + same trace ⇒ bit-identical final params**.
+//!
+//! The on-disk format is a self-describing text file:
+//!
+//! ```text
+//! rlflow-trace v1 seed=42 envs=4 rounds=2 events=14
+//! staging 0 1 0
+//! staging 0 0 0
+//! ae 0 0 0
+//! ae 0 1 0
+//! enc 0 - 1
+//! ...
+//! ```
+//!
+//! One line per event: `<edge> <round> <shard> <version>`, where shard
+//! `-` is the [`SHARD_BATCH`] sentinel for whole-round handoffs. The
+//! header's `events=N` count makes truncation detectable: a torn trace
+//! (fewer lines than the header promises, or a malformed line) is a
+//! typed load error, never a silent partial replay.
+
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+/// Sentinel shard id for handoffs that carry a whole round rather than
+/// a single env shard (encoder/WM/dream/eval inputs).
+pub const SHARD_BATCH: u32 = u32::MAX;
+
+/// A cross-stage edge in the async pipeline's stage graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Edge {
+    /// Collector shard → bounded staging buffer.
+    Staging,
+    /// Staging buffer → GNN auto-encoder trainer (per shard block).
+    AeIn,
+    /// Auto-encoder → encoder stage (whole round + fresh GNN params).
+    EncIn,
+    /// Encoder → world-model trainer (whole encoded round).
+    WmIn,
+    /// World model → dream-PPO controller trainer (whole round).
+    DreamIn,
+    /// Dream trainer → real-env evaluation (whole round).
+    EvalIn,
+}
+
+impl Edge {
+    /// All edges in canonical (upstream → downstream) order.
+    pub const ALL: [Edge; 6] =
+        [Edge::Staging, Edge::AeIn, Edge::EncIn, Edge::WmIn, Edge::DreamIn, Edge::EvalIn];
+
+    /// Stable text name used in the trace file format.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Edge::Staging => "staging",
+            Edge::AeIn => "ae",
+            Edge::EncIn => "enc",
+            Edge::WmIn => "wm",
+            Edge::DreamIn => "dream",
+            Edge::EvalIn => "eval",
+        }
+    }
+
+    /// Parse a trace-file edge name.
+    pub fn parse(s: &str) -> anyhow::Result<Edge> {
+        Edge::ALL
+            .into_iter()
+            .find(|e| e.as_str() == s)
+            .ok_or_else(|| anyhow::anyhow!("unknown trace edge {s:?}"))
+    }
+
+    fn rank(self) -> usize {
+        Edge::ALL.iter().position(|e| *e == self).unwrap()
+    }
+}
+
+/// One recorded cross-stage handoff.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Handoff {
+    /// Which stage-graph edge the payload crossed.
+    pub edge: Edge,
+    /// Batch round the payload belongs to.
+    pub round: u32,
+    /// Env shard of the payload, or [`SHARD_BATCH`] for whole rounds.
+    pub shard: u32,
+    /// Param version consumed by the receiving stage (training rounds
+    /// completed for the stage's input params; 0 = init).
+    pub version: u32,
+}
+
+/// A complete recorded schedule: run identity (seed, env count, round
+/// count) plus every handoff in the order the trace clock observed it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScheduleTrace {
+    /// Run seed the schedule was recorded under.
+    pub seed: u64,
+    /// Number of env shards in the collector pool.
+    pub envs: u32,
+    /// Number of training rounds.
+    pub rounds: u32,
+    /// Handoffs in recorded order.
+    pub events: Vec<Handoff>,
+}
+
+impl ScheduleTrace {
+    /// An empty trace for a run with the given identity.
+    pub fn new(seed: u64, envs: u32, rounds: u32) -> Self {
+        Self { seed, envs, rounds, events: Vec::new() }
+    }
+
+    /// Append one handoff.
+    pub fn record(&mut self, h: Handoff) {
+        self.events.push(h);
+    }
+
+    /// Events on one edge, in recorded order.
+    pub fn events_on(&self, edge: Edge) -> impl Iterator<Item = &Handoff> {
+        self.events.iter().filter(move |h| h.edge == edge)
+    }
+
+    /// The schedule-independent normal form: events stably sorted by
+    /// (edge, round, shard). Two runs of the same seed are equivalent
+    /// iff their canonical traces are equal — timing may permute the
+    /// recorded order of *independent* handoffs, never their content.
+    pub fn canonical(&self) -> ScheduleTrace {
+        let mut events = self.events.clone();
+        events.sort_by_key(|h| (h.edge.rank(), h.round, h.shard, h.version));
+        ScheduleTrace { events, ..*self }
+    }
+
+    /// Serialise to the `rlflow-trace v1` text format.
+    pub fn to_text(&self) -> String {
+        let mut out = format!(
+            "rlflow-trace v1 seed={} envs={} rounds={} events={}\n",
+            self.seed,
+            self.envs,
+            self.rounds,
+            self.events.len()
+        );
+        for h in &self.events {
+            out.push_str(h.edge.as_str());
+            if h.shard == SHARD_BATCH {
+                out.push_str(&format!(" {} - {}\n", h.round, h.version));
+            } else {
+                out.push_str(&format!(" {} {} {}\n", h.round, h.shard, h.version));
+            }
+        }
+        out
+    }
+
+    /// Parse the text format, rejecting torn traces: a header event
+    /// count that does not match the number of well-formed event lines
+    /// is an error, so a truncated file can never replay as a shorter
+    /// schedule.
+    pub fn from_text(text: &str) -> anyhow::Result<Self> {
+        let mut lines = text.lines();
+        let header = lines.next().ok_or_else(|| anyhow::anyhow!("empty trace file"))?;
+        let mut fields = header.split_whitespace();
+        anyhow::ensure!(
+            fields.next() == Some("rlflow-trace") && fields.next() == Some("v1"),
+            "not an rlflow-trace v1 header: {header:?}"
+        );
+        let mut seed = None;
+        let mut envs = None;
+        let mut rounds = None;
+        let mut n_events = None;
+        for kv in fields {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("malformed trace header field {kv:?}"))?;
+            match k {
+                "seed" => seed = Some(v.parse::<u64>()?),
+                "envs" => envs = Some(v.parse::<u32>()?),
+                "rounds" => rounds = Some(v.parse::<u32>()?),
+                "events" => n_events = Some(v.parse::<usize>()?),
+                other => anyhow::bail!("unknown trace header field {other:?}"),
+            }
+        }
+        let (seed, envs, rounds, n_events) = match (seed, envs, rounds, n_events) {
+            (Some(s), Some(e), Some(r), Some(n)) => (s, e, r, n),
+            _ => anyhow::bail!("trace header missing seed/envs/rounds/events: {header:?}"),
+        };
+        let mut events = Vec::with_capacity(n_events);
+        for (i, line) in lines.enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            anyhow::ensure!(
+                parts.len() == 4,
+                "torn trace: malformed event on line {} ({line:?})",
+                i + 2
+            );
+            let edge = Edge::parse(parts[0])?;
+            let round = parts[1].parse::<u32>()?;
+            let shard =
+                if parts[2] == "-" { SHARD_BATCH } else { parts[2].parse::<u32>()? };
+            let version = parts[3].parse::<u32>()?;
+            events.push(Handoff { edge, round, shard, version });
+        }
+        anyhow::ensure!(
+            events.len() == n_events,
+            "torn trace: header promises {n_events} events, file holds {}",
+            events.len()
+        );
+        Ok(Self { seed, envs, rounds, events })
+    }
+
+    /// Write the trace file.
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_text())
+            .map_err(|e| anyhow::anyhow!("writing trace {}: {e}", path.display()))
+    }
+
+    /// Load and parse a trace file.
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading trace {}: {e}", path.display()))?;
+        Self::from_text(&text)
+    }
+}
+
+/// Thread-shared recording handle: every stage thread appends handoffs
+/// through the same sink, so the recorded order is the order the trace
+/// clock (the sink's mutex) observed them in.
+#[derive(Clone)]
+pub struct TraceSink(Arc<Mutex<ScheduleTrace>>);
+
+impl TraceSink {
+    /// Wrap a trace for shared recording.
+    pub fn new(trace: ScheduleTrace) -> Self {
+        Self(Arc::new(Mutex::new(trace)))
+    }
+
+    /// Record one handoff.
+    pub fn record(&self, edge: Edge, round: u32, shard: u32, version: u32) {
+        self.0.lock().unwrap().record(Handoff { edge, round, shard, version });
+    }
+
+    /// Clone out the trace recorded so far.
+    pub fn snapshot(&self) -> ScheduleTrace {
+        self.0.lock().unwrap().clone()
+    }
+}
+
+/// Replay-side verifier: per-edge FIFO cursors over an existing trace.
+/// Each handoff the replaying engine is about to perform is checked
+/// against the next expected event on that edge; any divergence (or a
+/// trace that ends early) is a typed error rather than a silent drift.
+pub struct TraceCursor {
+    queues: Vec<std::collections::VecDeque<Handoff>>,
+}
+
+impl TraceCursor {
+    /// Build cursors over `trace`, one FIFO per edge.
+    pub fn new(trace: &ScheduleTrace) -> Self {
+        let mut queues = vec![std::collections::VecDeque::new(); Edge::ALL.len()];
+        for h in &trace.events {
+            queues[h.edge.rank()].push_back(*h);
+        }
+        Self { queues }
+    }
+
+    /// Consume the next expected event on `edge`, verifying it matches
+    /// the handoff the engine is about to perform.
+    pub fn expect(&mut self, edge: Edge, round: u32, shard: u32, version: u32) -> anyhow::Result<()> {
+        let got = self.queues[edge.rank()].pop_front().ok_or_else(|| {
+            anyhow::anyhow!(
+                "torn trace: no more {} events, but replay needs round {round} shard {shard}",
+                edge.as_str()
+            )
+        })?;
+        let want = Handoff { edge, round, shard, version };
+        anyhow::ensure!(
+            got == want,
+            "trace divergence on {} edge: trace has round {} shard {} version {}, \
+             replay performs round {round} shard {shard} version {version}",
+            edge.as_str(),
+            got.round,
+            got.shard,
+            got.version
+        );
+        Ok(())
+    }
+
+    /// Verify the whole trace was consumed (no events left over).
+    pub fn finished(&self) -> anyhow::Result<()> {
+        for (q, edge) in self.queues.iter().zip(Edge::ALL) {
+            anyhow::ensure!(
+                q.is_empty(),
+                "trace divergence: {} unreplayed events left on the {} edge",
+                q.len(),
+                edge.as_str()
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ScheduleTrace {
+        let mut t = ScheduleTrace::new(42, 2, 1);
+        t.record(Handoff { edge: Edge::Staging, round: 0, shard: 1, version: 0 });
+        t.record(Handoff { edge: Edge::Staging, round: 0, shard: 0, version: 0 });
+        t.record(Handoff { edge: Edge::AeIn, round: 0, shard: 0, version: 0 });
+        t.record(Handoff { edge: Edge::AeIn, round: 0, shard: 1, version: 0 });
+        t.record(Handoff { edge: Edge::EncIn, round: 0, shard: SHARD_BATCH, version: 1 });
+        t
+    }
+
+    #[test]
+    fn text_round_trip_is_lossless() {
+        let t = sample();
+        let parsed = ScheduleTrace::from_text(&t.to_text()).unwrap();
+        assert_eq!(parsed, t);
+    }
+
+    #[test]
+    fn truncated_file_is_a_torn_trace_error() {
+        let text = sample().to_text();
+        let cut: String =
+            text.lines().take(4).map(|l| format!("{l}\n")).collect();
+        let err = ScheduleTrace::from_text(&cut).unwrap_err();
+        assert!(err.to_string().contains("torn trace"), "got: {err}");
+    }
+
+    #[test]
+    fn malformed_event_line_is_a_torn_trace_error() {
+        let mut text = sample().to_text();
+        text.push_str("staging 1\n");
+        let err = ScheduleTrace::from_text(&text).unwrap_err();
+        assert!(err.to_string().contains("torn trace"), "got: {err}");
+    }
+
+    #[test]
+    fn canonical_is_schedule_independent() {
+        let t = sample();
+        let mut reordered = t.clone();
+        reordered.events.swap(0, 1); // staging arrivals raced the other way
+        assert_ne!(reordered, t);
+        assert_eq!(reordered.canonical(), t.canonical());
+    }
+
+    #[test]
+    fn cursor_flags_divergence_and_leftovers() {
+        let t = sample();
+        let mut c = TraceCursor::new(&t);
+        c.expect(Edge::Staging, 0, 1, 0).unwrap();
+        assert!(c.expect(Edge::Staging, 0, 9, 0).is_err(), "wrong shard must diverge");
+        let mut c2 = TraceCursor::new(&t);
+        c2.expect(Edge::Staging, 0, 1, 0).unwrap();
+        assert!(c2.finished().is_err(), "unconsumed events must be flagged");
+    }
+}

@@ -177,6 +177,57 @@ impl EnvPool {
         out.into_iter().map(|o| o.expect("pool worker dropped a slot")).collect()
     }
 
+    /// [`EnvPool::map_envs`] with per-env result streaming: `sink(i, r)`
+    /// is invoked as each environment finishes instead of collecting a
+    /// `Vec` — the async pipeline's collector pushes shard blocks into
+    /// its bounded staging buffer this way, so a fast env's block is
+    /// consumable while slow envs still run. `sink` may be called
+    /// concurrently from different worker threads (once per env), and a
+    /// blocking sink (e.g. a full bounded buffer) backpressures only the
+    /// worker that produced the block. Results are identical to
+    /// `map_envs` for any thread count; only delivery order varies.
+    pub fn map_envs_streaming<R, F, S>(&mut self, f: F, sink: S)
+    where
+        R: Send,
+        F: Fn(usize, &mut Env, &mut Rng) -> R + Sync,
+        S: Fn(usize, R) + Sync,
+    {
+        let rules = &self.rules;
+        let n = self.slots.len();
+        let threads = crate::search::frontier::effective_threads(self.threads, n);
+        if threads <= 1 {
+            for (i, slot) in self.slots.iter_mut().enumerate() {
+                let r = slot.with_env(rules, |env, rng| f(i, env, rng));
+                sink(i, r);
+            }
+            return;
+        }
+        let chunk = n.div_ceil(threads);
+        std::thread::scope(|scope| {
+            for (ci, slots) in self.slots.chunks_mut(chunk).enumerate() {
+                let f = &f;
+                let sink = &sink;
+                scope.spawn(move || {
+                    for (j, slot) in slots.iter_mut().enumerate() {
+                        let i = ci * chunk + j;
+                        let r = slot.with_env(rules, |env, rng| f(i, env, rng));
+                        sink(i, r);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Run `f` on environment `i` alone (its own state and RNG stream).
+    /// Because every env's trajectory is a function of its slot only,
+    /// driving envs one at a time in any cross-env order reproduces the
+    /// batched calls bit-for-bit — the sequential replay engine's
+    /// collector runs on this.
+    pub fn map_env_at<R>(&mut self, i: usize, f: impl FnOnce(&mut Env, &mut Rng) -> R) -> R {
+        let slot = &mut self.slots[i];
+        slot.with_env(&self.rules, f)
+    }
+
     /// Step every environment with its action. `actions.len()` must be B.
     pub fn step_batch(&mut self, actions: &[(usize, usize)]) -> Vec<StepResult> {
         assert_eq!(actions.len(), self.slots.len(), "one action per env");

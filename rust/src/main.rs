@@ -114,6 +114,7 @@ USAGE:
   rlflow zoo
   rlflow optimize --graph <name> --method <greedy|taso> [--threads N] [--repeat N] [--fresh-cache] [--rules rules.json] [--export out.json]
   rlflow train [--graph <name>] [--backend host|pjrt|auto] [--envs B] [--config cfg.json] [--smoke] [--save dir] [-s key=value]...
+  rlflow train --async [--replay trace.txt] [--trace out.txt] [... train flags]
   rlflow eval --load <dir> [--graph <name>] [--backend host|pjrt|auto] [--envs B] [-s key=value]...
   rlflow experiment <table1|table2|table3|fig5|...|fig10|all> [--runs N] [--backend B] [--envs B] [--smoke] [--out dir] [--fresh-cache] [--rules rules.json]
   rlflow synth --out <rules.json> [--alphabet <groups|all>] [--inputs N] [--ops N] [--seed S] [--tier <always-safe|shape-preserving|all>] [--max-rules N]
@@ -148,6 +149,17 @@ SERVING:
   one search; a full queue sheds load with a typed `overloaded` error.
   `rlflow request` is the matching client (--stats/--ping/--shutdown for
   control; shutdown drains in-flight work, snapshots and exits).
+
+ASYNC TRAINING:
+  `rlflow train --async` runs the pipelined actor/learner trainer: env
+  shards stream trajectories through a bounded staging buffer while the
+  learner stages (GNN-AE, encoder, world model, dream-PPO, eval) train
+  on the previous round. Every cross-stage handoff is recorded to a
+  schedule trace (`--trace out.txt`, or `dir/trace.txt` with --save);
+  `--replay trace.txt` re-executes that exact schedule — same seeds +
+  same trace => bit-identical final params. Knobs: -s async_rounds=N,
+  -s async_stage_threads=N, -s async_staging_cap=N (thread counts never
+  change results, only timing).
 
 BACKENDS:
   host   pure-Rust model execution — the full collect/WM/dream/PPO/eval
@@ -257,7 +269,15 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
-    let cfg = build_config(args)?;
+    let mut cfg = build_config(args)?;
+    // `--async` (equivalent to `-s async=true`): the pipelined
+    // actor/learner path with its schedule-trace determinism contract.
+    if args.flags.get("async").map(|v| v == "true").unwrap_or(false) {
+        cfg.train_async = true;
+    }
+    if cfg.train_async {
+        return cmd_train_async(args, &cfg);
+    }
     let backend = backend_by_name(&cfg.backend)?;
     let pipe = Pipeline::new(backend.as_ref())?;
     let graph = rlflow::zoo::by_name(&cfg.graph)?;
@@ -288,6 +308,68 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         agent.wm.save(format!("{dir}/wm.rlw"))?;
         agent.ctrl.save(format!("{dir}/ctrl.rlw"))?;
         println!("saved parameters to {dir}/");
+    }
+    Ok(())
+}
+
+/// `rlflow train --async`: the pipelined actor/learner trainer. Records
+/// a schedule trace of every cross-stage handoff; `--replay trace.txt`
+/// re-executes a recorded schedule instead (same seeds + same trace =>
+/// bit-identical final params — diffable with `cmp` on the saved .rlw
+/// files).
+fn cmd_train_async(args: &Args, cfg: &RunConfig) -> anyhow::Result<()> {
+    use rlflow::coordinator::{replay_trace, train_async, AsyncTrainCfg, ScheduleTrace};
+    let acfg = AsyncTrainCfg::from_run(cfg);
+    let graph = rlflow::zoo::by_name(&cfg.graph)?;
+    // Each stage thread builds its own backend instance via the factory
+    // (backends hold single-threaded interior state).
+    let backend_name = cfg.backend.clone();
+    let factory = move || backend_by_name(&backend_name);
+
+    let out = if let Some(path) = args.flags.get("replay") {
+        let trace = ScheduleTrace::load(std::path::Path::new(path))?;
+        println!(
+            "replaying schedule {path} on {} (seed {}, {} rounds, {} envs)",
+            cfg.graph, cfg.seed, trace.rounds, trace.envs
+        );
+        replay_trace(&factory, cfg, &acfg, &graph, &trace)?
+    } else {
+        println!(
+            "training async pipeline on {} (seed {}, {} rounds, {} stage threads, staging cap {})",
+            cfg.graph, cfg.seed, acfg.rounds, acfg.stage_threads, acfg.staging_cap
+        );
+        train_async(&factory, cfg, &acfg, &graph)?
+    };
+
+    for re in &out.evals {
+        let scores: Vec<f64> = re.results.iter().map(|r| r.best_improvement_pct).collect();
+        let (m, s) = rlflow::util::stats::mean_std(&scores);
+        println!(
+            "  round {:<2} eval: {:.2}% ± {:.2} improvement over {} runs",
+            re.round,
+            m,
+            s,
+            scores.len()
+        );
+    }
+    println!(
+        "schedule trace: {} handoffs over {} rounds x {} env shards",
+        out.trace.events.len(),
+        out.trace.rounds,
+        out.trace.envs
+    );
+
+    if let Some(path) = args.flags.get("trace") {
+        out.trace.save(std::path::Path::new(path))?;
+        println!("saved schedule trace to {path}");
+    }
+    if let Some(dir) = args.flags.get("save") {
+        std::fs::create_dir_all(dir)?;
+        out.gnn.save(format!("{dir}/gnn.rlw"))?;
+        out.wm.save(format!("{dir}/wm.rlw"))?;
+        out.ctrl.save(format!("{dir}/ctrl.rlw"))?;
+        out.trace.save(std::path::Path::new(&format!("{dir}/trace.txt")))?;
+        println!("saved parameters and schedule trace to {dir}/");
     }
     Ok(())
 }

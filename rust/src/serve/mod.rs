@@ -42,7 +42,7 @@ pub use protocol::{
     decode_request, encode_control, encode_optimize, result_payload, ErrorCode, Method,
     OptimizeRequest, Provenance, Request, Response,
 };
-pub use queue::{BoundedQueue, PushError};
+pub use queue::{BoundedQueue, Popped, PushError};
 pub use server::{run, spawn, Handle, ServerConfig};
 pub use service::{Outcome, ServeConfig, ServeCore, ServeError, Served};
 pub use stats::{LatencyAgg, ServeStats};

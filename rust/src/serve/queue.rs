@@ -24,6 +24,17 @@ pub enum PushError {
     Closed,
 }
 
+/// Verdict of a [`BoundedQueue::pop_where`] claim, decided under the
+/// queue lock atomically with removal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Popped<T> {
+    /// Claimed before expiry: the worker must run it.
+    Claimed(T),
+    /// Already expired when claimed: the worker must answer timeout
+    /// without running it. The item is handed back for the reply path.
+    Expired(T),
+}
+
 struct State<T> {
     items: VecDeque<T>,
     closed: bool,
@@ -66,10 +77,31 @@ impl<T> BoundedQueue<T> {
     /// once the queue is closed *and* fully drained — accepted work is
     /// always completed before workers exit.
     pub fn pop(&self) -> Option<T> {
+        match self.pop_where(|_| false) {
+            Some(Popped::Claimed(item)) => Some(item),
+            Some(Popped::Expired(_)) => unreachable!("predicate is constant false"),
+            None => None,
+        }
+    }
+
+    /// [`BoundedQueue::pop`] with expiry made atomic with the claim:
+    /// `expired` is evaluated on the item *while the queue lock is held*,
+    /// so the verdict — [`Popped::Claimed`] (run it) vs
+    /// [`Popped::Expired`] (answer timeout, don't run) — is decided in
+    /// the same critical section that removes the item. A separate
+    /// pop-then-check sequence leaves a window where the deadline passes
+    /// after the check but before the work starts; with `pop_where` no
+    /// such window exists — whichever verdict the worker observes is the
+    /// one the item left the queue with.
+    pub fn pop_where(&self, expired: impl Fn(&T) -> bool) -> Option<Popped<T>> {
         let mut s = self.state.lock().expect("serve queue poisoned");
         loop {
             if let Some(item) = s.items.pop_front() {
-                return Some(item);
+                return Some(if expired(&item) {
+                    Popped::Expired(item)
+                } else {
+                    Popped::Claimed(item)
+                });
             }
             if s.closed {
                 return None;
@@ -118,6 +150,36 @@ mod tests {
         assert_eq!(q.push(3), Err(PushError::Overloaded { depth: 2 }));
         assert_eq!(q.pop(), Some(1));
         q.push(3).unwrap();
+    }
+
+    #[test]
+    fn pop_where_classifies_under_the_lock() {
+        use std::time::{Duration, Instant};
+        let q = BoundedQueue::new(4);
+        let now = Instant::now();
+        // Item 1's deadline already passed when it is claimed; item 2's
+        // has not. Classification rides the FIFO order.
+        q.push((1u32, now - Duration::from_millis(1))).unwrap();
+        q.push((2u32, now + Duration::from_secs(60))).unwrap();
+        match q.pop_where(|&(_, d)| Instant::now() >= d) {
+            Some(Popped::Expired((1, _))) => {}
+            other => panic!("expected Expired(1), got {other:?}"),
+        }
+        match q.pop_where(|&(_, d)| Instant::now() >= d) {
+            Some(Popped::Claimed((2, _))) => {}
+            other => panic!("expected Claimed(2), got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pop_where_drains_after_close_and_preserves_fifo() {
+        let q = BoundedQueue::new(4);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.close();
+        assert_eq!(q.pop_where(|&x| x == 1), Some(Popped::Expired(1)));
+        assert_eq!(q.pop_where(|&x| x == 1), Some(Popped::Claimed(2)));
+        assert_eq!(q.pop_where(|_| false), None, "closed and drained");
     }
 
     #[test]

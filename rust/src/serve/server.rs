@@ -31,7 +31,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::protocol::{self, ErrorCode, OptimizeRequest, Request, Response};
-use super::queue::{BoundedQueue, PushError};
+use super::queue::{BoundedQueue, Popped, PushError};
 use super::service::{ServeConfig, ServeCore, ServeError};
 
 /// Simultaneous client connections admitted before shedding.
@@ -190,16 +190,24 @@ fn accept_loop(
 }
 
 fn worker_loop(queue: &BoundedQueue<Job>, core: &ServeCore) {
-    while let Some(job) = queue.pop() {
-        // A job that expired while queued is answered without running —
-        // the client already gave up on it.
-        if Instant::now() >= job.deadline {
-            let resp = Response::error(ErrorCode::Timeout, "request timed out while queued");
-            if job.reply.send(resp).is_ok() {
-                core.note_timeout();
+    // Expiry is decided atomically with the claim (under the queue
+    // lock): a job can no longer expire between being popped and the
+    // deadline check, so the verdict the worker acts on is the verdict
+    // the job left the queue with.
+    while let Some(popped) = queue.pop_where(|job| Instant::now() >= job.deadline) {
+        let job = match popped {
+            Popped::Expired(job) => {
+                // Expired while queued: answered without running — the
+                // client already gave up on it.
+                let resp =
+                    Response::error(ErrorCode::Timeout, "request timed out while queued");
+                if job.reply.send(resp).is_ok() {
+                    core.note_timeout();
+                }
+                continue;
             }
-            continue;
-        }
+            Popped::Claimed(job) => job,
+        };
         let name = job.req.graph_name.clone();
         let resp = match core.optimize(&job.req, Some(job.deadline)) {
             Ok(outcome) => match outcome.payload(&name) {

@@ -1,0 +1,173 @@
+//! Tier-1 concurrency battery for the async actor/learner pipeline's
+//! determinism contract: for every (env count, stage-thread count) in
+//! the sweep, `train_async == train_reference == replay_trace(own
+//! trace)` — final params compared bit-for-bit — plus torn-trace and
+//! partial-batch recovery (typed errors, never a silent shorter run).
+
+use rlflow::config::RunConfig;
+use rlflow::coordinator::{
+    replay_trace, train_async, train_reference, AsyncOutcome, AsyncTrainCfg, Edge,
+    ScheduleTrace,
+};
+use rlflow::graph::{GraphBuilder, PadMode};
+use rlflow::runtime::{Backend, HostBackend, HostConfig};
+use rlflow::xfer::library::standard_library;
+
+/// Small host dimensions sized for the tiny test graph (mirrors
+/// `tests/host_backend.rs`); the xfer slot space still matches the real
+/// rule library so the env mapping is exact.
+fn tiny_config() -> HostConfig {
+    HostConfig {
+        max_nodes: 48,
+        node_feats: 32,
+        gnn_hidden: 12,
+        latent: 8,
+        rnn_hidden: 12,
+        mdn_k: 2,
+        act_emb: 4,
+        ctrl_hidden: 16,
+        n_xfers1: standard_library().len() + 1,
+        max_locs: 200,
+        b_dream: 4,
+        b_wm: 4,
+        seq_len: 4,
+        b_ppo: 16,
+        b_enc: 4,
+        kernels: rlflow::runtime::KernelCfg::default(),
+    }
+}
+
+fn factory() -> anyhow::Result<Box<dyn Backend>> {
+    Ok(Box::new(HostBackend::with_config(tiny_config())))
+}
+
+fn small_graph() -> rlflow::graph::Graph {
+    let mut b = GraphBuilder::new();
+    let x = b.input(&[1, 3, 16, 16]);
+    let c1 = b.conv_bn_relu(x, 8, 3, 1, PadMode::Same).unwrap();
+    let c2 = b.conv(c1, 8, 1, 1, PadMode::Same).unwrap();
+    let r = b.relu(c2).unwrap();
+    let _ = b.maxpool(r, 2, 2).unwrap();
+    b.finish()
+}
+
+fn tiny_run_config(envs: usize) -> RunConfig {
+    let mut cfg = RunConfig::smoke();
+    cfg.backend = "host".into();
+    cfg.envs = envs;
+    cfg.collect_episodes = 8;
+    cfg.ae_steps = 2;
+    cfg.wm.total_steps = 2;
+    cfg.dream_epochs = 1;
+    cfg.dream_horizon = 3;
+    cfg.ppo.epochs = 1;
+    cfg.eval_episodes = 1;
+    cfg.env.max_steps = 4;
+    cfg
+}
+
+fn acfg(stage_threads: usize) -> AsyncTrainCfg {
+    AsyncTrainCfg { rounds: 2, stage_threads, staging_cap: 2, jitter: None }
+}
+
+/// Bit-exact f32 vector equality (`==` would treat -0.0 == 0.0 and hide
+/// NaN drift).
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn assert_outcomes_identical(a: &AsyncOutcome, b: &AsyncOutcome, what: &str) {
+    assert_eq!(bits(&a.gnn.theta), bits(&b.gnn.theta), "{what}: gnn params differ");
+    assert_eq!(bits(&a.wm.theta), bits(&b.wm.theta), "{what}: wm params differ");
+    assert_eq!(bits(&a.ctrl.theta), bits(&b.ctrl.theta), "{what}: ctrl params differ");
+    assert_eq!(bits(&a.gnn.m), bits(&b.gnn.m), "{what}: gnn Adam state differs");
+    assert_eq!(bits(&a.ctrl.v), bits(&b.ctrl.v), "{what}: ctrl Adam state differs");
+    assert_eq!(bits(&a.ae_losses), bits(&b.ae_losses), "{what}: AE loss curves differ");
+    assert_eq!(bits(&a.dream_curve), bits(&b.dream_curve), "{what}: dream curves differ");
+    assert_eq!(a.evals.len(), b.evals.len(), "{what}: eval round counts differ");
+    for (ra, rb) in a.evals.iter().zip(&b.evals) {
+        let sa: Vec<u64> =
+            ra.results.iter().map(|r| r.best_improvement_pct.to_bits()).collect();
+        let sb: Vec<u64> =
+            rb.results.iter().map(|r| r.best_improvement_pct.to_bits()).collect();
+        assert_eq!(sa, sb, "{what}: eval scores differ in round {}", ra.round);
+    }
+}
+
+/// The property sweep: every (envs, stage_threads) combination matches
+/// the synchronous reference bit-for-bit, its canonical trace equals the
+/// reference schedule's, and replaying its own trace reproduces it.
+#[test]
+fn async_reference_and_replay_agree_across_the_sweep() {
+    let graph = small_graph();
+    for envs in [1usize, 4, 8] {
+        let cfg = tiny_run_config(envs);
+        let reference = train_reference(&factory, &cfg, &acfg(1), &graph).unwrap();
+        for stage_threads in [1usize, 2, 4] {
+            let what = format!("envs={envs} stage_threads={stage_threads}");
+            let out = train_async(&factory, &cfg, &acfg(stage_threads), &graph).unwrap();
+            assert_outcomes_identical(&out, &reference, &format!("{what} vs reference"));
+            assert_eq!(
+                out.trace.canonical(),
+                reference.trace.canonical(),
+                "{what}: canonical traces diverge — the schedules carried different data"
+            );
+            let replayed =
+                replay_trace(&factory, &cfg, &acfg(stage_threads), &graph, &out.trace).unwrap();
+            assert_outcomes_identical(&replayed, &out, &format!("{what} vs own-trace replay"));
+        }
+    }
+}
+
+/// The recorded trace is complete: every edge carries one event per
+/// round (staging/ae additionally one per shard), and the header matches
+/// the run.
+#[test]
+fn recorded_trace_is_complete_and_well_formed() {
+    let graph = small_graph();
+    let cfg = tiny_run_config(4);
+    let out = train_async(&factory, &cfg, &acfg(2), &graph).unwrap();
+    let t = &out.trace;
+    assert_eq!((t.seed, t.envs, t.rounds), (cfg.seed, 4, 2));
+    assert_eq!(t.events_on(Edge::Staging).count(), 8, "2 rounds x 4 shards");
+    assert_eq!(t.events_on(Edge::AeIn).count(), 8);
+    for edge in [Edge::EncIn, Edge::WmIn, Edge::DreamIn, Edge::EvalIn] {
+        assert_eq!(t.events_on(edge).count(), 2, "one {} handoff per round", edge.as_str());
+    }
+    // Round trip through the on-disk format is lossless.
+    assert_eq!(&ScheduleTrace::from_text(&t.to_text()).unwrap(), t);
+}
+
+/// Torn-trace recovery: a truncated trace file is a typed load error,
+/// and a trace missing a staging block is a typed "partial batch" replay
+/// error — neither can silently replay a shorter schedule.
+#[test]
+fn torn_traces_and_partial_batches_are_typed_errors() {
+    let graph = small_graph();
+    let cfg = tiny_run_config(4);
+    let out = train_async(&factory, &cfg, &acfg(2), &graph).unwrap();
+
+    // Tear the file mid-way: parsing must refuse it.
+    let text = out.trace.to_text();
+    let torn: String = text.lines().take(5).map(|l| format!("{l}\n")).collect();
+    let err = ScheduleTrace::from_text(&torn).unwrap_err();
+    assert!(err.to_string().contains("torn trace"), "got: {err}");
+
+    // Drop one shard's staging block (a partial batch): replay must
+    // refuse before training anything.
+    let mut partial = out.trace.clone();
+    let victim = partial
+        .events
+        .iter()
+        .position(|h| h.edge == Edge::Staging && h.round == 1 && h.shard == 2)
+        .expect("sweep trace has the (1, 2) staging block");
+    partial.events.remove(victim);
+    let err = replay_trace(&factory, &cfg, &acfg(2), &graph, &partial).unwrap_err();
+    assert!(err.to_string().contains("partial batch"), "got: {err}");
+
+    // A trace recorded under a different run identity must be refused.
+    let mut foreign = out.trace.clone();
+    foreign.seed ^= 1;
+    let err = replay_trace(&factory, &cfg, &acfg(2), &graph, &foreign).unwrap_err();
+    assert!(err.to_string().contains("does not match this run"), "got: {err}");
+}

@@ -183,6 +183,63 @@ fn persisted_stats_accumulate_across_generations() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Regression: queued-deadline expiry must be decided atomically with
+/// the dequeue (`BoundedQueue::pop_where`), not checked after the pop.
+/// A request whose deadline has already passed when a worker claims it
+/// gets the typed `timeout` error and never runs a search — with the
+/// old pop-then-check sequence the verdict could flip between the claim
+/// and the check.
+#[test]
+fn queued_deadline_expiry_is_atomic_with_the_claim() {
+    use rlflow::serve::{client, encode_control, encode_optimize};
+
+    let mut cfg = ServerConfig::new("127.0.0.1:0");
+    cfg.workers = 1;
+    cfg.core.threads = 1;
+    let handle = rlflow::serve::spawn(cfg).unwrap();
+    let addr = handle.addr.to_string();
+    let timeout = std::time::Duration::from_secs(60);
+
+    // A zero-millisecond budget has always expired by claim time, so the
+    // classification under the queue lock must come back `Expired`.
+    let mut req = small_request();
+    req.timeout_ms = Some(0);
+    match client::roundtrip(&addr, &encode_optimize(&req).unwrap(), timeout).unwrap() {
+        Response::Error { code, message } => {
+            assert_eq!(code, ErrorCode::Timeout, "got: {message}");
+            assert!(message.contains("queued"), "got: {message}");
+        }
+        other => panic!("expected timeout error, got {other:?}"),
+    }
+
+    // The expired job was answered without running: no search happened,
+    // and the timeout was counted.
+    match client::roundtrip(&addr, &encode_control("stats"), timeout).unwrap() {
+        Response::Stats(stats) => {
+            assert_eq!(
+                stats.get("fresh_searches").unwrap().as_usize().unwrap(),
+                0,
+                "an expired job must never reach the search"
+            );
+            assert_eq!(stats.get("timeouts").unwrap().as_usize().unwrap(), 1);
+        }
+        other => panic!("expected stats, got {other:?}"),
+    }
+
+    // A sane budget still serves normally afterwards.
+    match client::roundtrip(&addr, &encode_optimize(&small_request()).unwrap(), timeout).unwrap()
+    {
+        Response::Result { provenance, .. } => assert_eq!(provenance, Provenance::Fresh),
+        other => panic!("expected result, got {other:?}"),
+    }
+
+    match client::roundtrip(&addr, &encode_control("shutdown"), timeout).unwrap() {
+        Response::Ok(_) => {}
+        other => panic!("expected ok, got {other:?}"),
+    }
+    handle.join().unwrap();
+}
+
 // ---------------------------------------------------------------------------
 // End-to-end over a loopback socket
 // ---------------------------------------------------------------------------

@@ -1,0 +1,211 @@
+//! Stress battery for the async pipeline's plumbing: the bounded staging
+//! buffer under a deliberately slow consumer (backpressure, never drop
+//! or reorder within a shard), the streaming env-pool fan-out against
+//! its batched oracle, and the seeded "jittery stage" harness shaking
+//! stage timing while asserting schedule-trace equality.
+
+use std::time::Duration;
+
+use rlflow::config::RunConfig;
+use rlflow::coordinator::{train_async, AsyncTrainCfg, StageChannel};
+use rlflow::cost::{CostModel, DeviceProfile};
+use rlflow::env::{EnvPool, EnvPoolConfig};
+use rlflow::graph::{GraphBuilder, PadMode};
+use rlflow::runtime::{Backend, HostBackend, HostConfig};
+use rlflow::xfer::library::standard_library;
+
+fn small_graph() -> rlflow::graph::Graph {
+    let mut b = GraphBuilder::new();
+    let x = b.input(&[1, 3, 16, 16]);
+    let c1 = b.conv_bn_relu(x, 8, 3, 1, PadMode::Same).unwrap();
+    let c2 = b.conv(c1, 8, 1, 1, PadMode::Same).unwrap();
+    let r = b.relu(c2).unwrap();
+    let _ = b.maxpool(r, 2, 2).unwrap();
+    b.finish()
+}
+
+/// A slow consumer must backpressure the producers through the bounded
+/// buffer — never drop an item, never exceed capacity, never reorder
+/// within a producer ("shard") — and every producer must run to
+/// completion despite blocking on a full buffer.
+#[test]
+fn slow_consumer_backpressures_without_drops_or_shard_reorder() {
+    const SHARDS: usize = 4;
+    const PER_SHARD: usize = 50;
+    let chan: StageChannel<(usize, usize)> = StageChannel::new(3);
+
+    let received = std::thread::scope(|s| {
+        let producers: Vec<_> = (0..SHARDS)
+            .map(|shard| {
+                let chan = &chan;
+                s.spawn(move || {
+                    for seq in 0..PER_SHARD {
+                        chan.send((shard, seq)).expect("consumer closed early");
+                    }
+                })
+            })
+            .collect();
+        let consumer = s.spawn(|| {
+            let mut got = Vec::new();
+            while let Some(item) = chan.recv() {
+                // The bound holds at every observation point.
+                assert!(
+                    chan.depth() <= chan.capacity(),
+                    "buffer depth {} exceeded capacity {}",
+                    chan.depth(),
+                    chan.capacity()
+                );
+                got.push(item);
+                // Deliberately slower than the producers.
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            got
+        });
+        // Producers finish only because the consumer drains them; only
+        // then does EOF reach the consumer.
+        for p in producers {
+            p.join().expect("producer panicked");
+        }
+        chan.close();
+        consumer.join().expect("consumer panicked")
+    });
+
+    assert_eq!(received.len(), SHARDS * PER_SHARD, "backpressure must never drop");
+    let mut next = [0usize; SHARDS];
+    for (shard, seq) in received {
+        assert_eq!(seq, next[shard], "shard {shard} items arrived out of order");
+        next[shard] += 1;
+    }
+    assert!(next.iter().all(|&n| n == PER_SHARD));
+}
+
+/// A sender blocked on a full buffer is woken by `close` and gets its
+/// item back instead of losing it.
+#[test]
+fn close_releases_a_blocked_producer_with_its_item() {
+    let chan: StageChannel<u32> = StageChannel::new(1);
+    chan.send(1).unwrap();
+    std::thread::scope(|s| {
+        let blocked = s.spawn(|| chan.send(2));
+        std::thread::sleep(Duration::from_millis(20));
+        chan.close();
+        let err = blocked.join().unwrap().unwrap_err();
+        assert_eq!(err.0, 2, "the refused item is handed back");
+    });
+    assert_eq!(chan.recv(), Some(1), "already-queued work still drains");
+    assert_eq!(chan.recv(), None);
+}
+
+/// `map_envs_streaming` is the same computation as `map_envs` — one
+/// result per env, identical per-env values — only delivery differs.
+#[test]
+fn streaming_env_pool_matches_batched_map_envs() {
+    let cost = CostModel::new(DeviceProfile::rtx2070());
+    let mk = |threads| {
+        EnvPool::new(
+            &small_graph(),
+            standard_library(),
+            &cost,
+            &EnvPoolConfig { n_envs: 8, threads, seed: 7, ..Default::default() },
+        )
+    };
+    // Each env takes its first valid action for 3 steps and reports the
+    // rewards plus an RNG draw (exercising the per-env stream).
+    let drive = |_i: usize, env: &mut rlflow::env::Env, rng: &mut rlflow::util::Rng| {
+        let mut rewards = Vec::new();
+        for _ in 0..3 {
+            let obs = env.observe();
+            let a = (0..obs.xfer_mask.len() - 1)
+                .find(|&x| obs.xfer_mask[x])
+                .map(|x| (x, 0))
+                .unwrap_or((env.noop_action(), 0));
+            rewards.push(env.step(a).reward.to_bits());
+        }
+        (rewards, rng.next_u64())
+    };
+
+    let batched = mk(4).map_envs(&drive);
+
+    let streamed: std::sync::Mutex<Vec<Option<(Vec<u32>, u64)>>> =
+        std::sync::Mutex::new(vec![None; 8]);
+    mk(4).map_envs_streaming(&drive, |i, r| {
+        let mut out = streamed.lock().unwrap();
+        assert!(out[i].is_none(), "sink called twice for shard {i}");
+        out[i] = Some(r);
+    });
+    let streamed: Vec<_> =
+        streamed.into_inner().unwrap().into_iter().map(|o| o.expect("missing shard")).collect();
+    assert_eq!(streamed, batched);
+
+    // Single-threaded streaming agrees too (the sequential code path).
+    let seq: std::sync::Mutex<Vec<Option<(Vec<u32>, u64)>>> = std::sync::Mutex::new(vec![None; 8]);
+    mk(1).map_envs_streaming(&drive, |i, r| {
+        seq.lock().unwrap()[i] = Some(r);
+    });
+    let seq: Vec<_> =
+        seq.into_inner().unwrap().into_iter().map(|o| o.expect("missing shard")).collect();
+    assert_eq!(seq, batched);
+}
+
+fn tiny_config() -> HostConfig {
+    HostConfig {
+        max_nodes: 48,
+        node_feats: 32,
+        gnn_hidden: 12,
+        latent: 8,
+        rnn_hidden: 12,
+        mdn_k: 2,
+        act_emb: 4,
+        ctrl_hidden: 16,
+        n_xfers1: standard_library().len() + 1,
+        max_locs: 200,
+        b_dream: 4,
+        b_wm: 4,
+        seq_len: 4,
+        b_ppo: 16,
+        b_enc: 4,
+        kernels: rlflow::runtime::KernelCfg::default(),
+    }
+}
+
+fn factory() -> anyhow::Result<Box<dyn Backend>> {
+    Ok(Box::new(HostBackend::with_config(tiny_config())))
+}
+
+/// The jittery-stage harness: seeded 0–2 ms sleeps at every handoff
+/// randomise stage *timing* without touching any data. Final params and
+/// the canonical schedule trace must be bit-identical to the unjittered
+/// run — the schedule decides when, never what.
+#[test]
+fn seeded_timing_jitter_never_changes_results() {
+    let graph = small_graph();
+    let mut cfg = RunConfig::smoke();
+    cfg.backend = "host".into();
+    cfg.envs = 4;
+    cfg.collect_episodes = 8;
+    cfg.ae_steps = 2;
+    cfg.wm.total_steps = 2;
+    cfg.dream_epochs = 1;
+    cfg.dream_horizon = 3;
+    cfg.ppo.epochs = 1;
+    cfg.eval_episodes = 1;
+    cfg.env.max_steps = 4;
+
+    let run = |jitter| {
+        let acfg = AsyncTrainCfg { rounds: 2, stage_threads: 4, staging_cap: 1, jitter };
+        train_async(&factory, &cfg, &acfg, &graph).unwrap()
+    };
+    let calm = run(None);
+    for seed in [7u64, 1234] {
+        let shaken = run(Some(seed));
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&calm.gnn.theta), bits(&shaken.gnn.theta), "jitter {seed}: gnn");
+        assert_eq!(bits(&calm.wm.theta), bits(&shaken.wm.theta), "jitter {seed}: wm");
+        assert_eq!(bits(&calm.ctrl.theta), bits(&shaken.ctrl.theta), "jitter {seed}: ctrl");
+        assert_eq!(
+            calm.trace.canonical(),
+            shaken.trace.canonical(),
+            "jitter {seed}: canonical traces diverge"
+        );
+    }
+}
