@@ -58,6 +58,13 @@ pub struct RunConfig {
     /// Capacity of the bounded staging buffer between the collector and
     /// the learner stages (backpressure bound; min 1).
     pub async_staging_cap: usize,
+    /// Write an atomic checkpoint every N training rounds (0 disables;
+    /// CLI `--checkpoint-every N`). Applies to both the synchronous
+    /// round engine and the async pipeline.
+    pub checkpoint_every: usize,
+    /// Directory checkpoints are written to / resumed from (CLI
+    /// `--checkpoint-dir`, overridden by `--resume DIR`).
+    pub checkpoint_dir: String,
 }
 
 impl Default for RunConfig {
@@ -88,6 +95,8 @@ impl Default for RunConfig {
             async_rounds: 2,
             async_stage_threads: 2,
             async_staging_cap: 8,
+            checkpoint_every: 0,
+            checkpoint_dir: "checkpoints".into(),
         }
     }
 }
@@ -178,6 +187,8 @@ impl RunConfig {
                 "async_rounds" => self.async_rounds = value.as_usize()?,
                 "async_stage_threads" => self.async_stage_threads = value.as_usize()?,
                 "async_staging_cap" => self.async_staging_cap = value.as_usize()?,
+                "checkpoint_every" => self.checkpoint_every = value.as_usize()?,
+                "checkpoint_dir" => self.checkpoint_dir = value.as_str()?.to_string(),
                 other => anyhow::bail!("unknown config key '{}'", other),
             }
         }
@@ -247,6 +258,10 @@ mod tests {
         assert_eq!(cfg.async_stage_threads, 4);
         cfg.apply_override("async_staging_cap=2").unwrap();
         assert_eq!(cfg.async_staging_cap, 2);
+        cfg.apply_override("checkpoint_every=3").unwrap();
+        assert_eq!(cfg.checkpoint_every, 3);
+        cfg.apply_override("checkpoint_dir=/tmp/ck").unwrap();
+        assert_eq!(cfg.checkpoint_dir, "/tmp/ck");
         assert!(cfg.apply_override("nonsense").is_err());
     }
 }

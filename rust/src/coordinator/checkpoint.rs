@@ -1,0 +1,867 @@
+//! Crash-safe training checkpoints: the complete state of a round-based
+//! training run (sequential or async), serialised to a versioned binary
+//! file with the same atomic-write discipline as `serve/persist.rs`.
+//!
+//! A checkpoint captures everything the round engines thread between
+//! rounds: the three [`ParamStore`]s (thetas *and* Adam moments), every
+//! persistent RNG stream (per-stage learner streams and per-env
+//! collector streams), the replay pools the learner stages accumulate
+//! (AE state pool, WM episode pool), loss curves, eval history, the
+//! round counter, and the schedule-trace prefix. Restoring one and
+//! running the remaining rounds is bit-identical to never having
+//! stopped — pinned by `tests/pipeline_async.rs`.
+//!
+//! On-disk format (`ckpt-NNNNN.rlck`, all little-endian):
+//!
+//! ```text
+//! magic "RLCK" | u32 format version | u64 body length | body | u64 FNV-1a(body)
+//! ```
+//!
+//! Floats are stored as raw bit patterns, so a round trip is exact. The
+//! trailing hash plus the length prefix mean a torn or bit-flipped file
+//! *never* loads: [`Checkpoint::load_latest`] skips invalid files with
+//! a warning and falls back to the newest valid one. Writes go through
+//! tmp + flush + `sync_all` + rename (failpoint sites `ckpt.write`,
+//! `ckpt.fsync`, `ckpt.rename`, and `ckpt.done` after a successful
+//! rename), so a kill at any instant leaves either the old set of
+//! checkpoints or the old set plus one complete new file.
+
+use std::collections::HashMap;
+use std::fs::File;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::agent::{CompactState, Episode};
+use crate::graph::{onnx, Graph};
+use crate::runtime::ParamStore;
+use crate::util::failpoint;
+use crate::wm::WmLosses;
+
+use super::pipeline::EvalResult;
+use super::pipeline_async::RoundEval;
+use super::trace::{Edge, Handoff, ScheduleTrace, TraceSink};
+
+const MAGIC: &[u8; 4] = b"RLCK";
+const FORMAT_VERSION: u32 = 1;
+
+/// Where and how often the round engines write checkpoints.
+#[derive(Debug, Clone)]
+pub struct CheckpointCfg {
+    /// Directory checkpoint files are written into (created on demand).
+    pub dir: PathBuf,
+    /// Write after every N completed rounds (0 disables).
+    pub every: usize,
+}
+
+/// Auto-encoder stage state at a round boundary.
+#[derive(Debug, Clone)]
+pub struct AeCkpt {
+    /// GNN params + Adam moments.
+    pub gnn: ParamStore,
+    /// The stage's persistent RNG stream.
+    pub rng: [u64; 4],
+    /// Rounds of AE training completed (the published param version).
+    pub version: u32,
+    /// Per-step AE loss curve so far.
+    pub losses: Vec<f32>,
+    /// Accumulated state pool the AE trains on.
+    pub states: Vec<CompactState>,
+}
+
+/// World-model stage state at a round boundary.
+#[derive(Debug, Clone)]
+pub struct WmCkpt {
+    /// WM params + Adam moments.
+    pub wm: ParamStore,
+    /// The stage's persistent RNG stream.
+    pub rng: [u64; 4],
+    /// Global WM optimiser step (drives the LR schedule).
+    pub step: u64,
+    /// Per-step WM loss curve so far.
+    pub curve: Vec<WmLosses>,
+    /// Accumulated encoded-episode pool the WM trains on.
+    pub episodes: Vec<Episode>,
+}
+
+/// Dream-PPO stage state at a round boundary.
+#[derive(Debug, Clone)]
+pub struct DreamCkpt {
+    /// Controller params + Adam moments.
+    pub ctrl: ParamStore,
+    /// The stage's persistent RNG stream.
+    pub rng: [u64; 4],
+    /// Per-epoch dream return curve so far.
+    pub curve: Vec<f32>,
+}
+
+/// Complete round-boundary state of a round-based training run.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    /// Run seed (resume refuses a mismatched config).
+    pub seed: u64,
+    /// Total rounds the run was planned with.
+    pub rounds: u32,
+    /// Collector env-shard count the run was planned with.
+    pub n_envs: u32,
+    /// First round *not* yet completed; resume starts here.
+    pub next_round: u32,
+    /// Auto-encoder stage state.
+    pub ae: AeCkpt,
+    /// World-model stage state.
+    pub wm: WmCkpt,
+    /// Dream-PPO stage state.
+    pub dream: DreamCkpt,
+    /// Eval history for completed rounds.
+    pub evals: Vec<RoundEval>,
+    /// Per-env collector RNG streams, in shard order.
+    pub env_rngs: Vec<[u64; 4]>,
+    /// Schedule-trace events for completed rounds (the prefix a resumed
+    /// run's recorded trace continues from).
+    pub trace_events: Vec<Handoff>,
+}
+
+// ---- byte-level encoding ------------------------------------------------
+
+fn fnv64(data: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[derive(Default)]
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+    fn f32s(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.f32(x);
+        }
+    }
+    fn rng(&mut self, s: [u64; 4]) {
+        for w in s {
+            self.u64(w);
+        }
+    }
+}
+
+struct Dec<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.pos + n <= self.b.len(),
+            "checkpoint truncated: need {n} bytes at offset {}, have {}",
+            self.pos,
+            self.b.len() - self.pos
+        );
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> anyhow::Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> anyhow::Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+    fn f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    fn len(&mut self) -> anyhow::Result<usize> {
+        Ok(self.u32()? as usize)
+    }
+    fn str(&mut self) -> anyhow::Result<String> {
+        let n = self.len()?;
+        Ok(String::from_utf8(self.take(n)?.to_vec())?)
+    }
+    fn f32s(&mut self) -> anyhow::Result<Vec<f32>> {
+        let n = self.len()?;
+        (0..n).map(|_| self.f32()).collect()
+    }
+    fn rng(&mut self) -> anyhow::Result<[u64; 4]> {
+        Ok([self.u64()?, self.u64()?, self.u64()?, self.u64()?])
+    }
+}
+
+fn enc_params(e: &mut Enc, p: &ParamStore) {
+    e.str(&p.family);
+    e.f32(p.t);
+    e.u64(p.version);
+    e.f32s(&p.theta);
+    e.f32s(&p.m);
+    e.f32s(&p.v);
+}
+
+fn dec_params(d: &mut Dec) -> anyhow::Result<ParamStore> {
+    let family = d.str()?;
+    let t = d.f32()?;
+    let version = d.u64()?;
+    let theta = d.f32s()?;
+    let m = d.f32s()?;
+    let v = d.f32s()?;
+    anyhow::ensure!(
+        m.len() == theta.len() && v.len() == theta.len(),
+        "{family}: checkpoint moment vectors disagree with theta length"
+    );
+    Ok(ParamStore { family, theta, m, v, t, version })
+}
+
+fn enc_state(e: &mut Enc, s: &CompactState) {
+    e.u32(s.n_live as u32);
+    e.f32s(&s.feats);
+    e.u32(s.edges.len() as u32);
+    for &(a, b) in &s.edges {
+        e.u16(a);
+        e.u16(b);
+    }
+}
+
+fn dec_state(d: &mut Dec) -> anyhow::Result<CompactState> {
+    let n_live = d.u32()? as usize;
+    let feats = d.f32s()?;
+    let n = d.len()?;
+    let edges = (0..n)
+        .map(|_| Ok((d.u16()?, d.u16()?)))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    Ok(CompactState { n_live, feats, edges })
+}
+
+fn enc_episode(e: &mut Enc, ep: &Episode) {
+    e.u32(ep.states.len() as u32);
+    for s in &ep.states {
+        enc_state(e, s);
+    }
+    e.u32(ep.xmasks.len() as u32);
+    for m in &ep.xmasks {
+        e.f32s(m);
+    }
+    e.u32(ep.actions.len() as u32);
+    for &(a, b) in &ep.actions {
+        e.u16(a);
+        e.u16(b);
+    }
+    e.f32s(&ep.rewards);
+    e.f32s(&ep.dones);
+    e.u32(ep.z.len() as u32);
+    for z in &ep.z {
+        e.f32s(z);
+    }
+    e.u64(ep.policy_version);
+}
+
+fn dec_episode(d: &mut Dec) -> anyhow::Result<Episode> {
+    let states = (0..d.len()?).map(|_| dec_state(d)).collect::<anyhow::Result<Vec<_>>>()?;
+    let xmasks = (0..d.len()?).map(|_| d.f32s()).collect::<anyhow::Result<Vec<_>>>()?;
+    let n = d.len()?;
+    let actions =
+        (0..n).map(|_| Ok((d.u16()?, d.u16()?))).collect::<anyhow::Result<Vec<_>>>()?;
+    let rewards = d.f32s()?;
+    let dones = d.f32s()?;
+    let z = (0..d.len()?).map(|_| d.f32s()).collect::<anyhow::Result<Vec<_>>>()?;
+    let policy_version = d.u64()?;
+    Ok(Episode { states, xmasks, actions, rewards, dones, z, policy_version })
+}
+
+fn enc_eval(e: &mut Enc, r: &EvalResult) -> anyhow::Result<()> {
+    e.f64(r.best_improvement_pct);
+    e.f64(r.final_improvement_pct);
+    e.u64(r.steps as u64);
+    e.u32(r.history.len() as u32);
+    for &(x, l) in &r.history {
+        e.u64(x as u64);
+        e.u64(l as u64);
+    }
+    e.f64(r.mean_step_s);
+    match &r.best_graph {
+        Some(g) => {
+            e.u8(1);
+            e.str(&onnx::export(g, "checkpoint")?.to_string_compact());
+        }
+        None => e.u8(0),
+    }
+    Ok(())
+}
+
+fn dec_eval(d: &mut Dec) -> anyhow::Result<EvalResult> {
+    let best_improvement_pct = d.f64()?;
+    let final_improvement_pct = d.f64()?;
+    let steps = d.u64()? as usize;
+    let n = d.len()?;
+    let history = (0..n)
+        .map(|_| Ok((d.u64()? as usize, d.u64()? as usize)))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let mean_step_s = d.f64()?;
+    let best_graph: Option<Graph> = match d.u8()? {
+        0 => None,
+        _ => Some(onnx::import(&crate::util::json::parse(&d.str()?)?)?),
+    };
+    Ok(EvalResult {
+        best_improvement_pct,
+        final_improvement_pct,
+        steps,
+        history,
+        mean_step_s,
+        best_graph,
+    })
+}
+
+fn enc_handoff(e: &mut Enc, h: &Handoff) {
+    let rank = Edge::ALL.iter().position(|x| *x == h.edge).unwrap() as u8;
+    e.u8(rank);
+    e.u32(h.round);
+    e.u32(h.shard);
+    e.u32(h.version);
+}
+
+fn dec_handoff(d: &mut Dec) -> anyhow::Result<Handoff> {
+    let rank = d.u8()? as usize;
+    anyhow::ensure!(rank < Edge::ALL.len(), "checkpoint trace edge rank {rank} out of range");
+    Ok(Handoff { edge: Edge::ALL[rank], round: d.u32()?, shard: d.u32()?, version: d.u32()? })
+}
+
+impl Checkpoint {
+    /// Serialise to the framed `RLCK` byte format.
+    pub fn encode(&self) -> anyhow::Result<Vec<u8>> {
+        let mut e = Enc::default();
+        e.u64(self.seed);
+        e.u32(self.rounds);
+        e.u32(self.n_envs);
+        e.u32(self.next_round);
+        enc_params(&mut e, &self.ae.gnn);
+        enc_params(&mut e, &self.wm.wm);
+        enc_params(&mut e, &self.dream.ctrl);
+        e.rng(self.ae.rng);
+        e.u32(self.ae.version);
+        e.f32s(&self.ae.losses);
+        e.u32(self.ae.states.len() as u32);
+        for s in &self.ae.states {
+            enc_state(&mut e, s);
+        }
+        e.rng(self.wm.rng);
+        e.u64(self.wm.step);
+        e.u32(self.wm.curve.len() as u32);
+        for l in &self.wm.curve {
+            e.f32(l.total);
+            e.f32(l.nll);
+            e.f32(l.reward_mse);
+            e.f32(l.mask_bce);
+            e.f32(l.done_bce);
+        }
+        e.u32(self.wm.episodes.len() as u32);
+        for ep in &self.wm.episodes {
+            enc_episode(&mut e, ep);
+        }
+        e.rng(self.dream.rng);
+        e.f32s(&self.dream.curve);
+        e.u32(self.evals.len() as u32);
+        for re in &self.evals {
+            e.u32(re.round);
+            e.u32(re.results.len() as u32);
+            for r in &re.results {
+                enc_eval(&mut e, r)?;
+            }
+        }
+        e.u32(self.env_rngs.len() as u32);
+        for &s in &self.env_rngs {
+            e.rng(s);
+        }
+        e.u32(self.trace_events.len() as u32);
+        for h in &self.trace_events {
+            enc_handoff(&mut e, h);
+        }
+        let body = e.buf;
+        let mut out = Vec::with_capacity(body.len() + 24);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        out.extend_from_slice(&(body.len() as u64).to_le_bytes());
+        out.extend_from_slice(&body);
+        out.extend_from_slice(&fnv64(&body).to_le_bytes());
+        Ok(out)
+    }
+
+    /// Parse the framed byte format, rejecting torn or corrupt files
+    /// (bad magic, short body, hash mismatch, trailing garbage).
+    pub fn decode(bytes: &[u8]) -> anyhow::Result<Checkpoint> {
+        anyhow::ensure!(bytes.len() >= 24, "checkpoint too short to hold a frame");
+        anyhow::ensure!(&bytes[..4] == MAGIC, "bad checkpoint magic");
+        let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        anyhow::ensure!(
+            version == FORMAT_VERSION,
+            "unsupported checkpoint format version {version} (this build reads {FORMAT_VERSION})"
+        );
+        let body_len = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        anyhow::ensure!(
+            bytes.len() == 16 + body_len + 8,
+            "checkpoint torn: frame promises {} body bytes, file holds {}",
+            body_len,
+            bytes.len().saturating_sub(24)
+        );
+        let body = &bytes[16..16 + body_len];
+        let want = u64::from_le_bytes(bytes[16 + body_len..].try_into().unwrap());
+        anyhow::ensure!(fnv64(body) == want, "checkpoint integrity hash mismatch");
+        let mut d = Dec { b: body, pos: 0 };
+        let seed = d.u64()?;
+        let rounds = d.u32()?;
+        let n_envs = d.u32()?;
+        let next_round = d.u32()?;
+        let gnn = dec_params(&mut d)?;
+        let wm_params = dec_params(&mut d)?;
+        let ctrl = dec_params(&mut d)?;
+        let ae_rng = d.rng()?;
+        let ae_version = d.u32()?;
+        let ae_losses = d.f32s()?;
+        let ae_states =
+            (0..d.len()?).map(|_| dec_state(&mut d)).collect::<anyhow::Result<Vec<_>>>()?;
+        let wm_rng = d.rng()?;
+        let wm_step = d.u64()?;
+        let wm_curve = (0..d.len()?)
+            .map(|_| {
+                Ok(WmLosses {
+                    total: d.f32()?,
+                    nll: d.f32()?,
+                    reward_mse: d.f32()?,
+                    mask_bce: d.f32()?,
+                    done_bce: d.f32()?,
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let wm_episodes =
+            (0..d.len()?).map(|_| dec_episode(&mut d)).collect::<anyhow::Result<Vec<_>>>()?;
+        let dream_rng = d.rng()?;
+        let dream_curve = d.f32s()?;
+        let evals = (0..d.len()?)
+            .map(|_| {
+                let round = d.u32()?;
+                let results =
+                    (0..d.len()?).map(|_| dec_eval(&mut d)).collect::<anyhow::Result<Vec<_>>>()?;
+                Ok(RoundEval { round, results })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let env_rngs = (0..d.len()?).map(|_| d.rng()).collect::<anyhow::Result<Vec<_>>>()?;
+        let trace_events =
+            (0..d.len()?).map(|_| dec_handoff(&mut d)).collect::<anyhow::Result<Vec<_>>>()?;
+        anyhow::ensure!(d.pos == body.len(), "checkpoint has {} trailing bytes", body.len() - d.pos);
+        Ok(Checkpoint {
+            seed,
+            rounds,
+            n_envs,
+            next_round,
+            ae: AeCkpt {
+                gnn,
+                rng: ae_rng,
+                version: ae_version,
+                losses: ae_losses,
+                states: ae_states,
+            },
+            wm: WmCkpt {
+                wm: wm_params,
+                rng: wm_rng,
+                step: wm_step,
+                curve: wm_curve,
+                episodes: wm_episodes,
+            },
+            dream: DreamCkpt { ctrl, rng: dream_rng, curve: dream_curve },
+            evals,
+            env_rngs,
+            trace_events,
+        })
+    }
+
+    /// File name for the checkpoint at this round boundary.
+    pub fn file_name(&self) -> String {
+        format!("ckpt-{:05}.rlck", self.next_round)
+    }
+
+    /// Atomically write into `dir` (tmp + flush + fsync + rename, same
+    /// discipline as the serve cache): a kill at any instant leaves
+    /// either no new file or one complete, hash-valid file. Fires the
+    /// `ckpt.write` / `ckpt.fsync` / `ckpt.rename` failpoints around the
+    /// respective syscalls and `ckpt.done` after the rename commits.
+    pub fn write(&self, dir: &Path) -> anyhow::Result<PathBuf> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow::anyhow!("creating checkpoint dir {}: {e}", dir.display()))?;
+        let bytes = self.encode()?;
+        let name = self.file_name();
+        let path = dir.join(&name);
+        let tmp = dir.join(format!("{name}.tmp"));
+        failpoint::check("ckpt.write")?;
+        {
+            let mut f = File::create(&tmp)?;
+            f.write_all(&bytes)?;
+            f.flush()?;
+            failpoint::check("ckpt.fsync")?;
+            f.sync_all()?;
+        }
+        failpoint::check("ckpt.rename")?;
+        std::fs::rename(&tmp, &path)?;
+        failpoint::fire("ckpt.done");
+        Ok(path)
+    }
+
+    /// Load and validate one checkpoint file.
+    pub fn load(path: &Path) -> anyhow::Result<Checkpoint> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("reading checkpoint {}: {e}", path.display()))?;
+        Self::decode(&bytes).map_err(|e| anyhow::anyhow!("checkpoint {}: {e}", path.display()))
+    }
+
+    /// Load the newest valid checkpoint in `dir`, skipping torn or
+    /// corrupt files with a warning (a half-written checkpoint is never
+    /// loaded — it fails the frame/hash checks). Returns `Ok(None)` for
+    /// an empty or absent directory.
+    pub fn load_latest(dir: &Path) -> anyhow::Result<Option<Checkpoint>> {
+        let rd = match std::fs::read_dir(dir) {
+            Ok(rd) => rd,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => anyhow::bail!("reading checkpoint dir {}: {e}", dir.display()),
+        };
+        let mut names: Vec<String> = rd
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.starts_with("ckpt-") && n.ends_with(".rlck"))
+            .collect();
+        names.sort();
+        while let Some(name) = names.pop() {
+            match Self::load(&dir.join(&name)) {
+                Ok(cp) => return Ok(Some(cp)),
+                Err(e) => eprintln!("rlflow: skipping invalid checkpoint: {e}"),
+            }
+        }
+        Ok(None)
+    }
+
+    /// Refuse to resume into a run whose plan shape differs from the
+    /// checkpointed one.
+    pub fn validate_run(&self, seed: u64, rounds: u32, n_envs: u32) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.seed == seed && self.rounds == rounds && self.n_envs == n_envs,
+            "checkpoint was taken by a run with seed={} rounds={} envs={}, \
+             this run has seed={seed} rounds={rounds} envs={n_envs}",
+            self.seed,
+            self.rounds,
+            self.n_envs
+        );
+        anyhow::ensure!(
+            self.next_round <= rounds,
+            "checkpoint is ahead of the plan: next round {} of {rounds}",
+            self.next_round
+        );
+        Ok(())
+    }
+}
+
+// ---- threaded-engine assembly -------------------------------------------
+
+#[derive(Default)]
+struct Pending {
+    env_rngs: Option<Vec<[u64; 4]>>,
+    ae: Option<AeCkpt>,
+    wm: Option<WmCkpt>,
+    dream: Option<DreamCkpt>,
+    evals: Option<Vec<RoundEval>>,
+}
+
+impl Pending {
+    fn complete(&self) -> bool {
+        self.env_rngs.is_some()
+            && self.ae.is_some()
+            && self.wm.is_some()
+            && self.dream.is_some()
+            && self.evals.is_some()
+    }
+}
+
+/// Checkpoint collector for the threaded engine, where the six stage
+/// threads cross a given round boundary at different wall-clock times:
+/// each stage deposits a clone of its state immediately after finishing
+/// a due round, and whichever deposit completes the set serialises and
+/// writes the checkpoint. Deposited state is captured *at* the boundary,
+/// so stages are free to run ahead while the file is written.
+pub struct CheckpointAssembler {
+    cfg: CheckpointCfg,
+    seed: u64,
+    rounds: u32,
+    n_envs: u32,
+    sink: TraceSink,
+    pending: Mutex<HashMap<u32, Pending>>,
+}
+
+impl CheckpointAssembler {
+    /// Build an assembler for one run. `sink` is the run's shared trace
+    /// sink; the checkpoint stores its events filtered to completed
+    /// rounds, in canonical order.
+    pub fn new(cfg: CheckpointCfg, seed: u64, rounds: u32, n_envs: u32, sink: TraceSink) -> Self {
+        Self { cfg, seed, rounds, n_envs, sink, pending: Mutex::new(HashMap::new()) }
+    }
+
+    /// Whether completing `round` should deposit checkpoint state.
+    pub fn due(&self, round: u32) -> bool {
+        self.cfg.every > 0 && (round as usize + 1) % self.cfg.every == 0
+    }
+
+    fn put(
+        &self,
+        round: u32,
+        fill: impl FnOnce(&mut Pending),
+    ) -> anyhow::Result<Option<PathBuf>> {
+        if !self.due(round) {
+            return Ok(None);
+        }
+        let ready = {
+            let mut map = self.pending.lock().unwrap();
+            let p = map.entry(round).or_default();
+            fill(p);
+            if p.complete() {
+                map.remove(&round)
+            } else {
+                None
+            }
+        };
+        match ready {
+            Some(p) => self.write_round(round, p).map(Some),
+            None => Ok(None),
+        }
+    }
+
+    /// Collector deposit: per-env RNG streams after finishing `round`.
+    pub fn deposit_env(&self, round: u32, rngs: Vec<[u64; 4]>) -> anyhow::Result<Option<PathBuf>> {
+        self.put(round, |p| p.env_rngs = Some(rngs))
+    }
+
+    /// AE-stage deposit after finishing `round`.
+    pub fn deposit_ae(&self, round: u32, ae: AeCkpt) -> anyhow::Result<Option<PathBuf>> {
+        self.put(round, |p| p.ae = Some(ae))
+    }
+
+    /// WM-stage deposit after finishing `round`.
+    pub fn deposit_wm(&self, round: u32, wm: WmCkpt) -> anyhow::Result<Option<PathBuf>> {
+        self.put(round, |p| p.wm = Some(wm))
+    }
+
+    /// Dream-stage deposit after finishing `round`.
+    pub fn deposit_dream(&self, round: u32, dream: DreamCkpt) -> anyhow::Result<Option<PathBuf>> {
+        self.put(round, |p| p.dream = Some(dream))
+    }
+
+    /// Eval-stage deposit after finishing `round` (the full history so
+    /// far).
+    pub fn deposit_evals(
+        &self,
+        round: u32,
+        evals: Vec<RoundEval>,
+    ) -> anyhow::Result<Option<PathBuf>> {
+        self.put(round, |p| p.evals = Some(evals))
+    }
+
+    fn write_round(&self, round: u32, p: Pending) -> anyhow::Result<PathBuf> {
+        // Every stage has finished `round`, so all handoffs for rounds
+        // <= round are recorded; later rounds (stages running ahead) are
+        // filtered out. Canonical order keeps the stored prefix
+        // schedule-independent.
+        let snap = self.sink.snapshot();
+        let events: Vec<Handoff> =
+            snap.events.into_iter().filter(|h| h.round <= round).collect();
+        let trace = ScheduleTrace { seed: self.seed, envs: self.n_envs, rounds: self.rounds, events };
+        let cp = Checkpoint {
+            seed: self.seed,
+            rounds: self.rounds,
+            n_envs: self.n_envs,
+            next_round: round + 1,
+            ae: p.ae.unwrap(),
+            wm: p.wm.unwrap(),
+            dream: p.dream.unwrap(),
+            evals: p.evals.unwrap(),
+            env_rngs: p.env_rngs.unwrap(),
+            trace_events: trace.canonical().events,
+        };
+        cp.write(&self.cfg.dir)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, PadMode};
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("rlflow-ckpt-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn params(family: &str, n: usize) -> ParamStore {
+        ParamStore {
+            family: family.into(),
+            theta: (0..n).map(|i| i as f32 * 0.5 - 1.0).collect(),
+            m: (0..n).map(|i| i as f32 * -0.25).collect(),
+            v: (0..n).map(|i| i as f32 * 0.125).collect(),
+            t: 3.0,
+            version: 7,
+        }
+    }
+
+    fn sample() -> Checkpoint {
+        let mut b = GraphBuilder::new();
+        let x = b.input(&[1, 3, 8, 8]);
+        let c = b.conv(x, 4, 3, 1, PadMode::Same).unwrap();
+        let _ = b.relu(c).unwrap();
+        let g = b.finish();
+        let state = CompactState { n_live: 2, feats: vec![0.5; 8], edges: vec![(0, 1)] };
+        let ep = Episode {
+            states: vec![state.clone(), state.clone()],
+            xmasks: vec![vec![1.0, 0.0], vec![0.0, 1.0]],
+            actions: vec![(3, 9)],
+            rewards: vec![0.25],
+            dones: vec![1.0],
+            z: vec![vec![0.1, -0.2], vec![0.3, 0.4]],
+            policy_version: 0,
+        };
+        Checkpoint {
+            seed: 42,
+            rounds: 4,
+            n_envs: 2,
+            next_round: 2,
+            ae: AeCkpt {
+                gnn: params("gnn", 5),
+                rng: [1, 2, 3, 4],
+                version: 2,
+                losses: vec![0.9, 0.8],
+                states: vec![state],
+            },
+            wm: WmCkpt {
+                wm: params("wm", 3),
+                rng: [5, 6, 7, 8],
+                step: 11,
+                curve: vec![WmLosses {
+                    total: 1.0,
+                    nll: 0.5,
+                    reward_mse: 0.25,
+                    mask_bce: 0.125,
+                    done_bce: 0.0625,
+                }],
+                episodes: vec![ep],
+            },
+            dream: DreamCkpt { ctrl: params("ctrl", 4), rng: [9, 10, 11, 12], curve: vec![1.5] },
+            evals: vec![RoundEval {
+                round: 0,
+                results: vec![EvalResult {
+                    best_improvement_pct: 3.25,
+                    final_improvement_pct: 1.5,
+                    steps: 6,
+                    history: vec![(2, 17)],
+                    mean_step_s: 0.001,
+                    best_graph: Some(g),
+                }],
+            }],
+            env_rngs: vec![[13, 14, 15, 16], [17, 18, 19, 20]],
+            trace_events: vec![Handoff { edge: Edge::Staging, round: 0, shard: 1, version: 0 }],
+        }
+    }
+
+    #[test]
+    fn encode_decode_round_trip_is_exact() {
+        let cp = sample();
+        let back = Checkpoint::decode(&cp.encode().unwrap()).unwrap();
+        assert_eq!(back.seed, cp.seed);
+        assert_eq!(back.next_round, 2);
+        assert_eq!(back.ae.gnn.theta, cp.ae.gnn.theta);
+        assert_eq!(back.ae.gnn.m, cp.ae.gnn.m);
+        assert_eq!(back.ae.gnn.version, 7);
+        assert_eq!(back.ae.rng, cp.ae.rng);
+        assert_eq!(back.wm.step, 11);
+        assert_eq!(back.wm.episodes[0].actions, cp.wm.episodes[0].actions);
+        assert_eq!(back.wm.episodes[0].z, cp.wm.episodes[0].z);
+        assert_eq!(back.dream.ctrl.v, cp.dream.ctrl.v);
+        assert_eq!(back.env_rngs, cp.env_rngs);
+        assert_eq!(back.trace_events, cp.trace_events);
+        let e = &back.evals[0].results[0];
+        assert_eq!(e.best_improvement_pct.to_bits(), 3.25f64.to_bits());
+        assert_eq!(e.history, vec![(2, 17)]);
+        assert!(e.best_graph.is_some());
+        // Re-encoding the decoded checkpoint is a byte-level fixed point.
+        assert_eq!(back.encode().unwrap(), cp.encode().unwrap());
+    }
+
+    #[test]
+    fn torn_and_corrupt_files_never_load() {
+        let bytes = sample().encode().unwrap();
+        for cut in [0, 3, 16, bytes.len() / 2, bytes.len() - 1] {
+            assert!(Checkpoint::decode(&bytes[..cut]).is_err(), "cut at {cut} must not load");
+        }
+        let mut flipped = bytes.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0x40;
+        assert!(Checkpoint::decode(&flipped).is_err(), "bit flip must fail the hash");
+        let mut extended = bytes;
+        extended.push(0);
+        assert!(Checkpoint::decode(&extended).is_err(), "trailing garbage must not load");
+    }
+
+    #[test]
+    fn load_latest_skips_invalid_and_prefers_newest() {
+        let dir = tmpdir("latest");
+        let mut a = sample();
+        a.next_round = 1;
+        a.write(&dir).unwrap();
+        let mut b = sample();
+        b.next_round = 2;
+        b.write(&dir).unwrap();
+        // Newest file is torn garbage: must be skipped, not loaded.
+        std::fs::write(dir.join("ckpt-00003.rlck"), b"RLCKgarbage").unwrap();
+        let cp = Checkpoint::load_latest(&dir).unwrap().unwrap();
+        assert_eq!(cp.next_round, 2, "newest *valid* checkpoint wins");
+        assert!(Checkpoint::load_latest(&tmpdir("empty")).unwrap().is_none());
+        assert!(Checkpoint::load_latest(Path::new("/definitely/not/here")).unwrap().is_none());
+    }
+
+    #[test]
+    fn validate_run_rejects_mismatched_plans() {
+        let cp = sample();
+        cp.validate_run(42, 4, 2).unwrap();
+        assert!(cp.validate_run(43, 4, 2).is_err());
+        assert!(cp.validate_run(42, 5, 2).is_err());
+        assert!(cp.validate_run(42, 4, 3).is_err());
+    }
+}

@@ -19,18 +19,25 @@
 //! channels (`stage`), recording every cross-stage handoff to a
 //! replayable schedule trace (`trace`) — same seeds + same trace ⇒
 //! bit-identical final params.
+//!
+//! Crash safety (`rlflow train --checkpoint-every/--resume`):
+//! `checkpoint` captures the complete cross-round training state in an
+//! atomic, checksummed file at round boundaries; interrupting at any
+//! boundary and resuming is bit-identical to the uninterrupted run.
 
+pub mod checkpoint;
 pub mod pipeline;
 pub mod pipeline_async;
 pub mod stage;
 pub mod trace;
 
+pub use checkpoint::{Checkpoint, CheckpointAssembler, CheckpointCfg};
 pub use pipeline::{EvalResult, Pipeline};
 pub use pipeline_async::{
-    replay_trace, train_async, train_reference, AsyncOutcome, AsyncTrainCfg, BackendFactory,
-    RoundEval,
+    replay_trace, train_async, train_async_ckpt, train_reference, train_reference_ckpt,
+    AsyncOutcome, AsyncTrainCfg, BackendFactory, RoundEval,
 };
-pub use stage::{StageChannel, StageClosed};
+pub use stage::{CloseGuard, StageChannel, StageClosed, StageFailed};
 pub use trace::{Edge, Handoff, ScheduleTrace, TraceCursor, TraceSink, SHARD_BATCH};
 
 use crate::util::Rng;

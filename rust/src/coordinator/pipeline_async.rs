@@ -44,6 +44,19 @@
 //! per-stage stream advancing in round order; eval derives a fresh
 //! stream per round. No stream is shared between stages, so stage
 //! overlap cannot reorder draws.
+//!
+//! **Crash safety.** Both engines checkpoint at round boundaries
+//! through [`super::checkpoint`]: the sequential engine writes directly
+//! after each due round; the threaded engine routes per-stage state
+//! deposits through a [`CheckpointAssembler`] (stages cross a boundary
+//! at different wall-clock times). Resuming from a checkpoint and
+//! running the remaining rounds is bit-identical to the uninterrupted
+//! run — every piece of cross-round state (params + Adam moments, stage
+//! RNG streams, per-env collector streams, replay pools, eval history,
+//! trace prefix) is restored exactly. A stage thread that *panics*
+//! closes its channels via drop guards ([`StageChannel::close_guard`])
+//! so peers exit promptly, and the join layer converts the panic into a
+//! typed [`StageFailed`] error instead of aborting or hanging.
 
 use std::collections::HashMap;
 
@@ -57,8 +70,11 @@ use crate::util::Rng;
 use crate::wm::{WmLosses, WmTrainer};
 use crate::xfer::library::standard_library;
 
+use super::checkpoint::{
+    AeCkpt, Checkpoint, CheckpointAssembler, CheckpointCfg, DreamCkpt, WmCkpt,
+};
 use super::pipeline::{EvalResult, Pipeline};
-use super::stage::StageChannel;
+use super::stage::{StageChannel, StageFailed};
 use super::trace::{Edge, ScheduleTrace, TraceCursor, TraceSink, SHARD_BATCH};
 
 /// Builds one backend instance per stage thread. Backends hold
@@ -235,6 +251,28 @@ impl AeStage {
         })
     }
 
+    /// Overwrite every field from a checkpoint: params + Adam moments,
+    /// RNG stream, the growing state pool, losses, version.
+    fn restore(&mut self, cp: &Checkpoint) {
+        self.gnn = cp.ae.gnn.clone();
+        self.rng = Rng::from_state(cp.ae.rng);
+        self.states = cp.ae.states.clone();
+        self.losses = cp.ae.losses.clone();
+        self.version = cp.ae.version;
+    }
+
+    /// Snapshot every field into checkpoint form (the inverse of
+    /// [`AeStage::restore`]).
+    fn snapshot(&self) -> AeCkpt {
+        AeCkpt {
+            gnn: self.gnn.clone(),
+            rng: self.rng.state(),
+            version: self.version,
+            losses: self.losses.clone(),
+            states: self.states.clone(),
+        }
+    }
+
     fn round(
         &mut self,
         pipe: &Pipeline,
@@ -292,6 +330,24 @@ impl WmStage {
         })
     }
 
+    fn restore(&mut self, cp: &Checkpoint) {
+        self.wm = cp.wm.wm.clone();
+        self.rng = Rng::from_state(cp.wm.rng);
+        self.episodes = cp.wm.episodes.clone();
+        self.curve = cp.wm.curve.clone();
+        self.step = cp.wm.step as usize;
+    }
+
+    fn snapshot(&self) -> WmCkpt {
+        WmCkpt {
+            wm: self.wm.clone(),
+            rng: self.rng.state(),
+            step: self.step as u64,
+            curve: self.curve.clone(),
+            episodes: self.episodes.clone(),
+        }
+    }
+
     /// Train this round's step budget; returns the dream seed pool
     /// (initial latents + masks of every encoded episode so far).
     #[allow(clippy::type_complexity)]
@@ -339,6 +395,20 @@ impl DreamStage {
             rng: Rng::new(mix(seed, STREAM_DREAM, 0)),
             curve: Vec::new(),
         })
+    }
+
+    fn restore(&mut self, cp: &Checkpoint) {
+        self.ctrl = cp.dream.ctrl.clone();
+        self.rng = Rng::from_state(cp.dream.rng);
+        self.curve = cp.dream.curve.clone();
+    }
+
+    fn snapshot(&self) -> DreamCkpt {
+        DreamCkpt {
+            ctrl: self.ctrl.clone(),
+            rng: self.rng.state(),
+            curve: self.curve.clone(),
+        }
     }
 
     fn round(
@@ -493,6 +563,9 @@ fn run_collect(
     dims: &CollectDims,
     staging: &StageChannel<EpisodeBlock>,
     sink: &TraceSink,
+    start: usize,
+    resume: Option<&Checkpoint>,
+    asm: Option<&CheckpointAssembler>,
 ) -> anyhow::Result<StageExit<()>> {
     let cost = CostModel::new(cfg.device);
     let mut pool = EnvPool::new(
@@ -507,8 +580,11 @@ fn run_collect(
             noise_std: 0.0,
         },
     );
+    if let Some(cp) = resume {
+        pool.restore_rng_states(&cp.env_rngs)?;
+    }
     let encoder = StateEncoder::new(dims.max_nodes, dims.node_feats);
-    for r in 0..plan.rounds {
+    for r in start..plan.rounds {
         let counts = &plan.env_counts[r];
         let cancelled = std::sync::atomic::AtomicBool::new(false);
         pool.map_envs_streaming(
@@ -534,6 +610,11 @@ fn run_collect(
         if cancelled.load(std::sync::atomic::Ordering::Relaxed) {
             return Ok(StageExit::Cancelled);
         }
+        if let Some(a) = asm {
+            if a.due(r as u32) {
+                a.deposit_env(r as u32, pool.rng_states())?;
+            }
+        }
     }
     Ok(StageExit::Done(()))
 }
@@ -547,12 +628,18 @@ fn run_ae(
     staging: &StageChannel<EpisodeBlock>,
     out: &StageChannel<EncJob>,
     sink: &TraceSink,
+    start: usize,
+    resume: Option<&Checkpoint>,
+    asm: Option<&CheckpointAssembler>,
 ) -> anyhow::Result<StageExit<AeOut>> {
     let backend = factory()?;
     let pipe = Pipeline::new(backend.as_ref())?;
     let mut stage = AeStage::new(backend.as_ref(), cfg.seed)?;
+    if let Some(cp) = resume {
+        stage.restore(cp);
+    }
     let mut stash: HashMap<(u32, u32), EpisodeBlock> = HashMap::new();
-    for r in 0..plan.rounds {
+    for r in start..plan.rounds {
         // Drain staging eagerly into the stash, then assemble round r in
         // canonical shard order. The stash is unbounded, so the staging
         // buffer's backpressure bounds the *collector*, never this loop.
@@ -575,6 +662,11 @@ fn run_ae(
             sink.record(Edge::AeIn, r as u32, b.shard, stage.version);
         }
         stage.round(&pipe, plan, cfg, r, &blocks)?;
+        if let Some(a) = asm {
+            if a.due(r as u32) {
+                a.deposit_ae(r as u32, stage.snapshot())?;
+            }
+        }
         jitter_sleep(acfg.jitter, r as u32, SHARD_BATCH);
         let job = EncJob { round: r as u32, gnn: stage.gnn.clone(), blocks };
         if out.send(job).is_err() {
@@ -590,10 +682,11 @@ fn run_enc(
     input: &StageChannel<EncJob>,
     out: &StageChannel<WmJob>,
     sink: &TraceSink,
+    start: usize,
 ) -> anyhow::Result<StageExit<()>> {
     let backend = factory()?;
     let pipe = Pipeline::new(backend.as_ref())?;
-    for r in 0..plan.rounds {
+    for r in start..plan.rounds {
         let Some(job) = input.recv() else { return Ok(StageExit::Cancelled) };
         debug_assert_eq!(job.round as usize, r);
         sink.record(Edge::EncIn, job.round, SHARD_BATCH, job.round + 1);
@@ -605,6 +698,7 @@ fn run_enc(
     Ok(StageExit::Done(()))
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_wm(
     factory: &BackendFactory,
     cfg: &RunConfig,
@@ -612,14 +706,25 @@ fn run_wm(
     input: &StageChannel<WmJob>,
     out: &StageChannel<DreamJob>,
     sink: &TraceSink,
+    start: usize,
+    resume: Option<&Checkpoint>,
+    asm: Option<&CheckpointAssembler>,
 ) -> anyhow::Result<StageExit<WmOut>> {
     let backend = factory()?;
     let pipe = Pipeline::new(backend.as_ref())?;
     let mut stage = WmStage::new(backend.as_ref(), cfg.seed)?;
-    for r in 0..plan.rounds {
+    if let Some(cp) = resume {
+        stage.restore(cp);
+    }
+    for r in start..plan.rounds {
         let Some(job) = input.recv() else { return Ok(StageExit::Cancelled) };
         sink.record(Edge::WmIn, job.round, SHARD_BATCH, job.round);
         let (z0, xm0) = stage.round(&pipe, plan, cfg, r, job.episodes)?;
+        if let Some(a) = asm {
+            if a.due(r as u32) {
+                a.deposit_wm(r as u32, stage.snapshot())?;
+            }
+        }
         let dream = DreamJob { round: job.round, gnn: job.gnn, wm: stage.wm.clone(), z0, xm0 };
         if out.send(dream).is_err() {
             return Ok(StageExit::Cancelled);
@@ -628,6 +733,7 @@ fn run_wm(
     Ok(StageExit::Done(WmOut { wm: stage.wm, curve: stage.curve }))
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_dream(
     factory: &BackendFactory,
     cfg: &RunConfig,
@@ -635,14 +741,25 @@ fn run_dream(
     input: &StageChannel<DreamJob>,
     out: &StageChannel<EvalJob>,
     sink: &TraceSink,
+    start: usize,
+    resume: Option<&Checkpoint>,
+    asm: Option<&CheckpointAssembler>,
 ) -> anyhow::Result<StageExit<DreamOut>> {
     let backend = factory()?;
     let pipe = Pipeline::new(backend.as_ref())?;
     let mut stage = DreamStage::new(backend.as_ref(), cfg.seed)?;
-    for r in 0..plan.rounds {
+    if let Some(cp) = resume {
+        stage.restore(cp);
+    }
+    for r in start..plan.rounds {
         let Some(job) = input.recv() else { return Ok(StageExit::Cancelled) };
         sink.record(Edge::DreamIn, job.round, SHARD_BATCH, job.round + 1);
         stage.round(&pipe, plan, cfg, r, &job.wm, &job.z0, &job.xm0)?;
+        if let Some(a) = asm {
+            if a.due(r as u32) {
+                a.deposit_dream(r as u32, stage.snapshot())?;
+            }
+        }
         let eval =
             EvalJob { round: job.round, gnn: job.gnn, wm: job.wm, ctrl: stage.ctrl.clone() };
         if out.send(eval).is_err() {
@@ -652,6 +769,7 @@ fn run_dream(
     Ok(StageExit::Done(DreamOut { ctrl: stage.ctrl, curve: stage.curve }))
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_eval(
     factory: &BackendFactory,
     cfg: &RunConfig,
@@ -659,16 +777,41 @@ fn run_eval(
     graph: &Graph,
     input: &StageChannel<EvalJob>,
     sink: &TraceSink,
+    start: usize,
+    resume: Option<&Checkpoint>,
+    asm: Option<&CheckpointAssembler>,
 ) -> anyhow::Result<StageExit<Vec<RoundEval>>> {
     let backend = factory()?;
     let pipe = Pipeline::new(backend.as_ref())?;
-    let mut stage = EvalStage { evals: Vec::new() };
-    for r in 0..plan.rounds {
+    let mut stage =
+        EvalStage { evals: resume.map(|cp| cp.evals.clone()).unwrap_or_default() };
+    for r in start..plan.rounds {
         let Some(job) = input.recv() else { return Ok(StageExit::Cancelled) };
         sink.record(Edge::EvalIn, job.round, SHARD_BATCH, job.round + 1);
         stage.round(&pipe, cfg, graph, r, &job.gnn, &job.ctrl, &job.wm)?;
+        if let Some(a) = asm {
+            if a.due(r as u32) {
+                a.deposit_evals(r as u32, stage.evals.clone())?;
+            }
+        }
     }
     Ok(StageExit::Done(stage.evals))
+}
+
+/// Join a stage thread, converting a panic into the typed
+/// [`StageFailed`] error (the thread's [`CloseGuard`]s have already
+/// closed its channels by the time `join` returns, so every peer is
+/// guaranteed to exit and this call never hangs the scope).
+///
+/// [`CloseGuard`]: super::stage::CloseGuard
+fn join_stage<T>(
+    h: std::thread::ScopedJoinHandle<'_, anyhow::Result<StageExit<T>>>,
+    stage: &'static str,
+) -> anyhow::Result<StageExit<T>> {
+    match h.join() {
+        Ok(r) => r,
+        Err(payload) => Err(StageFailed::from_panic(stage, payload).into()),
+    }
 }
 
 /// Run the pipelined async trainer: six stage threads (collect, AE,
@@ -683,7 +826,29 @@ pub fn train_async(
     acfg: &AsyncTrainCfg,
     graph: &Graph,
 ) -> anyhow::Result<AsyncOutcome> {
+    train_async_ckpt(factory, cfg, acfg, graph, None, None)
+}
+
+/// [`train_async`] with crash safety: write a checkpoint after every
+/// round `r` with `(r + 1) % ckpt.every == 0` (stages deposit their
+/// state into a [`CheckpointAssembler`]; whichever stage crosses the
+/// boundary last triggers the atomic write), and/or continue a run from
+/// a [`Checkpoint`]. Interrupting at any round boundary and resuming is
+/// bit-identical to the uninterrupted run — `tests/pipeline_async.rs`
+/// pins this for stage-thread counts 1 and 4.
+pub fn train_async_ckpt(
+    factory: &BackendFactory,
+    cfg: &RunConfig,
+    acfg: &AsyncTrainCfg,
+    graph: &Graph,
+    ckpt: Option<&CheckpointCfg>,
+    resume: Option<Checkpoint>,
+) -> anyhow::Result<AsyncOutcome> {
     let plan = Plan::new(cfg, acfg)?;
+    if let Some(cp) = &resume {
+        cp.validate_run(cfg.seed, plan.rounds as u32, plan.n_envs as u32)?;
+    }
+    let start = resume.as_ref().map(|cp| cp.next_round as usize).unwrap_or(0);
     let dims = {
         let backend = factory()?;
         let pipe = Pipeline::new(backend.as_ref())?;
@@ -693,8 +858,22 @@ pub fn train_async(
             n_slots: pipe.dims.x1,
         }
     };
-    let sink =
-        TraceSink::new(ScheduleTrace::new(cfg.seed, plan.n_envs as u32, plan.rounds as u32));
+    let mut trace0 = ScheduleTrace::new(cfg.seed, plan.n_envs as u32, plan.rounds as u32);
+    if let Some(cp) = &resume {
+        trace0.events = cp.trace_events.clone();
+    }
+    let sink = TraceSink::new(trace0);
+    let asm = ckpt.map(|c| {
+        CheckpointAssembler::new(
+            c.clone(),
+            cfg.seed,
+            plan.rounds as u32,
+            plan.n_envs as u32,
+            sink.clone(),
+        )
+    });
+    let asm = asm.as_ref();
+    let resume = resume.as_ref();
     let staging: StageChannel<EpisodeBlock> = StageChannel::new(acfg.staging_cap);
     let to_enc: StageChannel<EncJob> = StageChannel::new(2);
     let to_wm: StageChannel<WmJob> = StageChannel::new(2);
@@ -702,50 +881,46 @@ pub fn train_async(
     let to_eval: StageChannel<EvalJob> = StageChannel::new(2);
 
     let (collect_r, ae_r, enc_r, wm_r, dream_r, eval_r) = std::thread::scope(|s| {
-        // Each stage closes its input (cancels upstream if it exits
-        // early) and its output (EOF or cancel downstream) on the way
-        // out — errors propagate as channel closures, never deadlocks.
+        // Each stage holds drop guards on the channels it touches:
+        // leaving — by return, error, *or panic* — closes its input
+        // (cancelling upstream) and its output (EOF or cancel
+        // downstream), so failures propagate as channel closures, never
+        // deadlocks.
         let h_collect = s.spawn(|| {
-            let r = run_collect(cfg, acfg, &plan, graph, &dims, &staging, &sink);
-            staging.close();
-            r
+            let _g = staging.close_guard();
+            run_collect(cfg, acfg, &plan, graph, &dims, &staging, &sink, start, resume, asm)
         });
         let h_ae = s.spawn(|| {
-            let r = run_ae(factory, cfg, acfg, &plan, &staging, &to_enc, &sink);
-            staging.close();
-            to_enc.close();
-            r
+            let _g_in = staging.close_guard();
+            let _g_out = to_enc.close_guard();
+            run_ae(factory, cfg, acfg, &plan, &staging, &to_enc, &sink, start, resume, asm)
         });
         let h_enc = s.spawn(|| {
-            let r = run_enc(factory, &plan, &to_enc, &to_wm, &sink);
-            to_enc.close();
-            to_wm.close();
-            r
+            let _g_in = to_enc.close_guard();
+            let _g_out = to_wm.close_guard();
+            run_enc(factory, &plan, &to_enc, &to_wm, &sink, start)
         });
         let h_wm = s.spawn(|| {
-            let r = run_wm(factory, cfg, &plan, &to_wm, &to_dream, &sink);
-            to_wm.close();
-            to_dream.close();
-            r
+            let _g_in = to_wm.close_guard();
+            let _g_out = to_dream.close_guard();
+            run_wm(factory, cfg, &plan, &to_wm, &to_dream, &sink, start, resume, asm)
         });
         let h_dream = s.spawn(|| {
-            let r = run_dream(factory, cfg, &plan, &to_dream, &to_eval, &sink);
-            to_dream.close();
-            to_eval.close();
-            r
+            let _g_in = to_dream.close_guard();
+            let _g_out = to_eval.close_guard();
+            run_dream(factory, cfg, &plan, &to_dream, &to_eval, &sink, start, resume, asm)
         });
         let h_eval = s.spawn(|| {
-            let r = run_eval(factory, cfg, &plan, graph, &to_eval, &sink);
-            to_eval.close();
-            r
+            let _g = to_eval.close_guard();
+            run_eval(factory, cfg, &plan, graph, &to_eval, &sink, start, resume, asm)
         });
         (
-            h_collect.join().expect("collect stage panicked"),
-            h_ae.join().expect("ae stage panicked"),
-            h_enc.join().expect("encoder stage panicked"),
-            h_wm.join().expect("wm stage panicked"),
-            h_dream.join().expect("dream stage panicked"),
-            h_eval.join().expect("eval stage panicked"),
+            join_stage(h_collect, "collect"),
+            join_stage(h_ae, "ae"),
+            join_stage(h_enc, "enc"),
+            join_stage(h_wm, "wm"),
+            join_stage(h_dream, "dream"),
+            join_stage(h_eval, "eval"),
         )
     });
 
@@ -883,18 +1058,57 @@ fn seq_round(
     eval.round(pipe, cfg, graph, r, &ae.gnn, &dream.ctrl, &wm.wm)
 }
 
+/// Capture the sequential engine's complete cross-round state at the
+/// boundary after round `next_round - 1` (the exact inverse of the
+/// restore block in [`run_sequential`]).
+#[allow(clippy::too_many_arguments)]
+fn seq_snapshot(
+    cfg: &RunConfig,
+    plan: &Plan,
+    next_round: usize,
+    ae: &AeStage,
+    wm: &WmStage,
+    dream: &DreamStage,
+    eval: &EvalStage,
+    pool: &EnvPool,
+    trace: &ScheduleTrace,
+) -> Checkpoint {
+    Checkpoint {
+        seed: cfg.seed,
+        rounds: plan.rounds as u32,
+        n_envs: plan.n_envs as u32,
+        next_round: next_round as u32,
+        ae: ae.snapshot(),
+        wm: wm.snapshot(),
+        dream: dream.snapshot(),
+        evals: eval.evals.clone(),
+        env_rngs: pool.rng_states(),
+        trace_events: trace.events.clone(),
+    }
+}
+
 fn run_sequential(
     factory: &BackendFactory,
     cfg: &RunConfig,
     acfg: &AsyncTrainCfg,
     graph: &Graph,
     schedule: Schedule,
+    ckpt: Option<&CheckpointCfg>,
+    resume: Option<Checkpoint>,
 ) -> anyhow::Result<AsyncOutcome> {
     let plan = Plan::new(cfg, acfg)?;
+    if let Some(cp) = &resume {
+        cp.validate_run(cfg.seed, plan.rounds as u32, plan.n_envs as u32)?;
+        anyhow::ensure!(
+            matches!(schedule, Schedule::Canonical),
+            "resume cannot be combined with trace replay"
+        );
+    }
+    let start = resume.as_ref().map(|cp| cp.next_round as usize).unwrap_or(0);
     let backend = factory()?;
     let pipe = Pipeline::new(backend.as_ref())?;
     let staging_order: Vec<(u32, u32)> = match &schedule {
-        Schedule::Canonical => (0..plan.rounds as u32)
+        Schedule::Canonical => (start as u32..plan.rounds as u32)
             .flat_map(|r| (0..plan.n_envs as u32).map(move |s| (r, s)))
             .collect(),
         Schedule::Replay(t) => validate_staging(t, &plan, cfg.seed)?,
@@ -925,10 +1139,21 @@ fn run_sequential(
     let mut wm = WmStage::new(backend.as_ref(), cfg.seed)?;
     let mut dream = DreamStage::new(backend.as_ref(), cfg.seed)?;
     let mut eval = EvalStage { evals: Vec::new() };
+    if let Some(cp) = &resume {
+        ae.restore(cp);
+        wm.restore(cp);
+        dream.restore(cp);
+        eval.evals = cp.evals.clone();
+        pool.restore_rng_states(&cp.env_rngs)?;
+        trace.events = cp.trace_events.clone();
+    }
 
     let mut stash: HashMap<(u32, u32), Vec<Episode>> = HashMap::new();
     let mut arrived = vec![0usize; plan.rounds];
-    let mut next_round = 0usize;
+    for slot in arrived.iter_mut().take(start) {
+        *slot = plan.n_envs;
+    }
+    let mut next_round = start;
     for (round, shard) in staging_order {
         // Collect the block exactly as the threaded collector would:
         // this env's RNG stream advances through its rounds in order
@@ -956,6 +1181,12 @@ fn run_sequential(
                 &mut eval, &mut trace, &mut cursor,
             )?;
             next_round += 1;
+            if let Some(c) = ckpt {
+                if c.every > 0 && next_round % c.every == 0 {
+                    seq_snapshot(cfg, &plan, next_round, &ae, &wm, &dream, &eval, &pool, &trace)
+                        .write(&c.dir)?;
+                }
+            }
         }
     }
     anyhow::ensure!(next_round == plan.rounds, "incomplete schedule: {next_round} rounds ran");
@@ -983,7 +1214,24 @@ pub fn train_reference(
     acfg: &AsyncTrainCfg,
     graph: &Graph,
 ) -> anyhow::Result<AsyncOutcome> {
-    run_sequential(factory, cfg, acfg, graph, Schedule::Canonical)
+    run_sequential(factory, cfg, acfg, graph, Schedule::Canonical, None, None)
+}
+
+/// [`train_reference`] with crash safety: the sequential engine writes
+/// an atomic checkpoint directly at every due round boundary and can
+/// continue from one. This is what `rlflow train --checkpoint-every`
+/// (without `--async`) runs; the resume contract matches
+/// [`train_async_ckpt`] — interrupt + resume is bit-identical to the
+/// uninterrupted run.
+pub fn train_reference_ckpt(
+    factory: &BackendFactory,
+    cfg: &RunConfig,
+    acfg: &AsyncTrainCfg,
+    graph: &Graph,
+    ckpt: Option<&CheckpointCfg>,
+    resume: Option<Checkpoint>,
+) -> anyhow::Result<AsyncOutcome> {
+    run_sequential(factory, cfg, acfg, graph, Schedule::Canonical, ckpt, resume)
 }
 
 /// Replay a recorded schedule: re-execute the trace's handoff sequence
@@ -998,7 +1246,7 @@ pub fn replay_trace(
     graph: &Graph,
     trace: &ScheduleTrace,
 ) -> anyhow::Result<AsyncOutcome> {
-    run_sequential(factory, cfg, acfg, graph, Schedule::Replay(trace))
+    run_sequential(factory, cfg, acfg, graph, Schedule::Replay(trace), None, None)
 }
 
 #[cfg(test)]

@@ -16,6 +16,11 @@
 //! * **Close wakes everyone**: after [`StageChannel::close`], blocked
 //!   senders fail fast with [`StageClosed`] and receivers drain the
 //!   remaining items before observing end-of-stream (`None`).
+//! * **Panic closes too**: a stage that panics mid-round must not leave
+//!   peers blocked forever. Each stage thread holds a [`CloseGuard`]
+//!   per channel it touches; unwinding drops the guards, closing the
+//!   channels, so peers exit and the join layer reports a typed
+//!   [`StageFailed`] instead of hanging.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -28,6 +33,52 @@ pub struct StageClosed<T>(pub T);
 impl<T> std::fmt::Display for StageClosed<T> {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "stage channel closed")
+    }
+}
+
+/// Typed failure for a pipeline stage thread that panicked: the stage
+/// name plus the rendered panic payload. Converts into `anyhow::Error`
+/// via `?` like any `std::error::Error`, so callers of `train_async`
+/// see `stage 'wm' panicked: ...` rather than a propagated abort (and
+/// never a hang — see [`CloseGuard`]).
+#[derive(Debug, Clone)]
+pub struct StageFailed {
+    /// Name of the stage that panicked (`collect`, `ae`, `enc`, `wm`,
+    /// `dream`, `eval`).
+    pub stage: &'static str,
+    /// Rendered panic payload (the panic message when it was a string).
+    pub panic: String,
+}
+
+impl StageFailed {
+    /// Build from a `std::thread` join error payload.
+    pub fn from_panic(stage: &'static str, payload: Box<dyn std::any::Any + Send>) -> Self {
+        let panic = payload
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_else(|| "non-string panic payload".to_string());
+        Self { stage, panic }
+    }
+}
+
+impl std::fmt::Display for StageFailed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "stage '{}' panicked: {}", self.stage, self.panic)
+    }
+}
+
+impl std::error::Error for StageFailed {}
+
+/// Closes a [`StageChannel`] when dropped — on normal return *and* on
+/// panic. Every async-pipeline stage thread holds one per channel it
+/// produces into or consumes from, making "a dying stage releases its
+/// peers" a structural guarantee rather than a code path.
+pub struct CloseGuard<'a, T>(&'a StageChannel<T>);
+
+impl<T> Drop for CloseGuard<'_, T> {
+    fn drop(&mut self) {
+        self.0.close();
     }
 }
 
@@ -57,10 +108,17 @@ impl<T> StageChannel<T> {
         }
     }
 
+    /// Guard that closes this channel when dropped, whether the holder
+    /// returns normally or unwinds from a panic.
+    pub fn close_guard(&self) -> CloseGuard<'_, T> {
+        CloseGuard(self)
+    }
+
     /// Enqueue `item`, blocking while the buffer is full. Returns the
     /// item back inside [`StageClosed`] if the channel was closed
     /// before space opened up.
     pub fn send(&self, item: T) -> Result<(), StageClosed<T>> {
+        crate::util::failpoint::fire("stage.send");
         let mut st = self.state.lock().unwrap();
         loop {
             if st.closed {
@@ -78,6 +136,7 @@ impl<T> StageChannel<T> {
     /// Dequeue the next item, blocking while the buffer is empty.
     /// Returns `None` only after the channel is closed *and* drained.
     pub fn recv(&self) -> Option<T> {
+        crate::util::failpoint::fire("stage.recv");
         let mut st = self.state.lock().unwrap();
         loop {
             if let Some(item) = st.items.pop_front() {
@@ -159,6 +218,30 @@ mod tests {
         });
         // The item enqueued before close still drains.
         assert_eq!(ch.recv(), Some(7));
+        assert_eq!(ch.recv(), None);
+    }
+
+    #[test]
+    fn panicking_guard_holder_releases_blocked_sender() {
+        let ch = StageChannel::new(1);
+        ch.send(1u32).unwrap();
+        std::thread::scope(|s| {
+            let producer = s.spawn(|| ch.send(2));
+            let dying = s.spawn(|| {
+                let _g = ch.close_guard();
+                std::thread::sleep(std::time::Duration::from_millis(10));
+                panic!("stage died mid-round");
+            });
+            let payload = dying.join().unwrap_err();
+            let err = StageFailed::from_panic("test", payload);
+            assert!(err.to_string().contains("stage 'test' panicked"), "got: {err}");
+            assert!(err.to_string().contains("stage died mid-round"), "got: {err}");
+            // The guard's drop closed the channel: the blocked sender is
+            // released with its item handed back, not left hanging.
+            let rejected = producer.join().unwrap().unwrap_err();
+            assert_eq!(rejected.0, 2);
+        });
+        assert_eq!(ch.recv(), Some(1));
         assert_eq!(ch.recv(), None);
     }
 

@@ -252,6 +252,29 @@ impl EnvPool {
     pub fn reset_all(&mut self) {
         self.map_envs(|_, env, _| env.reset());
     }
+
+    /// Per-env RNG stream states, in slot order — the only cross-round
+    /// collector state (episode collection resets the env per episode),
+    /// captured at a round boundary for checkpointing.
+    pub fn rng_states(&self) -> Vec<[u64; 4]> {
+        self.slots.iter().map(|s| s.rng.state()).collect()
+    }
+
+    /// Restore per-env RNG streams captured with [`EnvPool::rng_states`];
+    /// the pool continues every env's draw sequence exactly where the
+    /// checkpointed run left it.
+    pub fn restore_rng_states(&mut self, states: &[[u64; 4]]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            states.len() == self.slots.len(),
+            "checkpoint has {} env RNG streams, pool has {} envs",
+            states.len(),
+            self.slots.len()
+        );
+        for (slot, s) in self.slots.iter_mut().zip(states) {
+            slot.rng = Rng::from_state(*s);
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -353,6 +376,17 @@ mod tests {
             assert_eq!(pool.state(i).steps_taken(), 0);
             assert!(pool.state(i).history().is_empty());
         }
+    }
+
+    #[test]
+    fn rng_states_round_trip_and_length_check() {
+        let mut pool = pool_with(1, 3);
+        let states = pool.rng_states();
+        let draws: Vec<u64> = (0..3).map(|i| pool.map_env_at(i, |_, rng| rng.next_u64())).collect();
+        pool.restore_rng_states(&states).unwrap();
+        let again: Vec<u64> = (0..3).map(|i| pool.map_env_at(i, |_, rng| rng.next_u64())).collect();
+        assert_eq!(draws, again, "restored streams must continue identically");
+        assert!(pool.restore_rng_states(&states[..2]).is_err(), "length mismatch must be typed");
     }
 
     #[test]

@@ -17,7 +17,7 @@
 //! [`rlflow::runtime::HostBackend`] — no artifacts, no `xla_extension`.
 
 use rlflow::config::RunConfig;
-use rlflow::coordinator::Pipeline;
+use rlflow::coordinator::{Checkpoint, CheckpointCfg, Pipeline};
 use rlflow::cost::CostModel;
 use rlflow::experiments::{self, ExperimentCtx};
 use rlflow::runtime::{backend_by_name, Backend, ParamStore};
@@ -115,12 +115,13 @@ USAGE:
   rlflow optimize --graph <name> --method <greedy|taso> [--threads N] [--repeat N] [--fresh-cache] [--rules rules.json] [--export out.json]
   rlflow train [--graph <name>] [--backend host|pjrt|auto] [--envs B] [--config cfg.json] [--smoke] [--save dir] [-s key=value]...
   rlflow train --async [--replay trace.txt] [--trace out.txt] [... train flags]
+  rlflow train [--async] --checkpoint-every N [--checkpoint-dir D] | --resume D [... train flags]
   rlflow eval --load <dir> [--graph <name>] [--backend host|pjrt|auto] [--envs B] [-s key=value]...
   rlflow experiment <table1|table2|table3|fig5|...|fig10|all> [--runs N] [--backend B] [--envs B] [--smoke] [--out dir] [--fresh-cache] [--rules rules.json]
   rlflow synth --out <rules.json> [--alphabet <groups|all>] [--inputs N] [--ops N] [--seed S] [--tier <always-safe|shape-preserving|all>] [--max-rules N]
   rlflow generate-rules [--verify] [--inputs N] [--ops N]
   rlflow serve [--addr 127.0.0.1:7777] [--cache-dir DIR] [--workers N] [--queue N] [--timeout-ms T] [--threads N] [--snapshot-every N]
-  rlflow request [--addr A] (--graph <name> | --import model.json) [--method greedy|taso] [--timeout-ms T] [--export out.json]
+  rlflow request [--addr A] (--graph <name> | --import model.json) [--method greedy|taso] [--timeout-ms T] [--retries N] [--retry-budget-ms T] [--export out.json]
   rlflow request [--addr A] --stats | --ping | --shutdown
 
 RULE SYNTHESIS:
@@ -160,6 +161,19 @@ ASYNC TRAINING:
   same trace => bit-identical final params. Knobs: -s async_rounds=N,
   -s async_stage_threads=N, -s async_staging_cap=N (thread counts never
   change results, only timing).
+
+CRASH SAFETY:
+  `rlflow train --checkpoint-every N` writes an atomic, checksummed
+  checkpoint (params + optimiser moments + every RNG stream + replay
+  pools + eval history) into --checkpoint-dir after every N rounds;
+  `--resume DIR` loads the newest valid checkpoint and continues.
+  Interrupting at any round boundary and resuming is bit-identical to
+  the uninterrupted run, for both the synchronous round engine and
+  --async (any stage-thread count). Without --async, checkpointing runs
+  the same round engine as --async with a canonical schedule.
+  `rlflow request --retries N` retries transient failures (`overloaded`,
+  `timeout`, connection refused/dropped) with seeded-jitter exponential
+  backoff capped by --retry-budget-ms; `bad_request` is never retried.
 
 BACKENDS:
   host   pure-Rust model execution — the full collect/WM/dream/PPO/eval
@@ -268,6 +282,35 @@ fn cmd_optimize(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Parse `--checkpoint-every`/`--checkpoint-dir`/`--resume` onto the
+/// config, and load the checkpoint a `--resume DIR` run continues from
+/// (`--resume` also points the checkpoint directory at DIR).
+fn checkpoint_setup(
+    args: &Args,
+    cfg: &mut RunConfig,
+) -> anyhow::Result<(Option<CheckpointCfg>, Option<Checkpoint>)> {
+    cfg.checkpoint_every = usize_flag(args, "checkpoint-every", cfg.checkpoint_every)?;
+    if let Some(d) = args.flags.get("checkpoint-dir") {
+        cfg.checkpoint_dir = d.clone();
+    }
+    let resume = match args.flags.get("resume") {
+        Some(dir) => {
+            cfg.checkpoint_dir = dir.clone();
+            let cp = Checkpoint::load_latest(std::path::Path::new(dir))?.ok_or_else(|| {
+                anyhow::anyhow!("--resume {dir}: no usable checkpoint found there")
+            })?;
+            println!("resuming from {dir}/ at round {}", cp.next_round);
+            Some(cp)
+        }
+        None => None,
+    };
+    let ckpt = (cfg.checkpoint_every > 0).then(|| CheckpointCfg {
+        dir: std::path::PathBuf::from(&cfg.checkpoint_dir),
+        every: cfg.checkpoint_every,
+    });
+    Ok((ckpt, resume))
+}
+
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let mut cfg = build_config(args)?;
     // `--async` (equivalent to `-s async=true`): the pipelined
@@ -275,8 +318,14 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     if args.flags.get("async").map(|v| v == "true").unwrap_or(false) {
         cfg.train_async = true;
     }
+    let (ckpt, resume) = checkpoint_setup(args, &mut cfg)?;
     if cfg.train_async {
-        return cmd_train_async(args, &cfg);
+        return cmd_train_async(args, &cfg, ckpt, resume);
+    }
+    if ckpt.is_some() || resume.is_some() {
+        // Checkpointing requires the round engine (the single-pass
+        // model-based pipeline has no round boundaries to snapshot at).
+        return cmd_train_rounds(args, &cfg, ckpt, resume);
     }
     let backend = backend_by_name(&cfg.backend)?;
     let pipe = Pipeline::new(backend.as_ref())?;
@@ -316,9 +365,14 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
 /// a schedule trace of every cross-stage handoff; `--replay trace.txt`
 /// re-executes a recorded schedule instead (same seeds + same trace =>
 /// bit-identical final params — diffable with `cmp` on the saved .rlw
-/// files).
-fn cmd_train_async(args: &Args, cfg: &RunConfig) -> anyhow::Result<()> {
-    use rlflow::coordinator::{replay_trace, train_async, AsyncTrainCfg, ScheduleTrace};
+/// files). `--checkpoint-every`/`--resume` add crash safety.
+fn cmd_train_async(
+    args: &Args,
+    cfg: &RunConfig,
+    ckpt: Option<CheckpointCfg>,
+    resume: Option<Checkpoint>,
+) -> anyhow::Result<()> {
+    use rlflow::coordinator::{replay_trace, train_async_ckpt, AsyncTrainCfg, ScheduleTrace};
     let acfg = AsyncTrainCfg::from_run(cfg);
     let graph = rlflow::zoo::by_name(&cfg.graph)?;
     // Each stage thread builds its own backend instance via the factory
@@ -327,6 +381,8 @@ fn cmd_train_async(args: &Args, cfg: &RunConfig) -> anyhow::Result<()> {
     let factory = move || backend_by_name(&backend_name);
 
     let out = if let Some(path) = args.flags.get("replay") {
+        anyhow::ensure!(resume.is_none(), "--replay cannot be combined with --resume");
+        anyhow::ensure!(ckpt.is_none(), "--replay cannot be combined with --checkpoint-every");
         let trace = ScheduleTrace::load(std::path::Path::new(path))?;
         println!(
             "replaying schedule {path} on {} (seed {}, {} rounds, {} envs)",
@@ -338,9 +394,40 @@ fn cmd_train_async(args: &Args, cfg: &RunConfig) -> anyhow::Result<()> {
             "training async pipeline on {} (seed {}, {} rounds, {} stage threads, staging cap {})",
             cfg.graph, cfg.seed, acfg.rounds, acfg.stage_threads, acfg.staging_cap
         );
-        train_async(&factory, cfg, &acfg, &graph)?
+        train_async_ckpt(&factory, cfg, &acfg, &graph, ckpt.as_ref(), resume)?
     };
+    report_round_outcome(args, &out)
+}
 
+/// `rlflow train --checkpoint-every/--resume` without `--async`: the same
+/// round engine as the async pipeline, executed sequentially under the
+/// canonical schedule, with atomic checkpoints at round boundaries.
+fn cmd_train_rounds(
+    args: &Args,
+    cfg: &RunConfig,
+    ckpt: Option<CheckpointCfg>,
+    resume: Option<Checkpoint>,
+) -> anyhow::Result<()> {
+    use rlflow::coordinator::{train_reference_ckpt, AsyncTrainCfg};
+    let acfg = AsyncTrainCfg::from_run(cfg);
+    let graph = rlflow::zoo::by_name(&cfg.graph)?;
+    let backend_name = cfg.backend.clone();
+    let factory = move || backend_by_name(&backend_name);
+    println!(
+        "training round engine on {} (seed {}, {} rounds, checkpoints in {})",
+        cfg.graph, cfg.seed, acfg.rounds, cfg.checkpoint_dir
+    );
+    let out = train_reference_ckpt(&factory, cfg, &acfg, &graph, ckpt.as_ref(), resume)?;
+    report_round_outcome(args, &out)
+}
+
+/// Print per-round eval summaries and honour `--trace`/`--save` for a
+/// round-engine outcome (shared by `--async` and the checkpointing
+/// synchronous path).
+fn report_round_outcome(
+    args: &Args,
+    out: &rlflow::coordinator::AsyncOutcome,
+) -> anyhow::Result<()> {
     for re in &out.evals {
         let scores: Vec<f64> = re.results.iter().map(|r| r.best_improvement_pct).collect();
         let (m, s) = rlflow::util::stats::mean_std(&scores);
@@ -685,10 +772,19 @@ fn cmd_request(args: &Args) -> anyhow::Result<()> {
         Some(t) => std::time::Duration::from_millis(t.saturating_add(30_000)),
         None => client::DEFAULT_READ_TIMEOUT,
     };
-    let resp = client::roundtrip(&addr, &encode_optimize(&req)?, read_timeout)?;
+    // `--retries N`: retry transient failures (overloaded/timeout and
+    // transport errors) with seeded-jitter exponential backoff, bounded
+    // by `--retry-budget-ms`. Fatal errors (bad_request) never retry.
+    let retry = client::RetryCfg {
+        retries: usize_flag(args, "retries", 0)?,
+        budget_ms: usize_flag(args, "retry-budget-ms", 10_000)? as u64,
+        seed: usize_flag(args, "retry-seed", 0)? as u64,
+    };
+    let (resp, attempts) =
+        client::roundtrip_retry(&addr, &encode_optimize(&req)?, read_timeout, &retry)?;
     match resp {
         Response::Result { payload, provenance, elapsed_s } => {
-            println!("provenance: {}", provenance.as_str());
+            println!("provenance: {} (attempt {attempts})", provenance.as_str());
             println!(
                 "{name}: {:.3} ms -> {:.3} ms ({:.1}% better) in {:.2}s server-side, {} graphs explored",
                 payload.get("initial_ms")?.as_f64()?,

@@ -337,6 +337,7 @@ impl Backend for HostBackend {
     }
 
     fn exec(&self, program: &str, args: &[TensorView]) -> anyhow::Result<Vec<Tensor>> {
+        crate::util::failpoint::check("host.exec")?;
         let spec = self.manifest.artifact(program)?;
         validate_args(program, spec, args)?;
         let t0 = Instant::now();
@@ -367,6 +368,7 @@ impl Backend for HostBackend {
     ) -> anyhow::Result<Vec<Vec<Tensor>>> {
         // Amortised path: one manifest lookup, one workspace checkout and
         // one stats update for the whole batch of calls.
+        crate::util::failpoint::check("host.exec")?;
         let spec = self.manifest.artifact(program)?;
         let t0 = Instant::now();
         let mut ws = self.ws.borrow_mut();

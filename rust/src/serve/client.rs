@@ -5,12 +5,19 @@
 //! response line, decode. The daemon supports pipelined connections, but
 //! the CLI's needs are strictly request/response and a fresh connection
 //! keeps every invocation independent.
+//!
+//! [`roundtrip_retry`] adds a transient-failure policy on top: typed
+//! `overloaded`/`timeout` responses and transport errors (refused
+//! connection, dropped socket) are retryable; everything else —
+//! `bad_request` above all — is final and returned as-is. Backoff is
+//! exponential with seeded jitter, so a retry schedule is replayable.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use super::protocol::{Response, MAX_LINE_BYTES};
+use super::protocol::{ErrorCode, Response, MAX_LINE_BYTES};
+use crate::util::Rng;
 
 /// Default client-side read timeout (generous: a cold TASO search on the
 /// largest zoo graph finishes well inside this).
@@ -40,4 +47,76 @@ pub fn roundtrip(addr: &str, line: &str, read_timeout: Duration) -> anyhow::Resu
         MAX_LINE_BYTES
     );
     Response::decode(resp.trim())
+}
+
+/// Retry policy for [`roundtrip_retry`].
+#[derive(Debug, Clone)]
+pub struct RetryCfg {
+    /// Extra attempts after the first (0 = exactly one attempt).
+    pub retries: usize,
+    /// Total backoff-sleep budget across all retries, in milliseconds;
+    /// retrying stops once the budget is spent even if attempts remain.
+    pub budget_ms: u64,
+    /// Seed for the jitter stream (replayable backoff schedules).
+    pub seed: u64,
+}
+
+impl Default for RetryCfg {
+    fn default() -> Self {
+        Self { retries: 0, budget_ms: 10_000, seed: 0 }
+    }
+}
+
+/// Whether a decoded response is worth retrying: `overloaded` (shed by
+/// the admission queue or connection cap) and `timeout` are transient;
+/// every other response — results, `bad_request`, `shutting_down` — is
+/// final.
+pub fn is_retryable(resp: &Response) -> bool {
+    matches!(
+        resp,
+        Response::Error { code: ErrorCode::Overloaded | ErrorCode::Timeout, .. }
+    )
+}
+
+/// [`roundtrip`] with retries: transient failures (see [`is_retryable`];
+/// transport-level errors count too) back off exponentially —
+/// `50ms * 2^attempt` plus seeded jitter of up to half that, capped by
+/// the remaining `budget_ms` — and try again. Returns the final response
+/// plus the number of attempts made (at least 1), or the last transport
+/// error once attempts or budget run out.
+pub fn roundtrip_retry(
+    addr: &str,
+    line: &str,
+    read_timeout: Duration,
+    retry: &RetryCfg,
+) -> anyhow::Result<(Response, usize)> {
+    let mut rng = Rng::new(retry.seed);
+    let started = Instant::now();
+    let budget = Duration::from_millis(retry.budget_ms);
+    for attempt in 1..=retry.retries + 1 {
+        let outcome = roundtrip(addr, line, read_timeout);
+        let transient = match &outcome {
+            Ok(resp) => is_retryable(resp),
+            Err(_) => true,
+        };
+        if !transient || attempt > retry.retries {
+            return outcome.map(|r| (r, attempt));
+        }
+        let base = 50u64.saturating_mul(1 << (attempt - 1).min(10));
+        let jitter = rng.next_u64() % (base / 2 + 1);
+        let sleep = Duration::from_millis(base + jitter);
+        if started.elapsed() + sleep > budget {
+            // Budget exhausted: surface the last outcome rather than
+            // sleeping past the caller's deadline.
+            return match outcome {
+                Ok(r) => Ok((r, attempt)),
+                Err(e) => Err(anyhow::anyhow!(
+                    "retry budget ({} ms) exhausted after {attempt} attempts: {e}",
+                    retry.budget_ms
+                )),
+            };
+        }
+        std::thread::sleep(sleep);
+    }
+    unreachable!("loop always returns by the last attempt");
 }

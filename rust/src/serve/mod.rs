@@ -28,7 +28,9 @@
 //!   a hang).
 //! * [`server`] — listener, connection handling, worker pool, graceful
 //!   drain.
-//! * [`client`] — the one-shot client behind `rlflow request`.
+//! * [`client`] — the one-shot client behind `rlflow request`, with a
+//!   seeded-backoff retry policy for transient (`overloaded`/`timeout`)
+//!   failures.
 
 pub mod client;
 pub mod persist;
@@ -38,6 +40,7 @@ pub mod server;
 pub mod service;
 pub mod stats;
 
+pub use client::{roundtrip, roundtrip_retry, RetryCfg, DEFAULT_READ_TIMEOUT};
 pub use protocol::{
     decode_request, encode_control, encode_optimize, result_payload, ErrorCode, Method,
     OptimizeRequest, Provenance, Request, Response,

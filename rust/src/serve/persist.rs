@@ -21,9 +21,17 @@
 //! # Crash behaviour
 //!
 //! * A torn final log line (crash mid-append) is skipped with a warning;
-//!   every complete line still replays.
+//!   every complete line still replays. If the log does not end in a
+//!   newline, a repair newline is appended on open so the next append
+//!   cannot merge into the torn tail and corrupt *two* entries.
 //! * A crash between snapshot rename and log truncation replays log
 //!   entries on top of the snapshot — re-storing an entry is idempotent.
+//! * Each compaction keeps the previous snapshot as `snapshot.json.bak`.
+//!   A corrupt (or missing-after-crash) `snapshot.json` is *not* fatal:
+//!   startup warns, falls back to the `.bak` image plus a full log
+//!   replay, and reports it via [`Replay::recovered_from_bak`]. Only
+//!   entries newer than the `.bak` snapshot and absent from the log can
+//!   be lost, and those were all served before the previous compaction.
 //! * `elapsed_s` is deliberately *not* persisted (it is per-serving wall
 //!   clock, not memoised state); replayed logs carry `elapsed_s = 0` and
 //!   `from_cache = false`, exactly like
@@ -41,12 +49,15 @@ use std::path::{Path, PathBuf};
 
 use crate::graph::{onnx, Graph};
 use crate::search::{CacheStats, SearchLog};
+use crate::util::failpoint::{self, Action};
 use crate::util::json::{parse, Json};
 
 /// File name of the append-only result log inside the cache dir.
 pub const LOG_FILE: &str = "results.log";
 /// File name of the compacted snapshot inside the cache dir.
 pub const SNAPSHOT_FILE: &str = "snapshot.json";
+/// File name the previous snapshot is kept under across compactions.
+pub const SNAPSHOT_BAK: &str = "snapshot.json.bak";
 /// Format tag written into (and required of) every snapshot.
 pub const SNAPSHOT_FORMAT: &str = "rlflow-servecache";
 /// Current snapshot format version.
@@ -149,6 +160,9 @@ pub struct Replay {
     pub prior: CacheStats,
     /// Complete-but-unparseable log lines that were skipped.
     pub skipped_lines: usize,
+    /// `snapshot.json` was corrupt or missing and the previous snapshot
+    /// (`snapshot.json.bak`) was replayed instead.
+    pub recovered_from_bak: bool,
 }
 
 /// Owner of a cache dir's log + snapshot files (see module docs). One
@@ -159,48 +173,100 @@ pub struct Persister {
     appends_since_snapshot: usize,
     /// Appends between automatic compactions.
     pub snapshot_every: usize,
+    /// A previous append failed and may have left an unterminated line;
+    /// the next append re-terminates it first, so a committed entry
+    /// never merges into the torn tail.
+    tainted: bool,
+}
+
+/// Parse one snapshot file into `(entries, stats)`, validating format
+/// tag, version, and every entry (the graphs pass full import checks).
+fn read_snapshot(path: &Path) -> anyhow::Result<(Vec<CacheEntry>, CacheStats)> {
+    let text = std::fs::read_to_string(path)?;
+    let j = parse(&text).map_err(|e| anyhow::anyhow!("corrupt snapshot {}: {e}", path.display()))?;
+    let format = j.get("format")?.as_str()?;
+    anyhow::ensure!(
+        format == SNAPSHOT_FORMAT,
+        "{} is not a serve cache snapshot (format '{format}')",
+        path.display()
+    );
+    let version = j.get("version")?.as_usize()?;
+    anyhow::ensure!(
+        version == SNAPSHOT_VERSION,
+        "snapshot version {version} unsupported (expected {SNAPSHOT_VERSION})"
+    );
+    let mut prior = CacheStats::default();
+    let st = j.get("stats")?;
+    prior.result_hits = st.get("result_hits")?.as_usize()? as u64;
+    prior.result_misses = st.get("result_misses")?.as_usize()? as u64;
+    prior.evictions = st.get("evictions")?.as_usize()? as u64;
+    let mut entries = Vec::new();
+    for ej in j.get("entries")?.as_arr()? {
+        entries.push(
+            entry_from_json(ej)
+                .map_err(|e| anyhow::anyhow!("corrupt snapshot entry in {}: {e}", path.display()))?,
+        );
+    }
+    Ok((entries, prior))
 }
 
 impl Persister {
     /// Open (creating if needed) a cache dir, replaying whatever previous
     /// processes persisted. A missing dir or empty files yield an empty
-    /// [`Replay`]; a corrupt *snapshot* is a hard error (it is written
-    /// atomically, so corruption means real trouble), while corrupt
+    /// [`Replay`]. A corrupt or missing `snapshot.json` falls back to the
+    /// previous snapshot (`snapshot.json.bak`, kept across compactions)
+    /// with a warning — startup only degrades, never dies — and corrupt
     /// trailing *log* lines are skipped and counted (torn final append).
     pub fn open(dir: &Path, snapshot_every: usize) -> anyhow::Result<(Persister, Replay)> {
         std::fs::create_dir_all(dir)
             .map_err(|e| anyhow::anyhow!("cannot create cache dir {}: {e}", dir.display()))?;
         let mut entries = Vec::new();
         let mut prior = CacheStats::default();
+        let mut recovered_from_bak = false;
 
         let snap_path = dir.join(SNAPSHOT_FILE);
-        if snap_path.exists() {
-            let text = std::fs::read_to_string(&snap_path)?;
-            let j = parse(&text)
-                .map_err(|e| anyhow::anyhow!("corrupt snapshot {}: {e}", snap_path.display()))?;
-            let format = j.get("format")?.as_str()?;
-            anyhow::ensure!(
-                format == SNAPSHOT_FORMAT,
-                "{} is not a serve cache snapshot (format '{format}')",
-                snap_path.display()
-            );
-            let version = j.get("version")?.as_usize()?;
-            anyhow::ensure!(
-                version == SNAPSHOT_VERSION,
-                "snapshot version {version} unsupported (expected {SNAPSHOT_VERSION})"
-            );
-            let st = j.get("stats")?;
-            prior.result_hits = st.get("result_hits")?.as_usize()? as u64;
-            prior.result_misses = st.get("result_misses")?.as_usize()? as u64;
-            prior.evictions = st.get("evictions")?.as_usize()? as u64;
-            for ej in j.get("entries")?.as_arr()? {
-                entries.push(entry_from_json(ej).map_err(|e| {
-                    anyhow::anyhow!("corrupt snapshot entry in {}: {e}", snap_path.display())
-                })?);
+        let bak_path = dir.join(SNAPSHOT_BAK);
+        let primary = if snap_path.exists() {
+            match read_snapshot(&snap_path) {
+                Ok(got) => Some(got),
+                Err(e) => {
+                    eprintln!("serve: {e}; falling back to {SNAPSHOT_BAK}");
+                    None
+                }
             }
+        } else {
+            None
+        };
+        match primary {
+            Some((es, st)) => {
+                entries = es;
+                prior = st;
+            }
+            None if bak_path.exists() => {
+                let (es, st) = read_snapshot(&bak_path).map_err(|e| {
+                    anyhow::anyhow!("both snapshot and backup are unreadable: {e}")
+                })?;
+                recovered_from_bak = true;
+                eprintln!(
+                    "serve: recovered {} entries from {SNAPSHOT_BAK} + log replay",
+                    es.len()
+                );
+                entries = es;
+                prior = st;
+            }
+            None => {}
         }
 
         let log_path = dir.join(LOG_FILE);
+        // Repair a torn tail before appending anything new: without the
+        // newline, the next append would merge into the torn line and
+        // corrupt a *committed* entry too.
+        if let Ok(bytes) = std::fs::read(&log_path) {
+            if !bytes.is_empty() && bytes.last() != Some(&b'\n') {
+                eprintln!("serve: cache log has a torn tail; appending repair newline");
+                OpenOptions::new().append(true).open(&log_path)?.write_all(b"\n")?;
+            }
+        }
         let mut skipped_lines = 0usize;
         if log_path.exists() {
             let reader = BufReader::new(File::open(&log_path)?);
@@ -226,8 +292,9 @@ impl Persister {
                 log,
                 appends_since_snapshot: 0,
                 snapshot_every: snapshot_every.max(1),
+                tainted: false,
             },
-            Replay { entries, prior, skipped_lines },
+            Replay { entries, prior, skipped_lines, recovered_from_bak },
         ))
     }
 
@@ -235,10 +302,46 @@ impl Persister {
     /// crash after a response was sent never loses its entry). Returns
     /// `true` when a compaction is due — the caller then invokes
     /// [`Persister::snapshot`] with the full current cache image.
+    /// Failpoint sites: `serve.log.append` (where `short(n)` tears the
+    /// line after `n` bytes) and `serve.log.flush` (arm `exit` there to
+    /// simulate a kill before buffered bytes reach the file).
     pub fn append(&mut self, e: &CacheEntry) -> anyhow::Result<bool> {
         let line = entry_to_json(e)?.to_string_compact();
-        self.log.write_all(line.as_bytes())?;
-        self.log.write_all(b"\n")?;
+        if self.tainted {
+            // A previous append failed mid-line and the daemon carried
+            // on: terminate the torn tail so this entry gets its own
+            // line (the garbage line is skipped, not merged, on replay).
+            self.log.write_all(b"\n")?;
+            self.log.flush()?;
+            self.tainted = false;
+        }
+        match failpoint::hit("serve.log.append") {
+            Action::Short(n) => {
+                let n = n.min(line.len());
+                self.log.write_all(&line.as_bytes()[..n])?;
+                self.log.flush()?;
+                self.tainted = true;
+                anyhow::bail!(
+                    "failpoint serve.log.append: short write ({n} of {} bytes)",
+                    line.len()
+                );
+            }
+            Action::Err => anyhow::bail!("failpoint serve.log.append: injected fault"),
+            Action::Panic => panic!("failpoint serve.log.append: injected panic"),
+            Action::Exit => {
+                eprintln!("failpoint serve.log.append: simulated kill");
+                std::process::exit(failpoint::EXIT_CODE);
+            }
+            Action::Delay(ms) => std::thread::sleep(std::time::Duration::from_millis(ms)),
+            Action::Proceed => {}
+        }
+        if let Err(e) =
+            self.log.write_all(line.as_bytes()).and_then(|()| self.log.write_all(b"\n"))
+        {
+            self.tainted = true;
+            return Err(e.into());
+        }
+        failpoint::check("serve.log.flush")?;
         self.log.flush()?;
         self.appends_since_snapshot += 1;
         Ok(self.appends_since_snapshot >= self.snapshot_every)
@@ -266,12 +369,20 @@ impl Persister {
 
         let tmp = self.dir.join("snapshot.json.tmp");
         let final_path = self.dir.join(SNAPSHOT_FILE);
+        failpoint::check("serve.snapshot.write")?;
         {
             let mut f = File::create(&tmp)?;
             f.write_all(j.to_string_compact().as_bytes())?;
             f.write_all(b"\n")?;
             f.flush()?;
             f.sync_all()?;
+        }
+        failpoint::check("serve.snapshot.rename")?;
+        // Keep the outgoing snapshot as the fallback image: if the new
+        // one is later torn or unreadable, open() recovers from the .bak
+        // plus the (then still untruncated) log.
+        if final_path.exists() {
+            std::fs::rename(&final_path, self.dir.join(SNAPSHOT_BAK))?;
         }
         std::fs::rename(&tmp, &final_path)?;
         // The snapshot subsumes every logged entry: start the log over.
@@ -281,6 +392,7 @@ impl Persister {
             .truncate(true)
             .open(self.dir.join(LOG_FILE))?;
         self.appends_since_snapshot = 0;
+        self.tainted = false;
         Ok(())
     }
 }
@@ -394,6 +506,87 @@ mod tests {
         let (_p, replay) = Persister::open(&dir, 100).unwrap();
         assert_eq!(replay.entries.len(), 1, "complete lines must still replay");
         assert_eq!(replay.skipped_lines, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_snapshot_recovers_from_bak() {
+        let dir = tmpdir("bak");
+        {
+            let (mut p, _) = Persister::open(&dir, 100).unwrap();
+            let _ = p.append(&sample_entry(1)).unwrap();
+            p.snapshot(&[sample_entry(1)], &CacheStats::default()).unwrap();
+            let _ = p.append(&sample_entry(2)).unwrap();
+            p.snapshot(&[sample_entry(1), sample_entry(2)], &CacheStats::default()).unwrap();
+            let _ = p.append(&sample_entry(3)).unwrap();
+        }
+        assert!(dir.join(SNAPSHOT_BAK).exists(), "compaction keeps the previous snapshot");
+        // Byte-mutate the live snapshot at several positions: startup
+        // must warn and recover from the .bak + log, never die.
+        let clean = std::fs::read(dir.join(SNAPSHOT_FILE)).unwrap();
+        for pos in [0, clean.len() / 2, clean.len() - 2] {
+            let mut bad = clean.clone();
+            bad[pos] ^= 0x15;
+            std::fs::write(dir.join(SNAPSHOT_FILE), &bad).unwrap();
+            let (_p, replay) = Persister::open(&dir, 100).unwrap();
+            assert!(replay.recovered_from_bak, "mutation at byte {pos}");
+            // .bak holds entry 1; the untruncated log holds entry 3.
+            let fps: Vec<u64> = replay.entries.iter().map(|e| e.fp).collect();
+            assert!(fps.contains(&1) && fps.contains(&3), "got {fps:?}");
+        }
+        // With the snapshot intact nothing falls back.
+        std::fs::write(dir.join(SNAPSHOT_FILE), &clean).unwrap();
+        let (_p, replay) = Persister::open(&dir, 100).unwrap();
+        assert!(!replay.recovered_from_bak);
+        assert_eq!(replay.entries.len(), 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_snapshot_without_bak_degrades_to_log_replay() {
+        let dir = tmpdir("nobak");
+        {
+            let (mut p, _) = Persister::open(&dir, 100).unwrap();
+            let _ = p.append(&sample_entry(1)).unwrap();
+            p.snapshot(&[sample_entry(1)], &CacheStats::default()).unwrap();
+            let _ = p.append(&sample_entry(2)).unwrap();
+        }
+        // First compaction has no predecessor, so no .bak exists yet:
+        // corrupting the only snapshot degrades to a log-only replay
+        // with a warning — startup still must not die.
+        assert!(!dir.join(SNAPSHOT_BAK).exists());
+        std::fs::write(dir.join(SNAPSHOT_FILE), b"{definitely not json").unwrap();
+        let (_p, replay) = Persister::open(&dir, 100).unwrap();
+        assert!(!replay.recovered_from_bak);
+        let fps: Vec<u64> = replay.entries.iter().map(|e| e.fp).collect();
+        assert_eq!(fps, vec![2], "post-snapshot log entries survive");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_is_repaired_before_new_appends() {
+        let dir = tmpdir("tail");
+        {
+            let (mut p, _) = Persister::open(&dir, 100).unwrap();
+            let _ = p.append(&sample_entry(1)).unwrap();
+        }
+        // Crash mid-append: no trailing newline.
+        {
+            let mut f = OpenOptions::new().append(true).open(dir.join(LOG_FILE)).unwrap();
+            f.write_all(b"{\"fp\":\"00000000").unwrap();
+        }
+        {
+            let (mut p, replay) = Persister::open(&dir, 100).unwrap();
+            assert_eq!(replay.entries.len(), 1);
+            assert_eq!(replay.skipped_lines, 1);
+            let _ = p.append(&sample_entry(2)).unwrap();
+        }
+        // Without the repair newline, entry 2 would merge into the torn
+        // tail and BOTH would be lost.
+        let (_p, replay) = Persister::open(&dir, 100).unwrap();
+        let fps: Vec<u64> = replay.entries.iter().map(|e| e.fp).collect();
+        assert_eq!(fps, vec![1, 2]);
+        assert_eq!(replay.skipped_lines, 1, "the torn line itself stays skipped");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -22,6 +22,11 @@
 //!   `timeout` without running; a search that outlives its deadline keeps
 //!   running (it still warms the cache) while the waiting request is
 //!   answered `timeout`.
+//! * A worker that panics mid-search is respawned in place
+//!   ([`supervised_worker`]): the pool never shrinks, the panicked job's
+//!   waiting connection resolves with `timeout` instead of hanging, and
+//!   the daemon keeps serving (pinned in `tests/chaos.rs` via the
+//!   `serve.worker` failpoint).
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -141,7 +146,7 @@ fn accept_loop(
         workers.push(
             std::thread::Builder::new()
                 .name(format!("serve-worker-{i}"))
-                .spawn(move || worker_loop(&q, &c))?,
+                .spawn(move || supervised_worker(i, &q, &c))?,
         );
     }
 
@@ -189,6 +194,23 @@ fn accept_loop(
     Ok(())
 }
 
+/// Keep one worker slot alive across panics: a panicking search (or an
+/// armed `serve.worker` failpoint) kills this iteration of
+/// [`worker_loop`], not the slot — the loop restarts it, so the pool
+/// never shrinks. The panicked job's reply sender is dropped during
+/// unwinding, which resolves its waiting connection with a `timeout`
+/// (and any coalesced followers through the Flight drop-guard) rather
+/// than a hang.
+fn supervised_worker(i: usize, queue: &BoundedQueue<Job>, core: &ServeCore) {
+    loop {
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| worker_loop(queue, core)))
+        {
+            Ok(()) => break, // queue closed: clean drain
+            Err(_) => eprintln!("serve: worker {i} panicked; respawning"),
+        }
+    }
+}
+
 fn worker_loop(queue: &BoundedQueue<Job>, core: &ServeCore) {
     // Expiry is decided atomically with the claim (under the queue
     // lock): a job can no longer expire between being popped and the
@@ -208,6 +230,9 @@ fn worker_loop(queue: &BoundedQueue<Job>, core: &ServeCore) {
             }
             Popped::Claimed(job) => job,
         };
+        // Chaos hook: a panic here exercises the respawn path with a
+        // claimed job in hand (outside the queue lock).
+        crate::util::failpoint::fire("serve.worker");
         let name = job.req.graph_name.clone();
         let resp = match core.optimize(&job.req, Some(job.deadline)) {
             Ok(outcome) => match outcome.payload(&name) {

@@ -1,0 +1,338 @@
+//! Deterministic fault injection: named failpoint sites with seeded
+//! triggers, zero-cost when unarmed.
+//!
+//! Long-running paths (serve persistence, checkpoint IO, pipeline stage
+//! handoffs, host-backend exec) call [`check`] or [`fire`] at named
+//! sites. With no configuration installed a hit is a single relaxed
+//! atomic load; armed sites perform the configured [`Action`] — return
+//! an injected IO error, panic the hitting thread, abort the process
+//! (simulated `kill -9`), sleep, or tear a write short.
+//!
+//! Configuration comes from the `RLFLOW_FAILPOINTS` environment variable
+//! (read once, on first hit) or programmatically via [`scoped`] in
+//! tests. The grammar is semicolon-separated clauses:
+//!
+//! ```text
+//! site=action[@N[+]][%p~seed]
+//! ```
+//!
+//! * `action` — `err`, `panic`, `exit`, `delay(ms)`, `short(bytes)`, or
+//!   `off` (remove the site).
+//! * `@N` — fire only on the Nth hit (1-based); `@N+` fires on the Nth
+//!   and every later hit. Without `@`, every hit fires.
+//! * `%p~seed` — fire with probability `p` drawn from a dedicated
+//!   xoshiro stream seeded with `seed`, so probabilistic schedules are
+//!   replayable bit-for-bit.
+//!
+//! Examples: `serve.snapshot.rename=exit@1`,
+//! `stage.send=delay(2)%0.5~42`, `serve.log.append=short(7)@2`.
+//!
+//! The full site inventory lives in ARCHITECTURE.md.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, Once, OnceLock};
+use std::time::Duration;
+
+use crate::util::Rng;
+
+/// Process exit code used by the `exit` action, so harnesses can tell a
+/// simulated kill from an ordinary failure.
+pub const EXIT_CODE: i32 = 86;
+
+/// What an armed failpoint site does on a triggering hit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    /// Site unarmed or trigger not met: carry on.
+    Proceed,
+    /// Return an injected IO error (ENOSPC-style write failure).
+    Err,
+    /// Panic the hitting thread.
+    Panic,
+    /// Abort the whole process with [`EXIT_CODE`] (simulated `kill -9`).
+    Exit,
+    /// Write only the first N bytes, then fail (torn write). Only
+    /// meaningful at sites that consult [`hit`] directly; [`check`] and
+    /// [`fire`] treat it as `Err`/`Panic` respectively.
+    Short(usize),
+    /// Sleep this many milliseconds, then proceed.
+    Delay(u64),
+}
+
+#[derive(Debug, Clone)]
+struct Site {
+    action: Action,
+    /// `(n, onwards)`: fire on the nth hit only, or from the nth onward.
+    at: Option<(u64, bool)>,
+    /// Seeded coin: fire with probability `p`.
+    prob: Option<(f64, Rng)>,
+    hits: u64,
+}
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static ENV_INIT: Once = Once::new();
+static SITES: OnceLock<Mutex<HashMap<String, Site>>> = OnceLock::new();
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+fn sites() -> &'static Mutex<HashMap<String, Site>> {
+    SITES.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn lock_sites() -> MutexGuard<'static, HashMap<String, Site>> {
+    // A panic action never unwinds while holding this lock (the caller
+    // panics after `hit` returns), but chaos tests thrash panics enough
+    // that we recover from poisoning defensively.
+    sites().lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn init_env() {
+    ENV_INIT.call_once(|| {
+        if let Ok(spec) = std::env::var("RLFLOW_FAILPOINTS") {
+            if let Err(e) = install(&spec) {
+                eprintln!("rlflow: ignoring invalid RLFLOW_FAILPOINTS: {e}");
+            }
+        }
+    });
+}
+
+fn install(spec: &str) -> anyhow::Result<()> {
+    let map = parse_spec(spec)?;
+    let armed = !map.is_empty();
+    *lock_sites() = map;
+    ARMED.store(armed, Ordering::SeqCst);
+    Ok(())
+}
+
+/// Install `spec` as the process-wide failpoint configuration,
+/// replacing any previous one (including one read from the
+/// environment). Prefer [`scoped`] in tests.
+pub fn configure(spec: &str) -> anyhow::Result<()> {
+    // Consume the env-init Once so a later first hit cannot clobber an
+    // explicitly installed configuration.
+    ENV_INIT.call_once(|| {});
+    install(spec)
+}
+
+/// Disarm every failpoint and reset all hit counters.
+pub fn clear() {
+    ENV_INIT.call_once(|| {});
+    lock_sites().clear();
+    ARMED.store(false, Ordering::SeqCst);
+}
+
+/// Evaluate a site. Returns [`Action::Proceed`] unless the site is
+/// armed *and* its trigger (hit count, probability) is met. Unarmed
+/// processes pay one relaxed atomic load.
+pub fn hit(site: &str) -> Action {
+    init_env();
+    if !ARMED.load(Ordering::Relaxed) {
+        return Action::Proceed;
+    }
+    let mut map = lock_sites();
+    let Some(s) = map.get_mut(site) else {
+        return Action::Proceed;
+    };
+    s.hits += 1;
+    if let Some((n, onwards)) = s.at {
+        let due = if onwards { s.hits >= n } else { s.hits == n };
+        if !due {
+            return Action::Proceed;
+        }
+    }
+    if let Some((p, rng)) = s.prob.as_mut() {
+        if rng.f64() >= *p {
+            return Action::Proceed;
+        }
+    }
+    s.action
+}
+
+/// Honour a site in an IO path: `delay` sleeps, `err`/`short` return an
+/// injected error, `panic` panics, `exit` aborts the process.
+pub fn check(site: &str) -> std::io::Result<()> {
+    match hit(site) {
+        Action::Proceed => Ok(()),
+        Action::Delay(ms) => {
+            std::thread::sleep(Duration::from_millis(ms));
+            Ok(())
+        }
+        Action::Err | Action::Short(_) => Err(std::io::Error::new(
+            std::io::ErrorKind::Other,
+            format!("failpoint {site}: injected fault"),
+        )),
+        Action::Panic => panic!("failpoint {site}: injected panic"),
+        Action::Exit => {
+            eprintln!("failpoint {site}: simulated kill (exit {EXIT_CODE})");
+            std::process::exit(EXIT_CODE);
+        }
+    }
+}
+
+/// Honour a site with no error channel (stage handoffs): `delay`
+/// sleeps, `exit` aborts, and every failing action panics the hitting
+/// thread.
+pub fn fire(site: &str) {
+    match hit(site) {
+        Action::Proceed => {}
+        Action::Delay(ms) => std::thread::sleep(Duration::from_millis(ms)),
+        Action::Err | Action::Panic | Action::Short(_) => {
+            panic!("failpoint {site}: injected panic")
+        }
+        Action::Exit => {
+            eprintln!("failpoint {site}: simulated kill (exit {EXIT_CODE})");
+            std::process::exit(EXIT_CODE);
+        }
+    }
+}
+
+/// A scoped failpoint configuration for tests: serialises every scope
+/// in the process (the registry is global), installs `spec`, and
+/// disarms everything on drop. Tests that inject faults must hold one
+/// of these for their whole body.
+pub struct Scope {
+    _lock: MutexGuard<'static, ()>,
+}
+
+impl Drop for Scope {
+    fn drop(&mut self) {
+        clear();
+    }
+}
+
+/// Acquire the test serialisation lock and arm `spec` until the
+/// returned [`Scope`] drops. Panics on an invalid spec.
+pub fn scoped(spec: &str) -> Scope {
+    let lock = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    configure(spec).expect("invalid failpoint spec");
+    Scope { _lock: lock }
+}
+
+fn parse_action(s: &str) -> anyhow::Result<Option<Action>> {
+    if let Some(arg) = s.strip_prefix("delay(").and_then(|r| r.strip_suffix(')')) {
+        return Ok(Some(Action::Delay(arg.parse()?)));
+    }
+    if let Some(arg) = s.strip_prefix("short(").and_then(|r| r.strip_suffix(')')) {
+        return Ok(Some(Action::Short(arg.parse()?)));
+    }
+    match s {
+        "err" => Ok(Some(Action::Err)),
+        "panic" => Ok(Some(Action::Panic)),
+        "exit" => Ok(Some(Action::Exit)),
+        "off" => Ok(None),
+        other => anyhow::bail!("unknown failpoint action {other:?}"),
+    }
+}
+
+fn parse_spec(spec: &str) -> anyhow::Result<HashMap<String, Site>> {
+    let mut map = HashMap::new();
+    for clause in spec.split(';').map(str::trim).filter(|c| !c.is_empty()) {
+        let (site, rest) = clause
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("failpoint clause {clause:?} missing '='"))?;
+        let (rest, prob) = match rest.split_once('%') {
+            Some((head, p)) => {
+                let (p, seed) = p.split_once('~').ok_or_else(|| {
+                    anyhow::anyhow!("failpoint probability {p:?} missing '~seed'")
+                })?;
+                let p: f64 = p.parse()?;
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(&p),
+                    "failpoint probability {p} outside [0, 1]"
+                );
+                (head, Some((p, Rng::new(seed.parse::<u64>()?))))
+            }
+            None => (rest, None),
+        };
+        let (action_s, at) = match rest.split_once('@') {
+            Some((head, n)) => {
+                let (n, onwards) = match n.strip_suffix('+') {
+                    Some(n) => (n, true),
+                    None => (n, false),
+                };
+                let n: u64 = n.parse()?;
+                anyhow::ensure!(n >= 1, "failpoint hit count is 1-based");
+                (head, Some((n, onwards)))
+            }
+            None => (rest, None),
+        };
+        match parse_action(action_s.trim())? {
+            Some(action) => {
+                map.insert(
+                    site.trim().to_string(),
+                    Site { action, at, prob, hits: 0 },
+                );
+            }
+            None => {
+                map.remove(site.trim());
+            }
+        }
+    }
+    Ok(map)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unarmed_sites_proceed() {
+        let _s = scoped("");
+        assert_eq!(hit("test.nowhere"), Action::Proceed);
+        assert!(check("test.nowhere").is_ok());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_spec("no-equals-sign").is_err());
+        assert!(parse_spec("a=frobnicate").is_err());
+        assert!(parse_spec("a=err@0").is_err(), "hit counts are 1-based");
+        assert!(parse_spec("a=err%0.5").is_err(), "probability needs a seed");
+        assert!(parse_spec("a=err%1.5~1").is_err(), "probability must be in [0,1]");
+        assert!(parse_spec("a=delay(xyz)").is_err());
+    }
+
+    #[test]
+    fn nth_hit_trigger_fires_exactly_once() {
+        let _s = scoped("test.nth=err@2");
+        assert_eq!(hit("test.nth"), Action::Proceed);
+        assert_eq!(hit("test.nth"), Action::Err);
+        assert_eq!(hit("test.nth"), Action::Proceed);
+    }
+
+    #[test]
+    fn onwards_trigger_fires_from_nth() {
+        let _s = scoped("test.on=err@2+");
+        assert_eq!(hit("test.on"), Action::Proceed);
+        assert_eq!(hit("test.on"), Action::Err);
+        assert_eq!(hit("test.on"), Action::Err);
+    }
+
+    #[test]
+    fn seeded_probability_is_replayable() {
+        let take = |seed: u64| -> Vec<bool> {
+            let _s = scoped(&format!("test.p=err%0.5~{seed}"));
+            (0..32).map(|_| hit("test.p") == Action::Err).collect()
+        };
+        let a = take(7);
+        let b = take(7);
+        assert_eq!(a, b, "same seed must make the same decisions");
+        assert!(a.iter().any(|&x| x) && a.iter().any(|&x| !x), "p=0.5 should mix");
+    }
+
+    #[test]
+    fn short_and_off_parse() {
+        let _s = scoped("test.w=short(7);test.w=off;test.d=delay(0)");
+        assert_eq!(hit("test.w"), Action::Proceed, "off removes the site");
+        assert_eq!(hit("test.d"), Action::Delay(0));
+    }
+
+    #[test]
+    fn scope_drop_disarms() {
+        {
+            let _s = scoped("test.drop=err");
+            assert_eq!(hit("test.drop"), Action::Err);
+        }
+        let _s = scoped("");
+        assert_eq!(hit("test.drop"), Action::Proceed);
+    }
+}

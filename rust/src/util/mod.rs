@@ -1,6 +1,8 @@
-//! Small shared utilities: deterministic RNG, sampling, CSV emission.
+//! Small shared utilities: deterministic RNG, sampling, CSV emission,
+//! and the failpoint fault-injection registry.
 
 pub mod csv;
+pub mod failpoint;
 pub mod json;
 pub mod rng;
 pub mod stats;

@@ -29,6 +29,17 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0xA24BAED4963EE407))
     }
 
+    /// Raw xoshiro256** state, for checkpointing a stream mid-flight.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a stream from a state captured with [`Rng::state`]; the
+    /// restored stream continues the original draw sequence exactly.
+    pub fn from_state(s: [u64; 4]) -> Rng {
+        Rng { s }
+    }
+
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
         let t = self.s[1] << 17;
@@ -119,6 +130,18 @@ mod tests {
     fn deterministic() {
         let mut a = Rng::new(42);
         let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn state_round_trip_resumes_the_stream() {
+        let mut a = Rng::new(42);
+        for _ in 0..17 {
+            a.next_u64();
+        }
+        let mut b = Rng::from_state(a.state());
         for _ in 0..100 {
             assert_eq!(a.next_u64(), b.next_u64());
         }

@@ -1,0 +1,349 @@
+//! Chaos battery: seeded fault schedules driven through the
+//! `rlflow::util::failpoint` registry, asserting the crash-safety
+//! contracts end to end — no hang, no torn state, no lost committed
+//! result, bit-deterministic recovery.
+//!
+//! Every test here arms real (non-`test.*`) failpoint sites, so every
+//! test takes a [`failpoint::scoped`] guard for its whole body: scopes
+//! serialise against each other process-wide, keeping one test's faults
+//! out of another's IO. `RLFLOW_CHAOS_SEED` (default 1) varies the
+//! seeded schedules; CI runs the battery under more than one seed.
+
+use std::path::PathBuf;
+
+use rlflow::config::RunConfig;
+use rlflow::coordinator::{
+    train_async, train_reference, train_reference_ckpt, AsyncTrainCfg, Checkpoint,
+    CheckpointCfg,
+};
+use rlflow::graph::{GraphBuilder, PadMode};
+use rlflow::runtime::{Backend, HostBackend, HostConfig};
+use rlflow::search::SearchLog;
+use rlflow::serve::persist::{CacheEntry, Persister};
+use rlflow::util::failpoint;
+use rlflow::xfer::library::standard_library;
+
+fn chaos_seed() -> u64 {
+    std::env::var("RLFLOW_CHAOS_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(1)
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("rlflow-chaos-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn small_graph() -> rlflow::graph::Graph {
+    let mut b = GraphBuilder::new();
+    let x = b.input(&[1, 3, 16, 16]);
+    let c1 = b.conv_bn_relu(x, 8, 3, 1, PadMode::Same).unwrap();
+    let c2 = b.conv(c1, 8, 1, 1, PadMode::Same).unwrap();
+    let r = b.relu(c2).unwrap();
+    let _ = b.maxpool(r, 2, 2).unwrap();
+    b.finish()
+}
+
+fn tiny_config() -> HostConfig {
+    HostConfig {
+        max_nodes: 48,
+        node_feats: 32,
+        gnn_hidden: 12,
+        latent: 8,
+        rnn_hidden: 12,
+        mdn_k: 2,
+        act_emb: 4,
+        ctrl_hidden: 16,
+        n_xfers1: standard_library().len() + 1,
+        max_locs: 200,
+        b_dream: 4,
+        b_wm: 4,
+        seq_len: 4,
+        b_ppo: 16,
+        b_enc: 4,
+        kernels: rlflow::runtime::KernelCfg::default(),
+    }
+}
+
+fn factory() -> anyhow::Result<Box<dyn Backend>> {
+    Ok(Box::new(HostBackend::with_config(tiny_config())))
+}
+
+fn tiny_run_config() -> RunConfig {
+    let mut cfg = RunConfig::smoke();
+    cfg.backend = "host".into();
+    cfg.envs = 4;
+    cfg.collect_episodes = 8;
+    cfg.ae_steps = 2;
+    cfg.wm.total_steps = 2;
+    cfg.dream_epochs = 1;
+    cfg.dream_horizon = 3;
+    cfg.ppo.epochs = 1;
+    cfg.eval_episodes = 1;
+    cfg.env.max_steps = 4;
+    cfg
+}
+
+fn acfg(stage_threads: usize) -> AsyncTrainCfg {
+    AsyncTrainCfg { rounds: 2, stage_threads, staging_cap: 2, jitter: None }
+}
+
+fn entry(fp: u64) -> CacheEntry {
+    let g = small_graph();
+    let root = rlflow::graph::canonical_hash(&g);
+    CacheEntry {
+        fp,
+        root,
+        graph: g,
+        log: SearchLog {
+            steps: vec![("fuse".into(), 1.25)],
+            initial_ms: 2.0,
+            final_ms: 1.25,
+            elapsed_s: 0.0,
+            graphs_explored: 7,
+            table_size: 9,
+            memo_hits: 3,
+            threads: 4,
+            from_cache: false,
+        },
+    }
+}
+
+fn fps(replay: &rlflow::serve::persist::Replay) -> Vec<u64> {
+    replay.entries.iter().map(|e| e.fp).collect()
+}
+
+/// A torn (short) append loses only the torn entry: committed entries
+/// before it survive, a committed entry after it gets its own clean
+/// line (the daemon keeps running past persist failures), and a restart
+/// replays exactly the committed set.
+#[test]
+fn torn_append_loses_only_the_torn_entry() {
+    let _fp = failpoint::scoped("serve.log.append=short(9)@2");
+    let dir = tmpdir("torn-append");
+    {
+        let (mut p, _) = Persister::open(&dir, 1000).unwrap();
+        p.append(&entry(1)).unwrap();
+        let err = p.append(&entry(2)).unwrap_err();
+        assert!(err.to_string().contains("short write"), "got: {err}");
+        // The daemon carries on: the next committed entry must not merge
+        // into the torn tail.
+        p.append(&entry(3)).unwrap();
+    }
+    let (_p, replay) = Persister::open(&dir, 1000).unwrap();
+    assert_eq!(fps(&replay), vec![1, 3], "committed entries survive, the torn one is skipped");
+    assert_eq!(replay.skipped_lines, 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A failed compaction is atomic: whether the snapshot dies writing the
+/// temp file or renaming it into place, the old snapshot and the
+/// untruncated log still reconstruct the full committed state.
+#[test]
+fn failed_compaction_keeps_old_snapshot_and_log() {
+    for site in ["serve.snapshot.write", "serve.snapshot.rename"] {
+        let _fp = failpoint::scoped(&format!("{site}=err@1"));
+        let dir = tmpdir(&format!("snap-fail-{site}"));
+        {
+            let (mut p, _) = Persister::open(&dir, 1000).unwrap();
+            p.append(&entry(1)).unwrap();
+            p.snapshot(&[entry(1)], &Default::default()).unwrap_err();
+            // First snapshot failed (injected); the log still holds 1.
+            p.append(&entry(2)).unwrap();
+        }
+        let (_p, replay) = Persister::open(&dir, 1000).unwrap();
+        assert_eq!(fps(&replay), vec![1, 2], "{site}: committed entries lost");
+
+        // The snapshot succeeds once the fault passes, and the next
+        // generation replays the compacted image.
+        {
+            let (mut p, replay) = Persister::open(&dir, 1000).unwrap();
+            p.snapshot(&replay.entries, &Default::default()).unwrap();
+        }
+        let (_p, replay) = Persister::open(&dir, 1000).unwrap();
+        assert_eq!(fps(&replay), vec![1, 2], "{site}: compacted image diverged");
+        assert!(!replay.recovered_from_bak);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Random seeded append faults: whatever the schedule tears, a restart
+/// replays exactly the appends that reported success, in order — and the
+/// same seed reproduces the identical surviving set.
+#[test]
+fn seeded_append_faults_never_lose_committed_entries() {
+    let seed = chaos_seed();
+    let run = |tag: &str| -> (Vec<u64>, Vec<u64>) {
+        let _fp = failpoint::scoped(&format!("serve.log.append=short(11)%0.4~{seed}"));
+        let dir = tmpdir(tag);
+        let mut committed = Vec::new();
+        {
+            let (mut p, _) = Persister::open(&dir, 1000).unwrap();
+            for fp in 1..=20u64 {
+                if p.append(&entry(fp)).is_ok() {
+                    committed.push(fp);
+                }
+            }
+        }
+        let (_p, replay) = Persister::open(&dir, 1000).unwrap();
+        let survived = fps(&replay);
+        let _ = std::fs::remove_dir_all(&dir);
+        (committed, survived)
+    };
+    let (committed, survived) = run("seeded-a");
+    assert!(!committed.is_empty(), "p=0.4 over 20 appends must commit some");
+    assert_eq!(survived, committed, "a committed append must survive restart");
+    let (committed2, survived2) = run("seeded-b");
+    assert_eq!((committed2, survived2), (committed, survived), "seed {seed} must replay");
+}
+
+/// Checkpoint writes are atomic: a fault at the write or the
+/// rename aborts the run with a typed error and leaves no loadable
+/// half-checkpoint behind; a fault at a *later* boundary leaves the
+/// earlier checkpoint as the newest valid resume point.
+#[test]
+fn checkpoint_faults_never_leave_torn_state() {
+    let graph = small_graph();
+    let cfg = tiny_run_config();
+
+    // Fault at the first boundary: no checkpoint may exist at all.
+    {
+        let _fp = failpoint::scoped("ckpt.rename=err@1");
+        let dir = tmpdir("ckpt-rename");
+        let ck = CheckpointCfg { dir: dir.clone(), every: 1 };
+        let err = train_reference_ckpt(&factory, &cfg, &acfg(1), &graph, Some(&ck), None)
+            .unwrap_err();
+        assert!(err.to_string().contains("ckpt.rename"), "got: {err}");
+        assert!(Checkpoint::load_latest(&dir).unwrap().is_none(), "half-checkpoint loadable");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // Fault at the second boundary: round 1's checkpoint stays the
+    // newest valid resume point, and resuming from it reproduces the
+    // uninterrupted run bit-for-bit.
+    {
+        let dir = tmpdir("ckpt-write2");
+        {
+            let _fp = failpoint::scoped("ckpt.write=err@2");
+            let ck = CheckpointCfg { dir: dir.clone(), every: 1 };
+            let err = train_reference_ckpt(&factory, &cfg, &acfg(1), &graph, Some(&ck), None)
+                .unwrap_err();
+            assert!(err.to_string().contains("ckpt.write"), "got: {err}");
+        }
+        let cp = Checkpoint::load_latest(&dir).unwrap().expect("round-1 checkpoint survives");
+        assert_eq!(cp.next_round, 1);
+        let resumed =
+            train_reference_ckpt(&factory, &cfg, &acfg(1), &graph, None, Some(cp)).unwrap();
+        let reference = train_reference(&factory, &cfg, &acfg(1), &graph).unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&resumed.gnn.theta), bits(&reference.gnn.theta), "gnn diverged");
+        assert_eq!(bits(&resumed.wm.theta), bits(&reference.wm.theta), "wm diverged");
+        assert_eq!(bits(&resumed.ctrl.theta), bits(&reference.ctrl.theta), "ctrl diverged");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// A panicking pipeline stage is a typed `stage '...' panicked` error,
+/// never a hang: the dying stage's close guards release every peer and
+/// the join layer converts the panic payload.
+#[test]
+fn stage_panic_is_a_typed_error_never_a_hang() {
+    let graph = small_graph();
+    let cfg = tiny_run_config();
+    for spec in ["stage.send=panic@3", "stage.recv=panic@5"] {
+        let _fp = failpoint::scoped(spec);
+        let err = train_async(&factory, &cfg, &acfg(4), &graph).unwrap_err();
+        assert!(err.to_string().contains("panicked"), "{spec}: got: {err}");
+        assert!(err.to_string().contains("injected panic"), "{spec}: got: {err}");
+    }
+}
+
+/// A worker that panics with a claimed job in hand is respawned: the
+/// victim request gets a typed `timeout` (its reply channel died, not
+/// the daemon), the retry client turns that into a second attempt that
+/// succeeds, and the pool never shrinks to zero.
+#[test]
+fn worker_panic_respawns_and_daemon_keeps_serving() {
+    use rlflow::serve::{
+        client, encode_control, encode_optimize, Method, OptimizeRequest, Provenance, Response,
+        RetryCfg, ServerConfig,
+    };
+    let _fp = failpoint::scoped("serve.worker=panic@1");
+
+    let mut cfg = ServerConfig::new("127.0.0.1:0");
+    cfg.workers = 1; // a panic without respawn would kill the whole pool
+    cfg.core.threads = 1;
+    let handle = rlflow::serve::spawn(cfg).unwrap();
+    let addr = handle.addr.to_string();
+    let timeout = std::time::Duration::from_secs(60);
+
+    let req = OptimizeRequest {
+        graph: small_graph(),
+        graph_name: "small".into(),
+        method: Method::Greedy { max_steps: 8 },
+        cost_noise: 0.0,
+        noise_seed: 0,
+        timeout_ms: None,
+    };
+    let line = encode_optimize(&req).unwrap();
+    // Attempt 1 hits the panicking worker and comes back as a typed,
+    // retryable failure; attempt 2 lands on the respawned worker.
+    let retry = RetryCfg { retries: 3, budget_ms: 30_000, seed: chaos_seed() };
+    let (resp, attempts) = client::roundtrip_retry(&addr, &line, timeout, &retry).unwrap();
+    match resp {
+        Response::Result { provenance, .. } => assert_eq!(provenance, Provenance::Fresh),
+        other => panic!("expected a served result after retries, got {other:?}"),
+    }
+    assert!(attempts >= 2, "the first attempt must have been the victim");
+
+    // The pool is alive and the first serving was cached.
+    match client::roundtrip(&addr, &line, timeout).unwrap() {
+        Response::Result { provenance, .. } => assert_eq!(provenance, Provenance::Cache),
+        other => panic!("expected cached result, got {other:?}"),
+    }
+    match client::roundtrip(&addr, &encode_control("shutdown"), timeout).unwrap() {
+        Response::Ok(_) => {}
+        other => panic!("expected ok, got {other:?}"),
+    }
+    handle.join().unwrap();
+}
+
+/// Persist failures never kill servings: with the append path erroring,
+/// the daemon core still answers fresh and cached requests (it only
+/// warns), and a restart simply misses the unpersisted entry.
+#[test]
+fn persist_failures_degrade_to_warnings_not_errors() {
+    use rlflow::serve::{Method, OptimizeRequest, Provenance, ServeConfig, ServeCore};
+    let _fp = failpoint::scoped("serve.log.append=err");
+    let dir = tmpdir("persist-degrade");
+    let req = OptimizeRequest {
+        graph: small_graph(),
+        graph_name: "small".into(),
+        method: Method::Greedy { max_steps: 8 },
+        cost_noise: 0.0,
+        noise_seed: 0,
+        timeout_ms: None,
+    };
+    {
+        let core = ServeCore::open(&ServeConfig {
+            cache_dir: Some(dir.clone()),
+            threads: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        let first = core.optimize(&req, None).unwrap();
+        assert_eq!(first.provenance, Provenance::Fresh, "persist failure must not fail serving");
+        let second = core.optimize(&req, None).unwrap();
+        assert_eq!(second.provenance, Provenance::Cache);
+    }
+    // Nothing was persisted — the restart serves fresh again, cleanly.
+    let core = ServeCore::open(&ServeConfig {
+        cache_dir: Some(dir.clone()),
+        threads: 1,
+        ..Default::default()
+    })
+    .unwrap();
+    assert_eq!(core.replayed(), 0);
+    let again = core.optimize(&req, None).unwrap();
+    assert_eq!(again.provenance, Provenance::Fresh);
+    let _ = std::fs::remove_dir_all(&dir);
+}

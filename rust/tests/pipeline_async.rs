@@ -2,7 +2,10 @@
 //! determinism contract: for every (env count, stage-thread count) in
 //! the sweep, `train_async == train_reference == replay_trace(own
 //! trace)` — final params compared bit-for-bit — plus torn-trace and
-//! partial-batch recovery (typed errors, never a silent shorter run).
+//! partial-batch recovery (typed errors, never a silent shorter run),
+//! and the crash-safety contract: interrupt at any round boundary +
+//! `--resume` reproduces the uninterrupted run bit-for-bit, for the
+//! synchronous engine and the threaded pipeline alike.
 
 use rlflow::config::RunConfig;
 use rlflow::coordinator::{
@@ -170,4 +173,84 @@ fn torn_traces_and_partial_batches_are_typed_errors() {
     foreign.seed ^= 1;
     let err = replay_trace(&factory, &cfg, &acfg(2), &graph, &foreign).unwrap_err();
     assert!(err.to_string().contains("does not match this run"), "got: {err}");
+}
+
+fn ckpt_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("rlflow-ckpt-test-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Crash-safe resume, synchronous engine: `every: 1` writes a checkpoint
+/// at every round boundary; resuming from each of them — including the
+/// final boundary, where no rounds remain — reproduces the uninterrupted
+/// run bit-for-bit, and checkpointing itself never perturbs results. A
+/// checkpoint from a different run identity is refused.
+#[test]
+fn sync_resume_from_every_boundary_is_bit_identical() {
+    use rlflow::coordinator::{train_reference_ckpt, Checkpoint, CheckpointCfg};
+    let graph = small_graph();
+    let cfg = tiny_run_config(4);
+    let reference = train_reference(&factory, &cfg, &acfg(1), &graph).unwrap();
+
+    let dir = ckpt_dir("sync");
+    let ck = CheckpointCfg { dir: dir.clone(), every: 1 };
+    let full = train_reference_ckpt(&factory, &cfg, &acfg(1), &graph, Some(&ck), None).unwrap();
+    assert_outcomes_identical(&full, &reference, "checkpointing perturbed the run");
+
+    for boundary in [1u32, 2] {
+        let cp = Checkpoint::load(&dir.join(format!("ckpt-{boundary:05}.rlck"))).unwrap();
+        assert_eq!(cp.next_round, boundary);
+        let resumed =
+            train_reference_ckpt(&factory, &cfg, &acfg(1), &graph, None, Some(cp)).unwrap();
+        assert_outcomes_identical(
+            &resumed,
+            &reference,
+            &format!("resume from boundary {boundary}"),
+        );
+    }
+
+    // A checkpoint never resumes a run with a different identity.
+    let mut other = cfg.clone();
+    other.seed ^= 1;
+    let cp = Checkpoint::load(&dir.join("ckpt-00001.rlck")).unwrap();
+    let err = train_reference_ckpt(&factory, &other, &acfg(1), &graph, None, Some(cp)).unwrap_err();
+    assert!(err.to_string().contains("seed"), "got: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Crash-safe resume, async engine: the stage threads assemble the same
+/// checkpoint state the synchronous engine snapshots; interrupting at the
+/// first round boundary and resuming matches the uninterrupted reference
+/// bit-for-bit at 1 and 4 stage threads, and an async-written checkpoint
+/// also resumes the synchronous engine (the format is engine-agnostic).
+#[test]
+fn async_resume_matches_uninterrupted_run() {
+    use rlflow::coordinator::{train_async_ckpt, train_reference_ckpt, Checkpoint, CheckpointCfg};
+    let graph = small_graph();
+    let cfg = tiny_run_config(4);
+    let reference = train_reference(&factory, &cfg, &acfg(1), &graph).unwrap();
+
+    for stage_threads in [1usize, 4] {
+        let dir = ckpt_dir(&format!("async-{stage_threads}"));
+        let ck = CheckpointCfg { dir: dir.clone(), every: 1 };
+        let what = format!("{stage_threads} stage threads");
+        let full = train_async_ckpt(&factory, &cfg, &acfg(stage_threads), &graph, Some(&ck), None)
+            .unwrap();
+        assert_outcomes_identical(&full, &reference, &format!("{what}: checkpointing perturbed"));
+
+        let cp = Checkpoint::load(&dir.join("ckpt-00001.rlck")).unwrap();
+        let resumed =
+            train_async_ckpt(&factory, &cfg, &acfg(stage_threads), &graph, None, Some(cp))
+                .unwrap();
+        assert_outcomes_identical(&resumed, &reference, &format!("{what}: async resume"));
+
+        if stage_threads == 4 {
+            let cp = Checkpoint::load(&dir.join("ckpt-00001.rlck")).unwrap();
+            let cross =
+                train_reference_ckpt(&factory, &cfg, &acfg(1), &graph, None, Some(cp)).unwrap();
+            assert_outcomes_identical(&cross, &reference, "sync resume of an async checkpoint");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 }

@@ -240,6 +240,73 @@ fn queued_deadline_expiry_is_atomic_with_the_claim() {
     handle.join().unwrap();
 }
 
+/// Fuzz `results.log` truncation at every byte boundary of the final
+/// entry: reopening must never fail and must keep every fully-persisted
+/// entry. The final entry survives iff all of its bytes reached disk (a
+/// missing trailing newline alone is repaired, not dropped); a torn tail
+/// loses only the torn entry, never the committed ones before it.
+#[test]
+fn log_truncation_at_every_byte_boundary_recovers() {
+    use rlflow::search::SearchLog;
+    use rlflow::serve::persist::{CacheEntry, Persister};
+
+    fn entry(fp: u64) -> CacheEntry {
+        let g = small_graph();
+        let root = rlflow::graph::canonical_hash(&g);
+        CacheEntry {
+            fp,
+            root,
+            graph: g,
+            log: SearchLog {
+                steps: vec![("fuse".into(), 1.25)],
+                initial_ms: 2.0,
+                final_ms: 1.25,
+                elapsed_s: 0.0,
+                graphs_explored: 7,
+                table_size: 9,
+                memo_hits: 3,
+                threads: 4,
+                from_cache: false,
+            },
+        }
+    }
+
+    let dir = tmpdir("trunc-fuzz");
+    {
+        let (mut p, _) = Persister::open(&dir, 1000).unwrap();
+        p.append(&entry(1)).unwrap();
+        p.append(&entry(2)).unwrap();
+    }
+    let log_path = dir.join("results.log");
+    let orig = std::fs::read(&log_path).unwrap();
+    let line1_end = orig.iter().position(|&b| b == b'\n').unwrap() + 1;
+    assert!(line1_end < orig.len(), "expected two log lines");
+
+    for cut in line1_end..=orig.len() {
+        std::fs::write(&log_path, &orig[..cut]).unwrap();
+        let (_p, replay) = Persister::open(&dir, 1000).unwrap();
+        // Only the final newline is recoverable; any missing payload byte
+        // tears the entry.
+        let want = if cut >= orig.len() - 1 { 2 } else { 1 };
+        assert_eq!(
+            replay.entries.len(),
+            want,
+            "cut at byte {cut} of {}: wrong entry count",
+            orig.len()
+        );
+        assert_eq!(replay.entries[0].fp, 1, "cut at byte {cut}: committed entry lost");
+        if want == 2 {
+            assert_eq!(replay.entries[1].fp, 2, "cut at byte {cut}: final entry mangled");
+        }
+        assert_eq!(
+            replay.skipped_lines,
+            usize::from(want == 1 && cut > line1_end),
+            "cut at byte {cut}: unexpected skip count"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 // ---------------------------------------------------------------------------
 // End-to-end over a loopback socket
 // ---------------------------------------------------------------------------

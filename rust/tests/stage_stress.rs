@@ -1,8 +1,10 @@
 //! Stress battery for the async pipeline's plumbing: the bounded staging
 //! buffer under a deliberately slow consumer (backpressure, never drop
 //! or reorder within a shard), the streaming env-pool fan-out against
-//! its batched oracle, and the seeded "jittery stage" harness shaking
-//! stage timing while asserting schedule-trace equality.
+//! its batched oracle, the seeded "jittery stage" harness shaking
+//! stage timing while asserting schedule-trace equality, and panic
+//! containment (a dying stage closes its channels so peers exit with a
+//! typed error instead of hanging).
 
 use std::time::Duration;
 
@@ -94,6 +96,55 @@ fn close_releases_a_blocked_producer_with_its_item() {
     });
     assert_eq!(chan.recv(), Some(1), "already-queued work still drains");
     assert_eq!(chan.recv(), None);
+}
+
+/// A panicking stage must never strand its peers: the [`CloseGuard`]s it
+/// holds close both of its channels on unwind, so a consumer blocked in
+/// `recv()` drains the queue and sees EOF, a producer blocked on a full
+/// buffer gets its item back with a typed close error, and the panic
+/// payload converts to a typed [`StageFailed`] — never a hang.
+#[test]
+fn panicking_stage_closes_channels_and_frees_both_peers() {
+    use rlflow::coordinator::StageFailed;
+    let input: StageChannel<u32> = StageChannel::new(1);
+    let output: StageChannel<u32> = StageChannel::new(1);
+
+    std::thread::scope(|s| {
+        // Upstream producer: sends until the channel refuses.
+        let producer = s.spawn(|| {
+            let mut sent = 0u32;
+            loop {
+                if input.send(sent).is_err() {
+                    return sent;
+                }
+                sent += 1;
+            }
+        });
+        // Downstream consumer: drains until EOF.
+        let consumer = s.spawn(|| {
+            let mut got = Vec::new();
+            while let Some(v) = output.recv() {
+                got.push(v);
+            }
+            got
+        });
+        // The failing middle stage: forwards one item, then panics while
+        // holding close guards on both sides (as the real stages do).
+        let middle = s.spawn(|| {
+            let _gi = input.close_guard();
+            let _go = output.close_guard();
+            let v = input.recv().expect("producer feeds the stage");
+            output.send(v).expect("consumer is draining");
+            panic!("injected stage failure");
+        });
+
+        let payload = middle.join().expect_err("middle stage must panic");
+        let failed = StageFailed::from_panic("middle", payload);
+        assert!(failed.to_string().contains("stage 'middle' panicked"), "got: {failed}");
+        assert!(failed.to_string().contains("injected stage failure"), "got: {failed}");
+        assert!(producer.join().unwrap() >= 1, "producer observed the close, not a hang");
+        assert_eq!(consumer.join().unwrap(), vec![0], "the forwarded item still drains");
+    });
 }
 
 /// `map_envs_streaming` is the same computation as `map_envs` — one
